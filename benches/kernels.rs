@@ -1,0 +1,107 @@
+//! Microbenchmarks for the linalg substrate (criterion is unavailable
+//! offline; `calars::metrics::bench` provides warmup + robust summary).
+//!
+//! Run: `cargo bench --bench kernels`
+
+use calars::data::datasets;
+use calars::linalg::{Cholesky, DenseMatrix, Matrix};
+use calars::metrics::{bench, black_box, fmt_secs};
+use calars::rng::Pcg64;
+
+fn report(name: &str, flops: u64, s: calars::metrics::TimingSummary) {
+    let gflops = flops as f64 / s.best / 1e9;
+    println!(
+        "{name:<34} best {:>10}  median {:>10}  {:>7.2} Gflop/s",
+        fmt_secs(s.best),
+        fmt_secs(s.median),
+        gflops
+    );
+}
+
+fn main() {
+    println!("# kernel microbenchmarks\n");
+
+    // Dense Aᵀr — the paper's hot spot (year_like shape).
+    let year = datasets::year_like(1);
+    let mut c = vec![0.0; year.a.ncols()];
+    let s = bench(2, 10, || {
+        year.a.at_r(black_box(&year.b), &mut c);
+        c[0]
+    });
+    report("dense at_r 16384x90", year.a.at_r_flops(), s);
+
+    // Sparse Aᵀr (sector_like shape).
+    let sector = datasets::sector_like(1);
+    let mut cs = vec![0.0; sector.a.ncols()];
+    let s = bench(2, 10, || {
+        sector.a.at_r(black_box(&sector.b), &mut cs);
+        cs[0]
+    });
+    report("sparse at_r sector", sector.a.at_r_flops(), s);
+
+    // Wide sparse Aᵀr (e2006_tfidf_like shape).
+    let wide = datasets::e2006_tfidf_like(1);
+    let mut cw = vec![0.0; wide.a.ncols()];
+    let s = bench(2, 6, || {
+        wide.a.at_r(black_box(&wide.b), &mut cw);
+        cw[0]
+    });
+    report("sparse at_r e2006_tfidf", wide.a.at_r_flops(), s);
+
+    // Direction application A_I w at |I| = 60.
+    let cols: Vec<usize> = (0..60).collect();
+    let w = vec![0.1; 60];
+    let mut u = vec![0.0; year.a.nrows()];
+    let s = bench(2, 10, || {
+        year.a.gemv_cols(black_box(&cols), &w, &mut u);
+        u[0]
+    });
+    report("dense gemv_cols |I|=60", year.a.gemv_cols_flops(&cols), s);
+
+    // Gram block A_Iᵀ A_B (60 × 8).
+    let bcols: Vec<usize> = (60..68).collect();
+    let s = bench(2, 10, || black_box(year.a.gram_block(&cols, &bcols)).get(0, 0));
+    report("dense gram_block 60x8", year.a.gram_block_flops(&cols, &bcols), s);
+
+    // Sparse gram block.
+    let scols: Vec<usize> = (0..60).collect();
+    let sbcols: Vec<usize> = (60..68).collect();
+    let s = bench(2, 10, || black_box(sector.a.gram_block(&scols, &sbcols)).get(0, 0));
+    report("sparse gram_block 60x8", sector.a.gram_block_flops(&scols, &sbcols), s);
+
+    // Cholesky: full factor vs incremental append at dim 60.
+    let mut rng = Pcg64::new(3);
+    let base = DenseMatrix::from_fn(80, 60, |_, _| rng.normal());
+    let all: Vec<usize> = (0..60).collect();
+    let mut g = Matrix::Dense(base).gram_block(&all, &all);
+    for i in 0..60 {
+        g.set(i, i, g.get(i, i) + 0.1);
+    }
+    let s = bench(2, 20, || black_box(Cholesky::factor(&g).unwrap()).dim());
+    report("cholesky factor dim=60", 60u64.pow(3) / 3, s);
+
+    let g52 = DenseMatrix::from_fn(52, 52, |i, j| g.get(i, j));
+    let gib = DenseMatrix::from_fn(52, 8, |i, j| g.get(i, 52 + j));
+    let gbb = DenseMatrix::from_fn(8, 8, |i, j| g.get(52 + i, 52 + j));
+    let c52 = Cholesky::factor(&g52).unwrap();
+    let s = bench(2, 50, || {
+        let mut ch = c52.clone();
+        ch.append_block(black_box(&gib), &gbb).unwrap();
+        ch.dim()
+    });
+    report("cholesky append 52+8", 8 * 52 * 52, s);
+
+    // Triangular solve at dim 60.
+    let full = Cholesky::factor(&g).unwrap();
+    let rhs: Vec<f64> = (0..60).map(|i| (i as f64).sin()).collect();
+    let s = bench(2, 100, || black_box(full.solve(&rhs))[0]);
+    report("cholesky solve dim=60", 2 * 60 * 60, s);
+
+    // Selection: top-b of |c| over n = 150k.
+    let mut rng = Pcg64::new(4);
+    let big: Vec<f64> = (0..150_000).map(|_| rng.normal()).collect();
+    let s = bench(2, 20, || {
+        calars::linalg::select::argmax_b_by(big.len(), 38, |i| black_box(big[i]).abs()).len()
+    });
+    report("introselect top-38 of 150k", 150_000, s);
+}

@@ -1,0 +1,68 @@
+//! End-to-end algorithm benchmarks: wallclock of each method per
+//! dataset at representative (P, b), plus XLA-vs-native kernel timing.
+//!
+//! Run: `cargo bench --bench lars_end_to_end`
+
+use calars::cluster::{ExecMode, HwParams, SimCluster};
+use calars::data::{datasets, partition};
+use calars::lars::blars::{blars, BlarsOptions};
+use calars::lars::serial::{lars, LarsOptions};
+use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::linalg::Matrix;
+use calars::metrics::{bench, fmt_secs};
+use calars::runtime::{default_artifacts_dir, XlaRuntime};
+
+fn main() {
+    println!("# end-to-end algorithm benchmarks\n");
+    let t = 40;
+
+    for ds in [datasets::sector_like(1), datasets::year_like(1), datasets::e2006_tfidf_like(1)] {
+        let t = t.min(ds.a.nrows().min(ds.a.ncols()) / 2);
+        println!("## {} (t = {t})", ds.name);
+
+        let s = bench(1, 3, || {
+            lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() }).selected.len()
+        });
+        println!("  serial LARS           best {:>10}", fmt_secs(s.best));
+
+        for (p, b) in [(8usize, 1usize), (8, 4)] {
+            let s = bench(1, 3, || {
+                let mut c = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
+                blars(&ds.a, &ds.b, &BlarsOptions { t, b, ..Default::default() }, &mut c)
+                    .selected
+                    .len()
+            });
+            println!("  bLARS   P={p} b={b}       best {:>10}", fmt_secs(s.best));
+        }
+        for (p, b) in [(8usize, 4usize)] {
+            let parts = partition::balanced_col_partition(&ds.a, p);
+            let s = bench(1, 3, || {
+                let mut c = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
+                tblars(&ds.a, &ds.b, &parts, &TblarsOptions { t, b, ..Default::default() }, &mut c)
+                    .selected
+                    .len()
+            });
+            println!("  T-bLARS P={p} b={b}       best {:>10}", fmt_secs(s.best));
+        }
+        println!();
+    }
+
+    // XLA vs native correlation kernel (the runtime hot path).
+    match XlaRuntime::load(&default_artifacts_dir()) {
+        Ok(rt) => {
+            let year = datasets::year_like(1);
+            let Matrix::Dense(dense) = &year.a else { unreachable!() };
+            let session = rt.prepare_corr(dense.nrows(), dense.ncols(), dense.data()).unwrap();
+            let s = bench(2, 10, || session.corr(&year.b).unwrap()[0]);
+            println!("## runtime corr (16384x90, bucket 16384x96)");
+            println!("  XLA/PJRT              best {:>10}", fmt_secs(s.best));
+            let mut c = vec![0.0; year.a.ncols()];
+            let s = bench(2, 10, || {
+                year.a.at_r(&year.b, &mut c);
+                c[0]
+            });
+            println!("  native f64            best {:>10}", fmt_secs(s.best));
+        }
+        Err(e) => println!("## runtime corr: skipped ({e})"),
+    }
+}

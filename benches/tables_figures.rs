@@ -1,0 +1,27 @@
+//! Regenerate every table and figure of the paper's evaluation
+//! (the bench-shaped entry point; `calars exp <id>` is the CLI one).
+//!
+//! Run: `cargo bench --bench tables_figures`            (CI-sized sweeps)
+//!      `cargo bench --bench tables_figures -- --full`  (paper-scale sweeps;
+//!      equivalently `calars suite`, which is the canonical full run)
+
+use calars::config::SweepConfig;
+use calars::experiments;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = !argv.iter().any(|a| a == "--full");
+    let sweep = if quick { SweepConfig::quick() } else { SweepConfig::default() };
+
+    for id in experiments::ALL_IDS {
+        let t0 = std::time::Instant::now();
+        match experiments::run_by_id(id, &sweep, quick) {
+            Ok(report) => {
+                println!("{report}");
+                eprintln!("[{id}: {:.1}s]", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => eprintln!("[{id} FAILED: {e}]"),
+        }
+        println!();
+    }
+}

@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `compile.*` importable when running
+`pytest python/tests/` from the repository root (the Makefile's
+`make test` cds into python/ instead; both invocations work)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

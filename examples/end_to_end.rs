@@ -1,0 +1,176 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Exercises every layer in one run (recorded in EXPERIMENTS.md):
+//!
+//! 1. **Runtime bridge** — load the AOT artifacts (JAX+Pallas → HLO
+//!    text), execute the `corr` and `gstep` kernels via PJRT, verify
+//!    parity against the native f64 kernels on the year-like dataset.
+//! 2. **Coordinator** — run the paper's three algorithms on all four
+//!    scaled datasets, reporting quality (residual, precision) and the
+//!    simulated parallel cost (time, words, messages).
+//! 3. **Headline check** — reproduce the paper's §10 summary numbers:
+//!    bLARS speedup at (P=4, b≈38) and T-bLARS quality at (P=64, b=2)
+//!    on the n ≫ m dataset.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use calars::cluster::{ExecMode, HwParams, SimCluster};
+use calars::data::{datasets, partition};
+use calars::lars::blars::{blars, BlarsOptions};
+use calars::lars::quality::precision;
+use calars::lars::serial::{lars, LarsOptions};
+use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::linalg::Matrix;
+use calars::metrics::{fmt_count, fmt_secs};
+use calars::runtime::{default_artifacts_dir, XlaRuntime};
+
+fn main() {
+    println!("=== Layer 1+2: AOT artifacts via PJRT ===");
+    let rt = match XlaRuntime::load(&default_artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("platform: {}, artifacts: {}", rt.platform(), rt.manifest().len());
+
+    let year = datasets::year_like(42);
+    let Matrix::Dense(dense) = &year.a else { unreachable!() };
+    let t0 = std::time::Instant::now();
+    let session = rt
+        .prepare_corr(dense.nrows(), dense.ncols(), dense.data())
+        .expect("year_like must fit the 16384x96 bucket");
+    println!(
+        "prepared corr session for {}x{} (bucket {:?}) in {}",
+        dense.nrows(),
+        dense.ncols(),
+        session.bucket(),
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+    let t0 = std::time::Instant::now();
+    let c_xla = session.corr(&year.b).expect("XLA corr");
+    let xla_dt = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let mut c_nat = vec![0.0; year.a.ncols()];
+    year.a.at_r(&year.b, &mut c_nat);
+    let nat_dt = t0.elapsed().as_secs_f64();
+    let scale = c_nat.iter().fold(1.0_f64, |a, &x| a.max(x.abs()));
+    let err = c_xla
+        .iter()
+        .zip(&c_nat)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0_f64, f64::max);
+    println!(
+        "corr parity on year_like: max err {err:.2e} (scale {scale:.1}); xla {} vs native {}",
+        fmt_secs(xla_dt),
+        fmt_secs(nat_dt)
+    );
+    assert!(err < 1e-3 * scale, "XLA/native divergence");
+
+    // Fused gstep (Aᵀu + γ candidates) — a full Alg-2 inner step offloaded.
+    let gsession = rt
+        .prepare_gstep(dense.nrows(), dense.ncols(), dense.data())
+        .expect("gstep bucket");
+    let j0 = c_nat
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        .map(|(j, _)| j)
+        .unwrap();
+    let mut u = vec![0.0; dense.nrows()];
+    year.a.gemv_cols(&[j0], &[c_nat[j0].signum()], &mut u);
+    let ck = c_nat[j0].abs();
+    let mut mask = vec![false; year.a.ncols()];
+    mask[j0] = true;
+    let t0 = std::time::Instant::now();
+    let (_av, gammas) = gsession.gstep(&u, &c_nat, &mask, ck, 1.0 / ck).expect("gstep");
+    let jstar = gammas
+        .iter()
+        .enumerate()
+        .filter(|(_, g)| g.is_finite())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(j, _)| j)
+        .unwrap();
+    println!(
+        "gstep on year_like: entering column {jstar} at γ = {:.4} ({})",
+        gammas[jstar],
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+
+    println!("\n=== Layer 3: coordinator on the full paper suite ===");
+    let t = 60;
+    println!(
+        "{:<22} {:<14} {:>9} {:>10} {:>10} {:>9} {:>8}",
+        "dataset", "method", "precision", "residual", "sim time", "words", "msgs"
+    );
+    for ds in datasets::paper_suite(42) {
+        let t = t.min(ds.a.nrows().min(ds.a.ncols()) / 2);
+        let reference = lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() });
+        let rows: Vec<(String, calars::lars::LarsOutput, SimCluster)> = vec![
+            {
+                let mut c = SimCluster::new(16, HwParams::default(), ExecMode::Sequential);
+                let o = blars(&ds.a, &ds.b, &BlarsOptions { t, b: 4, ..Default::default() }, &mut c);
+                ("bLARS P=16 b=4".into(), o, c)
+            },
+            {
+                let parts = partition::balanced_col_partition(&ds.a, 16);
+                let mut c = SimCluster::new(16, HwParams::default(), ExecMode::Sequential);
+                let o = tblars(
+                    &ds.a,
+                    &ds.b,
+                    &parts,
+                    &TblarsOptions { t, b: 4, ..Default::default() },
+                    &mut c,
+                );
+                ("T-bLARS P=16 b=4".into(), o, c)
+            },
+        ];
+        for (name, out, cluster) in rows {
+            let counters = cluster.counters();
+            println!(
+                "{:<22} {:<14} {:>9.2} {:>10.4} {:>10} {:>9} {:>8}",
+                ds.name,
+                name,
+                precision(&out.selected, &reference.selected),
+                out.residual_norms.last().unwrap(),
+                fmt_secs(cluster.sim_time()),
+                fmt_count(counters.words),
+                fmt_count(counters.msgs)
+            );
+        }
+    }
+
+    println!("\n=== Headline checks (paper §10.2, e2006_log1p regime) ===");
+    let ds = datasets::e2006_log1p_like(42);
+    let t = 60;
+    let reference = lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() });
+
+    // Baseline: parallel LARS (P=1, b=1).
+    let mut c0 = SimCluster::new(1, HwParams::default(), ExecMode::Sequential);
+    let _ = blars(&ds.a, &ds.b, &BlarsOptions { t, b: 1, ..Default::default() }, &mut c0);
+    let base = c0.sim_time();
+
+    // Paper: bLARS (P=4, b=38) ⇒ big speedup, low precision.
+    let mut c1 = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+    let o1 = blars(&ds.a, &ds.b, &BlarsOptions { t, b: 38, ..Default::default() }, &mut c1);
+    println!(
+        "bLARS   P=4  b=38: speedup {:>5.1}x  precision {:.2}   (paper: ~27x, ~0.30)",
+        base / c1.sim_time(),
+        precision(&o1.selected, &reference.selected)
+    );
+
+    // Paper: T-bLARS (P=64, b=2) ⇒ ~4x speedup at 100% precision.
+    let parts = partition::balanced_col_partition(&ds.a, 64);
+    let mut c2 = SimCluster::new(64, HwParams::default(), ExecMode::Sequential);
+    let o2 = tblars(&ds.a, &ds.b, &parts, &TblarsOptions { t, b: 2, ..Default::default() }, &mut c2);
+    println!(
+        "T-bLARS P=64 b=2 : speedup {:>5.1}x  precision {:.2}   (paper: ~4x, 1.00)",
+        base / c2.sim_time(),
+        precision(&o2.selected, &reference.selected)
+    );
+
+    println!("\nend_to_end OK");
+}

@@ -1,0 +1,40 @@
+//! Quickstart: fit a sparse linear model with LARS in a few lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use calars::data::datasets;
+use calars::lars::path::{ls_coefficients, residual_norm};
+use calars::lars::quality::recall;
+use calars::lars::serial::{lars, LarsOptions};
+
+fn main() {
+    // A small synthetic regression problem: 120 samples, 300 features,
+    // 12 of which actually generate the response.
+    let ds = datasets::tiny(42);
+    println!(
+        "problem: m={} n={} planted support size={}",
+        ds.a.nrows(),
+        ds.a.ncols(),
+        ds.true_support.as_ref().unwrap().len()
+    );
+
+    // Run LARS for 12 columns.
+    let out = lars(&ds.a, &ds.b, &LarsOptions { t: 12, ..Default::default() });
+    println!("selected (in order): {:?}", out.selected);
+    println!(
+        "residual: {:.4} -> {:.4}",
+        out.residual_norms.first().unwrap(),
+        out.residual_norms.last().unwrap()
+    );
+
+    // Recover least-squares coefficients on the selected support.
+    let coefs = ls_coefficients(&ds.a, &out.selected, &ds.b).expect("full-rank support");
+    let rn = residual_norm(&ds.a, &out.selected, &coefs, &ds.b);
+    println!("LS refit residual on support: {rn:.4}");
+
+    // How much of the planted truth did we find?
+    let truth = ds.true_support.as_ref().unwrap();
+    println!("recall vs planted support: {:.2}", recall(&out.selected, truth));
+}

@@ -1,0 +1,59 @@
+//! Feature selection on very wide data with T-bLARS (the paper's §10
+//! E2006 regime: n ≫ m, column-partitioned).
+//!
+//! A genomics/text-like scenario: tens of thousands of sparse features,
+//! few samples, feature selection must run distributed because no
+//! single node holds all columns. Shows the tournament's quality
+//! (vs. LARS ground truth) and the communication profile as P grows.
+//!
+//! ```bash
+//! cargo run --release --example wide_selection
+//! ```
+
+use calars::cluster::{ExecMode, HwParams, SimCluster};
+use calars::data::{datasets, partition};
+use calars::lars::quality::precision;
+use calars::lars::serial::{lars, LarsOptions};
+use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::metrics::{fmt_count, fmt_secs};
+
+fn main() {
+    let ds = datasets::e2006_tfidf_like(42);
+    let t = 40;
+    println!(
+        "wide selection: {} — m={} n={} nnz={}",
+        ds.name,
+        ds.a.nrows(),
+        ds.a.ncols(),
+        fmt_count(ds.a.nnz() as u64)
+    );
+
+    println!("running serial LARS reference (t = {t})...");
+    let reference = lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() });
+
+    println!("{:-<78}", "");
+    println!(
+        "{:<18} {:>9} {:>10} {:>10} {:>10} {:>8}",
+        "config", "precision", "residual", "sim time", "words", "msgs"
+    );
+    for (p, b) in [(1usize, 2usize), (4, 2), (16, 2), (64, 2), (16, 8), (64, 8)] {
+        let parts = partition::balanced_col_partition(&ds.a, p);
+        let mut cluster = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
+        let out =
+            tblars(&ds.a, &ds.b, &parts, &TblarsOptions { t, b, ..Default::default() }, &mut cluster);
+        let c = cluster.counters();
+        println!(
+            "{:<18} {:>9.2} {:>10.4} {:>10} {:>10} {:>8}",
+            format!("T-bLARS P={p} b={b}"),
+            precision(&out.selected, &reference.selected),
+            out.residual_norms.last().unwrap(),
+            fmt_secs(cluster.sim_time()),
+            fmt_count(c.words),
+            fmt_count(c.msgs)
+        );
+    }
+    println!("{:-<78}", "");
+    println!("T-bLARS words scale with m (not n): the tournament ships b·m-word");
+    println!("column payloads up the tree instead of n-word correlation vectors —");
+    println!("why the paper recommends it exactly in this n >> m regime.");
+}

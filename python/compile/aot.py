@@ -1,0 +1,104 @@
+"""AOT bridge: lower the L2 models to HLO **text** artifacts.
+
+HLO text (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which the runtime's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (idempotent;
+`make artifacts` wraps it). Writes one ``<op>_<m>x<n>.hlo.txt`` per
+bucket plus ``manifest.tsv`` (consumed by the Rust runtime) and
+``manifest.json`` (for humans).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Bucket shapes compiled ahead of time. Chosen to cover the dense
+# datasets/examples (year_like is 16384×90 → padded to ×96).
+#
+# Tile choice (EXPERIMENTS.md §Perf, L1 iteration 1): interpret-mode
+# Pallas lowers the grid to an XLA while-loop with dynamic slices, so on
+# the CPU execution path *fewer, larger* tiles win — the 16384×96 bucket
+# went 424 ms → single-digit ms by collapsing the 384-step grid to ≤ 8
+# steps. The TPU-oriented tiling (TM = 128, TN = 64, sized for ~16 MiB
+# VMEM with double buffering) is retained as the kernels' defaults and
+# in the roofline estimate; these overrides are per-artifact schedule
+# choices, not kernel changes.
+BUCKETS = [
+    # (m, n, corr tile overrides)
+    (128, 64, {}),
+    (512, 256, {"tm": 512, "tn": 256}),
+    (2048, 512, {"tm": 1024, "tn": 512}),
+    (16384, 96, {"tm": 4096, "tn": 96}),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(m: int, n: int, tiles: dict) -> dict[str, str]:
+    """Lower both models at one bucket; returns op → HLO text."""
+    from .kernels.correlation import TM, TN, corr
+    from .kernels.gamma import gamma_candidates
+
+    shapes = model.shapes_for(m, n)
+    tm = tiles.get("tm", TM)
+    tn = tiles.get("tn", TN)
+    # γ tile: one block per bucket (pure elementwise; no reuse to exploit).
+    gtn = n
+
+    def corr_fn(a, r):
+        return (corr(a, r, tm=tm, tn=tn),)
+
+    def gstep_fn(a, u, c, mask, ck, h):
+        av = corr(a, u, tm=tm, tn=tn)
+        return (av, gamma_candidates(c, av, mask, ck, h, tn=gtn))
+
+    out = {}
+    out["corr"] = to_hlo_text(jax.jit(corr_fn).lower(*shapes["corr"]))
+    out["gstep"] = to_hlo_text(jax.jit(gstep_fn).lower(*shapes["gstep"]))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="rebuild even if up to date")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    tsv_lines = []
+    json_entries = []
+    for m, n, tiles in BUCKETS:
+        for op, text in lower_bucket(m, n, tiles).items():
+            fname = f"{op}_{m}x{n}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            tsv_lines.append(f"{op}\t{m}\t{n}\t{fname}")
+            json_entries.append({"op": op, "m": m, "n": n, "file": fname})
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# op\tm\tn\tfile — see rust/src/runtime/artifacts.rs\n")
+        f.write("\n".join(tsv_lines) + "\n")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": json_entries, "dtype": "f32"}, f, indent=2)
+    print(f"manifest: {len(tsv_lines)} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

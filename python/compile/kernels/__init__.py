@@ -1,0 +1,13 @@
+"""L1 — Pallas kernels for the LARS hot spots.
+
+Every kernel here runs under ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+path and real-TPU performance is *estimated* (VMEM footprint + MXU
+utilization) in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from .correlation import corr, corr_tiles
+from .gamma import gamma_candidates
+from .gram import gram_block
+
+__all__ = ["corr", "corr_tiles", "gamma_candidates", "gram_block"]

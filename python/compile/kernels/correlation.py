@@ -1,0 +1,59 @@
+"""Correlation kernel ``c = Aᵀ r`` — the paper's arithmetic hot spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper
+distributes rows of A over MPI ranks and tree-reduces partial Aᵀr
+products. On a TPU-shaped target the same blocking becomes a BlockSpec
+grid: A is tiled (TM × TN) into VMEM, each grid step accumulates a
+partial ``A_tileᵀ · r_tile`` into the output tile — the HBM↔VMEM
+schedule plays the role of the row partition, and the MXU executes the
+tile product. Grid order puts the reduction dimension (row tiles)
+innermost so the output tile stays resident across the accumulation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. TM×TN f32 = 128·64·4 B = 32 KiB per A-tile; with
+# the r tile (512 B) and the TN-float accumulator this fits comfortably
+# in a 16 MiB VMEM budget with room for double buffering.
+TM = 128
+TN = 64
+
+
+def _corr_kernel(a_ref, r_ref, o_ref):
+    """One grid step: o[jn] += A[im, jn]ᵀ · r[im]."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (TM, TN)ᵀ · (TM,) → (TN,): an MXU-shaped contraction on real TPUs.
+    o_ref[...] += a_ref[...].T @ r_ref[...]
+
+
+def corr_tiles(m: int, n: int, tm: int = TM, tn: int = TN) -> tuple[int, int]:
+    """Grid shape for an (m, n) problem; shapes must tile evenly."""
+    if m % tm or n % tn:
+        raise ValueError(f"shape ({m}, {n}) not divisible by tiles ({tm}, {tn})")
+    return (n // tn, m // tm)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def corr(a: jax.Array, r: jax.Array, *, tm: int = TM, tn: int = TN) -> jax.Array:
+    """``c = Aᵀ r`` via the tiled Pallas kernel (interpret mode)."""
+    m, n = a.shape
+    grid = corr_tiles(m, n, tm, tn)
+    return pl.pallas_call(
+        _corr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda jn, im: (im, jn)),
+            pl.BlockSpec((tm,), lambda jn, im: (im,)),
+        ],
+        out_specs=pl.BlockSpec((tn,), lambda jn, im: (jn,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, r)

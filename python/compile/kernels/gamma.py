@@ -1,0 +1,75 @@
+"""Step-size candidate kernel (Algorithm 2, step 12).
+
+For every non-selected column j compute the paper's two candidate roots
+
+    g1 = (ck − c_j) / (ck·h − a_j)      g2 = (ck + c_j) / (ck·h + a_j)
+
+and keep ``min⁺`` (the smallest strictly positive finite root, capped at
+the full least-squares step 1/h). Selected / padded columns are masked
+to +inf so downstream ``min^b`` selection ignores them.
+
+Bandwidth-bound elementwise work — a natural VPU kernel fused over the
+same TN tiles the correlation kernel produces.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TN = 64
+_BIG = float("inf")  # plain Python literal: Pallas kernels cannot capture arrays
+
+
+def _gamma_kernel(c_ref, a_ref, mask_ref, s_ref, o_ref):
+    ck = s_ref[0]
+    h = s_ref[1]
+    c = c_ref[...]
+    a = a_ref[...]
+    g1 = (ck - c) / (ck * h - a)
+    g2 = (ck + c) / (ck * h + a)
+
+    def minpos(x, y):
+        xo = jnp.where(jnp.isfinite(x) & (x > 0.0), x, _BIG)
+        yo = jnp.where(jnp.isfinite(y) & (y > 0.0), y, _BIG)
+        return jnp.minimum(xo, yo)
+
+    g = minpos(g1, g2)
+    gmax = 1.0 / h
+    g = jnp.where(g <= gmax * (1.0 + 1e-6), g, _BIG)
+    o_ref[...] = jnp.where(mask_ref[...] > 0.5, _BIG, g)
+
+
+@functools.partial(jax.jit, static_argnames=("tn",))
+def gamma_candidates(
+    c: jax.Array,
+    a: jax.Array,
+    mask: jax.Array,
+    ck: jax.Array,
+    h: jax.Array,
+    *,
+    tn: int = TN,
+) -> jax.Array:
+    """γ candidates per column; `mask` is 1.0 for selected/padded columns.
+
+    `ck`/`h` are passed stacked as a (2,)-vector so the kernel reads them
+    from one scalar-prefetch-style ref.
+    """
+    (n,) = c.shape
+    if n % tn:
+        raise ValueError(f"n = {n} not divisible by tile {tn}")
+    scalars = jnp.stack([ck.astype(c.dtype), h.astype(c.dtype)])
+    return pl.pallas_call(
+        _gamma_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((tn,), lambda j: (j,)),
+            pl.BlockSpec((tn,), lambda j: (j,)),
+            pl.BlockSpec((tn,), lambda j: (j,)),
+            pl.BlockSpec((2,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tn,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), c.dtype),
+        interpret=True,
+    )(c, a, mask, scalars)

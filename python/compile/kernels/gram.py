@@ -1,0 +1,45 @@
+"""Gram-block kernel ``G = Xᵀ Y`` (Algorithm 2 steps 4/20).
+
+X = A_I (m × k), Y = A_B (m × b): a skinny matmul reduced over rows.
+Tiled over the row dimension only (k and b are tiny — at most t and b),
+accumulating the (k × b) block in VMEM — the same shape the paper
+reduces across MPI ranks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TM = 128
+
+
+def _gram_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].T @ y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tm",))
+def gram_block(x: jax.Array, y: jax.Array, *, tm: int = TM) -> jax.Array:
+    """``Xᵀ Y`` via a row-tiled Pallas kernel (interpret mode)."""
+    m, k = x.shape
+    m2, b = y.shape
+    if m != m2:
+        raise ValueError(f"row mismatch {m} vs {m2}")
+    if m % tm:
+        raise ValueError(f"m = {m} not divisible by tile {tm}")
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda im: (im, 0)),
+            pl.BlockSpec((tm, b), lambda im: (im, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, b), lambda im: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, b), x.dtype),
+        interpret=True,
+    )(x, y)

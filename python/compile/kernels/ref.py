@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness
+contract: pytest + hypothesis assert kernel ≡ oracle over shapes/dtypes).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def corr_ref(a: jax.Array, r: jax.Array) -> jax.Array:
+    """``c = Aᵀ r``."""
+    return a.T @ r
+
+
+def gram_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``G = Xᵀ Y``."""
+    return x.T @ y
+
+
+def gamma_ref(
+    c: jax.Array, a: jax.Array, mask: jax.Array, ck: jax.Array, h: jax.Array
+) -> jax.Array:
+    """min⁺ of the two γ roots, +inf where masked/invalid/over 1/h."""
+    big = jnp.asarray(jnp.inf, dtype=c.dtype)
+    g1 = (ck - c) / (ck * h - a)
+    g2 = (ck + c) / (ck * h + a)
+
+    def pos(x):
+        return jnp.where(jnp.isfinite(x) & (x > 0.0), x, big)
+
+    g = jnp.minimum(pos(g1), pos(g2))
+    g = jnp.where(g <= (1.0 / h) * (1.0 + 1e-6), g, big)
+    return jnp.where(mask > 0.5, big, g)
+
+
+def lars_iteration_ref(a, b, selected, y):
+    """One full LARS iteration in jnp (dense, selected as index array):
+    returns (gamma, chosen column, new y). Used by model tests to check
+    the composed L2 graph preserves algorithm semantics."""
+    m, n = a.shape
+    r = b - y
+    c = a.T @ r
+    asel = a[:, selected]
+    g = asel.T @ asel
+    s = c[selected]
+    q = jnp.linalg.solve(g, s)
+    h = 1.0 / jnp.sqrt(s @ q)
+    u = asel @ (q * h)
+    av = a.T @ u
+    ck = jnp.min(jnp.abs(s))
+    mask = jnp.zeros((n,), a.dtype).at[selected].set(1.0)
+    gammas = gamma_ref(c, av, mask, ck, h)
+    j = jnp.argmin(gammas)
+    gamma = gammas[j]
+    return gamma, j, y + gamma * u

@@ -1,0 +1,80 @@
+"""Fused response/correlation update kernel (Algorithm 2, steps 17-19).
+
+    y ← y + γ·u ;  r ← b − y ;  c_j ← c_j·(1−γh) if selected else c_j − γ·a_j
+
+Pure elementwise/VPU work over length-m and length-n tiles; fusing the
+three updates removes two extra HBM passes over the m-vectors — the
+same reasoning the paper uses to keep step 17 communication-free.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TM = 256
+
+
+def _update_m_kernel(y_ref, u_ref, b_ref, s_ref, oy_ref, or_ref):
+    gamma = s_ref[0]
+    y = y_ref[...] + gamma * u_ref[...]
+    oy_ref[...] = y
+    or_ref[...] = b_ref[...] - y
+
+
+def _update_c_kernel(c_ref, a_ref, mask_ref, s_ref, oc_ref):
+    gamma = s_ref[0]
+    shrink = s_ref[1]
+    c = c_ref[...]
+    oc_ref[...] = jnp.where(mask_ref[...] > 0.5, c * shrink, c - gamma * a_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tm",))
+def update_response(y, u, b, gamma, *, tm: int = TM):
+    """Returns ``(y + γu, b − (y + γu))``."""
+    (m,) = y.shape
+    if m % tm:
+        raise ValueError(f"m = {m} not divisible by tile {tm}")
+    scalars = jnp.stack([gamma.astype(y.dtype)])
+    return pl.pallas_call(
+        _update_m_kernel,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm,), lambda i: (i,)),
+            pl.BlockSpec((tm,), lambda i: (i,)),
+            pl.BlockSpec((tm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm,), lambda i: (i,)),
+            pl.BlockSpec((tm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), y.dtype),
+            jax.ShapeDtypeStruct((m,), y.dtype),
+        ],
+        interpret=True,
+    )(y, u, b, scalars)
+
+
+@functools.partial(jax.jit, static_argnames=("tn",))
+def update_correlations(c, a, mask, gamma, shrink, *, tn: int = TM):
+    """Step 18: masked two-branch correlation update."""
+    (n,) = c.shape
+    if n % tn:
+        raise ValueError(f"n = {n} not divisible by tile {tn}")
+    scalars = jnp.stack([gamma.astype(c.dtype), shrink.astype(c.dtype)])
+    return pl.pallas_call(
+        _update_c_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), c.dtype),
+        interpret=True,
+    )(c, a, mask, scalars)

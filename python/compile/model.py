@@ -1,0 +1,59 @@
+"""L2 — the per-iteration LARS compute graphs, composed from the L1
+Pallas kernels and lowered once by :mod:`compile.aot`.
+
+Two entry points are AOT-compiled (one executable per bucket shape):
+
+* ``corr_model`` — Algorithm 2 step 2/11: ``c = Aᵀ r``.
+* ``gstep_model`` — the fused steps 11–12: given the direction ``u``,
+  compute ``a = Aᵀ u`` with the Pallas correlation kernel, then the γ
+  candidates with the Pallas elementwise kernel, in one XLA program (no
+  host round-trip between the two hot loops).
+
+Everything returns tuples — the AOT bridge lowers with
+``return_tuple=True`` and the Rust side unwraps with ``to_tupleN``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import corr, gamma_candidates
+
+
+def corr_model(a: jax.Array, r: jax.Array):
+    """``(c,) = (Aᵀ r,)``."""
+    return (corr(a, r),)
+
+
+def gstep_model(
+    a: jax.Array,
+    u: jax.Array,
+    c: jax.Array,
+    mask: jax.Array,
+    ck: jax.Array,
+    h: jax.Array,
+):
+    """Fused direction-correlation + γ-candidate computation.
+
+    Returns ``(av, gammas)`` where ``av = Aᵀu`` and ``gammas[j]`` is the
+    paper's min⁺ step-size candidate (+inf for selected/padded columns).
+    """
+    av = corr(a, u)
+    gammas = gamma_candidates(c, av, mask, ck, h)
+    return (av, gammas)
+
+
+def shapes_for(m: int, n: int, dtype=jnp.float32):
+    """Example arguments for AOT-lowering the two models at (m, n)."""
+    f = jax.ShapeDtypeStruct
+    scalar = f((), dtype)
+    return {
+        "corr": (f((m, n), dtype), f((m,), dtype)),
+        "gstep": (
+            f((m, n), dtype),
+            f((m,), dtype),
+            f((n,), dtype),
+            f((n,), dtype),
+            scalar,
+            scalar,
+        ),
+    }

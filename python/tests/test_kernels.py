@@ -1,0 +1,165 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value regimes; fixed seeds keep the suite
+deterministic. Tolerances are f32-scale (the kernels are f32; the Rust
+native path is f64 — parity between those is asserted on the Rust side).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import corr, corr_tiles, gamma_candidates, gram_block
+from compile.kernels.ref import corr_ref, gamma_ref, gram_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------- corr
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mt=st.integers(min_value=1, max_value=4),
+    nt=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_corr_matches_ref_over_shapes(mt, nt, seed):
+    m, n = 128 * mt, 64 * nt
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, n))
+    r = _rand(rng, (m,))
+    got = corr(a, r)
+    want = corr_ref(a, r)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4 * np.sqrt(m))
+
+
+@pytest.mark.parametrize("tn", [32, 64])
+def test_corr_alternate_tiles(tn):
+    rng = np.random.default_rng(7)
+    m, n = 256, 96 if tn == 32 else 128
+    a = _rand(rng, (m, n))
+    r = _rand(rng, (m,))
+    np.testing.assert_allclose(corr(a, r, tn=tn), corr_ref(a, r), rtol=2e-5, atol=1e-3)
+
+
+def test_corr_zero_residual_gives_zero():
+    a = jnp.ones((128, 64), jnp.float32)
+    r = jnp.zeros((128,), jnp.float32)
+    assert float(jnp.max(jnp.abs(corr(a, r)))) == 0.0
+
+
+def test_corr_rejects_untileable_shapes():
+    with pytest.raises(ValueError):
+        corr_tiles(100, 64)
+    with pytest.raises(ValueError):
+        corr_tiles(128, 65)
+
+
+def test_corr_grid_shape():
+    assert corr_tiles(256, 128) == (2, 2)
+    assert corr_tiles(128, 64) == (1, 1)
+
+
+# --------------------------------------------------------------- gamma
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nt=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31),
+    ck=st.floats(min_value=0.05, max_value=3.0),
+    h=st.floats(min_value=0.05, max_value=3.0),
+)
+def test_gamma_matches_ref(nt, seed, ck, h):
+    n = 64 * nt
+    rng = np.random.default_rng(seed)
+    c = _rand(rng, (n,))
+    a = _rand(rng, (n,))
+    mask = (rng.random(n) < 0.2).astype(np.float32)
+    ckj = jnp.float32(ck)
+    hj = jnp.float32(h)
+    got = gamma_candidates(c, a, jnp.asarray(mask), ckj, hj)
+    want = gamma_ref(c, a, jnp.asarray(mask), ckj, hj)
+    got, want = np.asarray(got), np.asarray(want)
+    assert (np.isfinite(got) == np.isfinite(want)).all()
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=3e-5, atol=1e-5)
+
+
+def test_gamma_masked_columns_are_inf():
+    n = 64
+    c = jnp.full((n,), 0.5, jnp.float32)
+    a = jnp.full((n,), 0.1, jnp.float32)
+    mask = jnp.ones((n,), jnp.float32)
+    g = gamma_candidates(c, a, mask, jnp.float32(1.0), jnp.float32(1.0))
+    assert bool(jnp.all(jnp.isinf(g)))
+
+
+def test_gamma_candidates_positive_and_capped():
+    rng = np.random.default_rng(3)
+    n = 128
+    c = _rand(rng, (n,))
+    a = _rand(rng, (n,))
+    mask = jnp.zeros((n,), jnp.float32)
+    h = jnp.float32(0.8)
+    g = np.asarray(gamma_candidates(c, a, mask, jnp.float32(1.2), h))
+    fin = np.isfinite(g)
+    assert (g[fin] > 0).all()
+    assert (g[fin] <= (1.0 / 0.8) * (1.0 + 1e-5)).all()
+
+
+def test_gamma_solves_equation():
+    # For finite candidates, ck(1-gh) == |c_j - g a_j|.
+    rng = np.random.default_rng(4)
+    n = 64
+    c = _rand(rng, (n,), scale=0.5)
+    a = _rand(rng, (n,))
+    ck, h = jnp.float32(1.0), jnp.float32(1.0)
+    g = np.asarray(gamma_candidates(c, a, jnp.zeros((n,), jnp.float32), ck, h))
+    c, a = np.asarray(c), np.asarray(a)
+    fin = np.isfinite(g)
+    lhs = 1.0 * (1.0 - g[fin] * 1.0)
+    rhs = np.abs(c[fin] - g[fin] * a[fin])
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------- gram
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mt=st.integers(min_value=1, max_value=4),
+    k=st.integers(min_value=1, max_value=12),
+    b=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_gram_matches_ref(mt, k, b, seed):
+    m = 128 * mt
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k))
+    y = _rand(rng, (m, b))
+    np.testing.assert_allclose(
+        gram_block(x, y), gram_ref(x, y), rtol=2e-5, atol=2e-4 * np.sqrt(m)
+    )
+
+
+def test_gram_symmetric_when_same_input():
+    rng = np.random.default_rng(5)
+    x = _rand(rng, (256, 6))
+    g = np.asarray(gram_block(x, x))
+    np.testing.assert_allclose(g, g.T, rtol=1e-6, atol=1e-6)
+    assert (np.diag(g) > 0).all()
+
+
+def test_gram_rejects_mismatched_rows():
+    x = jnp.zeros((128, 2), jnp.float32)
+    y = jnp.zeros((256, 2), jnp.float32)
+    with pytest.raises(ValueError):
+        gram_block(x, y)

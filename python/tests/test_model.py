@@ -1,0 +1,87 @@
+"""L2 correctness: the composed model graphs preserve LARS semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import corr_ref, gamma_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _problem(seed, m=128, n=64, k=3):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, n)).astype(np.float32)
+    a /= np.linalg.norm(a, axis=0, keepdims=True)
+    support = rng.choice(n, size=k, replace=False)
+    x = np.zeros(n, np.float32)
+    x[support] = rng.normal(size=k).astype(np.float32) + np.sign(
+        rng.normal(size=k)
+    ).astype(np.float32)
+    b = a @ x
+    return jnp.asarray(a), jnp.asarray(b), np.sort(support)
+
+
+def test_corr_model_returns_tuple():
+    a, b, _ = _problem(0)
+    (c,) = model.corr_model(a, b)
+    np.testing.assert_allclose(c, corr_ref(a, b), rtol=2e-5, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_gstep_model_composition(seed):
+    a, b, _ = _problem(seed)
+    m, n = a.shape
+    rng = np.random.default_rng(seed + 1)
+    u = jnp.asarray(rng.normal(size=(m,)).astype(np.float32))
+    u = u / jnp.linalg.norm(u)
+    c = corr_ref(a, b)
+    mask = jnp.zeros((n,), jnp.float32).at[:2].set(1.0)
+    ck = jnp.float32(float(jnp.max(jnp.abs(c))))
+    h = jnp.float32(0.9)
+    av, gammas = model.gstep_model(a, u, c, mask, ck, h)
+    np.testing.assert_allclose(av, corr_ref(a, u), rtol=2e-5, atol=1e-4)
+    want = gamma_ref(c, corr_ref(a, u), mask, ck, h)
+    got, want = np.asarray(gammas), np.asarray(want)
+    fin = np.isfinite(want)
+    assert (np.isfinite(got) == fin).all()
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-5)
+
+
+def test_first_lars_step_equalizes_correlations():
+    """After stepping by the min finite γ from gstep_model, the entering
+    column's |corr| equals the selected column's |corr| — eq. (5)."""
+    a, b, _ = _problem(42)
+    m, n = a.shape
+    c0 = corr_ref(a, b)
+    j0 = int(jnp.argmax(jnp.abs(c0)))
+    # Initial direction: the single selected column, signed.
+    sgn = jnp.sign(c0[j0])
+    u = a[:, j0] * sgn  # unit norm since columns are normalized
+    ck = jnp.abs(c0[j0])
+    h = jnp.float32(1.0)  # (s^T G^{-1} s)^{-1/2} = 1/ck for a single col
+    # For one selected column: h = 1/ck, direction u as above.
+    h = 1.0 / ck
+    mask = jnp.zeros((n,), jnp.float32).at[j0].set(1.0)
+    av, gammas = model.gstep_model(a, u, c0, mask, ck, jnp.float32(h))
+    g = np.asarray(gammas)
+    jstar = int(np.argmin(g))
+    gamma = float(g[jstar])
+    y1 = gamma * u
+    c1 = corr_ref(a, b - y1)
+    np.testing.assert_allclose(
+        abs(float(c1[jstar])), abs(float(c1[j0])), rtol=5e-3, atol=5e-4
+    )
+    # And no other column exceeds the new max (LARS invariant).
+    cmax = abs(float(c1[j0]))
+    assert float(jnp.max(jnp.abs(c1))) <= cmax * (1.0 + 5e-3)
+
+
+def test_shapes_for_covers_both_ops():
+    shapes = model.shapes_for(128, 64)
+    assert set(shapes) == {"corr", "gstep"}
+    assert shapes["corr"][0].shape == (128, 64)
+    assert shapes["gstep"][2].shape == (64,)

@@ -1,0 +1,38 @@
+"""Sanity checks on the L1 roofline model (DESIGN.md §8)."""
+
+from compile.roofline import VMEM_BYTES, corr_estimate, report
+
+
+def test_default_tiling_fits_vmem():
+    for m, n in [(128, 64), (512, 256), (2048, 512), (16384, 96)]:
+        e = corr_estimate(m, n, 128, min(64, n))
+        assert e.fits_vmem(), f"{m}x{n}: {e.vmem_double_buffered} > {VMEM_BYTES}"
+
+
+def test_corr_is_bandwidth_bound():
+    # Aᵀr has O(1) arithmetic intensity — must be HBM-bound everywhere.
+    for m, n in [(512, 256), (16384, 96)]:
+        e = corr_estimate(m, n, 128, 64)
+        assert e.bound == "HBM"
+        assert e.intensity < 2.0
+
+
+def test_roofline_monotone_in_problem_size():
+    small = corr_estimate(512, 256, 128, 64)
+    big = corr_estimate(16384, 96, 128, 32)
+    assert big.t_roofline_us > small.t_roofline_us
+
+
+def test_report_renders():
+    s = report()
+    assert "corr kernel roofline" in s
+    assert "16384x96" in s
+    assert "HBM" in s
+
+
+def test_huge_tile_violates_vmem():
+    # A 16384x512 f32 tile is 32 MiB — double-buffered it blows the
+    # 16 MiB budget (why the CPU artifacts' giant tiles are a schedule
+    # choice for interpret mode, not a TPU tiling).
+    e = corr_estimate(16384, 512, 16384, 512)
+    assert not e.fits_vmem()

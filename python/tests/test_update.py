@@ -1,0 +1,53 @@
+"""Fused update kernel vs plain jnp (Algorithm 2 steps 17-19)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.update import update_correlations, update_response
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mt=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+    gamma=st.floats(min_value=0.0, max_value=2.0),
+)
+def test_update_response_matches_jnp(mt, seed, gamma):
+    m = 256 * mt
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=m).astype(np.float32))
+    g = jnp.float32(gamma)
+    ynew, rnew = update_response(y, u, b, g)
+    np.testing.assert_allclose(ynew, y + g * u, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(rnew, b - (y + g * u), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nt=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_update_correlations_masked_branches(nt, seed):
+    n = 256 * nt
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    mask = jnp.asarray((rng.random(n) < 0.3).astype(np.float32))
+    gamma = jnp.float32(0.7)
+    shrink = jnp.float32(0.4)
+    got = update_correlations(c, a, mask, gamma, shrink)
+    want = jnp.where(mask > 0.5, c * shrink, c - gamma * a)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_zero_gamma_is_identity():
+    m = 256
+    y = jnp.arange(m, dtype=jnp.float32)
+    u = jnp.ones((m,), jnp.float32)
+    b = jnp.full((m,), 5.0, jnp.float32)
+    ynew, rnew = update_response(y, u, b, jnp.float32(0.0))
+    np.testing.assert_allclose(ynew, y)
+    np.testing.assert_allclose(rnew, b - y)

@@ -1,0 +1,162 @@
+//! LASSO via cyclic coordinate descent (paper §2 eq. (1), penalized
+//! form `min ½‖Ax−b‖² + λ‖x‖₁`; cf. [28, 34, 42]).
+//!
+//! Context baseline: an *optimization* method producing a single model
+//! per λ, versus the paper's LARS-family which produces the whole
+//! sequence. Used by examples to contrast the two families, and by
+//! tests (a LASSO solution's support at matched sparsity should be
+//! close to the LARS path's).
+
+use crate::linalg::{norm2, Matrix};
+
+/// Output of a coordinate-descent LASSO solve.
+#[derive(Clone, Debug)]
+pub struct LassoOutput {
+    /// Coefficients (length n).
+    pub x: Vec<f64>,
+    /// Support of x (nonzero indices, ascending).
+    pub support: Vec<usize>,
+    /// ‖Ax − b‖₂ at the solution.
+    pub residual_norm: f64,
+    /// Sweeps actually performed.
+    pub sweeps: usize,
+    /// True if the duality-free stopping criterion fired before
+    /// `max_sweeps`.
+    pub converged: bool,
+}
+
+/// Solve the penalized LASSO with cyclic coordinate descent.
+///
+/// Columns are assumed unit-norm (the crate's standing assumption), so
+/// the per-coordinate update is the plain soft-threshold
+/// `x_j ← S(x_j + A_jᵀr, λ)`.
+pub fn lasso_cd(a: &Matrix, b: &[f64], lambda: f64, max_sweeps: usize, tol: f64) -> LassoOutput {
+    let n = a.ncols();
+    let m = a.nrows();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut col_buf = vec![0.0; m];
+    let mut converged = false;
+    let mut sweeps = 0;
+
+    for sweep in 0..max_sweeps {
+        let mut max_delta = 0.0_f64;
+        for j in 0..n {
+            let cj = a.col_dot(j, &r);
+            let z = x[j] + cj;
+            let xnew = soft_threshold(z, lambda);
+            let delta = xnew - x[j];
+            if delta != 0.0 {
+                a.gemv_cols(&[j], &[1.0], &mut col_buf);
+                for i in 0..m {
+                    r[i] -= delta * col_buf[i];
+                }
+                x[j] = xnew;
+                max_delta = max_delta.max(delta.abs());
+            }
+        }
+        sweeps = sweep + 1;
+        if max_delta <= tol {
+            converged = true;
+            break;
+        }
+    }
+    let support: Vec<usize> = (0..n).filter(|&j| x[j] != 0.0).collect();
+    LassoOutput { residual_norm: norm2(&r), x, support, sweeps, converged }
+}
+
+#[inline]
+fn soft_threshold(z: f64, lambda: f64) -> f64 {
+    if z > lambda {
+        z - lambda
+    } else if z < -lambda {
+        z + lambda
+    } else {
+        0.0
+    }
+}
+
+/// λ_max: the smallest λ with all-zero solution (= ‖Aᵀb‖∞).
+pub fn lambda_max(a: &Matrix, b: &[f64]) -> f64 {
+    let mut c = vec![0.0; a.ncols()];
+    a.at_r(b, &mut c);
+    crate::linalg::norm_inf(&c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn problem(seed: u64) -> crate::data::synthetic::Synthetic {
+        generate(
+            &SyntheticSpec { m: 80, n: 40, density: 1.0, col_skew: 0.0, k_true: 5, noise: 0.01 },
+            seed,
+        )
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(2.0, 0.5), 1.5);
+        assert_eq!(soft_threshold(-2.0, 0.5), -1.5);
+        assert_eq!(soft_threshold(0.3, 0.5), 0.0);
+    }
+
+    #[test]
+    fn lambda_max_zeroes_solution() {
+        let s = problem(1);
+        let lmax = lambda_max(&s.a, &s.b);
+        let out = lasso_cd(&s.a, &s.b, lmax * 1.001, 50, 1e-10);
+        assert!(out.support.is_empty(), "support {:?}", out.support);
+    }
+
+    #[test]
+    fn small_lambda_fits_well() {
+        let s = problem(2);
+        let lmax = lambda_max(&s.a, &s.b);
+        let out = lasso_cd(&s.a, &s.b, lmax * 0.01, 500, 1e-10);
+        assert!(out.converged);
+        assert!(out.residual_norm < 0.2 * norm2(&s.b));
+    }
+
+    #[test]
+    fn kkt_conditions_hold() {
+        let s = problem(3);
+        let lambda = lambda_max(&s.a, &s.b) * 0.3;
+        let out = lasso_cd(&s.a, &s.b, lambda, 1000, 1e-12);
+        assert!(out.converged);
+        // KKT: |A_jᵀ r| ≤ λ for all j, with equality (sign-matched) on the support.
+        let r: Vec<f64> = {
+            let mut ax = vec![0.0; s.a.nrows()];
+            let support: Vec<usize> = out.support.clone();
+            let coefs: Vec<f64> = support.iter().map(|&j| out.x[j]).collect();
+            s.a.gemv_cols(&support, &coefs, &mut ax);
+            s.b.iter().zip(&ax).map(|(bi, yi)| bi - yi).collect()
+        };
+        let mut c = vec![0.0; s.a.ncols()];
+        s.a.at_r(&r, &mut c);
+        for j in 0..s.a.ncols() {
+            assert!(c[j].abs() <= lambda * (1.0 + 1e-6) + 1e-8, "KKT violated at {j}");
+        }
+        for &j in &out.support {
+            assert!(
+                (c[j] - lambda * out.x[j].signum()).abs() < 1e-6,
+                "support KKT at {j}: c={} λ·sign={}",
+                c[j],
+                lambda * out.x[j].signum()
+            );
+        }
+    }
+
+    #[test]
+    fn support_overlaps_lars_path() {
+        use crate::lars::serial::{lars, LarsOptions};
+        let s = problem(4);
+        let lambda = lambda_max(&s.a, &s.b) * 0.5;
+        let out = lasso_cd(&s.a, &s.b, lambda, 1000, 1e-12);
+        let k = out.support.len().max(1);
+        let la = lars(&s.a, &s.b, &LarsOptions { t: k, ..Default::default() });
+        let overlap = crate::lars::quality::precision(&out.support, &la.selected);
+        assert!(overlap >= 0.5, "LASSO support far from LARS path: {overlap}");
+    }
+}

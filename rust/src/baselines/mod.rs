@@ -1,0 +1,12 @@
+//! Baseline feature-selection / sparse-regression algorithms (paper §2).
+//!
+//! LARS unifies Forward Selection (aggressive) and Forward Stagewise
+//! (cautious); LASSO is the optimization-based alternative whose
+//! solution path a LARS variant reproduces. These are implemented both
+//! as correctness anchors for tests and so the example applications can
+//! compare the paper's methods against the classical alternatives.
+
+pub mod forward_selection;
+pub mod lasso_cd;
+pub mod omp;
+pub mod stagewise;

@@ -1,0 +1,110 @@
+//! Orthogonal Matching Pursuit — the classic ℓ0 greedy (paper §2's
+//! ℓ0-regularized family; Needell–Woolf [27] parallelize a stochastic
+//! variant). Equivalent to Forward Selection with the orthogonal
+//! projection done via the same incremental Cholesky machinery the
+//! paper's bLARS uses — a good cross-check for [`crate::linalg::cholesky`].
+
+use crate::linalg::{norm2, Cholesky, Matrix};
+
+/// Output of OMP.
+#[derive(Clone, Debug)]
+pub struct OmpOutput {
+    pub selected: Vec<usize>,
+    pub coefs: Vec<f64>,
+    pub residual_norms: Vec<f64>,
+}
+
+/// Select `t` columns by OMP (incremental-Cholesky implementation).
+pub fn omp(a: &Matrix, b: &[f64], t: usize) -> OmpOutput {
+    let n = a.ncols();
+    let m = a.nrows();
+    let t = t.min(n.min(m));
+    let mut selected: Vec<usize> = Vec::new();
+    let mut in_model = vec![false; n];
+    let mut chol = Cholesky::empty();
+    let mut atb: Vec<f64> = Vec::new();
+    let mut r = b.to_vec();
+    let mut c = vec![0.0; n];
+    let mut coefs: Vec<f64> = Vec::new();
+    let mut residual_norms = vec![norm2(&r)];
+
+    for _ in 0..t {
+        a.at_r(&r, &mut c);
+        let best = (0..n)
+            .filter(|&j| !in_model[j])
+            .max_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap());
+        let Some(j) = best else { break };
+        if c[j].abs() < 1e-12 {
+            break;
+        }
+        // Extend the factor with column j.
+        let gi = a.gram_block(&selected, &[j]);
+        let gjj = a.gram_block(&[j], &[j]).get(0, 0);
+        let mut grow: Vec<f64> = (0..selected.len()).map(|i| gi.get(i, 0)).collect();
+        grow.push(gjj);
+        if chol.push_row(&grow).is_err() {
+            break; // collinear — stop
+        }
+        in_model[j] = true;
+        selected.push(j);
+        atb.push(a.col_dot(j, b));
+        // LS solve on the support, recompute the residual.
+        coefs = chol.solve(&atb);
+        let mut ax = vec![0.0; m];
+        a.gemv_cols(&selected, &coefs, &mut ax);
+        for i in 0..m {
+            r[i] = b[i] - ax[i];
+        }
+        residual_norms.push(norm2(&r));
+    }
+    OmpOutput { selected, coefs, residual_norms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::forward_selection::forward_selection;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    #[test]
+    fn matches_forward_selection() {
+        // OMP and forward selection are the same algorithm; this one uses
+        // the incremental Cholesky, forward_selection refactors each step.
+        let s = generate(
+            &SyntheticSpec { m: 70, n: 35, density: 1.0, col_skew: 0.0, k_true: 6, noise: 0.05 },
+            1,
+        );
+        let o = omp(&s.a, &s.b, 6);
+        let f = forward_selection(&s.a, &s.b, 6);
+        assert_eq!(o.selected, f.selected);
+        for (x, y) in o.residual_norms.iter().zip(&f.residual_norms) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn exact_recovery() {
+        let s = generate(
+            &SyntheticSpec { m: 50, n: 25, density: 1.0, col_skew: 0.0, k_true: 3, noise: 0.0 },
+            2,
+        );
+        let o = omp(&s.a, &s.b, 3);
+        let mut got = o.selected.clone();
+        got.sort_unstable();
+        assert_eq!(got, s.true_support);
+        assert!(*o.residual_norms.last().unwrap() < 1e-8);
+    }
+
+    #[test]
+    fn sparse_input_ok() {
+        let s = generate(
+            &SyntheticSpec { m: 100, n: 80, density: 0.2, col_skew: 0.5, k_true: 5, noise: 0.01 },
+            3,
+        );
+        let o = omp(&s.a, &s.b, 8);
+        assert_eq!(o.selected.len(), 8);
+        for w in o.residual_norms.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+}

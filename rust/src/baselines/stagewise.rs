@@ -1,0 +1,108 @@
+//! Forward Stagewise regression (paper §2; Hastie et al. [19, 20]).
+//!
+//! The cautious cousin of forward selection: at each step increment the
+//! coefficient of the most-correlated column by ±ε. Many steps, tiny
+//! moves; LARS was designed to take its limiting path in one shot.
+
+use crate::linalg::{norm2, Matrix};
+
+/// Output of forward stagewise.
+#[derive(Clone, Debug)]
+pub struct StagewiseOutput {
+    /// Distinct columns touched, in first-touch order.
+    pub selected: Vec<usize>,
+    /// Coefficient vector (length n).
+    pub x: Vec<f64>,
+    /// Residual norm sampled every `sample_every` steps.
+    pub residual_norms: Vec<f64>,
+    /// Steps actually taken.
+    pub steps: usize,
+}
+
+/// Run forward stagewise with step `eps` until `max_steps` or until the
+/// maximum absolute correlation drops below `tol`.
+pub fn stagewise(
+    a: &Matrix,
+    b: &[f64],
+    eps: f64,
+    max_steps: usize,
+    tol: f64,
+) -> StagewiseOutput {
+    let n = a.ncols();
+    let m = a.nrows();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut c = vec![0.0; n];
+    let mut selected: Vec<usize> = Vec::new();
+    let mut touched = vec![false; n];
+    let sample_every = (max_steps / 200).max(1);
+    let mut residual_norms = vec![norm2(&r)];
+    let mut steps = 0;
+
+    for step in 0..max_steps {
+        a.at_r(&r, &mut c);
+        let j = (0..n)
+            .max_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap())
+            .unwrap();
+        if c[j].abs() <= tol {
+            break;
+        }
+        let delta = eps * c[j].signum();
+        x[j] += delta;
+        // r ← r − δ·A_j (column update keeps this O(nnz(col))).
+        let mut aj = vec![0.0; m];
+        a.gemv_cols(&[j], &[1.0], &mut aj);
+        for i in 0..m {
+            r[i] -= delta * aj[i];
+        }
+        if !touched[j] {
+            touched[j] = true;
+            selected.push(j);
+        }
+        steps = step + 1;
+        if steps % sample_every == 0 {
+            residual_norms.push(norm2(&r));
+        }
+    }
+    residual_norms.push(norm2(&r));
+    StagewiseOutput { selected, x, residual_norms, steps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn problem(seed: u64) -> crate::data::synthetic::Synthetic {
+        generate(
+            &SyntheticSpec { m: 60, n: 30, density: 1.0, col_skew: 0.0, k_true: 3, noise: 0.0 },
+            seed,
+        )
+    }
+
+    #[test]
+    fn takes_many_small_steps() {
+        let s = problem(1);
+        let out = stagewise(&s.a, &s.b, 0.01, 5000, 1e-3);
+        assert!(out.steps > 50, "stagewise should be cautious, took {}", out.steps);
+    }
+
+    #[test]
+    fn residual_decreases_overall() {
+        let s = problem(2);
+        let out = stagewise(&s.a, &s.b, 0.01, 3000, 1e-4);
+        let first = out.residual_norms[0];
+        let last = *out.residual_norms.last().unwrap();
+        assert!(last < 0.5 * first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn touches_true_support_first() {
+        let s = problem(3);
+        let out = stagewise(&s.a, &s.b, 0.005, 8000, 1e-4);
+        // The first few touched columns should mostly be in the support.
+        let head: Vec<usize> = out.selected.iter().take(3).copied().collect();
+        let hits = head.iter().filter(|j| s.true_support.contains(j)).count();
+        assert!(hits >= 2, "head {head:?} vs support {:?}", s.true_support);
+    }
+}

@@ -1,0 +1,112 @@
+//! Data-combining halves of the collectives.
+//!
+//! The cost halves live in [`super::SimCluster`]; these helpers perform
+//! the actual combining the way a binary-tree MPI reduction would, so
+//! floating-point summation order matches a real tree reduction (which
+//! matters for bitwise reproducibility across P).
+
+/// Binary-tree sum of per-rank vectors: pairwise combine adjacent ranks
+/// level by level, exactly like an MPI binomial-tree reduce. Returns the
+/// root's vector.
+pub fn tree_sum(mut contribs: Vec<Vec<f64>>) -> Vec<f64> {
+    assert!(!contribs.is_empty());
+    let p = contribs.len();
+    assert!(p.is_power_of_two(), "tree_sum requires power-of-two ranks");
+    let mut stride = 1;
+    while stride < p {
+        let mut i = 0;
+        while i + stride < p {
+            // Split so we can borrow two disjoint elements.
+            let (left, right) = contribs.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            debug_assert_eq!(dst.len(), src.len());
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += s;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    std::mem::take(&mut contribs[0])
+}
+
+/// Binary-tree max-abs merge (used by distributed top-b pre-filtering):
+/// keeps per-index maximum absolute value.
+pub fn tree_max_abs(mut contribs: Vec<Vec<f64>>) -> Vec<f64> {
+    assert!(!contribs.is_empty());
+    let p = contribs.len();
+    assert!(p.is_power_of_two());
+    let mut stride = 1;
+    while stride < p {
+        let mut i = 0;
+        while i + stride < p {
+            let (left, right) = contribs.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                if s.abs() > d.abs() {
+                    *d = *s;
+                }
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    std::mem::take(&mut contribs[0])
+}
+
+/// Gather per-rank index lists into one (order: rank-major), the data
+/// half of an MPI gather.
+pub fn gather_indices(contribs: Vec<Vec<usize>>) -> Vec<usize> {
+    let mut out = Vec::new();
+    for c in contribs {
+        out.extend(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_sum_matches_serial() {
+        let contribs: Vec<Vec<f64>> =
+            (0..8).map(|r| (0..5).map(|i| (r * 5 + i) as f64).collect()).collect();
+        let tree = tree_sum(contribs.clone());
+        for i in 0..5 {
+            let serial: f64 = contribs.iter().map(|c| c[i]).sum();
+            assert!((tree[i] - serial).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tree_sum_single_rank() {
+        let out = tree_sum(vec![vec![1.0, 2.0]]);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn tree_max_abs_keeps_largest_magnitude() {
+        let out = tree_max_abs(vec![
+            vec![1.0, -5.0],
+            vec![-3.0, 2.0],
+            vec![2.0, 0.0],
+            vec![-1.0, 4.0],
+        ]);
+        assert_eq!(out, vec![-3.0, -5.0]);
+    }
+
+    #[test]
+    fn gather_preserves_rank_order() {
+        let out = gather_indices(vec![vec![3, 1], vec![], vec![7]]);
+        assert_eq!(out, vec![3, 1, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn tree_sum_rejects_non_pow2() {
+        let _ = tree_sum(vec![vec![0.0]; 3]);
+    }
+}

@@ -1,0 +1,129 @@
+//! The α-β-γ running-time model (paper §7.1).
+//!
+//! `T = γ·F + α·L + β·W` where F = flops, L = messages, W = words.
+//! Defaults are calibrated to commodity-cluster ratios (InfiniBand-ish
+//! latency, 10GbE-ish bandwidth, ~1 Gflop/s/core sustained f64), giving
+//! α/γ ≈ 10³ and β/γ ≈ 4 — the "communication is much more expensive
+//! than a flop" regime the paper targets.
+
+/// Hardware parameters for the cost model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HwParams {
+    /// Seconds per message (latency).
+    pub alpha: f64,
+    /// Seconds per 8-byte word (inverse bandwidth).
+    pub beta: f64,
+    /// Seconds per floating-point operation.
+    pub gamma: f64,
+}
+
+impl Default for HwParams {
+    fn default() -> Self {
+        HwParams {
+            alpha: 1.0e-6, // 1 µs MPI latency
+            beta: 4.0e-9,  // 8 B / (2 GB/s) per word
+            gamma: 1.0e-9, // 1 Gflop/s sustained per core
+        }
+    }
+}
+
+impl HwParams {
+    /// A "slow network" variant (WAN-ish): stresses the
+    /// communication-avoiding advantage (used by ablation benches).
+    pub fn slow_network() -> Self {
+        HwParams { alpha: 1.0e-4, beta: 8.0e-8, gamma: 1.0e-9 }
+    }
+
+    /// A "fast network" variant (NVLink-ish): shrinks the advantage.
+    pub fn fast_network() -> Self {
+        HwParams { alpha: 1.0e-7, beta: 5.0e-10, gamma: 1.0e-9 }
+    }
+}
+
+/// Aggregate counters (F, W, L in the paper's notation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommCounters {
+    /// Arithmetic operations F.
+    pub flops: u64,
+    /// Words moved W.
+    pub words: u64,
+    /// Messages sent L.
+    pub msgs: u64,
+}
+
+impl CommCounters {
+    pub fn add(&mut self, other: CommCounters) {
+        self.flops += other.flops;
+        self.words += other.words;
+        self.msgs += other.msgs;
+    }
+
+    /// Modeled time under `hw`: γF + αL + βW.
+    pub fn model_time(&self, hw: &HwParams) -> f64 {
+        hw.gamma * self.flops as f64 + hw.alpha * self.msgs as f64 + hw.beta * self.words as f64
+    }
+}
+
+/// Cost model bound to fixed hardware parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    hw: HwParams,
+}
+
+impl CostModel {
+    pub fn new(hw: HwParams) -> Self {
+        CostModel { hw }
+    }
+
+    pub fn hw(&self) -> HwParams {
+        self.hw
+    }
+
+    /// Time for one point-to-point message of `words` words.
+    pub fn msg_time(&self, words: usize) -> f64 {
+        self.hw.alpha + self.hw.beta * words as f64
+    }
+
+    /// Critical-path time of a binary-tree collective (reduce or bcast)
+    /// over `p` ranks moving `words` words per level: `log₂p · (α + βW)`.
+    pub fn collective_time(&self, p: usize, words: usize) -> f64 {
+        let levels = (p.max(1)).trailing_zeros() as f64;
+        levels * self.msg_time(words)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_time_linear() {
+        let hw = HwParams { alpha: 1.0, beta: 0.1, gamma: 0.01 };
+        let c = CommCounters { flops: 100, words: 10, msgs: 2 };
+        assert!((c.model_time(&hw) - (0.01 * 100.0 + 1.0 * 2.0 + 0.1 * 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_add() {
+        let mut a = CommCounters { flops: 1, words: 2, msgs: 3 };
+        a.add(CommCounters { flops: 10, words: 20, msgs: 30 });
+        assert_eq!(a, CommCounters { flops: 11, words: 22, msgs: 33 });
+    }
+
+    #[test]
+    fn collective_scales_with_log_p() {
+        let m = CostModel::new(HwParams::default());
+        let t8 = m.collective_time(8, 100);
+        let t2 = m.collective_time(2, 100);
+        assert!((t8 / t2 - 3.0).abs() < 1e-9);
+        assert_eq!(m.collective_time(1, 100), 0.0);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let hw = HwParams::default();
+        let m = CostModel::new(hw);
+        // 1-word message ≈ α
+        assert!((m.msg_time(1) - hw.alpha) / hw.alpha < 0.01);
+    }
+}

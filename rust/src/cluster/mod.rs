@@ -1,0 +1,349 @@
+//! Simulated message-passing cluster with α-β-γ cost accounting.
+//!
+//! The paper evaluates on an MPI cluster; this environment has a single
+//! core and no network, so the parallel runtime is *simulated*: `P`
+//! logical ranks execute the same superstep program (sequentially or on
+//! OS threads), and every collective routes through a cost accountant
+//! that charges **α per message, β per word and γ per flop** — exactly
+//! the model the paper's §7.1 analysis uses. Simulated time is
+//!
+//! ```text
+//! T = Σ_supersteps max_rank(measured compute) + Σ_collectives (α·L + β·W)
+//! ```
+//!
+//! so computation constants are *measured* (real wallclock of real
+//! kernels on real shards) while communication is *modeled* (the only
+//! part this hardware cannot produce). See `DESIGN.md` §3 for why this
+//! preserves the paper's observable behaviour.
+
+pub mod collectives;
+pub mod cost;
+pub mod topology;
+pub mod tracer;
+
+pub use cost::{CommCounters, CostModel, HwParams};
+pub use tracer::{Phase, PhaseStats, Tracer};
+
+use std::time::Instant;
+
+/// Execution strategy for rank compute within a superstep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Ranks run one after another; per-rank wallclock is measured and the
+    /// *maximum* is charged to the simulated clock (BSP critical path).
+    Sequential,
+    /// Ranks run on OS threads (validates the decomposition is actually
+    /// parallel/thread-safe; on a 1-core sandbox it adds no speed).
+    Threaded,
+}
+
+/// The simulated cluster: logical ranks + cost accounting + phase tracer.
+pub struct SimCluster {
+    p: usize,
+    mode: ExecMode,
+    cost: CostModel,
+    /// Simulated elapsed seconds (critical path).
+    clock: f64,
+    tracer: Tracer,
+}
+
+impl SimCluster {
+    /// `p` must be a power of two ≥ 1 (binary-tree collectives).
+    pub fn new(p: usize, hw: HwParams, mode: ExecMode) -> Self {
+        assert!(p >= 1 && p.is_power_of_two(), "P must be a power of two, got {p}");
+        SimCluster { p, mode, cost: CostModel::new(hw), clock: 0.0, tracer: Tracer::new() }
+    }
+
+    /// Number of ranks.
+    pub fn nranks(&self) -> usize {
+        self.p
+    }
+
+    /// Tree depth `log₂ P`.
+    pub fn levels(&self) -> u32 {
+        self.p.trailing_zeros()
+    }
+
+    /// Simulated elapsed time in seconds.
+    pub fn sim_time(&self) -> f64 {
+        self.clock
+    }
+
+    /// Aggregated communication counters.
+    pub fn counters(&self) -> CommCounters {
+        self.tracer.totals()
+    }
+
+    /// Phase-level breakdown (Figures 7–8).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Reset clock/counters, keep topology.
+    pub fn reset(&mut self) {
+        self.clock = 0.0;
+        self.tracer = Tracer::new();
+    }
+
+    /// Hardware parameters in use.
+    pub fn hw(&self) -> HwParams {
+        self.cost.hw()
+    }
+
+    /// Run `f(rank, &mut state[rank])` on every rank as one superstep,
+    /// charging `max_rank(wallclock)` to the simulated clock under
+    /// `phase`. Returns the per-rank outputs.
+    pub fn superstep<R: Send, T: Send>(
+        &mut self,
+        phase: Phase,
+        states: &mut [R],
+        f: impl Fn(usize, &mut R) -> T + Sync,
+    ) -> Vec<T> {
+        assert_eq!(states.len(), self.p);
+        let (outs, max_dt) = match self.mode {
+            ExecMode::Sequential => {
+                let mut outs = Vec::with_capacity(self.p);
+                let mut max_dt = 0.0f64;
+                for (rank, st) in states.iter_mut().enumerate() {
+                    let t0 = Instant::now();
+                    outs.push(f(rank, st));
+                    max_dt = max_dt.max(t0.elapsed().as_secs_f64());
+                }
+                (outs, max_dt)
+            }
+            ExecMode::Threaded => {
+                let mut pairs: Vec<(T, f64)> = Vec::with_capacity(self.p);
+                std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(self.p);
+                    for (rank, st) in states.iter_mut().enumerate() {
+                        let fref = &f;
+                        handles.push(s.spawn(move || {
+                            let t0 = Instant::now();
+                            let out = fref(rank, st);
+                            (out, t0.elapsed().as_secs_f64())
+                        }));
+                    }
+                    for h in handles {
+                        pairs.push(h.join().expect("rank thread panicked"));
+                    }
+                });
+                let max_dt = pairs.iter().map(|(_, d)| *d).fold(0.0f64, f64::max);
+                (pairs.into_iter().map(|(o, _)| o).collect(), max_dt)
+            }
+        };
+        self.clock += max_dt;
+        self.tracer.add_time(phase, max_dt);
+        outs
+    }
+
+    /// Master-only (rank 0) compute, measured and charged under `phase`.
+    pub fn master<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        self.clock += dt;
+        self.tracer.add_time(phase, dt);
+        out
+    }
+
+    /// Charge `flops` floating-point operations to `phase` (bookkeeping
+    /// for Table 1/2 verification; time comes from measurement, not γ).
+    pub fn charge_flops(&mut self, phase: Phase, flops: u64) {
+        self.tracer.add_flops(phase, flops);
+    }
+
+    /// Binary-tree reduction of per-rank vectors to the master:
+    /// charges `log₂P` messages and `words·log₂P` words (the paper's
+    /// convention for Table 1), advances the clock by the modeled comm
+    /// time, and returns the combined (summed) vector.
+    pub fn reduce_sum(&mut self, phase: Phase, contribs: Vec<Vec<f64>>) -> Vec<f64> {
+        assert_eq!(contribs.len(), self.p);
+        let words = contribs.first().map(|v| v.len()).unwrap_or(0);
+        let out = collectives::tree_sum(contribs);
+        self.charge_collective(phase, words);
+        out
+    }
+
+    /// Broadcast `words` words from master to all ranks (cost only; data
+    /// movement is the caller's business since memory is shared here).
+    pub fn broadcast(&mut self, phase: Phase, words: usize) {
+        self.charge_collective(phase, words);
+    }
+
+    /// Point-to-point sends at one tournament-tree level: each of the
+    /// `pairs` sends `words_per_msg` words to its parent (T-bLARS Alg. 3
+    /// step 9). One level = 1 message of `words_per_msg` on the critical
+    /// path; counters record the per-level totals.
+    pub fn tree_level_exchange(&mut self, phase: Phase, pairs: usize, words_per_msg: usize) {
+        if pairs == 0 {
+            return;
+        }
+        let dt = self.cost.msg_time(words_per_msg);
+        self.clock += dt;
+        self.tracer.add_comm(phase, dt, words_per_msg as u64, 1);
+        // Off-critical-path traffic still counted as words (volume), not time.
+        if pairs > 1 {
+            self.tracer.add_words_only(phase, ((pairs - 1) * words_per_msg) as u64);
+        }
+    }
+
+    /// Advance the simulated clock by an explicitly modeled wait
+    /// (T-bLARS serial-tournament wait, §10.2).
+    pub fn charge_wait(&mut self, dt: f64) {
+        self.clock += dt;
+        self.tracer.add_time(Phase::Wait, dt);
+    }
+
+    /// Absorb an externally measured tracer (e.g. an mLARS call's
+    /// per-phase compute) into this cluster's clock and tracer. The
+    /// tracer's total time lands on the critical path.
+    pub fn absorb(&mut self, t: &Tracer) {
+        self.clock += t.total_time();
+        self.tracer.merge(t);
+    }
+
+    /// Absorb only the counters (flops/words/msgs) of a tracer without
+    /// advancing the clock (volume accounting off the critical path).
+    pub fn absorb_counters(&mut self, t: &Tracer) {
+        let mut zeroed = t.clone();
+        zeroed.zero_times();
+        self.tracer.merge(&zeroed);
+    }
+
+    fn charge_collective(&mut self, phase: Phase, words: usize) {
+        if self.p == 1 {
+            return; // no communication on a single rank
+        }
+        let levels = self.levels() as u64;
+        let dt = self.cost.collective_time(self.p, words);
+        self.clock += dt;
+        self.tracer.add_comm(phase, dt, words as u64 * levels, levels);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(p: usize) -> SimCluster {
+        SimCluster::new(p, HwParams::default(), ExecMode::Sequential)
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        let _ = cluster(3);
+    }
+
+    #[test]
+    fn superstep_runs_all_ranks() {
+        let mut c = cluster(4);
+        let mut states = vec![0u64; 4];
+        let outs = c.superstep(Phase::Other, &mut states, |rank, s| {
+            *s = rank as u64 + 1;
+            rank
+        });
+        assert_eq!(outs, vec![0, 1, 2, 3]);
+        assert_eq!(states, vec![1, 2, 3, 4]);
+        assert!(c.sim_time() > 0.0);
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let mut seq = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+        let mut thr = SimCluster::new(4, HwParams::default(), ExecMode::Threaded);
+        let mut s1 = vec![0.0f64; 4];
+        let mut s2 = vec![0.0f64; 4];
+        let f = |rank: usize, s: &mut f64| {
+            *s = (rank as f64 + 1.0).sqrt();
+            *s
+        };
+        let o1 = seq.superstep(Phase::Other, &mut s1, f);
+        let o2 = thr.superstep(Phase::Other, &mut s2, f);
+        assert_eq!(o1, o2);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn reduce_sum_combines() {
+        let mut c = cluster(4);
+        let contribs = vec![vec![1.0, 2.0]; 4];
+        let out = c.reduce_sum(Phase::Corr, contribs);
+        assert_eq!(out, vec![4.0, 8.0]);
+        let t = c.counters();
+        assert_eq!(t.msgs, 2); // log2(4)
+        assert_eq!(t.words, 2 * 2); // words * log2(P)
+    }
+
+    #[test]
+    fn single_rank_no_comm() {
+        let mut c = cluster(1);
+        let out = c.reduce_sum(Phase::Corr, vec![vec![3.0]]);
+        assert_eq!(out, vec![3.0]);
+        assert_eq!(c.counters().msgs, 0);
+        assert_eq!(c.counters().words, 0);
+        c.broadcast(Phase::Bcast, 100);
+        assert_eq!(c.counters().msgs, 0);
+    }
+
+    #[test]
+    fn broadcast_charges_model() {
+        let mut c = cluster(8);
+        c.broadcast(Phase::Bcast, 10);
+        let t = c.counters();
+        assert_eq!(t.msgs, 3);
+        assert_eq!(t.words, 30);
+        assert!(c.sim_time() > 0.0);
+    }
+
+    #[test]
+    fn flop_charges_accumulate() {
+        let mut c = cluster(2);
+        c.charge_flops(Phase::Corr, 100);
+        c.charge_flops(Phase::Corr, 50);
+        assert_eq!(c.counters().flops, 150);
+        assert_eq!(c.tracer().get(Phase::Corr).flops, 150);
+    }
+
+    #[test]
+    fn absorb_advances_clock_and_counters() {
+        let mut c = cluster(2);
+        let mut t = Tracer::new();
+        t.add_time(Phase::Corr, 0.25);
+        t.add_flops(Phase::Corr, 99);
+        c.absorb(&t);
+        assert!((c.sim_time() - 0.25).abs() < 1e-12);
+        assert_eq!(c.counters().flops, 99);
+    }
+
+    #[test]
+    fn absorb_counters_leaves_clock() {
+        let mut c = cluster(2);
+        let mut t = Tracer::new();
+        t.add_time(Phase::Corr, 0.25);
+        t.add_flops(Phase::Corr, 99);
+        c.absorb_counters(&t);
+        assert_eq!(c.sim_time(), 0.0);
+        assert_eq!(c.counters().flops, 99);
+    }
+
+    #[test]
+    fn tree_level_exchange_counts_volume() {
+        let mut c = cluster(8);
+        c.tree_level_exchange(Phase::TreeExchange, 4, 100);
+        let s = c.tracer().get(Phase::TreeExchange);
+        assert_eq!(s.msgs, 1); // critical path: one message per level
+        assert_eq!(s.words, 400); // total traffic volume
+        c.tree_level_exchange(Phase::TreeExchange, 0, 100); // no-op
+        assert_eq!(c.tracer().get(Phase::TreeExchange).msgs, 1);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut c = cluster(2);
+        c.broadcast(Phase::Bcast, 5);
+        c.reset();
+        assert_eq!(c.sim_time(), 0.0);
+        assert_eq!(c.counters().msgs, 0);
+    }
+}

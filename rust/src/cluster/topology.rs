@@ -1,0 +1,100 @@
+//! Binary tournament tree over ranks (T-bLARS, Algorithm 3 / Figure 1).
+//!
+//! Level 0 holds all `P` leaf ranks; each higher level halves the node
+//! count by pairing adjacent nodes until a single root remains. The node
+//! at `(level, i)` is hosted by the lowest rank among its leaves
+//! (rank `i · 2^level`), matching a binomial reduction tree.
+
+/// A binary tournament tree over `p` ranks (`p` a power of two).
+#[derive(Clone, Copy, Debug)]
+pub struct TournamentTree {
+    p: usize,
+}
+
+impl TournamentTree {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1 && p.is_power_of_two(), "P must be a power of two");
+        TournamentTree { p }
+    }
+
+    /// Number of leaf ranks.
+    pub fn nranks(&self) -> usize {
+        self.p
+    }
+
+    /// Number of levels above the leaves (`log₂ P`).
+    pub fn levels(&self) -> usize {
+        self.p.trailing_zeros() as usize
+    }
+
+    /// Number of internal nodes at `level` (1-based above leaves):
+    /// `P / 2^level`.
+    pub fn nodes_at(&self, level: usize) -> usize {
+        assert!(level <= self.levels());
+        self.p >> level
+    }
+
+    /// The hosting rank of node `i` at `level`.
+    pub fn host(&self, level: usize, i: usize) -> usize {
+        assert!(i < self.nodes_at(level));
+        i << level
+    }
+
+    /// Children (as node indices at `level - 1`) of node `i` at `level`.
+    pub fn children(&self, level: usize, i: usize) -> (usize, usize) {
+        assert!(level >= 1);
+        (2 * i, 2 * i + 1)
+    }
+
+    /// Leaf ranks covered by node `i` at `level`.
+    pub fn leaves(&self, level: usize, i: usize) -> std::ops::Range<usize> {
+        let span = 1 << level;
+        i * span..(i + 1) * span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_and_counts() {
+        let t = TournamentTree::new(8);
+        assert_eq!(t.levels(), 3);
+        assert_eq!(t.nodes_at(0), 8);
+        assert_eq!(t.nodes_at(1), 4);
+        assert_eq!(t.nodes_at(3), 1);
+    }
+
+    #[test]
+    fn hosts_are_lowest_leaf() {
+        let t = TournamentTree::new(8);
+        assert_eq!(t.host(1, 0), 0);
+        assert_eq!(t.host(1, 3), 6);
+        assert_eq!(t.host(3, 0), 0); // root hosted at rank 0
+    }
+
+    #[test]
+    fn children_partition_leaves() {
+        let t = TournamentTree::new(8);
+        for level in 1..=t.levels() {
+            for i in 0..t.nodes_at(level) {
+                let (l, r) = t.children(level, i);
+                let pl = t.leaves(level - 1, l);
+                let pr = t.leaves(level - 1, r);
+                let me = t.leaves(level, i);
+                assert_eq!(pl.start, me.start);
+                assert_eq!(pr.end, me.end);
+                assert_eq!(pl.end, pr.start);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_tree() {
+        let t = TournamentTree::new(1);
+        assert_eq!(t.levels(), 0);
+        assert_eq!(t.nodes_at(0), 1);
+        assert_eq!(t.leaves(0, 0), 0..1);
+    }
+}

@@ -1,0 +1,278 @@
+//! Phase-level breakdown tracing (regenerates Figures 7–8).
+//!
+//! Every superstep / collective / master computation is attributed to a
+//! [`Phase`]; the tracer accumulates simulated time, flops, words and
+//! messages per phase. The figure drivers then group phases into the
+//! paper's breakdown categories: matrix products, step-size γ,
+//! communication, wait, other.
+
+use super::cost::CommCounters;
+
+/// Algorithm phases, labeled after the steps of Algorithms 1–4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Initialization (Alg 2 step 1).
+    Init,
+    /// Correlation products `Aᵀr` / `Aᵀu` (steps 2, 11).
+    Corr,
+    /// Top-b selection / argmin (steps 3, 13–14).
+    Select,
+    /// Gram block products (steps 4, 20).
+    Gram,
+    /// Cholesky factor/extend (steps 5, 21–23).
+    Cholesky,
+    /// Master triangular solves (steps 7–8).
+    Solve,
+    /// Direction application `A_I w` (step 10).
+    DirApply,
+    /// Step-size γ computation (step 12 / Procedure 1).
+    GammaStep,
+    /// Response / correlation updates (steps 17–19).
+    Update,
+    /// Broadcasts (steps 9, 16 / Alg 3 step 12).
+    Bcast,
+    /// Reductions (steps 2, 4, 11, 20).
+    Reduce,
+    /// Tournament-tree point-to-point exchange (Alg 3 step 9).
+    TreeExchange,
+    /// Modeled wait for serial tournament levels (§10.2).
+    Wait,
+    /// Anything else.
+    Other,
+}
+
+/// The paper's Figure 7/8 breakdown categories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    MatProducts,
+    StepSize,
+    Communication,
+    Wait,
+    Other,
+}
+
+impl Phase {
+    /// Map a phase to its breakdown category.
+    pub fn category(self) -> Category {
+        match self {
+            Phase::Corr | Phase::Gram | Phase::DirApply => Category::MatProducts,
+            Phase::GammaStep => Category::StepSize,
+            Phase::Bcast | Phase::Reduce | Phase::TreeExchange => Category::Communication,
+            Phase::Wait => Category::Wait,
+            _ => Category::Other,
+        }
+    }
+
+    /// All phases (for iteration/reporting).
+    pub const ALL: [Phase; 14] = [
+        Phase::Init,
+        Phase::Corr,
+        Phase::Select,
+        Phase::Gram,
+        Phase::Cholesky,
+        Phase::Solve,
+        Phase::DirApply,
+        Phase::GammaStep,
+        Phase::Update,
+        Phase::Bcast,
+        Phase::Reduce,
+        Phase::TreeExchange,
+        Phase::Wait,
+        Phase::Other,
+    ];
+}
+
+/// Accumulated statistics for one phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseStats {
+    /// Simulated seconds attributed to the phase.
+    pub time: f64,
+    pub flops: u64,
+    pub words: u64,
+    pub msgs: u64,
+}
+
+/// Per-phase accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    stats: [PhaseStats; Phase::ALL.len()],
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Tracer::default()
+    }
+
+    #[inline]
+    fn idx(phase: Phase) -> usize {
+        Phase::ALL.iter().position(|&p| p == phase).unwrap()
+    }
+
+    pub fn add_time(&mut self, phase: Phase, dt: f64) {
+        self.stats[Self::idx(phase)].time += dt;
+    }
+
+    pub fn add_flops(&mut self, phase: Phase, flops: u64) {
+        self.stats[Self::idx(phase)].flops += flops;
+    }
+
+    pub fn add_comm(&mut self, phase: Phase, dt: f64, words: u64, msgs: u64) {
+        let s = &mut self.stats[Self::idx(phase)];
+        s.time += dt;
+        s.words += words;
+        s.msgs += msgs;
+    }
+
+    pub fn add_words_only(&mut self, phase: Phase, words: u64) {
+        self.stats[Self::idx(phase)].words += words;
+    }
+
+    pub fn get(&self, phase: Phase) -> PhaseStats {
+        self.stats[Self::idx(phase)]
+    }
+
+    /// Totals across phases.
+    pub fn totals(&self) -> CommCounters {
+        let mut c = CommCounters::default();
+        for s in &self.stats {
+            c.flops += s.flops;
+            c.words += s.words;
+            c.msgs += s.msgs;
+        }
+        c
+    }
+
+    /// Total simulated time across phases.
+    pub fn total_time(&self) -> f64 {
+        self.stats.iter().map(|s| s.time).sum()
+    }
+
+    /// Aggregate by Figure 7/8 category: returns
+    /// (mat_products, step_size, communication, wait, other) seconds.
+    pub fn by_category(&self) -> [f64; 5] {
+        let mut out = [0.0; 5];
+        for (i, phase) in Phase::ALL.iter().enumerate() {
+            let slot = match phase.category() {
+                Category::MatProducts => 0,
+                Category::StepSize => 1,
+                Category::Communication => 2,
+                Category::Wait => 3,
+                Category::Other => 4,
+            };
+            out[slot] += self.stats[i].time;
+        }
+        out
+    }
+
+    /// Zero all time components, keeping counters (used when absorbing
+    /// off-critical-path work into an aggregate).
+    pub fn zero_times(&mut self) {
+        for s in self.stats.iter_mut() {
+            s.time = 0.0;
+        }
+    }
+
+    /// Element-wise critical path of several tracers: per-phase maximum
+    /// time and flops (the slowest rank defines the superstep), summed
+    /// words/msgs (traffic volume).
+    pub fn critical_path(tracers: &[Tracer]) -> Tracer {
+        let mut out = Tracer::new();
+        for t in tracers {
+            for (o, s) in out.stats.iter_mut().zip(&t.stats) {
+                o.time = o.time.max(s.time);
+                o.flops = o.flops.max(s.flops);
+                o.words += s.words;
+                o.msgs += s.msgs;
+            }
+        }
+        out
+    }
+
+    /// Merge another tracer into this one.
+    pub fn merge(&mut self, other: &Tracer) {
+        for (a, b) in self.stats.iter_mut().zip(&other.stats) {
+            a.time += b.time;
+            a.flops += b.flops;
+            a.words += b.words;
+            a.msgs += b.msgs;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_phase() {
+        let mut t = Tracer::new();
+        t.add_time(Phase::Corr, 0.5);
+        t.add_flops(Phase::Corr, 42);
+        t.add_comm(Phase::Reduce, 0.1, 10, 2);
+        assert_eq!(t.get(Phase::Corr).flops, 42);
+        assert!((t.get(Phase::Corr).time - 0.5).abs() < 1e-15);
+        assert_eq!(t.get(Phase::Reduce).msgs, 2);
+        let totals = t.totals();
+        assert_eq!(totals.flops, 42);
+        assert_eq!(totals.words, 10);
+        assert!((t.total_time() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn category_mapping() {
+        assert_eq!(Phase::Corr.category(), Category::MatProducts);
+        assert_eq!(Phase::GammaStep.category(), Category::StepSize);
+        assert_eq!(Phase::Reduce.category(), Category::Communication);
+        assert_eq!(Phase::Wait.category(), Category::Wait);
+        assert_eq!(Phase::Cholesky.category(), Category::Other);
+    }
+
+    #[test]
+    fn by_category_sums() {
+        let mut t = Tracer::new();
+        t.add_time(Phase::Corr, 1.0);
+        t.add_time(Phase::Gram, 2.0);
+        t.add_time(Phase::GammaStep, 3.0);
+        t.add_time(Phase::Wait, 4.0);
+        let cats = t.by_category();
+        assert!((cats[0] - 3.0).abs() < 1e-15);
+        assert!((cats[1] - 3.0).abs() < 1e-15);
+        assert!((cats[3] - 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn critical_path_takes_max_time_sum_words() {
+        let mut a = Tracer::new();
+        let mut b = Tracer::new();
+        a.add_time(Phase::Corr, 1.0);
+        a.add_flops(Phase::Corr, 100);
+        a.add_comm(Phase::Reduce, 0.0, 10, 1);
+        b.add_time(Phase::Corr, 3.0);
+        b.add_flops(Phase::Corr, 50);
+        b.add_comm(Phase::Reduce, 0.0, 20, 2);
+        let cp = Tracer::critical_path(&[a, b]);
+        assert!((cp.get(Phase::Corr).time - 3.0).abs() < 1e-15);
+        assert_eq!(cp.get(Phase::Corr).flops, 100);
+        assert_eq!(cp.get(Phase::Reduce).words, 30);
+        assert_eq!(cp.get(Phase::Reduce).msgs, 3);
+    }
+
+    #[test]
+    fn zero_times_keeps_counters() {
+        let mut t = Tracer::new();
+        t.add_comm(Phase::Bcast, 5.0, 7, 2);
+        t.zero_times();
+        assert_eq!(t.get(Phase::Bcast).words, 7);
+        assert_eq!(t.total_time(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Tracer::new();
+        let mut b = Tracer::new();
+        a.add_flops(Phase::Corr, 10);
+        b.add_flops(Phase::Corr, 5);
+        a.merge(&b);
+        assert_eq!(a.get(Phase::Corr).flops, 15);
+    }
+}

@@ -1,0 +1,198 @@
+//! Run configuration: experiment sweeps, hardware parameters, CLI
+//! option parsing (hand-rolled `key=value` / `--flag` parsing — the
+//! environment is offline, no clap).
+
+use crate::cluster::{ExecMode, HwParams};
+use anyhow::{bail, Result};
+
+/// Which algorithm a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Lars,
+    Blars,
+    Tblars,
+}
+
+impl std::str::FromStr for Algo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "lars" => Ok(Algo::Lars),
+            "blars" => Ok(Algo::Blars),
+            "tblars" | "t-blars" => Ok(Algo::Tblars),
+            other => bail!("unknown algorithm '{other}' (lars|blars|tblars)"),
+        }
+    }
+}
+
+/// One fully specified run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub algo: Algo,
+    pub dataset: String,
+    /// Target selected columns.
+    pub t: usize,
+    /// Block size.
+    pub b: usize,
+    /// Simulated ranks (power of two).
+    pub p: usize,
+    pub seed: u64,
+    pub hw: HwParams,
+    pub mode: ExecMode,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algo: Algo::Lars,
+            dataset: "tiny".into(),
+            t: 20,
+            b: 1,
+            p: 1,
+            seed: 42,
+            hw: HwParams::default(),
+            mode: ExecMode::Sequential,
+        }
+    }
+}
+
+/// The paper's sweep grids (scaled; §10 uses P up to 128, b up to 38,
+/// t = 75 → we default to t = 60, same regimes).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub t: usize,
+    pub b_values: Vec<usize>,
+    pub p_values: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            t: 60,
+            b_values: vec![1, 2, 3, 5, 8, 15, 25, 38],
+            p_values: vec![1, 2, 4, 8, 16, 32, 64, 128],
+            seed: 42,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Reduced grid for quick runs / CI.
+    pub fn quick() -> Self {
+        SweepConfig {
+            t: 24,
+            b_values: vec![1, 2, 4, 8],
+            p_values: vec![1, 4, 16],
+            seed: 42,
+        }
+    }
+}
+
+/// Minimal argv parser: positional args plus `--key value` / `--key=value`
+/// options and bare `--flag`s. Boolean flags must be listed in
+/// [`BOOL_FLAGS`] so `--quick fig3` parses as flag + positional rather
+/// than `quick = "fig3"`.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: Vec<(String, Option<String>)>,
+}
+
+/// Options that never take a value.
+pub const BOOL_FLAGS: [&str; 4] = ["quick", "threads", "force", "verbose"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.push((k.to_string(), Some(v.to_string())));
+                } else if !BOOL_FLAGS.contains(&stripped)
+                    && i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    out.opts.push((stripped.to_string(), Some(argv[i + 1].clone())));
+                    i += 1;
+                } else {
+                    out.opts.push((stripped.to_string(), None));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.opts.iter().any(|(k, _)| k == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_positional_and_opts() {
+        let a = Args::parse(&argv("run --t 30 --b=4 --quick fig3"));
+        assert_eq!(a.positional, vec!["run", "fig3"]);
+        assert_eq!(a.get("t"), Some("30"));
+        assert_eq!(a.get("b"), Some("4"));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn get_parse_defaults() {
+        let a = Args::parse(&argv("x --t 7"));
+        assert_eq!(a.get_parse::<usize>("t", 1).unwrap(), 7);
+        assert_eq!(a.get_parse::<usize>("b", 3).unwrap(), 3);
+        assert!(a.get_parse::<usize>("t", 1).is_ok());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = Args::parse(&argv("x --t seven"));
+        assert!(a.get_parse::<usize>("t", 1).is_err());
+    }
+
+    #[test]
+    fn algo_from_str() {
+        assert_eq!("lars".parse::<Algo>().unwrap(), Algo::Lars);
+        assert_eq!("t-blars".parse::<Algo>().unwrap(), Algo::Tblars);
+        assert!("zzz".parse::<Algo>().is_err());
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = Args::parse(&argv("x --t 1 --t 2"));
+        assert_eq!(a.get("t"), Some("2"));
+    }
+}

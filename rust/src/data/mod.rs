@@ -1,0 +1,11 @@
+//! Dataset substrate: synthetic generators matched to the paper's
+//! Table 3 / Figure 2, a LIBSVM-format parser (used when the real files
+//! are present), and the row/column partitioners the two algorithms
+//! need.
+
+pub mod datasets;
+pub mod libsvm;
+pub mod partition;
+pub mod synthetic;
+
+pub use datasets::{Dataset, DatasetStats};

@@ -1,0 +1,170 @@
+//! Data partitioners.
+//!
+//! bLARS assumes **row-partitioned** data (each rank holds `m/P` rows,
+//! Alg. 2); T-bLARS assumes **column-partitioned** data (each rank holds
+//! `n/P` columns, §8). For sparse, column-unbalanced matrices the paper
+//! balances by nnz (§10: "we distribute the columns ... so that the
+//! partitioned columns at each processor have roughly the same number of
+//! nonzeros"); Figure 5 additionally studies *random* column partitions.
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// Contiguous row ranges, one per rank; sizes differ by ≤ 1.
+pub fn row_ranges(m: usize, p: usize) -> Vec<(usize, usize)> {
+    assert!(p >= 1);
+    let base = m / p;
+    let extra = m % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for r in 0..p {
+        let len = base + usize::from(r < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, m);
+    out
+}
+
+/// Row shards of a matrix, one per rank.
+pub fn row_shards(a: &Matrix, p: usize) -> Vec<Matrix> {
+    row_ranges(a.nrows(), p).into_iter().map(|(r0, r1)| a.row_slice(r0, r1)).collect()
+}
+
+/// nnz-balanced column partition: greedy LPT (largest column first into
+/// the lightest bin). Returns `p` column-index lists, each sorted.
+pub fn balanced_col_partition(a: &Matrix, p: usize) -> Vec<Vec<usize>> {
+    assert!(p >= 1);
+    let counts = a.col_nnz_counts();
+    let mut order: Vec<usize> = (0..counts.len()).collect();
+    order.sort_unstable_by(|&i, &j| counts[j].cmp(&counts[i]).then(i.cmp(&j)));
+    let mut bins: Vec<Vec<usize>> = vec![Vec::new(); p];
+    let mut loads = vec![0usize; p];
+    for j in order {
+        // Lightest bin (ties → lowest rank).
+        let r = (0..p).min_by_key(|&r| (loads[r], r)).unwrap();
+        bins[r].push(j);
+        loads[r] += counts[j].max(1);
+    }
+    for bin in &mut bins {
+        bin.sort_unstable();
+    }
+    bins
+}
+
+/// Uniformly random column partition into `p` near-equal parts
+/// (Figure 5's 10-random-partition study).
+pub fn random_col_partition(n: usize, p: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let ranges = row_ranges(n, p); // reuse the near-equal splitter
+    let mut out: Vec<Vec<usize>> = ranges
+        .into_iter()
+        .map(|(a, b)| {
+            let mut part = idx[a..b].to_vec();
+            part.sort_unstable();
+            part
+        })
+        .collect();
+    // Keep deterministic rank order.
+    out.shrink_to_fit();
+    out
+}
+
+/// Imbalance factor of a partition: max bin nnz / mean bin nnz.
+pub fn partition_imbalance(a: &Matrix, parts: &[Vec<usize>]) -> f64 {
+    let counts = a.col_nnz_counts();
+    let loads: Vec<usize> =
+        parts.iter().map(|p| p.iter().map(|&j| counts[j]).sum::<usize>()).collect();
+    let max = *loads.iter().max().unwrap_or(&0) as f64;
+    let mean = loads.iter().sum::<usize>() as f64 / loads.len().max(1) as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    #[test]
+    fn row_ranges_cover() {
+        for (m, p) in [(10, 3), (7, 7), (100, 8), (5, 1)] {
+            let r = row_ranges(m, p);
+            assert_eq!(r.len(), p);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r[p - 1].1, m);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            let sizes: Vec<usize> = r.iter().map(|(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn row_shards_preserve_at_r() {
+        let d = datasets::tiny(3);
+        let p = 4;
+        let shards = row_shards(&d.a, p);
+        let ranges = row_ranges(d.a.nrows(), p);
+        let n = d.a.ncols();
+        let mut whole = vec![0.0; n];
+        d.a.at_r(&d.b, &mut whole);
+        let mut sum = vec![0.0; n];
+        for (shard, (r0, r1)) in shards.iter().zip(&ranges) {
+            let mut part = vec![0.0; n];
+            shard.at_r(&d.b[*r0..*r1], &mut part);
+            for (s, x) in sum.iter_mut().zip(&part) {
+                *s += x;
+            }
+        }
+        for (a, b) in whole.iter().zip(&sum) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn balanced_partition_covers_all_columns() {
+        let d = datasets::tiny(4);
+        let parts = balanced_col_partition(&d.a, 8);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..d.a.ncols()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn balanced_beats_random_on_skewed_data() {
+        let d = datasets::sector_like(5);
+        let balanced = balanced_col_partition(&d.a, 16);
+        let mut rng = Pcg64::new(0);
+        let random = random_col_partition(d.a.ncols(), 16, &mut rng);
+        let ib = partition_imbalance(&d.a, &balanced);
+        let ir = partition_imbalance(&d.a, &random);
+        assert!(ib <= ir + 1e-9, "balanced {ib} vs random {ir}");
+        assert!(ib < 1.05, "LPT should be near-perfect, got {ib}");
+    }
+
+    #[test]
+    fn random_partition_is_partition() {
+        let mut rng = Pcg64::new(1);
+        let parts = random_col_partition(101, 4, &mut rng);
+        assert_eq!(parts.len(), 4);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..101).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn random_partitions_differ_by_seed() {
+        let mut r1 = Pcg64::new(1);
+        let mut r2 = Pcg64::new(2);
+        let p1 = random_col_partition(50, 2, &mut r1);
+        let p2 = random_col_partition(50, 2, &mut r2);
+        assert_ne!(p1, p2);
+    }
+}

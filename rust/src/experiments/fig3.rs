@@ -1,0 +1,101 @@
+//! Figure 3 — ℓ2 norm of the residual vs. number of selected columns.
+//!
+//! Per dataset: the LARS curve, bLARS curves per block size `b`
+//! (P does not affect bLARS quality), and T-bLARS curves for a (P, b)
+//! subset. Expected shape (paper §10.1): T-bLARS tracks LARS nearly
+//! identically; bLARS residuals grow with `b`.
+
+use super::runner::{effective_t, run_blars, run_lars_ref, run_tblars};
+use super::sweep_datasets;
+use crate::cluster::HwParams;
+use crate::config::SweepConfig;
+use crate::report::Table;
+
+/// Sample a residual curve at every `step` columns.
+fn curve_samples(cols: &[usize], resid: &[f64], step: usize) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    let mut next = 0usize;
+    for (c, r) in cols.iter().zip(resid) {
+        if *c >= next {
+            out.push((*c, *r));
+            next = c + step;
+        }
+    }
+    out
+}
+
+pub fn run(sweep: &SweepConfig, quick: bool) -> String {
+    let hw = HwParams::default();
+    let mut out = String::from("# Figure 3 — residual ℓ2 vs columns selected\n");
+    let b_values: Vec<usize> =
+        if quick { vec![1, 2, 4] } else { sweep.b_values.iter().copied().take(6).collect() };
+    let tb_p = if quick { 4 } else { 16 };
+
+    for ds in sweep_datasets(sweep.seed, quick) {
+        let t = effective_t(&ds, sweep.t);
+        let step = (t / 10).max(1);
+        out.push_str(&format!("\n## {} (t = {t})\n", ds.name));
+        let reference = run_lars_ref(&ds, t);
+        let mut table = Table::new(&["curve", "samples (cols:resid)"]);
+        let fmt = |samples: Vec<(usize, f64)>| {
+            samples
+                .iter()
+                .map(|(c, r)| format!("{c}:{r:.4}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        table.row(&[
+            "LARS".into(),
+            fmt(curve_samples(&reference.cols_at_iter, &reference.residual_norms, step)),
+        ]);
+        for &b in &b_values {
+            let r = run_blars(&ds, t, b, 1, hw);
+            table.row(&[
+                format!("bLARS b={b}"),
+                fmt(curve_samples(&r.out.cols_at_iter, &r.out.residual_norms, step)),
+            ]);
+        }
+        for &b in &b_values {
+            let r = run_tblars(&ds, t, b, tb_p, hw, None);
+            table.row(&[
+                format!("T-bLARS P={tb_p} b={b}"),
+                fmt(curve_samples(&r.out.cols_at_iter, &r.out.residual_norms, step)),
+            ]);
+        }
+        out.push_str(&table.render());
+
+        // Shape check: final residuals.
+        let rl = *reference.residual_norms.last().unwrap();
+        let rb = run_blars(&ds, t, *b_values.last().unwrap(), 1, hw);
+        let rt = run_tblars(&ds, t, *b_values.last().unwrap(), tb_p, hw, None);
+        out.push_str(&format!(
+            "final residual — LARS {rl:.4} | bLARS(b={}) {:.4} | T-bLARS(b={}) {:.4}\n",
+            b_values.last().unwrap(),
+            rb.out.residual_norms.last().unwrap(),
+            b_values.last().unwrap(),
+            rt.out.residual_norms.last().unwrap(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_renders() {
+        let s = run(&SweepConfig::quick(), true);
+        assert!(s.contains("LARS"));
+        assert!(s.contains("bLARS b=2"));
+        assert!(s.contains("T-bLARS"));
+    }
+
+    #[test]
+    fn curve_sampling_subsamples() {
+        let cols = vec![0, 1, 2, 3, 4, 5, 6];
+        let resid = vec![7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        let s = curve_samples(&cols, &resid, 3);
+        assert_eq!(s, vec![(0, 7.0), (3, 4.0), (6, 1.0)]);
+    }
+}

@@ -1,0 +1,64 @@
+//! Figure 4 — precision in column selection vs block size `b`.
+//!
+//! Treats serial LARS's `t` selections as ground truth; reports
+//! `|method ∩ LARS| / |method|` for bLARS (P-independent) and T-bLARS
+//! (per P, nnz-balanced partition). Expected shape (paper §10.1):
+//! bLARS precision drops steadily as `b` grows; T-bLARS stays higher
+//! and often *recovers* at large `b` (more candidates reach non-leaf
+//! rounds).
+
+use super::runner::{effective_t, run_blars, run_lars_ref, run_tblars};
+use super::sweep_datasets;
+use crate::cluster::HwParams;
+use crate::config::SweepConfig;
+use crate::lars::quality::precision;
+use crate::report::Table;
+
+pub fn run(sweep: &SweepConfig, quick: bool) -> String {
+    let hw = HwParams::default();
+    let b_values: Vec<usize> =
+        if quick { vec![1, 2, 4] } else { sweep.b_values.clone() };
+    let p_values: Vec<usize> = if quick { vec![2, 4] } else { vec![4, 16, 64, 128] };
+    let mut out = String::from("# Figure 4 — precision in column selection vs b\n");
+
+    for ds in sweep_datasets(sweep.seed, quick) {
+        let t = effective_t(&ds, sweep.t);
+        let reference = run_lars_ref(&ds, t);
+        out.push_str(&format!("\n## {} (t = {t})\n", ds.name));
+
+        let mut headers: Vec<String> = vec!["b".into(), "bLARS".into()];
+        headers.extend(p_values.iter().map(|p| format!("T-bLARS P={p}")));
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(&headers_ref);
+
+        for &b in &b_values {
+            let mut row = vec![b.to_string()];
+            let rb = run_blars(&ds, t, b, 1, hw);
+            row.push(format!("{:.2}", precision(&rb.out.selected, &reference.selected)));
+            for &p in &p_values {
+                let rt = run_tblars(&ds, t, b, p, hw, None);
+                row.push(format!("{:.2}", precision(&rt.out.selected, &reference.selected)));
+            }
+            table.row(&row);
+        }
+        out.push_str(&table.render());
+    }
+    out.push_str(
+        "\nShape check (paper Fig. 4): b=1 ⇒ precision 1.00 for bLARS; \
+         precision decreases with b; T-bLARS generally above bLARS.\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_has_unit_precision_at_b1() {
+        let s = run(&SweepConfig::quick(), true);
+        // the first data row is b=1 and bLARS must be exactly LARS
+        let row = s.lines().find(|l| l.starts_with("| 1 ")).expect("b=1 row");
+        assert!(row.contains("1.00"), "b=1 row: {row}");
+    }
+}

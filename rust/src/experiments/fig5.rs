@@ -1,0 +1,73 @@
+//! Figure 5 — effect of random column partitions on T-bLARS precision.
+//!
+//! Fix P = 128 (scaled down under `--quick`), run T-bLARS on 10
+//! uniformly random column partitions per `b`, report min/mean/max
+//! precision vs serial LARS. Expected shape (paper §10.1): spread is
+//! visible but T-bLARS stays above bLARS in most cells.
+
+use super::runner::{effective_t, run_blars, run_lars_ref, run_tblars};
+use super::sweep_datasets;
+use crate::cluster::HwParams;
+use crate::config::SweepConfig;
+use crate::lars::quality::{min_mean_max, precision};
+use crate::report::Table;
+
+pub fn run(sweep: &SweepConfig, quick: bool) -> String {
+    let hw = HwParams::default();
+    let p = if quick { 8 } else { 128 };
+    let n_partitions = if quick { 3 } else { 10 };
+    // Representative b subset (the paper sweeps 2..38; the sequential
+    // simulator pays all 128 ranks' work on one core, so the full cross
+    // product is reserved for `fig4`).
+    let b_values: Vec<usize> = if quick { vec![1, 2, 4] } else { vec![2, 5, 15, 38] };
+    let mut out =
+        format!("# Figure 5 — T-bLARS precision over {n_partitions} random partitions (P = {p})\n");
+
+    for ds in sweep_datasets(sweep.seed, quick) {
+        let t = effective_t(&ds, sweep.t);
+        let reference = run_lars_ref(&ds, t);
+        out.push_str(&format!("\n## {} (t = {t})\n", ds.name));
+        let mut table =
+            Table::new(&["b", "min", "mean", "max", "balanced", "bLARS (ref)"]);
+        for &b in &b_values {
+            let precisions: Vec<f64> = (0..n_partitions)
+                .map(|i| {
+                    let r = run_tblars(&ds, t, b, p, hw, Some(sweep.seed ^ (i as u64 + 1)));
+                    precision(&r.out.selected, &reference.selected)
+                })
+                .collect();
+            let s = min_mean_max(&precisions);
+            let balanced = {
+                let r = run_tblars(&ds, t, b, p, hw, None);
+                precision(&r.out.selected, &reference.selected)
+            };
+            let blars_ref = {
+                let r = run_blars(&ds, t, b, 1, hw);
+                precision(&r.out.selected, &reference.selected)
+            };
+            table.row(&[
+                b.to_string(),
+                format!("{:.2}", s.min),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.max),
+                format!("{balanced:.2}"),
+                format!("{blars_ref:.2}"),
+            ]);
+        }
+        out.push_str(&table.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_renders_bars() {
+        let s = run(&SweepConfig::quick(), true);
+        assert!(s.contains("min"));
+        assert!(s.contains("balanced"));
+        assert!(s.contains("## tiny"));
+    }
+}

@@ -1,0 +1,71 @@
+//! Figure 6 — total speedup vs. serial LARS (P = 1, b = 1).
+//!
+//! Speedup = simulated time of parallel LARS at (P=1, b=1) divided by
+//! the simulated time of the method at (P, b). Simulated time = measured
+//! per-rank compute critical path + α-β-modeled communication (see
+//! `cluster`), exactly the quantity the paper's Table 2 predicts.
+//!
+//! Expected shape (paper §10.2): bLARS speedups are large and grow with
+//! both P and b; T-bLARS speedups are modest except on n ≫ m data
+//! (e2006_log1p), where the tournament avoids the wide reductions.
+
+use super::runner::{effective_t, run_blars, run_tblars};
+use super::sweep_datasets;
+use crate::cluster::HwParams;
+use crate::config::SweepConfig;
+use crate::report::Table;
+
+pub fn run(sweep: &SweepConfig, quick: bool) -> String {
+    let hw = HwParams::default();
+    let b_values: Vec<usize> =
+        if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 8, 15, 38] };
+    let p_values: Vec<usize> = if quick { vec![1, 4] } else { vec![1, 4, 16, 64] };
+    let mut out = String::from("# Figure 6 — total speedup over parallel LARS (P=1, b=1)\n");
+
+    for ds in sweep_datasets(sweep.seed, quick) {
+        let t = effective_t(&ds, sweep.t);
+        let base = run_blars(&ds, t, 1, 1, hw).sim_time;
+        out.push_str(&format!("\n## {} (t = {t}, baseline {:.4}s simulated)\n", ds.name, base));
+
+        for (algo, f) in [
+            ("bLARS", true),
+            ("T-bLARS", false),
+        ] {
+            let mut headers: Vec<String> = vec!["P \\ b".into()];
+            headers.extend(b_values.iter().map(|b| format!("b={b}")));
+            let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+            let mut table = Table::new(&headers_ref);
+            for &p in &p_values {
+                let mut row = vec![format!("P={p}")];
+                for &b in &b_values {
+                    let st = if f {
+                        run_blars(&ds, t, b, p, hw).sim_time
+                    } else {
+                        run_tblars(&ds, t, b, p, hw, None).sim_time
+                    };
+                    row.push(format!("{:.2}x", base / st));
+                }
+                table.row(&row);
+            }
+            out.push_str(&format!("\n### {algo}\n{}", table.render()));
+        }
+    }
+    out.push_str(
+        "\nShape check (paper Fig. 6): bLARS speedup grows with P and b; \
+         T-bLARS speedup is best on n >> m (e2006_log1p_like).\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_renders_speedups() {
+        let s = run(&SweepConfig::quick(), true);
+        assert!(s.contains("bLARS"));
+        assert!(s.contains("T-bLARS"));
+        assert!(s.contains('x'));
+    }
+}

@@ -1,0 +1,114 @@
+//! Figures 7 & 8 — running-time breakdowns.
+//!
+//! Figure 7 fixes b = 1 and varies P; Figure 8 fixes P (= 128 in the
+//! paper) and varies b. Each cell decomposes simulated time into the
+//! paper's categories: matrix products, step-size γ, communication,
+//! wait (T-bLARS serial tournament), other.
+//!
+//! Expected shape (paper §10.2): matvec time falls with P and b for
+//! both methods; bLARS communication share is larger on n ≫ m data;
+//! T-bLARS wait dominates on everything except the widest dataset;
+//! communication of both methods falls as b grows.
+
+use super::runner::{effective_t, run_blars, run_tblars, RunResult};
+use super::sweep_datasets;
+use crate::cluster::HwParams;
+use crate::config::SweepConfig;
+use crate::report::Table;
+
+fn breakdown_row(label: String, r: &RunResult) -> Vec<String> {
+    let total: f64 = r.categories.iter().sum::<f64>().max(1e-12);
+    let pct = |x: f64| format!("{:.0}%", 100.0 * x / total);
+    vec![
+        label,
+        format!("{:.4}", r.sim_time),
+        pct(r.categories[0]),
+        pct(r.categories[1]),
+        pct(r.categories[2]),
+        pct(r.categories[3]),
+        pct(r.categories[4]),
+    ]
+}
+
+const HEADERS: [&str; 7] =
+    ["config", "sim time (s)", "matprod", "gamma", "comm", "wait", "other"];
+
+fn render(
+    title: &str,
+    sweep: &SweepConfig,
+    quick: bool,
+    cells: impl Fn(&crate::data::Dataset, usize) -> Vec<(String, RunResult)>,
+) -> String {
+    let mut out = format!("# {title}\n");
+    for ds in sweep_datasets(sweep.seed, quick) {
+        let t = effective_t(&ds, sweep.t);
+        out.push_str(&format!("\n## {} (t = {t})\n", ds.name));
+        let mut table = Table::new(&HEADERS);
+        for (label, r) in cells(&ds, t) {
+            table.row(&breakdown_row(label, &r));
+        }
+        out.push_str(&table.render());
+    }
+    out
+}
+
+pub fn run_fig7(sweep: &SweepConfig, quick: bool) -> String {
+    let hw = HwParams::default();
+    let p_values: Vec<usize> = if quick { vec![1, 4] } else { vec![1, 4, 16, 64, 128] };
+    render(
+        "Figure 7 — runtime breakdown, b = 1, varying P",
+        sweep,
+        quick,
+        |ds, t| {
+            let mut cells = Vec::new();
+            for &p in &p_values {
+                cells.push((format!("bLARS P={p}"), run_blars(ds, t, 1, p, hw)));
+            }
+            for &p in &p_values {
+                cells.push((format!("T-bLARS P={p}"), run_tblars(ds, t, 1, p, hw, None)));
+            }
+            cells
+        },
+    )
+}
+
+pub fn run_fig8(sweep: &SweepConfig, quick: bool) -> String {
+    let hw = HwParams::default();
+    let p = if quick { 4 } else { 128 };
+    let b_values: Vec<usize> = if quick { vec![1, 2, 4] } else { sweep.b_values.clone() };
+    render(
+        &format!("Figure 8 — runtime breakdown, P = {p}, varying b"),
+        sweep,
+        quick,
+        |ds, t| {
+            let mut cells = Vec::new();
+            for &b in &b_values {
+                cells.push((format!("bLARS b={b}"), run_blars(ds, t, b, p, hw)));
+            }
+            for &b in &b_values {
+                cells.push((format!("T-bLARS b={b}"), run_tblars(ds, t, b, p, hw, None)));
+            }
+            cells
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_quick_renders() {
+        let s = run_fig7(&SweepConfig::quick(), true);
+        assert!(s.contains("matprod"));
+        assert!(s.contains("bLARS P=4"));
+        assert!(s.contains("T-bLARS P=4"));
+    }
+
+    #[test]
+    fn fig8_quick_renders() {
+        let s = run_fig8(&SweepConfig::quick(), true);
+        assert!(s.contains("b=2"));
+        assert!(s.contains("wait"));
+    }
+}

@@ -1,0 +1,54 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §5 for the index).
+//!
+//! Every driver takes a [`crate::config::SweepConfig`]-derived setup,
+//! runs the relevant sweep on the scaled paper datasets, and returns a
+//! rendered report (the console/EXPERIMENTS.md artifact). The CLI
+//! (`calars exp <id>`) and the `tables_figures` bench both dispatch
+//! through [`run_by_id`].
+
+pub mod fig2;
+pub mod runner;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig78;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::config::SweepConfig;
+use anyhow::{bail, Result};
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: [&str; 10] =
+    ["table1", "table2", "table3", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8"];
+
+/// Dispatch an experiment by id; returns the rendered report.
+pub fn run_by_id(id: &str, sweep: &SweepConfig, quick: bool) -> Result<String> {
+    match id {
+        "table1" => Ok(table1::run(sweep, quick)),
+        "table2" => Ok(table2::run(sweep, quick)),
+        "table3" => Ok(table3::run(sweep)),
+        "fig2" => Ok(fig2::run(sweep)),
+        "fig3" => Ok(fig3::run(sweep, quick)),
+        "fig4" => Ok(fig4::run(sweep, quick)),
+        "fig5" => Ok(fig5::run(sweep, quick)),
+        "fig6" => Ok(fig6::run(sweep, quick)),
+        "fig7" => Ok(fig78::run_fig7(sweep, quick)),
+        "fig8" => Ok(fig78::run_fig8(sweep, quick)),
+        other => bail!("unknown experiment '{other}' (one of {:?})", ALL_IDS),
+    }
+}
+
+/// Datasets used by an experiment sweep: the full paper suite, or the
+/// two fastest under `--quick`.
+pub(crate) fn sweep_datasets(seed: u64, quick: bool) -> Vec<crate::data::Dataset> {
+    use crate::data::datasets;
+    if quick {
+        vec![datasets::tiny(seed), datasets::tiny_dense(seed)]
+    } else {
+        datasets::paper_suite(seed)
+    }
+}

@@ -1,0 +1,71 @@
+//! Shared machinery for experiment drivers: run one (algorithm,
+//! dataset, P, b) cell and collect everything the figures need.
+
+use crate::cluster::{CommCounters, ExecMode, HwParams, SimCluster, Tracer};
+use crate::data::{partition, Dataset};
+use crate::lars::blars::{blars, BlarsOptions};
+use crate::lars::serial::{lars, LarsOptions};
+use crate::lars::tblars::{tblars, TblarsOptions};
+use crate::lars::LarsOutput;
+use crate::rng::Pcg64;
+
+/// Everything one parallel run produces.
+pub struct RunResult {
+    pub out: LarsOutput,
+    /// Simulated seconds (critical path under the α-β model).
+    pub sim_time: f64,
+    pub counters: CommCounters,
+    /// Figure 7/8 categories: [mat products, step size, comm, wait, other].
+    pub categories: [f64; 5],
+    pub tracer: Tracer,
+}
+
+/// Serial LARS reference (ground truth for precision metrics).
+pub fn run_lars_ref(ds: &Dataset, t: usize) -> LarsOutput {
+    lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() })
+}
+
+/// One parallel bLARS cell.
+pub fn run_blars(ds: &Dataset, t: usize, b: usize, p: usize, hw: HwParams) -> RunResult {
+    let mut cluster = SimCluster::new(p, hw, ExecMode::Sequential);
+    let out = blars(&ds.a, &ds.b, &BlarsOptions { t, b, ..Default::default() }, &mut cluster);
+    collect(out, &cluster)
+}
+
+/// One T-bLARS cell. `partition_seed = None` uses the nnz-balanced
+/// partition (the paper's default); `Some(seed)` uses a uniformly random
+/// partition (Figure 5).
+pub fn run_tblars(
+    ds: &Dataset,
+    t: usize,
+    b: usize,
+    p: usize,
+    hw: HwParams,
+    partition_seed: Option<u64>,
+) -> RunResult {
+    let parts = match partition_seed {
+        None => partition::balanced_col_partition(&ds.a, p),
+        Some(seed) => {
+            let mut rng = Pcg64::new(seed);
+            partition::random_col_partition(ds.a.ncols(), p, &mut rng)
+        }
+    };
+    let mut cluster = SimCluster::new(p, hw, ExecMode::Sequential);
+    let out = tblars(&ds.a, &ds.b, &parts, &TblarsOptions { t, b, ..Default::default() }, &mut cluster);
+    collect(out, &cluster)
+}
+
+fn collect(out: LarsOutput, cluster: &SimCluster) -> RunResult {
+    RunResult {
+        out,
+        sim_time: cluster.sim_time(),
+        counters: cluster.counters(),
+        categories: cluster.tracer().by_category(),
+        tracer: cluster.tracer().clone(),
+    }
+}
+
+/// Pick a target `t` that fits the dataset.
+pub fn effective_t(ds: &Dataset, t: usize) -> usize {
+    t.min(ds.a.nrows().min(ds.a.ncols()) / 2).max(4)
+}

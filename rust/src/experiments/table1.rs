@@ -1,0 +1,112 @@
+//! Table 1 — per-step running-time costs of parallel bLARS.
+//!
+//! The tracer already attributes measured flops/words/messages to each
+//! algorithm phase (= the step groups of Table 1). This driver renders
+//! the per-phase measurements for a (P, b) cell and then verifies the
+//! table's *scaling claims*: F, W and L all drop by ≈ b when b grows
+//! (the `tmn/(bP)`, `(tn/b)·logP` and `(t/b)·logP` leading terms), and
+//! the words/messages grow by ≈ log P.
+
+use super::runner::{effective_t, run_blars};
+use crate::cluster::{HwParams, Phase};
+use crate::config::SweepConfig;
+use crate::data::datasets;
+use crate::metrics::fmt_count;
+use crate::report::Table;
+
+/// Leading-order Table 1 totals (t ≫ b assumed).
+pub fn model_totals(t: f64, m: f64, n: f64, p: f64, b: f64) -> (f64, f64, f64) {
+    let logp = (p.max(2.0)).log2();
+    let f = t * m * n / (b * p) + t * n / b + t * t * m / p + t * t * t;
+    let w = (t * n / b) * logp + t * t * logp;
+    let l = (t / b) * logp;
+    (f, w, l)
+}
+
+pub fn run(sweep: &SweepConfig, quick: bool) -> String {
+    let ds = if quick { datasets::tiny(sweep.seed) } else { datasets::sector_like(sweep.seed) };
+    let t = effective_t(&ds, sweep.t);
+    let hw = HwParams::default();
+    let p = if quick { 4 } else { 16 };
+    let mut out = format!(
+        "# Table 1 — per-step costs of parallel bLARS ({}, t = {t}, P = {p})\n",
+        ds.name
+    );
+
+    // Per-phase measured table at b = 4.
+    let b = 4;
+    let r = run_blars(&ds, t, b, p, hw);
+    let mut table = Table::new(&["step group (phase)", "F (flops)", "W (words)", "L (msgs)"]);
+    for phase in Phase::ALL {
+        let s = r.tracer.get(phase);
+        if s.flops == 0 && s.words == 0 && s.msgs == 0 {
+            continue;
+        }
+        table.row(&[
+            format!("{phase:?}"),
+            fmt_count(s.flops),
+            fmt_count(s.words),
+            fmt_count(s.msgs),
+        ]);
+    }
+    let totals = r.counters;
+    table.row(&[
+        "TOTAL".into(),
+        fmt_count(totals.flops),
+        fmt_count(totals.words),
+        fmt_count(totals.msgs),
+    ]);
+    out.push_str(&table.render());
+
+    // Scaling verification: measured(b)/measured(1) vs model.
+    let (m_, n_) = (ds.a.nrows() as f64, ds.a.ncols() as f64);
+    let mut scale = Table::new(&[
+        "b",
+        "F meas",
+        "F model",
+        "W meas",
+        "W model",
+        "L meas",
+        "L model",
+    ]);
+    let base = run_blars(&ds, t, 1, p, hw).counters;
+    let (f1, w1, l1) = model_totals(t as f64, m_, n_, p as f64, 1.0);
+    for &b in &[1usize, 2, 4, 8] {
+        let c = run_blars(&ds, t, b, p, hw).counters;
+        let (fm, wm, lm) = model_totals(t as f64, m_, n_, p as f64, b as f64);
+        scale.row(&[
+            b.to_string(),
+            format!("{:.2}", c.flops as f64 / base.flops as f64),
+            format!("{:.2}", fm / f1),
+            format!("{:.2}", c.words as f64 / base.words as f64),
+            format!("{:.2}", wm / w1),
+            format!("{:.2}", c.msgs as f64 / base.msgs as f64),
+            format!("{:.2}", lm / l1),
+        ]);
+    }
+    out.push_str(&format!(
+        "\n## Scaling vs b (ratios to b = 1; model = Table 1 leading terms)\n{}",
+        scale.render()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_scales_inverse_b() {
+        let (f1, w1, l1) = model_totals(60.0, 1e4, 1e5, 16.0, 1.0);
+        let (f4, w4, l4) = model_totals(60.0, 1e4, 1e5, 16.0, 4.0);
+        assert!(f4 < f1 && w4 < w1 && l4 < l1);
+        assert!((l1 / l4 - 4.0).abs() < 1e-9, "L scales exactly 1/b");
+    }
+
+    #[test]
+    fn quick_run_renders() {
+        let s = run(&SweepConfig::quick(), true);
+        assert!(s.contains("TOTAL"));
+        assert!(s.contains("Scaling vs b"));
+    }
+}

@@ -1,0 +1,73 @@
+//! Table 2 — asymptotic cost comparison: LARS vs bLARS vs T-bLARS.
+//!
+//! Measures total F/W/L for the three methods on each dataset at a
+//! fixed (P, b) and checks the table's qualitative claims:
+//!
+//! * bLARS cuts all three costs by ≈ b relative to LARS;
+//! * both block methods have the same latency scaling `(t/b)·log P`;
+//! * bLARS words scale with **n**, T-bLARS words with **m** — so on
+//!   n ≫ m data T-bLARS moves far fewer words.
+
+use super::runner::{effective_t, run_blars, run_tblars};
+use super::sweep_datasets;
+use crate::cluster::HwParams;
+use crate::config::SweepConfig;
+use crate::metrics::fmt_count;
+use crate::report::Table;
+
+pub fn run(sweep: &SweepConfig, quick: bool) -> String {
+    let hw = HwParams::default();
+    let p = if quick { 4 } else { 16 };
+    let b = if quick { 2 } else { 4 };
+    let mut out = format!("# Table 2 — asymptotic cost comparison (P = {p}, b = {b})\n");
+
+    for ds in sweep_datasets(sweep.seed, quick) {
+        let t = effective_t(&ds, sweep.t);
+        out.push_str(&format!(
+            "\n## {} (m = {}, n = {}, t = {t})\n",
+            ds.name,
+            ds.a.nrows(),
+            ds.a.ncols()
+        ));
+        let lars = run_blars(&ds, t, 1, p, hw);
+        let bl = run_blars(&ds, t, b, p, hw);
+        let tb = run_tblars(&ds, t, b, p, hw, None);
+
+        let mut table =
+            Table::new(&["method", "F (flops)", "W (words)", "L (msgs)", "sim time (s)"]);
+        for (name, r) in [("LARS (b=1)", &lars), ("bLARS", &bl), ("T-bLARS", &tb)] {
+            table.row(&[
+                name.into(),
+                fmt_count(r.counters.flops),
+                fmt_count(r.counters.words),
+                fmt_count(r.counters.msgs),
+                format!("{:.4}", r.sim_time),
+            ]);
+        }
+        out.push_str(&table.render());
+
+        // Qualitative claims.
+        let wr = lars.counters.words as f64 / bl.counters.words.max(1) as f64;
+        let lr = lars.counters.msgs as f64 / bl.counters.msgs.max(1) as f64;
+        out.push_str(&format!(
+            "claims: W(LARS)/W(bLARS) = {wr:.1} (≈ b = {b}); \
+             L(LARS)/L(bLARS) = {lr:.1} (≈ b = {b}); \
+             W(T-bLARS)/W(bLARS) = {:.2} (small iff n >> m)\n",
+            tb.counters.words as f64 / bl.counters.words.max(1) as f64,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_shows_blars_savings() {
+        let s = run(&SweepConfig::quick(), true);
+        assert!(s.contains("bLARS"));
+        assert!(s.contains("T-bLARS"));
+        assert!(s.contains("claims:"));
+    }
+}

@@ -1,0 +1,232 @@
+//! XLA-accelerated (b)LARS — the runtime bridge integrated into the
+//! algorithm as a first-class feature.
+//!
+//! Single-node (b)LARS whose two hot products (Algorithm 2 steps 2/11:
+//! `c = Aᵀr`, `a = Aᵀu`) execute through a [`CorrEngine`] — the AOT
+//! Pallas/XLA artifact when one fits the matrix, the native f64 kernels
+//! otherwise. Selection logic, Cholesky extension and γ computation are
+//! shared with the rest of the crate.
+//!
+//! Numerics: the XLA path computes in f32 (DESIGN.md §7). Selections
+//! can therefore differ from the f64 reference when correlations are
+//! within f32 noise of each other; the parity test accepts either the
+//! identical path or an equal-quality one (checked via the LS refit).
+
+use super::{LarsOutput, StopReason};
+use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
+use crate::linalg::{dot, norm2, Cholesky, Matrix};
+use crate::runtime::CorrEngine;
+use anyhow::Result;
+
+/// Options (mirrors [`super::serial::LarsOptions`]).
+#[derive(Clone, Debug)]
+pub struct AccelOptions {
+    pub t: usize,
+    pub b: usize,
+    pub tol: f64,
+}
+
+impl Default for AccelOptions {
+    fn default() -> Self {
+        AccelOptions { t: 10, b: 1, tol: 1e-9 }
+    }
+}
+
+/// Run (b)LARS with the correlation products dispatched to `engine`.
+///
+/// `a` is still used for the small Gram blocks and the direction
+/// application (`A_I w` touches only `|I|` columns — not worth a device
+/// round-trip at these sizes).
+pub fn blars_accelerated(
+    a: &Matrix,
+    b_vec: &[f64],
+    engine: &CorrEngine,
+    opts: &AccelOptions,
+) -> Result<LarsOutput> {
+    let m = a.nrows();
+    let n = a.ncols();
+    assert_eq!(engine.ncols(), n, "engine/matrix mismatch");
+    assert_eq!(b_vec.len(), m);
+    let t = opts.t.min(m.min(n));
+
+    let mut y = vec![0.0; m];
+    let mut r = b_vec.to_vec();
+    let mut u = vec![0.0; m];
+    let mut c = engine.corr(&r)?;
+
+    let mut residual_norms = vec![norm2(&r)];
+    let mut cols_at_iter = vec![0usize];
+    let mut in_model = vec![false; n];
+    let mut selected: Vec<usize> = Vec::new();
+
+    // Initial block.
+    let b0 = opts.b.min(t.max(1));
+    let mut block = argmax_b_by(n, b0, |j| c[j].abs());
+    block.sort_unstable();
+    if block.iter().all(|&j| c[j].abs() <= opts.tol) {
+        return Ok(LarsOutput {
+            selected,
+            residual_norms,
+            cols_at_iter,
+            y,
+            stop: StopReason::Saturated,
+        });
+    }
+    let mut chol = Cholesky::empty();
+    admit_block(a, &block, &mut chol, &mut selected, &mut in_model);
+    if selected.is_empty() {
+        return Ok(LarsOutput {
+            selected,
+            residual_norms,
+            cols_at_iter,
+            y,
+            stop: StopReason::RankDeficient,
+        });
+    }
+    let mut ck = selected.iter().map(|&j| c[j].abs()).fold(f64::INFINITY, f64::min);
+
+    let stop = loop {
+        if selected.len() >= t {
+            break StopReason::TargetReached;
+        }
+        if ck <= opts.tol {
+            break StopReason::Saturated;
+        }
+
+        let s: Vec<f64> = selected.iter().map(|&j| c[j]).collect();
+        let q = chol.solve(&s);
+        let sq = dot(&s, &q);
+        if !(sq.is_finite() && sq > 0.0) {
+            break StopReason::Saturated;
+        }
+        let h = 1.0 / sq.sqrt();
+        let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
+        a.gemv_cols(&selected, &w, &mut u);
+
+        // The offloaded hot product: a = Aᵀu.
+        let av = engine.corr(&u)?;
+
+        let gamma_full = 1.0 / h;
+        let mut cand: Vec<(usize, f64)> = Vec::new();
+        for j in 0..n {
+            if in_model[j] {
+                continue;
+            }
+            let g1 = (ck - c[j]) / (ck * h - av[j]);
+            let g2 = (ck + c[j]) / (ck * h + av[j]);
+            if let Some(g) = min_positive2(g1, g2) {
+                if g <= gamma_full * (1.0 + 1e-9) {
+                    cand.push((j, g));
+                }
+            }
+        }
+        let remaining = t - selected.len();
+        let bsz = opts.b.min(remaining);
+        let (gamma, new_block) = if cand.len() >= bsz && bsz > 0 {
+            let picks = argmin_b_by(cand.len(), bsz, |i| cand[i].1);
+            let gamma = picks.iter().map(|&i| cand[i].1).fold(0.0_f64, f64::max);
+            let mut blk: Vec<usize> = picks.iter().map(|&i| cand[i].0).collect();
+            blk.sort_unstable();
+            (gamma, blk)
+        } else {
+            let mut blk: Vec<usize> = cand.iter().map(|&(j, _)| j).collect();
+            blk.sort_unstable();
+            (gamma_full, blk)
+        };
+
+        for i in 0..m {
+            y[i] += gamma * u[i];
+            r[i] = b_vec[i] - y[i];
+        }
+        // f32-path hygiene: refresh correlations from the residual rather
+        // than compounding in-place updates (one engine call per
+        // iteration either way — same cost, tighter error).
+        c = engine.corr(&r)?;
+        residual_norms.push(norm2(&r));
+
+        let hit_full = new_block.is_empty() || gamma >= gamma_full * (1.0 - 1e-12);
+        if !new_block.is_empty() {
+            admit_block(a, &new_block, &mut chol, &mut selected, &mut in_model);
+        }
+        cols_at_iter.push(selected.len());
+        ck = selected.iter().map(|&j| c[j].abs()).fold(f64::INFINITY, f64::min);
+        if hit_full {
+            break StopReason::Saturated;
+        }
+    };
+    if *cols_at_iter.last().unwrap() != selected.len() {
+        cols_at_iter.push(selected.len());
+    }
+
+    Ok(LarsOutput { selected, residual_norms, cols_at_iter, y, stop })
+}
+
+/// Admit a block column-by-column (graceful on duplicates, §5.2).
+fn admit_block(
+    a: &Matrix,
+    block: &[usize],
+    chol: &mut Cholesky,
+    selected: &mut Vec<usize>,
+    in_model: &mut [bool],
+) {
+    for &j in block {
+        let gi = a.gram_block(selected, &[j]);
+        let gjj = a.gram_block(&[j], &[j]).get(0, 0);
+        let mut grow: Vec<f64> = (0..selected.len()).map(|i| gi.get(i, 0)).collect();
+        grow.push(gjj);
+        if chol.push_row(&grow).is_ok() {
+            selected.push(j);
+        }
+        in_model[j] = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::lars::serial::{blars_serial, LarsOptions};
+
+    #[test]
+    fn native_engine_matches_serial_reference() {
+        for seed in [1u64, 2, 3] {
+            let d = datasets::tiny_dense(seed);
+            let engine = CorrEngine::native(&d.a);
+            let acc = blars_accelerated(
+                &d.a,
+                &d.b,
+                &engine,
+                &AccelOptions { t: 10, b: 2, ..Default::default() },
+            )
+            .unwrap();
+            let reference =
+                blars_serial(&d.a, &d.b, &LarsOptions { t: 10, b: 2, ..Default::default() });
+            assert_eq!(acc.selected, reference.selected, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn native_engine_b1_is_lars() {
+        let d = datasets::tiny(4);
+        let engine = CorrEngine::native(&d.a);
+        let acc = blars_accelerated(&d.a, &d.b, &engine, &AccelOptions { t: 8, b: 1, ..Default::default() })
+            .unwrap();
+        let reference = crate::lars::serial::lars(
+            &d.a,
+            &d.b,
+            &LarsOptions { t: 8, ..Default::default() },
+        );
+        assert_eq!(acc.selected, reference.selected);
+    }
+
+    #[test]
+    fn residuals_decrease() {
+        let d = datasets::tiny_dense(5);
+        let engine = CorrEngine::native(&d.a);
+        let acc = blars_accelerated(&d.a, &d.b, &engine, &AccelOptions { t: 12, b: 3, ..Default::default() })
+            .unwrap();
+        for w in acc.residual_norms.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+}

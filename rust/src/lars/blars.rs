@@ -1,0 +1,435 @@
+//! Algorithm 2 — Parallel bLARS for row-partitioned data.
+//!
+//! The data matrix and every length-`m` vector are partitioned across
+//! `P` ranks; the master (rank 0) holds length-`n` state (`c`, `a`), the
+//! selection, and the Cholesky factor. Every step below is numbered
+//! after Algorithm 2 and charged to the simulated cluster with the
+//! paper's communication pattern (reductions for Aᵀ-products and Gram
+//! blocks, broadcasts for `w` and γ).
+//!
+//! Selection results are *identical* to [`super::serial::blars_serial`]
+//! (the paper: "for bLARS, how rows are partitioned among processors
+//! does not affect the columns selected") — enforced by tests.
+
+use super::{LarsOutput, StopReason};
+use crate::cluster::{Phase, SimCluster};
+use crate::data::partition::row_ranges;
+use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
+use crate::linalg::{dot, Cholesky, DenseMatrix, Matrix};
+
+/// Options for a parallel bLARS run.
+#[derive(Clone, Debug)]
+pub struct BlarsOptions {
+    /// Target number of columns `t`.
+    pub t: usize,
+    /// Block size `b` (`b = 1` ⇒ parallel LARS, §7: "we use parallel
+    /// bLARS with b = 1 as parallel LARS").
+    pub b: usize,
+    /// Numerical floor for the maximum correlation.
+    pub tol: f64,
+}
+
+impl Default for BlarsOptions {
+    fn default() -> Self {
+        BlarsOptions { t: 10, b: 1, tol: 1e-12 }
+    }
+}
+
+/// Per-rank state: the row shard and the local slices of m-vectors.
+struct RankState {
+    /// This rank's rows of A.
+    a: Matrix,
+    /// Local slice of the response b.
+    b: Vec<f64>,
+    /// Local slices of y, r, u.
+    y: Vec<f64>,
+    r: Vec<f64>,
+    u: Vec<f64>,
+}
+
+/// Run parallel bLARS on `cluster`. The matrix is row-sharded here
+/// (Alg 2's standing assumption); all cost accounting lands in the
+/// cluster's tracer/clock.
+pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCluster) -> LarsOutput {
+    let m = a.nrows();
+    let n = a.ncols();
+    assert_eq!(b_vec.len(), m);
+    assert!(opts.b >= 1);
+    let t = opts.t.min(m.min(n));
+    let p = cluster.nranks();
+
+    // ── Step 1: shard + initialize in parallel, no communication. ──
+    let ranges = row_ranges(m, p);
+    let mut ranks: Vec<RankState> = ranges
+        .iter()
+        .map(|&(r0, r1)| {
+            let rows = r1 - r0;
+            RankState {
+                a: a.row_slice(r0, r1),
+                b: b_vec[r0..r1].to_vec(),
+                y: vec![0.0; rows],
+                r: vec![0.0; rows],
+                u: vec![0.0; rows],
+            }
+        })
+        .collect();
+    let init_flops: u64 = m as u64 / p.max(1) as u64;
+    cluster.charge_flops(Phase::Init, init_flops);
+    cluster.superstep(Phase::Init, &mut ranks, |_, st| {
+        st.r.copy_from_slice(&st.b);
+    });
+
+    // ── Step 2: c = Aᵀr, local products + tree reduction to master. ──
+    let at_r_flops: u64 = ranks.iter().map(|st| st.a.at_r_flops()).max().unwrap_or(0);
+    cluster.charge_flops(Phase::Corr, at_r_flops);
+    let contribs = cluster.superstep(Phase::Corr, &mut ranks, |_, st| {
+        let mut c = vec![0.0; n];
+        st.a.at_r(&st.r, &mut c);
+        c
+    });
+    let mut c = cluster.reduce_sum(Phase::Reduce, contribs);
+
+    // ── Step 3: master selects the initial block (introselect, O(n)). ──
+    cluster.charge_flops(Phase::Select, n as u64);
+    let b0 = opts.b.min(t.max(1));
+    let mut selected = cluster.master(Phase::Select, || {
+        let mut blk = argmax_b_by(n, b0, |j| c[j].abs());
+        blk.sort_unstable();
+        blk
+    });
+    let mut in_model = vec![false; n];
+    for &j in &selected {
+        in_model[j] = true;
+    }
+    let mut residual_norms = vec![crate::linalg::norm2(b_vec)];
+    let mut cols_at_iter = vec![0usize];
+    if selected.iter().all(|&j| c[j].abs() <= opts.tol) {
+        return LarsOutput {
+            selected: Vec::new(),
+            residual_norms,
+            cols_at_iter,
+            y: vec![0.0; m],
+            stop: StopReason::Saturated,
+        };
+    }
+
+    // ── Step 4: G = A_Iᵀ A_I via local Gram blocks + reduction. ──
+    let gram_flops = ranks.iter().map(|st| st.a.gram_block_flops(&selected, &selected)).max().unwrap_or(0);
+    cluster.charge_flops(Phase::Gram, gram_flops);
+    let gram_contribs = cluster.superstep(Phase::Gram, &mut ranks, |_, st| {
+        st.a.gram_block(&selected, &selected).data().to_vec()
+    });
+    let g0 = cluster.reduce_sum(Phase::Reduce, gram_contribs);
+    let block0 = std::mem::take(&mut selected);
+    let g0 = DenseMatrix::from_vec(block0.len(), block0.len(), g0);
+
+    // ── Step 5: Cholesky on the master, one admitted column at a time
+    // (duplicates inside the initial block are excluded, not fatal). ──
+    cluster.charge_flops(Phase::Cholesky, (b0 as u64).pow(3));
+    let mut chol = Cholesky::empty();
+    cluster.master(Phase::Cholesky, || {
+        let mut admitted: Vec<usize> = Vec::new();
+        for (r, &j) in block0.iter().enumerate() {
+            let mut grow: Vec<f64> = admitted.iter().map(|&ar| g0.get(r, ar)).collect();
+            grow.push(g0.get(r, r));
+            if chol.push_row(&grow).is_ok() {
+                admitted.push(r);
+                selected.push(j);
+            }
+            // in_model[j] already true either way (set above).
+        }
+    });
+    if selected.is_empty() {
+        return LarsOutput {
+            selected,
+            residual_norms,
+            cols_at_iter,
+            y: vec![0.0; m],
+            stop: StopReason::RankDeficient,
+        };
+    }
+
+    let mut ck = selected.iter().map(|&j| c[j].abs()).fold(f64::INFINITY, f64::min);
+    let mut av = vec![0.0; n];
+
+    // ── Main loop (steps 6-25). ──
+    let stop = loop {
+        if selected.len() >= t {
+            break StopReason::TargetReached;
+        }
+        if ck <= opts.tol {
+            break StopReason::Saturated;
+        }
+        let k = selected.len();
+
+        // Steps 7-8 (master): s, q = (LLᵀ)⁻¹s, h, w.
+        cluster.charge_flops(Phase::Solve, (k * k) as u64 + 2 * k as u64);
+        let (h, w) = {
+            let s: Vec<f64> = selected.iter().map(|&j| c[j]).collect();
+            let out = cluster.master(Phase::Solve, || {
+                let q = chol.solve(&s);
+                let sq = dot(&s, &q);
+                if !(sq.is_finite() && sq > 0.0) {
+                    return None;
+                }
+                let h = 1.0 / sq.sqrt();
+                let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
+                Some((h, w))
+            });
+            match out {
+                Some(hw) => hw,
+                None => break StopReason::Saturated,
+            }
+        };
+
+        // Step 9: broadcast w (|I| words).
+        cluster.broadcast(Phase::Bcast, w.len());
+
+        // Step 10: u = A_I w in parallel, no communication.
+        let dir_flops = ranks.iter().map(|st| st.a.gemv_cols_flops(&selected)).max().unwrap_or(0);
+        cluster.charge_flops(Phase::DirApply, dir_flops);
+        cluster.superstep(Phase::DirApply, &mut ranks, |_, st| {
+            st.a.gemv_cols(&selected, &w, &mut st.u);
+        });
+
+        // Step 11: a = Aᵀu, local products + reduction.
+        cluster.charge_flops(Phase::Corr, at_r_flops);
+        let a_contribs = cluster.superstep(Phase::Corr, &mut ranks, |_, st| {
+            let mut av_loc = vec![0.0; n];
+            st.a.at_r(&st.u, &mut av_loc);
+            av_loc
+        });
+        av = cluster.reduce_sum(Phase::Reduce, a_contribs);
+
+        // Step 12 (master): γ_j candidates over the complement.
+        cluster.charge_flops(Phase::GammaStep, (n - k) as u64 * 6);
+        let gamma_full = 1.0 / h;
+        let cand = cluster.master(Phase::GammaStep, || {
+            let mut cand: Vec<(usize, f64)> = Vec::with_capacity(n - k);
+            for j in 0..n {
+                if in_model[j] {
+                    continue;
+                }
+                let g1 = (ck - c[j]) / (ck * h - av[j]);
+                let g2 = (ck + c[j]) / (ck * h + av[j]);
+                if let Some(g) = min_positive2(g1, g2) {
+                    if g <= gamma_full * (1.0 + 1e-12) {
+                        cand.push((j, g));
+                    }
+                }
+            }
+            cand
+        });
+
+        // Steps 13-14 (master): b-th smallest γ + the b entering indices.
+        let remaining = t - k;
+        let bsz = opts.b.min(remaining);
+        cluster.charge_flops(Phase::Select, cand.len() as u64);
+        let (gamma, new_block) = cluster.master(Phase::Select, || {
+            if cand.len() >= bsz && bsz > 0 {
+                let picks = argmin_b_by(cand.len(), bsz, |i| cand[i].1);
+                let gamma = picks.iter().map(|&i| cand[i].1).fold(0.0_f64, f64::max);
+                let mut blk: Vec<usize> = picks.iter().map(|&i| cand[i].0).collect();
+                blk.sort_unstable();
+                (gamma, blk)
+            } else {
+                let mut blk: Vec<usize> = cand.iter().map(|&(j, _)| j).collect();
+                blk.sort_unstable();
+                (gamma_full, blk)
+            }
+        });
+
+        // Steps 15-16: broadcast γ (1 word).
+        cluster.broadcast(Phase::Bcast, 1);
+
+        // Step 17: y ← y + γu, r = b − y in parallel, no communication.
+        cluster.charge_flops(Phase::Update, 2 * (m / p) as u64);
+        let local_sq = cluster.superstep(Phase::Update, &mut ranks, |_, st| {
+            let mut sq = 0.0;
+            for i in 0..st.y.len() {
+                st.y[i] += gamma * st.u[i];
+                st.r[i] = st.b[i] - st.y[i];
+                sq += st.r[i] * st.r[i];
+            }
+            sq
+        });
+        // Quality instrumentation (not part of the algorithm's comm):
+        residual_norms.push(local_sq.iter().sum::<f64>().sqrt());
+
+        // Steps 18-19 (master): in-place correlation updates.
+        cluster.charge_flops(Phase::Update, n as u64);
+        let shrink = 1.0 - gamma * h;
+        cluster.master(Phase::Update, || {
+            for j in 0..n {
+                if in_model[j] {
+                    c[j] *= shrink;
+                } else {
+                    c[j] -= gamma * av[j];
+                }
+            }
+        });
+        ck *= shrink;
+
+        let hit_full_step = new_block.is_empty() || gamma >= gamma_full * (1.0 - 1e-12);
+
+        if !new_block.is_empty() {
+            // Step 20: A_Iᵀ A_B and A_Bᵀ A_B via local products + reduction.
+            let gb_flops = ranks
+                .iter()
+                .map(|st| {
+                    st.a.gram_block_flops(&selected, &new_block)
+                        + st.a.gram_block_flops(&new_block, &new_block)
+                })
+                .max()
+                .unwrap_or(0);
+            cluster.charge_flops(Phase::Gram, gb_flops);
+            let blk = new_block.clone();
+            let sel = selected.clone();
+            let packed = cluster.superstep(Phase::Gram, &mut ranks, |_, st| {
+                let gib = st.a.gram_block(&sel, &blk);
+                let gbb = st.a.gram_block(&blk, &blk);
+                let mut v = gib.data().to_vec();
+                v.extend_from_slice(gbb.data());
+                v
+            });
+            let combined = cluster.reduce_sum(Phase::Reduce, packed);
+            let (gib_flat, gbb_flat) = combined.split_at(k * new_block.len());
+            let gib = DenseMatrix::from_vec(k, new_block.len(), gib_flat.to_vec());
+            let gbb =
+                DenseMatrix::from_vec(new_block.len(), new_block.len(), gbb_flat.to_vec());
+
+            // Steps 21-23 (master): extend the Cholesky factor, admitting
+            // columns one at a time. A (near-)duplicate inside the block
+            // is excluded from the model rather than aborting (§5.2's
+            // "minor modifications" for linearly dependent columns) —
+            // no extra communication: both Gram blocks are already here.
+            cluster.charge_flops(
+                Phase::Cholesky,
+                (new_block.len() * k * k + new_block.len().pow(3)) as u64,
+            );
+            cluster.master(Phase::Cholesky, || {
+                let mut admitted_in_block: Vec<usize> = Vec::new();
+                for (r, &j) in new_block.iter().enumerate() {
+                    let mut grow: Vec<f64> = (0..k).map(|i| gib.get(i, r)).collect();
+                    for &ar in &admitted_in_block {
+                        grow.push(gbb.get(r, ar));
+                    }
+                    grow.push(gbb.get(r, r));
+                    if chol.push_row(&grow).is_ok() {
+                        admitted_in_block.push(r);
+                        in_model[j] = true;
+                        selected.push(j);
+                    } else {
+                        in_model[j] = true; // permanently excluded
+                    }
+                }
+            });
+            ck = selected.iter().map(|&j| c[j].abs()).fold(f64::INFINITY, f64::min).max(ck);
+        }
+        cols_at_iter.push(selected.len());
+
+        if hit_full_step {
+            break StopReason::Saturated;
+        }
+    };
+    if *cols_at_iter.last().unwrap() != selected.len() {
+        cols_at_iter.push(selected.len());
+    }
+
+    // Gather y (outside the algorithm's cost accounting — the paper's
+    // algorithms return the distributed y as-is).
+    let mut y = vec![0.0; m];
+    for (st, &(r0, _)) in ranks.iter().zip(&ranges) {
+        y[r0..r0 + st.y.len()].copy_from_slice(&st.y);
+    }
+
+    LarsOutput { selected, residual_norms, cols_at_iter, y, stop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ExecMode, HwParams};
+    use crate::data::datasets;
+    use crate::lars::serial::{blars_serial, LarsOptions};
+
+    fn run(p: usize, b: usize, t: usize, seed: u64) -> (LarsOutput, SimCluster) {
+        let d = datasets::tiny(seed);
+        let mut cluster = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
+        let out = blars(
+            &d.a,
+            &d.b,
+            &BlarsOptions { t, b, ..Default::default() },
+            &mut cluster,
+        );
+        (out, cluster)
+    }
+
+    #[test]
+    fn matches_serial_reference_p1() {
+        let d = datasets::tiny(1);
+        let serial = blars_serial(&d.a, &d.b, &LarsOptions { t: 12, b: 3, ..Default::default() });
+        let (par, _) = run(1, 3, 12, 1);
+        assert_eq!(par.selected, serial.selected);
+    }
+
+    #[test]
+    fn row_partition_does_not_change_selection() {
+        // §10.1: "how rows are partitioned among processors does not
+        // affect the columns selected".
+        let (p1, _) = run(1, 2, 10, 2);
+        for p in [2usize, 4, 8] {
+            let (pp, _) = run(p, 2, 10, 2);
+            assert_eq!(pp.selected, p1.selected, "P={p} changed selection");
+        }
+    }
+
+    #[test]
+    fn threaded_mode_matches_sequential() {
+        let d = datasets::tiny(3);
+        let opts = BlarsOptions { t: 10, b: 2, ..Default::default() };
+        let mut c1 = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+        let mut c2 = SimCluster::new(4, HwParams::default(), ExecMode::Threaded);
+        let o1 = blars(&d.a, &d.b, &opts, &mut c1);
+        let o2 = blars(&d.a, &d.b, &opts, &mut c2);
+        assert_eq!(o1.selected, o2.selected);
+    }
+
+    #[test]
+    fn communication_counted() {
+        let (_, cluster) = run(4, 2, 10, 4);
+        let c = cluster.counters();
+        assert!(c.msgs > 0, "no messages counted");
+        assert!(c.words > 0);
+        assert!(c.flops > 0);
+        assert!(cluster.sim_time() > 0.0);
+    }
+
+    #[test]
+    fn larger_b_reduces_messages() {
+        // Table 2: messages scale as (t/b)·log P.
+        let (_, c1) = run(8, 1, 24, 5);
+        let (_, c4) = run(8, 4, 24, 5);
+        let m1 = c1.counters().msgs as f64;
+        let m4 = c4.counters().msgs as f64;
+        assert!(
+            m4 < m1 / 2.0,
+            "b=4 should cut messages ~4x: b1={m1} b4={m4}"
+        );
+    }
+
+    #[test]
+    fn residuals_decrease() {
+        let (out, _) = run(4, 3, 15, 6);
+        for w in out.residual_norms.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn reaches_target() {
+        let (out, _) = run(2, 5, 20, 7);
+        assert_eq!(out.selected.len(), 20);
+        assert_eq!(out.stop, StopReason::TargetReached);
+    }
+}

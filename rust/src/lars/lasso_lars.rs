@@ -1,0 +1,280 @@
+//! LARS with the LASSO modification (Efron et al. [17], Theorem 1;
+//! referenced in the paper's §2: "a certain version of LARS produces a
+//! sequence of solutions equivalent to the solution path x(λ)").
+//!
+//! Identical to LARS except that an active coefficient hitting zero is
+//! *dropped* from the active set before any new column enters; the
+//! resulting breakpoints trace the exact ℓ1-regularization path, with
+//! λ equal to the common absolute correlation at each breakpoint.
+//!
+//! This is the reference implementation (fresh `Aᵀr` per step, Gram
+//! refactorization on drops) — it anchors correctness of both the
+//! fast LARS implementations and the coordinate-descent baseline:
+//! between consecutive breakpoints the path is linear in λ, so any
+//! interior LASSO solution is checkable against `baselines::lasso_cd`.
+
+use crate::linalg::{norm2, Cholesky, Matrix};
+
+/// One breakpoint of the LASSO path.
+#[derive(Clone, Debug)]
+pub struct Breakpoint {
+    /// Regularization level: the common |correlation| of active columns.
+    pub lambda: f64,
+    /// Active set (ascending).
+    pub support: Vec<usize>,
+    /// Dense coefficient vector (length n).
+    pub x: Vec<f64>,
+    /// ‖b − Ax‖₂ at the breakpoint.
+    pub residual_norm: f64,
+}
+
+/// The piecewise-linear LASSO path.
+#[derive(Clone, Debug)]
+pub struct LassoPath {
+    pub breakpoints: Vec<Breakpoint>,
+    /// Number of drop events encountered (0 ⇒ plain LARS ≡ LASSO here).
+    pub drops: usize,
+}
+
+impl LassoPath {
+    /// Interpolate the solution at regularization `lambda` (the path is
+    /// linear in λ between breakpoints). `None` outside the computed
+    /// range.
+    pub fn solution_at(&self, lambda: f64) -> Option<Vec<f64>> {
+        let bps = &self.breakpoints;
+        if bps.is_empty() || lambda > bps[0].lambda {
+            return None;
+        }
+        for w in bps.windows(2) {
+            let (hi, lo) = (&w[0], &w[1]);
+            if lambda <= hi.lambda && lambda >= lo.lambda {
+                let span = (hi.lambda - lo.lambda).max(1e-300);
+                let t = (hi.lambda - lambda) / span;
+                return Some(
+                    hi.x.iter().zip(&lo.x).map(|(a, b)| a + t * (b - a)).collect(),
+                );
+            }
+        }
+        None
+    }
+}
+
+/// Trace the LASSO path until `max_active` columns are active, λ falls
+/// below `lambda_min`, or the path saturates.
+pub fn lasso_path(a: &Matrix, b: &[f64], max_active: usize, lambda_min: f64) -> LassoPath {
+    let m = a.nrows();
+    let n = a.ncols();
+    assert_eq!(b.len(), m);
+    let tol = 1e-10;
+
+    let mut x = vec![0.0; n];
+    let mut active: Vec<usize> = Vec::new();
+    let mut breakpoints: Vec<Breakpoint> = Vec::new();
+    let mut drops = 0usize;
+    let mut r = b.to_vec();
+    let mut c = vec![0.0; n];
+    let max_active = max_active.min(m.min(n));
+
+    // Guard against pathological cycling (paper assumes general position).
+    let max_events = 8 * max_active + 16;
+
+    for _event in 0..max_events {
+        // Fresh correlations (reference implementation).
+        a.at_r(&r, &mut c);
+        let ck = c.iter().fold(0.0_f64, |mx, &v| mx.max(v.abs()));
+        if ck <= lambda_min.max(tol) {
+            break;
+        }
+        if breakpoints.is_empty() {
+            breakpoints.push(Breakpoint {
+                lambda: ck,
+                support: Vec::new(),
+                x: x.clone(),
+                residual_norm: norm2(&r),
+            });
+        }
+
+        // Activate every column at the current correlation level.
+        for j in 0..n {
+            if !active.contains(&j) && c[j].abs() >= ck * (1.0 - 1e-9) {
+                active.push(j);
+            }
+        }
+        active.sort_unstable();
+        if active.len() > max_active {
+            break;
+        }
+
+        // Direction: w = h · G⁻¹ c_A (all |c_A| = ck ⇒ LARS equiangular).
+        let s: Vec<f64> = active.iter().map(|&j| c[j]).collect();
+        let g = a.gram_block(&active, &active);
+        let Ok(chol) = Cholesky::factor(&g) else { break };
+        let q = chol.solve(&s);
+        let sq: f64 = s.iter().zip(&q).map(|(a, b)| a * b).sum();
+        if !(sq.is_finite() && sq > 0.0) {
+            break;
+        }
+        let h = 1.0 / sq.sqrt();
+        let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
+
+        // u = A_A w ; av = Aᵀu.
+        let mut u = vec![0.0; m];
+        a.gemv_cols(&active, &w, &mut u);
+        let mut av = vec![0.0; n];
+        a.at_r(&u, &mut av);
+
+        // Standard LARS entering step.
+        let gamma_full = 1.0 / h;
+        let mut gamma_add = gamma_full;
+        for j in 0..n {
+            if active.binary_search(&j).is_ok() {
+                continue;
+            }
+            let g1 = (ck - c[j]) / (ck * h - av[j]);
+            let g2 = (ck + c[j]) / (ck * h + av[j]);
+            if let Some(g) = crate::linalg::select::min_positive2(g1, g2) {
+                if g < gamma_add {
+                    gamma_add = g;
+                }
+            }
+        }
+
+        // LASSO modification: first active coefficient to cross zero.
+        let mut gamma_drop = f64::INFINITY;
+        let mut drop_pos: Option<usize> = None;
+        for (k, &j) in active.iter().enumerate() {
+            if w[k] != 0.0 {
+                let g = -x[j] / w[k];
+                if g > tol && g < gamma_drop {
+                    gamma_drop = g;
+                    drop_pos = Some(k);
+                }
+            }
+        }
+
+        let gamma = gamma_add.min(gamma_drop);
+        // Step coefficients and residual.
+        for (k, &j) in active.iter().enumerate() {
+            x[j] += gamma * w[k];
+        }
+        for i in 0..m {
+            r[i] -= gamma * u[i];
+        }
+
+        if gamma_drop < gamma_add {
+            // Drop event: zero the crossing coefficient exactly.
+            let k = drop_pos.unwrap();
+            let j = active.remove(k);
+            x[j] = 0.0;
+            drops += 1;
+        }
+
+        let lambda = ck * (1.0 - gamma * h);
+        breakpoints.push(Breakpoint {
+            lambda: lambda.max(0.0),
+            support: active.clone(),
+            x: x.clone(),
+            residual_norm: norm2(&r),
+        });
+
+        if gamma >= gamma_full * (1.0 - 1e-12) {
+            break; // least-squares point reached
+        }
+    }
+
+    LassoPath { breakpoints, drops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::lasso_cd::{lambda_max, lasso_cd};
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn problem(seed: u64) -> crate::data::synthetic::Synthetic {
+        generate(
+            &SyntheticSpec { m: 80, n: 40, density: 1.0, col_skew: 0.0, k_true: 6, noise: 0.05 },
+            seed,
+        )
+    }
+
+    #[test]
+    fn lambdas_strictly_decrease() {
+        let s = problem(1);
+        let path = lasso_path(&s.a, &s.b, 15, 1e-6);
+        assert!(path.breakpoints.len() >= 3);
+        for w in path.breakpoints.windows(2) {
+            assert!(w[1].lambda <= w[0].lambda + 1e-9);
+        }
+    }
+
+    #[test]
+    fn first_lambda_is_lambda_max() {
+        let s = problem(2);
+        let path = lasso_path(&s.a, &s.b, 10, 1e-6);
+        let lmax = lambda_max(&s.a, &s.b);
+        assert!((path.breakpoints[0].lambda - lmax).abs() < 1e-9 * lmax);
+    }
+
+    #[test]
+    fn matches_coordinate_descent_at_interior_lambda() {
+        // Theorem 1 (Efron et al.): the LARS-LASSO path solves the LASSO
+        // at every λ. Cross-check against the CD solver.
+        for seed in [3u64, 4, 5] {
+            let s = problem(seed);
+            let path = lasso_path(&s.a, &s.b, 20, 1e-8);
+            let lmax = lambda_max(&s.a, &s.b);
+            for frac in [0.6, 0.3, 0.1] {
+                let lambda = lmax * frac;
+                let Some(x_path) = path.solution_at(lambda) else { continue };
+                let cd = lasso_cd(&s.a, &s.b, lambda, 5000, 1e-12);
+                assert!(cd.converged);
+                let err = x_path
+                    .iter()
+                    .zip(&cd.x)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0_f64, f64::max);
+                assert!(
+                    err < 1e-5,
+                    "seed {seed} λ={lambda:.4}: path vs CD max err {err:.2e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residuals_decrease_along_path() {
+        let s = problem(6);
+        let path = lasso_path(&s.a, &s.b, 15, 1e-6);
+        for w in path.breakpoints.windows(2) {
+            assert!(w[1].residual_norm <= w[0].residual_norm + 1e-9);
+        }
+    }
+
+    #[test]
+    fn solution_at_endpoints_and_outside() {
+        let s = problem(7);
+        let path = lasso_path(&s.a, &s.b, 10, 1e-6);
+        let lmax = path.breakpoints[0].lambda;
+        assert!(path.solution_at(lmax * 1.1).is_none());
+        let x = path.solution_at(lmax * 0.999).unwrap();
+        // Just below λmax the solution is barely nonzero.
+        assert!(crate::linalg::norm_inf(&x) < 0.1);
+    }
+
+    #[test]
+    fn agrees_with_plain_lars_when_no_drops() {
+        use crate::lars::serial::{lars, LarsOptions};
+        let s = problem(8);
+        let path = lasso_path(&s.a, &s.b, 8, 1e-6);
+        if path.drops == 0 {
+            let la = lars(&s.a, &s.b, &LarsOptions { t: 8, ..Default::default() });
+            let last = path.breakpoints.last().unwrap();
+            // Same active set as the LARS selection (order-insensitive).
+            let mut lsel = la.selected.clone();
+            lsel.sort_unstable();
+            let overlap = crate::lars::quality::precision(&last.support, &lsel);
+            assert!(overlap >= 0.9, "overlap {overlap}");
+        }
+    }
+}

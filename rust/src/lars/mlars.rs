@@ -1,0 +1,349 @@
+//! Algorithm 4 — Modified Least Angle Regression (mLARS).
+//!
+//! One tournament node's local solver: starting from the globally
+//! selected set `Ĩ₀` (with its Cholesky factor) and a candidate pool
+//! `Ĩ_v`, select `b` more columns one at a time, LARS-style, using
+//! [stepLARS](super::steplars) to survive the broken invariant
+//! (a pool column may out-correlate every selected column — impossible
+//! in plain LARS, routine here because the node only sees a slice of
+//! the data).
+//!
+//! All arithmetic phases are measured into a private [`Tracer`] so
+//! T-bLARS can assemble critical-path timings and the Figure 7/8
+//! breakdowns.
+
+use super::steplars::{step_lars, StepKind};
+use crate::cluster::{Phase, Tracer};
+use crate::linalg::{dot, Cholesky, Matrix};
+use std::time::Instant;
+
+/// Result of one mLARS call.
+#[derive(Clone, Debug)]
+pub struct MlarsOutput {
+    /// Updated response estimate (length m).
+    pub y: Vec<f64>,
+    /// Full selected set: `Ĩ₀` followed by the new columns, in order.
+    pub selected: Vec<usize>,
+    /// The newly selected columns `B`, in selection order.
+    pub new_cols: Vec<usize>,
+    /// Cholesky factor over `selected` (same order).
+    pub chol: Cholesky,
+    /// Measured per-phase compute (no communication happens inside).
+    pub tracer: Tracer,
+}
+
+/// Run mLARS.
+///
+/// * `a` — the global matrix (a node accesses only columns in
+///   `i0 ∪ pool`; cost accounting charges exactly those);
+/// * `b_vec` — the response;
+/// * `y_tilde` — current global response estimate `ỹ`;
+/// * `i0` — globally selected columns (ordered), with factor `chol0`;
+/// * `pool` — this node's candidate columns (`Ĩ_v \ Ĩ₀`);
+/// * `budget` — number of new columns `b` to select;
+/// * `tol` — numerical floor.
+pub fn mlars(
+    a: &Matrix,
+    b_vec: &[f64],
+    y_tilde: &[f64],
+    i0: &[usize],
+    pool: &[usize],
+    chol0: &Cholesky,
+    budget: usize,
+    tol: f64,
+) -> MlarsOutput {
+    let m = a.nrows();
+    assert_eq!(b_vec.len(), m);
+    assert_eq!(y_tilde.len(), m);
+    assert_eq!(chol0.dim(), i0.len());
+
+    let mut tracer = Tracer::new();
+    let mut y = y_tilde.to_vec();
+    let mut selected: Vec<usize> = i0.to_vec();
+    let mut chol = chol0.clone();
+    let mut new_cols: Vec<usize> = Vec::new();
+
+    // ── Steps 3-4: r = b − ỹ ; c over I₀ ∪ Ĩ_v. ──
+    let t0 = Instant::now();
+    let r: Vec<f64> = b_vec.iter().zip(&y).map(|(bi, yi)| bi - yi).collect();
+    let mut c_sel = vec![0.0; selected.len()];
+    a.cols_dot(&selected, &r, &mut c_sel);
+    // O(pool + |I₀|) membership filter (a linear `contains` scan per pool
+    // element costs pool·|I₀| — measurable at leaf scale; §Perf L3 note).
+    let mut in_sel = vec![false; a.ncols()];
+    for &j in &selected {
+        in_sel[j] = true;
+    }
+    let mut pool: Vec<usize> = pool.iter().copied().filter(|&j| !in_sel[j]).collect();
+    let mut c_pool = vec![0.0; pool.len()];
+    a.cols_dot(&pool, &r, &mut c_pool);
+    tracer.add_time(Phase::Corr, t0.elapsed().as_secs_f64());
+    tracer.add_flops(Phase::Corr, a.gemv_cols_flops(&selected) + a.gemv_cols_flops(&pool));
+
+    // ── Step 5 (+6-8): c_k over the selected set; bootstrap if empty. ──
+    let mut ck = c_sel.iter().fold(0.0_f64, |mx, &v| mx.max(v.abs()));
+    if selected.is_empty() {
+        if pool.is_empty() {
+            return MlarsOutput { y, selected, new_cols, chol, tracer };
+        }
+        let t0 = Instant::now();
+        let (imax, _) = c_pool
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.abs().partial_cmp(&y.1.abs()).unwrap())
+            .unwrap();
+        let j = pool.swap_remove(imax);
+        let cj = c_pool.swap_remove(imax);
+        // L₀ = (A_jᵀA_j)^{1/2} — columns are unit-norm but compute it.
+        let gjj = a.gram_block(&[j], &[j]).get(0, 0);
+        if chol.push_row(&[gjj]).is_err() {
+            return MlarsOutput { y, selected, new_cols, chol, tracer };
+        }
+        selected.push(j);
+        new_cols.push(j);
+        c_sel.push(cj);
+        ck = cj.abs();
+        tracer.add_time(Phase::Select, t0.elapsed().as_secs_f64());
+    }
+
+    let target = i0.len() + budget;
+    let mut u = vec![0.0; m];
+
+    // ── Main loop (steps 9-28). ──
+    while selected.len() < target && !pool.is_empty() {
+        if ck <= tol {
+            break;
+        }
+
+        // Steps 10-13: s, q, h, w.
+        let t0 = Instant::now();
+        let q = chol.solve(&c_sel);
+        let sq = dot(&c_sel, &q);
+        if !(sq.is_finite() && sq > 0.0) {
+            break;
+        }
+        let h = 1.0 / sq.sqrt();
+        let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
+        tracer.add_time(Phase::Solve, t0.elapsed().as_secs_f64());
+        tracer.add_flops(Phase::Solve, (selected.len() * selected.len()) as u64);
+
+        // Step 14: u = A_I w.
+        let t0 = Instant::now();
+        a.gemv_cols(&selected, &w, &mut u);
+        tracer.add_time(Phase::DirApply, t0.elapsed().as_secs_f64());
+        tracer.add_flops(Phase::DirApply, a.gemv_cols_flops(&selected));
+
+        // Step 15: a over the pool.
+        let t0 = Instant::now();
+        let mut a_pool = vec![0.0; pool.len()];
+        a.cols_dot(&pool, &u, &mut a_pool);
+        tracer.add_time(Phase::Corr, t0.elapsed().as_secs_f64());
+        tracer.add_flops(Phase::Corr, a.gemv_cols_flops(&pool));
+
+        // Steps 16-18: stepLARS per pool column; pick γ_k and the entrant.
+        let t0 = Instant::now();
+        let steps: Vec<StepKind> = pool
+            .iter()
+            .zip(&c_pool)
+            .zip(&a_pool)
+            .map(|((_, &cj), &aj)| step_lars(ck, h, cj, aj))
+            .collect();
+        let any_zero = steps.iter().any(|s| s.gamma() == 0.0);
+        let (gamma, entrant_pos) = if any_zero {
+            // Step 17/18 (zero branch): γ_k = 0; force-add the zero-γ
+            // column with the largest |c|.
+            let pos = (0..pool.len())
+                .filter(|&i| steps[i].gamma() == 0.0)
+                .max_by(|&x, &y| c_pool[x].abs().partial_cmp(&c_pool[y].abs()).unwrap())
+                .unwrap();
+            (0.0, pos)
+        } else {
+            let pos = (0..pool.len())
+                .min_by(|&x, &y| steps[x].gamma().partial_cmp(&steps[y].gamma()).unwrap())
+                .unwrap();
+            (steps[pos].gamma(), pos)
+        };
+        tracer.add_time(Phase::GammaStep, t0.elapsed().as_secs_f64());
+        tracer.add_flops(Phase::GammaStep, 6 * pool.len() as u64);
+
+        // Step 19: y ← y + γu.
+        let t0 = Instant::now();
+        if gamma != 0.0 {
+            for i in 0..m {
+                y[i] += gamma * u[i];
+            }
+        }
+        // Step 20: correlation updates.
+        let shrink = 1.0 - gamma * h;
+        for v in c_sel.iter_mut() {
+            *v *= shrink;
+        }
+        for (v, &aj) in c_pool.iter_mut().zip(&a_pool) {
+            *v -= gamma * aj;
+        }
+        tracer.add_time(Phase::Update, t0.elapsed().as_secs_f64());
+        tracer.add_flops(Phase::Update, (m + pool.len()) as u64);
+
+        // Steps 21 + 23-26: admit the entrant, extend the factor.
+        let t0 = Instant::now();
+        let j = pool[entrant_pos];
+        let grow_head = a.gram_block(&selected, &[j]);
+        let gjj = a.gram_block(&[j], &[j]).get(0, 0);
+        let mut grow: Vec<f64> = (0..selected.len()).map(|i| grow_head.get(i, 0)).collect();
+        grow.push(gjj);
+        tracer.add_flops(Phase::Gram, a.gram_block_flops(&selected, &[j]) + 2);
+        if chol.push_row(&grow).is_ok() {
+            pool.swap_remove(entrant_pos);
+            let cj = c_pool.swap_remove(entrant_pos);
+            let _ = a_pool; // consumed
+            selected.push(j);
+            new_cols.push(j);
+            c_sel.push(cj);
+        } else {
+            // Near-duplicate of an already selected column: drop it from
+            // the pool and continue (the paper's §5.2 independence
+            // assumption rules this out; we degrade gracefully).
+            pool.swap_remove(entrant_pos);
+            c_pool.swap_remove(entrant_pos);
+        }
+        tracer.add_time(Phase::Cholesky, t0.elapsed().as_secs_f64());
+
+        // Step 22: refresh c_k over the (updated) selected correlations.
+        ck = c_sel.iter().fold(0.0_f64, |mx, &v| mx.max(v.abs()));
+    }
+
+    MlarsOutput { y, selected, new_cols, chol, tracer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::lars::serial::{lars, LarsOptions};
+    use crate::linalg::norm2;
+
+    #[test]
+    fn from_scratch_matches_lars_on_full_pool() {
+        // With Ĩ₀ = ∅ and the pool = all columns, mLARS is plain LARS.
+        let d = datasets::tiny_dense(1);
+        let n = d.a.ncols();
+        let m = d.a.nrows();
+        let reference = lars(&d.a, &d.b, &LarsOptions { t: 8, ..Default::default() });
+        let out = mlars(
+            &d.a,
+            &d.b,
+            &vec![0.0; m],
+            &[],
+            &(0..n).collect::<Vec<_>>(),
+            &Cholesky::empty(),
+            8,
+            1e-12,
+        );
+        assert_eq!(out.selected, reference.selected);
+        assert_eq!(out.new_cols.len(), 8);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let d = datasets::tiny(2);
+        let pool: Vec<usize> = (0..100).collect();
+        let out = mlars(
+            &d.a,
+            &d.b,
+            &vec![0.0; d.a.nrows()],
+            &[],
+            &pool,
+            &Cholesky::empty(),
+            5,
+            1e-12,
+        );
+        assert_eq!(out.new_cols.len(), 5);
+        assert!(out.new_cols.iter().all(|j| pool.contains(j)));
+    }
+
+    #[test]
+    fn extends_existing_selection() {
+        let d = datasets::tiny_dense(3);
+        // Run LARS for 4 columns, then ask mLARS to continue with 3 more
+        // from the full pool — result must equal 7-column LARS.
+        let ref7 = lars(&d.a, &d.b, &LarsOptions { t: 7, ..Default::default() });
+        let ref4 = lars(&d.a, &d.b, &LarsOptions { t: 4, ..Default::default() });
+        let chol4 = Cholesky::factor(&d.a.gram_block(&ref4.selected, &ref4.selected)).unwrap();
+        let pool: Vec<usize> = (0..d.a.ncols()).collect();
+        let out = mlars(&d.a, &d.b, &ref4.y, &ref4.selected, &pool, &chol4, 3, 1e-12);
+        assert_eq!(out.selected, ref7.selected);
+        // Response estimate should be close to the 7-column LARS estimate.
+        let dy: f64 = out
+            .y
+            .iter()
+            .zip(&ref7.y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dy < 1e-8 * norm2(&ref7.y).max(1.0), "dy={dy}");
+    }
+
+    #[test]
+    fn handles_violating_pool() {
+        // Give mLARS a selected set that is NOT maximal: Ĩ₀ chosen as the
+        // *least* correlated columns, so the pool violates the LARS
+        // invariant. mLARS must still produce the requested budget.
+        let d = datasets::tiny_dense(4);
+        let m = d.a.nrows();
+        let n = d.a.ncols();
+        let mut c = vec![0.0; n];
+        d.a.at_r(&d.b, &mut c);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap());
+        let weak: Vec<usize> = order[..3].to_vec();
+        let chol = Cholesky::factor(&d.a.gram_block(&weak, &weak)).unwrap();
+        let pool: Vec<usize> = order[3..].to_vec();
+        let out = mlars(&d.a, &d.b, &vec![0.0; m], &weak, &pool, &chol, 4, 1e-12);
+        assert_eq!(out.new_cols.len(), 4, "budget not met under violation");
+        assert_eq!(out.selected.len(), 7);
+        assert_eq!(out.chol.dim(), 7);
+    }
+
+    #[test]
+    fn empty_pool_returns_immediately() {
+        let d = datasets::tiny_dense(5);
+        let m = d.a.nrows();
+        let out = mlars(&d.a, &d.b, &vec![0.0; m], &[], &[], &Cholesky::empty(), 3, 1e-12);
+        assert!(out.new_cols.is_empty());
+        assert!(out.selected.is_empty());
+    }
+
+    #[test]
+    fn pool_overlapping_selected_is_filtered() {
+        let d = datasets::tiny_dense(6);
+        let ref2 = lars(&d.a, &d.b, &LarsOptions { t: 2, ..Default::default() });
+        let chol = Cholesky::factor(&d.a.gram_block(&ref2.selected, &ref2.selected)).unwrap();
+        let pool: Vec<usize> = (0..d.a.ncols()).collect(); // includes selected
+        let out = mlars(&d.a, &d.b, &ref2.y, &ref2.selected, &pool, &chol, 2, 1e-12);
+        // New columns must not duplicate Ĩ₀.
+        for j in &out.new_cols {
+            assert!(!ref2.selected.contains(j));
+        }
+        assert_eq!(out.selected.len(), 4);
+    }
+
+    #[test]
+    fn tracer_records_compute() {
+        let d = datasets::tiny(7);
+        let pool: Vec<usize> = (0..d.a.ncols()).collect();
+        let out = mlars(
+            &d.a,
+            &d.b,
+            &vec![0.0; d.a.nrows()],
+            &[],
+            &pool,
+            &Cholesky::empty(),
+            4,
+            1e-12,
+        );
+        let totals = out.tracer.totals();
+        assert!(totals.flops > 0);
+        assert!(out.tracer.total_time() > 0.0);
+        assert_eq!(totals.msgs, 0, "mLARS itself must not communicate");
+    }
+}

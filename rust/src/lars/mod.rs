@@ -1,0 +1,63 @@
+//! The LARS algorithm family (the paper's core contribution).
+//!
+//! * [`serial`] — Algorithm 1 / serial bLARS semantics (the reference
+//!   implementation everything else is compared against);
+//! * [`blars`] — Algorithm 2, parallel block LARS on row-partitioned
+//!   data over the simulated cluster;
+//! * [`steplars`] — Procedure 1, the guarded step-size computation;
+//! * [`mlars`] — Algorithm 4, modified LARS on a column subset;
+//! * [`tblars`] — Algorithm 3, tournament bLARS on column-partitioned
+//!   data;
+//! * [`lasso_lars`] — LARS with the LASSO modification (§2 / Efron
+//!   Theorem 1: the exact ℓ1-regularization path);
+//! * [`path`] — coefficient recovery along the selection path;
+//! * [`quality`] — the paper's §10.1 quality metrics.
+
+pub mod accelerated;
+pub mod blars;
+pub mod lasso_lars;
+pub mod mlars;
+pub mod path;
+pub mod quality;
+pub mod serial;
+pub mod steplars;
+pub mod tblars;
+
+/// Why a run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Reached the target number of columns `t`.
+    TargetReached,
+    /// No candidate columns left.
+    PoolExhausted,
+    /// Residual (correlation) numerically zero — the model is saturated.
+    Saturated,
+    /// Gram matrix lost positive definiteness (near-duplicate columns).
+    RankDeficient,
+}
+
+/// Common output of all LARS-family runs.
+#[derive(Clone, Debug)]
+pub struct LarsOutput {
+    /// Selected column indices, in selection order.
+    pub selected: Vec<usize>,
+    /// ℓ2 norm of the residual after 0, 1, 2, … iterations
+    /// (index 0 = ‖b‖; Figure 3's y-axis).
+    pub residual_norms: Vec<f64>,
+    /// Number of columns selected after each iteration (Figure 3's
+    /// x-axis; for bLARS this advances by `b` per entry).
+    pub cols_at_iter: Vec<usize>,
+    /// Final response estimate `y` (length m).
+    pub y: Vec<f64>,
+    /// Why the run stopped.
+    pub stop: StopReason,
+}
+
+impl LarsOutput {
+    /// Selected set as a sorted vector (for set comparisons).
+    pub fn selected_sorted(&self) -> Vec<usize> {
+        let mut s = self.selected.clone();
+        s.sort_unstable();
+        s
+    }
+}

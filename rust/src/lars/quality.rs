@@ -1,0 +1,82 @@
+//! Solution-quality metrics (paper §10.1).
+//!
+//! Two metrics: the ℓ2 residual-vs-columns curve (Figure 3) comes for
+//! free from [`super::LarsOutput`]; the second is *precision in column
+//! selection* — treating plain LARS's selections as ground truth, the
+//! fraction of a method's selected columns that LARS also selected
+//! (Figures 4–5).
+
+/// Precision of `candidate` against `reference`:
+/// `|candidate ∩ reference| / |candidate|`. Returns 1.0 for an empty
+/// candidate set (vacuous precision).
+pub fn precision(candidate: &[usize], reference: &[usize]) -> f64 {
+    if candidate.is_empty() {
+        return 1.0;
+    }
+    let mut refset: Vec<usize> = reference.to_vec();
+    refset.sort_unstable();
+    let hits = candidate.iter().filter(|j| refset.binary_search(j).is_ok()).count();
+    hits as f64 / candidate.len() as f64
+}
+
+/// Recall against a known support (synthetic ground truth):
+/// `|candidate ∩ truth| / |truth|`.
+pub fn recall(candidate: &[usize], truth: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let mut cset: Vec<usize> = candidate.to_vec();
+    cset.sort_unstable();
+    let hits = truth.iter().filter(|j| cset.binary_search(j).is_ok()).count();
+    hits as f64 / truth.len() as f64
+}
+
+/// Summary statistics over repeated runs (Figure 5's min/mean/max bars).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MinMeanMax {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+/// Compute min/mean/max of a non-empty sample.
+pub fn min_mean_max(xs: &[f64]) -> MinMeanMax {
+    assert!(!xs.is_empty());
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    MinMeanMax { min, mean, max }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_basic() {
+        assert_eq!(precision(&[1, 2, 3, 4], &[2, 4, 6, 8]), 0.5);
+        assert_eq!(precision(&[1, 2], &[1, 2, 3]), 1.0);
+        assert_eq!(precision(&[9], &[1, 2]), 0.0);
+        assert_eq!(precision(&[], &[1]), 1.0);
+    }
+
+    #[test]
+    fn recall_basic() {
+        assert_eq!(recall(&[1, 2, 3], &[2, 3, 4, 5]), 0.5);
+        assert_eq!(recall(&[], &[]), 1.0);
+        assert_eq!(recall(&[1], &[]), 1.0);
+    }
+
+    #[test]
+    fn min_mean_max_works() {
+        let s = min_mean_max(&[0.2, 0.8, 0.5]);
+        assert_eq!(s.min, 0.2);
+        assert_eq!(s.max, 0.8);
+        assert!((s.mean - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn order_independent() {
+        assert_eq!(precision(&[3, 1, 2], &[2, 1]), precision(&[1, 2, 3], &[1, 2]));
+    }
+}

@@ -1,0 +1,185 @@
+//! Procedure 1 — step-size computation for modified LARS (stepLARS).
+//!
+//! Inside T-bLARS a node runs LARS on columns that may violate the basic
+//! LARS invariant: a not-yet-selected column `j` can have
+//! `|c_j| > c_k` (larger absolute correlation than the current known
+//! maximum). Equation (5) then may lack a non-negative solution. This
+//! procedure reproduces the paper's case analysis exactly, returning a
+//! γ ≥ 0 (γ = 0 signals "cannot step — force-add the violator").
+
+use crate::linalg::select::min_positive2;
+
+/// Outcome of the step-size computation for one candidate column.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepKind {
+    /// Normal LARS crossing (eq. (5) has a positive solution).
+    Crossing(f64),
+    /// No crossing, but both curves decrease — step to the full
+    /// least-squares point `γ = 1/h` (Procedure 1, step 12).
+    FullStep(f64),
+    /// Violation cannot be resolved: stepping would worsen it; γ = 0 and
+    /// the violator must be force-added (Procedure 1, step 14).
+    Blocked,
+}
+
+impl StepKind {
+    /// The γ value this outcome steps by.
+    pub fn gamma(self) -> f64 {
+        match self {
+            StepKind::Crossing(g) | StepKind::FullStep(g) => g,
+            StepKind::Blocked => 0.0,
+        }
+    }
+}
+
+/// Procedure 1. Inputs are the scalars for one candidate column `j`:
+/// current maximum correlation `ck` (over *selected* columns), the
+/// direction normalizer `h`, and the column's correlation `cj = [c_k]_j`
+/// and direction-correlation `aj = [a_k]_j`.
+pub fn step_lars(ck: f64, h: f64, cj: f64, aj: f64) -> StepKind {
+    debug_assert!(ck >= 0.0 && h > 0.0);
+    let same_sign = cj * aj > 0.0;
+
+    if ck >= cj.abs() {
+        // ── No violation (Procedure 1, steps 2-7) ──
+        if same_sign {
+            // Step 4: at least one positive solution; take min⁺.
+            let g1 = (ck - cj) / (ck * h - aj);
+            let g2 = (ck + cj) / (ck * h + aj);
+            match min_positive2(g1, g2) {
+                Some(g) => StepKind::Crossing(g.min(1.0 / h)),
+                // Degenerate (cj = ±ck with matching slope): no strictly
+                // positive crossing before the LS point.
+                None => StepKind::FullStep(1.0 / h),
+            }
+        } else {
+            // Step 6: exactly one positive solution.
+            let g = (ck - cj.abs()) / (ck * h + aj.abs());
+            if g > 0.0 && g.is_finite() {
+                StepKind::Crossing(g.min(1.0 / h))
+            } else {
+                // cj.abs() == ck boundary: the column is already level.
+                StepKind::Crossing(0.0)
+            }
+        }
+    } else {
+        // ── Violation: |c_j| > c_k (Procedure 1, steps 8-15) ──
+        if same_sign && cj.abs() * h <= aj.abs() {
+            // Step 10: the violator's correlation falls fast enough that
+            // the curves still cross at γ = (ck − |cj|)/(ck·h − |aj|) > 0.
+            let g = (ck - cj.abs()) / (ck * h - aj.abs());
+            if g > 0.0 && g.is_finite() {
+                StepKind::Crossing(g.min(1.0 / h))
+            } else {
+                StepKind::Blocked
+            }
+        } else if same_sign {
+            // Step 12: both decrease, no crossing — step to the maximum.
+            StepKind::FullStep(1.0 / h)
+        } else {
+            // Step 14: |c_j − γ a_j| increases while c_k(1−γh) decreases;
+            // any γ > 0 makes the violation worse.
+            StepKind::Blocked
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_same_sign_crossing() {
+        // ck=1, h=1, cj=0.5, aj=0.2: g1=(1-0.5)/(1-0.2)=0.625, g2=(1.5)/(1.2)=1.25
+        match step_lars(1.0, 1.0, 0.5, 0.2) {
+            StepKind::Crossing(g) => assert!((g - 0.625).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn normal_opposite_sign_single_root() {
+        // cj=-0.5, aj=0.2 (opposite): γ = (1-0.5)/(1+0.2)
+        match step_lars(1.0, 1.0, -0.5, 0.2) {
+            StepKind::Crossing(g) => assert!((g - 0.5 / 1.2).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn crossing_verifies_equation() {
+        // Check returned γ satisfies ck(1−γh) = |cj − γ·aj|.
+        for (ck, h, cj, aj) in [
+            (1.0, 0.7, 0.3, 0.5),
+            (2.0, 0.4, -1.5, 0.9),
+            (1.0, 1.0, 0.8, -0.6),
+            (0.9, 1.2, -0.2, -0.4),
+        ] {
+            if let StepKind::Crossing(g) = step_lars(ck, h, cj, aj) {
+                let lhs = ck * (1.0 - g * h);
+                let rhs = (cj - g * aj).abs();
+                assert!(
+                    (lhs - rhs).abs() < 1e-9,
+                    "γ={g} does not solve eq.(5): {lhs} vs {rhs} for {ck},{h},{cj},{aj}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn violation_fast_decay_crosses() {
+        // |cj|=1.5 > ck=1, same sign, |cj|·h=1.5·1 ≤ |aj|=2 ⇒ crossing at
+        // (1−1.5)/(1−2) = 0.5.
+        match step_lars(1.0, 1.0, 1.5, 2.0) {
+            StepKind::Crossing(g) => assert!((g - 0.5).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn violation_slow_decay_full_step() {
+        // |cj|=1.5 > ck=1, same sign, |cj|·h=1.5 > |aj|=0.5 ⇒ γ = 1/h.
+        match step_lars(1.0, 2.0, 1.5, 0.5) {
+            StepKind::FullStep(g) => assert!((g - 0.5).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn violation_opposite_sign_blocked() {
+        // |cj| > ck with opposite signs: stepping increases |c_j − γa_j|.
+        assert_eq!(step_lars(1.0, 1.0, 1.5, -0.3), StepKind::Blocked);
+        assert_eq!(step_lars(1.0, 1.0, -1.5, 0.3), StepKind::Blocked);
+    }
+
+    #[test]
+    fn gamma_never_negative_never_exceeds_full() {
+        let mut rng = crate::rng::Pcg64::new(42);
+        for _ in 0..10_000 {
+            let ck = rng.uniform_range(1e-6, 2.0);
+            let h = rng.uniform_range(1e-3, 3.0);
+            let cj = rng.normal();
+            let aj = rng.normal();
+            let g = step_lars(ck, h, cj, aj).gamma();
+            assert!(g >= 0.0, "negative γ for {ck},{h},{cj},{aj}");
+            assert!(g <= 1.0 / h + 1e-12, "γ={g} exceeds 1/h for {ck},{h},{cj},{aj}");
+            assert!(g.is_finite());
+        }
+    }
+
+    #[test]
+    fn zero_aj_handled() {
+        // aj = 0: correlation of j is constant; crossing at (ck−|cj|)/(ck·h).
+        match step_lars(1.0, 1.0, 0.5, 0.0) {
+            StepKind::Crossing(g) => assert!((g - 0.5).abs() < 1e-12),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn level_column_steps_zero() {
+        // |cj| == ck exactly: already level; γ = 0 crossing.
+        let g = step_lars(1.0, 1.0, -1.0, 0.4).gamma();
+        assert_eq!(g, 0.0);
+    }
+}

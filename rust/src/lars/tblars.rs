@@ -1,0 +1,268 @@
+//! Algorithm 3 — Tournament block LARS (T-bLARS).
+//!
+//! Column-partitioned data: each rank owns `~n/P` columns. Per outer
+//! iteration every leaf runs [mLARS](super::mlars) on its local columns
+//! to nominate `b` candidates; winners battle pairwise up a binary
+//! reduction tree (Figure 1); the root's mLARS output becomes the new
+//! global state, which is then broadcast (selected columns, `y`, and
+//! the Cholesky extension — Alg 3 step 12).
+//!
+//! Cost accounting follows §8.1/§10.2: leaf compute is parallel
+//! (critical path = slowest leaf, fine-grained phases), the `log P`
+//! tournament levels are *serial* — their compute is charged to the
+//! `Wait` category exactly like the paper's wait-time estimate — and
+//! each level exchanges `b·m` words of column data.
+
+use super::mlars::{mlars, MlarsOutput};
+use super::{LarsOutput, StopReason};
+use crate::cluster::topology::TournamentTree;
+use crate::cluster::{Phase, SimCluster, Tracer};
+use crate::linalg::{norm2, Cholesky, Matrix};
+
+/// Options for a T-bLARS run.
+#[derive(Clone, Debug)]
+pub struct TblarsOptions {
+    /// Target number of columns `t`.
+    pub t: usize,
+    /// Columns nominated per node per outer iteration.
+    pub b: usize,
+    /// Numerical floor.
+    pub tol: f64,
+}
+
+impl Default for TblarsOptions {
+    fn default() -> Self {
+        TblarsOptions { t: 10, b: 1, tol: 1e-12 }
+    }
+}
+
+/// Run T-bLARS with a given column `partition` (one column-index list
+/// per rank; see [`crate::data::partition`] for the balanced and random
+/// partitioners the paper's §10 uses).
+pub fn tblars(
+    a: &Matrix,
+    b_vec: &[f64],
+    partition: &[Vec<usize>],
+    opts: &TblarsOptions,
+    cluster: &mut SimCluster,
+) -> LarsOutput {
+    let m = a.nrows();
+    let n = a.ncols();
+    assert_eq!(b_vec.len(), m);
+    assert!(opts.b >= 1);
+    let p = cluster.nranks();
+    assert_eq!(partition.len(), p, "partition must have one bucket per rank");
+    let tree = TournamentTree::new(p);
+    let t = opts.t.min(m.min(n));
+
+    // ── Step 1-2: global state. ──
+    let mut y = vec![0.0; m];
+    let mut selected: Vec<usize> = Vec::new();
+    let mut chol = Cholesky::empty();
+    let mut residual_norms = vec![norm2(b_vec)];
+    let mut cols_at_iter = vec![0usize];
+
+    let stop = loop {
+        if selected.len() >= t {
+            break StopReason::TargetReached;
+        }
+        let budget = opts.b.min(t - selected.len());
+
+        // ── Leaves (Alg 3 steps 5-6): parallel mLARS per rank. ──
+        let leaf_outs: Vec<MlarsOutput> = partition
+            .iter()
+            .map(|pool| mlars(a, b_vec, &y, &selected, pool, &chol, budget, opts.tol))
+            .collect();
+        let leaf_tracers: Vec<Tracer> = leaf_outs.iter().map(|o| o.tracer.clone()).collect();
+        cluster.absorb(&Tracer::critical_path(&leaf_tracers));
+
+        let mut cands: Vec<Vec<usize>> = leaf_outs.iter().map(|o| o.new_cols.clone()).collect();
+        if cands.iter().all(|c| c.is_empty()) {
+            break StopReason::PoolExhausted;
+        }
+
+        // ── Tournament levels (steps 7-9), serialized on the tree. ──
+        let mut root_out: Option<MlarsOutput> = None;
+        if p == 1 {
+            // Single rank: the leaf IS the root.
+            root_out = Some(leaf_outs.into_iter().next().unwrap());
+        } else {
+            for level in 1..=tree.levels() {
+                let nodes = tree.nodes_at(level);
+                // Each right child ships ≤b columns of length m to its
+                // parent's host (plus indices; dominated by b·m).
+                cluster.tree_level_exchange(Phase::TreeExchange, nodes, budget * m);
+
+                let mut next: Vec<Vec<usize>> = Vec::with_capacity(nodes);
+                let mut node_tracers: Vec<Tracer> = Vec::with_capacity(nodes);
+                let is_root_level = level == tree.levels();
+                for i in 0..nodes {
+                    let (lc, rc) = tree.children(level, i);
+                    let mut merged = cands[lc].clone();
+                    merged.extend(cands[rc].iter().copied());
+                    let out = mlars(a, b_vec, &y, &selected, &merged, &chol, budget, opts.tol);
+                    node_tracers.push(out.tracer.clone());
+                    next.push(out.new_cols.clone());
+                    if is_root_level {
+                        root_out = Some(out);
+                    }
+                }
+                // Non-leaf competitions are serialized across levels: while
+                // one node computes, the rest of the machine waits. Charge
+                // the level's critical path to Wait (the paper's §10.2
+                // estimate), keeping flop counters in their phases.
+                let cp = Tracer::critical_path(&node_tracers);
+                cluster.charge_wait(cp.total_time());
+                cluster.absorb_counters(&cp);
+                cands = next;
+            }
+        }
+
+        // ── Root update + broadcast (steps 10-12). ──
+        let root = root_out.expect("tournament produced no root output");
+        let new_count = root.new_cols.len();
+        y = root.y;
+        let k_prev = selected.len();
+        selected = root.selected;
+        chol = root.chol;
+
+        // Broadcast: the chosen columns' data (b·m), the new response
+        // (m), and the newly appended Cholesky rows (b·(k+b)).
+        let l_words = new_count * (k_prev + new_count);
+        cluster.broadcast(Phase::Bcast, new_count * m + m + l_words);
+
+        residual_norms.push({
+            let r: Vec<f64> = b_vec.iter().zip(&y).map(|(bi, yi)| bi - yi).collect();
+            norm2(&r)
+        });
+        cols_at_iter.push(selected.len());
+
+        if new_count == 0 {
+            break StopReason::Saturated;
+        }
+    };
+
+    LarsOutput { selected, residual_norms, cols_at_iter, y, stop }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ExecMode, HwParams};
+    use crate::data::{datasets, partition};
+    use crate::lars::serial::{lars, LarsOptions};
+
+    fn run(p: usize, b: usize, t: usize, seed: u64) -> (LarsOutput, SimCluster) {
+        let d = datasets::tiny(seed);
+        let parts = partition::balanced_col_partition(&d.a, p);
+        let mut cluster = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
+        let out = tblars(
+            &d.a,
+            &d.b,
+            &parts,
+            &TblarsOptions { t, b, ..Default::default() },
+            &mut cluster,
+        );
+        (out, cluster)
+    }
+
+    #[test]
+    fn p1_matches_lars_selection() {
+        // With P=1 and b=1, every outer iteration runs mLARS on the full
+        // pool for one column — selection order must equal plain LARS.
+        let d = datasets::tiny(1);
+        let reference = lars(&d.a, &d.b, &LarsOptions { t: 10, ..Default::default() });
+        let (out, _) = run(1, 1, 10, 1);
+        assert_eq!(out.selected, reference.selected);
+    }
+
+    #[test]
+    fn reaches_target_multirank() {
+        for p in [2usize, 4, 8] {
+            let (out, _) = run(p, 2, 12, 2);
+            assert_eq!(out.selected.len(), 12, "P={p}");
+            assert_eq!(out.stop, StopReason::TargetReached);
+            // No duplicates.
+            let mut s = out.selected.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 12);
+        }
+    }
+
+    #[test]
+    fn residuals_nonincreasing() {
+        let (out, _) = run(4, 3, 15, 3);
+        for w in out.residual_norms.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "{} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn quality_close_to_lars() {
+        // §10.1: T-bLARS residuals are nearly identical to LARS.
+        let d = datasets::tiny(4);
+        let reference = lars(&d.a, &d.b, &LarsOptions { t: 15, ..Default::default() });
+        let parts = partition::balanced_col_partition(&d.a, 4);
+        let mut cluster = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+        let out = tblars(
+            &d.a,
+            &d.b,
+            &parts,
+            &TblarsOptions { t: 15, b: 3, ..Default::default() },
+            &mut cluster,
+        );
+        let r_ref = *reference.residual_norms.last().unwrap();
+        let r_tb = *out.residual_norms.last().unwrap();
+        assert!(
+            r_tb <= r_ref * 1.25 + 1e-9,
+            "T-bLARS residual {r_tb} much worse than LARS {r_ref}"
+        );
+    }
+
+    #[test]
+    fn wait_time_recorded_for_multirank() {
+        let (_, cluster) = run(8, 2, 10, 5);
+        let wait = cluster.tracer().get(Phase::Wait).time;
+        assert!(wait > 0.0, "tournament must record wait time");
+        let cats = cluster.tracer().by_category();
+        assert!(cats[3] > 0.0);
+    }
+
+    #[test]
+    fn tree_exchange_words_scale_with_m() {
+        let (_, cluster) = run(4, 2, 8, 6);
+        let te = cluster.tracer().get(Phase::TreeExchange);
+        assert!(te.words > 0);
+        assert!(te.msgs > 0);
+    }
+
+    #[test]
+    fn messages_scale_inverse_b() {
+        // Table 2: L = (t/b)·2·log P.
+        let (_, c1) = run(8, 1, 24, 7);
+        let (_, c3) = run(8, 3, 24, 7);
+        let m1 = c1.counters().msgs as f64;
+        let m3 = c3.counters().msgs as f64;
+        assert!(m3 < m1 / 2.0, "b=3 should cut messages: b1={m1} b3={m3}");
+    }
+
+    #[test]
+    fn respects_partition_locality_at_leaves() {
+        // Every selected column must come from some rank's partition.
+        let d = datasets::tiny(8);
+        let parts = partition::balanced_col_partition(&d.a, 4);
+        let mut cluster = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+        let out = tblars(
+            &d.a,
+            &d.b,
+            &parts,
+            &TblarsOptions { t: 9, b: 3, ..Default::default() },
+            &mut cluster,
+        );
+        let all: Vec<usize> = parts.iter().flatten().copied().collect();
+        for j in &out.selected {
+            assert!(all.contains(j));
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # calars — Communication-Avoiding Least Angle Regression
+//!
+//! A production-shaped reproduction of *"Parallel and Communication
+//! Avoiding Least Angle Regression"* (Das, Demmel, Fountoulakis, Grigori,
+//! Mahoney, Yang; 2019/2020).
+//!
+//! The crate is organized as three layers (see `DESIGN.md`):
+//!
+//! * **L3 — the coordinator** (this crate): the paper's parallel
+//!   algorithms ([`lars::serial`], [`lars::blars`], [`lars::tblars`])
+//!   scheduled over a simulated message-passing cluster
+//!   ([`cluster`]) with an α-β-γ communication cost model, plus the
+//!   substrate the paper depends on: dense/sparse linear algebra
+//!   ([`linalg`]), dataset generators matching the paper's Table 3
+//!   ([`data`]), baselines ([`baselines`]), metrics and experiment
+//!   drivers ([`experiments`]) regenerating every table and figure.
+//! * **L2/L1 — JAX + Pallas** (build-time Python under `python/`):
+//!   the per-iteration compute graph and its Pallas hot-spot kernels,
+//!   AOT-lowered to HLO text artifacts.
+//! * **Runtime bridge** ([`runtime`]): loads the artifacts via the PJRT
+//!   CPU client and executes them from the Rust request path; Python is
+//!   never on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use calars::data::datasets;
+//! use calars::lars::serial::{lars, LarsOptions};
+//!
+//! let ds = datasets::sector_like(42);
+//! let out = lars(&ds.a, &ds.b, &LarsOptions { t: 20, ..Default::default() });
+//! println!("selected columns: {:?}", out.selected);
+//! ```
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod lars;
+pub mod linalg;
+pub mod metrics;
+pub mod proptest_lite;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Library version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,285 @@
+//! Incrementally extended Cholesky factorization.
+//!
+//! LARS-family algorithms grow the Gram matrix `G_k = A_{I_k}ᵀ A_{I_k}`
+//! by `b` columns per iteration. Refactorizing costs `O(|I|³)`; the
+//! paper instead appends a `b`-row block to the existing factor
+//! (Algorithm 2, steps 20–23):
+//!
+//! ```text
+//! H   = L_k⁻¹ · (A_{I_k}ᵀ A_B)          (forward solves)
+//! ΩΩᵀ = A_Bᵀ A_B − Hᵀ H                  (small b×b Cholesky)
+//! L_{k+1} = [ L_k  0 ]
+//!           [ Hᵀ   Ω ]
+//! ```
+
+use super::dense::DenseMatrix;
+use thiserror::Error;
+
+/// Errors from factorization (loss of positive-definiteness — in exact
+/// arithmetic impossible under the paper's §5.2 full-rank assumption,
+/// but finite precision and near-duplicate columns can trigger it).
+#[derive(Debug, Error)]
+pub enum CholeskyError {
+    #[error("matrix not positive definite at pivot {0} (value {1:.3e})")]
+    NotPositiveDefinite(usize, f64),
+}
+
+/// Lower-triangular Cholesky factor stored packed row-major:
+/// row `i` occupies `i+1` entries starting at `i(i+1)/2`.
+#[derive(Clone, Debug, Default)]
+pub struct Cholesky {
+    dim: usize,
+    /// Packed lower triangle, length `dim(dim+1)/2`.
+    l: Vec<f64>,
+}
+
+#[inline]
+fn row_start(i: usize) -> usize {
+    i * (i + 1) / 2
+}
+
+impl Cholesky {
+    /// Empty (0×0) factor — T-bLARS starts from this.
+    pub fn empty() -> Self {
+        Cholesky { dim: 0, l: Vec::new() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// `L[i][j]`, `j <= i`.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(j <= i && i < self.dim);
+        self.l[row_start(i) + j]
+    }
+
+    /// Factor a dense symmetric positive-definite matrix.
+    pub fn factor(g: &DenseMatrix) -> Result<Self, CholeskyError> {
+        assert_eq!(g.nrows(), g.ncols());
+        let n = g.nrows();
+        let mut chol = Cholesky { dim: 0, l: Vec::with_capacity(row_start(n)) };
+        for i in 0..n {
+            let row: Vec<f64> = (0..=i).map(|j| g.get(i, j)).collect();
+            chol.push_row(&row)?;
+        }
+        Ok(chol)
+    }
+
+    /// Append one row of the Gram matrix: `row = [G[i][0..=i]]` where
+    /// `i == self.dim`. Computes the new factor row in place.
+    pub fn push_row(&mut self, grow: &[f64]) -> Result<(), CholeskyError> {
+        let i = self.dim;
+        assert_eq!(grow.len(), i + 1);
+        let start = row_start(i);
+        self.l.resize(start + i + 1, 0.0);
+        for j in 0..i {
+            // l[i][j] = (g[i][j] − Σ_{k<j} l[i][k]·l[j][k]) / l[j][j]
+            let js = row_start(j);
+            let mut s = grow[j];
+            for k in 0..j {
+                s -= self.l[start + k] * self.l[js + k];
+            }
+            self.l[start + j] = s / self.l[js + j];
+        }
+        let mut d = grow[i];
+        for k in 0..i {
+            d -= self.l[start + k] * self.l[start + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            self.l.truncate(start);
+            return Err(CholeskyError::NotPositiveDefinite(i, d));
+        }
+        self.l[start + i] = d.sqrt();
+        self.dim = i + 1;
+        Ok(())
+    }
+
+    /// Append a `b`-column block (Algorithm 2 steps 20–23).
+    ///
+    /// * `gib` — `A_{I}ᵀ A_B`, shape `dim × b`;
+    /// * `gbb` — `A_Bᵀ A_B`, shape `b × b` (full symmetric).
+    pub fn append_block(&mut self, gib: &DenseMatrix, gbb: &DenseMatrix) -> Result<(), CholeskyError> {
+        let k = self.dim;
+        let b = gbb.nrows();
+        assert_eq!(gib.nrows(), k);
+        assert_eq!(gib.ncols(), b);
+        assert_eq!(gbb.ncols(), b);
+        // Equivalent to b sequential push_rows but phrased at block level:
+        // each new row r (0..b) of the extended Gram is
+        //   [ gibᵀ[r][0..k] | gbb[r][0..=r] ].
+        for r in 0..b {
+            let mut grow = Vec::with_capacity(k + r + 1);
+            for i in 0..k {
+                grow.push(gib.get(i, r));
+            }
+            for j in 0..=r {
+                grow.push(gbb.get(r, j));
+            }
+            self.push_row(&grow)?;
+        }
+        Ok(())
+    }
+
+    /// Forward substitution: solve `L x = rhs` in place.
+    pub fn solve_lower(&self, rhs: &mut [f64]) {
+        assert_eq!(rhs.len(), self.dim);
+        for i in 0..self.dim {
+            let start = row_start(i);
+            let mut s = rhs[i];
+            for j in 0..i {
+                s -= self.l[start + j] * rhs[j];
+            }
+            rhs[i] = s / self.l[start + i];
+        }
+    }
+
+    /// Back substitution: solve `Lᵀ x = rhs` in place.
+    pub fn solve_upper(&self, rhs: &mut [f64]) {
+        assert_eq!(rhs.len(), self.dim);
+        for i in (0..self.dim).rev() {
+            let mut s = rhs[i];
+            for j in i + 1..self.dim {
+                s -= self.l[row_start(j) + i] * rhs[j];
+            }
+            rhs[i] = s / self.l[row_start(i) + i];
+        }
+    }
+
+    /// Solve `(L Lᵀ) x = s`, i.e. `G x = s` (Algorithm 2, step 7).
+    pub fn solve(&self, s: &[f64]) -> Vec<f64> {
+        let mut x = s.to_vec();
+        self.solve_lower(&mut x);
+        self.solve_upper(&mut x);
+        x
+    }
+
+    /// Truncate back to the leading `dim0 × dim0` factor.
+    ///
+    /// mLARS calls inside T-bLARS extend a *copy* of the global factor;
+    /// the root keeps only its own extension, so losing trailing rows is
+    /// a cheap O(1) truncation thanks to packed row-major storage.
+    pub fn truncate(&mut self, dim0: usize) {
+        assert!(dim0 <= self.dim);
+        self.l.truncate(row_start(dim0));
+        self.dim = dim0;
+    }
+
+    /// Reconstruct `G = L Lᵀ` (tests).
+    pub fn reconstruct(&self) -> DenseMatrix {
+        let n = self.dim;
+        DenseMatrix::from_fn(n, n, |i, j| {
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            let (ls, hs) = (row_start(lo), row_start(hi));
+            (0..=lo).map(|k| self.l[ls + k] * self.l[hs + k]).sum()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Pcg64::new(seed);
+        let b = DenseMatrix::from_fn(n + 3, n, |_, _| rng.normal());
+        let mut g = b.gram_block(&(0..n).collect::<Vec<_>>(), &(0..n).collect::<Vec<_>>());
+        for i in 0..n {
+            g.set(i, i, g.get(i, i) + 0.1); // comfortably PD
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let g = random_spd(8, 1);
+        let c = Cholesky::factor(&g).unwrap();
+        let r = c.reconstruct();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((r.get(i, j) - g.get(i, j)).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let g = random_spd(6, 2);
+        let c = Cholesky::factor(&g).unwrap();
+        let s: Vec<f64> = (0..6).map(|i| (i as f64).cos()).collect();
+        let x = c.solve(&s);
+        // Check G x = s
+        for i in 0..6 {
+            let gi: f64 = (0..6).map(|j| g.get(i, j) * x[j]).sum();
+            assert!((gi - s[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn append_block_matches_full_factor() {
+        let n = 10;
+        let b = 3;
+        let g = random_spd(n, 3);
+        let full = Cholesky::factor(&g).unwrap();
+
+        // Factor the leading (n-b) block, then append the trailing b.
+        let k = n - b;
+        let gk = DenseMatrix::from_fn(k, k, |i, j| g.get(i, j));
+        let mut inc = Cholesky::factor(&gk).unwrap();
+        let gib = DenseMatrix::from_fn(k, b, |i, j| g.get(i, k + j));
+        let gbb = DenseMatrix::from_fn(b, b, |i, j| g.get(k + i, k + j));
+        inc.append_block(&gib, &gbb).unwrap();
+
+        assert_eq!(inc.dim(), n);
+        for i in 0..n {
+            for j in 0..=i {
+                assert!(
+                    (inc.get(i, j) - full.get(i, j)).abs() < 1e-9,
+                    "L mismatch at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_recovers_prefix() {
+        let g = random_spd(7, 4);
+        let mut c = Cholesky::factor(&g).unwrap();
+        let expect = {
+            let g4 = DenseMatrix::from_fn(4, 4, |i, j| g.get(i, j));
+            Cholesky::factor(&g4).unwrap()
+        };
+        c.truncate(4);
+        assert_eq!(c.dim(), 4);
+        for i in 0..4 {
+            for j in 0..=i {
+                assert!((c.get(i, j) - expect.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn not_pd_detected() {
+        let g = DenseMatrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]); // rank 1
+        match Cholesky::factor(&g) {
+            Err(CholeskyError::NotPositiveDefinite(i, _)) => assert_eq!(i, 1),
+            other => panic!("expected NotPositiveDefinite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_factor_usable() {
+        let mut c = Cholesky::empty();
+        assert_eq!(c.dim(), 0);
+        c.push_row(&[4.0]).unwrap();
+        assert!((c.get(0, 0) - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn solve_empty_ok() {
+        let c = Cholesky::empty();
+        assert!(c.solve(&[]).is_empty());
+    }
+}

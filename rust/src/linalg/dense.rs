@@ -1,0 +1,288 @@
+//! Row-major dense matrices and the blocked kernels the LARS family needs.
+
+use super::{axpy, dot};
+
+/// Row-major dense `m × n` matrix of `f64`.
+///
+/// Row-major is the natural layout for the paper's *row-partitioned*
+/// bLARS: a rank's shard is a contiguous slice of `data`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    m: usize,
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(m: usize, n: usize) -> Self {
+        DenseMatrix { m, n, data: vec![0.0; m * n] }
+    }
+
+    /// From a row-major buffer.
+    pub fn from_vec(m: usize, n: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), m * n, "buffer size mismatch");
+        DenseMatrix { m, n, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(m: usize, n: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(m * n);
+        for i in 0..m {
+            for j in 0..n {
+                data.push(f(i, j));
+            }
+        }
+        DenseMatrix { m, n, data }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Raw row-major buffer.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Copy column `j` out.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.m).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Contiguous row slice `[r0, r1)` as a new matrix (a rank's shard).
+    pub fn row_slice(&self, r0: usize, r1: usize) -> DenseMatrix {
+        assert!(r0 <= r1 && r1 <= self.m);
+        DenseMatrix {
+            m: r1 - r0,
+            n: self.n,
+            data: self.data[r0 * self.n..r1 * self.n].to_vec(),
+        }
+    }
+
+    /// Column subset as a new dense `m × |cols|` matrix.
+    pub fn col_subset(&self, cols: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.m, cols.len());
+        for i in 0..self.m {
+            let row = self.row(i);
+            let orow = i * cols.len();
+            for (k, &j) in cols.iter().enumerate() {
+                out.data[orow + k] = row[j];
+            }
+        }
+        out
+    }
+
+    /// `out = Aᵀ r` — the correlation kernel. Row-major friendly:
+    /// accumulate `r_i * row_i` into `out` (axpy per row), which streams
+    /// both `A` and `out` and vectorizes well.
+    pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
+        assert_eq!(r.len(), self.m);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        for i in 0..self.m {
+            let ri = r[i];
+            if ri != 0.0 {
+                axpy(ri, self.row(i), out);
+            }
+        }
+    }
+
+    /// `out = A[:, cols] · w` — apply a direction supported on `cols`.
+    pub fn gemv_cols(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), w.len());
+        assert_eq!(out.len(), self.m);
+        for i in 0..self.m {
+            let row = self.row(i);
+            let mut s = 0.0;
+            for (k, &j) in cols.iter().enumerate() {
+                s += row[j] * w[k];
+            }
+            out[i] = s;
+        }
+    }
+
+    /// Gram block `A[:, ii]ᵀ · A[:, jj]` as a dense `|ii| × |jj|` matrix.
+    ///
+    /// Streams A exactly once (rank-1 accumulation into the block). The
+    /// `jj` values of each row are hoisted into a contiguous scratch
+    /// buffer so the inner loop is a register-friendly `v · rj[b]` FMA
+    /// chain rather than strided re-loads — 3-4x on tall matrices
+    /// (EXPERIMENTS.md §Perf, L3 iteration 2).
+    pub fn gram_block(&self, ii: &[usize], jj: &[usize]) -> DenseMatrix {
+        let nb = jj.len();
+        let mut out = DenseMatrix::zeros(ii.len(), nb);
+        let mut rj = vec![0.0_f64; nb];
+        for rix in 0..self.m {
+            let row = self.row(rix);
+            for (x, &j) in rj.iter_mut().zip(jj) {
+                *x = row[j];
+            }
+            for (a, &i) in ii.iter().enumerate() {
+                let v = row[i];
+                if v != 0.0 {
+                    let orow = &mut out.data[a * nb..(a + 1) * nb];
+                    for (o, &x) in orow.iter_mut().zip(&rj) {
+                        *o += v * x;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Dot of column `j` with vector `r` of length `m`.
+    pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
+        assert_eq!(r.len(), self.m);
+        let mut s = 0.0;
+        for i in 0..self.m {
+            s += self.get(i, j) * r[i];
+        }
+        s
+    }
+
+    /// ℓ2 norm of column `j`.
+    pub fn col_norm(&self, j: usize) -> f64 {
+        (0..self.m).map(|i| self.get(i, j).powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// Normalize every column to unit ℓ2 norm (the paper's standing
+    /// assumption, §5.2). Zero columns are left untouched.
+    pub fn normalize_columns(&mut self) {
+        let mut norms = vec![0.0_f64; self.n];
+        for i in 0..self.m {
+            let row = &self.data[i * self.n..(i + 1) * self.n];
+            for j in 0..self.n {
+                norms[j] += row[j] * row[j];
+            }
+        }
+        for nj in norms.iter_mut() {
+            *nj = if *nj > 0.0 { nj.sqrt() } else { 1.0 };
+        }
+        for i in 0..self.m {
+            let row = &mut self.data[i * self.n..(i + 1) * self.n];
+            for j in 0..self.n {
+                row[j] /= norms[j];
+            }
+        }
+    }
+
+    /// Full matvec `out = A x`.
+    pub fn gemv(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(out.len(), self.m);
+        for i in 0..self.m {
+            out[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// Number of structurally nonzero entries (counts exact zeros out).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseMatrix {
+        // 3x2: [[1,2],[3,4],[5,6]]
+        DenseMatrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.])
+    }
+
+    #[test]
+    fn at_r_matches_naive() {
+        let a = small();
+        let r = vec![1.0, -1.0, 2.0];
+        let mut c = vec![0.0; 2];
+        a.at_r(&r, &mut c);
+        assert_eq!(c, vec![1. - 3. + 10., 2. - 4. + 12.]);
+    }
+
+    #[test]
+    fn gemv_cols_subset() {
+        let a = small();
+        let mut out = vec![0.0; 3];
+        a.gemv_cols(&[1], &[2.0], &mut out);
+        assert_eq!(out, vec![4.0, 8.0, 12.0]);
+    }
+
+    #[test]
+    fn gram_block_symmetry() {
+        let a = small();
+        let g = a.gram_block(&[0, 1], &[0, 1]);
+        assert!((g.get(0, 1) - g.get(1, 0)).abs() < 1e-12);
+        assert!((g.get(0, 0) - (1. + 9. + 25.)).abs() < 1e-12);
+        assert!((g.get(0, 1) - (2. + 12. + 30.)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_slice_shard() {
+        let a = small();
+        let s = a.row_slice(1, 3);
+        assert_eq!(s.nrows(), 2);
+        assert_eq!(s.row(0), &[3., 4.]);
+    }
+
+    #[test]
+    fn col_subset_extracts() {
+        let a = small();
+        let s = a.col_subset(&[1]);
+        assert_eq!(s.ncols(), 1);
+        assert_eq!(s.col(0), vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let mut a = small();
+        a.normalize_columns();
+        for j in 0..2 {
+            assert!((a.col_norm(j) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_manual() {
+        let a = small();
+        let mut out = vec![0.0; 3];
+        a.gemv(&[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn col_dot_and_norm() {
+        let a = small();
+        assert!((a.col_dot(0, &[1., 1., 1.]) - 9.0).abs() < 1e-12);
+        assert!((a.col_norm(1) - (4.0f64 + 16.0 + 36.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nnz_counts_nonzeros() {
+        let a = DenseMatrix::from_vec(2, 2, vec![0., 1., 2., 0.]);
+        assert_eq!(a.nnz(), 2);
+    }
+}

@@ -1,0 +1,237 @@
+//! Storage-agnostic matrix front end.
+//!
+//! The algorithms in [`crate::lars`] are written against this enum so a
+//! single implementation serves both the dense (YearPredictionMSD-like)
+//! and sparse (sector/E2006-like) regimes, mirroring the paper's §10
+//! implementation note that leaf computations use sparse structures and
+//! non-leaf computations dense ones.
+
+use super::dense::DenseMatrix;
+use super::sparse::CscMatrix;
+
+/// Dense or CSC-sparse matrix with the unified kernel API used by the
+/// LARS family.
+#[derive(Clone, Debug)]
+pub enum Matrix {
+    Dense(DenseMatrix),
+    Sparse(CscMatrix),
+}
+
+impl Matrix {
+    pub fn nrows(&self) -> usize {
+        match self {
+            Matrix::Dense(a) => a.nrows(),
+            Matrix::Sparse(a) => a.nrows(),
+        }
+    }
+
+    pub fn ncols(&self) -> usize {
+        match self {
+            Matrix::Dense(a) => a.ncols(),
+            Matrix::Sparse(a) => a.ncols(),
+        }
+    }
+
+    /// Structural nonzeros (dense counts exact nonzero entries).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Matrix::Dense(a) => a.nnz(),
+            Matrix::Sparse(a) => a.nnz(),
+        }
+    }
+
+    /// True if backed by CSC storage.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Matrix::Sparse(_))
+    }
+
+    /// `out = Aᵀ r` — the correlation kernel (the paper's hot spot).
+    pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
+        match self {
+            Matrix::Dense(a) => a.at_r(r, out),
+            Matrix::Sparse(a) => a.at_r(r, out),
+        }
+    }
+
+    /// `out = A[:, cols] · w`.
+    pub fn gemv_cols(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
+        match self {
+            Matrix::Dense(a) => a.gemv_cols(cols, w, out),
+            Matrix::Sparse(a) => a.gemv_cols(cols, w, out),
+        }
+    }
+
+    /// Gram block `A[:, ii]ᵀ A[:, jj]` (dense output).
+    pub fn gram_block(&self, ii: &[usize], jj: &[usize]) -> DenseMatrix {
+        match self {
+            Matrix::Dense(a) => a.gram_block(ii, jj),
+            Matrix::Sparse(a) => a.gram_block(ii, jj),
+        }
+    }
+
+    /// Dot of column `j` with `r`.
+    pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
+        match self {
+            Matrix::Dense(a) => a.col_dot(j, r),
+            Matrix::Sparse(a) => a.col_dot(j, r),
+        }
+    }
+
+    /// `out[k] = A[:, cols[k]]ᵀ r` for a set of columns at once.
+    ///
+    /// Dense: streams rows once (contiguous) instead of one strided
+    /// pass per column — 3-5x on tall matrices (§Perf L3 iteration 5).
+    /// Sparse CSC: per-column gather dots (already optimal).
+    pub fn cols_dot(&self, cols: &[usize], r: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), out.len());
+        match self {
+            Matrix::Dense(a) => {
+                assert_eq!(r.len(), a.nrows());
+                out.fill(0.0);
+                for i in 0..a.nrows() {
+                    let ri = r[i];
+                    if ri != 0.0 {
+                        let row = a.row(i);
+                        for (o, &j) in out.iter_mut().zip(cols) {
+                            *o += ri * row[j];
+                        }
+                    }
+                }
+            }
+            Matrix::Sparse(a) => {
+                for (o, &j) in out.iter_mut().zip(cols) {
+                    *o = a.col_dot(j, r);
+                }
+            }
+        }
+    }
+
+    /// ℓ2 norm of column `j`.
+    pub fn col_norm(&self, j: usize) -> f64 {
+        match self {
+            Matrix::Dense(a) => a.col_norm(j),
+            Matrix::Sparse(a) => a.col_norm(j),
+        }
+    }
+
+    /// Unit-normalize all columns (paper assumption §5.2).
+    pub fn normalize_columns(&mut self) {
+        match self {
+            Matrix::Dense(a) => a.normalize_columns(),
+            Matrix::Sparse(a) => a.normalize_columns(),
+        }
+    }
+
+    /// Row slice `[r0, r1)` — a bLARS rank shard.
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Matrix {
+        match self {
+            Matrix::Dense(a) => Matrix::Dense(a.row_slice(r0, r1)),
+            Matrix::Sparse(a) => Matrix::Sparse(a.row_slice(r0, r1)),
+        }
+    }
+
+    /// Column subset — a T-bLARS rank shard.
+    pub fn col_subset(&self, cols: &[usize]) -> Matrix {
+        match self {
+            Matrix::Dense(a) => Matrix::Dense(a.col_subset(cols)),
+            Matrix::Sparse(a) => Matrix::Sparse(a.col_subset(cols)),
+        }
+    }
+
+    /// Per-column nnz (Figure 2).
+    pub fn col_nnz_counts(&self) -> Vec<usize> {
+        match self {
+            Matrix::Dense(a) => (0..a.ncols())
+                .map(|j| (0..a.nrows()).filter(|&i| a.get(i, j) != 0.0).count())
+                .collect(),
+            Matrix::Sparse(a) => a.col_nnz_counts(),
+        }
+    }
+
+    /// Flop count charged for one `Aᵀr` on this storage (2·nnz).
+    pub fn at_r_flops(&self) -> u64 {
+        2 * self.nnz() as u64
+    }
+
+    /// Flop count charged for `A[:, cols]·w`.
+    pub fn gemv_cols_flops(&self, cols: &[usize]) -> u64 {
+        match self {
+            Matrix::Dense(a) => 2 * (a.nrows() * cols.len()) as u64,
+            Matrix::Sparse(a) => 2 * cols.iter().map(|&j| a.col_nnz(j) as u64).sum::<u64>(),
+        }
+    }
+
+    /// Flop count charged for a Gram block.
+    pub fn gram_block_flops(&self, ii: &[usize], jj: &[usize]) -> u64 {
+        match self {
+            Matrix::Dense(a) => 2 * (a.nrows() * ii.len() * jj.len()) as u64,
+            Matrix::Sparse(a) => {
+                let jnnz: u64 = jj.iter().map(|&j| a.col_nnz(j) as u64).sum();
+                2 * ii.len() as u64 * jnnz
+            }
+        }
+    }
+}
+
+impl From<DenseMatrix> for Matrix {
+    fn from(a: DenseMatrix) -> Self {
+        Matrix::Dense(a)
+    }
+}
+
+impl From<CscMatrix> for Matrix {
+    fn from(a: CscMatrix) -> Self {
+        Matrix::Sparse(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (Matrix, Matrix) {
+        let d = DenseMatrix::from_vec(3, 3, vec![1., 0., 2., 0., 3., 0., 4., 0., 5.]);
+        let s = CscMatrix::from_dense(&d);
+        (Matrix::Dense(d), Matrix::Sparse(s))
+    }
+
+    #[test]
+    fn parity_at_r() {
+        let (d, s) = pair();
+        let r = vec![1.0, 2.0, -1.0];
+        let (mut cd, mut cs) = (vec![0.0; 3], vec![0.0; 3]);
+        d.at_r(&r, &mut cd);
+        s.at_r(&r, &mut cs);
+        assert_eq!(cd, cs);
+    }
+
+    #[test]
+    fn parity_gram() {
+        let (d, s) = pair();
+        let gd = d.gram_block(&[0, 2], &[1, 2]);
+        let gs = s.gram_block(&[0, 2], &[1, 2]);
+        assert_eq!(gd, gs);
+    }
+
+    #[test]
+    fn parity_shards() {
+        let (d, s) = pair();
+        let rd = d.row_slice(1, 3);
+        let rs = s.row_slice(1, 3);
+        assert_eq!(rd.nrows(), 2);
+        assert_eq!(rs.nrows(), 2);
+        let r = vec![1.0, 1.0];
+        let (mut cd, mut cs) = (vec![0.0; 3], vec![0.0; 3]);
+        rd.at_r(&r, &mut cd);
+        rs.at_r(&r, &mut cs);
+        assert_eq!(cd, cs);
+    }
+
+    #[test]
+    fn flop_accounting_positive() {
+        let (d, s) = pair();
+        assert!(d.at_r_flops() > 0);
+        assert!(s.at_r_flops() > 0);
+        assert_eq!(s.at_r_flops(), 2 * s.nnz() as u64);
+    }
+}

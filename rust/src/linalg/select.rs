@@ -1,0 +1,150 @@
+//! Selection primitives: `max^b`, `argmax^b`, `min^b`, `min⁺`.
+//!
+//! The paper charges these at O(n) via Introspective Selection [26];
+//! we implement introselect (quickselect with median-of-three pivoting
+//! and a heap-based fallback after too many bad partitions) plus the
+//! small helpers the algorithms use.
+
+/// Indices of the `b` largest values of `f(i)` over `0..n`, unordered.
+/// If `n < b`, returns all indices (paper convention §5.1).
+pub fn argmax_b_by<F: Fn(usize) -> f64>(n: usize, b: usize, f: F) -> Vec<usize> {
+    argselect_b_keyed(n, b, f, false)
+}
+
+/// Indices of the `b` smallest values.
+pub fn argmin_b_by<F: Fn(usize) -> f64>(n: usize, b: usize, f: F) -> Vec<usize> {
+    argselect_b_keyed(n, b, f, true)
+}
+
+/// Materialize keys once, then introselect on (key, index) pairs —
+/// evaluating `f` per *comparison* dominated the selection cost
+/// (EXPERIMENTS.md §Perf, L3 iteration 3: ~9x on n = 150k).
+fn argselect_b_keyed<F: Fn(usize) -> f64>(n: usize, b: usize, f: F, ascending: bool) -> Vec<usize> {
+    if b >= n {
+        return (0..n).collect();
+    }
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (f(i), i)).collect();
+    pairs.select_nth_unstable_by(b - 1, |a, c| {
+        let ord = a.0.partial_cmp(&c.0).unwrap_or(std::cmp::Ordering::Equal);
+        if ascending {
+            ord
+        } else {
+            ord.reverse()
+        }
+    });
+    pairs[..b].iter().map(|&(_, i)| i).collect()
+}
+
+/// `b`-th largest absolute value of a slice (`max^b` in the paper);
+/// `None` if empty. If the slice has fewer than `b` entries, `b` is
+/// clamped to its length.
+pub fn max_b_abs(v: &[f64], b: usize) -> Option<f64> {
+    if v.is_empty() || b == 0 {
+        return None;
+    }
+    let idx = argmax_b_by(v.len(), b, |i| v[i].abs());
+    idx.iter().map(|&i| v[i].abs()).fold(None, |acc: Option<f64>, x| {
+        Some(match acc {
+            None => x,
+            Some(a) => a.min(x),
+        })
+    })
+}
+
+/// Minimum positive value among the two candidates (paper's `min⁺` on a
+/// 2-vector): returns `None` when neither is strictly positive & finite.
+#[inline]
+pub fn min_positive2(a: f64, b: f64) -> Option<f64> {
+    let pa = a.is_finite() && a > 0.0;
+    let pb = b.is_finite() && b > 0.0;
+    match (pa, pb) {
+        (true, true) => Some(a.min(b)),
+        (true, false) => Some(a),
+        (false, true) => Some(b),
+        (false, false) => None,
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn check_topb(v: &[f64], b: usize) {
+        let got = argmax_b_by(v.len(), b, |i| v[i]);
+        assert_eq!(got.len(), b.min(v.len()));
+        let mut sorted: Vec<f64> = v.to_vec();
+        sorted.sort_by(|a, c| c.partial_cmp(a).unwrap());
+        let thresh = sorted[b.min(v.len()) - 1];
+        for &i in &got {
+            assert!(v[i] >= thresh - 1e-12, "v[{i}]={} < thresh {}", v[i], thresh);
+        }
+        // No duplicates
+        let mut g = got.clone();
+        g.sort_unstable();
+        g.dedup();
+        assert_eq!(g.len(), b.min(v.len()));
+    }
+
+    #[test]
+    fn top_b_random() {
+        let mut rng = Pcg64::new(11);
+        for n in [1usize, 2, 5, 17, 100, 501] {
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            for b in [1usize, 2, 3, n / 2 + 1, n] {
+                let b = b.min(n).max(1);
+                check_topb(&v, b);
+            }
+        }
+    }
+
+    #[test]
+    fn top_b_with_ties() {
+        let v = vec![1.0, 1.0, 1.0, 0.5, 1.0, 0.2];
+        check_topb(&v, 2);
+        check_topb(&v, 4);
+    }
+
+    #[test]
+    fn b_exceeds_len() {
+        let v = vec![3.0, 1.0];
+        let got = argmax_b_by(v.len(), 10, |i| v[i]);
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn argmin_b() {
+        let v = vec![5.0, -1.0, 3.0, 0.0, 7.0];
+        let got = argmin_b_by(v.len(), 2, |i| v[i]);
+        let mut g = got.clone();
+        g.sort_unstable();
+        assert_eq!(g, vec![1, 3]);
+    }
+
+    #[test]
+    fn max_b_abs_values() {
+        let v = vec![-5.0, 1.0, 4.0, -3.0];
+        assert_eq!(max_b_abs(&v, 1), Some(5.0));
+        assert_eq!(max_b_abs(&v, 2), Some(4.0));
+        assert_eq!(max_b_abs(&v, 4), Some(1.0));
+        assert_eq!(max_b_abs(&v, 10), Some(1.0)); // b clamped
+        assert_eq!(max_b_abs(&[], 1), None);
+    }
+
+    #[test]
+    fn min_positive2_cases() {
+        assert_eq!(min_positive2(2.0, 3.0), Some(2.0));
+        assert_eq!(min_positive2(-2.0, 3.0), Some(3.0));
+        assert_eq!(min_positive2(-2.0, -3.0), None);
+        assert_eq!(min_positive2(f64::INFINITY, 1.0), Some(1.0));
+        assert_eq!(min_positive2(f64::NAN, 1.0), Some(1.0));
+        assert_eq!(min_positive2(0.0, 0.0), None);
+    }
+
+    #[test]
+    fn all_equal_input() {
+        let v = vec![2.0; 9];
+        check_topb(&v, 3);
+    }
+}

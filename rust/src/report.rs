@@ -1,0 +1,124 @@
+//! ASCII tables and series printers matching the paper's rows/curves.
+//!
+//! Every experiment driver renders through these so the console output
+//! (and `EXPERIMENTS.md`) has a uniform, diffable shape.
+
+/// A simple left-aligned ASCII table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        let sep = {
+            let mut line = String::from("|");
+            for w in &widths {
+                line.push_str(&format!("{}|", "-".repeat(w + 2)));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Render an (x, y) series as aligned columns — the textual stand-in for
+/// the paper's line plots.
+pub fn series(title: &str, xlabel: &str, ylabel: &str, points: &[(f64, f64)]) -> String {
+    let mut t = Table::new(&[xlabel, ylabel]);
+    for &(x, y) in points {
+        t.row(&[trim_float(x), format!("{y:.6}")]);
+    }
+    format!("## {title}\n{}", t.render())
+}
+
+/// An ASCII bar chart (log-ish scaled to the max), for speedup figures.
+pub fn bar_chart(title: &str, bars: &[(String, f64)], width: usize) -> String {
+    let max = bars.iter().map(|(_, v)| *v).fold(f64::MIN_POSITIVE, f64::max);
+    let label_w = bars.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("## {title}\n");
+    for (label, v) in bars {
+        let n = ((v / max) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!("{label:<label_w$} | {} {v:.3}\n", "#".repeat(n)));
+    }
+    out
+}
+
+fn trim_float(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "unaligned:\n{s}");
+        assert!(s.contains("longer"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn series_contains_points() {
+        let s = series("resid", "cols", "l2", &[(1.0, 0.5), (2.0, 0.25)]);
+        assert!(s.contains("resid"));
+        assert!(s.contains("0.500000"));
+        assert!(s.contains("| 1 "));
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart("speedup", &[("P=1".into(), 1.0), ("P=4".into(), 4.0)], 10);
+        assert!(s.contains("##########"));
+    }
+}

@@ -1,0 +1,229 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The environment is offline (no `rand` crate), so the crate carries its
+//! own small, well-tested generator: PCG-XSH-RR 64/32 with a 64-bit
+//! state-stream pair, plus the handful of distributions the dataset
+//! generators need (uniform, normal, log-normal, Zipf-like power law).
+//! Everything is deterministic given a seed, which the experiment drivers
+//! rely on for reproducibility.
+
+/// PCG-XSH-RR 64/32 generator (O'Neill 2014).
+///
+/// Small state, passes practical statistical tests, and is fully
+/// deterministic across platforms — sufficient for synthetic data
+/// generation and property-based testing.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Create a generator from a seed; the stream is derived from the seed.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: (seed.wrapping_mul(0x9E3779B97F4A7C15) | 1),
+        };
+        rng.state = rng.state.wrapping_add(seed).wrapping_mul(PCG_MULT);
+        rng.next_u32();
+        rng.next_u32();
+        rng
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's rejection-free-ish method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 64-bit multiply-shift; bias is negligible for n << 2^64 and the
+        // generator is only used for data synthesis / test-case choice.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (caches the second variate).
+    pub fn normal(&mut self) -> f64 {
+        // Avoid caching to keep the generator `Clone`-cheap and branch-free
+        // determinism simple; Box–Muller cost is irrelevant here.
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/stddev.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal: `exp(N(mu, sigma))`. Used for skewed per-column nnz
+    /// distributions matching the paper's Figure 2 histograms.
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Zipf-like power-law sample over `[1, n]` with exponent `s` via
+    /// inverse-CDF of the continuous Pareto approximation.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        let u = self.uniform().max(1e-12);
+        if (s - 1.0).abs() < 1e-9 {
+            let x = (n as f64).powf(u);
+            (x as usize).clamp(1, n)
+        } else {
+            let a = 1.0 - s;
+            let x = ((u * ((n as f64).powf(a) - 1.0)) + 1.0).powf(1.0 / a);
+            (x as usize).clamp(1, n)
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // For small k relative to n, rejection sampling over a set would
+        // work; partial shuffle is simple and O(n) which is fine here.
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should be nearly disjoint, got {same} collisions");
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut rng = Pcg64::new(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut rng = Pcg64::new(6);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = rng.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut rng = Pcg64::new(8);
+        let n = 1000;
+        let samples: Vec<usize> = (0..20_000).map(|_| rng.zipf(n, 1.3)).collect();
+        assert!(samples.iter().all(|&x| (1..=n).contains(&x)));
+        // Power law: small values should dominate.
+        let small = samples.iter().filter(|&&x| x <= 10).count();
+        assert!(small > samples.len() / 4, "small-count={small}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(9);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::new(10);
+        let idx = rng.sample_indices(100, 30);
+        assert_eq!(idx.len(), 30);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 30);
+    }
+}

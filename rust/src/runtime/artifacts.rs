@@ -1,0 +1,181 @@
+//! Artifact manifest: which AOT-compiled kernels exist, at which
+//! (bucket) shapes, and where their HLO text lives.
+//!
+//! `python/compile/aot.py` writes `manifest.tsv` with one line per
+//! artifact: `op \t m \t n \t filename`. (There is also a
+//! `manifest.json` for humans; the TSV exists because the offline crate
+//! set has no JSON parser and hand-rolling one for a fixed schema is
+//! worse than a fixed-column format.)
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Operations the AOT pipeline compiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum KernelOp {
+    /// `corr(A[m,n], r[m]) -> c[n]` — the Aᵀr hot spot (Pallas kernel).
+    Corr,
+    /// `gstep(A, u, c, ck, h) -> (a[n], gamma[n])` — fused direction
+    /// correlation + γ-candidate computation (Alg 2 steps 11-12).
+    GammaStep,
+}
+
+impl KernelOp {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "corr" => Ok(KernelOp::Corr),
+            "gstep" => Ok(KernelOp::GammaStep),
+            other => bail!("unknown kernel op '{other}'"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelOp::Corr => "corr",
+            KernelOp::GammaStep => "gstep",
+        }
+    }
+}
+
+/// A compiled artifact's identity: op + bucket shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct KernelKey {
+    pub op: KernelOp,
+    pub m: usize,
+    pub n: usize,
+}
+
+/// Parsed manifest: key → HLO text path.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    entries: BTreeMap<KernelKey, PathBuf>,
+    dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.tsv` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut f = line.split('\t');
+            let op = KernelOp::parse(f.next().context("missing op")?)?;
+            let m: usize = f
+                .next()
+                .with_context(|| format!("line {}: missing m", lineno + 1))?
+                .parse()
+                .context("bad m")?;
+            let n: usize = f
+                .next()
+                .with_context(|| format!("line {}: missing n", lineno + 1))?
+                .parse()
+                .context("bad n")?;
+            let file = f.next().with_context(|| format!("line {}: missing file", lineno + 1))?;
+            entries.insert(KernelKey { op, m, n }, dir.join(file));
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(ArtifactManifest { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &KernelKey> {
+        self.entries.keys()
+    }
+
+    pub fn path(&self, key: &KernelKey) -> Option<&Path> {
+        self.entries.get(key).map(|p| p.as_path())
+    }
+
+    /// Smallest bucket of `op` that fits an (m, n) problem: minimizes
+    /// padded area among buckets with `bucket.m ≥ m` and `bucket.n ≥ n`.
+    pub fn bucket_for(&self, op: KernelOp, m: usize, n: usize) -> Option<KernelKey> {
+        self.entries
+            .keys()
+            .filter(|k| k.op == op && k.m >= m && k.n >= n)
+            .min_by_key(|k| k.m * k.n)
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> ArtifactManifest {
+        let text = "corr\t128\t64\tcorr_128x64.hlo.txt\n\
+                    corr\t512\t256\tcorr_512x256.hlo.txt\n\
+                    gstep\t128\t64\tgstep_128x64.hlo.txt\n";
+        ArtifactManifest::parse(text, Path::new("/tmp/arts")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = manifest();
+        assert_eq!(m.len(), 3);
+        let key = KernelKey { op: KernelOp::Corr, m: 128, n: 64 };
+        assert_eq!(
+            m.path(&key).unwrap(),
+            Path::new("/tmp/arts/corr_128x64.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let m = manifest();
+        let b = m.bucket_for(KernelOp::Corr, 100, 60).unwrap();
+        assert_eq!((b.m, b.n), (128, 64));
+        let b2 = m.bucket_for(KernelOp::Corr, 200, 60).unwrap();
+        assert_eq!((b2.m, b2.n), (512, 256));
+        assert!(m.bucket_for(KernelOp::Corr, 1000, 10).is_none());
+        assert!(m.bucket_for(KernelOp::GammaStep, 512, 10).is_none());
+    }
+
+    #[test]
+    fn exact_fit_is_exact() {
+        let m = manifest();
+        let b = m.bucket_for(KernelOp::Corr, 128, 64).unwrap();
+        assert_eq!((b.m, b.n), (128, 64));
+    }
+
+    #[test]
+    fn rejects_empty_and_garbage() {
+        assert!(ArtifactManifest::parse("", Path::new("/x")).is_err());
+        assert!(ArtifactManifest::parse("bogus\t1\t2\tf", Path::new("/x")).is_err());
+        assert!(ArtifactManifest::parse("corr\tx\t2\tf", Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let m = ArtifactManifest::parse(
+            "# comment\ncorr\t8\t8\tf.hlo.txt\n",
+            Path::new("/x"),
+        )
+        .unwrap();
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Hybrid kernel dispatch: XLA artifact if one fits, native Rust
+//! otherwise.
+//!
+//! The coordinator asks for a [`CorrEngine`] per matrix; dense matrices
+//! whose shape fits a compiled bucket get the AOT Pallas/XLA path
+//! (f32), everything else (sparse storage, oversize shapes, missing
+//! artifacts) gets the native f64 kernels. Parity between the two paths
+//! is enforced by `tests/runtime_parity.rs`.
+
+use super::pjrt::{CorrSession, XlaRuntime};
+use crate::linalg::Matrix;
+use anyhow::Result;
+
+/// Which backend a [`CorrEngine`] ended up on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Native,
+    Xla,
+}
+
+/// A per-matrix correlation engine: computes `c = Aᵀr` repeatedly.
+pub enum CorrEngine<'rt> {
+    /// Native f64 kernels on the matrix itself.
+    Native { a: Matrix },
+    /// Device-resident XLA session (dense f32).
+    Xla { session: CorrSession<'rt>, n: usize },
+}
+
+impl<'rt> CorrEngine<'rt> {
+    /// Build an engine for `a`, preferring the XLA path when
+    /// `runtime` is available, the matrix is dense, and a bucket fits.
+    pub fn new(a: &Matrix, runtime: Option<&'rt XlaRuntime>) -> Self {
+        if let (Some(rt), Matrix::Dense(d)) = (runtime, a) {
+            if let Ok(session) = rt.prepare_corr(d.nrows(), d.ncols(), d.data()) {
+                return CorrEngine::Xla { session, n: d.ncols() };
+            }
+        }
+        CorrEngine::Native { a: a.clone() }
+    }
+
+    /// Force the native path (used by parity tests and benchmarks).
+    pub fn native(a: &Matrix) -> Self {
+        CorrEngine::Native { a: a.clone() }
+    }
+
+    pub fn backend(&self) -> Backend {
+        match self {
+            CorrEngine::Native { .. } => Backend::Native,
+            CorrEngine::Xla { .. } => Backend::Xla,
+        }
+    }
+
+    /// `c = Aᵀ r`.
+    pub fn corr(&self, r: &[f64]) -> Result<Vec<f64>> {
+        match self {
+            CorrEngine::Native { a } => {
+                let mut c = vec![0.0; a.ncols()];
+                a.at_r(r, &mut c);
+                Ok(c)
+            }
+            CorrEngine::Xla { session, .. } => session.corr(r),
+        }
+    }
+
+    /// Output dimension.
+    pub fn ncols(&self) -> usize {
+        match self {
+            CorrEngine::Native { a } => a.ncols(),
+            CorrEngine::Xla { n, .. } => *n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    #[test]
+    fn native_engine_matches_matrix_kernel() {
+        let d = datasets::tiny(1);
+        let eng = CorrEngine::native(&d.a);
+        assert_eq!(eng.backend(), Backend::Native);
+        let c1 = eng.corr(&d.b).unwrap();
+        let mut c2 = vec![0.0; d.a.ncols()];
+        d.a.at_r(&d.b, &mut c2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn falls_back_without_runtime() {
+        let d = datasets::tiny_dense(2);
+        let eng = CorrEngine::new(&d.a, None);
+        assert_eq!(eng.backend(), Backend::Native);
+    }
+
+    #[test]
+    fn sparse_always_native() {
+        let d = datasets::tiny(3);
+        // Even with a runtime the sparse matrix goes native; passing None
+        // here since the runtime needs artifacts on disk.
+        let eng = CorrEngine::new(&d.a, None);
+        assert_eq!(eng.backend(), Backend::Native);
+        assert_eq!(eng.ncols(), d.a.ncols());
+    }
+}

@@ -1,0 +1,23 @@
+//! Runtime bridge: load AOT-compiled HLO artifacts via the PJRT CPU
+//! client and execute them from the Rust request path.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`);
+//! after that the Rust binary is self-contained: it reads
+//! `artifacts/manifest.tsv`, compiles each HLO text module once with
+//! [`xla::PjRtClient`], and dispatches kernel calls by padding operands
+//! to the nearest compiled bucket shape.
+
+pub mod artifacts;
+pub mod hybrid;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactManifest, KernelKey, KernelOp};
+pub use hybrid::CorrEngine;
+pub use pjrt::XlaRuntime;
+
+/// Default artifacts directory, relative to the repo root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("CALARS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,88 @@
+//! CLI smoke tests: the launcher binary end to end.
+
+use std::process::Command;
+
+fn calars(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_calars"))
+        .args(args)
+        .output()
+        .expect("binary runs")
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = calars(&[]);
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("USAGE"));
+    assert!(s.contains("calars run"));
+}
+
+#[test]
+fn run_lars_tiny() {
+    let out = calars(&["run", "--algo", "lars", "--dataset", "tiny", "--t", "8"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("selected 8 columns"), "{s}");
+    assert!(s.contains("TargetReached"));
+}
+
+#[test]
+fn run_blars_reports_cluster_stats() {
+    let out = calars(&[
+        "run", "--algo", "blars", "--dataset", "tiny", "--t", "8", "--b", "2", "--p", "4",
+    ]);
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("simulated time"));
+    assert!(s.contains("breakdown:"));
+}
+
+#[test]
+fn run_tblars_threaded_mode() {
+    let out = calars(&[
+        "run", "--algo", "tblars", "--dataset", "tiny", "--t", "6", "--b", "2", "--p", "4",
+        "--threads",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("selected 6 columns"));
+}
+
+#[test]
+fn exp_table3_quick() {
+    let out = calars(&["exp", "table3", "--quick"]);
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("Table 3"));
+    assert!(s.contains("sector_like"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = calars(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn unknown_dataset_fails() {
+    let out = calars(&["run", "--dataset", "nope"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown dataset"));
+}
+
+#[test]
+fn unknown_experiment_fails() {
+    let out = calars(&["exp", "fig99"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown experiment"));
+}
+
+#[test]
+fn info_lists_datasets() {
+    let out = calars(&["info"]);
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("dataset registry"));
+    assert!(s.contains("e2006_log1p_like"));
+}

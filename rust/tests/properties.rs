@@ -1,0 +1,221 @@
+//! Property-based tests (via the in-repo `proptest_lite` harness) over
+//! the algorithmic invariants the paper proves or relies on.
+
+use calars::cluster::{ExecMode, HwParams, SimCluster};
+use calars::data::synthetic::{generate, Synthetic, SyntheticSpec};
+use calars::lars::blars::{blars, BlarsOptions};
+use calars::lars::serial::{blars_serial, lars, LarsOptions};
+use calars::lars::steplars::step_lars;
+use calars::linalg::{Cholesky, DenseMatrix};
+use calars::proptest_lite::{check, Config};
+use calars::rng::Pcg64;
+
+fn random_problem(rng: &mut Pcg64, size: usize) -> Synthetic {
+    let m = 30 + size * 6;
+    let n = 20 + size * 8;
+    let spec = SyntheticSpec {
+        m,
+        n,
+        density: if rng.uniform() < 0.5 { 1.0 } else { 0.3 },
+        col_skew: rng.uniform_range(0.0, 1.2),
+        k_true: 3 + size / 2,
+        noise: rng.uniform_range(0.0, 0.1),
+    };
+    generate(&spec, rng.next_u64())
+}
+
+#[test]
+fn prop_lars_residuals_monotone() {
+    check(
+        Config { cases: 24, seed: 0xA11CE },
+        random_problem,
+        |s| {
+            let t = 8.min(s.a.ncols() / 2).max(2);
+            let out = lars(&s.a, &s.b, &LarsOptions { t, ..Default::default() });
+            for w in out.residual_norms.windows(2) {
+                if w[1] > w[0] + 1e-9 {
+                    return Err(format!("residual increased {} -> {}", w[0], w[1]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lars_selected_unique_and_in_range() {
+    check(
+        Config { cases: 24, seed: 0xB0B },
+        random_problem,
+        |s| {
+            let t = 10.min(s.a.ncols() / 2).max(2);
+            let out = lars(&s.a, &s.b, &LarsOptions { t, ..Default::default() });
+            let mut sel = out.selected.clone();
+            sel.sort_unstable();
+            let len = sel.len();
+            sel.dedup();
+            if sel.len() != len {
+                return Err("duplicate selections".into());
+            }
+            if sel.iter().any(|&j| j >= s.a.ncols()) {
+                return Err("selection out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_blars_b1_equals_lars() {
+    check(
+        Config { cases: 16, seed: 0xC0FFEE },
+        random_problem,
+        |s| {
+            let t = 8.min(s.a.ncols() / 2).max(2);
+            let l = lars(&s.a, &s.b, &LarsOptions { t, ..Default::default() });
+            let b = blars_serial(&s.a, &s.b, &LarsOptions { t, b: 1, ..Default::default() });
+            if l.selected != b.selected {
+                return Err(format!("selections differ: {:?} vs {:?}", l.selected, b.selected));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_blars_selection_independent_of_p() {
+    check(
+        Config { cases: 12, seed: 0xDEAD },
+        random_problem,
+        |s| {
+            let t = 8.min(s.a.ncols() / 2).max(2);
+            let run = |p: usize| {
+                let mut c = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
+                blars(&s.a, &s.b, &BlarsOptions { t, b: 2, ..Default::default() }, &mut c).selected
+            };
+            let s1 = run(1);
+            let s4 = run(4);
+            if s1 != s4 {
+                return Err(format!("P changed selection: {s1:?} vs {s4:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_steplars_gamma_in_bounds() {
+    check(
+        Config { cases: 64, seed: 0xFACE },
+        |rng, _| {
+            (
+                rng.uniform_range(1e-6, 3.0),  // ck
+                rng.uniform_range(1e-3, 5.0),  // h
+                rng.normal() * 2.0,            // cj
+                rng.normal() * 2.0,            // aj
+            )
+        },
+        |&(ck, h, cj, aj)| {
+            let g = step_lars(ck, h, cj, aj).gamma();
+            if !(g.is_finite() && (0.0..=1.0 / h + 1e-9).contains(&g)) {
+                return Err(format!("γ = {g} out of [0, 1/h]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_steplars_crossing_solves_equation() {
+    use calars::lars::steplars::StepKind;
+    check(
+        Config { cases: 128, seed: 0xFEED },
+        |rng, _| {
+            (
+                rng.uniform_range(0.1, 2.0),
+                rng.uniform_range(0.1, 2.0),
+                rng.normal(),
+                rng.normal(),
+            )
+        },
+        |&(ck, h, cj, aj)| {
+            if let StepKind::Crossing(g) = step_lars(ck, h, cj, aj) {
+                if g < 1.0 / h - 1e-9 {
+                    let lhs = ck * (1.0 - g * h);
+                    let rhs = (cj - g * aj).abs();
+                    if (lhs - rhs).abs() > 1e-7 * lhs.abs().max(1.0) {
+                        return Err(format!("eq(5) violated: {lhs} vs {rhs} at γ={g}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cholesky_append_equals_full_factor() {
+    check(
+        Config { cases: 32, seed: 0x10_AD },
+        |rng, size| {
+            let n = 2 + size.min(12);
+            let split = 1 + rng.below(n - 1);
+            let m = n + 4;
+            let a = DenseMatrix::from_fn(m, n, |_, _| rng.normal());
+            (a, split)
+        },
+        |(a, split)| {
+            let n = a.ncols();
+            let all: Vec<usize> = (0..n).collect();
+            let mut g = a.gram_block(&all, &all);
+            for i in 0..n {
+                g.set(i, i, g.get(i, i) + 0.05);
+            }
+            let full = Cholesky::factor(&g).map_err(|e| e.to_string())?;
+            let k = *split;
+            let gk = DenseMatrix::from_fn(k, k, |i, j| g.get(i, j));
+            let mut inc = Cholesky::factor(&gk).map_err(|e| e.to_string())?;
+            let gib = DenseMatrix::from_fn(k, n - k, |i, j| g.get(i, k + j));
+            let gbb = DenseMatrix::from_fn(n - k, n - k, |i, j| g.get(k + i, k + j));
+            inc.append_block(&gib, &gbb).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                for j in 0..=i {
+                    let d = (inc.get(i, j) - full.get(i, j)).abs();
+                    if d > 1e-8 {
+                        return Err(format!("factor mismatch at ({i},{j}): {d}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lars_maximal_correlation_invariant() {
+    // No unselected column may strictly dominate the selected set's
+    // maximum absolute correlation (LARS's defining property).
+    check(
+        Config { cases: 16, seed: 0x1A25 },
+        random_problem,
+        |s| {
+            let t = 6.min(s.a.ncols() / 2).max(2);
+            let out = lars(&s.a, &s.b, &LarsOptions { t, ..Default::default() });
+            let r: Vec<f64> =
+                s.b.iter().zip(&out.y).map(|(bi, yi)| bi - yi).collect();
+            let mut c = vec![0.0; s.a.ncols()];
+            s.a.at_r(&r, &mut c);
+            let cmax_sel =
+                out.selected.iter().map(|&j| c[j].abs()).fold(0.0_f64, f64::max);
+            for j in 0..s.a.ncols() {
+                if !out.selected.contains(&j) && c[j].abs() > cmax_sel * (1.0 + 1e-6) + 1e-9 {
+                    return Err(format!(
+                        "col {j} dominates: |c|={} vs selected max {cmax_sel}",
+                        c[j].abs()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

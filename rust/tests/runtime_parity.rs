@@ -1,0 +1,182 @@
+//! Integration: the AOT (JAX+Pallas → HLO text → PJRT) path computes
+//! the same numbers as the native f64 kernels, within f32 tolerance.
+//!
+//! Requires `make artifacts` to have run (the Makefile orders this);
+//! the suite fails with a clear message otherwise.
+
+use calars::data::datasets;
+use calars::linalg::Matrix;
+use calars::runtime::{default_artifacts_dir, CorrEngine, KernelOp, XlaRuntime};
+
+fn runtime() -> XlaRuntime {
+    let dir = default_artifacts_dir();
+    XlaRuntime::load(&dir).expect(
+        "artifacts missing — run `make artifacts` before `cargo test` \
+         (the Makefile test target does this)",
+    )
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn manifest_has_both_ops() {
+    let rt = runtime();
+    assert!(rt.manifest().len() >= 2);
+    assert!(rt.manifest().bucket_for(KernelOp::Corr, 64, 32).is_some());
+    assert!(rt.manifest().bucket_for(KernelOp::GammaStep, 64, 32).is_some());
+}
+
+#[test]
+fn corr_parity_exact_bucket() {
+    let rt = runtime();
+    let d = datasets::by_name("tiny_dense", 7).unwrap();
+    let Matrix::Dense(dense) = &d.a else { panic!("tiny_dense must be dense") };
+    let (m, n) = (dense.nrows(), dense.ncols());
+    let session = rt.prepare_corr(m, n, dense.data()).unwrap();
+    let c_xla = session.corr(&d.b).unwrap();
+    let mut c_native = vec![0.0; n];
+    d.a.at_r(&d.b, &mut c_native);
+    let scale = c_native.iter().fold(1.0_f64, |a, &x| a.max(x.abs()));
+    let err = max_abs_diff(&c_xla, &c_native);
+    assert!(err < 1e-4 * scale * (m as f64).sqrt(), "corr parity err = {err}");
+}
+
+#[test]
+fn corr_parity_padded_bucket() {
+    // A shape that fits no bucket exactly: padding must not change c.
+    let rt = runtime();
+    let d = datasets::by_name("tiny_dense", 8).unwrap();
+    let Matrix::Dense(dense) = &d.a else { panic!() };
+    // Take an odd sub-shape.
+    let sub = dense.row_slice(0, 100);
+    let session = rt.prepare_corr(100, sub.ncols(), sub.data()).unwrap();
+    let (bm, bn) = session.bucket();
+    assert!(bm >= 100 && bn >= sub.ncols());
+    assert!(bm > 100 || bn > sub.ncols(), "expected a padded bucket");
+    let r = &d.b[..100];
+    let c_xla = session.corr(r).unwrap();
+    let mut c_native = vec![0.0; sub.ncols()];
+    sub.at_r(r, &mut c_native);
+    let err = max_abs_diff(&c_xla, &c_native);
+    assert!(err < 1e-3, "padded corr err = {err}");
+}
+
+#[test]
+fn gstep_parity_with_native_gamma() {
+    let rt = runtime();
+    let d = datasets::by_name("tiny_dense", 9).unwrap();
+    let Matrix::Dense(dense) = &d.a else { panic!() };
+    let (m, n) = (dense.nrows(), dense.ncols());
+
+    // Build a plausible iteration state: select the top column, form u.
+    let mut c = vec![0.0; n];
+    d.a.at_r(&d.b, &mut c);
+    let j0 = (0..n).max_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap()).unwrap();
+    let mut u = vec![0.0; m];
+    d.a.gemv_cols(&[j0], &[c[j0].signum()], &mut u);
+    let ck = c[j0].abs();
+    let h = 1.0 / ck;
+    let mut mask = vec![false; n];
+    mask[j0] = true;
+
+    let session = rt.prepare_gstep(m, n, dense.data()).unwrap();
+    let (av_xla, gam_xla) = session.gstep(&u, &c, &mask, ck, h).unwrap();
+
+    // Native av.
+    let mut av = vec![0.0; n];
+    d.a.at_r(&u, &mut av);
+    assert!(max_abs_diff(&av_xla, &av) < 1e-3, "av parity");
+
+    // Native gamma candidates (same min+ rule the kernel implements).
+    for j in 0..n {
+        if mask[j] {
+            assert!(gam_xla[j].is_infinite(), "masked col {j} must be inf");
+            continue;
+        }
+        let g1 = (ck - c[j]) / (ck * h - av[j]);
+        let g2 = (ck + c[j]) / (ck * h + av[j]);
+        let want = calars::linalg::select::min_positive2(g1, g2)
+            .filter(|g| *g <= (1.0 / h) * (1.0 + 1e-6));
+        match want {
+            Some(w) => {
+                assert!(
+                    gam_xla[j].is_finite() && (gam_xla[j] - w).abs() < 1e-3 * w.max(1.0),
+                    "gamma[{j}] = {} want {w}",
+                    gam_xla[j]
+                );
+            }
+            None => assert!(
+                gam_xla[j].is_infinite() || gam_xla[j] > 1.0 / h,
+                "gamma[{j}] should be invalid, got {}",
+                gam_xla[j]
+            ),
+        }
+    }
+}
+
+#[test]
+fn corr_engine_prefers_xla_for_dense() {
+    let rt = runtime();
+    let d = datasets::by_name("tiny_dense", 10).unwrap();
+    let eng = CorrEngine::new(&d.a, Some(&rt));
+    assert_eq!(eng.backend(), calars::runtime::hybrid::Backend::Xla);
+    let c_xla = eng.corr(&d.b).unwrap();
+    let nat = CorrEngine::native(&d.a);
+    let c_nat = nat.corr(&d.b).unwrap();
+    assert!(max_abs_diff(&c_xla, &c_nat) < 1e-3);
+}
+
+#[test]
+fn corr_engine_native_for_sparse() {
+    let rt = runtime();
+    let d = datasets::by_name("tiny", 11).unwrap();
+    let eng = CorrEngine::new(&d.a, Some(&rt));
+    assert_eq!(eng.backend(), calars::runtime::hybrid::Backend::Native);
+}
+
+#[test]
+fn accelerated_blars_on_xla_engine_matches_reference_quality() {
+    use calars::lars::accelerated::{blars_accelerated, AccelOptions};
+    use calars::lars::path::{ls_coefficients, residual_norm};
+    use calars::lars::serial::{blars_serial, LarsOptions};
+
+    let rt = runtime();
+    let d = datasets::by_name("tiny_dense", 13).unwrap();
+    let engine = CorrEngine::new(&d.a, Some(&rt));
+    assert_eq!(engine.backend(), calars::runtime::hybrid::Backend::Xla);
+
+    let acc = blars_accelerated(
+        &d.a,
+        &d.b,
+        &engine,
+        &AccelOptions { t: 10, b: 2, ..Default::default() },
+    )
+    .unwrap();
+    let reference = blars_serial(&d.a, &d.b, &LarsOptions { t: 10, b: 2, ..Default::default() });
+
+    // f32 vs f64 may reorder near-ties; require equal-quality supports.
+    let refit = |sel: &[usize]| {
+        let coefs = ls_coefficients(&d.a, sel, &d.b).expect("full rank");
+        residual_norm(&d.a, sel, &coefs, &d.b)
+    };
+    let (ra, rr) = (refit(&acc.selected), refit(&reference.selected));
+    assert!(
+        (ra - rr).abs() <= 0.05 * rr.max(1e-6) + 1e-6,
+        "XLA-path support quality {ra} vs reference {rr}"
+    );
+    assert_eq!(acc.selected.len(), reference.selected.len());
+}
+
+#[test]
+fn repeated_execution_is_stable() {
+    // Device-resident A: repeated calls must return identical results.
+    let rt = runtime();
+    let d = datasets::by_name("tiny_dense", 12).unwrap();
+    let Matrix::Dense(dense) = &d.a else { panic!() };
+    let session = rt.prepare_corr(dense.nrows(), dense.ncols(), dense.data()).unwrap();
+    let c1 = session.corr(&d.b).unwrap();
+    let c2 = session.corr(&d.b).unwrap();
+    assert_eq!(c1, c2);
+}
