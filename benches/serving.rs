@@ -1,0 +1,51 @@
+//! Serving-layer benchmark: spin up the HTTP server in-process, fit a
+//! model, then drive closed-loop load at several concurrency/batch
+//! shapes and report throughput + latency percentiles.
+//!
+//! Run: `cargo bench --bench serving`
+
+use calars::serve::{
+    run_load, spawn_server, FitRequest, LoadOptions, Selector, ServeClient, ServeOptions,
+};
+
+fn main() {
+    println!("# serving benchmarks (in-process server, loopback TCP)\n");
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        batch_window_us: 200,
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    println!("server on {addr}");
+
+    let mut client = ServeClient::connect(&addr).expect("connect");
+    let fit = FitRequest { dataset: "tiny".into(), t: 16, ..Default::default() };
+    let model = client.fit(&fit, true).expect("fit");
+    let dim = client.model_dim(model).expect("dim");
+    println!("model {model}: dataset=tiny t=16 n={dim}\n");
+
+    for (concurrency, rows, requests) in
+        [(1usize, 1usize, 2000usize), (4, 1, 4000), (4, 16, 2000), (16, 16, 2000)]
+    {
+        println!("## concurrency={concurrency} rows/request={rows} requests={requests}");
+        let report = run_load(
+            &addr,
+            &LoadOptions {
+                requests,
+                concurrency,
+                rows,
+                model,
+                selector: Selector::Step(16),
+                dim,
+                seed: 7,
+            },
+        )
+        .expect("load run");
+        println!("{}\n", report.render());
+    }
+
+    let (_, stats) = client.request("GET", "/stats", "").expect("stats");
+    println!("## final /stats\n{stats}");
+    server.stop();
+}

@@ -3,7 +3,7 @@
 //! environment is offline, no clap).
 
 use crate::cluster::{ExecMode, HwParams};
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 /// Which algorithm a run uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -13,8 +13,19 @@ pub enum Algo {
     Tblars,
 }
 
+impl Algo {
+    /// Canonical lower-case name (inverse of `FromStr`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Lars => "lars",
+            Algo::Blars => "blars",
+            Algo::Tblars => "tblars",
+        }
+    }
+}
+
 impl std::str::FromStr for Algo {
-    type Err = anyhow::Error;
+    type Err = crate::error::Error;
     fn from_str(s: &str) -> Result<Self> {
         match s {
             "lars" => Ok(Algo::Lars),
@@ -100,7 +111,8 @@ pub struct Args {
 }
 
 /// Options that never take a value.
-pub const BOOL_FLAGS: [&str; 4] = ["quick", "threads", "force", "verbose"];
+pub const BOOL_FLAGS: [&str; 7] =
+    ["quick", "threads", "force", "verbose", "oneshot", "wait", "shutdown"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Self {
@@ -146,8 +158,71 @@ impl Args {
     {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse::<T>().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+            Some(v) => v.parse::<T>().map_err(|e| crate::anyhow!("--{name}: {e}")),
         }
+    }
+}
+
+/// `calars serve` configuration parsed from argv (the CLI face of
+/// [`crate::serve::ServeOptions`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Bind address, `host:port`. `--port N` overrides the port part;
+    /// port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Fit worker threads (`--fit-workers`).
+    pub fit_workers: usize,
+    /// Batch accumulation window in µs (`--batch-window-us`).
+    pub batch_window_us: u64,
+    /// Registry capacity (`--capacity`).
+    pub registry_capacity: usize,
+    /// Coefficient cache capacity (`--cache`).
+    pub cache_capacity: usize,
+    /// `--oneshot`: honor POST /shutdown (scripted smoke runs).
+    pub oneshot: bool,
+    /// `--persist DIR`: load/save the registry from/to DIR.
+    pub persist_dir: Option<String>,
+    /// `--prefit DATASET`: fit this dataset before accepting traffic.
+    pub prefit: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        // Defer to the serving layer's defaults so the CLI and the
+        // library can never drift apart.
+        let d = crate::serve::ServeOptions::default();
+        ServeConfig {
+            addr: d.addr,
+            fit_workers: d.fit_workers,
+            batch_window_us: d.batch_window_us,
+            registry_capacity: d.registry_capacity,
+            cache_capacity: d.cache_capacity,
+            oneshot: false,
+            persist_dir: None,
+            prefit: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let d = ServeConfig::default();
+        let mut addr = args.get("addr").unwrap_or(&d.addr).to_string();
+        if let Some(port) = args.get("port") {
+            let port: u16 = port.parse().map_err(|e| crate::anyhow!("--port: {e}"))?;
+            let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+            addr = format!("{host}:{port}");
+        }
+        Ok(ServeConfig {
+            addr,
+            fit_workers: args.get_parse("fit-workers", d.fit_workers)?,
+            batch_window_us: args.get_parse("batch-window-us", d.batch_window_us)?,
+            registry_capacity: args.get_parse("capacity", d.registry_capacity)?,
+            cache_capacity: args.get_parse("cache", d.cache_capacity)?,
+            oneshot: args.flag("oneshot"),
+            persist_dir: args.get("persist").map(String::from),
+            prefit: args.get("prefit").map(String::from),
+        })
     }
 }
 
@@ -194,5 +269,31 @@ mod tests {
     fn last_option_wins() {
         let a = Args::parse(&argv("x --t 1 --t 2"));
         assert_eq!(a.get("t"), Some("2"));
+    }
+
+    #[test]
+    fn algo_name_roundtrips() {
+        for algo in [Algo::Lars, Algo::Blars, Algo::Tblars] {
+            assert_eq!(algo.name().parse::<Algo>().unwrap(), algo);
+        }
+    }
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let d = ServeConfig::from_args(&Args::parse(&argv("serve"))).unwrap();
+        assert_eq!(d, ServeConfig::default());
+        let c = ServeConfig::from_args(&Args::parse(&argv(
+            "serve --port 9000 --fit-workers 4 --capacity 8 --oneshot --prefit tiny",
+        )))
+        .unwrap();
+        assert_eq!(c.addr, "127.0.0.1:9000");
+        assert_eq!(c.fit_workers, 4);
+        assert_eq!(c.registry_capacity, 8);
+        assert!(c.oneshot);
+        assert_eq!(c.prefit.as_deref(), Some("tiny"));
+        let c = ServeConfig::from_args(&Args::parse(&argv("serve --addr 0.0.0.0:80 --port 81")))
+            .unwrap();
+        assert_eq!(c.addr, "0.0.0.0:81", "--port overrides the addr's port");
+        assert!(ServeConfig::from_args(&Args::parse(&argv("serve --port zzz"))).is_err());
     }
 }

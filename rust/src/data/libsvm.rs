@@ -8,7 +8,7 @@
 
 use super::datasets::Dataset;
 use crate::linalg::{CscMatrix, Matrix};
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 use std::io::BufRead;
 
 /// Parse LIBSVM text from a reader. `n_hint` pre-sizes the feature

@@ -1,0 +1,199 @@
+//! Crate-local error handling (the offline environment has no `anyhow`;
+//! this module is the drop-in replacement the rest of the crate builds
+//! against).
+//!
+//! Provides the same working vocabulary: an opaque [`Error`] carrying a
+//! context chain, a [`Result`] alias defaulting the error type, the
+//! [`anyhow!`]/[`bail!`] constructor macros, and a [`Context`] extension
+//! trait for `Result`/`Option`. Display shows the outermost context;
+//! the alternate form (`{:#}`) renders the whole chain separated by
+//! `": "`, matching what `calars`'s top-level error printer expects.
+
+use std::fmt;
+
+/// An opaque error: a chain of human-readable messages, outermost first.
+///
+/// Deliberately does **not** implement `std::error::Error`, so the
+/// blanket `From<E: std::error::Error>` conversion below stays coherent
+/// (the same trade anyhow makes).
+#[derive(Clone)]
+pub struct Error {
+    /// `chain[0]` is the outermost (most recently attached) context.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The outermost message.
+    pub fn root(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                writeln!(f, "    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Crate-wide result type; the error parameter defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+/// Attach context to fallible values (`Result`/`Option`), converting the
+/// error into [`Error`] in the process.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e = Error::msg("inner").context("middle").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+    }
+
+    #[test]
+    fn from_std_error_keeps_source_chain() {
+        let e: Error = io_err().into();
+        assert_eq!(e.root(), "no such file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.root(), "missing field");
+
+        let ok: Option<u32> = Some(7);
+        assert_eq!(ok.context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn fails(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative input {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(3).unwrap(), 3);
+        let e = fails(-2).unwrap_err();
+        assert_eq!(e.root(), "negative input -2");
+        let e2 = anyhow!("code {}", 42);
+        assert_eq!(e2.root(), "code 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            let v: i32 = s.parse()?;
+            Ok(v)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root cause").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("root cause"));
+    }
+}

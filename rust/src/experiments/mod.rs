@@ -19,7 +19,7 @@ pub mod table2;
 pub mod table3;
 
 use crate::config::SweepConfig;
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 /// All experiment ids in paper order.
 pub const ALL_IDS: [&str; 10] =

@@ -16,7 +16,7 @@ use super::{LarsOutput, StopReason};
 use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
 use crate::linalg::{dot, norm2, Cholesky, Matrix};
 use crate::runtime::CorrEngine;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Options (mirrors [`super::serial::LarsOptions`]).
 #[derive(Clone, Debug)]

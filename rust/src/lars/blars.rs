@@ -11,6 +11,7 @@
 //! (the paper: "for bLARS, how rows are partitioned among processors
 //! does not affect the columns selected") — enforced by tests.
 
+use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
 use crate::cluster::{Phase, SimCluster};
 use crate::data::partition::row_ranges;
@@ -45,6 +46,21 @@ struct RankState {
     y: Vec<f64>,
     r: Vec<f64>,
     u: Vec<f64>,
+}
+
+/// Parallel bLARS plus a [`PathSnapshot`] of the fitted path — the
+/// serving hook used by [`crate::serve`]'s fit queue. The snapshot is
+/// computed once, after the parallel fit, from the selection order (it
+/// is not part of the simulated communication cost).
+pub fn blars_with_snapshot(
+    a: &Matrix,
+    b_vec: &[f64],
+    opts: &BlarsOptions,
+    cluster: &mut SimCluster,
+) -> (LarsOutput, PathSnapshot) {
+    let out = blars(a, b_vec, opts, cluster);
+    let snap = PathSnapshot::from_fit(a, b_vec, &out.selected);
+    (out, snap)
 }
 
 /// Run parallel bLARS on `cluster`. The matrix is row-sharded here

@@ -6,7 +6,8 @@
 //! the paper's §2 note that after k iterations one solves the smaller
 //! ordinary regression problem on the selected columns.
 
-use crate::linalg::{Cholesky, Matrix};
+use crate::lars::lasso_lars::LassoPath;
+use crate::linalg::{norm2, norm_inf, Cholesky, Matrix};
 
 /// Least-squares coefficients of `b ≈ A[:, support] x`:
 /// `x = (A_Sᵀ A_S)⁻¹ A_Sᵀ b`.
@@ -55,6 +56,130 @@ pub fn solution_path(
     out
 }
 
+// ── Path snapshots (the serving layer's storage unit) ───────────────
+//
+// A fit is consumed as a *sequence of models* (the paper's abstract:
+// LARS "generates a sequence of linear models"); the serving subsystem
+// stores that sequence once and answers model-selection queries against
+// it forever after. `PathSnapshot` is the compact, self-contained form:
+// per step the active set, its LS coefficients, the regularization
+// level λ (max absolute residual correlation) and the residual norm.
+
+/// One stored breakpoint of a fitted path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PathStep {
+    /// Regularization level: ‖Aᵀ(b − Ax)‖∞ at this step's solution.
+    pub lambda: f64,
+    /// Active columns, in selection order.
+    pub support: Vec<usize>,
+    /// Coefficients aligned with `support`.
+    pub coefs: Vec<f64>,
+    /// ‖b − Ax‖₂ at this step.
+    pub residual_norm: f64,
+}
+
+/// A compact snapshot of an entire fitted regularization path.
+///
+/// `steps[0]` is always the empty model at λ_max = ‖Aᵀb‖∞; `lambda` is
+/// non-increasing along `steps`, which makes piecewise-linear
+/// interpolation in λ well defined (between breakpoints the LASSO path
+/// is exactly linear in λ; for plain LARS/bLARS selection prefixes it
+/// is the standard linear-in-λ approximation between stored models).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PathSnapshot {
+    /// Feature dimension (query vectors must have this length).
+    pub n: usize,
+    /// Breakpoints, λ non-increasing.
+    pub steps: Vec<PathStep>,
+}
+
+impl PathSnapshot {
+    /// Snapshot a LARS-family fit: LS coefficients for every prefix of
+    /// the selection order (the paper's §2 note), λ from the residual
+    /// correlations. Prefixes whose Gram block is numerically rank
+    /// deficient are skipped.
+    pub fn from_fit(a: &Matrix, b: &[f64], selected: &[usize]) -> Self {
+        let m = a.nrows();
+        let n = a.ncols();
+        assert_eq!(b.len(), m);
+        let mut c = vec![0.0; n];
+        a.at_r(b, &mut c);
+        let mut prev_lambda = norm_inf(&c);
+        let mut steps = vec![PathStep {
+            lambda: prev_lambda,
+            support: Vec::new(),
+            coefs: Vec::new(),
+            residual_norm: norm2(b),
+        }];
+        let mut ax = vec![0.0; m];
+        for k in 1..=selected.len() {
+            let support = selected[..k].to_vec();
+            let Some(coefs) = ls_coefficients(a, &support, b) else { continue };
+            a.gemv_cols(&support, &coefs, &mut ax);
+            let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, yi)| bi - yi).collect();
+            a.at_r(&r, &mut c);
+            // Enforce monotonicity so λ-interpolation stays well defined
+            // even when a prefix LS solution is slightly out of order.
+            let lambda = norm_inf(&c).min(prev_lambda);
+            prev_lambda = lambda;
+            steps.push(PathStep { lambda, support, coefs, residual_norm: norm2(&r) });
+        }
+        PathSnapshot { n, steps }
+    }
+
+    /// Snapshot an exact LASSO path (λ breakpoints are the path's own).
+    pub fn from_lasso(n: usize, path: &LassoPath) -> Self {
+        let steps = path
+            .breakpoints
+            .iter()
+            .map(|bp| PathStep {
+                lambda: bp.lambda,
+                support: bp.support.clone(),
+                coefs: bp.support.iter().map(|&j| bp.x[j]).collect(),
+                residual_norm: bp.residual_norm,
+            })
+            .collect();
+        PathSnapshot { n, steps }
+    }
+
+    /// Number of stored breakpoints (including the empty step 0).
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Largest model size stored (columns active at the final step).
+    pub fn max_support(&self) -> usize {
+        self.steps.iter().map(|s| s.support.len()).max().unwrap_or(0)
+    }
+
+    /// λ range covered: `(lambda_max, lambda_min)`.
+    pub fn lambda_range(&self) -> (f64, f64) {
+        let hi = self.steps.first().map_or(0.0, |s| s.lambda);
+        let lo = self.steps.last().map_or(0.0, |s| s.lambda);
+        (hi, lo)
+    }
+
+    /// Dense length-`n` coefficient vector at breakpoint `step`.
+    pub fn dense_coefs(&self, step: usize) -> Option<Vec<f64>> {
+        let s = self.steps.get(step)?;
+        Some(densify(self.n, &s.support, &s.coefs))
+    }
+
+    /// Approximate in-memory footprint in bytes (registry accounting).
+    pub fn approx_bytes(&self) -> usize {
+        let per_step: usize = self
+            .steps
+            .iter()
+            .map(|s| 16 + s.support.len() * 8 + s.coefs.len() * 8)
+            .sum();
+        std::mem::size_of::<Self>() + per_step
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +219,58 @@ mod tests {
     fn densify_places_coefs() {
         let x = densify(5, &[1, 3], &[2.0, -1.0]);
         assert_eq!(x, vec![0.0, 2.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn snapshot_covers_every_prefix_and_lambda_decreases() {
+        let s = generate(
+            &SyntheticSpec { m: 80, n: 50, density: 1.0, col_skew: 0.0, k_true: 8, noise: 0.05 },
+            21,
+        );
+        let out = lars(&s.a, &s.b, &LarsOptions { t: 10, ..Default::default() });
+        let snap = PathSnapshot::from_fit(&s.a, &s.b, &out.selected);
+        assert_eq!(snap.len(), 11); // empty step + 10 prefixes
+        assert_eq!(snap.n, 50);
+        assert!(snap.steps[0].support.is_empty());
+        for (k, st) in snap.steps.iter().enumerate() {
+            assert_eq!(st.support.len(), k);
+            assert_eq!(st.support, out.selected[..k]);
+        }
+        for w in snap.steps.windows(2) {
+            assert!(w[1].lambda <= w[0].lambda);
+            assert!(w[1].residual_norm <= w[0].residual_norm + 1e-9);
+        }
+    }
+
+    #[test]
+    fn snapshot_coefs_match_direct_ls() {
+        let s = generate(
+            &SyntheticSpec { m: 60, n: 30, density: 1.0, col_skew: 0.0, k_true: 5, noise: 0.0 },
+            22,
+        );
+        let out = lars(&s.a, &s.b, &LarsOptions { t: 6, ..Default::default() });
+        let snap = PathSnapshot::from_fit(&s.a, &s.b, &out.selected);
+        for k in 1..=6usize {
+            let direct = ls_coefficients(&s.a, &out.selected[..k], &s.b).unwrap();
+            assert_eq!(snap.steps[k].coefs, direct, "prefix {k} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn snapshot_from_lasso_preserves_breakpoints() {
+        use crate::lars::lasso_lars::lasso_path;
+        let s = generate(
+            &SyntheticSpec { m: 80, n: 40, density: 1.0, col_skew: 0.0, k_true: 6, noise: 0.05 },
+            23,
+        );
+        let lp = lasso_path(&s.a, &s.b, 10, 1e-6);
+        let snap = PathSnapshot::from_lasso(s.a.ncols(), &lp);
+        assert_eq!(snap.len(), lp.breakpoints.len());
+        for (st, bp) in snap.steps.iter().zip(&lp.breakpoints) {
+            assert_eq!(st.lambda, bp.lambda);
+            let dense = densify(snap.n, &st.support, &st.coefs);
+            assert_eq!(dense, bp.x, "densified snapshot must equal the path's x");
+        }
     }
 
     #[test]

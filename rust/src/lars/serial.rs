@@ -10,6 +10,7 @@
 //! The paper's quality experiments (Figures 3–5) treat this
 //! implementation's selections as ground truth.
 
+use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
 use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
 use crate::linalg::{dot, norm2, Cholesky, Matrix};
@@ -35,6 +36,29 @@ impl Default for LarsOptions {
 pub fn lars(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput {
     let o = LarsOptions { b: 1, ..opts.clone() };
     blars_serial(a, b_vec, &o)
+}
+
+/// Plain LARS plus a [`PathSnapshot`] of the fitted path — the serving
+/// hook: the snapshot is what [`crate::serve::ModelRegistry`] stores.
+pub fn lars_with_snapshot(
+    a: &Matrix,
+    b_vec: &[f64],
+    opts: &LarsOptions,
+) -> (LarsOutput, PathSnapshot) {
+    let out = lars(a, b_vec, opts);
+    let snap = PathSnapshot::from_fit(a, b_vec, &out.selected);
+    (out, snap)
+}
+
+/// Serial bLARS plus a [`PathSnapshot`] of the fitted path.
+pub fn blars_serial_with_snapshot(
+    a: &Matrix,
+    b_vec: &[f64],
+    opts: &LarsOptions,
+) -> (LarsOutput, PathSnapshot) {
+    let out = blars_serial(a, b_vec, opts);
+    let snap = PathSnapshot::from_fit(a, b_vec, &out.selected);
+    (out, snap)
 }
 
 /// Serial bLARS (the mathematics of Algorithm 2 on one rank).

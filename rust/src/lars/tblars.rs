@@ -14,6 +14,7 @@
 //! each level exchanges `b·m` words of column data.
 
 use super::mlars::{mlars, MlarsOutput};
+use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
 use crate::cluster::topology::TournamentTree;
 use crate::cluster::{Phase, SimCluster, Tracer};
@@ -34,6 +35,20 @@ impl Default for TblarsOptions {
     fn default() -> Self {
         TblarsOptions { t: 10, b: 1, tol: 1e-12 }
     }
+}
+
+/// T-bLARS plus a [`PathSnapshot`] of the fitted path — the serving
+/// hook used by [`crate::serve`]'s fit queue.
+pub fn tblars_with_snapshot(
+    a: &Matrix,
+    b_vec: &[f64],
+    partition: &[Vec<usize>],
+    opts: &TblarsOptions,
+    cluster: &mut SimCluster,
+) -> (LarsOutput, PathSnapshot) {
+    let out = tblars(a, b_vec, partition, opts, cluster);
+    let snap = PathSnapshot::from_fit(a, b_vec, &out.selected);
+    (out, snap)
 }
 
 /// Run T-bLARS with a given column `partition` (one column-index list

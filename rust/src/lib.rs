@@ -19,7 +19,17 @@
 //!   AOT-lowered to HLO text artifacts.
 //! * **Runtime bridge** ([`runtime`]): loads the artifacts via the PJRT
 //!   CPU client and executes them from the Rust request path; Python is
-//!   never on the request path.
+//!   never on the request path. Gated behind the off-by-default `pjrt`
+//!   cargo feature — without it every call site degrades to the native
+//!   f64 kernels.
+//! * **L4 — serving** ([`serve`]): the production front end. A
+//!   versioned [`serve::ModelRegistry`] snapshots fitted LARS/bLARS/
+//!   T-bLARS regularization paths (in memory and on disk), a batched
+//!   [`serve::PredictionEngine`] evaluates any stored path at an
+//!   arbitrary step or λ, a [`serve::FitQueue`] worker pool runs fit
+//!   jobs asynchronously, and a zero-dependency HTTP/1.1 server
+//!   (`calars serve`) exposes `/fit`, `/predict`, `/models`, `/stats`.
+//!   `calars bench-serve` is the closed-loop load generator.
 //!
 //! ## Quickstart
 //!
@@ -31,11 +41,31 @@
 //! let out = lars(&ds.a, &ds.b, &LarsOptions { t: 20, ..Default::default() });
 //! println!("selected columns: {:?}", out.selected);
 //! ```
+//!
+//! ## Serving quickstart
+//!
+//! ```no_run
+//! use calars::data::datasets;
+//! use calars::lars::serial::lars_with_snapshot;
+//! use calars::lars::serial::LarsOptions;
+//! use calars::serve::{ModelMeta, ModelRegistry, PredictionEngine, Query, Selector};
+//! use std::sync::Arc;
+//!
+//! let ds = datasets::tiny(42);
+//! let (_, snap) = lars_with_snapshot(&ds.a, &ds.b, &LarsOptions { t: 8, ..Default::default() });
+//! let registry = Arc::new(ModelRegistry::new(16));
+//! let id = registry.insert(ModelMeta::named("tiny-lars"), snap);
+//! let engine = PredictionEngine::new(registry, 64);
+//! let x = vec![0.0; ds.a.ncols()];
+//! let yhat = engine.predict(&Query { model: id, selector: Selector::Step(4), x }).unwrap();
+//! println!("prediction: {yhat}");
+//! ```
 
 pub mod baselines;
 pub mod cluster;
 pub mod config;
 pub mod data;
+pub mod error;
 pub mod experiments;
 pub mod lars;
 pub mod linalg;
@@ -44,9 +74,10 @@ pub mod proptest_lite;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = crate::error::Result<T>;
 
 /// Library version (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

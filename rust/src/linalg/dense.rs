@@ -36,6 +36,19 @@ impl DenseMatrix {
         DenseMatrix { m, n, data }
     }
 
+    /// Stack equal-length rows into a matrix — the serving batcher's
+    /// GEMV input (one row per concurrent query against a model).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        assert!(!rows.is_empty(), "from_rows needs at least one row");
+        let n = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * n);
+        for row in rows {
+            assert_eq!(row.len(), n, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        DenseMatrix { m: rows.len(), n, data }
+    }
+
     #[inline]
     pub fn nrows(&self) -> usize {
         self.m
@@ -212,6 +225,23 @@ mod tests {
     fn small() -> DenseMatrix {
         // 3x2: [[1,2],[3,4],[5,6]]
         DenseMatrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.])
+    }
+
+    #[test]
+    fn from_rows_matches_from_vec_and_gemv_is_per_row_dot() {
+        let r0 = [1.0, 2.0];
+        let r1 = [3.0, 4.0];
+        let r2 = [5.0, 6.0];
+        let a = DenseMatrix::from_rows(&[&r0, &r1, &r2]);
+        assert_eq!(a, small());
+        // Batched prediction invariant: gemv row i == dot(row i, x),
+        // bit for bit (the serving layer's exactness contract).
+        let x = [0.25, -1.5];
+        let mut out = vec![0.0; 3];
+        a.gemv(&x, &mut out);
+        for (i, row) in [&r0[..], &r1[..], &r2[..]].iter().enumerate() {
+            assert_eq!(out[i], dot(row, &x));
+        }
     }
 
     #[test]

@@ -2,22 +2,27 @@
 //! framework.
 //!
 //! ```text
-//! calars run     --algo blars --dataset sector --t 60 --b 4 --p 16
-//! calars exp     <table1|table2|table3|fig2..fig8|all> [--quick]
-//! calars suite   [--quick]          # every table+figure, in order
+//! calars run         --algo blars --dataset sector --t 60 --b 4 --p 16
+//! calars exp         <table1|table2|table3|fig2..fig8|all> [--quick]
+//! calars suite       [--quick]      # every table+figure, in order
+//! calars serve       [--port N] [--prefit tiny] [--oneshot]
+//! calars bench-serve [--addr H:P] [--requests N] [--concurrency C]
 //! calars info                       # datasets + runtime status
 //! ```
 
-use anyhow::{bail, Result};
 use calars::cluster::{ExecMode, HwParams, SimCluster};
-use calars::config::{Algo, Args, SweepConfig};
+use calars::config::{Algo, Args, ServeConfig, SweepConfig};
 use calars::data::{datasets, partition};
+use calars::error::{bail, Result};
 use calars::experiments;
 use calars::lars::blars::{blars, BlarsOptions};
 use calars::lars::serial::{lars, LarsOptions};
 use calars::lars::tblars::{tblars, TblarsOptions};
 use calars::metrics::{fmt_count, fmt_secs};
 use calars::runtime::XlaRuntime;
+use calars::serve::{
+    spawn_server, FitRequest, LoadOptions, Selector, ServeClient, ServeOptions,
+};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -33,6 +38,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("run") => cmd_run(args),
         Some("exp") => cmd_exp(args),
         Some("suite") => cmd_suite(args),
+        Some("serve") => cmd_serve(args),
+        Some("bench-serve") => cmd_bench_serve(args),
         Some("info") => cmd_info(),
         Some(other) => bail!("unknown command '{other}'"),
         None => {
@@ -49,10 +56,84 @@ USAGE:
   calars run   --algo <lars|blars|tblars> --dataset <name> [--t N] [--b N] [--p N] [--seed N] [--threads]
   calars exp   <table1|table2|table3|fig2|fig3|fig4|fig5|fig6|fig7|fig8> [--quick] [--t N] [--seed N]
   calars suite [--quick]
+  calars serve [--addr H:P] [--port N] [--fit-workers N] [--batch-window-us N]
+               [--capacity N] [--cache N] [--persist DIR] [--prefit DATASET] [--oneshot]
+  calars bench-serve [--addr H:P] [--requests N] [--concurrency C] [--rows R]
+               [--dataset NAME] [--algo A] [--t N] [--b N] [--step K | --lambda L]
+               [--seed N] [--shutdown]
   calars info
+
+serve runs the L4 model-serving subsystem: POST /fit, POST /predict,
+GET /models, GET /stats (see DESIGN.md). --oneshot additionally honors
+POST /shutdown for scripted smoke runs. bench-serve is the closed-loop
+load generator; without --addr it spins up an in-process server first.
 
 Datasets: sector, year, e2006_log1p, e2006_tfidf (scaled synthetic
 substitutes; see DESIGN.md), plus tiny / tiny_dense for smoke runs."
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts: ServeOptions = ServeConfig::from_args(args)?.into();
+    calars::serve::serve(&opts)
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let requests = args.get_parse::<usize>("requests", 1000)?;
+    let concurrency = args.get_parse::<usize>("concurrency", 4)?;
+    let rows = args.get_parse::<usize>("rows", 4)?;
+    let t = args.get_parse::<usize>("t", 16)?;
+    let seed = args.get_parse::<u64>("seed", 42)?;
+
+    // Target: a running instance via --addr, or a self-contained
+    // in-process server on an ephemeral port.
+    let (addr, handle) = match args.get("addr") {
+        Some(a) => (a.to_string(), None),
+        None => {
+            let opts = ServeOptions { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+            let handle = spawn_server(&opts)?;
+            let addr = handle.addr_string();
+            println!("spawned in-process server on {addr}");
+            (addr, Some(handle))
+        }
+    };
+
+    // Ensure the target model exists (warm-reused if already fitted).
+    let fit = FitRequest {
+        dataset: args.get("dataset").unwrap_or("tiny").to_string(),
+        algo: args.get("algo").unwrap_or("lars").to_string(),
+        t,
+        b: args.get_parse::<usize>("b", 1)?,
+        p: args.get_parse::<usize>("p", 4)?,
+        seed,
+        ..Default::default()
+    };
+    let mut client = ServeClient::connect(&addr)?;
+    let model = client.fit(&fit, true)?;
+    let dim = client.model_dim(model)?;
+    println!(
+        "target model {model} ({} t={t}, n={dim}) on {addr}",
+        fit.dataset
+    );
+
+    let selector = match args.get("lambda") {
+        Some(l) => Selector::Lambda(l.parse().map_err(|e| calars::anyhow!("--lambda: {e}"))?),
+        None => Selector::Step(args.get_parse::<usize>("step", t)?),
+    };
+    let load = LoadOptions { requests, concurrency, rows, model, selector, dim, seed };
+    println!(
+        "load: {requests} requests x {rows} rows, {concurrency} connections, {:?}",
+        selector
+    );
+    let report = calars::serve::run_load(&addr, &load)?;
+    println!("{}", report.render());
+
+    if let Some(handle) = handle {
+        handle.stop();
+    } else if args.flag("shutdown") {
+        client.shutdown()?;
+        println!("server on {addr} asked to shut down");
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -65,7 +146,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mode = if args.flag("threads") { ExecMode::Threaded } else { ExecMode::Sequential };
 
     let ds = datasets::by_name(name, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+        .ok_or_else(|| calars::anyhow!("unknown dataset '{name}'"))?;
     println!(
         "dataset {} — m={} n={} nnz/mn={:.4}",
         ds.name,
@@ -143,7 +224,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
     let id = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow::anyhow!("usage: calars exp <id> [--quick]"))?;
+        .ok_or_else(|| calars::anyhow!("usage: calars exp <id> [--quick]"))?;
     let sweep = sweep_from(args)?;
     let quick = args.flag("quick");
     if id == "all" {

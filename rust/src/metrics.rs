@@ -1,6 +1,7 @@
 //! Wallclock timing helpers for the benchmark harness (criterion is
 //! unavailable offline; this is the in-repo replacement: warmup +
-//! repeated measurement + robust summary).
+//! repeated measurement + robust summary), plus the latency-percentile
+//! summaries the serving load generator reports.
 
 use std::time::Instant;
 
@@ -25,6 +26,48 @@ impl TimingSummary {
             mean: samples.iter().sum::<f64>() / n as f64,
             worst: samples[n - 1],
             iters: n,
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`q` in
+/// `[0, 1]`); 0 for empty input.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Latency summary for a set of request timings (seconds). All zeros
+/// for an empty sample set (e.g. a load run where every request
+/// errored).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        LatencyStats {
+            count: n,
+            mean: samples.iter().sum::<f64>() / n as f64,
+            p50: percentile(&samples, 0.50),
+            p90: percentile(&samples, 0.90),
+            p99: percentile(&samples, 0.99),
+            max: samples[n - 1],
         }
     }
 }
@@ -100,6 +143,27 @@ mod tests {
         assert_eq!(count, 7);
         assert_eq!(s.iters, 5);
         assert!(s.best >= 0.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.5), 51.0); // round(0.5 * 99) = 50 → v[50]
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn latency_stats_summary() {
+        let s = LatencyStats::from_samples(vec![0.3, 0.1, 0.2, 0.4, 10.0]);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.p50, 0.3);
+        assert_eq!(s.max, 10.0);
+        assert!(s.p99 >= s.p90 && s.p90 >= s.p50);
+        let empty = LatencyStats::from_samples(vec![]);
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.max, 0.0);
     }
 
     #[test]

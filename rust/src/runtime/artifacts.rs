@@ -7,7 +7,7 @@
 //! set has no JSON parser and hand-rolling one for a fixed schema is
 //! worse than a fixed-column format.)
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

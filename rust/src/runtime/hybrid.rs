@@ -9,7 +9,7 @@
 
 use super::pjrt::{CorrSession, XlaRuntime};
 use crate::linalg::Matrix;
-use anyhow::Result;
+use crate::error::Result;
 
 /// Which backend a [`CorrEngine`] ended up on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -4,8 +4,13 @@
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`);
 //! after that the Rust binary is self-contained: it reads
 //! `artifacts/manifest.tsv`, compiles each HLO text module once with
-//! [`xla::PjRtClient`], and dispatches kernel calls by padding operands
+//! the PJRT CPU client, and dispatches kernel calls by padding operands
 //! to the nearest compiled bucket shape.
+//!
+//! The PJRT client itself (the `xla` crate) is gated behind the
+//! off-by-default `pjrt` cargo feature so offline builds need no
+//! external dependencies; without it [`XlaRuntime::load`] fails cleanly
+//! and every consumer falls back to the native f64 kernels.
 
 pub mod artifacts;
 pub mod hybrid;

@@ -6,220 +6,334 @@
 //! rejects; the text parser reassigns ids and round-trips cleanly. The
 //! AOT side lowers with `return_tuple=True`, so every result is a tuple
 //! (unwrapped here with `to_tuple1`/`to_tuple2`).
+//!
+//! The whole module is gated behind the off-by-default `pjrt` cargo
+//! feature: the `xla` crate (xla_extension bindings) is not available
+//! in offline builds. Without the feature the same public types exist
+//! as stubs whose constructors fail cleanly, so every call site — the
+//! hybrid [`super::hybrid::CorrEngine`], `calars info`, the benches —
+//! compiles unchanged and degrades to the native f64 kernels. Enabling
+//! the feature requires adding the `xla` dependency to `rust/Cargo.toml`
+//! (see DESIGN.md §7).
 
-use super::artifacts::{ArtifactManifest, KernelKey, KernelOp};
-use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::rc::Rc;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::error::{anyhow, Context, Result};
+    use crate::runtime::artifacts::{ArtifactManifest, KernelKey, KernelOp};
+    use std::cell::RefCell;
+    use std::collections::BTreeMap;
+    use std::path::Path;
+    use std::rc::Rc;
 
-/// The XLA runtime: PJRT CPU client + lazily compiled executables.
-///
-/// Not `Send` (PJRT handles are `Rc`-shared): construct one per
-/// coordinator thread. The request path never touches Python.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    manifest: ArtifactManifest,
-    cache: RefCell<BTreeMap<KernelKey, Rc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl XlaRuntime {
-    /// Load the manifest from `dir` and start a PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest = ArtifactManifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(XlaRuntime { client, manifest, cache: RefCell::new(BTreeMap::new()) })
+    /// The XLA runtime: PJRT CPU client + lazily compiled executables.
+    ///
+    /// Not `Send` (PJRT handles are `Rc`-shared): construct one per
+    /// coordinator thread. The request path never touches Python.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        manifest: ArtifactManifest,
+        cache: RefCell<BTreeMap<KernelKey, Rc<xla::PjRtLoadedExecutable>>>,
     }
 
-    /// The manifest in use.
-    pub fn manifest(&self) -> &ArtifactManifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (for logs).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch the cached) executable for a bucket.
-    fn executable(&self, key: KernelKey) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(&key) {
-            return Ok(exe.clone());
+    impl XlaRuntime {
+        /// Load the manifest from `dir` and start a PJRT CPU client.
+        pub fn load(dir: &Path) -> Result<Self> {
+            let manifest = ArtifactManifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(XlaRuntime { client, manifest, cache: RefCell::new(BTreeMap::new()) })
         }
-        let path = self
-            .manifest
-            .path(&key)
-            .ok_or_else(|| anyhow!("no artifact for {:?} {}x{}", key.op, key.m, key.n))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp).context("XLA compile")?);
-        self.cache.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
-    }
 
-    /// Prepare a correlation kernel session for an `m × n` dense matrix
-    /// given in row-major f64: pads to the nearest bucket, uploads A to
-    /// the device **once**, returns a session executing `c = Aᵀr`.
-    pub fn prepare_corr(&self, m: usize, n: usize, a_row_major: &[f64]) -> Result<CorrSession<'_>> {
-        assert_eq!(a_row_major.len(), m * n);
-        let bucket = self
-            .manifest
-            .bucket_for(KernelOp::Corr, m, n)
-            .ok_or_else(|| anyhow!("no corr bucket fits {m}x{n}"))?;
-        let exe = self.executable(bucket)?;
-        // Zero-pad into the bucket (padding rows/cols contribute 0 to Aᵀr).
-        let mut a32 = vec![0.0f32; bucket.m * bucket.n];
-        for i in 0..m {
-            let src = &a_row_major[i * n..(i + 1) * n];
-            let dst = &mut a32[i * bucket.n..i * bucket.n + n];
-            for (d, s) in dst.iter_mut().zip(src) {
-                *d = *s as f32;
+        /// The manifest in use.
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name (for logs).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch the cached) executable for a bucket.
+        fn executable(&self, key: KernelKey) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(exe) = self.cache.borrow().get(&key) {
+                return Ok(exe.clone());
             }
+            let path = self
+                .manifest
+                .path(&key)
+                .ok_or_else(|| anyhow!("no artifact for {:?} {}x{}", key.op, key.m, key.n))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Rc::new(self.client.compile(&comp).context("XLA compile")?);
+            self.cache.borrow_mut().insert(key, exe.clone());
+            Ok(exe)
         }
-        let a_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(&a32, &[bucket.m, bucket.n], None)
-            .context("upload A")?;
-        Ok(CorrSession { rt: self, exe, a_buf, bucket, m, n })
-    }
-}
 
-impl XlaRuntime {
-    /// Prepare the fused gstep kernel (Aᵀu + γ candidates) for an
-    /// `m × n` dense matrix: pads/uploads A once, returns a session.
-    pub fn prepare_gstep(
-        &self,
+        /// Prepare a correlation kernel session for an `m × n` dense matrix
+        /// given in row-major f64: pads to the nearest bucket, uploads A to
+        /// the device **once**, returns a session executing `c = Aᵀr`.
+        pub fn prepare_corr(
+            &self,
+            m: usize,
+            n: usize,
+            a_row_major: &[f64],
+        ) -> Result<CorrSession<'_>> {
+            assert_eq!(a_row_major.len(), m * n);
+            let bucket = self
+                .manifest
+                .bucket_for(KernelOp::Corr, m, n)
+                .ok_or_else(|| anyhow!("no corr bucket fits {m}x{n}"))?;
+            let exe = self.executable(bucket)?;
+            // Zero-pad into the bucket (padding rows/cols contribute 0 to Aᵀr).
+            let mut a32 = vec![0.0f32; bucket.m * bucket.n];
+            for i in 0..m {
+                let src = &a_row_major[i * n..(i + 1) * n];
+                let dst = &mut a32[i * bucket.n..i * bucket.n + n];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d = *s as f32;
+                }
+            }
+            let a_buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(&a32, &[bucket.m, bucket.n], None)
+                .context("upload A")?;
+            Ok(CorrSession { rt: self, exe, a_buf, bucket, m, n })
+        }
+
+        /// Prepare the fused gstep kernel (Aᵀu + γ candidates) for an
+        /// `m × n` dense matrix: pads/uploads A once, returns a session.
+        pub fn prepare_gstep(
+            &self,
+            m: usize,
+            n: usize,
+            a_row_major: &[f64],
+        ) -> Result<GstepSession<'_>> {
+            assert_eq!(a_row_major.len(), m * n);
+            let bucket = self
+                .manifest
+                .bucket_for(KernelOp::GammaStep, m, n)
+                .ok_or_else(|| anyhow!("no gstep bucket fits {m}x{n}"))?;
+            let exe = self.executable(bucket)?;
+            let mut a32 = vec![0.0f32; bucket.m * bucket.n];
+            for i in 0..m {
+                let src = &a_row_major[i * n..(i + 1) * n];
+                let dst = &mut a32[i * bucket.n..i * bucket.n + n];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d = *s as f32;
+                }
+            }
+            let a_buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(&a32, &[bucket.m, bucket.n], None)
+                .context("upload A")?;
+            Ok(GstepSession { rt: self, exe, a_buf, bucket, m, n })
+        }
+    }
+
+    /// A prepared fused gstep kernel (Algorithm 2 steps 11-12 in one XLA
+    /// program): `a = Aᵀu` and the per-column γ candidates, masked.
+    pub struct GstepSession<'rt> {
+        rt: &'rt XlaRuntime,
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        a_buf: xla::PjRtBuffer,
+        bucket: KernelKey,
         m: usize,
         n: usize,
-        a_row_major: &[f64],
-    ) -> Result<GstepSession<'_>> {
-        assert_eq!(a_row_major.len(), m * n);
-        let bucket = self
-            .manifest
-            .bucket_for(KernelOp::GammaStep, m, n)
-            .ok_or_else(|| anyhow!("no gstep bucket fits {m}x{n}"))?;
-        let exe = self.executable(bucket)?;
-        let mut a32 = vec![0.0f32; bucket.m * bucket.n];
-        for i in 0..m {
-            let src = &a_row_major[i * n..(i + 1) * n];
-            let dst = &mut a32[i * bucket.n..i * bucket.n + n];
-            for (d, s) in dst.iter_mut().zip(src) {
+    }
+
+    impl GstepSession<'_> {
+        /// Problem shape (unpadded).
+        pub fn shape(&self) -> (usize, usize) {
+            (self.m, self.n)
+        }
+
+        /// Execute: returns `(a, gammas)`, each length n. `mask[j] = true`
+        /// for selected columns (padded columns are masked internally).
+        pub fn gstep(
+            &self,
+            u: &[f64],
+            c: &[f64],
+            mask: &[bool],
+            ck: f64,
+            h: f64,
+        ) -> Result<(Vec<f64>, Vec<f64>)> {
+            assert_eq!(u.len(), self.m);
+            assert_eq!(c.len(), self.n);
+            assert_eq!(mask.len(), self.n);
+            let up = |v: &[f64], len: usize, pad: f32| -> Vec<f32> {
+                let mut out = vec![pad; len];
+                for (d, s) in out.iter_mut().zip(v) {
+                    *d = *s as f32;
+                }
+                out
+            };
+            let u32v = up(u, self.bucket.m, 0.0);
+            let c32 = up(c, self.bucket.n, 0.0);
+            let mut m32 = vec![1.0f32; self.bucket.n]; // pad columns masked
+            for (d, &s) in m32.iter_mut().zip(mask) {
+                *d = if s { 1.0 } else { 0.0 };
+            }
+            let cl = &self.rt.client;
+            let u_buf = cl.buffer_from_host_buffer::<f32>(&u32v, &[self.bucket.m], None)?;
+            let c_buf = cl.buffer_from_host_buffer::<f32>(&c32, &[self.bucket.n], None)?;
+            let m_buf = cl.buffer_from_host_buffer::<f32>(&m32, &[self.bucket.n], None)?;
+            let ck_buf = cl.buffer_from_host_buffer::<f32>(&[ck as f32], &[], None)?;
+            let h_buf = cl.buffer_from_host_buffer::<f32>(&[h as f32], &[], None)?;
+            let result = self
+                .exe
+                .execute_b(&[&self.a_buf, &u_buf, &c_buf, &m_buf, &ck_buf, &h_buf])
+                .context("execute gstep")?;
+            let lit = result[0][0].to_literal_sync()?;
+            let (av, gam) = lit.to_tuple2().context("unwrap tuple2")?;
+            let av32: Vec<f32> = av.to_vec()?;
+            let gam32: Vec<f32> = gam.to_vec()?;
+            Ok((
+                av32[..self.n].iter().map(|&v| v as f64).collect(),
+                gam32[..self.n].iter().map(|&v| v as f64).collect(),
+            ))
+        }
+    }
+
+    /// A prepared `c = Aᵀr` kernel: A is device-resident; each call uploads
+    /// only `r` (the per-iteration hot path of Algorithm 2 steps 2/11).
+    pub struct CorrSession<'rt> {
+        rt: &'rt XlaRuntime,
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        a_buf: xla::PjRtBuffer,
+        bucket: KernelKey,
+        m: usize,
+        n: usize,
+    }
+
+    impl CorrSession<'_> {
+        /// Problem shape (unpadded).
+        pub fn shape(&self) -> (usize, usize) {
+            (self.m, self.n)
+        }
+
+        /// Bucket shape actually executed.
+        pub fn bucket(&self) -> (usize, usize) {
+            (self.bucket.m, self.bucket.n)
+        }
+
+        /// Execute `c = Aᵀ r` for a length-`m` f64 vector; returns length-`n`
+        /// f64 (computed in f32 — see DESIGN.md §7 for the tolerance story).
+        pub fn corr(&self, r: &[f64]) -> Result<Vec<f64>> {
+            assert_eq!(r.len(), self.m);
+            let mut r32 = vec![0.0f32; self.bucket.m];
+            for (d, s) in r32.iter_mut().zip(r) {
                 *d = *s as f32;
             }
+            let r_buf = self
+                .rt
+                .client
+                .buffer_from_host_buffer::<f32>(&r32, &[self.bucket.m], None)
+                .context("upload r")?;
+            let result = self.exe.execute_b(&[&self.a_buf, &r_buf]).context("execute corr")?;
+            let lit = result[0][0].to_literal_sync().context("fetch result")?;
+            let lit = lit.to_tuple1().context("unwrap tuple")?;
+            let out32: Vec<f32> = lit.to_vec().context("to_vec")?;
+            Ok(out32[..self.n].iter().map(|&v| v as f64).collect())
         }
-        let a_buf = self
-            .client
-            .buffer_from_host_buffer::<f32>(&a32, &[bucket.m, bucket.n], None)
-            .context("upload A")?;
-        Ok(GstepSession { rt: self, exe, a_buf, bucket, m, n })
     }
 }
 
-/// A prepared fused gstep kernel (Algorithm 2 steps 11-12 in one XLA
-/// program): `a = Aᵀu` and the per-column γ candidates, masked.
-pub struct GstepSession<'rt> {
-    rt: &'rt XlaRuntime,
-    exe: Rc<xla::PjRtLoadedExecutable>,
-    a_buf: xla::PjRtBuffer,
-    bucket: KernelKey,
-    m: usize,
-    n: usize,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::error::{bail, Result};
+    use crate::runtime::artifacts::ArtifactManifest;
+    use std::path::Path;
 
-impl GstepSession<'_> {
-    /// Problem shape (unpadded).
-    pub fn shape(&self) -> (usize, usize) {
-        (self.m, self.n)
+    const DISABLED: &str = "calars was built without the `pjrt` cargo feature; \
+         XLA artifacts cannot be executed (rebuild with `--features pjrt` and \
+         the `xla` dependency — see DESIGN.md §7). Native f64 kernels remain \
+         fully functional";
+
+    /// Stub runtime for builds without the `pjrt` feature. [`Self::load`]
+    /// always fails, so call sites take their native fallback path; the
+    /// remaining methods exist only to keep those call sites type-checking
+    /// and are unreachable in practice.
+    pub struct XlaRuntime {
+        manifest: ArtifactManifest,
     }
 
-    /// Execute: returns `(a, gammas)`, each length n. `mask[j] = true`
-    /// for selected columns (padded columns are masked internally).
-    pub fn gstep(
-        &self,
-        u: &[f64],
-        c: &[f64],
-        mask: &[bool],
-        ck: f64,
-        h: f64,
-    ) -> Result<(Vec<f64>, Vec<f64>)> {
-        assert_eq!(u.len(), self.m);
-        assert_eq!(c.len(), self.n);
-        assert_eq!(mask.len(), self.n);
-        let up = |v: &[f64], len: usize, pad: f32| -> Vec<f32> {
-            let mut out = vec![pad; len];
-            for (d, s) in out.iter_mut().zip(v) {
-                *d = *s as f32;
-            }
-            out
-        };
-        let u32v = up(u, self.bucket.m, 0.0);
-        let c32 = up(c, self.bucket.n, 0.0);
-        let mut m32 = vec![1.0f32; self.bucket.n]; // pad columns masked
-        for (d, &s) in m32.iter_mut().zip(mask) {
-            *d = if s { 1.0 } else { 0.0 };
+    impl XlaRuntime {
+        /// Always fails: the PJRT client is compiled out.
+        pub fn load(_dir: &Path) -> Result<Self> {
+            bail!("{DISABLED}")
         }
-        let cl = &self.rt.client;
-        let u_buf = cl.buffer_from_host_buffer::<f32>(&u32v, &[self.bucket.m], None)?;
-        let c_buf = cl.buffer_from_host_buffer::<f32>(&c32, &[self.bucket.n], None)?;
-        let m_buf = cl.buffer_from_host_buffer::<f32>(&m32, &[self.bucket.n], None)?;
-        let ck_buf = cl.buffer_from_host_buffer::<f32>(&[ck as f32], &[], None)?;
-        let h_buf = cl.buffer_from_host_buffer::<f32>(&[h as f32], &[], None)?;
-        let result = self
-            .exe
-            .execute_b(&[&self.a_buf, &u_buf, &c_buf, &m_buf, &ck_buf, &h_buf])
-            .context("execute gstep")?;
-        let lit = result[0][0].to_literal_sync()?;
-        let (av, gam) = lit.to_tuple2().context("unwrap tuple2")?;
-        let av32: Vec<f32> = av.to_vec()?;
-        let gam32: Vec<f32> = gam.to_vec()?;
-        Ok((
-            av32[..self.n].iter().map(|&v| v as f64).collect(),
-            gam32[..self.n].iter().map(|&v| v as f64).collect(),
-        ))
-    }
-}
 
-/// A prepared `c = Aᵀr` kernel: A is device-resident; each call uploads
-/// only `r` (the per-iteration hot path of Algorithm 2 steps 2/11).
-pub struct CorrSession<'rt> {
-    rt: &'rt XlaRuntime,
-    exe: Rc<xla::PjRtLoadedExecutable>,
-    a_buf: xla::PjRtBuffer,
-    bucket: KernelKey,
-    m: usize,
-    n: usize,
-}
-
-impl CorrSession<'_> {
-    /// Problem shape (unpadded).
-    pub fn shape(&self) -> (usize, usize) {
-        (self.m, self.n)
-    }
-
-    /// Bucket shape actually executed.
-    pub fn bucket(&self) -> (usize, usize) {
-        (self.bucket.m, self.bucket.n)
-    }
-
-    /// Execute `c = Aᵀ r` for a length-`m` f64 vector; returns length-`n`
-    /// f64 (computed in f32 — see DESIGN.md §7 for the tolerance story).
-    pub fn corr(&self, r: &[f64]) -> Result<Vec<f64>> {
-        assert_eq!(r.len(), self.m);
-        let mut r32 = vec![0.0f32; self.bucket.m];
-        for (d, s) in r32.iter_mut().zip(r) {
-            *d = *s as f32;
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
         }
-        let r_buf = self
-            .rt
-            .client
-            .buffer_from_host_buffer::<f32>(&r32, &[self.bucket.m], None)
-            .context("upload r")?;
-        let result = self.exe.execute_b(&[&self.a_buf, &r_buf]).context("execute corr")?;
-        let lit = result[0][0].to_literal_sync().context("fetch result")?;
-        let lit = lit.to_tuple1().context("unwrap tuple")?;
-        let out32: Vec<f32> = lit.to_vec().context("to_vec")?;
-        Ok(out32[..self.n].iter().map(|&v| v as f64).collect())
+
+        pub fn platform(&self) -> String {
+            "disabled".to_string()
+        }
+
+        pub fn prepare_corr(
+            &self,
+            _m: usize,
+            _n: usize,
+            _a_row_major: &[f64],
+        ) -> Result<CorrSession<'_>> {
+            bail!("{DISABLED}")
+        }
+
+        pub fn prepare_gstep(
+            &self,
+            _m: usize,
+            _n: usize,
+            _a_row_major: &[f64],
+        ) -> Result<GstepSession<'_>> {
+            bail!("{DISABLED}")
+        }
+    }
+
+    /// Stub session (never constructed; see [`XlaRuntime`]).
+    pub struct CorrSession<'rt> {
+        _rt: &'rt XlaRuntime,
+    }
+
+    impl CorrSession<'_> {
+        pub fn shape(&self) -> (usize, usize) {
+            (0, 0)
+        }
+
+        pub fn bucket(&self) -> (usize, usize) {
+            (0, 0)
+        }
+
+        pub fn corr(&self, _r: &[f64]) -> Result<Vec<f64>> {
+            bail!("{DISABLED}")
+        }
+    }
+
+    /// Stub session (never constructed; see [`XlaRuntime`]).
+    pub struct GstepSession<'rt> {
+        _rt: &'rt XlaRuntime,
+    }
+
+    impl GstepSession<'_> {
+        pub fn shape(&self) -> (usize, usize) {
+            (0, 0)
+        }
+
+        pub fn gstep(
+            &self,
+            _u: &[f64],
+            _c: &[f64],
+            _mask: &[bool],
+            _ck: f64,
+            _h: f64,
+        ) -> Result<(Vec<f64>, Vec<f64>)> {
+            bail!("{DISABLED}")
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use imp::{CorrSession, GstepSession, XlaRuntime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{CorrSession, GstepSession, XlaRuntime};

@@ -1,0 +1,444 @@
+//! The prediction engine: evaluate stored paths at an arbitrary step
+//! or regularization level, with request batching and an LRU
+//! coefficient-snapshot cache.
+//!
+//! **Exactness contract** (covered by the property test in
+//! `tests/serve.rs`): at a stored breakpoint — `Selector::Step(k)`, or
+//! `Selector::Lambda(λ)` with λ exactly equal to a stored breakpoint —
+//! the served prediction is **bit-identical** to evaluating the
+//! fitter's returned coefficients directly: `dot(x, densify(coefs))`
+//! with the same [`crate::linalg::dot`] kernel. Between breakpoints,
+//! `Lambda` interpolates the coefficient vectors linearly in λ (exact
+//! for LASSO-LARS paths, the standard approximation for plain
+//! selection paths).
+//!
+//! **Batching**: [`PredictionEngine::predict_batch`] groups the rows of
+//! a batch by (model, selector) and evaluates each group as one dense
+//! GEMV through [`crate::linalg::DenseMatrix::gemv`] — the serving hot
+//! path turns many scattered dot products into a single streaming pass
+//! per model. The HTTP front end feeds this from concurrent
+//! connections (see [`super::http`]).
+
+use super::store::{ModelRecord, ModelRegistry};
+use crate::error::{anyhow, Result};
+use crate::linalg::{dot, DenseMatrix};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Where on the stored path to evaluate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Selector {
+    /// Breakpoint index (0 = empty model).
+    Step(usize),
+    /// Regularization level; interpolated between breakpoints.
+    Lambda(f64),
+}
+
+impl Selector {
+    fn cache_key(&self) -> SelKey {
+        match *self {
+            Selector::Step(k) => SelKey::Step(k as u64),
+            Selector::Lambda(l) => SelKey::Lambda(l.to_bits()),
+        }
+    }
+}
+
+/// Hashable selector identity (λ by bit pattern).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum SelKey {
+    Step(u64),
+    Lambda(u64),
+}
+
+/// One prediction query: model, path position, feature vector.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub model: u64,
+    pub selector: Selector,
+    /// Dense feature vector, length = the model's `n`.
+    pub x: Vec<f64>,
+}
+
+/// Engine counters exposed through `/stats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub queries: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub max_batch_rows: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub errors: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    queries: AtomicU64,
+    batches: AtomicU64,
+    batched_rows: AtomicU64,
+    max_batch_rows: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// LRU cache of densified coefficient vectors, keyed by
+/// (model id, model version, selector). The version in the key makes a
+/// re-registered model invalidate naturally.
+struct CoefCache {
+    map: HashMap<(u64, u32, SelKey), (u64, Arc<Vec<f64>>)>,
+    capacity: usize,
+    tick: u64,
+}
+
+impl CoefCache {
+    fn new(capacity: usize) -> Self {
+        CoefCache { map: HashMap::new(), capacity: capacity.max(1), tick: 0 }
+    }
+
+    fn get(&mut self, key: &(u64, u32, SelKey)) -> Option<Arc<Vec<f64>>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self.map.get_mut(key)?;
+        entry.0 = tick;
+        Some(entry.1.clone())
+    }
+
+    fn put(&mut self, key: (u64, u32, SelKey), v: Arc<Vec<f64>>) {
+        self.tick += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            if let Some(victim) =
+                self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| *k)
+            {
+                self.map.remove(&victim);
+            }
+        }
+        let tick = self.tick;
+        self.map.insert(key, (tick, v));
+    }
+}
+
+/// Serves predictions from the registry's stored paths.
+pub struct PredictionEngine {
+    registry: Arc<ModelRegistry>,
+    cache: Mutex<CoefCache>,
+    counters: Counters,
+}
+
+impl PredictionEngine {
+    pub fn new(registry: Arc<ModelRegistry>, cache_capacity: usize) -> Self {
+        PredictionEngine {
+            registry,
+            cache: Mutex::new(CoefCache::new(cache_capacity)),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Dense length-`n` coefficient vector for `selector` on a model,
+    /// through the LRU snapshot cache.
+    pub fn coefs_for(&self, rec: &ModelRecord, selector: Selector) -> Result<Arc<Vec<f64>>> {
+        let key = (rec.id, rec.version, selector.cache_key());
+        if let Some(v) = self.cache.lock().unwrap().get(&key) {
+            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(v);
+        }
+        self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let dense = Arc::new(resolve_coefs(rec, selector)?);
+        self.cache.lock().unwrap().put(key, dense.clone());
+        Ok(dense)
+    }
+
+    /// Evaluate a single query (unbatched path; same numerics as the
+    /// batched one).
+    pub fn predict(&self, q: &Query) -> Result<f64> {
+        self.counters.queries.fetch_add(1, Ordering::Relaxed);
+        match self.predict_inner(q) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    fn predict_inner(&self, q: &Query) -> Result<f64> {
+        let rec = self
+            .registry
+            .get(q.model)
+            .ok_or_else(|| anyhow!("unknown model {}", q.model))?;
+        if q.x.len() != rec.snapshot.n {
+            return Err(anyhow!(
+                "query dimension {} != model dimension {}",
+                q.x.len(),
+                rec.snapshot.n
+            ));
+        }
+        let coefs = self.coefs_for(&rec, q.selector)?;
+        Ok(dot(&q.x, &coefs))
+    }
+
+    /// Evaluate a batch: rows are grouped by (model, selector) and each
+    /// group runs as one dense GEMV. Per-query failures (unknown model,
+    /// dimension mismatch, bad selector) fail only that query.
+    pub fn predict_batch(&self, queries: &[Query]) -> Vec<Result<f64>> {
+        self.counters.queries.fetch_add(queries.len() as u64, Ordering::Relaxed);
+        self.counters.batches.fetch_add(1, Ordering::Relaxed);
+        self.counters.batched_rows.fetch_add(queries.len() as u64, Ordering::Relaxed);
+        self.counters.max_batch_rows.fetch_max(queries.len() as u64, Ordering::Relaxed);
+
+        let mut out: Vec<Option<Result<f64>>> = queries.iter().map(|_| None).collect();
+        let mut groups: HashMap<(u64, SelKey), Vec<usize>> = HashMap::new();
+        for (i, q) in queries.iter().enumerate() {
+            groups.entry((q.model, q.selector.cache_key())).or_default().push(i);
+        }
+
+        for ((model, _), idxs) in groups {
+            let selector = queries[idxs[0]].selector;
+            let rec = match self.registry.get(model) {
+                Some(r) => r,
+                None => {
+                    for &i in &idxs {
+                        out[i] = Some(Err(anyhow!("unknown model {model}")));
+                    }
+                    self.counters.errors.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+                    continue;
+                }
+            };
+            let coefs = match self.coefs_for(&rec, selector) {
+                Ok(c) => c,
+                Err(e) => {
+                    for &i in &idxs {
+                        out[i] = Some(Err(e.clone()));
+                    }
+                    self.counters.errors.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+                    continue;
+                }
+            };
+            let mut rows: Vec<&[f64]> = Vec::with_capacity(idxs.len());
+            let mut row_idx: Vec<usize> = Vec::with_capacity(idxs.len());
+            for &i in &idxs {
+                if queries[i].x.len() == rec.snapshot.n {
+                    rows.push(&queries[i].x);
+                    row_idx.push(i);
+                } else {
+                    out[i] = Some(Err(anyhow!(
+                        "query dimension {} != model dimension {}",
+                        queries[i].x.len(),
+                        rec.snapshot.n
+                    )));
+                    self.counters.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            match row_idx.len() {
+                0 => {}
+                1 => out[row_idx[0]] = Some(Ok(dot(rows[0], &coefs))),
+                _ => {
+                    // The batched hot path: one GEMV for the whole group.
+                    // `gemv` computes dot(row_i, coefs) per row — the same
+                    // kernel and operand order as the single-query path,
+                    // so batching never changes a result bit.
+                    let mat = DenseMatrix::from_rows(&rows);
+                    let mut ys = vec![0.0; rows.len()];
+                    mat.gemv(&coefs, &mut ys);
+                    for (&i, y) in row_idx.iter().zip(ys) {
+                        out[i] = Some(Ok(y));
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("every query answered")).collect()
+    }
+
+    /// Counter snapshot for `/stats`.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            queries: self.counters.queries.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            batched_rows: self.counters.batched_rows.load(Ordering::Relaxed),
+            max_batch_rows: self.counters.max_batch_rows.load(Ordering::Relaxed),
+            cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.counters.cache_misses.load(Ordering::Relaxed),
+            errors: self.counters.errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Resolve a selector to a dense coefficient vector on one record.
+fn resolve_coefs(rec: &ModelRecord, selector: Selector) -> Result<Vec<f64>> {
+    let snap = &rec.snapshot;
+    match selector {
+        Selector::Step(k) => snap.dense_coefs(k).ok_or_else(|| {
+            anyhow!("model {} stores steps 0..{}, step {k} out of range", rec.id, snap.len())
+        }),
+        Selector::Lambda(l) => {
+            if !l.is_finite() || l < 0.0 {
+                return Err(anyhow!("lambda must be finite and ≥ 0, got {l}"));
+            }
+            if snap.steps.is_empty() {
+                return Err(anyhow!("model {} stores an empty path", rec.id));
+            }
+            // Exact breakpoint hit → the stored vector, bit-identical.
+            if let Some(k) = snap.steps.iter().position(|s| s.lambda == l) {
+                return Ok(snap.dense_coefs(k).unwrap());
+            }
+            // Outside the stored range → clamp to the nearest end.
+            if l >= snap.steps[0].lambda {
+                return Ok(snap.dense_coefs(0).unwrap());
+            }
+            let last = snap.steps.len() - 1;
+            if l <= snap.steps[last].lambda {
+                return Ok(snap.dense_coefs(last).unwrap());
+            }
+            // Bracket and interpolate linearly in λ.
+            for k in 0..last {
+                let (hi, lo) = (snap.steps[k].lambda, snap.steps[k + 1].lambda);
+                if l < hi && l > lo {
+                    let t = (hi - l) / (hi - lo);
+                    let a = snap.dense_coefs(k).unwrap();
+                    let b = snap.dense_coefs(k + 1).unwrap();
+                    return Ok(a
+                        .iter()
+                        .zip(&b)
+                        .map(|(ai, bi)| ai + t * (bi - ai))
+                        .collect());
+                }
+            }
+            Err(anyhow!("lambda {l} not bracketed by model {}'s path", rec.id))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lars::path::{PathSnapshot, PathStep};
+    use crate::serve::store::ModelMeta;
+
+    fn registry_with_path() -> (Arc<ModelRegistry>, u64) {
+        // n = 3; step 1 activates col 2, step 2 adds col 0.
+        let steps = vec![
+            PathStep { lambda: 4.0, support: vec![], coefs: vec![], residual_norm: 5.0 },
+            PathStep {
+                lambda: 2.0,
+                support: vec![2],
+                coefs: vec![1.5],
+                residual_norm: 3.0,
+            },
+            PathStep {
+                lambda: 1.0,
+                support: vec![2, 0],
+                coefs: vec![2.0, -0.5],
+                residual_norm: 1.0,
+            },
+        ];
+        let reg = Arc::new(ModelRegistry::new(4));
+        let id = reg.insert(ModelMeta::named("toy"), PathSnapshot { n: 3, steps });
+        (reg, id)
+    }
+
+    #[test]
+    fn step_selector_is_exact() {
+        let (reg, id) = registry_with_path();
+        let eng = PredictionEngine::new(reg, 8);
+        let x = vec![10.0, 100.0, 1.0];
+        let q = |s| Query { model: id, selector: s, x: x.clone() };
+        assert_eq!(eng.predict(&q(Selector::Step(0))).unwrap(), 0.0);
+        assert_eq!(eng.predict(&q(Selector::Step(1))).unwrap(), dot(&x, &[0.0, 0.0, 1.5]));
+        assert_eq!(eng.predict(&q(Selector::Step(2))).unwrap(), dot(&x, &[-0.5, 0.0, 2.0]));
+        assert!(eng.predict(&q(Selector::Step(3))).is_err());
+    }
+
+    #[test]
+    fn lambda_exact_hit_uses_stored_vector() {
+        let (reg, id) = registry_with_path();
+        let eng = PredictionEngine::new(reg, 8);
+        let x = vec![1.0, 1.0, 1.0];
+        let at_step = eng
+            .predict(&Query { model: id, selector: Selector::Step(1), x: x.clone() })
+            .unwrap();
+        let at_lambda = eng
+            .predict(&Query { model: id, selector: Selector::Lambda(2.0), x })
+            .unwrap();
+        assert_eq!(at_step.to_bits(), at_lambda.to_bits(), "breakpoint hit must be bit-identical");
+    }
+
+    #[test]
+    fn lambda_interpolates_and_clamps() {
+        let (reg, id) = registry_with_path();
+        let eng = PredictionEngine::new(reg, 8);
+        let x = vec![0.0, 0.0, 1.0]; // reads coefficient of col 2
+        let p = |l| {
+            eng.predict(&Query { model: id, selector: Selector::Lambda(l), x: x.clone() })
+                .unwrap()
+        };
+        // Midway between λ=2 (coef 1.5) and λ=1 (coef 2.0).
+        assert!((p(1.5) - 1.75).abs() < 1e-12);
+        // Above λmax → empty model; below λmin → final model.
+        assert_eq!(p(10.0), 0.0);
+        assert_eq!(p(0.1), 2.0);
+        assert!(eng
+            .predict(&Query { model: id, selector: Selector::Lambda(f64::NAN), x: x.clone() })
+            .is_err());
+    }
+
+    #[test]
+    fn batch_matches_single_bitwise_and_counts_cache() {
+        let (reg, id) = registry_with_path();
+        let eng = PredictionEngine::new(reg, 8);
+        let queries: Vec<Query> = (0..6)
+            .map(|i| Query {
+                model: id,
+                selector: if i % 2 == 0 { Selector::Step(1) } else { Selector::Step(2) },
+                x: vec![i as f64, 1.0 - i as f64, 0.25 * i as f64],
+            })
+            .collect();
+        let batch = eng.predict_batch(&queries);
+        for (q, r) in queries.iter().zip(&batch) {
+            let single = eng.predict(q).unwrap();
+            assert_eq!(
+                r.as_ref().unwrap().to_bits(),
+                single.to_bits(),
+                "batched result must equal unbatched bit for bit"
+            );
+        }
+        let s = eng.stats();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.batched_rows, 6);
+        assert_eq!(s.cache_misses, 2, "two distinct (model, step) groups");
+        assert!(s.cache_hits >= 6, "repeat predicts hit the snapshot cache");
+    }
+
+    #[test]
+    fn batch_isolates_per_query_failures() {
+        let (reg, id) = registry_with_path();
+        let eng = PredictionEngine::new(reg, 8);
+        let queries = vec![
+            Query { model: id, selector: Selector::Step(1), x: vec![1.0, 2.0, 3.0] },
+            Query { model: 999, selector: Selector::Step(0), x: vec![1.0, 2.0, 3.0] },
+            Query { model: id, selector: Selector::Step(1), x: vec![1.0] }, // bad dim
+        ];
+        let r = eng.predict_batch(&queries);
+        assert!(r[0].is_ok());
+        assert!(r[1].is_err());
+        assert!(r[2].is_err());
+        assert_eq!(eng.stats().errors, 2);
+    }
+
+    #[test]
+    fn cache_evicts_least_recent() {
+        let mut cache = CoefCache::new(2);
+        let k = |i: u64| (i, 1u32, SelKey::Step(0));
+        cache.put(k(1), Arc::new(vec![1.0]));
+        cache.put(k(2), Arc::new(vec![2.0]));
+        cache.get(&k(1));
+        cache.put(k(3), Arc::new(vec![3.0]));
+        assert!(cache.get(&k(2)).is_none(), "LRU entry evicted");
+        assert!(cache.get(&k(1)).is_some());
+        assert!(cache.get(&k(3)).is_some());
+    }
+}

@@ -1,0 +1,571 @@
+//! Zero-dependency HTTP/1.1 front end over `std::net::TcpListener`.
+//!
+//! Endpoints:
+//!
+//! * `GET  /healthz` — liveness probe
+//! * `GET  /models`  — registry listing (JSON)
+//! * `GET  /stats`   — engine/queue/registry counters (JSON)
+//! * `POST /fit`     — enqueue a fit job (`?wait=1` blocks until done)
+//! * `POST /predict` — batched prediction (line-protocol body)
+//! * `POST /shutdown`— graceful stop (only with `allow_shutdown`, i.e.
+//!   `calars serve --oneshot` and in-process test servers)
+//!
+//! Connections are keep-alive with one OS thread each; prediction rows
+//! from **all** connections funnel into a shared [`Batcher`], whose
+//! single drain thread sleeps a short accumulation window and then
+//! evaluates everything that arrived as one
+//! [`PredictionEngine::predict_batch`] call — concurrent clients
+//! hitting the same model are answered by a single GEMV.
+
+use super::engine::{PredictionEngine, Query};
+use super::protocol::{
+    self, http_response, json_escape, json_f64, FitRequest, HttpRequest, PredictRequest,
+};
+use super::queue::{FitQueue, FitSpec, JobState};
+use super::store::{ModelRegistry, RegistryStats};
+use crate::config::Algo;
+use crate::error::{Context, Result};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Server configuration (CLI mapping in [`crate::config::ServeConfig`]).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Fit worker threads.
+    pub fit_workers: usize,
+    /// Batch accumulation window in microseconds (0 = drain eagerly).
+    pub batch_window_us: u64,
+    /// Registry capacity (models held before LRU eviction).
+    pub registry_capacity: usize,
+    /// Coefficient-snapshot cache capacity (dense vectors).
+    pub cache_capacity: usize,
+    /// Honor `POST /shutdown` (oneshot smoke runs, in-process tests).
+    pub allow_shutdown: bool,
+    /// Load the registry from / save it to this directory.
+    pub persist_dir: Option<String>,
+    /// Fit this dataset synchronously before accepting traffic.
+    pub prefit: Option<String>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7878".to_string(),
+            fit_workers: 2,
+            batch_window_us: 200,
+            registry_capacity: 64,
+            cache_capacity: 256,
+            allow_shutdown: false,
+            persist_dir: None,
+            prefit: None,
+        }
+    }
+}
+
+impl From<crate::config::ServeConfig> for ServeOptions {
+    fn from(c: crate::config::ServeConfig) -> Self {
+        ServeOptions {
+            addr: c.addr,
+            fit_workers: c.fit_workers,
+            batch_window_us: c.batch_window_us,
+            registry_capacity: c.registry_capacity,
+            cache_capacity: c.cache_capacity,
+            allow_shutdown: c.oneshot,
+            persist_dir: c.persist_dir,
+            prefit: c.prefit,
+        }
+    }
+}
+
+struct ServerState {
+    registry: Arc<ModelRegistry>,
+    engine: Arc<PredictionEngine>,
+    queue: FitQueue,
+    batcher: Arc<Batcher>,
+    running: AtomicBool,
+    allow_shutdown: bool,
+    persist_dir: Option<PathBuf>,
+    addr: SocketAddr,
+    started: Instant,
+    requests: AtomicU64,
+}
+
+/// Run the server on the current thread until shutdown.
+pub fn serve(opts: &ServeOptions) -> Result<()> {
+    let (listener, state) = bind(opts)?;
+    println!("calars serve listening on {}", state.addr);
+    accept_loop(listener, state);
+    Ok(())
+}
+
+/// Handle to an in-process server (tests, benches, self-contained
+/// `bench-serve`).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    join: thread::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// `host:port` string clients can connect to.
+    pub fn addr_string(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Gracefully stop the server (POST /shutdown) and join it.
+    pub fn stop(self) {
+        if let Ok(mut c) = super::loadgen::ServeClient::connect(&self.addr.to_string()) {
+            let _ = c.request("POST", "/shutdown", "");
+        }
+        let _ = self.join.join();
+    }
+}
+
+/// Start a server on a background thread; always honors `/shutdown`.
+pub fn spawn_server(opts: &ServeOptions) -> Result<ServerHandle> {
+    let mut opts = opts.clone();
+    opts.allow_shutdown = true;
+    let (listener, state) = bind(&opts)?;
+    let addr = state.addr;
+    let join = thread::Builder::new()
+        .name("calars-serve-accept".to_string())
+        .spawn(move || accept_loop(listener, state))
+        .context("spawn accept loop")?;
+    Ok(ServerHandle { addr, join })
+}
+
+fn bind(opts: &ServeOptions) -> Result<(TcpListener, Arc<ServerState>)> {
+    let registry = match &opts.persist_dir {
+        // Write-through persistence: each completed fit lands on disk
+        // immediately, so an ungraceful stop (SIGTERM/SIGKILL) loses
+        // nothing that finished fitting.
+        Some(dir) => Arc::new(
+            ModelRegistry::with_persist_dir(std::path::Path::new(dir), opts.registry_capacity)
+                .with_context(|| format!("open registry dir {dir}"))?,
+        ),
+        None => Arc::new(ModelRegistry::new(opts.registry_capacity)),
+    };
+    let engine = Arc::new(PredictionEngine::new(registry.clone(), opts.cache_capacity));
+    let queue = FitQueue::new(registry.clone(), opts.fit_workers);
+    if let Some(dataset) = &opts.prefit {
+        let job = queue.submit(FitSpec { dataset: dataset.clone(), ..Default::default() });
+        match queue.wait(job, Duration::from_secs(600)) {
+            Some(JobState::Done { model, .. }) => {
+                println!("prefit '{dataset}' ready as model {model}");
+            }
+            other => crate::bail!("prefit of '{dataset}' did not complete: {other:?}"),
+        }
+    }
+    let batcher = Batcher::start(engine.clone(), Duration::from_micros(opts.batch_window_us));
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("bind {}", opts.addr))?;
+    let addr = listener.local_addr().context("local_addr")?;
+    let state = Arc::new(ServerState {
+        registry,
+        engine,
+        queue,
+        batcher,
+        running: AtomicBool::new(true),
+        allow_shutdown: opts.allow_shutdown,
+        persist_dir: opts.persist_dir.as_ref().map(PathBuf::from),
+        addr,
+        started: Instant::now(),
+        requests: AtomicU64::new(0),
+    });
+    Ok((listener, state))
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    for stream in listener.incoming() {
+        if !state.running.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let st = Arc::clone(&state);
+        let _ = thread::Builder::new()
+            .name("calars-serve-conn".to_string())
+            .spawn(move || handle_connection(stream, st));
+    }
+    state.batcher.stop();
+    state.queue.shutdown();
+    // Inserts already wrote through; this final sweep is a consistency
+    // belt-and-braces for graceful shutdowns.
+    if let Some(dir) = &state.persist_dir {
+        match state.registry.save_dir(dir) {
+            Ok(nmodels) => println!("registry persisted: {nmodels} models → {}", dir.display()),
+            Err(e) => eprintln!("registry persist failed: {e:#}"),
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let req = match protocol::read_http_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean EOF
+            Err(e) => {
+                let body = format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")));
+                let _ = writer.write_all(http_response(400, "application/json", &body).as_bytes());
+                return;
+            }
+        };
+        state.requests.fetch_add(1, Ordering::Relaxed);
+        let (status, body) = route(&req, &state);
+        if writer
+            .write_all(http_response(status, "application/json", &body).as_bytes())
+            .and_then(|_| writer.flush())
+            .is_err()
+        {
+            return;
+        }
+        let close_requested =
+            req.header("connection").map_or(false, |v| v.eq_ignore_ascii_case("close"));
+        if close_requested || !state.running.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+fn route(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, "{\"ok\":true}".to_string()),
+        ("GET", "/models") => (200, models_json(state)),
+        ("GET", "/stats") => (200, stats_json(state)),
+        ("POST", "/predict") => predict(req, state),
+        ("POST", "/fit") => fit(req, state),
+        ("POST", "/shutdown") => shutdown(state),
+        ("GET", _) | ("POST", _) => {
+            (404, format!("{{\"error\":\"no route {}\"}}", json_escape(&req.path)))
+        }
+        (m, _) => (405, format!("{{\"error\":\"method {} not allowed\"}}", json_escape(m))),
+    }
+}
+
+fn predict(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
+    let parsed = match PredictRequest::parse(&req.body) {
+        Ok(p) => p,
+        Err(e) => return (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")))),
+    };
+    let queries: Vec<Query> = parsed
+        .rows
+        .into_iter()
+        .map(|x| Query { model: parsed.model, selector: parsed.selector, x })
+        .collect();
+    let results = state.batcher.submit_wait(queries);
+    let mut preds = Vec::with_capacity(results.len());
+    for r in results {
+        match r {
+            Ok(v) => preds.push(json_f64(v)),
+            Err(e) => {
+                return (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}"))))
+            }
+        }
+    }
+    (200, format!("{{\"model\":{},\"predictions\":[{}]}}", parsed.model, preds.join(",")))
+}
+
+fn fit(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
+    let parsed = match FitRequest::parse(&req.body) {
+        Ok(p) => p,
+        Err(e) => return (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")))),
+    };
+    let algo: Algo = match parsed.algo.parse() {
+        Ok(a) => a,
+        Err(e) => return (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")))),
+    };
+    let spec = FitSpec {
+        name: parsed.name,
+        algo,
+        dataset: parsed.dataset,
+        t: parsed.t,
+        b: parsed.b,
+        p: parsed.p,
+        seed: parsed.seed,
+    };
+    let job = state.queue.submit(spec);
+    let st = if req.query_flag("wait") {
+        state.queue.wait(job, Duration::from_secs(600))
+    } else {
+        state.queue.state(job)
+    };
+    (200, job_json(job, st.as_ref()))
+}
+
+fn shutdown(state: &Arc<ServerState>) -> (u16, String) {
+    if !state.allow_shutdown {
+        return (405, "{\"error\":\"shutdown disabled (run with --oneshot)\"}".to_string());
+    }
+    state.running.store(false, Ordering::SeqCst);
+    // Wake the accept loop so it observes the flag.
+    let _ = TcpStream::connect(state.addr);
+    (200, "{\"ok\":true,\"stopping\":true}".to_string())
+}
+
+fn job_json(job: u64, state: Option<&JobState>) -> String {
+    match state {
+        None => format!("{{\"job\":{job},\"state\":\"unknown\"}}"),
+        Some(s @ JobState::Done { model, reused, wall_secs }) => format!(
+            "{{\"job\":{job},\"state\":\"{}\",\"model\":{model},\"reused\":{reused},\"wall_secs\":{}}}",
+            s.word(),
+            json_f64(*wall_secs)
+        ),
+        Some(s @ JobState::Failed { error }) => {
+            format!("{{\"job\":{job},\"state\":\"{}\",\"error\":\"{}\"}}", s.word(), json_escape(error))
+        }
+        Some(s) => format!("{{\"job\":{job},\"state\":\"{}\"}}", s.word()),
+    }
+}
+
+fn models_json(state: &Arc<ServerState>) -> String {
+    let items: Vec<String> = state
+        .registry
+        .list()
+        .iter()
+        .map(|r| {
+            let (lambda_max, lambda_min) = r.snapshot.lambda_range();
+            format!(
+                "{{\"id\":{},\"version\":{},\"name\":\"{}\",\"algo\":\"{}\",\"dataset\":\"{}\",\"n\":{},\"steps\":{},\"max_support\":{},\"lambda_max\":{},\"lambda_min\":{},\"created_unix\":{}}}",
+                r.id,
+                r.version,
+                json_escape(&r.meta.display_name()),
+                json_escape(&r.meta.algo),
+                json_escape(&r.meta.dataset),
+                r.snapshot.n,
+                r.snapshot.len(),
+                r.snapshot.max_support(),
+                json_f64(lambda_max),
+                json_f64(lambda_min),
+                r.created_unix
+            )
+        })
+        .collect();
+    format!("{{\"models\":[{}]}}", items.join(","))
+}
+
+fn stats_json(state: &Arc<ServerState>) -> String {
+    let e = state.engine.stats();
+    let q = state.queue.stats();
+    let r: RegistryStats = state.registry.stats();
+    format!(
+        "{{\"uptime_secs\":{},\"http_requests\":{},\
+          \"engine\":{{\"queries\":{},\"batches\":{},\"batched_rows\":{},\"max_batch_rows\":{},\"cache_hits\":{},\"cache_misses\":{},\"errors\":{}}},\
+          \"queue\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"in_flight\":{}}},\
+          \"registry\":{{\"models\":{},\"inserted\":{},\"evicted\":{},\"warm_reused\":{},\"approx_bytes\":{}}}}}",
+        json_f64(state.started.elapsed().as_secs_f64()),
+        state.requests.load(Ordering::Relaxed),
+        e.queries,
+        e.batches,
+        e.batched_rows,
+        e.max_batch_rows,
+        e.cache_hits,
+        e.cache_misses,
+        e.errors,
+        q.submitted,
+        q.completed,
+        q.failed,
+        q.in_flight,
+        r.models,
+        r.inserted,
+        r.evicted,
+        r.warm_reused,
+        r.approx_bytes
+    )
+}
+
+// ── the cross-request batcher ───────────────────────────────────────
+
+struct Pending {
+    query: Query,
+    slot: usize,
+    tx: mpsc::Sender<(usize, Result<f64>)>,
+}
+
+/// Funnels prediction rows from all connection threads into one
+/// [`PredictionEngine::predict_batch`] call per drain.
+pub struct Batcher {
+    queue: Mutex<Vec<Pending>>,
+    cv: Condvar,
+    stopping: AtomicBool,
+    window: Duration,
+    worker: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl Batcher {
+    /// Start the drain thread.
+    pub fn start(engine: Arc<PredictionEngine>, window: Duration) -> Arc<Batcher> {
+        let b = Arc::new(Batcher {
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            stopping: AtomicBool::new(false),
+            window,
+            worker: Mutex::new(None),
+        });
+        let b2 = Arc::clone(&b);
+        let handle = thread::Builder::new()
+            .name("calars-serve-batch".to_string())
+            .spawn(move || b2.run(engine))
+            .expect("spawn batcher");
+        *b.worker.lock().unwrap() = Some(handle);
+        b
+    }
+
+    fn run(&self, engine: Arc<PredictionEngine>) {
+        loop {
+            {
+                let mut g = self.queue.lock().unwrap();
+                while g.is_empty() && !self.stopping.load(Ordering::SeqCst) {
+                    g = self.cv.wait(g).unwrap();
+                }
+                if g.is_empty() && self.stopping.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            // Accumulation window: let concurrent connections pile on.
+            if !self.window.is_zero() {
+                thread::sleep(self.window);
+            }
+            let batch: Vec<Pending> = std::mem::take(&mut *self.queue.lock().unwrap());
+            if batch.is_empty() {
+                continue;
+            }
+            let mut queries = Vec::with_capacity(batch.len());
+            let mut replies = Vec::with_capacity(batch.len());
+            for p in batch {
+                queries.push(p.query);
+                replies.push((p.tx, p.slot));
+            }
+            let results = engine.predict_batch(&queries);
+            for ((tx, slot), r) in replies.into_iter().zip(results) {
+                let _ = tx.send((slot, r));
+            }
+        }
+    }
+
+    /// Enqueue queries and block until all are answered (order
+    /// preserved).
+    pub fn submit_wait(&self, queries: Vec<Query>) -> Vec<Result<f64>> {
+        let n = queries.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.stopping.load(Ordering::SeqCst) {
+            return queries.iter().map(|_| Err(crate::anyhow!("batcher shut down"))).collect();
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut g = self.queue.lock().unwrap();
+            for (slot, query) in queries.into_iter().enumerate() {
+                g.push(Pending { query, slot, tx: tx.clone() });
+            }
+        }
+        self.cv.notify_one();
+        drop(tx);
+        let mut out: Vec<Option<Result<f64>>> = (0..n).map(|_| None).collect();
+        let mut got = 0usize;
+        while got < n {
+            // recv_timeout (not recv): a sender clone lives inside the
+            // shared queue until the drain thread takes it, so a plain
+            // recv could block forever if the batcher stops after our
+            // enqueue. The poll bounds that race.
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok((slot, r)) => {
+                    if out[slot].is_none() {
+                        got += 1;
+                    }
+                    out[slot] = Some(r);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if self.stopping.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(crate::anyhow!("batcher shut down"))))
+            .collect()
+    }
+
+    /// Stop the drain thread; pending queries get errors (idempotent).
+    pub fn stop(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // Fail anything that slipped in after the drain thread exited:
+        // dropping the pending entries drops their reply senders.
+        let leftover = std::mem::take(&mut *self.queue.lock().unwrap());
+        drop(leftover);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lars::path::{PathSnapshot, PathStep};
+    use crate::serve::engine::Selector;
+    use crate::serve::store::ModelMeta;
+
+    fn engine_with_model() -> (Arc<PredictionEngine>, u64) {
+        let steps = vec![
+            PathStep { lambda: 2.0, support: vec![], coefs: vec![], residual_norm: 1.0 },
+            PathStep { lambda: 1.0, support: vec![0], coefs: vec![3.0], residual_norm: 0.5 },
+        ];
+        let reg = Arc::new(ModelRegistry::new(4));
+        let id = reg.insert(ModelMeta::named("m"), PathSnapshot { n: 2, steps });
+        (Arc::new(PredictionEngine::new(reg, 8)), id)
+    }
+
+    #[test]
+    fn batcher_groups_concurrent_submissions() {
+        let (engine, id) = engine_with_model();
+        let b = Batcher::start(engine.clone(), Duration::from_millis(20));
+        let mut joins = Vec::new();
+        for i in 0..4 {
+            let b = Arc::clone(&b);
+            joins.push(thread::spawn(move || {
+                b.submit_wait(vec![Query {
+                    model: id,
+                    selector: Selector::Step(1),
+                    x: vec![i as f64, 1.0],
+                }])
+            }));
+        }
+        for (i, j) in joins.into_iter().enumerate() {
+            let r = j.join().unwrap();
+            assert_eq!(r.len(), 1);
+            assert_eq!(r[0].as_ref().unwrap(), &(3.0 * i as f64));
+        }
+        let s = engine.stats();
+        assert!(
+            s.max_batch_rows >= 2,
+            "the 20ms window should capture ≥ 2 concurrent rows, saw {}",
+            s.max_batch_rows
+        );
+        b.stop();
+    }
+
+    #[test]
+    fn batcher_stop_fails_pending_cleanly() {
+        let (engine, id) = engine_with_model();
+        let b = Batcher::start(engine, Duration::from_micros(0));
+        let r = b.submit_wait(vec![Query { model: id, selector: Selector::Step(1), x: vec![2.0, 0.0] }]);
+        assert_eq!(r[0].as_ref().unwrap(), &6.0);
+        b.stop();
+        let r = b.submit_wait(vec![Query { model: id, selector: Selector::Step(1), x: vec![1.0, 0.0] }]);
+        assert!(r[0].is_err(), "after stop, submissions fail instead of hanging");
+    }
+}

@@ -1,0 +1,228 @@
+//! Closed-loop load generation against a running `calars serve`
+//! instance, plus the minimal HTTP client it (and the tests) use.
+//!
+//! Each of `concurrency` client threads drives its own keep-alive
+//! connection: build a predict request with `rows` random feature
+//! vectors, send, wait for the response, repeat — closed loop, so
+//! measured latency includes queueing inside the server's batcher.
+//! The report aggregates throughput and latency percentiles via
+//! [`crate::metrics::LatencyStats`].
+
+use super::engine::Selector;
+use super::protocol::{self, FitRequest, PredictRequest};
+use crate::error::{bail, Context, Result};
+use crate::metrics::LatencyStats;
+use crate::rng::Pcg64;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Minimal keep-alive HTTP client for the serve protocol.
+pub struct ServeClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(ServeClient { writer: stream, reader })
+    }
+
+    /// Issue one request; returns `(status, body)`.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: calars\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes())?;
+        self.writer.write_all(body.as_bytes())?;
+        self.writer.flush()?;
+        protocol::read_http_response(&mut self.reader)
+    }
+
+    /// Submit a fit and (optionally) wait for it; returns the model id
+    /// on success.
+    pub fn fit(&mut self, req: &FitRequest, wait: bool) -> Result<u64> {
+        let path = if wait { "/fit?wait=1" } else { "/fit" };
+        let (status, body) = self.request("POST", path, &req.encode())?;
+        if status != 200 {
+            bail!("fit failed with HTTP {status}: {body}");
+        }
+        match protocol::json_find_str(&body, "state") {
+            Some("done") => protocol::json_find_u64(&body, "model")
+                .context("fit response missing model id"),
+            Some(other) => bail!("fit ended in state '{other}': {body}"),
+            None => bail!("unparseable fit response: {body}"),
+        }
+    }
+
+    pub fn predict(&mut self, req: &PredictRequest) -> Result<(u16, String)> {
+        self.request("POST", "/predict", &req.encode())
+    }
+
+    /// Feature dimension `n` of a registered model (via `GET /models`).
+    pub fn model_dim(&mut self, model: u64) -> Result<usize> {
+        let (status, body) = self.request("GET", "/models", "")?;
+        if status != 200 {
+            bail!("GET /models failed with HTTP {status}");
+        }
+        let marker = format!("\"id\":{model},");
+        let at = body
+            .find(&marker)
+            .with_context(|| format!("model {model} not in registry listing"))?;
+        protocol::json_find_u64(&body[at..], "n")
+            .map(|n| n as usize)
+            .context("model entry missing dimension")
+    }
+
+    /// Request a graceful server stop (requires `--oneshot` server side).
+    pub fn shutdown(&mut self) -> Result<()> {
+        let (status, body) = self.request("POST", "/shutdown", "")?;
+        if status != 200 {
+            bail!("shutdown refused with HTTP {status}: {body}");
+        }
+        Ok(())
+    }
+}
+
+/// Load-run shape.
+#[derive(Clone, Debug)]
+pub struct LoadOptions {
+    /// Total predict requests across all workers.
+    pub requests: usize,
+    /// Concurrent client connections.
+    pub concurrency: usize,
+    /// Query rows per request.
+    pub rows: usize,
+    /// Target model id.
+    pub model: u64,
+    /// Path position queried.
+    pub selector: Selector,
+    /// Feature dimension of the target model.
+    pub dim: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        LoadOptions {
+            requests: 1000,
+            concurrency: 4,
+            rows: 4,
+            model: 1,
+            selector: Selector::Step(4),
+            dim: 1,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregated result of a load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub rows: usize,
+    pub errors: usize,
+    pub wall_secs: f64,
+    /// Completed requests per second.
+    pub request_throughput: f64,
+    /// Query rows per second.
+    pub row_throughput: f64,
+    /// Per-request latency, seconds.
+    pub latency: LatencyStats,
+}
+
+impl LoadReport {
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        use crate::metrics::fmt_secs;
+        format!(
+            "requests {} ({} rows, {} errors) in {}\n\
+             throughput {:.0} req/s | {:.0} rows/s\n\
+             latency p50 {} | p90 {} | p99 {} | max {}",
+            self.requests,
+            self.rows,
+            self.errors,
+            fmt_secs(self.wall_secs),
+            self.request_throughput,
+            self.row_throughput,
+            fmt_secs(self.latency.p50),
+            fmt_secs(self.latency.p90),
+            fmt_secs(self.latency.p99),
+            fmt_secs(self.latency.max),
+        )
+    }
+}
+
+/// Run a closed-loop load test; returns the aggregated report.
+pub fn run_load(addr: &str, opts: &LoadOptions) -> Result<LoadReport> {
+    if opts.requests == 0 || opts.concurrency == 0 || opts.rows == 0 {
+        bail!("requests, concurrency and rows must all be ≥ 1");
+    }
+    let workers = opts.concurrency.min(opts.requests);
+    let base = opts.requests / workers;
+    let extra = opts.requests % workers;
+    let t0 = Instant::now();
+    let results: Vec<Result<(Vec<f64>, usize)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let quota = base + usize::from(w < extra);
+            let opts = opts.clone();
+            let addr = addr.to_string();
+            handles.push(scope.spawn(move || load_worker(&addr, &opts, w as u64, quota)));
+        }
+        handles.into_iter().map(|h| h.join().expect("load worker panicked")).collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    let mut latencies = Vec::with_capacity(opts.requests);
+    let mut errors = 0usize;
+    for r in results {
+        let (lats, errs) = r?;
+        latencies.extend(lats);
+        errors += errs;
+    }
+    let completed = latencies.len();
+    let latency = LatencyStats::from_samples(latencies);
+    Ok(LoadReport {
+        requests: completed,
+        rows: completed * opts.rows,
+        errors,
+        wall_secs,
+        request_throughput: completed as f64 / wall_secs.max(1e-12),
+        row_throughput: (completed * opts.rows) as f64 / wall_secs.max(1e-12),
+        latency,
+    })
+}
+
+fn load_worker(
+    addr: &str,
+    opts: &LoadOptions,
+    widx: u64,
+    quota: usize,
+) -> Result<(Vec<f64>, usize)> {
+    let mut client = ServeClient::connect(addr)?;
+    let mut rng = Pcg64::new(opts.seed ^ widx.wrapping_mul(0x9E3779B97F4A7C15));
+    let mut latencies = Vec::with_capacity(quota);
+    let mut errors = 0usize;
+    for _ in 0..quota {
+        let rows: Vec<Vec<f64>> =
+            (0..opts.rows).map(|_| (0..opts.dim).map(|_| rng.normal()).collect()).collect();
+        let req = PredictRequest { model: opts.model, selector: opts.selector, rows };
+        let t = Instant::now();
+        match client.predict(&req) {
+            Ok((200, _)) => latencies.push(t.elapsed().as_secs_f64()),
+            Ok((_status, _body)) => errors += 1,
+            Err(_) => {
+                errors += 1;
+                // One reconnect attempt keeps a dropped keep-alive
+                // connection from failing the rest of the quota.
+                client = ServeClient::connect(addr)?;
+            }
+        }
+    }
+    Ok((latencies, errors))
+}

@@ -1,0 +1,39 @@
+//! L4 — the model-serving subsystem.
+//!
+//! Everything needed to run a fitted-path inference service on top of
+//! the LARS family, with zero external dependencies (see DESIGN.md
+//! §"L4 — serving"):
+//!
+//! * [`store`] — [`ModelRegistry`]: versioned in-memory + on-disk
+//!   storage of [`crate::lars::path::PathSnapshot`]s, LRU-bounded, with
+//!   warm-start reuse (a fit whose family already has a covering path
+//!   is free).
+//! * [`engine`] — [`PredictionEngine`]: evaluate any stored path at an
+//!   arbitrary step or λ (piecewise-linear between breakpoints), with
+//!   per-(model, selector) request batching through one dense GEMV and
+//!   an LRU coefficient-snapshot cache. Exactness contract: at stored
+//!   breakpoints, served predictions are bit-identical to evaluating
+//!   the fitter's coefficients directly.
+//! * [`queue`] — [`FitQueue`]: OS-thread worker pool running fit jobs
+//!   asynchronously and registering the results.
+//! * [`protocol`] — the hand-rolled line protocol + HTTP/1.1 framing +
+//!   minimal JSON emission.
+//! * [`http`] — the front end (`calars serve`): `/fit`, `/predict`,
+//!   `/models`, `/stats` over `std::net::TcpListener`, with a
+//!   cross-connection [`http::Batcher`].
+//! * [`loadgen`] — the closed-loop load generator
+//!   (`calars bench-serve`, `benches/serving.rs`).
+
+pub mod engine;
+pub mod http;
+pub mod loadgen;
+pub mod protocol;
+pub mod queue;
+pub mod store;
+
+pub use engine::{EngineStats, PredictionEngine, Query, Selector};
+pub use http::{serve, spawn_server, ServeOptions, ServerHandle};
+pub use loadgen::{run_load, LoadOptions, LoadReport, ServeClient};
+pub use protocol::{FitRequest, PredictRequest};
+pub use queue::{FitQueue, FitSpec, JobState, QueueStats};
+pub use store::{ModelMeta, ModelRecord, ModelRegistry, RegistryStats};

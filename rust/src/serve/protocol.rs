@@ -1,0 +1,524 @@
+//! Wire formats for the serving front end — all hand-rolled (the
+//! offline crate set has no HTTP or JSON dependency, same no-deps
+//! spirit as [`crate::config::Args`]).
+//!
+//! Three layers, each testable without sockets:
+//!
+//! * a **line protocol** for request bodies (`key value` lines,
+//!   `x v1 v2 …` query rows) — [`PredictRequest`]/[`FitRequest`]
+//!   encode/parse round-trip exactly (f64s print via Rust's shortest
+//!   round-trippable `Display`);
+//! * minimal **HTTP/1.1 framing**: request/response reader and writer
+//!   supporting `Content-Length` bodies and keep-alive;
+//! * a tiny **JSON emitter** (plus a scanner for the few fields our
+//!   own client needs back).
+
+use super::engine::Selector;
+use crate::error::{bail, Context, Result};
+use std::io::{BufRead, Read};
+
+// ── line protocol: /predict ─────────────────────────────────────────
+
+/// Body of `POST /predict`.
+///
+/// ```text
+/// model 3
+/// step 5          # or: lambda 0.25
+/// x 0.1 0.2 0.3
+/// x 1 0 2
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictRequest {
+    pub model: u64,
+    pub selector: Selector,
+    /// One feature vector per query row.
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl PredictRequest {
+    pub fn encode(&self) -> String {
+        let mut s = format!("model {}\n", self.model);
+        match self.selector {
+            Selector::Step(k) => s.push_str(&format!("step {k}\n")),
+            Selector::Lambda(l) => s.push_str(&format!("lambda {l}\n")),
+        }
+        for row in &self.rows {
+            s.push('x');
+            for v in row {
+                s.push(' ');
+                s.push_str(&v.to_string());
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut model: Option<u64> = None;
+        let mut selector: Option<Selector> = None;
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, rest) = line.split_once(' ').unwrap_or((line, ""));
+            match key {
+                "model" => {
+                    model = Some(
+                        rest.trim()
+                            .parse()
+                            .with_context(|| format!("line {}: bad model id", ln + 1))?,
+                    )
+                }
+                "step" => {
+                    selector = Some(Selector::Step(
+                        rest.trim()
+                            .parse()
+                            .with_context(|| format!("line {}: bad step", ln + 1))?,
+                    ))
+                }
+                "lambda" => {
+                    let l: f64 = rest
+                        .trim()
+                        .parse()
+                        .with_context(|| format!("line {}: bad lambda", ln + 1))?;
+                    selector = Some(Selector::Lambda(l));
+                }
+                "x" => {
+                    let row: Vec<f64> = rest
+                        .split_whitespace()
+                        .map(|t| t.parse::<f64>())
+                        .collect::<std::result::Result<_, _>>()
+                        .with_context(|| format!("line {}: bad x row", ln + 1))?;
+                    rows.push(row);
+                }
+                other => bail!("line {}: unknown key '{other}'", ln + 1),
+            }
+        }
+        let model = model.context("missing 'model' line")?;
+        let selector = selector.context("missing 'step' or 'lambda' line")?;
+        if rows.is_empty() {
+            bail!("no 'x' query rows");
+        }
+        Ok(PredictRequest { model, selector, rows })
+    }
+}
+
+// ── line protocol: /fit ─────────────────────────────────────────────
+
+/// Body of `POST /fit` (every line optional; defaults below).
+///
+/// ```text
+/// name sector-60
+/// algo blars
+/// dataset sector
+/// t 60
+/// b 4
+/// p 8
+/// seed 42
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct FitRequest {
+    pub name: String,
+    pub algo: String,
+    pub dataset: String,
+    pub t: usize,
+    pub b: usize,
+    pub p: usize,
+    pub seed: u64,
+}
+
+impl Default for FitRequest {
+    fn default() -> Self {
+        FitRequest {
+            name: String::new(),
+            algo: "lars".to_string(),
+            dataset: "tiny".to_string(),
+            t: 16,
+            b: 1,
+            p: 4,
+            seed: 42,
+        }
+    }
+}
+
+impl FitRequest {
+    pub fn encode(&self) -> String {
+        let mut s = String::new();
+        if !self.name.is_empty() {
+            s.push_str(&format!("name {}\n", self.name));
+        }
+        s.push_str(&format!("algo {}\n", self.algo));
+        s.push_str(&format!("dataset {}\n", self.dataset));
+        s.push_str(&format!("t {}\n", self.t));
+        s.push_str(&format!("b {}\n", self.b));
+        s.push_str(&format!("p {}\n", self.p));
+        s.push_str(&format!("seed {}\n", self.seed));
+        s
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut out = FitRequest::default();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, rest) = line.split_once(' ').unwrap_or((line, ""));
+            let rest = rest.trim();
+            let bad = |what: &str| format!("line {}: bad {what}", ln + 1);
+            match key {
+                "name" => out.name = rest.to_string(),
+                "algo" => out.algo = rest.to_string(),
+                "dataset" => out.dataset = rest.to_string(),
+                "t" => out.t = rest.parse().with_context(|| bad("t"))?,
+                "b" => out.b = rest.parse().with_context(|| bad("b"))?,
+                "p" => out.p = rest.parse().with_context(|| bad("p"))?,
+                "seed" => out.seed = rest.parse().with_context(|| bad("seed"))?,
+                other => bail!("line {}: unknown key '{other}'", ln + 1),
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ── HTTP/1.1 framing ────────────────────────────────────────────────
+
+/// Largest accepted body (guards a malformed Content-Length).
+const MAX_BODY: usize = 64 << 20;
+const MAX_HEADERS: usize = 100;
+/// Largest accepted request/status/header line — a peer streaming
+/// bytes with no newline must not grow server memory unboundedly.
+const MAX_LINE: usize = 64 << 10;
+
+/// Read one `\n`-terminated line with a hard length cap. `Ok(None)`
+/// = EOF before any byte.
+fn read_line_capped(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (used, done) = {
+            let available = r.fill_buf()?;
+            if available.is_empty() {
+                (0, true) // EOF; whatever is buffered is the final line
+            } else if let Some(i) = available.iter().position(|&b| b == b'\n') {
+                buf.extend_from_slice(&available[..=i]);
+                (i + 1, true)
+            } else {
+                buf.extend_from_slice(available);
+                (available.len(), false)
+            }
+        };
+        r.consume(used);
+        if done {
+            if used == 0 && buf.is_empty() {
+                return Ok(None);
+            }
+            break;
+        }
+        if buf.len() > MAX_LINE {
+            bail!("protocol line exceeds the {MAX_LINE} byte cap");
+        }
+    }
+    String::from_utf8(buf).context("non-UTF-8 bytes in protocol line").map(Some)
+}
+
+/// A parsed request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Decoded `k=v` pairs from the query string.
+    pub query: Vec<(String, String)>,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// True for `?key=1`/`?key=true`/bare `?key`.
+    pub fn query_flag(&self, key: &str) -> bool {
+        match self.query_get(key) {
+            Some(v) => v == "1" || v == "true" || v.is_empty(),
+            None => false,
+        }
+    }
+}
+
+/// Read one request off a keep-alive connection. `Ok(None)` = clean EOF
+/// (the peer closed between requests).
+pub fn read_http_request(r: &mut impl BufRead) -> Result<Option<HttpRequest>> {
+    let Some(line) = read_line_capped(r)? else {
+        return Ok(None);
+    };
+    let start = line.trim_end();
+    let mut parts = start.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) => (m.to_string(), t.to_string(), v),
+        _ => bail!("malformed request line '{start}'"),
+    };
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version '{version}'");
+    }
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    let (path, query) = split_target(&target);
+    Ok(Some(HttpRequest { method, path, query, headers, body }))
+}
+
+/// Serialize a response with `Content-Length` framing.
+pub fn http_response(status: u16, content_type: &str, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+        reason(status),
+        body.len()
+    )
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// Client side: read one `(status, body)` response.
+pub fn read_http_response(r: &mut impl BufRead) -> Result<(u16, String)> {
+    let line = read_line_capped(r)?.context("connection closed before response")?;
+    let start = line.trim_end();
+    let mut parts = start.split_whitespace();
+    let version = parts.next().context("empty status line")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("malformed status line '{start}'");
+    }
+    let status: u16 = parts
+        .next()
+        .context("missing status code")?
+        .parse()
+        .with_context(|| format!("bad status code in '{start}'"))?;
+    let headers = read_headers(r)?;
+    let body = read_body(r, &headers)?;
+    Ok((status, body))
+}
+
+fn read_headers(r: &mut impl BufRead) -> Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line_capped(r)?.context("connection closed inside headers")?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= MAX_HEADERS {
+            bail!("too many headers");
+        }
+        let (k, v) = line.split_once(':').with_context(|| format!("malformed header '{line}'"))?;
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+}
+
+fn read_body(r: &mut impl BufRead, headers: &[(String, String)]) -> Result<String> {
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.parse().context("bad Content-Length"))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        bail!("body of {len} bytes exceeds the {MAX_BODY} byte cap");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("short body")?;
+    String::from_utf8(buf).context("body is not UTF-8")
+}
+
+fn split_target(target: &str) -> (String, Vec<(String, String)>) {
+    match target.split_once('?') {
+        None => (target.to_string(), Vec::new()),
+        Some((path, qs)) => {
+            let query = qs
+                .split('&')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => (kv.to_string(), String::new()),
+                })
+                .collect();
+            (path.to_string(), query)
+        }
+    }
+}
+
+// ── minimal JSON ────────────────────────────────────────────────────
+
+/// Escape a string for inclusion in a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON number for an f64 (`null` for non-finite values).
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        v.to_string()
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Scan our own emitted JSON for `"key": <u64>` (good enough for the
+/// in-tree client; not a general JSON parser).
+pub fn json_find_u64(body: &str, key: &str) -> Option<u64> {
+    let needle = format!("\"{key}\":");
+    let at = body.find(&needle)? + needle.len();
+    let rest = body[at..].trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Scan for `"key": "<string>"` (no unescaping — our emitted values
+/// are plain words).
+pub fn json_find_str<'a>(body: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\":");
+    let at = body.find(&needle)? + needle.len();
+    let rest = body[at..].trim_start().strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(&rest[..end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn predict_round_trip_exact() {
+        let req = PredictRequest {
+            model: 7,
+            selector: Selector::Step(3),
+            rows: vec![vec![0.1, -2.5, 3.0], vec![1.0 / 3.0, f64::MIN_POSITIVE, 0.0]],
+        };
+        let back = PredictRequest::parse(&req.encode()).unwrap();
+        assert_eq!(back, req, "encode → parse must be exact (Display round-trips f64)");
+        let req_l = PredictRequest { selector: Selector::Lambda(0.12345678901234567), ..req };
+        let back = PredictRequest::parse(&req_l.encode()).unwrap();
+        assert_eq!(back, req_l);
+    }
+
+    #[test]
+    fn predict_parse_rejects_malformed() {
+        assert!(PredictRequest::parse("step 1\nx 1 2\n").is_err(), "missing model");
+        assert!(PredictRequest::parse("model 1\nx 1 2\n").is_err(), "missing selector");
+        assert!(PredictRequest::parse("model 1\nstep 2\n").is_err(), "no rows");
+        assert!(PredictRequest::parse("model 1\nstep 2\nx 1 two\n").is_err(), "bad float");
+        assert!(PredictRequest::parse("model 1\nstep 2\nbogus 3\nx 1\n").is_err());
+    }
+
+    #[test]
+    fn fit_round_trip_and_defaults() {
+        let req = FitRequest {
+            name: "sector-60".into(),
+            algo: "blars".into(),
+            dataset: "sector".into(),
+            t: 60,
+            b: 4,
+            p: 8,
+            seed: 9,
+        };
+        assert_eq!(FitRequest::parse(&req.encode()).unwrap(), req);
+        let d = FitRequest::parse("").unwrap();
+        assert_eq!(d, FitRequest::default());
+        assert_eq!(FitRequest::parse("t 5\n").unwrap().t, 5);
+    }
+
+    #[test]
+    fn http_request_round_trip_with_body_and_query() {
+        let body = "model 1\nstep 2\nx 1 2 3\n";
+        let wire = format!(
+            "POST /predict?wait=1&tag=x HTTP/1.1\r\nHost: h\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let mut r = BufReader::new(wire.as_bytes());
+        let req = read_http_request(&mut r).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert!(req.query_flag("wait"));
+        assert_eq!(req.query_get("tag"), Some("x"));
+        assert_eq!(req.header("host"), Some("h"));
+        assert_eq!(req.body, body);
+        // Clean EOF after the request → None.
+        assert!(read_http_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn http_response_round_trip() {
+        let wire = http_response(200, "application/json", "{\"ok\":true}");
+        let mut r = BufReader::new(wire.as_bytes());
+        let (status, body) = read_http_response(&mut r).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+    }
+
+    #[test]
+    fn http_rejects_malformed() {
+        let mut r = BufReader::new(&b"NOT A REQUEST\r\n\r\n"[..]);
+        assert!(read_http_request(&mut r).is_err());
+        let mut r = BufReader::new(&b"GET / HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort"[..]);
+        assert!(read_http_request(&mut r).is_err(), "short body");
+    }
+
+    #[test]
+    fn endless_line_without_newline_is_capped() {
+        // A peer streaming bytes with no '\n' must hit the line cap,
+        // not grow server memory without bound.
+        let garbage = vec![b'a'; MAX_LINE + 1024];
+        let mut r = BufReader::new(garbage.as_slice());
+        let err = read_http_request(&mut r).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "{err:#}");
+        // Same guard inside headers.
+        let mut wire = b"GET / HTTP/1.1\r\nX-Big: ".to_vec();
+        wire.extend(vec![b'x'; MAX_LINE + 1024]);
+        let mut r = BufReader::new(wire.as_slice());
+        assert!(read_http_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn json_helpers() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(f64::NAN), "null");
+        let body = "{\"job\": 12, \"state\": \"done\", \"model\": 3}";
+        assert_eq!(json_find_u64(body, "job"), Some(12));
+        assert_eq!(json_find_u64(body, "model"), Some(3));
+        assert_eq!(json_find_u64(body, "missing"), None);
+        assert_eq!(json_find_str(body, "state"), Some("done"));
+    }
+}

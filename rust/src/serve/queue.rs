@@ -1,0 +1,419 @@
+//! Asynchronous fit jobs: a worker pool of OS threads that runs
+//! LARS/bLARS/T-bLARS fits off the request path and registers the
+//! resulting path snapshots.
+//!
+//! A `/fit` request enqueues a [`FitSpec`] and immediately gets a job
+//! id; callers poll [`FitQueue::state`] or block on [`FitQueue::wait`]
+//! (the HTTP layer's `?wait=1`). Before fitting, the worker asks the
+//! registry for a **warm start**: if the model family already has a
+//! stored path covering the requested `t`, the job completes instantly
+//! against the existing model — fitting a prefix of a path that is
+//! already on disk is free.
+
+use super::store::{ModelMeta, ModelRegistry};
+use crate::cluster::{ExecMode, HwParams, SimCluster};
+use crate::config::Algo;
+use crate::data::{datasets, partition};
+use crate::error::Result;
+use crate::lars::blars::{blars_with_snapshot, BlarsOptions};
+use crate::lars::serial::{lars_with_snapshot, LarsOptions};
+use crate::lars::tblars::{tblars_with_snapshot, TblarsOptions};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One fit job.
+#[derive(Clone, Debug)]
+pub struct FitSpec {
+    /// Display name for the registered model ("" → generated).
+    pub name: String,
+    pub algo: Algo,
+    /// Dataset name resolved through [`datasets::by_name`].
+    pub dataset: String,
+    /// Target path length.
+    pub t: usize,
+    /// Block size.
+    pub b: usize,
+    /// Simulated ranks for blars/tblars (rounded up to a power of two).
+    pub p: usize,
+    pub seed: u64,
+}
+
+impl Default for FitSpec {
+    fn default() -> Self {
+        FitSpec {
+            name: String::new(),
+            algo: Algo::Lars,
+            dataset: "tiny".to_string(),
+            t: 16,
+            b: 1,
+            p: 4,
+            seed: 42,
+        }
+    }
+}
+
+impl FitSpec {
+    fn meta(&self) -> ModelMeta {
+        ModelMeta {
+            name: self.name.clone(),
+            algo: self.algo.name().to_string(),
+            dataset: self.dataset.clone(),
+            t: self.t,
+            b: self.b,
+            // Normalized the same way run_fit normalizes it, so the
+            // warm-start family matches what actually gets fitted.
+            p: self.p.max(1).next_power_of_two(),
+            seed: self.seed,
+        }
+    }
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done { model: u64, reused: bool, wall_secs: f64 },
+    Failed { error: String },
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done { .. } | JobState::Failed { .. })
+    }
+
+    /// Short status word for the JSON responses.
+    pub fn word(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
+        }
+    }
+}
+
+enum Work {
+    Job(u64, FitSpec),
+    Shutdown,
+}
+
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    states: Mutex<HashMap<u64, JobState>>,
+    cv: Condvar,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// Queue counters exposed through `/stats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub in_flight: u64,
+}
+
+/// Worker pool running fit jobs on OS threads.
+pub struct FitQueue {
+    shared: Arc<Shared>,
+    /// Mutex-wrapped so `FitQueue` is `Sync` on every toolchain
+    /// (`mpsc::Sender` only became `Sync` in later std versions).
+    tx: Mutex<Sender<Work>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    next_job: AtomicU64,
+    nworkers: usize,
+    stopped: AtomicBool,
+}
+
+impl FitQueue {
+    /// Start `workers` fit threads (≥ 1) over `registry`.
+    pub fn new(registry: Arc<ModelRegistry>, workers: usize) -> Self {
+        let nworkers = workers.max(1);
+        let (tx, rx) = channel::<Work>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            registry,
+            states: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(nworkers);
+        for widx in 0..nworkers {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("calars-fit-{widx}"))
+                    .spawn(move || worker_loop(rx, shared))
+                    .expect("spawn fit worker"),
+            );
+        }
+        FitQueue {
+            shared,
+            tx: Mutex::new(tx),
+            workers: Mutex::new(handles),
+            next_job: AtomicU64::new(1),
+            nworkers,
+            stopped: AtomicBool::new(false),
+        }
+    }
+
+    /// Enqueue a job; returns its id immediately. After shutdown the
+    /// job is marked Failed instead of queued.
+    pub fn submit(&self, spec: FitSpec) -> u64 {
+        let id = self.next_job.fetch_add(1, Ordering::Relaxed);
+        self.shared.states.lock().unwrap().insert(id, JobState::Queued);
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+        let sent = !self.stopped.load(Ordering::SeqCst)
+            && self.tx.lock().unwrap().send(Work::Job(id, spec)).is_ok();
+        if !sent {
+            self.fail_job(id, "fit queue is shut down");
+        }
+        id
+    }
+
+    fn fail_job(&self, id: u64, error: &str) {
+        let mut st = self.shared.states.lock().unwrap();
+        let terminal = st.get(&id).map_or(false, JobState::is_terminal);
+        if !terminal {
+            st.insert(id, JobState::Failed { error: error.to_string() });
+            self.shared.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+
+    /// Current state of a job (None = unknown id).
+    pub fn state(&self, job: u64) -> Option<JobState> {
+        self.shared.states.lock().unwrap().get(&job).cloned()
+    }
+
+    /// Block until the job reaches a terminal state or `timeout`
+    /// elapses; returns the last observed state.
+    pub fn wait(&self, job: u64, timeout: Duration) -> Option<JobState> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.states.lock().unwrap();
+        loop {
+            match st.get(&job) {
+                None => return None,
+                Some(s) if s.is_terminal() => return Some(s.clone()),
+                Some(_) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return st.get(&job).cloned();
+            }
+            let (guard, _) = self.shared.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Counter snapshot for `/stats`.
+    pub fn stats(&self) -> QueueStats {
+        let submitted = self.shared.submitted.load(Ordering::Relaxed);
+        let completed = self.shared.completed.load(Ordering::Relaxed);
+        let failed = self.shared.failed.load(Ordering::Relaxed);
+        QueueStats {
+            submitted,
+            completed,
+            failed,
+            in_flight: submitted.saturating_sub(completed + failed),
+        }
+    }
+
+    /// Stop accepting work and join all workers (idempotent).
+    pub fn shutdown(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in 0..self.nworkers {
+                let _ = tx.send(Work::Shutdown);
+            }
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        // A submit racing the sentinel sends can land its job *behind*
+        // them, where no worker will ever pop it; fail every job still
+        // non-terminal so waiters wake instead of running out the clock.
+        let stuck: Vec<u64> = {
+            let st = self.shared.states.lock().unwrap();
+            st.iter().filter(|(_, s)| !s.is_terminal()).map(|(&id, _)| id).collect()
+        };
+        for id in stuck {
+            self.fail_job(id, "fit queue is shut down");
+        }
+    }
+}
+
+impl Drop for FitQueue {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, shared: Arc<Shared>) {
+    loop {
+        // Hold the lock only for the blocking recv (the book's thread
+        // pool pattern): once a message arrives the guard drops and the
+        // next idle worker can take the receiver.
+        let work = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let (job, spec) = match work {
+            Ok(Work::Job(job, spec)) => (job, spec),
+            Ok(Work::Shutdown) | Err(_) => return,
+        };
+        set_state(&shared, job, JobState::Running);
+        let t0 = Instant::now();
+        let state = match run_fit(&shared.registry, &spec) {
+            Ok((model, reused)) => {
+                shared.completed.fetch_add(1, Ordering::Relaxed);
+                JobState::Done { model, reused, wall_secs: t0.elapsed().as_secs_f64() }
+            }
+            Err(e) => {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
+                JobState::Failed { error: format!("{e:#}") }
+            }
+        };
+        set_state(&shared, job, state);
+    }
+}
+
+fn set_state(shared: &Shared, job: u64, state: JobState) {
+    shared.states.lock().unwrap().insert(job, state);
+    shared.cv.notify_all();
+}
+
+/// Execute one fit: dataset lookup → warm-start check → fit →
+/// register. Returns (model id, warm-reused?).
+fn run_fit(registry: &Arc<ModelRegistry>, spec: &FitSpec) -> Result<(u64, bool)> {
+    let meta = spec.meta();
+    if let Some(rec) = registry.find_warm(&meta, spec.t) {
+        return Ok((rec.id, true));
+    }
+    let ds = datasets::by_name(&spec.dataset, spec.seed)
+        .ok_or_else(|| crate::anyhow!("unknown dataset '{}'", spec.dataset))?;
+    let p = spec.p.max(1).next_power_of_two();
+    let snap = match spec.algo {
+        Algo::Lars => {
+            let (_, snap) =
+                lars_with_snapshot(&ds.a, &ds.b, &LarsOptions { t: spec.t, ..Default::default() });
+            snap
+        }
+        Algo::Blars => {
+            let mut cluster = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
+            let (_, snap) = blars_with_snapshot(
+                &ds.a,
+                &ds.b,
+                &BlarsOptions { t: spec.t, b: spec.b, ..Default::default() },
+                &mut cluster,
+            );
+            snap
+        }
+        Algo::Tblars => {
+            let parts = partition::balanced_col_partition(&ds.a, p);
+            let mut cluster = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
+            let (_, snap) = tblars_with_snapshot(
+                &ds.a,
+                &ds.b,
+                &parts,
+                &TblarsOptions { t: spec.t, b: spec.b, ..Default::default() },
+                &mut cluster,
+            );
+            snap
+        }
+    };
+    Ok((registry.insert(meta, snap), false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue() -> FitQueue {
+        FitQueue::new(Arc::new(ModelRegistry::new(16)), 2)
+    }
+
+    #[test]
+    fn fit_job_completes_and_registers() {
+        let q = queue();
+        let job = q.submit(FitSpec { t: 6, ..Default::default() });
+        let state = q.wait(job, Duration::from_secs(60)).expect("job known");
+        let (model, reused) = match state {
+            JobState::Done { model, reused, .. } => (model, reused),
+            other => panic!("expected Done, got {other:?}"),
+        };
+        assert!(!reused);
+        let rec = q.shared.registry.get(model).expect("model registered");
+        assert_eq!(rec.snapshot.max_support(), 6);
+        assert_eq!(rec.meta.dataset, "tiny");
+    }
+
+    #[test]
+    fn second_smaller_fit_is_warm_reused() {
+        let q = queue();
+        let j1 = q.submit(FitSpec { t: 8, ..Default::default() });
+        let s1 = q.wait(j1, Duration::from_secs(60)).unwrap();
+        let m1 = match s1 {
+            JobState::Done { model, .. } => model,
+            other => panic!("first fit should finish: {other:?}"),
+        };
+        let j2 = q.submit(FitSpec { t: 4, ..Default::default() });
+        let s2 = q.wait(j2, Duration::from_secs(60)).unwrap();
+        let (m2, reused) = match s2 {
+            JobState::Done { model, reused, .. } => (model, reused),
+            other => panic!("second fit should finish: {other:?}"),
+        };
+        assert!(reused, "covering path must be reused");
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn unknown_dataset_fails_cleanly() {
+        let q = queue();
+        let job = q.submit(FitSpec { dataset: "no-such-data".into(), ..Default::default() });
+        let state = q.wait(job, Duration::from_secs(60)).unwrap();
+        let error = match state {
+            JobState::Failed { error } => error,
+            other => panic!("expected failure, got {other:?}"),
+        };
+        assert!(error.contains("no-such-data"));
+        assert_eq!(q.stats().failed, 1);
+    }
+
+    #[test]
+    fn blars_and_tblars_fit_through_the_queue() {
+        let q = queue();
+        let jb = q.submit(FitSpec { algo: Algo::Blars, t: 6, b: 2, ..Default::default() });
+        let jt = q.submit(FitSpec { algo: Algo::Tblars, t: 6, b: 2, ..Default::default() });
+        for job in [jb, jt] {
+            let state = q.wait(job, Duration::from_secs(120)).unwrap();
+            assert!(
+                matches!(state, JobState::Done { .. }),
+                "job {job} should finish: {state:?}"
+            );
+        }
+        assert_eq!(q.stats().completed, 2);
+    }
+
+    #[test]
+    fn state_unknown_job_is_none() {
+        let q = queue();
+        assert!(q.state(12345).is_none());
+        assert!(q.wait(12345, Duration::from_millis(10)).is_none());
+    }
+}

@@ -1,0 +1,689 @@
+//! The model registry: versioned storage for fitted path snapshots.
+//!
+//! A fitted LARS/bLARS/T-bLARS run is snapshotted once
+//! ([`PathSnapshot`]) and then served forever after; the registry is
+//! the in-memory home of those snapshots plus a compact on-disk format
+//! (`*.calp`, magic `CALP`, format-versioned) so a serving process can
+//! restart without refitting.
+//!
+//! Semantics the serving layer relies on (covered by `tests/serve.rs`):
+//!
+//! * **Insert** assigns a fresh monotonically increasing id; a model
+//!   whose [`ModelMeta::family_key`] matches an existing record gets
+//!   `version = max(existing) + 1` (the old version stays addressable
+//!   until evicted).
+//! * **Evict**: the registry holds at most `capacity` models; inserting
+//!   past that evicts the least-recently-*used* model (a `get` counts
+//!   as use, a `list` does not).
+//! * **Warm-start reuse**: a fit request whose family already has a
+//!   stored path covering at least the requested `t` steps is served
+//!   from the existing snapshot — the path *is* the sequence of models,
+//!   so a shorter prefix is free (the paper's "sequence of linear
+//!   models" consumed as such).
+
+use crate::error::{bail, Context, Result};
+use crate::lars::path::{PathSnapshot, PathStep};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Descriptive metadata attached to a stored model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelMeta {
+    /// Human-readable name (generated from the family if empty).
+    pub name: String,
+    /// Fitting algorithm ("lars" | "blars" | "tblars" | "lasso").
+    pub algo: String,
+    /// Dataset the model was fitted on (registry family identity).
+    pub dataset: String,
+    /// Requested path length (selected columns).
+    pub t: usize,
+    /// Block size used by the fit.
+    pub b: usize,
+    /// Simulated ranks used by the fit (T-bLARS selections depend on
+    /// the induced column partition, so this is part of the identity).
+    pub p: usize,
+    /// Fit seed.
+    pub seed: u64,
+}
+
+impl ModelMeta {
+    /// Minimal metadata carrying only a display name (tests, ad-hoc
+    /// inserts).
+    pub fn named(name: &str) -> Self {
+        ModelMeta {
+            name: name.to_string(),
+            algo: "lars".to_string(),
+            dataset: String::new(),
+            t: 0,
+            b: 1,
+            p: 1,
+            seed: 0,
+        }
+    }
+
+    /// Identity used for versioning and warm-start reuse: two fits of
+    /// the same dataset with the same algorithm, block size, rank
+    /// count and seed belong to the same family (their paths are
+    /// prefixes of each other — `p` matters because the T-bLARS
+    /// tournament selects against the `p`-way column partition). The
+    /// empty dataset never forms a family.
+    pub fn family_key(&self) -> Option<(&str, &str, usize, usize, u64)> {
+        if self.dataset.is_empty() {
+            None
+        } else {
+            Some((self.dataset.as_str(), self.algo.as_str(), self.b, self.p, self.seed))
+        }
+    }
+
+    /// Display name, falling back to a generated one.
+    pub fn display_name(&self) -> String {
+        if self.name.is_empty() {
+            format!("{}-{}-t{}", self.dataset, self.algo, self.t)
+        } else {
+            self.name.clone()
+        }
+    }
+}
+
+/// One stored model: metadata + the fitted path snapshot.
+#[derive(Clone, Debug)]
+pub struct ModelRecord {
+    pub id: u64,
+    /// Bumped when a fit replaces an earlier member of the same family.
+    pub version: u32,
+    pub meta: ModelMeta,
+    pub snapshot: PathSnapshot,
+    /// Unix timestamp (seconds) of registration.
+    pub created_unix: u64,
+}
+
+/// Registry counters exposed through `/stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    pub models: usize,
+    pub inserted: u64,
+    pub evicted: u64,
+    pub warm_reused: u64,
+    pub approx_bytes: usize,
+}
+
+struct Inner {
+    models: HashMap<u64, Arc<ModelRecord>>,
+    /// LRU order: front = least recently used.
+    lru: Vec<u64>,
+    next_id: u64,
+    inserted: u64,
+    evicted: u64,
+    warm_reused: u64,
+}
+
+/// Thread-safe, capacity-bounded model store.
+///
+/// With a persist directory attached ([`Self::with_persist_dir`]),
+/// every insert writes through to disk immediately and evictions/
+/// removals delete their file — a SIGKILL after a fit completes loses
+/// nothing, without relying on a graceful-shutdown sweep.
+pub struct ModelRegistry {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    persist_dir: Option<PathBuf>,
+}
+
+fn now_unix() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+impl ModelRegistry {
+    /// Registry holding at most `capacity` models (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "registry capacity must be ≥ 1");
+        ModelRegistry {
+            capacity,
+            inner: Mutex::new(Inner {
+                models: HashMap::new(),
+                lru: Vec::new(),
+                next_id: 1,
+                inserted: 0,
+                evicted: 0,
+                warm_reused: 0,
+            }),
+            persist_dir: None,
+        }
+    }
+
+    /// Registry backed by `dir`: existing `*.calp` files are loaded,
+    /// and from then on every insert writes through to disk while
+    /// evictions and removals delete their file. Files that did not
+    /// survive loading (over-capacity eviction, manual orphans) are
+    /// swept from disk so disk and memory agree.
+    pub fn with_persist_dir(dir: &Path, capacity: usize) -> Result<Self> {
+        let mut reg = if dir.is_dir() {
+            Self::load_dir(dir, capacity)?
+        } else {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create registry dir {}", dir.display()))?;
+            Self::new(capacity)
+        };
+        reg.persist_dir = Some(dir.to_path_buf());
+        let live = {
+            let g = reg.inner.lock().unwrap();
+            g.models.keys().copied().collect::<std::collections::HashSet<u64>>()
+        };
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("read registry dir {}", dir.display()))?
+        {
+            let Ok(entry) = entry else { continue };
+            let path = entry.path();
+            if path.extension().map_or(false, |x| x == "calp") {
+                let id = path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .and_then(|s| s.parse::<u64>().ok());
+                if id.map_or(true, |id| !live.contains(&id)) {
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        Ok(reg)
+    }
+
+    fn record_path(dir: &Path, id: u64) -> PathBuf {
+        dir.join(format!("{id:08}.calp"))
+    }
+
+    /// Register a snapshot; returns the new model id. Evicts the
+    /// least-recently-used model when over capacity. With a persist
+    /// directory, the record is written to disk before this returns
+    /// (write-through; IO failures are logged, not fatal — the
+    /// in-memory registry stays authoritative).
+    pub fn insert(&self, meta: ModelMeta, snapshot: PathSnapshot) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let version = match meta.family_key() {
+            Some(key) => {
+                g.models
+                    .values()
+                    .filter(|r| r.meta.family_key() == Some(key))
+                    .map(|r| r.version)
+                    .max()
+                    .unwrap_or(0)
+                    + 1
+            }
+            None => 1,
+        };
+        let id = g.next_id;
+        g.next_id += 1;
+        let rec = Arc::new(ModelRecord { id, version, meta, snapshot, created_unix: now_unix() });
+        g.models.insert(id, rec.clone());
+        g.lru.push(id);
+        g.inserted += 1;
+        let mut victims = Vec::new();
+        while g.models.len() > self.capacity {
+            let victim = g.lru.remove(0);
+            g.models.remove(&victim);
+            g.evicted += 1;
+            victims.push(victim);
+        }
+        // File IO deliberately happens under the lock: it serializes
+        // this record's write against a concurrent insert's eviction
+        // of it (otherwise delete-before-write could leave an orphan
+        // file). Inserts are fit-completion rare; the brief stall of
+        // concurrent get()s is an acceptable price for consistency.
+        if let Some(dir) = &self.persist_dir {
+            let mut buf = Vec::new();
+            let write = write_record(&mut buf, &rec)
+                .and_then(|_| std::fs::write(Self::record_path(dir, id), &buf).map_err(Into::into));
+            if let Err(e) = write {
+                eprintln!("registry: persisting model {id} failed: {e:#}");
+            }
+            for victim in &victims {
+                let _ = std::fs::remove_file(Self::record_path(dir, *victim));
+            }
+        }
+        id
+    }
+
+    /// Fetch a model and mark it most-recently-used.
+    pub fn get(&self, id: u64) -> Option<Arc<ModelRecord>> {
+        let mut g = self.inner.lock().unwrap();
+        let rec = g.models.get(&id)?.clone();
+        if let Some(pos) = g.lru.iter().position(|&x| x == id) {
+            g.lru.remove(pos);
+            g.lru.push(id);
+        }
+        Some(rec)
+    }
+
+    /// All models, ascending id (does not touch LRU order).
+    pub fn list(&self) -> Vec<Arc<ModelRecord>> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<Arc<ModelRecord>> = g.models.values().cloned().collect();
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Remove a model; true if it existed.
+    pub fn remove(&self, id: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(pos) = g.lru.iter().position(|&x| x == id) {
+            g.lru.remove(pos);
+        }
+        let existed = g.models.remove(&id).is_some();
+        if existed {
+            // Under the lock for the same write/delete ordering reason
+            // as insert().
+            if let Some(dir) = &self.persist_dir {
+                let _ = std::fs::remove_file(Self::record_path(dir, id));
+            }
+        }
+        existed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Warm-start lookup: a model of the same family whose stored path
+    /// already covers `t` selected columns. Counts as a use (LRU) and
+    /// as a warm reuse (stats).
+    pub fn find_warm(&self, meta: &ModelMeta, t: usize) -> Option<Arc<ModelRecord>> {
+        let key = meta.family_key()?;
+        let mut g = self.inner.lock().unwrap();
+        let rec = g
+            .models
+            .values()
+            .filter(|r| r.meta.family_key() == Some(key) && r.snapshot.max_support() >= t)
+            .max_by_key(|r| r.version)
+            .cloned()?;
+        let id = rec.id;
+        if let Some(pos) = g.lru.iter().position(|&x| x == id) {
+            g.lru.remove(pos);
+            g.lru.push(id);
+        }
+        g.warm_reused += 1;
+        Some(rec)
+    }
+
+    /// Counter snapshot for `/stats`.
+    pub fn stats(&self) -> RegistryStats {
+        let g = self.inner.lock().unwrap();
+        RegistryStats {
+            models: g.models.len(),
+            inserted: g.inserted,
+            evicted: g.evicted,
+            warm_reused: g.warm_reused,
+            approx_bytes: g.models.values().map(|r| r.snapshot.approx_bytes()).sum(),
+        }
+    }
+
+    /// Persist every model as `<id>.calp` under `dir`; returns the
+    /// number written.
+    pub fn save_dir(&self, dir: &Path) -> Result<usize> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create registry dir {}", dir.display()))?;
+        let models = self.list();
+        for rec in &models {
+            let path = Self::record_path(dir, rec.id);
+            let mut buf = Vec::new();
+            write_record(&mut buf, rec)?;
+            std::fs::write(&path, &buf)
+                .with_context(|| format!("write {}", path.display()))?;
+        }
+        Ok(models.len())
+    }
+
+    /// Rebuild a registry from a directory written by [`Self::save_dir`]
+    /// (ids and versions are preserved; LRU order is id order).
+    pub fn load_dir(dir: &Path, capacity: usize) -> Result<Self> {
+        let reg = ModelRegistry::new(capacity);
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .with_context(|| format!("read registry dir {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map_or(false, |x| x == "calp"))
+            .collect();
+        paths.sort();
+        let mut g = reg.inner.lock().unwrap();
+        for path in paths {
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("read {}", path.display()))?;
+            let rec = read_record(&mut bytes.as_slice())
+                .with_context(|| format!("parse {}", path.display()))?;
+            g.next_id = g.next_id.max(rec.id + 1);
+            g.lru.push(rec.id);
+            g.models.insert(rec.id, Arc::new(rec));
+            g.inserted += 1;
+            while g.models.len() > capacity {
+                let victim = g.lru.remove(0);
+                g.models.remove(&victim);
+                g.evicted += 1;
+            }
+        }
+        drop(g);
+        Ok(reg)
+    }
+}
+
+// ── on-disk format ──────────────────────────────────────────────────
+//
+// Little-endian, fixed layout, format-versioned:
+//
+//   b"CALP" | u32 format | u64 id | u32 version | u64 created_unix
+//   | str name | str algo | str dataset | u64 t | u64 b | u64 p
+//   | u64 seed | u64 n | u64 nsteps
+//   | nsteps × ( f64 lambda | f64 residual_norm | u64 k
+//                | k × u64 support | k × f64 coefs )
+//
+// where `str` is u32 length + UTF-8 bytes. f64s round-trip bit-exactly
+// (to_le_bytes/from_le_bytes), which the serving exactness contract
+// depends on.
+
+const MAGIC: &[u8; 4] = b"CALP";
+const FORMAT: u32 = 1;
+/// Sanity caps for corrupt files (not real limits).
+const MAX_STR: u32 = 1 << 16;
+const MAX_STEPS: u64 = 1 << 24;
+const MAX_SUPPORT: u64 = 1 << 24;
+const MAX_DIM: u64 = 1 << 32;
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f64(w: &mut impl Write, v: f64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_str(w: &mut impl Write, s: &str) -> Result<()> {
+    let bytes = s.as_bytes();
+    if bytes.len() as u64 > MAX_STR as u64 {
+        bail!("string too long for registry format ({} bytes)", bytes.len());
+    }
+    w_u32(w, bytes.len() as u32)?;
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn r_str(r: &mut impl Read) -> Result<String> {
+    let len = r_u32(r)?;
+    if len > MAX_STR {
+        bail!("string length {len} exceeds cap");
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).context("invalid UTF-8 in registry file")
+}
+
+/// Serialize one record (see the format comment above).
+pub fn write_record(w: &mut impl Write, rec: &ModelRecord) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w_u32(w, FORMAT)?;
+    w_u64(w, rec.id)?;
+    w_u32(w, rec.version)?;
+    w_u64(w, rec.created_unix)?;
+    w_str(w, &rec.meta.name)?;
+    w_str(w, &rec.meta.algo)?;
+    w_str(w, &rec.meta.dataset)?;
+    w_u64(w, rec.meta.t as u64)?;
+    w_u64(w, rec.meta.b as u64)?;
+    w_u64(w, rec.meta.p as u64)?;
+    w_u64(w, rec.meta.seed)?;
+    w_u64(w, rec.snapshot.n as u64)?;
+    w_u64(w, rec.snapshot.steps.len() as u64)?;
+    for step in &rec.snapshot.steps {
+        w_f64(w, step.lambda)?;
+        w_f64(w, step.residual_norm)?;
+        w_u64(w, step.support.len() as u64)?;
+        for &j in &step.support {
+            w_u64(w, j as u64)?;
+        }
+        for &v in &step.coefs {
+            w_f64(w, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize one record written by [`write_record`].
+pub fn read_record(r: &mut impl Read) -> Result<ModelRecord> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a calars model file (bad magic)");
+    }
+    let format = r_u32(r)?;
+    if format != FORMAT {
+        bail!("unsupported registry format {format} (this build reads {FORMAT})");
+    }
+    let id = r_u64(r)?;
+    let version = r_u32(r)?;
+    let created_unix = r_u64(r)?;
+    let name = r_str(r)?;
+    let algo = r_str(r)?;
+    let dataset = r_str(r)?;
+    let t = r_u64(r)? as usize;
+    let b = r_u64(r)? as usize;
+    let p = r_u64(r)? as usize;
+    let seed = r_u64(r)?;
+    let n64 = r_u64(r)?;
+    if n64 > MAX_DIM {
+        bail!("feature dimension {n64} exceeds cap");
+    }
+    let n = n64 as usize;
+    let nsteps = r_u64(r)?;
+    if nsteps > MAX_STEPS {
+        bail!("step count {nsteps} exceeds cap");
+    }
+    let mut steps = Vec::with_capacity(nsteps as usize);
+    for _ in 0..nsteps {
+        let lambda = r_f64(r)?;
+        let residual_norm = r_f64(r)?;
+        let k = r_u64(r)?;
+        if k > MAX_SUPPORT || k > n64 {
+            bail!("support size {k} exceeds cap (n = {n64})");
+        }
+        let mut support = Vec::with_capacity(k as usize);
+        for _ in 0..k {
+            let j = r_u64(r)?;
+            // Validate here so a corrupt file fails at load time instead
+            // of panicking densify() inside the serving batcher later.
+            if j >= n64 {
+                bail!("support index {j} out of range for dimension {n64}");
+            }
+            support.push(j as usize);
+        }
+        let mut coefs = Vec::with_capacity(k as usize);
+        for _ in 0..k {
+            coefs.push(r_f64(r)?);
+        }
+        steps.push(PathStep { lambda, support, coefs, residual_norm });
+    }
+    Ok(ModelRecord {
+        id,
+        version,
+        meta: ModelMeta { name, algo, dataset, t, b, p, seed },
+        snapshot: PathSnapshot { n, steps },
+        created_unix,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(n: usize, k: usize) -> PathSnapshot {
+        let steps = (0..=k)
+            .map(|s| PathStep {
+                lambda: (k + 1 - s) as f64,
+                support: (0..s).collect(),
+                coefs: (0..s).map(|j| j as f64 * 0.5 - 1.0).collect(),
+                residual_norm: 1.0 / (s + 1) as f64,
+            })
+            .collect();
+        PathSnapshot { n, steps }
+    }
+
+    fn meta(dataset: &str, t: usize) -> ModelMeta {
+        ModelMeta {
+            name: String::new(),
+            algo: "lars".into(),
+            dataset: dataset.into(),
+            t,
+            b: 1,
+            p: 4,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn insert_get_roundtrip_and_versioning() {
+        let reg = ModelRegistry::new(8);
+        let id1 = reg.insert(meta("tiny", 3), snap(10, 3));
+        let id2 = reg.insert(meta("tiny", 5), snap(10, 5));
+        assert_ne!(id1, id2);
+        assert_eq!(reg.get(id1).unwrap().version, 1);
+        assert_eq!(reg.get(id2).unwrap().version, 2, "same family bumps version");
+        let other = reg.insert(meta("year", 3), snap(10, 3));
+        assert_eq!(reg.get(other).unwrap().version, 1, "new family restarts at 1");
+    }
+
+    #[test]
+    fn lru_eviction_prefers_untouched() {
+        let reg = ModelRegistry::new(2);
+        let a = reg.insert(meta("a", 2), snap(4, 2));
+        let b = reg.insert(meta("b", 2), snap(4, 2));
+        reg.get(a); // a is now more recently used than b
+        let c = reg.insert(meta("c", 2), snap(4, 2));
+        assert!(reg.get(b).is_none(), "least-recently-used model evicted");
+        assert!(reg.get(a).is_some());
+        assert!(reg.get(c).is_some());
+        assert_eq!(reg.stats().evicted, 1);
+    }
+
+    #[test]
+    fn warm_start_finds_covering_path_only() {
+        let reg = ModelRegistry::new(8);
+        reg.insert(meta("tiny", 6), snap(10, 6));
+        let m = meta("tiny", 4);
+        assert!(reg.find_warm(&m, 4).is_some(), "stored path covers t=4");
+        assert!(reg.find_warm(&m, 9).is_none(), "stored path too short for t=9");
+        let mut other_algo = meta("tiny", 4);
+        other_algo.algo = "blars".into();
+        assert!(reg.find_warm(&other_algo, 2).is_none(), "different family");
+        let mut other_p = meta("tiny", 4);
+        other_p.p = 16;
+        assert!(
+            reg.find_warm(&other_p, 2).is_none(),
+            "different rank count is a different family (T-bLARS selections depend on p)"
+        );
+        assert_eq!(reg.stats().warm_reused, 1);
+    }
+
+    #[test]
+    fn record_binary_roundtrip_is_bit_exact() {
+        let rec = ModelRecord {
+            id: 42,
+            version: 3,
+            meta: meta("sector", 5),
+            snapshot: snap(100, 5),
+            created_unix: 1_700_000_000,
+        };
+        let mut buf = Vec::new();
+        write_record(&mut buf, &rec).unwrap();
+        let back = read_record(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.id, rec.id);
+        assert_eq!(back.version, rec.version);
+        assert_eq!(back.meta, rec.meta);
+        assert_eq!(back.snapshot, rec.snapshot, "f64 payload must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_record(&mut &b"NOPE"[..]).is_err());
+        let mut buf = Vec::new();
+        let rec = ModelRecord {
+            id: 1,
+            version: 1,
+            meta: meta("x", 1),
+            snapshot: snap(2, 1),
+            created_unix: 0,
+        };
+        write_record(&mut buf, &rec).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_record(&mut buf.as_slice()).is_err(), "truncated file fails");
+    }
+
+    #[test]
+    fn write_through_persistence_survives_without_graceful_shutdown() {
+        let dir = std::env::temp_dir()
+            .join(format!("calars-store-wt-{}-{:?}", std::process::id(), std::thread::current().id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let reg = ModelRegistry::with_persist_dir(&dir, 2).unwrap();
+            reg.insert(meta("a", 2), snap(4, 2));
+            let b = reg.insert(meta("b", 2), snap(4, 2));
+            // No save_dir, no drop hook — simulate a hard kill by just
+            // abandoning the registry. Write-through already persisted.
+            assert!(ModelRegistry::record_path(&dir, b).is_file());
+            // Eviction deletes its file.
+            let c = reg.insert(meta("c", 2), snap(4, 2));
+            assert!(!ModelRegistry::record_path(&dir, 1).is_file(), "evicted file removed");
+            assert!(ModelRegistry::record_path(&dir, c).is_file());
+            // remove() deletes too.
+            assert!(reg.remove(c));
+            assert!(!ModelRegistry::record_path(&dir, c).is_file());
+        }
+        let back = ModelRegistry::with_persist_dir(&dir, 2).unwrap();
+        assert_eq!(back.len(), 1, "exactly the surviving model reloads");
+        assert!(back.list()[0].meta.dataset == "b");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_support_index() {
+        // A support index ≥ n must fail at load time, not panic the
+        // serving batcher at first predict.
+        let mut rec = ModelRecord {
+            id: 1,
+            version: 1,
+            meta: meta("x", 1),
+            snapshot: snap(4, 2),
+            created_unix: 0,
+        };
+        rec.snapshot.steps[2].support[1] = 99; // n = 4
+        let mut buf = Vec::new();
+        write_record(&mut buf, &rec).unwrap();
+        let err = read_record(&mut buf.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+}

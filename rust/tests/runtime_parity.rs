@@ -2,7 +2,10 @@
 //! the same numbers as the native f64 kernels, within f32 tolerance.
 //!
 //! Requires `make artifacts` to have run (the Makefile orders this);
-//! the suite fails with a clear message otherwise.
+//! the suite fails with a clear message otherwise. The whole file is
+//! compiled only with the `pjrt` cargo feature — without it there is no
+//! XLA client to test against.
+#![cfg(feature = "pjrt")]
 
 use calars::data::datasets;
 use calars::linalg::Matrix;

@@ -1,0 +1,391 @@
+//! Integration tests for the L4 serving subsystem: protocol round
+//! trips, registry semantics, the engine's bit-exactness contract
+//! (property-tested), persistence, and the HTTP front end end to end.
+
+use calars::data::synthetic::{generate, SyntheticSpec};
+use calars::lars::path::{densify, ls_coefficients, PathSnapshot};
+use calars::lars::serial::{lars_with_snapshot, LarsOptions};
+use calars::linalg::dot;
+use calars::proptest_lite::{check, Config};
+use calars::rng::Pcg64;
+use calars::serve::{
+    run_load, spawn_server, FitRequest, LoadOptions, ModelMeta, ModelRegistry, PredictRequest,
+    PredictionEngine, Query, Selector, ServeClient, ServeOptions,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn problem(rng: &mut Pcg64, size: usize) -> (calars::data::synthetic::Synthetic, usize) {
+    let m = 30 + size * 5;
+    let n = 15 + size * 4;
+    let spec = SyntheticSpec {
+        m,
+        n,
+        density: if rng.uniform() < 0.5 { 1.0 } else { 0.4 },
+        col_skew: rng.uniform_range(0.0, 1.0),
+        k_true: 3 + size / 4,
+        noise: rng.uniform_range(0.0, 0.1),
+    };
+    let t = 2 + size.min(8);
+    (generate(&spec, rng.next_u64()), t)
+}
+
+/// The acceptance-criteria property: a prediction served from a stored
+/// path at any breakpoint is bit-identical to evaluating the fitter's
+/// returned coefficients at the same step.
+#[test]
+fn prop_served_predictions_bit_identical_to_direct_eval() {
+    check(
+        Config { cases: 24, seed: 0x5E21E },
+        |rng, size| {
+            let (s, t) = problem(rng, size);
+            let queries: Vec<Vec<f64>> = (0..3)
+                .map(|_| (0..s.a.ncols()).map(|_| rng.normal()).collect())
+                .collect();
+            (s, t, queries)
+        },
+        |(s, t, queries)| {
+            let (_, snap) = lars_with_snapshot(&s.a, &s.b, &LarsOptions {
+                t: *t,
+                ..Default::default()
+            });
+            let registry = Arc::new(ModelRegistry::new(4));
+            let id = registry.insert(ModelMeta::named("prop"), snap.clone());
+            let engine = PredictionEngine::new(registry, 32);
+            for step in 0..snap.len() {
+                // Direct evaluation: an independent LS solve on the
+                // step's support, densified, dotted with the query.
+                let support = &snap.steps[step].support;
+                let direct = if support.is_empty() {
+                    vec![0.0; s.a.ncols()]
+                } else {
+                    let coefs = ls_coefficients(&s.a, support, &s.b)
+                        .ok_or("rank-deficient prefix in test problem")?;
+                    densify(s.a.ncols(), support, &coefs)
+                };
+                for x in queries {
+                    let served = engine
+                        .predict(&Query { model: id, selector: Selector::Step(step), x: x.clone() })
+                        .map_err(|e| format!("predict failed: {e:#}"))?;
+                    let expect = dot(x, &direct);
+                    if served.to_bits() != expect.to_bits() {
+                        return Err(format!(
+                            "step {step}: served {served:?} != direct {expect:?}"
+                        ));
+                    }
+                    // And at the exact stored λ, identical again.
+                    let lam = snap.steps[step].lambda;
+                    let via_lambda = engine
+                        .predict(&Query {
+                            model: id,
+                            selector: Selector::Lambda(lam),
+                            x: x.clone(),
+                        })
+                        .map_err(|e| format!("lambda predict failed: {e:#}"))?;
+                    if via_lambda.to_bits() != expect.to_bits() {
+                        // Duplicate λ values select the first matching
+                        // breakpoint; only require bit-equality when this
+                        // step is the first with its λ.
+                        let first = snap
+                            .steps
+                            .iter()
+                            .position(|st| st.lambda == lam)
+                            .unwrap();
+                        if first == step {
+                            return Err(format!(
+                                "λ={lam}: served {via_lambda:?} != direct {expect:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_predict_request_round_trips_exactly() {
+    check(
+        Config { cases: 48, seed: 0xB0D1 },
+        |rng, size| {
+            let rows = (0..1 + size / 8)
+                .map(|_| {
+                    (0..1 + size)
+                        .map(|_| rng.normal() * 10f64.powi((rng.below(9) as i32) - 4))
+                        .collect::<Vec<f64>>()
+                })
+                .collect::<Vec<_>>();
+            let selector = if rng.uniform() < 0.5 {
+                Selector::Step(rng.below(100))
+            } else {
+                Selector::Lambda(rng.uniform() * 3.0)
+            };
+            PredictRequest { model: rng.next_u64(), selector, rows }
+        },
+        |req| {
+            let back = PredictRequest::parse(&req.encode())
+                .map_err(|e| format!("parse failed: {e:#}"))?;
+            if &back == req {
+                Ok(())
+            } else {
+                Err(format!("round trip changed the request: {back:?} vs {req:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn registry_persistence_round_trip_preserves_predictions() {
+    let s = generate(
+        &SyntheticSpec { m: 60, n: 30, density: 1.0, col_skew: 0.3, k_true: 5, noise: 0.02 },
+        77,
+    );
+    let (_, snap) = lars_with_snapshot(&s.a, &s.b, &LarsOptions { t: 8, ..Default::default() });
+    let registry = Arc::new(ModelRegistry::new(8));
+    let mut meta = ModelMeta::named("persisted");
+    meta.dataset = "synthetic-77".into();
+    let id = registry.insert(meta, snap);
+
+    let dir = std::env::temp_dir().join(format!("calars-serve-test-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    assert_eq!(registry.save_dir(&dir).unwrap(), 1);
+    let reloaded = Arc::new(ModelRegistry::load_dir(&dir, 8).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+
+    let rec_a = registry.get(id).unwrap();
+    let rec_b = reloaded.get(id).unwrap();
+    assert_eq!(rec_a.snapshot, rec_b.snapshot, "snapshot survives disk bit-exactly");
+    assert_eq!(rec_a.meta, rec_b.meta);
+
+    let e1 = PredictionEngine::new(registry, 8);
+    let e2 = PredictionEngine::new(reloaded, 8);
+    let mut rng = Pcg64::new(5);
+    for step in [0usize, 3, 8] {
+        let x: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let q = Query { model: id, selector: Selector::Step(step), x };
+        assert_eq!(
+            e1.predict(&q).unwrap().to_bits(),
+            e2.predict(&q).unwrap().to_bits(),
+            "reloaded registry serves identical bits"
+        );
+    }
+}
+
+#[test]
+fn http_end_to_end_fit_predict_models_stats() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        batch_window_us: 100,
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    // Health first.
+    let (status, body) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    // Fit a model synchronously.
+    let fit = FitRequest { dataset: "tiny".into(), t: 8, ..Default::default() };
+    let model = client.fit(&fit, true).unwrap();
+    let dim = client.model_dim(model).unwrap();
+    assert!(dim > 0);
+
+    // Server-side predictions must match a local fit of the same
+    // deterministic dataset, bit for bit (f64 Display round-trips).
+    let ds = calars::data::datasets::by_name("tiny", 42).unwrap();
+    let (_, snap) =
+        lars_with_snapshot(&ds.a, &ds.b, &LarsOptions { t: 8, ..Default::default() });
+    assert_eq!(dim, ds.a.ncols());
+    let mut rng = Pcg64::new(9);
+    let rows: Vec<Vec<f64>> = (0..5).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
+    let req = PredictRequest { model, selector: Selector::Step(8), rows: rows.clone() };
+    let (status, body) = client.predict(&req).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let served: Vec<f64> = body
+        .split_once('[')
+        .unwrap()
+        .1
+        .trim_end_matches(|c| c == '}' || c == ']')
+        .split(',')
+        .map(|t| t.parse().unwrap())
+        .collect();
+    let dense = snap.dense_coefs(8).unwrap();
+    assert_eq!(served.len(), rows.len());
+    for (x, y) in rows.iter().zip(&served) {
+        assert_eq!(y.to_bits(), dot(x, &dense).to_bits(), "HTTP round trip is exact");
+    }
+
+    // Error paths are per-request, connection stays usable.
+    let bad = PredictRequest { model: 999, selector: Selector::Step(0), rows: rows.clone() };
+    let (status, _) = client.predict(&bad).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client.request("GET", "/nope", "").unwrap();
+    assert_eq!(status, 404);
+
+    // Listings and counters.
+    let (status, body) = client.request("GET", "/models", "").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"dataset\":\"tiny\""), "{body}");
+    let (status, body) = client.request("GET", "/stats", "").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"engine\""), "{body}");
+    assert!(body.contains("\"queries\""), "{body}");
+
+    // A second, smaller fit of the same family is warm-reused.
+    let fit2 = FitRequest { dataset: "tiny".into(), t: 4, ..Default::default() };
+    let model2 = client.fit(&fit2, true).unwrap();
+    assert_eq!(model2, model, "covering path reused instead of refitting");
+
+    server.stop();
+}
+
+#[test]
+fn http_load_generator_round_trip() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        batch_window_us: 100,
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let model = client
+        .fit(&FitRequest { dataset: "tiny".into(), t: 6, ..Default::default() }, true)
+        .unwrap();
+    let dim = client.model_dim(model).unwrap();
+
+    let report = run_load(
+        &addr,
+        &LoadOptions {
+            requests: 40,
+            concurrency: 4,
+            rows: 3,
+            model,
+            selector: Selector::Step(6),
+            dim,
+            seed: 1,
+        },
+    )
+    .unwrap();
+    assert_eq!(report.errors, 0, "no request may fail");
+    assert_eq!(report.requests, 40);
+    assert_eq!(report.rows, 120);
+    assert!(report.request_throughput > 0.0);
+    assert!(report.latency.p99 >= report.latency.p50);
+
+    // The batcher must have grouped at least some concurrent rows.
+    let (_, stats) = client.request("GET", "/stats", "").unwrap();
+    assert!(stats.contains("\"batches\""), "{stats}");
+
+    server.stop();
+}
+
+#[test]
+fn oneshot_shutdown_contract() {
+    // Servers spawned in-process always honor /shutdown (that is how
+    // ServerHandle::stop works); exercise the client-visible side.
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    client.shutdown().expect("shutdown accepted");
+    drop(client);
+    server.stop(); // returns promptly: the accept loop already exited
+
+    // The port stops answering shortly after.
+    std::thread::sleep(Duration::from_millis(50));
+    let mut alive = false;
+    if let Ok(mut c) = ServeClient::connect(&addr) {
+        if c.request("GET", "/healthz", "").is_ok() {
+            alive = true;
+        }
+    }
+    assert!(!alive, "server must stop accepting after shutdown");
+}
+
+#[test]
+fn lambda_interpolation_matches_manual_linear_blend() {
+    let s = generate(
+        &SyntheticSpec { m: 70, n: 25, density: 1.0, col_skew: 0.0, k_true: 4, noise: 0.05 },
+        31,
+    );
+    let (_, snap) = lars_with_snapshot(&s.a, &s.b, &LarsOptions { t: 6, ..Default::default() });
+    let registry = Arc::new(ModelRegistry::new(4));
+    let id = registry.insert(ModelMeta::named("interp"), snap.clone());
+    let engine = PredictionEngine::new(registry, 16);
+
+    // Midpoint of a segment with distinct λ endpoints.
+    let seg = snap
+        .steps
+        .windows(2)
+        .position(|w| w[0].lambda > w[1].lambda)
+        .expect("a non-degenerate segment exists");
+    let (hi, lo) = (&snap.steps[seg], &snap.steps[seg + 1]);
+    let lam = 0.5 * (hi.lambda + lo.lambda);
+    let t = (hi.lambda - lam) / (hi.lambda - lo.lambda);
+    let a = densify(snap.n, &hi.support, &hi.coefs);
+    let b = densify(snap.n, &lo.support, &lo.coefs);
+    let blend: Vec<f64> = a.iter().zip(&b).map(|(ai, bi)| ai + t * (bi - ai)).collect();
+
+    let mut rng = Pcg64::new(3);
+    let x: Vec<f64> = (0..snap.n).map(|_| rng.normal()).collect();
+    let served = engine
+        .predict(&Query { model: id, selector: Selector::Lambda(lam), x: x.clone() })
+        .unwrap();
+    assert_eq!(served.to_bits(), dot(&x, &blend).to_bits());
+}
+
+/// Snapshot sanity on a second algorithm: the serving hooks exist for
+/// the parallel fitters too.
+#[test]
+fn blars_snapshot_hook_serves() {
+    use calars::cluster::{ExecMode, HwParams, SimCluster};
+    use calars::lars::blars::{blars_with_snapshot, BlarsOptions};
+    let ds = calars::data::datasets::by_name("tiny", 7).unwrap();
+    let mut cluster = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+    let (out, snap) = blars_with_snapshot(
+        &ds.a,
+        &ds.b,
+        &BlarsOptions { t: 8, b: 2, ..Default::default() },
+        &mut cluster,
+    );
+    assert_eq!(snap.max_support(), out.selected.len());
+    let registry = Arc::new(ModelRegistry::new(2));
+    let id = registry.insert(ModelMeta::named("blars"), snap);
+    let engine = PredictionEngine::new(registry, 8);
+    let x = vec![0.5; ds.a.ncols()];
+    assert!(engine
+        .predict(&Query { model: id, selector: Selector::Step(4), x })
+        .unwrap()
+        .is_finite());
+}
+
+/// PathSnapshot::from_lasso integrates with the engine too.
+#[test]
+fn lasso_snapshot_serves_exact_breakpoints() {
+    use calars::lars::lasso_lars::lasso_path;
+    let s = generate(
+        &SyntheticSpec { m: 60, n: 20, density: 1.0, col_skew: 0.0, k_true: 4, noise: 0.05 },
+        13,
+    );
+    let path = lasso_path(&s.a, &s.b, 8, 1e-8);
+    let snap = PathSnapshot::from_lasso(s.a.ncols(), &path);
+    let registry = Arc::new(ModelRegistry::new(2));
+    let id = registry.insert(ModelMeta::named("lasso"), snap);
+    let engine = PredictionEngine::new(registry, 8);
+    let mut rng = Pcg64::new(11);
+    let x: Vec<f64> = (0..s.a.ncols()).map(|_| rng.normal()).collect();
+    for (k, bp) in path.breakpoints.iter().enumerate() {
+        let served = engine
+            .predict(&Query { model: id, selector: Selector::Step(k), x: x.clone() })
+            .unwrap();
+        assert_eq!(served.to_bits(), dot(&x, &bp.x).to_bits());
+    }
+}

@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# CI for calars: format check, release build, test suite, then a live
+# serve → fit → predict → shutdown smoke cycle (README §CI).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== fmt =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "rustfmt unavailable — skipping format check"
+fi
+
+echo "== build (release) =="
+cargo build --release
+
+echo "== tests =="
+cargo test -q
+
+echo "== serving smoke =="
+BIN=target/release/calars
+PORT="${CALARS_SMOKE_PORT:-17878}"
+LOG="$(mktemp)"
+"$BIN" serve --port "$PORT" --oneshot --prefit tiny >"$LOG" 2>&1 &
+SERVER_PID=$!
+trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
+
+# Wait for the listener (prefit runs before accept).
+for _ in $(seq 1 100); do
+    if grep -q "listening on" "$LOG"; then break; fi
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "server died during startup:"; cat "$LOG"; exit 1
+    fi
+    sleep 0.1
+done
+grep -q "listening on" "$LOG" || { echo "server never started:"; cat "$LOG"; exit 1; }
+
+# One full request/response cycle through the batched prediction path,
+# then ask the --oneshot server to exit.
+"$BIN" bench-serve --addr "127.0.0.1:$PORT" --requests 50 --concurrency 4 --rows 4 --shutdown
+
+wait "$SERVER_PID"
+trap - EXIT
+echo "== ci OK =="
