@@ -1,0 +1,179 @@
+//! Parallel-scaling benchmark: 1→N-thread speedup of the hot kernels
+//! and an end-to-end bLARS fit on the paper's synthetic workloads,
+//! with bit-identity verification between thread counts baked in —
+//! any divergence between parallel and serial output exits nonzero,
+//! which is how `scripts/ci.sh` fails the build on a determinism
+//! regression.
+//!
+//! Run: `cargo bench --bench parallel_scaling` (human table)
+//!      `cargo bench --bench parallel_scaling -- --json` (the
+//!      machine-readable records ci.sh writes to BENCH_parallel.json;
+//!      schema per record: {bench, threads, wall_ms, speedup})
+
+use calars::data::datasets;
+use calars::lars::serial::{blars_serial, LarsOptions};
+use calars::linalg::DenseMatrix;
+use calars::metrics::{bench, black_box, fmt_secs};
+use calars::par::{self, ThreadPool};
+use calars::rng::Pcg64;
+
+struct Record {
+    bench: &'static str,
+    threads: usize,
+    wall_ms: f64,
+    speedup: f64,
+}
+
+/// One workload: produces a comparable output signature (f64 bit
+/// patterns) and a best-of-N wall time under the given pool.
+struct Outcome {
+    signature: Vec<u64>,
+    wall_secs: f64,
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn measure(pool: &ThreadPool, iters: usize, mut f: impl FnMut() -> Vec<f64>) -> Outcome {
+    par::with_pool(pool, || {
+        let signature = bits(&f());
+        let timing = bench(1, iters, || black_box(f()));
+        Outcome { signature, wall_secs: timing.best }
+    })
+}
+
+fn main() {
+    let json = std::env::args().any(|a| a == "--json");
+    let cores = par::detected_cores();
+    let mut counts: Vec<usize> = vec![1, 2, 4];
+    if cores > 4 {
+        counts.push(cores);
+    }
+    counts.dedup();
+    let pools: Vec<ThreadPool> =
+        counts.iter().map(|&t| ThreadPool::new(t, par::DEFAULT_MIN_CHUNK)).collect();
+    if !json {
+        println!("# parallel scaling ({cores} cores detected; threads ∈ {counts:?})\n");
+    }
+
+    // Workloads span the paper's regimes: tall-dense Aᵀr (year), sparse
+    // Aᵀr (sector), dense Gram assembly, the serving batch GEMV shape,
+    // and an end-to-end serial bLARS fit (γ-search + panel updates).
+    let year = datasets::year_like(1);
+    let sector = datasets::sector_like(1);
+    let mut rng = Pcg64::new(5);
+    let batch = DenseMatrix::from_fn(2048, 512, |_, _| rng.normal());
+    let coefs: Vec<f64> = (0..512).map(|j| (j as f64 * 0.01).sin()).collect();
+    let gram_ii: Vec<usize> = (0..60).collect();
+    let gram_jj: Vec<usize> = (30..90).collect();
+
+    let mut records: Vec<Record> = Vec::new();
+    let mut diverged = false;
+    type Workload<'a> = (&'static str, usize, Box<dyn FnMut() -> Vec<f64> + 'a>);
+    let workloads: Vec<Workload> = vec![
+        (
+            "dense_at_r_year",
+            10,
+            Box::new(|| {
+                let mut c = vec![0.0; year.a.ncols()];
+                year.a.at_r(&year.b, &mut c);
+                c
+            }),
+        ),
+        (
+            "sparse_at_r_sector",
+            10,
+            Box::new(|| {
+                let mut c = vec![0.0; sector.a.ncols()];
+                sector.a.at_r(&sector.b, &mut c);
+                c
+            }),
+        ),
+        (
+            "dense_gram_60x60_year",
+            8,
+            Box::new(|| year.a.gram_block(&gram_ii, &gram_jj).data().to_vec()),
+        ),
+        (
+            "serve_batch_gemv_2048x512",
+            10,
+            Box::new(|| {
+                let mut y = vec![0.0; batch.nrows()];
+                batch.gemv(&coefs, &mut y);
+                y
+            }),
+        ),
+        (
+            "blars_serial_year_t24_b4",
+            3,
+            Box::new(|| {
+                let out = blars_serial(
+                    &year.a,
+                    &year.b,
+                    &LarsOptions { t: 24, b: 4, ..Default::default() },
+                );
+                let mut sig: Vec<f64> = out.selected.iter().map(|&j| j as f64).collect();
+                sig.extend_from_slice(&out.residual_norms);
+                sig
+            }),
+        ),
+    ];
+
+    for (name, iters, mut f) in workloads {
+        let base = measure(&pools[0], iters, &mut f);
+        records.push(Record {
+            bench: name,
+            threads: counts[0],
+            wall_ms: base.wall_secs * 1e3,
+            speedup: 1.0,
+        });
+        if !json {
+            println!("## {name}");
+            println!("  threads=1  {:>10}  (baseline)", fmt_secs(base.wall_secs));
+        }
+        for (pool, &threads) in pools.iter().zip(&counts).skip(1) {
+            let run = measure(pool, iters, &mut f);
+            if run.signature != base.signature {
+                eprintln!("DIVERGENCE: {name} differs between threads=1 and threads={threads}");
+                diverged = true;
+            }
+            let speedup = base.wall_secs / run.wall_secs.max(1e-12);
+            if !json {
+                println!(
+                    "  threads={threads}  {:>10}  speedup {speedup:.2}x",
+                    fmt_secs(run.wall_secs)
+                );
+            }
+            records.push(Record { bench: name, threads, wall_ms: run.wall_secs * 1e3, speedup });
+        }
+        if !json {
+            println!();
+        }
+    }
+
+    if json {
+        let body: Vec<String> = records
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"bench\":\"{}\",\"threads\":{},\"wall_ms\":{:.3},\"speedup\":{:.3}}}",
+                    r.bench, r.threads, r.wall_ms, r.speedup
+                )
+            })
+            .collect();
+        println!("[{}]", body.join(",\n "));
+    } else {
+        let best = records
+            .iter()
+            .filter(|r| r.threads > 1)
+            .map(|r| r.speedup)
+            .fold(0.0_f64, f64::max);
+        println!("best multi-thread speedup: {best:.2}x");
+    }
+
+    if diverged {
+        eprintln!("parallel output diverged from serial — failing the bench");
+        std::process::exit(1);
+    }
+}

@@ -4,6 +4,7 @@
 
 use crate::cluster::{ExecMode, HwParams};
 use crate::error::{bail, Result};
+pub use crate::par::ParConfig;
 
 /// Which algorithm a run uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,8 +112,8 @@ pub struct Args {
 }
 
 /// Options that never take a value.
-pub const BOOL_FLAGS: [&str; 7] =
-    ["quick", "threads", "force", "verbose", "oneshot", "wait", "shutdown"];
+pub const BOOL_FLAGS: [&str; 8] =
+    ["quick", "threads", "force", "verbose", "oneshot", "wait", "shutdown", "json"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Self {
@@ -184,6 +185,13 @@ pub struct ServeConfig {
     pub persist_dir: Option<String>,
     /// `--prefit DATASET`: fit this dataset before accepting traffic.
     pub prefit: Option<String>,
+    /// Shared-memory execution (`--par-threads`, `--par-min-chunk`;
+    /// `CALARS_THREADS` / `CALARS_MIN_CHUNK` env when the flags are
+    /// absent). Carried here so whoever starts the server from a
+    /// `ServeConfig` — the CLI's serve command does this — can install
+    /// it via [`crate::par::configure`] before the first kernel runs;
+    /// `configure` is a no-op once the global pool exists.
+    pub par: ParConfig,
 }
 
 impl Default for ServeConfig {
@@ -200,6 +208,7 @@ impl Default for ServeConfig {
             oneshot: false,
             persist_dir: None,
             prefit: None,
+            par: ParConfig::default(),
         }
     }
 }
@@ -222,8 +231,27 @@ impl ServeConfig {
             oneshot: args.flag("oneshot"),
             persist_dir: args.get("persist").map(String::from),
             prefit: args.get("prefit").map(String::from),
+            par: par_config_from_args(args)?,
         })
     }
+}
+
+/// Resolve the shared-memory execution config: environment first
+/// (`CALARS_THREADS`, `CALARS_MIN_CHUNK`), CLI flags (`--par-threads`,
+/// `--par-min-chunk`) override. Every subcommand applies the result to
+/// the global pool before doing any work.
+pub fn par_config_from_args(args: &Args) -> Result<ParConfig> {
+    let env = ParConfig::from_env();
+    Ok(ParConfig {
+        threads: args.get_parse("par-threads", env.threads)?,
+        min_chunk: {
+            let c: usize = args.get_parse("par-min-chunk", env.min_chunk)?;
+            if c == 0 {
+                bail!("--par-min-chunk must be ≥ 1");
+            }
+            c
+        },
+    })
 }
 
 #[cfg(test)]
@@ -295,5 +323,18 @@ mod tests {
             .unwrap();
         assert_eq!(c.addr, "0.0.0.0:81", "--port overrides the addr's port");
         assert!(ServeConfig::from_args(&Args::parse(&argv("serve --port zzz"))).is_err());
+    }
+
+    #[test]
+    fn par_config_flags_override() {
+        let c = par_config_from_args(&Args::parse(&argv(
+            "serve --par-threads 3 --par-min-chunk 512",
+        )))
+        .unwrap();
+        assert_eq!(c.threads, 3);
+        assert_eq!(c.min_chunk, 512);
+        assert!(c.resolved_threads() >= 3);
+        assert!(par_config_from_args(&Args::parse(&argv("x --par-min-chunk 0"))).is_err());
+        assert!(par_config_from_args(&Args::parse(&argv("x --par-threads four"))).is_err());
     }
 }

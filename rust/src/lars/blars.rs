@@ -15,7 +15,7 @@ use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
 use crate::cluster::{Phase, SimCluster};
 use crate::data::partition::row_ranges;
-use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
+use crate::linalg::select::{argmax_b_by, argmin_b_by};
 use crate::linalg::{dot, Cholesky, DenseMatrix, Matrix};
 
 /// Options for a parallel bLARS run.
@@ -139,20 +139,14 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
     let block0 = std::mem::take(&mut selected);
     let g0 = DenseMatrix::from_vec(block0.len(), block0.len(), g0);
 
-    // ── Step 5: Cholesky on the master, one admitted column at a time
-    // (duplicates inside the initial block are excluded, not fatal). ──
+    // ── Step 5: Cholesky on the master via the chunked panel update;
+    // duplicates inside the initial block are excluded, not fatal
+    // (in_model[j] is already true for the whole block, set above). ──
     cluster.charge_flops(Phase::Cholesky, (b0 as u64).pow(3));
     let mut chol = Cholesky::empty();
     cluster.master(Phase::Cholesky, || {
-        let mut admitted: Vec<usize> = Vec::new();
-        for (r, &j) in block0.iter().enumerate() {
-            let mut grow: Vec<f64> = admitted.iter().map(|&ar| g0.get(r, ar)).collect();
-            grow.push(g0.get(r, r));
-            if chol.push_row(&grow).is_ok() {
-                admitted.push(r);
-                selected.push(j);
-            }
-            // in_model[j] already true either way (set above).
+        for &r in &chol.append_block_graceful(&DenseMatrix::zeros(0, block0.len()), &g0) {
+            selected.push(block0[r]);
         }
     });
     if selected.is_empty() {
@@ -217,24 +211,12 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
         });
         av = cluster.reduce_sum(Phase::Reduce, a_contribs);
 
-        // Step 12 (master): γ_j candidates over the complement.
+        // Step 12 (master): γ_j candidates over the complement, chunked
+        // on the pool (order and bits match the serial scan).
         cluster.charge_flops(Phase::GammaStep, (n - k) as u64 * 6);
         let gamma_full = 1.0 / h;
         let cand = cluster.master(Phase::GammaStep, || {
-            let mut cand: Vec<(usize, f64)> = Vec::with_capacity(n - k);
-            for j in 0..n {
-                if in_model[j] {
-                    continue;
-                }
-                let g1 = (ck - c[j]) / (ck * h - av[j]);
-                let g2 = (ck + c[j]) / (ck * h + av[j]);
-                if let Some(g) = min_positive2(g1, g2) {
-                    if g <= gamma_full * (1.0 + 1e-12) {
-                        cand.push((j, g));
-                    }
-                }
-            }
-            cand
+            super::serial::gamma_candidates(n, &in_model, &c, &av, ck, h, gamma_full)
         });
 
         // Steps 13-14 (master): b-th smallest γ + the b entering indices.
@@ -314,30 +296,22 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
             let gbb =
                 DenseMatrix::from_vec(new_block.len(), new_block.len(), gbb_flat.to_vec());
 
-            // Steps 21-23 (master): extend the Cholesky factor, admitting
-            // columns one at a time. A (near-)duplicate inside the block
-            // is excluded from the model rather than aborting (§5.2's
-            // "minor modifications" for linearly dependent columns) —
-            // no extra communication: both Gram blocks are already here.
+            // Steps 21-23 (master): extend the Cholesky factor through
+            // the chunked panel update (parallel forward solves, bit-
+            // identical to sequential push_rows); a (near-)duplicate is
+            // permanently excluded from the model rather than aborting
+            // (§5.2, via append_block_graceful) — no extra
+            // communication: both Gram blocks are already here.
             cluster.charge_flops(
                 Phase::Cholesky,
                 (new_block.len() * k * k + new_block.len().pow(3)) as u64,
             );
             cluster.master(Phase::Cholesky, || {
-                let mut admitted_in_block: Vec<usize> = Vec::new();
-                for (r, &j) in new_block.iter().enumerate() {
-                    let mut grow: Vec<f64> = (0..k).map(|i| gib.get(i, r)).collect();
-                    for &ar in &admitted_in_block {
-                        grow.push(gbb.get(r, ar));
-                    }
-                    grow.push(gbb.get(r, r));
-                    if chol.push_row(&grow).is_ok() {
-                        admitted_in_block.push(r);
-                        in_model[j] = true;
-                        selected.push(j);
-                    } else {
-                        in_model[j] = true; // permanently excluded
-                    }
+                for &r in &chol.append_block_graceful(&gib, &gbb) {
+                    selected.push(new_block[r]);
+                }
+                for &j in &new_block {
+                    in_model[j] = true;
                 }
             });
             ck = selected.iter().map(|&j| c[j].abs()).fold(f64::INFINITY, f64::min).max(ck);

@@ -42,6 +42,7 @@ pub struct MlarsOutput {
 /// * `pool` — this node's candidate columns (`Ĩ_v \ Ĩ₀`);
 /// * `budget` — number of new columns `b` to select;
 /// * `tol` — numerical floor.
+#[allow(clippy::too_many_arguments)] // mirrors Algorithm 4's parameter list
 pub fn mlars(
     a: &Matrix,
     b_vec: &[f64],

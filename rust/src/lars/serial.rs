@@ -13,7 +13,40 @@
 use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
 use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
-use crate::linalg::{dot, norm2, Cholesky, Matrix};
+use crate::linalg::{dot, norm2, Cholesky, DenseMatrix, Matrix};
+use crate::par;
+
+/// γ-candidate scan over the complement of the model (Algorithm 2 step
+/// 12), chunked on the pool. Chunk results concatenate in ascending
+/// chunk order, so both the candidate order and every f64 operation
+/// match the serial scan exactly — on any thread count.
+pub(super) fn gamma_candidates(
+    n: usize,
+    in_model: &[bool],
+    c: &[f64],
+    av: &[f64],
+    ck: f64,
+    h: f64,
+    gamma_full: f64,
+) -> Vec<(usize, f64)> {
+    let chunks = par::map_chunks(n, par::min_chunk(), |lo, hi| {
+        let mut loc: Vec<(usize, f64)> = Vec::new();
+        for j in lo..hi {
+            if in_model[j] {
+                continue;
+            }
+            let g1 = (ck - c[j]) / (ck * h - av[j]);
+            let g2 = (ck + c[j]) / (ck * h + av[j]);
+            if let Some(g) = min_positive2(g1, g2) {
+                if g <= gamma_full * (1.0 + 1e-12) {
+                    loc.push((j, g));
+                }
+            }
+        }
+        loc
+    });
+    chunks.concat()
+}
 
 /// Options for a serial run.
 #[derive(Clone, Debug)]
@@ -98,23 +131,18 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
             stop: StopReason::Saturated,
         };
     }
-    // Steps 4-5: Gram of the initial block + Cholesky, admitting columns
-    // one at a time (duplicates inside the very first block are excluded,
-    // not fatal — §5.2).
+    // Steps 4-5: Gram of the initial block + Cholesky via the chunked
+    // panel update, with graceful exclusion of duplicate columns
+    // (§5.2; a rank-deficient block degrades to one-at-a-time
+    // admission inside `append_block_graceful`).
     let mut chol = Cholesky::empty();
     {
         let g0 = a.gram_block(&block, &block);
-        let mut admitted: Vec<usize> = Vec::new();
-        for (r, &j) in block.iter().enumerate() {
-            let mut grow: Vec<f64> = admitted.iter().map(|&ar| g0.get(r, ar)).collect();
-            grow.push(g0.get(r, r));
-            if chol.push_row(&grow).is_ok() {
-                admitted.push(r);
-                in_model[j] = true;
-                selected.push(j);
-            } else {
-                in_model[j] = true;
-            }
+        for &r in &chol.append_block_graceful(&DenseMatrix::zeros(0, block.len()), &g0) {
+            selected.push(block[r]);
+        }
+        for &j in &block {
+            in_model[j] = true;
         }
     }
     if selected.is_empty() {
@@ -154,23 +182,11 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
         // Step 11: a = Aᵀu.
         a.at_r(&u, &mut av);
 
-        // Step 12: γ_j candidates over the complement.
+        // Step 12: γ_j candidates over the complement (pool-chunked).
         // Valid candidates lie in (0, 1/h]: beyond 1/h the selected
         // correlations have crossed zero (least-squares point reached).
         let gamma_full = 1.0 / h;
-        let mut cand: Vec<(usize, f64)> = Vec::new();
-        for j in 0..n {
-            if in_model[j] {
-                continue;
-            }
-            let g1 = (ck - c[j]) / (ck * h - av[j]);
-            let g2 = (ck + c[j]) / (ck * h + av[j]);
-            if let Some(g) = min_positive2(g1, g2) {
-                if g <= gamma_full * (1.0 + 1e-12) {
-                    cand.push((j, g));
-                }
-            }
-        }
+        let cand = gamma_candidates(n, &in_model, &c, &av, ck, h, gamma_full);
 
         let remaining = t - selected.len();
         let bsz = opts.b.min(remaining);
@@ -211,30 +227,18 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
         let hit_full_step = new_block.is_empty() || gamma >= gamma_full * (1.0 - 1e-12);
 
         if !new_block.is_empty() {
-            // Steps 20-23: extend the Cholesky factor by the new block.
-            // Columns are admitted one at a time so a block containing
-            // (near-)duplicates degrades gracefully: the offending column
-            // is excluded from the model instead of aborting the run
-            // (the paper's §5.2 "minor modifications" for dependent
-            // columns — duplicate columns are routine in real text data).
+            // Steps 20-23: extend the Cholesky factor by the new block
+            // through the chunked panel update (parallel forward
+            // solves, bit-identical to sequential push_rows); a column
+            // collinear with the model is permanently excluded rather
+            // than aborting the run (§5.2, via append_block_graceful).
             let gib = a.gram_block(&selected, &new_block);
             let gbb = a.gram_block(&new_block, &new_block);
-            let k0 = selected.len();
-            let mut admitted_in_block: Vec<usize> = Vec::new();
-            for (r, &j) in new_block.iter().enumerate() {
-                let mut grow: Vec<f64> = (0..k0).map(|i| gib.get(i, r)).collect();
-                for &ar in &admitted_in_block {
-                    grow.push(gbb.get(r, ar));
-                }
-                grow.push(gbb.get(r, r));
-                if chol.push_row(&grow).is_ok() {
-                    admitted_in_block.push(r);
-                    in_model[j] = true;
-                    selected.push(j);
-                } else {
-                    // Permanently exclude: collinear with the model.
-                    in_model[j] = true;
-                }
+            for &r in &chol.append_block_graceful(&gib, &gbb) {
+                selected.push(new_block[r]);
+            }
+            for &j in &new_block {
+                in_model[j] = true;
             }
             // New scalar c_k: per step 19 the paper tracks c_k(1−γh); the
             // entering block has |c_j| ≥ that value by construction, so the

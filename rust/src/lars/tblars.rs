@@ -17,7 +17,7 @@ use super::mlars::{mlars, MlarsOutput};
 use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
 use crate::cluster::topology::TournamentTree;
-use crate::cluster::{Phase, SimCluster, Tracer};
+use crate::cluster::{ExecMode, Phase, SimCluster, Tracer};
 use crate::linalg::{norm2, Cholesky, Matrix};
 
 /// Options for a T-bLARS run.
@@ -83,11 +83,26 @@ pub fn tblars(
         }
         let budget = opts.b.min(t - selected.len());
 
-        // ── Leaves (Alg 3 steps 5-6): parallel mLARS per rank. ──
-        let leaf_outs: Vec<MlarsOutput> = partition
-            .iter()
-            .map(|pool| mlars(a, b_vec, &y, &selected, pool, &chol, budget, opts.tol))
-            .collect();
+        // ── Leaves (Alg 3 steps 5-6): parallel mLARS per rank. Under
+        // ExecMode::Threaded the per-rank solves fork onto the
+        // calars::par pool (mLARS is deterministic, so leaf outputs —
+        // and therefore the fit — are identical either way; only the
+        // measured wallclock changes). ──
+        let leaf_outs: Vec<MlarsOutput> = if cluster.mode() == ExecMode::Threaded {
+            let tasks: Vec<_> = partition
+                .iter()
+                .map(|pool| {
+                    let (y_ref, sel_ref, chol_ref) = (&y, &selected, &chol);
+                    move || mlars(a, b_vec, y_ref, sel_ref, pool, chol_ref, budget, opts.tol)
+                })
+                .collect();
+            crate::par::run_tasks(tasks)
+        } else {
+            partition
+                .iter()
+                .map(|pool| mlars(a, b_vec, &y, &selected, pool, &chol, budget, opts.tol))
+                .collect()
+        };
         let leaf_tracers: Vec<Tracer> = leaf_outs.iter().map(|o| o.tracer.clone()).collect();
         cluster.absorb(&Tracer::critical_path(&leaf_tracers));
 
@@ -233,6 +248,21 @@ mod tests {
             r_tb <= r_ref * 1.25 + 1e-9,
             "T-bLARS residual {r_tb} much worse than LARS {r_ref}"
         );
+    }
+
+    #[test]
+    fn threaded_leaves_match_sequential_bitwise() {
+        let d = datasets::tiny(9);
+        let parts = partition::balanced_col_partition(&d.a, 4);
+        let opts = TblarsOptions { t: 10, b: 2, ..Default::default() };
+        let mut c1 = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+        let mut c2 = SimCluster::new(4, HwParams::default(), ExecMode::Threaded);
+        let o1 = tblars(&d.a, &d.b, &parts, &opts, &mut c1);
+        let o2 = tblars(&d.a, &d.b, &parts, &opts, &mut c2);
+        assert_eq!(o1.selected, o2.selected);
+        for (x, y) in o1.y.iter().zip(&o2.y) {
+            assert_eq!(x.to_bits(), y.to_bits(), "pool execution changed the fit");
+        }
     }
 
     #[test]

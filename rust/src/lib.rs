@@ -22,6 +22,12 @@
 //!   never on the request path. Gated behind the off-by-default `pjrt`
 //!   cargo feature — without it every call site degrades to the native
 //!   f64 kernels.
+//! * **Shared-memory execution** ([`par`]): a zero-dependency
+//!   persistent thread pool with fixed-grain chunking. Every hot
+//!   kernel (dense/sparse `Aᵀr`, GEMV, Gram blocks, Cholesky panel
+//!   updates, cluster supersteps, the serving engine's batched GEMV)
+//!   forks onto it; results are bit-identical across `CALARS_THREADS`
+//!   settings by construction.
 //! * **L4 — serving** ([`serve`]): the production front end. A
 //!   versioned [`serve::ModelRegistry`] snapshots fitted LARS/bLARS/
 //!   T-bLARS regularization paths (in memory and on disk), a batched
@@ -70,6 +76,7 @@ pub mod experiments;
 pub mod lars;
 pub mod linalg;
 pub mod metrics;
+pub mod par;
 pub mod proptest_lite;
 pub mod report;
 pub mod rng;

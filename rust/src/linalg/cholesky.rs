@@ -13,16 +13,29 @@
 //! ```
 
 use super::dense::DenseMatrix;
-use thiserror::Error;
+use std::fmt;
 
 /// Errors from factorization (loss of positive-definiteness — in exact
 /// arithmetic impossible under the paper's §5.2 full-rank assumption,
 /// but finite precision and near-duplicate columns can trigger it).
-#[derive(Debug, Error)]
+/// Hand-rolled `Display`/`Error` impls: the crate builds offline with
+/// zero dependencies, so no `thiserror`.
+#[derive(Clone, Copy, Debug)]
 pub enum CholeskyError {
-    #[error("matrix not positive definite at pivot {0} (value {1:.3e})")]
     NotPositiveDefinite(usize, f64),
 }
+
+impl fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CholeskyError::NotPositiveDefinite(pivot, value) => {
+                write!(f, "matrix not positive definite at pivot {pivot} (value {value:.3e})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
 
 /// Lower-triangular Cholesky factor stored packed row-major:
 /// row `i` occupies `i+1` entries starting at `i(i+1)/2`.
@@ -96,30 +109,103 @@ impl Cholesky {
         Ok(())
     }
 
-    /// Append a `b`-column block (Algorithm 2 steps 20–23).
+    /// Append a `b`-column block (Algorithm 2 steps 20–23) as a
+    /// chunked panel update:
     ///
     /// * `gib` — `A_{I}ᵀ A_B`, shape `dim × b`;
     /// * `gbb` — `A_Bᵀ A_B`, shape `b × b` (full symmetric).
+    ///
+    /// The panel `H = L_k⁻¹·gib` is `b` *independent* forward solves,
+    /// chunked over panel columns on the [`crate::par`] pool; the small
+    /// `b × b` Schur complement `Ω Ωᵀ = gbb − HᵀH` is factored serially
+    /// and `[Hᵀ | Ω]` spliced under the existing factor. Every f64
+    /// operation happens in the same order as `b` sequential
+    /// `push_row`s (the per-column solve *is* `push_row`'s off-diagonal
+    /// recurrence, and the Schur subtraction preserves its ascending-k
+    /// order), so the result is bit-identical to the row-by-row path —
+    /// on any thread count. Unlike `push_row` loops, failure leaves the
+    /// factor untouched (no partially appended rows).
     pub fn append_block(&mut self, gib: &DenseMatrix, gbb: &DenseMatrix) -> Result<(), CholeskyError> {
         let k = self.dim;
         let b = gbb.nrows();
         assert_eq!(gib.nrows(), k);
         assert_eq!(gib.ncols(), b);
         assert_eq!(gbb.ncols(), b);
-        // Equivalent to b sequential push_rows but phrased at block level:
-        // each new row r (0..b) of the extended Gram is
-        //   [ gibᵀ[r][0..k] | gbb[r][0..=r] ].
-        for r in 0..b {
-            let mut grow = Vec::with_capacity(k + r + 1);
-            for i in 0..k {
-                grow.push(gib.get(i, r));
-            }
-            for j in 0..=r {
-                grow.push(gbb.get(r, j));
-            }
-            self.push_row(&grow)?;
+        if b == 0 {
+            return Ok(());
         }
+        // Panel: H columns, each a forward solve against the existing
+        // factor (cost ~k²/2 flops per column → chunk grain).
+        let grain = crate::par::grain_for(k * k / 2 + 1);
+        let h_cols: Vec<Vec<f64>> = crate::par::map_chunks(b, grain, |lo, hi| {
+            (lo..hi)
+                .map(|r| {
+                    let mut col: Vec<f64> = (0..k).map(|i| gib.get(i, r)).collect();
+                    self.solve_lower(&mut col);
+                    col
+                })
+                .collect::<Vec<_>>()
+        })
+        .concat();
+        // Schur complement S = gbb − HᵀH, subtracting H terms in the
+        // same ascending order `push_row`'s inner loop would, then its
+        // small serial factorization Ω.
+        let mut omega = Cholesky::empty();
+        for r in 0..b {
+            let mut grow = Vec::with_capacity(r + 1);
+            for j in 0..=r {
+                let mut s = gbb.get(r, j);
+                for x in 0..k {
+                    s -= h_cols[r][x] * h_cols[j][x];
+                }
+                grow.push(s);
+            }
+            omega.push_row(&grow).map_err(|e| match e {
+                // Report the pivot in full-factor coordinates, as the
+                // row-by-row path would.
+                CholeskyError::NotPositiveDefinite(_, v) => {
+                    CholeskyError::NotPositiveDefinite(k + r, v)
+                }
+            })?;
+        }
+        // Splice the b new rows [ Hᵀ[r] | Ω[r] ] under the factor.
+        self.l.reserve(b * k + row_start(b));
+        for (r, h_col) in h_cols.iter().enumerate() {
+            self.l.extend_from_slice(h_col);
+            for j in 0..=r {
+                self.l.push(omega.get(r, j));
+            }
+        }
+        self.dim = k + b;
         Ok(())
+    }
+
+    /// Append a block, gracefully excluding rows that break positive
+    /// definiteness (the paper's §5.2 "minor modifications" for
+    /// linearly dependent columns — duplicate columns are routine in
+    /// real text data). Tries the fast chunked panel update first;
+    /// only a rank-deficient block falls back to row-by-row greedy
+    /// admission, whose arithmetic the panel path reproduces bit for
+    /// bit on the rows both admit. Returns the block-row indices
+    /// actually admitted, in order.
+    pub fn append_block_graceful(&mut self, gib: &DenseMatrix, gbb: &DenseMatrix) -> Vec<usize> {
+        if self.append_block(gib, gbb).is_ok() {
+            return (0..gbb.nrows()).collect();
+        }
+        let k = self.dim;
+        let b = gbb.nrows();
+        let mut admitted: Vec<usize> = Vec::new();
+        for r in 0..b {
+            let mut grow: Vec<f64> = (0..k).map(|i| gib.get(i, r)).collect();
+            for &ar in &admitted {
+                grow.push(gbb.get(r, ar));
+            }
+            grow.push(gbb.get(r, r));
+            if self.push_row(&grow).is_ok() {
+                admitted.push(r);
+            }
+        }
+        admitted
     }
 
     /// Forward substitution: solve `L x = rhs` in place.
@@ -241,6 +327,68 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn append_block_bit_identical_to_push_rows() {
+        // The panel update reorders nothing: it must equal b sequential
+        // push_rows bit for bit, on any thread count.
+        let n = 14;
+        let b = 5;
+        let k = n - b;
+        let g = random_spd(n, 11);
+        let gib = DenseMatrix::from_fn(k, b, |i, j| g.get(i, k + j));
+        let gbb = DenseMatrix::from_fn(b, b, |i, j| g.get(k + i, k + j));
+        let gk = DenseMatrix::from_fn(k, k, |i, j| g.get(i, j));
+        let base = Cholesky::factor(&gk).unwrap();
+
+        let mut rowwise = base.clone();
+        for r in 0..b {
+            let mut grow: Vec<f64> = (0..k).map(|i| gib.get(i, r)).collect();
+            for j in 0..=r {
+                grow.push(gbb.get(r, j));
+            }
+            rowwise.push_row(&grow).unwrap();
+        }
+
+        for threads in [1usize, 2, 4] {
+            let pool = crate::par::ThreadPool::new(threads, 1);
+            let blocked = crate::par::with_pool(&pool, || {
+                let mut c = base.clone();
+                c.append_block(&gib, &gbb).unwrap();
+                c
+            });
+            assert_eq!(blocked.dim(), rowwise.dim());
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_eq!(
+                        blocked.get(i, j).to_bits(),
+                        rowwise.get(i, j).to_bits(),
+                        "threads={threads} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn append_block_graceful_excludes_dependent_rows() {
+        // Exact small-integer arithmetic: the block's first row is a
+        // perfect duplicate of the existing column (Schur pivot exactly
+        // 0 ⇒ rejected), the second is orthogonal (admitted).
+        let mut chol = Cholesky::factor(&DenseMatrix::from_vec(1, 1, vec![4.0])).unwrap();
+        let gib = DenseMatrix::from_vec(1, 2, vec![4.0, 0.0]);
+        let gbb = DenseMatrix::from_vec(2, 2, vec![4.0, 0.0, 0.0, 9.0]);
+        let admitted = chol.append_block_graceful(&gib, &gbb);
+        assert_eq!(admitted, vec![1]);
+        assert_eq!(chol.dim(), 2);
+        assert_eq!(chol.get(1, 1), 3.0);
+        assert_eq!(chol.get(1, 0), 0.0);
+        // A fully independent block takes the fast panel path whole.
+        let gib2 = DenseMatrix::from_vec(2, 1, vec![0.0, 0.0]);
+        let gbb2 = DenseMatrix::from_vec(1, 1, vec![16.0]);
+        assert_eq!(chol.append_block_graceful(&gib2, &gbb2), vec![0]);
+        assert_eq!(chol.dim(), 3);
     }
 
     #[test]

@@ -1,6 +1,12 @@
-//! Row-major dense matrices and the blocked kernels the LARS family needs.
+//! Row-major dense matrices and the blocked kernels the LARS family
+//! needs. The row-streaming kernels fork onto [`crate::par`] in
+//! fixed-grain chunks: disjoint-output sweeps (`gemv`, `gemv_cols`)
+//! keep serial numerics exactly, and chunked reductions (`at_r`,
+//! `gram_block`, column norms) combine per-chunk partials in ascending
+//! chunk order so results are bit-identical across thread counts.
 
 use super::{axpy, dot};
+use crate::par;
 
 /// Row-major dense `m × n` matrix of `f64`.
 ///
@@ -81,6 +87,20 @@ impl DenseMatrix {
         &self.data
     }
 
+    /// Mutable raw buffer (crate-internal: lets the sparse Gram kernel
+    /// fill disjoint output rows in parallel).
+    #[inline]
+    pub(crate) fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Rows per fork-join task for a row sweep touching `row_cost`
+    /// elements per row. Pure in the shape + configured grain.
+    #[inline]
+    fn row_grain(&self, row_cost: usize) -> usize {
+        par::grain_for(row_cost)
+    }
+
     /// Copy column `j` out.
     pub fn col(&self, j: usize) -> Vec<f64> {
         (0..self.m).map(|i| self.get(i, j)).collect()
@@ -110,32 +130,58 @@ impl DenseMatrix {
     }
 
     /// `out = Aᵀ r` — the correlation kernel. Row-major friendly:
-    /// accumulate `r_i * row_i` into `out` (axpy per row), which streams
-    /// both `A` and `out` and vectorizes well.
+    /// accumulate `r_i * row_i` (axpy per row), which streams both `A`
+    /// and the accumulator and vectorizes well. Row chunks run on the
+    /// pool, one partial accumulator each, combined in chunk order —
+    /// bit-identical across thread counts (fixed grain).
     pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.m);
         assert_eq!(out.len(), self.n);
-        out.fill(0.0);
-        for i in 0..self.m {
-            let ri = r[i];
-            if ri != 0.0 {
-                axpy(ri, self.row(i), out);
+        let grain = self.row_grain(self.n);
+        if self.m <= grain {
+            out.fill(0.0);
+            for i in 0..self.m {
+                let ri = r[i];
+                if ri != 0.0 {
+                    axpy(ri, self.row(i), out);
+                }
             }
+            return;
+        }
+        let partials = par::map_chunks(self.m, grain, |lo, hi| {
+            let mut acc = vec![0.0_f64; self.n];
+            for i in lo..hi {
+                let ri = r[i];
+                if ri != 0.0 {
+                    axpy(ri, self.row(i), &mut acc);
+                }
+            }
+            acc
+        });
+        let (first, rest) = partials.split_first().expect("m > grain implies chunks");
+        out.copy_from_slice(first);
+        for p in rest {
+            axpy(1.0, p, out);
         }
     }
 
     /// `out = A[:, cols] · w` — apply a direction supported on `cols`.
+    /// Output rows are disjoint, so the parallel form is bit-identical
+    /// to the serial loop.
     pub fn gemv_cols(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
         assert_eq!(cols.len(), w.len());
         assert_eq!(out.len(), self.m);
-        for i in 0..self.m {
-            let row = self.row(i);
-            let mut s = 0.0;
-            for (k, &j) in cols.iter().enumerate() {
-                s += row[j] * w[k];
+        let grain = self.row_grain(cols.len());
+        par::for_chunks_mut(out, grain, |lo, chunk| {
+            for (k, o) in chunk.iter_mut().enumerate() {
+                let row = self.row(lo + k);
+                let mut s = 0.0;
+                for (&x, &j) in w.iter().zip(cols) {
+                    s += row[j] * x;
+                }
+                *o = s;
             }
-            out[i] = s;
-        }
+        });
     }
 
     /// Gram block `A[:, ii]ᵀ · A[:, jj]` as a dense `|ii| × |jj|` matrix.
@@ -147,21 +193,36 @@ impl DenseMatrix {
     /// (EXPERIMENTS.md §Perf, L3 iteration 2).
     pub fn gram_block(&self, ii: &[usize], jj: &[usize]) -> DenseMatrix {
         let nb = jj.len();
-        let mut out = DenseMatrix::zeros(ii.len(), nb);
-        let mut rj = vec![0.0_f64; nb];
-        for rix in 0..self.m {
-            let row = self.row(rix);
-            for (x, &j) in rj.iter_mut().zip(jj) {
-                *x = row[j];
-            }
-            for (a, &i) in ii.iter().enumerate() {
-                let v = row[i];
-                if v != 0.0 {
-                    let orow = &mut out.data[a * nb..(a + 1) * nb];
-                    for (o, &x) in orow.iter_mut().zip(&rj) {
-                        *o += v * x;
+        let na = ii.len();
+        let mut out = DenseMatrix::zeros(na, nb);
+        // Row chunks accumulate rank-1 updates into private blocks,
+        // combined in chunk order (fixed grain ⇒ thread-count
+        // independent bits).
+        let grain = self.row_grain(na * nb + nb);
+        let partials = par::map_chunks(self.m, grain, |lo, hi| {
+            let mut acc = vec![0.0_f64; na * nb];
+            let mut rj = vec![0.0_f64; nb];
+            for rix in lo..hi {
+                let row = self.row(rix);
+                for (x, &j) in rj.iter_mut().zip(jj) {
+                    *x = row[j];
+                }
+                for (a, &i) in ii.iter().enumerate() {
+                    let v = row[i];
+                    if v != 0.0 {
+                        let orow = &mut acc[a * nb..(a + 1) * nb];
+                        for (o, &x) in orow.iter_mut().zip(&rj) {
+                            *o += v * x;
+                        }
                     }
                 }
+            }
+            acc
+        });
+        if let Some((first, rest)) = partials.split_first() {
+            out.data.copy_from_slice(first);
+            for p in rest {
+                axpy(1.0, p, &mut out.data);
             }
         }
         out
@@ -182,34 +243,77 @@ impl DenseMatrix {
         (0..self.m).map(|i| self.get(i, j).powi(2)).sum::<f64>().sqrt()
     }
 
-    /// Normalize every column to unit ℓ2 norm (the paper's standing
-    /// assumption, §5.2). Zero columns are left untouched.
-    pub fn normalize_columns(&mut self) {
-        let mut norms = vec![0.0_f64; self.n];
-        for i in 0..self.m {
-            let row = &self.data[i * self.n..(i + 1) * self.n];
-            for j in 0..self.n {
-                norms[j] += row[j] * row[j];
-            }
+    /// Squared ℓ2 norms of every column in one row-streaming sweep,
+    /// chunked on the pool (partials combined in chunk order).
+    fn col_sq_norms(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut norms = vec![0.0_f64; n];
+        if n == 0 || self.m == 0 {
+            return norms;
         }
+        let grain = self.row_grain(n);
+        let partials = par::map_chunks(self.m, grain, |lo, hi| {
+            let mut acc = vec![0.0_f64; n];
+            for i in lo..hi {
+                let row = &self.data[i * n..(i + 1) * n];
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += v * v;
+                }
+            }
+            acc
+        });
+        let (first, rest) = partials.split_first().expect("m > 0 implies chunks");
+        norms.copy_from_slice(first);
+        for p in rest {
+            axpy(1.0, p, &mut norms);
+        }
+        norms
+    }
+
+    /// ℓ2 norms of all columns at once — the parallel form of a
+    /// `col_norm` sweep (one streaming pass instead of `n` strided
+    /// passes).
+    pub fn col_norms(&self) -> Vec<f64> {
+        self.col_sq_norms().into_iter().map(f64::sqrt).collect()
+    }
+
+    /// Normalize every column to unit ℓ2 norm (the paper's standing
+    /// assumption, §5.2). Zero columns are left untouched. Both the
+    /// norm sweep and the scaling pass run chunked on the pool.
+    pub fn normalize_columns(&mut self) {
+        let n = self.n;
+        if n == 0 || self.m == 0 {
+            return;
+        }
+        let mut norms = self.col_sq_norms();
         for nj in norms.iter_mut() {
             *nj = if *nj > 0.0 { nj.sqrt() } else { 1.0 };
         }
-        for i in 0..self.m {
-            let row = &mut self.data[i * self.n..(i + 1) * self.n];
-            for j in 0..self.n {
-                row[j] /= norms[j];
+        // Scaling mutates disjoint row chunks (grain aligned to row
+        // boundaries) — numerics identical to the serial loop.
+        let grain_rows = self.row_grain(n);
+        par::for_chunks_mut(&mut self.data, grain_rows * n, |_, chunk| {
+            for row in chunk.chunks_mut(n) {
+                for (v, nj) in row.iter_mut().zip(&norms) {
+                    *v /= *nj;
+                }
             }
-        }
+        });
     }
 
-    /// Full matvec `out = A x`.
+    /// Full matvec `out = A x`. Each output row is an independent
+    /// [`dot`] — the serving layer's batched-prediction kernel — so
+    /// the pool-parallel form is bit-identical to the serial loop
+    /// (the engine's breakpoint exactness contract relies on this).
     pub fn gemv(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(out.len(), self.m);
-        for i in 0..self.m {
-            out[i] = dot(self.row(i), x);
-        }
+        let grain = self.row_grain(self.n);
+        par::for_chunks_mut(out, grain, |lo, chunk| {
+            for (k, o) in chunk.iter_mut().enumerate() {
+                *o = dot(self.row(lo + k), x);
+            }
+        });
     }
 
     /// Number of structurally nonzero entries (counts exact zeros out).
@@ -314,5 +418,48 @@ mod tests {
     fn nnz_counts_nonzeros() {
         let a = DenseMatrix::from_vec(2, 2, vec![0., 1., 2., 0.]);
         assert_eq!(a.nnz(), 2);
+    }
+
+    #[test]
+    fn col_norms_sweep_matches_per_column() {
+        let a = small();
+        let norms = a.col_norms();
+        for (j, nj) in norms.iter().enumerate() {
+            assert!((nj - a.col_norm(j)).abs() < 1e-12, "col {j}");
+        }
+        assert!(DenseMatrix::zeros(0, 3).col_norms().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn kernels_bit_identical_across_thread_counts() {
+        // 600×40 spans multiple fixed-grain chunks at the default
+        // min_chunk, so the chunked-reduction paths really execute.
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(99);
+        let a = DenseMatrix::from_fn(600, 40, |_, _| rng.normal());
+        let r: Vec<f64> = (0..600).map(|i| (i as f64 * 0.3).cos()).collect();
+        let run = |threads: usize| {
+            let pool = crate::par::ThreadPool::new(threads, crate::par::DEFAULT_MIN_CHUNK);
+            crate::par::with_pool(&pool, || {
+                let mut c = vec![0.0; 40];
+                a.at_r(&r, &mut c);
+                let g = a.gram_block(&[0, 3, 7], &[1, 2, 4, 5]);
+                let x = vec![0.5; 40];
+                let mut y = vec![0.0; 600];
+                a.gemv(&x, &mut y);
+                (c, g.data().to_vec(), y, a.col_norms())
+            })
+        };
+        let base = run(1);
+        for threads in [2, 4] {
+            let got = run(threads);
+            let pairs =
+                [(&base.0, &got.0), (&base.1, &got.1), (&base.2, &got.2), (&base.3, &got.3)];
+            for (b, g) in pairs {
+                for (x, y) in b.iter().zip(g.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+                }
+            }
+        }
     }
 }

@@ -8,6 +8,7 @@
 
 use super::dense::DenseMatrix;
 use super::sparse::CscMatrix;
+use crate::par;
 
 /// Dense or CSC-sparse matrix with the unified kernel API used by the
 /// LARS family.
@@ -80,28 +81,56 @@ impl Matrix {
     /// `out[k] = A[:, cols[k]]ᵀ r` for a set of columns at once.
     ///
     /// Dense: streams rows once (contiguous) instead of one strided
-    /// pass per column — 3-5x on tall matrices (§Perf L3 iteration 5).
-    /// Sparse CSC: per-column gather dots (already optimal).
+    /// pass per column — 3-5x on tall matrices (§Perf L3 iteration 5);
+    /// row chunks run on the pool with partials combined in chunk
+    /// order (bit-identical across thread counts, fixed grain).
+    /// Sparse CSC: independent per-column gather dots, column-chunked.
     pub fn cols_dot(&self, cols: &[usize], r: &[f64], out: &mut [f64]) {
         assert_eq!(cols.len(), out.len());
         match self {
             Matrix::Dense(a) => {
                 assert_eq!(r.len(), a.nrows());
-                out.fill(0.0);
-                for i in 0..a.nrows() {
-                    let ri = r[i];
-                    if ri != 0.0 {
-                        let row = a.row(i);
-                        for (o, &j) in out.iter_mut().zip(cols) {
-                            *o += ri * row[j];
+                let grain = par::grain_for(cols.len());
+                if a.nrows() <= grain {
+                    out.fill(0.0);
+                    for i in 0..a.nrows() {
+                        let ri = r[i];
+                        if ri != 0.0 {
+                            let row = a.row(i);
+                            for (o, &j) in out.iter_mut().zip(cols) {
+                                *o += ri * row[j];
+                            }
                         }
                     }
+                    return;
+                }
+                let partials = par::map_chunks(a.nrows(), grain, |lo, hi| {
+                    let mut acc = vec![0.0_f64; cols.len()];
+                    for i in lo..hi {
+                        let ri = r[i];
+                        if ri != 0.0 {
+                            let row = a.row(i);
+                            for (o, &j) in acc.iter_mut().zip(cols) {
+                                *o += ri * row[j];
+                            }
+                        }
+                    }
+                    acc
+                });
+                let (first, rest) =
+                    partials.split_first().expect("nrows > grain implies chunks");
+                out.copy_from_slice(first);
+                for p in rest {
+                    super::axpy(1.0, p, out);
                 }
             }
             Matrix::Sparse(a) => {
-                for (o, &j) in out.iter_mut().zip(cols) {
-                    *o = a.col_dot(j, r);
-                }
+                let grain = a.col_grain();
+                par::for_chunks_mut(out, grain, |lo, chunk| {
+                    for (k, o) in chunk.iter_mut().enumerate() {
+                        *o = a.col_dot(cols[lo + k], r);
+                    }
+                });
             }
         }
     }
@@ -111,6 +140,15 @@ impl Matrix {
         match self {
             Matrix::Dense(a) => a.col_norm(j),
             Matrix::Sparse(a) => a.col_norm(j),
+        }
+    }
+
+    /// ℓ2 norms of every column at once — the pool-parallel form of a
+    /// `col_norm` sweep.
+    pub fn col_norms(&self) -> Vec<f64> {
+        match self {
+            Matrix::Dense(a) => a.col_norms(),
+            Matrix::Sparse(a) => a.col_norms(),
         }
     }
 
@@ -225,6 +263,14 @@ mod tests {
         rd.at_r(&r, &mut cd);
         rs.at_r(&r, &mut cs);
         assert_eq!(cd, cs);
+    }
+
+    #[test]
+    fn parity_col_norms() {
+        let (d, s) = pair();
+        for (x, y) in d.col_norms().iter().zip(s.col_norms()) {
+            assert!((x - y).abs() < 1e-15);
+        }
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! partition is a CSC row slice (both implemented below).
 
 use super::dense::DenseMatrix;
+use super::axpy;
+use crate::par;
 
 /// CSC sparse `m × n` matrix of `f64`.
 #[derive(Clone, Debug, PartialEq)]
@@ -98,34 +100,75 @@ impl CscMatrix {
         out
     }
 
-    /// `out = Aᵀ r`: per-column sparse dot with `r`.
+    /// Columns per fork-join task, targeting ≈ `min_chunk` nonzeros per
+    /// task. Pure in (shape, nnz, configured grain) — never in the
+    /// thread count, so chunk boundaries are reproducible.
+    pub(crate) fn col_grain(&self) -> usize {
+        par::grain_for((self.nnz() / self.n.max(1)).max(1))
+    }
+
+    /// `out = Aᵀ r`: per-column sparse dot with `r`. Each `out[j]` is
+    /// independent, so the column-chunked parallel form is
+    /// bit-identical to the serial loop.
     pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.m);
         assert_eq!(out.len(), self.n);
-        for j in 0..self.n {
-            let (rows, vals) = self.col(j);
-            let mut s = 0.0;
-            for (&ri, &v) in rows.iter().zip(vals) {
-                s += v * r[ri as usize];
+        let grain = self.col_grain();
+        par::for_chunks_mut(out, grain, |lo, chunk| {
+            for (k, o) in chunk.iter_mut().enumerate() {
+                let (rows, vals) = self.col(lo + k);
+                let mut s = 0.0;
+                for (&ri, &v) in rows.iter().zip(vals) {
+                    s += v * r[ri as usize];
+                }
+                *o = s;
             }
-            out[j] = s;
-        }
+        });
     }
 
     /// `out = A[:, cols] · w`: scatter-accumulate selected columns.
+    /// Column chunks scatter into private accumulators, combined in
+    /// chunk order (fixed grain ⇒ thread-count independent bits). The
+    /// parallel form only pays off when the selected nonzeros dominate
+    /// the per-chunk `m`-length accumulator traffic, so the guard also
+    /// requires that — it is pure in (matrix, |cols|, grain), never in
+    /// the thread count.
     pub fn gemv_cols(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
         assert_eq!(cols.len(), w.len());
         assert_eq!(out.len(), self.m);
-        out.fill(0.0);
-        for (k, &j) in cols.iter().enumerate() {
-            let wk = w[k];
-            if wk == 0.0 {
-                continue;
+        let grain = self.col_grain();
+        let est_sel_nnz = cols.len() * (self.nnz() / self.n.max(1)).max(1);
+        if cols.len() <= grain || est_sel_nnz < 4 * self.m {
+            out.fill(0.0);
+            for (&wk, &j) in w.iter().zip(cols) {
+                if wk == 0.0 {
+                    continue;
+                }
+                let (rows, vals) = self.col(j);
+                for (&ri, &v) in rows.iter().zip(vals) {
+                    out[ri as usize] += wk * v;
+                }
             }
-            let (rows, vals) = self.col(j);
-            for (&ri, &v) in rows.iter().zip(vals) {
-                out[ri as usize] += wk * v;
+            return;
+        }
+        let partials = par::map_chunks(cols.len(), grain, |lo, hi| {
+            let mut acc = vec![0.0_f64; self.m];
+            for k in lo..hi {
+                let wk = w[k];
+                if wk == 0.0 {
+                    continue;
+                }
+                let (rows, vals) = self.col(cols[k]);
+                for (&ri, &v) in rows.iter().zip(vals) {
+                    acc[ri as usize] += wk * v;
+                }
             }
+            acc
+        });
+        let (first, rest) = partials.split_first().expect("cols > grain implies chunks");
+        out.copy_from_slice(first);
+        for p in rest {
+            axpy(1.0, p, out);
         }
     }
 
@@ -152,27 +195,38 @@ impl CscMatrix {
     ///
     /// Uses a scatter buffer per `ii` column: densify column `i` once,
     /// then each dot with a `jj` column is O(nnz(col j)). This beats the
-    /// pairwise merge when `|jj|` is large.
+    /// pairwise merge when `|jj|` is large. Output rows are disjoint, so
+    /// `ii` chunks run on the pool (one scratch buffer per task) with
+    /// numerics identical to the serial loop.
     pub fn gram_block(&self, ii: &[usize], jj: &[usize]) -> DenseMatrix {
-        let mut out = DenseMatrix::zeros(ii.len(), jj.len());
-        let mut scratch = vec![0.0_f64; self.m];
-        for (a, &i) in ii.iter().enumerate() {
-            let (ri, vi) = self.col(i);
-            for (&r, &v) in ri.iter().zip(vi) {
-                scratch[r as usize] = v;
-            }
-            for (b, &j) in jj.iter().enumerate() {
-                let (rj, vj) = self.col(j);
-                let mut s = 0.0;
-                for (&r, &v) in rj.iter().zip(vj) {
-                    s += v * scratch[r as usize];
-                }
-                out.set(a, b, s);
-            }
-            for &r in ri {
-                scratch[r as usize] = 0.0;
-            }
+        let nb = jj.len();
+        let mut out = DenseMatrix::zeros(ii.len(), nb);
+        if ii.is_empty() || nb == 0 {
+            return out;
         }
+        let jnnz: usize = jj.iter().map(|&j| self.col_nnz(j)).sum();
+        let grain_rows = par::grain_for(jnnz.max(1));
+        par::for_chunks_mut(out.data_mut(), grain_rows * nb, |off, chunk| {
+            let mut scratch = vec![0.0_f64; self.m];
+            for (step, orow) in chunk.chunks_mut(nb).enumerate() {
+                let i = ii[off / nb + step];
+                let (ri, vi) = self.col(i);
+                for (&r, &v) in ri.iter().zip(vi) {
+                    scratch[r as usize] = v;
+                }
+                for (o, &j) in orow.iter_mut().zip(jj) {
+                    let (rj, vj) = self.col(j);
+                    let mut s = 0.0;
+                    for (&r, &v) in rj.iter().zip(vj) {
+                        s += v * scratch[r as usize];
+                    }
+                    *o = s;
+                }
+                for &r in ri {
+                    scratch[r as usize] = 0.0;
+                }
+            }
+        });
         out
     }
 
@@ -192,17 +246,56 @@ impl CscMatrix {
         vals.iter().map(|v| v * v).sum::<f64>().sqrt()
     }
 
+    /// ℓ2 norms of all columns — the pool-parallel form of a
+    /// `col_norm` sweep. Per-column sums are untouched, so the result
+    /// is bit-identical to the serial sweep.
+    pub fn col_norms(&self) -> Vec<f64> {
+        let chunks = par::map_chunks(self.n, self.col_grain(), |lo, hi| {
+            (lo..hi).map(|j| self.col_norm(j)).collect::<Vec<_>>()
+        });
+        chunks.concat()
+    }
+
     /// Scale every column to unit ℓ2 norm (zero columns untouched).
+    /// Column chunks mutate disjoint `values` ranges (chunk boundaries
+    /// land on `colptr` entries), so numerics match the serial loop.
     pub fn normalize_columns(&mut self) {
-        for j in 0..self.n {
-            let (s, e) = (self.colptr[j], self.colptr[j + 1]);
-            let nrm = self.values[s..e].iter().map(|v| v * v).sum::<f64>().sqrt();
-            if nrm > 0.0 {
-                for v in &mut self.values[s..e] {
-                    *v /= nrm;
+        let ranges = par::chunk_ranges(self.n, self.col_grain());
+        if ranges.len() <= 1 {
+            for j in 0..self.n {
+                let (s, e) = (self.colptr[j], self.colptr[j + 1]);
+                let nrm = self.values[s..e].iter().map(|v| v * v).sum::<f64>().sqrt();
+                if nrm > 0.0 {
+                    for v in &mut self.values[s..e] {
+                        *v /= nrm;
+                    }
                 }
             }
+            return;
         }
+        let colptr = &self.colptr;
+        let mut rest: &mut [f64] = &mut self.values;
+        let mut base = 0usize;
+        let mut tasks = Vec::with_capacity(ranges.len());
+        for &(lo, hi) in &ranges {
+            let end = colptr[hi];
+            let (head, tail) = rest.split_at_mut(end - base);
+            rest = tail;
+            let start = base;
+            tasks.push(move || {
+                for j in lo..hi {
+                    let (s, e) = (colptr[j] - start, colptr[j + 1] - start);
+                    let nrm = head[s..e].iter().map(|v| v * v).sum::<f64>().sqrt();
+                    if nrm > 0.0 {
+                        for v in &mut head[s..e] {
+                            *v /= nrm;
+                        }
+                    }
+                }
+            });
+            base = end;
+        }
+        par::run_tasks(tasks);
     }
 
     /// Row slice `[r0, r1)` as a new CSC matrix (bLARS rank shard).
@@ -364,5 +457,61 @@ mod tests {
     fn zero_values_dropped() {
         let a = CscMatrix::from_columns(2, vec![vec![(0, 0.0), (1, 1.0)]]);
         assert_eq!(a.nnz(), 1);
+    }
+
+    #[test]
+    fn col_norms_matches_per_column() {
+        let a = sample();
+        let norms = a.col_norms();
+        for (j, nj) in norms.iter().enumerate() {
+            assert!((nj - a.col_norm(j)).abs() < 1e-15, "col {j}");
+        }
+    }
+
+    #[test]
+    fn parallel_paths_bit_identical_across_thread_counts() {
+        // A matrix wide enough that the column-chunked kernels split at
+        // a small grain; results must not depend on the thread count.
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(7);
+        let n = 400;
+        let m = 50;
+        let cols: Vec<Vec<(usize, f64)>> = (0..n)
+            .map(|_| {
+                (0..m).filter(|_| rng.uniform() < 0.2).map(|i| (i, rng.normal())).collect()
+            })
+            .collect();
+        let a = CscMatrix::from_columns(m, cols);
+        let r: Vec<f64> = (0..m).map(|i| (i as f64).sin()).collect();
+        let sel: Vec<usize> = (0..n).step_by(3).collect();
+        let w: Vec<f64> = sel.iter().map(|&j| (j as f64 * 0.01) - 0.5).collect();
+        let run = |threads: usize| {
+            // min_chunk 64 forces several chunks even at this size.
+            let pool = crate::par::ThreadPool::new(threads, 64);
+            crate::par::with_pool(&pool, || {
+                let mut c = vec![0.0; n];
+                a.at_r(&r, &mut c);
+                let mut u = vec![0.0; m];
+                a.gemv_cols(&sel, &w, &mut u);
+                let g = a.gram_block(&sel[..20], &sel[..10]);
+                let mut b = a.clone();
+                b.normalize_columns();
+                (c, u, g.data().to_vec(), b.col_norms())
+            })
+        };
+        let base = run(1);
+        for threads in [2, 4] {
+            let got = run(threads);
+            for (x, y) in base
+                .0
+                .iter()
+                .chain(&base.1)
+                .chain(&base.2)
+                .chain(&base.3)
+                .zip(got.0.iter().chain(&got.1).chain(&got.2).chain(&got.3))
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
     }
 }

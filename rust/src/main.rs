@@ -27,10 +27,19 @@ use calars::serve::{
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
-    if let Err(e) = dispatch(&args) {
+    if let Err(e) = init_par(&args).and_then(|_| dispatch(&args)) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Size the global [`calars::par`] pool before any kernel runs:
+/// `CALARS_THREADS` / `CALARS_MIN_CHUNK` from the environment,
+/// overridden by `--par-threads` / `--par-min-chunk`.
+fn init_par(args: &Args) -> Result<()> {
+    let cfg = calars::config::par_config_from_args(args)?;
+    calars::par::configure(cfg);
+    Ok(())
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -40,7 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("suite") => cmd_suite(args),
         Some("serve") => cmd_serve(args),
         Some("bench-serve") => cmd_bench_serve(args),
-        Some("info") => cmd_info(),
+        Some("info") => cmd_info(args),
         Some(other) => bail!("unknown command '{other}'"),
         None => {
             println!("{}", usage());
@@ -60,29 +69,52 @@ USAGE:
                [--capacity N] [--cache N] [--persist DIR] [--prefit DATASET] [--oneshot]
   calars bench-serve [--addr H:P] [--requests N] [--concurrency C] [--rows R]
                [--dataset NAME] [--algo A] [--t N] [--b N] [--step K | --lambda L]
-               [--seed N] [--shutdown]
-  calars info
+               [--seed N] [--shutdown] [--json]
+  calars info  [--json]
+
+Every command honors --par-threads N / --par-min-chunk N (or the
+CALARS_THREADS / CALARS_MIN_CHUNK environment variables) to size the
+shared-memory kernel pool; threads=1 runs fully inline and results are
+bit-identical at any thread count (see DESIGN.md).
 
 serve runs the L4 model-serving subsystem: POST /fit, POST /predict,
 GET /models, GET /stats (see DESIGN.md). --oneshot additionally honors
 POST /shutdown for scripted smoke runs. bench-serve is the closed-loop
 load generator; without --addr it spins up an in-process server first.
+--json emits one machine-readable perf record (scripts/ci.sh captures
+it as BENCH_serving.json); info --json reports cores/threads/features
+for annotating bench output.
 
 Datasets: sector, year, e2006_log1p, e2006_tfidf (scaled synthetic
 substitutes; see DESIGN.md), plus tiny / tiny_dense for smoke runs."
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let opts: ServeOptions = ServeConfig::from_args(args)?.into();
+    let cfg = ServeConfig::from_args(args)?;
+    // Normally a no-op (init_par already configured the pool), but it
+    // keeps ServeConfig self-contained for library callers.
+    calars::par::configure(cfg.par);
+    let opts: ServeOptions = cfg.into();
     calars::serve::serve(&opts)
 }
 
 fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let json = args.flag("json");
     let requests = args.get_parse::<usize>("requests", 1000)?;
     let concurrency = args.get_parse::<usize>("concurrency", 4)?;
     let rows = args.get_parse::<usize>("rows", 4)?;
     let t = args.get_parse::<usize>("t", 16)?;
     let seed = args.get_parse::<u64>("seed", 42)?;
+    // In JSON mode stdout carries exactly one machine-readable record
+    // (scripts/ci.sh redirects it into BENCH_serving.json); narration
+    // goes to stderr.
+    let note = |line: String| {
+        if json {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
 
     // Target: a running instance via --addr, or a self-contained
     // in-process server on an ephemeral port.
@@ -92,7 +124,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             let opts = ServeOptions { addr: "127.0.0.1:0".to_string(), ..Default::default() };
             let handle = spawn_server(&opts)?;
             let addr = handle.addr_string();
-            println!("spawned in-process server on {addr}");
+            note(format!("spawned in-process server on {addr}"));
             (addr, Some(handle))
         }
     };
@@ -110,28 +142,57 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let mut client = ServeClient::connect(&addr)?;
     let model = client.fit(&fit, true)?;
     let dim = client.model_dim(model)?;
-    println!(
-        "target model {model} ({} t={t}, n={dim}) on {addr}",
-        fit.dataset
-    );
+    note(format!("target model {model} ({} t={t}, n={dim}) on {addr}", fit.dataset));
 
     let selector = match args.get("lambda") {
         Some(l) => Selector::Lambda(l.parse().map_err(|e| calars::anyhow!("--lambda: {e}"))?),
         None => Selector::Step(args.get_parse::<usize>("step", t)?),
     };
     let load = LoadOptions { requests, concurrency, rows, model, selector, dim, seed };
-    println!(
-        "load: {requests} requests x {rows} rows, {concurrency} connections, {:?}",
-        selector
-    );
+    note(format!(
+        "load: {requests} requests x {rows} rows, {concurrency} connections, {selector:?}"
+    ));
+    // JSON mode also measures a concurrency-1 baseline so the record
+    // carries a batching/concurrency speedup next to the raw wall
+    // time. A discarded warm-up pass runs first so neither measurement
+    // pays the one-time costs (coefficient-cache misses, first-touch
+    // allocation, connection setup) — otherwise whichever load ran
+    // first would bias the recorded speedup.
+    let baseline = if json && concurrency > 1 {
+        let warm = LoadOptions { requests: requests.min(32), ..load.clone() };
+        let _ = calars::serve::run_load(&addr, &warm)?;
+        let base = LoadOptions { concurrency: 1, ..load.clone() };
+        Some(calars::serve::run_load(&addr, &base)?)
+    } else {
+        None
+    };
     let report = calars::serve::run_load(&addr, &load)?;
-    println!("{}", report.render());
+    if json {
+        let speedup = baseline
+            .map(|b| b.wall_secs / report.wall_secs.max(1e-12))
+            .unwrap_or(1.0);
+        println!(
+            "{{\"bench\":\"serve_predict\",\"threads\":{},\"wall_ms\":{:.3},\"speedup\":{:.3},\
+             \"requests\":{},\"concurrency\":{concurrency},\"rows\":{rows},\
+             \"req_per_s\":{:.1},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\"errors\":{}}}",
+            calars::par::threads(),
+            report.wall_secs * 1e3,
+            speedup,
+            report.requests,
+            report.request_throughput,
+            report.latency.p50 * 1e3,
+            report.latency.p99 * 1e3,
+            report.errors
+        );
+    } else {
+        println!("{}", report.render());
+    }
 
     if let Some(handle) = handle {
         handle.stop();
     } else if args.flag("shutdown") {
         client.shutdown()?;
-        println!("server on {addr} asked to shut down");
+        note(format!("server on {addr} asked to shut down"));
     }
     Ok(())
 }
@@ -248,7 +309,23 @@ fn cmd_suite(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
+    let cores = calars::par::detected_cores();
+    let threads = calars::par::threads();
+    let min_chunk = calars::par::min_chunk();
+    let features: Vec<&str> = if cfg!(feature = "pjrt") { vec!["pjrt"] } else { Vec::new() };
+    if args.flag("json") {
+        // Machine-readable shape report: the CI perf stage uses this to
+        // annotate the BENCH_*.json records with the runner's geometry.
+        let feats =
+            features.iter().map(|f| format!("\"{f}\"")).collect::<Vec<_>>().join(",");
+        println!(
+            "{{\"version\":\"{}\",\"cores\":{cores},\"threads\":{threads},\
+             \"min_chunk\":{min_chunk},\"features\":[{feats}]}}",
+            calars::VERSION
+        );
+        return Ok(());
+    }
     println!("calars {} — dataset registry:", calars::VERSION);
     for ds in datasets::paper_suite(42) {
         let s = ds.stats();
@@ -261,6 +338,14 @@ fn cmd_info() -> Result<()> {
             s.density
         );
     }
+    println!(
+        "parallel execution: {cores} cores detected, {threads} pool threads, \
+         min_chunk {min_chunk} (CALARS_THREADS / --par-threads to change)"
+    );
+    println!(
+        "features: {}",
+        if features.is_empty() { "none".to_string() } else { features.join(", ") }
+    );
     let dir = calars::runtime::default_artifacts_dir();
     match XlaRuntime::load(&dir) {
         Ok(rt) => {

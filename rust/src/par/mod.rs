@@ -1,0 +1,380 @@
+//! `calars::par` — the crate's shared-memory execution layer.
+//!
+//! A zero-dependency, std-only persistent thread pool plus the chunked
+//! fork-join helpers every hot kernel is written against. The paper's
+//! speedups come from parallel `Aᵀr` products, Gram-block assembly and
+//! equiangular solves; this module is the substrate that makes those
+//! kernels actually run on all cores (L1 linalg, L2 fitters, L3
+//! cluster supersteps and the L4 serving engine all funnel through it
+//! — see DESIGN.md §"Shared-memory execution").
+//!
+//! ## Determinism contract
+//!
+//! Parallel results are **bit-identical to serial**. Two rules make
+//! that hold:
+//!
+//! 1. **Fixed grain.** Work is split by [`chunk_ranges`], a pure
+//!    function of `(len, grain)` where the grain comes from the
+//!    workload shape and the configured `min_chunk` — never from the
+//!    thread count. `CALARS_THREADS=1` and `=64` produce the *same*
+//!    chunk decomposition; only who executes each chunk differs.
+//! 2. **Fixed combine order.** Reductions compute one partial per
+//!    chunk (each with the serial kernel's own inner loop) and combine
+//!    the partials on the calling thread in ascending chunk order.
+//!
+//! Kernels whose parallel form writes disjoint outputs (`gemv`,
+//! per-column sweeps) are bit-identical to the classic serial loop for
+//! free; chunked reductions (`at_r`, `gram_block`, column norms) are
+//! bit-identical across thread counts for a fixed `min_chunk`. The
+//! registry's warm-start reuse and the serving engine's breakpoint
+//! exactness contract both lean on this guarantee; it is enforced by
+//! `rust/tests/par.rs` property tests over `CALARS_THREADS ∈ {1,2,4}`.
+//!
+//! ## Configuration
+//!
+//! The global pool is built lazily from [`ParConfig`]: `CALARS_THREADS`
+//! (0/unset ⇒ one worker per detected core) and `CALARS_MIN_CHUNK`
+//! override the defaults; `calars --par-threads N --par-min-chunk N`
+//! set them from the CLI before first use. Tests and benches run
+//! kernels against private pools via [`with_pool`] without touching
+//! process-global state.
+
+pub mod pool;
+
+pub use pool::ThreadPool;
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Default work units (≈ matrix elements touched) per fork-join task.
+/// Big enough that a task amortizes queue+wake overhead; small enough
+/// that the paper-scale workloads split into dozens of tasks.
+pub const DEFAULT_MIN_CHUNK: usize = 16 * 1024;
+
+/// Shared-memory execution configuration, threaded through
+/// [`crate::config::ServeConfig`] and the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParConfig {
+    /// Worker threads; 0 ⇒ one per detected core.
+    pub threads: usize,
+    /// Work units per task — the determinism grain. Changing it may
+    /// move chunk boundaries (and thus last-bit rounding of chunked
+    /// reductions); changing `threads` never does.
+    pub min_chunk: usize,
+}
+
+impl Default for ParConfig {
+    fn default() -> Self {
+        ParConfig { threads: 0, min_chunk: DEFAULT_MIN_CHUNK }
+    }
+}
+
+impl ParConfig {
+    /// Read `CALARS_THREADS` / `CALARS_MIN_CHUNK` from the environment.
+    /// Malformed values warn on stderr and fall back to the default
+    /// (the CLI flag forms hard-error instead); `0` means "default"
+    /// for both.
+    pub fn from_env() -> Self {
+        ParConfig {
+            threads: env_usize("CALARS_THREADS", 0),
+            min_chunk: match env_usize("CALARS_MIN_CHUNK", DEFAULT_MIN_CHUNK) {
+                0 => DEFAULT_MIN_CHUNK,
+                c => c,
+            },
+        }
+    }
+
+    /// The concrete worker count this config resolves to.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            detected_cores()
+        }
+    }
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(x) => x,
+            Err(_) => {
+                eprintln!("warning: ignoring unparseable {name}={v:?} (using {default})");
+                default
+            }
+        },
+    }
+}
+
+/// Detected hardware parallelism (≥ 1).
+pub fn detected_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+static CONFIG: OnceLock<ParConfig> = OnceLock::new();
+
+/// Install `cfg` as the global pool's configuration. Must run before
+/// the first kernel executes (the CLI does this right after argv
+/// parsing); returns `false` — and changes nothing — if the global
+/// pool was already built.
+pub fn configure(cfg: ParConfig) -> bool {
+    if GLOBAL.get().is_some() {
+        return false;
+    }
+    CONFIG.set(cfg).is_ok()
+}
+
+fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| {
+        let cfg = CONFIG.get().copied().unwrap_or_else(ParConfig::from_env);
+        ThreadPool::new(cfg.resolved_threads(), cfg.min_chunk)
+    })
+}
+
+thread_local! {
+    /// Per-thread pool override installed by [`with_pool`] (raw pointer
+    /// because test pools are stack-allocated, not `'static`).
+    static OVERRIDE: Cell<Option<*const ThreadPool>> = const { Cell::new(None) };
+}
+
+/// Run `f` with `pool` as the calling thread's current pool. Kernels
+/// invoked inside `f` (on this thread) fork onto `pool` instead of the
+/// global one — how the determinism property tests compare
+/// `CALARS_THREADS ∈ {1, 2, 4}` inside a single process.
+pub fn with_pool<R>(pool: &ThreadPool, f: impl FnOnce() -> R) -> R {
+    struct Reset(Option<*const ThreadPool>);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|o| o.replace(Some(pool as *const ThreadPool)));
+    let _reset = Reset(prev);
+    f()
+}
+
+fn with_current<R>(f: impl FnOnce(&ThreadPool) -> R) -> R {
+    match OVERRIDE.with(|o| o.get()) {
+        // SAFETY: the pointer was installed by `with_pool`, which holds
+        // the pool borrowed for the whole scope and restores the
+        // previous value on exit (including unwinds), so it is live.
+        Some(p) => f(unsafe { &*p }),
+        None => f(global()),
+    }
+}
+
+/// True on a pool worker thread, where nested fork-joins always run
+/// inline — checked by the helpers below *before* resolving a pool so
+/// that kernels nested inside a private pool's tasks never construct
+/// (and spawn the workers of) the untouched global pool.
+fn on_worker() -> bool {
+    pool::worker_min_chunk().is_some()
+}
+
+/// Worker-thread count of the current pool (1 on a worker thread:
+/// nested joins are inline).
+pub fn threads() -> usize {
+    if on_worker() {
+        return 1;
+    }
+    with_current(ThreadPool::threads)
+}
+
+/// Determinism grain (work units per task) of the current pool. On a
+/// pool worker thread this is the *owning* pool's grain, so kernels
+/// nested inside a task chunk exactly as they would inline on the
+/// submitting thread.
+pub fn min_chunk() -> usize {
+    match pool::worker_min_chunk() {
+        Some(mc) => mc,
+        None => with_current(ThreadPool::min_chunk),
+    }
+}
+
+/// Items per task for a sweep whose per-item cost is `item_cost` work
+/// units: keeps ≈ `min_chunk()` units per task. Pure in the workload
+/// shape and the configured grain — never in the thread count.
+pub fn grain_for(item_cost: usize) -> usize {
+    (min_chunk() / item_cost.max(1)).max(1)
+}
+
+/// Fixed-grain chunk decomposition of `0..len`: every chunk except the
+/// last spans exactly `grain` items. Pure in `(len, grain)`, which is
+/// what keeps chunked reductions bit-identical across thread counts.
+pub fn chunk_ranges(len: usize, grain: usize) -> Vec<(usize, usize)> {
+    let grain = grain.max(1);
+    let mut out = Vec::with_capacity(len / grain + 1);
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + grain).min(len);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Apply `f` to every fixed-grain chunk of `0..len` (possibly in
+/// parallel) and return the per-chunk results **in ascending chunk
+/// order**. Combine them sequentially in that order and the final
+/// result is independent of the thread count.
+pub fn map_chunks<T, F>(len: usize, grain: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let ranges = chunk_ranges(len, grain);
+    if ranges.len() <= 1 || on_worker() {
+        return ranges.into_iter().map(|(lo, hi)| f(lo, hi)).collect();
+    }
+    with_current(|pool| {
+        let fr = &f;
+        let tasks: Vec<_> = ranges.into_iter().map(|(lo, hi)| move || fr(lo, hi)).collect();
+        pool.run(tasks)
+    })
+}
+
+/// Split `data` at fixed-grain boundaries and run `f(chunk_start,
+/// chunk)` over the disjoint pieces (possibly in parallel). Writes are
+/// disjoint, so the result is bit-identical to the serial loop no
+/// matter how the chunks are scheduled.
+pub fn for_chunks_mut<T, F>(data: &mut [T], grain: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let ranges = chunk_ranges(data.len(), grain);
+    if ranges.len() <= 1 || on_worker() {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    with_current(|pool| {
+        if pool.is_inline() {
+            for &(lo, hi) in &ranges {
+                f(lo, &mut data[lo..hi]);
+            }
+            return;
+        }
+        let fr = &f;
+        let mut tasks = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [T] = data;
+        for &(lo, hi) in &ranges {
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            tasks.push(move || fr(lo, head));
+        }
+        pool.run(tasks);
+    })
+}
+
+/// Fork-join over arbitrary same-typed tasks on the current pool,
+/// returning results in task order (the cluster's per-rank supersteps
+/// and T-bLARS leaf solves use this directly).
+pub fn run_tasks<T, F>(tasks: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    if tasks.len() <= 1 || on_worker() {
+        return tasks.into_iter().map(|f| f()).collect();
+    }
+    with_current(|pool| pool.run(tasks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_fixed_grain() {
+        assert_eq!(chunk_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(chunk_ranges(8, 4), vec![(0, 4), (4, 8)]);
+        assert_eq!(chunk_ranges(3, 4), vec![(0, 3)]);
+        assert_eq!(chunk_ranges(0, 4), Vec::<(usize, usize)>::new());
+        // grain 0 is clamped, not a division by zero
+        assert_eq!(chunk_ranges(2, 0), vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn map_chunks_orders_results() {
+        let pool = ThreadPool::new(4, 1);
+        let out = with_pool(&pool, || map_chunks(100, 7, |lo, hi| (lo, hi)));
+        assert_eq!(out, chunk_ranges(100, 7));
+    }
+
+    #[test]
+    fn map_chunks_reduction_independent_of_threads() {
+        let data: Vec<f64> = (0..10_000).map(|i| (i as f64 * 0.7).sin()).collect();
+        let sum_with = |threads: usize| {
+            let pool = ThreadPool::new(threads, 64);
+            with_pool(&pool, || {
+                let partials = map_chunks(data.len(), 64, |lo, hi| {
+                    data[lo..hi].iter().sum::<f64>()
+                });
+                partials.iter().sum::<f64>()
+            })
+        };
+        let s1 = sum_with(1);
+        for threads in [2, 4, 8] {
+            assert_eq!(s1.to_bits(), sum_with(threads).to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_chunks_mut_covers_every_element() {
+        let pool = ThreadPool::new(4, 1);
+        let mut data = vec![0u32; 1000];
+        with_pool(&pool, || {
+            for_chunks_mut(&mut data, 13, |start, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = (start + k) as u32;
+                }
+            });
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn with_pool_overrides_and_restores() {
+        let p2 = ThreadPool::new(2, 123);
+        let outer = min_chunk();
+        let inner = with_pool(&p2, || (threads(), min_chunk()));
+        assert_eq!(inner, (2, 123));
+        assert_eq!(min_chunk(), outer, "override must not leak");
+    }
+
+    #[test]
+    fn with_pool_nests() {
+        let p2 = ThreadPool::new(2, 10);
+        let p3 = ThreadPool::new(3, 20);
+        with_pool(&p2, || {
+            assert_eq!(threads(), 2);
+            with_pool(&p3, || assert_eq!((threads(), min_chunk()), (3, 20)));
+            assert_eq!((threads(), min_chunk()), (2, 10));
+        });
+    }
+
+    #[test]
+    fn run_tasks_uses_current_pool() {
+        let pool = ThreadPool::new(4, 1);
+        let out = with_pool(&pool, || {
+            run_tasks((0..16).map(|i| move || i + 100).collect::<Vec<_>>())
+        });
+        assert_eq!(out, (100..116).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn grain_for_scales_inverse_to_cost() {
+        let pool = ThreadPool::new(1, 1000);
+        with_pool(&pool, || {
+            assert_eq!(grain_for(10), 100);
+            assert_eq!(grain_for(0), 1000, "zero cost clamps to 1");
+            assert_eq!(grain_for(1_000_000), 1, "huge cost floors at one item");
+        });
+    }
+}

@@ -1,0 +1,277 @@
+//! The persistent worker pool behind [`crate::par`].
+//!
+//! Workers are plain OS threads parked on a condvar over a shared
+//! injector queue; a fork-join (`ThreadPool::run`) enqueues its tasks,
+//! blocks on a latch until every task has finished, and only then
+//! returns — which is what makes handing the workers *borrowed*
+//! closures sound (see the `SAFETY` note in `run`).
+//!
+//! Scheduling never influences results: tasks carry their output slot
+//! index, so `run` returns outputs in task order no matter which worker
+//! finished first, and panics are captured per task and re-raised on
+//! the calling thread after the join point.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased unit of queued work. The `'static` bound is a fiction
+/// maintained by `run`, which cannot return before the job has executed.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One task's output cell: filled by whichever worker ran the task.
+type Slot<T> = Mutex<Option<std::thread::Result<T>>>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    work_cv: Condvar,
+}
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread: nested fork-joins
+    /// issued from inside a task execute inline instead of re-entering
+    /// the queue (which could otherwise deadlock with every worker
+    /// blocked on a child join).
+    static IS_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// The owning pool's determinism grain, recorded per worker so a
+    /// kernel running *inside* a task chunks by the same `min_chunk`
+    /// it would use inline on the submitting thread — without this,
+    /// nested kernels would silently pick up the global pool's grain
+    /// and could break bit-identity across thread counts.
+    static WORKER_MIN_CHUNK: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The grain of the pool owning the current worker thread, if this is
+/// one (used by [`crate::par::min_chunk`]).
+pub(crate) fn worker_min_chunk() -> Option<usize> {
+    if IS_WORKER.with(|w| w.get()) {
+        Some(WORKER_MIN_CHUNK.with(|c| c.get()))
+    } else {
+        None
+    }
+}
+
+/// Countdown latch: `run` waits here until its last task completes.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn done(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// A persistent fork-join pool. `threads == 1` spawns no workers at
+/// all — every `run` degrades to an inline loop on the calling thread,
+/// the same code path a worker uses for nested joins.
+pub struct ThreadPool {
+    threads: usize,
+    min_chunk: usize,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Build a pool with `threads` workers (clamped to ≥ 1) and the
+    /// given determinism grain (work units per task, see
+    /// [`crate::par::chunk_ranges`]).
+    pub fn new(threads: usize, min_chunk: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let min_chunk = min_chunk.max(1);
+        let mut workers = Vec::new();
+        if threads > 1 {
+            for i in 0..threads {
+                let sh = Arc::clone(&shared);
+                let handle = std::thread::Builder::new()
+                    .name(format!("calars-par-{i}"))
+                    .spawn(move || worker_loop(sh, min_chunk))
+                    .expect("spawn pool worker");
+                workers.push(handle);
+            }
+        }
+        ThreadPool { threads, min_chunk, shared, workers }
+    }
+
+    /// Configured parallelism (1 ⇒ pure inline execution).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Work units per task — the chunk grain shared by every kernel.
+    pub fn min_chunk(&self) -> usize {
+        self.min_chunk
+    }
+
+    /// True when `run` would execute on the calling thread: a
+    /// single-thread pool, or a nested join from inside a worker.
+    pub fn is_inline(&self) -> bool {
+        self.threads == 1 || IS_WORKER.with(|w| w.get())
+    }
+
+    /// Fork-join: execute every task (possibly concurrently) and return
+    /// their results **in task order**. A panicking task does not kill
+    /// the pool; the first captured panic (by task index) is re-raised
+    /// here after all tasks have settled.
+    pub fn run<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        if tasks.len() <= 1 || self.is_inline() {
+            return tasks.into_iter().map(|f| f()).collect();
+        }
+        let n = tasks.len();
+        let slots: Vec<Slot<T>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let latch = Latch::new(n);
+        {
+            let mut state = self.shared.state.lock().unwrap();
+            for (slot, task) in slots.iter().zip(tasks) {
+                let latch_ref = &latch;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(task));
+                    *slot.lock().unwrap() = Some(result);
+                    latch_ref.done();
+                });
+                // SAFETY: `run` blocks on `latch` until every job queued
+                // here has finished executing, so the borrows the job
+                // captures (`task`'s environment, `slots`, `latch`)
+                // strictly outlive its execution; erasing the lifetime
+                // is therefore sound.
+                let job: Job = unsafe { std::mem::transmute(job) };
+                state.jobs.push_back(job);
+            }
+            self.shared.work_cv.notify_all();
+        }
+        latch.wait();
+        slots
+            .into_iter()
+            .map(|slot| {
+                match slot.into_inner().unwrap().expect("pool job completed without a result") {
+                    Ok(v) => v,
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            })
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, min_chunk: usize) {
+    IS_WORKER.with(|w| w.set(true));
+    WORKER_MIN_CHUNK.with(|c| c.set(min_chunk));
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_results_under_contention() {
+        let pool = ThreadPool::new(4, 1);
+        let tasks: Vec<_> = (0..64).map(|i| move || i * 3).collect();
+        let out = pool.run(tasks);
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_pool_spawns_no_workers() {
+        let pool = ThreadPool::new(1, 1);
+        assert!(pool.is_inline());
+        assert_eq!(pool.workers.len(), 0);
+        let caller = std::thread::current().id();
+        let ids =
+            pool.run((0..2).map(|_| move || std::thread::current().id()).collect::<Vec<_>>());
+        assert!(ids.iter().all(|&id| id == caller));
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_to_tasks() {
+        let pool = ThreadPool::new(3, 1);
+        let data: Vec<u64> = (0..100).collect();
+        let dref = &data;
+        let halves = [(0usize, 50usize), (50, 100)];
+        let sums = pool.run(
+            halves
+                .iter()
+                .map(|&(lo, hi)| move || dref[lo..hi].iter().sum::<u64>())
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(sums[0] + sums[1], data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn pool_survives_task_panic() {
+        let pool = ThreadPool::new(2, 1);
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<_> = (0..4)
+                .map(|i| {
+                    move || {
+                        if i == 2 {
+                            panic!("task {i} exploded");
+                        }
+                        i
+                    }
+                })
+                .collect();
+            pool.run(tasks)
+        }));
+        assert!(attempt.is_err(), "panic must propagate to the joiner");
+        let out = pool.run((0..4).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+}

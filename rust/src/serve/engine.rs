@@ -18,6 +18,13 @@
 //! path turns many scattered dot products into a single streaming pass
 //! per model. The HTTP front end feeds this from concurrent
 //! connections (see [`super::http`]).
+//!
+//! **Parallelism**: distinct groups are independent, so they fork onto
+//! the [`crate::par`] pool, and each group's GEMV row-chunks onto the
+//! same pool beneath that (nested joins run inline). `gemv` evaluates
+//! every output row with the identical per-row [`dot`], so pool
+//! execution cannot change a served bit — the exactness contract
+//! survives parallelism by construction.
 
 use super::store::{ModelRecord, ModelRegistry};
 use crate::error::{anyhow, Result};
@@ -182,76 +189,99 @@ impl PredictionEngine {
         Ok(dot(&q.x, &coefs))
     }
 
-    /// Evaluate a batch: rows are grouped by (model, selector) and each
-    /// group runs as one dense GEMV. Per-query failures (unknown model,
-    /// dimension mismatch, bad selector) fail only that query.
+    /// Evaluate a batch: rows are grouped by (model, selector), groups
+    /// fork onto the [`crate::par`] pool, and each group runs as one
+    /// dense GEMV. Per-query failures (unknown model, dimension
+    /// mismatch, bad selector) fail only that query.
     pub fn predict_batch(&self, queries: &[Query]) -> Vec<Result<f64>> {
         self.counters.queries.fetch_add(queries.len() as u64, Ordering::Relaxed);
         self.counters.batches.fetch_add(1, Ordering::Relaxed);
         self.counters.batched_rows.fetch_add(queries.len() as u64, Ordering::Relaxed);
         self.counters.max_batch_rows.fetch_max(queries.len() as u64, Ordering::Relaxed);
 
-        let mut out: Vec<Option<Result<f64>>> = queries.iter().map(|_| None).collect();
         let mut groups: HashMap<(u64, SelKey), Vec<usize>> = HashMap::new();
         for (i, q) in queries.iter().enumerate() {
             groups.entry((q.model, q.selector.cache_key())).or_default().push(i);
         }
 
-        for ((model, _), idxs) in groups {
-            let selector = queries[idxs[0]].selector;
-            let rec = match self.registry.get(model) {
-                Some(r) => r,
-                None => {
-                    for &i in &idxs {
-                        out[i] = Some(Err(anyhow!("unknown model {model}")));
-                    }
-                    self.counters.errors.fetch_add(idxs.len() as u64, Ordering::Relaxed);
-                    continue;
-                }
-            };
-            let coefs = match self.coefs_for(&rec, selector) {
-                Ok(c) => c,
-                Err(e) => {
-                    for &i in &idxs {
-                        out[i] = Some(Err(e.clone()));
-                    }
-                    self.counters.errors.fetch_add(idxs.len() as u64, Ordering::Relaxed);
-                    continue;
-                }
-            };
-            let mut rows: Vec<&[f64]> = Vec::with_capacity(idxs.len());
-            let mut row_idx: Vec<usize> = Vec::with_capacity(idxs.len());
-            for &i in &idxs {
-                if queries[i].x.len() == rec.snapshot.n {
-                    rows.push(&queries[i].x);
-                    row_idx.push(i);
-                } else {
-                    out[i] = Some(Err(anyhow!(
+        // Cross-request parallelism: every (model, selector) group is
+        // independent, so the groups themselves are fork-join tasks.
+        // Each returns (query index, result) pairs; scattering them
+        // back by index makes the output order — and every served bit —
+        // independent of both HashMap iteration and task scheduling.
+        let tasks: Vec<_> = groups
+            .into_iter()
+            .map(|((model, _), idxs)| move || self.eval_group(queries, model, idxs))
+            .collect();
+        let mut out: Vec<Option<Result<f64>>> = queries.iter().map(|_| None).collect();
+        for (i, res) in crate::par::run_tasks(tasks).into_iter().flatten() {
+            out[i] = Some(res);
+        }
+        out.into_iter().map(|o| o.expect("every query answered")).collect()
+    }
+
+    /// Evaluate one (model, selector) group of a batch; `idxs` are the
+    /// group's indices into `queries`.
+    fn eval_group(
+        &self,
+        queries: &[Query],
+        model: u64,
+        idxs: Vec<usize>,
+    ) -> Vec<(usize, Result<f64>)> {
+        let selector = queries[idxs[0]].selector;
+        let rec = match self.registry.get(model) {
+            Some(r) => r,
+            None => {
+                self.counters.errors.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+                return idxs
+                    .into_iter()
+                    .map(|i| (i, Err(anyhow!("unknown model {model}"))))
+                    .collect();
+            }
+        };
+        let coefs = match self.coefs_for(&rec, selector) {
+            Ok(c) => c,
+            Err(e) => {
+                self.counters.errors.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+                return idxs.into_iter().map(|i| (i, Err(e.clone()))).collect();
+            }
+        };
+        let mut out: Vec<(usize, Result<f64>)> = Vec::with_capacity(idxs.len());
+        let mut rows: Vec<&[f64]> = Vec::with_capacity(idxs.len());
+        let mut row_idx: Vec<usize> = Vec::with_capacity(idxs.len());
+        for &i in &idxs {
+            if queries[i].x.len() == rec.snapshot.n {
+                rows.push(&queries[i].x);
+                row_idx.push(i);
+            } else {
+                out.push((
+                    i,
+                    Err(anyhow!(
                         "query dimension {} != model dimension {}",
                         queries[i].x.len(),
                         rec.snapshot.n
-                    )));
-                    self.counters.errors.fetch_add(1, Ordering::Relaxed);
-                }
+                    )),
+                ));
+                self.counters.errors.fetch_add(1, Ordering::Relaxed);
             }
-            match row_idx.len() {
-                0 => {}
-                1 => out[row_idx[0]] = Some(Ok(dot(rows[0], &coefs))),
-                _ => {
-                    // The batched hot path: one GEMV for the whole group.
-                    // `gemv` computes dot(row_i, coefs) per row — the same
-                    // kernel and operand order as the single-query path,
-                    // so batching never changes a result bit.
-                    let mat = DenseMatrix::from_rows(&rows);
-                    let mut ys = vec![0.0; rows.len()];
-                    mat.gemv(&coefs, &mut ys);
-                    for (&i, y) in row_idx.iter().zip(ys) {
-                        out[i] = Some(Ok(y));
-                    }
+        }
+        match row_idx.len() {
+            0 => {}
+            1 => out.push((row_idx[0], Ok(dot(rows[0], &coefs)))),
+            _ => {
+                // The batched hot path: one GEMV for the whole group.
+                // `gemv` computes dot(row_i, coefs) per row — the same
+                // kernel and operand order as the single-query path,
+                // so batching never changes a result bit.
+                let mat = DenseMatrix::from_rows(&rows);
+                let mut ys = vec![0.0; rows.len()];
+                mat.gemv(&coefs, &mut ys);
+                for (&i, y) in row_idx.iter().zip(ys) {
+                    out.push((i, Ok(y)));
                 }
             }
         }
-        out.into_iter().map(|o| o.expect("every query answered")).collect()
+        out
     }
 
     /// Counter snapshot for `/stats`.

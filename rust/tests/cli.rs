@@ -85,4 +85,41 @@ fn info_lists_datasets() {
     let s = String::from_utf8_lossy(&out.stdout);
     assert!(s.contains("dataset registry"));
     assert!(s.contains("e2006_log1p_like"));
+    assert!(s.contains("parallel execution:"), "{s}");
+}
+
+#[test]
+fn info_json_reports_machine_shape() {
+    let out = calars(&["info", "--json"]);
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    for key in ["\"version\"", "\"cores\"", "\"threads\"", "\"min_chunk\"", "\"features\""] {
+        assert!(s.contains(key), "missing {key} in {s}");
+    }
+}
+
+#[test]
+fn par_flags_accepted_and_deterministic() {
+    let run = |threads: &str| {
+        let out = calars(&[
+            "run", "--algo", "lars", "--dataset", "tiny", "--t", "8", "--par-threads", threads,
+        ]);
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .find(|l| l.starts_with("first 10 selections"))
+            .expect("selection line")
+            .to_string()
+    };
+    let s1 = run("1");
+    assert_eq!(s1, run("2"), "thread count changed the selection");
+    assert_eq!(s1, run("4"), "thread count changed the selection");
+}
+
+#[test]
+fn bad_par_flags_fail() {
+    let out = calars(&["info", "--par-min-chunk", "0"]);
+    assert!(!out.status.success());
+    let out = calars(&["info", "--par-threads", "lots"]);
+    assert!(!out.status.success());
 }

@@ -1,0 +1,268 @@
+//! The shared-memory execution layer's contract, end to end:
+//!
+//! * pool mechanics — ordered results, panic propagation, nested
+//!   fork-join, the threads=1 inline path;
+//! * the determinism guarantee the rest of the crate builds on —
+//!   **bit-identical fitter outputs under `CALARS_THREADS ∈ {1,2,4}`**
+//!   for LARS, bLARS (serial + cluster) and T-bLARS, dense and sparse,
+//!   via `par::with_pool` so all three thread counts run in one
+//!   process.
+
+use calars::cluster::{ExecMode, HwParams, SimCluster};
+use calars::data::{datasets, partition};
+use calars::lars::blars::{blars, BlarsOptions};
+use calars::lars::serial::{blars_serial, lars, LarsOptions};
+use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::lars::LarsOutput;
+use calars::par::{self, ThreadPool};
+use calars::proptest_lite::{check, Config};
+
+fn pool(threads: usize) -> ThreadPool {
+    ThreadPool::new(threads, par::DEFAULT_MIN_CHUNK)
+}
+
+// ── Pool mechanics ──────────────────────────────────────────────────
+
+#[test]
+fn results_come_back_in_task_order() {
+    let p = pool(4);
+    let out = p.run(
+        (0..100)
+            .map(|i| {
+                move || {
+                    // Stagger finish times so scheduling order ≠ task order.
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                    i * i
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+}
+
+#[test]
+fn threads1_executes_inline_on_caller() {
+    let p = pool(1);
+    assert!(p.is_inline());
+    let caller = std::thread::current().id();
+    let ids = p.run((0..8).map(|_| move || std::thread::current().id()).collect::<Vec<_>>());
+    assert!(ids.iter().all(|&id| id == caller), "threads=1 must never leave the caller");
+}
+
+#[test]
+fn worker_panic_propagates_and_pool_survives() {
+    let p = pool(2);
+    let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        p.run(
+            (0..8)
+                .map(|i| {
+                    move || {
+                        if i == 5 {
+                            panic!("worker task {i} failed");
+                        }
+                        i
+                    }
+                })
+                .collect::<Vec<_>>(),
+        )
+    }));
+    assert!(attempt.is_err(), "the join must re-raise the task panic");
+    // The pool keeps serving after a task panic.
+    let out = p.run((0..8).map(|i| move || i + 1).collect::<Vec<_>>());
+    assert_eq!(out, (1..9).collect::<Vec<_>>());
+}
+
+#[test]
+fn nested_fork_join_runs_inline_without_deadlock() {
+    let p = pool(4);
+    let pref = &p;
+    let out = p.run(
+        (0..8)
+            .map(|i| {
+                move || {
+                    // A task forking again must not wait on its own pool.
+                    let inner =
+                        pref.run((0..16).map(|j| move || i * 100 + j).collect::<Vec<_>>());
+                    inner.iter().sum::<usize>()
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    for (i, &s) in out.iter().enumerate() {
+        assert_eq!(s, (0..16).map(|j| i * 100 + j).sum::<usize>());
+    }
+}
+
+#[test]
+fn with_pool_scopes_kernel_execution() {
+    let p = pool(3);
+    let (inside, inside_chunk) = par::with_pool(&p, || (par::threads(), par::min_chunk()));
+    assert_eq!(inside, 3);
+    assert_eq!(inside_chunk, par::DEFAULT_MIN_CHUNK);
+}
+
+// ── Cross-fitter determinism: CALARS_THREADS ∈ {1, 2, 4} ───────────
+
+fn assert_bit_identical(a: &LarsOutput, b: &LarsOutput, label: &str) {
+    assert_eq!(a.selected, b.selected, "{label}: selection changed");
+    assert_eq!(a.stop, b.stop, "{label}: stop reason changed");
+    assert_eq!(
+        a.residual_norms.len(),
+        b.residual_norms.len(),
+        "{label}: path length changed"
+    );
+    for (x, y) in a.residual_norms.iter().zip(&b.residual_norms) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: residual bits changed");
+    }
+    for (x, y) in a.y.iter().zip(&b.y) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: fitted-response bits changed");
+    }
+}
+
+/// Run `f` under pools of 1, 2 and 4 threads (same grain) and demand
+/// bit-identical outputs.
+fn identical_under_thread_counts(label: &str, f: impl Fn() -> LarsOutput) {
+    let base = par::with_pool(&pool(1), &f);
+    for threads in [2usize, 4] {
+        let out = par::with_pool(&pool(threads), &f);
+        assert_bit_identical(&base, &out, &format!("{label} threads={threads}"));
+    }
+}
+
+#[test]
+fn lars_bit_identical_across_thread_counts_dense() {
+    // year_like is tall-dense: at_r really splits into many chunks.
+    let d = datasets::year_like(3);
+    identical_under_thread_counts("lars/year", || {
+        lars(&d.a, &d.b, &LarsOptions { t: 16, ..Default::default() })
+    });
+}
+
+#[test]
+fn blars_serial_bit_identical_across_thread_counts_sparse() {
+    let d = datasets::sector_like(4);
+    identical_under_thread_counts("blars_serial/sector", || {
+        blars_serial(&d.a, &d.b, &LarsOptions { t: 20, b: 4, ..Default::default() })
+    });
+}
+
+#[test]
+fn cluster_blars_bit_identical_across_thread_counts() {
+    let d = datasets::tiny(5);
+    for mode in [ExecMode::Sequential, ExecMode::Threaded] {
+        identical_under_thread_counts("blars/cluster", || {
+            let mut cluster = SimCluster::new(4, HwParams::default(), mode);
+            blars(&d.a, &d.b, &BlarsOptions { t: 12, b: 3, ..Default::default() }, &mut cluster)
+        });
+    }
+}
+
+#[test]
+fn tblars_bit_identical_across_thread_counts() {
+    let d = datasets::tiny(6);
+    let parts = partition::balanced_col_partition(&d.a, 4);
+    for mode in [ExecMode::Sequential, ExecMode::Threaded] {
+        identical_under_thread_counts("tblars", || {
+            let mut cluster = SimCluster::new(4, HwParams::default(), mode);
+            tblars(
+                &d.a,
+                &d.b,
+                &parts,
+                &TblarsOptions { t: 10, b: 2, ..Default::default() },
+                &mut cluster,
+            )
+        });
+    }
+}
+
+#[test]
+fn prop_random_problems_thread_count_invariant() {
+    // Property form over random dense/sparse problems: the whole fit
+    // (selection, residual path, fitted response) is a pure function
+    // of the data — never of the thread count.
+    use calars::data::synthetic::{generate, SyntheticSpec};
+    check(
+        Config { cases: 10, seed: 0x9A7A11E1 },
+        |rng, size| {
+            let spec = SyntheticSpec {
+                m: 40 + size * 20,
+                n: 30 + size * 10,
+                density: if rng.uniform() < 0.5 { 1.0 } else { 0.25 },
+                col_skew: rng.uniform_range(0.0, 1.0),
+                k_true: 4 + size / 3,
+                noise: rng.uniform_range(0.0, 0.05),
+            };
+            generate(&spec, rng.next_u64())
+        },
+        |s| {
+            let t = 8.min(s.a.ncols() / 2).max(2);
+            // Small grain forces multi-chunk execution even at this size.
+            let run = |threads: usize| {
+                let p = ThreadPool::new(threads, 256);
+                par::with_pool(&p, || {
+                    lars(&s.a, &s.b, &LarsOptions { t, ..Default::default() })
+                })
+            };
+            let base = run(1);
+            for threads in [2usize, 4] {
+                let out = run(threads);
+                if base.selected != out.selected {
+                    return Err(format!("selection diverged at threads={threads}"));
+                }
+                for (x, y) in base.y.iter().zip(&out.y) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("y bits diverged at threads={threads}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn serving_batch_bit_identical_under_pool() {
+    // The engine's exactness contract must survive pool execution: a
+    // batched predict equals the unbatched one bit for bit, at any
+    // thread count.
+    use calars::lars::serial::lars_with_snapshot;
+    use calars::serve::{ModelMeta, ModelRegistry, PredictionEngine, Query, Selector};
+    use std::sync::Arc;
+
+    let d = datasets::tiny_dense(8);
+    let (_, snap) = lars_with_snapshot(&d.a, &d.b, &LarsOptions { t: 8, ..Default::default() });
+    let n = d.a.ncols();
+    let registry = Arc::new(ModelRegistry::new(4));
+    let id = registry.insert(ModelMeta::named("par-test"), snap);
+    let engine = PredictionEngine::new(registry, 16);
+    let queries: Vec<Query> = (0..64)
+        .map(|i| Query {
+            model: id,
+            selector: if i % 2 == 0 { Selector::Step(4) } else { Selector::Step(8) },
+            x: (0..n).map(|j| ((i * j) as f64 * 0.01).sin()).collect(),
+        })
+        .collect();
+    let run = |threads: usize| {
+        let p = pool(threads);
+        par::with_pool(&p, || {
+            engine
+                .predict_batch(&queries)
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect::<Vec<f64>>()
+        })
+    };
+    let base = run(1);
+    for (q, &batched) in queries.iter().zip(&base) {
+        let single = engine.predict(q).unwrap();
+        assert_eq!(single.to_bits(), batched.to_bits(), "batch vs single mismatch");
+    }
+    for threads in [2usize, 4] {
+        let got = run(threads);
+        for (x, y) in base.iter().zip(&got) {
+            assert_eq!(x.to_bits(), y.to_bits(), "threads={threads} changed a served bit");
+        }
+    }
+}

@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# CI for calars: format check, release build, test suite, then a live
+# CI for calars: format check, release build, test suite, perf stage
+# (parallel-scaling bench + serving smoke, both in JSON mode, recorded
+# as BENCH_parallel.json / BENCH_serving.json), then a live
 # serve → fit → predict → shutdown smoke cycle (README §CI).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,13 +19,37 @@ cargo build --release
 echo "== tests =="
 cargo test -q
 
-echo "== serving smoke =="
 BIN=target/release/calars
+
+# Require the perf-schema keys in a bench JSON file.
+check_bench_json() {
+    local file=$1
+    for key in '"bench"' '"threads"' '"wall_ms"' '"speedup"'; do
+        grep -q "$key" "$file" || { echo "$file missing $key:"; cat "$file"; exit 1; }
+    done
+    echo "$file OK"
+}
+
+echo "== perf: machine shape =="
+"$BIN" info --json
+
+echo "== perf: parallel scaling =="
+# The bench itself verifies parallel output is bit-identical to serial
+# and exits nonzero on divergence, so this line both records the perf
+# trajectory and gates determinism.
+cargo bench --bench parallel_scaling -- --json > BENCH_parallel.json
+check_bench_json BENCH_parallel.json
+
+echo "== serving smoke + perf =="
 PORT="${CALARS_SMOKE_PORT:-17878}"
 LOG="$(mktemp)"
 "$BIN" serve --port "$PORT" --oneshot --prefit tiny >"$LOG" 2>&1 &
 SERVER_PID=$!
-trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
+BENCH_PID=""
+# Reap BOTH the server and any still-running bench client on exit, so a
+# hung bench-serve can never leak the smoke server (or itself).
+trap 'kill "$SERVER_PID" 2>/dev/null || true
+      [ -n "$BENCH_PID" ] && kill "$BENCH_PID" 2>/dev/null || true' EXIT
 
 # Wait for the listener (prefit runs before accept).
 for _ in $(seq 1 100); do
@@ -36,9 +62,40 @@ done
 grep -q "listening on" "$LOG" || { echo "server never started:"; cat "$LOG"; exit 1; }
 
 # One full request/response cycle through the batched prediction path,
-# then ask the --oneshot server to exit.
-"$BIN" bench-serve --addr "127.0.0.1:$PORT" --requests 50 --concurrency 4 --rows 4 --shutdown
+# recorded as a JSON perf record, then ask the --oneshot server to
+# exit. The client runs in the background under a hard 120s deadline —
+# coreutils timeout when available, a pure-bash watchdog otherwise —
+# so a hang fails CI instead of wedging it.
+SMOKE_CMD=("$BIN" bench-serve --addr "127.0.0.1:$PORT" --requests 50 \
+           --concurrency 4 --rows 4 --json --shutdown)
+WATCHDOG_PID=""
+if command -v timeout >/dev/null 2>&1; then
+    timeout 120 "${SMOKE_CMD[@]}" > BENCH_serving.json &
+    BENCH_PID=$!
+else
+    "${SMOKE_CMD[@]}" > BENCH_serving.json &
+    BENCH_PID=$!
+    ( sleep 120; kill "$BENCH_PID" 2>/dev/null ) &
+    WATCHDOG_PID=$!
+fi
+if ! wait "$BENCH_PID"; then
+    echo "bench-serve failed or timed out"; cat BENCH_serving.json; exit 1
+fi
+BENCH_PID=""
+[ -n "$WATCHDOG_PID" ] && kill "$WATCHDOG_PID" 2>/dev/null || true
+check_bench_json BENCH_serving.json
 
-wait "$SERVER_PID"
+# Bounded wait for the --oneshot server to exit after /shutdown (an
+# unbounded `wait` here could hang CI on a shutdown bug).
+for _ in $(seq 1 100); do
+    kill -0 "$SERVER_PID" 2>/dev/null || break
+    sleep 0.1
+done
+if kill -0 "$SERVER_PID" 2>/dev/null; then
+    echo "server did not exit after shutdown"; exit 1
+fi
+if ! wait "$SERVER_PID"; then
+    echo "server exited nonzero:"; cat "$LOG"; exit 1
+fi
 trap - EXIT
 echo "== ci OK =="
