@@ -12,10 +12,9 @@
 //!
 //! Run: `cargo bench --bench ablations`
 
-use calars::cluster::{ExecMode, HwParams, SimCluster};
+use calars::cluster::HwParams;
 use calars::data::{datasets, partition};
-use calars::lars::blars::{blars, BlarsOptions};
-use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::fit::{Algorithm, FitSpec};
 use calars::linalg::{Cholesky, DenseMatrix, Matrix};
 use calars::metrics::{bench, black_box, fmt_secs};
 use calars::rng::Pcg64;
@@ -38,9 +37,15 @@ fn hw_regimes() {
         ("slow network (WAN-ish)", HwParams::slow_network()),
     ] {
         let sim = |b: usize| {
-            let mut c = SimCluster::new(16, hw, ExecMode::Sequential);
-            blars(&ds.a, &ds.b, &BlarsOptions { t, b, ..Default::default() }, &mut c);
-            c.sim_time()
+            FitSpec::new(Algorithm::Blars { b })
+                .t(t)
+                .ranks(16)
+                .hw(hw)
+                .run(&ds.a, &ds.b)
+                .expect("fit")
+                .sim
+                .expect("cluster telemetry")
+                .sim_time
         };
         let s1 = sim(1);
         let s8 = sim(8);
@@ -99,13 +104,23 @@ fn partition_policy() {
     let balanced = partition::balanced_col_partition(&ds.a, 16);
     let mut rng = Pcg64::new(3);
     let random = partition::random_col_partition(ds.a.ncols(), 16, &mut rng);
-    for (name, parts) in [("nnz-balanced", &balanced), ("random", &random)] {
+    // partition_seed mirrors the explicit constructions above: None =
+    // the same nnz-balanced partition, Some(3) = the same Pcg64(3)
+    // random partition the imbalance is computed for.
+    for (name, parts, seed) in
+        [("nnz-balanced", &balanced, None), ("random", &random, Some(3u64))]
+    {
         let imb = partition::partition_imbalance(&ds.a, parts);
-        let mut c = SimCluster::new(16, HwParams::default(), ExecMode::Sequential);
-        tblars(&ds.a, &ds.b, parts, &TblarsOptions { t, b: 4, ..Default::default() }, &mut c);
+        let sim = FitSpec::new(Algorithm::TBlars { b: 4, parts: 16 })
+            .t(t)
+            .partition_seed(seed)
+            .run(&ds.a, &ds.b)
+            .expect("fit")
+            .sim
+            .expect("cluster telemetry");
         println!(
             "  {name:<14} imbalance {imb:.3}   sim time {:>10}",
-            fmt_secs(c.sim_time())
+            fmt_secs(sim.sim_time)
         );
     }
     println!("  → balancing by nnz keeps the leaf superstep critical path tight.\n");

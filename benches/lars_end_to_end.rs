@@ -1,13 +1,11 @@
 //! End-to-end algorithm benchmarks: wallclock of each method per
-//! dataset at representative (P, b), plus XLA-vs-native kernel timing.
+//! dataset at representative (P, b) — all through the unified
+//! `calars::fit` estimator API — plus XLA-vs-native kernel timing.
 //!
 //! Run: `cargo bench --bench lars_end_to_end`
 
-use calars::cluster::{ExecMode, HwParams, SimCluster};
-use calars::data::{datasets, partition};
-use calars::lars::blars::{blars, BlarsOptions};
-use calars::lars::serial::{lars, LarsOptions};
-use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::data::datasets;
+use calars::fit::{Algorithm, FitSpec};
 use calars::linalg::Matrix;
 use calars::metrics::{bench, fmt_secs};
 use calars::runtime::{default_artifacts_dir, XlaRuntime};
@@ -20,27 +18,23 @@ fn main() {
         let t = t.min(ds.a.nrows().min(ds.a.ncols()) / 2);
         println!("## {} (t = {t})", ds.name);
 
+        let lars_spec = FitSpec::new(Algorithm::Lars).t(t);
         let s = bench(1, 3, || {
-            lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() }).selected.len()
+            lars_spec.run(&ds.a, &ds.b).expect("fit").output.selected.len()
         });
         println!("  serial LARS           best {:>10}", fmt_secs(s.best));
 
         for (p, b) in [(8usize, 1usize), (8, 4)] {
+            let spec = FitSpec::new(Algorithm::Blars { b }).t(t).ranks(p);
             let s = bench(1, 3, || {
-                let mut c = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
-                blars(&ds.a, &ds.b, &BlarsOptions { t, b, ..Default::default() }, &mut c)
-                    .selected
-                    .len()
+                spec.run(&ds.a, &ds.b).expect("fit").output.selected.len()
             });
             println!("  bLARS   P={p} b={b}       best {:>10}", fmt_secs(s.best));
         }
         for (p, b) in [(8usize, 4usize)] {
-            let parts = partition::balanced_col_partition(&ds.a, p);
+            let spec = FitSpec::new(Algorithm::TBlars { b, parts: p }).t(t);
             let s = bench(1, 3, || {
-                let mut c = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
-                tblars(&ds.a, &ds.b, &parts, &TblarsOptions { t, b, ..Default::default() }, &mut c)
-                    .selected
-                    .len()
+                spec.run(&ds.a, &ds.b).expect("fit").output.selected.len()
             });
             println!("  T-bLARS P={p} b={b}       best {:>10}", fmt_secs(s.best));
         }

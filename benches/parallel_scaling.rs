@@ -11,7 +11,8 @@
 //!      schema per record: {bench, threads, wall_ms, speedup})
 
 use calars::data::datasets;
-use calars::lars::serial::{blars_serial, LarsOptions};
+use calars::fit::NoopObserver;
+use calars::lars::serial::{self, LarsOptions};
 use calars::linalg::DenseMatrix;
 use calars::metrics::{bench, black_box, fmt_secs};
 use calars::par::{self, ThreadPool};
@@ -67,6 +68,11 @@ fn main() {
     let coefs: Vec<f64> = (0..512).map(|j| (j as f64 * 0.01).sin()).collect();
     let gram_ii: Vec<usize> = (0..60).collect();
     let gram_jj: Vec<usize> = (30..90).collect();
+    // End-to-end fit through the serial bLARS core (the same
+    // `fit_observed` the estimator API dispatches to, minus the
+    // simulated-cluster bookkeeping, so the record measures kernel
+    // scaling only and keeps its historical name/trajectory).
+    let blars_opts = LarsOptions { t: 24, b: 4, ..Default::default() };
 
     let mut records: Vec<Record> = Vec::new();
     let mut diverged = false;
@@ -108,11 +114,8 @@ fn main() {
             "blars_serial_year_t24_b4",
             3,
             Box::new(|| {
-                let out = blars_serial(
-                    &year.a,
-                    &year.b,
-                    &LarsOptions { t: 24, b: 4, ..Default::default() },
-                );
+                let out = serial::fit_observed(&year.a, &year.b, &blars_opts, &mut NoopObserver)
+                    .expect("fit");
                 let mut sig: Vec<f64> = out.selected.iter().map(|&j| j as f64).collect();
                 sig.extend_from_slice(&out.residual_norms);
                 sig

@@ -4,19 +4,17 @@
 //! Recover a k-sparse signal x from m ≪ n random measurements b = Ax:
 //! the classic underdetermined regime where greedy path algorithms
 //! shine. Compares LARS, bLARS (several b), OMP and LASSO-CD on
-//! recovery quality and (simulated) parallel cost.
+//! recovery quality and (simulated) parallel cost — every fitter
+//! through the one `calars::fit` estimator call path.
 //!
 //! ```bash
 //! cargo run --release --example compressed_sensing
 //! ```
 
 use calars::baselines::lasso_cd::{lambda_max, lasso_cd};
-use calars::baselines::omp::omp;
-use calars::cluster::{ExecMode, HwParams, SimCluster};
 use calars::data::synthetic::{generate, SyntheticSpec};
-use calars::lars::blars::{blars, BlarsOptions};
+use calars::fit::{Algorithm, FitSpec};
 use calars::lars::quality::recall;
-use calars::lars::serial::{lars, LarsOptions};
 use calars::metrics::fmt_secs;
 
 fn main() {
@@ -36,34 +34,37 @@ fn main() {
     println!("{:-<72}", "");
 
     // Serial LARS.
-    let la = lars(&s.a, &s.b, &LarsOptions { t, ..Default::default() });
+    let la = FitSpec::new(Algorithm::Lars).t(t).run(&s.a, &s.b).expect("fit");
     println!(
         "LARS       : recall {:.2}  residual {:.4}",
-        recall(&la.selected, truth),
-        la.residual_norms.last().unwrap()
+        recall(&la.output.selected, truth),
+        la.output.residual_norms.last().unwrap()
     );
 
     // Parallel bLARS across block sizes: same recovery, b-fold fewer
     // synchronizations (the paper's headline trade).
     for b in [1usize, 2, 4, 10] {
-        let mut cluster = SimCluster::new(8, HwParams::default(), ExecMode::Sequential);
-        let out = blars(&s.a, &s.b, &BlarsOptions { t, b, ..Default::default() }, &mut cluster);
-        let c = cluster.counters();
+        let result = FitSpec::new(Algorithm::Blars { b })
+            .t(t)
+            .ranks(8)
+            .run(&s.a, &s.b)
+            .expect("fit");
+        let sim = result.sim.as_ref().expect("cluster telemetry");
         println!(
             "bLARS b={b:<3}: recall {:.2}  residual {:.4}  sim {}  msgs {}",
-            recall(&out.selected, truth),
-            out.residual_norms.last().unwrap(),
-            fmt_secs(cluster.sim_time()),
-            c.msgs
+            recall(&result.output.selected, truth),
+            result.output.residual_norms.last().unwrap(),
+            fmt_secs(sim.sim_time),
+            sim.counters.msgs
         );
     }
 
-    // Baselines.
-    let om = omp(&s.a, &s.b, t);
+    // Baselines, same call path.
+    let om = FitSpec::new(Algorithm::Omp).t(t).run(&s.a, &s.b).expect("fit");
     println!(
         "OMP        : recall {:.2}  residual {:.4}",
-        recall(&om.selected, truth),
-        om.residual_norms.last().unwrap()
+        recall(&om.output.selected, truth),
+        om.output.residual_norms.last().unwrap()
     );
     let lam = lambda_max(&s.a, &s.b) * 0.1;
     let lc = lasso_cd(&s.a, &s.b, lam, 500, 1e-10);

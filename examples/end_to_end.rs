@@ -5,9 +5,12 @@
 //! 1. **Runtime bridge** — load the AOT artifacts (JAX+Pallas → HLO
 //!    text), execute the `corr` and `gstep` kernels via PJRT, verify
 //!    parity against the native f64 kernels on the year-like dataset.
+//!    Skipped gracefully when the artifacts are absent (CI runs this
+//!    example without `make artifacts`).
 //! 2. **Coordinator** — run the paper's three algorithms on all four
-//!    scaled datasets, reporting quality (residual, precision) and the
-//!    simulated parallel cost (time, words, messages).
+//!    scaled datasets through the `calars::fit` estimator API,
+//!    reporting quality (residual, precision) and the simulated
+//!    parallel cost (time, words, messages).
 //! 3. **Headline check** — reproduce the paper's §10 summary numbers:
 //!    bLARS speedup at (P=4, b≈38) and T-bLARS quality at (P=64, b=2)
 //!    on the n ≫ m dataset.
@@ -16,23 +19,23 @@
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
-use calars::cluster::{ExecMode, HwParams, SimCluster};
-use calars::data::{datasets, partition};
-use calars::lars::blars::{blars, BlarsOptions};
+use calars::data::datasets;
+use calars::fit::{Algorithm, FitSpec, SimReport};
 use calars::lars::quality::precision;
-use calars::lars::serial::{lars, LarsOptions};
-use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::lars::LarsOutput;
 use calars::linalg::Matrix;
 use calars::metrics::{fmt_count, fmt_secs};
 use calars::runtime::{default_artifacts_dir, XlaRuntime};
 
-fn main() {
+/// Layer 1+2: only runs when the AOT artifacts exist.
+fn runtime_bridge() {
     println!("=== Layer 1+2: AOT artifacts via PJRT ===");
     let rt = match XlaRuntime::load(&default_artifacts_dir()) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("artifacts unavailable ({e}); run `make artifacts` first");
-            std::process::exit(1);
+            println!("artifacts unavailable ({e}); skipping the runtime layer");
+            println!("(run `make artifacts` to exercise the PJRT path)");
+            return;
         }
     };
     println!("platform: {}, artifacts: {}", rt.platform(), rt.manifest().len());
@@ -99,6 +102,16 @@ fn main() {
         gammas[jstar],
         fmt_secs(t0.elapsed().as_secs_f64())
     );
+}
+
+fn fit_sim(spec: FitSpec, ds: &calars::data::Dataset) -> (LarsOutput, SimReport) {
+    let result = spec.run(&ds.a, &ds.b).expect("valid spec");
+    let sim = result.sim.expect("cluster fitters report telemetry");
+    (result.output, sim)
+}
+
+fn main() {
+    runtime_bridge();
 
     println!("\n=== Layer 3: coordinator on the full paper suite ===");
     let t = 60;
@@ -108,37 +121,31 @@ fn main() {
     );
     for ds in datasets::paper_suite(42) {
         let t = t.min(ds.a.nrows().min(ds.a.ncols()) / 2);
-        let reference = lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() });
-        let rows: Vec<(String, calars::lars::LarsOutput, SimCluster)> = vec![
-            {
-                let mut c = SimCluster::new(16, HwParams::default(), ExecMode::Sequential);
-                let o = blars(&ds.a, &ds.b, &BlarsOptions { t, b: 4, ..Default::default() }, &mut c);
-                ("bLARS P=16 b=4".into(), o, c)
-            },
-            {
-                let parts = partition::balanced_col_partition(&ds.a, 16);
-                let mut c = SimCluster::new(16, HwParams::default(), ExecMode::Sequential);
-                let o = tblars(
-                    &ds.a,
-                    &ds.b,
-                    &parts,
-                    &TblarsOptions { t, b: 4, ..Default::default() },
-                    &mut c,
-                );
-                ("T-bLARS P=16 b=4".into(), o, c)
-            },
+        let reference = FitSpec::new(Algorithm::Lars)
+            .t(t)
+            .run(&ds.a, &ds.b)
+            .expect("fit")
+            .output;
+        let rows = vec![
+            (
+                "bLARS P=16 b=4".to_string(),
+                fit_sim(FitSpec::new(Algorithm::Blars { b: 4 }).t(t).ranks(16), &ds),
+            ),
+            (
+                "T-bLARS P=16 b=4".to_string(),
+                fit_sim(FitSpec::new(Algorithm::TBlars { b: 4, parts: 16 }).t(t), &ds),
+            ),
         ];
-        for (name, out, cluster) in rows {
-            let counters = cluster.counters();
+        for (name, (out, sim)) in rows {
             println!(
                 "{:<22} {:<14} {:>9.2} {:>10.4} {:>10} {:>9} {:>8}",
                 ds.name,
                 name,
                 precision(&out.selected, &reference.selected),
                 out.residual_norms.last().unwrap(),
-                fmt_secs(cluster.sim_time()),
-                fmt_count(counters.words),
-                fmt_count(counters.msgs)
+                fmt_secs(sim.sim_time),
+                fmt_count(sim.counters.words),
+                fmt_count(sim.counters.msgs)
             );
         }
     }
@@ -146,29 +153,29 @@ fn main() {
     println!("\n=== Headline checks (paper §10.2, e2006_log1p regime) ===");
     let ds = datasets::e2006_log1p_like(42);
     let t = 60;
-    let reference = lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() });
+    let reference = FitSpec::new(Algorithm::Lars)
+        .t(t)
+        .run(&ds.a, &ds.b)
+        .expect("fit")
+        .output;
 
     // Baseline: parallel LARS (P=1, b=1).
-    let mut c0 = SimCluster::new(1, HwParams::default(), ExecMode::Sequential);
-    let _ = blars(&ds.a, &ds.b, &BlarsOptions { t, b: 1, ..Default::default() }, &mut c0);
-    let base = c0.sim_time();
+    let (_, base_sim) = fit_sim(FitSpec::new(Algorithm::Blars { b: 1 }).t(t).ranks(1), &ds);
+    let base = base_sim.sim_time;
 
     // Paper: bLARS (P=4, b=38) ⇒ big speedup, low precision.
-    let mut c1 = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
-    let o1 = blars(&ds.a, &ds.b, &BlarsOptions { t, b: 38, ..Default::default() }, &mut c1);
+    let (o1, sim1) = fit_sim(FitSpec::new(Algorithm::Blars { b: 38 }).t(t).ranks(4), &ds);
     println!(
         "bLARS   P=4  b=38: speedup {:>5.1}x  precision {:.2}   (paper: ~27x, ~0.30)",
-        base / c1.sim_time(),
+        base / sim1.sim_time,
         precision(&o1.selected, &reference.selected)
     );
 
     // Paper: T-bLARS (P=64, b=2) ⇒ ~4x speedup at 100% precision.
-    let parts = partition::balanced_col_partition(&ds.a, 64);
-    let mut c2 = SimCluster::new(64, HwParams::default(), ExecMode::Sequential);
-    let o2 = tblars(&ds.a, &ds.b, &parts, &TblarsOptions { t, b: 2, ..Default::default() }, &mut c2);
+    let (o2, sim2) = fit_sim(FitSpec::new(Algorithm::TBlars { b: 2, parts: 64 }).t(t), &ds);
     println!(
         "T-bLARS P=64 b=2 : speedup {:>5.1}x  precision {:.2}   (paper: ~4x, 1.00)",
-        base / c2.sim_time(),
+        base / sim2.sim_time,
         precision(&o2.selected, &reference.selected)
     );
 

@@ -1,7 +1,8 @@
 //! The LASSO-path equivalence (paper §2; Efron et al., Theorem 1).
 //!
 //! LARS with the drop modification traces the *exact* ℓ1-regularization
-//! path; this example computes it on a correlated design (drops do
+//! path; this example computes it through the `calars::fit` estimator
+//! API (`Algorithm::LassoLars`) on a correlated design (drops do
 //! happen) and cross-checks interior solutions against the
 //! coordinate-descent LASSO solver — two entirely different algorithms
 //! agreeing to 1e-5.
@@ -12,7 +13,7 @@
 
 use calars::baselines::lasso_cd::{lambda_max, lasso_cd};
 use calars::data::synthetic::{generate, SyntheticSpec};
-use calars::lars::lasso_lars::lasso_path;
+use calars::fit::{Algorithm, FitSpec};
 use calars::linalg::norm_inf;
 
 fn main() {
@@ -20,11 +21,16 @@ fn main() {
         &SyntheticSpec { m: 120, n: 80, density: 1.0, col_skew: 0.0, k_true: 10, noise: 0.1 },
         2024,
     );
-    let path = lasso_path(&s.a, &s.b, 30, 1e-8);
+    let result = FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-8 })
+        .t(30)
+        .run(&s.a, &s.b)
+        .expect("valid spec");
+    let path = result.lasso.as_ref().expect("LassoLars reports the exact path");
     println!(
-        "LASSO path: {} breakpoints, {} drop events",
+        "LASSO path: {} breakpoints, {} drop events (stop: {:?})",
         path.breakpoints.len(),
-        path.drops
+        path.drops,
+        result.output.stop
     );
     println!("{:>12} {:>9} {:>12}", "lambda", "support", "residual");
     for bp in path.breakpoints.iter().step_by(3) {

@@ -1,13 +1,14 @@
-//! Quickstart: fit a sparse linear model with LARS in a few lines.
+//! Quickstart: fit a sparse linear model through the unified
+//! `calars::fit` estimator API in a few lines.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use calars::data::datasets;
+use calars::fit::{Algorithm, FitSpec};
 use calars::lars::path::{ls_coefficients, residual_norm};
 use calars::lars::quality::recall;
-use calars::lars::serial::{lars, LarsOptions};
 
 fn main() {
     // A small synthetic regression problem: 120 samples, 300 features,
@@ -20,9 +21,15 @@ fn main() {
         ds.true_support.as_ref().unwrap().len()
     );
 
-    // Run LARS for 12 columns.
-    let out = lars(&ds.a, &ds.b, &LarsOptions { t: 12, ..Default::default() });
+    // One estimator call path for the whole family: build a FitSpec,
+    // run it. Invalid specs return typed errors instead of panicking.
+    let result = FitSpec::new(Algorithm::Lars)
+        .t(12)
+        .run(&ds.a, &ds.b)
+        .expect("valid spec");
+    let out = &result.output;
     println!("selected (in order): {:?}", out.selected);
+    println!("stopped because: {:?}", out.stop);
     println!(
         "residual: {:.4} -> {:.4}",
         out.residual_norms.first().unwrap(),
@@ -37,4 +44,18 @@ fn main() {
     // How much of the planted truth did we find?
     let truth = ds.true_support.as_ref().unwrap();
     println!("recall vs planted support: {:.2}", recall(&out.selected, truth));
+
+    // Switching algorithms is switching the spec — same call, same
+    // result shape. bLARS with blocks of 4 on 8 simulated ranks:
+    let blars = FitSpec::new(Algorithm::Blars { b: 4 })
+        .t(12)
+        .ranks(8)
+        .run(&ds.a, &ds.b)
+        .expect("valid spec");
+    let sim = blars.sim.as_ref().expect("cluster fitters report telemetry");
+    println!(
+        "bLARS b=4 P=8: recall {:.2}, {} simulated messages",
+        recall(&blars.output.selected, truth),
+        sim.counters.msgs
+    );
 }

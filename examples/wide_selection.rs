@@ -4,17 +4,16 @@
 //! A genomics/text-like scenario: tens of thousands of sparse features,
 //! few samples, feature selection must run distributed because no
 //! single node holds all columns. Shows the tournament's quality
-//! (vs. LARS ground truth) and the communication profile as P grows.
+//! (vs. LARS ground truth) and the communication profile as P grows —
+//! both through the `calars::fit` estimator API.
 //!
 //! ```bash
 //! cargo run --release --example wide_selection
 //! ```
 
-use calars::cluster::{ExecMode, HwParams, SimCluster};
-use calars::data::{datasets, partition};
+use calars::data::datasets;
+use calars::fit::{Algorithm, FitSpec};
 use calars::lars::quality::precision;
-use calars::lars::serial::{lars, LarsOptions};
-use calars::lars::tblars::{tblars, TblarsOptions};
 use calars::metrics::{fmt_count, fmt_secs};
 
 fn main() {
@@ -29,7 +28,11 @@ fn main() {
     );
 
     println!("running serial LARS reference (t = {t})...");
-    let reference = lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() });
+    let reference = FitSpec::new(Algorithm::Lars)
+        .t(t)
+        .run(&ds.a, &ds.b)
+        .expect("fit")
+        .output;
 
     println!("{:-<78}", "");
     println!(
@@ -37,19 +40,19 @@ fn main() {
         "config", "precision", "residual", "sim time", "words", "msgs"
     );
     for (p, b) in [(1usize, 2usize), (4, 2), (16, 2), (64, 2), (16, 8), (64, 8)] {
-        let parts = partition::balanced_col_partition(&ds.a, p);
-        let mut cluster = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
-        let out =
-            tblars(&ds.a, &ds.b, &parts, &TblarsOptions { t, b, ..Default::default() }, &mut cluster);
-        let c = cluster.counters();
+        let result = FitSpec::new(Algorithm::TBlars { b, parts: p })
+            .t(t)
+            .run(&ds.a, &ds.b)
+            .expect("fit");
+        let sim = result.sim.as_ref().expect("cluster telemetry");
         println!(
             "{:<18} {:>9.2} {:>10.4} {:>10} {:>10} {:>8}",
             format!("T-bLARS P={p} b={b}"),
-            precision(&out.selected, &reference.selected),
-            out.residual_norms.last().unwrap(),
-            fmt_secs(cluster.sim_time()),
-            fmt_count(c.words),
-            fmt_count(c.msgs)
+            precision(&result.output.selected, &reference.selected),
+            result.output.residual_norms.last().unwrap(),
+            fmt_secs(sim.sim_time),
+            fmt_count(sim.counters.words),
+            fmt_count(sim.counters.msgs)
         );
     }
     println!("{:-<78}", "");

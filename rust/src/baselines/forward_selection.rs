@@ -4,8 +4,16 @@
 //! fully solve the least-squares problem on the selected set, repeat.
 //! "Aggressive" in the paper's terms — it zeroes the selected
 //! correlations every step.
+//!
+//! [`fit_observed`] is the fallible, observer-carrying core the
+//! [`crate::fit`] estimator API dispatches to
+//! (`Algorithm::ForwardSelection`); the legacy [`forward_selection`]
+//! free function remains as a thin deprecated shim.
 
+use crate::error::Result;
+use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
 use crate::lars::path::ls_coefficients;
+use crate::lars::{LarsOutput, StopReason};
 use crate::linalg::{norm2, Matrix};
 
 /// Output of forward selection.
@@ -19,9 +27,29 @@ pub struct ForwardOutput {
 }
 
 /// Select `t` columns by forward selection.
+#[deprecated(
+    since = "0.4.0",
+    note = "use calars::fit::FitSpec::new(Algorithm::ForwardSelection) — this shim panics on invalid input"
+)]
 pub fn forward_selection(a: &Matrix, b: &[f64], t: usize) -> ForwardOutput {
+    let (out, coefs) =
+        fit_observed(a, b, t, 1e-12, &mut NoopObserver).expect("invalid forward-selection input");
+    ForwardOutput { selected: out.selected, residual_norms: out.residual_norms, coefs }
+}
+
+/// Forward-selection core: validated inputs, per-selection
+/// [`FitObserver`] events, and the family-shaped
+/// ([`LarsOutput`], final coefficients) return.
+pub fn fit_observed(
+    a: &Matrix,
+    b: &[f64],
+    t: usize,
+    tol: f64,
+    obs: &mut dyn FitObserver,
+) -> Result<(LarsOutput, Vec<f64>)> {
     let n = a.ncols();
     let m = a.nrows();
+    crate::lars::check_fit_inputs(a, b, tol)?;
     let t = t.min(n.min(m));
     let mut selected: Vec<usize> = Vec::new();
     let mut in_model = vec![false; n];
@@ -30,15 +58,22 @@ pub fn forward_selection(a: &Matrix, b: &[f64], t: usize) -> ForwardOutput {
     let mut residual_norms = vec![norm2(&r)];
     let mut coefs: Vec<f64> = Vec::new();
 
-    for _ in 0..t {
+    let mut stop = StopReason::TargetReached;
+    let mut iter = 0usize;
+    while selected.len() < t {
         a.at_r(&r, &mut c);
         let best = (0..n)
             .filter(|&j| !in_model[j])
             .max_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap());
-        let Some(j) = best else { break };
-        if c[j].abs() < 1e-12 {
+        let Some(j) = best else {
+            stop = StopReason::PoolExhausted;
+            break;
+        };
+        if c[j].abs() <= tol {
+            stop = StopReason::Saturated;
             break;
         }
+        let pick_corr = c[j].abs();
         in_model[j] = true;
         selected.push(j);
         // Full LS refit on the selected support (the aggressive step).
@@ -54,16 +89,36 @@ pub fn forward_selection(a: &Matrix, b: &[f64], t: usize) -> ForwardOutput {
             None => {
                 // Collinear pick: drop it and stop.
                 selected.pop();
+                in_model[j] = false;
+                stop = StopReason::RankDeficient;
                 break;
             }
         }
         residual_norms.push(norm2(&r));
+
+        let observer_stop = obs.on_iteration(&FitEvent {
+            iter,
+            selected: &selected,
+            gamma: f64::NAN,
+            residual_norm: *residual_norms.last().unwrap(),
+            lambda: pick_corr,
+        }) == ObserverControl::Stop;
+        iter += 1;
+        if observer_stop {
+            stop = StopReason::EarlyStopped;
+            break;
+        }
     }
-    ForwardOutput { selected, residual_norms, coefs }
+
+    let cols_at_iter: Vec<usize> = (0..=selected.len()).collect();
+    let y: Vec<f64> = b.iter().zip(&r).map(|(bi, ri)| bi - ri).collect();
+    Ok((LarsOutput { selected, residual_norms, cols_at_iter, y, stop }, coefs))
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim doubles as regression coverage
+
     use super::*;
     use crate::data::synthetic::{generate, SyntheticSpec};
 
@@ -106,5 +161,18 @@ mod tests {
         assert!(
             fs.residual_norms.last().unwrap() <= la.residual_norms.last().unwrap(),
         );
+    }
+
+    #[test]
+    fn fit_observed_reports_target_reached() {
+        let s = generate(
+            &SyntheticSpec { m: 60, n: 30, density: 1.0, col_skew: 0.0, k_true: 4, noise: 0.05 },
+            4,
+        );
+        let (out, coefs) = fit_observed(&s.a, &s.b, 6, 1e-12, &mut NoopObserver).unwrap();
+        assert_eq!(out.selected.len(), 6);
+        assert_eq!(out.stop, StopReason::TargetReached);
+        assert_eq!(coefs.len(), 6);
+        assert_eq!(out.cols_at_iter, (0..=6).collect::<Vec<_>>());
     }
 }

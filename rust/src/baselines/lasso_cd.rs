@@ -85,6 +85,8 @@ pub fn lambda_max(a: &Matrix, b: &[f64]) -> f64 {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // cross-checks against the legacy LARS shim
+
     use super::*;
     use crate::data::synthetic::{generate, SyntheticSpec};
 

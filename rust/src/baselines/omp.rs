@@ -3,7 +3,14 @@
 //! variant). Equivalent to Forward Selection with the orthogonal
 //! projection done via the same incremental Cholesky machinery the
 //! paper's bLARS uses — a good cross-check for [`crate::linalg::cholesky`].
+//!
+//! [`fit_observed`] is the fallible, observer-carrying core the
+//! [`crate::fit`] estimator API dispatches to (`Algorithm::Omp`); the
+//! legacy [`omp`] free function remains as a thin deprecated shim.
 
+use crate::error::Result;
+use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
+use crate::lars::{LarsOutput, StopReason};
 use crate::linalg::{norm2, Cholesky, Matrix};
 
 /// Output of OMP.
@@ -15,9 +22,28 @@ pub struct OmpOutput {
 }
 
 /// Select `t` columns by OMP (incremental-Cholesky implementation).
+#[deprecated(
+    since = "0.4.0",
+    note = "use calars::fit::FitSpec::new(Algorithm::Omp) — this shim panics on invalid input"
+)]
 pub fn omp(a: &Matrix, b: &[f64], t: usize) -> OmpOutput {
+    let (out, coefs) = fit_observed(a, b, t, 1e-12, &mut NoopObserver).expect("invalid OMP input");
+    OmpOutput { selected: out.selected, coefs, residual_norms: out.residual_norms }
+}
+
+/// OMP core: validated inputs, per-selection [`FitObserver`] events,
+/// and the family-shaped ([`LarsOutput`], final coefficients) return.
+/// A collinear pick stops the run with [`StopReason::RankDeficient`].
+pub fn fit_observed(
+    a: &Matrix,
+    b: &[f64],
+    t: usize,
+    tol: f64,
+    obs: &mut dyn FitObserver,
+) -> Result<(LarsOutput, Vec<f64>)> {
     let n = a.ncols();
     let m = a.nrows();
+    crate::lars::check_fit_inputs(a, b, tol)?;
     let t = t.min(n.min(m));
     let mut selected: Vec<usize> = Vec::new();
     let mut in_model = vec![false; n];
@@ -28,21 +54,29 @@ pub fn omp(a: &Matrix, b: &[f64], t: usize) -> OmpOutput {
     let mut coefs: Vec<f64> = Vec::new();
     let mut residual_norms = vec![norm2(&r)];
 
-    for _ in 0..t {
+    let mut stop = StopReason::TargetReached;
+    let mut iter = 0usize;
+    while selected.len() < t {
         a.at_r(&r, &mut c);
         let best = (0..n)
             .filter(|&j| !in_model[j])
             .max_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap());
-        let Some(j) = best else { break };
-        if c[j].abs() < 1e-12 {
+        let Some(j) = best else {
+            stop = StopReason::PoolExhausted;
+            break;
+        };
+        if c[j].abs() <= tol {
+            stop = StopReason::Saturated;
             break;
         }
+        let pick_corr = c[j].abs();
         // Extend the factor with column j.
         let gi = a.gram_block(&selected, &[j]);
         let gjj = a.gram_block(&[j], &[j]).get(0, 0);
         let mut grow: Vec<f64> = (0..selected.len()).map(|i| gi.get(i, 0)).collect();
         grow.push(gjj);
         if chol.push_row(&grow).is_err() {
+            stop = StopReason::RankDeficient;
             break; // collinear — stop
         }
         in_model[j] = true;
@@ -56,12 +90,30 @@ pub fn omp(a: &Matrix, b: &[f64], t: usize) -> OmpOutput {
             r[i] = b[i] - ax[i];
         }
         residual_norms.push(norm2(&r));
+
+        let observer_stop = obs.on_iteration(&FitEvent {
+            iter,
+            selected: &selected,
+            gamma: f64::NAN,
+            residual_norm: *residual_norms.last().unwrap(),
+            lambda: pick_corr,
+        }) == ObserverControl::Stop;
+        iter += 1;
+        if observer_stop {
+            stop = StopReason::EarlyStopped;
+            break;
+        }
     }
-    OmpOutput { selected, coefs, residual_norms }
+
+    let cols_at_iter: Vec<usize> = (0..=selected.len()).collect();
+    let y: Vec<f64> = b.iter().zip(&r).map(|(bi, ri)| bi - ri).collect();
+    Ok((LarsOutput { selected, residual_norms, cols_at_iter, y, stop }, coefs))
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shims double as regression coverage
+
     use super::*;
     use crate::baselines::forward_selection::forward_selection;
     use crate::data::synthetic::{generate, SyntheticSpec};
@@ -106,5 +158,17 @@ mod tests {
         for w in o.residual_norms.windows(2) {
             assert!(w[1] <= w[0] + 1e-9);
         }
+    }
+
+    #[test]
+    fn fit_observed_reports_target_reached() {
+        let s = generate(
+            &SyntheticSpec { m: 60, n: 30, density: 1.0, col_skew: 0.0, k_true: 4, noise: 0.05 },
+            4,
+        );
+        let (out, coefs) = fit_observed(&s.a, &s.b, 5, 1e-12, &mut NoopObserver).unwrap();
+        assert_eq!(out.selected.len(), 5);
+        assert_eq!(out.stop, StopReason::TargetReached);
+        assert_eq!(coefs.len(), 5);
     }
 }

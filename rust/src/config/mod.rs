@@ -7,6 +7,10 @@ use crate::error::{bail, Result};
 pub use crate::par::ParConfig;
 
 /// Which algorithm a run uses.
+///
+/// Legacy CLI-era enum kept for configuration compatibility; new code
+/// should use [`crate::fit::Algorithm`], which carries the per-variant
+/// knobs (block size, partitions, λ floor) and covers the baselines.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
     Lars,
@@ -112,8 +116,8 @@ pub struct Args {
 }
 
 /// Options that never take a value.
-pub const BOOL_FLAGS: [&str; 8] =
-    ["quick", "threads", "force", "verbose", "oneshot", "wait", "shutdown", "json"];
+pub const BOOL_FLAGS: [&str; 9] =
+    ["quick", "threads", "force", "verbose", "oneshot", "wait", "shutdown", "json", "progress"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Self {

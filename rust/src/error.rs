@@ -11,7 +11,28 @@
 
 use std::fmt;
 
-/// An opaque error: a chain of human-readable messages, outermost first.
+/// Coarse classification of an [`Error`], preserved through context
+/// attachment. The serving layer maps kinds onto HTTP status codes
+/// (`InvalidSpec` → 400, `RankDeficient` → 422) so a bad request can
+/// never take down a connection the way the old `assert!`s could.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// No more specific classification (the default).
+    Other,
+    /// A user-supplied specification or input failed validation
+    /// (wrong response length, zero block size, unknown algorithm…).
+    InvalidSpec,
+    /// The problem is numerically rank deficient (near-duplicate
+    /// columns made a Gram factorization impossible). Note: the
+    /// fitters report *recoverable* rank deficiency through
+    /// [`crate::lars::StopReason::RankDeficient`] inside a successful
+    /// result; this error kind is reserved for hard failures where no
+    /// result can be produced at all.
+    RankDeficient,
+}
+
+/// An opaque error: a chain of human-readable messages, outermost
+/// first, plus an [`ErrorKind`] classification.
 ///
 /// Deliberately does **not** implement `std::error::Error`, so the
 /// blanket `From<E: std::error::Error>` conversion below stays coherent
@@ -20,12 +41,28 @@ use std::fmt;
 pub struct Error {
     /// `chain[0]` is the outermost (most recently attached) context.
     chain: Vec<String>,
+    kind: ErrorKind,
 }
 
 impl Error {
     /// Construct from a single message.
     pub fn msg(m: impl fmt::Display) -> Self {
-        Error { chain: vec![m.to_string()] }
+        Error { chain: vec![m.to_string()], kind: ErrorKind::Other }
+    }
+
+    /// An [`ErrorKind::InvalidSpec`] error (bad user-supplied input).
+    pub fn invalid_spec(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()], kind: ErrorKind::InvalidSpec }
+    }
+
+    /// An [`ErrorKind::RankDeficient`] error (singular Gram block).
+    pub fn rank_deficient(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()], kind: ErrorKind::RankDeficient }
+    }
+
+    /// The error's classification (survives [`Self::context`]).
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
     }
 
     /// Attach an outer context message.
@@ -76,7 +113,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { chain, kind: ErrorKind::Other }
     }
 }
 
@@ -186,6 +223,18 @@ mod tests {
         }
         assert_eq!(parse("12").unwrap(), 12);
         assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn kinds_classify_and_survive_context() {
+        assert_eq!(Error::msg("x").kind(), ErrorKind::Other);
+        assert_eq!(Error::invalid_spec("t = 0").kind(), ErrorKind::InvalidSpec);
+        assert_eq!(Error::rank_deficient("dup").kind(), ErrorKind::RankDeficient);
+        let e = Error::invalid_spec("t = 0").context("parsing /fit body");
+        assert_eq!(e.kind(), ErrorKind::InvalidSpec, "context must not erase the kind");
+        assert_eq!(format!("{e:#}"), "parsing /fit body: t = 0");
+        let io: Error = io_err().into();
+        assert_eq!(io.kind(), ErrorKind::Other);
     }
 
     #[test]

@@ -1,13 +1,11 @@
 //! Shared machinery for experiment drivers: run one (algorithm,
-//! dataset, P, b) cell and collect everything the figures need.
+//! dataset, P, b) cell through the [`crate::fit`] estimator API and
+//! collect everything the figures need.
 
-use crate::cluster::{CommCounters, ExecMode, HwParams, SimCluster, Tracer};
-use crate::data::{partition, Dataset};
-use crate::lars::blars::{blars, BlarsOptions};
-use crate::lars::serial::{lars, LarsOptions};
-use crate::lars::tblars::{tblars, TblarsOptions};
+use crate::cluster::{CommCounters, HwParams, Tracer};
+use crate::data::Dataset;
+use crate::fit::{Algorithm, FitResult, FitSpec};
 use crate::lars::LarsOutput;
-use crate::rng::Pcg64;
 
 /// Everything one parallel run produces.
 pub struct RunResult {
@@ -22,14 +20,22 @@ pub struct RunResult {
 
 /// Serial LARS reference (ground truth for precision metrics).
 pub fn run_lars_ref(ds: &Dataset, t: usize) -> LarsOutput {
-    lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() })
+    FitSpec::new(Algorithm::Lars)
+        .t(t)
+        .run(&ds.a, &ds.b)
+        .expect("valid LARS spec")
+        .output
 }
 
 /// One parallel bLARS cell.
 pub fn run_blars(ds: &Dataset, t: usize, b: usize, p: usize, hw: HwParams) -> RunResult {
-    let mut cluster = SimCluster::new(p, hw, ExecMode::Sequential);
-    let out = blars(&ds.a, &ds.b, &BlarsOptions { t, b, ..Default::default() }, &mut cluster);
-    collect(out, &cluster)
+    let result = FitSpec::new(Algorithm::Blars { b })
+        .t(t)
+        .ranks(p)
+        .hw(hw)
+        .run(&ds.a, &ds.b)
+        .expect("valid bLARS spec");
+    collect(result)
 }
 
 /// One T-bLARS cell. `partition_seed = None` uses the nnz-balanced
@@ -43,25 +49,23 @@ pub fn run_tblars(
     hw: HwParams,
     partition_seed: Option<u64>,
 ) -> RunResult {
-    let parts = match partition_seed {
-        None => partition::balanced_col_partition(&ds.a, p),
-        Some(seed) => {
-            let mut rng = Pcg64::new(seed);
-            partition::random_col_partition(ds.a.ncols(), p, &mut rng)
-        }
-    };
-    let mut cluster = SimCluster::new(p, hw, ExecMode::Sequential);
-    let out = tblars(&ds.a, &ds.b, &parts, &TblarsOptions { t, b, ..Default::default() }, &mut cluster);
-    collect(out, &cluster)
+    let result = FitSpec::new(Algorithm::TBlars { b, parts: p })
+        .t(t)
+        .hw(hw)
+        .partition_seed(partition_seed)
+        .run(&ds.a, &ds.b)
+        .expect("valid T-bLARS spec");
+    collect(result)
 }
 
-fn collect(out: LarsOutput, cluster: &SimCluster) -> RunResult {
+fn collect(result: FitResult) -> RunResult {
+    let sim = result.sim.expect("cluster fitters report sim telemetry");
     RunResult {
-        out,
-        sim_time: cluster.sim_time(),
-        counters: cluster.counters(),
-        categories: cluster.tracer().by_category(),
-        tracer: cluster.tracer().clone(),
+        out: result.output,
+        sim_time: sim.sim_time,
+        counters: sim.counters,
+        categories: sim.categories,
+        tracer: sim.tracer,
     }
 }
 

@@ -1,0 +1,618 @@
+//! The unified estimator API — one validated, fallible, extensible
+//! entry point for the whole fitter family.
+//!
+//! The paper presents LARS, bLARS, and T-bLARS as one algorithm family
+//! producing the same kind of output (a sequence of linear models);
+//! this module gives them — plus LASSO-LARS and the greedy baselines —
+//! one shape:
+//!
+//! * [`FitSpec`] — a validated, serializable description of a fit: an
+//!   [`Algorithm`] plus the shared knobs (`t`, `tol`, simulated ranks,
+//!   execution mode, hardware cost model).
+//! * [`Fitter`] — `fit(&self, a, b, &mut dyn FitObserver) ->
+//!   Result<FitResult>`; [`FitSpec`] implements it, and
+//!   [`FitSpec::run`] is the no-observer convenience.
+//! * [`FitObserver`] — composable per-iteration hooks
+//!   ([`SnapshotObserver`], [`ProgressObserver`], [`EarlyStop`],
+//!   [`MetricsSink`], [`MultiObserver`]); see [`observers`].
+//! * [`FitResult`] — the algorithm's [`LarsOutput`] unified with
+//!   timing, the exact LASSO path when applicable, and the simulated
+//!   cluster telemetry ([`SimReport`]) for the parallel fitters.
+//!
+//! Invalid inputs come back as typed
+//! [`crate::error::ErrorKind::InvalidSpec`] errors instead of the
+//! `assert!` panics the legacy free functions used, so the serving
+//! front end can answer HTTP 400 instead of dropping connections.
+//!
+//! ```no_run
+//! use calars::data::datasets;
+//! use calars::fit::{Algorithm, FitSpec};
+//!
+//! let ds = datasets::tiny(42);
+//! let result = FitSpec::new(Algorithm::Blars { b: 4 })
+//!     .t(20)
+//!     .ranks(8)
+//!     .run(&ds.a, &ds.b)
+//!     .expect("valid spec");
+//! println!("selected {:?}, stop {:?}", result.output.selected, result.output.stop);
+//! ```
+
+pub mod observers;
+
+pub use observers::{
+    EarlyStop, FitEvent, FitObserver, MetricsSink, MultiObserver, NoopObserver,
+    ObserverControl, ProgressObserver, SnapshotObserver,
+};
+
+use crate::cluster::{CommCounters, ExecMode, HwParams, SimCluster, Tracer};
+use crate::data::partition;
+use crate::error::{Error, Result};
+use crate::lars::blars::{self, BlarsOptions};
+use crate::lars::lasso_lars::{self, LassoPath};
+use crate::lars::path::PathSnapshot;
+use crate::lars::serial::{self, LarsOptions};
+use crate::lars::tblars::{self, TblarsOptions};
+use crate::lars::{LarsOutput, StopReason};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+use std::time::Instant;
+
+/// Which member of the fitter family a [`FitSpec`] runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Algorithm {
+    /// Serial LARS (Algorithm 1).
+    Lars,
+    /// Parallel block LARS on row-partitioned data (Algorithm 2);
+    /// `b` columns enter per iteration. Ranks come from the spec's
+    /// `ranks` knob.
+    Blars { b: usize },
+    /// Tournament block LARS on column-partitioned data (Algorithm 3);
+    /// `parts` ranks each nominate `b` candidates per round.
+    TBlars { b: usize, parts: usize },
+    /// LARS with the LASSO modification — the exact ℓ1 path, traced
+    /// until λ falls below `lambda_min` (or `t` columns are active).
+    LassoLars { lambda_min: f64 },
+    /// Classic greedy forward selection (baseline, paper §2).
+    ForwardSelection,
+    /// Orthogonal matching pursuit (baseline, paper §2).
+    Omp,
+}
+
+impl Algorithm {
+    /// Canonical lower-case name (inverse of [`Self::from_parts`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Lars => "lars",
+            Algorithm::Blars { .. } => "blars",
+            Algorithm::TBlars { .. } => "tblars",
+            Algorithm::LassoLars { .. } => "lasso",
+            Algorithm::ForwardSelection => "fs",
+            Algorithm::Omp => "omp",
+        }
+    }
+
+    /// Block size (1 for the non-blocked members).
+    pub fn block(&self) -> usize {
+        match self {
+            Algorithm::Blars { b } => *b,
+            Algorithm::TBlars { b, .. } => *b,
+            _ => 1,
+        }
+    }
+
+    /// Build an algorithm from loosely-typed request parts — the wire
+    /// format and the CLI carry `algo`, `b`, `p`, and `lambda_min`
+    /// flat; each variant takes what it needs.
+    pub fn from_parts(name: &str, b: usize, p: usize, lambda_min: f64) -> Result<Algorithm> {
+        match name {
+            "lars" => Ok(Algorithm::Lars),
+            "blars" => Ok(Algorithm::Blars { b }),
+            "tblars" | "t-blars" => Ok(Algorithm::TBlars { b, parts: p }),
+            "lasso" | "lasso-lars" => Ok(Algorithm::LassoLars { lambda_min }),
+            "fs" | "forward" => Ok(Algorithm::ForwardSelection),
+            "omp" => Ok(Algorithm::Omp),
+            other => Err(Error::invalid_spec(format!(
+                "unknown algorithm '{other}' (lars|blars|tblars|lasso|fs|omp)"
+            ))),
+        }
+    }
+}
+
+/// A validated, serializable fit specification: the [`Algorithm`] plus
+/// the knobs every fitter shares. Construct with [`FitSpec::new`] and
+/// the builder methods; [`FitSpec::validate`] runs automatically at
+/// fit time (and at [`FitSpec::parse`] time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FitSpec {
+    pub algorithm: Algorithm,
+    /// Target number of selected columns (the paper's `t`; for
+    /// LASSO-LARS the maximum active-set size).
+    pub t: usize,
+    /// Numerical floor under which the maximum correlation counts as 0.
+    pub tol: f64,
+    /// Simulated cluster ranks for [`Algorithm::Blars`] (rounded up to
+    /// a power of two; T-bLARS takes its rank count from `parts`).
+    pub ranks: usize,
+    /// Execution mode for simulated-cluster supersteps (threaded mode
+    /// runs rank compute on the [`crate::par`] pool; results are
+    /// identical either way).
+    pub mode: ExecMode,
+    /// Hardware cost model for the simulated cluster (not part of the
+    /// wire encoding; programmatic sweeps set it via the `hw` builder
+    /// method).
+    pub hw: HwParams,
+    /// T-bLARS column partition: `None` = nnz-balanced (the paper's
+    /// default), `Some(seed)` = uniformly random (Figure 5).
+    pub partition_seed: Option<u64>,
+}
+
+impl FitSpec {
+    /// Upper bound on `t` accepted by [`Self::validate`].
+    pub const MAX_T: usize = 1 << 24;
+    /// Upper bound on block sizes.
+    pub const MAX_BLOCK: usize = 1 << 20;
+    /// Upper bound on simulated ranks / partitions.
+    pub const MAX_RANKS: usize = 1 << 16;
+
+    /// A spec with the default knobs (`t = 16`, `tol = 1e-12`, one
+    /// rank, sequential mode, default hardware).
+    pub fn new(algorithm: Algorithm) -> Self {
+        FitSpec {
+            algorithm,
+            t: 16,
+            tol: 1e-12,
+            ranks: 1,
+            mode: ExecMode::Sequential,
+            hw: HwParams::default(),
+            partition_seed: None,
+        }
+    }
+
+    /// Set the target number of selected columns.
+    pub fn t(mut self, t: usize) -> Self {
+        self.t = t;
+        self
+    }
+
+    /// Set the numerical floor.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Set the simulated rank count (bLARS).
+    pub fn ranks(mut self, ranks: usize) -> Self {
+        self.ranks = ranks;
+        self
+    }
+
+    /// Set the superstep execution mode.
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the hardware cost model.
+    pub fn hw(mut self, hw: HwParams) -> Self {
+        self.hw = hw;
+        self
+    }
+
+    /// Set the T-bLARS partition seed (`None` = nnz-balanced).
+    pub fn partition_seed(mut self, seed: Option<u64>) -> Self {
+        self.partition_seed = seed;
+        self
+    }
+
+    /// Check every knob; returns a typed
+    /// [`crate::error::ErrorKind::InvalidSpec`] error on the first
+    /// violation.
+    pub fn validate(&self) -> Result<()> {
+        if self.t == 0 || self.t > Self::MAX_T {
+            return Err(Error::invalid_spec(format!(
+                "t must be in 1..={} (got {})",
+                Self::MAX_T,
+                self.t
+            )));
+        }
+        if !self.tol.is_finite() || self.tol < 0.0 {
+            return Err(Error::invalid_spec(format!(
+                "tol must be finite and ≥ 0 (got {})",
+                self.tol
+            )));
+        }
+        if self.ranks == 0 || self.ranks > Self::MAX_RANKS {
+            return Err(Error::invalid_spec(format!(
+                "ranks must be in 1..={} (got {})",
+                Self::MAX_RANKS,
+                self.ranks
+            )));
+        }
+        match self.algorithm {
+            Algorithm::Blars { b } => {
+                if b == 0 || b > Self::MAX_BLOCK {
+                    return Err(Error::invalid_spec(format!(
+                        "block size b must be in 1..={} (got {b})",
+                        Self::MAX_BLOCK
+                    )));
+                }
+            }
+            Algorithm::TBlars { b, parts } => {
+                if b == 0 || b > Self::MAX_BLOCK {
+                    return Err(Error::invalid_spec(format!(
+                        "block size b must be in 1..={} (got {b})",
+                        Self::MAX_BLOCK
+                    )));
+                }
+                if parts == 0 || parts > Self::MAX_RANKS {
+                    return Err(Error::invalid_spec(format!(
+                        "parts must be in 1..={} (got {parts})",
+                        Self::MAX_RANKS
+                    )));
+                }
+            }
+            Algorithm::LassoLars { lambda_min } => {
+                if !lambda_min.is_finite() || lambda_min < 0.0 {
+                    return Err(Error::invalid_spec(format!(
+                        "lambda_min must be finite and ≥ 0 (got {lambda_min})"
+                    )));
+                }
+            }
+            Algorithm::Lars | Algorithm::ForwardSelection | Algorithm::Omp => {}
+        }
+        Ok(())
+    }
+
+    /// Simulated ranks the fit actually uses (normalized to a power of
+    /// two — the registry's family identity uses this too).
+    pub fn effective_ranks(&self) -> usize {
+        match self.algorithm {
+            Algorithm::TBlars { parts, .. } => parts.max(1).next_power_of_two(),
+            Algorithm::Blars { .. } => self.ranks.max(1).next_power_of_two(),
+            _ => 1,
+        }
+    }
+
+    /// Canonical single-line serialization (`key=value` tokens).
+    /// Covers everything that affects the fitted model; `hw` is
+    /// deliberately excluded (it only shapes simulated timings) and
+    /// [`Self::parse`] restores it to the default.
+    pub fn encode(&self) -> String {
+        let mut s = format!("algo={} t={} tol={}", self.algorithm.name(), self.t, self.tol);
+        match self.algorithm {
+            Algorithm::Blars { b } => {
+                s.push_str(&format!(" b={b} ranks={}", self.ranks));
+            }
+            Algorithm::TBlars { b, parts } => {
+                s.push_str(&format!(" b={b} parts={parts}"));
+            }
+            Algorithm::LassoLars { lambda_min } => {
+                s.push_str(&format!(" lambda_min={lambda_min}"));
+            }
+            Algorithm::Lars | Algorithm::ForwardSelection | Algorithm::Omp => {}
+        }
+        if self.mode == ExecMode::Threaded {
+            s.push_str(" mode=threaded");
+        }
+        if let Some(seed) = self.partition_seed {
+            s.push_str(&format!(" partition_seed={seed}"));
+        }
+        s
+    }
+
+    /// Parse [`Self::encode`]'s format back into a validated spec.
+    /// Unknown keys are rejected; `tol` round-trips bit-exactly (f64
+    /// `Display` is shortest-round-trippable).
+    pub fn parse(text: &str) -> Result<FitSpec> {
+        fn field<T: std::str::FromStr>(v: &str, what: &str) -> Result<T> {
+            v.parse()
+                .map_err(|_| Error::invalid_spec(format!("bad {what} value '{v}'")))
+        }
+        let mut algo_name: Option<String> = None;
+        let mut t = 16usize;
+        let mut tol = 1e-12f64;
+        let mut b = 1usize;
+        let mut parts = 1usize;
+        let mut ranks = 1usize;
+        let mut lambda_min = 1e-6f64;
+        let mut mode = ExecMode::Sequential;
+        let mut partition_seed: Option<u64> = None;
+        for tok in text.split_whitespace() {
+            let Some((k, v)) = tok.split_once('=') else {
+                return Err(Error::invalid_spec(format!("bad spec token '{tok}'")));
+            };
+            match k {
+                "algo" => algo_name = Some(v.to_string()),
+                "t" => t = field(v, "t")?,
+                "tol" => tol = field(v, "tol")?,
+                "b" => b = field(v, "b")?,
+                "parts" => parts = field(v, "parts")?,
+                "ranks" => ranks = field(v, "ranks")?,
+                "lambda_min" => lambda_min = field(v, "lambda_min")?,
+                "partition_seed" => partition_seed = Some(field(v, "partition_seed")?),
+                "mode" => {
+                    mode = match v {
+                        "sequential" => ExecMode::Sequential,
+                        "threaded" => ExecMode::Threaded,
+                        other => {
+                            return Err(Error::invalid_spec(format!(
+                                "unknown mode '{other}' (sequential|threaded)"
+                            )))
+                        }
+                    }
+                }
+                other => {
+                    return Err(Error::invalid_spec(format!("unknown spec key '{other}'")))
+                }
+            }
+        }
+        let name = algo_name.ok_or_else(|| Error::invalid_spec("spec is missing 'algo='"))?;
+        let algorithm = Algorithm::from_parts(&name, b, parts, lambda_min)?;
+        let spec = FitSpec {
+            algorithm,
+            t,
+            tol,
+            ranks,
+            mode,
+            hw: HwParams::default(),
+            partition_seed,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Convenience: fit with no observer attached.
+    pub fn run(&self, a: &Matrix, b: &[f64]) -> Result<FitResult> {
+        self.fit(a, b, &mut NoopObserver)
+    }
+}
+
+/// Simulated-cluster telemetry for the parallel fitters (what the
+/// experiment drivers chart).
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Simulated seconds (critical path under the α-β-γ model).
+    pub sim_time: f64,
+    /// Aggregate F/W/L counters.
+    pub counters: CommCounters,
+    /// Figure 7/8 categories: [mat products, step size, comm, wait,
+    /// other].
+    pub categories: [f64; 5],
+    /// Full per-phase trace.
+    pub tracer: Tracer,
+}
+
+impl SimReport {
+    fn from_cluster(cluster: &SimCluster) -> Self {
+        SimReport {
+            sim_time: cluster.sim_time(),
+            counters: cluster.counters(),
+            categories: cluster.tracer().by_category(),
+            tracer: cluster.tracer().clone(),
+        }
+    }
+}
+
+/// What a [`Fitter::fit`] call returns: the algorithm output plus
+/// timing and algorithm-specific extras, one shape for the whole
+/// family.
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    /// Selection order, residual trace, response estimate, and
+    /// [`StopReason`] (shared by every fitter).
+    pub output: LarsOutput,
+    /// Final coefficients aligned with `output.selected`, for the
+    /// fitters that compute them natively (the baselines). LARS-family
+    /// fits recover coefficients per prefix via
+    /// [`crate::lars::path::ls_coefficients`] / [`Self::snapshot`].
+    pub coefs: Option<Vec<f64>>,
+    /// The exact ℓ1 path ([`Algorithm::LassoLars`] only).
+    pub lasso: Option<LassoPath>,
+    /// Simulated-cluster telemetry ([`Algorithm::Blars`] /
+    /// [`Algorithm::TBlars`] only).
+    pub sim: Option<SimReport>,
+    /// Wall-clock seconds spent fitting.
+    pub wall_secs: f64,
+}
+
+impl FitResult {
+    fn from_output(output: LarsOutput) -> Self {
+        FitResult { output, coefs: None, lasso: None, sim: None, wall_secs: 0.0 }
+    }
+
+    /// Why the fit stopped.
+    pub fn stop(&self) -> StopReason {
+        self.output.stop
+    }
+
+    /// The selected columns, in selection order.
+    pub fn selected(&self) -> &[usize] {
+        &self.output.selected
+    }
+
+    /// Snapshot of the fitted path — what [`SnapshotObserver`]
+    /// captures: exact λ breakpoints for LASSO-LARS, per-prefix LS
+    /// coefficients otherwise.
+    pub fn snapshot(&self, a: &Matrix, b: &[f64]) -> PathSnapshot {
+        match &self.lasso {
+            Some(path) => PathSnapshot::from_lasso(a.ncols(), path),
+            None => PathSnapshot::from_fit(a, b, &self.output.selected),
+        }
+    }
+}
+
+/// The one call path every consumer uses: serve, CLI, experiments,
+/// benches, and examples all fit through this trait.
+pub trait Fitter {
+    /// Run the fit on `(a, b)`, streaming per-iteration events to
+    /// `obs`. Invalid inputs return typed errors
+    /// ([`crate::error::ErrorKind::InvalidSpec`]) instead of
+    /// panicking.
+    fn fit(&self, a: &Matrix, b: &[f64], obs: &mut dyn FitObserver) -> Result<FitResult>;
+}
+
+impl Fitter for FitSpec {
+    fn fit(&self, a: &Matrix, b: &[f64], obs: &mut dyn FitObserver) -> Result<FitResult> {
+        self.validate()?;
+        if a.nrows() == 0 || a.ncols() == 0 {
+            return Err(Error::invalid_spec("matrix must have at least one row and column"));
+        }
+        if b.len() != a.nrows() {
+            return Err(Error::invalid_spec(format!(
+                "response length {} does not match the matrix row count {}",
+                b.len(),
+                a.nrows()
+            )));
+        }
+        obs.on_start(a.nrows(), a.ncols(), self);
+        let t0 = Instant::now();
+        let mut result = match self.algorithm {
+            Algorithm::Lars => {
+                let opts = LarsOptions { t: self.t, b: 1, tol: self.tol };
+                FitResult::from_output(serial::fit_observed(a, b, &opts, obs)?)
+            }
+            Algorithm::Blars { b: block } => {
+                let p = self.effective_ranks();
+                let mut cluster = SimCluster::new(p, self.hw, self.mode);
+                let opts = BlarsOptions { t: self.t, b: block, tol: self.tol };
+                let out = blars::fit_observed(a, b, &opts, &mut cluster, obs)?;
+                let mut r = FitResult::from_output(out);
+                r.sim = Some(SimReport::from_cluster(&cluster));
+                r
+            }
+            Algorithm::TBlars { b: block, parts } => {
+                let p = parts.max(1).next_power_of_two();
+                let partition = match self.partition_seed {
+                    None => partition::balanced_col_partition(a, p),
+                    Some(seed) => {
+                        let mut rng = Pcg64::new(seed);
+                        partition::random_col_partition(a.ncols(), p, &mut rng)
+                    }
+                };
+                let mut cluster = SimCluster::new(p, self.hw, self.mode);
+                let opts = TblarsOptions { t: self.t, b: block, tol: self.tol };
+                let out = tblars::fit_observed(a, b, &partition, &opts, &mut cluster, obs)?;
+                let mut r = FitResult::from_output(out);
+                r.sim = Some(SimReport::from_cluster(&cluster));
+                r
+            }
+            Algorithm::LassoLars { lambda_min } => {
+                let fit = lasso_lars::fit_observed(a, b, self.t, lambda_min, self.tol, obs)?;
+                let mut r = FitResult::from_output(fit.out);
+                r.lasso = Some(fit.path);
+                r
+            }
+            Algorithm::ForwardSelection => {
+                let (out, coefs) =
+                    crate::baselines::forward_selection::fit_observed(a, b, self.t, self.tol, obs)?;
+                let mut r = FitResult::from_output(out);
+                r.coefs = Some(coefs);
+                r
+            }
+            Algorithm::Omp => {
+                let (out, coefs) = crate::baselines::omp::fit_observed(a, b, self.t, self.tol, obs)?;
+                let mut r = FitResult::from_output(out);
+                r.coefs = Some(coefs);
+                r
+            }
+        };
+        result.wall_secs = t0.elapsed().as_secs_f64();
+        obs.on_complete(a, b, &result);
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::ErrorKind;
+
+    #[test]
+    fn spec_encode_parse_round_trip() {
+        let specs = [
+            FitSpec::new(Algorithm::Lars).t(8),
+            FitSpec::new(Algorithm::Blars { b: 4 }).t(60).ranks(8),
+            FitSpec::new(Algorithm::TBlars { b: 2, parts: 16 }).t(30).partition_seed(Some(7)),
+            FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-5 }).t(12).tol(1e-10),
+            FitSpec::new(Algorithm::Omp).t(5),
+            FitSpec::new(Algorithm::ForwardSelection).t(5).mode(ExecMode::Threaded),
+        ];
+        for spec in specs {
+            let enc = spec.encode();
+            let back = FitSpec::parse(&enc)
+                .unwrap_or_else(|e| panic!("parse of '{enc}' failed: {e:#}"));
+            assert_eq!(back, spec, "round trip changed the spec for '{enc}'");
+            assert_eq!(back.encode(), enc, "canonical form must be a fixpoint");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs_with_invalid_spec_kind() {
+        let bad = [
+            FitSpec::new(Algorithm::Lars).t(0),
+            FitSpec::new(Algorithm::Lars).tol(f64::NAN),
+            FitSpec::new(Algorithm::Lars).ranks(0),
+            FitSpec::new(Algorithm::Blars { b: 0 }),
+            FitSpec::new(Algorithm::TBlars { b: 1, parts: 0 }),
+            FitSpec::new(Algorithm::TBlars { b: 1, parts: FitSpec::MAX_RANKS + 1 }),
+            FitSpec::new(Algorithm::LassoLars { lambda_min: -1.0 }),
+        ];
+        for spec in bad {
+            let err = spec.validate().expect_err("spec must be rejected");
+            assert_eq!(err.kind(), ErrorKind::InvalidSpec, "{err:#}");
+        }
+        assert!(FitSpec::new(Algorithm::Lars).validate().is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FitSpec::parse("").is_err(), "missing algo");
+        assert!(FitSpec::parse("algo=nope").is_err());
+        assert!(FitSpec::parse("algo=lars bogus=1").is_err());
+        assert!(FitSpec::parse("algo=lars t=zero").is_err());
+        assert!(FitSpec::parse("algo=lars noequals").is_err());
+        assert!(FitSpec::parse("algo=lars t=0").is_err(), "parse validates");
+    }
+
+    #[test]
+    fn effective_ranks_normalizes() {
+        assert_eq!(FitSpec::new(Algorithm::Lars).ranks(7).effective_ranks(), 1);
+        assert_eq!(FitSpec::new(Algorithm::Blars { b: 1 }).ranks(5).effective_ranks(), 8);
+        assert_eq!(
+            FitSpec::new(Algorithm::TBlars { b: 1, parts: 3 }).effective_ranks(),
+            4
+        );
+    }
+
+    #[test]
+    fn from_parts_covers_the_family() {
+        assert_eq!(Algorithm::from_parts("lars", 1, 1, 0.0).unwrap(), Algorithm::Lars);
+        assert_eq!(
+            Algorithm::from_parts("blars", 3, 1, 0.0).unwrap(),
+            Algorithm::Blars { b: 3 }
+        );
+        assert_eq!(
+            Algorithm::from_parts("tblars", 2, 8, 0.0).unwrap(),
+            Algorithm::TBlars { b: 2, parts: 8 }
+        );
+        assert_eq!(
+            Algorithm::from_parts("lasso", 1, 1, 1e-4).unwrap(),
+            Algorithm::LassoLars { lambda_min: 1e-4 }
+        );
+        assert_eq!(Algorithm::from_parts("omp", 1, 1, 0.0).unwrap(), Algorithm::Omp);
+        assert_eq!(
+            Algorithm::from_parts("fs", 1, 1, 0.0).unwrap(),
+            Algorithm::ForwardSelection
+        );
+        let err = Algorithm::from_parts("ridge", 1, 1, 0.0).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+    }
+
+    #[test]
+    fn fit_rejects_mismatched_response_length() {
+        let ds = crate::data::datasets::tiny(1);
+        let short = vec![0.0; ds.a.nrows() - 1];
+        let err = FitSpec::new(Algorithm::Lars).t(4).run(&ds.a, &short).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec, "{err:#}");
+    }
+}

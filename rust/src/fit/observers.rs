@@ -1,0 +1,302 @@
+//! Composable fit observers — the hook layer of the unified estimator
+//! API.
+//!
+//! A [`FitObserver`] receives per-iteration callbacks from every fitter
+//! behind [`super::Fitter::fit`] (serial LARS, bLARS, T-bLARS,
+//! LASSO-LARS, and the baselines), carrying the active set, the step
+//! size γ, the residual norm, and the current regularization level.
+//! Cross-cutting behaviors — path snapshotting for the serving layer,
+//! progress reporting, early stopping, metrics collection — compose as
+//! observers instead of forking the fitter signatures (which is how the
+//! repo grew four copy-pasted `*_with_snapshot` entry points before
+//! this API existed).
+//!
+//! Observers are passive with respect to the arithmetic: emitting an
+//! event never changes a bit of the fit. The only influence an observer
+//! has is the [`ObserverControl::Stop`] return, which ends the run with
+//! [`StopReason::EarlyStopped`].
+
+use super::{FitResult, FitSpec};
+use crate::lars::path::PathSnapshot;
+use crate::lars::StopReason;
+use crate::linalg::Matrix;
+
+/// Returned by [`FitObserver::on_iteration`]: keep going or stop the
+/// fit after this iteration (the fitter reports
+/// [`StopReason::EarlyStopped`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObserverControl {
+    Continue,
+    Stop,
+}
+
+/// One per-iteration event. Fields that have no meaning for a given
+/// algorithm are `f64::NAN` (T-bLARS has no scalar γ per outer
+/// iteration; the greedy baselines have no γ at all).
+#[derive(Clone, Debug)]
+pub struct FitEvent<'a> {
+    /// Event index, 0-based, monotonically increasing within a fit.
+    pub iter: usize,
+    /// Active set after this iteration, in selection order.
+    pub selected: &'a [usize],
+    /// Step size taken this iteration (NaN where undefined).
+    pub gamma: f64,
+    /// ‖r‖₂ after this iteration.
+    pub residual_norm: f64,
+    /// Current regularization level — the tracked maximal absolute
+    /// correlation scale (NaN where undefined).
+    pub lambda: f64,
+}
+
+/// Per-iteration hooks shared by every fitter behind the
+/// [`super::Fitter`] trait. All methods have no-op defaults; implement
+/// only what you need.
+pub trait FitObserver {
+    /// Called once before the fit starts.
+    fn on_start(&mut self, _m: usize, _n: usize, _spec: &FitSpec) {}
+
+    /// Called after each iteration; return [`ObserverControl::Stop`]
+    /// to end the fit with [`StopReason::EarlyStopped`].
+    fn on_iteration(&mut self, _event: &FitEvent<'_>) -> ObserverControl {
+        ObserverControl::Continue
+    }
+
+    /// Called once after the fit completes, with the problem data and
+    /// the final result (before the result is returned to the caller).
+    fn on_complete(&mut self, _a: &Matrix, _b: &[f64], _result: &FitResult) {}
+}
+
+/// The do-nothing observer ([`FitSpec::run`] uses it).
+pub struct NoopObserver;
+
+impl FitObserver for NoopObserver {}
+
+/// Captures a [`PathSnapshot`] of the fitted path for the serving
+/// layer — the replacement for the deleted `*_with_snapshot` entry
+/// points. For LASSO-LARS fits the snapshot preserves the exact λ
+/// breakpoints; for selection fits it stores the LS coefficients of
+/// every prefix, bit-identical to what `lars_with_snapshot` produced.
+#[derive(Default)]
+pub struct SnapshotObserver {
+    snapshot: Option<PathSnapshot>,
+}
+
+impl SnapshotObserver {
+    pub fn new() -> Self {
+        SnapshotObserver { snapshot: None }
+    }
+
+    /// The captured snapshot, if the fit completed.
+    pub fn snapshot(&self) -> Option<&PathSnapshot> {
+        self.snapshot.as_ref()
+    }
+
+    /// Consume the observer, yielding the captured snapshot.
+    pub fn into_snapshot(self) -> Option<PathSnapshot> {
+        self.snapshot
+    }
+}
+
+impl FitObserver for SnapshotObserver {
+    fn on_complete(&mut self, a: &Matrix, b: &[f64], result: &FitResult) {
+        self.snapshot = Some(result.snapshot(a, b));
+    }
+}
+
+/// Prints a progress line to stderr every `every` iterations plus a
+/// completion summary (`calars run --progress`).
+pub struct ProgressObserver {
+    every: usize,
+    /// Progress lines emitted so far (inspectable in tests).
+    pub emitted: usize,
+}
+
+impl ProgressObserver {
+    /// Report every iteration.
+    pub fn new() -> Self {
+        Self::every(1)
+    }
+
+    /// Report every `every`-th iteration (≥ 1).
+    pub fn every(every: usize) -> Self {
+        ProgressObserver { every: every.max(1), emitted: 0 }
+    }
+}
+
+impl Default for ProgressObserver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FitObserver for ProgressObserver {
+    fn on_iteration(&mut self, ev: &FitEvent<'_>) -> ObserverControl {
+        if ev.iter % self.every == 0 {
+            eprintln!(
+                "[fit] iter {:>4}  |I|={:<5}  γ={:<14.6e}  ‖r‖={:.6e}",
+                ev.iter,
+                ev.selected.len(),
+                ev.gamma,
+                ev.residual_norm
+            );
+            self.emitted += 1;
+        }
+        ObserverControl::Continue
+    }
+
+    fn on_complete(&mut self, _a: &Matrix, _b: &[f64], result: &FitResult) {
+        eprintln!(
+            "[fit] done: {} columns, stop={:?}, {:.3}s",
+            result.output.selected.len(),
+            result.output.stop,
+            result.wall_secs
+        );
+    }
+}
+
+/// Stops a fit early: after a fixed number of iterations, when the
+/// residual falls below a target, or when an iteration fails to shrink
+/// the residual by a minimum relative amount. Unset criteria never
+/// trigger.
+#[derive(Clone, Debug, Default)]
+pub struct EarlyStop {
+    /// Stop after this many iterations (events).
+    pub max_iterations: Option<usize>,
+    /// Stop once ‖r‖₂ ≤ this value.
+    pub target_residual: Option<f64>,
+    /// Stop when an iteration shrinks ‖r‖₂ by less than this relative
+    /// fraction (e.g. `0.01` = require ≥ 1% improvement per step).
+    pub min_decrease: Option<f64>,
+    last_residual: Option<f64>,
+}
+
+impl EarlyStop {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stop after `n` iterations.
+    pub fn after_iterations(n: usize) -> Self {
+        EarlyStop { max_iterations: Some(n), ..Self::default() }
+    }
+
+    /// Stop once the residual norm reaches `r`.
+    pub fn at_residual(r: f64) -> Self {
+        EarlyStop { target_residual: Some(r), ..Self::default() }
+    }
+
+    /// Stop when progress stalls below `min_decrease` relative
+    /// improvement per iteration.
+    pub fn when_stalled(min_decrease: f64) -> Self {
+        EarlyStop { min_decrease: Some(min_decrease), ..Self::default() }
+    }
+}
+
+impl FitObserver for EarlyStop {
+    fn on_iteration(&mut self, ev: &FitEvent<'_>) -> ObserverControl {
+        let mut stop = false;
+        if let Some(n) = self.max_iterations {
+            if ev.iter + 1 >= n {
+                stop = true;
+            }
+        }
+        if let Some(target) = self.target_residual {
+            if ev.residual_norm <= target {
+                stop = true;
+            }
+        }
+        if let Some(min) = self.min_decrease {
+            if let Some(prev) = self.last_residual {
+                if prev.is_finite() && ev.residual_norm > prev * (1.0 - min) {
+                    stop = true;
+                }
+            }
+        }
+        self.last_residual = Some(ev.residual_norm);
+        if stop {
+            ObserverControl::Stop
+        } else {
+            ObserverControl::Continue
+        }
+    }
+}
+
+/// Accumulates per-iteration metrics (γ trace, residual trace, support
+/// growth) plus the final stop reason and wall time — the estimator
+/// API's counterpart to the experiment drivers' ad-hoc collection.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSink {
+    pub gammas: Vec<f64>,
+    pub residual_norms: Vec<f64>,
+    pub lambdas: Vec<f64>,
+    pub support_sizes: Vec<usize>,
+    pub iterations: usize,
+    pub wall_secs: f64,
+    pub stop: Option<StopReason>,
+}
+
+impl MetricsSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl FitObserver for MetricsSink {
+    fn on_iteration(&mut self, ev: &FitEvent<'_>) -> ObserverControl {
+        self.iterations += 1;
+        self.gammas.push(ev.gamma);
+        self.residual_norms.push(ev.residual_norm);
+        self.lambdas.push(ev.lambda);
+        self.support_sizes.push(ev.selected.len());
+        ObserverControl::Continue
+    }
+
+    fn on_complete(&mut self, _a: &Matrix, _b: &[f64], result: &FitResult) {
+        self.wall_secs = result.wall_secs;
+        self.stop = Some(result.output.stop);
+    }
+}
+
+/// Fans events out to several observers — the composition glue. The
+/// fit stops if *any* member requests it; every member still sees every
+/// event.
+#[derive(Default)]
+pub struct MultiObserver<'a> {
+    observers: Vec<&'a mut dyn FitObserver>,
+}
+
+impl<'a> MultiObserver<'a> {
+    pub fn new() -> Self {
+        MultiObserver { observers: Vec::new() }
+    }
+
+    /// Add an observer (builder style).
+    pub fn with(mut self, obs: &'a mut dyn FitObserver) -> Self {
+        self.observers.push(obs);
+        self
+    }
+}
+
+impl FitObserver for MultiObserver<'_> {
+    fn on_start(&mut self, m: usize, n: usize, spec: &FitSpec) {
+        for o in self.observers.iter_mut() {
+            o.on_start(m, n, spec);
+        }
+    }
+
+    fn on_iteration(&mut self, ev: &FitEvent<'_>) -> ObserverControl {
+        let mut ctl = ObserverControl::Continue;
+        for o in self.observers.iter_mut() {
+            if o.on_iteration(ev) == ObserverControl::Stop {
+                ctl = ObserverControl::Stop;
+            }
+        }
+        ctl
+    }
+
+    fn on_complete(&mut self, a: &Matrix, b: &[f64], result: &FitResult) {
+        for o in self.observers.iter_mut() {
+            o.on_complete(a, b, result);
+        }
+    }
+}

@@ -183,6 +183,8 @@ fn admit_block(
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // compares against the legacy serial shim
+
     use super::*;
     use crate::data::datasets;
     use crate::lars::serial::{blars_serial, LarsOptions};

@@ -7,14 +7,22 @@
 //! paper's communication pattern (reductions for Aᵀ-products and Gram
 //! blocks, broadcasts for `w` and γ).
 //!
-//! Selection results are *identical* to [`super::serial::blars_serial`]
-//! (the paper: "for bLARS, how rows are partitioned among processors
-//! does not affect the columns selected") — enforced by tests.
+//! Selection results are *identical* to the serial core in
+//! [`super::serial`] (the paper: "for bLARS, how rows are partitioned
+//! among processors does not affect the columns selected") — enforced
+//! by tests.
+//!
+//! Entry points: [`fit_observed`] is the fallible, observer-carrying
+//! core the [`crate::fit`] estimator API dispatches to
+//! (`Algorithm::Blars`); the legacy free function [`blars`] remains as
+//! a thin deprecated shim that panics on invalid input the way its
+//! `assert!`s used to.
 
-use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
 use crate::cluster::{Phase, SimCluster};
 use crate::data::partition::row_ranges;
+use crate::error::{Error, Result};
+use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
 use crate::linalg::select::{argmax_b_by, argmin_b_by};
 use crate::linalg::{dot, Cholesky, DenseMatrix, Matrix};
 
@@ -48,29 +56,32 @@ struct RankState {
     u: Vec<f64>,
 }
 
-/// Parallel bLARS plus a [`PathSnapshot`] of the fitted path — the
-/// serving hook used by [`crate::serve`]'s fit queue. The snapshot is
-/// computed once, after the parallel fit, from the selection order (it
-/// is not part of the simulated communication cost).
-pub fn blars_with_snapshot(
+/// Run parallel bLARS on `cluster`.
+#[deprecated(
+    since = "0.4.0",
+    note = "use calars::fit::FitSpec::new(Algorithm::Blars { b }).ranks(p) — this shim panics on invalid input"
+)]
+pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCluster) -> LarsOutput {
+    fit_observed(a, b_vec, opts, cluster, &mut NoopObserver).expect("invalid bLARS input")
+}
+
+/// Parallel bLARS core: validated inputs, per-iteration
+/// [`FitObserver`] events, typed errors instead of `assert!`s. The
+/// matrix is row-sharded here (Alg 2's standing assumption); all cost
+/// accounting lands in the cluster's tracer/clock.
+pub fn fit_observed(
     a: &Matrix,
     b_vec: &[f64],
     opts: &BlarsOptions,
     cluster: &mut SimCluster,
-) -> (LarsOutput, PathSnapshot) {
-    let out = blars(a, b_vec, opts, cluster);
-    let snap = PathSnapshot::from_fit(a, b_vec, &out.selected);
-    (out, snap)
-}
-
-/// Run parallel bLARS on `cluster`. The matrix is row-sharded here
-/// (Alg 2's standing assumption); all cost accounting lands in the
-/// cluster's tracer/clock.
-pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCluster) -> LarsOutput {
+    obs: &mut dyn FitObserver,
+) -> Result<LarsOutput> {
     let m = a.nrows();
     let n = a.ncols();
-    assert_eq!(b_vec.len(), m);
-    assert!(opts.b >= 1);
+    super::check_fit_inputs(a, b_vec, opts.tol)?;
+    if opts.b < 1 {
+        return Err(Error::invalid_spec("block size must be ≥ 1"));
+    }
     let t = opts.t.min(m.min(n));
     let p = cluster.nranks();
 
@@ -120,13 +131,13 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
     let mut residual_norms = vec![crate::linalg::norm2(b_vec)];
     let mut cols_at_iter = vec![0usize];
     if selected.iter().all(|&j| c[j].abs() <= opts.tol) {
-        return LarsOutput {
+        return Ok(LarsOutput {
             selected: Vec::new(),
             residual_norms,
             cols_at_iter,
             y: vec![0.0; m],
             stop: StopReason::Saturated,
-        };
+        });
     }
 
     // ── Step 4: G = A_Iᵀ A_I via local Gram blocks + reduction. ──
@@ -144,25 +155,48 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
     // (in_model[j] is already true for the whole block, set above). ──
     cluster.charge_flops(Phase::Cholesky, (b0 as u64).pow(3));
     let mut chol = Cholesky::empty();
+    let mut rank_excluded = 0usize;
     cluster.master(Phase::Cholesky, || {
-        for &r in &chol.append_block_graceful(&DenseMatrix::zeros(0, block0.len()), &g0) {
-            selected.push(block0[r]);
+        let admitted = chol.append_block_graceful(&DenseMatrix::zeros(0, block0.len()), &g0);
+        rank_excluded += block0.len() - admitted.len();
+        for &row in &admitted {
+            selected.push(block0[row]);
         }
     });
     if selected.is_empty() {
-        return LarsOutput {
+        return Ok(LarsOutput {
             selected,
             residual_norms,
             cols_at_iter,
             y: vec![0.0; m],
             stop: StopReason::RankDeficient,
-        };
+        });
     }
 
     let mut ck = selected.iter().map(|&j| c[j].abs()).fold(f64::INFINITY, f64::min);
     let mut av = vec![0.0; n];
 
+    // Event 0: the initial block is in the model.
+    let initial_stop = obs.on_iteration(&FitEvent {
+        iter: 0,
+        selected: &selected,
+        gamma: 0.0,
+        residual_norm: residual_norms[0],
+        lambda: ck,
+    });
+    if initial_stop == ObserverControl::Stop {
+        cols_at_iter.push(selected.len());
+        return Ok(LarsOutput {
+            selected,
+            residual_norms,
+            cols_at_iter,
+            y: vec![0.0; m],
+            stop: StopReason::EarlyStopped,
+        });
+    }
+
     // ── Main loop (steps 6-25). ──
+    let mut iter = 0usize;
     let stop = loop {
         if selected.len() >= t {
             break StopReason::TargetReached;
@@ -188,7 +222,8 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
             });
             match out {
                 Some(hw) => hw,
-                None => break StopReason::Saturated,
+                // sᵀG⁻¹s ≤ 0 with s ≠ 0: numerically indefinite factor.
+                None => break StopReason::RankDeficient,
             }
         };
 
@@ -307,8 +342,10 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
                 (new_block.len() * k * k + new_block.len().pow(3)) as u64,
             );
             cluster.master(Phase::Cholesky, || {
-                for &r in &chol.append_block_graceful(&gib, &gbb) {
-                    selected.push(new_block[r]);
+                let admitted = chol.append_block_graceful(&gib, &gbb);
+                rank_excluded += new_block.len() - admitted.len();
+                for &row in &admitted {
+                    selected.push(new_block[row]);
                 }
                 for &j in &new_block {
                     in_model[j] = true;
@@ -318,8 +355,33 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
         }
         cols_at_iter.push(selected.len());
 
+        iter += 1;
+        let observer_stop = obs.on_iteration(&FitEvent {
+            iter,
+            selected: &selected,
+            gamma,
+            residual_norm: *residual_norms.last().unwrap(),
+            lambda: ck,
+        }) == ObserverControl::Stop;
+
         if hit_full_step {
-            break StopReason::Saturated;
+            // Attribute the shortfall honestly: RankDeficient only when
+            // the excluded duplicates are what stand between the
+            // selection and the target (with them the target was
+            // reachable); a saturation the exclusions cannot explain
+            // stays Saturated.
+            let reason = if rank_excluded > 0
+                && selected.len() < t
+                && selected.len() + rank_excluded >= t
+            {
+                StopReason::RankDeficient
+            } else {
+                StopReason::Saturated
+            };
+            break reason;
+        }
+        if observer_stop {
+            break StopReason::EarlyStopped;
         }
     };
     if *cols_at_iter.last().unwrap() != selected.len() {
@@ -333,11 +395,13 @@ pub fn blars(a: &Matrix, b_vec: &[f64], opts: &BlarsOptions, cluster: &mut SimCl
         y[r0..r0 + st.y.len()].copy_from_slice(&st.y);
     }
 
-    LarsOutput { selected, residual_norms, cols_at_iter, y, stop }
+    Ok(LarsOutput { selected, residual_norms, cols_at_iter, y, stop })
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shims double as regression coverage
+
     use super::*;
     use crate::cluster::{ExecMode, HwParams};
     use crate::data::datasets;
@@ -421,5 +485,23 @@ mod tests {
         let (out, _) = run(2, 5, 20, 7);
         assert_eq!(out.selected.len(), 20);
         assert_eq!(out.stop, StopReason::TargetReached);
+    }
+
+    #[test]
+    fn fit_observed_rejects_bad_inputs_without_panicking() {
+        use crate::error::ErrorKind;
+        use crate::fit::observers::NoopObserver;
+        let d = datasets::tiny(8);
+        let mut cluster = SimCluster::new(2, HwParams::default(), ExecMode::Sequential);
+        let short = vec![0.0; d.a.nrows() - 1];
+        let err = fit_observed(
+            &d.a,
+            &short,
+            &BlarsOptions::default(),
+            &mut cluster,
+            &mut NoopObserver,
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
     }
 }

@@ -12,7 +12,15 @@
 //! fast LARS implementations and the coordinate-descent baseline:
 //! between consecutive breakpoints the path is linear in λ, so any
 //! interior LASSO solution is checkable against `baselines::lasso_cd`.
+//!
+//! Entry points: [`fit_observed`] is the fallible, observer-carrying
+//! core the [`crate::fit`] estimator API dispatches to
+//! (`Algorithm::LassoLars`); the legacy free function [`lasso_path`]
+//! remains as a thin deprecated shim.
 
+use super::{LarsOutput, StopReason};
+use crate::error::{Error, Result};
+use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
 use crate::linalg::{norm2, Cholesky, Matrix};
 
 /// One breakpoint of the LASSO path.
@@ -59,16 +67,60 @@ impl LassoPath {
     }
 }
 
+/// What the LASSO-LARS core returns: the exact path plus the unified
+/// family-shaped output (selection order = activation order of the
+/// final active set, residuals per breakpoint).
+pub struct LassoFit {
+    pub out: LarsOutput,
+    pub path: LassoPath,
+}
+
 /// Trace the LASSO path until `max_active` columns are active, λ falls
-/// below `lambda_min`, or the path saturates.
+/// below `lambda_min`, or the path saturates. Uses the reference
+/// implementation's historical numerical floor (`tol = 1e-10`).
+#[deprecated(
+    since = "0.4.0",
+    note = "use calars::fit::FitSpec::new(Algorithm::LassoLars { lambda_min }).t(max_active) — this shim panics on invalid input"
+)]
 pub fn lasso_path(a: &Matrix, b: &[f64], max_active: usize, lambda_min: f64) -> LassoPath {
+    fit_observed(a, b, max_active, lambda_min, 1e-10, &mut NoopObserver)
+        .expect("invalid LASSO input")
+        .path
+}
+
+/// LASSO-LARS core: validated inputs, per-breakpoint [`FitObserver`]
+/// events, typed errors, and a [`StopReason`] — `RankDeficient` when a
+/// Gram factorization fails (simultaneously activated duplicate
+/// columns), `TargetReached` at `max_active`, `Saturated` at the λ
+/// floor or the least-squares point, `PoolExhausted` if the cycling
+/// guard trips. `tol` is the spec's shared numerical floor: it guards
+/// both the correlation level (`λ ≤ max(lambda_min, tol)` saturates)
+/// and the drop-event detection.
+pub fn fit_observed(
+    a: &Matrix,
+    b: &[f64],
+    max_active: usize,
+    lambda_min: f64,
+    tol: f64,
+    obs: &mut dyn FitObserver,
+) -> Result<LassoFit> {
     let m = a.nrows();
     let n = a.ncols();
-    assert_eq!(b.len(), m);
-    let tol = 1e-10;
+    super::check_fit_inputs(a, b, tol)?;
+    if !lambda_min.is_finite() || lambda_min < 0.0 {
+        return Err(Error::invalid_spec(format!(
+            "lambda_min must be finite and ≥ 0 (got {lambda_min})"
+        )));
+    }
 
     let mut x = vec![0.0; n];
     let mut active: Vec<usize> = Vec::new();
+    // Activation order (drops remove their column); `order_at_last_bp`
+    // freezes it at the last *recorded* breakpoint so the family
+    // output's `selected` always matches the stored path even when a
+    // stop fires mid-event, after activation but before the step.
+    let mut order: Vec<usize> = Vec::new();
+    let mut order_at_last_bp: Vec<usize> = Vec::new();
     let mut breakpoints: Vec<Breakpoint> = Vec::new();
     let mut drops = 0usize;
     let mut r = b.to_vec();
@@ -78,11 +130,14 @@ pub fn lasso_path(a: &Matrix, b: &[f64], max_active: usize, lambda_min: f64) -> 
     // Guard against pathological cycling (paper assumes general position).
     let max_events = 8 * max_active + 16;
 
+    let mut stop = StopReason::PoolExhausted; // if the event guard trips
+    let mut iter = 0usize;
     for _event in 0..max_events {
         // Fresh correlations (reference implementation).
         a.at_r(&r, &mut c);
         let ck = c.iter().fold(0.0_f64, |mx, &v| mx.max(v.abs()));
         if ck <= lambda_min.max(tol) {
+            stop = StopReason::Saturated;
             break;
         }
         if breakpoints.is_empty() {
@@ -98,20 +153,26 @@ pub fn lasso_path(a: &Matrix, b: &[f64], max_active: usize, lambda_min: f64) -> 
         for j in 0..n {
             if !active.contains(&j) && c[j].abs() >= ck * (1.0 - 1e-9) {
                 active.push(j);
+                order.push(j);
             }
         }
         active.sort_unstable();
         if active.len() > max_active {
+            stop = StopReason::TargetReached;
             break;
         }
 
         // Direction: w = h · G⁻¹ c_A (all |c_A| = ck ⇒ LARS equiangular).
         let s: Vec<f64> = active.iter().map(|&j| c[j]).collect();
         let g = a.gram_block(&active, &active);
-        let Ok(chol) = Cholesky::factor(&g) else { break };
+        let Ok(chol) = Cholesky::factor(&g) else {
+            stop = StopReason::RankDeficient;
+            break;
+        };
         let q = chol.solve(&s);
         let sq: f64 = s.iter().zip(&q).map(|(a, b)| a * b).sum();
         if !(sq.is_finite() && sq > 0.0) {
+            stop = StopReason::RankDeficient;
             break;
         }
         let h = 1.0 / sq.sqrt();
@@ -166,6 +227,9 @@ pub fn lasso_path(a: &Matrix, b: &[f64], max_active: usize, lambda_min: f64) -> 
             let k = drop_pos.unwrap();
             let j = active.remove(k);
             x[j] = 0.0;
+            if let Some(pos) = order.iter().position(|&v| v == j) {
+                order.remove(pos);
+            }
             drops += 1;
         }
 
@@ -176,17 +240,45 @@ pub fn lasso_path(a: &Matrix, b: &[f64], max_active: usize, lambda_min: f64) -> 
             x: x.clone(),
             residual_norm: norm2(&r),
         });
+        order_at_last_bp.clone_from(&order);
+
+        let observer_stop = obs.on_iteration(&FitEvent {
+            iter,
+            selected: &order,
+            gamma,
+            residual_norm: breakpoints.last().unwrap().residual_norm,
+            lambda: breakpoints.last().unwrap().lambda,
+        }) == ObserverControl::Stop;
+        iter += 1;
 
         if gamma >= gamma_full * (1.0 - 1e-12) {
+            stop = StopReason::Saturated;
             break; // least-squares point reached
+        }
+        if observer_stop {
+            stop = StopReason::EarlyStopped;
+            break;
         }
     }
 
-    LassoPath { breakpoints, drops }
+    // Family-shaped output: one entry per stored breakpoint.
+    let (residual_norms, cols_at_iter) = if breakpoints.is_empty() {
+        (vec![norm2(b)], vec![0usize])
+    } else {
+        (
+            breakpoints.iter().map(|bp| bp.residual_norm).collect(),
+            breakpoints.iter().map(|bp| bp.support.len()).collect(),
+        )
+    };
+    let y: Vec<f64> = b.iter().zip(&r).map(|(bi, ri)| bi - ri).collect();
+    let out = LarsOutput { selected: order_at_last_bp, residual_norms, cols_at_iter, y, stop };
+    Ok(LassoFit { out, path: LassoPath { breakpoints, drops } })
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim doubles as regression coverage
+
     use super::*;
     use crate::baselines::lasso_cd::{lambda_max, lasso_cd};
     use crate::data::synthetic::{generate, SyntheticSpec};
@@ -276,5 +368,26 @@ mod tests {
             let overlap = crate::lars::quality::precision(&last.support, &lsel);
             assert!(overlap >= 0.9, "overlap {overlap}");
         }
+    }
+
+    #[test]
+    fn family_output_mirrors_the_path() {
+        let s = problem(9);
+        let fit = fit_observed(&s.a, &s.b, 10, 1e-6, 1e-10, &mut NoopObserver).unwrap();
+        assert_eq!(fit.out.residual_norms.len(), fit.path.breakpoints.len());
+        assert_eq!(fit.out.cols_at_iter.len(), fit.path.breakpoints.len());
+        // Final selection = the last recorded breakpoint's support
+        // (order-insensitive).
+        let mut sel = fit.out.selected.clone();
+        sel.sort_unstable();
+        assert_eq!(sel, fit.path.breakpoints.last().unwrap().support);
+        // Residual trace mirrors the breakpoints exactly.
+        for (rn, bp) in fit.out.residual_norms.iter().zip(&fit.path.breakpoints) {
+            assert_eq!(rn.to_bits(), bp.residual_norm.to_bits());
+        }
+        assert!(matches!(
+            fit.out.stop,
+            StopReason::TargetReached | StopReason::Saturated
+        ));
     }
 }

@@ -218,6 +218,8 @@ pub fn mlars(
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // compares against the legacy serial shim
+
     use super::*;
     use crate::data::datasets;
     use crate::lars::serial::{lars, LarsOptions};

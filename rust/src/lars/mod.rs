@@ -23,6 +23,31 @@ pub mod serial;
 pub mod steplars;
 pub mod tblars;
 
+/// Shared input validation for every fitter core (`fit_observed`):
+/// the response length must match the matrix row count and the
+/// numerical floor must be finite. Kept in one place so the six cores
+/// cannot drift; per-algorithm checks (block size, partitions, λ
+/// floor) stay with their cores.
+pub(crate) fn check_fit_inputs(
+    a: &crate::linalg::Matrix,
+    b_vec: &[f64],
+    tol: f64,
+) -> crate::error::Result<()> {
+    if b_vec.len() != a.nrows() {
+        return Err(crate::error::Error::invalid_spec(format!(
+            "response length {} does not match the matrix row count {}",
+            b_vec.len(),
+            a.nrows()
+        )));
+    }
+    if !tol.is_finite() {
+        return Err(crate::error::Error::invalid_spec(format!(
+            "tol must be finite (got {tol})"
+        )));
+    }
+    Ok(())
+}
+
 /// Why a run stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StopReason {
@@ -34,6 +59,34 @@ pub enum StopReason {
     Saturated,
     /// Gram matrix lost positive definiteness (near-duplicate columns).
     RankDeficient,
+    /// A [`crate::fit::FitObserver`] asked the fit to stop early.
+    EarlyStopped,
+}
+
+impl StopReason {
+    /// Stable lower-case identifier (wire formats, `/models` JSON,
+    /// registry metadata). Inverse of [`Self::from_word`].
+    pub fn word(self) -> &'static str {
+        match self {
+            StopReason::TargetReached => "target_reached",
+            StopReason::PoolExhausted => "pool_exhausted",
+            StopReason::Saturated => "saturated",
+            StopReason::RankDeficient => "rank_deficient",
+            StopReason::EarlyStopped => "early_stopped",
+        }
+    }
+
+    /// Parse a [`Self::word`] identifier back.
+    pub fn from_word(s: &str) -> Option<StopReason> {
+        match s {
+            "target_reached" => Some(StopReason::TargetReached),
+            "pool_exhausted" => Some(StopReason::PoolExhausted),
+            "saturated" => Some(StopReason::Saturated),
+            "rank_deficient" => Some(StopReason::RankDeficient),
+            "early_stopped" => Some(StopReason::EarlyStopped),
+            _ => None,
+        }
+    }
 }
 
 /// Common output of all LARS-family runs.

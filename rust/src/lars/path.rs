@@ -182,6 +182,8 @@ impl PathSnapshot {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // exercises the legacy shims
+
     use super::*;
     use crate::data::synthetic::{generate, SyntheticSpec};
     use crate::lars::serial::{lars, LarsOptions};

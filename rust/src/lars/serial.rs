@@ -9,9 +9,16 @@
 //!
 //! The paper's quality experiments (Figures 3–5) treat this
 //! implementation's selections as ground truth.
+//!
+//! Entry points: [`fit_observed`] is the fallible, observer-carrying
+//! core the [`crate::fit`] estimator API dispatches to
+//! (`Algorithm::Lars`); the legacy free functions [`lars`] and
+//! [`blars_serial`] remain as thin deprecated shims that panic on
+//! invalid input the way their `assert!`s used to.
 
-use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
+use crate::error::{Error, Result};
+use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
 use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
 use crate::linalg::{dot, norm2, Cholesky, DenseMatrix, Matrix};
 use crate::par;
@@ -66,40 +73,39 @@ impl Default for LarsOptions {
 }
 
 /// Plain LARS (Algorithm 1): serial bLARS with `b = 1`.
+#[deprecated(
+    since = "0.4.0",
+    note = "use calars::fit::FitSpec::new(Algorithm::Lars) — this shim panics on invalid input"
+)]
 pub fn lars(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput {
     let o = LarsOptions { b: 1, ..opts.clone() };
-    blars_serial(a, b_vec, &o)
-}
-
-/// Plain LARS plus a [`PathSnapshot`] of the fitted path — the serving
-/// hook: the snapshot is what [`crate::serve::ModelRegistry`] stores.
-pub fn lars_with_snapshot(
-    a: &Matrix,
-    b_vec: &[f64],
-    opts: &LarsOptions,
-) -> (LarsOutput, PathSnapshot) {
-    let out = lars(a, b_vec, opts);
-    let snap = PathSnapshot::from_fit(a, b_vec, &out.selected);
-    (out, snap)
-}
-
-/// Serial bLARS plus a [`PathSnapshot`] of the fitted path.
-pub fn blars_serial_with_snapshot(
-    a: &Matrix,
-    b_vec: &[f64],
-    opts: &LarsOptions,
-) -> (LarsOutput, PathSnapshot) {
-    let out = blars_serial(a, b_vec, opts);
-    let snap = PathSnapshot::from_fit(a, b_vec, &out.selected);
-    (out, snap)
+    fit_observed(a, b_vec, &o, &mut NoopObserver).expect("invalid LARS input")
 }
 
 /// Serial bLARS (the mathematics of Algorithm 2 on one rank).
+#[deprecated(
+    since = "0.4.0",
+    note = "use calars::fit::FitSpec::new(Algorithm::Blars { b }) — this shim panics on invalid input"
+)]
 pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput {
+    fit_observed(a, b_vec, opts, &mut NoopObserver).expect("invalid bLARS input")
+}
+
+/// Serial bLARS core: validated inputs, per-iteration
+/// [`FitObserver`] events, typed errors instead of `assert!`s. This is
+/// what `calars::fit`'s `Algorithm::Lars` runs (with `b = 1`).
+pub fn fit_observed(
+    a: &Matrix,
+    b_vec: &[f64],
+    opts: &LarsOptions,
+    obs: &mut dyn FitObserver,
+) -> Result<LarsOutput> {
     let m = a.nrows();
     let n = a.ncols();
-    assert_eq!(b_vec.len(), m);
-    assert!(opts.b >= 1, "block size must be ≥ 1");
+    super::check_fit_inputs(a, b_vec, opts.tol)?;
+    if opts.b < 1 {
+        return Err(Error::invalid_spec("block size must be ≥ 1"));
+    }
     let t = opts.t.min(m.min(n));
 
     // State (Alg 2 step 1-2): y = 0, r = b, c = Aᵀr.
@@ -116,6 +122,10 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
     // In/out bitmap + ordered selection.
     let mut in_model = vec![false; n];
     let mut selected: Vec<usize> = Vec::new();
+    // Columns permanently excluded as rank-deficient duplicates; when
+    // the run ends short of `t` because of them, the stop reason is
+    // RankDeficient rather than Saturated.
+    let mut rank_excluded = 0usize;
 
     // Step 3: pick the initial block of (up to) b columns.
     let b0 = opts.b.min(t.max(1));
@@ -123,13 +133,13 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
     block.sort_unstable();
     // Reject numerically dead starts.
     if block.iter().all(|&j| c[j].abs() <= opts.tol) {
-        return LarsOutput {
+        return Ok(LarsOutput {
             selected,
             residual_norms,
             cols_at_iter,
             y,
             stop: StopReason::Saturated,
-        };
+        });
     }
     // Steps 4-5: Gram of the initial block + Cholesky via the chunked
     // panel update, with graceful exclusion of duplicate columns
@@ -138,27 +148,49 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
     let mut chol = Cholesky::empty();
     {
         let g0 = a.gram_block(&block, &block);
-        for &r in &chol.append_block_graceful(&DenseMatrix::zeros(0, block.len()), &g0) {
-            selected.push(block[r]);
+        let admitted = chol.append_block_graceful(&DenseMatrix::zeros(0, block.len()), &g0);
+        rank_excluded += block.len() - admitted.len();
+        for &row in &admitted {
+            selected.push(block[row]);
         }
         for &j in &block {
             in_model[j] = true;
         }
     }
     if selected.is_empty() {
-        return LarsOutput {
+        return Ok(LarsOutput {
             selected,
             residual_norms,
             cols_at_iter,
             y,
             stop: StopReason::RankDeficient,
-        };
+        });
     }
 
     // `c_k` scalar: the b-th largest |c| among the *selected* block —
     // which by construction of the selection is the paper's max^b|c|.
     let mut ck = selected.iter().map(|&j| c[j].abs()).fold(f64::INFINITY, f64::min);
 
+    // Event 0: the initial block is in the model.
+    let initial_stop = obs.on_iteration(&FitEvent {
+        iter: 0,
+        selected: &selected,
+        gamma: 0.0,
+        residual_norm: residual_norms[0],
+        lambda: ck,
+    });
+    if initial_stop == ObserverControl::Stop {
+        cols_at_iter.push(selected.len());
+        return Ok(LarsOutput {
+            selected,
+            residual_norms,
+            cols_at_iter,
+            y,
+            stop: StopReason::EarlyStopped,
+        });
+    }
+
+    let mut iter = 0usize;
     let stop = loop {
         if selected.len() >= t {
             break StopReason::TargetReached;
@@ -172,7 +204,9 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
         let q = chol.solve(&s);
         let sq = dot(&s, &q);
         if !(sq.is_finite() && sq > 0.0) {
-            break StopReason::Saturated;
+            // sᵀG⁻¹s ≤ 0 with s ≠ 0: the factor has gone numerically
+            // indefinite — a rank problem, not saturation.
+            break StopReason::RankDeficient;
         }
         let h = 1.0 / sq.sqrt();
         let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
@@ -234,8 +268,10 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
             // than aborting the run (§5.2, via append_block_graceful).
             let gib = a.gram_block(&selected, &new_block);
             let gbb = a.gram_block(&new_block, &new_block);
-            for &r in &chol.append_block_graceful(&gib, &gbb) {
-                selected.push(new_block[r]);
+            let admitted = chol.append_block_graceful(&gib, &gbb);
+            rank_excluded += new_block.len() - admitted.len();
+            for &row in &admitted {
+                selected.push(new_block[row]);
             }
             for &j in &new_block {
                 in_model[j] = true;
@@ -248,19 +284,46 @@ pub fn blars_serial(a: &Matrix, b_vec: &[f64], opts: &LarsOptions) -> LarsOutput
         }
         cols_at_iter.push(selected.len());
 
+        iter += 1;
+        let observer_stop = obs.on_iteration(&FitEvent {
+            iter,
+            selected: &selected,
+            gamma,
+            residual_norm: *residual_norms.last().unwrap(),
+            lambda: ck,
+        }) == ObserverControl::Stop;
+
         if hit_full_step {
-            break StopReason::Saturated;
+            // Attribute the shortfall honestly: RankDeficient only when
+            // the excluded duplicates are what stand between the
+            // selection and the target (with them the target was
+            // reachable); a saturation the exclusions cannot explain
+            // stays Saturated.
+            let reason = if rank_excluded > 0
+                && selected.len() < t
+                && selected.len() + rank_excluded >= t
+            {
+                StopReason::RankDeficient
+            } else {
+                StopReason::Saturated
+            };
+            break reason;
+        }
+        if observer_stop {
+            break StopReason::EarlyStopped;
         }
     };
     if *cols_at_iter.last().unwrap() != selected.len() {
         cols_at_iter.push(selected.len());
     }
 
-    LarsOutput { selected, residual_norms, cols_at_iter, y, stop }
+    Ok(LarsOutput { selected, residual_norms, cols_at_iter, y, stop })
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shims double as regression coverage
+
     use super::*;
     use crate::data::datasets;
     use crate::linalg::DenseMatrix;
@@ -436,5 +499,23 @@ mod tests {
         let d = datasets::tiny_dense(8); // m=150, n=60
         let out = lars(&d.a, &d.b, &LarsOptions { t: 500, ..Default::default() });
         assert!(out.selected.len() <= 60);
+    }
+
+    #[test]
+    fn fit_observed_rejects_bad_inputs_without_panicking() {
+        use crate::error::ErrorKind;
+        let d = datasets::tiny(9);
+        let short = vec![0.0; d.a.nrows() - 1];
+        let err = fit_observed(&d.a, &short, &LarsOptions::default(), &mut NoopObserver)
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        let err = fit_observed(
+            &d.a,
+            &d.b,
+            &LarsOptions { b: 0, ..Default::default() },
+            &mut NoopObserver,
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
     }
 }

@@ -12,12 +12,19 @@
 //! tournament levels are *serial* — their compute is charged to the
 //! `Wait` category exactly like the paper's wait-time estimate — and
 //! each level exchanges `b·m` words of column data.
+//!
+//! Entry points: [`fit_observed`] is the fallible, observer-carrying
+//! core the [`crate::fit`] estimator API dispatches to
+//! (`Algorithm::TBlars`); the legacy free function [`tblars`] remains
+//! as a thin deprecated shim that panics on invalid input the way its
+//! `assert!`s used to.
 
 use super::mlars::{mlars, MlarsOutput};
-use super::path::PathSnapshot;
 use super::{LarsOutput, StopReason};
 use crate::cluster::topology::TournamentTree;
 use crate::cluster::{ExecMode, Phase, SimCluster, Tracer};
+use crate::error::{Error, Result};
+use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
 use crate::linalg::{norm2, Cholesky, Matrix};
 
 /// Options for a T-bLARS run.
@@ -37,23 +44,13 @@ impl Default for TblarsOptions {
     }
 }
 
-/// T-bLARS plus a [`PathSnapshot`] of the fitted path — the serving
-/// hook used by [`crate::serve`]'s fit queue.
-pub fn tblars_with_snapshot(
-    a: &Matrix,
-    b_vec: &[f64],
-    partition: &[Vec<usize>],
-    opts: &TblarsOptions,
-    cluster: &mut SimCluster,
-) -> (LarsOutput, PathSnapshot) {
-    let out = tblars(a, b_vec, partition, opts, cluster);
-    let snap = PathSnapshot::from_fit(a, b_vec, &out.selected);
-    (out, snap)
-}
-
 /// Run T-bLARS with a given column `partition` (one column-index list
 /// per rank; see [`crate::data::partition`] for the balanced and random
 /// partitioners the paper's §10 uses).
+#[deprecated(
+    since = "0.4.0",
+    note = "use calars::fit::FitSpec::new(Algorithm::TBlars { b, parts }) — this shim panics on invalid input"
+)]
 pub fn tblars(
     a: &Matrix,
     b_vec: &[f64],
@@ -61,12 +58,44 @@ pub fn tblars(
     opts: &TblarsOptions,
     cluster: &mut SimCluster,
 ) -> LarsOutput {
+    fit_observed(a, b_vec, partition, opts, cluster, &mut NoopObserver)
+        .expect("invalid T-bLARS input")
+}
+
+/// T-bLARS core: validated inputs (including the partition), per-outer-
+/// iteration [`FitObserver`] events, typed errors instead of
+/// `assert!`s. Events carry `NaN` for γ and λ — the tournament has no
+/// scalar step size per outer iteration.
+pub fn fit_observed(
+    a: &Matrix,
+    b_vec: &[f64],
+    partition: &[Vec<usize>],
+    opts: &TblarsOptions,
+    cluster: &mut SimCluster,
+    obs: &mut dyn FitObserver,
+) -> Result<LarsOutput> {
     let m = a.nrows();
     let n = a.ncols();
-    assert_eq!(b_vec.len(), m);
-    assert!(opts.b >= 1);
+    super::check_fit_inputs(a, b_vec, opts.tol)?;
+    if opts.b < 1 {
+        return Err(Error::invalid_spec("block size must be ≥ 1"));
+    }
     let p = cluster.nranks();
-    assert_eq!(partition.len(), p, "partition must have one bucket per rank");
+    if partition.len() != p {
+        return Err(Error::invalid_spec(format!(
+            "partition has {} buckets for {p} ranks",
+            partition.len()
+        )));
+    }
+    for bucket in partition {
+        for &j in bucket {
+            if j >= n {
+                return Err(Error::invalid_spec(format!(
+                    "partition references column {j}, but the matrix has {n} columns"
+                )));
+            }
+        }
+    }
     let tree = TournamentTree::new(p);
     let t = opts.t.min(m.min(n));
 
@@ -77,6 +106,7 @@ pub fn tblars(
     let mut residual_norms = vec![norm2(b_vec)];
     let mut cols_at_iter = vec![0usize];
 
+    let mut iter = 0usize;
     let stop = loop {
         if selected.len() >= t {
             break StopReason::TargetReached;
@@ -167,16 +197,30 @@ pub fn tblars(
         });
         cols_at_iter.push(selected.len());
 
+        let observer_stop = obs.on_iteration(&FitEvent {
+            iter,
+            selected: &selected,
+            gamma: f64::NAN,
+            residual_norm: *residual_norms.last().unwrap(),
+            lambda: f64::NAN,
+        }) == ObserverControl::Stop;
+        iter += 1;
+
         if new_count == 0 {
             break StopReason::Saturated;
         }
+        if observer_stop {
+            break StopReason::EarlyStopped;
+        }
     };
 
-    LarsOutput { selected, residual_norms, cols_at_iter, y, stop }
+    Ok(LarsOutput { selected, residual_norms, cols_at_iter, y, stop })
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shims double as regression coverage
+
     use super::*;
     use crate::cluster::{ExecMode, HwParams};
     use crate::data::{datasets, partition};
@@ -309,5 +353,25 @@ mod tests {
         for j in &out.selected {
             assert!(all.contains(j));
         }
+    }
+
+    #[test]
+    fn fit_observed_rejects_bad_partitions_without_panicking() {
+        use crate::error::ErrorKind;
+        use crate::fit::observers::NoopObserver;
+        let d = datasets::tiny(10);
+        let opts = TblarsOptions::default();
+        // Wrong bucket count.
+        let mut cluster = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+        let bad_count = vec![vec![0usize]; 3];
+        let err = fit_observed(&d.a, &d.b, &bad_count, &opts, &mut cluster, &mut NoopObserver)
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        // Out-of-range column index.
+        let mut cluster = SimCluster::new(2, HwParams::default(), ExecMode::Sequential);
+        let bad_index = vec![vec![0usize], vec![d.a.ncols() + 5]];
+        let err = fit_observed(&d.a, &d.b, &bad_index, &opts, &mut cluster, &mut NoopObserver)
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
     }
 }

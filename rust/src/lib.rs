@@ -4,16 +4,25 @@
 //! Avoiding Least Angle Regression"* (Das, Demmel, Fountoulakis, Grigori,
 //! Mahoney, Yang; 2019/2020).
 //!
-//! The crate is organized as three layers (see `DESIGN.md`):
+//! The crate is organized as layers (see `DESIGN.md`):
 //!
-//! * **L3 — the coordinator** (this crate): the paper's parallel
-//!   algorithms ([`lars::serial`], [`lars::blars`], [`lars::tblars`])
-//!   scheduled over a simulated message-passing cluster
-//!   ([`cluster`]) with an α-β-γ communication cost model, plus the
-//!   substrate the paper depends on: dense/sparse linear algebra
-//!   ([`linalg`]), dataset generators matching the paper's Table 3
-//!   ([`data`]), baselines ([`baselines`]), metrics and experiment
-//!   drivers ([`experiments`]) regenerating every table and figure.
+//! * **The estimator API** ([`fit`]): the single entry point for the
+//!   whole fitter family. A [`fit::FitSpec`] (a validated, serializable
+//!   [`fit::Algorithm`] + shared knobs) implements [`fit::Fitter`],
+//!   whose `fit(a, b, observer)` call covers serial LARS, bLARS,
+//!   T-bLARS, LASSO-LARS, and the greedy baselines with one signature.
+//!   Cross-cutting behaviors compose as [`fit::FitObserver`]s
+//!   ([`fit::SnapshotObserver`], [`fit::ProgressObserver`],
+//!   [`fit::EarlyStop`], [`fit::MetricsSink`]); invalid inputs return
+//!   typed errors ([`error::ErrorKind`]) instead of panicking.
+//! * **L3 — the coordinator**: the paper's parallel algorithms
+//!   ([`lars::serial`], [`lars::blars`], [`lars::tblars`]) scheduled
+//!   over a simulated message-passing cluster ([`cluster`]) with an
+//!   α-β-γ communication cost model, plus the substrate the paper
+//!   depends on: dense/sparse linear algebra ([`linalg`]), dataset
+//!   generators matching the paper's Table 3 ([`data`]), baselines
+//!   ([`baselines`]), metrics and experiment drivers ([`experiments`])
+//!   regenerating every table and figure.
 //! * **L2/L1 — JAX + Pallas** (build-time Python under `python/`):
 //!   the per-iteration compute graph and its Pallas hot-spot kernels,
 //!   AOT-lowered to HLO text artifacts.
@@ -29,43 +38,77 @@
 //!   forks onto it; results are bit-identical across `CALARS_THREADS`
 //!   settings by construction.
 //! * **L4 — serving** ([`serve`]): the production front end. A
-//!   versioned [`serve::ModelRegistry`] snapshots fitted LARS/bLARS/
-//!   T-bLARS regularization paths (in memory and on disk), a batched
+//!   versioned [`serve::ModelRegistry`] snapshots fitted regularization
+//!   paths (in memory and on disk), a batched
 //!   [`serve::PredictionEngine`] evaluates any stored path at an
-//!   arbitrary step or λ, a [`serve::FitQueue`] worker pool runs fit
-//!   jobs asynchronously, and a zero-dependency HTTP/1.1 server
-//!   (`calars serve`) exposes `/fit`, `/predict`, `/models`, `/stats`.
-//!   `calars bench-serve` is the closed-loop load generator.
+//!   arbitrary step or λ, a [`serve::FitQueue`] worker pool runs
+//!   [`serve::FitJob`]s asynchronously through the estimator API, and a
+//!   zero-dependency HTTP/1.1 server (`calars serve`) exposes `/fit`,
+//!   `/predict`, `/models`, `/stats`. `calars bench-serve` is the
+//!   closed-loop load generator.
 //!
 //! ## Quickstart
 //!
 //! ```no_run
 //! use calars::data::datasets;
-//! use calars::lars::serial::{lars, LarsOptions};
+//! use calars::fit::{Algorithm, FitSpec};
 //!
 //! let ds = datasets::sector_like(42);
-//! let out = lars(&ds.a, &ds.b, &LarsOptions { t: 20, ..Default::default() });
-//! println!("selected columns: {:?}", out.selected);
+//! let result = FitSpec::new(Algorithm::Lars)
+//!     .t(20)
+//!     .run(&ds.a, &ds.b)
+//!     .expect("valid spec");
+//! println!("selected columns: {:?}", result.output.selected);
+//! println!("stopped because: {:?}", result.output.stop);
+//! ```
+//!
+//! Every family member goes through the same call — switch algorithms
+//! by switching the [`fit::Algorithm`]:
+//!
+//! ```no_run
+//! use calars::data::datasets;
+//! use calars::fit::{Algorithm, FitSpec};
+//!
+//! let ds = datasets::sector_like(42);
+//! let blars = FitSpec::new(Algorithm::Blars { b: 4 }).t(60).ranks(16);
+//! let result = blars.run(&ds.a, &ds.b).expect("valid spec");
+//! let sim = result.sim.as_ref().expect("cluster fitters report telemetry");
+//! println!("simulated seconds: {:.3}, messages: {}", sim.sim_time, sim.counters.msgs);
 //! ```
 //!
 //! ## Serving quickstart
 //!
 //! ```no_run
 //! use calars::data::datasets;
-//! use calars::lars::serial::lars_with_snapshot;
-//! use calars::lars::serial::LarsOptions;
+//! use calars::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
 //! use calars::serve::{ModelMeta, ModelRegistry, PredictionEngine, Query, Selector};
 //! use std::sync::Arc;
 //!
 //! let ds = datasets::tiny(42);
-//! let (_, snap) = lars_with_snapshot(&ds.a, &ds.b, &LarsOptions { t: 8, ..Default::default() });
+//! let mut snap = SnapshotObserver::new();
+//! FitSpec::new(Algorithm::Lars)
+//!     .t(8)
+//!     .fit(&ds.a, &ds.b, &mut snap)
+//!     .expect("fit succeeds");
 //! let registry = Arc::new(ModelRegistry::new(16));
-//! let id = registry.insert(ModelMeta::named("tiny-lars"), snap);
+//! let id = registry.insert(ModelMeta::named("tiny-lars"), snap.into_snapshot().unwrap());
 //! let engine = PredictionEngine::new(registry, 64);
 //! let x = vec![0.0; ds.a.ncols()];
 //! let yhat = engine.predict(&Query { model: id, selector: Selector::Step(4), x }).unwrap();
 //! println!("prediction: {yhat}");
 //! ```
+//!
+//! ## Legacy entry points
+//!
+//! The original free functions (`lars::serial::lars`,
+//! `lars::serial::blars_serial`, `lars::blars::blars`,
+//! `lars::tblars::tblars`, `lars::lasso_lars::lasso_path`,
+//! `baselines::forward_selection::forward_selection`,
+//! `baselines::omp::omp`) remain as `#[deprecated]` shims that delegate
+//! to the estimator API and produce bit-identical outputs
+//! (property-tested in `tests/fit.rs`). Migrate by constructing the
+//! matching [`fit::FitSpec`]; the shims panic on invalid input exactly
+//! like their old `assert!`s, whereas the new API returns typed errors.
 
 pub mod baselines;
 pub mod cluster;
@@ -73,6 +116,7 @@ pub mod config;
 pub mod data;
 pub mod error;
 pub mod experiments;
+pub mod fit;
 pub mod lars;
 pub mod linalg;
 pub mod metrics;

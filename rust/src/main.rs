@@ -10,14 +10,12 @@
 //! calars info                       # datasets + runtime status
 //! ```
 
-use calars::cluster::{ExecMode, HwParams, SimCluster};
-use calars::config::{Algo, Args, ServeConfig, SweepConfig};
-use calars::data::{datasets, partition};
+use calars::cluster::ExecMode;
+use calars::config::{Args, ServeConfig, SweepConfig};
+use calars::data::datasets;
 use calars::error::{bail, Result};
 use calars::experiments;
-use calars::lars::blars::{blars, BlarsOptions};
-use calars::lars::serial::{lars, LarsOptions};
-use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::fit::{Algorithm, FitSpec, Fitter, ProgressObserver};
 use calars::metrics::{fmt_count, fmt_secs};
 use calars::runtime::XlaRuntime;
 use calars::serve::{
@@ -62,7 +60,9 @@ fn usage() -> &'static str {
     "calars — parallel & communication-avoiding LARS (paper reproduction)
 
 USAGE:
-  calars run   --algo <lars|blars|tblars> --dataset <name> [--t N] [--b N] [--p N] [--seed N] [--threads]
+  calars run   --algo <lars|blars|tblars|lasso|omp|fs> --dataset <name>
+               [--t N] [--b N] [--p N] [--seed N] [--tol X] [--lambda-min X]
+               [--threads] [--progress]
   calars exp   <table1|table2|table3|fig2|fig3|fig4|fig5|fig6|fig7|fig8> [--quick] [--t N] [--seed N]
   calars suite [--quick]
   calars serve [--addr H:P] [--port N] [--fit-workers N] [--batch-window-us N]
@@ -71,6 +71,12 @@ USAGE:
                [--dataset NAME] [--algo A] [--t N] [--b N] [--step K | --lambda L]
                [--seed N] [--shutdown] [--json]
   calars info  [--json]
+
+run drives the unified calars::fit estimator API: every algorithm —
+the paper's three, the exact LASSO-LARS path, and the greedy
+baselines (omp, fs) — goes through one FitSpec/Fitter call path.
+--progress attaches a ProgressObserver (per-iteration lines on
+stderr); --tol and --lambda-min are the spec's numerical knobs.
 
 Every command honors --par-threads N / --par-min-chunk N (or the
 CALARS_THREADS / CALARS_MIN_CHUNK environment variables) to size the
@@ -198,13 +204,19 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let algo: Algo = args.get("algo").unwrap_or("lars").parse()?;
     let name = args.get("dataset").unwrap_or("tiny");
     let seed = args.get_parse::<u64>("seed", 42)?;
     let t = args.get_parse::<usize>("t", 20)?;
     let b = args.get_parse::<usize>("b", 1)?;
     let p = args.get_parse::<usize>("p", 1)?;
+    let tol = args.get_parse::<f64>("tol", 1e-12)?;
+    let lambda_min = args.get_parse::<f64>("lambda-min", 1e-6)?;
     let mode = if args.flag("threads") { ExecMode::Threaded } else { ExecMode::Sequential };
+
+    // Everything below goes through the one estimator call path
+    // (calars::fit) — same as the serve layer, experiments, and benches.
+    let algorithm = Algorithm::from_parts(args.get("algo").unwrap_or("lars"), b, p, lambda_min)?;
+    let spec = FitSpec::new(algorithm).t(t).tol(tol).ranks(p).mode(mode);
 
     let ds = datasets::by_name(name, seed)
         .ok_or_else(|| calars::anyhow!("unknown dataset '{name}'"))?;
@@ -216,32 +228,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         ds.stats().density
     );
 
-    let t0 = std::time::Instant::now();
-    let (out, sim) = match algo {
-        Algo::Lars => {
-            let out = lars(&ds.a, &ds.b, &LarsOptions { t, ..Default::default() });
-            (out, None)
-        }
-        Algo::Blars => {
-            let mut cluster = SimCluster::new(p, HwParams::default(), mode);
-            let out =
-                blars(&ds.a, &ds.b, &BlarsOptions { t, b, ..Default::default() }, &mut cluster);
-            (out, Some(cluster))
-        }
-        Algo::Tblars => {
-            let parts = partition::balanced_col_partition(&ds.a, p);
-            let mut cluster = SimCluster::new(p, HwParams::default(), mode);
-            let out = tblars(
-                &ds.a,
-                &ds.b,
-                &parts,
-                &TblarsOptions { t, b, ..Default::default() },
-                &mut cluster,
-            );
-            (out, Some(cluster))
-        }
+    let result = if args.flag("progress") {
+        let mut progress = ProgressObserver::new();
+        spec.fit(&ds.a, &ds.b, &mut progress)?
+    } else {
+        spec.run(&ds.a, &ds.b)?
     };
-    let wall = t0.elapsed().as_secs_f64();
+    let out = &result.output;
 
     println!(
         "selected {} columns, stop={:?}, final residual {:.6}",
@@ -250,17 +243,26 @@ fn cmd_run(args: &Args) -> Result<()> {
         out.residual_norms.last().unwrap()
     );
     println!("first 10 selections: {:?}", &out.selected[..out.selected.len().min(10)]);
-    println!("wallclock {}", fmt_secs(wall));
-    if let Some(cluster) = sim {
-        let c = cluster.counters();
+    println!("wallclock {}", fmt_secs(result.wall_secs));
+    if let Some(path) = &result.lasso {
+        println!(
+            "lasso path: {} breakpoints, {} drop events, λ ∈ [{:.6}, {:.6}]",
+            path.breakpoints.len(),
+            path.drops,
+            path.breakpoints.last().map_or(0.0, |bp| bp.lambda),
+            path.breakpoints.first().map_or(0.0, |bp| bp.lambda)
+        );
+    }
+    if let Some(sim) = &result.sim {
+        let c = sim.counters;
         println!(
             "simulated time {} | F={} W={} L={}",
-            fmt_secs(cluster.sim_time()),
+            fmt_secs(sim.sim_time),
             fmt_count(c.flops),
             fmt_count(c.words),
             fmt_count(c.msgs)
         );
-        let cats = cluster.tracer().by_category();
+        let cats = sim.categories;
         println!(
             "breakdown: matprod {} | gamma {} | comm {} | wait {} | other {}",
             fmt_secs(cats[0]),

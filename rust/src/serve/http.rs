@@ -21,10 +21,9 @@ use super::engine::{PredictionEngine, Query};
 use super::protocol::{
     self, http_response, json_escape, json_f64, FitRequest, HttpRequest, PredictRequest,
 };
-use super::queue::{FitQueue, FitSpec, JobState};
+use super::queue::{FitJob, FitQueue, JobState};
 use super::store::{ModelRegistry, RegistryStats};
-use crate::config::Algo;
-use crate::error::{Context, Result};
+use crate::error::{Context, Error, ErrorKind, Result};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -155,7 +154,7 @@ fn bind(opts: &ServeOptions) -> Result<(TcpListener, Arc<ServerState>)> {
     let engine = Arc::new(PredictionEngine::new(registry.clone(), opts.cache_capacity));
     let queue = FitQueue::new(registry.clone(), opts.fit_workers);
     if let Some(dataset) = &opts.prefit {
-        let job = queue.submit(FitSpec { dataset: dataset.clone(), ..Default::default() });
+        let job = queue.submit(FitJob { dataset: dataset.clone(), ..Default::default() });
         match queue.wait(job, Duration::from_secs(600)) {
             Some(JobState::Done { model, .. }) => {
                 println!("prefit '{dataset}' ready as model {model}");
@@ -252,10 +251,28 @@ fn route(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
     }
 }
 
+/// JSON error body from an [`Error`]'s full context chain.
+fn err_json(e: &Error) -> String {
+    format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")))
+}
+
+/// HTTP status for a typed error: bad user input → 400, everything
+/// else → 400 (request-scoped). The 422 arm is reserved for
+/// `ErrorKind::RankDeficient` *hard* failures — fitters currently
+/// report recoverable rank deficiency inside a 200 response as
+/// `stop=rank_deficient` (see `/models`), so this arm only fires if a
+/// future producer surfaces the kind as an error.
+fn error_status(e: &Error) -> u16 {
+    match e.kind() {
+        ErrorKind::RankDeficient => 422,
+        ErrorKind::InvalidSpec | ErrorKind::Other => 400,
+    }
+}
+
 fn predict(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
     let parsed = match PredictRequest::parse(&req.body) {
         Ok(p) => p,
-        Err(e) => return (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")))),
+        Err(e) => return (400, err_json(&e)),
     };
     let queries: Vec<Query> = parsed
         .rows
@@ -267,9 +284,7 @@ fn predict(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
     for r in results {
         match r {
             Ok(v) => preds.push(json_f64(v)),
-            Err(e) => {
-                return (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}"))))
-            }
+            Err(e) => return (error_status(&e), err_json(&e)),
         }
     }
     (200, format!("{{\"model\":{},\"predictions\":[{}]}}", parsed.model, preds.join(",")))
@@ -278,22 +293,21 @@ fn predict(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
 fn fit(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
     let parsed = match FitRequest::parse(&req.body) {
         Ok(p) => p,
-        Err(e) => return (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")))),
+        Err(e) => return (400, err_json(&e)),
     };
-    let algo: Algo = match parsed.algo.parse() {
-        Ok(a) => a,
-        Err(e) => return (400, format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")))),
+    // Resolve + validate the estimator spec up front so malformed
+    // requests answer 4xx immediately instead of failing (or, worse,
+    // panicking) inside a worker thread.
+    let spec = match parsed.to_spec() {
+        Ok(s) => s,
+        Err(e) => return (error_status(&e), err_json(&e)),
     };
-    let spec = FitSpec {
+    let job = state.queue.submit(FitJob {
         name: parsed.name,
-        algo,
         dataset: parsed.dataset,
-        t: parsed.t,
-        b: parsed.b,
-        p: parsed.p,
         seed: parsed.seed,
-    };
-    let job = state.queue.submit(spec);
+        spec,
+    });
     let st = if req.query_flag("wait") {
         state.queue.wait(job, Duration::from_secs(600))
     } else {
@@ -335,12 +349,18 @@ fn models_json(state: &Arc<ServerState>) -> String {
         .map(|r| {
             let (lambda_max, lambda_min) = r.snapshot.lambda_range();
             format!(
-                "{{\"id\":{},\"version\":{},\"name\":\"{}\",\"algo\":\"{}\",\"dataset\":\"{}\",\"n\":{},\"steps\":{},\"max_support\":{},\"lambda_max\":{},\"lambda_min\":{},\"created_unix\":{}}}",
+                "{{\"id\":{},\"version\":{},\"name\":\"{}\",\"algo\":\"{}\",\"dataset\":\"{}\",\"t\":{},\"b\":{},\"p\":{},\"seed\":{},\"stop\":\"{}\",\"spec\":\"{}\",\"n\":{},\"steps\":{},\"max_support\":{},\"lambda_max\":{},\"lambda_min\":{},\"created_unix\":{}}}",
                 r.id,
                 r.version,
                 json_escape(&r.meta.display_name()),
                 json_escape(&r.meta.algo),
                 json_escape(&r.meta.dataset),
+                r.meta.t,
+                r.meta.b,
+                r.meta.p,
+                r.meta.seed,
+                json_escape(&r.meta.stop),
+                json_escape(&r.meta.spec),
                 r.snapshot.n,
                 r.snapshot.len(),
                 r.snapshot.max_support(),

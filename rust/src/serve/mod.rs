@@ -14,8 +14,11 @@
 //!   an LRU coefficient-snapshot cache. Exactness contract: at stored
 //!   breakpoints, served predictions are bit-identical to evaluating
 //!   the fitter's coefficients directly.
-//! * [`queue`] — [`FitQueue`]: OS-thread worker pool running fit jobs
-//!   asynchronously and registering the results.
+//! * [`queue`] — [`FitQueue`]: OS-thread worker pool running
+//!   [`FitJob`]s (dataset bindings around validated
+//!   [`crate::fit::FitSpec`]s) asynchronously through the estimator
+//!   API — with a [`crate::fit::SnapshotObserver`] attached — and
+//!   registering the results with their stop reasons.
 //! * [`protocol`] — the hand-rolled line protocol + HTTP/1.1 framing +
 //!   minimal JSON emission.
 //! * [`http`] — the front end (`calars serve`): `/fit`, `/predict`,
@@ -35,5 +38,5 @@ pub use engine::{EngineStats, PredictionEngine, Query, Selector};
 pub use http::{serve, spawn_server, ServeOptions, ServerHandle};
 pub use loadgen::{run_load, LoadOptions, LoadReport, ServeClient};
 pub use protocol::{FitRequest, PredictRequest};
-pub use queue::{FitQueue, FitSpec, JobState, QueueStats};
+pub use queue::{FitJob, FitQueue, JobState, QueueStats};
 pub use store::{ModelMeta, ModelRecord, ModelRegistry, RegistryStats};

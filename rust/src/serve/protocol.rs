@@ -107,7 +107,11 @@ impl PredictRequest {
 
 // ── line protocol: /fit ─────────────────────────────────────────────
 
-/// Body of `POST /fit` (every line optional; defaults below).
+/// Body of `POST /fit` (every line optional; defaults below). The
+/// request is the wire face of a [`crate::fit::FitSpec`]: `algo`, `t`,
+/// `b`, `p`, `tol`, and `lambda_min` resolve into the spec via
+/// [`FitRequest::to_spec`]; `name`, `dataset`, and `seed` are the
+/// serving-side job bindings.
 ///
 /// ```text
 /// name sector-60
@@ -117,6 +121,8 @@ impl PredictRequest {
 /// b 4
 /// p 8
 /// seed 42
+/// tol 1e-12
+/// lambda_min 1e-6
 /// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct FitRequest {
@@ -127,6 +133,10 @@ pub struct FitRequest {
     pub b: usize,
     pub p: usize,
     pub seed: u64,
+    /// Numerical floor (the spec's `tol`).
+    pub tol: f64,
+    /// λ floor for `algo lasso` (ignored by the other algorithms).
+    pub lambda_min: f64,
 }
 
 impl Default for FitRequest {
@@ -139,6 +149,8 @@ impl Default for FitRequest {
             b: 1,
             p: 4,
             seed: 42,
+            tol: 1e-12,
+            lambda_min: 1e-6,
         }
     }
 }
@@ -155,6 +167,8 @@ impl FitRequest {
         s.push_str(&format!("b {}\n", self.b));
         s.push_str(&format!("p {}\n", self.p));
         s.push_str(&format!("seed {}\n", self.seed));
+        s.push_str(&format!("tol {}\n", self.tol));
+        s.push_str(&format!("lambda_min {}\n", self.lambda_min));
         s
     }
 
@@ -176,10 +190,30 @@ impl FitRequest {
                 "b" => out.b = rest.parse().with_context(|| bad("b"))?,
                 "p" => out.p = rest.parse().with_context(|| bad("p"))?,
                 "seed" => out.seed = rest.parse().with_context(|| bad("seed"))?,
+                "tol" => out.tol = rest.parse().with_context(|| bad("tol"))?,
+                "lambda_min" => {
+                    out.lambda_min = rest.parse().with_context(|| bad("lambda_min"))?
+                }
                 other => bail!("line {}: unknown key '{other}'", ln + 1),
             }
         }
         Ok(out)
+    }
+
+    /// Resolve the request's algorithm knobs into a validated
+    /// [`crate::fit::FitSpec`]. Unknown algorithms and out-of-range
+    /// knobs come back as typed
+    /// [`crate::error::ErrorKind::InvalidSpec`] errors, which the HTTP
+    /// layer maps to 400.
+    pub fn to_spec(&self) -> Result<crate::fit::FitSpec> {
+        let algorithm =
+            crate::fit::Algorithm::from_parts(&self.algo, self.b, self.p, self.lambda_min)?;
+        let spec = crate::fit::FitSpec::new(algorithm)
+            .t(self.t)
+            .tol(self.tol)
+            .ranks(self.p);
+        spec.validate()?;
+        Ok(spec)
     }
 }
 
@@ -293,6 +327,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        422 => "Unprocessable Entity",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Status",
@@ -452,11 +487,43 @@ mod tests {
             b: 4,
             p: 8,
             seed: 9,
+            tol: 1e-10,
+            lambda_min: 2.5e-7,
         };
         assert_eq!(FitRequest::parse(&req.encode()).unwrap(), req);
         let d = FitRequest::parse("").unwrap();
         assert_eq!(d, FitRequest::default());
         assert_eq!(FitRequest::parse("t 5\n").unwrap().t, 5);
+    }
+
+    #[test]
+    fn fit_request_resolves_to_validated_spec() {
+        use crate::error::ErrorKind;
+        use crate::fit::Algorithm;
+        let req = FitRequest { algo: "blars".into(), b: 3, p: 8, t: 24, ..Default::default() };
+        let spec = req.to_spec().unwrap();
+        assert_eq!(spec.algorithm, Algorithm::Blars { b: 3 });
+        assert_eq!(spec.t, 24);
+        assert_eq!(spec.ranks, 8);
+
+        let lasso = FitRequest { algo: "lasso".into(), lambda_min: 1e-4, ..Default::default() };
+        assert_eq!(
+            lasso.to_spec().unwrap().algorithm,
+            Algorithm::LassoLars { lambda_min: 1e-4 }
+        );
+
+        let bad_algo = FitRequest { algo: "ridge".into(), ..Default::default() };
+        assert_eq!(bad_algo.to_spec().unwrap_err().kind(), ErrorKind::InvalidSpec);
+        let bad_b = FitRequest { algo: "blars".into(), b: 0, ..Default::default() };
+        assert_eq!(bad_b.to_spec().unwrap_err().kind(), ErrorKind::InvalidSpec);
+        let bad_t = FitRequest { t: 0, ..Default::default() };
+        assert_eq!(bad_t.to_spec().unwrap_err().kind(), ErrorKind::InvalidSpec);
+        let bad_p = FitRequest { p: 0, ..Default::default() };
+        assert_eq!(
+            bad_p.to_spec().unwrap_err().kind(),
+            ErrorKind::InvalidSpec,
+            "p=0 must be rejected like every other out-of-range knob"
+        );
     }
 
     #[test]

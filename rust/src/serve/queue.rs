@@ -1,23 +1,24 @@
-//! Asynchronous fit jobs: a worker pool of OS threads that runs
-//! LARS/bLARS/T-bLARS fits off the request path and registers the
-//! resulting path snapshots.
+//! Asynchronous fit jobs: a worker pool of OS threads that runs fits
+//! off the request path — through the [`crate::fit`] estimator API —
+//! and registers the resulting path snapshots.
 //!
-//! A `/fit` request enqueues a [`FitSpec`] and immediately gets a job
-//! id; callers poll [`FitQueue::state`] or block on [`FitQueue::wait`]
-//! (the HTTP layer's `?wait=1`). Before fitting, the worker asks the
-//! registry for a **warm start**: if the model family already has a
-//! stored path covering the requested `t`, the job completes instantly
-//! against the existing model — fitting a prefix of a path that is
-//! already on disk is free.
+//! A `/fit` request enqueues a [`FitJob`] (a dataset binding around a
+//! validated [`FitSpec`]) and immediately gets a job id; callers poll
+//! [`FitQueue::state`] or block on [`FitQueue::wait`] (the HTTP layer's
+//! `?wait=1`). Before fitting, the worker asks the registry for a
+//! **warm start**: if the model family already has a stored path
+//! covering the requested `t`, the job completes instantly against the
+//! existing model — fitting a prefix of a path that is already on disk
+//! is free. The fit itself runs with a
+//! [`crate::fit::SnapshotObserver`] attached (the replacement for the
+//! deleted `*_with_snapshot` entry points), and the resulting
+//! [`StopReason`](crate::lars::StopReason) lands in the registry
+//! metadata so `/models` can say why each path ended.
 
 use super::store::{ModelMeta, ModelRegistry};
-use crate::cluster::{ExecMode, HwParams, SimCluster};
-use crate::config::Algo;
-use crate::data::{datasets, partition};
+use crate::data::datasets;
 use crate::error::Result;
-use crate::lars::blars::{blars_with_snapshot, BlarsOptions};
-use crate::lars::serial::{lars_with_snapshot, LarsOptions};
-use crate::lars::tblars::{tblars_with_snapshot, TblarsOptions};
+use crate::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -25,49 +26,47 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One fit job.
+/// One fit job: the estimator spec plus the serving-side bindings
+/// (which dataset to load, the registered model's display name, the
+/// dataset seed).
 #[derive(Clone, Debug)]
-pub struct FitSpec {
+pub struct FitJob {
     /// Display name for the registered model ("" → generated).
     pub name: String,
-    pub algo: Algo,
     /// Dataset name resolved through [`datasets::by_name`].
     pub dataset: String,
-    /// Target path length.
-    pub t: usize,
-    /// Block size.
-    pub b: usize,
-    /// Simulated ranks for blars/tblars (rounded up to a power of two).
-    pub p: usize,
+    /// Dataset generation seed.
     pub seed: u64,
+    /// The validated estimator spec (algorithm + shared knobs).
+    pub spec: FitSpec,
 }
 
-impl Default for FitSpec {
+impl Default for FitJob {
     fn default() -> Self {
-        FitSpec {
+        FitJob {
             name: String::new(),
-            algo: Algo::Lars,
             dataset: "tiny".to_string(),
-            t: 16,
-            b: 1,
-            p: 4,
             seed: 42,
+            spec: FitSpec::new(Algorithm::Lars).t(16),
         }
     }
 }
 
-impl FitSpec {
+impl FitJob {
     fn meta(&self) -> ModelMeta {
         ModelMeta {
             name: self.name.clone(),
-            algo: self.algo.name().to_string(),
+            algo: self.spec.algorithm.name().to_string(),
             dataset: self.dataset.clone(),
-            t: self.t,
-            b: self.b,
-            // Normalized the same way run_fit normalizes it, so the
-            // warm-start family matches what actually gets fitted.
-            p: self.p.max(1).next_power_of_two(),
+            t: self.spec.t,
+            b: self.spec.algorithm.block(),
+            // Normalized the same way the fit dispatch normalizes it,
+            // so the warm-start family matches what actually gets
+            // fitted.
+            p: self.spec.effective_ranks(),
             seed: self.seed,
+            stop: String::new(),
+            spec: self.spec.encode(),
         }
     }
 }
@@ -98,7 +97,7 @@ impl JobState {
 }
 
 enum Work {
-    Job(u64, FitSpec),
+    Job(u64, FitJob),
     Shutdown,
 }
 
@@ -169,12 +168,12 @@ impl FitQueue {
 
     /// Enqueue a job; returns its id immediately. After shutdown the
     /// job is marked Failed instead of queued.
-    pub fn submit(&self, spec: FitSpec) -> u64 {
+    pub fn submit(&self, job: FitJob) -> u64 {
         let id = self.next_job.fetch_add(1, Ordering::Relaxed);
         self.shared.states.lock().unwrap().insert(id, JobState::Queued);
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
         let sent = !self.stopped.load(Ordering::SeqCst)
-            && self.tx.lock().unwrap().send(Work::Job(id, spec)).is_ok();
+            && self.tx.lock().unwrap().send(Work::Job(id, job)).is_ok();
         if !sent {
             self.fail_job(id, "fit queue is shut down");
         }
@@ -298,46 +297,23 @@ fn set_state(shared: &Shared, job: u64, state: JobState) {
     shared.cv.notify_all();
 }
 
-/// Execute one fit: dataset lookup → warm-start check → fit →
-/// register. Returns (model id, warm-reused?).
-fn run_fit(registry: &Arc<ModelRegistry>, spec: &FitSpec) -> Result<(u64, bool)> {
-    let meta = spec.meta();
-    if let Some(rec) = registry.find_warm(&meta, spec.t) {
+/// Execute one fit: dataset lookup → warm-start check → estimator API
+/// with a snapshot observer → register. Returns (model id,
+/// warm-reused?).
+fn run_fit(registry: &Arc<ModelRegistry>, job: &FitJob) -> Result<(u64, bool)> {
+    let mut meta = job.meta();
+    if let Some(rec) = registry.find_warm(&meta, job.spec.t) {
         return Ok((rec.id, true));
     }
-    let ds = datasets::by_name(&spec.dataset, spec.seed)
-        .ok_or_else(|| crate::anyhow!("unknown dataset '{}'", spec.dataset))?;
-    let p = spec.p.max(1).next_power_of_two();
-    let snap = match spec.algo {
-        Algo::Lars => {
-            let (_, snap) =
-                lars_with_snapshot(&ds.a, &ds.b, &LarsOptions { t: spec.t, ..Default::default() });
-            snap
-        }
-        Algo::Blars => {
-            let mut cluster = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
-            let (_, snap) = blars_with_snapshot(
-                &ds.a,
-                &ds.b,
-                &BlarsOptions { t: spec.t, b: spec.b, ..Default::default() },
-                &mut cluster,
-            );
-            snap
-        }
-        Algo::Tblars => {
-            let parts = partition::balanced_col_partition(&ds.a, p);
-            let mut cluster = SimCluster::new(p, HwParams::default(), ExecMode::Sequential);
-            let (_, snap) = tblars_with_snapshot(
-                &ds.a,
-                &ds.b,
-                &parts,
-                &TblarsOptions { t: spec.t, b: spec.b, ..Default::default() },
-                &mut cluster,
-            );
-            snap
-        }
-    };
-    Ok((registry.insert(meta, snap), false))
+    let ds = datasets::by_name(&job.dataset, job.seed)
+        .ok_or_else(|| crate::anyhow!("unknown dataset '{}'", job.dataset))?;
+    let mut snap = SnapshotObserver::new();
+    let result = job.spec.fit(&ds.a, &ds.b, &mut snap)?;
+    meta.stop = result.output.stop.word().to_string();
+    // on_complete always fires when fit() returns Ok, so the snapshot
+    // is always captured.
+    let snapshot = snap.into_snapshot().expect("snapshot observer ran");
+    Ok((registry.insert(meta, snapshot), false))
 }
 
 #[cfg(test)]
@@ -348,10 +324,14 @@ mod tests {
         FitQueue::new(Arc::new(ModelRegistry::new(16)), 2)
     }
 
+    fn lars_job(t: usize) -> FitJob {
+        FitJob { spec: FitSpec::new(Algorithm::Lars).t(t), ..Default::default() }
+    }
+
     #[test]
     fn fit_job_completes_and_registers() {
         let q = queue();
-        let job = q.submit(FitSpec { t: 6, ..Default::default() });
+        let job = q.submit(lars_job(6));
         let state = q.wait(job, Duration::from_secs(60)).expect("job known");
         let (model, reused) = match state {
             JobState::Done { model, reused, .. } => (model, reused),
@@ -361,18 +341,20 @@ mod tests {
         let rec = q.shared.registry.get(model).expect("model registered");
         assert_eq!(rec.snapshot.max_support(), 6);
         assert_eq!(rec.meta.dataset, "tiny");
+        assert_eq!(rec.meta.stop, "target_reached", "stop reason lands in metadata");
+        assert!(rec.meta.spec.contains("algo=lars"), "{}", rec.meta.spec);
     }
 
     #[test]
     fn second_smaller_fit_is_warm_reused() {
         let q = queue();
-        let j1 = q.submit(FitSpec { t: 8, ..Default::default() });
+        let j1 = q.submit(lars_job(8));
         let s1 = q.wait(j1, Duration::from_secs(60)).unwrap();
         let m1 = match s1 {
             JobState::Done { model, .. } => model,
             other => panic!("first fit should finish: {other:?}"),
         };
-        let j2 = q.submit(FitSpec { t: 4, ..Default::default() });
+        let j2 = q.submit(lars_job(4));
         let s2 = q.wait(j2, Duration::from_secs(60)).unwrap();
         let (m2, reused) = match s2 {
             JobState::Done { model, reused, .. } => (model, reused),
@@ -385,7 +367,7 @@ mod tests {
     #[test]
     fn unknown_dataset_fails_cleanly() {
         let q = queue();
-        let job = q.submit(FitSpec { dataset: "no-such-data".into(), ..Default::default() });
+        let job = q.submit(FitJob { dataset: "no-such-data".into(), ..Default::default() });
         let state = q.wait(job, Duration::from_secs(60)).unwrap();
         let error = match state {
             JobState::Failed { error } => error,
@@ -396,18 +378,46 @@ mod tests {
     }
 
     #[test]
-    fn blars_and_tblars_fit_through_the_queue() {
+    fn invalid_spec_fails_cleanly_instead_of_panicking() {
         let q = queue();
-        let jb = q.submit(FitSpec { algo: Algo::Blars, t: 6, b: 2, ..Default::default() });
-        let jt = q.submit(FitSpec { algo: Algo::Tblars, t: 6, b: 2, ..Default::default() });
-        for job in [jb, jt] {
+        let job = q.submit(FitJob {
+            spec: FitSpec::new(Algorithm::Blars { b: 0 }).t(6),
+            ..Default::default()
+        });
+        let state = q.wait(job, Duration::from_secs(60)).unwrap();
+        assert!(
+            matches!(state, JobState::Failed { .. }),
+            "zero block size must fail the job, not kill the worker: {state:?}"
+        );
+        // The worker thread survived; a valid job still completes.
+        let ok = q.submit(lars_job(4));
+        let state = q.wait(ok, Duration::from_secs(60)).unwrap();
+        assert!(matches!(state, JobState::Done { .. }), "{state:?}");
+    }
+
+    #[test]
+    fn blars_tblars_and_lasso_fit_through_the_queue() {
+        let q = queue();
+        let jb = q.submit(FitJob {
+            spec: FitSpec::new(Algorithm::Blars { b: 2 }).t(6).ranks(4),
+            ..Default::default()
+        });
+        let jt = q.submit(FitJob {
+            spec: FitSpec::new(Algorithm::TBlars { b: 2, parts: 4 }).t(6),
+            ..Default::default()
+        });
+        let jl = q.submit(FitJob {
+            spec: FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-8 }).t(6),
+            ..Default::default()
+        });
+        for job in [jb, jt, jl] {
             let state = q.wait(job, Duration::from_secs(120)).unwrap();
             assert!(
                 matches!(state, JobState::Done { .. }),
                 "job {job} should finish: {state:?}"
             );
         }
-        assert_eq!(q.stats().completed, 2);
+        assert_eq!(q.stats().completed, 3);
     }
 
     #[test]

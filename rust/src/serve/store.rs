@@ -47,6 +47,14 @@ pub struct ModelMeta {
     pub p: usize,
     /// Fit seed.
     pub seed: u64,
+    /// Why the fitted path ended
+    /// ([`crate::lars::StopReason::word`]; "" for ad-hoc inserts) —
+    /// surfaced through `/models` so operators can tell a completed
+    /// path from a saturated or rank-deficient one.
+    pub stop: String,
+    /// Canonical [`crate::fit::FitSpec::encode`] string of the fit
+    /// ("" for ad-hoc inserts).
+    pub spec: String,
 }
 
 impl ModelMeta {
@@ -61,21 +69,54 @@ impl ModelMeta {
             b: 1,
             p: 1,
             seed: 0,
+            stop: String::new(),
+            spec: String::new(),
         }
     }
 
     /// Identity used for versioning and warm-start reuse: two fits of
     /// the same dataset with the same algorithm, block size, rank
-    /// count and seed belong to the same family (their paths are
-    /// prefixes of each other — `p` matters because the T-bLARS
-    /// tournament selects against the `p`-way column partition). The
-    /// empty dataset never forms a family.
-    pub fn family_key(&self) -> Option<(&str, &str, usize, usize, u64)> {
-        if self.dataset.is_empty() {
-            None
-        } else {
-            Some((self.dataset.as_str(), self.algo.as_str(), self.b, self.p, self.seed))
+    /// count, seed, **and non-`t` spec knobs** belong to the same
+    /// family (their paths are prefixes of each other — `p` matters
+    /// because the T-bLARS tournament selects against the `p`-way
+    /// column partition, and the canonical spec string matters because
+    /// knobs like `tol` or `partition_seed` change which columns a fit
+    /// selects; only `t`, the path length, is stripped). The empty
+    /// dataset never forms a family, and neither do LASSO fits: their
+    /// paths are truncated by the λ floor rather than by `t`, so a
+    /// stored path covering `t` columns is not necessarily a prefix of
+    /// a deeper fit.
+    pub fn family_key(&self) -> Option<String> {
+        if self.dataset.is_empty() || self.algo == "lasso" {
+            return None;
         }
+        // The encoded FitSpec minus the tokens that cannot change the
+        // fitted path: `t=` (the path length — a longer path of the
+        // same family covers a shorter one), `ranks=`/`parts=` (raw
+        // request values; the normalized count the fit actually uses
+        // is the `p` field below, so keeping them would fragment
+        // families that fit identically, e.g. p=5 vs p=8), and `mode=`
+        // (threaded and sequential execution are bit-identical by the
+        // crate's determinism contract).
+        let spec_knobs: Vec<&str> = self
+            .spec
+            .split_whitespace()
+            .filter(|tok| {
+                !tok.starts_with("t=")
+                    && !tok.starts_with("ranks=")
+                    && !tok.starts_with("parts=")
+                    && !tok.starts_with("mode=")
+            })
+            .collect();
+        Some(format!(
+            "{}|{}|{}|{}|{}|{}",
+            self.dataset,
+            self.algo,
+            self.b,
+            self.p,
+            self.seed,
+            spec_knobs.join(" ")
+        ))
     }
 
     /// Display name, falling back to a generated one.
@@ -205,7 +246,7 @@ impl ModelRegistry {
             Some(key) => {
                 g.models
                     .values()
-                    .filter(|r| r.meta.family_key() == Some(key))
+                    .filter(|r| r.meta.family_key().as_deref() == Some(key.as_str()))
                     .map(|r| r.version)
                     .max()
                     .unwrap_or(0)
@@ -298,7 +339,10 @@ impl ModelRegistry {
         let rec = g
             .models
             .values()
-            .filter(|r| r.meta.family_key() == Some(key) && r.snapshot.max_support() >= t)
+            .filter(|r| {
+                r.meta.family_key().as_deref() == Some(key.as_str())
+                    && r.snapshot.max_support() >= t
+            })
             .max_by_key(|r| r.version)
             .cloned()?;
         let id = rec.id;
@@ -375,16 +419,19 @@ impl ModelRegistry {
 //
 //   b"CALP" | u32 format | u64 id | u32 version | u64 created_unix
 //   | str name | str algo | str dataset | u64 t | u64 b | u64 p
-//   | u64 seed | u64 n | u64 nsteps
+//   | u64 seed | str stop | str spec          (stop/spec: format ≥ 2)
+//   | u64 n | u64 nsteps
 //   | nsteps × ( f64 lambda | f64 residual_norm | u64 k
 //                | k × u64 support | k × f64 coefs )
 //
 // where `str` is u32 length + UTF-8 bytes. f64s round-trip bit-exactly
 // (to_le_bytes/from_le_bytes), which the serving exactness contract
-// depends on.
+// depends on. Format 1 files (pre-estimator-API) still load; their
+// stop/spec metadata comes back empty.
 
 const MAGIC: &[u8; 4] = b"CALP";
-const FORMAT: u32 = 1;
+const FORMAT: u32 = 2;
+const MIN_FORMAT: u32 = 1;
 /// Sanity caps for corrupt files (not real limits).
 const MAX_STR: u32 = 1 << 16;
 const MAX_STEPS: u64 = 1 << 24;
@@ -458,6 +505,8 @@ pub fn write_record(w: &mut impl Write, rec: &ModelRecord) -> Result<()> {
     w_u64(w, rec.meta.b as u64)?;
     w_u64(w, rec.meta.p as u64)?;
     w_u64(w, rec.meta.seed)?;
+    w_str(w, &rec.meta.stop)?;
+    w_str(w, &rec.meta.spec)?;
     w_u64(w, rec.snapshot.n as u64)?;
     w_u64(w, rec.snapshot.steps.len() as u64)?;
     for step in &rec.snapshot.steps {
@@ -482,8 +531,8 @@ pub fn read_record(r: &mut impl Read) -> Result<ModelRecord> {
         bail!("not a calars model file (bad magic)");
     }
     let format = r_u32(r)?;
-    if format != FORMAT {
-        bail!("unsupported registry format {format} (this build reads {FORMAT})");
+    if !(MIN_FORMAT..=FORMAT).contains(&format) {
+        bail!("unsupported registry format {format} (this build reads {MIN_FORMAT}..={FORMAT})");
     }
     let id = r_u64(r)?;
     let version = r_u32(r)?;
@@ -495,6 +544,11 @@ pub fn read_record(r: &mut impl Read) -> Result<ModelRecord> {
     let b = r_u64(r)? as usize;
     let p = r_u64(r)? as usize;
     let seed = r_u64(r)?;
+    let (stop, spec) = if format >= 2 {
+        (r_str(r)?, r_str(r)?)
+    } else {
+        (String::new(), String::new())
+    };
     let n64 = r_u64(r)?;
     if n64 > MAX_DIM {
         bail!("feature dimension {n64} exceeds cap");
@@ -531,7 +585,7 @@ pub fn read_record(r: &mut impl Read) -> Result<ModelRecord> {
     Ok(ModelRecord {
         id,
         version,
-        meta: ModelMeta { name, algo, dataset, t, b, p, seed },
+        meta: ModelMeta { name, algo, dataset, t, b, p, seed, stop, spec },
         snapshot: PathSnapshot { n, steps },
         created_unix,
     })
@@ -562,6 +616,8 @@ mod tests {
             b: 1,
             p: 4,
             seed: 7,
+            stop: "target_reached".into(),
+            spec: format!("algo=lars t={t} tol=0.000000000001"),
         }
     }
 
@@ -625,6 +681,99 @@ mod tests {
         assert_eq!(back.version, rec.version);
         assert_eq!(back.meta, rec.meta);
         assert_eq!(back.snapshot, rec.snapshot, "f64 payload must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn raw_rank_tokens_do_not_fragment_families() {
+        // p=5 and p=8 requests both fit with 8 effective ranks (the
+        // normalized `p` field): the raw ranks= token must not split
+        // the family and defeat warm-start reuse.
+        let reg = ModelRegistry::new(8);
+        let mut first = meta("tiny", 6);
+        first.algo = "blars".into();
+        first.spec = "algo=blars t=6 tol=0.000000000001 b=1 ranks=5".into();
+        reg.insert(first, snap(10, 6));
+        let mut second = meta("tiny", 4);
+        second.algo = "blars".into();
+        second.spec = "algo=blars t=4 tol=0.000000000001 b=1 ranks=8".into();
+        assert!(
+            reg.find_warm(&second, 4).is_some(),
+            "normalized-equal rank requests share a family"
+        );
+    }
+
+    #[test]
+    fn differing_non_t_spec_knobs_break_the_family() {
+        // Same dataset/algo/b/p/seed but a different tol (or any other
+        // non-`t` spec knob) selects a different path — it must not be
+        // warm-reused.
+        let reg = ModelRegistry::new(8);
+        reg.insert(meta("tiny", 6), snap(10, 6));
+        let mut loose = meta("tiny", 4);
+        loose.spec = "algo=lars t=4 tol=0.5".to_string();
+        assert!(
+            reg.find_warm(&loose, 4).is_none(),
+            "different tol must be a different family"
+        );
+        let mut same = meta("tiny", 4);
+        same.spec = "algo=lars t=4 tol=0.000000000001".into();
+        assert!(reg.find_warm(&same, 4).is_some(), "only t may differ within a family");
+    }
+
+    #[test]
+    fn lasso_fits_never_form_a_warm_family() {
+        let reg = ModelRegistry::new(8);
+        let mut m = meta("tiny", 6);
+        m.algo = "lasso".into();
+        reg.insert(m.clone(), snap(10, 6));
+        assert!(
+            reg.find_warm(&m, 4).is_none(),
+            "λ-truncated paths must not be warm-reused"
+        );
+    }
+
+    #[test]
+    fn reads_format_1_files_with_empty_stop_and_spec() {
+        // Hand-build a format-1 record (no stop/spec strings).
+        let rec = ModelRecord {
+            id: 5,
+            version: 1,
+            meta: meta("legacy", 2),
+            snapshot: snap(6, 2),
+            created_unix: 1_700_000_000,
+        };
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, 1).unwrap(); // format 1
+        w_u64(&mut buf, rec.id).unwrap();
+        w_u32(&mut buf, rec.version).unwrap();
+        w_u64(&mut buf, rec.created_unix).unwrap();
+        w_str(&mut buf, &rec.meta.name).unwrap();
+        w_str(&mut buf, &rec.meta.algo).unwrap();
+        w_str(&mut buf, &rec.meta.dataset).unwrap();
+        w_u64(&mut buf, rec.meta.t as u64).unwrap();
+        w_u64(&mut buf, rec.meta.b as u64).unwrap();
+        w_u64(&mut buf, rec.meta.p as u64).unwrap();
+        w_u64(&mut buf, rec.meta.seed).unwrap();
+        w_u64(&mut buf, rec.snapshot.n as u64).unwrap();
+        w_u64(&mut buf, rec.snapshot.steps.len() as u64).unwrap();
+        for step in &rec.snapshot.steps {
+            w_f64(&mut buf, step.lambda).unwrap();
+            w_f64(&mut buf, step.residual_norm).unwrap();
+            w_u64(&mut buf, step.support.len() as u64).unwrap();
+            for &j in &step.support {
+                w_u64(&mut buf, j as u64).unwrap();
+            }
+            for &v in &step.coefs {
+                w_f64(&mut buf, v).unwrap();
+            }
+        }
+        let back = read_record(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.id, rec.id);
+        assert_eq!(back.snapshot, rec.snapshot);
+        assert_eq!(back.meta.dataset, "legacy");
+        assert_eq!(back.meta.stop, "", "format-1 files have no stop reason");
+        assert_eq!(back.meta.spec, "");
     }
 
     #[test]

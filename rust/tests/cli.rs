@@ -49,6 +49,43 @@ fn run_tblars_threaded_mode() {
 }
 
 #[test]
+fn run_lasso_reports_path() {
+    let out = calars(&[
+        "run", "--algo", "lasso", "--dataset", "tiny", "--t", "8", "--lambda-min", "1e-6",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("lasso path:"), "{s}");
+    assert!(s.contains("breakpoints"), "{s}");
+}
+
+#[test]
+fn run_omp_baseline_through_fit_api() {
+    let out = calars(&["run", "--algo", "omp", "--dataset", "tiny", "--t", "6"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("selected 6 columns"), "{s}");
+}
+
+#[test]
+fn run_unknown_algo_fails_cleanly() {
+    let out = calars(&["run", "--algo", "ridge", "--dataset", "tiny"]);
+    assert!(!out.status.success());
+    let s = String::from_utf8_lossy(&out.stderr);
+    assert!(s.contains("unknown algorithm"), "{s}");
+}
+
+#[test]
+fn run_progress_flag_emits_iteration_lines() {
+    let out = calars(&[
+        "run", "--algo", "lars", "--dataset", "tiny", "--t", "5", "--progress",
+    ]);
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stderr);
+    assert!(s.contains("[fit]"), "progress lines go to stderr: {s}");
+}
+
+#[test]
 fn exp_table3_quick() {
     let out = calars(&["exp", "table3", "--quick"]);
     assert!(out.status.success());

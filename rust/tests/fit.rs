@@ -1,0 +1,466 @@
+//! The unified `calars::fit` estimator API, end to end:
+//!
+//! * **Shim equivalence** (acceptance criterion): for every member of
+//!   the fitter family, the deprecated free-function shim and the new
+//!   `FitSpec`/`Fitter::fit` path produce **bit-identical** outputs;
+//! * **Observer semantics** — snapshot capture, early stop, metrics
+//!   collection, multi-observer composition;
+//! * **StopReason reporting** — each fitter driven deliberately into
+//!   `Saturated`, `PoolExhausted`, and `RankDeficient` terminal states
+//!   and reporting them in `FitResult` instead of panicking;
+//! * **Typed errors** — invalid specs and inputs come back as
+//!   `ErrorKind::InvalidSpec`, never as a panic.
+#![allow(deprecated)] // the whole point: shims vs the new API
+
+use calars::cluster::{ExecMode, HwParams, SimCluster};
+use calars::data::synthetic::{generate, Synthetic, SyntheticSpec};
+use calars::data::{datasets, partition};
+use calars::error::ErrorKind;
+use calars::fit::{
+    Algorithm, EarlyStop, FitSpec, Fitter, MetricsSink, MultiObserver, ProgressObserver,
+    SnapshotObserver,
+};
+use calars::lars::blars::{blars, BlarsOptions};
+use calars::lars::lasso_lars::lasso_path;
+use calars::lars::path::PathSnapshot;
+use calars::lars::serial::{lars, LarsOptions};
+use calars::lars::tblars::{tblars, TblarsOptions};
+use calars::lars::{LarsOutput, StopReason};
+use calars::linalg::{DenseMatrix, Matrix};
+use calars::proptest_lite::{check, Config};
+use calars::rng::Pcg64;
+
+fn random_problem(rng: &mut Pcg64, size: usize) -> Synthetic {
+    let m = 30 + size * 6;
+    let n = 20 + size * 8;
+    let spec = SyntheticSpec {
+        m,
+        n,
+        density: if rng.uniform() < 0.5 { 1.0 } else { 0.3 },
+        col_skew: rng.uniform_range(0.0, 1.2),
+        k_true: 3 + size / 2,
+        noise: rng.uniform_range(0.0, 0.1),
+    };
+    generate(&spec, rng.next_u64())
+}
+
+fn bit_identical(old: &LarsOutput, new: &LarsOutput) -> Result<(), String> {
+    if old.selected != new.selected {
+        return Err(format!("selected differ: {:?} vs {:?}", old.selected, new.selected));
+    }
+    if old.cols_at_iter != new.cols_at_iter {
+        return Err("cols_at_iter differ".into());
+    }
+    if old.stop != new.stop {
+        return Err(format!("stop reasons differ: {:?} vs {:?}", old.stop, new.stop));
+    }
+    if old.residual_norms.len() != new.residual_norms.len() {
+        return Err("residual trace length differs".into());
+    }
+    for (i, (a, b)) in old.residual_norms.iter().zip(&new.residual_norms).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("residual[{i}] bits differ: {a:?} vs {b:?}"));
+        }
+    }
+    if old.y.len() != new.y.len() {
+        return Err("y length differs".into());
+    }
+    for (i, (a, b)) in old.y.iter().zip(&new.y).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!("y[{i}] bits differ: {a:?} vs {b:?}"));
+        }
+    }
+    Ok(())
+}
+
+// ── Shim ≡ new API, bit for bit, per algorithm ──────────────────────
+
+#[test]
+fn prop_lars_shim_equals_fit_api() {
+    check(Config { cases: 18, seed: 0xF17_A }, random_problem, |s| {
+        let t = 8.min(s.a.ncols() / 2).max(2);
+        let old = lars(&s.a, &s.b, &LarsOptions { t, ..Default::default() });
+        let new = FitSpec::new(Algorithm::Lars)
+            .t(t)
+            .run(&s.a, &s.b)
+            .map_err(|e| format!("fit failed: {e:#}"))?;
+        bit_identical(&old, &new.output)
+    });
+}
+
+#[test]
+fn prop_blars_shim_equals_fit_api() {
+    check(Config { cases: 14, seed: 0xF17_B }, random_problem, |s| {
+        let t = 9.min(s.a.ncols() / 2).max(3);
+        let mut cluster = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+        let old = blars(&s.a, &s.b, &BlarsOptions { t, b: 3, ..Default::default() }, &mut cluster);
+        let new = FitSpec::new(Algorithm::Blars { b: 3 })
+            .t(t)
+            .ranks(4)
+            .run(&s.a, &s.b)
+            .map_err(|e| format!("fit failed: {e:#}"))?;
+        if new.sim.is_none() {
+            return Err("bLARS must report cluster telemetry".into());
+        }
+        bit_identical(&old, &new.output)
+    });
+}
+
+#[test]
+fn prop_tblars_shim_equals_fit_api() {
+    check(Config { cases: 10, seed: 0xF17_C }, random_problem, |s| {
+        let t = 8.min(s.a.ncols() / 2).max(2);
+        let parts = partition::balanced_col_partition(&s.a, 4);
+        let mut cluster = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
+        let old =
+            tblars(&s.a, &s.b, &parts, &TblarsOptions { t, b: 2, ..Default::default() }, &mut cluster);
+        let new = FitSpec::new(Algorithm::TBlars { b: 2, parts: 4 })
+            .t(t)
+            .run(&s.a, &s.b)
+            .map_err(|e| format!("fit failed: {e:#}"))?;
+        bit_identical(&old, &new.output)
+    });
+}
+
+#[test]
+fn prop_lasso_shim_equals_fit_api() {
+    check(Config { cases: 14, seed: 0xF17_D }, random_problem, |s| {
+        let t = 8.min(s.a.ncols() / 2).max(2);
+        let old = lasso_path(&s.a, &s.b, t, 1e-6);
+        // The shim fixes the historical tol = 1e-10; match it so the
+        // comparison is bit-for-bit by construction.
+        let new = FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-6 })
+            .t(t)
+            .tol(1e-10)
+            .run(&s.a, &s.b)
+            .map_err(|e| format!("fit failed: {e:#}"))?;
+        let path = new.lasso.as_ref().ok_or("missing lasso path")?;
+        if old.drops != path.drops {
+            return Err(format!("drop counts differ: {} vs {}", old.drops, path.drops));
+        }
+        if old.breakpoints.len() != path.breakpoints.len() {
+            return Err("breakpoint counts differ".into());
+        }
+        for (i, (a, b)) in old.breakpoints.iter().zip(&path.breakpoints).enumerate() {
+            if a.lambda.to_bits() != b.lambda.to_bits() {
+                return Err(format!("λ[{i}] bits differ"));
+            }
+            if a.support != b.support {
+                return Err(format!("support[{i}] differs"));
+            }
+            for (x, y) in a.x.iter().zip(&b.x) {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("x[{i}] bits differ"));
+                }
+            }
+            if a.residual_norm.to_bits() != b.residual_norm.to_bits() {
+                return Err(format!("residual[{i}] bits differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_baseline_shims_equal_fit_api() {
+    use calars::baselines::forward_selection::forward_selection;
+    use calars::baselines::omp::omp;
+    check(Config { cases: 14, seed: 0xF17_E }, random_problem, |s| {
+        let t = 6.min(s.a.ncols() / 2).max(2);
+
+        let old = forward_selection(&s.a, &s.b, t);
+        let new = FitSpec::new(Algorithm::ForwardSelection)
+            .t(t)
+            .run(&s.a, &s.b)
+            .map_err(|e| format!("fs fit failed: {e:#}"))?;
+        if old.selected != new.output.selected {
+            return Err("fs selections differ".into());
+        }
+        for (a, b) in old.residual_norms.iter().zip(&new.output.residual_norms) {
+            if a.to_bits() != b.to_bits() {
+                return Err("fs residual bits differ".into());
+            }
+        }
+        let coefs = new.coefs.as_ref().ok_or("fs must report coefficients")?;
+        for (a, b) in old.coefs.iter().zip(coefs) {
+            if a.to_bits() != b.to_bits() {
+                return Err("fs coef bits differ".into());
+            }
+        }
+
+        let old = omp(&s.a, &s.b, t);
+        let new = FitSpec::new(Algorithm::Omp)
+            .t(t)
+            .run(&s.a, &s.b)
+            .map_err(|e| format!("omp fit failed: {e:#}"))?;
+        if old.selected != new.output.selected {
+            return Err("omp selections differ".into());
+        }
+        for (a, b) in old.residual_norms.iter().zip(&new.output.residual_norms) {
+            if a.to_bits() != b.to_bits() {
+                return Err("omp residual bits differ".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ── Observer semantics ──────────────────────────────────────────────
+
+#[test]
+fn snapshot_observer_matches_from_fit() {
+    let d = datasets::tiny(1);
+    let mut obs = SnapshotObserver::new();
+    let result = FitSpec::new(Algorithm::Lars).t(8).fit(&d.a, &d.b, &mut obs).unwrap();
+    let snap = obs.into_snapshot().expect("snapshot captured");
+    let direct = PathSnapshot::from_fit(&d.a, &d.b, &result.output.selected);
+    assert_eq!(snap, direct, "observer snapshot must equal the direct computation");
+    assert_eq!(snap.max_support(), 8);
+}
+
+#[test]
+fn early_stop_caps_iterations() {
+    let d = datasets::tiny(2);
+    let mut stopper = EarlyStop::after_iterations(3);
+    let result = FitSpec::new(Algorithm::Lars).t(15).fit(&d.a, &d.b, &mut stopper).unwrap();
+    assert_eq!(result.output.stop, StopReason::EarlyStopped);
+    assert!(
+        result.output.selected.len() < 15,
+        "early stop must end before the target: {} columns",
+        result.output.selected.len()
+    );
+}
+
+#[test]
+fn early_stop_at_residual_target() {
+    let d = datasets::tiny(3);
+    // ‖b‖ shrinks along the path; a loose target triggers quickly.
+    let full = FitSpec::new(Algorithm::Lars).t(15).run(&d.a, &d.b).unwrap();
+    let target = full.output.residual_norms[0] * 0.9;
+    let mut stopper = EarlyStop::at_residual(target);
+    let result = FitSpec::new(Algorithm::Lars).t(15).fit(&d.a, &d.b, &mut stopper).unwrap();
+    assert!(
+        *result.output.residual_norms.last().unwrap() <= target,
+        "stop must fire at or below the residual target"
+    );
+    assert!(result.output.selected.len() <= full.output.selected.len());
+}
+
+#[test]
+fn early_stop_works_across_the_family() {
+    let d = datasets::tiny(4);
+    for algorithm in [
+        Algorithm::Blars { b: 2 },
+        Algorithm::TBlars { b: 2, parts: 2 },
+        Algorithm::LassoLars { lambda_min: 1e-9 },
+        Algorithm::ForwardSelection,
+        Algorithm::Omp,
+    ] {
+        let mut stopper = EarlyStop::after_iterations(2);
+        let result = FitSpec::new(algorithm)
+            .t(12)
+            .ranks(2)
+            .fit(&d.a, &d.b, &mut stopper)
+            .unwrap_or_else(|e| panic!("{algorithm:?}: {e:#}"));
+        assert_eq!(
+            result.output.stop,
+            StopReason::EarlyStopped,
+            "{algorithm:?} must honor the observer"
+        );
+        assert!(
+            result.output.selected.len() < 12,
+            "{algorithm:?} stopped late: {}",
+            result.output.selected.len()
+        );
+    }
+}
+
+#[test]
+fn metrics_sink_collects_the_iteration_trace() {
+    let d = datasets::tiny(5);
+    let mut sink = MetricsSink::new();
+    let result = FitSpec::new(Algorithm::Blars { b: 3 })
+        .t(12)
+        .ranks(4)
+        .fit(&d.a, &d.b, &mut sink)
+        .unwrap();
+    assert!(sink.iterations > 0);
+    assert_eq!(sink.residual_norms.len(), sink.iterations);
+    assert_eq!(sink.gammas.len(), sink.iterations);
+    assert_eq!(sink.support_sizes.len(), sink.iterations);
+    for w in sink.support_sizes.windows(2) {
+        assert!(w[1] >= w[0], "support must grow monotonically");
+    }
+    assert_eq!(sink.stop, Some(result.output.stop));
+    assert!(sink.wall_secs >= 0.0);
+    assert_eq!(*sink.support_sizes.last().unwrap(), result.output.selected.len());
+}
+
+#[test]
+fn multi_observer_composes() {
+    let d = datasets::tiny(6);
+    let mut snap = SnapshotObserver::new();
+    let mut sink = MetricsSink::new();
+    let mut progress = ProgressObserver::every(1000); // quiet
+    let result = {
+        let mut multi = MultiObserver::new()
+            .with(&mut snap)
+            .with(&mut sink)
+            .with(&mut progress);
+        FitSpec::new(Algorithm::Lars).t(6).fit(&d.a, &d.b, &mut multi).unwrap()
+    };
+    assert!(snap.snapshot().is_some(), "snapshot observer ran");
+    assert!(sink.iterations > 0, "metrics observer ran");
+    assert_eq!(result.output.selected.len(), 6);
+}
+
+#[test]
+fn multi_observer_any_stop_wins() {
+    let d = datasets::tiny(7);
+    let mut sink = MetricsSink::new();
+    let mut stopper = EarlyStop::after_iterations(2);
+    let result = {
+        let mut multi = MultiObserver::new().with(&mut sink).with(&mut stopper);
+        FitSpec::new(Algorithm::Lars).t(15).fit(&d.a, &d.b, &mut multi).unwrap()
+    };
+    assert_eq!(result.output.stop, StopReason::EarlyStopped);
+    assert!(sink.iterations >= 2, "other observers still see every event");
+}
+
+// ── StopReason reporting (satellite) ────────────────────────────────
+
+/// A 16×6 design whose first two columns are an exact duplicate pair
+/// with *exactly* unit norm: entries ±0.25 over 16 rows, so every Gram
+/// entry the pair touches is 1.0 bit-exactly and the duplicate's
+/// Cholesky pivot cancels to exactly 0.0 — the rank-deficiency
+/// exclusion is deterministic, not at the mercy of last-ulp rounding.
+/// The response loads every independent column (0, 2, 3, 4, 5) so a
+/// fit must walk the whole pool before it can stop.
+fn duplicated_design() -> (Matrix, Vec<f64>) {
+    let m = 16usize;
+    let col_pair = |i: usize| if i % 4 == 0 { -0.25 } else { 0.25 };
+    let col_other = |i: usize, j: usize| ((i * 7 + j * 13) as f64).sin() * 0.3;
+    let d = DenseMatrix::from_fn(m, 6, |i, j| match j {
+        0 | 1 => col_pair(i),
+        _ => col_other(i, j),
+    });
+    let b: Vec<f64> = (0..m)
+        .map(|i| {
+            3.0 * col_pair(i)
+                + 0.9 * col_other(i, 2)
+                + 0.7 * col_other(i, 3)
+                + 0.5 * col_other(i, 4)
+                + 0.4 * col_other(i, 5)
+        })
+        .collect();
+    (Matrix::Dense(d), b)
+}
+
+#[test]
+fn saturated_reported_on_zero_response() {
+    let d = datasets::tiny_dense(10);
+    let zero = vec![0.0; d.a.nrows()];
+    let lars = FitSpec::new(Algorithm::Lars).t(5).run(&d.a, &zero).unwrap();
+    assert_eq!(lars.output.stop, StopReason::Saturated);
+    assert!(lars.output.selected.is_empty());
+    let blars = FitSpec::new(Algorithm::Blars { b: 2 }).t(5).ranks(2).run(&d.a, &zero).unwrap();
+    assert_eq!(blars.output.stop, StopReason::Saturated);
+}
+
+#[test]
+fn rank_deficient_reported_when_duplicates_block_the_target() {
+    // 6 columns, one an exact duplicate ⇒ only 5 independent. Asking
+    // for all 6 must end with RankDeficient (not a panic, not a lie).
+    let (a, b) = duplicated_design();
+    let result = FitSpec::new(Algorithm::Lars).t(6).run(&a, &b).unwrap();
+    assert_eq!(result.output.stop, StopReason::RankDeficient, "{:?}", result.output);
+    assert_eq!(result.output.selected.len(), 5, "all independent columns selected");
+
+    // bLARS with b = 2 hits the duplicate in its *initial* block (the
+    // pair carries the top-2 correlations) and excludes it there.
+    let result = FitSpec::new(Algorithm::Blars { b: 2 }).t(6).ranks(2).run(&a, &b).unwrap();
+    assert_eq!(result.output.stop, StopReason::RankDeficient, "{:?}", result.output);
+    assert_eq!(result.output.selected.len(), 5, "{:?}", result.output.selected);
+}
+
+#[test]
+fn rank_deficient_reported_by_lasso_on_duplicate_activation() {
+    // Exact duplicates share |correlation| at every λ, so both activate
+    // at λmax together and the active Gram is singular immediately.
+    let (a, b) = duplicated_design();
+    let result = FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-9 }).t(6).run(&a, &b).unwrap();
+    assert_eq!(result.output.stop, StopReason::RankDeficient, "{:?}", result.output.stop);
+}
+
+#[test]
+fn pool_exhausted_reported_by_tblars() {
+    // Ask the tournament for more columns than the duplicated design
+    // can supply: once every leaf's pool holds only duplicates of the
+    // selected model, every nomination round comes back empty.
+    let (a, b) = duplicated_design();
+    let result = FitSpec::new(Algorithm::TBlars { b: 2, parts: 2 }).t(6).run(&a, &b).unwrap();
+    assert_eq!(result.output.stop, StopReason::PoolExhausted, "{:?}", result.output);
+    assert!(result.output.selected.len() <= 5);
+}
+
+#[test]
+fn target_reached_is_the_happy_path_for_every_algorithm() {
+    let d = datasets::tiny(8);
+    for algorithm in [
+        Algorithm::Lars,
+        Algorithm::Blars { b: 2 },
+        Algorithm::TBlars { b: 2, parts: 4 },
+        Algorithm::ForwardSelection,
+        Algorithm::Omp,
+    ] {
+        let result = FitSpec::new(algorithm)
+            .t(6)
+            .ranks(4)
+            .run(&d.a, &d.b)
+            .unwrap_or_else(|e| panic!("{algorithm:?}: {e:#}"));
+        assert_eq!(
+            result.output.stop,
+            StopReason::TargetReached,
+            "{algorithm:?} on an easy problem"
+        );
+        assert_eq!(result.output.selected.len(), 6, "{algorithm:?}");
+    }
+}
+
+// ── Typed errors ────────────────────────────────────────────────────
+
+#[test]
+fn invalid_inputs_return_typed_errors_not_panics() {
+    let d = datasets::tiny(9);
+    let short = vec![0.0; d.a.nrows() - 1];
+    for algorithm in [
+        Algorithm::Lars,
+        Algorithm::Blars { b: 2 },
+        Algorithm::TBlars { b: 2, parts: 2 },
+        Algorithm::LassoLars { lambda_min: 1e-6 },
+        Algorithm::ForwardSelection,
+        Algorithm::Omp,
+    ] {
+        let err = FitSpec::new(algorithm).t(4).run(&d.a, &short).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec, "{algorithm:?}: {err:#}");
+    }
+    // Bad knobs are caught before any arithmetic.
+    let err = FitSpec::new(Algorithm::Blars { b: 0 }).t(4).run(&d.a, &d.b).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+    let err = FitSpec::new(Algorithm::Lars).t(0).run(&d.a, &d.b).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+}
+
+#[test]
+fn stop_reason_words_round_trip() {
+    for stop in [
+        StopReason::TargetReached,
+        StopReason::PoolExhausted,
+        StopReason::Saturated,
+        StopReason::RankDeficient,
+        StopReason::EarlyStopped,
+    ] {
+        assert_eq!(StopReason::from_word(stop.word()), Some(stop));
+    }
+    assert_eq!(StopReason::from_word("nope"), None);
+}

@@ -1,5 +1,10 @@
 //! Cross-module integration tests: the paper's qualitative claims as
 //! executable assertions, plus failure injection.
+//!
+//! Uses the deprecated free-function shims deliberately — they
+//! delegate to the `calars::fit` cores (bit-identity proven in
+//! `tests/fit.rs`), so these double as shim regression coverage.
+#![allow(deprecated)]
 
 use calars::baselines::forward_selection::forward_selection;
 use calars::cluster::{ExecMode, HwParams, SimCluster};

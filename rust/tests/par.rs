@@ -7,6 +7,11 @@
 //!   for LARS, bLARS (serial + cluster) and T-bLARS, dense and sparse,
 //!   via `par::with_pool` so all three thread counts run in one
 //!   process.
+//!
+//! The deprecated free-function shims are used deliberately here: they
+//! delegate to the same `calars::fit` cores (bit-identity is proven in
+//! `tests/fit.rs`), and exercising them keeps the shims covered.
+#![allow(deprecated)]
 
 use calars::cluster::{ExecMode, HwParams, SimCluster};
 use calars::data::{datasets, partition};
@@ -227,12 +232,14 @@ fn serving_batch_bit_identical_under_pool() {
     // The engine's exactness contract must survive pool execution: a
     // batched predict equals the unbatched one bit for bit, at any
     // thread count.
-    use calars::lars::serial::lars_with_snapshot;
+    use calars::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
     use calars::serve::{ModelMeta, ModelRegistry, PredictionEngine, Query, Selector};
     use std::sync::Arc;
 
     let d = datasets::tiny_dense(8);
-    let (_, snap) = lars_with_snapshot(&d.a, &d.b, &LarsOptions { t: 8, ..Default::default() });
+    let mut snap_obs = SnapshotObserver::new();
+    FitSpec::new(Algorithm::Lars).t(8).fit(&d.a, &d.b, &mut snap_obs).expect("fit");
+    let snap = snap_obs.into_snapshot().expect("snapshot captured");
     let n = d.a.ncols();
     let registry = Arc::new(ModelRegistry::new(4));
     let id = registry.insert(ModelMeta::named("par-test"), snap);

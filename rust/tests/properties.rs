@@ -1,5 +1,10 @@
 //! Property-based tests (via the in-repo `proptest_lite` harness) over
 //! the algorithmic invariants the paper proves or relies on.
+//!
+//! Uses the deprecated free-function shims deliberately — they
+//! delegate to the `calars::fit` cores (bit-identity proven in
+//! `tests/fit.rs`), so these double as shim regression coverage.
+#![allow(deprecated)]
 
 use calars::cluster::{ExecMode, HwParams, SimCluster};
 use calars::data::synthetic::{generate, Synthetic, SyntheticSpec};

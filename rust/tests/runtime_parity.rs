@@ -6,6 +6,7 @@
 //! compiled only with the `pjrt` cargo feature — without it there is no
 //! XLA client to test against.
 #![cfg(feature = "pjrt")]
+#![allow(deprecated)] // exercises the legacy shims alongside the runtime
 
 use calars::data::datasets;
 use calars::linalg::Matrix;

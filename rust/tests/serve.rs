@@ -3,9 +3,9 @@
 //! (property-tested), persistence, and the HTTP front end end to end.
 
 use calars::data::synthetic::{generate, SyntheticSpec};
+use calars::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
 use calars::lars::path::{densify, ls_coefficients, PathSnapshot};
-use calars::lars::serial::{lars_with_snapshot, LarsOptions};
-use calars::linalg::dot;
+use calars::linalg::{dot, Matrix};
 use calars::proptest_lite::{check, Config};
 use calars::rng::Pcg64;
 use calars::serve::{
@@ -14,6 +14,14 @@ use calars::serve::{
 };
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Snapshot a LARS fit through the estimator API (what the old
+/// `lars_with_snapshot` entry point did, now via `SnapshotObserver`).
+fn lars_snapshot(a: &Matrix, b: &[f64], t: usize) -> PathSnapshot {
+    let mut obs = SnapshotObserver::new();
+    FitSpec::new(Algorithm::Lars).t(t).fit(a, b, &mut obs).expect("fit succeeds");
+    obs.into_snapshot().expect("snapshot captured")
+}
 
 fn problem(rng: &mut Pcg64, size: usize) -> (calars::data::synthetic::Synthetic, usize) {
     let m = 30 + size * 5;
@@ -45,10 +53,7 @@ fn prop_served_predictions_bit_identical_to_direct_eval() {
             (s, t, queries)
         },
         |(s, t, queries)| {
-            let (_, snap) = lars_with_snapshot(&s.a, &s.b, &LarsOptions {
-                t: *t,
-                ..Default::default()
-            });
+            let snap = lars_snapshot(&s.a, &s.b, *t);
             let registry = Arc::new(ModelRegistry::new(4));
             let id = registry.insert(ModelMeta::named("prop"), snap.clone());
             let engine = PredictionEngine::new(registry, 32);
@@ -141,7 +146,7 @@ fn registry_persistence_round_trip_preserves_predictions() {
         &SyntheticSpec { m: 60, n: 30, density: 1.0, col_skew: 0.3, k_true: 5, noise: 0.02 },
         77,
     );
-    let (_, snap) = lars_with_snapshot(&s.a, &s.b, &LarsOptions { t: 8, ..Default::default() });
+    let snap = lars_snapshot(&s.a, &s.b, 8);
     let registry = Arc::new(ModelRegistry::new(8));
     let mut meta = ModelMeta::named("persisted");
     meta.dataset = "synthetic-77".into();
@@ -196,8 +201,7 @@ fn http_end_to_end_fit_predict_models_stats() {
     // Server-side predictions must match a local fit of the same
     // deterministic dataset, bit for bit (f64 Display round-trips).
     let ds = calars::data::datasets::by_name("tiny", 42).unwrap();
-    let (_, snap) =
-        lars_with_snapshot(&ds.a, &ds.b, &LarsOptions { t: 8, ..Default::default() });
+    let snap = lars_snapshot(&ds.a, &ds.b, 8);
     assert_eq!(dim, ds.a.ncols());
     let mut rng = Pcg64::new(9);
     let rows: Vec<Vec<f64>> = (0..5).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
@@ -316,7 +320,7 @@ fn lambda_interpolation_matches_manual_linear_blend() {
         &SyntheticSpec { m: 70, n: 25, density: 1.0, col_skew: 0.0, k_true: 4, noise: 0.05 },
         31,
     );
-    let (_, snap) = lars_with_snapshot(&s.a, &s.b, &LarsOptions { t: 6, ..Default::default() });
+    let snap = lars_snapshot(&s.a, &s.b, 6);
     let registry = Arc::new(ModelRegistry::new(4));
     let id = registry.insert(ModelMeta::named("interp"), snap.clone());
     let engine = PredictionEngine::new(registry, 16);
@@ -342,20 +346,19 @@ fn lambda_interpolation_matches_manual_linear_blend() {
     assert_eq!(served.to_bits(), dot(&x, &blend).to_bits());
 }
 
-/// Snapshot sanity on a second algorithm: the serving hooks exist for
-/// the parallel fitters too.
+/// Snapshot sanity on a second algorithm: the snapshot observer works
+/// for the parallel fitters too.
 #[test]
 fn blars_snapshot_hook_serves() {
-    use calars::cluster::{ExecMode, HwParams, SimCluster};
-    use calars::lars::blars::{blars_with_snapshot, BlarsOptions};
     let ds = calars::data::datasets::by_name("tiny", 7).unwrap();
-    let mut cluster = SimCluster::new(4, HwParams::default(), ExecMode::Sequential);
-    let (out, snap) = blars_with_snapshot(
-        &ds.a,
-        &ds.b,
-        &BlarsOptions { t: 8, b: 2, ..Default::default() },
-        &mut cluster,
-    );
+    let mut obs = SnapshotObserver::new();
+    let result = FitSpec::new(Algorithm::Blars { b: 2 })
+        .t(8)
+        .ranks(4)
+        .fit(&ds.a, &ds.b, &mut obs)
+        .expect("fit succeeds");
+    let out = &result.output;
+    let snap = obs.into_snapshot().expect("snapshot captured");
     assert_eq!(snap.max_support(), out.selected.len());
     let registry = Arc::new(ModelRegistry::new(2));
     let id = registry.insert(ModelMeta::named("blars"), snap);
@@ -367,16 +370,22 @@ fn blars_snapshot_hook_serves() {
         .is_finite());
 }
 
-/// PathSnapshot::from_lasso integrates with the engine too.
+/// The LASSO path serves its exact breakpoints: the snapshot observer
+/// preserves λ breakpoints for `Algorithm::LassoLars` fits.
 #[test]
 fn lasso_snapshot_serves_exact_breakpoints() {
-    use calars::lars::lasso_lars::lasso_path;
     let s = generate(
         &SyntheticSpec { m: 60, n: 20, density: 1.0, col_skew: 0.0, k_true: 4, noise: 0.05 },
         13,
     );
-    let path = lasso_path(&s.a, &s.b, 8, 1e-8);
-    let snap = PathSnapshot::from_lasso(s.a.ncols(), &path);
+    let mut obs = SnapshotObserver::new();
+    let result = FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-8 })
+        .t(8)
+        .fit(&s.a, &s.b, &mut obs)
+        .expect("fit succeeds");
+    let path = result.lasso.as_ref().expect("lasso path present");
+    let snap = obs.into_snapshot().expect("snapshot captured");
+    assert_eq!(snap, PathSnapshot::from_lasso(s.a.ncols(), path));
     let registry = Arc::new(ModelRegistry::new(2));
     let id = registry.insert(ModelMeta::named("lasso"), snap);
     let engine = PredictionEngine::new(registry, 8);
@@ -388,4 +397,59 @@ fn lasso_snapshot_serves_exact_breakpoints() {
             .unwrap();
         assert_eq!(served.to_bits(), dot(&x, &bp.x).to_bits());
     }
+}
+
+/// Satellite: a malformed `/fit` body answers HTTP 4xx and keeps the
+/// connection alive — never a panic or a dropped connection.
+#[test]
+fn malformed_fit_body_returns_4xx_not_dropped_connection() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    for (body, what) in [
+        ("bogus_key 1\n", "unknown key"),
+        ("t notanumber\n", "non-numeric t"),
+        ("algo frobnicate\n", "unknown algorithm"),
+        ("t 0\n", "zero t (InvalidSpec)"),
+        ("algo blars\nb 0\n", "zero block size (InvalidSpec)"),
+    ] {
+        let (status, resp) = client.request("POST", "/fit", body).unwrap();
+        assert!(
+            (400..500).contains(&status),
+            "{what}: expected 4xx, got {status} ({resp})"
+        );
+        assert!(resp.contains("error"), "{what}: body should explain: {resp}");
+    }
+
+    // The same connection still serves valid requests afterwards.
+    let (status, _) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200, "connection must survive the bad requests");
+    server.stop();
+}
+
+/// Satellite: `/models` exposes the algorithm, the full FitSpec, and
+/// the stop reason from the registry metadata.
+#[test]
+fn models_listing_reports_spec_and_stop_reason() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let fit = FitRequest { dataset: "tiny".into(), t: 6, ..Default::default() };
+    client.fit(&fit, true).unwrap();
+    let (status, body) = client.request("GET", "/models", "").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"algo\":\"lars\""), "{body}");
+    assert!(body.contains("\"stop\":\"target_reached\""), "{body}");
+    assert!(body.contains("\"spec\":\"algo=lars t=6"), "{body}");
+    assert!(body.contains("\"seed\":42"), "{body}");
+    server.stop();
 }

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI for calars: format check, release build, test suite, perf stage
+# CI for calars: format check, release build, test suite, rustdoc with
+# warnings denied, all five examples built AND executed, perf stage
 # (parallel-scaling bench + serving smoke, both in JSON mode, recorded
 # as BENCH_parallel.json / BENCH_serving.json), then a live
 # serve → fit → predict → shutdown smoke cycle (README §CI).
@@ -18,6 +19,16 @@ cargo build --release
 
 echo "== tests =="
 cargo test -q
+
+echo "== docs (rustdoc warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== examples (build + run all five) =="
+cargo build --release --examples
+for ex in quickstart lasso_path compressed_sensing wide_selection end_to_end; do
+    echo "-- example: $ex"
+    cargo run --release --quiet --example "$ex" >/dev/null
+done
 
 BIN=target/release/calars
 
