@@ -58,6 +58,10 @@ pub fn fit_observed(
     let mut residual_norms = vec![norm2(&r)];
     let mut coefs: Vec<f64> = Vec::new();
 
+    // Direction scratch reused across iterations (was a fresh
+    // length-m allocation per selection).
+    let mut ax = vec![0.0; m];
+
     let mut stop = StopReason::TargetReached;
     let mut iter = 0usize;
     while selected.len() < t {
@@ -79,7 +83,6 @@ pub fn fit_observed(
         // Full LS refit on the selected support (the aggressive step).
         match ls_coefficients(a, &selected, b) {
             Some(x) => {
-                let mut ax = vec![0.0; m];
                 a.gemv_cols(&selected, &x, &mut ax);
                 for i in 0..m {
                     r[i] = b[i] - ax[i];

@@ -54,6 +54,11 @@ pub fn fit_observed(
     let mut coefs: Vec<f64> = Vec::new();
     let mut residual_norms = vec![norm2(&r)];
 
+    // Scratch reused across iterations (ax/grow used to reallocate
+    // every selection).
+    let mut ax = vec![0.0; m];
+    let mut grow: Vec<f64> = Vec::new();
+
     let mut stop = StopReason::TargetReached;
     let mut iter = 0usize;
     while selected.len() < t {
@@ -73,7 +78,8 @@ pub fn fit_observed(
         // Extend the factor with column j.
         let gi = a.gram_block(&selected, &[j]);
         let gjj = a.gram_block(&[j], &[j]).get(0, 0);
-        let mut grow: Vec<f64> = (0..selected.len()).map(|i| gi.get(i, 0)).collect();
+        grow.clear();
+        grow.extend((0..selected.len()).map(|i| gi.get(i, 0)));
         grow.push(gjj);
         if chol.push_row(&grow).is_err() {
             stop = StopReason::RankDeficient;
@@ -83,8 +89,7 @@ pub fn fit_observed(
         selected.push(j);
         atb.push(a.col_dot(j, b));
         // LS solve on the support, recompute the residual.
-        coefs = chol.solve(&atb);
-        let mut ax = vec![0.0; m];
+        chol.solve_into(&atb, &mut coefs);
         a.gemv_cols(&selected, &coefs, &mut ax);
         for i in 0..m {
             r[i] = b[i] - ax[i];

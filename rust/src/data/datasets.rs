@@ -13,12 +13,21 @@ pub struct Dataset {
     pub b: Vec<f64>,
     /// Planted support for synthetic data (None for loaded files).
     pub true_support: Option<Vec<usize>>,
+    /// Pre-normalization column norms (by-product of the fused
+    /// normalize pass; the serving layer caches them per dataset).
+    pub col_norms: Vec<f64>,
 }
 
 impl Dataset {
     pub fn from_synthetic(name: &str, spec: &SyntheticSpec, seed: u64) -> Self {
         let s = generate(spec, seed);
-        Dataset { name: name.to_string(), a: s.a, b: s.b, true_support: Some(s.true_support) }
+        Dataset {
+            name: name.to_string(),
+            a: s.a,
+            b: s.b,
+            true_support: Some(s.true_support),
+            col_norms: s.col_norms,
+        }
     }
 
     /// Table 3 row for this dataset.

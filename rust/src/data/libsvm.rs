@@ -60,8 +60,8 @@ pub fn parse<R: BufRead>(reader: R, name: &str, n_hint: usize) -> Result<Dataset
         cols[c].push((r, v));
     }
     let mut a = Matrix::Sparse(CscMatrix::from_columns(m, cols));
-    a.normalize_columns();
-    Ok(Dataset { name: name.to_string(), a, b: labels, true_support: None })
+    let col_norms = a.normalize_columns_with_norms();
+    Ok(Dataset { name: name.to_string(), a, b: labels, true_support: None, col_norms })
 }
 
 /// Load from a file path.

@@ -27,13 +27,16 @@ pub struct SyntheticSpec {
     pub noise: f64,
 }
 
-/// Generated problem: design matrix (unit-norm columns), response, and
-/// the planted support (sorted).
+/// Generated problem: design matrix (unit-norm columns), response, the
+/// planted support (sorted), and the pre-normalization column norms
+/// (a by-product of the fused normalize pass — the serving layer's
+/// GramCache stores them per dataset).
 #[derive(Clone, Debug)]
 pub struct Synthetic {
     pub a: Matrix,
     pub b: Vec<f64>,
     pub true_support: Vec<usize>,
+    pub col_norms: Vec<f64>,
 }
 
 /// Generate a problem from a spec, deterministically in `seed`.
@@ -44,7 +47,9 @@ pub fn generate(spec: &SyntheticSpec, seed: u64) -> Synthetic {
     } else {
         Matrix::Sparse(sparse_design(spec, &mut rng))
     };
-    a.normalize_columns();
+    // Fused normalize: one norm sweep + one scaling pass, keeping the
+    // pre-normalization norms instead of recomputing them later.
+    let col_norms = a.normalize_columns_with_norms();
 
     // Planted sparse model: support sampled uniformly, coefficients with
     // random signs and magnitudes bounded away from zero so every true
@@ -73,7 +78,7 @@ pub fn generate(spec: &SyntheticSpec, seed: u64) -> Synthetic {
         }
     }
 
-    Synthetic { a, b, true_support: support }
+    Synthetic { a, b, true_support: support, col_norms }
 }
 
 fn dense_design(m: usize, n: usize, rng: &mut Pcg64) -> DenseMatrix {

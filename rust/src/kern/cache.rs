@@ -1,0 +1,298 @@
+//! Cross-fit Gram/norm panel cache.
+//!
+//! LARS-family fits recompute the same small Gram panels
+//! (`A_Iᵀ A_B`, at most `t × b`) on every warm-started refit of a
+//! model family: the selection prefix is identical, so the panel keys
+//! — the ordered `(ii, jj)` column-index pairs — repeat exactly, while
+//! each panel costs a full stream over `A` to materialize. The
+//! communication-avoiding block-coordinate analysis of Devarakonda et
+//! al. (arXiv:1612.04003) identifies exactly this reuse as where the
+//! constant factors live.
+//!
+//! [`PanelStore`] memoizes those panels (plus the dataset's column
+//! norms) per dataset, LRU-bounded by payload bytes. The serving layer
+//! owns one store per dataset (`calars::serve::GramCache`) and binds
+//! it around a fit with [`with_store`]; `Matrix::gram_block` consults
+//! the binding through [`bound_for`], which only matches when the
+//! matrix shape equals the shape the store was built for — so bLARS
+//! row shards (different `m`) and T-bLARS threaded leaves (pool worker
+//! threads carry no binding) silently bypass the cache instead of
+//! poisoning it.
+//!
+//! Correctness note: a store caches *values*, so it must only ever be
+//! bound around matrices with identical contents. The serving layer
+//! guarantees that by keying stores on the dataset name and
+//! invalidating when the dataset fingerprint changes (re-upload with
+//! different contents).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Minimal recency queue shared by the crate's caches ([`PanelStore`]
+/// here, `calars::serve::GramCache`): front = least recently used.
+/// One place for the touch/evict idiom instead of a hand-rolled copy
+/// per cache.
+pub(crate) struct LruQueue<K: PartialEq>(Vec<K>);
+
+impl<K: PartialEq> Default for LruQueue<K> {
+    fn default() -> Self {
+        LruQueue(Vec::new())
+    }
+}
+
+impl<K: PartialEq> LruQueue<K> {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark `key` most-recently-used, inserting it if absent.
+    pub(crate) fn touch_or_push(&mut self, key: K) {
+        if let Some(pos) = self.0.iter().position(|k| *k == key) {
+            self.0.remove(pos);
+        }
+        self.0.push(key);
+    }
+
+    /// Drop the entry matching `pred`, if any.
+    pub(crate) fn remove_by(&mut self, pred: impl Fn(&K) -> bool) {
+        if let Some(pos) = self.0.iter().position(|k| pred(k)) {
+            self.0.remove(pos);
+        }
+    }
+
+    /// Pop the least-recently-used key.
+    pub(crate) fn pop_lru(&mut self) -> Option<K> {
+        if self.0.is_empty() {
+            None
+        } else {
+            Some(self.0.remove(0))
+        }
+    }
+}
+
+/// Counter snapshot (`/stats` → `gram_cache`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanelCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Cached panels currently held.
+    pub panels: usize,
+    /// Approximate payload bytes currently held.
+    pub bytes: usize,
+}
+
+type PanelKey = (Vec<usize>, Vec<usize>);
+
+struct StoreInner {
+    panels: HashMap<PanelKey, Arc<Vec<f64>>>,
+    lru: LruQueue<PanelKey>,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    norms: Option<Arc<Vec<f64>>>,
+}
+
+/// Thread-safe per-dataset panel + norm store, LRU-bounded by bytes.
+pub struct PanelStore {
+    /// `(nrows, ncols)` of the matrix the cached values belong to.
+    shape: (usize, usize),
+    max_bytes: usize,
+    inner: Mutex<StoreInner>,
+}
+
+impl PanelStore {
+    /// Store for a matrix of `shape`, holding at most `max_bytes` of
+    /// panel payload.
+    pub fn new(shape: (usize, usize), max_bytes: usize) -> Self {
+        PanelStore {
+            shape,
+            max_bytes,
+            inner: Mutex::new(StoreInner {
+                panels: HashMap::new(),
+                lru: LruQueue::new(),
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                norms: None,
+            }),
+        }
+    }
+
+    /// The matrix shape this store was built for.
+    pub fn shape(&self) -> (usize, usize) {
+        self.shape
+    }
+
+    /// Cached panel for `(ii, jj)`, marking it most-recently-used.
+    /// Counts a hit or a miss.
+    pub fn lookup(&self, ii: &[usize], jj: &[usize]) -> Option<Arc<Vec<f64>>> {
+        let mut g = self.inner.lock().unwrap();
+        let key = (ii.to_vec(), jj.to_vec());
+        match g.panels.get(&key).cloned() {
+            Some(panel) => {
+                g.lru.touch_or_push(key);
+                g.hits += 1;
+                Some(panel)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly materialized panel, evicting least-recently-
+    /// used panels while over the byte bound. A panel larger than the
+    /// whole bound is not cached at all.
+    pub fn insert(&self, ii: &[usize], jj: &[usize], panel: Arc<Vec<f64>>) {
+        let add = panel.len() * std::mem::size_of::<f64>();
+        if add > self.max_bytes {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let key = (ii.to_vec(), jj.to_vec());
+        if let Some(old) = g.panels.insert(key.clone(), panel) {
+            // Same key re-inserted (two workers raced): keep byte
+            // accounting exact; touch_or_push refreshes recency.
+            g.bytes -= old.len() * std::mem::size_of::<f64>();
+        }
+        g.bytes += add;
+        g.lru.touch_or_push(key);
+        while g.bytes > self.max_bytes {
+            let Some(victim) = g.lru.pop_lru() else { break };
+            if let Some(old) = g.panels.remove(&victim) {
+                g.bytes -= old.len() * std::mem::size_of::<f64>();
+                g.evictions += 1;
+            }
+        }
+    }
+
+    /// Column norms recorded for this dataset (set once at
+    /// registration from the normalization pass).
+    pub fn norms(&self) -> Option<Arc<Vec<f64>>> {
+        self.inner.lock().unwrap().norms.clone()
+    }
+
+    /// Record the dataset's column norms (idempotent).
+    pub fn set_norms(&self, norms: Arc<Vec<f64>>) {
+        let mut g = self.inner.lock().unwrap();
+        if g.norms.is_none() {
+            g.norms = Some(norms);
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn counters(&self) -> PanelCounters {
+        let g = self.inner.lock().unwrap();
+        PanelCounters {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            panels: g.panels.len(),
+            bytes: g.bytes,
+        }
+    }
+}
+
+thread_local! {
+    /// Ambient store installed by [`with_store`] for the duration of a
+    /// fit on the calling thread.
+    static BOUND: RefCell<Option<Arc<PanelStore>>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with `store` bound as the calling thread's panel cache.
+/// `Matrix::gram_block` calls made by `f` *on this thread* consult it;
+/// kernels forked onto pool workers do not (their chunks are fractions
+/// of one panel anyway). Nested bindings restore the previous store on
+/// exit, including unwinds.
+pub fn with_store<R>(store: &Arc<PanelStore>, f: impl FnOnce() -> R) -> R {
+    struct Reset(Option<Arc<PanelStore>>);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            BOUND.with(|b| *b.borrow_mut() = self.0.take());
+        }
+    }
+    let prev = BOUND.with(|b| b.borrow_mut().replace(Arc::clone(store)));
+    let _reset = Reset(prev);
+    f()
+}
+
+/// The bound store, if any, **and only if** its recorded shape matches
+/// `shape` — the guard that keeps shard-local Gram products (bLARS row
+/// slices) from colliding with full-matrix panels under one binding.
+pub fn bound_for(shape: (usize, usize)) -> Option<Arc<PanelStore>> {
+    BOUND.with(|b| {
+        b.borrow()
+            .as_ref()
+            .filter(|s| s.shape() == shape)
+            .cloned()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_insert_roundtrip_counts() {
+        let store = PanelStore::new((10, 4), 1 << 20);
+        assert!(store.lookup(&[0, 1], &[2]).is_none());
+        store.insert(&[0, 1], &[2], Arc::new(vec![1.0, 2.0]));
+        let back = store.lookup(&[0, 1], &[2]).expect("cached");
+        assert_eq!(back.as_slice(), &[1.0, 2.0]);
+        // Key is the ordered pair: different jj misses.
+        assert!(store.lookup(&[0, 1], &[3]).is_none());
+        let c = store.counters();
+        assert_eq!((c.hits, c.misses, c.panels), (1, 2, 1));
+        assert_eq!(c.bytes, 16);
+    }
+
+    #[test]
+    fn byte_bound_evicts_lru() {
+        // Bound fits two 2-value panels; the third insert evicts the
+        // least recently used.
+        let store = PanelStore::new((8, 8), 32);
+        store.insert(&[0], &[0, 1], Arc::new(vec![1.0, 2.0]));
+        store.insert(&[1], &[0, 1], Arc::new(vec![3.0, 4.0]));
+        store.lookup(&[0], &[0, 1]); // touch: [0] now more recent than [1]
+        store.insert(&[2], &[0, 1], Arc::new(vec![5.0, 6.0]));
+        assert!(store.lookup(&[1], &[0, 1]).is_none(), "LRU panel evicted");
+        assert!(store.lookup(&[0], &[0, 1]).is_some());
+        assert!(store.lookup(&[2], &[0, 1]).is_some());
+        assert_eq!(store.counters().evictions, 1);
+        // An oversized panel is skipped entirely.
+        store.insert(&[3], &[0, 1, 2, 3, 4], Arc::new(vec![0.0; 64]));
+        assert!(store.lookup(&[3], &[0, 1, 2, 3, 4]).is_none());
+    }
+
+    #[test]
+    fn binding_scopes_and_shape_guards() {
+        let store = Arc::new(PanelStore::new((100, 20), 1 << 20));
+        assert!(bound_for((100, 20)).is_none(), "no ambient store outside with_store");
+        with_store(&store, || {
+            assert!(bound_for((100, 20)).is_some());
+            assert!(bound_for((50, 20)).is_none(), "shard shapes must not match");
+            // Nested binding wins, then restores.
+            let inner = Arc::new(PanelStore::new((7, 7), 1024));
+            with_store(&inner, || {
+                assert!(bound_for((100, 20)).is_none());
+                assert!(bound_for((7, 7)).is_some());
+            });
+            assert!(bound_for((100, 20)).is_some());
+        });
+        assert!(bound_for((100, 20)).is_none(), "binding must not leak");
+    }
+
+    #[test]
+    fn norms_set_once() {
+        let store = PanelStore::new((4, 2), 1024);
+        assert!(store.norms().is_none());
+        store.set_norms(Arc::new(vec![1.0, 2.0]));
+        store.set_norms(Arc::new(vec![9.0, 9.0]));
+        assert_eq!(store.norms().unwrap().as_slice(), &[1.0, 2.0]);
+    }
+}

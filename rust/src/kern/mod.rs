@@ -1,0 +1,514 @@
+//! `calars::kern` — register-blocked, unrolled compute kernels.
+//!
+//! The paper's runtime is dominated by a handful of dense sweeps —
+//! `Aᵀr` correlation products, Gram panels `A_Iᵀ A_B`, equiangular
+//! direction application, and triangular solves. [`crate::par`] spread
+//! those across threads; this module makes each thread fast: every
+//! inner loop runs with multiple independent accumulators (groups of
+//! [`UNROLL`] lanes) so the FP add chain no longer serializes, and the
+//! paired traversals the fitters perform are fused into single passes
+//! over the matrix ([`fused_step_panel`]).
+//!
+//! ## Canonical summation order
+//!
+//! Each kernel defines **one** summation order, used identically by
+//! the serial whole-range path and by every fixed-grain chunk of the
+//! [`crate::par`] parallel path:
+//!
+//! * **reduction kernels** ([`dot`], [`sq_norm`], [`dot_idx`],
+//!   [`sparse_dot`]): four independent accumulators over lanes
+//!   `i ≡ 0..4 (mod 4)`, combined pairwise as `(s0+s1) + (s2+s3)`,
+//!   then the `len % 4` tail folded in sequentially;
+//! * **row-streaming kernels** ([`at_r_panel`], [`col_sq_norms_panel`],
+//!   [`gram_panel`], [`cols_dot_panel`], [`fused_step_panel`]): rows
+//!   processed in groups of four anchored at the *start of the range*,
+//!   each group's contribution to an output cell pre-reduced pairwise
+//!   (`(p0+p1) + (p2+p3)`) before the single add into the accumulator,
+//!   with the `rows % 4` tail handled one row at a time.
+//!
+//! Because [`crate::par::chunk_ranges`] is a pure function of
+//! `(len, grain)` — never of the thread count — the group boundaries
+//! inside every chunk are reproducible, and chunked reductions stay
+//! **bit-identical across `CALARS_THREADS` settings** exactly as the
+//! pre-kern scalar kernels did (property-tested in `tests/par.rs` and
+//! `tests/kern.rs`).
+//!
+//! The pre-kern scalar kernels survive as [`reference`] — the
+//! mathematical definition written as naive one-accumulator loops —
+//! against which every blocked kernel is tolerance-checked
+//! (`tests/kern.rs`, and `benches/kernels.rs` gates CI on
+//! `max |Δ| ≤ 1e-9`).
+//!
+//! [`cache`] holds the cross-fit Gram/norm panel store the serving
+//! layer binds around fits (see `DESIGN.md` §"Kernel engine").
+
+pub mod cache;
+pub mod reference;
+
+/// Lanes per unrolled group (accumulators per reduction, rows per
+/// streaming pack).
+pub const UNROLL: usize = 4;
+
+/// Dot product with four independent accumulators.
+///
+/// Canonical order: lane `i` of group `g` contributes to accumulator
+/// `i`; the four accumulators combine pairwise, then the tail folds in
+/// sequentially.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let groups = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for g in 0..groups {
+        let j = g * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in groups * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Sum of squares with four independent accumulators (same canonical
+/// order as [`dot`]).
+#[inline]
+pub fn sq_norm(x: &[f64]) -> f64 {
+    let n = x.len();
+    let groups = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for g in 0..groups {
+        let j = g * 4;
+        s0 += x[j] * x[j];
+        s1 += x[j + 1] * x[j + 1];
+        s2 += x[j + 2] * x[j + 2];
+        s3 += x[j + 3] * x[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in groups * 4..n {
+        s += x[j] * x[j];
+    }
+    s
+}
+
+/// `y += alpha·x`, unrolled by four. Element-wise (one add per output
+/// slot), so the result is identical to the naive loop — unrolling
+/// here only widens the issue window.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let groups = n / 4;
+    for g in 0..groups {
+        let j = g * 4;
+        y[j] += alpha * x[j];
+        y[j + 1] += alpha * x[j + 1];
+        y[j + 2] += alpha * x[j + 2];
+        y[j + 3] += alpha * x[j + 3];
+    }
+    for j in groups * 4..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// `x *= s` (element-wise, order-free).
+#[inline]
+pub fn scale(x: &mut [f64], s: f64) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Gather dot `Σ_k row[cols[k]] · w[k]` with four accumulators — the
+/// dense `gemv_cols` / `cols_dot` inner loop.
+#[inline]
+pub fn dot_idx(row: &[f64], cols: &[usize], w: &[f64]) -> f64 {
+    debug_assert_eq!(cols.len(), w.len());
+    let n = cols.len();
+    let groups = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for g in 0..groups {
+        let k = g * 4;
+        s0 += row[cols[k]] * w[k];
+        s1 += row[cols[k + 1]] * w[k + 1];
+        s2 += row[cols[k + 2]] * w[k + 2];
+        s3 += row[cols[k + 3]] * w[k + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in groups * 4..n {
+        s += row[cols[k]] * w[k];
+    }
+    s
+}
+
+/// Sparse gather dot `Σ_k vals[k] · r[rows[k]]` with four accumulators
+/// — the CSC `at_r` / `col_dot` / Gram inner loop.
+#[inline]
+pub fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let groups = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for g in 0..groups {
+        let k = g * 4;
+        s0 += vals[k] * r[rows[k] as usize];
+        s1 += vals[k + 1] * r[rows[k + 1] as usize];
+        s2 += vals[k + 2] * r[rows[k + 2] as usize];
+        s3 += vals[k + 3] * r[rows[k + 3] as usize];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in groups * 4..n {
+        s += vals[k] * r[rows[k] as usize];
+    }
+    s
+}
+
+/// Sparse scatter `out[rows[k]] += wk · vals[k]`, unrolled by four.
+/// Row indices within a CSC column are distinct, so the unrolled slots
+/// never alias and the result equals the naive loop exactly.
+#[inline]
+pub fn scatter_axpy(wk: f64, rows: &[u32], vals: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let groups = n / 4;
+    for g in 0..groups {
+        let k = g * 4;
+        out[rows[k] as usize] += wk * vals[k];
+        out[rows[k + 1] as usize] += wk * vals[k + 1];
+        out[rows[k + 2] as usize] += wk * vals[k + 2];
+        out[rows[k + 3] as usize] += wk * vals[k + 3];
+    }
+    for k in groups * 4..n {
+        out[rows[k] as usize] += wk * vals[k];
+    }
+}
+
+/// `acc[j] += Σ_i r[i]·rows_i[j]` over a row-major panel — the dense
+/// `Aᵀr` kernel. `rows` holds `r.len()` consecutive rows of width `n`;
+/// four rows are fused per accumulator pass (¼ the accumulator
+/// traffic of the old axpy-per-row sweep), with the canonical pairwise
+/// pre-reduction per output element.
+pub fn at_r_panel(rows: &[f64], n: usize, r: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(rows.len(), r.len() * n);
+    debug_assert_eq!(acc.len(), n);
+    let m = r.len();
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for j in 0..n {
+            acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let ri = r[i];
+        let row = &rows[i * n..(i + 1) * n];
+        for j in 0..n {
+            acc[j] += ri * row[j];
+        }
+    }
+}
+
+/// `acc[j] += Σ_i rows_i[j]²` over a row-major panel — the column
+/// squared-norm sweep, four rows fused per pass.
+pub fn col_sq_norms_panel(rows: &[f64], n: usize, acc: &mut [f64]) {
+    debug_assert_eq!(acc.len(), n);
+    if n == 0 {
+        return;
+    }
+    let m = rows.len() / n;
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for j in 0..n {
+            acc[j] += (x0[j] * x0[j] + x1[j] * x1[j]) + (x2[j] * x2[j] + x3[j] * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for j in 0..n {
+            acc[j] += row[j] * row[j];
+        }
+    }
+}
+
+/// Gram panel `acc[a·nb + b] += Σ_i rows_i[ii[a]] · rows_i[jj[b]]` — a
+/// packed 4×4 micro-GEMM. Four rows' `ii`/`jj` values are gathered
+/// into the contiguous panels `pi` (4·|ii|) and `pj` (4·|jj|) so the
+/// inner tile runs on registers instead of strided re-loads; output is
+/// walked in 4×4 tiles with the group contribution pre-reduced
+/// pairwise per cell.
+///
+/// `pi`/`pj` are caller-provided scratch (≥ `4·ii.len()` and
+/// `4·jj.len()`), letting chunked callers allocate once per task.
+pub fn gram_panel(
+    rows: &[f64],
+    n: usize,
+    ii: &[usize],
+    jj: &[usize],
+    pi: &mut [f64],
+    pj: &mut [f64],
+    acc: &mut [f64],
+) {
+    let na = ii.len();
+    let nb = jj.len();
+    debug_assert!(pi.len() >= 4 * na && pj.len() >= 4 * nb);
+    debug_assert_eq!(acc.len(), na * nb);
+    if n == 0 || na == 0 || nb == 0 {
+        return;
+    }
+    let m = rows.len() / n;
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        for k in 0..4 {
+            let row = &rows[(i + k) * n..(i + k + 1) * n];
+            for (a, &col) in ii.iter().enumerate() {
+                pi[k * na + a] = row[col];
+            }
+            for (b, &col) in jj.iter().enumerate() {
+                pj[k * nb + b] = row[col];
+            }
+        }
+        for a0 in (0..na).step_by(4) {
+            for b0 in (0..nb).step_by(4) {
+                for a in a0..na.min(a0 + 4) {
+                    let v0 = pi[a];
+                    let v1 = pi[na + a];
+                    let v2 = pi[2 * na + a];
+                    let v3 = pi[3 * na + a];
+                    for b in b0..nb.min(b0 + 4) {
+                        acc[a * nb + b] += (v0 * pj[b] + v1 * pj[nb + b])
+                            + (v2 * pj[2 * nb + b] + v3 * pj[3 * nb + b]);
+                    }
+                }
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for (b, &col) in jj.iter().enumerate() {
+            pj[b] = row[col];
+        }
+        for (a, &col) in ii.iter().enumerate() {
+            let v = row[col];
+            let orow = &mut acc[a * nb..(a + 1) * nb];
+            for (o, &x) in orow.iter_mut().zip(&pj[..nb]) {
+                *o += v * x;
+            }
+        }
+    }
+}
+
+/// `acc[k] += Σ_i r[i]·rows_i[cols[k]]` — the dense `cols_dot` kernel
+/// (correlations of a column *subset* with `r`), four rows fused per
+/// accumulator pass.
+pub fn cols_dot_panel(rows: &[f64], n: usize, cols: &[usize], r: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(rows.len(), r.len() * n);
+    debug_assert_eq!(acc.len(), cols.len());
+    let m = r.len();
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for (o, &j) in acc.iter_mut().zip(cols) {
+            *o += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let ri = r[i];
+        let row = &rows[i * n..(i + 1) * n];
+        for (o, &j) in acc.iter_mut().zip(cols) {
+            *o += ri * row[j];
+        }
+    }
+}
+
+/// Fused equiangular step over a row-major panel: one pass computing
+/// both `u = A[:, cols]·w` (written to `u`, one slot per panel row)
+/// and the correlation update `av += Aᵀu` (accumulated into `av`,
+/// width `n`). The fitters previously did this as two full sweeps over
+/// `A` (`gemv_cols` then `at_r`); fusing halves the memory traffic of
+/// the per-iteration hot path.
+///
+/// Canonical order: each `u` slot is a [`dot_idx`] gather; `av`
+/// accumulates groups of four rows with the pairwise pre-reduction,
+/// anchored at the panel start.
+pub fn fused_step_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    w: &[f64],
+    u: &mut [f64],
+    av: &mut [f64],
+) {
+    debug_assert_eq!(cols.len(), w.len());
+    debug_assert_eq!(av.len(), n);
+    debug_assert_eq!(rows.len(), u.len() * n);
+    let m = u.len();
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        let u0 = dot_idx(x0, cols, w);
+        let u1 = dot_idx(x1, cols, w);
+        let u2 = dot_idx(x2, cols, w);
+        let u3 = dot_idx(x3, cols, w);
+        u[i] = u0;
+        u[i + 1] = u1;
+        u[i + 2] = u2;
+        u[i + 3] = u3;
+        for j in 0..n {
+            av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        let ui = dot_idx(row, cols, w);
+        u[i] = ui;
+        for j in 0..n {
+            av[j] += ui * row[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn randvec(len: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn dot_and_sq_norm_match_reference_awkward_lengths() {
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 33, 100] {
+            let a = randvec(len, 1 + len as u64);
+            let b = randvec(len, 100 + len as u64);
+            let scale = 1.0 + reference::sq_norm(&a).sqrt();
+            assert!(
+                (dot(&a, &b) - reference::dot(&a, &b)).abs() < 1e-12 * scale,
+                "dot len={len}"
+            );
+            assert!(
+                (sq_norm(&a) - reference::sq_norm(&a)).abs() < 1e-12 * scale * scale,
+                "sq_norm len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_identical_to_naive() {
+        for len in [0usize, 1, 3, 4, 9, 31] {
+            let x = randvec(len, 7);
+            let mut y1 = randvec(len, 8);
+            let mut y2 = y1.clone();
+            axpy(0.37, &x, &mut y1);
+            for (yi, xi) in y2.iter_mut().zip(&x) {
+                *yi += 0.37 * xi;
+            }
+            for (a, b) in y1.iter().zip(&y2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "axpy len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn panels_match_reference_awkward_shapes() {
+        for &(m, n) in &[(0usize, 5usize), (1, 5), (3, 7), (4, 4), (5, 0), (5, 1), (13, 9)] {
+            let data = randvec(m * n, (m * 31 + n) as u64 + 1);
+            let r = randvec(m, 999);
+            // at_r
+            let mut acc = vec![0.0; n];
+            at_r_panel(&data, n, &r, &mut acc);
+            let mut want = vec![0.0; n];
+            reference::at_r(&data, m, n, &r, &mut want);
+            for (j, (a, b)) in acc.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-12 * (1.0 + b.abs()), "at_r ({m},{n}) col {j}");
+            }
+            // col square norms
+            let mut acc = vec![0.0; n];
+            col_sq_norms_panel(&data, n, &mut acc);
+            let want = reference::col_sq_norms(&data, m, n);
+            for (a, b) in acc.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12 * (1.0 + b.abs()), "norms ({m},{n})");
+            }
+            if n == 0 {
+                continue;
+            }
+            // gram panel over a couple of column subsets
+            let ii: Vec<usize> = (0..n).step_by(2).collect();
+            let jj: Vec<usize> = (0..n).collect();
+            let mut acc = vec![0.0; ii.len() * jj.len()];
+            let mut pi = vec![0.0; 4 * ii.len()];
+            let mut pj = vec![0.0; 4 * jj.len()];
+            gram_panel(&data, n, &ii, &jj, &mut pi, &mut pj, &mut acc);
+            let want = reference::gram_block(&data, m, n, &ii, &jj);
+            for (a, b) in acc.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12 * (1.0 + b.abs()), "gram ({m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_step_matches_two_pass_reference() {
+        let (m, n) = (23, 11);
+        let data = randvec(m * n, 5);
+        let cols = [0usize, 3, 4, 8, 10];
+        let w = [0.5, -1.0, 0.25, 2.0, -0.125];
+        let mut u = vec![0.0; m];
+        let mut av = vec![0.0; n];
+        fused_step_panel(&data, n, &cols, &w, &mut u, &mut av);
+        let mut u_ref = vec![0.0; m];
+        reference::gemv_cols(&data, m, n, &cols, &w, &mut u_ref);
+        let mut av_ref = vec![0.0; n];
+        reference::at_r(&data, m, n, &u_ref, &mut av_ref);
+        for (a, b) in u.iter().zip(&u_ref) {
+            assert!((a - b).abs() < 1e-12 * (1.0 + b.abs()), "u");
+        }
+        for (a, b) in av.iter().zip(&av_ref) {
+            assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()), "av");
+        }
+    }
+
+    #[test]
+    fn sparse_helpers_match_naive() {
+        let rows: Vec<u32> = vec![0, 2, 3, 5, 8, 9, 11];
+        let vals = randvec(rows.len(), 3);
+        let r = randvec(12, 4);
+        let naive: f64 = rows.iter().zip(&vals).map(|(&ri, &v)| v * r[ri as usize]).sum();
+        assert!((sparse_dot(&rows, &vals, &r) - naive).abs() < 1e-12);
+        let mut out1 = vec![0.0; 12];
+        let mut out2 = vec![0.0; 12];
+        scatter_axpy(1.5, &rows, &vals, &mut out1);
+        for (&ri, &v) in rows.iter().zip(&vals) {
+            out2[ri as usize] += 1.5 * v;
+        }
+        for (a, b) in out1.iter().zip(&out2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! `kern::reference` — the scalar reference kernels.
+//!
+//! Two families, both off the hot path, kept so the blocked
+//! [`crate::kern`] kernels stay *checkable*:
+//!
+//! * the **textbook scalar definitions** ([`dot`], [`at_r`],
+//!   [`gemv_cols`], [`gram_block`], [`col_sq_norms`], [`gemv`]):
+//!   one-accumulator loops in the mathematical traversal order
+//!   (column-at-a-time for `Aᵀr` and Gram) — the numeric oracle every
+//!   kern kernel is tolerance-checked against (`tests/kern.rs`, and
+//!   the `benches/kernels.rs` CI gate fails on `max |Δ| > 1e-9`);
+//! * the **pre-kern row-streaming loops** ([`at_r_streamed`],
+//!   [`gram_block_streamed`]): faithful reproductions of the inner
+//!   loops this crate actually shipped before the kernel engine
+//!   (axpy-per-row `Aᵀr`, hoisted-`rj` rank-1 Gram updates), so
+//!   `BENCH_kernels.json` records the honest old-code → kern delta
+//!   alongside the textbook-scalar speedups.
+
+/// Naive dot product (single accumulator, left to right).
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Naive sum of squares.
+pub fn sq_norm(x: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for v in x {
+        s += v * v;
+    }
+    s
+}
+
+/// Scalar `Aᵀr` on a row-major `m × n` buffer: one strided
+/// column-at-a-time dot per output — the textbook correlation sweep.
+pub fn at_r(data: &[f64], m: usize, n: usize, r: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(data.len(), m * n);
+    debug_assert_eq!(r.len(), m);
+    debug_assert_eq!(out.len(), n);
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut s = 0.0;
+        for i in 0..m {
+            s += data[i * n + j] * r[i];
+        }
+        *o = s;
+    }
+}
+
+/// Scalar `A[:, cols]·w` on a row-major buffer (per-row scalar gather).
+pub fn gemv_cols(data: &[f64], m: usize, n: usize, cols: &[usize], w: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(data.len(), m * n);
+    debug_assert_eq!(cols.len(), w.len());
+    debug_assert_eq!(out.len(), m);
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = &data[i * n..(i + 1) * n];
+        let mut s = 0.0;
+        for (&j, &x) in cols.iter().zip(w) {
+            s += row[j] * x;
+        }
+        *o = s;
+    }
+}
+
+/// Scalar Gram block `A[:, ii]ᵀ A[:, jj]` (row-major output,
+/// `|ii| × |jj|`): one strided column-pair dot per output cell.
+pub fn gram_block(data: &[f64], m: usize, n: usize, ii: &[usize], jj: &[usize]) -> Vec<f64> {
+    debug_assert_eq!(data.len(), m * n);
+    let nb = jj.len();
+    let mut out = vec![0.0; ii.len() * nb];
+    for (a, &ci) in ii.iter().enumerate() {
+        for (b, &cj) in jj.iter().enumerate() {
+            let mut s = 0.0;
+            for i in 0..m {
+                s += data[i * n + ci] * data[i * n + cj];
+            }
+            out[a * nb + b] = s;
+        }
+    }
+    out
+}
+
+/// Scalar per-column squared norms on a row-major buffer.
+pub fn col_sq_norms(data: &[f64], m: usize, n: usize) -> Vec<f64> {
+    debug_assert_eq!(data.len(), m * n);
+    let mut out = vec![0.0; n];
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut s = 0.0;
+        for i in 0..m {
+            let v = data[i * n + j];
+            s += v * v;
+        }
+        *o = s;
+    }
+    out
+}
+
+/// Pre-kern row-streaming `Aᵀr`: accumulate `r_i · row_i` with an
+/// axpy per row — byte-for-byte the loop `DenseMatrix::at_r` ran
+/// before the kernel engine (including the `r_i == 0` skip; the old
+/// `axpy` was a plain element-wise zip).
+pub fn at_r_streamed(data: &[f64], m: usize, n: usize, r: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(data.len(), m * n);
+    debug_assert_eq!(r.len(), m);
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
+    for i in 0..m {
+        let ri = r[i];
+        if ri != 0.0 {
+            let row = &data[i * n..(i + 1) * n];
+            for (o, &x) in out.iter_mut().zip(row) {
+                *o += ri * x;
+            }
+        }
+    }
+}
+
+/// Pre-kern row-streaming Gram block: one pass over `A` with the `jj`
+/// values of each row hoisted into a contiguous scratch buffer and a
+/// rank-1 update per `ii` column — the loop `DenseMatrix::gram_block`
+/// ran before the 4×4 micro-GEMM replaced it.
+pub fn gram_block_streamed(
+    data: &[f64],
+    m: usize,
+    n: usize,
+    ii: &[usize],
+    jj: &[usize],
+) -> Vec<f64> {
+    debug_assert_eq!(data.len(), m * n);
+    let nb = jj.len();
+    let na = ii.len();
+    let mut out = vec![0.0; na * nb];
+    let mut rj = vec![0.0; nb];
+    for i in 0..m {
+        let row = &data[i * n..(i + 1) * n];
+        for (x, &j) in rj.iter_mut().zip(jj) {
+            *x = row[j];
+        }
+        for (a, &c) in ii.iter().enumerate() {
+            let v = row[c];
+            if v != 0.0 {
+                let orow = &mut out[a * nb..(a + 1) * nb];
+                for (o, &x) in orow.iter_mut().zip(&rj) {
+                    *o += v * x;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Scalar full GEMV `out = A x` on a row-major buffer.
+pub fn gemv(data: &[f64], m: usize, n: usize, x: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(data.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(out.len(), m);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot(&data[i * n..(i + 1) * n], x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_exact_values() {
+        // 3×2 [[1,2],[3,4],[5,6]] — all sums exact in f64.
+        let data = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut c = vec![0.0; 2];
+        at_r(&data, 3, 2, &[1.0, -1.0, 2.0], &mut c);
+        assert_eq!(c, vec![8.0, 10.0]);
+        let g = gram_block(&data, 3, 2, &[0, 1], &[0, 1]);
+        assert_eq!(g, vec![35.0, 44.0, 44.0, 56.0]);
+        assert_eq!(col_sq_norms(&data, 3, 2), vec![35.0, 56.0]);
+        let mut u = vec![0.0; 3];
+        gemv_cols(&data, 3, 2, &[1], &[2.0], &mut u);
+        assert_eq!(u, vec![4.0, 8.0, 12.0]);
+        let mut y = vec![0.0; 3];
+        gemv(&data, 3, 2, &[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 7.0, 11.0]);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(sq_norm(&[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn streamed_forms_match_textbook_definitions() {
+        let data = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let r = [1.0, -1.0, 2.0];
+        let mut a = vec![0.0; 2];
+        at_r(&data, 3, 2, &r, &mut a);
+        let mut b = vec![0.0; 2];
+        at_r_streamed(&data, 3, 2, &r, &mut b);
+        assert_eq!(a, b);
+        let g = gram_block(&data, 3, 2, &[0, 1], &[0, 1]);
+        let gs = gram_block_streamed(&data, 3, 2, &[0, 1], &[0, 1]);
+        assert_eq!(g, gs);
+    }
+}

@@ -196,6 +196,11 @@ pub fn fit_observed(
     }
 
     // ── Main loop (steps 6-25). ──
+    // Master-side scratch reused across iterations (s/q reallocation
+    // per step is pure overhead; w stays per-iteration because the
+    // broadcast closures borrow it until the step ends).
+    let mut s_buf: Vec<f64> = Vec::with_capacity(t);
+    let mut q_buf: Vec<f64> = Vec::with_capacity(t);
     let mut iter = 0usize;
     let stop = loop {
         if selected.len() >= t {
@@ -209,10 +214,13 @@ pub fn fit_observed(
         // Steps 7-8 (master): s, q = (LLᵀ)⁻¹s, h, w.
         cluster.charge_flops(Phase::Solve, (k * k) as u64 + 2 * k as u64);
         let (h, w) = {
-            let s: Vec<f64> = selected.iter().map(|&j| c[j]).collect();
+            s_buf.clear();
+            s_buf.extend(selected.iter().map(|&j| c[j]));
+            let s = &s_buf;
+            let q = &mut q_buf;
             let out = cluster.master(Phase::Solve, || {
-                let q = chol.solve(&s);
-                let sq = dot(&s, &q);
+                chol.solve_into(s, q);
+                let sq = dot(s, q);
                 if !(sq.is_finite() && sq > 0.0) {
                     return None;
                 }

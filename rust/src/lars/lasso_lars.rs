@@ -125,6 +125,10 @@ pub fn fit_observed(
     let mut drops = 0usize;
     let mut r = b.to_vec();
     let mut c = vec![0.0; n];
+    // Per-event scratch reused across the path (u/av were fresh
+    // length-m/n allocations every breakpoint event).
+    let mut u = vec![0.0; m];
+    let mut av = vec![0.0; n];
     let max_active = max_active.min(m.min(n));
 
     // Guard against pathological cycling (paper assumes general position).
@@ -178,11 +182,8 @@ pub fn fit_observed(
         let h = 1.0 / sq.sqrt();
         let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
 
-        // u = A_A w ; av = Aᵀu.
-        let mut u = vec![0.0; m];
-        a.gemv_cols(&active, &w, &mut u);
-        let mut av = vec![0.0; n];
-        a.at_r(&u, &mut av);
+        // u = A_A w ; av = Aᵀu — fused single pass (dense storage).
+        a.fused_step(&active, &w, &mut u, &mut av);
 
         // Standard LARS entering step.
         let gamma_full = 1.0 / h;

@@ -109,6 +109,14 @@ pub fn mlars(
 
     let target = i0.len() + budget;
     let mut u = vec![0.0; m];
+    // Scratch reused across iterations (q/w/a_pool/steps/grow used to
+    // reallocate every step — measurable at leaf scale, where mLARS
+    // runs once per tournament node per outer iteration).
+    let mut q: Vec<f64> = Vec::new();
+    let mut w: Vec<f64> = Vec::new();
+    let mut a_pool: Vec<f64> = Vec::new();
+    let mut steps: Vec<StepKind> = Vec::new();
+    let mut grow: Vec<f64> = Vec::new();
 
     // ── Main loop (steps 9-28). ──
     while selected.len() < target && !pool.is_empty() {
@@ -118,13 +126,14 @@ pub fn mlars(
 
         // Steps 10-13: s, q, h, w.
         let t0 = Instant::now();
-        let q = chol.solve(&c_sel);
+        chol.solve_into(&c_sel, &mut q);
         let sq = dot(&c_sel, &q);
         if !(sq.is_finite() && sq > 0.0) {
             break;
         }
         let h = 1.0 / sq.sqrt();
-        let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
+        w.clear();
+        w.extend(q.iter().map(|qi| qi * h));
         tracer.add_time(Phase::Solve, t0.elapsed().as_secs_f64());
         tracer.add_flops(Phase::Solve, (selected.len() * selected.len()) as u64);
 
@@ -136,19 +145,21 @@ pub fn mlars(
 
         // Step 15: a over the pool.
         let t0 = Instant::now();
-        let mut a_pool = vec![0.0; pool.len()];
+        a_pool.clear();
+        a_pool.resize(pool.len(), 0.0);
         a.cols_dot(&pool, &u, &mut a_pool);
         tracer.add_time(Phase::Corr, t0.elapsed().as_secs_f64());
         tracer.add_flops(Phase::Corr, a.gemv_cols_flops(&pool));
 
         // Steps 16-18: stepLARS per pool column; pick γ_k and the entrant.
         let t0 = Instant::now();
-        let steps: Vec<StepKind> = pool
-            .iter()
-            .zip(&c_pool)
-            .zip(&a_pool)
-            .map(|((_, &cj), &aj)| step_lars(ck, h, cj, aj))
-            .collect();
+        steps.clear();
+        steps.extend(
+            pool.iter()
+                .zip(&c_pool)
+                .zip(&a_pool)
+                .map(|((_, &cj), &aj)| step_lars(ck, h, cj, aj)),
+        );
         let any_zero = steps.iter().any(|s| s.gamma() == 0.0);
         let (gamma, entrant_pos) = if any_zero {
             // Step 17/18 (zero branch): γ_k = 0; force-add the zero-γ
@@ -190,13 +201,13 @@ pub fn mlars(
         let j = pool[entrant_pos];
         let grow_head = a.gram_block(&selected, &[j]);
         let gjj = a.gram_block(&[j], &[j]).get(0, 0);
-        let mut grow: Vec<f64> = (0..selected.len()).map(|i| grow_head.get(i, 0)).collect();
+        grow.clear();
+        grow.extend((0..selected.len()).map(|i| grow_head.get(i, 0)));
         grow.push(gjj);
         tracer.add_flops(Phase::Gram, a.gram_block_flops(&selected, &[j]) + 2);
         if chol.push_row(&grow).is_ok() {
             pool.swap_remove(entrant_pos);
             let cj = c_pool.swap_remove(entrant_pos);
-            let _ = a_pool; // consumed
             selected.push(j);
             new_cols.push(j);
             c_sel.push(cj);

@@ -190,6 +190,12 @@ pub fn fit_observed(
         });
     }
 
+    // Scratch buffers reused across iterations (the per-step s/q/w
+    // allocations used to dominate small-problem fit latency).
+    let mut s = Vec::with_capacity(t);
+    let mut q = Vec::with_capacity(t);
+    let mut w = Vec::with_capacity(t);
+
     let mut iter = 0usize;
     let stop = loop {
         if selected.len() >= t {
@@ -200,8 +206,9 @@ pub fn fit_observed(
         }
 
         // Steps 7-8: s = [c]_I ; q = (LLᵀ)⁻¹ s ; h = (sᵀq)^{-1/2} ; w = q·h.
-        let s: Vec<f64> = selected.iter().map(|&j| c[j]).collect();
-        let q = chol.solve(&s);
+        s.clear();
+        s.extend(selected.iter().map(|&j| c[j]));
+        chol.solve_into(&s, &mut q);
         let sq = dot(&s, &q);
         if !(sq.is_finite() && sq > 0.0) {
             // sᵀG⁻¹s ≤ 0 with s ≠ 0: the factor has gone numerically
@@ -209,12 +216,12 @@ pub fn fit_observed(
             break StopReason::RankDeficient;
         }
         let h = 1.0 / sq.sqrt();
-        let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
+        w.clear();
+        w.extend(q.iter().map(|qi| qi * h));
 
-        // Step 10: u = A_I w  (unit vector with A_Iᵀu = s·h).
-        a.gemv_cols(&selected, &w, &mut u);
-        // Step 11: a = Aᵀu.
-        a.at_r(&u, &mut av);
+        // Steps 10-11 fused: u = A_I w and a = Aᵀu in one pass over A
+        // (dense storage; CSC takes the two-pass form inside).
+        a.fused_step(&selected, &w, &mut u, &mut av);
 
         // Step 12: γ_j candidates over the complement (pool-chunked).
         // Valid candidates lie in (0, 1/h]: beyond 1/h the selected

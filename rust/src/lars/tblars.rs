@@ -105,6 +105,9 @@ pub fn fit_observed(
     let mut chol = Cholesky::empty();
     let mut residual_norms = vec![norm2(b_vec)];
     let mut cols_at_iter = vec![0usize];
+    // Residual scratch reused across outer iterations (was a fresh
+    // length-m allocation per round).
+    let mut r_buf = vec![0.0; m];
 
     let mut iter = 0usize;
     let stop = loop {
@@ -191,10 +194,10 @@ pub fn fit_observed(
         let l_words = new_count * (k_prev + new_count);
         cluster.broadcast(Phase::Bcast, new_count * m + m + l_words);
 
-        residual_norms.push({
-            let r: Vec<f64> = b_vec.iter().zip(&y).map(|(bi, yi)| bi - yi).collect();
-            norm2(&r)
-        });
+        for ((ri, bi), yi) in r_buf.iter_mut().zip(b_vec).zip(&y) {
+            *ri = bi - yi;
+        }
+        residual_norms.push(norm2(&r_buf));
         cols_at_iter.push(selected.len());
 
         let observer_stop = obs.on_iteration(&FitEvent {

@@ -37,6 +37,15 @@
 //!   updates, cluster supersteps, the serving engine's batched GEMV)
 //!   forks onto it; results are bit-identical across `CALARS_THREADS`
 //!   settings by construction.
+//! * **Kernel engine** ([`kern`]): the register-blocked, unrolled
+//!   compute kernels those hot paths run — multi-accumulator
+//!   reductions, 4-row fused streaming sweeps, a packed 4×4 Gram
+//!   micro-GEMM, and fused paired traversals (`gemv_cols`+`at_r`,
+//!   normalize-with-norms) — each with one canonical summation order
+//!   shared by the serial and chunked-parallel paths, tolerance-gated
+//!   against the scalar [`kern::reference`]. [`kern::cache`] is the
+//!   cross-fit Gram/norm panel store the serving layer binds around
+//!   fits.
 //! * **L4 — serving** ([`serve`]): the production front end. A
 //!   versioned [`serve::ModelRegistry`] snapshots fitted regularization
 //!   paths (in memory and on disk), a batched
@@ -117,6 +126,7 @@ pub mod data;
 pub mod error;
 pub mod experiments;
 pub mod fit;
+pub mod kern;
 pub mod lars;
 pub mod linalg;
 pub mod metrics;

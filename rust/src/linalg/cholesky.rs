@@ -13,6 +13,7 @@
 //! ```
 
 use super::dense::DenseMatrix;
+use crate::kern;
 use std::fmt;
 
 /// Errors from factorization (loss of positive-definiteness — in exact
@@ -81,7 +82,12 @@ impl Cholesky {
     }
 
     /// Append one row of the Gram matrix: `row = [G[i][0..=i]]` where
-    /// `i == self.dim`. Computes the new factor row in place.
+    /// `i == self.dim`. Computes the new factor row in place. The
+    /// recurrence subtractions run through the [`crate::kern`]
+    /// multi-accumulator dot (canonical order over the `[0, j)` row
+    /// prefix) — the same arithmetic [`Self::solve_lower`] and
+    /// [`Self::append_block`] use, which is what keeps the panel
+    /// update bit-identical to sequential `push_row`s.
     pub fn push_row(&mut self, grow: &[f64]) -> Result<(), CholeskyError> {
         let i = self.dim;
         assert_eq!(grow.len(), i + 1);
@@ -90,16 +96,11 @@ impl Cholesky {
         for j in 0..i {
             // l[i][j] = (g[i][j] − Σ_{k<j} l[i][k]·l[j][k]) / l[j][j]
             let js = row_start(j);
-            let mut s = grow[j];
-            for k in 0..j {
-                s -= self.l[start + k] * self.l[js + k];
-            }
+            let s = grow[j]
+                - kern::dot(&self.l[start..start + j], &self.l[js..js + j]);
             self.l[start + j] = s / self.l[js + j];
         }
-        let mut d = grow[i];
-        for k in 0..i {
-            d -= self.l[start + k] * self.l[start + k];
-        }
+        let d = grow[i] - kern::sq_norm(&self.l[start..start + i]);
         if d <= 0.0 || !d.is_finite() {
             self.l.truncate(start);
             return Err(CholeskyError::NotPositiveDefinite(i, d));
@@ -116,14 +117,15 @@ impl Cholesky {
     /// * `gbb` — `A_Bᵀ A_B`, shape `b × b` (full symmetric).
     ///
     /// The panel `H = L_k⁻¹·gib` is `b` *independent* forward solves,
-    /// chunked over panel columns on the [`crate::par`] pool; the small
-    /// `b × b` Schur complement `Ω Ωᵀ = gbb − HᵀH` is factored serially
-    /// and `[Hᵀ | Ω]` spliced under the existing factor. Every f64
-    /// operation happens in the same order as `b` sequential
-    /// `push_row`s (the per-column solve *is* `push_row`'s off-diagonal
-    /// recurrence, and the Schur subtraction preserves its ascending-k
-    /// order), so the result is bit-identical to the row-by-row path —
-    /// on any thread count. Unlike `push_row` loops, failure leaves the
+    /// chunked over panel columns on the [`crate::par`] pool; the
+    /// trailing `b × b` rows are then completed serially by running
+    /// `push_row`'s own recurrence over the concatenated `[H | Ω]`
+    /// prefixes (the first `k` entries of each new row are exactly the
+    /// parallel solves, so no arithmetic repeats). Because the solve
+    /// and the recurrence both subtract through the same
+    /// [`crate::kern::dot`] canonical order over the `[0, j)` prefix,
+    /// the result is bit-identical to `b` sequential `push_row`s — on
+    /// any thread count. Unlike `push_row` loops, failure leaves the
     /// factor untouched (no partially appended rows).
     pub fn append_block(&mut self, gib: &DenseMatrix, gbb: &DenseMatrix) -> Result<(), CholeskyError> {
         let k = self.dim;
@@ -147,34 +149,30 @@ impl Cholesky {
                 .collect::<Vec<_>>()
         })
         .concat();
-        // Schur complement S = gbb − HᵀH, subtracting H terms in the
-        // same ascending order `push_row`'s inner loop would, then its
-        // small serial factorization Ω.
-        let mut omega = Cholesky::empty();
-        for r in 0..b {
-            let mut grow = Vec::with_capacity(r + 1);
-            for j in 0..=r {
-                let mut s = gbb.get(r, j);
-                for x in 0..k {
-                    s -= h_cols[r][x] * h_cols[j][x];
-                }
-                grow.push(s);
+        // Complete each new packed row [ Hᵀ[r] | Ω[r] ] with push_row's
+        // recurrence over the full prefix, buffered so failure leaves
+        // the factor untouched.
+        let mut new_rows: Vec<Vec<f64>> = Vec::with_capacity(b);
+        for (r, h_col) in h_cols.into_iter().enumerate() {
+            let mut row = h_col;
+            row.reserve(r + 1);
+            for (j, prev) in new_rows.iter().enumerate() {
+                // l[k+r][k+j] = (g − Σ_{x<k+j} row[x]·prev[x]) / prev[k+j]
+                let s = gbb.get(r, j) - kern::dot(&row[..k + j], &prev[..k + j]);
+                row.push(s / prev[k + j]);
             }
-            omega.push_row(&grow).map_err(|e| match e {
+            let d = gbb.get(r, r) - kern::sq_norm(&row[..k + r]);
+            if d <= 0.0 || !d.is_finite() {
                 // Report the pivot in full-factor coordinates, as the
                 // row-by-row path would.
-                CholeskyError::NotPositiveDefinite(_, v) => {
-                    CholeskyError::NotPositiveDefinite(k + r, v)
-                }
-            })?;
-        }
-        // Splice the b new rows [ Hᵀ[r] | Ω[r] ] under the factor.
-        self.l.reserve(b * k + row_start(b));
-        for (r, h_col) in h_cols.iter().enumerate() {
-            self.l.extend_from_slice(h_col);
-            for j in 0..=r {
-                self.l.push(omega.get(r, j));
+                return Err(CholeskyError::NotPositiveDefinite(k + r, d));
             }
+            row.push(d.sqrt());
+            new_rows.push(row);
+        }
+        self.l.reserve(b * k + row_start(b));
+        for row in &new_rows {
+            self.l.extend_from_slice(row);
         }
         self.dim = k + b;
         Ok(())
@@ -208,16 +206,17 @@ impl Cholesky {
         admitted
     }
 
-    /// Forward substitution: solve `L x = rhs` in place.
+    /// Forward substitution: solve `L x = rhs` in place. The prefix
+    /// subtraction is the [`crate::kern::dot`] canonical order —
+    /// identical arithmetic to [`Self::push_row`]'s off-diagonal
+    /// recurrence (the block-append bit-identity relies on this).
     pub fn solve_lower(&self, rhs: &mut [f64]) {
         assert_eq!(rhs.len(), self.dim);
         for i in 0..self.dim {
             let start = row_start(i);
-            let mut s = rhs[i];
-            for j in 0..i {
-                s -= self.l[start + j] * rhs[j];
-            }
-            rhs[i] = s / self.l[start + i];
+            let (prefix, tail) = rhs.split_at_mut(i);
+            let s = tail[0] - kern::dot(&self.l[start..start + i], prefix);
+            tail[0] = s / self.l[start + i];
         }
     }
 
@@ -235,10 +234,20 @@ impl Cholesky {
 
     /// Solve `(L Lᵀ) x = s`, i.e. `G x = s` (Algorithm 2, step 7).
     pub fn solve(&self, s: &[f64]) -> Vec<f64> {
-        let mut x = s.to_vec();
-        self.solve_lower(&mut x);
-        self.solve_upper(&mut x);
+        let mut x = Vec::new();
+        self.solve_into(s, &mut x);
         x
+    }
+
+    /// [`Self::solve`] into a caller-owned buffer — the fitters' inner
+    /// loops call this every iteration, so reusing `x` eliminates a
+    /// per-step heap allocation. `x` is cleared and refilled; the
+    /// arithmetic is identical to [`Self::solve`].
+    pub fn solve_into(&self, s: &[f64], x: &mut Vec<f64>) {
+        x.clear();
+        x.extend_from_slice(s);
+        self.solve_lower(x);
+        self.solve_upper(x);
     }
 
     /// Truncate back to the leading `dim0 × dim0` factor.

@@ -1,11 +1,16 @@
 //! Row-major dense matrices and the blocked kernels the LARS family
 //! needs. The row-streaming kernels fork onto [`crate::par`] in
-//! fixed-grain chunks: disjoint-output sweeps (`gemv`, `gemv_cols`)
+//! fixed-grain chunks and run each chunk through the register-blocked
+//! [`crate::kern`] panels (4-row packs, multi-accumulator reductions,
+//! 4×4 Gram micro-GEMM): disjoint-output sweeps (`gemv`, `gemv_cols`)
 //! keep serial numerics exactly, and chunked reductions (`at_r`,
 //! `gram_block`, column norms) combine per-chunk partials in ascending
-//! chunk order so results are bit-identical across thread counts.
+//! chunk order so results are bit-identical across thread counts (the
+//! kern canonical summation order is anchored at each fixed chunk
+//! boundary).
 
 use super::{axpy, dot};
+use crate::kern;
 use crate::par;
 
 /// Row-major dense `m × n` matrix of `f64`.
@@ -129,33 +134,24 @@ impl DenseMatrix {
         out
     }
 
-    /// `out = Aᵀ r` — the correlation kernel. Row-major friendly:
-    /// accumulate `r_i * row_i` (axpy per row), which streams both `A`
-    /// and the accumulator and vectorizes well. Row chunks run on the
-    /// pool, one partial accumulator each, combined in chunk order —
-    /// bit-identical across thread counts (fixed grain).
+    /// `out = Aᵀ r` — the correlation kernel. Each fixed-grain row
+    /// chunk runs [`kern::at_r_panel`] (4-row fused accumulation — ¼
+    /// the accumulator traffic of an axpy-per-row sweep); partials
+    /// combine in chunk order, so results are bit-identical across
+    /// thread counts.
     pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.m);
         assert_eq!(out.len(), self.n);
         let grain = self.row_grain(self.n);
         if self.m <= grain {
             out.fill(0.0);
-            for i in 0..self.m {
-                let ri = r[i];
-                if ri != 0.0 {
-                    axpy(ri, self.row(i), out);
-                }
-            }
+            kern::at_r_panel(&self.data, self.n, r, out);
             return;
         }
+        let n = self.n;
         let partials = par::map_chunks(self.m, grain, |lo, hi| {
-            let mut acc = vec![0.0_f64; self.n];
-            for i in lo..hi {
-                let ri = r[i];
-                if ri != 0.0 {
-                    axpy(ri, self.row(i), &mut acc);
-                }
-            }
+            let mut acc = vec![0.0_f64; n];
+            kern::at_r_panel(&self.data[lo * n..hi * n], n, &r[lo..hi], &mut acc);
             acc
         });
         let (first, rest) = partials.split_first().expect("m > grain implies chunks");
@@ -166,57 +162,81 @@ impl DenseMatrix {
     }
 
     /// `out = A[:, cols] · w` — apply a direction supported on `cols`.
-    /// Output rows are disjoint, so the parallel form is bit-identical
-    /// to the serial loop.
+    /// Per-row [`kern::dot_idx`] gather (four accumulators); output
+    /// rows are disjoint, so the parallel form is bit-identical to the
+    /// serial loop.
     pub fn gemv_cols(&self, cols: &[usize], w: &[f64], out: &mut [f64]) {
         assert_eq!(cols.len(), w.len());
         assert_eq!(out.len(), self.m);
         let grain = self.row_grain(cols.len());
         par::for_chunks_mut(out, grain, |lo, chunk| {
             for (k, o) in chunk.iter_mut().enumerate() {
-                let row = self.row(lo + k);
-                let mut s = 0.0;
-                for (&x, &j) in w.iter().zip(cols) {
-                    s += row[j] * x;
-                }
-                *o = s;
+                *o = kern::dot_idx(self.row(lo + k), cols, w);
             }
         });
     }
 
+    /// Fused equiangular step: `u = A[:, cols]·w` **and** `av = Aᵀu`
+    /// in one streaming pass over `A` (the fitters' steps 10–11 were
+    /// two full sweeps; fusing halves the hot-path memory traffic).
+    /// `u` chunks are disjoint and each `av` partial is built from its
+    /// own chunk's `u` values, combined in chunk order — bit-identical
+    /// across thread counts.
+    pub fn gemv_cols_at_r(&self, cols: &[usize], w: &[f64], u: &mut [f64], av: &mut [f64]) {
+        assert_eq!(cols.len(), w.len());
+        assert_eq!(u.len(), self.m);
+        assert_eq!(av.len(), self.n);
+        let n = self.n;
+        let grain = self.row_grain(cols.len() + n);
+        if self.m <= grain {
+            av.fill(0.0);
+            kern::fused_step_panel(&self.data, n, cols, w, u, av);
+            return;
+        }
+        // Split u at the same fixed chunk boundaries the reduction
+        // uses so each task owns its rows of u.
+        let ranges = par::chunk_ranges(self.m, grain);
+        let mut tasks = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f64] = u;
+        for &(lo, hi) in &ranges {
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            let rows = &self.data[lo * n..hi * n];
+            tasks.push(move || {
+                let mut acc = vec![0.0_f64; n];
+                kern::fused_step_panel(rows, n, cols, w, head, &mut acc);
+                acc
+            });
+        }
+        let partials = par::run_tasks(tasks);
+        let (first, sum_rest) = partials.split_first().expect("m > grain implies chunks");
+        av.copy_from_slice(first);
+        for p in sum_rest {
+            axpy(1.0, p, av);
+        }
+    }
+
     /// Gram block `A[:, ii]ᵀ · A[:, jj]` as a dense `|ii| × |jj|` matrix.
     ///
-    /// Streams A exactly once (rank-1 accumulation into the block). The
-    /// `jj` values of each row are hoisted into a contiguous scratch
-    /// buffer so the inner loop is a register-friendly `v · rj[b]` FMA
-    /// chain rather than strided re-loads — 3-4x on tall matrices
-    /// (EXPERIMENTS.md §Perf, L3 iteration 2).
+    /// Streams A exactly once through [`kern::gram_panel`]: four rows'
+    /// `ii`/`jj` values are packed into contiguous panels and the block
+    /// accumulates in 4×4 register tiles. Row chunks run on the pool
+    /// with private blocks + scratch, combined in chunk order (fixed
+    /// grain ⇒ thread-count independent bits).
     pub fn gram_block(&self, ii: &[usize], jj: &[usize]) -> DenseMatrix {
         let nb = jj.len();
         let na = ii.len();
+        let n = self.n;
         let mut out = DenseMatrix::zeros(na, nb);
-        // Row chunks accumulate rank-1 updates into private blocks,
-        // combined in chunk order (fixed grain ⇒ thread-count
-        // independent bits).
+        if na == 0 || nb == 0 || self.m == 0 {
+            return out;
+        }
         let grain = self.row_grain(na * nb + nb);
         let partials = par::map_chunks(self.m, grain, |lo, hi| {
             let mut acc = vec![0.0_f64; na * nb];
-            let mut rj = vec![0.0_f64; nb];
-            for rix in lo..hi {
-                let row = self.row(rix);
-                for (x, &j) in rj.iter_mut().zip(jj) {
-                    *x = row[j];
-                }
-                for (a, &i) in ii.iter().enumerate() {
-                    let v = row[i];
-                    if v != 0.0 {
-                        let orow = &mut acc[a * nb..(a + 1) * nb];
-                        for (o, &x) in orow.iter_mut().zip(&rj) {
-                            *o += v * x;
-                        }
-                    }
-                }
-            }
+            let mut pi = vec![0.0_f64; 4 * na];
+            let mut pj = vec![0.0_f64; 4 * nb];
+            kern::gram_panel(&self.data[lo * n..hi * n], n, ii, jj, &mut pi, &mut pj, &mut acc);
             acc
         });
         if let Some((first, rest)) = partials.split_first() {
@@ -243,8 +263,9 @@ impl DenseMatrix {
         (0..self.m).map(|i| self.get(i, j).powi(2)).sum::<f64>().sqrt()
     }
 
-    /// Squared ℓ2 norms of every column in one row-streaming sweep,
-    /// chunked on the pool (partials combined in chunk order).
+    /// Squared ℓ2 norms of every column in one row-streaming sweep
+    /// through [`kern::col_sq_norms_panel`] (4-row fused), chunked on
+    /// the pool (partials combined in chunk order).
     fn col_sq_norms(&self) -> Vec<f64> {
         let n = self.n;
         let mut norms = vec![0.0_f64; n];
@@ -254,12 +275,7 @@ impl DenseMatrix {
         let grain = self.row_grain(n);
         let partials = par::map_chunks(self.m, grain, |lo, hi| {
             let mut acc = vec![0.0_f64; n];
-            for i in lo..hi {
-                let row = &self.data[i * n..(i + 1) * n];
-                for (a, &v) in acc.iter_mut().zip(row) {
-                    *a += v * v;
-                }
-            }
+            kern::col_sq_norms_panel(&self.data[lo * n..hi * n], n, &mut acc);
             acc
         });
         let (first, rest) = partials.split_first().expect("m > 0 implies chunks");
@@ -278,27 +294,35 @@ impl DenseMatrix {
     }
 
     /// Normalize every column to unit ℓ2 norm (the paper's standing
-    /// assumption, §5.2). Zero columns are left untouched. Both the
-    /// norm sweep and the scaling pass run chunked on the pool.
+    /// assumption, §5.2). Zero columns are left untouched.
     pub fn normalize_columns(&mut self) {
+        let _ = self.normalize_columns_with_norms();
+    }
+
+    /// Fused normalize: one norm sweep + one scaling pass, **returning
+    /// the pre-normalization column norms** (0.0 for zero columns) so
+    /// callers that need both — dataset generation, the serving layer's
+    /// norm cache — don't pay a separate `col_norms` sweep. Both passes
+    /// run chunked on the pool; scaling mutates disjoint row chunks, so
+    /// numerics are identical to the serial loop.
+    pub fn normalize_columns_with_norms(&mut self) -> Vec<f64> {
         let n = self.n;
         if n == 0 || self.m == 0 {
-            return;
+            return vec![0.0; n];
         }
-        let mut norms = self.col_sq_norms();
-        for nj in norms.iter_mut() {
-            *nj = if *nj > 0.0 { nj.sqrt() } else { 1.0 };
-        }
-        // Scaling mutates disjoint row chunks (grain aligned to row
-        // boundaries) — numerics identical to the serial loop.
+        let norms: Vec<f64> =
+            self.col_sq_norms().into_iter().map(f64::sqrt).collect();
+        let inv: Vec<f64> =
+            norms.iter().map(|&nj| if nj > 0.0 { 1.0 / nj } else { 1.0 }).collect();
         let grain_rows = self.row_grain(n);
         par::for_chunks_mut(&mut self.data, grain_rows * n, |_, chunk| {
             for row in chunk.chunks_mut(n) {
-                for (v, nj) in row.iter_mut().zip(&norms) {
-                    *v /= *nj;
+                for (v, s) in row.iter_mut().zip(&inv) {
+                    *v *= *s;
                 }
             }
         });
+        norms
     }
 
     /// Full matvec `out = A x`. Each output row is an independent
@@ -428,6 +452,73 @@ mod tests {
             assert!((nj - a.col_norm(j)).abs() < 1e-12, "col {j}");
         }
         assert!(DenseMatrix::zeros(0, 3).col_norms().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fused_step_matches_two_pass() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(42);
+        let a = DenseMatrix::from_fn(37, 11, |_, _| rng.normal());
+        let cols = [0usize, 2, 5, 7, 10];
+        let w = [0.5, -1.5, 0.25, 1.0, -0.75];
+        let mut u = vec![0.0; 37];
+        let mut av = vec![0.0; 11];
+        a.gemv_cols_at_r(&cols, &w, &mut u, &mut av);
+        let mut u2 = vec![0.0; 37];
+        a.gemv_cols(&cols, &w, &mut u2);
+        let mut av2 = vec![0.0; 11];
+        a.at_r(&u2, &mut av2);
+        for (x, y) in u.iter().zip(&u2) {
+            assert_eq!(x.to_bits(), y.to_bits(), "fused u must equal gemv_cols exactly");
+        }
+        for (x, y) in av.iter().zip(&av2) {
+            assert!((x - y).abs() < 1e-10 * (1.0 + y.abs()), "fused av off: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn fused_step_bit_identical_across_thread_counts() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(43);
+        let a = DenseMatrix::from_fn(700, 30, |_, _| rng.normal());
+        let cols: Vec<usize> = (0..12).collect();
+        let w: Vec<f64> = (0..12).map(|k| (k as f64 * 0.2).cos()).collect();
+        let run = |threads: usize| {
+            let pool = crate::par::ThreadPool::new(threads, 64);
+            crate::par::with_pool(&pool, || {
+                let mut u = vec![0.0; 700];
+                let mut av = vec![0.0; 30];
+                a.gemv_cols_at_r(&cols, &w, &mut u, &mut av);
+                (u, av)
+            })
+        };
+        let base = run(1);
+        for threads in [2usize, 4] {
+            let got = run(threads);
+            for (x, y) in base.0.iter().chain(&base.1).zip(got.0.iter().chain(&got.1)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_with_norms_returns_prenormalization_norms() {
+        let mut a = small();
+        let expect: Vec<f64> = (0..2).map(|j| a.col_norm(j)).collect();
+        let norms = a.normalize_columns_with_norms();
+        for (x, y) in norms.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        for j in 0..2 {
+            assert!((a.col_norm(j) - 1.0).abs() < 1e-12);
+        }
+        // Zero columns report norm 0 and stay untouched.
+        let mut z = DenseMatrix::zeros(3, 2);
+        z.set(0, 0, 2.0);
+        let norms = z.normalize_columns_with_norms();
+        assert_eq!(norms[1], 0.0);
+        assert_eq!(z.get(1, 1), 0.0);
+        assert!((z.get(0, 0) - 1.0).abs() < 1e-15);
     }
 
     #[test]

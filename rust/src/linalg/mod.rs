@@ -18,35 +18,13 @@ pub use dense::DenseMatrix;
 pub use matrix::Matrix;
 pub use sparse::CscMatrix;
 
-/// Dot product of two equally sized slices (unrolled by 4).
-#[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
-}
+/// Dot product of two equally sized slices — the [`crate::kern`]
+/// multi-accumulator kernel (canonical summation order).
+pub use crate::kern::dot;
 
-/// `y += alpha * x`.
-#[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
-    }
-}
+/// `y += alpha * x` — the [`crate::kern`] unrolled kernel
+/// (element-wise, identical numerics to the naive loop).
+pub use crate::kern::axpy;
 
 /// Euclidean norm.
 #[inline]

@@ -8,6 +8,7 @@
 
 use super::dense::DenseMatrix;
 use super::axpy;
+use crate::kern;
 use crate::par;
 
 /// CSC sparse `m × n` matrix of `f64`.
@@ -107,9 +108,10 @@ impl CscMatrix {
         par::grain_for((self.nnz() / self.n.max(1)).max(1))
     }
 
-    /// `out = Aᵀ r`: per-column sparse dot with `r`. Each `out[j]` is
-    /// independent, so the column-chunked parallel form is
-    /// bit-identical to the serial loop.
+    /// `out = Aᵀ r`: per-column [`kern::sparse_dot`] gather (four
+    /// accumulators). Each `out[j]` is independent, so the
+    /// column-chunked parallel form is bit-identical to the serial
+    /// loop.
     pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.m);
         assert_eq!(out.len(), self.n);
@@ -117,11 +119,7 @@ impl CscMatrix {
         par::for_chunks_mut(out, grain, |lo, chunk| {
             for (k, o) in chunk.iter_mut().enumerate() {
                 let (rows, vals) = self.col(lo + k);
-                let mut s = 0.0;
-                for (&ri, &v) in rows.iter().zip(vals) {
-                    s += v * r[ri as usize];
-                }
-                *o = s;
+                *o = kern::sparse_dot(rows, vals, r);
             }
         });
     }
@@ -145,9 +143,7 @@ impl CscMatrix {
                     continue;
                 }
                 let (rows, vals) = self.col(j);
-                for (&ri, &v) in rows.iter().zip(vals) {
-                    out[ri as usize] += wk * v;
-                }
+                kern::scatter_axpy(wk, rows, vals, out);
             }
             return;
         }
@@ -159,9 +155,7 @@ impl CscMatrix {
                     continue;
                 }
                 let (rows, vals) = self.col(cols[k]);
-                for (&ri, &v) in rows.iter().zip(vals) {
-                    acc[ri as usize] += wk * v;
-                }
+                kern::scatter_axpy(wk, rows, vals, &mut acc);
             }
             acc
         });
@@ -216,11 +210,7 @@ impl CscMatrix {
                 }
                 for (o, &j) in orow.iter_mut().zip(jj) {
                     let (rj, vj) = self.col(j);
-                    let mut s = 0.0;
-                    for (&r, &v) in rj.iter().zip(vj) {
-                        s += v * scratch[r as usize];
-                    }
-                    *o = s;
+                    *o = kern::sparse_dot(rj, vj, &scratch);
                 }
                 for &r in ri {
                     scratch[r as usize] = 0.0;
@@ -233,17 +223,13 @@ impl CscMatrix {
     /// Dot of column `j` with a dense length-`m` vector.
     pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
         let (rows, vals) = self.col(j);
-        let mut s = 0.0;
-        for (&ri, &v) in rows.iter().zip(vals) {
-            s += v * r[ri as usize];
-        }
-        s
+        kern::sparse_dot(rows, vals, r)
     }
 
     /// ℓ2 norm of column `j`.
     pub fn col_norm(&self, j: usize) -> f64 {
         let (_, vals) = self.col(j);
-        vals.iter().map(|v| v * v).sum::<f64>().sqrt()
+        kern::sq_norm(vals).sqrt()
     }
 
     /// ℓ2 norms of all columns — the pool-parallel form of a
@@ -257,21 +243,29 @@ impl CscMatrix {
     }
 
     /// Scale every column to unit ℓ2 norm (zero columns untouched).
-    /// Column chunks mutate disjoint `values` ranges (chunk boundaries
-    /// land on `colptr` entries), so numerics match the serial loop.
     pub fn normalize_columns(&mut self) {
+        let _ = self.normalize_columns_with_norms();
+    }
+
+    /// Fused normalize: per-column norm + scale in one traversal of
+    /// `values`, **returning the pre-normalization column norms** (0.0
+    /// for empty columns). Column chunks mutate disjoint `values`
+    /// ranges (chunk boundaries land on `colptr` entries) and each
+    /// chunk returns its own norm slice concatenated in chunk order,
+    /// so numerics match the serial loop on any thread count.
+    pub fn normalize_columns_with_norms(&mut self) -> Vec<f64> {
         let ranges = par::chunk_ranges(self.n, self.col_grain());
         if ranges.len() <= 1 {
+            let mut norms = Vec::with_capacity(self.n);
             for j in 0..self.n {
                 let (s, e) = (self.colptr[j], self.colptr[j + 1]);
-                let nrm = self.values[s..e].iter().map(|v| v * v).sum::<f64>().sqrt();
+                let nrm = kern::sq_norm(&self.values[s..e]).sqrt();
                 if nrm > 0.0 {
-                    for v in &mut self.values[s..e] {
-                        *v /= nrm;
-                    }
+                    kern::scale(&mut self.values[s..e], 1.0 / nrm);
                 }
+                norms.push(nrm);
             }
-            return;
+            return norms;
         }
         let colptr = &self.colptr;
         let mut rest: &mut [f64] = &mut self.values;
@@ -283,19 +277,20 @@ impl CscMatrix {
             rest = tail;
             let start = base;
             tasks.push(move || {
+                let mut local = Vec::with_capacity(hi - lo);
                 for j in lo..hi {
                     let (s, e) = (colptr[j] - start, colptr[j + 1] - start);
-                    let nrm = head[s..e].iter().map(|v| v * v).sum::<f64>().sqrt();
+                    let nrm = kern::sq_norm(&head[s..e]).sqrt();
                     if nrm > 0.0 {
-                        for v in &mut head[s..e] {
-                            *v /= nrm;
-                        }
+                        kern::scale(&mut head[s..e], 1.0 / nrm);
                     }
+                    local.push(nrm);
                 }
+                local
             });
             base = end;
         }
-        par::run_tasks(tasks);
+        par::run_tasks(tasks).concat()
     }
 
     /// Row slice `[r0, r1)` as a new CSC matrix (bLARS rank shard).

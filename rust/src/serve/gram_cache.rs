@@ -1,0 +1,496 @@
+//! Per-dataset Gram/norm cache for the serving layer.
+//!
+//! Every `/fit` used to regenerate its dataset and recompute every
+//! Gram panel from scratch — including warm-started refits of a model
+//! family, whose selection prefix (and therefore whose panel keys)
+//! repeat exactly. [`GramCache`] holds, per dataset **name**:
+//!
+//! * the loaded dataset itself (generation + column normalization are
+//!   full passes over the data);
+//! * its pre-normalization column norms (free by-product of the fused
+//!   normalize pass, see `Matrix::normalize_columns_with_norms`);
+//! * a [`crate::kern::cache::PanelStore`] of previously materialized
+//!   Gram panels, which `Matrix::gram_block` consults while the fit
+//!   runs under [`crate::kern::cache::with_store`].
+//!
+//! **Identity + invalidation.** The name is the dataset's identity; a
+//! content *fingerprint* (FNV-1a over shape, nnz, and sampled value
+//! bits of `A` and `b`) validates it. Registering a name whose
+//! fingerprint differs from the cached entry — a dataset re-uploaded
+//! with different contents — invalidates the old entry (norms and all
+//! panels) instead of serving stale values. The cache holds at most
+//! `max_datasets` entries, evicting least-recently-used.
+//!
+//! Counters surface through `/stats` as `gram_cache` (hit/miss at both
+//! the dataset and the panel level, evictions, invalidations).
+
+use crate::data::datasets::Dataset;
+use crate::kern::cache::{LruQueue, PanelCounters, PanelStore};
+use crate::linalg::Matrix;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Counter snapshot for `/stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GramCacheStats {
+    /// Dataset entries currently cached.
+    pub datasets: usize,
+    /// Fits that found their dataset (and panel store) cached.
+    pub dataset_hits: u64,
+    /// Fits that had to load + register their dataset.
+    pub dataset_misses: u64,
+    /// Entries dropped because a name re-registered with different
+    /// contents.
+    pub invalidations: u64,
+    /// Entries dropped by the LRU bounds (entry count or dataset
+    /// payload bytes).
+    pub evictions: u64,
+    /// Approximate payload bytes of the cached datasets themselves.
+    pub dataset_bytes: usize,
+    /// Panel-level counters aggregated over live and retired entries.
+    pub panel_hits: u64,
+    pub panel_misses: u64,
+    pub panel_evictions: u64,
+    /// Panels and payload bytes currently held across live entries.
+    pub panels: usize,
+    pub panel_bytes: usize,
+}
+
+/// Summary of a dataset's stored pre-normalization column norms —
+/// the per-column scale the fitted models assume was divided out. A
+/// client predicting from *raw* (unnormalized) features needs these to
+/// rescale inputs; `/datasets` serves the summary so operators can see
+/// the training scale without shipping the full vector.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NormSummary {
+    pub count: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl NormSummary {
+    fn from_norms(norms: Option<&Vec<f64>>) -> NormSummary {
+        let Some(norms) = norms else { return NormSummary::default() };
+        if norms.is_empty() {
+            return NormSummary::default();
+        }
+        let (mut lo, mut hi, mut sum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+        for &v in norms.iter() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+            sum += v;
+        }
+        NormSummary { count: norms.len(), min: lo, max: hi, mean: sum / norms.len() as f64 }
+    }
+}
+
+/// One row of the `/datasets` listing (see [`GramCache::list`]).
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    pub name: String,
+    pub seed: u64,
+    pub fingerprint: u64,
+    pub m: usize,
+    pub n: usize,
+    pub norms: NormSummary,
+    pub panels: crate::kern::cache::PanelCounters,
+}
+
+struct Entry {
+    seed: u64,
+    fingerprint: u64,
+    dataset: Arc<Dataset>,
+    /// Approximate payload bytes of `dataset` (counted against
+    /// `max_dataset_bytes`).
+    bytes: usize,
+    store: Arc<PanelStore>,
+}
+
+struct Inner {
+    entries: HashMap<String, Entry>,
+    lru: LruQueue<String>,
+    /// Sum of `Entry::bytes` over live entries.
+    dataset_bytes: usize,
+    dataset_hits: u64,
+    dataset_misses: u64,
+    invalidations: u64,
+    evictions: u64,
+    /// Panel counters folded in from dropped entries.
+    retired: PanelCounters,
+}
+
+/// Thread-safe dataset-keyed cache of datasets, norms, and Gram panel
+/// stores. Triple-bounded: entry count (`max_datasets`), panel
+/// payload per entry (`max_panel_bytes`), and the cached datasets'
+/// own payload across entries (`max_dataset_bytes` — wide sparse
+/// datasets run to tens of MB each, so a count bound alone could pin
+/// hundreds of MB of RSS).
+pub struct GramCache {
+    max_datasets: usize,
+    max_panel_bytes: usize,
+    max_dataset_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+/// Default bound on cached dataset payload (256 MiB).
+const DEFAULT_MAX_DATASET_BYTES: usize = 256 << 20;
+
+impl Default for GramCache {
+    /// Serving defaults: 8 datasets, 32 MiB of panels each, 256 MiB of
+    /// dataset payload overall.
+    fn default() -> Self {
+        GramCache::new(8, 32 << 20)
+    }
+}
+
+impl GramCache {
+    /// Cache holding at most `max_datasets` entries (≥ 1), each with at
+    /// most `max_panel_bytes` of Gram panel payload, and at most
+    /// [`DEFAULT_MAX_DATASET_BYTES`](GramCache::dataset_byte_bound) of
+    /// dataset payload overall.
+    pub fn new(max_datasets: usize, max_panel_bytes: usize) -> Self {
+        GramCache {
+            max_datasets: max_datasets.max(1),
+            max_panel_bytes,
+            max_dataset_bytes: DEFAULT_MAX_DATASET_BYTES,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                lru: LruQueue::new(),
+                dataset_bytes: 0,
+                dataset_hits: 0,
+                dataset_misses: 0,
+                invalidations: 0,
+                evictions: 0,
+                retired: PanelCounters::default(),
+            }),
+        }
+    }
+
+    /// Override the dataset-payload byte bound (tests, memory-tight
+    /// deployments). Eviction always keeps the most recent entry so
+    /// the fit that just registered it can run.
+    pub fn dataset_byte_bound(mut self, max_dataset_bytes: usize) -> Self {
+        self.max_dataset_bytes = max_dataset_bytes;
+        self
+    }
+
+    /// Cached dataset + panel store for `(name, seed)`, marking the
+    /// entry most-recently-used. A cached entry under the same name
+    /// but a different seed does **not** match (different contents);
+    /// the subsequent [`Self::register`] will invalidate it.
+    pub fn lookup(&self, name: &str, seed: u64) -> Option<(Arc<Dataset>, Arc<PanelStore>)> {
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        match g.entries.get(name) {
+            Some(e) if e.seed == seed => {
+                let hit = (Arc::clone(&e.dataset), Arc::clone(&e.store));
+                g.lru.touch_or_push(name.to_string());
+                g.dataset_hits += 1;
+                Some(hit)
+            }
+            _ => {
+                g.dataset_misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Register a freshly loaded dataset under `name`, returning its
+    /// panel store (pre-seeded with the dataset's column norms). An
+    /// existing entry whose fingerprint differs — same name,
+    /// different contents — is invalidated; registering identical
+    /// contents again just refreshes the entry.
+    pub fn register(&self, name: &str, seed: u64, dataset: Arc<Dataset>) -> Arc<PanelStore> {
+        let fingerprint = fingerprint_dataset(&dataset);
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        if let Some(e) = g.entries.get(name) {
+            if e.fingerprint == fingerprint {
+                // Identical contents (e.g. two workers raced the same
+                // miss): keep the existing store and its panels.
+                let store = Arc::clone(&e.store);
+                g.lru.touch_or_push(name.to_string());
+                return store;
+            }
+            let old = g.entries.remove(name).expect("entry just observed");
+            g.lru.remove_by(|k| k == name);
+            g.dataset_bytes -= old.bytes;
+            g.invalidations += 1;
+            fold_retired(&mut g.retired, &old.store.counters());
+        }
+        let shape = (dataset.a.nrows(), dataset.a.ncols());
+        let bytes = approx_dataset_bytes(&dataset);
+        let store = Arc::new(PanelStore::new(shape, self.max_panel_bytes));
+        store.set_norms(Arc::new(dataset.col_norms.clone()));
+        g.entries.insert(
+            name.to_string(),
+            Entry { seed, fingerprint, dataset, bytes, store: Arc::clone(&store) },
+        );
+        g.dataset_bytes += bytes;
+        g.lru.touch_or_push(name.to_string());
+        // Evict under either bound, but never the entry just
+        // registered (the caller's fit needs it).
+        while g.entries.len() > 1
+            && (g.entries.len() > self.max_datasets
+                || g.dataset_bytes > self.max_dataset_bytes)
+        {
+            let Some(victim) = g.lru.pop_lru() else { break };
+            if let Some(old) = g.entries.remove(&victim) {
+                g.dataset_bytes -= old.bytes;
+                g.evictions += 1;
+                fold_retired(&mut g.retired, &old.store.counters());
+            }
+        }
+        store
+    }
+
+    /// Live dataset entries for the `/datasets` listing, sorted by
+    /// name: identity (name/seed/fingerprint/shape), a summary of the
+    /// stored pre-normalization column norms (the scale a client must
+    /// divide raw features by to match the unit-norm training data),
+    /// and the entry's panel counters.
+    pub fn list(&self) -> Vec<DatasetInfo> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<DatasetInfo> = g
+            .entries
+            .iter()
+            .map(|(name, e)| DatasetInfo {
+                name: name.clone(),
+                seed: e.seed,
+                fingerprint: e.fingerprint,
+                m: e.dataset.a.nrows(),
+                n: e.dataset.a.ncols(),
+                norms: NormSummary::from_norms(e.store.norms().as_deref()),
+                panels: e.store.counters(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Counter snapshot (live entries + retired accumulators).
+    pub fn stats(&self) -> GramCacheStats {
+        let g = self.inner.lock().unwrap();
+        let mut s = GramCacheStats {
+            datasets: g.entries.len(),
+            dataset_bytes: g.dataset_bytes,
+            dataset_hits: g.dataset_hits,
+            dataset_misses: g.dataset_misses,
+            invalidations: g.invalidations,
+            evictions: g.evictions,
+            panel_hits: g.retired.hits,
+            panel_misses: g.retired.misses,
+            panel_evictions: g.retired.evictions,
+            panels: 0,
+            panel_bytes: 0,
+        };
+        for e in g.entries.values() {
+            let c = e.store.counters();
+            s.panel_hits += c.hits;
+            s.panel_misses += c.misses;
+            s.panel_evictions += c.evictions;
+            s.panels += c.panels;
+            s.panel_bytes += c.bytes;
+        }
+        s
+    }
+}
+
+/// Approximate in-memory payload of a dataset: matrix values (+ row
+/// indices and column pointers for CSC), response, and norms.
+fn approx_dataset_bytes(ds: &Dataset) -> usize {
+    let matrix = match &ds.a {
+        Matrix::Dense(d) => d.nrows() * d.ncols() * 8,
+        Matrix::Sparse(s) => s.nnz() * 12 + (s.ncols() + 1) * 8,
+    };
+    matrix + ds.b.len() * 8 + ds.col_norms.len() * 8
+}
+
+fn fold_retired(retired: &mut PanelCounters, c: &PanelCounters) {
+    retired.hits += c.hits;
+    retired.misses += c.misses;
+    retired.evictions += c.evictions;
+}
+
+// ── content fingerprint ─────────────────────────────────────────────
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv_u64(h: u64, v: u64) -> u64 {
+    let mut h = h;
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Stride that samples at most ~1024 elements of a length-`len` slice.
+#[inline]
+fn sample_stride(len: usize) -> usize {
+    (len / 1024).max(1)
+}
+
+/// FNV-1a content fingerprint of a matrix: shape, nnz, and a strided
+/// sample of value bit patterns (plus row indices for CSC). Cheap
+/// (≤ ~2k hashed words) yet sensitive to any re-upload that changes
+/// shape, sparsity structure, or sampled values.
+pub fn fingerprint_matrix(a: &Matrix) -> u64 {
+    let mut h = FNV_OFFSET;
+    h = fnv_u64(h, a.nrows() as u64);
+    h = fnv_u64(h, a.ncols() as u64);
+    h = fnv_u64(h, a.nnz() as u64);
+    match a {
+        Matrix::Dense(d) => {
+            let data = d.data();
+            let stride = sample_stride(data.len());
+            let mut i = 0;
+            while i < data.len() {
+                h = fnv_u64(h, data[i].to_bits());
+                i += stride;
+            }
+        }
+        Matrix::Sparse(s) => {
+            let ncols = s.ncols();
+            let col_stride = sample_stride(ncols);
+            let mut j = 0;
+            while j < ncols {
+                let (rows, vals) = s.col(j);
+                h = fnv_u64(h, rows.len() as u64);
+                if let (Some(&r0), Some(&v0)) = (rows.first(), vals.first()) {
+                    h = fnv_u64(h, r0 as u64);
+                    h = fnv_u64(h, v0.to_bits());
+                }
+                if let (Some(&rl), Some(&vl)) = (rows.last(), vals.last()) {
+                    h = fnv_u64(h, rl as u64);
+                    h = fnv_u64(h, vl.to_bits());
+                }
+                j += col_stride;
+            }
+        }
+    }
+    h
+}
+
+/// Fingerprint of a full dataset (`A` plus a strided sample of `b`).
+pub fn fingerprint_dataset(ds: &Dataset) -> u64 {
+    let mut h = fingerprint_matrix(&ds.a);
+    h = fnv_u64(h, ds.b.len() as u64);
+    let stride = sample_stride(ds.b.len());
+    let mut i = 0;
+    while i < ds.b.len() {
+        h = fnv_u64(h, ds.b[i].to_bits());
+        i += stride;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    fn ds(seed: u64) -> Arc<Dataset> {
+        Arc::new(datasets::tiny(seed))
+    }
+
+    #[test]
+    fn fingerprint_is_deterministic_and_content_sensitive() {
+        let a = ds(1);
+        let b = ds(1);
+        let c = ds(2);
+        assert_eq!(fingerprint_dataset(&a), fingerprint_dataset(&b));
+        assert_ne!(fingerprint_dataset(&a), fingerprint_dataset(&c));
+        let dense = Arc::new(datasets::tiny_dense(3));
+        assert_ne!(fingerprint_dataset(&a), fingerprint_dataset(&dense));
+    }
+
+    #[test]
+    fn lookup_register_hit_miss_counters() {
+        let cache = GramCache::new(4, 1 << 20);
+        assert!(cache.lookup("tiny", 1).is_none());
+        let d = ds(1);
+        let store = cache.register("tiny", 1, d.clone());
+        store.insert(&[0], &[1], Arc::new(vec![0.5]));
+        let (back, store2) = cache.lookup("tiny", 1).expect("registered");
+        assert!(Arc::ptr_eq(&back, &d));
+        assert!(store2.lookup(&[0], &[1]).is_some(), "panels survive across lookups");
+        let s = cache.stats();
+        assert_eq!((s.dataset_hits, s.dataset_misses, s.datasets), (1, 1, 1));
+        assert_eq!(s.panel_hits, 1);
+        assert!(s.panels == 1 && s.panel_bytes == 8);
+        // Norms were seeded from the dataset at registration.
+        assert_eq!(store2.norms().unwrap().len(), d.a.ncols());
+    }
+
+    #[test]
+    fn reupload_with_different_contents_invalidates() {
+        let cache = GramCache::new(4, 1 << 20);
+        let store = cache.register("tiny", 1, ds(1));
+        store.insert(&[0], &[0], Arc::new(vec![1.0]));
+        // Same name, different contents (different seed) → stale entry
+        // must be dropped, not served.
+        assert!(cache.lookup("tiny", 2).is_none());
+        let store2 = cache.register("tiny", 2, ds(2));
+        assert!(store2.lookup(&[0], &[0]).is_none(), "panels of the old contents are gone");
+        let s = cache.stats();
+        assert_eq!(s.invalidations, 1);
+        assert_eq!(s.datasets, 1);
+        // Re-registering identical contents keeps the live store.
+        store2.insert(&[1], &[1], Arc::new(vec![2.0]));
+        let store3 = cache.register("tiny", 2, ds(2));
+        assert!(store3.lookup(&[1], &[1]).is_some());
+        assert_eq!(cache.stats().invalidations, 1);
+    }
+
+    #[test]
+    fn list_reports_identity_and_norm_summary() {
+        let cache = GramCache::new(4, 1 << 20);
+        let d = ds(1);
+        cache.register("tiny", 1, d.clone());
+        let rows = cache.list();
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.name, "tiny");
+        assert_eq!((row.m, row.n), (d.a.nrows(), d.a.ncols()));
+        assert_eq!(row.norms.count, d.col_norms.len());
+        let mean = d.col_norms.iter().sum::<f64>() / d.col_norms.len() as f64;
+        assert!((row.norms.mean - mean).abs() < 1e-12);
+        assert!(row.norms.min <= row.norms.mean && row.norms.mean <= row.norms.max);
+        assert_eq!(row.fingerprint, fingerprint_dataset(&d));
+    }
+
+    #[test]
+    fn lru_bound_evicts_oldest_dataset() {
+        let cache = GramCache::new(2, 1 << 20);
+        cache.register("a", 1, ds(1));
+        cache.register("b", 1, ds(2));
+        assert!(cache.lookup("a", 1).is_some()); // a more recent than b
+        cache.register("c", 1, ds(3));
+        assert!(cache.lookup("b", 1).is_none(), "LRU dataset evicted");
+        assert!(cache.lookup("a", 1).is_some());
+        assert!(cache.lookup("c", 1).is_some());
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.datasets, 2);
+        assert!(s.dataset_bytes > 0);
+    }
+
+    #[test]
+    fn dataset_byte_bound_evicts_but_keeps_newest() {
+        // A bound smaller than one dataset: every register evicts the
+        // previous entry but never the one just registered.
+        let cache = GramCache::new(8, 1 << 20).dataset_byte_bound(1);
+        cache.register("a", 1, ds(1));
+        assert_eq!(cache.stats().datasets, 1, "newest survives an over-budget bound");
+        cache.register("b", 1, ds(2));
+        let s = cache.stats();
+        assert_eq!(s.datasets, 1, "byte bound evicted the older dataset");
+        assert!(cache.lookup("a", 1).is_none());
+        assert!(cache.lookup("b", 1).is_some());
+        assert_eq!(s.evictions, 1);
+    }
+}

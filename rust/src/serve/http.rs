@@ -4,7 +4,10 @@
 //!
 //! * `GET  /healthz` — liveness probe
 //! * `GET  /models`  — registry listing (JSON)
-//! * `GET  /stats`   — engine/queue/registry counters (JSON)
+//! * `GET  /datasets`— GramCache listing: cached datasets, their
+//!   column-norm summaries (the training scale raw features must be
+//!   divided by), and per-dataset panel counters (JSON)
+//! * `GET  /stats`   — engine/queue/registry/gram-cache counters (JSON)
 //! * `POST /fit`     — enqueue a fit job (`?wait=1` blocks until done)
 //! * `POST /predict` — batched prediction (line-protocol body)
 //! * `POST /shutdown`— graceful stop (only with `allow_shutdown`, i.e.
@@ -240,6 +243,7 @@ fn route(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (200, "{\"ok\":true}".to_string()),
         ("GET", "/models") => (200, models_json(state)),
+        ("GET", "/datasets") => (200, datasets_json(state)),
         ("GET", "/stats") => (200, stats_json(state)),
         ("POST", "/predict") => predict(req, state),
         ("POST", "/fit") => fit(req, state),
@@ -373,15 +377,48 @@ fn models_json(state: &Arc<ServerState>) -> String {
     format!("{{\"models\":[{}]}}", items.join(","))
 }
 
+fn datasets_json(state: &Arc<ServerState>) -> String {
+    let items: Vec<String> = state
+        .queue
+        .gram_cache()
+        .list()
+        .iter()
+        .map(|d| {
+            format!(
+                "{{\"name\":\"{}\",\"seed\":{},\"fingerprint\":\"{:016x}\",\"m\":{},\"n\":{},\
+                  \"norms\":{{\"count\":{},\"min\":{},\"max\":{},\"mean\":{}}},\
+                  \"panels\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"held\":{},\"bytes\":{}}}}}",
+                json_escape(&d.name),
+                d.seed,
+                d.fingerprint,
+                d.m,
+                d.n,
+                d.norms.count,
+                json_f64(d.norms.min),
+                json_f64(d.norms.max),
+                json_f64(d.norms.mean),
+                d.panels.hits,
+                d.panels.misses,
+                d.panels.evictions,
+                d.panels.panels,
+                d.panels.bytes
+            )
+        })
+        .collect();
+    format!("{{\"datasets\":[{}]}}", items.join(","))
+}
+
 fn stats_json(state: &Arc<ServerState>) -> String {
     let e = state.engine.stats();
     let q = state.queue.stats();
     let r: RegistryStats = state.registry.stats();
+    let g = state.queue.gram_cache().stats();
     format!(
         "{{\"uptime_secs\":{},\"http_requests\":{},\
           \"engine\":{{\"queries\":{},\"batches\":{},\"batched_rows\":{},\"max_batch_rows\":{},\"cache_hits\":{},\"cache_misses\":{},\"errors\":{}}},\
           \"queue\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"in_flight\":{}}},\
-          \"registry\":{{\"models\":{},\"inserted\":{},\"evicted\":{},\"warm_reused\":{},\"approx_bytes\":{}}}}}",
+          \"registry\":{{\"models\":{},\"inserted\":{},\"evicted\":{},\"warm_reused\":{},\"approx_bytes\":{}}},\
+          \"gram_cache\":{{\"datasets\":{},\"dataset_bytes\":{},\"dataset_hits\":{},\"dataset_misses\":{},\"invalidations\":{},\"evictions\":{},\"panel_hits\":{},\"panel_misses\":{},\"panel_evictions\":{},\"panels\":{},\"panel_bytes\":{}}}}}",
         json_f64(state.started.elapsed().as_secs_f64()),
         state.requests.load(Ordering::Relaxed),
         e.queries,
@@ -399,7 +436,18 @@ fn stats_json(state: &Arc<ServerState>) -> String {
         r.inserted,
         r.evicted,
         r.warm_reused,
-        r.approx_bytes
+        r.approx_bytes,
+        g.datasets,
+        g.dataset_bytes,
+        g.dataset_hits,
+        g.dataset_misses,
+        g.invalidations,
+        g.evictions,
+        g.panel_hits,
+        g.panel_misses,
+        g.panel_evictions,
+        g.panels,
+        g.panel_bytes
     )
 }
 

@@ -19,6 +19,12 @@
 //!   [`crate::fit::FitSpec`]s) asynchronously through the estimator
 //!   API — with a [`crate::fit::SnapshotObserver`] attached — and
 //!   registering the results with their stop reasons.
+//! * [`gram_cache`] — [`GramCache`]: per-dataset cache of the loaded
+//!   dataset, its column norms, and previously materialized Gram
+//!   panels ([`crate::kern::cache`]), bound around every fit so
+//!   warm-started family refits skip the dominant recomputation.
+//!   Fingerprint-validated: re-uploading a dataset name with different
+//!   contents invalidates the entry.
 //! * [`protocol`] — the hand-rolled line protocol + HTTP/1.1 framing +
 //!   minimal JSON emission.
 //! * [`http`] — the front end (`calars serve`): `/fit`, `/predict`,
@@ -28,6 +34,7 @@
 //!   (`calars bench-serve`, `benches/serving.rs`).
 
 pub mod engine;
+pub mod gram_cache;
 pub mod http;
 pub mod loadgen;
 pub mod protocol;
@@ -35,6 +42,7 @@ pub mod queue;
 pub mod store;
 
 pub use engine::{EngineStats, PredictionEngine, Query, Selector};
+pub use gram_cache::{DatasetInfo, GramCache, GramCacheStats, NormSummary};
 pub use http::{serve, spawn_server, ServeOptions, ServerHandle};
 pub use loadgen::{run_load, LoadOptions, LoadReport, ServeClient};
 pub use protocol::{FitRequest, PredictRequest};

@@ -15,10 +15,12 @@
 //! [`StopReason`](crate::lars::StopReason) lands in the registry
 //! metadata so `/models` can say why each path ended.
 
+use super::gram_cache::GramCache;
 use super::store::{ModelMeta, ModelRegistry};
 use crate::data::datasets;
 use crate::error::Result;
 use crate::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
+use crate::kern;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -103,6 +105,7 @@ enum Work {
 
 struct Shared {
     registry: Arc<ModelRegistry>,
+    gram_cache: Arc<GramCache>,
     states: Mutex<HashMap<u64, JobState>>,
     cv: Condvar,
     submitted: AtomicU64,
@@ -132,13 +135,26 @@ pub struct FitQueue {
 }
 
 impl FitQueue {
-    /// Start `workers` fit threads (≥ 1) over `registry`.
+    /// Start `workers` fit threads (≥ 1) over `registry`, with a
+    /// default-sized [`GramCache`].
     pub fn new(registry: Arc<ModelRegistry>, workers: usize) -> Self {
+        Self::with_gram_cache(registry, workers, Arc::new(GramCache::default()))
+    }
+
+    /// Start `workers` fit threads (≥ 1) over `registry`, binding
+    /// `gram_cache` around every fit (the server shares one cache
+    /// between the queue and `/stats`).
+    pub fn with_gram_cache(
+        registry: Arc<ModelRegistry>,
+        workers: usize,
+        gram_cache: Arc<GramCache>,
+    ) -> Self {
         let nworkers = workers.max(1);
         let (tx, rx) = channel::<Work>();
         let rx = Arc::new(Mutex::new(rx));
         let shared = Arc::new(Shared {
             registry,
+            gram_cache,
             states: Mutex::new(HashMap::new()),
             cv: Condvar::new(),
             submitted: AtomicU64::new(0),
@@ -216,6 +232,12 @@ impl FitQueue {
         }
     }
 
+    /// The Gram/norm cache bound around this queue's fits (shared with
+    /// `/stats`).
+    pub fn gram_cache(&self) -> &Arc<GramCache> {
+        &self.shared.gram_cache
+    }
+
     /// Counter snapshot for `/stats`.
     pub fn stats(&self) -> QueueStats {
         let submitted = self.shared.submitted.load(Ordering::Relaxed);
@@ -278,7 +300,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, shared: Arc<Shared>) {
         };
         set_state(&shared, job, JobState::Running);
         let t0 = Instant::now();
-        let state = match run_fit(&shared.registry, &spec) {
+        let state = match run_fit(&shared.registry, &shared.gram_cache, &spec) {
             Ok((model, reused)) => {
                 shared.completed.fetch_add(1, Ordering::Relaxed);
                 JobState::Done { model, reused, wall_secs: t0.elapsed().as_secs_f64() }
@@ -297,18 +319,33 @@ fn set_state(shared: &Shared, job: u64, state: JobState) {
     shared.cv.notify_all();
 }
 
-/// Execute one fit: dataset lookup → warm-start check → estimator API
-/// with a snapshot observer → register. Returns (model id,
-/// warm-reused?).
-fn run_fit(registry: &Arc<ModelRegistry>, job: &FitJob) -> Result<(u64, bool)> {
+/// Execute one fit: warm-start check → dataset through the
+/// [`GramCache`] (cached load + panel store) → estimator API with a
+/// snapshot observer, run under the dataset's panel-store binding so
+/// `gram_block` calls hit the cross-fit cache → register. Returns
+/// (model id, warm-reused?).
+fn run_fit(
+    registry: &Arc<ModelRegistry>,
+    gram_cache: &Arc<GramCache>,
+    job: &FitJob,
+) -> Result<(u64, bool)> {
     let mut meta = job.meta();
     if let Some(rec) = registry.find_warm(&meta, job.spec.t) {
         return Ok((rec.id, true));
     }
-    let ds = datasets::by_name(&job.dataset, job.seed)
-        .ok_or_else(|| crate::anyhow!("unknown dataset '{}'", job.dataset))?;
+    let (ds, store) = match gram_cache.lookup(&job.dataset, job.seed) {
+        Some(hit) => hit,
+        None => {
+            let ds = Arc::new(
+                datasets::by_name(&job.dataset, job.seed)
+                    .ok_or_else(|| crate::anyhow!("unknown dataset '{}'", job.dataset))?,
+            );
+            let store = gram_cache.register(&job.dataset, job.seed, Arc::clone(&ds));
+            (ds, store)
+        }
+    };
     let mut snap = SnapshotObserver::new();
-    let result = job.spec.fit(&ds.a, &ds.b, &mut snap)?;
+    let result = kern::cache::with_store(&store, || job.spec.fit(&ds.a, &ds.b, &mut snap))?;
     meta.stop = result.output.stop.word().to_string();
     // on_complete always fires when fit() returns Ok, so the snapshot
     // is always captured.
@@ -425,5 +462,31 @@ mod tests {
         let q = queue();
         assert!(q.state(12345).is_none());
         assert!(q.wait(12345, Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn warm_refit_hits_the_gram_cache() {
+        // One worker so the two fits run strictly in order.
+        let q = FitQueue::new(Arc::new(ModelRegistry::new(16)), 1);
+        let j1 = q.submit(lars_job(4));
+        assert!(matches!(
+            q.wait(j1, Duration::from_secs(60)).unwrap(),
+            JobState::Done { .. }
+        ));
+        let after_first = q.gram_cache().stats();
+        assert_eq!(after_first.datasets, 1, "dataset registered on first fit");
+        assert!(after_first.panels > 0, "first fit materialized Gram panels");
+        // Deeper refit of the same family: the warm-start snapshot is
+        // too short, so the fit reruns — and its selection prefix
+        // repeats the same panel keys, which must now hit.
+        let j2 = q.submit(lars_job(8));
+        let s2 = q.wait(j2, Duration::from_secs(60)).unwrap();
+        assert!(matches!(s2, JobState::Done { reused: false, .. }), "{s2:?}");
+        let after_second = q.gram_cache().stats();
+        assert_eq!(after_second.dataset_hits, 1, "dataset load skipped on refit");
+        assert!(
+            after_second.panel_hits > after_first.panel_hits,
+            "warm refit must reuse cached Gram panels: {after_second:?}"
+        );
     }
 }

@@ -333,6 +333,13 @@ impl ModelRegistry {
     /// Warm-start lookup: a model of the same family whose stored path
     /// already covers `t` selected columns. Counts as a use (LRU) and
     /// as a warm reuse (stats).
+    ///
+    /// When no stored path covers `t` (a *deeper* refit of the family),
+    /// the fit reruns — but its selection prefix repeats the covered
+    /// path's, so the per-dataset
+    /// [`GramCache`](crate::serve::GramCache) the queue binds around
+    /// fits serves those iterations' Gram panels from cache; the two
+    /// layers together make family refits cheap at every depth.
     pub fn find_warm(&self, meta: &ModelMeta, t: usize) -> Option<Arc<ModelRecord>> {
         let key = meta.family_key()?;
         let mut g = self.inner.lock().unwrap();

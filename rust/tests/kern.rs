@@ -1,0 +1,211 @@
+//! The kernel engine's contract, end to end:
+//!
+//! * blocked kern kernels vs the scalar `kern::reference` over awkward
+//!   shapes (dimensions not multiples of the unroll width, zero/one
+//!   columns, single rows);
+//! * bit-identity across thread counts {1, 2, 4} with the kern kernels
+//!   as the only implementation (regression guard for the canonical
+//!   summation order being anchored at fixed chunk boundaries);
+//! * the fused equiangular step against its two-pass decomposition,
+//!   dense and sparse.
+
+use calars::kern::{self, reference};
+use calars::linalg::{CscMatrix, DenseMatrix, Matrix};
+use calars::par::{self, ThreadPool};
+use calars::rng::Pcg64;
+
+fn dense(m: usize, n: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Pcg64::new(seed);
+    DenseMatrix::from_fn(m, n, |_, _| rng.normal())
+}
+
+fn close(a: f64, b: f64, label: &str) {
+    assert!(
+        (a - b).abs() <= 1e-10 * (1.0 + b.abs()),
+        "{label}: {a} vs {b}"
+    );
+}
+
+#[test]
+fn dense_kernels_match_reference_over_awkward_shapes() {
+    // Shapes straddle the unroll width 4 in both dimensions, plus the
+    // degenerate edges the blocking must not trip over.
+    for &(m, n) in &[
+        (1usize, 1usize),
+        (1, 7),
+        (2, 3),
+        (3, 4),
+        (4, 4),
+        (5, 5),
+        (6, 1),
+        (7, 9),
+        (8, 0),
+        (0, 6),
+        (9, 8),
+        (13, 5),
+        (33, 17),
+    ] {
+        let a = dense(m, n, (m * 101 + n + 1) as u64);
+        let data = a.data().to_vec();
+        let mut rng = Pcg64::new(7);
+        let r: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+
+        let mut got = vec![0.0; n];
+        a.at_r(&r, &mut got);
+        let mut want = vec![0.0; n];
+        reference::at_r(&data, m, n, &r, &mut want);
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            close(*g, *w, &format!("at_r ({m},{n}) col {j}"));
+        }
+
+        let norms = a.col_norms();
+        let want = reference::col_sq_norms(&data, m, n);
+        for (j, (g, w)) in norms.iter().zip(&want).enumerate() {
+            close(*g, w.sqrt(), &format!("col_norms ({m},{n}) col {j}"));
+        }
+
+        if n == 0 {
+            continue;
+        }
+        let cols: Vec<usize> = (0..n).step_by(2).collect();
+        let w: Vec<f64> = cols.iter().map(|&j| (j as f64 * 0.3).sin() + 0.1).collect();
+        let mut got = vec![0.0; m];
+        a.gemv_cols(&cols, &w, &mut got);
+        let mut want = vec![0.0; m];
+        reference::gemv_cols(&data, m, n, &cols, &w, &mut want);
+        for (i, (g, ww)) in got.iter().zip(&want).enumerate() {
+            close(*g, *ww, &format!("gemv_cols ({m},{n}) row {i}"));
+        }
+
+        let jj: Vec<usize> = (0..n).collect();
+        let got = a.gram_block(&cols, &jj);
+        let want = reference::gram_block(&data, m, n, &cols, &jj);
+        for (g, w) in got.data().iter().zip(&want) {
+            close(*g, *w, &format!("gram_block ({m},{n})"));
+        }
+    }
+}
+
+#[test]
+fn sparse_kernels_match_dense_counterparts() {
+    let mut rng = Pcg64::new(11);
+    let m = 37;
+    let n = 23;
+    let cols: Vec<Vec<(usize, f64)>> = (0..n)
+        .map(|_| {
+            (0..m)
+                .filter(|_| rng.uniform() < 0.3)
+                .map(|i| (i, rng.normal()))
+                .collect()
+        })
+        .collect();
+    let sp = CscMatrix::from_columns(m, cols);
+    let de = sp.to_dense();
+    let r: Vec<f64> = (0..m).map(|i| (i as f64 * 0.7).cos()).collect();
+    let (mut cs, mut cd) = (vec![0.0; n], vec![0.0; n]);
+    sp.at_r(&r, &mut cs);
+    de.at_r(&r, &mut cd);
+    for (j, (a, b)) in cs.iter().zip(&cd).enumerate() {
+        close(*a, *b, &format!("sparse at_r col {j}"));
+    }
+    let sel: Vec<usize> = (0..n).step_by(3).collect();
+    let w: Vec<f64> = sel.iter().map(|&j| j as f64 * 0.1 - 0.4).collect();
+    let (mut us, mut ud) = (vec![0.0; m], vec![0.0; m]);
+    sp.gemv_cols(&sel, &w, &mut us);
+    de.gemv_cols(&sel, &w, &mut ud);
+    for (a, b) in us.iter().zip(&ud) {
+        close(*a, *b, "sparse gemv_cols");
+    }
+    let gs = sp.gram_block(&sel, &sel);
+    let gd = de.gram_block(&sel, &sel);
+    for (a, b) in gs.data().iter().zip(gd.data()) {
+        close(*a, *b, "sparse gram_block");
+    }
+    for (a, b) in sp.col_norms().iter().zip(de.col_norms()) {
+        close(*a, b, "sparse col_norms");
+    }
+}
+
+#[test]
+fn fused_step_matches_two_pass_both_storages() {
+    let de = dense(41, 13, 3);
+    let cols = [0usize, 1, 5, 9, 12];
+    let w = [1.0, -0.5, 0.25, 2.0, 0.125];
+    for a in [Matrix::Dense(de.clone()), Matrix::Sparse(CscMatrix::from_dense(&de))] {
+        let mut u = vec![0.0; 41];
+        let mut av = vec![0.0; 13];
+        a.fused_step(&cols, &w, &mut u, &mut av);
+        let mut u2 = vec![0.0; 41];
+        a.gemv_cols(&cols, &w, &mut u2);
+        let mut av2 = vec![0.0; 13];
+        a.at_r(&u2, &mut av2);
+        for (x, y) in u.iter().zip(&u2) {
+            close(*x, *y, "fused u");
+        }
+        for (x, y) in av.iter().zip(&av2) {
+            close(*x, *y, "fused av");
+        }
+    }
+}
+
+#[test]
+fn kern_kernels_bit_identical_across_thread_counts() {
+    // Small grain forces many chunks; every chunked reduction must be
+    // a pure function of the data, never of the thread count.
+    let a = dense(513, 29, 9); // rows not a multiple of 4 or the grain
+    let mut rng = Pcg64::new(10);
+    let r: Vec<f64> = (0..513).map(|_| rng.normal()).collect();
+    let cols: Vec<usize> = (0..29).step_by(2).collect();
+    let w: Vec<f64> = cols.iter().map(|&j| (j as f64 * 0.21).sin()).collect();
+    let run = |threads: usize| {
+        let pool = ThreadPool::new(threads, 96);
+        par::with_pool(&pool, || {
+            let mut c = vec![0.0; 29];
+            a.at_r(&r, &mut c);
+            let g = a.gram_block(&cols, &cols);
+            let mut u = vec![0.0; 513];
+            let mut av = vec![0.0; 29];
+            a.gemv_cols_at_r(&cols, &w, &mut u, &mut av);
+            let mut b = a.clone();
+            let norms = b.normalize_columns_with_norms();
+            (c, g.data().to_vec(), u, av, norms)
+        })
+    };
+    let base = run(1);
+    for threads in [2usize, 4] {
+        let got = run(threads);
+        let pairs: [(&[f64], &[f64]); 5] = [
+            (&base.0, &got.0),
+            (&base.1, &got.1),
+            (&base.2, &got.2),
+            (&base.3, &got.3),
+            (&base.4, &got.4),
+        ];
+        for (which, (b, g)) in pairs.iter().enumerate() {
+            for (x, y) in b.iter().zip(g.iter()) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "kernel {which} diverged at threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reference_gram_is_symmetric_sanity() {
+    let a = dense(19, 6, 21);
+    let all: Vec<usize> = (0..6).collect();
+    let g = reference::gram_block(a.data(), 19, 6, &all, &all);
+    for i in 0..6 {
+        for j in 0..6 {
+            close(g[i * 6 + j], g[j * 6 + i], "reference gram symmetry");
+        }
+    }
+}
+
+#[test]
+fn unroll_width_is_the_documented_contract() {
+    assert_eq!(kern::UNROLL, 4);
+}

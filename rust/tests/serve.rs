@@ -246,6 +246,59 @@ fn http_end_to_end_fit_predict_models_stats() {
     server.stop();
 }
 
+/// Scan a `/stats` body for `"key":<u64>`.
+fn stats_u64(body: &str, key: &str) -> u64 {
+    let needle = format!("\"{key}\":");
+    let at = body.find(&needle).unwrap_or_else(|| panic!("{key} missing in {body}")) + needle.len();
+    let rest = &body[at..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().unwrap()
+}
+
+#[test]
+fn gram_cache_counters_surface_through_stats_on_warm_refit() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        fit_workers: 1, // strict fit ordering: second fit sees the first's panels
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    // First fit: dataset registered, panels materialized (all misses).
+    let fit = FitRequest { dataset: "tiny".into(), t: 4, ..Default::default() };
+    client.fit(&fit, true).unwrap();
+    let (status, body) = client.request("GET", "/stats", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"gram_cache\""), "{body}");
+    assert_eq!(stats_u64(&body, "datasets"), 1, "{body}");
+    let first_hits = stats_u64(&body, "panel_hits");
+    assert!(stats_u64(&body, "panels") > 0, "first fit must cache panels: {body}");
+
+    // The /datasets listing exposes the cached entry with its
+    // column-norm summary (the training scale for raw features).
+    let (status, body) = client.request("GET", "/datasets", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"name\":\"tiny\""), "{body}");
+    assert!(body.contains("\"norms\""), "{body}");
+    assert_eq!(stats_u64(&body, "count"), 300, "tiny has 300 columns: {body}");
+
+    // Deeper refit of the same family: warm-start snapshot too short,
+    // so the fit reruns — dataset load is skipped and the repeated
+    // selection prefix hits the cached panels.
+    let deeper = FitRequest { dataset: "tiny".into(), t: 8, ..Default::default() };
+    client.fit(&deeper, true).unwrap();
+    let (_, body) = client.request("GET", "/stats", "").unwrap();
+    assert_eq!(stats_u64(&body, "dataset_hits"), 1, "{body}");
+    assert!(
+        stats_u64(&body, "panel_hits") > first_hits,
+        "warm refit must hit cached Gram panels: {body}"
+    );
+
+    server.stop();
+}
+
 #[test]
 fn http_load_generator_round_trip() {
     let server = spawn_server(&ServeOptions {

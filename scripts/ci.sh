@@ -44,6 +44,27 @@ check_bench_json() {
 echo "== perf: machine shape =="
 "$BIN" info --json
 
+echo "== perf: kernel engine (kern vs scalar reference) =="
+# The bench compares every blocked kern kernel against kern::reference
+# and exits nonzero if max |Δ| exceeds 1e-9 — the numerics gate — while
+# the JSON records the old-scalar → kern speedup trajectory.
+cargo bench --bench kernels -- --json > BENCH_kernels.json
+check_bench_json BENCH_kernels.json
+# Perf gate: the hot kernels must beat the scalar reference by ≥ 1.5×
+# on the 2000×4000 problems.
+awk '
+/"bench":"(at_r|gram_block)_2000x4000/ {
+    if (match($0, /"speedup":[0-9.]+/)) {
+        s = substr($0, RSTART + 10, RLENGTH - 10) + 0
+        if (s < 1.5) { printf "kernel speedup gate: %s < 1.5x\n", s; bad = 1 }
+        found += 1
+    }
+}
+END {
+    if (found < 2) { print "kernel speedup gate: records missing"; exit 1 }
+    exit bad
+}' BENCH_kernels.json
+
 echo "== perf: parallel scaling =="
 # The bench itself verifies parallel output is bit-identical to serial
 # and exits nonzero on divergence, so this line both records the perf

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Render BENCH_kernels.json (scripts/ci.sh perf stage, or
+# `cargo bench --bench kernels -- --json`) as the README's markdown
+# perf table.
+#
+# Usage: scripts/perf_table.sh [BENCH_kernels.json]
+set -euo pipefail
+FILE="${1:-BENCH_kernels.json}"
+[ -f "$FILE" ] || { echo "usage: $0 [BENCH_kernels.json]" >&2; exit 1; }
+
+echo "| bench | kern wall (ms) | speedup vs scalar |"
+echo "|---|---:|---:|"
+awk '
+/"bench":/ {
+    name = ""; wall = ""; sp = ""
+    if (match($0, /"bench":"[^"]+"/))    name = substr($0, RSTART + 9, RLENGTH - 10)
+    if (match($0, /"wall_ms":[0-9.]+/))  wall = substr($0, RSTART + 10, RLENGTH - 10)
+    if (match($0, /"speedup":[0-9.]+/))  sp   = substr($0, RSTART + 10, RLENGTH - 10)
+    if (name != "") printf "| `%s` | %.3f | %.2fx |\n", name, wall, sp
+}' "$FILE"
