@@ -1,0 +1,142 @@
+//! Model-selection benchmark: in-sample Cp ranking and k-fold CV
+//! selection wall time at 1→N pool threads, with the acceptance gate
+//! baked in — the CV-selected step (and every score bit) must be
+//! identical across thread counts, or the bench exits nonzero. This is
+//! how `scripts/ci.sh` fails the build on a selection-determinism
+//! regression while recording the perf trajectory.
+//!
+//! Run: `cargo bench --bench selection` (human table)
+//!      `cargo bench --bench selection -- --json` (the records ci.sh
+//!      writes to BENCH_select.json; schema per record:
+//!      {bench, threads, wall_ms, speedup})
+
+use calars::data::datasets;
+use calars::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
+use calars::metrics::{bench, black_box, fmt_secs};
+use calars::par::{self, ThreadPool};
+use calars::select::{self, Criterion, SelectSpec, Selection};
+
+struct Record {
+    bench: &'static str,
+    threads: usize,
+    wall_ms: f64,
+    speedup: f64,
+}
+
+/// Comparable identity of a selection: the chosen step plus every
+/// score's bit pattern.
+fn signature(sel: &Selection) -> Vec<u64> {
+    let mut sig = vec![sel.best_step as u64];
+    sig.extend(sel.scores.iter().map(|s| s.score.to_bits()));
+    sig
+}
+
+fn main() {
+    let json = std::env::args().any(|a| a == "--json");
+    let cores = par::detected_cores();
+    let mut counts: Vec<usize> = vec![1, 2, 4];
+    if cores > 4 {
+        counts.push(cores);
+    }
+    counts.dedup();
+    let pools: Vec<ThreadPool> =
+        counts.iter().map(|&t| ThreadPool::new(t, par::DEFAULT_MIN_CHUNK)).collect();
+    if !json {
+        println!("# model selection ({cores} cores detected; threads ∈ {counts:?})\n");
+    }
+
+    let ds = datasets::tiny(7);
+    let fit = FitSpec::new(Algorithm::Lars).t(16);
+    let sel = SelectSpec::new(Criterion::Cv).k(5).seed(1);
+    let mut records: Vec<Record> = Vec::new();
+    let mut diverged = false;
+
+    // ── In-sample ranking (Cp over a stored path) ──
+    let mut obs = SnapshotObserver::new();
+    fit.fit(&ds.a, &ds.b, &mut obs).expect("fit");
+    let snap = obs.into_snapshot().expect("snapshot");
+    let m = ds.a.nrows();
+    let cp = select::rank_steps(&snap, m, Criterion::Cp).expect("cp ranks");
+    let timing = bench(2, 50, || {
+        black_box(select::rank_steps(&snap, m, Criterion::Cp).expect("cp ranks"))
+    });
+    records.push(Record {
+        bench: "select_cp_tiny_t16",
+        threads: 1,
+        wall_ms: timing.best * 1e3,
+        speedup: 1.0,
+    });
+    if !json {
+        println!("## select_cp_tiny_t16");
+        println!("  step {} in {}\n", cp.best_step, fmt_secs(timing.best));
+    }
+
+    // ── k-fold CV selection, thread-count sweep + divergence gate ──
+    let mut base: Option<(Vec<u64>, f64)> = None;
+    for (pool, &threads) in pools.iter().zip(&counts) {
+        let (sig, wall) = par::with_pool(pool, || {
+            let first = select::cross_validate(&ds.a, &ds.b, &fit, &sel).expect("cv");
+            let timing = bench(1, 3, || {
+                black_box(select::cross_validate(&ds.a, &ds.b, &fit, &sel).expect("cv"))
+            });
+            (signature(&first), timing.best)
+        });
+        match &base {
+            None => {
+                records.push(Record {
+                    bench: "select_cv5_tiny_t16",
+                    threads,
+                    wall_ms: wall * 1e3,
+                    speedup: 1.0,
+                });
+                if !json {
+                    println!("## select_cv5_tiny_t16");
+                    println!("  threads={threads}  {:>10}  (baseline)", fmt_secs(wall));
+                }
+                base = Some((sig, wall));
+            }
+            Some((base_sig, base_wall)) => {
+                if &sig != base_sig {
+                    eprintln!(
+                        "DIVERGENCE: CV selection differs between threads=1 and \
+                         threads={threads}"
+                    );
+                    diverged = true;
+                }
+                let speedup = base_wall / wall.max(1e-12);
+                records.push(Record {
+                    bench: "select_cv5_tiny_t16",
+                    threads,
+                    wall_ms: wall * 1e3,
+                    speedup,
+                });
+                if !json {
+                    println!(
+                        "  threads={threads}  {:>10}  speedup {speedup:.2}x",
+                        fmt_secs(wall)
+                    );
+                }
+            }
+        }
+    }
+
+    if json {
+        let body: Vec<String> = records
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"bench\":\"{}\",\"threads\":{},\"wall_ms\":{:.3},\"speedup\":{:.3}}}",
+                    r.bench, r.threads, r.wall_ms, r.speedup
+                )
+            })
+            .collect();
+        println!("[{}]", body.join(",\n "));
+    } else {
+        println!();
+    }
+
+    if diverged {
+        eprintln!("CV selection diverged across thread counts — failing the bench");
+        std::process::exit(1);
+    }
+}

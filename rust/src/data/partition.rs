@@ -31,6 +31,28 @@ pub fn row_shards(a: &Matrix, p: usize) -> Vec<Matrix> {
     row_ranges(a.nrows(), p).into_iter().map(|(r0, r1)| a.row_slice(r0, r1)).collect()
 }
 
+/// Deterministic k-fold row partition for cross-validated model
+/// selection ([`crate::select`]): the row indices are permuted by
+/// `seed` (Fisher-Yates over [`Pcg64`]) and split into `k` near-equal
+/// chunks via [`row_ranges`]. Each fold's held-out row list comes back
+/// **sorted ascending** (what [`crate::linalg::Matrix::row_subset`]
+/// expects), so together the folds are a disjoint cover of `0..m`.
+/// `seed` changes the assignment, never the fold sizes.
+pub fn cv_folds(m: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!((1..=m).contains(&k), "need 1 ≤ k ≤ m (got k={k}, m={m})");
+    let mut idx: Vec<usize> = (0..m).collect();
+    let mut rng = Pcg64::new(seed);
+    rng.shuffle(&mut idx);
+    row_ranges(m, k)
+        .into_iter()
+        .map(|(a, b)| {
+            let mut fold = idx[a..b].to_vec();
+            fold.sort_unstable();
+            fold
+        })
+        .collect()
+}
+
 /// nnz-balanced column partition: greedy LPT (largest column first into
 /// the lightest bin). Returns `p` column-index lists, each sorted.
 pub fn balanced_col_partition(a: &Matrix, p: usize) -> Vec<Vec<usize>> {
@@ -126,6 +148,25 @@ mod tests {
         for (a, b) in whole.iter().zip(&sum) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn cv_folds_cover_disjointly_and_depend_on_seed() {
+        for (m, k) in [(10usize, 3usize), (120, 5), (7, 7), (9, 1)] {
+            let folds = cv_folds(m, k, 42);
+            assert_eq!(folds.len(), k);
+            let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..m).collect::<Vec<_>>(), "m={m} k={k}");
+            let sizes: Vec<usize> = folds.iter().map(|f| f.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "near-equal folds: {sizes:?}");
+            for f in &folds {
+                assert!(f.windows(2).all(|w| w[0] < w[1]), "folds are sorted");
+            }
+        }
+        assert_eq!(cv_folds(50, 5, 7), cv_folds(50, 5, 7), "deterministic in seed");
+        assert_ne!(cv_folds(50, 5, 7), cv_folds(50, 5, 8), "seed changes assignment");
     }
 
     #[test]

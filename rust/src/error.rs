@@ -13,8 +13,9 @@ use std::fmt;
 
 /// Coarse classification of an [`Error`], preserved through context
 /// attachment. The serving layer maps kinds onto HTTP status codes
-/// (`InvalidSpec` → 400, `RankDeficient` → 422) so a bad request can
-/// never take down a connection the way the old `assert!`s could.
+/// (`InvalidSpec` → 400, `RankDeficient` → 422, `Internal` → 500) so a
+/// bad request can never take down a connection the way the old
+/// `assert!`s could.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ErrorKind {
     /// No more specific classification (the default).
@@ -29,6 +30,10 @@ pub enum ErrorKind {
     /// result; this error kind is reserved for hard failures where no
     /// result can be produced at all.
     RankDeficient,
+    /// A server-side invariant broke (e.g. a worker thread panicked
+    /// mid-request). The request failed through no fault of the
+    /// caller's input; the HTTP layer answers 500.
+    Internal,
 }
 
 /// An opaque error: a chain of human-readable messages, outermost
@@ -58,6 +63,12 @@ impl Error {
     /// An [`ErrorKind::RankDeficient`] error (singular Gram block).
     pub fn rank_deficient(m: impl fmt::Display) -> Self {
         Error { chain: vec![m.to_string()], kind: ErrorKind::RankDeficient }
+    }
+
+    /// An [`ErrorKind::Internal`] error (a server-side failure the
+    /// caller's input did not cause — e.g. a panicked worker).
+    pub fn internal(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()], kind: ErrorKind::Internal }
     }
 
     /// The error's classification (survives [`Self::context`]).

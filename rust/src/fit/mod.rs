@@ -44,6 +44,11 @@ pub use observers::{
     ObserverControl, ProgressObserver, SnapshotObserver,
 };
 
+// Model selection rides alongside the estimator API: a fitted path is
+// a sequence of models, and [`SelectSpec`] picks which one to serve
+// (see [`crate::select`] for the criteria and the CV machinery).
+pub use crate::select::{Criterion, SelectSpec, Selection, StepScore};
+
 use crate::cluster::{CommCounters, ExecMode, HwParams, SimCluster, Tracer};
 use crate::data::partition;
 use crate::error::{Error, Result};
@@ -454,14 +459,49 @@ pub trait Fitter {
 impl Fitter for FitSpec {
     fn fit(&self, a: &Matrix, b: &[f64], obs: &mut dyn FitObserver) -> Result<FitResult> {
         self.validate()?;
-        if a.nrows() == 0 || a.ncols() == 0 {
-            return Err(Error::invalid_spec("matrix must have at least one row and column"));
+        if a.nrows() < 2 || a.ncols() == 0 {
+            return Err(Error::invalid_spec(format!(
+                "matrix must have at least 2 rows and 1 column (got {}×{})",
+                a.nrows(),
+                a.ncols()
+            )));
         }
         if b.len() != a.nrows() {
             return Err(Error::invalid_spec(format!(
                 "response length {} does not match the matrix row count {}",
                 b.len(),
                 a.nrows()
+            )));
+        }
+        // Degenerate-input screen (one O(nnz) pass): a NaN/∞ anywhere
+        // in the problem, or an all-zero column, poisons correlations
+        // deep inside the fitter cores — tournament shards used to
+        // *panic* on the resulting incomparable NaNs. Reject up front
+        // with a typed error instead.
+        if let Some(i) = b.iter().position(|v| !v.is_finite()) {
+            return Err(Error::invalid_spec(format!(
+                "response contains a non-finite value at row {i} ({})",
+                b[i]
+            )));
+        }
+        // When a panel store for this exact shape is bound (serve-layer
+        // fits of cached datasets, CV fold fits) its recorded
+        // pre-normalization norms already witness every column: a zero
+        // norm means the column was zero before normalization left it
+        // untouched, a non-finite norm means the column held a NaN/∞.
+        // Checking them is O(n); only uncached matrices pay the O(nnz)
+        // sweep.
+        let cached_norms =
+            crate::kern::cache::bound_for((a.nrows(), a.ncols())).and_then(|s| s.norms());
+        let col_norms = match cached_norms {
+            Some(norms) if norms.len() == a.ncols() => norms,
+            _ => std::sync::Arc::new(a.col_norms()),
+        };
+        if let Some(j) = col_norms.iter().position(|v| !v.is_finite() || *v == 0.0) {
+            return Err(Error::invalid_spec(format!(
+                "column {j} is degenerate (norm {}): all-zero or non-finite \
+                 columns cannot enter a LARS path",
+                col_norms[j]
             )));
         }
         obs.on_start(a.nrows(), a.ncols(), self);

@@ -239,6 +239,33 @@ impl MetricsSink {
     pub fn new() -> Self {
         Self::default()
     }
+
+    /// Machine-readable export of the collected trace.
+    ///
+    /// NaN/±∞ values serialize as `null`, never as bare `NaN`/`inf`
+    /// tokens (which are invalid JSON): T-bLARS events legitimately
+    /// carry NaN for γ and λ — the tournament has no scalar step size
+    /// per outer iteration — and the greedy baselines carry NaN γ
+    /// throughout. Regression-tested in `tests/fit.rs`.
+    pub fn to_json(&self) -> String {
+        let arr = |v: &[f64]| {
+            v.iter().map(|&x| crate::metrics::json_f64(x)).collect::<Vec<_>>().join(",")
+        };
+        format!(
+            "{{\"iterations\":{},\"wall_secs\":{},\"stop\":{},\
+             \"gammas\":[{}],\"lambdas\":[{}],\"residual_norms\":[{}],\"support_sizes\":[{}]}}",
+            self.iterations,
+            crate::metrics::json_f64(self.wall_secs),
+            match self.stop {
+                Some(s) => format!("\"{}\"", s.word()),
+                None => "null".to_string(),
+            },
+            arr(&self.gammas),
+            arr(&self.lambdas),
+            arr(&self.residual_norms),
+            self.support_sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","),
+        )
+    }
 }
 
 impl FitObserver for MetricsSink {

@@ -130,7 +130,7 @@ impl PanelStore {
     /// Cached panel for `(ii, jj)`, marking it most-recently-used.
     /// Counts a hit or a miss.
     pub fn lookup(&self, ii: &[usize], jj: &[usize]) -> Option<Arc<Vec<f64>>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let key = (ii.to_vec(), jj.to_vec());
         match g.panels.get(&key).cloned() {
             Some(panel) => {
@@ -153,7 +153,7 @@ impl PanelStore {
         if add > self.max_bytes {
             return;
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let key = (ii.to_vec(), jj.to_vec());
         if let Some(old) = g.panels.insert(key.clone(), panel) {
             // Same key re-inserted (two workers raced): keep byte
@@ -174,12 +174,12 @@ impl PanelStore {
     /// Column norms recorded for this dataset (set once at
     /// registration from the normalization pass).
     pub fn norms(&self) -> Option<Arc<Vec<f64>>> {
-        self.inner.lock().unwrap().norms.clone()
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).norms.clone()
     }
 
     /// Record the dataset's column norms (idempotent).
     pub fn set_norms(&self, norms: Arc<Vec<f64>>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if g.norms.is_none() {
             g.norms = Some(norms);
         }
@@ -187,7 +187,7 @@ impl PanelStore {
 
     /// Counter snapshot.
     pub fn counters(&self) -> PanelCounters {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         PanelCounters {
             hits: g.hits,
             misses: g.misses,

@@ -81,6 +81,14 @@ pub fn mlars(
     tracer.add_time(Phase::Corr, t0.elapsed().as_secs_f64());
     tracer.add_flops(Phase::Corr, a.gemv_cols_flops(&selected) + a.gemv_cols_flops(&pool));
 
+    // A NaN/∞ correlation (a degenerate shard column or a poisoned
+    // response estimate) would corrupt every comparison below; bail
+    // out with no nominations so the tournament driver reports a typed
+    // stop instead of the whole T-bLARS fit panicking.
+    if c_sel.iter().chain(c_pool.iter()).any(|v| !v.is_finite()) {
+        return MlarsOutput { y, selected, new_cols, chol, tracer };
+    }
+
     // ── Step 5 (+6-8): c_k over the selected set; bootstrap if empty. ──
     let mut ck = c_sel.iter().fold(0.0_f64, |mx, &v| mx.max(v.abs()));
     if selected.is_empty() {
@@ -91,7 +99,7 @@ pub fn mlars(
         let (imax, _) = c_pool
             .iter()
             .enumerate()
-            .max_by(|x, y| x.1.abs().partial_cmp(&y.1.abs()).unwrap())
+            .max_by(|x, y| x.1.abs().total_cmp(&y.1.abs()))
             .unwrap();
         let j = pool.swap_remove(imax);
         let cj = c_pool.swap_remove(imax);
@@ -166,12 +174,12 @@ pub fn mlars(
             // column with the largest |c|.
             let pos = (0..pool.len())
                 .filter(|&i| steps[i].gamma() == 0.0)
-                .max_by(|&x, &y| c_pool[x].abs().partial_cmp(&c_pool[y].abs()).unwrap())
+                .max_by(|&x, &y| c_pool[x].abs().total_cmp(&c_pool[y].abs()))
                 .unwrap();
             (0.0, pos)
         } else {
             let pos = (0..pool.len())
-                .min_by(|&x, &y| steps[x].gamma().partial_cmp(&steps[y].gamma()).unwrap())
+                .min_by(|&x, &y| steps[x].gamma().total_cmp(&steps[y].gamma()))
                 .unwrap();
             (steps[pos].gamma(), pos)
         };
@@ -308,7 +316,7 @@ mod tests {
         let mut c = vec![0.0; n];
         d.a.at_r(&d.b, &mut c);
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap());
+        order.sort_by(|&i, &j| c[i].abs().total_cmp(&c[j].abs()));
         let weak: Vec<usize> = order[..3].to_vec();
         let chol = Cholesky::factor(&d.a.gram_block(&weak, &weak)).unwrap();
         let pool: Vec<usize> = order[3..].to_vec();
@@ -316,6 +324,27 @@ mod tests {
         assert_eq!(out.new_cols.len(), 4, "budget not met under violation");
         assert_eq!(out.selected.len(), 7);
         assert_eq!(out.chol.dim(), 7);
+    }
+
+    #[test]
+    fn nan_response_estimate_does_not_panic() {
+        // Regression: these inputs used to abort the whole T-bLARS fit
+        // at a `partial_cmp(..).unwrap()` in the bootstrap `max_by`
+        // (a NaN correlation is incomparable). The node must instead
+        // nominate nothing, so the tournament driver reports a typed
+        // stop reason.
+        let d = datasets::tiny_dense(8);
+        let m = d.a.nrows();
+        let mut y = vec![0.0; m];
+        y[0] = f64::NAN;
+        let pool: Vec<usize> = (0..d.a.ncols()).collect();
+        let out = mlars(&d.a, &d.b, &y, &[], &pool, &Cholesky::empty(), 3, 1e-12);
+        assert!(out.new_cols.is_empty(), "degenerate node must nominate nothing");
+        // Same guard when a selected set already exists.
+        let ref2 = lars(&d.a, &d.b, &LarsOptions { t: 2, ..Default::default() });
+        let chol = Cholesky::factor(&d.a.gram_block(&ref2.selected, &ref2.selected)).unwrap();
+        let out = mlars(&d.a, &d.b, &y, &ref2.selected, &pool, &chol, 2, 1e-12);
+        assert!(out.new_cols.is_empty());
     }
 
     #[test]

@@ -96,6 +96,11 @@ pub fn fit_observed(
             }
         }
     }
+    if partition.iter().all(|bucket| bucket.is_empty()) {
+        return Err(Error::invalid_spec(
+            "partition is empty — no rank owns any candidate column",
+        ));
+    }
     let tree = TournamentTree::new(p);
     let t = opts.t.min(m.min(n));
 

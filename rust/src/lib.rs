@@ -46,6 +46,13 @@
 //!   against the scalar [`kern::reference`]. [`kern::cache`] is the
 //!   cross-fit Gram/norm panel store the serving layer binds around
 //!   fits.
+//! * **Model selection** ([`select`]): choosing *which* model on a
+//!   fitted path to serve — Mallows' Cp / AIC / BIC per stored step
+//!   (df = active-set size) and seeded k-fold cross-validation whose
+//!   fold fits fan out on the [`par`] pool; the chosen step is
+//!   bit-identical at any thread count. Drives `calars select`, the
+//!   serving layer's `POST /select`, and the `Selector::Auto`
+//!   prediction selector.
 //! * **L4 — serving** ([`serve`]): the production front end. A
 //!   versioned [`serve::ModelRegistry`] snapshots fitted regularization
 //!   paths (in memory and on disk), a batched
@@ -53,8 +60,8 @@
 //!   arbitrary step or λ, a [`serve::FitQueue`] worker pool runs
 //!   [`serve::FitJob`]s asynchronously through the estimator API, and a
 //!   zero-dependency HTTP/1.1 server (`calars serve`) exposes `/fit`,
-//!   `/predict`, `/models`, `/stats`. `calars bench-serve` is the
-//!   closed-loop load generator.
+//!   `/predict`, `/select`, `/models`, `/datasets`, `/stats`.
+//!   `calars bench-serve` is the closed-loop load generator.
 //!
 //! ## Quickstart
 //!
@@ -135,6 +142,7 @@ pub mod proptest_lite;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod select;
 pub mod serve;
 
 /// Crate-wide result alias.

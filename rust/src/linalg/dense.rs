@@ -121,6 +121,18 @@ impl DenseMatrix {
         }
     }
 
+    /// Arbitrary row gather as a new dense matrix (`rows` ascending —
+    /// a cross-validation train/test shard; see
+    /// [`crate::data::partition::cv_folds`]).
+    pub fn row_subset(&self, rows: &[usize]) -> DenseMatrix {
+        let mut data = Vec::with_capacity(rows.len() * self.n);
+        for &i in rows {
+            assert!(i < self.m, "row {i} out of range for {} rows", self.m);
+            data.extend_from_slice(self.row(i));
+        }
+        DenseMatrix { m: rows.len(), n: self.n, data }
+    }
+
     /// Column subset as a new dense `m × |cols|` matrix.
     pub fn col_subset(&self, cols: &[usize]) -> DenseMatrix {
         let mut out = DenseMatrix::zeros(self.m, cols.len());
@@ -412,6 +424,18 @@ mod tests {
         let s = a.col_subset(&[1]);
         assert_eq!(s.ncols(), 1);
         assert_eq!(s.col(0), vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn row_subset_gathers() {
+        let a = small();
+        let s = a.row_subset(&[0, 2]);
+        assert_eq!(s.nrows(), 2);
+        assert_eq!(s.row(0), &[1., 2.]);
+        assert_eq!(s.row(1), &[5., 6.]);
+        // A contiguous subset matches row_slice exactly.
+        assert_eq!(a.row_subset(&[1, 2]), a.row_slice(1, 3));
+        assert_eq!(a.row_subset(&[]).nrows(), 0);
     }
 
     #[test]

@@ -205,6 +205,15 @@ impl Matrix {
         }
     }
 
+    /// Arbitrary row gather (`rows` ascending) — a cross-validation
+    /// train/test shard ([`crate::select`]).
+    pub fn row_subset(&self, rows: &[usize]) -> Matrix {
+        match self {
+            Matrix::Dense(a) => Matrix::Dense(a.row_subset(rows)),
+            Matrix::Sparse(a) => Matrix::Sparse(a.row_subset(rows)),
+        }
+    }
+
     /// Column subset — a T-bLARS rank shard.
     pub fn col_subset(&self, cols: &[usize]) -> Matrix {
         match self {

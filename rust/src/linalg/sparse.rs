@@ -314,6 +314,41 @@ impl CscMatrix {
         CscMatrix { m: r1 - r0, n: self.n, colptr, rowidx, values }
     }
 
+    /// Arbitrary row gather as a new CSC matrix. `rows` must be
+    /// strictly ascending (a sorted cross-validation shard; see
+    /// [`crate::data::partition::cv_folds`]); output row `i` is input
+    /// row `rows[i]`.
+    pub fn row_subset(&self, rows: &[usize]) -> CscMatrix {
+        debug_assert!(rows.windows(2).all(|w| w[0] < w[1]), "rows must be strictly ascending");
+        if let Some(&last) = rows.last() {
+            assert!(last < self.m, "row {last} out of range for {} rows", self.m);
+        }
+        let mut colptr = Vec::with_capacity(self.n + 1);
+        let mut rowidx: Vec<u32> = Vec::new();
+        let mut values: Vec<f64> = Vec::new();
+        colptr.push(0);
+        for j in 0..self.n {
+            let (rs, vs) = self.col(j);
+            // Both index lists are sorted: merge-intersect them.
+            let (mut a, mut b) = (0usize, 0usize);
+            while a < rs.len() && b < rows.len() {
+                let r = rs[a] as usize;
+                if r == rows[b] {
+                    rowidx.push(b as u32);
+                    values.push(vs[a]);
+                    a += 1;
+                    b += 1;
+                } else if r < rows[b] {
+                    a += 1;
+                } else {
+                    b += 1;
+                }
+            }
+            colptr.push(rowidx.len());
+        }
+        CscMatrix { m: rows.len(), n: self.n, colptr, rowidx, values }
+    }
+
     /// Column subset as a new CSC matrix (T-bLARS rank shard).
     pub fn col_subset(&self, cols: &[usize]) -> CscMatrix {
         let mut colptr = Vec::with_capacity(cols.len() + 1);
@@ -429,6 +464,16 @@ mod tests {
         let s = a.col_subset(&[2, 0]);
         let sd = d.col_subset(&[2, 0]);
         assert_eq!(s.to_dense(), sd);
+    }
+
+    #[test]
+    fn row_subset_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let rows = [0usize, 2, 3];
+        assert_eq!(a.row_subset(&rows).to_dense(), d.row_subset(&rows));
+        // Contiguous gather equals row_slice.
+        assert_eq!(a.row_subset(&[1, 2]).to_dense(), a.row_slice(1, 3).to_dense());
     }
 
     #[test]

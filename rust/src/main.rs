@@ -16,7 +16,8 @@ use calars::data::datasets;
 use calars::error::{bail, Result};
 use calars::experiments;
 use calars::fit::{Algorithm, FitSpec, Fitter, ProgressObserver};
-use calars::metrics::{fmt_count, fmt_secs};
+use calars::metrics::{fmt_count, fmt_secs, json_f64_rounded};
+use calars::select::{Criterion, SelectSpec};
 use calars::runtime::XlaRuntime;
 use calars::serve::{
     spawn_server, FitRequest, LoadOptions, Selector, ServeClient, ServeOptions,
@@ -43,6 +44,7 @@ fn init_par(args: &Args) -> Result<()> {
 fn dispatch(args: &Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
+        Some("select") => cmd_select(args),
         Some("exp") => cmd_exp(args),
         Some("suite") => cmd_suite(args),
         Some("serve") => cmd_serve(args),
@@ -63,6 +65,8 @@ USAGE:
   calars run   --algo <lars|blars|tblars|lasso|omp|fs> --dataset <name>
                [--t N] [--b N] [--p N] [--seed N] [--tol X] [--lambda-min X]
                [--threads] [--progress]
+  calars select --dataset <name> [--algo A] [--t N] [--b N] [--p N] [--seed N]
+               [--criterion <cp|aic|bic|cv>] [--k N] [--cv-seed N] [--threads]
   calars exp   <table1|table2|table3|fig2|fig3|fig4|fig5|fig6|fig7|fig8> [--quick] [--t N] [--seed N]
   calars suite [--quick]
   calars serve [--addr H:P] [--port N] [--fit-workers N] [--batch-window-us N]
@@ -77,6 +81,14 @@ the paper's three, the exact LASSO-LARS path, and the greedy
 baselines (omp, fs) — goes through one FitSpec/Fitter call path.
 --progress attaches a ProgressObserver (per-iteration lines on
 stderr); --tol and --lambda-min are the spec's numerical knobs.
+
+select fits the full path and then chooses WHICH step to serve
+(calars::select): Mallows' Cp, AIC, or BIC per stored step (df =
+active-set size), or --criterion cv for seeded k-fold
+cross-validation whose fold fits fan out on the thread pool — the
+chosen step is bit-identical at every CALARS_THREADS setting. The
+serving layer exposes the same machinery as POST /select and the
+'auto <criterion>' predict selector.
 
 Every command honors --par-threads N / --par-min-chunk N (or the
 CALARS_THREADS / CALARS_MIN_CHUNK environment variables) to size the
@@ -177,17 +189,20 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         let speedup = baseline
             .map(|b| b.wall_secs / report.wall_secs.max(1e-12))
             .unwrap_or(1.0);
+        // Latency percentiles can be NaN when every request errored;
+        // route all f64s through the null-for-non-finite formatter so
+        // the record is always valid JSON.
         println!(
-            "{{\"bench\":\"serve_predict\",\"threads\":{},\"wall_ms\":{:.3},\"speedup\":{:.3},\
+            "{{\"bench\":\"serve_predict\",\"threads\":{},\"wall_ms\":{},\"speedup\":{},\
              \"requests\":{},\"concurrency\":{concurrency},\"rows\":{rows},\
-             \"req_per_s\":{:.1},\"p50_ms\":{:.3},\"p99_ms\":{:.3},\"errors\":{}}}",
+             \"req_per_s\":{},\"p50_ms\":{},\"p99_ms\":{},\"errors\":{}}}",
             calars::par::threads(),
-            report.wall_secs * 1e3,
-            speedup,
+            json_f64_rounded(report.wall_secs * 1e3, 3),
+            json_f64_rounded(speedup, 3),
             report.requests,
-            report.request_throughput,
-            report.latency.p50 * 1e3,
-            report.latency.p99 * 1e3,
+            json_f64_rounded(report.request_throughput, 1),
+            json_f64_rounded(report.latency.p50 * 1e3, 3),
+            json_f64_rounded(report.latency.p99 * 1e3, 3),
             report.errors
         );
     } else {
@@ -272,6 +287,58 @@ fn cmd_run(args: &Args) -> Result<()> {
             fmt_secs(cats[4])
         );
     }
+    Ok(())
+}
+
+fn cmd_select(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("tiny");
+    let seed = args.get_parse::<u64>("seed", 42)?;
+    let t = args.get_parse::<usize>("t", 20)?;
+    let b = args.get_parse::<usize>("b", 1)?;
+    let p = args.get_parse::<usize>("p", 1)?;
+    let tol = args.get_parse::<f64>("tol", 1e-12)?;
+    let lambda_min = args.get_parse::<f64>("lambda-min", 1e-6)?;
+    let k = args.get_parse::<usize>("k", 5)?;
+    let cv_seed = args.get_parse::<u64>("cv-seed", 0)?;
+    let criterion = Criterion::from_name(args.get("criterion").unwrap_or("cv"))?;
+    let mode = if args.flag("threads") { ExecMode::Threaded } else { ExecMode::Sequential };
+
+    let algorithm = Algorithm::from_parts(args.get("algo").unwrap_or("lars"), b, p, lambda_min)?;
+    let fit_spec = FitSpec::new(algorithm).t(t).tol(tol).ranks(p).mode(mode);
+    let sel_spec = SelectSpec::new(criterion).k(k).seed(cv_seed);
+
+    let ds = datasets::by_name(name, seed)
+        .ok_or_else(|| calars::anyhow!("unknown dataset '{name}'"))?;
+    println!("dataset {} — m={} n={}", ds.name, ds.a.nrows(), ds.a.ncols());
+    let t0 = std::time::Instant::now();
+    let (result, snap, selection) =
+        calars::select::select_model(&ds.a, &ds.b, &fit_spec, &sel_spec)?;
+    println!(
+        "fitted {} path steps ({}; stop={:?}) in {}",
+        snap.len(),
+        fit_spec.encode(),
+        result.output.stop,
+        fmt_secs(result.wall_secs),
+    );
+    let how = match criterion {
+        Criterion::Cv => format!("held-out MSE, k={k}, fold seed {cv_seed}"),
+        _ => format!("df = active-set size, m = {}", ds.a.nrows()),
+    };
+    println!("criterion {} ({how}):", criterion.name());
+    println!("{:>6} {:>6} {:>18}", "step", "df", "score");
+    for s in &selection.scores {
+        let mark = if s.step == selection.best_step { "  <- best" } else { "" };
+        println!("{:>6} {:>6} {:>18.8e}{mark}", s.step, s.df, s.score);
+    }
+    let chosen = &snap.steps[selection.best_step];
+    println!(
+        "serve step {}: {} active columns, ‖r‖={:.6e}, λ={:.6e}  (total {})",
+        selection.best_step,
+        chosen.support.len(),
+        chosen.residual_norm,
+        chosen.lambda,
+        fmt_secs(t0.elapsed().as_secs_f64()),
+    );
     Ok(())
 }
 

@@ -5,6 +5,31 @@
 
 use std::time::Instant;
 
+/// JSON number for an f64 — `null` for NaN/±∞, which are **invalid
+/// JSON tokens**. Every JSON emitter in the crate (the serving layer's
+/// endpoints, [`crate::fit::MetricsSink::to_json`], the bench JSON
+/// records) must route f64s through this: T-bLARS observer events
+/// legitimately carry NaN for γ/λ (no scalar step per outer
+/// iteration), and a raw `{:.3}` of such a value would emit `NaN` and
+/// corrupt the document.
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        v.to_string()
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Like [`json_f64`] but with fixed decimal places for finite values
+/// (the bench records' compact latencies).
+pub fn json_f64_rounded(v: f64, digits: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.digits$}")
+    } else {
+        "null".to_string()
+    }
+}
+
 /// Summary of repeated timing measurements, in seconds.
 #[derive(Clone, Copy, Debug)]
 pub struct TimingSummary {

@@ -1,0 +1,601 @@
+//! Path-wise model selection — choosing **which** model on a fitted
+//! path to serve.
+//!
+//! The paper's algorithms produce a *sequence* of linear models (one
+//! per path step) "without any compromise in solution quality"; the
+//! discussion literature on LARS (Madigan & Ridgeway's discussion of
+//! *Least Angle Regression*; see PAPERS.md) centers exactly on
+//! path-wise selection: Cp-style in-sample criteria and out-of-sample
+//! validation. This module implements both over the existing
+//! [`PathSnapshot`] storage unit:
+//!
+//! * **In-sample criteria** ([`rank_steps`]): Mallows' Cp, AIC, and
+//!   BIC computed per stored step from the step's residual norm with
+//!   `df = |active set|` — the degrees-of-freedom identity that makes
+//!   LARS-family paths special (Efron et al. §4).
+//! * **k-fold cross-validation** ([`cross_validate`]): rows are split
+//!   into `k` seeded folds ([`crate::data::partition::cv_folds`]), one
+//!   path is fitted per training complement, and every step is scored
+//!   by held-out mean squared error. Fold fits fan out on the
+//!   [`crate::par`] pool and fold results combine in fixed fold order,
+//!   so the selected step (and every score bit) is identical at any
+//!   `CALARS_THREADS` setting.
+//!
+//! Fold fits renormalize the training columns (a row subset of a
+//! unit-norm design is no longer unit-norm) and drop columns whose
+//! mass lives entirely in the held-out fold — the [`crate::fit`] API
+//! rejects all-zero columns by design. Held-out predictions are then
+//! evaluated in the *raw* column scale (`coef / fold_norm`), so the
+//! scores measure exactly what serving a refit model would deliver.
+//!
+//! The serving layer wires this through [`cross_validate_with`]: its
+//! fold-fit hook binds each fold to a
+//! [`crate::serve::GramCache`]-registered panel store, so repeated or
+//! deeper selections of the same model family reuse the fold Gram
+//! panels instead of recomputing them (see `serve::http`'s `/select`).
+
+use crate::data::partition;
+use crate::error::{Error, Result};
+use crate::fit::{FitSpec, Fitter, SnapshotObserver};
+use crate::lars::path::PathSnapshot;
+use crate::linalg::Matrix;
+use crate::par;
+
+/// Which model-selection rule to apply along a fitted path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Criterion {
+    /// Mallows' Cp: `RSS_k/σ̂² − m + 2·df_k`, σ̂² plugged in from the
+    /// fullest stored model.
+    Cp,
+    /// Akaike: `m·ln(RSS_k/m) + 2·df_k`.
+    Aic,
+    /// Schwarz/Bayesian: `m·ln(RSS_k/m) + ln(m)·df_k`.
+    Bic,
+    /// k-fold cross-validated held-out MSE (needs the training data —
+    /// see [`cross_validate`]; rejected by [`rank_steps`]).
+    Cv,
+}
+
+impl Criterion {
+    /// Stable lower-case identifier (wire formats, CLI, metadata
+    /// tokens). Inverse of [`Self::from_name`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Criterion::Cp => "cp",
+            Criterion::Aic => "aic",
+            Criterion::Bic => "bic",
+            Criterion::Cv => "cv",
+        }
+    }
+
+    /// Parse a [`Self::name`] identifier.
+    pub fn from_name(s: &str) -> Result<Criterion> {
+        match s {
+            "cp" => Ok(Criterion::Cp),
+            "aic" => Ok(Criterion::Aic),
+            "bic" => Ok(Criterion::Bic),
+            "cv" => Ok(Criterion::Cv),
+            other => Err(Error::invalid_spec(format!(
+                "unknown criterion '{other}' (cp|aic|bic|cv)"
+            ))),
+        }
+    }
+
+    /// True for the criteria computable from a stored snapshot alone.
+    pub fn is_in_sample(self) -> bool {
+        !matches!(self, Criterion::Cv)
+    }
+}
+
+/// A validated model-selection specification: the [`Criterion`] plus
+/// the cross-validation knobs (`k` folds, fold-assignment `seed`) —
+/// the selection-side sibling of [`FitSpec`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SelectSpec {
+    pub criterion: Criterion,
+    /// Fold count for [`Criterion::Cv`] (ignored by the in-sample
+    /// criteria).
+    pub k: usize,
+    /// Fold-assignment seed ([`partition::cv_folds`]).
+    pub seed: u64,
+}
+
+impl SelectSpec {
+    /// Upper bound on `k` accepted by [`Self::validate`]. Deliberately
+    /// small: each fold is a near-full copy of the training problem
+    /// (the serving layer caches k fold shards per CV selection), and
+    /// statistical practice tops out near leave-some-out with tens of
+    /// folds.
+    pub const MAX_K: usize = 64;
+
+    /// A spec with the default CV knobs (`k = 5`, `seed = 0`).
+    pub fn new(criterion: Criterion) -> Self {
+        SelectSpec { criterion, k: 5, seed: 0 }
+    }
+
+    /// Set the fold count.
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    /// Set the fold-assignment seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Check the knobs; typed
+    /// [`crate::error::ErrorKind::InvalidSpec`] on violation.
+    pub fn validate(&self) -> Result<()> {
+        if self.criterion == Criterion::Cv && !(2..=Self::MAX_K).contains(&self.k) {
+            return Err(Error::invalid_spec(format!(
+                "cv fold count k must be in 2..={} (got {})",
+                Self::MAX_K,
+                self.k
+            )));
+        }
+        Ok(())
+    }
+
+    /// The metadata token key this spec selects under — `"cp"`,
+    /// `"aic"`, `"bic"`, or `"cv{k}.{seed}"` (CV results are keyed by
+    /// their fold geometry; a different `k` or `seed` is a different
+    /// selection).
+    pub fn token_key(&self) -> String {
+        match self.criterion {
+            Criterion::Cv => format!("cv{}.{}", self.k, self.seed),
+            c => c.name().to_string(),
+        }
+    }
+}
+
+/// One scored path step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepScore {
+    /// Breakpoint index into the snapshot (0 = empty model).
+    pub step: usize,
+    /// Degrees of freedom charged: the step's active-set size
+    /// (in-sample criteria) or the step index (CV).
+    pub df: usize,
+    /// Criterion value — smaller is better for every criterion.
+    pub score: f64,
+}
+
+/// The result of ranking a path: the chosen step plus the full score
+/// trace (what the CLI prints and `/select` returns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Selection {
+    pub criterion: Criterion,
+    /// The chosen breakpoint (argmin score; ties break toward the
+    /// smaller — more regularized — step).
+    pub best_step: usize,
+    /// Per-step scores, ascending step order.
+    pub scores: Vec<StepScore>,
+    /// Fold count (0 for in-sample criteria).
+    pub k: usize,
+    /// Fold seed (0 for in-sample criteria).
+    pub seed: u64,
+}
+
+/// Smallest non-NaN score, ties toward the smaller step.
+fn best_step(scores: &[StepScore]) -> Result<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for sc in scores {
+        if sc.score.is_nan() {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((b, _)) => sc.score.total_cmp(&b) == std::cmp::Ordering::Less,
+        };
+        if better {
+            best = Some((sc.score, sc.step));
+        }
+    }
+    best.map(|(_, s)| s)
+        .ok_or_else(|| Error::invalid_spec("every criterion score is NaN — degenerate path"))
+}
+
+/// Rank every stored step of a path by an **in-sample** criterion.
+/// `m` is the number of training rows the path was fitted on (the
+/// serving layer keeps it in the model metadata). [`Criterion::Cv`]
+/// is rejected here — it needs the data, not just the path.
+pub fn rank_steps(snap: &PathSnapshot, m: usize, criterion: Criterion) -> Result<Selection> {
+    if criterion == Criterion::Cv {
+        return Err(Error::invalid_spec(
+            "cv needs the training data — use select::cross_validate",
+        ));
+    }
+    if snap.is_empty() {
+        return Err(Error::invalid_spec("cannot rank an empty path snapshot"));
+    }
+    if m == 0 {
+        return Err(Error::invalid_spec(
+            "training row count unknown (m = 0); refit to record it",
+        ));
+    }
+    let mf = m as f64;
+    let last = snap.steps.last().expect("non-empty");
+    let df_last = last.support.len();
+    // Cp's plug-in noise estimate from the fullest stored model.
+    let sigma2 = (last.residual_norm * last.residual_norm)
+        / m.saturating_sub(df_last).max(1) as f64;
+    if criterion == Criterion::Cp && !(sigma2.is_finite() && sigma2 > 0.0) {
+        return Err(Error::invalid_spec(format!(
+            "Cp is undefined on this path (σ̂² = {sigma2}); use aic, bic, or cv"
+        )));
+    }
+    let scores: Vec<StepScore> = snap
+        .steps
+        .iter()
+        .enumerate()
+        .map(|(s, st)| {
+            let df = st.support.len();
+            let rss = st.residual_norm * st.residual_norm;
+            let score = match criterion {
+                Criterion::Cp => rss / sigma2 - mf + 2.0 * df as f64,
+                Criterion::Aic => mf * (rss / mf).ln() + 2.0 * df as f64,
+                Criterion::Bic => mf * (rss / mf).ln() + mf.ln() * df as f64,
+                Criterion::Cv => unreachable!("rejected above"),
+            };
+            StepScore { step: s, df, score }
+        })
+        .collect();
+    let best = best_step(&scores)?;
+    Ok(Selection { criterion, best_step: best, scores, k: 0, seed: 0 })
+}
+
+/// Everything a fold-fit hook sees for one fold: the renormalized
+/// training shard plus the bookkeeping needed to map it back to the
+/// full design. [`cross_validate_with`] owns the construction; the
+/// hook only decides *how* to run the fit (the serving layer binds a
+/// Gram panel store around it).
+pub struct FoldFit<'a> {
+    /// Fold index, `0..k`.
+    pub fold: usize,
+    /// Training design: rows = the fold's complement, columns = `kept`,
+    /// renormalized to unit column norm.
+    pub a: &'a Matrix,
+    /// Training response rows.
+    pub b: &'a [f64],
+    /// Pre-renormalization column norms of the kept columns (divide
+    /// fitted coefficients by these to predict in the raw scale).
+    pub norms: &'a [f64],
+    /// Kept column indices in full-design column space (columns whose
+    /// mass survived the row split).
+    pub kept: &'a [usize],
+}
+
+/// The default fold fit: run the spec through the estimator API with a
+/// snapshot observer.
+pub fn fit_fold_snapshot(ctx: &FoldFit<'_>, fit: &FitSpec) -> Result<PathSnapshot> {
+    let mut obs = SnapshotObserver::new();
+    fit.fit(ctx.a, ctx.b, &mut obs)?;
+    Ok(obs.into_snapshot().expect("on_complete fires when fit returns Ok"))
+}
+
+/// k-fold cross-validation of a fit spec on `(a, b)` with the default
+/// fold fit. See [`cross_validate_with`] for the mechanics.
+pub fn cross_validate(
+    a: &Matrix,
+    b: &[f64],
+    fit: &FitSpec,
+    sel: &SelectSpec,
+) -> Result<Selection> {
+    cross_validate_with(a, b, fit, sel, fit_fold_snapshot)
+}
+
+/// k-fold cross-validation with a caller-supplied fold-fit hook.
+///
+/// Folds come from [`partition::cv_folds`]`(m, k, seed)`; per fold the
+/// training complement is gathered ([`Matrix::row_subset`]), columns
+/// that lost all their mass are dropped, the rest renormalize, and
+/// `fold_fit` produces the fold's path. Every stored step is then
+/// scored by held-out squared error in the raw column scale. Fold
+/// tasks fork onto the [`crate::par`] pool; scores combine in fixed
+/// fold order, so the result is bit-identical at any thread count.
+///
+/// The returned scores cover the step range every fold reached
+/// (shorter fold paths truncate the comparison — scoring a step no
+/// fold fitted would be meaningless).
+pub fn cross_validate_with<F>(
+    a: &Matrix,
+    b: &[f64],
+    fit: &FitSpec,
+    sel: &SelectSpec,
+    fold_fit: F,
+) -> Result<Selection>
+where
+    F: Fn(&FoldFit<'_>, &FitSpec) -> Result<PathSnapshot> + Sync,
+{
+    fit.validate()?;
+    sel.validate()?;
+    if sel.criterion != Criterion::Cv {
+        return Err(Error::invalid_spec(format!(
+            "cross_validate needs Criterion::Cv (got {})",
+            sel.criterion.name()
+        )));
+    }
+    let m = a.nrows();
+    if b.len() != m {
+        return Err(Error::invalid_spec(format!(
+            "response length {} does not match the matrix row count {m}",
+            b.len()
+        )));
+    }
+    if sel.k > m {
+        return Err(Error::invalid_spec(format!(
+            "cv fold count {} exceeds the row count {m}",
+            sel.k
+        )));
+    }
+    let folds = partition::cv_folds(m, sel.k, sel.seed);
+    let hook = &fold_fit;
+    let tasks: Vec<_> = folds
+        .iter()
+        .enumerate()
+        .map(|(fi, test_rows)| {
+            move || -> Result<Vec<f64>> {
+                // Training complement (sorted by construction).
+                let mut is_test = vec![false; m];
+                for &r in test_rows.iter() {
+                    is_test[r] = true;
+                }
+                let train_rows: Vec<usize> = (0..m).filter(|&r| !is_test[r]).collect();
+                let mut a_train = a.row_subset(&train_rows);
+                let b_train: Vec<f64> = train_rows.iter().map(|&r| b[r]).collect();
+                // One fused pass: normalize AND collect the
+                // pre-normalization norms (zero columns are left
+                // untouched by the normalize kernel). Columns whose
+                // nonzeros all fell into the held-out fold are
+                // degenerate in the training shard; drop them (the fit
+                // API rejects zero-norm columns by design). Per-column
+                // scaling is independent of the other columns, so
+                // normalizing before the subset is bit-identical to
+                // normalizing after it.
+                let pre = a_train.normalize_columns_with_norms();
+                let kept: Vec<usize> =
+                    (0..a_train.ncols()).filter(|&j| pre[j].is_finite() && pre[j] > 0.0).collect();
+                let norms: Vec<f64> = if kept.len() < a_train.ncols() {
+                    a_train = a_train.col_subset(&kept);
+                    kept.iter().map(|&j| pre[j]).collect()
+                } else {
+                    pre
+                };
+                let ctx =
+                    FoldFit { fold: fi, a: &a_train, b: &b_train, norms: &norms, kept: &kept };
+                let snap = hook(&ctx, fit)?;
+                // Held-out RSS per step, predicting in the raw scale.
+                let a_test = a.row_subset(test_rows);
+                let b_test: Vec<f64> = test_rows.iter().map(|&r| b[r]).collect();
+                let mut yhat = vec![0.0; test_rows.len()];
+                let mut rss = Vec::with_capacity(snap.len());
+                for step in &snap.steps {
+                    let support_full: Vec<usize> =
+                        step.support.iter().map(|&j| kept[j]).collect();
+                    let w: Vec<f64> = step
+                        .support
+                        .iter()
+                        .zip(&step.coefs)
+                        .map(|(&j, &c)| c / norms[j])
+                        .collect();
+                    a_test.gemv_cols(&support_full, &w, &mut yhat);
+                    let r: f64 =
+                        yhat.iter().zip(&b_test).map(|(p, q)| (p - q) * (p - q)).sum();
+                    rss.push(r);
+                }
+                Ok(rss)
+            }
+        })
+        .collect();
+    let mut per_fold: Vec<Vec<f64>> = Vec::with_capacity(folds.len());
+    for r in par::run_tasks(tasks) {
+        per_fold.push(r?);
+    }
+    let nsteps = per_fold.iter().map(|v| v.len()).min().unwrap_or(0);
+    if nsteps == 0 {
+        return Err(Error::invalid_spec(
+            "cross-validation produced no comparable path steps",
+        ));
+    }
+    // Fixed fold-order summation keeps every score bit independent of
+    // the pool's scheduling.
+    let scores: Vec<StepScore> = (0..nsteps)
+        .map(|s| {
+            let mut rss = 0.0;
+            for f in &per_fold {
+                rss += f[s];
+            }
+            StepScore { step: s, df: s, score: rss / m as f64 }
+        })
+        .collect();
+    let best = best_step(&scores)?;
+    Ok(Selection {
+        criterion: Criterion::Cv,
+        best_step: best,
+        scores,
+        k: sel.k,
+        seed: sel.seed,
+    })
+}
+
+/// Fit the full path and choose its serving step in one call — what
+/// `calars select` drives. Returns the full-data fit result, its
+/// snapshot, and the selection.
+pub fn select_model(
+    a: &Matrix,
+    b: &[f64],
+    fit: &FitSpec,
+    sel: &SelectSpec,
+) -> Result<(crate::fit::FitResult, PathSnapshot, Selection)> {
+    let mut obs = SnapshotObserver::new();
+    let result = fit.fit(a, b, &mut obs)?;
+    let snap = obs.into_snapshot().expect("on_complete fires when fit returns Ok");
+    let mut selection = match sel.criterion {
+        Criterion::Cv => cross_validate(a, b, fit, sel)?,
+        c => rank_steps(&snap, a.nrows(), c)?,
+    };
+    // A CV-chosen step is served from the full-data path; clamp in
+    // case the full path is shorter than every fold path.
+    if selection.best_step >= snap.len() {
+        selection.best_step = snap.len().saturating_sub(1);
+    }
+    Ok((result, snap, selection))
+}
+
+// ── selection metadata tokens ───────────────────────────────────────
+//
+// The serving layer records chosen steps in the model metadata as
+// space-separated `key=step` tokens ("cp=4 aic=5 cv5.0=3"), where the
+// key is `SelectSpec::token_key`. Kept here so the registry, the HTTP
+// layer, and tests share one format.
+
+/// Render one selection token (`"cp=4"`, `"cv5.7=3"`).
+pub fn selection_token(key: &str, step: usize) -> String {
+    format!("{key}={step}")
+}
+
+/// Find a selection token's step by key.
+pub fn find_selection(selection: &str, key: &str) -> Option<usize> {
+    selection.split_whitespace().find_map(|tok| {
+        let (k, v) = tok.split_once('=')?;
+        if k == key {
+            v.parse().ok()
+        } else {
+            None
+        }
+    })
+}
+
+/// Insert or replace a token by key, preserving the others' order.
+pub fn upsert_selection(selection: &str, key: &str, step: usize) -> String {
+    let mut toks: Vec<String> = selection
+        .split_whitespace()
+        .filter(|tok| tok.split_once('=').map(|(k, _)| k) != Some(key))
+        .map(str::to_string)
+        .collect();
+    toks.push(selection_token(key, step));
+    toks.join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::error::ErrorKind;
+    use crate::fit::Algorithm;
+    use crate::lars::path::PathStep;
+
+    fn toy_snapshot(rss: &[f64]) -> PathSnapshot {
+        // Step s has support {0..s} and ‖r‖ = √rss[s].
+        let steps = rss
+            .iter()
+            .enumerate()
+            .map(|(s, &r)| PathStep {
+                lambda: (rss.len() - s) as f64,
+                support: (0..s).collect(),
+                coefs: vec![1.0; s],
+                residual_norm: r.sqrt(),
+            })
+            .collect();
+        PathSnapshot { n: rss.len(), steps }
+    }
+
+    #[test]
+    fn criteria_penalize_model_size() {
+        // RSS barely improves after step 2: every criterion should
+        // stop there rather than pay for more degrees of freedom.
+        let snap = toy_snapshot(&[100.0, 20.0, 5.0, 4.999, 4.998, 4.997]);
+        for c in [Criterion::Cp, Criterion::Aic, Criterion::Bic] {
+            let sel = rank_steps(&snap, 100, c).unwrap();
+            assert_eq!(sel.best_step, 2, "{c:?}: {:?}", sel.scores);
+            assert_eq!(sel.scores.len(), 6);
+            assert_eq!(sel.scores[3].df, 3);
+        }
+        // BIC's ln(m) penalty is at least AIC's (m ≥ 8 ⇒ ln m ≥ 2).
+        let aic = rank_steps(&snap, 100, Criterion::Aic).unwrap();
+        let bic = rank_steps(&snap, 100, Criterion::Bic).unwrap();
+        assert!(bic.best_step <= aic.best_step);
+    }
+
+    #[test]
+    fn rank_steps_rejects_degenerate_inputs() {
+        let snap = toy_snapshot(&[10.0, 1.0]);
+        assert_eq!(
+            rank_steps(&snap, 10, Criterion::Cv).unwrap_err().kind(),
+            ErrorKind::InvalidSpec
+        );
+        assert_eq!(rank_steps(&snap, 0, Criterion::Cp).unwrap_err().kind(), ErrorKind::InvalidSpec);
+        let empty = PathSnapshot { n: 3, steps: Vec::new() };
+        assert_eq!(
+            rank_steps(&empty, 10, Criterion::Aic).unwrap_err().kind(),
+            ErrorKind::InvalidSpec
+        );
+        // Saturated path (zero final residual): Cp undefined, AIC fine.
+        let sat = toy_snapshot(&[10.0, 0.0]);
+        assert_eq!(rank_steps(&sat, 10, Criterion::Cp).unwrap_err().kind(), ErrorKind::InvalidSpec);
+        assert_eq!(rank_steps(&sat, 10, Criterion::Aic).unwrap().best_step, 1);
+    }
+
+    #[test]
+    fn select_spec_validates_and_keys() {
+        assert!(SelectSpec::new(Criterion::Cv).k(1).validate().is_err());
+        assert!(SelectSpec::new(Criterion::Cv).k(2).validate().is_ok());
+        assert!(SelectSpec::new(Criterion::Cp).k(1).validate().is_ok(), "k ignored off-CV");
+        assert_eq!(SelectSpec::new(Criterion::Cv).k(5).seed(7).token_key(), "cv5.7");
+        assert_eq!(SelectSpec::new(Criterion::Bic).token_key(), "bic");
+        assert_eq!(Criterion::from_name("aic").unwrap(), Criterion::Aic);
+        assert!(Criterion::from_name("r2").is_err());
+    }
+
+    #[test]
+    fn cv_recovers_the_planted_support_size() {
+        // tiny plants 12 true features; CV error should stop shrinking
+        // near 12 selected columns, never pick the empty model, and be
+        // fully deterministic.
+        let d = datasets::tiny(3);
+        let fit = FitSpec::new(Algorithm::Lars).t(20);
+        let sel = SelectSpec::new(Criterion::Cv).k(5).seed(1);
+        let s1 = cross_validate(&d.a, &d.b, &fit, &sel).unwrap();
+        let s2 = cross_validate(&d.a, &d.b, &fit, &sel).unwrap();
+        assert_eq!(s1, s2, "CV must be deterministic");
+        assert!(s1.best_step >= 6, "planted k=12: best step {}", s1.best_step);
+        assert!(s1.scores[0].score > s1.scores[s1.best_step].score);
+        // The scores at the chosen step beat the saturated end or tie.
+        let last = s1.scores.last().unwrap().score;
+        assert!(s1.scores[s1.best_step].score <= last);
+    }
+
+    #[test]
+    fn cv_rejects_bad_geometry() {
+        let d = datasets::tiny_dense(1);
+        let fit = FitSpec::new(Algorithm::Lars).t(4);
+        let err = cross_validate(&d.a, &d.b, &fit, &SelectSpec::new(Criterion::Cv).k(1))
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        let err = cross_validate(
+            &d.a,
+            &d.b,
+            &fit,
+            &SelectSpec::new(Criterion::Cv).k(d.a.nrows() + 1),
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        let err =
+            cross_validate(&d.a, &d.b, &fit, &SelectSpec::new(Criterion::Cp)).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec, "cross_validate is CV-only");
+    }
+
+    #[test]
+    fn selection_tokens_round_trip() {
+        let s = upsert_selection("", "cp", 4);
+        let s = upsert_selection(&s, "cv5.0", 3);
+        assert_eq!(find_selection(&s, "cp"), Some(4));
+        assert_eq!(find_selection(&s, "cv5.0"), Some(3));
+        assert_eq!(find_selection(&s, "aic"), None);
+        let s = upsert_selection(&s, "cp", 6);
+        assert_eq!(find_selection(&s, "cp"), Some(6));
+        assert_eq!(s.matches("cp=").count(), 1, "upsert replaces: {s}");
+    }
+}

@@ -29,6 +29,7 @@
 use super::store::{ModelRecord, ModelRegistry};
 use crate::error::{anyhow, Result};
 use crate::linalg::{dot, DenseMatrix};
+use crate::select::{self, Criterion};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -40,6 +41,12 @@ pub enum Selector {
     Step(usize),
     /// Regularization level; interpolated between breakpoints.
     Lambda(f64),
+    /// Let an in-sample criterion ([`crate::select`]) choose the step
+    /// on the stored path, per model. Needs the model's recorded
+    /// training row count ([`crate::serve::ModelMeta::rows`]);
+    /// [`Criterion::Cv`] is rejected at resolve time — run
+    /// `POST /select` to compute (and cache) a CV choice first.
+    Auto(Criterion),
 }
 
 impl Selector {
@@ -47,6 +54,7 @@ impl Selector {
         match *self {
             Selector::Step(k) => SelKey::Step(k as u64),
             Selector::Lambda(l) => SelKey::Lambda(l.to_bits()),
+            Selector::Auto(c) => SelKey::Auto(c),
         }
     }
 }
@@ -56,6 +64,7 @@ impl Selector {
 enum SelKey {
     Step(u64),
     Lambda(u64),
+    Auto(Criterion),
 }
 
 /// One prediction query: model, path position, feature vector.
@@ -150,13 +159,13 @@ impl PredictionEngine {
     /// through the LRU snapshot cache.
     pub fn coefs_for(&self, rec: &ModelRecord, selector: Selector) -> Result<Arc<Vec<f64>>> {
         let key = (rec.id, rec.version, selector.cache_key());
-        if let Some(v) = self.cache.lock().unwrap().get(&key) {
+        if let Some(v) = self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key) {
             self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(v);
         }
         self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
         let dense = Arc::new(resolve_coefs(rec, selector)?);
-        self.cache.lock().unwrap().put(key, dense.clone());
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).put(key, dense.clone());
         Ok(dense)
     }
 
@@ -340,6 +349,20 @@ fn resolve_coefs(rec: &ModelRecord, selector: Selector) -> Result<Vec<f64>> {
             }
             Err(anyhow!("lambda {l} not bracketed by model {}'s path", rec.id))
         }
+        Selector::Auto(criterion) => {
+            if criterion == Criterion::Cv {
+                return Err(anyhow!(
+                    "selector 'auto cv' cannot resolve at predict time (it needs fold \
+                     refits); POST /select with criterion cv, then predict the \
+                     returned step"
+                ));
+            }
+            let sel = select::rank_steps(snap, rec.meta.rows, criterion)
+                .map_err(|e| e.context(format!("auto-selection on model {}", rec.id)))?;
+            Ok(snap
+                .dense_coefs(sel.best_step)
+                .expect("criterion scores are indexed by stored steps"))
+        }
     }
 }
 
@@ -457,6 +480,42 @@ mod tests {
         assert!(r[1].is_err());
         assert!(r[2].is_err());
         assert_eq!(eng.stats().errors, 2);
+    }
+
+    #[test]
+    fn auto_selector_resolves_via_in_sample_criterion() {
+        let (reg, id) = registry_with_path();
+        {
+            // Ad-hoc insert (training row count unknown): typed error,
+            // not a panic.
+            let eng = PredictionEngine::new(reg.clone(), 8);
+            let q = Query {
+                model: id,
+                selector: Selector::Auto(Criterion::Aic),
+                x: vec![1.0, 1.0, 1.0],
+            };
+            assert!(eng.predict(&q).is_err());
+        }
+        let mut meta = ModelMeta::named("auto");
+        meta.rows = 50;
+        let snap = reg.get(id).unwrap().snapshot.clone();
+        let id2 = reg.insert(meta, snap);
+        let eng = PredictionEngine::new(reg, 8);
+        let x = vec![10.0, 100.0, 1.0];
+        // Residuals fall 5 → 3 → 1 on m = 50: AIC favors the final
+        // step, so Auto(Aic) must serve exactly Step(2)'s bits.
+        let auto = eng
+            .predict(&Query { model: id2, selector: Selector::Auto(Criterion::Aic), x: x.clone() })
+            .unwrap();
+        let at2 = eng
+            .predict(&Query { model: id2, selector: Selector::Step(2), x: x.clone() })
+            .unwrap();
+        assert_eq!(auto.to_bits(), at2.to_bits());
+        // CV cannot resolve lazily at predict time.
+        let err = eng
+            .predict(&Query { model: id2, selector: Selector::Auto(Criterion::Cv), x })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("/select"), "{err:#}");
     }
 
     #[test]

@@ -180,7 +180,7 @@ impl GramCache {
     /// but a different seed does **not** match (different contents);
     /// the subsequent [`Self::register`] will invalidate it.
     pub fn lookup(&self, name: &str, seed: u64) -> Option<(Arc<Dataset>, Arc<PanelStore>)> {
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let g = &mut *guard;
         match g.entries.get(name) {
             Some(e) if e.seed == seed => {
@@ -203,7 +203,7 @@ impl GramCache {
     /// contents again just refreshes the entry.
     pub fn register(&self, name: &str, seed: u64, dataset: Arc<Dataset>) -> Arc<PanelStore> {
         let fingerprint = fingerprint_dataset(&dataset);
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let g = &mut *guard;
         if let Some(e) = g.entries.get(name) {
             if e.fingerprint == fingerprint {
@@ -251,7 +251,7 @@ impl GramCache {
     /// divide raw features by to match the unit-norm training data),
     /// and the entry's panel counters.
     pub fn list(&self) -> Vec<DatasetInfo> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut out: Vec<DatasetInfo> = g
             .entries
             .iter()
@@ -271,7 +271,7 @@ impl GramCache {
 
     /// Counter snapshot (live entries + retired accumulators).
     pub fn stats(&self) -> GramCacheStats {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut s = GramCacheStats {
             datasets: g.entries.len(),
             dataset_bytes: g.dataset_bytes,

@@ -10,6 +10,9 @@
 //! * `GET  /stats`   — engine/queue/registry/gram-cache counters (JSON)
 //! * `POST /fit`     — enqueue a fit job (`?wait=1` blocks until done)
 //! * `POST /predict` — batched prediction (line-protocol body)
+//! * `POST /select`  — model selection on a stored path: Cp/AIC/BIC
+//!   from the snapshot, or k-fold CV refits through the GramCache
+//!   (line-protocol body; result cached in the model metadata)
 //! * `POST /shutdown`— graceful stop (only with `allow_shutdown`, i.e.
 //!   `calars serve --oneshot` and in-process test servers)
 //!
@@ -23,10 +26,16 @@
 use super::engine::{PredictionEngine, Query};
 use super::protocol::{
     self, http_response, json_escape, json_f64, FitRequest, HttpRequest, PredictRequest,
+    SelectRequest,
 };
 use super::queue::{FitJob, FitQueue, JobState};
-use super::store::{ModelRegistry, RegistryStats};
+use super::store::{ModelRecord, ModelRegistry, RegistryStats};
+use super::sync::{lock_recover, wait_recover};
+use crate::data::datasets::{self, Dataset};
 use crate::error::{Context, Error, ErrorKind, Result};
+use crate::fit::FitSpec;
+use crate::kern;
+use crate::select::{self, Criterion, SelectSpec, Selection};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -92,6 +101,11 @@ struct ServerState {
     engine: Arc<PredictionEngine>,
     queue: FitQueue,
     batcher: Arc<Batcher>,
+    /// Fold shards for cross-validated `/select` live in their own
+    /// cache: registering k near-dataset-sized fold clones in the main
+    /// [`super::GramCache`] would LRU-evict the real datasets it
+    /// exists to keep (`/stats` → `cv_cache`).
+    cv_cache: Arc<super::GramCache>,
     running: AtomicBool,
     allow_shutdown: bool,
     persist_dir: Option<PathBuf>,
@@ -174,6 +188,10 @@ fn bind(opts: &ServeOptions) -> Result<(TcpListener, Arc<ServerState>)> {
         engine,
         queue,
         batcher,
+        // Bounded well below the main cache: fold shards are cheap to
+        // rebuild (one row gather) — only their Gram panels are worth
+        // keeping across selections.
+        cv_cache: Arc::new(super::GramCache::new(32, 8 << 20).dataset_byte_bound(64 << 20)),
         running: AtomicBool::new(true),
         allow_shutdown: opts.allow_shutdown,
         persist_dir: opts.persist_dir.as_ref().map(PathBuf::from),
@@ -247,6 +265,7 @@ fn route(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
         ("GET", "/stats") => (200, stats_json(state)),
         ("POST", "/predict") => predict(req, state),
         ("POST", "/fit") => fit(req, state),
+        ("POST", "/select") => select_route(req, state),
         ("POST", "/shutdown") => shutdown(state),
         ("GET", _) | ("POST", _) => {
             (404, format!("{{\"error\":\"no route {}\"}}", json_escape(&req.path)))
@@ -260,8 +279,8 @@ fn err_json(e: &Error) -> String {
     format!("{{\"error\":\"{}\"}}", json_escape(&format!("{e:#}")))
 }
 
-/// HTTP status for a typed error: bad user input → 400, everything
-/// else → 400 (request-scoped). The 422 arm is reserved for
+/// HTTP status for a typed error: bad user input → 400, server-side
+/// failures (panicked workers) → 500. The 422 arm is reserved for
 /// `ErrorKind::RankDeficient` *hard* failures — fitters currently
 /// report recoverable rank deficiency inside a 200 response as
 /// `stop=rank_deficient` (see `/models`), so this arm only fires if a
@@ -269,6 +288,7 @@ fn err_json(e: &Error) -> String {
 fn error_status(e: &Error) -> u16 {
     match e.kind() {
         ErrorKind::RankDeficient => 422,
+        ErrorKind::Internal => 500,
         ErrorKind::InvalidSpec | ErrorKind::Other => 400,
     }
 }
@@ -320,6 +340,139 @@ fn fit(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
     (200, job_json(job, st.as_ref()))
 }
 
+/// `POST /select` — choose a serving step on a stored model's path.
+///
+/// In-sample criteria (cp/aic/bic) rank the stored snapshot directly.
+/// `criterion cv` rebuilds the training problem from the model's
+/// metadata (dataset + canonical fit spec) and runs seeded k-fold CV
+/// with the fold fits fanned out on the [`crate::par`] pool; each fold
+/// binds to an entry in the dedicated CV [`super::GramCache`]
+/// (`/stats` → `cv_cache`), so deeper refits of the family reuse the
+/// fold Gram panels (the warm-refit analogue of the fit path's panel
+/// reuse) without fold shards evicting real datasets from the main
+/// cache. The chosen step is recorded in the model's selection
+/// metadata — an identical repeat `/select` answers from the cached
+/// token without refitting.
+fn select_route(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
+    let parsed = match SelectRequest::parse(&req.body) {
+        Ok(p) => p,
+        Err(e) => return (error_status(&e), err_json(&e)),
+    };
+    let sel_spec = match parsed.to_spec() {
+        Ok(s) => s,
+        Err(e) => return (error_status(&e), err_json(&e)),
+    };
+    let Some(rec) = state.registry.get(parsed.model) else {
+        return (404, format!("{{\"error\":\"unknown model {}\"}}", parsed.model));
+    };
+    let key = sel_spec.token_key();
+    if parsed.criterion != Criterion::Cv {
+        return match select::rank_steps(&rec.snapshot, rec.meta.rows, parsed.criterion) {
+            Ok(selection) => {
+                // The upsert runs inside the registry lock so two
+                // concurrent /selects never lose each other's tokens.
+                state.registry.record_selection(rec.id, &key, selection.best_step);
+                (200, selection_json(rec.id, &key, selection.best_step, Some(&selection), false))
+            }
+            Err(e) => (error_status(&e), err_json(&e)),
+        };
+    }
+    // CV: an identical earlier selection answers from the metadata.
+    if let Some(step) = select::find_selection(&rec.meta.selection, &key) {
+        return (200, selection_json(rec.id, &key, step, None, true));
+    }
+    match cv_select(state, &rec, &sel_spec) {
+        Ok(selection) => {
+            // Serve from the full-data path: clamp in case every fold
+            // path ran deeper than the stored one.
+            let step = selection.best_step.min(rec.snapshot.len().saturating_sub(1));
+            state.registry.record_selection(rec.id, &key, step);
+            (200, selection_json(rec.id, &key, step, Some(&selection), false))
+        }
+        Err(e) => (error_status(&e), err_json(&e)),
+    }
+}
+
+/// Run cross-validated selection for a stored model, rebuilding its
+/// training problem from the registry metadata and binding every fold
+/// fit to a GramCache-registered panel store.
+fn cv_select(
+    state: &Arc<ServerState>,
+    rec: &ModelRecord,
+    sel: &SelectSpec,
+) -> Result<Selection> {
+    let spec = FitSpec::parse(&rec.meta.spec)
+        .context("model has no usable fit spec (ad-hoc insert?); cv needs one")?;
+    let gram = state.queue.gram_cache();
+    let ds = match gram.lookup(&rec.meta.dataset, rec.meta.seed) {
+        Some((ds, _)) => ds,
+        None => {
+            let ds = Arc::new(
+                datasets::by_name(&rec.meta.dataset, rec.meta.seed).ok_or_else(|| {
+                    crate::anyhow!("dataset '{}' is not loadable", rec.meta.dataset)
+                })?,
+            );
+            gram.register(&rec.meta.dataset, rec.meta.seed, Arc::clone(&ds));
+            ds
+        }
+    };
+    let base = format!("{}@{}#{}", rec.meta.dataset, rec.meta.seed, sel.token_key());
+    let folds = &state.cv_cache;
+    select::cross_validate_with(&ds.a, &ds.b, &spec, sel, |ctx, fit| {
+        // Per-fold entry in the dedicated CV cache: fold construction
+        // is deterministic, so a later /select on a deeper family
+        // refit re-registers identical contents and its fit hits the
+        // cached fold Gram panels — without fold clones competing with
+        // the real datasets in the main GramCache.
+        let name = format!("{base}:{}", ctx.fold);
+        let store = match folds.lookup(&name, rec.meta.seed) {
+            Some((_, store)) => store,
+            None => {
+                let fold_ds = Arc::new(Dataset {
+                    name: name.clone(),
+                    a: ctx.a.clone(),
+                    b: ctx.b.to_vec(),
+                    true_support: None,
+                    col_norms: ctx.norms.to_vec(),
+                });
+                folds.register(&name, rec.meta.seed, fold_ds)
+            }
+        };
+        kern::cache::with_store(&store, || select::fit_fold_snapshot(ctx, fit))
+    })
+}
+
+/// JSON body for a selection result. `scores` is omitted for answers
+/// served from cached selection metadata.
+fn selection_json(
+    model: u64,
+    key: &str,
+    step: usize,
+    selection: Option<&Selection>,
+    cached: bool,
+) -> String {
+    let scores = selection
+        .map(|sel| {
+            sel.scores
+                .iter()
+                .map(|s| {
+                    format!(
+                        "{{\"step\":{},\"df\":{},\"score\":{}}}",
+                        s.step,
+                        s.df,
+                        json_f64(s.score)
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(",")
+        })
+        .unwrap_or_default();
+    format!(
+        "{{\"model\":{model},\"key\":\"{}\",\"step\":{step},\"cached\":{cached},\"scores\":[{scores}]}}",
+        json_escape(key)
+    )
+}
+
 fn shutdown(state: &Arc<ServerState>) -> (u16, String) {
     if !state.allow_shutdown {
         return (405, "{\"error\":\"shutdown disabled (run with --oneshot)\"}".to_string());
@@ -353,7 +506,7 @@ fn models_json(state: &Arc<ServerState>) -> String {
         .map(|r| {
             let (lambda_max, lambda_min) = r.snapshot.lambda_range();
             format!(
-                "{{\"id\":{},\"version\":{},\"name\":\"{}\",\"algo\":\"{}\",\"dataset\":\"{}\",\"t\":{},\"b\":{},\"p\":{},\"seed\":{},\"stop\":\"{}\",\"spec\":\"{}\",\"n\":{},\"steps\":{},\"max_support\":{},\"lambda_max\":{},\"lambda_min\":{},\"created_unix\":{}}}",
+                "{{\"id\":{},\"version\":{},\"name\":\"{}\",\"algo\":\"{}\",\"dataset\":\"{}\",\"t\":{},\"b\":{},\"p\":{},\"seed\":{},\"rows\":{},\"stop\":\"{}\",\"spec\":\"{}\",\"selection\":\"{}\",\"n\":{},\"steps\":{},\"max_support\":{},\"lambda_max\":{},\"lambda_min\":{},\"created_unix\":{}}}",
                 r.id,
                 r.version,
                 json_escape(&r.meta.display_name()),
@@ -363,8 +516,10 @@ fn models_json(state: &Arc<ServerState>) -> String {
                 r.meta.b,
                 r.meta.p,
                 r.meta.seed,
+                r.meta.rows,
                 json_escape(&r.meta.stop),
                 json_escape(&r.meta.spec),
+                json_escape(&r.meta.selection),
                 r.snapshot.n,
                 r.snapshot.len(),
                 r.snapshot.max_support(),
@@ -408,35 +563,11 @@ fn datasets_json(state: &Arc<ServerState>) -> String {
     format!("{{\"datasets\":[{}]}}", items.join(","))
 }
 
-fn stats_json(state: &Arc<ServerState>) -> String {
-    let e = state.engine.stats();
-    let q = state.queue.stats();
-    let r: RegistryStats = state.registry.stats();
-    let g = state.queue.gram_cache().stats();
+/// One gram-cache counter object (shared by the `gram_cache` and
+/// `cv_cache` sections of `/stats`).
+fn gram_stats_json(g: &super::GramCacheStats) -> String {
     format!(
-        "{{\"uptime_secs\":{},\"http_requests\":{},\
-          \"engine\":{{\"queries\":{},\"batches\":{},\"batched_rows\":{},\"max_batch_rows\":{},\"cache_hits\":{},\"cache_misses\":{},\"errors\":{}}},\
-          \"queue\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"in_flight\":{}}},\
-          \"registry\":{{\"models\":{},\"inserted\":{},\"evicted\":{},\"warm_reused\":{},\"approx_bytes\":{}}},\
-          \"gram_cache\":{{\"datasets\":{},\"dataset_bytes\":{},\"dataset_hits\":{},\"dataset_misses\":{},\"invalidations\":{},\"evictions\":{},\"panel_hits\":{},\"panel_misses\":{},\"panel_evictions\":{},\"panels\":{},\"panel_bytes\":{}}}}}",
-        json_f64(state.started.elapsed().as_secs_f64()),
-        state.requests.load(Ordering::Relaxed),
-        e.queries,
-        e.batches,
-        e.batched_rows,
-        e.max_batch_rows,
-        e.cache_hits,
-        e.cache_misses,
-        e.errors,
-        q.submitted,
-        q.completed,
-        q.failed,
-        q.in_flight,
-        r.models,
-        r.inserted,
-        r.evicted,
-        r.warm_reused,
-        r.approx_bytes,
+        "{{\"datasets\":{},\"dataset_bytes\":{},\"dataset_hits\":{},\"dataset_misses\":{},\"invalidations\":{},\"evictions\":{},\"panel_hits\":{},\"panel_misses\":{},\"panel_evictions\":{},\"panels\":{},\"panel_bytes\":{}}}",
         g.datasets,
         g.dataset_bytes,
         g.dataset_hits,
@@ -451,6 +582,45 @@ fn stats_json(state: &Arc<ServerState>) -> String {
     )
 }
 
+fn stats_json(state: &Arc<ServerState>) -> String {
+    let e = state.engine.stats();
+    let q = state.queue.stats();
+    let r: RegistryStats = state.registry.stats();
+    let b = state.batcher.stats();
+    format!(
+        "{{\"uptime_secs\":{},\"http_requests\":{},\
+          \"engine\":{{\"queries\":{},\"batches\":{},\"batched_rows\":{},\"max_batch_rows\":{},\"cache_hits\":{},\"cache_misses\":{},\"errors\":{}}},\
+          \"batcher\":{{\"lock_recoveries\":{},\"engine_panics\":{}}},\
+          \"queue\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"in_flight\":{},\"lock_recoveries\":{}}},\
+          \"registry\":{{\"models\":{},\"inserted\":{},\"evicted\":{},\"warm_reused\":{},\"approx_bytes\":{}}},\
+          \"gram_cache\":{},\
+          \"cv_cache\":{}}}",
+        json_f64(state.started.elapsed().as_secs_f64()),
+        state.requests.load(Ordering::Relaxed),
+        e.queries,
+        e.batches,
+        e.batched_rows,
+        e.max_batch_rows,
+        e.cache_hits,
+        e.cache_misses,
+        e.errors,
+        b.lock_recoveries,
+        b.engine_panics,
+        q.submitted,
+        q.completed,
+        q.failed,
+        q.in_flight,
+        q.lock_recoveries,
+        r.models,
+        r.inserted,
+        r.evicted,
+        r.warm_reused,
+        r.approx_bytes,
+        gram_stats_json(&state.queue.gram_cache().stats()),
+        gram_stats_json(&state.cv_cache.stats())
+    )
+}
+
 // ── the cross-request batcher ───────────────────────────────────────
 
 struct Pending {
@@ -459,14 +629,35 @@ struct Pending {
     tx: mpsc::Sender<(usize, Result<f64>)>,
 }
 
+/// Batcher counters exposed through `/stats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatcherStats {
+    /// Poisoned-lock recoveries (a thread panicked inside a batcher
+    /// critical section; the server kept serving).
+    pub lock_recoveries: u64,
+    /// Prediction batches that panicked inside the engine; their
+    /// queries were failed with a typed 500 instead of killing the
+    /// drain thread.
+    pub engine_panics: u64,
+}
+
 /// Funnels prediction rows from all connection threads into one
 /// [`PredictionEngine::predict_batch`] call per drain.
+///
+/// **Poison hardening** (bugfix): every lock acquisition recovers from
+/// a poisoned mutex (`PoisonError::into_inner`) and counts the
+/// recovery, and a panic inside the engine is caught per batch — the
+/// affected queries answer 500, the drain thread lives on. The old
+/// `.lock().unwrap()` sites turned one panicking worker into an abort
+/// in every subsequent connection thread.
 pub struct Batcher {
     queue: Mutex<Vec<Pending>>,
     cv: Condvar,
     stopping: AtomicBool,
     window: Duration,
     worker: Mutex<Option<thread::JoinHandle<()>>>,
+    lock_recoveries: AtomicU64,
+    engine_panics: AtomicU64,
 }
 
 impl Batcher {
@@ -478,22 +669,32 @@ impl Batcher {
             stopping: AtomicBool::new(false),
             window,
             worker: Mutex::new(None),
+            lock_recoveries: AtomicU64::new(0),
+            engine_panics: AtomicU64::new(0),
         });
         let b2 = Arc::clone(&b);
         let handle = thread::Builder::new()
             .name("calars-serve-batch".to_string())
             .spawn(move || b2.run(engine))
             .expect("spawn batcher");
-        *b.worker.lock().unwrap() = Some(handle);
+        *lock_recover(&b.worker, &b.lock_recoveries) = Some(handle);
         b
+    }
+
+    /// Counter snapshot for `/stats`.
+    pub fn stats(&self) -> BatcherStats {
+        BatcherStats {
+            lock_recoveries: self.lock_recoveries.load(Ordering::Relaxed),
+            engine_panics: self.engine_panics.load(Ordering::Relaxed),
+        }
     }
 
     fn run(&self, engine: Arc<PredictionEngine>) {
         loop {
             {
-                let mut g = self.queue.lock().unwrap();
+                let mut g = lock_recover(&self.queue, &self.lock_recoveries);
                 while g.is_empty() && !self.stopping.load(Ordering::SeqCst) {
-                    g = self.cv.wait(g).unwrap();
+                    g = wait_recover(&self.cv, g, &self.lock_recoveries);
                 }
                 if g.is_empty() && self.stopping.load(Ordering::SeqCst) {
                     return;
@@ -503,7 +704,8 @@ impl Batcher {
             if !self.window.is_zero() {
                 thread::sleep(self.window);
             }
-            let batch: Vec<Pending> = std::mem::take(&mut *self.queue.lock().unwrap());
+            let batch: Vec<Pending> =
+                std::mem::take(&mut *lock_recover(&self.queue, &self.lock_recoveries));
             if batch.is_empty() {
                 continue;
             }
@@ -513,9 +715,27 @@ impl Batcher {
                 queries.push(p.query);
                 replies.push((p.tx, p.slot));
             }
-            let results = engine.predict_batch(&queries);
-            for ((tx, slot), r) in replies.into_iter().zip(results) {
-                let _ = tx.send((slot, r));
+            // A panic inside the engine fails this batch's queries with
+            // a typed 500; it must not kill the drain thread (every
+            // later /predict would then hang until its poll timeout).
+            let results = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                engine.predict_batch(&queries)
+            }));
+            match results {
+                Ok(results) => {
+                    for ((tx, slot), r) in replies.into_iter().zip(results) {
+                        let _ = tx.send((slot, r));
+                    }
+                }
+                Err(_) => {
+                    self.engine_panics.fetch_add(1, Ordering::Relaxed);
+                    for (tx, slot) in replies {
+                        let _ = tx.send((
+                            slot,
+                            Err(Error::internal("prediction engine panicked; request failed")),
+                        ));
+                    }
+                }
             }
         }
     }
@@ -532,7 +752,7 @@ impl Batcher {
         }
         let (tx, rx) = mpsc::channel();
         {
-            let mut g = self.queue.lock().unwrap();
+            let mut g = lock_recover(&self.queue, &self.lock_recoveries);
             for (slot, query) in queries.into_iter().enumerate() {
                 g.push(Pending { query, slot, tx: tx.clone() });
             }
@@ -570,12 +790,12 @@ impl Batcher {
     pub fn stop(&self) {
         self.stopping.store(true, Ordering::SeqCst);
         self.cv.notify_all();
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        if let Some(h) = lock_recover(&self.worker, &self.lock_recoveries).take() {
             let _ = h.join();
         }
         // Fail anything that slipped in after the drain thread exited:
         // dropping the pending entries drops their reply senders.
-        let leftover = std::mem::take(&mut *self.queue.lock().unwrap());
+        let leftover = std::mem::take(&mut *lock_recover(&self.queue, &self.lock_recoveries));
         drop(leftover);
     }
 }
@@ -623,6 +843,32 @@ mod tests {
             "the 20ms window should capture ≥ 2 concurrent rows, saw {}",
             s.max_batch_rows
         );
+        b.stop();
+    }
+
+    #[test]
+    fn poisoned_batcher_lock_recovers_instead_of_cascading() {
+        // Regression: a thread panicking while holding the batcher
+        // queue lock used to poison it, and every later connection
+        // thread died at `.lock().unwrap()`. The batcher now recovers,
+        // counts the recovery (surfaced via /stats), and keeps
+        // answering predictions.
+        let (engine, id) = engine_with_model();
+        let b = Batcher::start(engine, Duration::from_micros(0));
+        let b2 = Arc::clone(&b);
+        let _ = thread::spawn(move || {
+            let _guard = b2.queue.lock().unwrap();
+            panic!("poison the batcher queue lock");
+        })
+        .join();
+        // Pre-fix this panicked; now it serves.
+        let r = b.submit_wait(vec![Query {
+            model: id,
+            selector: Selector::Step(1),
+            x: vec![2.0, 0.0],
+        }]);
+        assert_eq!(r[0].as_ref().unwrap(), &6.0);
+        assert!(b.stats().lock_recoveries >= 1, "{:?}", b.stats());
         b.stop();
     }
 

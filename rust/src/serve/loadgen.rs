@@ -9,7 +9,7 @@
 //! [`crate::metrics::LatencyStats`].
 
 use super::engine::Selector;
-use super::protocol::{self, FitRequest, PredictRequest};
+use super::protocol::{self, FitRequest, PredictRequest, SelectRequest};
 use crate::error::{bail, Context, Result};
 use crate::metrics::LatencyStats;
 use crate::rng::Pcg64;
@@ -61,6 +61,16 @@ impl ServeClient {
 
     pub fn predict(&mut self, req: &PredictRequest) -> Result<(u16, String)> {
         self.request("POST", "/predict", &req.encode())
+    }
+
+    /// Run model selection on a stored path; returns the chosen step
+    /// on success.
+    pub fn select(&mut self, req: &SelectRequest) -> Result<u64> {
+        let (status, body) = self.request("POST", "/select", &req.encode())?;
+        if status != 200 {
+            bail!("select failed with HTTP {status}: {body}");
+        }
+        protocol::json_find_u64(&body, "step").context("select response missing step")
     }
 
     /// Feature dimension `n` of a registered model (via `GET /models`).

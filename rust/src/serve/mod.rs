@@ -28,8 +28,11 @@
 //! * [`protocol`] — the hand-rolled line protocol + HTTP/1.1 framing +
 //!   minimal JSON emission.
 //! * [`http`] — the front end (`calars serve`): `/fit`, `/predict`,
-//!   `/models`, `/stats` over `std::net::TcpListener`, with a
-//!   cross-connection [`http::Batcher`].
+//!   `/select`, `/models`, `/datasets`, `/stats` over
+//!   `std::net::TcpListener`, with a cross-connection
+//!   [`http::Batcher`]. `/select` drives [`crate::select`] over the
+//!   stored paths (in-sample criteria from the snapshot; CV fold
+//!   refits through the [`GramCache`]).
 //! * [`loadgen`] — the closed-loop load generator
 //!   (`calars bench-serve`, `benches/serving.rs`).
 
@@ -41,10 +44,52 @@ pub mod protocol;
 pub mod queue;
 pub mod store;
 
+/// Poison-recovering lock helpers shared by the serve layer.
+///
+/// A thread that panics while holding a `Mutex` poisons it; the old
+/// `.lock().unwrap()` call sites then cascaded that one panic into
+/// **every** later connection thread, turning a single bad request
+/// into a dead server. Recovery is safe here because every serve-layer
+/// critical section leaves its data structurally valid at each await
+/// point (counters, vectors of queued work, state maps); the worst
+/// case after recovery is one lost in-flight request, which is
+/// reported to its caller as a typed 500 instead of an abort.
+pub(crate) mod sync {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Condvar, Mutex, MutexGuard};
+
+    /// Lock, recovering a poisoned mutex and counting the recovery
+    /// (surfaced through `/stats`).
+    pub fn lock_recover<'a, T>(m: &'a Mutex<T>, recoveries: &AtomicU64) -> MutexGuard<'a, T> {
+        match m.lock() {
+            Ok(g) => g,
+            Err(e) => {
+                recoveries.fetch_add(1, Ordering::Relaxed);
+                e.into_inner()
+            }
+        }
+    }
+
+    /// `Condvar::wait` with the same recovery.
+    pub fn wait_recover<'a, T>(
+        cv: &Condvar,
+        g: MutexGuard<'a, T>,
+        recoveries: &AtomicU64,
+    ) -> MutexGuard<'a, T> {
+        match cv.wait(g) {
+            Ok(g) => g,
+            Err(e) => {
+                recoveries.fetch_add(1, Ordering::Relaxed);
+                e.into_inner()
+            }
+        }
+    }
+}
+
 pub use engine::{EngineStats, PredictionEngine, Query, Selector};
 pub use gram_cache::{DatasetInfo, GramCache, GramCacheStats, NormSummary};
 pub use http::{serve, spawn_server, ServeOptions, ServerHandle};
 pub use loadgen::{run_load, LoadOptions, LoadReport, ServeClient};
-pub use protocol::{FitRequest, PredictRequest};
+pub use protocol::{FitRequest, PredictRequest, SelectRequest};
 pub use queue::{FitJob, FitQueue, JobState, QueueStats};
 pub use store::{ModelMeta, ModelRecord, ModelRegistry, RegistryStats};

@@ -15,6 +15,7 @@
 
 use super::engine::Selector;
 use crate::error::{bail, Context, Result};
+use crate::select::{Criterion, SelectSpec};
 use std::io::{BufRead, Read};
 
 // ── line protocol: /predict ─────────────────────────────────────────
@@ -23,7 +24,7 @@ use std::io::{BufRead, Read};
 ///
 /// ```text
 /// model 3
-/// step 5          # or: lambda 0.25
+/// step 5          # or: lambda 0.25, or: auto cp|aic|bic
 /// x 0.1 0.2 0.3
 /// x 1 0 2
 /// ```
@@ -41,6 +42,7 @@ impl PredictRequest {
         match self.selector {
             Selector::Step(k) => s.push_str(&format!("step {k}\n")),
             Selector::Lambda(l) => s.push_str(&format!("lambda {l}\n")),
+            Selector::Auto(c) => s.push_str(&format!("auto {}\n", c.name())),
         }
         for row in &self.rows {
             s.push('x');
@@ -84,6 +86,11 @@ impl PredictRequest {
                         .parse()
                         .with_context(|| format!("line {}: bad lambda", ln + 1))?;
                     selector = Some(Selector::Lambda(l));
+                }
+                "auto" => {
+                    let c = Criterion::from_name(rest.trim())
+                        .with_context(|| format!("line {}: bad auto criterion", ln + 1))?;
+                    selector = Some(Selector::Auto(c));
                 }
                 "x" => {
                     let row: Vec<f64> = rest
@@ -212,6 +219,76 @@ impl FitRequest {
             .t(self.t)
             .tol(self.tol)
             .ranks(self.p);
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+// ── line protocol: /select ──────────────────────────────────────────
+
+/// Body of `POST /select` — choose a serving step on a stored model's
+/// path (`k`/`seed` only matter for `criterion cv`).
+///
+/// ```text
+/// model 3
+/// criterion cv    # cp | aic | bic | cv
+/// k 5
+/// seed 0
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectRequest {
+    pub model: u64,
+    pub criterion: Criterion,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl SelectRequest {
+    pub fn encode(&self) -> String {
+        let mut s = format!("model {}\ncriterion {}\n", self.model, self.criterion.name());
+        if self.criterion == Criterion::Cv {
+            s.push_str(&format!("k {}\nseed {}\n", self.k, self.seed));
+        }
+        s
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut model: Option<u64> = None;
+        let mut criterion: Option<Criterion> = None;
+        let mut k = 5usize;
+        let mut seed = 0u64;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, rest) = line.split_once(' ').unwrap_or((line, ""));
+            let rest = rest.trim();
+            let bad = |what: &str| format!("line {}: bad {what}", ln + 1);
+            match key {
+                "model" => model = Some(rest.parse().with_context(|| bad("model id"))?),
+                "criterion" => {
+                    criterion =
+                        Some(Criterion::from_name(rest).with_context(|| bad("criterion"))?)
+                }
+                "k" => k = rest.parse().with_context(|| bad("k"))?,
+                "seed" => seed = rest.parse().with_context(|| bad("seed"))?,
+                other => bail!("line {}: unknown key '{other}'", ln + 1),
+            }
+        }
+        let req = SelectRequest {
+            model: model.context("missing 'model' line")?,
+            criterion: criterion.context("missing 'criterion' line")?,
+            k,
+            seed,
+        };
+        req.to_spec()?; // validate the CV knobs up front
+        Ok(req)
+    }
+
+    /// Resolve into a validated [`SelectSpec`].
+    pub fn to_spec(&self) -> Result<SelectSpec> {
+        let spec = SelectSpec::new(self.criterion).k(self.k).seed(self.seed);
         spec.validate()?;
         Ok(spec)
     }
@@ -420,13 +497,12 @@ pub fn json_escape(s: &str) -> String {
     out
 }
 
-/// JSON number for an f64 (`null` for non-finite values).
+/// JSON number for an f64 (`null` for non-finite values) — delegates
+/// to the crate-wide canonical formatter
+/// [`crate::metrics::json_f64`]; kept re-exported here because every
+/// serve-layer emitter imports it from the protocol module.
 pub fn json_f64(v: f64) -> String {
-    if v.is_finite() {
-        v.to_string()
-    } else {
-        "null".to_string()
-    }
+    crate::metrics::json_f64(v)
 }
 
 /// Scan our own emitted JSON for `"key": <u64>` (good enough for the
@@ -475,6 +551,34 @@ mod tests {
         assert!(PredictRequest::parse("model 1\nstep 2\n").is_err(), "no rows");
         assert!(PredictRequest::parse("model 1\nstep 2\nx 1 two\n").is_err(), "bad float");
         assert!(PredictRequest::parse("model 1\nstep 2\nbogus 3\nx 1\n").is_err());
+        assert!(PredictRequest::parse("model 1\nauto r2\nx 1\n").is_err(), "bad criterion");
+    }
+
+    #[test]
+    fn predict_auto_selector_round_trips() {
+        for c in [Criterion::Cp, Criterion::Aic, Criterion::Bic, Criterion::Cv] {
+            let req = PredictRequest {
+                model: 3,
+                selector: Selector::Auto(c),
+                rows: vec![vec![1.0, 2.0]],
+            };
+            assert_eq!(PredictRequest::parse(&req.encode()).unwrap(), req, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn select_request_round_trips_and_validates() {
+        let cv = SelectRequest { model: 7, criterion: Criterion::Cv, k: 4, seed: 9 };
+        assert_eq!(SelectRequest::parse(&cv.encode()).unwrap(), cv);
+        let cp = SelectRequest { model: 2, criterion: Criterion::Cp, k: 5, seed: 0 };
+        assert_eq!(SelectRequest::parse(&cp.encode()).unwrap(), cp);
+        assert!(SelectRequest::parse("criterion cp\n").is_err(), "missing model");
+        assert!(SelectRequest::parse("model 1\n").is_err(), "missing criterion");
+        assert!(SelectRequest::parse("model 1\ncriterion r2\n").is_err());
+        assert!(SelectRequest::parse("model 1\ncriterion cv\nk 1\n").is_err(), "k < 2");
+        assert!(SelectRequest::parse("model 1\ncriterion cp\nbogus 2\n").is_err());
+        let spec = cv.to_spec().unwrap();
+        assert_eq!((spec.criterion, spec.k, spec.seed), (Criterion::Cv, 4, 9));
     }
 
     #[test]

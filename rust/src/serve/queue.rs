@@ -17,10 +17,12 @@
 
 use super::gram_cache::GramCache;
 use super::store::{ModelMeta, ModelRegistry};
+use super::sync::lock_recover;
 use crate::data::datasets;
 use crate::error::Result;
 use crate::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
 use crate::kern;
+use crate::select::{self, Criterion};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -69,6 +71,8 @@ impl FitJob {
             seed: self.seed,
             stop: String::new(),
             spec: self.spec.encode(),
+            rows: 0,
+            selection: String::new(),
         }
     }
 }
@@ -111,6 +115,9 @@ struct Shared {
     submitted: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    /// Poisoned-lock recoveries (a worker panicked inside a queue
+    /// critical section; the queue kept serving).
+    recoveries: AtomicU64,
 }
 
 /// Queue counters exposed through `/stats`.
@@ -120,6 +127,7 @@ pub struct QueueStats {
     pub completed: u64,
     pub failed: u64,
     pub in_flight: u64,
+    pub lock_recoveries: u64,
 }
 
 /// Worker pool running fit jobs on OS threads.
@@ -160,6 +168,7 @@ impl FitQueue {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(nworkers);
         for widx in 0..nworkers {
@@ -186,10 +195,10 @@ impl FitQueue {
     /// job is marked Failed instead of queued.
     pub fn submit(&self, job: FitJob) -> u64 {
         let id = self.next_job.fetch_add(1, Ordering::Relaxed);
-        self.shared.states.lock().unwrap().insert(id, JobState::Queued);
+        lock_recover(&self.shared.states, &self.shared.recoveries).insert(id, JobState::Queued);
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
         let sent = !self.stopped.load(Ordering::SeqCst)
-            && self.tx.lock().unwrap().send(Work::Job(id, job)).is_ok();
+            && lock_recover(&self.tx, &self.shared.recoveries).send(Work::Job(id, job)).is_ok();
         if !sent {
             self.fail_job(id, "fit queue is shut down");
         }
@@ -197,7 +206,7 @@ impl FitQueue {
     }
 
     fn fail_job(&self, id: u64, error: &str) {
-        let mut st = self.shared.states.lock().unwrap();
+        let mut st = lock_recover(&self.shared.states, &self.shared.recoveries);
         let terminal = st.get(&id).map_or(false, JobState::is_terminal);
         if !terminal {
             st.insert(id, JobState::Failed { error: error.to_string() });
@@ -209,14 +218,14 @@ impl FitQueue {
 
     /// Current state of a job (None = unknown id).
     pub fn state(&self, job: u64) -> Option<JobState> {
-        self.shared.states.lock().unwrap().get(&job).cloned()
+        lock_recover(&self.shared.states, &self.shared.recoveries).get(&job).cloned()
     }
 
     /// Block until the job reaches a terminal state or `timeout`
     /// elapses; returns the last observed state.
     pub fn wait(&self, job: u64, timeout: Duration) -> Option<JobState> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.shared.states.lock().unwrap();
+        let mut st = lock_recover(&self.shared.states, &self.shared.recoveries);
         loop {
             match st.get(&job) {
                 None => return None,
@@ -227,7 +236,13 @@ impl FitQueue {
             if now >= deadline {
                 return st.get(&job).cloned();
             }
-            let (guard, _) = self.shared.cv.wait_timeout(st, deadline - now).unwrap();
+            let (guard, _) = match self.shared.cv.wait_timeout(st, deadline - now) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.shared.recoveries.fetch_add(1, Ordering::Relaxed);
+                    e.into_inner()
+                }
+            };
             st = guard;
         }
     }
@@ -248,6 +263,7 @@ impl FitQueue {
             completed,
             failed,
             in_flight: submitted.saturating_sub(completed + failed),
+            lock_recoveries: self.shared.recoveries.load(Ordering::Relaxed),
         }
     }
 
@@ -257,12 +273,13 @@ impl FitQueue {
             return;
         }
         {
-            let tx = self.tx.lock().unwrap();
+            let tx = lock_recover(&self.tx, &self.shared.recoveries);
             for _ in 0..self.nworkers {
                 let _ = tx.send(Work::Shutdown);
             }
         }
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.workers.lock().unwrap());
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *lock_recover(&self.workers, &self.shared.recoveries));
         for h in handles {
             let _ = h.join();
         }
@@ -270,7 +287,7 @@ impl FitQueue {
         // them, where no worker will ever pop it; fail every job still
         // non-terminal so waiters wake instead of running out the clock.
         let stuck: Vec<u64> = {
-            let st = self.shared.states.lock().unwrap();
+            let st = lock_recover(&self.shared.states, &self.shared.recoveries);
             st.iter().filter(|(_, s)| !s.is_terminal()).map(|(&id, _)| id).collect()
         };
         for id in stuck {
@@ -291,7 +308,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, shared: Arc<Shared>) {
         // pool pattern): once a message arrives the guard drops and the
         // next idle worker can take the receiver.
         let work = {
-            let guard = rx.lock().unwrap();
+            let guard = lock_recover(&rx, &shared.recoveries);
             guard.recv()
         };
         let (job, spec) = match work {
@@ -300,14 +317,28 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, shared: Arc<Shared>) {
         };
         set_state(&shared, job, JobState::Running);
         let t0 = Instant::now();
-        let state = match run_fit(&shared.registry, &shared.gram_cache, &spec) {
-            Ok((model, reused)) => {
+        // A panic inside the fit must fail this one job, not silently
+        // shrink the worker pool (and strand the job in Running).
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_fit(&shared.registry, &shared.gram_cache, &spec)
+        }));
+        let state = match outcome {
+            Ok(Ok((model, reused))) => {
                 shared.completed.fetch_add(1, Ordering::Relaxed);
                 JobState::Done { model, reused, wall_secs: t0.elapsed().as_secs_f64() }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 shared.failed.fetch_add(1, Ordering::Relaxed);
                 JobState::Failed { error: format!("{e:#}") }
+            }
+            Err(panic) => {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
+                let what = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "unknown panic".to_string());
+                JobState::Failed { error: format!("fit worker panicked: {what}") }
             }
         };
         set_state(&shared, job, state);
@@ -315,7 +346,7 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, shared: Arc<Shared>) {
 }
 
 fn set_state(shared: &Shared, job: u64, state: JobState) {
-    shared.states.lock().unwrap().insert(job, state);
+    lock_recover(&shared.states, &shared.recoveries).insert(job, state);
     shared.cv.notify_all();
 }
 
@@ -347,9 +378,18 @@ fn run_fit(
     let mut snap = SnapshotObserver::new();
     let result = kern::cache::with_store(&store, || job.spec.fit(&ds.a, &ds.b, &mut snap))?;
     meta.stop = result.output.stop.word().to_string();
+    meta.rows = ds.a.nrows();
     // on_complete always fires when fit() returns Ok, so the snapshot
     // is always captured.
     let snapshot = snap.into_snapshot().expect("snapshot observer ran");
+    // Precompute the in-sample selection tokens so /models can say
+    // which step each criterion serves without a separate pass; CV
+    // tokens land later via POST /select.
+    for c in [Criterion::Cp, Criterion::Aic, Criterion::Bic] {
+        if let Ok(sel) = select::rank_steps(&snapshot, meta.rows, c) {
+            meta.selection = select::upsert_selection(&meta.selection, c.name(), sel.best_step);
+        }
+    }
     Ok((registry.insert(meta, snapshot), false))
 }
 
@@ -462,6 +502,52 @@ mod tests {
         let q = queue();
         assert!(q.state(12345).is_none());
         assert!(q.wait(12345, Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn poisoned_state_lock_recovers_instead_of_cascading() {
+        // Regression: a thread panicking inside the states critical
+        // section used to poison the mutex, and every later
+        // `.lock().unwrap()` — i.e. every later connection — panicked
+        // too. The queue now recovers, counts it, and keeps serving.
+        let q = Arc::new(queue());
+        let job = q.submit(lars_job(4));
+        assert!(matches!(
+            q.wait(job, Duration::from_secs(60)).unwrap(),
+            JobState::Done { .. }
+        ));
+        let q2 = Arc::clone(&q);
+        let _ = std::thread::spawn(move || {
+            let _guard = q2.shared.states.lock().unwrap();
+            panic!("poison the states lock");
+        })
+        .join();
+        // Pre-fix this call aborted the thread; now it answers.
+        assert!(matches!(q.state(job), Some(JobState::Done { .. })));
+        assert!(q.stats().lock_recoveries >= 1, "{:?}", q.stats());
+        // The queue still runs new jobs end to end.
+        let job2 = q.submit(lars_job(6));
+        assert!(matches!(
+            q.wait(job2, Duration::from_secs(60)).unwrap(),
+            JobState::Done { .. }
+        ));
+    }
+
+    #[test]
+    fn fit_metadata_records_rows_and_in_sample_selection() {
+        let q = queue();
+        let job = q.submit(lars_job(8));
+        let model = match q.wait(job, Duration::from_secs(60)).unwrap() {
+            JobState::Done { model, .. } => model,
+            other => panic!("{other:?}"),
+        };
+        let rec = q.shared.registry.get(model).unwrap();
+        assert_eq!(rec.meta.rows, 120, "tiny has 120 rows");
+        for key in ["cp", "aic", "bic"] {
+            let step = select::find_selection(&rec.meta.selection, key);
+            assert!(step.is_some(), "{key} token missing in '{}'", rec.meta.selection);
+            assert!(step.unwrap() <= 8);
+        }
     }
 
     #[test]

@@ -55,6 +55,17 @@ pub struct ModelMeta {
     /// Canonical [`crate::fit::FitSpec::encode`] string of the fit
     /// ("" for ad-hoc inserts).
     pub spec: String,
+    /// Training row count the path was fitted on (0 for ad-hoc
+    /// inserts/legacy files). The in-sample selection criteria
+    /// ([`crate::select`]) need it: Cp/AIC/BIC all charge degrees of
+    /// freedom against `m`.
+    pub rows: usize,
+    /// Model-selection tokens (`"cp=4 aic=5 cv5.0=3"`; see
+    /// [`crate::select::find_selection`]) — which path step each
+    /// criterion chose, precomputed at fit time for the in-sample
+    /// criteria and updated by `POST /select` for CV. Surfaced through
+    /// `/models`.
+    pub selection: String,
 }
 
 impl ModelMeta {
@@ -71,6 +82,8 @@ impl ModelMeta {
             seed: 0,
             stop: String::new(),
             spec: String::new(),
+            rows: 0,
+            selection: String::new(),
         }
     }
 
@@ -210,7 +223,7 @@ impl ModelRegistry {
         };
         reg.persist_dir = Some(dir.to_path_buf());
         let live = {
-            let g = reg.inner.lock().unwrap();
+            let g = reg.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             g.models.keys().copied().collect::<std::collections::HashSet<u64>>()
         };
         for entry in std::fs::read_dir(dir)
@@ -241,7 +254,7 @@ impl ModelRegistry {
     /// (write-through; IO failures are logged, not fatal — the
     /// in-memory registry stays authoritative).
     pub fn insert(&self, meta: ModelMeta, snapshot: PathSnapshot) -> u64 {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let version = match meta.family_key() {
             Some(key) => {
                 g.models
@@ -288,7 +301,7 @@ impl ModelRegistry {
 
     /// Fetch a model and mark it most-recently-used.
     pub fn get(&self, id: u64) -> Option<Arc<ModelRecord>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let rec = g.models.get(&id)?.clone();
         if let Some(pos) = g.lru.iter().position(|&x| x == id) {
             g.lru.remove(pos);
@@ -299,7 +312,7 @@ impl ModelRegistry {
 
     /// All models, ascending id (does not touch LRU order).
     pub fn list(&self) -> Vec<Arc<ModelRecord>> {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut out: Vec<Arc<ModelRecord>> = g.models.values().cloned().collect();
         out.sort_by_key(|r| r.id);
         out
@@ -307,7 +320,7 @@ impl ModelRegistry {
 
     /// Remove a model; true if it existed.
     pub fn remove(&self, id: u64) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if let Some(pos) = g.lru.iter().position(|&x| x == id) {
             g.lru.remove(pos);
         }
@@ -323,11 +336,49 @@ impl ModelRegistry {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().models.len()
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner).models.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Upsert one selection token (`key=step`; see
+    /// [`crate::select::upsert_selection`]) in a model's metadata,
+    /// **atomically under the registry lock** — concurrent
+    /// `POST /select`s for different criteria must not lose each
+    /// other's tokens to a read-modify-write race. Returns false for
+    /// an unknown id. With a persist directory the updated record
+    /// writes through like an insert.
+    pub fn record_selection(&self, id: u64, key: &str, step: usize) -> bool {
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let Some(rec) = g.models.get(&id) else { return false };
+        // Repeated selections of an unchanged criterion are the common
+        // case (every in-sample /select lands here): skip the record
+        // rewrite — and above all the disk write — when the token is
+        // already present with the same value.
+        if crate::select::find_selection(&rec.meta.selection, key) == Some(step) {
+            return true;
+        }
+        let mut updated = ModelRecord::clone(rec);
+        updated.meta.selection =
+            crate::select::upsert_selection(&updated.meta.selection, key, step);
+        let updated = Arc::new(updated);
+        g.models.insert(id, updated.clone());
+        // The file write stays under the lock for the same
+        // write/delete ordering reason as insert(): a concurrent
+        // insert's eviction of this id must not race our write into
+        // resurrecting a deleted record file. The no-op skip above
+        // keeps the common path free of it.
+        if let Some(dir) = &self.persist_dir {
+            let mut buf = Vec::new();
+            let write = write_record(&mut buf, &updated)
+                .and_then(|_| std::fs::write(Self::record_path(dir, id), &buf).map_err(Into::into));
+            if let Err(e) = write {
+                eprintln!("registry: persisting selection for model {id} failed: {e:#}");
+            }
+        }
+        true
     }
 
     /// Warm-start lookup: a model of the same family whose stored path
@@ -342,13 +393,18 @@ impl ModelRegistry {
     /// layers together make family refits cheap at every depth.
     pub fn find_warm(&self, meta: &ModelMeta, t: usize) -> Option<Arc<ModelRecord>> {
         let key = meta.family_key()?;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let rec = g
             .models
             .values()
             .filter(|r| {
                 r.meta.family_key().as_deref() == Some(key.as_str())
                     && r.snapshot.max_support() >= t
+                    // Legacy records (CALP format ≤ 2) carry rows = 0,
+                    // which blocks the in-sample selection criteria;
+                    // reusing one would make the "refit to record it"
+                    // remedy a no-op forever. Refit instead.
+                    && r.meta.rows > 0
             })
             .max_by_key(|r| r.version)
             .cloned()?;
@@ -363,7 +419,7 @@ impl ModelRegistry {
 
     /// Counter snapshot for `/stats`.
     pub fn stats(&self) -> RegistryStats {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         RegistryStats {
             models: g.models.len(),
             inserted: g.inserted,
@@ -399,7 +455,7 @@ impl ModelRegistry {
             .filter(|p| p.extension().map_or(false, |x| x == "calp"))
             .collect();
         paths.sort();
-        let mut g = reg.inner.lock().unwrap();
+        let mut g = reg.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         for path in paths {
             let bytes = std::fs::read(&path)
                 .with_context(|| format!("read {}", path.display()))?;
@@ -427,17 +483,19 @@ impl ModelRegistry {
 //   b"CALP" | u32 format | u64 id | u32 version | u64 created_unix
 //   | str name | str algo | str dataset | u64 t | u64 b | u64 p
 //   | u64 seed | str stop | str spec          (stop/spec: format ≥ 2)
+//   | u64 rows | str selection               (rows/selection: format ≥ 3)
 //   | u64 n | u64 nsteps
 //   | nsteps × ( f64 lambda | f64 residual_norm | u64 k
 //                | k × u64 support | k × f64 coefs )
 //
 // where `str` is u32 length + UTF-8 bytes. f64s round-trip bit-exactly
 // (to_le_bytes/from_le_bytes), which the serving exactness contract
-// depends on. Format 1 files (pre-estimator-API) still load; their
-// stop/spec metadata comes back empty.
+// depends on. Format 1 files (pre-estimator-API) still load with empty
+// stop/spec metadata; format ≤ 2 files load with rows = 0 and no
+// selection tokens (the in-sample criteria then ask for a refit).
 
 const MAGIC: &[u8; 4] = b"CALP";
-const FORMAT: u32 = 2;
+const FORMAT: u32 = 3;
 const MIN_FORMAT: u32 = 1;
 /// Sanity caps for corrupt files (not real limits).
 const MAX_STR: u32 = 1 << 16;
@@ -514,6 +572,8 @@ pub fn write_record(w: &mut impl Write, rec: &ModelRecord) -> Result<()> {
     w_u64(w, rec.meta.seed)?;
     w_str(w, &rec.meta.stop)?;
     w_str(w, &rec.meta.spec)?;
+    w_u64(w, rec.meta.rows as u64)?;
+    w_str(w, &rec.meta.selection)?;
     w_u64(w, rec.snapshot.n as u64)?;
     w_u64(w, rec.snapshot.steps.len() as u64)?;
     for step in &rec.snapshot.steps {
@@ -556,6 +616,11 @@ pub fn read_record(r: &mut impl Read) -> Result<ModelRecord> {
     } else {
         (String::new(), String::new())
     };
+    let (rows, selection) = if format >= 3 {
+        (r_u64(r)? as usize, r_str(r)?)
+    } else {
+        (0, String::new())
+    };
     let n64 = r_u64(r)?;
     if n64 > MAX_DIM {
         bail!("feature dimension {n64} exceeds cap");
@@ -592,7 +657,7 @@ pub fn read_record(r: &mut impl Read) -> Result<ModelRecord> {
     Ok(ModelRecord {
         id,
         version,
-        meta: ModelMeta { name, algo, dataset, t, b, p, seed, stop, spec },
+        meta: ModelMeta { name, algo, dataset, t, b, p, seed, stop, spec, rows, selection },
         snapshot: PathSnapshot { n, steps },
         created_unix,
     })
@@ -625,6 +690,8 @@ mod tests {
             seed: 7,
             stop: "target_reached".into(),
             spec: format!("algo=lars t={t} tol=0.000000000001"),
+            rows: 40,
+            selection: "cp=2".into(),
         }
     }
 
@@ -781,6 +848,97 @@ mod tests {
         assert_eq!(back.meta.dataset, "legacy");
         assert_eq!(back.meta.stop, "", "format-1 files have no stop reason");
         assert_eq!(back.meta.spec, "");
+        assert_eq!(back.meta.rows, 0, "format-1 files have no row count");
+        assert_eq!(back.meta.selection, "");
+    }
+
+    #[test]
+    fn reads_format_2_files_with_empty_selection() {
+        // Format 2 (pre-model-selection) carries stop/spec but neither
+        // the training row count nor selection tokens.
+        let rec = ModelRecord {
+            id: 6,
+            version: 1,
+            meta: meta("legacy2", 2),
+            snapshot: snap(6, 2),
+            created_unix: 1_700_000_000,
+        };
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        w_u32(&mut buf, 2).unwrap(); // format 2
+        w_u64(&mut buf, rec.id).unwrap();
+        w_u32(&mut buf, rec.version).unwrap();
+        w_u64(&mut buf, rec.created_unix).unwrap();
+        w_str(&mut buf, &rec.meta.name).unwrap();
+        w_str(&mut buf, &rec.meta.algo).unwrap();
+        w_str(&mut buf, &rec.meta.dataset).unwrap();
+        w_u64(&mut buf, rec.meta.t as u64).unwrap();
+        w_u64(&mut buf, rec.meta.b as u64).unwrap();
+        w_u64(&mut buf, rec.meta.p as u64).unwrap();
+        w_u64(&mut buf, rec.meta.seed).unwrap();
+        w_str(&mut buf, &rec.meta.stop).unwrap();
+        w_str(&mut buf, &rec.meta.spec).unwrap();
+        w_u64(&mut buf, rec.snapshot.n as u64).unwrap();
+        w_u64(&mut buf, rec.snapshot.steps.len() as u64).unwrap();
+        for step in &rec.snapshot.steps {
+            w_f64(&mut buf, step.lambda).unwrap();
+            w_f64(&mut buf, step.residual_norm).unwrap();
+            w_u64(&mut buf, step.support.len() as u64).unwrap();
+            for &j in &step.support {
+                w_u64(&mut buf, j as u64).unwrap();
+            }
+            for &v in &step.coefs {
+                w_f64(&mut buf, v).unwrap();
+            }
+        }
+        let back = read_record(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.snapshot, rec.snapshot);
+        assert_eq!(back.meta.stop, rec.meta.stop);
+        assert_eq!(back.meta.rows, 0, "format-2 files have no row count");
+        assert_eq!(back.meta.selection, "");
+    }
+
+    #[test]
+    fn record_selection_upserts_atomically_and_persists() {
+        let dir = std::env::temp_dir().join(format!(
+            "calars-store-sel-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let reg = ModelRegistry::with_persist_dir(&dir, 4).unwrap();
+            // The meta() helper seeds selection = "cp=2".
+            let id = reg.insert(meta("a", 2), snap(4, 2));
+            assert!(reg.record_selection(id, "cv5.0", 1));
+            assert_eq!(reg.get(id).unwrap().meta.selection, "cp=2 cv5.0=1");
+            assert!(reg.record_selection(id, "cp", 3), "same key replaces");
+            assert_eq!(reg.get(id).unwrap().meta.selection, "cv5.0=1 cp=3");
+            assert!(!reg.record_selection(9999, "cp", 1), "unknown id refused");
+        }
+        let back = ModelRegistry::with_persist_dir(&dir, 4).unwrap();
+        assert_eq!(
+            back.list()[0].meta.selection,
+            "cv5.0=1 cp=3",
+            "selection survives the write-through restart"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn find_warm_skips_records_without_a_row_count() {
+        // Legacy (format ≤ 2) records load with rows = 0; reusing them
+        // would leave the in-sample criteria permanently unanswerable.
+        let reg = ModelRegistry::new(8);
+        let mut legacy = meta("tiny", 6);
+        legacy.rows = 0;
+        reg.insert(legacy, snap(10, 6));
+        assert!(
+            reg.find_warm(&meta("tiny", 4), 4).is_none(),
+            "rows=0 record must be refitted, not warm-reused"
+        );
+        reg.insert(meta("tiny", 6), snap(10, 6));
+        assert!(reg.find_warm(&meta("tiny", 4), 4).is_some(), "rows>0 record reused");
     }
 
     #[test]

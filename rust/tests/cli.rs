@@ -68,6 +68,53 @@ fn run_omp_baseline_through_fit_api() {
 }
 
 #[test]
+fn select_cv_picks_a_step_deterministically() {
+    let args = [
+        "select", "--dataset", "tiny", "--t", "16", "--criterion", "cv", "--k", "4",
+        "--cv-seed", "1",
+    ];
+    let out = calars(&args);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(s.contains("criterion cv"), "{s}");
+    assert!(s.contains("<- best"), "{s}");
+    assert!(s.contains("serve step"), "{s}");
+    // Same invocation under a different thread count: identical stdout
+    // (the acceptance criterion's CLI face).
+    let out2 = Command::new(env!("CARGO_BIN_EXE_calars"))
+        .args(args)
+        .env("CALARS_THREADS", "2")
+        .output()
+        .expect("binary runs");
+    assert!(out2.status.success());
+    let s2 = String::from_utf8_lossy(&out2.stdout).to_string();
+    // Strip the timing lines (wall time legitimately varies).
+    let strip = |s: &str| {
+        s.lines()
+            .filter(|l| !l.contains("in ") && !l.contains("total"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(strip(&s), strip(&s2), "CV selection must not depend on thread count");
+}
+
+#[test]
+fn select_in_sample_criterion_reports_scores() {
+    let out = calars(&["select", "--dataset", "tiny", "--t", "10", "--criterion", "bic"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("criterion bic"), "{s}");
+    assert!(s.contains("df"), "{s}");
+}
+
+#[test]
+fn select_unknown_criterion_fails_cleanly() {
+    let out = calars(&["select", "--dataset", "tiny", "--criterion", "r2"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown criterion"));
+}
+
+#[test]
 fn run_unknown_algo_fails_cleanly() {
     let out = calars(&["run", "--algo", "ridge", "--dataset", "tiny"]);
     assert!(!out.status.success());

@@ -327,6 +327,39 @@ fn multi_observer_any_stop_wins() {
     assert!(sink.iterations >= 2, "other observers still see every event");
 }
 
+/// Satellite: T-bLARS observer events carry NaN for γ/λ (the
+/// tournament has no scalar step per outer iteration). The metrics
+/// export must serialize them as `null` — a bare `NaN` token is
+/// invalid JSON and used to corrupt any document embedding the trace.
+#[test]
+fn metrics_sink_serializes_nan_gamma_lambda_as_null() {
+    let d = datasets::tiny(15);
+    let mut sink = MetricsSink::new();
+    FitSpec::new(Algorithm::TBlars { b: 2, parts: 4 })
+        .t(6)
+        .fit(&d.a, &d.b, &mut sink)
+        .unwrap();
+    assert!(sink.iterations > 0);
+    assert!(sink.gammas.iter().all(|g| g.is_nan()), "T-bLARS γ events are NaN");
+    assert!(sink.lambdas.iter().all(|l| l.is_nan()), "T-bLARS λ events are NaN");
+    let json = sink.to_json();
+    assert!(json.contains("\"gammas\":[null"), "{json}");
+    assert!(json.contains("\"lambdas\":[null"), "{json}");
+    for bad in ["NaN", "nan", "inf"] {
+        assert!(!json.contains(bad), "invalid JSON token {bad:?} in {json}");
+    }
+    // Finite fields still serialize as numbers.
+    assert!(json.contains("\"residual_norms\":["), "{json}");
+    assert!(!json.contains("\"residual_norms\":[null"), "{json}");
+    // ±∞ is also null, not `inf`.
+    let mut inf_sink = MetricsSink::new();
+    inf_sink.gammas.push(f64::INFINITY);
+    inf_sink.lambdas.push(f64::NEG_INFINITY);
+    let json = inf_sink.to_json();
+    assert!(json.contains("\"gammas\":[null]"), "{json}");
+    assert!(json.contains("\"lambdas\":[null]"), "{json}");
+}
+
 // ── StopReason reporting (satellite) ────────────────────────────────
 
 /// A 16×6 design whose first two columns are an exact duplicate pair
@@ -449,6 +482,104 @@ fn invalid_inputs_return_typed_errors_not_panics() {
     assert_eq!(err.kind(), ErrorKind::InvalidSpec);
     let err = FitSpec::new(Algorithm::Lars).t(0).run(&d.a, &d.b).unwrap_err();
     assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+}
+
+/// Every member of the family, for the degenerate-input battery.
+fn family() -> [Algorithm; 6] {
+    [
+        Algorithm::Lars,
+        Algorithm::Blars { b: 2 },
+        Algorithm::TBlars { b: 2, parts: 2 },
+        Algorithm::LassoLars { lambda_min: 1e-6 },
+        Algorithm::ForwardSelection,
+        Algorithm::Omp,
+    ]
+}
+
+/// Satellite: degenerate inputs return typed errors across the whole
+/// family — never a panic. An all-zero (or non-finite) column used to
+/// reach the tournament comparators as an incomparable NaN and abort
+/// the process.
+#[test]
+fn all_zero_column_is_rejected_across_the_family() {
+    let base = datasets::tiny_dense(11);
+    let n = base.a.ncols();
+    let zeroed = match &base.a {
+        Matrix::Dense(d) => {
+            Matrix::Dense(DenseMatrix::from_fn(d.nrows(), n, |i, j| {
+                if j == 3 {
+                    0.0
+                } else {
+                    d.get(i, j)
+                }
+            }))
+        }
+        Matrix::Sparse(_) => unreachable!("tiny_dense is dense"),
+    };
+    for algorithm in family() {
+        let err = FitSpec::new(algorithm).t(4).ranks(2).run(&zeroed, &base.b).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec, "{algorithm:?}: {err:#}");
+        assert!(format!("{err:#}").contains("column 3"), "{algorithm:?}: {err:#}");
+    }
+}
+
+#[test]
+fn non_finite_response_is_rejected_across_the_family() {
+    let d = datasets::tiny_dense(12);
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let mut b = d.b.clone();
+        b[7] = bad;
+        for algorithm in family() {
+            let err = FitSpec::new(algorithm).t(4).ranks(2).run(&d.a, &b).unwrap_err();
+            assert_eq!(err.kind(), ErrorKind::InvalidSpec, "{algorithm:?} b[7]={bad}: {err:#}");
+        }
+    }
+}
+
+#[test]
+fn non_finite_matrix_value_is_rejected() {
+    let d = datasets::tiny_dense(13);
+    let poisoned = match &d.a {
+        Matrix::Dense(m) => Matrix::Dense(DenseMatrix::from_fn(m.nrows(), m.ncols(), |i, j| {
+            if i == 0 && j == 5 {
+                f64::NAN
+            } else {
+                m.get(i, j)
+            }
+        })),
+        Matrix::Sparse(_) => unreachable!(),
+    };
+    let err = FitSpec::new(Algorithm::Lars).t(4).run(&poisoned, &d.b).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidSpec, "{err:#}");
+}
+
+#[test]
+fn fewer_than_two_rows_is_rejected() {
+    let a = Matrix::Dense(DenseMatrix::from_fn(1, 3, |_, j| (j + 1) as f64));
+    let b = vec![1.0];
+    for algorithm in family() {
+        let err = FitSpec::new(algorithm).t(1).ranks(2).run(&a, &b).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec, "{algorithm:?}: {err:#}");
+    }
+}
+
+#[test]
+fn empty_partition_is_rejected_by_tblars() {
+    use calars::fit::NoopObserver;
+    use calars::lars::tblars::fit_observed;
+    let d = datasets::tiny(14);
+    let mut cluster = SimCluster::new(2, HwParams::default(), ExecMode::Sequential);
+    let empty = vec![Vec::new(), Vec::new()];
+    let err = fit_observed(
+        &d.a,
+        &d.b,
+        &empty,
+        &TblarsOptions::default(),
+        &mut cluster,
+        &mut NoopObserver,
+    )
+    .unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidSpec, "{err:#}");
 }
 
 #[test]

@@ -1,0 +1,149 @@
+//! The `calars::select` model-selection subsystem end to end:
+//!
+//! * **Acceptance criterion**: the CV-selected step — and every score
+//!   bit — is identical across pool thread counts {1, 2, 4};
+//! * CV runs for every member of the fitter family through the one
+//!   `FitSpec` call path;
+//! * in-sample criteria and CV agree on the order of magnitude of the
+//!   planted support;
+//! * fold construction drops columns whose mass is held out (the fit
+//!   API rejects zero columns) and maps them back correctly.
+
+use calars::data::{datasets, partition};
+use calars::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
+use calars::linalg::{DenseMatrix, Matrix};
+use calars::par::{self, ThreadPool};
+use calars::select::{self, Criterion, SelectSpec};
+use std::sync::Mutex;
+
+#[test]
+fn cv_selection_is_bit_identical_across_thread_counts() {
+    let d = datasets::tiny(11);
+    let fit = FitSpec::new(Algorithm::Lars).t(16);
+    let sel = SelectSpec::new(Criterion::Cv).k(5).seed(3);
+    let mut baseline: Option<calars::select::Selection> = None;
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads, par::DEFAULT_MIN_CHUNK);
+        let s =
+            par::with_pool(&pool, || select::cross_validate(&d.a, &d.b, &fit, &sel).unwrap());
+        match &baseline {
+            None => baseline = Some(s),
+            Some(b) => {
+                assert_eq!(s.best_step, b.best_step, "threads={threads}");
+                assert_eq!(s.scores.len(), b.scores.len(), "threads={threads}");
+                for (x, y) in s.scores.iter().zip(&b.scores) {
+                    assert_eq!(
+                        x.score.to_bits(),
+                        y.score.to_bits(),
+                        "threads={threads} step {}",
+                        x.step
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cv_runs_across_the_fitter_family() {
+    let d = datasets::tiny_dense(2);
+    let sel = SelectSpec::new(Criterion::Cv).k(4).seed(1);
+    for algorithm in [
+        Algorithm::Lars,
+        Algorithm::Blars { b: 2 },
+        Algorithm::TBlars { b: 2, parts: 2 },
+        Algorithm::LassoLars { lambda_min: 1e-8 },
+        Algorithm::ForwardSelection,
+        Algorithm::Omp,
+    ] {
+        let fit = FitSpec::new(algorithm).t(8).ranks(2);
+        let s = select::cross_validate(&d.a, &d.b, &fit, &sel)
+            .unwrap_or_else(|e| panic!("{algorithm:?}: {e:#}"));
+        assert!(!s.scores.is_empty(), "{algorithm:?}");
+        assert!(s.best_step < s.scores.len(), "{algorithm:?}");
+        assert!(
+            s.best_step > 0,
+            "{algorithm:?}: the planted signal must beat the empty model"
+        );
+    }
+}
+
+#[test]
+fn select_model_agrees_with_the_planted_support_scale() {
+    // tiny_dense plants 10 true features in a 150×60 design with weak
+    // noise; every criterion should serve a non-trivial model and none
+    // should insist on the full 20-step path.
+    let d = datasets::tiny_dense(5);
+    let fit = FitSpec::new(Algorithm::Lars).t(20);
+    for criterion in [Criterion::Cp, Criterion::Aic, Criterion::Bic, Criterion::Cv] {
+        let sel = SelectSpec::new(criterion).k(5).seed(2);
+        let (result, snap, selection) =
+            select::select_model(&d.a, &d.b, &fit, &sel).unwrap();
+        assert_eq!(result.output.selected.len(), 20);
+        assert!(selection.best_step >= 5, "{criterion:?}: {}", selection.best_step);
+        assert!(selection.best_step < snap.len());
+    }
+}
+
+#[test]
+fn in_sample_ranking_matches_fit_time_metadata_path() {
+    // rank_steps over a SnapshotObserver capture is exactly what the
+    // serve queue precomputes into the model metadata.
+    let d = datasets::tiny(4);
+    let fit = FitSpec::new(Algorithm::Lars).t(12);
+    let mut obs = SnapshotObserver::new();
+    fit.fit(&d.a, &d.b, &mut obs).unwrap();
+    let snap = obs.into_snapshot().unwrap();
+    let a = select::rank_steps(&snap, d.a.nrows(), Criterion::Bic).unwrap();
+    let b = select::rank_steps(&snap, d.a.nrows(), Criterion::Bic).unwrap();
+    assert_eq!(a, b, "ranking is deterministic");
+    assert_eq!(a.scores.len(), snap.len());
+}
+
+#[test]
+fn cv_drops_columns_whose_mass_is_held_out_and_maps_them_back() {
+    // Column 2 is nonzero ONLY on fold 0's rows: fold 0's training
+    // shard must drop it (its training norm is 0 — the fit API rejects
+    // zero columns), and every other fold must keep it.
+    let m = 20usize;
+    let k = 4usize;
+    let seed = 9u64;
+    let folds = partition::cv_folds(m, k, seed);
+    let fold0 = folds[0].clone();
+    let a = Matrix::Dense(DenseMatrix::from_fn(m, 5, |i, j| {
+        if j == 2 {
+            if fold0.contains(&i) {
+                1.0
+            } else {
+                0.0
+            }
+        } else {
+            // Pseudo-random full-rank filler (a sinusoid here would
+            // make every column a combination of sin/cos of one
+            // frequency and trip the rank-deficiency path instead).
+            ((i * 31 + j * 17 + 3) % 23) as f64 / 10.0 - 1.0
+        }
+    }));
+    let b: Vec<f64> = (0..m).map(|i| ((i * 5 + 1) as f64).cos()).collect();
+    let fit = FitSpec::new(Algorithm::Lars).t(3);
+    let sel = SelectSpec::new(Criterion::Cv).k(k).seed(seed);
+    let kept_log: Mutex<Vec<(usize, Vec<usize>)>> = Mutex::new(Vec::new());
+    let s = select::cross_validate_with(&a, &b, &fit, &sel, |ctx, fit_spec| {
+        kept_log.lock().unwrap().push((ctx.fold, ctx.kept.to_vec()));
+        assert_eq!(ctx.kept.len(), ctx.norms.len());
+        select::fit_fold_snapshot(ctx, fit_spec)
+    })
+    .unwrap();
+    assert!(s.best_step < s.scores.len());
+    let log = kept_log.into_inner().unwrap();
+    assert_eq!(log.len(), k);
+    for (fold, kept) in &log {
+        if *fold == 0 {
+            assert!(!kept.contains(&2), "fold 0 must drop the held-out-only column");
+            assert_eq!(kept.len(), 4);
+        } else {
+            assert!(kept.contains(&2), "fold {fold} keeps column 2");
+            assert_eq!(kept.len(), 5);
+        }
+    }
+}

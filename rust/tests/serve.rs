@@ -8,9 +8,10 @@ use calars::lars::path::{densify, ls_coefficients, PathSnapshot};
 use calars::linalg::{dot, Matrix};
 use calars::proptest_lite::{check, Config};
 use calars::rng::Pcg64;
+use calars::select::Criterion;
 use calars::serve::{
     run_load, spawn_server, FitRequest, LoadOptions, ModelMeta, ModelRegistry, PredictRequest,
-    PredictionEngine, Query, Selector, ServeClient, ServeOptions,
+    PredictionEngine, Query, SelectRequest, Selector, ServeClient, ServeOptions,
 };
 use std::sync::Arc;
 use std::time::Duration;
@@ -246,6 +247,17 @@ fn http_end_to_end_fit_predict_models_stats() {
     server.stop();
 }
 
+/// Scan a `/stats` body for `"key":<u64>` inside a named section
+/// (several sections repeat counter names, e.g. `gram_cache` and
+/// `cv_cache`).
+fn section_u64(body: &str, section: &str, key: &str) -> u64 {
+    let marker = format!("\"{section}\":{{");
+    let at = body
+        .find(&marker)
+        .unwrap_or_else(|| panic!("section {section} missing in {body}"));
+    stats_u64(&body[at..], key)
+}
+
 /// Scan a `/stats` body for `"key":<u64>`.
 fn stats_u64(body: &str, key: &str) -> u64 {
     let needle = format!("\"{key}\":");
@@ -450,6 +462,170 @@ fn lasso_snapshot_serves_exact_breakpoints() {
             .unwrap();
         assert_eq!(served.to_bits(), dot(&x, &bp.x).to_bits());
     }
+}
+
+/// Tentpole: `POST /select` chooses a path step by an in-sample
+/// criterion, records it in the model metadata, and the `auto`
+/// prediction selector serves exactly that step's bits.
+#[test]
+fn select_endpoint_in_sample_and_auto_selector() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let model = client
+        .fit(&FitRequest { dataset: "tiny".into(), t: 8, ..Default::default() }, true)
+        .unwrap();
+    let dim = client.model_dim(model).unwrap();
+
+    // /select with cp answers the chosen step plus the score trace.
+    let step = client
+        .select(&SelectRequest { model, criterion: Criterion::Cp, k: 5, seed: 0 })
+        .unwrap() as usize;
+    assert!(step <= 8, "chosen step {step} must lie on the stored path");
+    let (status, body) = client
+        .request("POST", "/select", &format!("model {model}\ncriterion cp\n"))
+        .unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"scores\":[{"), "{body}");
+
+    // The selection token surfaces in /models (precomputed at fit
+    // time and refreshed by /select).
+    let (_, body) = client.request("GET", "/models", "").unwrap();
+    assert!(body.contains(&format!("cp={step}")), "{body}");
+    assert!(body.contains("\"rows\":120"), "tiny has 120 rows: {body}");
+
+    // `auto cp` predictions are bit-identical to the chosen step.
+    let mut rng = Pcg64::new(21);
+    let rows: Vec<Vec<f64>> = (0..3).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
+    let grab = |body: &str| -> Vec<f64> {
+        body.split_once('[')
+            .unwrap()
+            .1
+            .trim_end_matches(|c| c == '}' || c == ']')
+            .split(',')
+            .map(|t| t.parse().unwrap())
+            .collect()
+    };
+    let (status, via_auto) = client
+        .predict(&PredictRequest {
+            model,
+            selector: Selector::Auto(Criterion::Cp),
+            rows: rows.clone(),
+        })
+        .unwrap();
+    assert_eq!(status, 200, "{via_auto}");
+    let (status, via_step) = client
+        .predict(&PredictRequest { model, selector: Selector::Step(step), rows: rows.clone() })
+        .unwrap();
+    assert_eq!(status, 200, "{via_step}");
+    for (a, b) in grab(&via_auto).iter().zip(&grab(&via_step)) {
+        assert_eq!(a.to_bits(), b.to_bits(), "auto must serve the criterion's step exactly");
+    }
+
+    // `auto cv` cannot resolve lazily: typed 4xx/5xx, connection lives.
+    let (status, body) = client
+        .predict(&PredictRequest {
+            model,
+            selector: Selector::Auto(Criterion::Cv),
+            rows: rows.clone(),
+        })
+        .unwrap();
+    assert!(status >= 400, "{body}");
+    let (status, _) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+    server.stop();
+}
+
+/// Tentpole acceptance: CV selection through `/select` — fold fits run
+/// through the GramCache (per-fold entries), repeats answer from the
+/// cached selection token, and a deeper family refit's CV demonstrably
+/// hits the cached fold Gram panels.
+#[test]
+fn select_endpoint_cv_reuses_gram_cache_across_refits() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        fit_workers: 1,
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    let m1 = client
+        .fit(&FitRequest { dataset: "tiny".into(), t: 4, ..Default::default() }, true)
+        .unwrap();
+    let req = SelectRequest { model: m1, criterion: Criterion::Cv, k: 4, seed: 1 };
+    let step1 = client.select(&req).unwrap();
+    let (_, stats) = client.request("GET", "/stats", "").unwrap();
+    // Fold shards live in the dedicated cv_cache, NOT the main
+    // GramCache (they must never evict real datasets).
+    assert_eq!(section_u64(&stats, "gram_cache", "datasets"), 1, "{stats}");
+    assert_eq!(section_u64(&stats, "cv_cache", "datasets"), 4, "4 fold entries: {stats}");
+    let cv_hits_first = section_u64(&stats, "cv_cache", "panel_hits");
+
+    // Identical repeat: answered from the cached selection token.
+    let (status, body) = client.request("POST", "/select", &req.encode()).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"cached\":true"), "{body}");
+    assert!(body.contains(&format!("\"step\":{step1}")), "{body}");
+
+    // Deeper refit of the same family: its CV fold fits repeat the
+    // fold selection prefixes, which must now hit the cached panels.
+    let m2 = client
+        .fit(&FitRequest { dataset: "tiny".into(), t: 8, ..Default::default() }, true)
+        .unwrap();
+    assert_ne!(m1, m2, "deeper fit is a new model");
+    let req2 = SelectRequest { model: m2, criterion: Criterion::Cv, k: 4, seed: 1 };
+    let _ = client.select(&req2).unwrap();
+    let (_, stats) = client.request("GET", "/stats", "").unwrap();
+    assert!(
+        section_u64(&stats, "cv_cache", "panel_hits") > cv_hits_first,
+        "deeper CV must reuse fold Gram panels: {stats}"
+    );
+    assert_eq!(
+        section_u64(&stats, "cv_cache", "datasets"),
+        4,
+        "fold entries reused, not duplicated: {stats}"
+    );
+
+    // The CV token lands in the model metadata.
+    let (_, models) = client.request("GET", "/models", "").unwrap();
+    assert!(models.contains("cv4.1="), "{models}");
+    server.stop();
+}
+
+/// Satellite: a T-bLARS model (whose observer events carry NaN γ/λ)
+/// must never leak a bare `NaN`/`inf` token into the JSON endpoints.
+#[test]
+fn tblars_model_emits_valid_json_everywhere() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let fit = FitRequest {
+        dataset: "tiny".into(),
+        algo: "tblars".into(),
+        t: 6,
+        b: 2,
+        p: 4,
+        ..Default::default()
+    };
+    client.fit(&fit, true).unwrap();
+    for path in ["/models", "/stats", "/datasets"] {
+        let (status, body) = client.request("GET", path, "").unwrap();
+        assert_eq!(status, 200, "{path}: {body}");
+        for bad in ["NaN", "nan,", ":inf", "-inf"] {
+            assert!(!body.contains(bad), "{path} leaked {bad:?}: {body}");
+        }
+    }
+    server.stop();
 }
 
 /// Satellite: a malformed `/fit` body answers HTTP 4xx and keeps the

@@ -72,6 +72,14 @@ echo "== perf: parallel scaling =="
 cargo bench --bench parallel_scaling -- --json > BENCH_parallel.json
 check_bench_json BENCH_parallel.json
 
+echo "== perf: model selection =="
+# The selection bench runs k-fold CV under thread pools of 1/2/4 (and
+# all cores) and exits nonzero unless the CV-selected step — and every
+# score bit — is identical at every thread count: the model-selection
+# determinism gate.
+cargo bench --bench selection -- --json > BENCH_select.json
+check_bench_json BENCH_select.json
+
 echo "== serving smoke + perf =="
 PORT="${CALARS_SMOKE_PORT:-17878}"
 LOG="$(mktemp)"

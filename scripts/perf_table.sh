@@ -1,20 +1,41 @@
 #!/usr/bin/env bash
-# Render BENCH_kernels.json (scripts/ci.sh perf stage, or
-# `cargo bench --bench kernels -- --json`) as the README's markdown
-# perf table.
+# Render bench JSON records (scripts/ci.sh perf stages, or any
+# `cargo bench --bench <kernels|selection|parallel_scaling> -- --json`
+# output) as the README's markdown perf table.
 #
-# Usage: scripts/perf_table.sh [BENCH_kernels.json]
+# Usage: scripts/perf_table.sh [BENCH_*.json ...]
+#        (no args: every BENCH_*.json in the working directory)
 set -euo pipefail
-FILE="${1:-BENCH_kernels.json}"
-[ -f "$FILE" ] || { echo "usage: $0 [BENCH_kernels.json]" >&2; exit 1; }
 
-echo "| bench | kern wall (ms) | speedup vs scalar |"
-echo "|---|---:|---:|"
-awk '
+FILES=("$@")
+if [ ${#FILES[@]} -eq 0 ]; then
+    for f in BENCH_kernels.json BENCH_select.json BENCH_parallel.json BENCH_serving.json; do
+        [ -f "$f" ] && FILES+=("$f")
+    done
+fi
+[ ${#FILES[@]} -gt 0 ] || { echo "usage: $0 [BENCH_*.json ...]" >&2; exit 1; }
+
+echo "| source | bench | threads | wall (ms) | speedup |"
+echo "|---|---|---:|---:|---:|"
+for FILE in "${FILES[@]}"; do
+    [ -f "$FILE" ] || { echo "missing $FILE" >&2; exit 1; }
+    awk -v src="$(basename "$FILE" .json | sed 's/^BENCH_//')" '
 /"bench":/ {
-    name = ""; wall = ""; sp = ""
-    if (match($0, /"bench":"[^"]+"/))    name = substr($0, RSTART + 9, RLENGTH - 10)
-    if (match($0, /"wall_ms":[0-9.]+/))  wall = substr($0, RSTART + 10, RLENGTH - 10)
-    if (match($0, /"speedup":[0-9.]+/))  sp   = substr($0, RSTART + 10, RLENGTH - 10)
-    if (name != "") printf "| `%s` | %.3f | %.2fx |\n", name, wall, sp
+    n = split($0, parts, /\},[ \t]*/)
+    for (i = 1; i <= n; i++) {
+        rec = parts[i]
+        name = ""; thr = ""; wall = ""; sp = ""
+        if (match(rec, /"bench":"[^"]+"/))   name = substr(rec, RSTART + 9, RLENGTH - 10)
+        if (match(rec, /"threads":[0-9]+/))  thr  = substr(rec, RSTART + 10, RLENGTH - 10)
+        if (match(rec, /"wall_ms":[0-9.]+/)) wall = substr(rec, RSTART + 10, RLENGTH - 10)
+        if (match(rec, /"speedup":[0-9.]+/)) sp   = substr(rec, RSTART + 10, RLENGTH - 10)
+        if (thr == "") thr = "-"
+        # json_f64 emits null for NaN/inf (e.g. a fully-errored bench
+        # run): surface it as n/a, never as a plausible-looking 0.000.
+        wallout = (wall == "") ? "n/a" : sprintf("%.3f", wall)
+        spout   = (sp == "")   ? "n/a" : sprintf("%.2fx", sp)
+        if (name != "")
+            printf "| %s | `%s` | %s | %s | %s |\n", src, name, thr, wallout, spout
+    }
 }' "$FILE"
+done
