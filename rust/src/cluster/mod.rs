@@ -112,6 +112,11 @@ impl SimCluster {
         f: impl Fn(usize, &mut R) -> T + Sync,
     ) -> Vec<T> {
         assert_eq!(states.len(), self.p);
+        // Wall-clock observability span for the whole superstep (all
+        // ranks), opened on the driving thread where the ambient trace
+        // is bound; the simulated clock below still charges only the
+        // per-rank maximum.
+        let _span = crate::obs::phase_span(phase);
         let (outs, max_dt) = match self.mode {
             ExecMode::Sequential => {
                 let mut outs = Vec::with_capacity(self.p);
@@ -152,6 +157,7 @@ impl SimCluster {
 
     /// Master-only (rank 0) compute, measured and charged under `phase`.
     pub fn master<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let _span = crate::obs::phase_span(phase);
         let t0 = Instant::now();
         let out = f();
         let dt = t0.elapsed().as_secs_f64();

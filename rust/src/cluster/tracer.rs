@@ -63,6 +63,28 @@ impl Phase {
         }
     }
 
+    /// Short stable label, shared by the simulation reports and the
+    /// real-hardware span names in [`crate::obs`] so that simulated and
+    /// measured traces line up phase-for-phase.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Init => "Init",
+            Phase::Corr => "Corr",
+            Phase::Select => "Select",
+            Phase::Gram => "Gram",
+            Phase::Cholesky => "Cholesky",
+            Phase::Solve => "Solve",
+            Phase::DirApply => "DirApply",
+            Phase::GammaStep => "GammaStep",
+            Phase::Update => "Update",
+            Phase::Bcast => "Bcast",
+            Phase::Reduce => "Reduce",
+            Phase::TreeExchange => "TreeExchange",
+            Phase::Wait => "Wait",
+            Phase::Other => "Other",
+        }
+    }
+
     /// All phases (for iteration/reporting).
     pub const ALL: [Phase; 14] = [
         Phase::Init,
@@ -264,6 +286,18 @@ mod tests {
         t.zero_times();
         assert_eq!(t.get(Phase::Bcast).words, 7);
         assert_eq!(t.total_time(), 0.0);
+    }
+
+    #[test]
+    fn labels_unique_and_cover_all() {
+        let mut seen: Vec<&str> = Vec::new();
+        for p in Phase::ALL {
+            let l = p.label();
+            assert!(!l.is_empty());
+            assert!(!seen.contains(&l), "duplicate label {l}");
+            seen.push(l);
+        }
+        assert_eq!(seen.len(), Phase::ALL.len());
     }
 
     #[test]

@@ -189,6 +189,9 @@ pub struct ServeConfig {
     pub persist_dir: Option<String>,
     /// `--prefit DATASET`: fit this dataset before accepting traffic.
     pub prefit: Option<String>,
+    /// `--slow-ms N`: requests slower than N ms land in the
+    /// ring-buffered slow-request log.
+    pub slow_ms: u64,
     /// Shared-memory execution (`--par-threads`, `--par-min-chunk`;
     /// `CALARS_THREADS` / `CALARS_MIN_CHUNK` env when the flags are
     /// absent). Carried here so whoever starts the server from a
@@ -212,6 +215,7 @@ impl Default for ServeConfig {
             oneshot: false,
             persist_dir: None,
             prefit: None,
+            slow_ms: d.slow_ms,
             par: ParConfig::default(),
         }
     }
@@ -235,6 +239,7 @@ impl ServeConfig {
             oneshot: args.flag("oneshot"),
             persist_dir: args.get("persist").map(String::from),
             prefit: args.get("prefit").map(String::from),
+            slow_ms: args.get_parse("slow-ms", d.slow_ms)?,
             par: par_config_from_args(args)?,
         })
     }
@@ -323,6 +328,9 @@ mod tests {
         assert_eq!(c.registry_capacity, 8);
         assert!(c.oneshot);
         assert_eq!(c.prefit.as_deref(), Some("tiny"));
+        assert_eq!(c.slow_ms, 500, "slow-ms keeps its default when absent");
+        let c = ServeConfig::from_args(&Args::parse(&argv("serve --slow-ms 50"))).unwrap();
+        assert_eq!(c.slow_ms, 50);
         let c = ServeConfig::from_args(&Args::parse(&argv("serve --addr 0.0.0.0:80 --port 81")))
             .unwrap();
         assert_eq!(c.addr, "0.0.0.0:81", "--port overrides the addr's port");

@@ -14,7 +14,8 @@
 //!   [`FitSpec::run`] is the no-observer convenience.
 //! * [`FitObserver`] — composable per-iteration hooks
 //!   ([`SnapshotObserver`], [`ProgressObserver`], [`EarlyStop`],
-//!   [`MetricsSink`], [`MultiObserver`]); see [`observers`].
+//!   [`MetricsSink`], [`TraceObserver`], [`MultiObserver`]); see
+//!   [`observers`].
 //! * [`FitResult`] — the algorithm's [`LarsOutput`] unified with
 //!   timing, the exact LASSO path when applicable, and the simulated
 //!   cluster telemetry ([`SimReport`]) for the parallel fitters.
@@ -41,7 +42,7 @@ pub mod observers;
 
 pub use observers::{
     EarlyStop, FitEvent, FitObserver, MetricsSink, MultiObserver, NoopObserver,
-    ObserverControl, ProgressObserver, SnapshotObserver,
+    ObserverControl, ProgressObserver, SnapshotObserver, TraceObserver,
 };
 
 // Model selection rides alongside the estimator API: a fitted path is
@@ -506,6 +507,10 @@ impl Fitter for FitSpec {
         }
         obs.on_start(a.nrows(), a.ncols(), self);
         let t0 = Instant::now();
+        // Algorithm-level span: nests under the request/fit root span
+        // when a trace is bound, encloses every phase span the fitter
+        // cores emit. Inert (one atomic load) otherwise.
+        let algo_span = crate::obs::span(self.algorithm.name());
         let mut result = match self.algorithm {
             Algorithm::Lars => {
                 let opts = LarsOptions { t: self.t, b: 1, tol: self.tol };
@@ -556,6 +561,7 @@ impl Fitter for FitSpec {
                 r
             }
         };
+        drop(algo_span);
         result.wall_secs = t0.elapsed().as_secs_f64();
         obs.on_complete(a, b, &result);
         Ok(result)

@@ -284,6 +284,73 @@ impl FitObserver for MetricsSink {
     }
 }
 
+/// Binds an [`crate::obs`] trace to the fitting thread for the
+/// duration of one fit and records a root `fit` span, so CLI and bench
+/// fits produce the same span trees as served requests (the serving
+/// queue binds the request's trace around the whole job instead).
+///
+/// Like every observer this is passive: it reads the clock and the
+/// thread-local trace binding, never a bit of the fit.
+pub struct TraceObserver {
+    trace: u64,
+    /// Previous thread binding, present only between `on_start` and
+    /// `on_complete` (restored by `Drop` if the fit errors out).
+    prev: Option<u64>,
+    /// The root `fit` span, open for the duration of the fit so every
+    /// phase span nests beneath it.
+    guard: Option<crate::obs::SpanGuard>,
+}
+
+impl TraceObserver {
+    /// Observe under a freshly minted trace id.
+    pub fn new() -> Self {
+        TraceObserver { trace: crate::obs::next_trace_id(), prev: None, guard: None }
+    }
+
+    /// Observe under an existing trace (e.g. a served request's id).
+    pub fn for_trace(trace: u64) -> Self {
+        TraceObserver { trace, prev: None, guard: None }
+    }
+
+    /// The trace id this observer records under — look spans up in
+    /// [`crate::obs::sink`] after the fit.
+    pub fn trace_id(&self) -> u64 {
+        self.trace
+    }
+
+    fn detach(&mut self) {
+        // Close the root span before releasing the binding so it is
+        // flushed with everything else.
+        self.guard = None;
+        if let Some(prev) = self.prev.take() {
+            crate::obs::uninstall_trace(prev);
+        }
+    }
+}
+
+impl Default for TraceObserver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FitObserver for TraceObserver {
+    fn on_start(&mut self, _m: usize, _n: usize, _spec: &FitSpec) {
+        self.prev = Some(crate::obs::install_trace(self.trace));
+        self.guard = Some(crate::obs::span("fit"));
+    }
+
+    fn on_complete(&mut self, _a: &Matrix, _b: &[f64], _result: &FitResult) {
+        self.detach();
+    }
+}
+
+impl Drop for TraceObserver {
+    fn drop(&mut self) {
+        self.detach();
+    }
+}
+
 /// Fans events out to several observers — the composition glue. The
 /// fit stops if *any* member requests it; every member still sees every
 /// event.

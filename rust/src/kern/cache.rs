@@ -136,10 +136,12 @@ impl PanelStore {
             Some(panel) => {
                 g.lru.touch_or_push(key);
                 g.hits += 1;
+                crate::obs::instant("gram_panel_hit");
                 Some(panel)
             }
             None => {
                 g.misses += 1;
+                crate::obs::instant("gram_panel_miss");
                 None
             }
         }

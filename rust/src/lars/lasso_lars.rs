@@ -19,9 +19,11 @@
 //! remains as a thin deprecated shim.
 
 use super::{LarsOutput, StopReason};
+use crate::cluster::tracer::Phase;
 use crate::error::{Error, Result};
 use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
 use crate::linalg::{norm2, Cholesky, Matrix};
+use crate::obs::phase_span;
 
 /// One breakpoint of the LASSO path.
 #[derive(Clone, Debug)]
@@ -137,8 +139,14 @@ pub fn fit_observed(
     let mut stop = StopReason::PoolExhausted; // if the event guard trips
     let mut iter = 0usize;
     for _event in 0..max_events {
-        // Fresh correlations (reference implementation).
-        a.at_r(&r, &mut c);
+        // Fresh correlations (reference implementation). Coarser phase
+        // spans than the serial core: one Corr + one Gram/Cholesky per
+        // breakpoint event.
+        {
+            let mut sp = phase_span(Phase::Corr);
+            sp.flops(2 * (m as u64) * (n as u64));
+            a.at_r(&r, &mut c);
+        }
         let ck = c.iter().fold(0.0_f64, |mx, &v| mx.max(v.abs()));
         if ck <= lambda_min.max(tol) {
             stop = StopReason::Saturated;
@@ -168,8 +176,16 @@ pub fn fit_observed(
 
         // Direction: w = h · G⁻¹ c_A (all |c_A| = ck ⇒ LARS equiangular).
         let s: Vec<f64> = active.iter().map(|&j| c[j]).collect();
-        let g = a.gram_block(&active, &active);
-        let Ok(chol) = Cholesky::factor(&g) else {
+        let g = {
+            let mut sp = phase_span(Phase::Gram);
+            let k = active.len() as u64;
+            sp.flops(2 * (m as u64) * k * k);
+            a.gram_block(&active, &active)
+        };
+        let chol_span = phase_span(Phase::Cholesky);
+        let factored = Cholesky::factor(&g);
+        drop(chol_span);
+        let Ok(chol) = factored else {
             stop = StopReason::RankDeficient;
             break;
         };
@@ -183,10 +199,15 @@ pub fn fit_observed(
         let w: Vec<f64> = q.iter().map(|qi| qi * h).collect();
 
         // u = A_A w ; av = Aᵀu — fused single pass (dense storage).
-        a.fused_step(&active, &w, &mut u, &mut av);
+        {
+            let mut sp = phase_span(Phase::DirApply);
+            sp.flops(2 * (m as u64) * (active.len() as u64 + n as u64));
+            a.fused_step(&active, &w, &mut u, &mut av);
+        }
 
         // Standard LARS entering step.
         let gamma_full = 1.0 / h;
+        let gamma_span = phase_span(Phase::GammaStep);
         let mut gamma_add = gamma_full;
         for j in 0..n {
             if active.binary_search(&j).is_ok() {
@@ -215,6 +236,8 @@ pub fn fit_observed(
         }
 
         let gamma = gamma_add.min(gamma_drop);
+        drop(gamma_span);
+        let update_span = phase_span(Phase::Update);
         // Step coefficients and residual.
         for (k, &j) in active.iter().enumerate() {
             x[j] += gamma * w[k];
@@ -242,6 +265,7 @@ pub fn fit_observed(
             residual_norm: norm2(&r),
         });
         order_at_last_bp.clone_from(&order);
+        drop(update_span);
 
         let observer_stop = obs.on_iteration(&FitEvent {
             iter,

@@ -17,10 +17,12 @@
 //! invalid input the way their `assert!`s used to.
 
 use super::{LarsOutput, StopReason};
+use crate::cluster::tracer::Phase;
 use crate::error::{Error, Result};
 use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
 use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
 use crate::linalg::{dot, norm2, Cholesky, DenseMatrix, Matrix};
+use crate::obs::phase_span;
 use crate::par;
 
 /// γ-candidate scan over the complement of the model (Algorithm 2 step
@@ -112,7 +114,13 @@ pub fn fit_observed(
     let mut y = vec![0.0; m];
     let mut r = b_vec.to_vec();
     let mut c = vec![0.0; n];
-    a.at_r(&r, &mut c);
+    {
+        // Phase spans mirror the SimCluster taxonomy on real hardware;
+        // flop counts are coarse dense-equivalent estimates.
+        let mut sp = phase_span(Phase::Corr);
+        sp.flops(2 * (m as u64) * (n as u64));
+        a.at_r(&r, &mut c);
+    }
     let mut u = vec![0.0; m];
     let mut av = vec![0.0; n]; // a_k = Aᵀu
 
@@ -129,8 +137,10 @@ pub fn fit_observed(
 
     // Step 3: pick the initial block of (up to) b columns.
     let b0 = opts.b.min(t.max(1));
+    let sel_span = phase_span(Phase::Select);
     let mut block = argmax_b_by(n, b0, |j| c[j].abs());
     block.sort_unstable();
+    drop(sel_span);
     // Reject numerically dead starts.
     if block.iter().all(|&j| c[j].abs() <= opts.tol) {
         return Ok(LarsOutput {
@@ -147,8 +157,14 @@ pub fn fit_observed(
     // admission inside `append_block_graceful`).
     let mut chol = Cholesky::empty();
     {
-        let g0 = a.gram_block(&block, &block);
+        let g0 = {
+            let mut sp = phase_span(Phase::Gram);
+            sp.flops(2 * (m as u64) * (block.len() as u64) * (block.len() as u64));
+            a.gram_block(&block, &block)
+        };
+        let chol_span = phase_span(Phase::Cholesky);
         let admitted = chol.append_block_graceful(&DenseMatrix::zeros(0, block.len()), &g0);
+        drop(chol_span);
         rank_excluded += block.len() - admitted.len();
         for &row in &admitted {
             selected.push(block[row]);
@@ -206,9 +222,11 @@ pub fn fit_observed(
         }
 
         // Steps 7-8: s = [c]_I ; q = (LLᵀ)⁻¹ s ; h = (sᵀq)^{-1/2} ; w = q·h.
+        let solve_span = phase_span(Phase::Solve);
         s.clear();
         s.extend(selected.iter().map(|&j| c[j]));
         chol.solve_into(&s, &mut q);
+        drop(solve_span);
         let sq = dot(&s, &q);
         if !(sq.is_finite() && sq > 0.0) {
             // sᵀG⁻¹s ≤ 0 with s ≠ 0: the factor has gone numerically
@@ -221,12 +239,17 @@ pub fn fit_observed(
 
         // Steps 10-11 fused: u = A_I w and a = Aᵀu in one pass over A
         // (dense storage; CSC takes the two-pass form inside).
-        a.fused_step(&selected, &w, &mut u, &mut av);
+        {
+            let mut sp = phase_span(Phase::DirApply);
+            sp.flops(2 * (m as u64) * (selected.len() as u64 + n as u64));
+            a.fused_step(&selected, &w, &mut u, &mut av);
+        }
 
         // Step 12: γ_j candidates over the complement (pool-chunked).
         // Valid candidates lie in (0, 1/h]: beyond 1/h the selected
         // correlations have crossed zero (least-squares point reached).
         let gamma_full = 1.0 / h;
+        let gamma_span = phase_span(Phase::GammaStep);
         let cand = gamma_candidates(n, &in_model, &c, &av, ck, h, gamma_full);
 
         let remaining = t - selected.len();
@@ -245,8 +268,11 @@ pub fn fit_observed(
             block.sort_unstable();
             (gamma_full, block)
         };
+        drop(gamma_span);
 
         // Step 17: y ← y + γu ; r = b − y.
+        let mut update_span = phase_span(Phase::Update);
+        update_span.flops(4 * m as u64 + 2 * n as u64);
         for i in 0..m {
             y[i] += gamma * u[i];
             r[i] = b_vec[i] - y[i];
@@ -264,6 +290,7 @@ pub fn fit_observed(
         ck *= shrink;
 
         residual_norms.push(norm2(&r));
+        drop(update_span);
 
         let hit_full_step = new_block.is_empty() || gamma >= gamma_full * (1.0 - 1e-12);
 
@@ -273,9 +300,16 @@ pub fn fit_observed(
             // solves, bit-identical to sequential push_rows); a column
             // collinear with the model is permanently excluded rather
             // than aborting the run (§5.2, via append_block_graceful).
-            let gib = a.gram_block(&selected, &new_block);
-            let gbb = a.gram_block(&new_block, &new_block);
+            let (gib, gbb) = {
+                let mut sp = phase_span(Phase::Gram);
+                let k = selected.len() as u64;
+                let bn = new_block.len() as u64;
+                sp.flops(2 * (m as u64) * bn * (k + bn));
+                (a.gram_block(&selected, &new_block), a.gram_block(&new_block, &new_block))
+            };
+            let chol_span = phase_span(Phase::Cholesky);
             let admitted = chol.append_block_graceful(&gib, &gbb);
+            drop(chol_span);
             rank_excluded += new_block.len() - admitted.len();
             for &row in &admitted {
                 selected.push(new_block[row]);

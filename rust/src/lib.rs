@@ -62,6 +62,15 @@
 //!   zero-dependency HTTP/1.1 server (`calars serve`) exposes `/fit`,
 //!   `/predict`, `/select`, `/models`, `/datasets`, `/stats`.
 //!   `calars bench-serve` is the closed-loop load generator.
+//! * **Observability** ([`obs`]): end-to-end tracing spans (per-request
+//!   `trace_id`, fit phases on the same taxonomy as the SimCluster
+//!   tracer, queue wait, Gram-cache hits) drained into a bounded
+//!   [`obs::TraceSink`], plus a typed counter/gauge/histogram registry
+//!   behind `GET /metrics` (Prometheus text) and `GET /trace/<id>`
+//!   (chrome://tracing JSON). `calars trace` pretty-prints one fit's
+//!   span tree. Tracing is passive — fits are bit-identical with it on
+//!   or off — and `CALARS_TRACE=off` reduces every probe to one atomic
+//!   load.
 //!
 //! ## Quickstart
 //!
@@ -137,6 +146,7 @@ pub mod kern;
 pub mod lars;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod par;
 pub mod proptest_lite;
 pub mod report;

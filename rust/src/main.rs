@@ -15,7 +15,7 @@ use calars::config::{Args, ServeConfig, SweepConfig};
 use calars::data::datasets;
 use calars::error::{bail, Result};
 use calars::experiments;
-use calars::fit::{Algorithm, FitSpec, Fitter, ProgressObserver};
+use calars::fit::{Algorithm, FitSpec, Fitter, ProgressObserver, TraceObserver};
 use calars::metrics::{fmt_count, fmt_secs, json_f64_rounded};
 use calars::select::{Criterion, SelectSpec};
 use calars::runtime::XlaRuntime;
@@ -44,6 +44,7 @@ fn init_par(args: &Args) -> Result<()> {
 fn dispatch(args: &Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(args),
+        Some("trace") => cmd_trace(args),
         Some("select") => cmd_select(args),
         Some("exp") => cmd_exp(args),
         Some("suite") => cmd_suite(args),
@@ -65,12 +66,15 @@ USAGE:
   calars run   --algo <lars|blars|tblars|lasso|omp|fs> --dataset <name>
                [--t N] [--b N] [--p N] [--seed N] [--tol X] [--lambda-min X]
                [--threads] [--progress]
+  calars trace --algo <lars|blars|tblars|lasso|omp|fs> --dataset <name>
+               [--t N] [--b N] [--p N] [--seed N] [--tol X] [--lambda-min X] [--threads]
   calars select --dataset <name> [--algo A] [--t N] [--b N] [--p N] [--seed N]
                [--criterion <cp|aic|bic|cv>] [--k N] [--cv-seed N] [--threads]
   calars exp   <table1|table2|table3|fig2|fig3|fig4|fig5|fig6|fig7|fig8> [--quick] [--t N] [--seed N]
   calars suite [--quick]
   calars serve [--addr H:P] [--port N] [--fit-workers N] [--batch-window-us N]
-               [--capacity N] [--cache N] [--persist DIR] [--prefit DATASET] [--oneshot]
+               [--capacity N] [--cache N] [--persist DIR] [--prefit DATASET]
+               [--slow-ms N] [--oneshot]
   calars bench-serve [--addr H:P] [--requests N] [--concurrency C] [--rows R]
                [--dataset NAME] [--algo A] [--t N] [--b N] [--step K | --lambda L]
                [--seed N] [--shutdown] [--json]
@@ -81,6 +85,13 @@ the paper's three, the exact LASSO-LARS path, and the greedy
 baselines (omp, fs) — goes through one FitSpec/Fitter call path.
 --progress attaches a ProgressObserver (per-iteration lines on
 stderr); --tol and --lambda-min are the spec's numerical knobs.
+
+trace runs ONE fit with tracing force-enabled and prints its span
+tree (per-phase Corr/Select/Cholesky/Gamma/Update timings with flops)
+plus a phase-total table; when the algorithm also runs the simulated
+cluster, the α-β-γ per-phase table prints next to the measured one.
+The serving layer exposes the same spans per request at GET
+/trace/<id> (chrome://tracing JSON) and aggregates at GET /metrics.
 
 select fits the full path and then chooses WHICH step to serve
 (calars::select): Mallows' Cp, AIC, or BIC per stored step (df =
@@ -96,7 +107,10 @@ shared-memory kernel pool; threads=1 runs fully inline and results are
 bit-identical at any thread count (see DESIGN.md).
 
 serve runs the L4 model-serving subsystem: POST /fit, POST /predict,
-GET /models, GET /stats (see DESIGN.md). --oneshot additionally honors
+GET /models, GET /stats, GET /metrics (Prometheus text), GET
+/trace/<id> (chrome://tracing JSON for one request; every JSON
+response echoes its trace_id) — see DESIGN.md. Requests slower than
+--slow-ms land in a ring-buffered slow log. --oneshot additionally honors
 POST /shutdown for scripted smoke runs. bench-serve is the closed-loop
 load generator; without --addr it spins up an in-process server first.
 --json emits one machine-readable perf record (scripts/ci.sh captures
@@ -286,6 +300,61 @@ fn cmd_run(args: &Args) -> Result<()> {
             fmt_secs(cats[3]),
             fmt_secs(cats[4])
         );
+    }
+    Ok(())
+}
+
+/// `calars trace` — run one fit with tracing force-enabled and print
+/// its span tree plus per-phase time/flops totals.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("tiny");
+    let seed = args.get_parse::<u64>("seed", 42)?;
+    let t = args.get_parse::<usize>("t", 20)?;
+    let b = args.get_parse::<usize>("b", 1)?;
+    let p = args.get_parse::<usize>("p", 1)?;
+    let tol = args.get_parse::<f64>("tol", 1e-12)?;
+    let lambda_min = args.get_parse::<f64>("lambda-min", 1e-6)?;
+    let mode = if args.flag("threads") { ExecMode::Threaded } else { ExecMode::Sequential };
+
+    let algorithm = Algorithm::from_parts(args.get("algo").unwrap_or("lars"), b, p, lambda_min)?;
+    let spec = FitSpec::new(algorithm).t(t).tol(tol).ranks(p).mode(mode);
+    let ds = datasets::by_name(name, seed)
+        .ok_or_else(|| calars::anyhow!("unknown dataset '{name}'"))?;
+
+    // The subcommand exists to look at spans — force tracing on even
+    // under CALARS_TRACE=off.
+    calars::obs::set_enabled(true);
+    let mut tracer = TraceObserver::new();
+    let trace = tracer.trace_id();
+    let result = spec.fit(&ds.a, &ds.b, &mut tracer)?;
+    // Spans that closed after the observer detached (the root "fit"
+    // span itself) are still in this thread's buffer.
+    calars::obs::flush_thread();
+    let spans = calars::obs::sink()
+        .get(trace)
+        .ok_or_else(|| calars::anyhow!("no spans recorded for this fit"))?;
+
+    println!(
+        "trace {} — {} on {} (m={} n={}): {} spans, {} selected, stop={:?}, wall {}",
+        calars::obs::format_trace_id(trace),
+        spec.encode(),
+        ds.name,
+        ds.a.nrows(),
+        ds.a.ncols(),
+        spans.len(),
+        result.output.selected.len(),
+        result.output.stop,
+        fmt_secs(result.wall_secs),
+    );
+    println!();
+    print!("{}", calars::obs::span_tree(&spans));
+    println!();
+    print!("{}", calars::obs::PhaseTotals::from_spans(&spans).render_table("measured"));
+    if let Some(sim) = &result.sim {
+        // The cluster fitters also carry the α-β-γ simulated per-phase
+        // trace; print it next to the measured one for comparison.
+        println!();
+        print!("{}", calars::obs::PhaseTotals::from_tracer(&sim.tracer).render_table("simulated"));
     }
     Ok(())
 }

@@ -57,13 +57,21 @@ impl TimingSummary {
 
 /// Nearest-rank percentile of an ascending-sorted slice (`q` in
 /// `[0, 1]`); 0 for empty input.
+///
+/// Nearest-rank means the smallest element with at least a `q`
+/// fraction of the sample at or below it: index `⌈q·n⌉ − 1`, with
+/// `q = 0` mapping to the minimum. The previous `round(q·(n−1))`
+/// interpolation-style rounding overshot on small samples (e.g. the
+/// p50 of 100 samples landed on the 51st) and is what the serving
+/// bench latency summaries used to report.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
     let q = q.clamp(0.0, 1.0);
-    let rank = (q * (sorted.len() - 1) as f64).round() as usize;
-    sorted[rank.min(sorted.len() - 1)]
+    let rank = (q * sorted.len() as f64).ceil() as isize - 1;
+    let idx = rank.max(0) as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Latency summary for a set of request timings (seconds). All zeros
@@ -175,8 +183,60 @@ mod tests {
         let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 1.0), 100.0);
-        assert_eq!(percentile(&v, 0.5), 51.0); // round(0.5 * 99) = 50 → v[50]
+        assert_eq!(percentile(&v, 0.5), 50.0); // ⌈0.5 · 100⌉ − 1 = 49 → v[49]
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 0.999), 100.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn percentile_boundaries_small_n() {
+        // n = 1: every q must return the only sample.
+        for q in [0.0, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            assert_eq!(percentile(&[7.0], q), 7.0, "q={q}");
+        }
+        // n = 2: q ≤ 0.5 → first, q > 0.5 → second.
+        let two = [1.0, 2.0];
+        assert_eq!(percentile(&two, 0.0), 1.0);
+        assert_eq!(percentile(&two, 0.5), 1.0);
+        assert_eq!(percentile(&two, 0.500001), 2.0);
+        assert_eq!(percentile(&two, 1.0), 2.0);
+        // n = 3: thirds.
+        let three = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&three, 0.0), 1.0);
+        assert_eq!(percentile(&three, 1.0 / 3.0), 1.0);
+        assert_eq!(percentile(&three, 0.5), 2.0);
+        assert_eq!(percentile(&three, 2.0 / 3.0), 2.0);
+        assert_eq!(percentile(&three, 0.7), 3.0);
+        assert_eq!(percentile(&three, 1.0), 3.0);
+        // n = 4: q = 0.75 must not overshoot to the max.
+        let four = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&four, 0.75), 3.0);
+        assert_eq!(percentile(&four, 0.76), 4.0);
+        // Out-of-range q clamps.
+        assert_eq!(percentile(&four, -1.0), 1.0);
+        assert_eq!(percentile(&four, 2.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_exhaustive_small_n_reference() {
+        // Cross-check against a literal reference implementation of
+        // the nearest-rank definition for all n ≤ 8 and a q sweep.
+        fn reference(sorted: &[f64], q: f64) -> f64 {
+            let n = sorted.len();
+            let mut idx = 0;
+            while idx + 1 < n && ((idx + 1) as f64) < (q * n as f64).ceil() {
+                idx += 1;
+            }
+            sorted[idx]
+        }
+        for n in 1..=8usize {
+            let v: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+            for step in 0..=100 {
+                let q = step as f64 / 100.0;
+                assert_eq!(percentile(&v, q), reference(&v, q), "n={n} q={q}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Trace export: chrome://tracing JSON, an ASCII span tree, and
+//! per-phase totals comparable with the SimCluster cost model.
+
+use crate::cluster::tracer::{Phase, Tracer};
+
+use super::span::SpanRecord;
+
+/// Render spans as a chrome://tracing-loadable JSON document
+/// (`traceEvents` array of complete `"X"` events plus instant `"i"`
+/// markers; timestamps in microseconds since the process epoch). Span
+/// names are static identifiers chosen by the instrumentation sites,
+/// so no JSON escaping is required.
+pub fn chrome_trace_json(spans: &[SpanRecord]) -> String {
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let cat = match s.phase {
+            Some(p) => p.label(),
+            None => "span",
+        };
+        let ts = s.start_ns as f64 / 1e3;
+        if s.dur_ns == 0 && s.phase.is_none() {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"marker\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{ts:.3},\"pid\":1,\"tid\":{}}}",
+                s.name, s.tid
+            ));
+        } else {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"{cat}\",\"ph\":\"X\",\"ts\":{ts:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{},\"args\":{{\"flops\":{}}}}}",
+                s.name,
+                s.dur_ns as f64 / 1e3,
+                s.tid,
+                s.flops
+            ));
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Pretty-print spans as a per-thread tree, indented by recorded
+/// nesting depth, with durations and flop annotations. Used by
+/// `calars trace`.
+pub fn span_tree(spans: &[SpanRecord]) -> String {
+    let mut tids: Vec<u64> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    let mut out = String::new();
+    for tid in tids {
+        let mut rows: Vec<&SpanRecord> = spans.iter().filter(|s| s.tid == tid).collect();
+        // Start-time order; ties broken longest-first so parents print
+        // before the children they enclose.
+        rows.sort_by(|a, b| {
+            (a.start_ns, std::cmp::Reverse(a.dur_ns)).cmp(&(b.start_ns, std::cmp::Reverse(b.dur_ns)))
+        });
+        out.push_str(&format!("thread {tid}\n"));
+        for s in rows {
+            let indent = "  ".repeat(s.depth as usize + 1);
+            if s.dur_ns == 0 && s.phase.is_none() {
+                out.push_str(&format!("{indent}* {}\n", s.name));
+                continue;
+            }
+            let ms = s.dur_ns as f64 / 1e6;
+            if s.flops > 0 {
+                out.push_str(&format!(
+                    "{indent}{:<14} {:>10.3} ms  {} flops\n",
+                    s.name, ms, s.flops
+                ));
+            } else {
+                out.push_str(&format!("{indent}{:<14} {:>10.3} ms\n", s.name, ms));
+            }
+        }
+    }
+    out
+}
+
+const NPHASES: usize = Phase::ALL.len();
+
+/// Measured wall-time and flop totals per [`Phase`] — the real-hardware
+/// counterpart of the SimCluster [`Tracer`], so a measured `/fit` trace
+/// and a simulated schedule can be compared phase-for-phase.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTotals {
+    time: [f64; NPHASES],
+    flops: [u64; NPHASES],
+}
+
+fn idx(phase: Phase) -> usize {
+    Phase::ALL.iter().position(|&p| p == phase).unwrap_or(NPHASES - 1)
+}
+
+impl PhaseTotals {
+    /// Aggregate measured spans (spans without a phase are skipped).
+    pub fn from_spans(spans: &[SpanRecord]) -> Self {
+        let mut t = PhaseTotals::default();
+        for s in spans {
+            if let Some(p) = s.phase {
+                let i = idx(p);
+                t.time[i] += s.dur_ns as f64 / 1e9;
+                t.flops[i] += s.flops;
+            }
+        }
+        t
+    }
+
+    /// Project a simulated [`Tracer`] onto the same table shape.
+    pub fn from_tracer(tr: &Tracer) -> Self {
+        let mut t = PhaseTotals::default();
+        for (i, &p) in Phase::ALL.iter().enumerate() {
+            let st = tr.get(p);
+            t.time[i] = st.time;
+            t.flops[i] = st.flops;
+        }
+        t
+    }
+
+    pub fn time(&self, phase: Phase) -> f64 {
+        self.time[idx(phase)]
+    }
+
+    pub fn flops(&self, phase: Phase) -> u64 {
+        self.flops[idx(phase)]
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.time.iter().sum()
+    }
+
+    /// Two-column table of nonzero phases (seconds + flops), with a
+    /// totals row; `header` names the time column (e.g. "measured" or
+    /// "simulated").
+    pub fn render_table(&self, header: &str) -> String {
+        let mut out = format!("{:<14} {:>12}  {:>14}\n", "phase", header, "flops");
+        for (i, &p) in Phase::ALL.iter().enumerate() {
+            if self.time[i] == 0.0 && self.flops[i] == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<14} {:>12} {:>14}\n",
+                p.label(),
+                crate::metrics::fmt_secs(self.time[i]),
+                crate::metrics::fmt_count(self.flops[i]),
+            ));
+        }
+        out.push_str(&format!(
+            "{:<14} {:>12} {:>14}\n",
+            "total",
+            crate::metrics::fmt_secs(self.total_time()),
+            crate::metrics::fmt_count(self.flops.iter().sum::<u64>()),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &'static str, phase: Option<Phase>, start: u64, dur: u64, flops: u64) -> SpanRecord {
+        SpanRecord { trace: 1, name, phase, start_ns: start, dur_ns: dur, tid: 1, depth: 0, flops }
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let spans = vec![
+            rec("http_request", None, 1_000, 5_000_000, 0),
+            rec("Corr", Some(Phase::Corr), 2_000, 1_000_000, 1234),
+            rec("gram_panel_hit", None, 3_000, 0, 0),
+        ];
+        let json = chrome_trace_json(&spans);
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"name\":\"http_request\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"cat\":\"Corr\""));
+        assert!(json.contains("\"flops\":1234"));
+        // Zero-duration unphased records render as instant markers.
+        assert!(json.contains("\"ph\":\"i\""));
+        // Balanced braces/brackets as a cheap well-formedness check.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn span_tree_indents_by_depth() {
+        let mut inner = rec("Corr", Some(Phase::Corr), 2_000, 1_000, 64);
+        inner.depth = 1;
+        let spans = vec![rec("fit", None, 1_000, 10_000, 0), inner];
+        let tree = span_tree(&spans);
+        assert!(tree.contains("thread 1\n"));
+        assert!(tree.contains("  fit"));
+        assert!(tree.contains("    Corr"));
+        assert!(tree.contains("64 flops"));
+    }
+
+    #[test]
+    fn phase_totals_match_between_spans_and_tracer() {
+        let spans = vec![
+            rec("Corr", Some(Phase::Corr), 0, 2_000_000_000, 100),
+            rec("Corr", Some(Phase::Corr), 0, 1_000_000_000, 50),
+            rec("Cholesky", Some(Phase::Cholesky), 0, 500_000_000, 10),
+        ];
+        let measured = PhaseTotals::from_spans(&spans);
+        assert!((measured.time(Phase::Corr) - 3.0).abs() < 1e-9);
+        assert_eq!(measured.flops(Phase::Corr), 150);
+
+        let mut tr = Tracer::new();
+        tr.add_time(Phase::Corr, 3.0);
+        tr.add_flops(Phase::Corr, 150);
+        tr.add_time(Phase::Cholesky, 0.5);
+        tr.add_flops(Phase::Cholesky, 10);
+        let sim = PhaseTotals::from_tracer(&tr);
+        for p in Phase::ALL {
+            assert!((measured.time(p) - sim.time(p)).abs() < 1e-9);
+            assert_eq!(measured.flops(p), sim.flops(p));
+        }
+        let table = measured.render_table("measured");
+        assert!(table.contains("Corr"));
+        assert!(table.contains("total"));
+        assert!(!table.contains("Bcast"));
+    }
+}

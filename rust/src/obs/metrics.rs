@@ -1,0 +1,369 @@
+//! Typed metrics registry: counters, gauges, and fixed-bucket
+//! histograms with a Prometheus text-exposition renderer.
+//!
+//! Registration (get-or-create by name + label set) takes a mutex, but
+//! handles are `Arc`-backed atomics that call sites cache, so the hot
+//! path — `inc`/`observe` — is lock-free. Histogram sums are `f64`
+//! accumulated by a CAS loop on the bit pattern, which merges across
+//! worker threads without locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone counter handle; clones share the underlying cell.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle (u64 levels: queue depths, sizes).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistogramCore {
+    /// Ascending upper bounds; the `+Inf` bucket is implicit.
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` per-bucket counts (last = overflow).
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// f64 bit pattern, CAS-accumulated.
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram handle; clones share the underlying cells.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    fn with_bounds(bounds: &[f64]) -> Self {
+        let mut buckets = Vec::with_capacity(bounds.len() + 1);
+        for _ in 0..=bounds.len() {
+            buckets.push(AtomicU64::new(0));
+        }
+        Histogram(Arc::new(HistogramCore {
+            bounds: bounds.to_vec(),
+            buckets,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }))
+    }
+
+    pub fn observe(&self, v: f64) {
+        let c = &self.0;
+        let idx = c.bounds.iter().position(|&b| v <= b).unwrap_or(c.bounds.len());
+        c.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = c.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match c.sum_bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Observe a duration in seconds.
+    pub fn observe_secs(&self, d: std::time::Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.0.bounds
+    }
+
+    /// Non-cumulative per-bucket counts (last entry = overflow bucket).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// The latency bucket layout documented in DESIGN.md §Observability:
+/// log-spaced powers of two from 16µs to ~16.8s (21 finite bounds),
+/// one layout for every latency histogram so panels line up.
+pub fn latency_bounds() -> Vec<f64> {
+    (0..=20).map(|i| 16e-6 * (1u64 << i) as f64).collect()
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Entry {
+    name: String,
+    /// Rendered inside `{}` (e.g. `route="/fit"`); empty for none.
+    labels: String,
+    help: &'static str,
+    metric: Metric,
+}
+
+/// Registry of metric families; one global instance serves `/metrics`.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { inner: Mutex::new(Vec::new()) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Entry>> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        }
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        labels: &str,
+        help: &'static str,
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut inner = self.lock();
+        if let Some(e) = inner.iter().find(|e| e.name == name && e.labels == labels) {
+            return e.metric.clone();
+        }
+        let metric = make();
+        inner.push(Entry {
+            name: name.to_string(),
+            labels: labels.to_string(),
+            help,
+            metric: metric.clone(),
+        });
+        metric
+    }
+
+    /// Get or create a counter. By Prometheus convention the name
+    /// should end in `_total`.
+    pub fn counter(&self, name: &str, labels: &str, help: &'static str) -> Counter {
+        match self.get_or_insert(name, labels, help, || Metric::Counter(Counter::default())) {
+            Metric::Counter(c) => c,
+            _ => Counter::default(), // name reused across kinds: unregistered fallback
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &str, help: &'static str) -> Gauge {
+        match self.get_or_insert(name, labels, help, || Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g,
+            _ => Gauge::default(),
+        }
+    }
+
+    pub fn histogram(
+        &self,
+        name: &str,
+        labels: &str,
+        help: &'static str,
+        bounds: &[f64],
+    ) -> Histogram {
+        match self.get_or_insert(name, labels, help, || {
+            Metric::Histogram(Histogram::with_bounds(bounds))
+        }) {
+            Metric::Histogram(h) => h,
+            _ => Histogram::with_bounds(bounds),
+        }
+    }
+
+    /// Render the whole registry as Prometheus text exposition
+    /// (version 0.0.4): one `# HELP`/`# TYPE` header per family,
+    /// followed by every labeled sample of that family, cumulative
+    /// `le` buckets plus `_sum`/`_count` for histograms.
+    pub fn render(&self) -> String {
+        let inner = self.lock();
+        let mut out = String::new();
+        let mut seen: Vec<&str> = Vec::new();
+        for e in inner.iter() {
+            if seen.iter().any(|&s| s == e.name) {
+                continue;
+            }
+            seen.push(&e.name);
+            let kind = match &e.metric {
+                Metric::Counter(_) => "counter",
+                Metric::Gauge(_) => "gauge",
+                Metric::Histogram(_) => "histogram",
+            };
+            out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+            out.push_str(&format!("# TYPE {} {}\n", e.name, kind));
+            for m in inner.iter().filter(|m| m.name == e.name) {
+                render_sample(&mut out, m);
+            }
+        }
+        out
+    }
+}
+
+fn render_sample(out: &mut String, e: &Entry) {
+    let braces = |labels: &str| {
+        if labels.is_empty() {
+            String::new()
+        } else {
+            format!("{{{labels}}}")
+        }
+    };
+    match &e.metric {
+        Metric::Counter(c) => {
+            out.push_str(&format!("{}{} {}\n", e.name, braces(&e.labels), c.get()));
+        }
+        Metric::Gauge(g) => {
+            out.push_str(&format!("{}{} {}\n", e.name, braces(&e.labels), g.get()));
+        }
+        Metric::Histogram(h) => {
+            let join = |le: String| {
+                if e.labels.is_empty() {
+                    format!("le=\"{le}\"")
+                } else {
+                    format!("{},le=\"{le}\"", e.labels)
+                }
+            };
+            let counts = h.bucket_counts();
+            let mut cum = 0u64;
+            for (i, b) in h.bounds().iter().enumerate() {
+                cum += counts[i];
+                out.push_str(&format!(
+                    "{}_bucket{{{}}} {}\n",
+                    e.name,
+                    join(format!("{b}")),
+                    cum
+                ));
+            }
+            out.push_str(&format!(
+                "{}_bucket{{{}}} {}\n",
+                e.name,
+                join("+Inf".to_string()),
+                h.count()
+            ));
+            out.push_str(&format!(
+                "{}_sum{} {}\n",
+                e.name,
+                braces(&e.labels),
+                crate::metrics::json_f64(h.sum())
+            ));
+            out.push_str(&format!("{}_count{} {}\n", e.name, braces(&e.labels), h.count()));
+        }
+    }
+}
+
+/// The process-global registry backing `/metrics` and `/stats`.
+pub fn global() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("calars_test_total", "", "test counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same (name, labels) returns the same cell.
+        assert_eq!(r.counter("calars_test_total", "", "test counter").get(), 5);
+        let g = r.gauge("calars_test_depth", "", "test gauge");
+        g.set(17);
+        assert_eq!(r.gauge("calars_test_depth", "", "test gauge").get(), 17);
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum() {
+        let h = Histogram::with_bounds(&[0.001, 0.01, 0.1]);
+        h.observe(0.0005);
+        h.observe(0.005);
+        h.observe(0.005);
+        h.observe(5.0);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 5.0105).abs() < 1e-12);
+        assert_eq!(h.bucket_counts(), vec![1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn observe_is_mergeable_across_threads() {
+        let h = Histogram::with_bounds(&latency_bounds());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        h.observe(1e-5 * (1 + i % 7) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), 4000);
+        assert!(h.sum() > 0.0);
+    }
+
+    #[test]
+    fn render_is_framed_per_family() {
+        let r = Registry::new();
+        r.counter("calars_reqs_total", "route=\"/fit\"", "requests").add(2);
+        r.counter("calars_reqs_total", "route=\"/predict\"", "requests").add(3);
+        r.gauge("calars_depth", "", "depth").set(1);
+        let h = r.histogram("calars_lat_seconds", "", "latency", &[0.01, 0.1]);
+        h.observe(0.005);
+        h.observe(0.05);
+        let text = r.render();
+        // One TYPE header per family, samples grouped under it.
+        assert_eq!(text.matches("# TYPE calars_reqs_total counter").count(), 1);
+        assert!(text.contains("calars_reqs_total{route=\"/fit\"} 2"));
+        assert!(text.contains("calars_reqs_total{route=\"/predict\"} 3"));
+        assert!(text.contains("# TYPE calars_lat_seconds histogram"));
+        assert!(text.contains("calars_lat_seconds_bucket{le=\"0.01\"} 1"));
+        assert!(text.contains("calars_lat_seconds_bucket{le=\"0.1\"} 2"));
+        assert!(text.contains("calars_lat_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("calars_lat_seconds_count 2"));
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn latency_bounds_are_log_spaced_and_ascending() {
+        let b = latency_bounds();
+        assert_eq!(b.len(), 21);
+        assert!((b[0] - 16e-6).abs() < 1e-12);
+        for w in b.windows(2) {
+            assert!(w[1] > w[0]);
+            assert!((w[1] / w[0] - 2.0).abs() < 1e-9);
+        }
+    }
+}

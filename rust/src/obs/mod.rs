@@ -1,0 +1,38 @@
+//! Observability: end-to-end tracing spans, typed metrics, and trace
+//! export for the real serving stack (see DESIGN.md §"Observability").
+//!
+//! The paper's argument is a per-phase cost model; the SimCluster
+//! [`crate::cluster::tracer::Tracer`] attributes *simulated* time to
+//! the [`Phase`] taxonomy, and this module measures the *same phases
+//! on real hardware* so the two are directly comparable:
+//!
+//! * [`span`]/[`phase_span`]/[`instant`] — RAII spans on a
+//!   thread-local stack, buffered per worker and drained into the
+//!   bounded global [`TraceSink`] ([`sink`]). Per-request `trace_id`s
+//!   are minted by the HTTP front end ([`next_trace_id`]), carried
+//!   through [`crate::serve::FitJob`], and echoed in every JSON
+//!   response; `GET /trace/<id>` replays one request as
+//!   chrome://tracing JSON ([`chrome_trace_json`]).
+//! * [`metrics`] — counters / gauges / log-bucket histograms behind
+//!   `GET /metrics` (Prometheus text) and the `/stats` JSON view.
+//! * [`export`] — chrome-trace rendering, the `calars trace` span
+//!   tree, and [`PhaseTotals`] for measured-vs-simulated tables.
+//!
+//! Contract: tracing is **passive** — it reads clocks and increments
+//! counters but never feeds back into any numeric path, so fits are
+//! bit-identical with tracing on or off (property-tested in
+//! `tests/obs.rs`), and with `CALARS_TRACE=off` every probe reduces to
+//! one relaxed atomic load.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use crate::cluster::tracer::{Category, Phase};
+pub use export::{chrome_trace_json, span_tree, PhaseTotals};
+pub use metrics::{global, latency_bounds, Counter, Gauge, Histogram, Registry};
+pub use span::{
+    current_trace, enabled, flush_thread, format_trace_id, install_trace, instant, next_trace_id,
+    now_ns, parse_trace_id, phase_span, record_span_ending_now, set_enabled, sink, span,
+    uninstall_trace, with_trace, SinkStats, SlowEntry, SpanGuard, SpanRecord, TraceSink,
+};

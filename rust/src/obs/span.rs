@@ -1,0 +1,508 @@
+//! Thread-local span stack + bounded global [`TraceSink`].
+//!
+//! A span is opened with [`span`]/[`phase_span`] and closed by dropping
+//! the returned [`SpanGuard`]. Closed spans are buffered in a
+//! thread-local vector and drained into the process-wide sink when the
+//! thread's trace binding is released (one lock acquisition per
+//! request, amortized — the hot fit loop itself never takes a lock) or
+//! when the local buffer fills.
+//!
+//! Cost model: when tracing is disabled ([`enabled`] is false) or the
+//! calling thread has no trace bound, opening a span is one relaxed
+//! atomic load plus one thread-local read and the guard is inert.
+//! Instrumentation must never change numeric results — spans only
+//! observe the clock (see the bit-identity test in `tests/obs.rs`).
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::cluster::tracer::Phase;
+
+/// Global enable switch, initialized once from `CALARS_TRACE`
+/// (`off`/`0`/`false`/`no` disable; anything else — including unset —
+/// enables).
+fn enabled_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| {
+        let on = match std::env::var("CALARS_TRACE") {
+            Ok(v) => {
+                let v = v.to_ascii_lowercase();
+                !(v == "off" || v == "0" || v == "false" || v == "no")
+            }
+            Err(_) => true,
+        };
+        AtomicBool::new(on)
+    })
+}
+
+/// Whether span recording is currently on.
+pub fn enabled() -> bool {
+    enabled_flag().load(Ordering::Relaxed)
+}
+
+/// Override the `CALARS_TRACE` switch at runtime (used by
+/// `calars trace` and the test suite).
+pub fn set_enabled(on: bool) {
+    enabled_flag().store(on, Ordering::Relaxed);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic nanoseconds since the process trace epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a fresh nonzero trace id (one per request / CLI fit).
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The wire form echoed in JSON responses: 16 lowercase hex digits.
+pub fn format_trace_id(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+/// Inverse of [`format_trace_id`]; `None` for malformed or zero ids.
+pub fn parse_trace_id(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().filter(|&v| v != 0)
+}
+
+/// One closed span (or zero-duration marker), as stored in the sink.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Owning trace (never 0 once recorded).
+    pub trace: u64,
+    pub name: &'static str,
+    /// Set for fit-loop spans that map onto the paper's phase taxonomy.
+    pub phase: Option<Phase>,
+    /// Nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Stable small per-thread ordinal (not the OS tid).
+    pub tid: u64,
+    /// Nesting depth at open time on the recording thread (root = 0).
+    pub depth: u32,
+    /// Coarse flop estimate attached by the instrumentation site.
+    pub flops: u64,
+}
+
+thread_local! {
+    /// Trace id bound to this thread (0 = untraced).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    /// Open-span nesting depth on this thread.
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+    /// Closed spans buffered locally; drained per request.
+    static BUFFER: RefCell<Vec<SpanRecord>> = const { RefCell::new(Vec::new()) };
+    /// Stable small ordinal for this thread (assigned on first record).
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn thread_ordinal() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+/// The trace id bound to the calling thread (0 when untraced).
+pub fn current_trace() -> u64 {
+    CURRENT.with(|c| c.get())
+}
+
+/// Bind `trace` as the calling thread's ambient trace id, returning
+/// the previous binding for [`uninstall_trace`]. Prefer [`with_trace`];
+/// this split form exists for observers whose install/release points
+/// live in separate callbacks.
+pub fn install_trace(trace: u64) -> u64 {
+    CURRENT.with(|c| c.replace(trace))
+}
+
+/// Restore a binding saved by [`install_trace`] and flush this
+/// thread's buffered spans into the sink.
+pub fn uninstall_trace(prev: u64) {
+    CURRENT.with(|c| c.set(prev));
+    flush_thread();
+}
+
+/// Run `f` with `trace` bound on this thread. The buffer is flushed on
+/// exit even if `f` panics (drop guard), so a crashed fit still leaves
+/// its partial trace inspectable.
+pub fn with_trace<R>(trace: u64, f: impl FnOnce() -> R) -> R {
+    struct Reset(u64);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            uninstall_trace(self.0);
+        }
+    }
+    let _reset = Reset(install_trace(trace));
+    f()
+}
+
+struct OpenSpan {
+    trace: u64,
+    name: &'static str,
+    phase: Option<Phase>,
+    start_ns: u64,
+    depth: u32,
+    flops: u64,
+}
+
+/// RAII timer for one span; inert when tracing is off or no trace is
+/// bound.
+pub struct SpanGuard {
+    open: Option<OpenSpan>,
+}
+
+impl SpanGuard {
+    /// Attach a coarse flop count to the span (additive; no-op when
+    /// the guard is inert).
+    pub fn flops(&mut self, n: u64) {
+        if let Some(s) = self.open.as_mut() {
+            s.flops += n;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(s) = self.open.take() else { return };
+        let end = now_ns();
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        push_record(SpanRecord {
+            trace: s.trace,
+            name: s.name,
+            phase: s.phase,
+            start_ns: s.start_ns,
+            dur_ns: end.saturating_sub(s.start_ns),
+            tid: thread_ordinal(),
+            depth: s.depth,
+            flops: s.flops,
+        });
+    }
+}
+
+fn open_span(name: &'static str, phase: Option<Phase>) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { open: None };
+    }
+    let trace = current_trace();
+    if trace == 0 {
+        return SpanGuard { open: None };
+    }
+    let depth = DEPTH.with(|d| {
+        let v = d.get();
+        d.set(v + 1);
+        v
+    });
+    SpanGuard {
+        open: Some(OpenSpan { trace, name, phase, start_ns: now_ns(), depth, flops: 0 }),
+    }
+}
+
+/// Open a named span on the current trace.
+pub fn span(name: &'static str) -> SpanGuard {
+    open_span(name, None)
+}
+
+/// Open a span labeled with a fit-loop [`Phase`].
+pub fn phase_span(phase: Phase) -> SpanGuard {
+    open_span(phase.label(), Some(phase))
+}
+
+/// Record a zero-duration marker event (e.g. a Gram-panel cache hit).
+pub fn instant(name: &'static str) {
+    if !enabled() {
+        return;
+    }
+    let trace = current_trace();
+    if trace == 0 {
+        return;
+    }
+    push_record(SpanRecord {
+        trace,
+        name,
+        phase: None,
+        start_ns: now_ns(),
+        dur_ns: 0,
+        tid: thread_ordinal(),
+        depth: DEPTH.with(|d| d.get()),
+        flops: 0,
+    });
+}
+
+/// Record a span that ends now and started `dur_ns` ago — for
+/// intervals timed outside the guard mechanism (e.g. queue wait,
+/// measured from an enqueue stamp carried inside the job).
+pub fn record_span_ending_now(name: &'static str, phase: Option<Phase>, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let trace = current_trace();
+    if trace == 0 {
+        return;
+    }
+    let end = now_ns();
+    push_record(SpanRecord {
+        trace,
+        name,
+        phase,
+        start_ns: end.saturating_sub(dur_ns),
+        dur_ns,
+        tid: thread_ordinal(),
+        depth: DEPTH.with(|d| d.get()),
+        flops: 0,
+    });
+}
+
+/// Local buffer cap before an early flush — bounds the thread-local
+/// vector for very long fits.
+const FLUSH_AT: usize = 256;
+
+fn push_record(rec: SpanRecord) {
+    let len = BUFFER.with(|b| {
+        let mut b = b.borrow_mut();
+        b.push(rec);
+        b.len()
+    });
+    if len >= FLUSH_AT {
+        flush_thread();
+    }
+}
+
+/// Drain this thread's buffered spans into the global sink. Happens
+/// automatically when a trace binding is released or the buffer fills;
+/// callers that record outside any binding scope (e.g. `calars trace`
+/// after the observer detaches) invoke it explicitly.
+pub fn flush_thread() {
+    let drained = BUFFER.with(|b| std::mem::take(&mut *b.borrow_mut()));
+    if !drained.is_empty() {
+        sink().absorb(drained);
+    }
+}
+
+/// Retention bounds for the global sink.
+const MAX_TRACES: usize = 512;
+const MAX_SPANS_PER_TRACE: usize = 4096;
+const MAX_SLOW: usize = 128;
+
+/// One entry in the ring-buffered slow-request log.
+#[derive(Clone, Debug)]
+pub struct SlowEntry {
+    pub trace: u64,
+    /// `"METHOD /path"` of the offending request.
+    pub what: String,
+    pub dur_ns: u64,
+}
+
+/// Point-in-time counters for the sink (rendered under `/metrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SinkStats {
+    /// Traces currently retained.
+    pub traces: u64,
+    /// Spans currently retained across all traces.
+    pub spans: u64,
+    /// Spans absorbed since process start (monotone).
+    pub recorded: u64,
+    /// Traces dropped to stay within the retention bound (monotone) —
+    /// lets clients distinguish "evicted" from "never recorded".
+    pub evicted: u64,
+    pub slow_entries: u64,
+}
+
+struct SinkInner {
+    traces: HashMap<u64, Vec<SpanRecord>>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<u64>,
+    slow: VecDeque<SlowEntry>,
+}
+
+/// Bounded global store of completed trace spans, keyed by trace id.
+pub struct TraceSink {
+    inner: Mutex<SinkInner>,
+    recorded: AtomicU64,
+    evicted: AtomicU64,
+}
+
+/// The process-wide sink behind `/trace/<id>` and `calars trace`.
+pub fn sink() -> &'static TraceSink {
+    static SINK: OnceLock<TraceSink> = OnceLock::new();
+    SINK.get_or_init(|| TraceSink {
+        inner: Mutex::new(SinkInner {
+            traces: HashMap::new(),
+            order: VecDeque::new(),
+            slow: VecDeque::new(),
+        }),
+        recorded: AtomicU64::new(0),
+        evicted: AtomicU64::new(0),
+    })
+}
+
+impl TraceSink {
+    fn lock(&self) -> MutexGuard<'_, SinkInner> {
+        // Span buffers are plain data; recover a poisoned sink rather
+        // than cascading an unrelated panic into every scrape.
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        }
+    }
+
+    fn absorb(&self, spans: Vec<SpanRecord>) {
+        self.recorded.fetch_add(spans.len() as u64, Ordering::Relaxed);
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        for rec in spans {
+            if !inner.traces.contains_key(&rec.trace) {
+                inner.order.push_back(rec.trace);
+                inner.traces.insert(rec.trace, Vec::new());
+            }
+            if let Some(v) = inner.traces.get_mut(&rec.trace) {
+                if v.len() < MAX_SPANS_PER_TRACE {
+                    v.push(rec);
+                }
+            }
+        }
+        while inner.order.len() > MAX_TRACES {
+            if let Some(old) = inner.order.pop_front() {
+                inner.traces.remove(&old);
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// All spans recorded for `trace`, or `None` if unknown / evicted.
+    pub fn get(&self, trace: u64) -> Option<Vec<SpanRecord>> {
+        self.lock().traces.get(&trace).cloned()
+    }
+
+    /// Append to the ring-buffered slow-request log.
+    pub fn note_slow(&self, trace: u64, what: String, dur_ns: u64) {
+        let mut inner = self.lock();
+        inner.slow.push_back(SlowEntry { trace, what, dur_ns });
+        while inner.slow.len() > MAX_SLOW {
+            inner.slow.pop_front();
+        }
+    }
+
+    /// Snapshot of the slow-request log, oldest first.
+    pub fn slow_log(&self) -> Vec<SlowEntry> {
+        self.lock().slow.iter().cloned().collect()
+    }
+
+    pub fn stats(&self) -> SinkStats {
+        let inner = self.lock();
+        SinkStats {
+            traces: inner.traces.len() as u64,
+            spans: inner.traces.values().map(|v| v.len() as u64).sum(),
+            recorded: self.recorded.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            slow_entries: inner.slow.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests that flip the global enable switch or
+    /// count sink totals (the test harness runs tests in parallel).
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn gate() -> MutexGuard<'static, ()> {
+        match GATE.lock() {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        }
+    }
+
+    #[test]
+    fn spans_require_a_bound_trace() {
+        let _g = gate();
+        set_enabled(true);
+        // No trace bound: guard is inert, nothing reaches the sink.
+        let before = sink().stats().recorded;
+        {
+            let mut g = span("orphan");
+            g.flops(10);
+        }
+        instant("orphan_marker");
+        flush_thread();
+        assert_eq!(sink().stats().recorded, before);
+    }
+
+    #[test]
+    fn with_trace_records_and_flushes() {
+        let _g = gate();
+        set_enabled(true);
+        let id = next_trace_id();
+        with_trace(id, || {
+            let mut outer = span("outer");
+            outer.flops(7);
+            {
+                let _inner = phase_span(Phase::Corr);
+            }
+            instant("marker");
+        });
+        let spans = sink().get(id).expect("trace retained");
+        assert_eq!(spans.len(), 3);
+        let outer = spans.iter().find(|s| s.name == "outer").unwrap();
+        assert_eq!(outer.depth, 0);
+        assert_eq!(outer.flops, 7);
+        let corr = spans.iter().find(|s| s.name == "Corr").unwrap();
+        assert_eq!(corr.phase, Some(Phase::Corr));
+        assert_eq!(corr.depth, 1);
+        assert!(spans.iter().any(|s| s.name == "marker" && s.dur_ns == 0));
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = gate();
+        set_enabled(false);
+        let id = next_trace_id();
+        with_trace(id, || {
+            let _g = span("quiet");
+            instant("quiet_marker");
+        });
+        set_enabled(true);
+        assert!(sink().get(id).is_none());
+    }
+
+    #[test]
+    fn trace_id_round_trip() {
+        let id = next_trace_id();
+        let s = format_trace_id(id);
+        assert_eq!(s.len(), 16);
+        assert_eq!(parse_trace_id(&s), Some(id));
+        assert_eq!(parse_trace_id(""), None);
+        assert_eq!(parse_trace_id("zz"), None);
+        assert_eq!(parse_trace_id("0"), None);
+    }
+
+    #[test]
+    fn slow_log_is_bounded() {
+        for i in 0..(MAX_SLOW + 10) {
+            sink().note_slow(u64::MAX - i as u64, format!("GET /x{i}"), 1);
+        }
+        assert!(sink().slow_log().len() <= MAX_SLOW);
+    }
+}

@@ -48,6 +48,20 @@ thread_local! {
     static WORKER_MIN_CHUNK: Cell<usize> = const { Cell::new(0) };
 }
 
+/// Fork-join task counter in the global metrics registry, registered
+/// once and cloned thereafter (the add itself is one relaxed atomic).
+fn pool_tasks_counter() -> crate::obs::Counter {
+    static C: std::sync::OnceLock<crate::obs::Counter> = std::sync::OnceLock::new();
+    C.get_or_init(|| {
+        crate::obs::global().counter(
+            "calars_par_tasks_total",
+            "",
+            "Tasks enqueued on the shared-memory fork-join pool.",
+        )
+    })
+    .clone()
+}
+
 /// The grain of the pool owning the current worker thread, if this is
 /// one (used by [`crate::par::min_chunk`]).
 pub(crate) fn worker_min_chunk() -> Option<usize> {
@@ -148,6 +162,7 @@ impl ThreadPool {
         if tasks.len() <= 1 || self.is_inline() {
             return tasks.into_iter().map(|f| f()).collect();
         }
+        pool_tasks_counter().add(tasks.len() as u64);
         let n = tasks.len();
         let slots: Vec<Slot<T>> = (0..n).map(|_| Mutex::new(None)).collect();
         let latch = Latch::new(n);

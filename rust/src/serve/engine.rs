@@ -207,6 +207,7 @@ impl PredictionEngine {
         self.counters.batches.fetch_add(1, Ordering::Relaxed);
         self.counters.batched_rows.fetch_add(queries.len() as u64, Ordering::Relaxed);
         self.counters.max_batch_rows.fetch_max(queries.len() as u64, Ordering::Relaxed);
+        batch_rows_histogram().observe(queries.len() as f64);
 
         let mut groups: HashMap<(u64, SelKey), Vec<usize>> = HashMap::new();
         for (i, q) in queries.iter().enumerate() {
@@ -305,6 +306,22 @@ impl PredictionEngine {
             errors: self.counters.errors.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Batch-size histogram in the global metrics registry (power-of-two
+/// row-count buckets), registered once and cloned thereafter.
+fn batch_rows_histogram() -> crate::obs::Histogram {
+    static H: std::sync::OnceLock<crate::obs::Histogram> = std::sync::OnceLock::new();
+    H.get_or_init(|| {
+        let bounds: Vec<f64> = (0..=10).map(|i| (1u64 << i) as f64).collect();
+        crate::obs::global().histogram(
+            "calars_predict_batch_rows",
+            "",
+            "Rows per drained prediction batch.",
+            &bounds,
+        )
+    })
+    .clone()
 }
 
 /// Resolve a selector to a dense coefficient vector on one record.

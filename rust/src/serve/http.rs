@@ -64,6 +64,9 @@ pub struct ServeOptions {
     pub persist_dir: Option<String>,
     /// Fit this dataset synchronously before accepting traffic.
     pub prefit: Option<String>,
+    /// Requests slower than this land in the ring-buffered slow-request
+    /// log (`calars::obs::sink().slow_log()`).
+    pub slow_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -77,6 +80,7 @@ impl Default for ServeOptions {
             allow_shutdown: false,
             persist_dir: None,
             prefit: None,
+            slow_ms: 500,
         }
     }
 }
@@ -92,6 +96,7 @@ impl From<crate::config::ServeConfig> for ServeOptions {
             allow_shutdown: c.oneshot,
             persist_dir: c.persist_dir,
             prefit: c.prefit,
+            slow_ms: c.slow_ms,
         }
     }
 }
@@ -112,6 +117,9 @@ struct ServerState {
     addr: SocketAddr,
     started: Instant,
     requests: AtomicU64,
+    /// Slow-request threshold (requests over it land in the obs sink's
+    /// ring-buffered slow log).
+    slow: Duration,
 }
 
 /// Run the server on the current thread until shutdown.
@@ -198,6 +206,7 @@ fn bind(opts: &ServeOptions) -> Result<(TcpListener, Arc<ServerState>)> {
         addr,
         started: Instant::now(),
         requests: AtomicU64::new(0),
+        slow: Duration::from_millis(opts.slow_ms),
     });
     Ok((listener, state))
 }
@@ -241,9 +250,32 @@ fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
             }
         };
         state.requests.fetch_add(1, Ordering::Relaxed);
-        let (status, body) = route(&req, &state);
+        // Every request gets a trace id. Spans recorded while handling
+        // it — including fit phases run later by a queue worker that
+        // inherits the id through FitJob.trace — surface at
+        // `GET /trace/<id>`; the id is echoed in the JSON response.
+        let trace = crate::obs::next_trace_id();
+        let t0 = Instant::now();
+        let (status, ctype, mut body) = crate::obs::with_trace(trace, || {
+            let span = crate::obs::span("http_request");
+            let out = route(&req, &state);
+            drop(span);
+            out
+        });
+        let elapsed = t0.elapsed();
+        request_histogram(route_label(&req.method, &req.path)).observe_secs(elapsed);
+        if !state.slow.is_zero() && elapsed >= state.slow {
+            crate::obs::sink().note_slow(
+                trace,
+                format!("{} {}", req.method, req.path),
+                elapsed.as_nanos() as u64,
+            );
+        }
+        if ctype == "application/json" {
+            body = attach_trace_id(body, trace);
+        }
         if writer
-            .write_all(http_response(status, "application/json", &body).as_bytes())
+            .write_all(http_response(status, ctype, &body).as_bytes())
             .and_then(|_| writer.flush())
             .is_err()
         {
@@ -257,8 +289,21 @@ fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
     }
 }
 
-fn route(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
-    match (req.method.as_str(), req.path.as_str()) {
+const JSON: &str = "application/json";
+/// Prometheus text exposition format 0.0.4.
+const PROM: &str = "text/plain; version=0.0.4";
+
+fn route(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, &'static str, String) {
+    if req.method == "GET" {
+        if req.path == "/metrics" {
+            return (200, PROM, metrics_text(state));
+        }
+        if let Some(id) = req.path.strip_prefix("/trace/") {
+            let (status, body) = trace_json(id);
+            return (status, JSON, body);
+        }
+    }
+    let (status, body) = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (200, "{\"ok\":true}".to_string()),
         ("GET", "/models") => (200, models_json(state)),
         ("GET", "/datasets") => (200, datasets_json(state)),
@@ -271,7 +316,63 @@ fn route(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
             (404, format!("{{\"error\":\"no route {}\"}}", json_escape(&req.path)))
         }
         (m, _) => (405, format!("{{\"error\":\"method {} not allowed\"}}", json_escape(m))),
+    };
+    (status, JSON, body)
+}
+
+/// `GET /trace/<id>` — one request's span timeline as chrome://tracing
+/// JSON (load it at chrome://tracing or ui.perfetto.dev).
+fn trace_json(id: &str) -> (u16, String) {
+    let Some(trace) = crate::obs::parse_trace_id(id) else {
+        return (400, format!("{{\"error\":\"bad trace id '{}'\"}}", json_escape(id)));
+    };
+    match crate::obs::sink().get(trace) {
+        Some(spans) => (200, crate::obs::chrome_trace_json(&spans)),
+        None => (
+            404,
+            "{\"error\":\"trace unknown: never recorded (tracing off?), not yet flushed, or evicted from the bounded sink\"}"
+                .to_string(),
+        ),
     }
+}
+
+/// Low-cardinality route label for the request-latency histogram.
+fn route_label(method: &str, path: &str) -> &'static str {
+    match (method, path) {
+        ("GET", "/healthz") => "healthz",
+        ("GET", "/models") => "models",
+        ("GET", "/datasets") => "datasets",
+        ("GET", "/stats") => "stats",
+        ("GET", "/metrics") => "metrics",
+        ("GET", p) if p.starts_with("/trace/") => "trace",
+        ("POST", "/predict") => "predict",
+        ("POST", "/fit") => "fit",
+        ("POST", "/select") => "select",
+        ("POST", "/shutdown") => "shutdown",
+        _ => "other",
+    }
+}
+
+/// Per-route request-latency histogram in the global registry. The
+/// lookup is one short mutex acquisition per request; observing is
+/// lock-free.
+fn request_histogram(label: &'static str) -> crate::obs::Histogram {
+    crate::obs::global().histogram(
+        "calars_http_request_seconds",
+        &format!("route=\"{label}\""),
+        "Wall time handling HTTP requests, by route.",
+        &crate::obs::latency_bounds(),
+    )
+}
+
+/// Echo the request's trace id into a JSON **object** body (inserted
+/// right after the opening `{`, so clients that slice the body from
+/// its first `[` keep working); anything else passes through
+/// untouched.
+fn attach_trace_id(body: String, trace: u64) -> String {
+    let Some(rest) = body.strip_prefix('{') else { return body };
+    let sep = if rest.trim_start().starts_with('}') { "" } else { "," };
+    format!("{{\"trace_id\":\"{}\"{sep}{rest}", crate::obs::format_trace_id(trace))
 }
 
 /// JSON error body from an [`Error`]'s full context chain.
@@ -303,7 +404,11 @@ fn predict(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
         .into_iter()
         .map(|x| Query { model: parsed.model, selector: parsed.selector, x })
         .collect();
-    let results = state.batcher.submit_wait(queries);
+    let results = {
+        // Covers the batch accumulation window + the shared GEMV.
+        let _span = crate::obs::span("predict_batch_wait");
+        state.batcher.submit_wait(queries)
+    };
     let mut preds = Vec::with_capacity(results.len());
     for r in results {
         match r {
@@ -331,6 +436,9 @@ fn fit(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
         dataset: parsed.dataset,
         seed: parsed.seed,
         spec,
+        // The worker binds the fit to this request's trace, so the
+        // phase spans land in the same /trace/<id> timeline.
+        trace: crate::obs::current_trace(),
     });
     let st = if req.query_flag("wait") {
         state.queue.wait(job, Duration::from_secs(600))
@@ -582,11 +690,44 @@ fn gram_stats_json(g: &super::GramCacheStats) -> String {
     )
 }
 
+/// One scrape of every serving-layer counter group, gathered
+/// back-to-back **before** any formatting starts. `/stats` and
+/// `/metrics` both render from this. The old `/stats` read each
+/// subsystem's lock lazily at format time, so a response could pair a
+/// completed job count taken milliseconds after the submitted count it
+/// is compared against (torn scrape); collecting first closes that
+/// window and guarantees the two endpoints agree within one request.
+struct StatsSnapshot {
+    uptime_secs: f64,
+    http_requests: u64,
+    engine: super::EngineStats,
+    batcher: BatcherStats,
+    queue: super::QueueStats,
+    registry: RegistryStats,
+    gram: super::GramCacheStats,
+    cv: super::GramCacheStats,
+    trace: crate::obs::SinkStats,
+}
+
+impl StatsSnapshot {
+    fn collect(state: &ServerState) -> Self {
+        StatsSnapshot {
+            uptime_secs: state.started.elapsed().as_secs_f64(),
+            http_requests: state.requests.load(Ordering::Relaxed),
+            engine: state.engine.stats(),
+            batcher: state.batcher.stats(),
+            queue: state.queue.stats(),
+            registry: state.registry.stats(),
+            gram: state.queue.gram_cache().stats(),
+            cv: state.cv_cache.stats(),
+            trace: crate::obs::sink().stats(),
+        }
+    }
+}
+
 fn stats_json(state: &Arc<ServerState>) -> String {
-    let e = state.engine.stats();
-    let q = state.queue.stats();
-    let r: RegistryStats = state.registry.stats();
-    let b = state.batcher.stats();
+    let s = StatsSnapshot::collect(state);
+    let (e, b, q, r) = (&s.engine, &s.batcher, &s.queue, &s.registry);
     format!(
         "{{\"uptime_secs\":{},\"http_requests\":{},\
           \"engine\":{{\"queries\":{},\"batches\":{},\"batched_rows\":{},\"max_batch_rows\":{},\"cache_hits\":{},\"cache_misses\":{},\"errors\":{}}},\
@@ -594,9 +735,10 @@ fn stats_json(state: &Arc<ServerState>) -> String {
           \"queue\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"in_flight\":{},\"lock_recoveries\":{}}},\
           \"registry\":{{\"models\":{},\"inserted\":{},\"evicted\":{},\"warm_reused\":{},\"approx_bytes\":{}}},\
           \"gram_cache\":{},\
-          \"cv_cache\":{}}}",
-        json_f64(state.started.elapsed().as_secs_f64()),
-        state.requests.load(Ordering::Relaxed),
+          \"cv_cache\":{},\
+          \"trace\":{{\"traces\":{},\"spans\":{},\"recorded\":{},\"evicted\":{},\"slow_entries\":{}}}}}",
+        json_f64(s.uptime_secs),
+        s.http_requests,
         e.queries,
         e.batches,
         e.batched_rows,
@@ -616,9 +758,165 @@ fn stats_json(state: &Arc<ServerState>) -> String {
         r.evicted,
         r.warm_reused,
         r.approx_bytes,
-        gram_stats_json(&state.queue.gram_cache().stats()),
-        gram_stats_json(&state.cv_cache.stats())
+        gram_stats_json(&s.gram),
+        gram_stats_json(&s.cv),
+        s.trace.traces,
+        s.trace.spans,
+        s.trace.recorded,
+        s.trace.evicted,
+        s.trace.slow_entries
     )
+}
+
+/// `GET /metrics` — Prometheus 0.0.4 text exposition: the global
+/// registry (request/queue-wait latency histograms) followed by
+/// counter/gauge families derived from the same [`StatsSnapshot`]
+/// `/stats` serves, so the two endpoints never disagree within one
+/// scrape.
+fn metrics_text(state: &Arc<ServerState>) -> String {
+    let s = StatsSnapshot::collect(state);
+    let mut out = crate::obs::global().render();
+    let mut fam = |name: &str, kind: &str, help: &str, samples: &[(&str, u64)]| {
+        out.push_str("# HELP ");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(help);
+        out.push_str("\n# TYPE ");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(kind);
+        out.push('\n');
+        for (labels, v) in samples {
+            if labels.is_empty() {
+                out.push_str(&format!("{name} {v}\n"));
+            } else {
+                out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+            }
+        }
+    };
+    fam("calars_http_requests_total", "counter", "HTTP requests accepted.", &[("", s.http_requests)]);
+    fam(
+        "calars_engine_queries_total",
+        "counter",
+        "Prediction queries answered by the engine.",
+        &[("", s.engine.queries)],
+    );
+    fam(
+        "calars_engine_batches_total",
+        "counter",
+        "Prediction batches drained (one shared GEMV each).",
+        &[("", s.engine.batches)],
+    );
+    fam(
+        "calars_engine_batched_rows_total",
+        "counter",
+        "Prediction rows evaluated through batches.",
+        &[("", s.engine.batched_rows)],
+    );
+    fam(
+        "calars_engine_cache_total",
+        "counter",
+        "Coefficient-snapshot cache lookups, by outcome.",
+        &[("outcome=\"hit\"", s.engine.cache_hits), ("outcome=\"miss\"", s.engine.cache_misses)],
+    );
+    fam(
+        "calars_engine_errors_total",
+        "counter",
+        "Prediction queries that answered an error.",
+        &[("", s.engine.errors)],
+    );
+    fam(
+        "calars_batcher_lock_recoveries_total",
+        "counter",
+        "Poisoned-lock recoveries inside the batcher.",
+        &[("", s.batcher.lock_recoveries)],
+    );
+    fam(
+        "calars_batcher_engine_panics_total",
+        "counter",
+        "Prediction batches that panicked inside the engine.",
+        &[("", s.batcher.engine_panics)],
+    );
+    fam(
+        "calars_fit_jobs_total",
+        "counter",
+        "Fit jobs by terminal state (submitted counts enqueues).",
+        &[
+            ("state=\"submitted\"", s.queue.submitted),
+            ("state=\"completed\"", s.queue.completed),
+            ("state=\"failed\"", s.queue.failed),
+        ],
+    );
+    fam(
+        "calars_fit_jobs_in_flight",
+        "gauge",
+        "Fit jobs submitted but not yet terminal.",
+        &[("", s.queue.in_flight)],
+    );
+    fam(
+        "calars_registry_models",
+        "gauge",
+        "Models currently held by the registry.",
+        &[("", s.registry.models as u64)],
+    );
+    fam(
+        "calars_registry_inserted_total",
+        "counter",
+        "Models inserted into the registry.",
+        &[("", s.registry.inserted)],
+    );
+    fam(
+        "calars_registry_evicted_total",
+        "counter",
+        "Models evicted from the registry (LRU).",
+        &[("", s.registry.evicted)],
+    );
+    fam(
+        "calars_registry_warm_reused_total",
+        "counter",
+        "Fit jobs answered by an already-stored covering path.",
+        &[("", s.registry.warm_reused)],
+    );
+    fam(
+        "calars_gram_panel_lookups_total",
+        "counter",
+        "Gram panel-store lookups, by cache and outcome.",
+        &[
+            ("cache=\"fit\",outcome=\"hit\"", s.gram.panel_hits),
+            ("cache=\"fit\",outcome=\"miss\"", s.gram.panel_misses),
+            ("cache=\"cv\",outcome=\"hit\"", s.cv.panel_hits),
+            ("cache=\"cv\",outcome=\"miss\"", s.cv.panel_misses),
+        ],
+    );
+    fam(
+        "calars_trace_spans_recorded_total",
+        "counter",
+        "Spans absorbed by the trace sink.",
+        &[("", s.trace.recorded)],
+    );
+    fam(
+        "calars_trace_spans_evicted_total",
+        "counter",
+        "Spans dropped by the bounded trace sink (per-trace cap or trace eviction).",
+        &[("", s.trace.evicted)],
+    );
+    fam(
+        "calars_traces_held",
+        "gauge",
+        "Traces currently resolvable at /trace/<id>.",
+        &[("", s.trace.traces)],
+    );
+    fam(
+        "calars_slow_requests_held",
+        "gauge",
+        "Entries in the ring-buffered slow-request log.",
+        &[("", s.trace.slow_entries)],
+    );
+    out.push_str(&format!(
+        "# HELP calars_uptime_seconds Server uptime.\n# TYPE calars_uptime_seconds gauge\ncalars_uptime_seconds {}\n",
+        json_f64(s.uptime_secs)
+    ));
+    out
 }
 
 // ── the cross-request batcher ───────────────────────────────────────
@@ -870,6 +1168,25 @@ mod tests {
         assert_eq!(r[0].as_ref().unwrap(), &6.0);
         assert!(b.stats().lock_recoveries >= 1, "{:?}", b.stats());
         b.stop();
+    }
+
+    #[test]
+    fn attach_trace_id_prepends_into_json_objects() {
+        assert_eq!(attach_trace_id("{}".into(), 0x2a), "{\"trace_id\":\"000000000000002a\"}");
+        assert_eq!(
+            attach_trace_id("{\"ok\":true}".into(), 1),
+            "{\"trace_id\":\"0000000000000001\",\"ok\":true}"
+        );
+        // Non-object bodies pass through untouched.
+        assert_eq!(attach_trace_id("plain".into(), 1), "plain");
+    }
+
+    #[test]
+    fn route_labels_are_low_cardinality() {
+        assert_eq!(route_label("GET", "/trace/00ff"), "trace");
+        assert_eq!(route_label("POST", "/fit"), "fit");
+        assert_eq!(route_label("GET", "/no-such-path"), "other");
+        assert_eq!(route_label("PUT", "/fit"), "other");
     }
 
     #[test]

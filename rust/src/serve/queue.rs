@@ -43,6 +43,10 @@ pub struct FitJob {
     pub seed: u64,
     /// The validated estimator spec (algorithm + shared knobs).
     pub spec: FitSpec,
+    /// Trace id the worker binds around the fit (0 = untraced). The
+    /// HTTP layer stamps the request's trace here so the fit's phase
+    /// spans land in the same `/trace/<id>` timeline.
+    pub trace: u64,
 }
 
 impl Default for FitJob {
@@ -52,6 +56,7 @@ impl Default for FitJob {
             dataset: "tiny".to_string(),
             seed: 42,
             spec: FitSpec::new(Algorithm::Lars).t(16),
+            trace: 0,
         }
     }
 }
@@ -103,7 +108,9 @@ impl JobState {
 }
 
 enum Work {
-    Job(u64, FitJob),
+    /// (job id, job, enqueue instant — measured so the worker can
+    /// record the queue-wait span and histogram).
+    Job(u64, FitJob, Instant),
     Shutdown,
 }
 
@@ -198,7 +205,9 @@ impl FitQueue {
         lock_recover(&self.shared.states, &self.shared.recoveries).insert(id, JobState::Queued);
         self.shared.submitted.fetch_add(1, Ordering::Relaxed);
         let sent = !self.stopped.load(Ordering::SeqCst)
-            && lock_recover(&self.tx, &self.shared.recoveries).send(Work::Job(id, job)).is_ok();
+            && lock_recover(&self.tx, &self.shared.recoveries)
+                .send(Work::Job(id, job, Instant::now()))
+                .is_ok();
         if !sent {
             self.fail_job(id, "fit queue is shut down");
         }
@@ -311,16 +320,27 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, shared: Arc<Shared>) {
             let guard = lock_recover(&rx, &shared.recoveries);
             guard.recv()
         };
-        let (job, spec) = match work {
-            Ok(Work::Job(job, spec)) => (job, spec),
+        let (job, spec, enqueued) = match work {
+            Ok(Work::Job(job, spec, enqueued)) => (job, spec, enqueued),
             Ok(Work::Shutdown) | Err(_) => return,
         };
         set_state(&shared, job, JobState::Running);
         let t0 = Instant::now();
+        let wait = enqueued.elapsed();
+        queue_wait_histogram().observe_secs(wait);
         // A panic inside the fit must fail this one job, not silently
-        // shrink the worker pool (and strand the job in Running).
+        // shrink the worker pool (and strand the job in Running). The
+        // trace binding sits *inside* catch_unwind so its reset guard
+        // runs (and the thread's span buffer flushes) even on panic.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_fit(&shared.registry, &shared.gram_cache, &spec)
+            crate::obs::with_trace(spec.trace, || {
+                crate::obs::record_span_ending_now(
+                    "queue_wait",
+                    Some(crate::cluster::tracer::Phase::Wait),
+                    wait.as_nanos() as u64,
+                );
+                run_fit(&shared.registry, &shared.gram_cache, &spec)
+            })
         }));
         let state = match outcome {
             Ok(Ok((model, reused))) => {
@@ -343,6 +363,21 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, shared: Arc<Shared>) {
         };
         set_state(&shared, job, state);
     }
+}
+
+/// Queue-wait latency histogram in the global metrics registry,
+/// registered once and cloned thereafter (observing is lock-free).
+fn queue_wait_histogram() -> crate::obs::Histogram {
+    static H: std::sync::OnceLock<crate::obs::Histogram> = std::sync::OnceLock::new();
+    H.get_or_init(|| {
+        crate::obs::global().histogram(
+            "calars_fit_queue_wait_seconds",
+            "",
+            "Time fit jobs spent queued before a worker picked them up.",
+            &crate::obs::latency_bounds(),
+        )
+    })
+    .clone()
 }
 
 fn set_state(shared: &Shared, job: u64, state: JobState) {

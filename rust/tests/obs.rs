@@ -1,0 +1,371 @@
+//! Integration tests for `calars::obs`: the tracing-never-changes-
+//! numerics contract (bit-identity with tracing on vs off, across
+//! algorithms and thread counts) and the serving layer's metrics/trace
+//! endpoints under concurrent load (valid Prometheus framing, monotone
+//! counters, every echoed trace_id resolving at `/trace/<id>` or being
+//! honestly evicted).
+
+use calars::data::datasets;
+use calars::fit::{Algorithm, FitSpec, Fitter, TraceObserver};
+use calars::par::ThreadPool;
+use calars::serve::{spawn_server, FitRequest, PredictRequest, Selector, ServeClient, ServeOptions};
+use std::sync::Mutex;
+
+/// Both tests toggle (or depend on) the process-global tracing flag
+/// and the shared sink; serialize them so the test harness's thread
+/// parallelism can't interleave the toggles.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    match GATE.lock() {
+        Ok(g) => g,
+        Err(e) => e.into_inner(),
+    }
+}
+
+/// Satellite: property — tracing is passive. For every algorithm in
+/// the family and every thread-pool size, a traced fit returns the
+/// same bits as an untraced one.
+#[test]
+fn tracing_on_off_is_bit_identical_across_family_and_threads() {
+    let _g = gate();
+    let ds = datasets::by_name("tiny", 42).expect("tiny exists");
+    let specs = [
+        FitSpec::new(Algorithm::Lars).t(8),
+        FitSpec::new(Algorithm::Blars { b: 2 }).t(8).ranks(4),
+        FitSpec::new(Algorithm::TBlars { b: 2, parts: 4 }).t(8),
+        FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-8 }).t(8),
+    ];
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads, 64);
+        calars::par::with_pool(&pool, || {
+            for spec in &specs {
+                calars::obs::set_enabled(false);
+                let off = spec.run(&ds.a, &ds.b).expect("untraced fit succeeds");
+                calars::obs::set_enabled(true);
+                let mut tracer = TraceObserver::new();
+                let on = spec.fit(&ds.a, &ds.b, &mut tracer).expect("traced fit succeeds");
+                calars::obs::flush_thread();
+
+                let what = format!("{} @ {threads} threads", spec.encode());
+                assert_eq!(off.output.selected, on.output.selected, "{what}: selection");
+                assert_eq!(
+                    off.output.y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    on.output.y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{what}: fitted response"
+                );
+                assert_eq!(
+                    off.output.residual_norms.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    on.output.residual_norms.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{what}: residual trace"
+                );
+                match (&off.coefs, &on.coefs) {
+                    (Some(a), Some(b)) => assert_eq!(
+                        a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{what}: coefficients"
+                    ),
+                    (None, None) => {}
+                    other => panic!("{what}: coefs presence differs: {other:?}"),
+                }
+                // And the traced run actually recorded phase spans —
+                // the equality above must not be vacuous.
+                let spans = calars::obs::sink()
+                    .get(tracer.trace_id())
+                    .expect("traced fit left spans in the sink");
+                assert!(
+                    spans.iter().any(|s| s.phase.is_some()),
+                    "{what}: no phase spans recorded"
+                );
+            }
+        });
+    }
+    // Leave the flag the way an env-less process starts: enabled.
+    calars::obs::set_enabled(true);
+}
+
+// ── a small Prometheus 0.0.4 text parser for the scrape test ────────
+
+#[derive(Debug, Default)]
+struct Family {
+    kind: String,
+    /// (labels-inside-braces, value) per sample line.
+    samples: Vec<(String, f64)>,
+}
+
+/// Parse Prometheus text exposition strictly enough to catch framing
+/// bugs: every sample must belong to a family introduced by exactly
+/// one `# TYPE` line, and every value must parse as f64.
+fn parse_prometheus(text: &str) -> std::collections::BTreeMap<String, Family> {
+    let mut out: std::collections::BTreeMap<String, Family> = Default::default();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line has a name").to_string();
+            let kind = it.next().expect("TYPE line has a kind").to_string();
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                "unknown kind in {line:?}"
+            );
+            let prev = out.insert(name.clone(), Family { kind, samples: Vec::new() });
+            assert!(prev.is_none(), "duplicate # TYPE for {name}");
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP
+        }
+        let (ident, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        let value: f64 = value.parse().unwrap_or_else(|e| panic!("bad value in {line:?}: {e}"));
+        let (name, labels) = match ident.split_once('{') {
+            Some((n, l)) => (n.to_string(), l.trim_end_matches('}').to_string()),
+            None => (ident.to_string(), String::new()),
+        };
+        // Histogram samples attach to their family's base name.
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|b| out.contains_key(*b) && out[*b].kind == "histogram")
+            .unwrap_or(&name)
+            .to_string();
+        let fam = out
+            .get_mut(&base)
+            .unwrap_or_else(|| panic!("sample {name} has no # TYPE family"));
+        fam.samples.push((format!("{name}|{labels}"), value));
+    }
+    out
+}
+
+fn counter_sum(fams: &std::collections::BTreeMap<String, Family>, name: &str) -> f64 {
+    let f = fams.get(name).unwrap_or_else(|| panic!("{name} missing"));
+    assert_eq!(f.kind, "counter", "{name}");
+    f.samples.iter().map(|(_, v)| v).sum()
+}
+
+/// Pull the `"trace_id":"…"` echo out of a JSON response body.
+fn trace_id_of(body: &str) -> String {
+    let at = body.find("\"trace_id\":\"").unwrap_or_else(|| panic!("no trace_id in {body}"));
+    let rest = &body[at + "\"trace_id\":\"".len()..];
+    rest[..rest.find('"').unwrap()].to_string()
+}
+
+/// Satellite: hammer `/fit` + `/predict` from several connections
+/// while scraping `/metrics`, then check the scrape parses as valid
+/// Prometheus text, counters are monotone between two scrapes,
+/// histograms are internally consistent, and every trace_id handed out
+/// resolves at `/trace/<id>` (or the sink honestly reports eviction).
+#[test]
+fn metrics_and_traces_under_concurrent_load() {
+    let _g = gate();
+    calars::obs::set_enabled(true);
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        batch_window_us: 100,
+        slow_ms: 0, // disabled: test latencies are noise
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+
+    // One model up front so /predict has a target.
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let model = client
+        .fit(&FitRequest { dataset: "tiny".into(), t: 6, ..Default::default() }, true)
+        .unwrap();
+    let dim = client.model_dim(model).unwrap();
+
+    let (_, first) = client.request("GET", "/metrics", "").unwrap();
+    let before = parse_prometheus(&first);
+
+    // Four worker connections interleaving fits and predictions, each
+    // collecting the trace ids echoed back.
+    let mut joins = Vec::new();
+    for w in 0..4u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || -> Vec<String> {
+            let mut c = ServeClient::connect(&addr).unwrap();
+            let mut ids = Vec::new();
+            for i in 0..6usize {
+                if i % 3 == 0 {
+                    let fit = FitRequest {
+                        dataset: "tiny".into(),
+                        t: 4 + (w as usize % 3),
+                        ..Default::default()
+                    };
+                    let (status, body) = c.request("POST", "/fit?wait=1", &fit.encode()).unwrap();
+                    assert_eq!(status, 200, "{body}");
+                    ids.push(trace_id_of(&body));
+                } else {
+                    let rows = vec![vec![0.25 * (w as f64) + i as f64; dim]];
+                    let req = PredictRequest { model, selector: Selector::Step(4), rows };
+                    let (status, body) = c.predict(&req).unwrap();
+                    assert_eq!(status, 200, "{body}");
+                    ids.push(trace_id_of(&body));
+                }
+                if i == 3 {
+                    // Scrapes interleave with the load.
+                    let (status, text) = c.request("GET", "/metrics", "").unwrap();
+                    assert_eq!(status, 200);
+                    parse_prometheus(&text); // must stay well-framed mid-load
+                }
+            }
+            ids
+        }));
+    }
+    let ids: Vec<String> = joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+    assert_eq!(ids.len(), 24);
+
+    let (_, second) = client.request("GET", "/metrics", "").unwrap();
+    let after = parse_prometheus(&second);
+
+    // Counters are monotone across scrapes and account for the load.
+    for name in [
+        "calars_http_requests_total",
+        "calars_engine_queries_total",
+        "calars_fit_jobs_total",
+    ] {
+        assert!(
+            counter_sum(&after, name) >= counter_sum(&before, name),
+            "{name} went backwards"
+        );
+    }
+    assert!(
+        counter_sum(&after, "calars_http_requests_total")
+            >= counter_sum(&before, "calars_http_requests_total") + 24.0,
+        "the load's requests must be counted"
+    );
+
+    // Histogram consistency: cumulative buckets, +Inf == _count.
+    let hist = after
+        .get("calars_http_request_seconds")
+        .expect("request latency histogram exported");
+    assert_eq!(hist.kind, "histogram");
+    let mut by_route: std::collections::BTreeMap<String, Vec<(f64, f64)>> = Default::default();
+    let mut counts: std::collections::BTreeMap<String, f64> = Default::default();
+    for (key, v) in &hist.samples {
+        let (name, labels) = key.split_once('|').unwrap();
+        let route = labels
+            .split(',')
+            .find(|kv| kv.starts_with("route="))
+            .unwrap_or("route=?")
+            .to_string();
+        if name.ends_with("_bucket") {
+            let le = labels.split("le=\"").nth(1).unwrap().trim_end_matches('"');
+            let le = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+            by_route.entry(route).or_default().push((le, *v));
+        } else if name.ends_with("_count") {
+            counts.insert(route, *v);
+        }
+    }
+    assert!(!by_route.is_empty(), "no latency buckets in {second}");
+    for (route, mut buckets) in by_route {
+        buckets.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in buckets.windows(2) {
+            assert!(w[0].1 <= w[1].1, "{route}: buckets not cumulative");
+        }
+        let inf = buckets.last().unwrap();
+        assert!(inf.0.is_infinite(), "{route}: no +Inf bucket");
+        assert_eq!(inf.1, counts[&route], "{route}: +Inf bucket != _count");
+    }
+
+    // The queue-wait histogram exists once fits have flowed through.
+    assert_eq!(
+        after.get("calars_fit_queue_wait_seconds").map(|f| f.kind.as_str()),
+        Some("histogram"),
+        "queue wait histogram exported"
+    );
+
+    // Every echoed trace id resolves to a chrome-trace document — or
+    // the sink honestly reports evictions.
+    let mut resolved = 0usize;
+    for id in &ids {
+        let (status, body) = client.request("GET", &format!("/trace/{id}"), "").unwrap();
+        if status == 200 {
+            assert!(body.contains("\"traceEvents\":["), "{body}");
+            resolved += 1;
+        } else {
+            assert_eq!(status, 404, "{body}");
+            assert!(
+                calars::obs::sink().stats().evicted > 0,
+                "404 for trace {id} without any reported eviction"
+            );
+        }
+    }
+    assert!(resolved > 0, "at least some traces must resolve");
+    // A real (non-warm-reused) fit's trace must carry the fit-phase
+    // spans, not just HTTP timing. t=10 is deeper than every stored
+    // path (the load fits at most t=6), so this fit cannot warm-reuse.
+    let deep = FitRequest { dataset: "tiny".into(), t: 10, ..Default::default() };
+    let (status, body) = client.request("POST", "/fit?wait=1", &deep.encode()).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let fit_trace = trace_id_of(&body);
+    let (status, body) = client.request("GET", &format!("/trace/{fit_trace}"), "").unwrap();
+    assert_eq!(status, 200, "a just-recorded trace must resolve: {body}");
+    for needle in ["\"cat\":\"Corr\"", "\"cat\":\"Update\"", "queue_wait"] {
+        assert!(body.contains(needle), "fit trace lacks {needle}: {body}");
+    }
+    assert!(
+        body.contains("gram_panel_hit") || body.contains("gram_panel_miss"),
+        "fit trace lacks Gram panel-store markers: {body}"
+    );
+
+    // Bad ids answer 4xx without wedging the connection.
+    let (status, _) = client.request("GET", "/trace/zzzz", "").unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
+
+    server.stop();
+}
+
+/// `/stats` and `/metrics` agree within one scrape pair on settled
+/// counters (no in-flight work): the same snapshot feeds both.
+#[test]
+fn stats_and_metrics_agree_when_idle() {
+    let _g = gate();
+    calars::obs::set_enabled(true);
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        slow_ms: 0,
+        ..Default::default()
+    })
+    .expect("server starts");
+    let mut client = ServeClient::connect(&server.addr_string()).unwrap();
+    client
+        .fit(&FitRequest { dataset: "tiny".into(), t: 4, ..Default::default() }, true)
+        .unwrap();
+
+    let (_, stats) = client.request("GET", "/stats", "").unwrap();
+    let (_, metrics) = client.request("GET", "/metrics", "").unwrap();
+    let fams = parse_prometheus(&metrics);
+
+    let grab = |key: &str| -> f64 {
+        let needle = format!("\"{key}\":");
+        let at = stats.find(&needle).unwrap_or_else(|| panic!("{key} missing in {stats}"))
+            + needle.len();
+        let rest = &stats[at..];
+        let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+        rest[..end].parse().unwrap()
+    };
+    // Fit jobs are settled (the wait=1 fit completed before the
+    // scrapes), so the queue counters cannot move between the two
+    // requests' snapshots.
+    let submitted = fams
+        .get("calars_fit_jobs_total")
+        .expect("fit jobs family")
+        .samples
+        .iter()
+        .find(|(k, _)| k.contains("state=\"submitted\""))
+        .map(|(_, v)| *v)
+        .unwrap();
+    assert_eq!(submitted, grab("submitted"), "stats vs metrics: submitted");
+    assert_eq!(
+        counter_sum(&fams, "calars_registry_inserted_total"),
+        grab("inserted"),
+        "stats vs metrics: registry inserts"
+    );
+    server.stop();
+}

@@ -2,8 +2,10 @@
 # CI for calars: format check, release build, test suite, rustdoc with
 # warnings denied, all five examples built AND executed, perf stage
 # (parallel-scaling bench + serving smoke, both in JSON mode, recorded
-# as BENCH_parallel.json / BENCH_serving.json), then a live
-# serve → fit → predict → shutdown smoke cycle (README §CI).
+# as BENCH_parallel.json / BENCH_serving.json), a live
+# serve → fit → predict → shutdown smoke cycle, and an observability
+# stage that benches serving with tracing off vs on and gates the p50
+# overhead at ≤ 5% (BENCH_obs.json) — README §CI.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -138,4 +140,72 @@ if ! wait "$SERVER_PID"; then
     echo "server exited nonzero:"; cat "$LOG"; exit 1
 fi
 trap - EXIT
+
+echo "== perf: observability overhead (tracing off vs on) =="
+# Two identical bench-serve runs against fresh --oneshot servers, one
+# with CALARS_TRACE=off and one with tracing on (the default). The
+# recorded p50 ratio gates the calars::obs promise: spans + metrics
+# cost ≤ 5% at the median. A 0.5 ms absolute floor on both sides keeps
+# sub-millisecond scheduler jitter from failing the gate spuriously on
+# a fast machine.
+OBS_PORT=$((PORT + 1))
+for MODE in off on; do
+    LOG="$(mktemp)"
+    CALARS_TRACE="$MODE" "$BIN" serve --port "$OBS_PORT" --oneshot --prefit tiny >"$LOG" 2>&1 &
+    SERVER_PID=$!
+    BENCH_PID=""
+    trap 'kill "$SERVER_PID" 2>/dev/null || true
+          [ -n "$BENCH_PID" ] && kill "$BENCH_PID" 2>/dev/null || true' EXIT
+    for _ in $(seq 1 100); do
+        if grep -q "listening on" "$LOG"; then break; fi
+        if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+            echo "obs server (trace=$MODE) died during startup:"; cat "$LOG"; exit 1
+        fi
+        sleep 0.1
+    done
+    grep -q "listening on" "$LOG" || { echo "obs server (trace=$MODE) never started:"; cat "$LOG"; exit 1; }
+    OBS_CMD=("$BIN" bench-serve --addr "127.0.0.1:$OBS_PORT" --requests 200 \
+             --concurrency 4 --rows 4 --json --shutdown)
+    if command -v timeout >/dev/null 2>&1; then
+        timeout 120 "${OBS_CMD[@]}" > "BENCH_obs_$MODE.json" &
+        BENCH_PID=$!
+    else
+        "${OBS_CMD[@]}" > "BENCH_obs_$MODE.json" &
+        BENCH_PID=$!
+    fi
+    if ! wait "$BENCH_PID"; then
+        echo "obs bench (trace=$MODE) failed or timed out"; cat "BENCH_obs_$MODE.json"; exit 1
+    fi
+    BENCH_PID=""
+    for _ in $(seq 1 100); do
+        kill -0 "$SERVER_PID" 2>/dev/null || break
+        sleep 0.1
+    done
+    kill "$SERVER_PID" 2>/dev/null || true
+    wait "$SERVER_PID" 2>/dev/null || true
+    trap - EXIT
+done
+
+p50_of() { awk 'match($0, /"p50_ms":[0-9.]+/)  { print substr($0, RSTART + 9,  RLENGTH - 9);  exit }' "$1"; }
+P50_OFF=$(p50_of BENCH_obs_off.json)
+P50_ON=$(p50_of BENCH_obs_on.json)
+WALL_ON=$(awk 'match($0, /"wall_ms":[0-9.]+/) { print substr($0, RSTART + 10, RLENGTH - 10); exit }' BENCH_obs_on.json)
+OBS_THREADS=$(awk 'match($0, /"threads":[0-9]+/) { print substr($0, RSTART + 10, RLENGTH - 10); exit }' BENCH_obs_on.json)
+if [ -z "$P50_OFF" ] || [ -z "$P50_ON" ]; then
+    echo "obs bench records lack a finite p50_ms (all requests errored?):"
+    cat BENCH_obs_off.json BENCH_obs_on.json
+    exit 1
+fi
+# speedup = off/on (≥ ~0.95 when the ≤5% overhead promise holds);
+# overhead_ratio = on/off is the gated quantity.
+RATIO=$(awk -v off="$P50_OFF" -v on="$P50_ON" 'BEGIN { printf "%.4f", (on + 0.5) / (off + 0.5) }')
+OBS_SPEEDUP=$(awk -v off="$P50_OFF" -v on="$P50_ON" 'BEGIN { printf "%.4f", (off + 0.5) / (on + 0.5) }')
+printf '{"bench":"serve_trace_overhead","threads":%s,"wall_ms":%s,"speedup":%s,"p50_off_ms":%s,"p50_on_ms":%s,"overhead_ratio":%s}\n' \
+    "${OBS_THREADS:-0}" "${WALL_ON:-0}" "$OBS_SPEEDUP" "$P50_OFF" "$P50_ON" "$RATIO" > BENCH_obs.json
+check_bench_json BENCH_obs.json
+echo "obs overhead: p50 ${P50_OFF}ms (off) vs ${P50_ON}ms (on) — ratio $RATIO"
+awk -v r="$RATIO" 'BEGIN {
+    if (r > 1.05) { printf "obs overhead gate: p50 on/off ratio %.4f > 1.05\n", r; exit 1 }
+}'
+
 echo "== ci OK =="
