@@ -1,0 +1,181 @@
+//! Batched multi-response fitting benchmark: one design matrix,
+//! `--k` LARS models, batched lockstep (`FitSpec::fit_batch`) vs the
+//! same k fits run sequentially — with the acceptance gates baked in:
+//!
+//! * a batch of ONE must be bit-identical to the single-response
+//!   `FitSpec::fit` (lars and lasso), and
+//! * the batched result must be bit-identical across pool thread
+//!   counts 1/2/4, and
+//! * the batched path must beat k-sequential by ≥2× at k=64,
+//!
+//! or the bench exits nonzero. `scripts/ci.sh` runs it with `--json`
+//! and captures stdout as BENCH_batch.json (schema per record:
+//! {bench, threads, wall_ms, speedup}).
+//!
+//! Run: `cargo bench --bench batch` (human table)
+//!      `cargo bench --bench batch -- --json [--k N] [--m N] [--n N] [--t N]`
+
+use calars::data::synthetic::SyntheticSpec;
+use calars::data::{datasets, Dataset};
+use calars::fit::{Algorithm, FitResult, FitSpec, Fitter, NoopObserver};
+use calars::metrics::{bench, black_box, fmt_secs};
+use calars::par::{self, ThreadPool};
+use calars::rng::Pcg64;
+
+const GATE_SPEEDUP: f64 = 2.0;
+
+struct Record {
+    bench: String,
+    threads: usize,
+    wall_ms: f64,
+    speedup: f64,
+}
+
+/// Parse `--name N` from the raw arg list, insisting on a positive
+/// value: a zero-sized batch or matrix is a usage error, not a bench.
+fn positive_arg(args: &[String], name: &str, default: usize) -> usize {
+    let Some(pos) = args.iter().position(|a| a == name) else {
+        return default;
+    };
+    let value = args
+        .get(pos + 1)
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    if value == 0 {
+        eprintln!("usage: cargo bench --bench batch -- [--json] [--k N] [--m N] [--n N] [--t N]");
+        let got = args.get(pos + 1).map_or("", |v| v.as_str());
+        eprintln!("  {name} must be a positive integer (got '{got}')");
+        std::process::exit(2);
+    }
+    value
+}
+
+fn responses(ds: &Dataset, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    let m = ds.a.nrows();
+    let mut rng = Pcg64::new(seed);
+    (0..k)
+        .map(|i| {
+            if i == 0 {
+                ds.b.clone()
+            } else {
+                (0..m).map(|_| rng.normal()).collect()
+            }
+        })
+        .collect()
+}
+
+/// Comparable identity of a fit: every output field that the lockstep
+/// core produces, with the floats as raw bit patterns.
+fn signature(fit: &FitResult) -> Vec<u64> {
+    let out = &fit.output;
+    let mut sig: Vec<u64> = vec![out.selected.len() as u64, out.cols_at_iter.len() as u64];
+    sig.extend(out.selected.iter().map(|&c| c as u64));
+    sig.extend(out.cols_at_iter.iter().map(|&c| c as u64));
+    sig.extend(out.residual_norms.iter().map(|r| r.to_bits()));
+    sig.extend(out.y.iter().map(|y| y.to_bits()));
+    sig
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let json = argv.iter().any(|a| a == "--json");
+    let k = positive_arg(&argv, "--k", 64);
+    let m = positive_arg(&argv, "--m", 1024);
+    let n = positive_arg(&argv, "--n", 2048);
+    let t = positive_arg(&argv, "--t", 8);
+
+    let spec = FitSpec::new(Algorithm::Lars).t(t);
+    let lasso = FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-6 }).t(t);
+    let mut records: Vec<Record> = Vec::new();
+    let mut failed = false;
+
+    // ── Gate 1: a batch of one is the single-response fit, bitwise ──
+    let tiny = datasets::tiny(7);
+    for (label, s) in [("lars", &spec), ("lasso", &lasso)] {
+        let solo = s.fit(&tiny.a, &tiny.b, &mut NoopObserver).expect("solo fit");
+        let batch = s.fit_batch(&tiny.a, std::slice::from_ref(&tiny.b)).expect("k=1 batch");
+        if signature(&batch.fits[0]) != signature(&solo) {
+            eprintln!("DIVERGENCE: k=1 {label} batch differs from FitSpec::fit");
+            failed = true;
+        }
+    }
+
+    // ── Gate 2: batched output is thread-count invariant ──
+    let panel = responses(&tiny, 5, 99);
+    let mut base_sig: Option<Vec<Vec<u64>>> = None;
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads, 64);
+        let sigs = par::with_pool(&pool, || {
+            let batch = spec.fit_batch(&tiny.a, &panel).expect("batch fit");
+            batch.fits.iter().map(signature).collect::<Vec<_>>()
+        });
+        match &base_sig {
+            None => base_sig = Some(sigs),
+            Some(base) => {
+                if &sigs != base {
+                    eprintln!("DIVERGENCE: batch output differs at threads={threads}");
+                    failed = true;
+                }
+            }
+        }
+    }
+
+    // ── Timing: batched lockstep vs k sequential fits ──
+    let ds = Dataset::from_synthetic(
+        "batch_bench",
+        &SyntheticSpec { m, n, density: 1.0, col_skew: 0.0, k_true: 2 * t, noise: 0.05 },
+        42,
+    );
+    let panel = responses(&ds, k, 1234);
+    if !json {
+        println!("# batched multi-response fitting (m={m} n={n} k={k} t={t})\n");
+    }
+
+    let batch_timing = bench(1, 3, || black_box(spec.fit_batch(&ds.a, &panel).expect("batch")));
+    let seq_timing = bench(1, 2, || {
+        panel
+            .iter()
+            .map(|b| black_box(spec.fit(&ds.a, b, &mut NoopObserver).expect("solo")))
+            .count()
+    });
+    let speedup = seq_timing.best / batch_timing.best.max(1e-12);
+    records.push(Record {
+        bench: format!("batch_seq_baseline_k{k}"),
+        threads: par::threads(),
+        wall_ms: seq_timing.best * 1e3,
+        speedup: 1.0,
+    });
+    records.push(Record {
+        bench: format!("batch_lars_k{k}"),
+        threads: par::threads(),
+        wall_ms: batch_timing.best * 1e3,
+        speedup,
+    });
+    if !json {
+        println!("## batch_lars_k{k}");
+        println!("  k-sequential {:>10}", fmt_secs(seq_timing.best));
+        println!("  batched      {:>10}  speedup {speedup:.2}x (gate ≥{GATE_SPEEDUP:.1}x)\n");
+    }
+
+    if json {
+        let body: Vec<String> = records
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"bench\":\"{}\",\"threads\":{},\"wall_ms\":{:.3},\"speedup\":{:.3}}}",
+                    r.bench, r.threads, r.wall_ms, r.speedup
+                )
+            })
+            .collect();
+        println!("[{}]", body.join(",\n "));
+    }
+
+    if speedup < GATE_SPEEDUP {
+        eprintln!("batched fitting speedup {speedup:.2}x is below the {GATE_SPEEDUP:.1}x gate");
+        failed = true;
+    }
+    if failed {
+        eprintln!("batch bench gates failed");
+        std::process::exit(1);
+    }
+}

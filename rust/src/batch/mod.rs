@@ -1,0 +1,1086 @@
+//! `calars::batch` — multi-response fitting: one design matrix,
+//! thousands of LARS models.
+//!
+//! Panel studies, multi-target screening, and per-gene/per-pixel
+//! regressions all fit the same `m × n` design against many response
+//! vectors. Fitting them one [`FitSpec::fit`] call at a time repeats
+//! the expensive part `k` times: every iteration of every model
+//! streams the full matrix once for the fused `u = A_I w` / `a = Aᵀu`
+//! step, and once more up front for the initial correlations
+//! `c = Aᵀb`. Those streams are memory-bound — the arithmetic per
+//! matrix element is tiny — so `k` sequential fits pay `k` full
+//! traversals of `A` per joint iteration while the cache line holding
+//! each element is hot enough to serve many models at once.
+//!
+//! [`FitSpec::fit_batch`] fixes that by fitting the responses in
+//! **lockstep**: all models advance through the same iteration
+//! together, and each per-model matrix pass is replaced by one
+//! *batched panel pass* over `A` that serves every still-active model
+//! from the same streamed rows ([`crate::kern::at_r_multi_panel`] /
+//! [`crate::kern::fused_step_multi_panel`]). Per-model bookkeeping —
+//! Cholesky updates, γ selection, coefficient updates — stays exactly
+//! the serial code path, so each model's mathematics is unchanged.
+//!
+//! # What is shared
+//!
+//! * **Matrix passes**: the initial `AᵀR` over the whole response
+//!   panel and one fused direction pass per joint iteration, instead
+//!   of `k` of each ([`SharedWork::batched_passes`] vs
+//!   [`SharedWork::sequential_passes`]).
+//! * **Column norms**: the degenerate-column screen runs once per
+//!   batch, not once per response, and records its norms in the
+//!   batch's panel store for any fallback fits to reuse.
+//! * **Gram panels**: per-model Gram blocks go through
+//!   [`crate::kern::cache::PanelStore`] — the serve layer's bound
+//!   store when one is installed, a batch-local store otherwise — so
+//!   models that select overlapping column sets reuse each other's
+//!   panels ([`SharedWork::gram_panel_hits`]).
+//! * **γ-candidate scans**: the per-model scans of one joint
+//!   iteration run under a single fork-join over the column range
+//!   (every chunk walks [`crate::kern::gamma_scan_range`], the same
+//!   loop body the serial scan uses).
+//!
+//! # Scheduling and determinism
+//!
+//! Responses are fitted in fixed chunks of [`RESPONSE_CHUNK`] models,
+//! scheduled across the [`crate::par`] pool with
+//! [`crate::par::run_tasks`] and recombined in ascending response
+//! order. The chunk size is a constant — never derived from the
+//! thread count — and the batched kernels chunk rows by the same
+//! grain formulas on any pool, so a batch's output is **bit-identical
+//! across `CALARS_THREADS`** (the `tests/batch.rs` property tests
+//! pin this for pools of 1, 2, and 4 workers).
+//!
+//! Two bit-level contracts, verified by `tests/batch.rs`:
+//!
+//! * a batch of one response is bit-identical to the single-response
+//!   [`FitSpec::fit`] for every algorithm (at `k = 1` the panel
+//!   kernels degenerate to the single-response kernels, same grain
+//!   and same summation order);
+//! * any batch is bit-identical to itself across thread counts.
+//!
+//! A batch with `k > 1` is *not* promised bit-identical to `k`
+//! separate fits: the batched row panels accumulate each model's
+//! partial sums under a row grain derived from the joint panel cost,
+//! which splits chunk boundaries differently than a solo fit. Each
+//! model still runs the identical per-iteration mathematics, so the
+//! results agree to kernel rounding (and selections virtually always
+//! match exactly).
+//!
+//! # Which algorithms batch
+//!
+//! [`Algorithm::Lars`] and [`Algorithm::LassoLars`] run the lockstep
+//! cores below. The simulated-cluster fitters (`Blars`, `TBlars`) and
+//! the greedy baselines (`ForwardSelection`, `Omp`) fall back to
+//! sequential per-response [`FitSpec::fit`] calls inside the same
+//! response-chunk scheduling — they still share the panel store and
+//! the column-norm screen, just not the matrix passes.
+//!
+//! ```no_run
+//! use calars::data::datasets;
+//! use calars::fit::{Algorithm, FitSpec};
+//!
+//! let ds = datasets::tiny(42);
+//! let responses: Vec<Vec<f64>> = (0..64).map(|_| ds.b.clone()).collect();
+//! let batch = FitSpec::new(Algorithm::Lars).t(8).fit_batch(&ds.a, &responses).unwrap();
+//! assert_eq!(batch.fits.len(), 64);
+//! println!("shared passes saved: {}", batch.shared.passes_saved());
+//! ```
+
+use crate::error::{Error, Result};
+use crate::fit::{Algorithm, FitResult, FitSpec, Fitter, NoopObserver};
+use crate::kern;
+use crate::kern::cache::PanelStore;
+use crate::lars::lasso_lars::{Breakpoint, LassoFit, LassoPath};
+use crate::lars::{LarsOutput, StopReason};
+use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
+use crate::linalg::{dot, norm2, Cholesky, DenseMatrix, Matrix};
+use crate::obs::{phase_span, Phase};
+use crate::par;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Responses fitted per lockstep chunk. A constant (never derived
+/// from the thread count) so the chunk decomposition — and therefore
+/// every batched panel shape — is a pure function of the batch size.
+/// Eight keeps the per-chunk working set (eight residual/correlation
+/// panels) inside L2 while amortizing each streamed row of `A` across
+/// eight models.
+pub const RESPONSE_CHUNK: usize = 8;
+
+/// Upper bound on the number of responses per batch.
+pub const MAX_BATCH: usize = 1 << 20;
+
+/// Byte bound for the batch-local Gram panel store used when the
+/// caller has not bound one (CLI / bench batches).
+const BATCH_PANEL_BYTES: usize = 32 << 20;
+
+/// Shared-work accounting for one batch: what the lockstep cores
+/// amortized across the responses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SharedWork {
+    /// Responses fitted in this batch.
+    pub responses: usize,
+    /// Gram-panel cache hits recorded while the batch ran (cross-model
+    /// panel reuse; counted on the serve layer's bound store when one
+    /// is installed, on the batch-local store otherwise).
+    pub gram_panel_hits: u64,
+    /// Gram-panel cache misses recorded while the batch ran.
+    pub gram_panel_misses: u64,
+    /// Full passes over `A` the lockstep cores actually executed
+    /// (one batched `AᵀR` plus one batched fused step per joint
+    /// iteration, each serving every still-active model).
+    pub batched_passes: u64,
+    /// Full passes over `A` that independent single-response fits
+    /// would have executed for the same per-model work.
+    pub sequential_passes: u64,
+}
+
+impl SharedWork {
+    /// Matrix passes the batch avoided relative to sequential fitting.
+    pub fn passes_saved(&self) -> u64 {
+        self.sequential_passes.saturating_sub(self.batched_passes)
+    }
+}
+
+/// What [`FitSpec::fit_batch`] returns: one [`FitResult`] per
+/// response (same order as the input panel) plus the batch-level
+/// shared-work accounting and wall time.
+#[derive(Clone, Debug)]
+pub struct BatchFitResult {
+    /// Per-response results, aligned with the input response order.
+    pub fits: Vec<FitResult>,
+    /// What the batch amortized across the responses.
+    pub shared: SharedWork,
+    /// Wall-clock seconds for the whole batch (the per-response
+    /// `wall_secs` inside [`Self::fits`] are the amortized per-model
+    /// share of their chunk).
+    pub wall_secs: f64,
+}
+
+/// Matrix-pass counters threaded through the lockstep cores.
+#[derive(Clone, Copy, Debug, Default)]
+struct PassCounts {
+    batched: u64,
+    sequential_equiv: u64,
+}
+
+impl FitSpec {
+    /// Fit every response in `responses` against `a` under this spec,
+    /// sharing matrix passes, column norms, and Gram panels across the
+    /// batch (see the [module docs](self) for what is shared and the
+    /// bit-identity contracts). Results come back in input order; the
+    /// first invalid response fails the whole batch with a typed
+    /// [`crate::error::ErrorKind::InvalidSpec`] error before any
+    /// fitting starts.
+    pub fn fit_batch(&self, a: &Matrix, responses: &[Vec<f64>]) -> Result<BatchFitResult> {
+        self.validate()?;
+        let m = a.nrows();
+        let n = a.ncols();
+        if m < 2 || n == 0 {
+            return Err(Error::invalid_spec(format!(
+                "matrix must have at least 2 rows and 1 column (got {m}×{n})"
+            )));
+        }
+        if responses.is_empty() {
+            return Err(Error::invalid_spec("batch must contain at least one response"));
+        }
+        if responses.len() > MAX_BATCH {
+            return Err(Error::invalid_spec(format!(
+                "batch holds {} responses (max {})",
+                responses.len(),
+                MAX_BATCH
+            )));
+        }
+        for (k, b) in responses.iter().enumerate() {
+            if b.len() != m {
+                return Err(Error::invalid_spec(format!(
+                    "response {k}: length {} does not match the matrix row count {m}",
+                    b.len()
+                )));
+            }
+            if let Some(i) = b.iter().position(|v| !v.is_finite()) {
+                return Err(Error::invalid_spec(format!(
+                    "response {k} contains a non-finite value at row {i} ({})",
+                    b[i]
+                )));
+            }
+        }
+
+        // One panel store for the whole batch: the serve layer's bound
+        // store when one is installed for this shape, a batch-local
+        // store otherwise. Either way the store carries the dataset's
+        // column norms, so the degenerate-column screen runs once per
+        // batch and fallback fits skip their own O(nnz) sweep.
+        let store = match kern::cache::bound_for((m, n)) {
+            Some(s) => s,
+            None => Arc::new(PanelStore::new((m, n), BATCH_PANEL_BYTES)),
+        };
+        if store.norms().is_none() {
+            store.set_norms(Arc::new(a.col_norms()));
+        }
+        let col_norms = match store.norms() {
+            Some(norms) if norms.len() == n => norms,
+            _ => Arc::new(a.col_norms()),
+        };
+        if let Some(j) = col_norms.iter().position(|v| !v.is_finite() || *v == 0.0) {
+            return Err(Error::invalid_spec(format!(
+                "column {j} is degenerate (norm {}): all-zero or non-finite \
+                 columns cannot enter a LARS path",
+                col_norms[j]
+            )));
+        }
+
+        let before = store.counters();
+        let t0 = Instant::now();
+        let batch_span = crate::obs::span("batch_fit");
+
+        // Fixed response chunks (pure in the batch size), scheduled on
+        // the pool and recombined in ascending response order.
+        let k_total = responses.len();
+        let ranges: Vec<(usize, usize)> = (0..k_total)
+            .step_by(RESPONSE_CHUNK)
+            .map(|lo| (lo, (lo + RESPONSE_CHUNK).min(k_total)))
+            .collect();
+        let tasks: Vec<_> = ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                let store = Arc::clone(&store);
+                move || {
+                    // Pool workers carry no ambient store binding;
+                    // rebind the batch's store so every chunk shares
+                    // one panel cache (values are deterministic, so
+                    // the cache never changes bits — only work).
+                    kern::cache::with_store(&store, || fit_chunk(self, a, &responses[lo..hi]))
+                }
+            })
+            .collect();
+        let chunk_results = par::run_tasks(tasks);
+        drop(batch_span);
+
+        let mut fits = Vec::with_capacity(k_total);
+        let mut passes = PassCounts::default();
+        for (chunk, p) in chunk_results {
+            passes.batched += p.batched;
+            passes.sequential_equiv += p.sequential_equiv;
+            for r in chunk {
+                fits.push(r?);
+            }
+        }
+        let after = store.counters();
+        let shared = SharedWork {
+            responses: k_total,
+            gram_panel_hits: after.hits.saturating_sub(before.hits),
+            gram_panel_misses: after.misses.saturating_sub(before.misses),
+            batched_passes: passes.batched,
+            sequential_passes: passes.sequential_equiv,
+        };
+        Ok(BatchFitResult { fits, shared, wall_secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+/// Fit one response chunk: lockstep for the batching-capable
+/// algorithms, sequential per-response [`Fitter::fit`] otherwise.
+fn fit_chunk(
+    spec: &FitSpec,
+    a: &Matrix,
+    responses: &[Vec<f64>],
+) -> (Vec<Result<FitResult>>, PassCounts) {
+    let mut passes = PassCounts::default();
+    let t0 = Instant::now();
+    let results: Vec<Result<FitResult>> = match spec.algorithm {
+        Algorithm::Lars => {
+            let outs = lars_lockstep(a, responses, spec.t, spec.tol, &mut passes);
+            let wall = t0.elapsed().as_secs_f64() / responses.len().max(1) as f64;
+            outs.into_iter()
+                .map(|output| {
+                    Ok(FitResult { output, coefs: None, lasso: None, sim: None, wall_secs: wall })
+                })
+                .collect()
+        }
+        Algorithm::LassoLars { lambda_min } => {
+            let fits = lasso_lockstep(a, responses, spec.t, lambda_min, spec.tol, &mut passes);
+            let wall = t0.elapsed().as_secs_f64() / responses.len().max(1) as f64;
+            fits.into_iter()
+                .map(|fit| {
+                    Ok(FitResult {
+                        output: fit.out,
+                        coefs: None,
+                        lasso: Some(fit.path),
+                        sim: None,
+                        wall_secs: wall,
+                    })
+                })
+                .collect()
+        }
+        _ => responses.iter().map(|b| spec.fit(a, b, &mut NoopObserver)).collect(),
+    };
+    (results, passes)
+}
+
+/// Per-model state for the lockstep LARS core — exactly the locals of
+/// `lars::serial::fit_observed` (with `b = 1`), lifted into a struct
+/// so the batched passes can borrow each model's panels disjointly.
+struct LarsSt {
+    b: Vec<f64>,
+    y: Vec<f64>,
+    r: Vec<f64>,
+    c: Vec<f64>,
+    u: Vec<f64>,
+    av: Vec<f64>,
+    residual_norms: Vec<f64>,
+    cols_at_iter: Vec<usize>,
+    in_model: Vec<bool>,
+    selected: Vec<usize>,
+    rank_excluded: usize,
+    chol: Cholesky,
+    ck: f64,
+    s: Vec<f64>,
+    q: Vec<f64>,
+    w: Vec<f64>,
+    h: f64,
+    gamma_full: f64,
+    stepping: bool,
+    done: Option<StopReason>,
+}
+
+impl LarsSt {
+    fn new(b: &[f64], m: usize, n: usize) -> Self {
+        LarsSt {
+            b: b.to_vec(),
+            y: vec![0.0; m],
+            r: b.to_vec(),
+            c: vec![0.0; n],
+            u: vec![0.0; m],
+            av: vec![0.0; n],
+            residual_norms: Vec::new(),
+            cols_at_iter: Vec::new(),
+            in_model: vec![false; n],
+            selected: Vec::new(),
+            rank_excluded: 0,
+            chol: Cholesky::empty(),
+            ck: 0.0,
+            s: Vec::new(),
+            q: Vec::new(),
+            w: Vec::new(),
+            h: 0.0,
+            gamma_full: 0.0,
+            stepping: false,
+            done: None,
+        }
+    }
+
+    fn finish(&mut self, stop: StopReason) {
+        self.done = Some(stop);
+        self.stepping = false;
+    }
+}
+
+/// Lockstep LARS (`b = 1`): every model runs the per-iteration
+/// mathematics of `lars::serial::fit_observed` unchanged, while the
+/// initial correlations, the fused direction pass, and the γ scans
+/// of one joint iteration are batched across the still-active models.
+fn lars_lockstep(
+    a: &Matrix,
+    responses: &[Vec<f64>],
+    t_req: usize,
+    tol: f64,
+    passes: &mut PassCounts,
+) -> Vec<LarsOutput> {
+    let m = a.nrows();
+    let n = a.ncols();
+    let t = t_req.min(m.min(n));
+    let mut sts: Vec<LarsSt> = responses.iter().map(|b| LarsSt::new(b, m, n)).collect();
+
+    // Batched initial correlations: C = AᵀR over the whole panel.
+    {
+        let mut sp = phase_span(Phase::Corr);
+        sp.flops(2 * (sts.len() as u64) * (m as u64) * (n as u64));
+        let mut rs: Vec<&[f64]> = Vec::with_capacity(sts.len());
+        let mut cs: Vec<&mut [f64]> = Vec::with_capacity(sts.len());
+        for st in sts.iter_mut() {
+            let LarsSt { r, c, .. } = st;
+            rs.push(r);
+            cs.push(c);
+        }
+        a.at_r_multi(&rs, &mut cs);
+    }
+    passes.batched += 1;
+    passes.sequential_equiv += sts.len() as u64;
+
+    // Per-model initial block selection + Cholesky seed (serial
+    // steps 3-5, one model at a time).
+    for st in sts.iter_mut() {
+        st.residual_norms.push(norm2(&st.r));
+        st.cols_at_iter.push(0);
+        let b0 = 1usize.min(t.max(1));
+        let sel_span = phase_span(Phase::Select);
+        let mut block = argmax_b_by(n, b0, |j| st.c[j].abs());
+        block.sort_unstable();
+        drop(sel_span);
+        if block.iter().all(|&j| st.c[j].abs() <= tol) {
+            st.finish(StopReason::Saturated);
+            continue;
+        }
+        let g0 = {
+            let mut sp = phase_span(Phase::Gram);
+            sp.flops(2 * (m as u64) * (block.len() as u64) * (block.len() as u64));
+            a.gram_block(&block, &block)
+        };
+        let chol_span = phase_span(Phase::Cholesky);
+        let admitted = st.chol.append_block_graceful(&DenseMatrix::zeros(0, block.len()), &g0);
+        drop(chol_span);
+        st.rank_excluded += block.len() - admitted.len();
+        for &row in &admitted {
+            st.selected.push(block[row]);
+        }
+        for &j in &block {
+            st.in_model[j] = true;
+        }
+        if st.selected.is_empty() {
+            st.finish(StopReason::RankDeficient);
+            continue;
+        }
+        st.ck = st.selected.iter().map(|&j| st.c[j].abs()).fold(f64::INFINITY, f64::min);
+    }
+
+    loop {
+        // Per-model stop checks + equiangular solve (serial steps 7-8).
+        let mut stepping = 0usize;
+        for st in sts.iter_mut() {
+            st.stepping = false;
+            if st.done.is_some() {
+                continue;
+            }
+            if st.selected.len() >= t {
+                st.finish(StopReason::TargetReached);
+                continue;
+            }
+            if st.ck <= tol {
+                st.finish(StopReason::Saturated);
+                continue;
+            }
+            let solve_span = phase_span(Phase::Solve);
+            let sq = {
+                let LarsSt { s, q, chol, selected, c, .. } = &mut *st;
+                s.clear();
+                s.extend(selected.iter().map(|&j| c[j]));
+                chol.solve_into(s, q);
+                dot(s, q)
+            };
+            drop(solve_span);
+            if !(sq.is_finite() && sq > 0.0) {
+                st.finish(StopReason::RankDeficient);
+                continue;
+            }
+            let h = 1.0 / sq.sqrt();
+            {
+                let LarsSt { q, w, .. } = &mut *st;
+                w.clear();
+                w.extend(q.iter().map(|qi| qi * h));
+            }
+            st.h = h;
+            st.gamma_full = 1.0 / h;
+            st.stepping = true;
+            stepping += 1;
+        }
+        if stepping == 0 {
+            break;
+        }
+
+        // Batched fused step (serial steps 10-11): one pass over `A`
+        // serves every stepping model.
+        {
+            let mut sp = phase_span(Phase::DirApply);
+            let sel_sum: u64 =
+                sts.iter().filter(|st| st.stepping).map(|st| st.selected.len() as u64).sum();
+            sp.flops(2 * (m as u64) * (sel_sum + stepping as u64 * n as u64));
+            let mut cols: Vec<&[usize]> = Vec::with_capacity(stepping);
+            let mut ws: Vec<&[f64]> = Vec::with_capacity(stepping);
+            let mut us: Vec<&mut [f64]> = Vec::with_capacity(stepping);
+            let mut avs: Vec<&mut [f64]> = Vec::with_capacity(stepping);
+            for st in sts.iter_mut().filter(|st| st.stepping) {
+                let LarsSt { selected, w, u, av, .. } = st;
+                cols.push(selected);
+                ws.push(w);
+                us.push(u);
+                avs.push(av);
+            }
+            a.fused_step_multi(&cols, &ws, &mut us, &mut avs);
+        }
+        passes.batched += 1;
+        passes.sequential_equiv += stepping as u64;
+
+        // Batched γ scans (serial step 12): one fork-join over the
+        // column range; each chunk walks `kern::gamma_scan_range` for
+        // every stepping model, and chunk results concatenate in
+        // ascending order — per model this is bit- and order-identical
+        // to the serial `gamma_candidates` scan.
+        let gamma_span = phase_span(Phase::GammaStep);
+        let cands: Vec<Vec<(usize, f64)>> = {
+            let scans: Vec<(&[bool], &[f64], &[f64], f64, f64, f64)> = sts
+                .iter()
+                .filter(|st| st.stepping)
+                .map(|st| {
+                    (
+                        st.in_model.as_slice(),
+                        st.c.as_slice(),
+                        st.av.as_slice(),
+                        st.ck,
+                        st.h,
+                        st.gamma_full,
+                    )
+                })
+                .collect();
+            let per_chunk = par::map_chunks(n, par::min_chunk(), |lo, hi| {
+                scans
+                    .iter()
+                    .map(|&(in_model, c, av, ck, h, gf)| {
+                        let mut loc: Vec<(usize, f64)> = Vec::new();
+                        kern::gamma_scan_range(lo, hi, in_model, c, av, ck, h, gf, &mut loc);
+                        loc
+                    })
+                    .collect::<Vec<_>>()
+            });
+            let mut cands: Vec<Vec<(usize, f64)>> = vec![Vec::new(); scans.len()];
+            for chunk in per_chunk {
+                for (mi, loc) in chunk.into_iter().enumerate() {
+                    cands[mi].extend(loc);
+                }
+            }
+            cands
+        };
+        drop(gamma_span);
+
+        // Per-model γ pick, update, and Cholesky extension (serial
+        // steps 13-23, verbatim).
+        let mut ci = 0usize;
+        for st in sts.iter_mut().filter(|st| st.stepping) {
+            let cand = &cands[ci];
+            ci += 1;
+            let remaining = t - st.selected.len();
+            let bsz = 1usize.min(remaining);
+            let (gamma, new_block): (f64, Vec<usize>) = if cand.len() >= bsz && bsz > 0 {
+                let picks = argmin_b_by(cand.len(), bsz, |i| cand[i].1);
+                let gamma = picks.iter().map(|&i| cand[i].1).fold(0.0_f64, f64::max);
+                let mut block: Vec<usize> = picks.iter().map(|&i| cand[i].0).collect();
+                block.sort_unstable();
+                (gamma, block)
+            } else {
+                let mut block: Vec<usize> = cand.iter().map(|&(j, _)| j).collect();
+                block.sort_unstable();
+                (st.gamma_full, block)
+            };
+
+            let mut update_span = phase_span(Phase::Update);
+            update_span.flops(4 * m as u64 + 2 * n as u64);
+            let h = st.h;
+            let shrink = 1.0 - gamma * h;
+            {
+                let LarsSt { b, y, r, u, c, av, in_model, .. } = &mut *st;
+                for i in 0..m {
+                    y[i] += gamma * u[i];
+                    r[i] = b[i] - y[i];
+                }
+                for j in 0..n {
+                    if in_model[j] {
+                        c[j] *= shrink;
+                    } else {
+                        c[j] -= gamma * av[j];
+                    }
+                }
+            }
+            st.ck *= shrink;
+            st.residual_norms.push(norm2(&st.r));
+            drop(update_span);
+
+            let hit_full_step = new_block.is_empty() || gamma >= st.gamma_full * (1.0 - 1e-12);
+
+            if !new_block.is_empty() {
+                let (gib, gbb) = {
+                    let mut sp = phase_span(Phase::Gram);
+                    let k = st.selected.len() as u64;
+                    let bn = new_block.len() as u64;
+                    sp.flops(2 * (m as u64) * bn * (k + bn));
+                    (a.gram_block(&st.selected, &new_block), a.gram_block(&new_block, &new_block))
+                };
+                let chol_span = phase_span(Phase::Cholesky);
+                let admitted = st.chol.append_block_graceful(&gib, &gbb);
+                drop(chol_span);
+                st.rank_excluded += new_block.len() - admitted.len();
+                for &row in &admitted {
+                    st.selected.push(new_block[row]);
+                }
+                for &j in &new_block {
+                    st.in_model[j] = true;
+                }
+                let refreshed =
+                    st.selected.iter().map(|&j| st.c[j].abs()).fold(f64::INFINITY, f64::min);
+                st.ck = refreshed.max(st.ck);
+            }
+            st.cols_at_iter.push(st.selected.len());
+
+            if hit_full_step {
+                let reason = if st.rank_excluded > 0
+                    && st.selected.len() < t
+                    && st.selected.len() + st.rank_excluded >= t
+                {
+                    StopReason::RankDeficient
+                } else {
+                    StopReason::Saturated
+                };
+                st.finish(reason);
+            }
+        }
+    }
+
+    sts.into_iter()
+        .map(|mut st| {
+            if *st.cols_at_iter.last().unwrap() != st.selected.len() {
+                st.cols_at_iter.push(st.selected.len());
+            }
+            LarsOutput {
+                selected: st.selected,
+                residual_norms: st.residual_norms,
+                cols_at_iter: st.cols_at_iter,
+                y: st.y,
+                stop: st.done.unwrap_or(StopReason::Saturated),
+            }
+        })
+        .collect()
+}
+
+/// Per-model state for the lockstep LASSO-LARS core — the locals of
+/// `lars::lasso_lars::fit_observed`, lifted into a struct.
+struct LassoSt {
+    b: Vec<f64>,
+    x: Vec<f64>,
+    active: Vec<usize>,
+    order: Vec<usize>,
+    order_at_last_bp: Vec<usize>,
+    breakpoints: Vec<Breakpoint>,
+    drops: usize,
+    r: Vec<f64>,
+    c: Vec<f64>,
+    u: Vec<f64>,
+    av: Vec<f64>,
+    w: Vec<f64>,
+    ck: f64,
+    h: f64,
+    gamma_full: f64,
+    stepping: bool,
+    done: Option<StopReason>,
+}
+
+impl LassoSt {
+    fn new(b: &[f64], m: usize, n: usize) -> Self {
+        LassoSt {
+            b: b.to_vec(),
+            x: vec![0.0; n],
+            active: Vec::new(),
+            order: Vec::new(),
+            order_at_last_bp: Vec::new(),
+            breakpoints: Vec::new(),
+            drops: 0,
+            r: b.to_vec(),
+            c: vec![0.0; n],
+            u: vec![0.0; m],
+            av: vec![0.0; n],
+            w: Vec::new(),
+            ck: 0.0,
+            h: 0.0,
+            gamma_full: 0.0,
+            stepping: false,
+            done: None,
+        }
+    }
+
+    fn finish(&mut self, stop: StopReason) {
+        self.done = Some(stop);
+        self.stepping = false;
+    }
+}
+
+/// Lockstep LASSO-LARS: every model runs the per-event mathematics of
+/// `lars::lasso_lars::fit_observed` unchanged (fresh correlations and
+/// a from-scratch Gram factorization per breakpoint event — it is the
+/// reference implementation), with the per-event `AᵀR` and the fused
+/// direction pass batched across the still-running models.
+fn lasso_lockstep(
+    a: &Matrix,
+    responses: &[Vec<f64>],
+    t_req: usize,
+    lambda_min: f64,
+    tol: f64,
+    passes: &mut PassCounts,
+) -> Vec<LassoFit> {
+    let m = a.nrows();
+    let n = a.ncols();
+    let max_active = t_req.min(m.min(n));
+    let max_events = 8 * max_active + 16;
+    let mut sts: Vec<LassoSt> = responses.iter().map(|b| LassoSt::new(b, m, n)).collect();
+
+    for _event in 0..max_events {
+        // Batched fresh correlations for every still-running model.
+        {
+            let mut running = 0usize;
+            let mut rs: Vec<&[f64]> = Vec::with_capacity(sts.len());
+            let mut cs: Vec<&mut [f64]> = Vec::with_capacity(sts.len());
+            for st in sts.iter_mut() {
+                if st.done.is_some() {
+                    continue;
+                }
+                running += 1;
+                let LassoSt { r, c, .. } = st;
+                rs.push(r);
+                cs.push(c);
+            }
+            if running == 0 {
+                break;
+            }
+            let mut sp = phase_span(Phase::Corr);
+            sp.flops(2 * (running as u64) * (m as u64) * (n as u64));
+            a.at_r_multi(&rs, &mut cs);
+            passes.batched += 1;
+            passes.sequential_equiv += running as u64;
+        }
+
+        // Per-model activation + equiangular solve (reference
+        // implementation, one model at a time).
+        let mut stepping = 0usize;
+        for st in sts.iter_mut() {
+            st.stepping = false;
+            if st.done.is_some() {
+                continue;
+            }
+            let ck = st.c.iter().fold(0.0_f64, |mx, &v| mx.max(v.abs()));
+            st.ck = ck;
+            if ck <= lambda_min.max(tol) {
+                st.finish(StopReason::Saturated);
+                continue;
+            }
+            if st.breakpoints.is_empty() {
+                st.breakpoints.push(Breakpoint {
+                    lambda: ck,
+                    support: Vec::new(),
+                    x: st.x.clone(),
+                    residual_norm: norm2(&st.r),
+                });
+            }
+            {
+                let LassoSt { active, order, c, .. } = &mut *st;
+                for j in 0..n {
+                    if !active.contains(&j) && c[j].abs() >= ck * (1.0 - 1e-9) {
+                        active.push(j);
+                        order.push(j);
+                    }
+                }
+                active.sort_unstable();
+            }
+            if st.active.len() > max_active {
+                st.finish(StopReason::TargetReached);
+                continue;
+            }
+            let s: Vec<f64> = st.active.iter().map(|&j| st.c[j]).collect();
+            let g = {
+                let mut sp = phase_span(Phase::Gram);
+                let k = st.active.len() as u64;
+                sp.flops(2 * (m as u64) * k * k);
+                a.gram_block(&st.active, &st.active)
+            };
+            let chol_span = phase_span(Phase::Cholesky);
+            let factored = Cholesky::factor(&g);
+            drop(chol_span);
+            let Ok(chol) = factored else {
+                st.finish(StopReason::RankDeficient);
+                continue;
+            };
+            let q = chol.solve(&s);
+            let sq: f64 = s.iter().zip(&q).map(|(si, qi)| si * qi).sum();
+            if !(sq.is_finite() && sq > 0.0) {
+                st.finish(StopReason::RankDeficient);
+                continue;
+            }
+            let h = 1.0 / sq.sqrt();
+            st.w = q.iter().map(|qi| qi * h).collect();
+            st.h = h;
+            st.gamma_full = 1.0 / h;
+            st.stepping = true;
+            stepping += 1;
+        }
+        if stepping == 0 {
+            continue;
+        }
+
+        // Batched fused step across the stepping models.
+        {
+            let mut sp = phase_span(Phase::DirApply);
+            let sel_sum: u64 =
+                sts.iter().filter(|st| st.stepping).map(|st| st.active.len() as u64).sum();
+            sp.flops(2 * (m as u64) * (sel_sum + stepping as u64 * n as u64));
+            let mut cols: Vec<&[usize]> = Vec::with_capacity(stepping);
+            let mut ws: Vec<&[f64]> = Vec::with_capacity(stepping);
+            let mut us: Vec<&mut [f64]> = Vec::with_capacity(stepping);
+            let mut avs: Vec<&mut [f64]> = Vec::with_capacity(stepping);
+            for st in sts.iter_mut().filter(|st| st.stepping) {
+                let LassoSt { active, w, u, av, .. } = st;
+                cols.push(active);
+                ws.push(w);
+                us.push(u);
+                avs.push(av);
+            }
+            a.fused_step_multi(&cols, &ws, &mut us, &mut avs);
+        }
+        passes.batched += 1;
+        passes.sequential_equiv += stepping as u64;
+
+        // Per-model γ scans, step, drop handling, and breakpoint
+        // recording (reference implementation, verbatim).
+        for st in sts.iter_mut().filter(|st| st.stepping) {
+            let ck = st.ck;
+            let h = st.h;
+            let gamma_full = st.gamma_full;
+            let gamma_span = phase_span(Phase::GammaStep);
+            let (gamma_add, gamma_drop, drop_pos) = {
+                let LassoSt { active, c, av, w, x, .. } = &mut *st;
+                let mut gamma_add = gamma_full;
+                for j in 0..n {
+                    if active.binary_search(&j).is_ok() {
+                        continue;
+                    }
+                    let g1 = (ck - c[j]) / (ck * h - av[j]);
+                    let g2 = (ck + c[j]) / (ck * h + av[j]);
+                    if let Some(g) = min_positive2(g1, g2) {
+                        if g < gamma_add {
+                            gamma_add = g;
+                        }
+                    }
+                }
+                let mut gamma_drop = f64::INFINITY;
+                let mut drop_pos: Option<usize> = None;
+                for (k, &j) in active.iter().enumerate() {
+                    if w[k] != 0.0 {
+                        let g = -x[j] / w[k];
+                        if g > tol && g < gamma_drop {
+                            gamma_drop = g;
+                            drop_pos = Some(k);
+                        }
+                    }
+                }
+                (gamma_add, gamma_drop, drop_pos)
+            };
+            let gamma = gamma_add.min(gamma_drop);
+            drop(gamma_span);
+
+            let update_span = phase_span(Phase::Update);
+            {
+                let LassoSt { active, w, x, r, u, .. } = &mut *st;
+                for (k, &j) in active.iter().enumerate() {
+                    x[j] += gamma * w[k];
+                }
+                for i in 0..m {
+                    r[i] -= gamma * u[i];
+                }
+            }
+            if gamma_drop < gamma_add {
+                let kpos = drop_pos.unwrap();
+                let LassoSt { active, x, order, drops, .. } = &mut *st;
+                let j = active.remove(kpos);
+                x[j] = 0.0;
+                if let Some(pos) = order.iter().position(|&v| v == j) {
+                    order.remove(pos);
+                }
+                *drops += 1;
+            }
+            let lambda = ck * (1.0 - gamma * h);
+            {
+                let LassoSt { breakpoints, active, x, r, order, order_at_last_bp, .. } =
+                    &mut *st;
+                breakpoints.push(Breakpoint {
+                    lambda: lambda.max(0.0),
+                    support: active.clone(),
+                    x: x.clone(),
+                    residual_norm: norm2(r),
+                });
+                order_at_last_bp.clone_from(order);
+            }
+            drop(update_span);
+
+            if gamma >= gamma_full * (1.0 - 1e-12) {
+                st.finish(StopReason::Saturated);
+            }
+        }
+    }
+
+    sts.into_iter()
+        .map(|st| {
+            let stop = st.done.unwrap_or(StopReason::PoolExhausted);
+            let (residual_norms, cols_at_iter) = if st.breakpoints.is_empty() {
+                (vec![norm2(&st.b)], vec![0usize])
+            } else {
+                (
+                    st.breakpoints.iter().map(|bp| bp.residual_norm).collect(),
+                    st.breakpoints.iter().map(|bp| bp.support.len()).collect(),
+                )
+            };
+            let y: Vec<f64> = st.b.iter().zip(&st.r).map(|(bi, ri)| bi - ri).collect();
+            let out = LarsOutput {
+                selected: st.order_at_last_bp,
+                residual_norms,
+                cols_at_iter,
+                y,
+                stop,
+            };
+            LassoFit { out, path: LassoPath { breakpoints: st.breakpoints, drops: st.drops } }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::rng::Pcg64;
+
+    fn responses(ds: &datasets::Dataset, k: usize, seed: u64) -> Vec<Vec<f64>> {
+        let m = ds.a.nrows();
+        let mut rng = Pcg64::new(seed);
+        (0..k)
+            .map(|i| {
+                if i == 0 {
+                    ds.b.clone()
+                } else {
+                    (0..m).map(|_| rng.normal()).collect()
+                }
+            })
+            .collect()
+    }
+
+    fn assert_fit_bits_equal(batch: &FitResult, solo: &FitResult, what: &str) {
+        assert_eq!(batch.output.selected, solo.output.selected, "{what}: selected");
+        assert_eq!(batch.output.cols_at_iter, solo.output.cols_at_iter, "{what}: cols");
+        assert_eq!(batch.output.stop, solo.output.stop, "{what}: stop");
+        assert_eq!(
+            batch.output.residual_norms.len(),
+            solo.output.residual_norms.len(),
+            "{what}: residual count"
+        );
+        for (x, y) in batch.output.residual_norms.iter().zip(&solo.output.residual_norms) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: residual bits");
+        }
+        for (x, y) in batch.output.y.iter().zip(&solo.output.y) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: y bits");
+        }
+    }
+
+    #[test]
+    fn k1_batch_bit_identical_to_single_fit() {
+        let ds = datasets::tiny(11);
+        for spec in [
+            FitSpec::new(Algorithm::Lars).t(10),
+            FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-6 }).t(10),
+            FitSpec::new(Algorithm::Omp).t(6),
+        ] {
+            let solo = spec.run(&ds.a, &ds.b).unwrap();
+            let batch = spec.fit_batch(&ds.a, &[ds.b.clone()]).unwrap();
+            assert_eq!(batch.fits.len(), 1);
+            assert_eq!(batch.shared.responses, 1);
+            assert_fit_bits_equal(&batch.fits[0], &solo, spec.algorithm.name());
+        }
+    }
+
+    #[test]
+    fn lasso_batch_paths_match_single_fits_bitwise_at_k1() {
+        let ds = datasets::tiny_dense(12);
+        let spec = FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-6 }).t(8);
+        let solo = spec.run(&ds.a, &ds.b).unwrap();
+        let batch = spec.fit_batch(&ds.a, &[ds.b.clone()]).unwrap();
+        let sp = solo.lasso.as_ref().unwrap();
+        let bp = batch.fits[0].lasso.as_ref().unwrap();
+        assert_eq!(sp.breakpoints.len(), bp.breakpoints.len());
+        assert_eq!(sp.drops, bp.drops);
+        for (x, y) in sp.breakpoints.iter().zip(&bp.breakpoints) {
+            assert_eq!(x.lambda.to_bits(), y.lambda.to_bits());
+            assert_eq!(x.support, y.support);
+        }
+    }
+
+    #[test]
+    fn batch_is_deterministic_across_thread_counts() {
+        let ds = datasets::tiny_dense(13);
+        let rs = responses(&ds, 5, 99);
+        let spec = FitSpec::new(Algorithm::Lars).t(8);
+        let reference = par::with_pool(&par::ThreadPool::new(1, 64), || {
+            spec.fit_batch(&ds.a, &rs).unwrap()
+        });
+        for threads in [2usize, 4] {
+            let got = par::with_pool(&par::ThreadPool::new(threads, 64), || {
+                spec.fit_batch(&ds.a, &rs).unwrap()
+            });
+            for (b, r) in got.fits.iter().zip(&reference.fits) {
+                assert_fit_bits_equal(b, r, &format!("threads={threads}"));
+            }
+        }
+    }
+
+    #[test]
+    fn fallback_algorithms_match_sequential_fits() {
+        let ds = datasets::tiny(14);
+        let rs = responses(&ds, 3, 7);
+        for spec in [
+            FitSpec::new(Algorithm::Blars { b: 2 }).t(8).ranks(4),
+            FitSpec::new(Algorithm::ForwardSelection).t(5),
+        ] {
+            let batch = spec.fit_batch(&ds.a, &rs).unwrap();
+            for (b, resp) in batch.fits.iter().zip(&rs) {
+                let solo = spec.run(&ds.a, resp).unwrap();
+                assert_fit_bits_equal(b, &solo, spec.algorithm.name());
+            }
+        }
+    }
+
+    #[test]
+    fn shared_work_counts_batched_passes() {
+        let ds = datasets::tiny_dense(15);
+        let rs = responses(&ds, 6, 3);
+        let batch = FitSpec::new(Algorithm::Lars).t(6).fit_batch(&ds.a, &rs).unwrap();
+        assert_eq!(batch.shared.responses, 6);
+        assert!(batch.shared.batched_passes > 0);
+        assert!(batch.shared.sequential_passes >= batch.shared.batched_passes);
+        assert!(batch.shared.passes_saved() > 0, "6 models must share passes");
+    }
+
+    #[test]
+    fn invalid_batches_are_rejected_with_typed_errors() {
+        use crate::error::ErrorKind;
+        let ds = datasets::tiny(16);
+        let spec = FitSpec::new(Algorithm::Lars).t(4);
+        let empty: Vec<Vec<f64>> = Vec::new();
+        assert_eq!(
+            spec.fit_batch(&ds.a, &empty).unwrap_err().kind(),
+            ErrorKind::InvalidSpec
+        );
+        let short = vec![vec![0.0; ds.a.nrows() - 1]];
+        assert_eq!(
+            spec.fit_batch(&ds.a, &short).unwrap_err().kind(),
+            ErrorKind::InvalidSpec
+        );
+        let mut bad = responses(&ds, 2, 1);
+        bad[1][0] = f64::NAN;
+        let err = spec.fit_batch(&ds.a, &bad).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        assert!(err.root().contains("response 1"), "{err:#}");
+    }
+
+    #[test]
+    fn large_batch_spans_many_chunks() {
+        let ds = datasets::tiny_dense(17);
+        let k = 2 * RESPONSE_CHUNK + 3;
+        let rs = responses(&ds, k, 21);
+        let batch = FitSpec::new(Algorithm::Lars).t(5).fit_batch(&ds.a, &rs).unwrap();
+        assert_eq!(batch.fits.len(), k);
+        for fit in &batch.fits {
+            assert!(!fit.output.selected.is_empty());
+        }
+    }
+}

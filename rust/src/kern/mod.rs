@@ -24,7 +24,18 @@
 //!   processed in groups of four anchored at the *start of the range*,
 //!   each group's contribution to an output cell pre-reduced pairwise
 //!   (`(p0+p1) + (p2+p3)`) before the single add into the accumulator,
-//!   with the `rows % 4` tail handled one row at a time.
+//!   with the `rows % 4` tail handled one row at a time;
+//! * **multi-response panel kernels** ([`at_r_multi_panel`],
+//!   [`fused_step_multi_panel`]): the batch (`calars::batch`)
+//!   analogues of `at_r_panel` / `fused_step_panel` — models are the
+//!   inner loop over the same four-row packs, so `A` streams once per
+//!   response panel while each model's accumulator walks the exact
+//!   single-response summation order (per-model results are
+//!   bit-identical to `k` separate single-response calls);
+//! * **the γ-candidate scan body** ([`gamma_scan_range`]): the
+//!   per-chunk step-length search both the single-model scan
+//!   (`lars::serial`) and the batched multi-response scan run, so the
+//!   two paths share one per-`j` arithmetic sequence.
 //!
 //! Because [`crate::par::chunk_ranges`] is a pure function of
 //! `(len, grain)` — never of the thread count — the group boundaries
@@ -393,6 +404,142 @@ pub fn fused_step_panel(
     }
 }
 
+/// Multi-response `Aᵀ R` panel: for every model `k`,
+/// `accs[k][j] += Σ_i rs[k][i] · rows_i[j]`. The batch analogue of
+/// [`at_r_panel`]: `A` streams through the cache **once** for the
+/// whole response panel instead of once per model (the blocked panel
+/// GEMM the multi-response fitter leans on), while each model's
+/// accumulator sees the *identical* sequence of adds it would in `k`
+/// separate [`at_r_panel`] calls — models are the inner loop over the
+/// same four-row packs, so per-model results are bit-identical to the
+/// single-response kernel at any batch width.
+pub fn at_r_multi_panel(rows: &[f64], n: usize, rs: &[&[f64]], accs: &mut [&mut [f64]]) {
+    debug_assert_eq!(rs.len(), accs.len());
+    let Some(first) = rs.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            debug_assert_eq!(r.len(), m);
+            debug_assert_eq!(acc.len(), n);
+            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+            for j in 0..n {
+                acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            let ri = r[i];
+            for j in 0..n {
+                acc[j] += ri * row[j];
+            }
+        }
+    }
+}
+
+/// Multi-response fused equiangular step: for every model `k`, one
+/// shared pass over the panel computes `us[k] = A[:, cols[k]]·ws[k]`
+/// and `avs[k] += Aᵀ us[k]`. The batch analogue of
+/// [`fused_step_panel`] with the same streaming amortization as
+/// [`at_r_multi_panel`]: every model reads the same four-row pack
+/// while it is hot, and each model's `u` gathers / `av` accumulations
+/// follow exactly the single-response canonical order, so per-model
+/// results are bit-identical to `k` separate [`fused_step_panel`]
+/// calls.
+pub fn fused_step_multi_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[&[usize]],
+    ws: &[&[f64]],
+    us: &mut [&mut [f64]],
+    avs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(cols.len(), ws.len());
+    debug_assert_eq!(cols.len(), us.len());
+    debug_assert_eq!(cols.len(), avs.len());
+    let Some(first) = us.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for k in 0..cols.len() {
+            let (ck, wk) = (cols[k], ws[k]);
+            debug_assert_eq!(ck.len(), wk.len());
+            let u0 = dot_idx(x0, ck, wk);
+            let u1 = dot_idx(x1, ck, wk);
+            let u2 = dot_idx(x2, ck, wk);
+            let u3 = dot_idx(x3, ck, wk);
+            let u = &mut us[k];
+            u[i] = u0;
+            u[i + 1] = u1;
+            u[i + 2] = u2;
+            u[i + 3] = u3;
+            let av = &mut avs[k];
+            for j in 0..n {
+                av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for k in 0..cols.len() {
+            let ui = dot_idx(row, cols[k], ws[k]);
+            us[k][i] = ui;
+            let av = &mut avs[k];
+            for j in 0..n {
+                av[j] += ui * row[j];
+            }
+        }
+    }
+}
+
+/// One fixed-grain chunk `[lo, hi)` of the LARS γ-candidate scan: for
+/// every column `j` not yet in the model, the two step lengths
+/// `γ₁ = (ck − c_j)/(ck·h − a_j)` and `γ₂ = (ck + c_j)/(ck·h + a_j)`
+/// reduced to their smallest positive value and kept when it does not
+/// overshoot the full step. Both the single-model scan
+/// (`lars::serial`) and the batched multi-response scan
+/// ([`crate::batch`]) call this exact routine per chunk, so the
+/// batched path walks the identical per-`j` arithmetic — the
+/// canonical-order contract extended to the γ search.
+pub fn gamma_scan_range(
+    lo: usize,
+    hi: usize,
+    in_model: &[bool],
+    c: &[f64],
+    av: &[f64],
+    ck: f64,
+    h: f64,
+    gamma_full: f64,
+    out: &mut Vec<(usize, f64)>,
+) {
+    for j in lo..hi {
+        if in_model[j] {
+            continue;
+        }
+        let g1 = (ck - c[j]) / (ck * h - av[j]);
+        let g2 = (ck + c[j]) / (ck * h + av[j]);
+        if let Some(g) = crate::linalg::select::min_positive2(g1, g2) {
+            if g <= gamma_full * (1.0 + 1e-12) {
+                out.push((j, g));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,6 +639,90 @@ mod tests {
         for (a, b) in av.iter().zip(&av_ref) {
             assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()), "av");
         }
+    }
+
+    #[test]
+    fn multi_panels_bit_identical_to_single_per_model() {
+        // The multi-response kernels promise per-model bit-identity to
+        // k separate single-response calls, at every batch width and
+        // awkward row count (tail handling included).
+        for &(m, n) in &[(0usize, 5usize), (1, 5), (3, 7), (4, 4), (5, 1), (13, 9), (23, 11)] {
+            let data = randvec(m * n, (m * 131 + n) as u64 + 1);
+            for k in [1usize, 2, 3, 5] {
+                let rs_own: Vec<Vec<f64>> =
+                    (0..k).map(|i| randvec(m, 500 + i as u64)).collect();
+                let rs: Vec<&[f64]> = rs_own.iter().map(|v| v.as_slice()).collect();
+                // at_r_multi_panel vs k at_r_panel calls
+                let mut multi = vec![vec![0.0; n]; k];
+                {
+                    let mut accs: Vec<&mut [f64]> =
+                        multi.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    at_r_multi_panel(&data, n, &rs, &mut accs);
+                }
+                for (i, r) in rs.iter().enumerate() {
+                    let mut single = vec![0.0; n];
+                    at_r_panel(&data, n, r, &mut single);
+                    for (a, b) in multi[i].iter().zip(&single) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "at_r ({m},{n}) k={k} model {i}");
+                    }
+                }
+                // fused_step_multi_panel vs k fused_step_panel calls,
+                // each model with its own column subset and weights.
+                if n == 0 {
+                    continue;
+                }
+                let cols_own: Vec<Vec<usize>> =
+                    (0..k).map(|i| (i % n..n).step_by(2).collect()).collect();
+                let ws_own: Vec<Vec<f64>> =
+                    cols_own.iter().enumerate().map(|(i, c)| randvec(c.len(), 900 + i as u64)).collect();
+                let cols: Vec<&[usize]> = cols_own.iter().map(|v| v.as_slice()).collect();
+                let ws: Vec<&[f64]> = ws_own.iter().map(|v| v.as_slice()).collect();
+                let mut us = vec![vec![0.0; m]; k];
+                let mut avs = vec![vec![0.0; n]; k];
+                {
+                    let mut u_sl: Vec<&mut [f64]> =
+                        us.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    let mut av_sl: Vec<&mut [f64]> =
+                        avs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    fused_step_multi_panel(&data, n, &cols, &ws, &mut u_sl, &mut av_sl);
+                }
+                for i in 0..k {
+                    let mut u1 = vec![0.0; m];
+                    let mut av1 = vec![0.0; n];
+                    fused_step_panel(&data, n, cols[i], ws[i], &mut u1, &mut av1);
+                    for (a, b) in us[i].iter().zip(&u1) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "u ({m},{n}) k={k} model {i}");
+                    }
+                    for (a, b) in avs[i].iter().zip(&av1) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "av ({m},{n}) k={k} model {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_scan_range_concatenates_to_full_scan() {
+        let n = 57;
+        let c = randvec(n, 1);
+        let av = randvec(n, 2);
+        let mut in_model = vec![false; n];
+        for j in (0..n).step_by(5) {
+            in_model[j] = true;
+        }
+        let (ck, h, gamma_full) = (1.7, 0.9, 1.0 / 0.9);
+        let mut whole = Vec::new();
+        gamma_scan_range(0, n, &in_model, &c, &av, ck, h, gamma_full, &mut whole);
+        let mut chunked = Vec::new();
+        for lo in (0..n).step_by(13) {
+            gamma_scan_range(lo, (lo + 13).min(n), &in_model, &c, &av, ck, h, gamma_full, &mut chunked);
+        }
+        assert_eq!(whole.len(), chunked.len());
+        for ((j1, g1), (j2, g2)) in whole.iter().zip(&chunked) {
+            assert_eq!(j1, j2);
+            assert_eq!(g1.to_bits(), g2.to_bits());
+        }
+        assert!(!whole.is_empty(), "scan produced no candidates");
     }
 
     #[test]

@@ -152,6 +152,36 @@ pub fn gram_block_streamed(
     out
 }
 
+/// Scalar multi-response `Aᵀ R`: the mathematical definition of
+/// [`crate::kern::at_r_multi_panel`] — `k` independent textbook
+/// [`at_r`] sweeps, one per response column.
+pub fn at_r_multi(data: &[f64], m: usize, n: usize, rs: &[&[f64]], outs: &mut [Vec<f64>]) {
+    debug_assert_eq!(rs.len(), outs.len());
+    for (r, out) in rs.iter().zip(outs.iter_mut()) {
+        at_r(data, m, n, r, out);
+    }
+}
+
+/// Scalar multi-response fused step: the mathematical definition of
+/// [`crate::kern::fused_step_multi_panel`] — `k` independent
+/// two-pass [`gemv_cols`] + [`at_r`] sweeps.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_step_multi(
+    data: &[f64],
+    m: usize,
+    n: usize,
+    cols: &[&[usize]],
+    ws: &[&[f64]],
+    us: &mut [Vec<f64>],
+    avs: &mut [Vec<f64>],
+) {
+    debug_assert_eq!(cols.len(), ws.len());
+    for k in 0..cols.len() {
+        gemv_cols(data, m, n, cols[k], ws[k], &mut us[k]);
+        at_r(data, m, n, &us[k], &mut avs[k]);
+    }
+}
+
 /// Scalar full GEMV `out = A x` on a row-major buffer.
 pub fn gemv(data: &[f64], m: usize, n: usize, x: &[f64], out: &mut [f64]) {
     debug_assert_eq!(data.len(), m * n);

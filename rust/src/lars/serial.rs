@@ -20,16 +20,19 @@ use super::{LarsOutput, StopReason};
 use crate::cluster::tracer::Phase;
 use crate::error::{Error, Result};
 use crate::fit::observers::{FitEvent, FitObserver, NoopObserver, ObserverControl};
-use crate::linalg::select::{argmax_b_by, argmin_b_by, min_positive2};
+use crate::linalg::select::{argmax_b_by, argmin_b_by};
 use crate::linalg::{dot, norm2, Cholesky, DenseMatrix, Matrix};
 use crate::obs::phase_span;
 use crate::par;
 
 /// γ-candidate scan over the complement of the model (Algorithm 2 step
-/// 12), chunked on the pool. Chunk results concatenate in ascending
-/// chunk order, so both the candidate order and every f64 operation
-/// match the serial scan exactly — on any thread count.
-pub(super) fn gamma_candidates(
+/// 12), chunked on the pool. Each chunk runs
+/// [`crate::kern::gamma_scan_range`] — the same per-`j` arithmetic the
+/// batched multi-response scan in [`crate::batch`] walks — and chunk
+/// results concatenate in ascending chunk order, so both the candidate
+/// order and every f64 operation match the serial scan exactly — on
+/// any thread count.
+pub(crate) fn gamma_candidates(
     n: usize,
     in_model: &[bool],
     c: &[f64],
@@ -40,18 +43,7 @@ pub(super) fn gamma_candidates(
 ) -> Vec<(usize, f64)> {
     let chunks = par::map_chunks(n, par::min_chunk(), |lo, hi| {
         let mut loc: Vec<(usize, f64)> = Vec::new();
-        for j in lo..hi {
-            if in_model[j] {
-                continue;
-            }
-            let g1 = (ck - c[j]) / (ck * h - av[j]);
-            let g2 = (ck + c[j]) / (ck * h + av[j]);
-            if let Some(g) = min_positive2(g1, g2) {
-                if g <= gamma_full * (1.0 + 1e-12) {
-                    loc.push((j, g));
-                }
-            }
-        }
+        crate::kern::gamma_scan_range(lo, hi, in_model, c, av, ck, h, gamma_full, &mut loc);
         loc
     });
     chunks.concat()

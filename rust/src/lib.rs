@@ -15,6 +15,14 @@
 //!   ([`fit::SnapshotObserver`], [`fit::ProgressObserver`],
 //!   [`fit::EarlyStop`], [`fit::MetricsSink`]); invalid inputs return
 //!   typed errors ([`error::ErrorKind`]) instead of panicking.
+//! * **Batched multi-response fitting** ([`batch`]):
+//!   [`fit::FitSpec::fit_batch`] fits one design matrix against a
+//!   whole response panel in lockstep — the initial `AᵀR`, the fused
+//!   direction pass, and the γ scans of each joint iteration are
+//!   batched across models ([`kern`] panel kernels), Gram panels and
+//!   column norms are shared through [`kern::cache`], and a batch of
+//!   one is bit-identical to the single-response fit. Backs the bulk
+//!   `POST /fit` serve path and `calars batch`.
 //! * **L3 — the coordinator**: the paper's parallel algorithms
 //!   ([`lars::serial`], [`lars::blars`], [`lars::tblars`]) scheduled
 //!   over a simulated message-passing cluster ([`cluster`]) with an
@@ -136,6 +144,7 @@
 //! like their old `assert!`s, whereas the new API returns typed errors.
 
 pub mod baselines;
+pub mod batch;
 pub mod cluster;
 pub mod config;
 pub mod data;

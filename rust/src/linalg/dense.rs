@@ -228,6 +228,123 @@ impl DenseMatrix {
         }
     }
 
+    /// Multi-response `outs[k] = Aᵀ rs[k]` — the batch correlation
+    /// kernel. One streaming pass over `A` serves every response in
+    /// the panel ([`kern::at_r_multi_panel`]); per-model numerics walk
+    /// the exact [`Self::at_r`] summation order, and at `k = 1` the
+    /// fixed grain reduces to `at_r`'s, so a one-response batch is
+    /// bit-identical to the single-response kernel — and any batch is
+    /// bit-identical across thread counts.
+    pub fn at_r_multi(&self, rs: &[&[f64]], outs: &mut [&mut [f64]]) {
+        assert_eq!(rs.len(), outs.len());
+        let k = rs.len();
+        if k == 0 {
+            return;
+        }
+        for r in rs {
+            assert_eq!(r.len(), self.m);
+        }
+        for o in outs.iter() {
+            assert_eq!(o.len(), self.n);
+        }
+        let n = self.n;
+        let grain = self.row_grain(k * n);
+        if self.m <= grain {
+            for o in outs.iter_mut() {
+                o.fill(0.0);
+            }
+            kern::at_r_multi_panel(&self.data, n, rs, outs);
+            return;
+        }
+        let partials = par::map_chunks(self.m, grain, |lo, hi| {
+            let mut accs_own = vec![vec![0.0_f64; n]; k];
+            let rs_chunk: Vec<&[f64]> = rs.iter().map(|r| &r[lo..hi]).collect();
+            let mut accs: Vec<&mut [f64]> =
+                accs_own.iter_mut().map(|v| v.as_mut_slice()).collect();
+            kern::at_r_multi_panel(&self.data[lo * n..hi * n], n, &rs_chunk, &mut accs);
+            accs_own
+        });
+        for (idx, o) in outs.iter_mut().enumerate() {
+            o.copy_from_slice(&partials[0][idx]);
+            for p in &partials[1..] {
+                axpy(1.0, &p[idx], o);
+            }
+        }
+    }
+
+    /// Multi-response fused equiangular step: for every model `k`, one
+    /// shared pass over `A` computes `us[k] = A[:, cols[k]]·ws[k]` and
+    /// `avs[k] = Aᵀ us[k]` ([`kern::fused_step_multi_panel`]). The
+    /// fixed grain accounts for the whole batch's per-row cost and
+    /// reduces to [`Self::gemv_cols_at_r`]'s at `k = 1`, so a
+    /// one-response batch is bit-identical to the single-response
+    /// fused step; partials combine per model in ascending chunk
+    /// order (thread-count independent bits).
+    pub fn fused_step_multi(
+        &self,
+        cols: &[&[usize]],
+        ws: &[&[f64]],
+        us: &mut [&mut [f64]],
+        avs: &mut [&mut [f64]],
+    ) {
+        let k = cols.len();
+        assert_eq!(ws.len(), k);
+        assert_eq!(us.len(), k);
+        assert_eq!(avs.len(), k);
+        if k == 0 {
+            return;
+        }
+        for (c, w) in cols.iter().zip(ws) {
+            assert_eq!(c.len(), w.len());
+        }
+        for (u, av) in us.iter().zip(avs.iter()) {
+            assert_eq!(u.len(), self.m);
+            assert_eq!(av.len(), self.n);
+        }
+        let n = self.n;
+        let cost = cols.iter().map(|c| c.len()).sum::<usize>() + k * n;
+        let grain = self.row_grain(cost);
+        if self.m <= grain {
+            for av in avs.iter_mut() {
+                av.fill(0.0);
+            }
+            kern::fused_step_multi_panel(&self.data, n, cols, ws, us, avs);
+            return;
+        }
+        // Split every model's u at the same fixed chunk boundaries so
+        // each task owns its rows of every u.
+        let ranges = par::chunk_ranges(self.m, grain);
+        let mut rests: Vec<&mut [f64]> = Vec::with_capacity(k);
+        for u in us.iter_mut() {
+            rests.push(&mut **u);
+        }
+        let mut tasks = Vec::with_capacity(ranges.len());
+        for &(lo, hi) in &ranges {
+            let mut heads: Vec<&mut [f64]> = Vec::with_capacity(k);
+            for slot in rests.iter_mut() {
+                let (head, tail) = std::mem::take(slot).split_at_mut(hi - lo);
+                *slot = tail;
+                heads.push(head);
+            }
+            let rows = &self.data[lo * n..hi * n];
+            tasks.push(move || {
+                let mut heads = heads;
+                let mut accs_own = vec![vec![0.0_f64; n]; k];
+                let mut accs: Vec<&mut [f64]> =
+                    accs_own.iter_mut().map(|v| v.as_mut_slice()).collect();
+                kern::fused_step_multi_panel(rows, n, cols, ws, &mut heads, &mut accs);
+                accs_own
+            });
+        }
+        let partials = par::run_tasks(tasks);
+        for (idx, av) in avs.iter_mut().enumerate() {
+            av.copy_from_slice(&partials[0][idx]);
+            for p in &partials[1..] {
+                axpy(1.0, &p[idx], av);
+            }
+        }
+    }
+
     /// Gram block `A[:, ii]ᵀ · A[:, jj]` as a dense `|ii| × |jj|` matrix.
     ///
     /// Streams A exactly once through [`kern::gram_panel`]: four rows'
@@ -521,6 +638,79 @@ mod tests {
             let got = run(threads);
             for (x, y) in base.0.iter().chain(&base.1).zip(got.0.iter().chain(&got.1)) {
                 assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_response_kernels_match_single_and_threads() {
+        // 700×30 with a 64-unit grain forces the chunked paths. The
+        // multi kernels promise (a) k=1 bit-identity to the
+        // single-response kernels under the same pool, and (b)
+        // bit-identity across thread counts at any k.
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(77);
+        let a = DenseMatrix::from_fn(700, 30, |_, _| rng.normal());
+        let rs_own: Vec<Vec<f64>> = (0..3)
+            .map(|s| (0..700).map(|i| ((i + 31 * s) as f64 * 0.21).sin()).collect())
+            .collect();
+        let cols_own: Vec<Vec<usize>> = vec![(0..12).collect(), (5..17).collect(), vec![1, 3, 9]];
+        let ws_own: Vec<Vec<f64>> = cols_own
+            .iter()
+            .map(|c| c.iter().map(|&j| (j as f64 * 0.2).cos()).collect())
+            .collect();
+        let run = |threads: usize, k: usize| {
+            let pool = crate::par::ThreadPool::new(threads, 64);
+            crate::par::with_pool(&pool, || {
+                let rs: Vec<&[f64]> = rs_own[..k].iter().map(|v| v.as_slice()).collect();
+                let mut cs = vec![vec![0.0; 30]; k];
+                {
+                    let mut outs: Vec<&mut [f64]> =
+                        cs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    a.at_r_multi(&rs, &mut outs);
+                }
+                let cols: Vec<&[usize]> = cols_own[..k].iter().map(|v| v.as_slice()).collect();
+                let ws: Vec<&[f64]> = ws_own[..k].iter().map(|v| v.as_slice()).collect();
+                let mut us = vec![vec![0.0; 700]; k];
+                let mut avs = vec![vec![0.0; 30]; k];
+                {
+                    let mut u_sl: Vec<&mut [f64]> =
+                        us.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    let mut av_sl: Vec<&mut [f64]> =
+                        avs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    a.fused_step_multi(&cols, &ws, &mut u_sl, &mut av_sl);
+                }
+                (cs, us, avs)
+            })
+        };
+        // (a) k=1 batch ≡ single-response kernels, bit for bit.
+        let (cs, us, avs) = run(2, 1);
+        let pool = crate::par::ThreadPool::new(2, 64);
+        let (c1, u1, av1) = crate::par::with_pool(&pool, || {
+            let mut c = vec![0.0; 30];
+            a.at_r(&rs_own[0], &mut c);
+            let mut u = vec![0.0; 700];
+            let mut av = vec![0.0; 30];
+            a.gemv_cols_at_r(&cols_own[0], &ws_own[0], &mut u, &mut av);
+            (c, u, av)
+        });
+        for (x, y) in cs[0].iter().zip(&c1).chain(us[0].iter().zip(&u1)).chain(avs[0].iter().zip(&av1)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "k=1 multi != single");
+        }
+        // (b) thread invariance at k=3.
+        let base = run(1, 3);
+        for threads in [2usize, 4] {
+            let got = run(threads, 3);
+            for i in 0..3 {
+                for (x, y) in base
+                    .0[i]
+                    .iter()
+                    .zip(&got.0[i])
+                    .chain(base.1[i].iter().zip(&got.1[i]))
+                    .chain(base.2[i].iter().zip(&got.2[i]))
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(), "threads={threads} model {i}");
+                }
             }
         }
     }

@@ -109,6 +109,48 @@ impl Matrix {
         }
     }
 
+    /// Multi-response correlation kernel: `outs[k] = Aᵀ rs[k]` for a
+    /// whole residual panel. Dense storage streams `A` once for the
+    /// batch ([`DenseMatrix::at_r_multi`] — the blocked panel GEMM the
+    /// batch fitter leans on); CSC falls back to per-response [`Self::at_r`]
+    /// sweeps (same results, the sparse gather order is already
+    /// per-column). At `k = 1` both storages are bit-identical to the
+    /// single-response kernel.
+    pub fn at_r_multi(&self, rs: &[&[f64]], outs: &mut [&mut [f64]]) {
+        match self {
+            Matrix::Dense(a) => a.at_r_multi(rs, outs),
+            Matrix::Sparse(a) => {
+                for (r, out) in rs.iter().zip(outs.iter_mut()) {
+                    a.at_r(r, out);
+                }
+            }
+        }
+    }
+
+    /// Multi-response fused equiangular step: per model `k`,
+    /// `us[k] = A[:, cols[k]]·ws[k]` and `avs[k] = Aᵀ us[k]`. Dense
+    /// storage shares one pass over `A` across the batch
+    /// ([`DenseMatrix::fused_step_multi`]); CSC falls back to
+    /// per-model [`Self::fused_step`]. At `k = 1` both storages are
+    /// bit-identical to the single-response fused step.
+    pub fn fused_step_multi(
+        &self,
+        cols: &[&[usize]],
+        ws: &[&[f64]],
+        us: &mut [&mut [f64]],
+        avs: &mut [&mut [f64]],
+    ) {
+        match self {
+            Matrix::Dense(a) => a.fused_step_multi(cols, ws, us, avs),
+            Matrix::Sparse(a) => {
+                for k in 0..cols.len() {
+                    a.gemv_cols(cols[k], ws[k], &mut *us[k]);
+                    a.at_r(&*us[k], &mut *avs[k]);
+                }
+            }
+        }
+    }
+
     /// Dot of column `j` with `r`.
     pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
         match self {

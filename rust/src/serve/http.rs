@@ -8,7 +8,11 @@
 //!   column-norm summaries (the training scale raw features must be
 //!   divided by), and per-dataset panel counters (JSON)
 //! * `GET  /stats`   — engine/queue/registry/gram-cache counters (JSON)
-//! * `POST /fit`     — enqueue a fit job (`?wait=1` blocks until done)
+//! * `POST /fit`     — enqueue a fit job (`?wait=1` blocks until done);
+//!   a body with `y` response rows switches to **bulk mode**: all
+//!   posted responses fit one design matrix in a single
+//!   [`crate::fit::FitSpec::fit_batch`] lockstep call and register as
+//!   k models in one registry transaction
 //! * `POST /predict` — batched prediction (line-protocol body)
 //! * `POST /select`  — model selection on a stored path: Cp/AIC/BIC
 //!   from the snapshot, or k-fold CV refits through the GramCache
@@ -25,10 +29,10 @@
 
 use super::engine::{PredictionEngine, Query};
 use super::protocol::{
-    self, http_response, json_escape, json_f64, FitRequest, HttpRequest, PredictRequest,
-    SelectRequest,
+    self, http_response, json_escape, json_f64, BatchFitRequest, FitRequest, HttpRequest,
+    PredictRequest, SelectRequest,
 };
-use super::queue::{FitJob, FitQueue, JobState};
+use super::queue::{BatchFitJob, FitJob, FitQueue, JobState};
 use super::store::{ModelRecord, ModelRegistry, RegistryStats};
 use super::sync::{lock_recover, wait_recover};
 use crate::data::datasets::{self, Dataset};
@@ -420,6 +424,9 @@ fn predict(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
 }
 
 fn fit(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
+    if protocol::is_batch_fit(&req.body) {
+        return fit_batch(req, state);
+    }
     let parsed = match FitRequest::parse(&req.body) {
         Ok(p) => p,
         Err(e) => return (400, err_json(&e)),
@@ -446,6 +453,54 @@ fn fit(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
         state.queue.state(job)
     };
     (200, job_json(job, st.as_ref()))
+}
+
+/// Bulk `POST /fit` (a body with `y` rows): fit every posted response
+/// against the dataset's design matrix in one
+/// [`crate::fit::FitSpec::fit_batch`] lockstep call, register all k
+/// models in one registry transaction, and answer with the model ids
+/// plus the batch's shared-work accounting. Runs synchronously on this
+/// connection thread — exactly as blocking as `/fit?wait=1`.
+fn fit_batch(req: &HttpRequest, state: &Arc<ServerState>) -> (u16, String) {
+    let parsed = match BatchFitRequest::parse(&req.body) {
+        Ok(p) => p,
+        Err(e) => return (400, err_json(&e)),
+    };
+    let spec = match parsed.base.to_spec() {
+        Ok(s) => s,
+        Err(e) => return (error_status(&e), err_json(&e)),
+    };
+    let job = BatchFitJob {
+        names: parsed.model_names(),
+        dataset: parsed.base.dataset.clone(),
+        seed: parsed.base.seed,
+        spec,
+        responses: parsed.responses,
+    };
+    match state.queue.run_batch(&job) {
+        Ok(out) => {
+            let models: Vec<String> = out.models.iter().map(u64::to_string).collect();
+            let s = &out.shared;
+            (
+                200,
+                format!(
+                    "{{\"models\":[{}],\"count\":{},\"shared\":{{\"responses\":{},\
+                     \"gram_panel_hits\":{},\"gram_panel_misses\":{},\"batched_passes\":{},\
+                     \"sequential_passes\":{},\"passes_saved\":{}}},\"wall_secs\":{}}}",
+                    models.join(","),
+                    out.models.len(),
+                    s.responses,
+                    s.gram_panel_hits,
+                    s.gram_panel_misses,
+                    s.batched_passes,
+                    s.sequential_passes,
+                    s.passes_saved(),
+                    json_f64(out.wall_secs)
+                ),
+            )
+        }
+        Err(e) => (error_status(&e), err_json(&e)),
+    }
 }
 
 /// `POST /select` — choose a serving step on a stored model's path.

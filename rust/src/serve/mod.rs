@@ -90,6 +90,6 @@ pub use engine::{EngineStats, PredictionEngine, Query, Selector};
 pub use gram_cache::{DatasetInfo, GramCache, GramCacheStats, NormSummary};
 pub use http::{serve, spawn_server, ServeOptions, ServerHandle};
 pub use loadgen::{run_load, LoadOptions, LoadReport, ServeClient};
-pub use protocol::{FitRequest, PredictRequest, SelectRequest};
+pub use protocol::{BatchFitRequest, FitRequest, PredictRequest, SelectRequest};
 pub use queue::{FitJob, FitQueue, JobState, QueueStats};
 pub use store::{ModelMeta, ModelRecord, ModelRegistry, RegistryStats};

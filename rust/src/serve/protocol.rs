@@ -224,6 +224,117 @@ impl FitRequest {
     }
 }
 
+// ── line protocol: bulk /fit ────────────────────────────────────────
+
+/// Body of a **bulk** `POST /fit` — the same knob lines as
+/// [`FitRequest`] plus one `y` row per response and (optionally) one
+/// `names` line. The presence of any `y` row is what switches the
+/// endpoint into batch mode ([`is_batch_fit`]); the design matrix
+/// still comes from `dataset`, but the dataset's own response vector
+/// is ignored in favor of the posted panel. All responses fit in one
+/// [`crate::fit::FitSpec::fit_batch`] lockstep call and register in
+/// one registry transaction.
+///
+/// ```text
+/// name panel
+/// algo lars
+/// dataset tiny
+/// t 8
+/// names west east
+/// y 0.1 0.2 0.3 …     # one row per response, each of length m
+/// y 1.0 0.5 0.25 …
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchFitRequest {
+    /// The shared knobs (`name` becomes the base display name).
+    pub base: FitRequest,
+    /// Explicit per-response model names (empty → generated from
+    /// `base.name`); when non-empty, must match the response count.
+    pub names: Vec<String>,
+    /// One response vector per model, row order = registration order.
+    pub responses: Vec<Vec<f64>>,
+}
+
+/// True if a `POST /fit` body is a bulk request (has a `y` row).
+pub fn is_batch_fit(body: &str) -> bool {
+    body.lines().any(|l| {
+        let t = l.trim_start();
+        t == "y" || t.starts_with("y ")
+    })
+}
+
+impl BatchFitRequest {
+    pub fn encode(&self) -> String {
+        let mut s = self.base.encode();
+        if !self.names.is_empty() {
+            s.push_str("names");
+            for n in &self.names {
+                s.push(' ');
+                s.push_str(n);
+            }
+            s.push('\n');
+        }
+        for row in &self.responses {
+            s.push('y');
+            for v in row {
+                s.push(' ');
+                s.push_str(&v.to_string());
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut names: Vec<String> = Vec::new();
+        let mut responses: Vec<Vec<f64>> = Vec::new();
+        let mut base_lines = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let (key, rest) = line.split_once(' ').unwrap_or((line, ""));
+            match key {
+                "y" => {
+                    let row: Vec<f64> = rest
+                        .split_whitespace()
+                        .map(|t| t.parse::<f64>())
+                        .collect::<std::result::Result<_, _>>()
+                        .with_context(|| format!("line {}: bad y row", ln + 1))?;
+                    if row.is_empty() {
+                        bail!("line {}: empty y row", ln + 1);
+                    }
+                    responses.push(row);
+                }
+                "names" => {
+                    names = rest.split_whitespace().map(str::to_string).collect();
+                }
+                _ => {
+                    base_lines.push_str(raw);
+                    base_lines.push('\n');
+                }
+            }
+        }
+        let base = FitRequest::parse(&base_lines)?;
+        if responses.is_empty() {
+            bail!("bulk fit needs at least one 'y' response row");
+        }
+        if !names.is_empty() && names.len() != responses.len() {
+            bail!("{} names for {} y rows", names.len(), responses.len());
+        }
+        Ok(BatchFitRequest { base, names, responses })
+    }
+
+    /// Per-response display names: the explicit `names` when given,
+    /// otherwise `<base>-<index>` from the base request's `name` (with
+    /// `"batch"` standing in when that is empty too).
+    pub fn model_names(&self) -> Vec<String> {
+        if !self.names.is_empty() {
+            return self.names.clone();
+        }
+        let stem = if self.base.name.is_empty() { "batch" } else { &self.base.name };
+        (0..self.responses.len()).map(|i| format!("{stem}-{i}")).collect()
+    }
+}
+
 // ── line protocol: /select ──────────────────────────────────────────
 
 /// Body of `POST /select` — choose a serving step on a stored model's
@@ -627,6 +738,33 @@ mod tests {
             bad_p.to_spec().unwrap_err().kind(),
             ErrorKind::InvalidSpec,
             "p=0 must be rejected like every other out-of-range knob"
+        );
+    }
+
+    #[test]
+    fn batch_fit_round_trips_and_validates() {
+        let req = BatchFitRequest {
+            base: FitRequest { name: "panel".into(), t: 8, ..Default::default() },
+            names: vec!["west".into(), "east".into()],
+            responses: vec![vec![0.25, -1.5, 3.0], vec![1.0 / 3.0, 0.0, 2.0]],
+        };
+        let wire = req.encode();
+        assert!(is_batch_fit(&wire));
+        assert_eq!(BatchFitRequest::parse(&wire).unwrap(), req);
+        assert_eq!(req.model_names(), vec!["west", "east"]);
+
+        let unnamed = BatchFitRequest { names: Vec::new(), ..req };
+        assert_eq!(BatchFitRequest::parse(&unnamed.encode()).unwrap(), unnamed);
+        assert_eq!(unnamed.model_names(), vec!["panel-0", "panel-1"]);
+
+        assert!(!is_batch_fit("algo lars\nt 8\n"), "plain fits are not batches");
+        assert!(!is_batch_fit("yolo 1\n"), "only a y key counts");
+        assert!(BatchFitRequest::parse("algo lars\n").is_err(), "no y rows");
+        assert!(BatchFitRequest::parse("y 1 two\n").is_err(), "bad float");
+        assert!(BatchFitRequest::parse("y\n").is_err(), "empty row");
+        assert!(
+            BatchFitRequest::parse("names a b c\ny 1 2\ny 3 4\n").is_err(),
+            "name/row count mismatch"
         );
     }
 

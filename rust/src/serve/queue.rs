@@ -18,10 +18,12 @@
 use super::gram_cache::GramCache;
 use super::store::{ModelMeta, ModelRegistry};
 use super::sync::lock_recover;
+use crate::batch::SharedWork;
 use crate::data::datasets;
 use crate::error::Result;
 use crate::fit::{Algorithm, FitSpec, Fitter, SnapshotObserver};
 use crate::kern;
+use crate::lars::path::PathSnapshot;
 use crate::select::{self, Criterion};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -80,6 +82,36 @@ impl FitJob {
             selection: String::new(),
         }
     }
+}
+
+/// One bulk multi-response fit: `k` posted responses against one
+/// dataset's design matrix, fitted in lockstep through
+/// [`FitSpec::fit_batch`] and registered in one
+/// [`ModelRegistry::insert_many`] transaction.
+#[derive(Clone, Debug)]
+pub struct BatchFitJob {
+    /// One display name per response (same length as `responses`).
+    pub names: Vec<String>,
+    /// Dataset providing the design matrix (its own response vector
+    /// is ignored — the posted panel replaces it).
+    pub dataset: String,
+    /// Dataset generation seed.
+    pub seed: u64,
+    /// The validated estimator spec shared by every response.
+    pub spec: FitSpec,
+    /// The response panel, one vector per model.
+    pub responses: Vec<Vec<f64>>,
+}
+
+/// What [`FitQueue::run_batch`] returns.
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// Registered model ids, aligned with the job's response order.
+    pub models: Vec<u64>,
+    /// What the lockstep fit amortized across the responses.
+    pub shared: SharedWork,
+    /// Wall-clock seconds for the whole batch fit.
+    pub wall_secs: f64,
 }
 
 /// Lifecycle of a submitted job.
@@ -262,6 +294,88 @@ impl FitQueue {
         &self.shared.gram_cache
     }
 
+    /// Run one bulk multi-response fit **synchronously on the calling
+    /// thread** (the HTTP layer calls this from the connection thread,
+    /// which is exactly as blocking as `/fit?wait=1`): resolve the
+    /// dataset through the [`GramCache`], run
+    /// [`FitSpec::fit_batch`] under its panel-store binding so every
+    /// model in the batch shares the cross-fit Gram panels, snapshot
+    /// each fitted path, and register all `k` models in one
+    /// [`ModelRegistry::insert_many`] transaction. The whole batch is
+    /// wrapped in a `serve_batch_fit` span and counted in the
+    /// `calars_batch_*` metrics.
+    ///
+    /// Batch models never join a warm-start family with ordinary fits:
+    /// their spec string carries a fingerprint of the posted response
+    /// (`batch=<hash>`), so only a byte-identical re-post would match —
+    /// an ordinary `/fit` of the same dataset must not be answered by a
+    /// path fitted against someone's custom response panel.
+    pub fn run_batch(&self, job: &BatchFitJob) -> Result<BatchOutcome> {
+        if job.names.len() != job.responses.len() {
+            crate::bail!(
+                "batch has {} names for {} responses",
+                job.names.len(),
+                job.responses.len()
+            );
+        }
+        let span = crate::obs::span("serve_batch_fit");
+        let (ds, store) = match self.shared.gram_cache.lookup(&job.dataset, job.seed) {
+            Some(hit) => hit,
+            None => {
+                let ds = Arc::new(
+                    datasets::by_name(&job.dataset, job.seed)
+                        .ok_or_else(|| crate::anyhow!("unknown dataset '{}'", job.dataset))?,
+                );
+                let store =
+                    self.shared.gram_cache.register(&job.dataset, job.seed, Arc::clone(&ds));
+                (ds, store)
+            }
+        };
+        let batch =
+            kern::cache::with_store(&store, || job.spec.fit_batch(&ds.a, &job.responses))?;
+        let spec_str = job.spec.encode();
+        let mut entries = Vec::with_capacity(batch.fits.len());
+        for (i, fit) in batch.fits.iter().enumerate() {
+            let snapshot = match &fit.lasso {
+                Some(path) => PathSnapshot::from_lasso(ds.a.ncols(), path),
+                None => PathSnapshot::from_fit(&ds.a, &job.responses[i], &fit.output.selected),
+            };
+            let mut meta = ModelMeta {
+                name: job.names[i].clone(),
+                algo: job.spec.algorithm.name().to_string(),
+                dataset: job.dataset.clone(),
+                t: job.spec.t,
+                b: job.spec.algorithm.block(),
+                p: job.spec.effective_ranks(),
+                seed: job.seed,
+                stop: fit.output.stop.word().to_string(),
+                spec: format!("{spec_str} batch={:016x}", response_fingerprint(&job.responses[i])),
+                rows: ds.a.nrows(),
+                selection: String::new(),
+            };
+            for c in [Criterion::Cp, Criterion::Aic, Criterion::Bic] {
+                if let Ok(sel) = select::rank_steps(&snapshot, meta.rows, c) {
+                    meta.selection =
+                        select::upsert_selection(&meta.selection, c.name(), sel.best_step);
+                }
+            }
+            entries.push((meta, snapshot));
+        }
+        let models = self.shared.registry.insert_many(entries);
+        drop(span);
+        let reg = crate::obs::global();
+        reg.counter("calars_batch_fits_total", "", "Bulk fit batches executed.").inc();
+        reg.counter("calars_batch_responses_total", "", "Responses fitted through bulk batches.")
+            .add(batch.shared.responses as u64);
+        reg.counter(
+            "calars_batch_passes_saved_total",
+            "",
+            "Matrix passes avoided by lockstep batching vs sequential fits.",
+        )
+        .add(batch.shared.passes_saved());
+        Ok(BatchOutcome { models, shared: batch.shared, wall_secs: batch.wall_secs })
+    }
+
     /// Counter snapshot for `/stats`.
     pub fn stats(&self) -> QueueStats {
         let submitted = self.shared.submitted.load(Ordering::Relaxed);
@@ -363,6 +477,20 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, shared: Arc<Shared>) {
         };
         set_state(&shared, job, state);
     }
+}
+
+/// FNV-1a over a response vector's f64 bits — the identity token that
+/// keeps batch-fitted models out of ordinary warm-start families (see
+/// [`FitQueue::run_batch`]).
+fn response_fingerprint(b: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in b {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
 }
 
 /// Queue-wait latency histogram in the global metrics registry,
@@ -530,6 +658,57 @@ mod tests {
             );
         }
         assert_eq!(q.stats().completed, 3);
+    }
+
+    #[test]
+    fn batch_fit_registers_models_without_polluting_warm_start() {
+        let q = queue();
+        let ds = datasets::by_name("tiny", 42).unwrap();
+        let responses: Vec<Vec<f64>> = vec![
+            ds.b.clone(),
+            ds.b.iter().map(|v| -v).collect(),
+            ds.b.iter().map(|v| 2.0 * v).collect(),
+        ];
+        let job = BatchFitJob {
+            names: vec!["a".into(), "b".into(), "c".into()],
+            dataset: "tiny".into(),
+            seed: 42,
+            spec: FitSpec::new(Algorithm::Lars).t(6),
+            responses,
+        };
+        let out = q.run_batch(&job).unwrap();
+        assert_eq!(out.models.len(), 3);
+        assert_eq!(out.shared.responses, 3);
+        assert!(out.shared.passes_saved() > 0, "{:?}", out.shared);
+        for (&id, name) in out.models.iter().zip(["a", "b", "c"]) {
+            let rec = q.shared.registry.get(id).expect("batch member registered");
+            assert_eq!(rec.meta.name, name);
+            assert!(rec.meta.spec.contains("batch="), "{}", rec.meta.spec);
+            assert!(rec.snapshot.len() > 0);
+            assert!(
+                select::find_selection(&rec.meta.selection, "cp").is_some(),
+                "in-sample selection tokens precomputed for batch members"
+            );
+        }
+        // An ordinary fit of the same family must rerun, not reuse a
+        // path fitted against a posted response panel.
+        let j = q.submit(lars_job(6));
+        match q.wait(j, Duration::from_secs(60)).unwrap() {
+            JobState::Done { reused, .. } => assert!(!reused, "batch must not warm-start fits"),
+            other => panic!("{other:?}"),
+        }
+        // Mismatched names fail before any fitting starts.
+        let bad = BatchFitJob { names: vec!["x".into()], ..job };
+        assert!(q.run_batch(&bad).is_err());
+        // Unknown datasets fail cleanly too.
+        let lost = BatchFitJob {
+            names: vec!["x".into()],
+            dataset: "no-such-data".into(),
+            seed: 1,
+            spec: FitSpec::new(Algorithm::Lars).t(4),
+            responses: vec![vec![1.0; 8]],
+        };
+        assert!(q.run_batch(&lost).unwrap_err().root().contains("no-such-data"));
     }
 
     #[test]

@@ -254,25 +254,48 @@ impl ModelRegistry {
     /// (write-through; IO failures are logged, not fatal — the
     /// in-memory registry stays authoritative).
     pub fn insert(&self, meta: ModelMeta, snapshot: PathSnapshot) -> u64 {
+        self.insert_many(vec![(meta, snapshot)])[0]
+    }
+
+    /// Register a whole batch of snapshots under **one** lock
+    /// acquisition — the bulk `/fit` path's registry transaction. Ids
+    /// are assigned in input order and the batch becomes visible
+    /// atomically: a concurrent `list`/`get` sees either none of the
+    /// batch or all of it, and no other insert can interleave its ids
+    /// into the batch's range. Versioning, LRU eviction, and
+    /// write-through persistence behave exactly like [`Self::insert`]
+    /// (family versions resolve incrementally, so two same-family
+    /// members of one batch get consecutive versions).
+    pub fn insert_many(&self, entries: Vec<(ModelMeta, PathSnapshot)>) -> Vec<u64> {
+        let mut ids = Vec::with_capacity(entries.len());
+        if entries.is_empty() {
+            return ids;
+        }
         let mut g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
-        let version = match meta.family_key() {
-            Some(key) => {
-                g.models
-                    .values()
-                    .filter(|r| r.meta.family_key().as_deref() == Some(key.as_str()))
-                    .map(|r| r.version)
-                    .max()
-                    .unwrap_or(0)
-                    + 1
-            }
-            None => 1,
-        };
-        let id = g.next_id;
-        g.next_id += 1;
-        let rec = Arc::new(ModelRecord { id, version, meta, snapshot, created_unix: now_unix() });
-        g.models.insert(id, rec.clone());
-        g.lru.push(id);
-        g.inserted += 1;
+        let mut recs: Vec<Arc<ModelRecord>> = Vec::with_capacity(entries.len());
+        for (meta, snapshot) in entries {
+            let version = match meta.family_key() {
+                Some(key) => {
+                    g.models
+                        .values()
+                        .filter(|r| r.meta.family_key().as_deref() == Some(key.as_str()))
+                        .map(|r| r.version)
+                        .max()
+                        .unwrap_or(0)
+                        + 1
+                }
+                None => 1,
+            };
+            let id = g.next_id;
+            g.next_id += 1;
+            let rec =
+                Arc::new(ModelRecord { id, version, meta, snapshot, created_unix: now_unix() });
+            g.models.insert(id, rec.clone());
+            g.lru.push(id);
+            g.inserted += 1;
+            recs.push(rec);
+            ids.push(id);
+        }
         let mut victims = Vec::new();
         while g.models.len() > self.capacity {
             let victim = g.lru.remove(0);
@@ -286,17 +309,25 @@ impl ModelRegistry {
         // file). Inserts are fit-completion rare; the brief stall of
         // concurrent get()s is an acceptable price for consistency.
         if let Some(dir) = &self.persist_dir {
-            let mut buf = Vec::new();
-            let write = write_record(&mut buf, &rec)
-                .and_then(|_| std::fs::write(Self::record_path(dir, id), &buf).map_err(Into::into));
-            if let Err(e) = write {
-                eprintln!("registry: persisting model {id} failed: {e:#}");
+            for rec in &recs {
+                // A batch larger than the capacity evicts its own
+                // oldest members before this point; never write them.
+                if victims.contains(&rec.id) {
+                    continue;
+                }
+                let mut buf = Vec::new();
+                let write = write_record(&mut buf, rec).and_then(|_| {
+                    std::fs::write(Self::record_path(dir, rec.id), &buf).map_err(Into::into)
+                });
+                if let Err(e) = write {
+                    eprintln!("registry: persisting model {} failed: {e:#}", rec.id);
+                }
             }
             for victim in &victims {
                 let _ = std::fs::remove_file(Self::record_path(dir, *victim));
             }
         }
-        id
+        ids
     }
 
     /// Fetch a model and mark it most-recently-used.
@@ -705,6 +736,40 @@ mod tests {
         assert_eq!(reg.get(id2).unwrap().version, 2, "same family bumps version");
         let other = reg.insert(meta("year", 3), snap(10, 3));
         assert_eq!(reg.get(other).unwrap().version, 1, "new family restarts at 1");
+    }
+
+    #[test]
+    fn insert_many_assigns_contiguous_ids_and_versions() {
+        let reg = ModelRegistry::new(8);
+        let before = reg.insert(meta("tiny", 3), snap(10, 3));
+        let ids = reg.insert_many(vec![
+            (meta("tiny", 5), snap(10, 5)),
+            (meta("year", 3), snap(10, 3)),
+            (meta("tiny", 7), snap(10, 7)),
+        ]);
+        assert_eq!(ids.len(), 3);
+        assert_eq!(ids[1], ids[0] + 1, "batch ids are contiguous");
+        assert_eq!(ids[2], ids[1] + 1);
+        assert!(ids[0] > before);
+        assert_eq!(reg.get(ids[0]).unwrap().version, 2, "family version bumps in-batch");
+        assert_eq!(reg.get(ids[1]).unwrap().version, 1);
+        assert_eq!(reg.get(ids[2]).unwrap().version, 3);
+        assert_eq!(reg.stats().inserted, 4);
+        assert!(reg.insert_many(Vec::new()).is_empty(), "empty batch is a no-op");
+    }
+
+    #[test]
+    fn insert_many_respects_capacity() {
+        let reg = ModelRegistry::new(2);
+        let ids = reg.insert_many(vec![
+            (meta("a", 2), snap(4, 2)),
+            (meta("b", 2), snap(4, 2)),
+            (meta("c", 2), snap(4, 2)),
+        ]);
+        assert_eq!(reg.len(), 2, "over-capacity batch evicts down to capacity");
+        assert!(reg.get(ids[0]).is_none(), "oldest batch member evicted first");
+        assert!(reg.get(ids[1]).is_some());
+        assert!(reg.get(ids[2]).is_some());
     }
 
     #[test]

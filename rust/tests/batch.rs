@@ -1,0 +1,164 @@
+//! Integration contract for `calars::batch` — batched multi-response
+//! fitting:
+//!
+//! * **k=1 ≡ single fit, bitwise**, for every batching-capable
+//!   algorithm (lockstep lars/lasso and the fallback family), across
+//!   `CALARS_THREADS ∈ {1,2,4}` — property-tested over random
+//!   dense/sparse problems;
+//! * **thread-count invariance** of whole batches;
+//! * fallback algorithms match their sequential fits;
+//! * typed errors for degenerate panels.
+
+use calars::data::synthetic::{generate, SyntheticSpec};
+use calars::data::{datasets, Dataset};
+use calars::fit::{Algorithm, FitResult, FitSpec, Fitter, NoopObserver};
+use calars::par::{self, ThreadPool};
+use calars::proptest_lite::{check, Config};
+use calars::rng::Pcg64;
+
+/// The algorithms `fit_batch` accepts, with batch-safe knobs.
+fn batch_specs(t: usize) -> Vec<(&'static str, FitSpec)> {
+    vec![
+        ("lars", FitSpec::new(Algorithm::Lars).t(t)),
+        ("lasso", FitSpec::new(Algorithm::LassoLars { lambda_min: 1e-6 }).t(t)),
+        ("omp", FitSpec::new(Algorithm::Omp).t(t)),
+        ("fs", FitSpec::new(Algorithm::ForwardSelection).t(t)),
+        ("blars", FitSpec::new(Algorithm::Blars { b: 2 }).t(t).ranks(2)),
+    ]
+}
+
+/// Every output field as raw bits, so equality means bit-identity.
+fn signature(fit: &FitResult) -> Vec<u64> {
+    let out = &fit.output;
+    let mut sig: Vec<u64> = vec![
+        out.selected.len() as u64,
+        out.cols_at_iter.len() as u64,
+        out.stop as u64,
+    ];
+    sig.extend(out.selected.iter().map(|&c| c as u64));
+    sig.extend(out.cols_at_iter.iter().map(|&c| c as u64));
+    sig.extend(out.residual_norms.iter().map(|r| r.to_bits()));
+    sig.extend(out.y.iter().map(|y| y.to_bits()));
+    if let Some(path) = &fit.lasso {
+        sig.push(path.drops as u64);
+        for bp in &path.breakpoints {
+            sig.push(bp.lambda.to_bits());
+            sig.extend(bp.support.iter().map(|&c| c as u64));
+        }
+    }
+    sig
+}
+
+fn responses(ds: &Dataset, k: usize, seed: u64) -> Vec<Vec<f64>> {
+    let m = ds.a.nrows();
+    let mut rng = Pcg64::new(seed);
+    (0..k)
+        .map(|i| {
+            if i == 0 {
+                ds.b.clone()
+            } else {
+                (0..m).map(|_| rng.normal()).collect()
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_k1_batch_is_bit_identical_to_single_fit_at_any_thread_count() {
+    check(
+        Config { cases: 8, seed: 0xBA7C4 },
+        |rng, size| {
+            let spec = SyntheticSpec {
+                m: 40 + size * 15,
+                n: 30 + size * 10,
+                density: if rng.uniform() < 0.5 { 1.0 } else { 0.3 },
+                col_skew: rng.uniform_range(0.0, 1.0),
+                k_true: 4 + size / 2,
+                noise: rng.uniform_range(0.0, 0.05),
+            };
+            generate(&spec, rng.next_u64())
+        },
+        |s| {
+            let t = 6.min(s.a.ncols() / 3).max(2);
+            for (label, spec) in batch_specs(t) {
+                let solo = spec
+                    .fit(&s.a, &s.b, &mut NoopObserver)
+                    .map_err(|e| format!("{label}: solo fit failed: {e:#}"))?;
+                for threads in [1usize, 2, 4] {
+                    // Small grain forces multi-chunk execution even at
+                    // this size.
+                    let pool = ThreadPool::new(threads, 256);
+                    let batch = par::with_pool(&pool, || {
+                        spec.fit_batch(&s.a, std::slice::from_ref(&s.b))
+                    })
+                    .map_err(|e| format!("{label}: batch fit failed: {e:#}"))?;
+                    if signature(&batch.fits[0]) != signature(&solo) {
+                        return Err(format!(
+                            "{label}: k=1 batch diverged from single fit at \
+                             threads={threads}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn whole_batches_are_thread_count_invariant() {
+    let ds = datasets::tiny(21);
+    let panel = responses(&ds, 6, 77);
+    for (label, spec) in batch_specs(5) {
+        let mut base: Option<Vec<Vec<u64>>> = None;
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads, 256);
+            let sigs = par::with_pool(&pool, || {
+                let batch = spec.fit_batch(&ds.a, &panel).expect(label);
+                batch.fits.iter().map(signature).collect::<Vec<_>>()
+            });
+            match &base {
+                None => base = Some(sigs),
+                Some(b) => assert_eq!(&sigs, b, "{label}: diverged at threads={threads}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn fallback_algorithms_match_their_sequential_fits() {
+    // No lockstep core for omp/fs/blars — the batch must still return
+    // exactly what k independent fits would.
+    let ds = datasets::tiny_dense(3);
+    let panel = responses(&ds, 4, 11);
+    for (label, spec) in batch_specs(5) {
+        let batch = spec.fit_batch(&ds.a, &panel).expect(label);
+        assert_eq!(batch.fits.len(), panel.len(), "{label}");
+        for (i, b) in panel.iter().enumerate() {
+            let solo = spec.fit(&ds.a, b, &mut NoopObserver).expect(label);
+            assert_eq!(
+                signature(&batch.fits[i]),
+                signature(&solo),
+                "{label}: response {i} diverged from its sequential fit"
+            );
+        }
+        assert_eq!(batch.shared.responses, panel.len(), "{label}");
+    }
+}
+
+#[test]
+fn degenerate_panels_answer_typed_errors() {
+    let ds = datasets::tiny(5);
+    let spec = FitSpec::new(Algorithm::Lars).t(4);
+    let empty: Vec<Vec<f64>> = Vec::new();
+    assert!(spec.fit_batch(&ds.a, &empty).is_err(), "empty panel");
+
+    let short = vec![ds.b.clone(), vec![1.0; ds.a.nrows() - 1]];
+    let err = spec.fit_batch(&ds.a, &short).unwrap_err();
+    assert!(err.root().contains("response 1"), "wrong-length row names the response: {err:#}");
+
+    let mut poisoned = vec![ds.b.clone(), ds.b.clone()];
+    poisoned[1][0] = f64::NAN;
+    let err = spec.fit_batch(&ds.a, &poisoned).unwrap_err();
+    assert!(err.root().contains("response 1"), "NaN row names the response: {err:#}");
+}

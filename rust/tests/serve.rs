@@ -10,8 +10,8 @@ use calars::proptest_lite::{check, Config};
 use calars::rng::Pcg64;
 use calars::select::Criterion;
 use calars::serve::{
-    run_load, spawn_server, FitRequest, LoadOptions, ModelMeta, ModelRegistry, PredictRequest,
-    PredictionEngine, Query, SelectRequest, Selector, ServeClient, ServeOptions,
+    run_load, spawn_server, BatchFitRequest, FitRequest, LoadOptions, ModelMeta, ModelRegistry,
+    PredictRequest, PredictionEngine, Query, SelectRequest, Selector, ServeClient, ServeOptions,
 };
 use std::sync::Arc;
 use std::time::Duration;
@@ -680,5 +680,74 @@ fn models_listing_reports_spec_and_stop_reason() {
     assert!(body.contains("\"stop\":\"target_reached\""), "{body}");
     assert!(body.contains("\"spec\":\"algo=lars t=6"), "{body}");
     assert!(body.contains("\"seed\":42"), "{body}");
+    server.stop();
+}
+
+/// Bulk `POST /fit` end to end: a body with `y` rows fits the whole
+/// response panel in one lockstep batch, registers every model in one
+/// registry transaction, and answers with the ids, the shared-work
+/// ledger, and a trace id.
+#[test]
+fn http_bulk_fit_registers_panel_models() {
+    let server = spawn_server(&ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr_string();
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    let ds = calars::data::datasets::by_name("tiny", 42).unwrap();
+    let mut rng = Pcg64::new(31);
+    let responses: Vec<Vec<f64>> = (0..3)
+        .map(|i| {
+            if i == 0 {
+                ds.b.clone()
+            } else {
+                (0..ds.a.nrows()).map(|_| rng.normal()).collect()
+            }
+        })
+        .collect();
+    let base =
+        FitRequest { name: "panel".into(), dataset: "tiny".into(), t: 6, ..Default::default() };
+    let req = BatchFitRequest {
+        base,
+        names: vec!["west".into(), "east".into(), "north".into()],
+        responses,
+    };
+    let (status, body) = client.request("POST", "/fit", &req.encode()).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"trace_id\":\""), "every JSON response echoes a trace id: {body}");
+    assert!(body.contains("\"count\":3"), "{body}");
+    assert!(body.contains("\"shared\":{\"responses\":3"), "{body}");
+    assert!(body.contains("\"passes_saved\":"), "{body}");
+
+    // All three models are listed, named, and flagged as batch-fitted
+    // (the response fingerprint in the stored spec keeps them out of
+    // ordinary warm-start families).
+    let (status, models) = client.request("GET", "/models", "").unwrap();
+    assert_eq!(status, 200);
+    for name in ["west", "east", "north"] {
+        assert!(models.contains(&format!("\"name\":\"{name}\"")), "{models}");
+    }
+    assert!(models.contains(" batch="), "{models}");
+
+    // An ordinary /fit of the same family must run (or warm-reuse) a
+    // dataset-response fit — never answer from a batch model.
+    let fit = FitRequest { dataset: "tiny".into(), t: 6, ..Default::default() };
+    let model = client.fit(&fit, true).unwrap();
+    let (_, stats) = client.request("GET", "/stats", "").unwrap();
+    assert_eq!(
+        section_u64(&stats, "registry", "warm_reused"),
+        0,
+        "plain fit must not be warm-answered by a batch model: {stats}"
+    );
+    assert!(model > 0);
+
+    // Malformed bulk bodies answer 4xx and keep the connection alive.
+    let (status, resp) = client.request("POST", "/fit", "y 1 2\ny 3\n").unwrap();
+    assert!((400..500).contains(&status), "ragged panel: {status} ({resp})");
+    let (status, _) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200);
     server.stop();
 }

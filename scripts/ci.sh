@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # CI for calars: format check, release build, test suite, rustdoc with
 # warnings denied, all five examples built AND executed, perf stage
-# (parallel-scaling bench + serving smoke, both in JSON mode, recorded
-# as BENCH_parallel.json / BENCH_serving.json), a live
+# (parallel-scaling + batched-fitting benches + serving smoke, all in
+# JSON mode, recorded as BENCH_parallel.json / BENCH_batch.json /
+# BENCH_serving.json), a live
 # serve → fit → predict → shutdown smoke cycle, and an observability
 # stage that benches serving with tracing off vs on and gates the p50
 # overhead at ≤ 5% (BENCH_obs.json) — README §CI.
@@ -81,6 +82,26 @@ echo "== perf: model selection =="
 # determinism gate.
 cargo bench --bench selection -- --json > BENCH_select.json
 check_bench_json BENCH_select.json
+
+echo "== perf: batched multi-response fitting =="
+# The batch bench self-gates bit-identity (k=1 batch vs single fit,
+# plus thread-count invariance) and exits nonzero on divergence; the
+# awk gate below enforces the shared-work payoff: batched lockstep must
+# beat k sequential fits by ≥ 2× at k=64.
+cargo bench --bench batch -- --json > BENCH_batch.json
+check_bench_json BENCH_batch.json
+awk '
+/"bench":"batch_lars_k64"/ {
+    if (match($0, /"speedup":[0-9.]+/)) {
+        s = substr($0, RSTART + 10, RLENGTH - 10) + 0
+        if (s < 2.0) { printf "batch speedup gate: %s < 2.0x\n", s; bad = 1 }
+        found += 1
+    }
+}
+END {
+    if (found < 1) { print "batch speedup gate: batch_lars_k64 record missing"; exit 1 }
+    exit bad
+}' BENCH_batch.json
 
 echo "== serving smoke + perf =="
 PORT="${CALARS_SMOKE_PORT:-17878}"

@@ -9,7 +9,7 @@ set -euo pipefail
 
 FILES=("$@")
 if [ ${#FILES[@]} -eq 0 ]; then
-    for f in BENCH_kernels.json BENCH_select.json BENCH_parallel.json BENCH_serving.json BENCH_obs.json; do
+    for f in BENCH_kernels.json BENCH_select.json BENCH_batch.json BENCH_parallel.json BENCH_serving.json BENCH_obs.json; do
         [ -f "$f" ] && FILES+=("$f")
     done
 fi
