@@ -80,7 +80,7 @@ fn runtime_bridge() {
     let j0 = c_nat
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        .max_by(|a, b| a.1.abs().total_cmp(&b.1.abs()))
         .map(|(j, _)| j)
         .unwrap();
     let mut u = vec![0.0; dense.nrows()];
@@ -94,7 +94,7 @@ fn runtime_bridge() {
         .iter()
         .enumerate()
         .filter(|(_, g)| g.is_finite())
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(j, _)| j)
         .unwrap();
     println!(

@@ -68,7 +68,7 @@ pub fn fit_observed(
         a.at_r(&r, &mut c);
         let best = (0..n)
             .filter(|&j| !in_model[j])
-            .max_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap());
+            .max_by(|&i, &j| c[i].abs().total_cmp(&c[j].abs()));
         let Some(j) = best else {
             stop = StopReason::PoolExhausted;
             break;

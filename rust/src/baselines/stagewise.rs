@@ -42,7 +42,7 @@ pub fn stagewise(
     for step in 0..max_steps {
         a.at_r(&r, &mut c);
         let j = (0..n)
-            .max_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap())
+            .max_by(|&i, &j| c[i].abs().total_cmp(&c[j].abs()))
             .unwrap();
         if c[j].abs() <= tol {
             break;

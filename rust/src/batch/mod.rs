@@ -232,6 +232,7 @@ impl FitSpec {
         }
 
         let before = store.counters();
+        // audit: allow(DET-TIME) -- wall_secs metadata only: the clock value never reaches numerics or control flow
         let t0 = Instant::now();
         let batch_span = crate::obs::span("batch_fit");
 
@@ -287,6 +288,7 @@ fn fit_chunk(
     responses: &[Vec<f64>],
 ) -> (Vec<Result<FitResult>>, PassCounts) {
     let mut passes = PassCounts::default();
+    // audit: allow(DET-TIME) -- per-chunk wall_secs metadata only: the clock value never reaches numerics or control flow
     let t0 = Instant::now();
     let results: Vec<Result<FitResult>> = match spec.algorithm {
         Algorithm::Lars => {

@@ -295,6 +295,7 @@ pub fn fit_observed(
             sq
         });
         // Quality instrumentation (not part of the algorithm's comm):
+        // audit: allow(DET-SUM) -- serial combine of per-rank partials in ascending rank order: fixed order regardless of CALARS_THREADS
         residual_norms.push(local_sq.iter().sum::<f64>().sqrt());
 
         // Steps 18-19 (master): in-place correlation updates.

@@ -11,6 +11,8 @@
 //! All arithmetic phases are measured into a private [`Tracer`] so
 //! T-bLARS can assemble critical-path timings and the Figure 7/8
 //! breakdowns.
+//
+// audit: allow(DET-TIME, file) -- every Instant::now here feeds the Tracer's phase timings only; no clock value ever reaches the numerics or control flow
 
 use super::steplars::{step_lars, StepKind};
 use crate::cluster::{Phase, Tracer};

@@ -35,6 +35,7 @@ pub fn densify(n: usize, support: &[usize], coefs: &[f64]) -> Vec<f64> {
 pub fn residual_norm(a: &Matrix, support: &[usize], coefs: &[f64], b: &[f64]) -> f64 {
     let mut ax = vec![0.0; a.nrows()];
     a.gemv_cols(support, coefs, &mut ax);
+    // audit: allow(DET-SUM) -- serial left-to-right iterator sum: one fixed order by construction, kept as-is so recorded residual norms never change bits
     ax.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt()
 }
 

@@ -25,7 +25,7 @@ fn argselect_b_keyed<F: Fn(usize) -> f64>(n: usize, b: usize, f: F, ascending: b
     }
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (f(i), i)).collect();
     pairs.select_nth_unstable_by(b - 1, |a, c| {
-        let ord = a.0.partial_cmp(&c.0).unwrap_or(std::cmp::Ordering::Equal);
+        let ord = a.0.total_cmp(&c.0);
         if ascending {
             ord
         } else {
@@ -75,7 +75,7 @@ mod tests {
         let got = argmax_b_by(v.len(), b, |i| v[i]);
         assert_eq!(got.len(), b.min(v.len()));
         let mut sorted: Vec<f64> = v.to_vec();
-        sorted.sort_by(|a, c| c.partial_cmp(a).unwrap());
+        sorted.sort_by(|a, c| c.total_cmp(a));
         let thresh = sorted[b.min(v.len()) - 1];
         for &i in &got {
             assert!(v[i] >= thresh - 1e-12, "v[{i}]={} < thresh {}", v[i], thresh);

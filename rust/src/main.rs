@@ -53,6 +53,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("bench-serve") => cmd_bench_serve(args),
         Some("info") => cmd_info(args),
+        Some("audit") => cmd_audit(),
         Some(other) => bail!("unknown command '{other}'"),
         None => {
             println!("{}", usage());
@@ -83,6 +84,7 @@ USAGE:
                [--dataset NAME] [--algo A] [--t N] [--b N] [--step K | --lambda L]
                [--seed N] [--shutdown] [--json]
   calars info  [--json]
+  calars audit [--root DIR] [--deny-warnings] [--explain RULE] [--list]
 
 run drives the unified calars::fit estimator API: every algorithm —
 the paper's three, the exact LASSO-LARS path, and the greedy
@@ -130,8 +132,23 @@ load generator; without --addr it spins up an in-process server first.
 it as BENCH_serving.json); info --json reports cores/threads/features
 for annotating bench output.
 
+audit runs the calars-audit static-analysis pass over the workspace
+(DESIGN.md §'Static analysis & invariants'): determinism, panic-safety,
+unsafe-budget and zero-dependency rules with file:line diagnostics.
+--explain RULE documents one invariant; CI runs --deny-warnings.
+
 Datasets: sector, year, e2006_log1p, e2006_tfidf (scaled synthetic
 substitutes; see DESIGN.md), plus tiny / tiny_dense for smoke runs."
+}
+
+/// `calars audit` — delegate to the calars-audit library so the
+/// subcommand and the standalone `calars-audit` binary are
+/// byte-identical. The audit owns its own argv (and exit code: 1 means
+/// findings, not a CLI error), so re-read the raw args past "audit".
+fn cmd_audit() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let at = raw.iter().position(|a| a == "audit").map_or(raw.len(), |i| i + 1);
+    std::process::exit(calars_audit::run_cli(&raw[at..]));
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

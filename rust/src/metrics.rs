@@ -43,7 +43,7 @@ pub struct TimingSummary {
 impl TimingSummary {
     pub fn from_samples(mut samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty());
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let n = samples.len();
         TimingSummary {
             best: samples[0],
@@ -92,7 +92,7 @@ impl LatencyStats {
         if samples.is_empty() {
             return LatencyStats::default();
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let n = samples.len();
         LatencyStats {
             count: n,

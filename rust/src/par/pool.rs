@@ -83,8 +83,14 @@ impl Latch {
         Latch { remaining: Mutex::new(n), cv: Condvar::new() }
     }
 
+    // Poison recovery throughout: the latch count and the job queue
+    // are plain data that stay consistent even if a panic unwinds
+    // while a guard is held (task panics are caught inside the job
+    // closure anyway), so a poisoned mutex carries no broken invariant
+    // — recover the guard instead of cascading the panic.
     fn done(&self) {
-        let mut g = self.remaining.lock().unwrap();
+        let mut g =
+            self.remaining.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         *g -= 1;
         if *g == 0 {
             self.cv.notify_all();
@@ -92,9 +98,10 @@ impl Latch {
     }
 
     fn wait(&self) {
-        let mut g = self.remaining.lock().unwrap();
+        let mut g =
+            self.remaining.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         while *g > 0 {
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 }
@@ -167,12 +174,14 @@ impl ThreadPool {
         let slots: Vec<Slot<T>> = (0..n).map(|_| Mutex::new(None)).collect();
         let latch = Latch::new(n);
         {
-            let mut state = self.shared.state.lock().unwrap();
+            let mut state =
+                self.shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             for (slot, task) in slots.iter().zip(tasks) {
                 let latch_ref = &latch;
                 let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     let result = catch_unwind(AssertUnwindSafe(task));
-                    *slot.lock().unwrap() = Some(result);
+                    *slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+                        Some(result);
                     latch_ref.done();
                 });
                 // SAFETY: `run` blocks on `latch` until every job queued
@@ -189,7 +198,8 @@ impl ThreadPool {
         slots
             .into_iter()
             .map(|slot| {
-                match slot.into_inner().unwrap().expect("pool job completed without a result") {
+                let cell = slot.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+                match cell.expect("pool job completed without a result") {
                     Ok(v) => v,
                     Err(payload) => std::panic::resume_unwind(payload),
                 }
@@ -201,7 +211,8 @@ impl ThreadPool {
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st =
+                self.shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
@@ -216,7 +227,8 @@ fn worker_loop(shared: Arc<Shared>, min_chunk: usize) {
     WORKER_MIN_CHUNK.with(|c| c.set(min_chunk));
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st =
+                shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             loop {
                 if let Some(j) = st.jobs.pop_front() {
                     break j;
@@ -224,7 +236,10 @@ fn worker_loop(shared: Arc<Shared>, min_chunk: usize) {
                 if st.shutdown {
                     return;
                 }
-                st = shared.work_cv.wait(st).unwrap();
+                st = shared
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
         job();

@@ -227,7 +227,15 @@ impl PredictionEngine {
         for (i, res) in crate::par::run_tasks(tasks).into_iter().flatten() {
             out[i] = Some(res);
         }
-        out.into_iter().map(|o| o.expect("every query answered")).collect()
+        out.into_iter()
+            .map(|o| {
+                o.unwrap_or_else(|| {
+                    Err(crate::error::Error::internal(
+                        "batch evaluation missed a query (scatter bug)",
+                    ))
+                })
+            })
+            .collect()
     }
 
     /// Evaluate one (model, selector) group of a batch; `idxs` are the
@@ -338,25 +346,35 @@ fn resolve_coefs(rec: &ModelRecord, selector: Selector) -> Result<Vec<f64>> {
             if snap.steps.is_empty() {
                 return Err(anyhow!("model {} stores an empty path", rec.id));
             }
+            // The step indices below all come from snap itself, so a
+            // miss is an internal inconsistency, not a caller error.
+            let coefs_at = |k: usize| {
+                snap.dense_coefs(k).ok_or_else(|| {
+                    crate::error::Error::internal(format!(
+                        "model {}: stored step {k} has no coefficients",
+                        rec.id
+                    ))
+                })
+            };
             // Exact breakpoint hit → the stored vector, bit-identical.
             if let Some(k) = snap.steps.iter().position(|s| s.lambda == l) {
-                return Ok(snap.dense_coefs(k).unwrap());
+                return coefs_at(k);
             }
             // Outside the stored range → clamp to the nearest end.
             if l >= snap.steps[0].lambda {
-                return Ok(snap.dense_coefs(0).unwrap());
+                return coefs_at(0);
             }
             let last = snap.steps.len() - 1;
             if l <= snap.steps[last].lambda {
-                return Ok(snap.dense_coefs(last).unwrap());
+                return coefs_at(last);
             }
             // Bracket and interpolate linearly in λ.
             for k in 0..last {
                 let (hi, lo) = (snap.steps[k].lambda, snap.steps[k + 1].lambda);
                 if l < hi && l > lo {
                     let t = (hi - l) / (hi - lo);
-                    let a = snap.dense_coefs(k).unwrap();
-                    let b = snap.dense_coefs(k + 1).unwrap();
+                    let a = coefs_at(k)?;
+                    let b = coefs_at(k + 1)?;
                     return Ok(a
                         .iter()
                         .zip(&b)
@@ -376,9 +394,12 @@ fn resolve_coefs(rec: &ModelRecord, selector: Selector) -> Result<Vec<f64>> {
             }
             let sel = select::rank_steps(snap, rec.meta.rows, criterion)
                 .map_err(|e| e.context(format!("auto-selection on model {}", rec.id)))?;
-            Ok(snap
-                .dense_coefs(sel.best_step)
-                .expect("criterion scores are indexed by stored steps"))
+            snap.dense_coefs(sel.best_step).ok_or_else(|| {
+                crate::error::Error::internal(format!(
+                    "model {}: auto-selected step {} has no stored coefficients",
+                    rec.id, sel.best_step
+                ))
+            })
         }
     }
 }

@@ -213,7 +213,10 @@ impl GramCache {
                 g.lru.touch_or_push(name.to_string());
                 return store;
             }
-            let old = g.entries.remove(name).expect("entry just observed");
+        }
+        // Same name, different contents: invalidate the stale entry
+        // (remove is a no-op when the name was never registered).
+        if let Some(old) = g.entries.remove(name) {
             g.lru.remove_by(|k| k == name);
             g.dataset_bytes -= old.bytes;
             g.invalidations += 1;

@@ -1029,6 +1029,7 @@ impl Batcher {
         let handle = thread::Builder::new()
             .name("calars-serve-batch".to_string())
             .spawn(move || b2.run(engine))
+            // audit: allow(PANIC-UNWRAP) -- startup-time spawn: runs before the server accepts traffic, and a host that cannot spawn threads cannot serve
             .expect("spawn batcher");
         *lock_recover(&b.worker, &b.lock_recoveries) = Some(handle);
         b

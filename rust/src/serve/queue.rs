@@ -217,6 +217,7 @@ impl FitQueue {
                 std::thread::Builder::new()
                     .name(format!("calars-fit-{widx}"))
                     .spawn(move || worker_loop(rx, shared))
+                    // audit: allow(PANIC-UNWRAP) -- startup-time spawn: runs before the server accepts traffic, and a host that cannot spawn threads cannot serve
                     .expect("spawn fit worker"),
             );
         }
@@ -543,8 +544,11 @@ fn run_fit(
     meta.stop = result.output.stop.word().to_string();
     meta.rows = ds.a.nrows();
     // on_complete always fires when fit() returns Ok, so the snapshot
-    // is always captured.
-    let snapshot = snap.into_snapshot().expect("snapshot observer ran");
+    // is always captured; a miss is an internal contract violation,
+    // reported as a typed error rather than a worker panic.
+    let snapshot = snap
+        .into_snapshot()
+        .ok_or_else(|| crate::error::Error::internal("fit returned Ok without a path snapshot"))?;
     // Precompute the in-sample selection tokens so /models can say
     // which step each criterion serves without a separate pass; CV
     // tokens land later via POST /select.

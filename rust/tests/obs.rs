@@ -262,7 +262,7 @@ fn metrics_and_traces_under_concurrent_load() {
     }
     assert!(!by_route.is_empty(), "no latency buckets in {second}");
     for (route, mut buckets) in by_route {
-        buckets.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
         for w in buckets.windows(2) {
             assert!(w[0].1 <= w[1].1, "{route}: buckets not cumulative");
         }

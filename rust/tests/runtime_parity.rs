@@ -77,7 +77,7 @@ fn gstep_parity_with_native_gamma() {
     // Build a plausible iteration state: select the top column, form u.
     let mut c = vec![0.0; n];
     d.a.at_r(&d.b, &mut c);
-    let j0 = (0..n).max_by(|&i, &j| c[i].abs().partial_cmp(&c[j].abs()).unwrap()).unwrap();
+    let j0 = (0..n).max_by(|&i, &j| c[i].abs().total_cmp(&c[j].abs())).unwrap();
     let mut u = vec![0.0; m];
     d.a.gemv_cols(&[j0], &[c[j0].signum()], &mut u);
     let ck = c[j0].abs();

@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# CI for calars: format check, release build, test suite, rustdoc with
+# CI for calars: format check, release build, test suite, the
+# calars-audit static-analysis pass (determinism / panic-safety /
+# unsafe-budget / zero-dep contracts, warnings denied), rustdoc with
 # warnings denied, all five examples built AND executed, perf stage
 # (parallel-scaling + batched-fitting benches + serving smoke, all in
 # JSON mode, recorded as BENCH_parallel.json / BENCH_batch.json /
@@ -22,6 +24,12 @@ cargo build --release
 
 echo "== tests =="
 cargo test -q
+
+echo "== audit (determinism / panic-safety / unsafe-budget / zero-dep gates) =="
+# calars-audit walks rust/src, rust/tests and benches with the in-tree
+# lexer + rule engine; --deny-warnings also fails on stale allow
+# markers, so every suppression in the tree stays load-bearing.
+target/release/calars audit --deny-warnings
 
 echo "== docs (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

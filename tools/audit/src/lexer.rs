@@ -1,0 +1,384 @@
+//! A hand-rolled Rust scanner: good enough to separate *code* from
+//! *comments* and to blank out string/char literal contents, which is
+//! all the rule engine needs to match patterns without false positives
+//! from prose ("don't call `.unwrap()`" in a doc comment must not
+//! fire a panic-safety rule).
+//!
+//! The scanner is line-oriented: for every source line it produces the
+//! code text (string/char literal contents replaced by spaces,
+//! comments removed, byte positions preserved for ASCII) and the
+//! comment text (everything inside `//`/`///`/`//!` and `/* */`,
+//! where the `SAFETY:` and `audit: allow(..)` markers live). A second
+//! pass brace-matches `#[cfg(test)]` items so rules can exempt test
+//! code.
+//!
+//! Handled: nested block comments, escaped string characters, raw
+//! strings (`r"…"`, `r#"…"#`, any hash depth), byte strings/chars, and
+//! the char-literal vs. lifetime ambiguity (`'a'` vs. `&'a str`).
+//! Non-ASCII bytes are blanked to spaces — every pattern the rules
+//! match is pure ASCII, and blanking keeps line/column arithmetic
+//! trivial.
+
+/// One scanned source line.
+#[derive(Debug, Default, Clone)]
+pub struct LineScan {
+    /// Code with comments stripped and literal contents blanked.
+    pub code: String,
+    /// Comment text on this line (line comments and the slice of any
+    /// block comment crossing it), without the `//`/`/*` markers.
+    pub comment: String,
+}
+
+/// A fully scanned file.
+#[derive(Debug, Default)]
+pub struct FileScan {
+    pub lines: Vec<LineScan>,
+    /// `in_test[i]` — line `i` (0-based) sits inside a `#[cfg(test)]`
+    /// item (attribute line through closing brace, inclusive).
+    pub in_test: Vec<bool>,
+}
+
+impl FileScan {
+    /// The blanked code joined with `\n` — the text rules match on.
+    pub fn code_text(&self) -> String {
+        let mut out = String::new();
+        for (i, l) in self.lines.iter().enumerate() {
+            if i > 0 {
+                out.push('\n');
+            }
+            out.push_str(&l.code);
+        }
+        out
+    }
+
+    /// 1-based line number of byte offset `off` in [`Self::code_text`].
+    pub fn line_of_offset(&self, text: &str, off: usize) -> usize {
+        text.as_bytes()[..off].iter().filter(|&&b| b == b'\n').count() + 1
+    }
+
+    /// True when 1-based `line` is inside a `#[cfg(test)]` item.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.in_test.get(line.saturating_sub(1)).copied().unwrap_or(false)
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Normal,
+    /// Inside a `"…"` string (escape-aware, may span lines).
+    Str,
+    /// Inside `r##"…"##` with the given hash count.
+    RawStr(usize),
+    /// Inside `/* … */` at the given nesting depth.
+    Block(usize),
+    /// Inside `// …` until end of line.
+    Line,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank a byte into the code stream: ASCII passes through, anything
+/// else becomes a space (see module docs).
+fn code_push(code: &mut String, b: u8) {
+    code.push(if b.is_ascii() { b as char } else { ' ' });
+}
+
+fn comment_push(comment: &mut String, b: u8) {
+    comment.push(if b.is_ascii() { b as char } else { ' ' });
+}
+
+/// Scan `src` into per-line code/comment streams plus test-region
+/// marking.
+pub fn scan(src: &str) -> FileScan {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut lines: Vec<LineScan> = Vec::new();
+    let mut cur = LineScan::default();
+    let mut mode = Mode::Normal;
+    let mut i = 0;
+    let mut prev_code: u8 = 0; // last byte pushed to code (ident check)
+
+    while i < n {
+        let b = bytes[i];
+        if b == b'\n' {
+            lines.push(std::mem::take(&mut cur));
+            if mode == Mode::Line {
+                mode = Mode::Normal;
+            }
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Line => {
+                comment_push(&mut cur.comment, b);
+                i += 1;
+            }
+            Mode::Block(depth) => {
+                if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else if b == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    mode = if depth == 1 { Mode::Normal } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    comment_push(&mut cur.comment, b);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if b == b'\\' {
+                    cur.code.push(' ');
+                    if i + 1 < n && bytes[i + 1] != b'\n' {
+                        cur.code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if b == b'"' {
+                    cur.code.push('"');
+                    prev_code = b'"';
+                    mode = Mode::Normal;
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if b == b'"' && bytes[i + 1..].len() >= hashes
+                    && bytes[i + 1..i + 1 + hashes].iter().all(|&h| h == b'#')
+                {
+                    for _ in 0..=hashes {
+                        cur.code.push(' ');
+                    }
+                    prev_code = b'"';
+                    mode = Mode::Normal;
+                    i += 1 + hashes;
+                } else {
+                    cur.code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Normal => {
+                if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+                    mode = Mode::Line;
+                    i += 2;
+                    // Skip the doc-comment marker so `///x` and `//!x`
+                    // yield comment text `x`.
+                    if i < n && (bytes[i] == b'/' || bytes[i] == b'!') {
+                        i += 1;
+                    }
+                } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if b == b'"' {
+                    cur.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (b == b'r' || b == b'b') && !is_ident(prev_code) && raw_str_at(bytes, i).is_some()
+                {
+                    let (hashes, consumed) = raw_str_at(bytes, i).unwrap();
+                    for _ in 0..consumed {
+                        cur.code.push(' ');
+                    }
+                    mode = Mode::RawStr(hashes);
+                    i += consumed;
+                } else if b == b'b' && bytes.get(i + 1) == Some(&b'"') && !is_ident(prev_code) {
+                    cur.code.push('b');
+                    prev_code = b'b';
+                    i += 1; // the quote is handled on the next iteration
+                } else if b == b'\'' {
+                    i = scan_quote(bytes, i, &mut cur.code);
+                    prev_code = b'\'';
+                } else {
+                    code_push(&mut cur.code, b);
+                    prev_code = if b.is_ascii() { b } else { b' ' };
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+
+    let in_test = mark_test_regions(&lines);
+    FileScan { lines, in_test }
+}
+
+/// If a raw (byte) string literal starts at `i` (`r"`, `r#"`, `br"`,
+/// `br##"`, …), return (hash count, bytes consumed through the opening
+/// quote).
+fn raw_str_at(bytes: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if bytes.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if bytes.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while bytes.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if bytes.get(j) == Some(&b'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Scan a `'` at position `i`: either a char literal (blank its
+/// contents) or a lifetime (pass through). Returns the next position.
+fn scan_quote(bytes: &[u8], i: usize, code: &mut String) -> usize {
+    let n = bytes.len();
+    // Escaped char literal: '\n', '\'', '\u{…}' …
+    if bytes.get(i + 1) == Some(&b'\\') {
+        code.push('\'');
+        let mut j = i + 2;
+        while j < n && bytes[j] != b'\'' && bytes[j] != b'\n' {
+            code.push(' ');
+            j += if bytes[j] == b'\\' { 2 } else { 1 };
+        }
+        code.push(' '); // the escape lead byte
+        if j < n && bytes[j] == b'\'' {
+            code.push('\'');
+            return j + 1;
+        }
+        return j;
+    }
+    // Plain char literal 'x' (x may be multi-byte — find the closing
+    // quote within a few bytes).
+    if bytes.get(i + 1).is_some() && bytes.get(i + 1) != Some(&b'\'') {
+        for j in i + 2..(i + 6).min(n) {
+            if bytes[j] == b'\'' {
+                // Lifetime-vs-char disambiguation: 'a' is a char
+                // literal, 'a: or 'a, or 'a> are lifetimes. A closing
+                // quote directly after one scalar means char literal —
+                // unless the "contents" continue as an identifier
+                // ('static' never occurs: too long for this window).
+                if j == i + 2 && is_ident(bytes[i + 1]) && j + 1 < n && is_ident(bytes[j + 1]) {
+                    break; // e.g. `'a'b` — not a char literal; treat as lifetime
+                }
+                code.push('\'');
+                for _ in i + 1..j {
+                    code.push(' ');
+                }
+                code.push('\'');
+                return j + 1;
+            }
+            if !bytes[j].is_ascii() {
+                continue; // inside a multi-byte scalar
+            }
+            if j == i + 2 && !is_ident(bytes[j]) {
+                break; // 'x) or 'x, — lifetime-like, stop looking
+            }
+        }
+    }
+    // Lifetime (or stray quote): emit it and move on.
+    code.push('\'');
+    i + 1
+}
+
+/// Mark the line span of every `#[cfg(test)]` item by brace matching
+/// over the blanked code.
+fn mark_test_regions(lines: &[LineScan]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let squashed: String =
+            lines[i].code.chars().filter(|c| !c.is_whitespace()).collect();
+        if !squashed.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Attribute found: everything until the item's closing brace
+        // is test code.
+        let start = i;
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        let end = j.min(lines.len() - 1);
+        for t in in_test.iter_mut().take(end + 1).skip(start) {
+            *t = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_separated() {
+        let s = scan("let x = \"call .unwrap() here\"; // but .expect( in prose\n");
+        assert!(!s.lines[0].code.contains("unwrap"));
+        assert!(s.lines[0].comment.contains(".expect("));
+        assert!(s.lines[0].code.contains("let x ="));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let s = scan("let p = r#\"panic!(\"x\")\"#;\nlet q = 1;\n");
+        assert!(!s.code_text().contains("panic!"));
+        assert!(s.lines[1].code.contains("let q = 1;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let s = scan("a /* one /* two */ still */ b\n/* open\n.unwrap()\n*/ c\n");
+        assert!(s.lines[0].code.contains('a') && s.lines[0].code.contains('b'));
+        assert!(!s.code_text().contains("unwrap"));
+        assert!(s.lines[2].comment.contains(".unwrap()"));
+        assert!(s.lines[3].code.contains('c'));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) -> char { '\\'' }\nlet c = 'y';\nlet d = b'\"';\n");
+        let t = s.code_text();
+        assert!(t.contains("<'a>"), "lifetime kept: {t}");
+        assert!(t.contains("&'a str"));
+        assert!(!t.contains('y'), "char literal contents blanked: {t}");
+        // The quote inside b'"' must not open a string.
+        assert!(s.lines[2].code.contains("let d ="));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn prod2() {}\n";
+        let s = scan(src);
+        assert!(!s.is_test_line(1));
+        assert!(s.is_test_line(2));
+        assert!(s.is_test_line(4));
+        assert!(s.is_test_line(5));
+        assert!(!s.is_test_line(6));
+    }
+
+    #[test]
+    fn multiline_string_stays_blanked() {
+        let s = scan("let s = \"line one\n.unwrap()\nend\";\nlet t = 2;\n");
+        assert!(!s.code_text().contains("unwrap"));
+        assert!(s.lines[3].code.contains("let t = 2;"));
+    }
+}

@@ -1,0 +1,311 @@
+//! calars-audit: the project's own static-analysis pass.
+//!
+//! Walks the calars source tree and enforces the contracts no compiler
+//! checks — determinism (one canonical summation order, total
+//! comparators, no unordered hash iteration in hot paths, no hidden
+//! clock/RNG inputs in fitter cores), panic safety in the serve layer
+//! (typed errors, poison-recovering locks), the unsafe budget (par
+//! only, every block documented), and the zero-dependency workspace.
+//! See DESIGN.md §"Static analysis & invariants" for the rationale
+//! behind each rule; `calars audit --explain <RULE>` prints the same
+//! argument at the terminal.
+//!
+//! The pass is deliberately a *scanner*, not a compiler plugin: a
+//! hand-rolled lexer ([`lexer`]) separates code from comments and
+//! blanks literals, and the rules ([`rules`]) are ASCII pattern
+//! matchers over the blanked code. That keeps the tool zero-dep and
+//! fast (one pass over ~15k lines), at the price of being heuristic —
+//! which is exactly what the reasoned `// audit: allow(RULE) -- why`
+//! escape hatch is for.
+
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+
+use rules::{AllowMarker, FileCtx, Finding, Severity};
+use std::path::{Path, PathBuf};
+
+/// What to audit. [`Config::default`] matches CI: the real walk set,
+/// warnings allowed. Fixture tests swap in miniature trees.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Root-relative directories to walk for `.rs` files.
+    pub walk_dirs: Vec<String>,
+    /// Promote warnings (ALLOW-UNUSED) to failures.
+    pub deny_warnings: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            walk_dirs: vec![
+                "rust/src".to_string(),
+                "rust/tests".to_string(),
+                "benches".to_string(),
+            ],
+            deny_warnings: false,
+        }
+    }
+}
+
+/// The outcome of one audit run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unsuppressed findings, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by reasoned allow markers.
+    pub suppressed: usize,
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Manifests checked for DEP-EXT.
+    pub manifests_checked: usize,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// Does this report pass under the given policy?
+    pub fn is_clean(&self, deny_warnings: bool) -> bool {
+        self.errors() == 0 && (!deny_warnings || self.warnings() == 0)
+    }
+
+    /// Human-readable diagnostics, one `file:line: severity[RULE]:
+    /// message` per finding, plus a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let sev = match f.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            };
+            out.push_str(&format!(
+                "{}:{}: {}[{}]: {}\n",
+                f.path, f.line, sev, f.rule, f.message
+            ));
+        }
+        out.push_str(&format!(
+            "audit: {} error(s), {} warning(s), {} finding(s) suppressed by allow \
+             markers, {} file(s) + {} manifest(s) checked\n",
+            self.errors(),
+            self.warnings(),
+            self.suppressed,
+            self.files_scanned,
+            self.manifests_checked,
+        ));
+        out
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for
+/// deterministic output.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative forward-slash path for diagnostics.
+fn rel_path(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Run the full audit over `root` with `cfg`.
+pub fn run_audit(root: &Path, cfg: &Config) -> std::io::Result<Report> {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut markers: Vec<AllowMarker> = Vec::new();
+    let mut report = Report::default();
+
+    for dir in &cfg.walk_dirs {
+        let abs = root.join(dir);
+        if !abs.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs_files(&abs, &mut files)?;
+        for file in files {
+            let src = std::fs::read_to_string(&file)?;
+            let scan = lexer::scan(&src);
+            let path = rel_path(root, &file);
+            let ctx = FileCtx { path: &path, scan: &scan };
+            rules::check_file(&ctx, &mut findings);
+            markers.extend(rules::collect_markers(&path, &scan));
+            report.files_scanned += 1;
+        }
+    }
+
+    // DEP-EXT over the root manifest and every workspace member's.
+    let root_toml_path = root.join("Cargo.toml");
+    if let Ok(root_toml) = std::fs::read_to_string(&root_toml_path) {
+        manifest::check_manifest("Cargo.toml", &root_toml, &mut findings);
+        report.manifests_checked += 1;
+        for member in manifest::workspace_members(&root_toml) {
+            let member_toml = root.join(&member).join("Cargo.toml");
+            if let Ok(toml) = std::fs::read_to_string(&member_toml) {
+                manifest::check_manifest(
+                    &format!("{member}/Cargo.toml"),
+                    &toml,
+                    &mut findings,
+                );
+                report.manifests_checked += 1;
+            }
+        }
+    }
+
+    let (mut kept, suppressed) = rules::apply_markers(findings, &mut markers);
+    kept.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    report.findings = kept;
+    report.suppressed = suppressed;
+    Ok(report)
+}
+
+/// Walk up from `start` to the workspace root (the directory whose
+/// `Cargo.toml` declares `[workspace]`).
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        let toml = dir.join("Cargo.toml");
+        if let Ok(s) = std::fs::read_to_string(&toml) {
+            if s.contains("[workspace]") {
+                return Some(dir);
+            }
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+const USAGE: &str = "\
+calars-audit — static-analysis pass for the calars contracts
+
+USAGE:
+    calars-audit [--root DIR] [--deny-warnings]
+    calars-audit --explain RULE
+    calars-audit --list
+
+OPTIONS:
+    --root DIR        workspace root (default: discovered from the cwd)
+    --deny-warnings   treat warnings (ALLOW-UNUSED) as failures (CI mode)
+    --explain RULE    print the invariant behind a rule id and exit
+    --list            list every rule id with a one-line summary
+
+EXIT CODES:
+    0  clean (no errors; no warnings under --deny-warnings)
+    1  findings reported
+    2  usage error
+";
+
+/// The CLI entry point shared by the `calars-audit` binary and the
+/// `calars audit` subcommand. Returns the process exit code.
+pub fn run_cli(args: &[String]) -> i32 {
+    let mut root_arg: Option<String> = None;
+    let mut deny_warnings = false;
+    let mut explain: Option<String> = None;
+    let mut list = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                let Some(v) = args.get(i) else {
+                    eprintln!("error: --root needs a directory\n\n{USAGE}");
+                    return 2;
+                };
+                root_arg = Some(v.clone());
+            }
+            "--deny-warnings" => deny_warnings = true,
+            "--explain" => {
+                i += 1;
+                let Some(v) = args.get(i) else {
+                    eprintln!("error: --explain needs a rule id\n\n{USAGE}");
+                    return 2;
+                };
+                explain = Some(v.clone());
+            }
+            "--list" => list = true,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return 0;
+            }
+            other => {
+                eprintln!("error: unknown argument `{other}`\n\n{USAGE}");
+                return 2;
+            }
+        }
+        i += 1;
+    }
+
+    if list {
+        for r in rules::RULES {
+            println!("{:<14} {}", r.id, r.summary);
+        }
+        return 0;
+    }
+    if let Some(id) = explain {
+        let Some(doc) = rules::rule_doc(&id) else {
+            eprintln!("error: unknown rule `{id}` — known rules:");
+            for r in rules::RULES {
+                eprintln!("  {:<14} {}", r.id, r.summary);
+            }
+            return 2;
+        };
+        println!("{} — {}\n\n{}", doc.id, doc.summary, doc.explain);
+        return 0;
+    }
+
+    let root = match root_arg {
+        Some(r) => PathBuf::from(r),
+        None => {
+            let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            match find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "error: no workspace root found above {} (pass --root DIR)",
+                        cwd.display()
+                    );
+                    return 2;
+                }
+            }
+        }
+    };
+    if !root.is_dir() {
+        eprintln!("error: --root {} is not a directory", root.display());
+        return 2;
+    }
+
+    let cfg = Config { deny_warnings, ..Config::default() };
+    match run_audit(&root, &cfg) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.is_clean(cfg.deny_warnings) {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("error: audit walk failed: {e}");
+            2
+        }
+    }
+}

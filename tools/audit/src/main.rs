@@ -1,0 +1,7 @@
+//! `calars-audit` standalone binary. All logic lives in the library so
+//! the `calars audit` CLI subcommand shares it byte-for-byte.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(calars_audit::run_cli(&args));
+}

@@ -1,0 +1,207 @@
+//! DEP-EXT: the zero-dependency guard.
+//!
+//! A minimal, purpose-built Cargo.toml reader — not a TOML parser. It
+//! understands exactly the shapes this workspace uses: the root
+//! `[workspace] members = [...]` array and flat
+//! `[dependencies]`-family sections whose entries are either
+//! `name = "1.0"` (external — a finding) or inline tables
+//! (`name = { path = "..." }` is in-workspace and allowed;
+//! `version`/`git`/`registry` keys make it external).
+
+use crate::rules::{Finding, Severity};
+
+/// Strip a `#` comment (outside string literals) and trailing space.
+fn strip_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return line[..i].trim_end(),
+            _ => {}
+        }
+    }
+    line.trim_end()
+}
+
+/// Parse `members = [...]` from the root manifest (single- or
+/// multi-line arrays).
+pub fn workspace_members(root_toml: &str) -> Vec<String> {
+    let mut members = Vec::new();
+    let mut in_workspace = false;
+    let mut in_members = false;
+    for raw in root_toml.lines() {
+        let line = strip_comment(raw).trim();
+        if line.starts_with('[') {
+            in_workspace = line == "[workspace]";
+            in_members = false;
+            continue;
+        }
+        if in_workspace && line.starts_with("members") {
+            in_members = true;
+        }
+        if in_members {
+            for piece in line.split('"').skip(1).step_by(2) {
+                members.push(piece.to_string());
+            }
+            if line.contains(']') {
+                in_members = false;
+            }
+        }
+    }
+    members
+}
+
+/// Check one member manifest for external dependencies.
+///
+/// `path` is the repo-relative manifest path used in diagnostics.
+pub fn check_manifest(path: &str, toml: &str, out: &mut Vec<Finding>) {
+    const DEP_SECTIONS: [&str; 3] =
+        ["[dependencies]", "[dev-dependencies]", "[build-dependencies]"];
+    let mut in_deps = false;
+    // Open `[dependencies.name]`-style table: (name, header line,
+    // saw path key, saw external key).
+    let mut dotted: Option<(String, usize, bool, bool)> = None;
+    let mut flush_dotted = |d: &mut Option<(String, usize, bool, bool)>,
+                            out: &mut Vec<Finding>| {
+        if let Some((name, line, has_path, has_ext)) = d.take() {
+            if has_ext || !has_path {
+                out.push(Finding {
+                    path: path.to_string(),
+                    line,
+                    rule: "DEP-EXT",
+                    severity: Severity::Error,
+                    message: format!(
+                        "external dependency `{name}`: the workspace is zero-dependency \
+                         by contract — vendor the functionality in-tree (only \
+                         `path = …` workspace members are allowed)"
+                    ),
+                });
+            }
+        }
+    };
+    for (idx, raw) in toml.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.starts_with('[') {
+            flush_dotted(&mut dotted, out);
+            in_deps = DEP_SECTIONS.contains(&line);
+            if !in_deps {
+                for s in DEP_SECTIONS {
+                    let dotted_prefix = format!("{}.", &s[..s.len() - 1]);
+                    if let Some(rest) = line.strip_prefix(&dotted_prefix) {
+                        let name = rest.trim_end_matches(']').to_string();
+                        dotted = Some((name, idx + 1, false, false));
+                    }
+                }
+            }
+            continue;
+        }
+        if let Some(d) = dotted.as_mut() {
+            if line.starts_with("path") {
+                d.2 = true;
+            }
+            if ["version", "git", "registry", "branch", "rev"]
+                .iter()
+                .any(|k| line.starts_with(k))
+            {
+                d.3 = true;
+            }
+            continue;
+        }
+        if !in_deps || line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once('=') else { continue };
+        let name = name.trim();
+        let value = value.trim();
+        let external = if value.starts_with('{') {
+            // Inline table: path-only members of this workspace are
+            // fine; any resolution hint pointing outside is not.
+            ["version", "git ", "git=", "registry", "branch", "rev ", "rev="]
+                .iter()
+                .any(|k| value.contains(k))
+                || !value.contains("path")
+        } else {
+            // `name = "1.0"` — a registry version requirement.
+            true
+        };
+        if external {
+            out.push(Finding {
+                path: path.to_string(),
+                line: idx + 1,
+                rule: "DEP-EXT",
+                severity: Severity::Error,
+                message: format!(
+                    "external dependency `{name}`: the workspace is zero-dependency \
+                     by contract — vendor the functionality in-tree (only \
+                     `path = …` workspace members are allowed)"
+                ),
+            });
+        }
+    }
+    flush_dotted(&mut dotted, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn members_single_and_multi_line() {
+        let m = workspace_members("[workspace]\nmembers = [\"rust\", \"tools/audit\"]\n");
+        assert_eq!(m, vec!["rust".to_string(), "tools/audit".to_string()]);
+        let m2 = workspace_members(
+            "[workspace]\nmembers = [\n    \"rust\", # core\n    \"tools/audit\",\n]\n",
+        );
+        assert_eq!(m2, vec!["rust".to_string(), "tools/audit".to_string()]);
+    }
+
+    #[test]
+    fn registry_dep_is_flagged_path_dep_is_not() {
+        let mut out = Vec::new();
+        check_manifest(
+            "rust/Cargo.toml",
+            "[package]\nname = \"calars\"\n\n[dependencies]\nserde = \"1.0\"\ncalars-audit = { path = \"../tools/audit\" }\n",
+            &mut out,
+        );
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "DEP-EXT");
+        assert_eq!(out[0].line, 5);
+        assert!(out[0].message.contains("serde"));
+    }
+
+    #[test]
+    fn git_and_versioned_tables_are_flagged() {
+        let mut out = Vec::new();
+        check_manifest(
+            "x/Cargo.toml",
+            "[dev-dependencies]\nfoo = { git = \"https://example.com/foo\" }\nbar = { path = \"../bar\", version = \"0.1\" }\n",
+            &mut out,
+        );
+        assert_eq!(out.len(), 2, "{out:?}");
+    }
+
+    #[test]
+    fn dotted_dep_tables_are_checked() {
+        let mut out = Vec::new();
+        check_manifest(
+            "x/Cargo.toml",
+            "[dependencies.rayon]\nversion = \"1.8\"\n\n[dependencies.local]\npath = \"../local\"\n",
+            &mut out,
+        );
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].message.contains("rayon"));
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn empty_sections_and_comments_are_fine() {
+        let mut out = Vec::new();
+        check_manifest(
+            "tools/audit/Cargo.toml",
+            "[package]\nname = \"calars-audit\"\n\n[dependencies]\n# none, by design\n\n[lib]\nname = \"calars_audit\"\n",
+            &mut out,
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

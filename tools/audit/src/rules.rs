@@ -1,0 +1,1037 @@
+//! The rule engine: every project invariant as a machine-checked rule
+//! over [`crate::lexer::FileScan`]s.
+//!
+//! Rules are scoped by path (a panic in a test is fine; a panic in a
+//! serve request path is not) and report `file:line` findings with
+//! stable rule ids. Scoped exceptions are granted by allow markers in
+//! comments:
+//!
+//! ```text
+//! // audit: allow(RULE-ID) -- reason            (this line + the next)
+//! // audit: allow(RULE-ID, file) -- reason      (whole file)
+//! ```
+//!
+//! A marker without a ` -- reason` is itself a finding (ALLOW-REASON),
+//! and a marker that suppresses nothing is a warning (ALLOW-UNUSED) —
+//! so the exception list can only shrink, never rot.
+
+use crate::lexer::FileScan;
+
+/// Severity of a finding. Warnings exit 0 unless `--deny-warnings`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// One diagnostic.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Repo-relative path (forward slashes).
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+}
+
+/// Static rule metadata: id, one-line summary, and the `--explain`
+/// documentation of the invariant it enforces.
+pub struct RuleDoc {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub explain: &'static str,
+}
+
+/// Every rule the engine knows, in report order.
+pub const RULES: &[RuleDoc] = &[
+    RuleDoc {
+        id: "DET-CMP",
+        summary: "no partial_cmp(..).unwrap() — use total_cmp",
+        explain: "Determinism / NaN totality.  `a.partial_cmp(&b).unwrap()` panics the\n\
+                  moment a NaN reaches the comparison — exactly the degenerate inputs\n\
+                  the mLARS tournament hardening (PR 5) exists for.  `f64::total_cmp`\n\
+                  is a total order (IEEE 754 totalOrder): NaN sorts deterministically\n\
+                  instead of aborting the fit, so every max_by/sort_by over\n\
+                  correlations, scores or latencies stays panic-free and\n\
+                  reproducible bit-for-bit.  Scope: all audited code, including\n\
+                  tests and benches (a panicking comparator in a test helper hides\n\
+                  the regression it should catch).",
+    },
+    RuleDoc {
+        id: "DET-MAP",
+        summary: "no unordered HashMap/HashSet iteration in hot-path modules",
+        explain: "Determinism / iteration order.  HashMap and HashSet iteration order\n\
+                  is randomized per process; iterating one inside fit/kern/lars/\n\
+                  batch/select can silently reorder floating-point combines and\n\
+                  break the bit-identity contract across CALARS_THREADS (and across\n\
+                  runs).  Keyed *lookup* is fine — the rule fires on `.iter()`,\n\
+                  `.keys()`, `.values()`, `.into_iter()`, `.drain()`, `.retain()`\n\
+                  and `for … in` over a hash container declared in the same file.\n\
+                  If the iteration is genuinely order-insensitive, or the results\n\
+                  are sorted before use, mark the site:\n\
+                  `// audit: allow(DET-MAP) -- sorted before use`.\n\
+                  Scope: rust/src/{fit,kern,lars,batch,select}, non-test code.",
+    },
+    RuleDoc {
+        id: "DET-TIME",
+        summary: "no wall-clock reads or RNG construction in fitter cores",
+        explain: "Determinism / hidden inputs.  The fitter cores (rust/src/lars,\n\
+                  rust/src/baselines, rust/src/batch) must be pure functions of\n\
+                  (matrix, response, spec): an Instant::now() or RNG constructed\n\
+                  inside a core is a hidden input that can leak into control flow\n\
+                  (adaptive cutoffs, sampled work) and desynchronize the one\n\
+                  canonical summation order.  Timing belongs at the calars::fit\n\
+                  boundary (FitResult.wall_secs) or behind the observability layer;\n\
+                  randomness must come in through the spec's seeds.  Sites whose\n\
+                  clock reads feed *only* phase timings (never numerics) carry a\n\
+                  file-scope allow with that argument.  Scope: fitter-core modules,\n\
+                  non-test code.",
+    },
+    RuleDoc {
+        id: "DET-SUM",
+        summary: "no ad-hoc f64 reductions outside calars::kern",
+        explain: "Determinism / one canonical summation order.  Floating-point\n\
+                  addition does not associate; the whole point of calars::kern is\n\
+                  that every additive reduction in the model-numerics path runs in\n\
+                  ONE canonical order (4-accumulator pairwise kernels + fixed par\n\
+                  chunk combines), so refactors cannot silently reorder a sum and\n\
+                  change served bits.  An ad-hoc `.sum::<f64>()` or additive\n\
+                  `fold(0.0, …)` outside kern/kern::reference creates a second,\n\
+                  unaudited order.  Max/min folds are order-insensitive and exempt.\n\
+                  Fix by calling a kern kernel, or allow-mark with an argument for\n\
+                  why the order is fixed (e.g. a serial combine over per-rank\n\
+                  partials in rank order).  Scope: rust/src/{lars,linalg,batch,fit,\n\
+                  select,baselines,cluster,data}, non-test code.",
+    },
+    RuleDoc {
+        id: "PANIC-UNWRAP",
+        summary: "no unwrap/expect/panic in serve request paths",
+        explain: "Panic safety.  A panic inside a serve request path kills a worker\n\
+                  mid-request; before PR 5's hardening one poisoned lock then\n\
+                  cascaded into a server-wide abort.  Request-path code must return\n\
+                  typed errors (crate::error::ErrorKind — the HTTP layer maps\n\
+                  InvalidSpec→400, RankDeficient→422, Internal→500) instead of\n\
+                  calling .unwrap()/.expect()/panic!/unreachable!/todo!.\n\
+                  Startup-time spawns (before the server accepts traffic) may\n\
+                  allow-mark with that reason.  Scope: rust/src/serve (minus the\n\
+                  load-generator client loadgen.rs), non-test code;\n\
+                  `.lock().unwrap()` is reported by PANIC-LOCK instead.",
+    },
+    RuleDoc {
+        id: "PANIC-LOCK",
+        summary: "every .lock() must recover from poisoning, not unwrap",
+        explain: "Panic safety / lock discipline.  `mutex.lock().unwrap()` converts\n\
+                  one panicking thread into a poison-panic in every OTHER thread\n\
+                  that touches the mutex — the exact cascade PR 5 removed from the\n\
+                  serve layer.  Every guard under calars's plain-data locking\n\
+                  discipline is recoverable, so lock acquisition must use the\n\
+                  recovery idiom\n\
+                  `.lock().unwrap_or_else(std::sync::PoisonError::into_inner)`\n\
+                  (or an explicit match on the PoisonError).  The nightly\n\
+                  ThreadSanitizer CI job dynamically backs this static rule.\n\
+                  Scope: all rust/src non-test code.",
+    },
+    RuleDoc {
+        id: "UNSAFE-SCOPE",
+        summary: "unsafe code is permitted only in rust/src/par",
+        explain: "Unsafe budget.  The crate's entire unsafe surface is the two\n\
+                  lifetime-erasure sites in the thread pool (rust/src/par), where\n\
+                  the fork-join structure makes borrowed closures sound (see\n\
+                  DESIGN.md §Static analysis — the aliasing/lifetime argument).\n\
+                  `unsafe` anywhere else is a finding: new unsafe code needs a new\n\
+                  documented budget, not a quiet block.  Scope: every audited file,\n\
+                  tests and benches included.",
+    },
+    RuleDoc {
+        id: "UNSAFE-DOC",
+        summary: "every unsafe block needs a // SAFETY: comment",
+        explain: "Unsafe budget / documentation.  Each `unsafe` block inside the\n\
+                  permitted scope must be immediately preceded by (or share a line\n\
+                  with) a `// SAFETY:` comment stating the invariant that makes it\n\
+                  sound — the reviewer-facing half of the unsafe budget.  Scope:\n\
+                  rust/src/par.",
+    },
+    RuleDoc {
+        id: "DEP-EXT",
+        summary: "no external dependencies in any Cargo.toml",
+        explain: "Zero-dependency contract.  The workspace builds offline: rng,\n\
+                  argv parsing, property testing, HTTP, the on-disk model format —\n\
+                  all hand-rolled in-tree.  Any [dependencies]/[dev-dependencies]/\n\
+                  [build-dependencies] entry that resolves outside the workspace\n\
+                  (a version, git or registry source) is a finding.  In-workspace\n\
+                  `path = …` members (calars-audit itself) are allowed — they are\n\
+                  part of the tree, not an external dependency.  Scope: the root\n\
+                  manifest and every workspace member manifest.",
+    },
+    RuleDoc {
+        id: "ALLOW-REASON",
+        summary: "allow markers must name a known rule and carry a reason",
+        explain: "Exception hygiene.  `// audit: allow(RULE) -- reason` grants a\n\
+                  scoped, *reasoned* exception; the reason is the audit trail.  A\n\
+                  marker with no ` -- reason`, or naming a rule id the engine does\n\
+                  not know (typo-proofing), is itself an error — the tree must\n\
+                  contain zero unexplained exceptions.",
+    },
+    RuleDoc {
+        id: "ALLOW-UNUSED",
+        summary: "allow markers that suppress nothing (warning)",
+        explain: "Exception hygiene.  An allow marker that no longer suppresses any\n\
+                  finding is dead weight — the code it excused was fixed or moved.\n\
+                  Reported as a warning (an error under --deny-warnings, which CI\n\
+                  uses) so stale exceptions get deleted instead of accumulating.",
+    },
+];
+
+/// Look up a rule id (exact match).
+pub fn rule_doc(id: &str) -> Option<&'static RuleDoc> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// What the engine knows about one file before matching: its scan and
+/// its repo-relative path classification.
+pub struct FileCtx<'a> {
+    pub path: &'a str,
+    pub scan: &'a FileScan,
+}
+
+impl FileCtx<'_> {
+    fn under(&self, prefix: &str) -> bool {
+        self.path.starts_with(prefix)
+    }
+
+    /// Hot-path modules for DET-MAP.
+    fn is_hot_module(&self) -> bool {
+        ["rust/src/fit/", "rust/src/kern/", "rust/src/lars/", "rust/src/batch/", "rust/src/select/"]
+            .iter()
+            .any(|p| self.under(p))
+    }
+
+    /// Fitter-core modules for DET-TIME.
+    fn is_fitter_core(&self) -> bool {
+        ["rust/src/lars/", "rust/src/baselines/", "rust/src/batch/"]
+            .iter()
+            .any(|p| self.under(p))
+    }
+
+    /// Model-numerics modules for DET-SUM (kern is the canonical home
+    /// and therefore exempt).
+    fn is_numerics_module(&self) -> bool {
+        [
+            "rust/src/lars/",
+            "rust/src/linalg/",
+            "rust/src/batch/",
+            "rust/src/fit/",
+            "rust/src/select/",
+            "rust/src/baselines/",
+            "rust/src/cluster/",
+            "rust/src/data/",
+        ]
+        .iter()
+        .any(|p| self.under(p))
+    }
+
+    /// Serve request-path files for PANIC-UNWRAP (loadgen is the
+    /// bench *client*, not a request path).
+    fn is_serve_request_path(&self) -> bool {
+        self.under("rust/src/serve/") && !self.path.ends_with("loadgen.rs")
+    }
+
+    fn is_par(&self) -> bool {
+        self.under("rust/src/par/")
+    }
+
+    fn is_src(&self) -> bool {
+        self.under("rust/src/")
+    }
+}
+
+/// Run every source rule on one scanned file.
+pub fn check_file(ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+    let text = ctx.scan.code_text();
+    det_cmp(ctx, &text, out);
+    if ctx.is_hot_module() {
+        det_map(ctx, &text, out);
+    }
+    if ctx.is_fitter_core() {
+        det_time(ctx, &text, out);
+    }
+    if ctx.is_numerics_module() {
+        det_sum(ctx, &text, out);
+    }
+    if ctx.is_serve_request_path() {
+        panic_unwrap(ctx, &text, out);
+    }
+    if ctx.is_src() {
+        panic_lock(ctx, &text, out);
+    }
+    unsafe_rules(ctx, &text, out);
+}
+
+fn finding(ctx: &FileCtx<'_>, line: usize, rule: &'static str, message: String) -> Finding {
+    let severity =
+        if rule == "ALLOW-UNUSED" { Severity::Warning } else { Severity::Error };
+    Finding { path: ctx.path.to_string(), line, rule, severity, message }
+}
+
+/// Is `text[i..]` preceded by an identifier character?
+fn ident_before(text: &str, i: usize) -> bool {
+    i > 0 && {
+        let b = text.as_bytes()[i - 1];
+        b.is_ascii_alphanumeric() || b == b'_'
+    }
+}
+
+/// Is the byte right after `end` an identifier character?
+fn ident_after(text: &str, end: usize) -> bool {
+    text.as_bytes().get(end).is_some_and(|b| b.is_ascii_alphanumeric() || *b == b'_')
+}
+
+/// Offset of every word-boundary occurrence of `needle`.
+fn word_occurrences(text: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = text[from..].find(needle) {
+        let i = from + rel;
+        if !ident_before(text, i) && !ident_after(text, i + needle.len()) {
+            out.push(i);
+        }
+        from = i + needle.len();
+    }
+    out
+}
+
+/// Given the offset of an opening `(`, return the offset just past its
+/// matching `)` (None if unbalanced).
+fn match_paren(text: &str, open: usize) -> Option<usize> {
+    let bytes = text.as_bytes();
+    let mut depth = 0usize;
+    for (k, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k + 1);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn skip_ws(text: &str, mut i: usize) -> usize {
+    let bytes = text.as_bytes();
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// After offset `i`, does `.unwrap()`/`.expect(` follow (whitespace
+/// allowed before the dot)?  Returns the matched suffix name.
+fn panicky_suffix(text: &str, i: usize) -> Option<&'static str> {
+    let j = skip_ws(text, i);
+    for (pat, name) in [(".unwrap", "unwrap"), (".expect", "expect")] {
+        if text[j..].starts_with(pat) {
+            let end = j + pat.len();
+            if !ident_after(text, end) && text.as_bytes().get(skip_ws(text, end)) == Some(&b'(') {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+// ── DET-CMP ──────────────────────────────────────────────────────────
+
+fn det_cmp(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
+    for i in word_occurrences(text, "partial_cmp") {
+        let open = skip_ws(text, i + "partial_cmp".len());
+        if text.as_bytes().get(open) != Some(&b'(') {
+            continue;
+        }
+        let Some(close) = match_paren(text, open) else { continue };
+        if let Some(sfx) = panicky_suffix(text, close) {
+            if sfx == "unwrap" {
+                let line = ctx.scan.line_of_offset(text, i);
+                out.push(finding(
+                    ctx,
+                    line,
+                    "DET-CMP",
+                    "partial_cmp(..).unwrap() panics on NaN; use total_cmp (or handle \
+                     the None with documented NaN semantics)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+// ── DET-MAP ──────────────────────────────────────────────────────────
+
+/// Names declared as HashMap/HashSet in this file (field or binding).
+fn hash_container_names(text: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    for ty in ["HashMap", "HashSet"] {
+        for i in word_occurrences(text, ty) {
+            if let Some(name) = declared_name_before(text, i) {
+                if !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// For an occurrence of a type at offset `i`, walk back over `: ` or
+/// `= ` to the declared identifier (`states: Mutex<HashMap<…>>` walks
+/// back through the wrapper type too — good enough for lint purposes).
+fn declared_name_before(text: &str, i: usize) -> Option<String> {
+    let bytes = text.as_bytes();
+    let mut j = i;
+    // Walk back over type-ish characters to the `:` or `=` introducer.
+    while j > 0 {
+        let b = bytes[j - 1];
+        if b.is_ascii_alphanumeric() || b == b'_' || b == b'<' || b == b'>' || b == b':'
+            || b.is_ascii_whitespace() || b == b',' || b == b'(' || b == b'&'
+        {
+            if b == b':' && bytes.get(j.checked_sub(2)?) != Some(&b':') && !text[..j - 1].ends_with("::")
+            {
+                // A single `:` — the annotation introducer.
+                let name_end = {
+                    let mut k = j - 1;
+                    while k > 0 && bytes[k - 1].is_ascii_whitespace() {
+                        k -= 1;
+                    }
+                    k
+                };
+                let mut name_start = name_end;
+                while name_start > 0 && {
+                    let c = bytes[name_start - 1];
+                    c.is_ascii_alphanumeric() || c == b'_'
+                } {
+                    name_start -= 1;
+                }
+                if name_start < name_end {
+                    return Some(text[name_start..name_end].to_string());
+                }
+                return None;
+            }
+            if b == b'=' {
+                // `let [mut] name = HashMap::new()`
+                let mut k = j - 1;
+                while k > 0 && bytes[k - 1].is_ascii_whitespace() {
+                    k -= 1;
+                }
+                let name_end = k;
+                let mut name_start = name_end;
+                while name_start > 0 && {
+                    let c = bytes[name_start - 1];
+                    c.is_ascii_alphanumeric() || c == b'_'
+                } {
+                    name_start -= 1;
+                }
+                if name_start < name_end {
+                    return Some(text[name_start..name_end].to_string());
+                }
+                return None;
+            }
+            j -= 1;
+        } else {
+            return None;
+        }
+    }
+    None
+}
+
+fn det_map(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
+    let names = hash_container_names(text);
+    if names.is_empty() {
+        return;
+    }
+    let mut seen_lines: Vec<usize> = Vec::new();
+    for name in &names {
+        // Method-call iteration: name.iter() / .keys() / …
+        for method in [".iter()", ".keys()", ".values()", ".into_iter()", ".drain(", ".retain("] {
+            let pat = format!("{name}{method}");
+            let mut from = 0;
+            while let Some(rel) = text[from..].find(&pat) {
+                let i = from + rel;
+                if !ident_before(text, i) {
+                    let line = ctx.scan.line_of_offset(text, i);
+                    if !seen_lines.contains(&line) {
+                        seen_lines.push(line);
+                        out.push(finding(
+                            ctx,
+                            line,
+                            "DET-MAP",
+                            format!(
+                                "iteration over hash container `{name}` in a hot-path module: \
+                                 order is randomized per process; sort before use or \
+                                 allow-mark why order cannot matter"
+                            ),
+                        ));
+                    }
+                }
+                from = i + pat.len();
+            }
+        }
+        // `for … in [&[mut ]]name` on one line.
+        for i in word_occurrences(text, name) {
+            let before = text[..i].trim_end();
+            let before = before.strip_suffix("&mut").unwrap_or(before).trim_end();
+            let before = before.strip_suffix('&').unwrap_or(before).trim_end();
+            if before.ends_with(" in") || before.ends_with("\nin") {
+                // Only inside a for-loop header (same line has `for `).
+                let line = ctx.scan.line_of_offset(text, i);
+                let code = &ctx.scan.lines[line - 1].code;
+                if code.contains("for ") && !seen_lines.contains(&line) {
+                    seen_lines.push(line);
+                    out.push(finding(
+                        ctx,
+                        line,
+                        "DET-MAP",
+                        format!(
+                            "for-loop over hash container `{name}` in a hot-path module: \
+                             order is randomized per process; sort before use or \
+                             allow-mark why order cannot matter"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ── DET-TIME ─────────────────────────────────────────────────────────
+
+fn det_time(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
+    for pat in ["Instant::now", "SystemTime::now", "Pcg64::new", "thread_rng", "from_entropy"] {
+        for i in word_occurrences(text, pat) {
+            let line = ctx.scan.line_of_offset(text, i);
+            if ctx.scan.is_test_line(line) {
+                continue;
+            }
+            out.push(finding(
+                ctx,
+                line,
+                "DET-TIME",
+                format!(
+                    "`{pat}` inside a fitter core: cores must be pure functions of \
+                     (matrix, response, spec) — time at the fit boundary, seed RNGs \
+                     through the spec"
+                ),
+            ));
+        }
+    }
+}
+
+// ── DET-SUM ──────────────────────────────────────────────────────────
+
+fn det_sum(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
+    for i in word_occurrences(text, "sum") {
+        if !text[..i].ends_with('.') || !text[i..].starts_with("sum::<f64>") {
+            continue;
+        }
+        let line = ctx.scan.line_of_offset(text, i);
+        if ctx.scan.is_test_line(line) {
+            continue;
+        }
+        out.push(finding(
+            ctx,
+            line,
+            "DET-SUM",
+            "ad-hoc .sum::<f64>() outside calars::kern: additive reductions need \
+             the one canonical summation order — call a kern kernel, or allow-mark \
+             with the argument for why this order is fixed"
+                .to_string(),
+        ));
+    }
+    for i in word_occurrences(text, "fold") {
+        if !text[..i].ends_with('.') {
+            continue;
+        }
+        let open = skip_ws(text, i + "fold".len());
+        if text.as_bytes().get(open) != Some(&b'(') {
+            continue;
+        }
+        let Some(close) = match_paren(text, open) else { continue };
+        let args = &text[open + 1..close - 1];
+        let first = args.trim_start();
+        // Only additive zero-seeded folds: max/min reductions are
+        // order-insensitive, non-zero seeds are not the paper's pattern.
+        if !first.starts_with("0.0") && !first.starts_with("0f64") && !first.starts_with("0_f64") {
+            continue;
+        }
+        if args.contains("max") || args.contains("min") {
+            continue;
+        }
+        let line = ctx.scan.line_of_offset(text, i);
+        if ctx.scan.is_test_line(line) {
+            continue;
+        }
+        out.push(finding(
+            ctx,
+            line,
+            "DET-SUM",
+            "ad-hoc additive fold(0.0, …) outside calars::kern: additive reductions \
+             need the one canonical summation order — call a kern kernel, or \
+             allow-mark with the argument for why this order is fixed"
+                .to_string(),
+        ));
+    }
+}
+
+// ── PANIC-UNWRAP ─────────────────────────────────────────────────────
+
+fn panic_unwrap(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
+    // Macro panics.
+    for pat in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+        let bare = &pat[..pat.len() - 1];
+        for i in word_occurrences(text, bare) {
+            if !text[i + bare.len()..].starts_with('!') {
+                continue;
+            }
+            let line = ctx.scan.line_of_offset(text, i);
+            if ctx.scan.is_test_line(line) {
+                continue;
+            }
+            out.push(finding(
+                ctx,
+                line,
+                "PANIC-UNWRAP",
+                format!("`{pat}` in a serve request path: return a typed ErrorKind instead"),
+            ));
+        }
+    }
+    // .unwrap() / .expect(…) — but `.lock().unwrap()` belongs to
+    // PANIC-LOCK (one finding per defect).
+    for name in ["unwrap", "expect"] {
+        for i in word_occurrences(text, name) {
+            if !text[..i].ends_with('.') {
+                continue;
+            }
+            let after = skip_ws(text, i + name.len());
+            if text.as_bytes().get(after) != Some(&b'(') {
+                continue;
+            }
+            if name == "unwrap" && text.as_bytes().get(after + 1) != Some(&b')') {
+                continue; // unwrap(x)? not a thing — defensive
+            }
+            let recv = text[..i - 1].trim_end();
+            if recv.ends_with("lock()") {
+                continue;
+            }
+            let line = ctx.scan.line_of_offset(text, i);
+            if ctx.scan.is_test_line(line) {
+                continue;
+            }
+            out.push(finding(
+                ctx,
+                line,
+                "PANIC-UNWRAP",
+                format!(
+                    ".{name}() in a serve request path: return a typed ErrorKind \
+                     (the HTTP layer maps kinds to 400/422/500) instead of panicking"
+                ),
+            ));
+        }
+    }
+}
+
+// ── PANIC-LOCK ───────────────────────────────────────────────────────
+
+fn panic_lock(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
+    for i in word_occurrences(text, "lock") {
+        if !text[..i].ends_with('.') || !text[i..].starts_with("lock()") {
+            continue;
+        }
+        let end = i + "lock()".len();
+        if let Some(sfx) = panicky_suffix(text, end) {
+            let line = ctx.scan.line_of_offset(text, i);
+            if ctx.scan.is_test_line(line) {
+                continue;
+            }
+            out.push(finding(
+                ctx,
+                line,
+                "PANIC-LOCK",
+                format!(
+                    ".lock().{sfx}() propagates poisoning as a panic cascade; use \
+                     .lock().unwrap_or_else(std::sync::PoisonError::into_inner)"
+                ),
+            ));
+        }
+    }
+}
+
+// ── UNSAFE-SCOPE / UNSAFE-DOC ────────────────────────────────────────
+
+fn unsafe_rules(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
+    for i in word_occurrences(text, "unsafe") {
+        let line = ctx.scan.line_of_offset(text, i);
+        if !ctx.is_par() {
+            out.push(finding(
+                ctx,
+                line,
+                "UNSAFE-SCOPE",
+                "`unsafe` outside rust/src/par: the crate's unsafe budget is the \
+                 thread pool's two documented lifetime-erasure sites only"
+                    .to_string(),
+            ));
+            continue;
+        }
+        // Inside par: demand a SAFETY: comment on this line or in the
+        // contiguous comment block above.
+        if !has_safety_comment(ctx.scan, line) {
+            out.push(finding(
+                ctx,
+                line,
+                "UNSAFE-DOC",
+                "`unsafe` without a `// SAFETY:` comment stating the invariant that \
+                 makes it sound"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn has_safety_comment(scan: &FileScan, line: usize) -> bool {
+    let idx = line - 1;
+    if scan.lines[idx].comment.contains("SAFETY") {
+        return true;
+    }
+    // Walk up through comment-only (or blank) lines, bounded.
+    let mut k = idx;
+    for _ in 0..20 {
+        if k == 0 {
+            break;
+        }
+        k -= 1;
+        let l = &scan.lines[k];
+        if !l.code.trim().is_empty() {
+            break;
+        }
+        if l.comment.contains("SAFETY") {
+            return true;
+        }
+        if l.comment.trim().is_empty() && l.code.trim().is_empty() {
+            continue; // blank line inside the comment block
+        }
+    }
+    false
+}
+
+// ── Allow markers ────────────────────────────────────────────────────
+
+/// A parsed `audit: allow(...)` marker.
+#[derive(Debug)]
+pub struct AllowMarker {
+    pub path: String,
+    /// 1-based line the marker sits on.
+    pub line: usize,
+    pub rule: String,
+    pub file_scope: bool,
+    pub has_reason: bool,
+    pub used: bool,
+}
+
+/// Extract every allow marker in a file's comments.
+pub fn collect_markers(path: &str, scan: &FileScan) -> Vec<AllowMarker> {
+    let mut out = Vec::new();
+    for (idx, l) in scan.lines.iter().enumerate() {
+        let mut from = 0;
+        while let Some(rel) = l.comment[from..].find("audit: allow(") {
+            let i = from + rel + "audit: allow(".len();
+            let rest = &l.comment[i..];
+            let Some(close) = rest.find(')') else { break };
+            let inner = &rest[..close];
+            let (rule, file_scope) = match inner.split_once(',') {
+                Some((r, scope)) => (r.trim().to_string(), scope.trim() == "file"),
+                None => (inner.trim().to_string(), false),
+            };
+            let after = &rest[close + 1..];
+            let has_reason = after
+                .trim_start()
+                .strip_prefix("--")
+                .is_some_and(|r| !r.trim().is_empty());
+            out.push(AllowMarker {
+                path: path.to_string(),
+                line: idx + 1,
+                rule,
+                file_scope,
+                has_reason,
+                used: false,
+            });
+            from = i + close;
+        }
+    }
+    out
+}
+
+/// Apply markers to findings: drop suppressed findings, emit
+/// ALLOW-REASON errors and ALLOW-UNUSED warnings. Returns (kept
+/// findings, suppressed count).
+pub fn apply_markers(
+    findings: Vec<Finding>,
+    markers: &mut [AllowMarker],
+) -> (Vec<Finding>, usize) {
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        let mut hit = false;
+        for m in markers.iter_mut() {
+            if m.path != f.path || m.rule != f.rule || !m.has_reason {
+                continue;
+            }
+            if m.file_scope || m.line == f.line || m.line + 1 == f.line {
+                m.used = true;
+                hit = true;
+            }
+        }
+        if hit {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    for m in markers.iter() {
+        if rule_doc(&m.rule).is_none() {
+            kept.push(Finding {
+                path: m.path.clone(),
+                line: m.line,
+                rule: "ALLOW-REASON",
+                severity: Severity::Error,
+                message: format!(
+                    "allow marker names unknown rule `{}` (known ids: see --list)",
+                    m.rule
+                ),
+            });
+        } else if !m.has_reason {
+            kept.push(Finding {
+                path: m.path.clone(),
+                line: m.line,
+                rule: "ALLOW-REASON",
+                severity: Severity::Error,
+                message: format!(
+                    "allow marker for {} has no reason: write \
+                     `audit: allow({}) -- <why this site is exempt>`",
+                    m.rule, m.rule
+                ),
+            });
+        } else if !m.used {
+            kept.push(Finding {
+                path: m.path.clone(),
+                line: m.line,
+                rule: "ALLOW-UNUSED",
+                severity: Severity::Warning,
+                message: format!(
+                    "allow marker for {} suppresses nothing — delete it",
+                    m.rule
+                ),
+            });
+        }
+    }
+    (kept, suppressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    fn run_on(path: &str, src: &str) -> Vec<Finding> {
+        let s = scan(src);
+        let ctx = FileCtx { path, scan: &s };
+        let mut out = Vec::new();
+        check_file(&ctx, &mut out);
+        out
+    }
+
+    #[test]
+    fn det_cmp_fires_and_spares_unwrap_or() {
+        let f = run_on(
+            "rust/src/metrics.rs",
+            "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].line), ("DET-CMP", 2));
+        let ok = run_on(
+            "rust/src/metrics.rs",
+            "fn f(a: f64, b: f64) { let _ = a.partial_cmp(&b).unwrap_or(std::cmp::Ordering::Equal); }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn det_cmp_spans_lines() {
+        let f = run_on(
+            "benches/x.rs",
+            "fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a\n        .partial_cmp(b)\n        .unwrap());\n}\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3, "{f:?}");
+    }
+
+    #[test]
+    fn det_map_needs_declared_container_and_iteration() {
+        let src = "use std::collections::HashMap;\nfn f() {\n    let mut groups: HashMap<u64, Vec<usize>> = HashMap::new();\n    for (k, v) in &groups { let _ = (k, v); }\n}\n";
+        let f = run_on("rust/src/select/mod.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!((f[0].rule, f[0].line), ("DET-MAP", 4));
+        // Lookup-only use is fine.
+        let ok = run_on(
+            "rust/src/select/mod.rs",
+            "use std::collections::HashMap;\nfn f() {\n    let mut m: HashMap<u64, u64> = HashMap::new();\n    m.insert(1, 2);\n    let _ = m.get(&1);\n}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        // Outside hot modules the rule does not run.
+        let ok2 = run_on("rust/src/serve/engine.rs", src);
+        assert!(ok2.iter().all(|f| f.rule != "DET-MAP"), "{ok2:?}");
+    }
+
+    #[test]
+    fn det_time_in_cores_only_and_not_in_tests() {
+        let f = run_on("rust/src/lars/x.rs", "fn f() { let t = Instant::now(); }\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "DET-TIME");
+        let ok = run_on(
+            "rust/src/lars/x.rs",
+            "#[cfg(test)]\nmod tests {\n    fn t() { let r = Pcg64::new(1); }\n}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        let ok2 = run_on("rust/src/fit/mod.rs", "fn f() { let t = Instant::now(); }\n");
+        assert!(ok2.is_empty(), "timing at the fit boundary is allowed: {ok2:?}");
+    }
+
+    #[test]
+    fn det_sum_flags_sums_spares_max_folds() {
+        let f = run_on(
+            "rust/src/lars/x.rs",
+            "fn f(v: &[f64]) -> f64 { v.iter().sum::<f64>() }\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "DET-SUM");
+        let f2 = run_on(
+            "rust/src/lars/x.rs",
+            "fn f(v: &[f64]) -> f64 { v.iter().fold(0.0_f64, |a, &x| a + x) }\n",
+        );
+        assert_eq!(f2.len(), 1, "{f2:?}");
+        let ok = run_on(
+            "rust/src/lars/x.rs",
+            "fn f(v: &[f64]) -> f64 { v.iter().fold(0.0_f64, |a, &x| a.max(x)) }\n",
+        );
+        assert!(ok.is_empty(), "max-folds are order-insensitive: {ok:?}");
+        let ok2 = run_on(
+            "rust/src/kern/mod.rs",
+            "fn f(v: &[f64]) -> f64 { v.iter().sum::<f64>() }\n",
+        );
+        assert!(ok2.is_empty(), "kern is the canonical home: {ok2:?}");
+    }
+
+    #[test]
+    fn panic_unwrap_scope_and_lock_handoff() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let f = run_on("rust/src/serve/engine.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "PANIC-UNWRAP");
+        assert!(run_on("rust/src/serve/loadgen.rs", src).is_empty());
+        assert!(run_on("rust/src/lars/serial.rs", src).is_empty());
+        // .lock().unwrap() is PANIC-LOCK's finding, exactly once.
+        let l = run_on(
+            "rust/src/serve/store.rs",
+            "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n",
+        );
+        assert_eq!(l.len(), 1, "{l:?}");
+        assert_eq!(l[0].rule, "PANIC-LOCK");
+    }
+
+    #[test]
+    fn panic_lock_spares_recovery_idiom() {
+        let ok = run_on(
+            "rust/src/serve/store.rs",
+            "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)\n}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        let f = run_on(
+            "rust/src/obs/span.rs",
+            "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().expect(\"poisoned\") }\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "PANIC-LOCK");
+    }
+
+    #[test]
+    fn unsafe_scope_and_doc() {
+        let f = run_on("rust/src/kern/mod.rs", "fn f() { unsafe { std::hint::unreachable_unchecked() } }\n");
+        assert_eq!(f[0].rule, "UNSAFE-SCOPE");
+        let f2 = run_on("rust/src/par/pool.rs", "fn f(p: *const u32) -> u32 { unsafe { *p } }\n");
+        assert_eq!(f2.len(), 1);
+        assert_eq!(f2[0].rule, "UNSAFE-DOC");
+        let ok = run_on(
+            "rust/src/par/pool.rs",
+            "fn f(p: *const u32) -> u32 {\n    // SAFETY: caller guarantees p is live.\n    unsafe { *p }\n}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let ok = run_on(
+            "rust/src/serve/http.rs",
+            "/// `.lock().unwrap()` sites used to cascade panics.\nfn f() { let s = \"panic!\"; let _ = s; }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn markers_suppress_same_and_next_line() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // audit: allow(PANIC-UNWRAP) -- startup only\n    x.unwrap()\n}\n";
+        let s = scan(src);
+        let ctx = FileCtx { path: "rust/src/serve/queue.rs", scan: &s };
+        let mut found = Vec::new();
+        check_file(&ctx, &mut found);
+        let mut markers = collect_markers(ctx.path, &s);
+        let (kept, suppressed) = apply_markers(found, &mut markers);
+        assert_eq!(suppressed, 1);
+        assert!(kept.is_empty(), "{kept:?}");
+    }
+
+    #[test]
+    fn marker_without_reason_is_an_error() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // audit: allow(PANIC-UNWRAP)\n    x.unwrap()\n}\n";
+        let s = scan(src);
+        let ctx = FileCtx { path: "rust/src/serve/queue.rs", scan: &s };
+        let mut found = Vec::new();
+        check_file(&ctx, &mut found);
+        let mut markers = collect_markers(ctx.path, &s);
+        let (kept, _) = apply_markers(found, &mut markers);
+        assert!(kept.iter().any(|f| f.rule == "ALLOW-REASON"), "{kept:?}");
+        assert!(kept.iter().any(|f| f.rule == "PANIC-UNWRAP"), "reasonless ⇒ no suppression");
+    }
+
+    #[test]
+    fn unused_marker_warns_and_file_scope_works() {
+        let src = "// audit: allow(DET-SUM, file) -- fixed rank-order combine\nfn f(v: &[f64]) -> f64 { v.iter().sum::<f64>() }\nfn g(v: &[f64]) -> f64 { v.iter().sum::<f64>() }\n";
+        let s = scan(src);
+        let ctx = FileCtx { path: "rust/src/lars/blars.rs", scan: &s };
+        let mut found = Vec::new();
+        check_file(&ctx, &mut found);
+        let mut markers = collect_markers(ctx.path, &s);
+        let (kept, suppressed) = apply_markers(found, &mut markers);
+        assert_eq!(suppressed, 2, "file scope suppresses every site");
+        assert!(kept.is_empty(), "{kept:?}");
+
+        let src2 = "// audit: allow(DET-SUM) -- nothing here\nfn f() {}\n";
+        let s2 = scan(src2);
+        let mut markers2 = collect_markers("rust/src/lars/x.rs", &s2);
+        let (kept2, _) = apply_markers(Vec::new(), &mut markers2);
+        assert_eq!(kept2.len(), 1);
+        assert_eq!(kept2[0].rule, "ALLOW-UNUSED");
+        assert_eq!(kept2[0].severity, Severity::Warning);
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration tests for calars-audit: the bad fixture tree must fire
+//! every rule at the exact expected `file:line`, the good tree must be
+//! clean (with one reasoned suppression), and `--explain`/`--list`
+//! must document every rule.
+//!
+//! The fixture trees under `tests/fixtures/` are miniature repo roots
+//! (`tree_bad/rust/src/serve/…`) so the walker's path-scoping logic —
+//! which rule applies where — is exercised end to end, not just the
+//! matchers.
+
+use calars_audit::rules::{rule_doc, Severity, RULES};
+use calars_audit::{run_audit, run_cli, Config};
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+#[test]
+fn bad_tree_fires_every_rule_at_the_expected_lines() {
+    let report = run_audit(&fixture("tree_bad"), &Config::default()).expect("walk");
+    let got: Vec<(&str, usize, &str)> =
+        report.findings.iter().map(|f| (f.path.as_str(), f.line, f.rule)).collect();
+    let want: Vec<(&str, usize, &str)> = vec![
+        ("rust/Cargo.toml", 5, "DEP-EXT"),
+        ("rust/Cargo.toml", 6, "DEP-EXT"),
+        ("rust/src/kern/evil.rs", 2, "UNSAFE-SCOPE"),
+        ("rust/src/lars/core.rs", 6, "DET-TIME"),
+        ("rust/src/lars/core.rs", 9, "DET-MAP"),
+        ("rust/src/lars/core.rs", 12, "DET-SUM"),
+        ("rust/src/lars/core.rs", 15, "DET-CMP"),
+        ("rust/src/lars/markers.rs", 1, "ALLOW-REASON"),
+        ("rust/src/lars/markers.rs", 3, "DET-SUM"),
+        ("rust/src/lars/markers.rs", 5, "ALLOW-REASON"),
+        ("rust/src/lars/markers.rs", 6, "ALLOW-UNUSED"),
+        ("rust/src/par/raw.rs", 2, "UNSAFE-DOC"),
+        ("rust/src/serve/handlers.rs", 5, "PANIC-UNWRAP"),
+        ("rust/src/serve/handlers.rs", 6, "PANIC-UNWRAP"),
+        ("rust/src/serve/handlers.rs", 7, "PANIC-LOCK"),
+        ("rust/src/serve/handlers.rs", 9, "PANIC-UNWRAP"),
+    ];
+    assert_eq!(got, want, "full findings: {:#?}", report.findings);
+    assert_eq!(report.errors(), 15);
+    assert_eq!(report.warnings(), 1);
+    assert_eq!(report.suppressed, 0, "a reasonless marker must not suppress");
+    assert!(!report.is_clean(false));
+    // Severity split: exactly ALLOW-UNUSED is the warning.
+    for f in &report.findings {
+        let expect = if f.rule == "ALLOW-UNUSED" { Severity::Warning } else { Severity::Error };
+        assert_eq!(f.severity, expect, "{}:{} {}", f.path, f.line, f.rule);
+    }
+}
+
+#[test]
+fn bad_tree_diagnostics_render_as_file_line() {
+    let report = run_audit(&fixture("tree_bad"), &Config::default()).expect("walk");
+    let rendered = report.render();
+    assert!(
+        rendered.contains("rust/src/serve/handlers.rs:5: error[PANIC-UNWRAP]"),
+        "{rendered}"
+    );
+    assert!(rendered.contains("rust/Cargo.toml:5: error[DEP-EXT]"), "{rendered}");
+    assert!(rendered.contains("15 error(s), 1 warning(s)"), "{rendered}");
+}
+
+#[test]
+fn good_tree_is_clean_with_one_reasoned_suppression() {
+    let report = run_audit(&fixture("tree_good"), &Config::default()).expect("walk");
+    assert!(report.findings.is_empty(), "{:#?}", report.findings);
+    assert_eq!(report.suppressed, 1, "the reasoned DET-SUM allow must count");
+    assert_eq!(report.files_scanned, 3);
+    assert_eq!(report.manifests_checked, 2);
+    assert!(report.is_clean(true), "clean even under --deny-warnings");
+}
+
+#[test]
+fn warnings_gate_only_under_deny_warnings() {
+    // A tree whose only problem is an unused-but-reasoned marker:
+    // build the policy check from the bad tree's report shape instead
+    // of a third fixture — is_clean is a pure function of the counts.
+    let report = run_audit(&fixture("tree_bad"), &Config::default()).expect("walk");
+    assert!(!report.is_clean(false), "errors always gate");
+    let warnings_only = calars_audit::Report {
+        findings: report
+            .findings
+            .into_iter()
+            .filter(|f| f.severity == Severity::Warning)
+            .collect(),
+        ..Default::default()
+    };
+    assert!(warnings_only.is_clean(false));
+    assert!(!warnings_only.is_clean(true));
+}
+
+#[test]
+fn every_rule_is_documented_for_explain_and_list() {
+    assert_eq!(RULES.len(), 11);
+    for r in RULES {
+        assert!(!r.summary.is_empty(), "{} needs a summary", r.id);
+        assert!(r.explain.len() > 80, "{} needs a real explanation", r.id);
+        assert!(rule_doc(r.id).is_some());
+    }
+    // The determinism rules must point at the contract vocabulary.
+    assert!(rule_doc("DET-CMP").unwrap().explain.contains("total_cmp"));
+    assert!(rule_doc("DET-SUM").unwrap().explain.contains("canonical"));
+    assert!(rule_doc("PANIC-LOCK").unwrap().explain.contains("into_inner"));
+    assert!(rule_doc("NOPE").is_none());
+}
+
+#[test]
+fn cli_exit_codes() {
+    let bad = fixture("tree_bad").to_string_lossy().to_string();
+    let good = fixture("tree_good").to_string_lossy().to_string();
+    assert_eq!(run_cli(&["--root".to_string(), good.clone()]), 0);
+    assert_eq!(run_cli(&["--root".to_string(), bad.clone()]), 1);
+    assert_eq!(run_cli(&["--root".to_string(), good, "--deny-warnings".to_string()]), 0);
+    assert_eq!(run_cli(&["--explain".to_string(), "DET-CMP".to_string()]), 0);
+    assert_eq!(run_cli(&["--explain".to_string(), "BOGUS".to_string()]), 2);
+    assert_eq!(run_cli(&["--list".to_string()]), 0);
+    assert_eq!(run_cli(&["--frobnicate".to_string()]), 2);
+}
+
+#[test]
+fn the_real_tree_is_clean_under_deny_warnings() {
+    // The acceptance criterion in one test: the audit over the actual
+    // repository must pass with zero unsuppressed findings — every
+    // exception in the tree is a reasoned allow marker.
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(|p| p.parent())
+        .expect("workspace root")
+        .to_path_buf();
+    let report = run_audit(&root, &Config::default()).expect("walk");
+    assert!(
+        report.findings.is_empty(),
+        "the tree must audit clean; findings:\n{}",
+        report.render()
+    );
+    assert!(report.is_clean(true));
+    assert!(report.files_scanned > 50, "walked {} files", report.files_scanned);
+}

@@ -1,0 +1,17 @@
+//! Bad lars fixture: every determinism rule fires.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn pick(c: &[f64]) -> usize {
+    let t0 = Instant::now();
+    let mut groups: HashMap<u64, usize> = HashMap::new();
+    groups.insert(0, 1);
+    for (k, v) in groups.iter() {
+        let _ = (k, v);
+    }
+    let s: f64 = c.iter().sum::<f64>();
+    let _ = (t0, s);
+    (0..c.len())
+        .max_by(|&i, &j| c[i].partial_cmp(&c[j]).unwrap())
+        .unwrap_or(0)
+}

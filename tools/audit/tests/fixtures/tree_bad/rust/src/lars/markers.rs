@@ -1,0 +1,7 @@
+// audit: allow(DET-SUM)
+pub fn s(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>()
+}
+// audit: allow(NOT-A-RULE) -- typo'd rule id
+// audit: allow(DET-CMP) -- nothing on the next line to suppress
+pub fn t() {}

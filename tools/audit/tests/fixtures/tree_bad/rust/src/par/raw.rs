@@ -1,0 +1,3 @@
+pub fn read(p: *const f64) -> f64 {
+    unsafe { *p }
+}

@@ -1,0 +1,12 @@
+//! Bad serve fixture: every panic-safety rule fires. Never compiled —
+//! the audit integration tests only scan this tree.
+
+pub fn respond(x: Option<u32>, m: &std::sync::Mutex<u32>) -> u32 {
+    let v = x.unwrap();
+    let w = x.expect("present");
+    let g = m.lock().unwrap();
+    if v == 0 {
+        panic!("zero");
+    }
+    v + w + *g
+}

@@ -1,0 +1,12 @@
+//! Good lars fixture: total comparators and a reasoned allow.
+
+pub fn pick(c: &[f64]) -> usize {
+    (0..c.len())
+        .max_by(|&i, &j| c[i].total_cmp(&c[j]))
+        .unwrap_or(0)
+}
+
+pub fn residual(v: &[f64]) -> f64 {
+    // audit: allow(DET-SUM) -- serial fixed-order sum, fixture for marker suppression
+    v.iter().sum::<f64>()
+}

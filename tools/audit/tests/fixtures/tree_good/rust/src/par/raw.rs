@@ -1,0 +1,8 @@
+pub fn read(p: *const f64) -> f64 {
+    // SAFETY: fixture — the caller guarantees p is valid and live.
+    unsafe { *p }
+}
+
+pub fn read_inline(p: *const f64) -> f64 {
+    unsafe { *p } // SAFETY: same-line comments are accepted too.
+}

@@ -1,0 +1,17 @@
+//! Good serve fixture: typed errors and poison recovery — in prose,
+//! even `.unwrap()` and `panic!` in a comment must not fire.
+
+pub fn respond(x: Option<u32>, m: &std::sync::Mutex<u32>) -> Result<u32, String> {
+    let v = x.ok_or_else(|| "missing (not .unwrap())".to_string())?;
+    let g = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    Ok(v + *g)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let x: Option<u32> = Some(3);
+        assert_eq!(x.unwrap(), 3);
+    }
+}
