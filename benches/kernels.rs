@@ -11,14 +11,24 @@
 //! against its reference and the bench exits nonzero if
 //! `max |Δ| > 1e-9` (scripts/ci.sh records the JSON as
 //! `BENCH_kernels.json`; schema per record:
-//! `{bench, threads, wall_ms, speedup}` where `speedup` is
-//! old-scalar / kern wall time, or cold / warm for the refit record).
+//! `{bench, threads, wall_ms, speedup, isa}` where `speedup` is
+//! old-scalar / kern wall time, or cold / warm for the refit record,
+//! or scalar-backend / vector-backend wall time for the per-ISA
+//! records).
+//!
+//! The per-ISA section re-times the hot kernels under
+//! `kern::simd::with_backend` — once forced to the scalar backend
+//! (`…_scalar` records, speedup 1.0 by definition) and once under the
+//! widest detected vector backend (`…_<isa>` records, speedup =
+//! scalar / vector wall time). scripts/ci.sh gates the vector records
+//! at ≥ 2× on at_r and gram_block.
 //!
 //! Run: `cargo bench --bench kernels` (human table)
 //!      `cargo bench --bench kernels -- --json`
 
 use calars::fit::{Algorithm, FitSpec};
 use calars::kern::reference;
+use calars::kern::simd::{self, KernBackend};
 use calars::linalg::{Cholesky, DenseMatrix};
 use calars::metrics::{bench, black_box, fmt_secs};
 use calars::par::{self, ThreadPool};
@@ -30,10 +40,11 @@ use std::time::Duration;
 const GATE: f64 = 1e-9;
 
 struct Record {
-    bench: &'static str,
+    bench: String,
     threads: usize,
     wall_ms: f64,
     speedup: f64,
+    isa: &'static str,
 }
 
 fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
@@ -58,10 +69,11 @@ fn main() {
             );
         }
         records.push(Record {
-            bench: bench_name,
+            bench: bench_name.to_string(),
             threads: 1,
             wall_ms: kern_ms,
             speedup: ref_ms / kern_ms.max(1e-12),
+            isa: simd::current().name(),
         });
     };
 
@@ -226,6 +238,89 @@ fn main() {
         note(&mut records, "cholesky_append_56p8", sk.best * 1e3, sr.best * 1e3, delta_c);
     });
 
+    // ── per-ISA backend records ──
+    // Re-time the three hot kernels under a forced-scalar backend and
+    // under the widest detected vector backend. The pool is built
+    // *inside* with_backend so it captures the forced backend (workers
+    // would otherwise disagree with the bench thread). Outputs are
+    // checked against kern::reference at the 1e-9 gate per backend.
+    if !json {
+        println!("\n# kernel engine: SIMD backend vs forced-scalar backend\n");
+    }
+    let detected = KernBackend::detect();
+    let backends: Vec<KernBackend> = if detected == KernBackend::Scalar {
+        vec![KernBackend::Scalar]
+    } else {
+        vec![KernBackend::Scalar, detected]
+    };
+    // (at_r_ms, gram_ms, fused_ms, worst backend-vs-reference |Δ|)
+    let measure = |backend: KernBackend| -> (f64, f64, f64, f64) {
+        simd::with_backend(backend, || {
+            let pool = ThreadPool::new(1, par::DEFAULT_MIN_CHUNK);
+            par::with_pool(&pool, || {
+                let mut delta = 0.0_f64;
+                let mut out = vec![0.0; n];
+                a.at_r(&r, &mut out);
+                let mut ref_out = vec![0.0; n];
+                reference::at_r(&data, m, n, &r, &mut ref_out);
+                delta = delta.max(max_abs_diff(&out, &ref_out));
+                let s_at_r = bench(1, 5, || {
+                    a.at_r(black_box(&r), &mut out);
+                    out[0]
+                });
+                let g = a.gram_block(&ii, &jj);
+                let ref_g = reference::gram_block(&data, m, n, &ii, &jj);
+                delta = delta.max(max_abs_diff(g.data(), &ref_g));
+                let s_gram = bench(1, 5, || black_box(a.gram_block(&ii, &jj)).get(0, 0));
+                let mut u = vec![0.0; m];
+                let mut av = vec![0.0; n];
+                a.gemv_cols_at_r(&ii, &w, &mut u, &mut av);
+                let mut ref_u = vec![0.0; m];
+                reference::gemv_cols(&data, m, n, &ii, &w, &mut ref_u);
+                let mut ref_av = vec![0.0; n];
+                reference::at_r(&data, m, n, &ref_u, &mut ref_av);
+                delta = delta.max(max_abs_diff(&u, &ref_u));
+                delta = delta.max(max_abs_diff(&av, &ref_av));
+                let s_fused = bench(1, 5, || {
+                    a.gemv_cols_at_r(black_box(&ii), &w, &mut u, &mut av);
+                    av[0]
+                });
+                (s_at_r.best * 1e3, s_gram.best * 1e3, s_fused.best * 1e3, delta)
+            })
+        })
+    };
+    let mut scalar_ms = (0.0_f64, 0.0_f64, 0.0_f64);
+    for backend in backends {
+        let (at_r_ms, gram_ms, fused_ms, delta) = measure(backend);
+        worst_delta = worst_delta.max(delta);
+        if backend == KernBackend::Scalar {
+            scalar_ms = (at_r_ms, gram_ms, fused_ms);
+        }
+        let isa = backend.name();
+        for (base, ms, base_ms) in [
+            ("at_r_2000x4000", at_r_ms, scalar_ms.0),
+            ("gram_block_2000x4000_64x64", gram_ms, scalar_ms.1),
+            ("fused_step_2000x4000_64", fused_ms, scalar_ms.2),
+        ] {
+            let speedup = base_ms / ms.max(1e-12);
+            if !json {
+                println!(
+                    "{:<34} {isa:>7} {:>10}  vs scalar {:>6.2}x  max|Δ| {delta:.2e}",
+                    format!("{base}_{isa}"),
+                    fmt_secs(ms / 1e3),
+                    speedup
+                );
+            }
+            records.push(Record {
+                bench: format!("{base}_{isa}"),
+                threads: 1,
+                wall_ms: ms,
+                speedup,
+                isa,
+            });
+        }
+    }
+
     // ── serve warm-refit through the GramCache ──
     // Cold: fresh registry + fresh cache. Warm: fresh registry (so the
     // warm-start snapshot shortcut cannot answer) but the SAME cache —
@@ -259,10 +354,11 @@ fn main() {
         );
     }
     records.push(Record {
-        bench: "serve_warm_refit_year_t24",
+        bench: "serve_warm_refit_year_t24".to_string(),
         threads: 1,
         wall_ms: warm * 1e3,
         speedup: cold / warm.max(1e-12),
+        isa: simd::current().name(),
     });
 
     if json {
@@ -270,8 +366,8 @@ fn main() {
             .iter()
             .map(|r| {
                 format!(
-                    "{{\"bench\":\"{}\",\"threads\":{},\"wall_ms\":{:.3},\"speedup\":{:.3}}}",
-                    r.bench, r.threads, r.wall_ms, r.speedup
+                    "{{\"bench\":\"{}\",\"threads\":{},\"wall_ms\":{:.3},\"speedup\":{:.3},\"isa\":\"{}\"}}",
+                    r.bench, r.threads, r.wall_ms, r.speedup, r.isa
                 )
             })
             .collect();

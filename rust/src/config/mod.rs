@@ -245,6 +245,15 @@ impl ServeConfig {
     }
 }
 
+/// Resolve and install the kernel ISA backend: `--isa` beats the
+/// `CALARS_ISA` environment variable beats runtime detection. Unknown
+/// or unsupported names are hard errors here (the library's lazy path
+/// merely warns); every subcommand calls this before the first kernel
+/// runs so the choice is global and immutable for the process.
+pub fn init_isa_from_args(args: &Args) -> Result<crate::kern::simd::KernBackend> {
+    crate::kern::simd::init_from_cli(args.get("isa"))
+}
+
 /// Resolve the shared-memory execution config: environment first
 /// (`CALARS_THREADS`, `CALARS_MIN_CHUNK`), CLI flags (`--par-threads`,
 /// `--par-min-chunk`) override. Every subcommand applies the result to

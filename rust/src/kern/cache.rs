@@ -99,16 +99,24 @@ struct StoreInner {
 pub struct PanelStore {
     /// `(nrows, ncols)` of the matrix the cached values belong to.
     shape: (usize, usize),
+    /// Kernel ISA backend active when the store was created. Every
+    /// panel-producing kernel reduces in the canonical scalar order on
+    /// every backend (see `kern::simd`), so cached panels are in fact
+    /// backend-independent — this guard is defensive: should a future
+    /// backend ever trade that invariant away, a store filled under it
+    /// silently stops matching rather than serving foreign roundings.
+    backend: crate::kern::simd::KernBackend,
     max_bytes: usize,
     inner: Mutex<StoreInner>,
 }
 
 impl PanelStore {
     /// Store for a matrix of `shape`, holding at most `max_bytes` of
-    /// panel payload.
+    /// panel payload. Captures the calling thread's kernel backend.
     pub fn new(shape: (usize, usize), max_bytes: usize) -> Self {
         PanelStore {
             shape,
+            backend: crate::kern::simd::current(),
             max_bytes,
             inner: Mutex::new(StoreInner {
                 panels: HashMap::new(),
@@ -125,6 +133,11 @@ impl PanelStore {
     /// The matrix shape this store was built for.
     pub fn shape(&self) -> (usize, usize) {
         self.shape
+    }
+
+    /// The kernel backend this store was built under.
+    pub fn backend(&self) -> crate::kern::simd::KernBackend {
+        self.backend
     }
 
     /// Cached panel for `(ii, jj)`, marking it most-recently-used.
@@ -225,12 +238,14 @@ pub fn with_store<R>(store: &Arc<PanelStore>, f: impl FnOnce() -> R) -> R {
 
 /// The bound store, if any, **and only if** its recorded shape matches
 /// `shape` — the guard that keeps shard-local Gram products (bLARS row
-/// slices) from colliding with full-matrix panels under one binding.
+/// slices) from colliding with full-matrix panels under one binding —
+/// and its recorded kernel backend matches the calling thread's (a
+/// defensive no-op today; see the `backend` field).
 pub fn bound_for(shape: (usize, usize)) -> Option<Arc<PanelStore>> {
     BOUND.with(|b| {
         b.borrow()
             .as_ref()
-            .filter(|s| s.shape() == shape)
+            .filter(|s| s.shape() == shape && s.backend() == crate::kern::simd::current())
             .cloned()
     })
 }
@@ -287,6 +302,27 @@ mod tests {
             assert!(bound_for((100, 20)).is_some());
         });
         assert!(bound_for((100, 20)).is_none(), "binding must not leak");
+    }
+
+    #[test]
+    fn backend_guard_filters_mismatched_stores() {
+        use crate::kern::simd::{self, KernBackend};
+        let store = Arc::new(simd::with_backend(KernBackend::Scalar, || {
+            PanelStore::new((5, 5), 1024)
+        }));
+        assert_eq!(store.backend(), KernBackend::Scalar);
+        with_store(&store, || {
+            simd::with_backend(KernBackend::Scalar, || {
+                assert!(bound_for((5, 5)).is_some());
+            });
+            // Under any vector backend this host supports, a store
+            // recorded as scalar must not match.
+            for b in KernBackend::available() {
+                if b != KernBackend::Scalar {
+                    simd::with_backend(b, || assert!(bound_for((5, 5)).is_none()));
+                }
+            }
+        });
     }
 
     #[test]

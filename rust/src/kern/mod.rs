@@ -50,11 +50,29 @@
 //! (`tests/kern.rs`, and `benches/kernels.rs` gates CI on
 //! `max |Δ| ≤ 1e-9`).
 //!
+//! ## SIMD backends
+//!
+//! Every kernel below is a thin wrapper over [`simd`], which routes the
+//! call to an explicit vector implementation (AVX2 / AVX-512F / NEON)
+//! or the canonical blocked-scalar code, chosen once per process by
+//! runtime feature detection and overridable with
+//! `CALARS_ISA=scalar|avx2|avx512|neon` / `--isa`. The 4-accumulator /
+//! 4-row-pack shape above is exactly what makes this safe: AVX2's four
+//! f64 lanes (and NEON's register pairs) *are* the four accumulators,
+//! so those backends are bit-identical to scalar; only AVX-512's
+//! 8-lane `dot`/`sq_norm` changes the reduction tree, and that pair is
+//! gated at 1e-9 against [`reference`] (see [`simd`] and DESIGN.md
+//! §"Kernel engine · SIMD backends"). Thread pools capture the backend
+//! at construction ([`crate::par::ThreadPool`]), so workers and the
+//! submitting thread always dispatch identically and the
+//! thread-invariance contract holds under every backend.
+//!
 //! [`cache`] holds the cross-fit Gram/norm panel store the serving
 //! layer binds around fits (see `DESIGN.md` §"Kernel engine").
 
 pub mod cache;
 pub mod reference;
+pub mod simd;
 
 /// Lanes per unrolled group (accumulators per reduction, rows per
 /// streaming pack).
@@ -67,43 +85,14 @@ pub const UNROLL: usize = 4;
 /// sequentially.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let groups = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for g in 0..groups {
-        let j = g * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in groups * 4..n {
-        s += a[j] * b[j];
-    }
-    s
+    simd::dot(a, b)
 }
 
 /// Sum of squares with four independent accumulators (same canonical
 /// order as [`dot`]).
 #[inline]
 pub fn sq_norm(x: &[f64]) -> f64 {
-    let n = x.len();
-    let groups = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for g in 0..groups {
-        let j = g * 4;
-        s0 += x[j] * x[j];
-        s1 += x[j + 1] * x[j + 1];
-        s2 += x[j + 2] * x[j + 2];
-        s3 += x[j + 3] * x[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in groups * 4..n {
-        s += x[j] * x[j];
-    }
-    s
+    simd::sq_norm(x)
 }
 
 /// `y += alpha·x`, unrolled by four. Element-wise (one add per output
@@ -111,19 +100,7 @@ pub fn sq_norm(x: &[f64]) -> f64 {
 /// here only widens the issue window.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let groups = n / 4;
-    for g in 0..groups {
-        let j = g * 4;
-        y[j] += alpha * x[j];
-        y[j + 1] += alpha * x[j + 1];
-        y[j + 2] += alpha * x[j + 2];
-        y[j + 3] += alpha * x[j + 3];
-    }
-    for j in groups * 4..n {
-        y[j] += alpha * x[j];
-    }
+    simd::axpy(alpha, x, y)
 }
 
 /// `x *= s` (element-wise, order-free).
@@ -138,44 +115,14 @@ pub fn scale(x: &mut [f64], s: f64) {
 /// dense `gemv_cols` / `cols_dot` inner loop.
 #[inline]
 pub fn dot_idx(row: &[f64], cols: &[usize], w: &[f64]) -> f64 {
-    debug_assert_eq!(cols.len(), w.len());
-    let n = cols.len();
-    let groups = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for g in 0..groups {
-        let k = g * 4;
-        s0 += row[cols[k]] * w[k];
-        s1 += row[cols[k + 1]] * w[k + 1];
-        s2 += row[cols[k + 2]] * w[k + 2];
-        s3 += row[cols[k + 3]] * w[k + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for k in groups * 4..n {
-        s += row[cols[k]] * w[k];
-    }
-    s
+    simd::dot_idx(row, cols, w)
 }
 
 /// Sparse gather dot `Σ_k vals[k] · r[rows[k]]` with four accumulators
 /// — the CSC `at_r` / `col_dot` / Gram inner loop.
 #[inline]
 pub fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
-    debug_assert_eq!(rows.len(), vals.len());
-    let n = rows.len();
-    let groups = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for g in 0..groups {
-        let k = g * 4;
-        s0 += vals[k] * r[rows[k] as usize];
-        s1 += vals[k + 1] * r[rows[k + 1] as usize];
-        s2 += vals[k + 2] * r[rows[k + 2] as usize];
-        s3 += vals[k + 3] * r[rows[k + 3] as usize];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for k in groups * 4..n {
-        s += vals[k] * r[rows[k] as usize];
-    }
-    s
+    simd::sparse_dot(rows, vals, r)
 }
 
 /// Sparse scatter `out[rows[k]] += wk · vals[k]`, unrolled by four.
@@ -183,19 +130,7 @@ pub fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
 /// never alias and the result equals the naive loop exactly.
 #[inline]
 pub fn scatter_axpy(wk: f64, rows: &[u32], vals: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(rows.len(), vals.len());
-    let n = rows.len();
-    let groups = n / 4;
-    for g in 0..groups {
-        let k = g * 4;
-        out[rows[k] as usize] += wk * vals[k];
-        out[rows[k + 1] as usize] += wk * vals[k + 1];
-        out[rows[k + 2] as usize] += wk * vals[k + 2];
-        out[rows[k + 3] as usize] += wk * vals[k + 3];
-    }
-    for k in groups * 4..n {
-        out[rows[k] as usize] += wk * vals[k];
-    }
+    simd::scatter_axpy(wk, rows, vals, out)
 }
 
 /// `acc[j] += Σ_i r[i]·rows_i[j]` over a row-major panel — the dense
@@ -204,56 +139,13 @@ pub fn scatter_axpy(wk: f64, rows: &[u32], vals: &[f64], out: &mut [f64]) {
 /// traffic of the old axpy-per-row sweep), with the canonical pairwise
 /// pre-reduction per output element.
 pub fn at_r_panel(rows: &[f64], n: usize, r: &[f64], acc: &mut [f64]) {
-    debug_assert_eq!(rows.len(), r.len() * n);
-    debug_assert_eq!(acc.len(), n);
-    let m = r.len();
-    let packs = m / 4;
-    for p in 0..packs {
-        let i = p * 4;
-        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
-        let x0 = &rows[i * n..(i + 1) * n];
-        let x1 = &rows[(i + 1) * n..(i + 2) * n];
-        let x2 = &rows[(i + 2) * n..(i + 3) * n];
-        let x3 = &rows[(i + 3) * n..(i + 4) * n];
-        for j in 0..n {
-            acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
-        }
-    }
-    for i in packs * 4..m {
-        let ri = r[i];
-        let row = &rows[i * n..(i + 1) * n];
-        for j in 0..n {
-            acc[j] += ri * row[j];
-        }
-    }
+    simd::at_r_panel(rows, n, r, acc)
 }
 
 /// `acc[j] += Σ_i rows_i[j]²` over a row-major panel — the column
 /// squared-norm sweep, four rows fused per pass.
 pub fn col_sq_norms_panel(rows: &[f64], n: usize, acc: &mut [f64]) {
-    debug_assert_eq!(acc.len(), n);
-    if n == 0 {
-        return;
-    }
-    let m = rows.len() / n;
-    debug_assert_eq!(rows.len(), m * n);
-    let packs = m / 4;
-    for p in 0..packs {
-        let i = p * 4;
-        let x0 = &rows[i * n..(i + 1) * n];
-        let x1 = &rows[(i + 1) * n..(i + 2) * n];
-        let x2 = &rows[(i + 2) * n..(i + 3) * n];
-        let x3 = &rows[(i + 3) * n..(i + 4) * n];
-        for j in 0..n {
-            acc[j] += (x0[j] * x0[j] + x1[j] * x1[j]) + (x2[j] * x2[j] + x3[j] * x3[j]);
-        }
-    }
-    for i in packs * 4..m {
-        let row = &rows[i * n..(i + 1) * n];
-        for j in 0..n {
-            acc[j] += row[j] * row[j];
-        }
-    }
+    simd::col_sq_norms_panel(rows, n, acc)
 }
 
 /// Gram panel `acc[a·nb + b] += Σ_i rows_i[ii[a]] · rows_i[jj[b]]` — a
@@ -274,83 +166,14 @@ pub fn gram_panel(
     pj: &mut [f64],
     acc: &mut [f64],
 ) {
-    let na = ii.len();
-    let nb = jj.len();
-    debug_assert!(pi.len() >= 4 * na && pj.len() >= 4 * nb);
-    debug_assert_eq!(acc.len(), na * nb);
-    if n == 0 || na == 0 || nb == 0 {
-        return;
-    }
-    let m = rows.len() / n;
-    debug_assert_eq!(rows.len(), m * n);
-    let packs = m / 4;
-    for p in 0..packs {
-        let i = p * 4;
-        for k in 0..4 {
-            let row = &rows[(i + k) * n..(i + k + 1) * n];
-            for (a, &col) in ii.iter().enumerate() {
-                pi[k * na + a] = row[col];
-            }
-            for (b, &col) in jj.iter().enumerate() {
-                pj[k * nb + b] = row[col];
-            }
-        }
-        for a0 in (0..na).step_by(4) {
-            for b0 in (0..nb).step_by(4) {
-                for a in a0..na.min(a0 + 4) {
-                    let v0 = pi[a];
-                    let v1 = pi[na + a];
-                    let v2 = pi[2 * na + a];
-                    let v3 = pi[3 * na + a];
-                    for b in b0..nb.min(b0 + 4) {
-                        acc[a * nb + b] += (v0 * pj[b] + v1 * pj[nb + b])
-                            + (v2 * pj[2 * nb + b] + v3 * pj[3 * nb + b]);
-                    }
-                }
-            }
-        }
-    }
-    for i in packs * 4..m {
-        let row = &rows[i * n..(i + 1) * n];
-        for (b, &col) in jj.iter().enumerate() {
-            pj[b] = row[col];
-        }
-        for (a, &col) in ii.iter().enumerate() {
-            let v = row[col];
-            let orow = &mut acc[a * nb..(a + 1) * nb];
-            for (o, &x) in orow.iter_mut().zip(&pj[..nb]) {
-                *o += v * x;
-            }
-        }
-    }
+    simd::gram_panel(rows, n, ii, jj, pi, pj, acc)
 }
 
 /// `acc[k] += Σ_i r[i]·rows_i[cols[k]]` — the dense `cols_dot` kernel
 /// (correlations of a column *subset* with `r`), four rows fused per
 /// accumulator pass.
 pub fn cols_dot_panel(rows: &[f64], n: usize, cols: &[usize], r: &[f64], acc: &mut [f64]) {
-    debug_assert_eq!(rows.len(), r.len() * n);
-    debug_assert_eq!(acc.len(), cols.len());
-    let m = r.len();
-    let packs = m / 4;
-    for p in 0..packs {
-        let i = p * 4;
-        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
-        let x0 = &rows[i * n..(i + 1) * n];
-        let x1 = &rows[(i + 1) * n..(i + 2) * n];
-        let x2 = &rows[(i + 2) * n..(i + 3) * n];
-        let x3 = &rows[(i + 3) * n..(i + 4) * n];
-        for (o, &j) in acc.iter_mut().zip(cols) {
-            *o += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
-        }
-    }
-    for i in packs * 4..m {
-        let ri = r[i];
-        let row = &rows[i * n..(i + 1) * n];
-        for (o, &j) in acc.iter_mut().zip(cols) {
-            *o += ri * row[j];
-        }
-    }
+    simd::cols_dot_panel(rows, n, cols, r, acc)
 }
 
 /// Fused equiangular step over a row-major panel: one pass computing
@@ -371,37 +194,7 @@ pub fn fused_step_panel(
     u: &mut [f64],
     av: &mut [f64],
 ) {
-    debug_assert_eq!(cols.len(), w.len());
-    debug_assert_eq!(av.len(), n);
-    debug_assert_eq!(rows.len(), u.len() * n);
-    let m = u.len();
-    let packs = m / 4;
-    for p in 0..packs {
-        let i = p * 4;
-        let x0 = &rows[i * n..(i + 1) * n];
-        let x1 = &rows[(i + 1) * n..(i + 2) * n];
-        let x2 = &rows[(i + 2) * n..(i + 3) * n];
-        let x3 = &rows[(i + 3) * n..(i + 4) * n];
-        let u0 = dot_idx(x0, cols, w);
-        let u1 = dot_idx(x1, cols, w);
-        let u2 = dot_idx(x2, cols, w);
-        let u3 = dot_idx(x3, cols, w);
-        u[i] = u0;
-        u[i + 1] = u1;
-        u[i + 2] = u2;
-        u[i + 3] = u3;
-        for j in 0..n {
-            av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
-        }
-    }
-    for i in packs * 4..m {
-        let row = &rows[i * n..(i + 1) * n];
-        let ui = dot_idx(row, cols, w);
-        u[i] = ui;
-        for j in 0..n {
-            av[j] += ui * row[j];
-        }
-    }
+    simd::fused_step_panel(rows, n, cols, w, u, av)
 }
 
 /// Multi-response `Aᵀ R` panel: for every model `k`,
@@ -414,35 +207,7 @@ pub fn fused_step_panel(
 /// same four-row packs, so per-model results are bit-identical to the
 /// single-response kernel at any batch width.
 pub fn at_r_multi_panel(rows: &[f64], n: usize, rs: &[&[f64]], accs: &mut [&mut [f64]]) {
-    debug_assert_eq!(rs.len(), accs.len());
-    let Some(first) = rs.first() else { return };
-    let m = first.len();
-    debug_assert_eq!(rows.len(), m * n);
-    let packs = m / 4;
-    for p in 0..packs {
-        let i = p * 4;
-        let x0 = &rows[i * n..(i + 1) * n];
-        let x1 = &rows[(i + 1) * n..(i + 2) * n];
-        let x2 = &rows[(i + 2) * n..(i + 3) * n];
-        let x3 = &rows[(i + 3) * n..(i + 4) * n];
-        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
-            debug_assert_eq!(r.len(), m);
-            debug_assert_eq!(acc.len(), n);
-            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
-            for j in 0..n {
-                acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
-            }
-        }
-    }
-    for i in packs * 4..m {
-        let row = &rows[i * n..(i + 1) * n];
-        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
-            let ri = r[i];
-            for j in 0..n {
-                acc[j] += ri * row[j];
-            }
-        }
-    }
+    simd::at_r_multi_panel(rows, n, rs, accs)
 }
 
 /// Multi-response fused equiangular step: for every model `k`, one
@@ -462,48 +227,7 @@ pub fn fused_step_multi_panel(
     us: &mut [&mut [f64]],
     avs: &mut [&mut [f64]],
 ) {
-    debug_assert_eq!(cols.len(), ws.len());
-    debug_assert_eq!(cols.len(), us.len());
-    debug_assert_eq!(cols.len(), avs.len());
-    let Some(first) = us.first() else { return };
-    let m = first.len();
-    debug_assert_eq!(rows.len(), m * n);
-    let packs = m / 4;
-    for p in 0..packs {
-        let i = p * 4;
-        let x0 = &rows[i * n..(i + 1) * n];
-        let x1 = &rows[(i + 1) * n..(i + 2) * n];
-        let x2 = &rows[(i + 2) * n..(i + 3) * n];
-        let x3 = &rows[(i + 3) * n..(i + 4) * n];
-        for k in 0..cols.len() {
-            let (ck, wk) = (cols[k], ws[k]);
-            debug_assert_eq!(ck.len(), wk.len());
-            let u0 = dot_idx(x0, ck, wk);
-            let u1 = dot_idx(x1, ck, wk);
-            let u2 = dot_idx(x2, ck, wk);
-            let u3 = dot_idx(x3, ck, wk);
-            let u = &mut us[k];
-            u[i] = u0;
-            u[i + 1] = u1;
-            u[i + 2] = u2;
-            u[i + 3] = u3;
-            let av = &mut avs[k];
-            for j in 0..n {
-                av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
-            }
-        }
-    }
-    for i in packs * 4..m {
-        let row = &rows[i * n..(i + 1) * n];
-        for k in 0..cols.len() {
-            let ui = dot_idx(row, cols[k], ws[k]);
-            us[k][i] = ui;
-            let av = &mut avs[k];
-            for j in 0..n {
-                av[j] += ui * row[j];
-            }
-        }
-    }
+    simd::fused_step_multi_panel(rows, n, cols, ws, us, avs)
 }
 
 /// One fixed-grain chunk `[lo, hi)` of the LARS γ-candidate scan: for

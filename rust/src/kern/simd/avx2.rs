@@ -1,0 +1,621 @@
+//! AVX2 backend: 4 × f64 per register, which maps *exactly* onto the
+//! scalar kernels' four accumulators / four-row packs — lane `i` of a
+//! vector register is scalar accumulator `i`, and the horizontal
+//! reduce recombines lanes in the canonical `(s0+s1) + (s2+s3)` order.
+//! Every kernel in this file is therefore **bit-identical** to
+//! [`super::scalar`]; there is no gated divergence on AVX2.
+//!
+//! No FMA is used anywhere: the contract is one rounding per multiply
+//! and one per add, exactly like the scalar code, even though the host
+//! may advertise `fma`.
+//!
+//! The gather-shaped kernels (`dot_idx`, `sparse_dot`, `scatter_axpy`,
+//! `cols_dot_panel`) keep the scalar 4-accumulator loop bodies inside
+//! a `#[target_feature]` fn — they are index-chasing bound, and giving
+//! the compiler the AVX2 feature set is worth more than hand-placed
+//! gathers. `dot_idx`/`sparse_dot` additionally pack their four
+//! gathered values with `_mm256_set_pd` (arguments high-lane-first) so
+//! the arithmetic stays in the canonical lane order.
+
+use core::arch::x86_64::*;
+
+/// Store the 4 lanes and combine `(l0+l1) + (l2+l3)` — the canonical
+/// scalar accumulator merge.
+///
+/// SAFETY: caller must ensure AVX support; every caller in this module
+/// is an AVX2 fn (avx2 implies avx), reachable only after runtime
+/// detection.
+#[target_feature(enable = "avx")]
+unsafe fn hsum4(acc: __m256d) -> f64 {
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+}
+
+/// AVX2 [`super::scalar::dot`]: one 4-lane accumulator register whose
+/// lanes are the four scalar accumulators; bit-identical.
+///
+/// SAFETY: the caller must ensure the CPU supports AVX2 — the
+/// dispatcher guarantees this via runtime feature detection.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let groups = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for g in 0..groups {
+        let j = g * 4;
+        let va = _mm256_loadu_pd(a.as_ptr().add(j));
+        let vb = _mm256_loadu_pd(b.as_ptr().add(j));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+    }
+    let mut s = hsum4(acc);
+    for j in groups * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// AVX2 [`super::scalar::sq_norm`]; bit-identical (lanes are the four
+/// scalar accumulators).
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sq_norm(x: &[f64]) -> f64 {
+    let n = x.len();
+    let groups = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for g in 0..groups {
+        let j = g * 4;
+        let v = _mm256_loadu_pd(x.as_ptr().add(j));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(v, v));
+    }
+    let mut s = hsum4(acc);
+    for j in groups * 4..n {
+        s += x[j] * x[j];
+    }
+    s
+}
+
+/// AVX2 [`super::scalar::axpy`]; element-wise (`y[j] + alpha·x[j]`, one
+/// mul + one add per element) so any vector width is bit-identical.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let groups = n / 4;
+    let va = _mm256_set1_pd(alpha);
+    for g in 0..groups {
+        let j = g * 4;
+        let vx = _mm256_loadu_pd(x.as_ptr().add(j));
+        let vy = _mm256_loadu_pd(y.as_ptr().add(j));
+        let vy = _mm256_add_pd(vy, _mm256_mul_pd(va, vx));
+        _mm256_storeu_pd(y.as_mut_ptr().add(j), vy);
+    }
+    for j in groups * 4..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// AVX2 [`super::scalar::dot_idx`]: gathers via `_mm256_set_pd`
+/// (high-lane-first arguments put `cols[k]` in lane 0), canonical
+/// 4-accumulator order; bit-identical.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_idx(row: &[f64], cols: &[usize], w: &[f64]) -> f64 {
+    debug_assert_eq!(cols.len(), w.len());
+    let n = cols.len();
+    let groups = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for g in 0..groups {
+        let k = g * 4;
+        let vr = _mm256_set_pd(row[cols[k + 3]], row[cols[k + 2]], row[cols[k + 1]], row[cols[k]]);
+        let vw = _mm256_loadu_pd(w.as_ptr().add(k));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(vr, vw));
+    }
+    let mut s = hsum4(acc);
+    for k in groups * 4..n {
+        s += row[cols[k]] * w[k];
+    }
+    s
+}
+
+/// AVX2 [`super::scalar::sparse_dot`]: packed gathers, canonical
+/// 4-accumulator order; bit-identical.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let groups = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for g in 0..groups {
+        let k = g * 4;
+        let vr = _mm256_set_pd(
+            r[rows[k + 3] as usize],
+            r[rows[k + 2] as usize],
+            r[rows[k + 1] as usize],
+            r[rows[k] as usize],
+        );
+        let vv = _mm256_loadu_pd(vals.as_ptr().add(k));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(vr, vv));
+    }
+    let mut s = hsum4(acc);
+    for k in groups * 4..n {
+        s += vals[k] * r[rows[k] as usize];
+    }
+    s
+}
+
+/// AVX2 [`super::scalar::scatter_axpy`]: scalar loop body (the scatter
+/// is index-chasing bound) compiled with the AVX2 feature set;
+/// trivially bit-identical.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn scatter_axpy(wk: f64, rows: &[u32], vals: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let groups = n / 4;
+    for g in 0..groups {
+        let k = g * 4;
+        out[rows[k] as usize] += wk * vals[k];
+        out[rows[k + 1] as usize] += wk * vals[k + 1];
+        out[rows[k + 2] as usize] += wk * vals[k + 2];
+        out[rows[k + 3] as usize] += wk * vals[k + 3];
+    }
+    for k in groups * 4..n {
+        out[rows[k] as usize] += wk * vals[k];
+    }
+}
+
+/// AVX2 [`super::scalar::at_r_panel`]: four broadcast row weights, the
+/// output index `j` vectorized 4-wide; per element the add tree is
+/// `acc[j] + ((r0·x0 + r1·x1) + (r2·x2 + r3·x3))`, exactly the scalar
+/// tree, so the panel is bit-identical at any lane width.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn at_r_panel(rows: &[f64], n: usize, r: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(rows.len(), r.len() * n);
+    debug_assert_eq!(acc.len(), n);
+    let m = r.len();
+    let packs = m / 4;
+    let groups = n / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        let (v0, v1, v2, v3) =
+            (_mm256_set1_pd(r0), _mm256_set1_pd(r1), _mm256_set1_pd(r2), _mm256_set1_pd(r3));
+        for g in 0..groups {
+            let j = g * 4;
+            let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+            let t01 = _mm256_add_pd(
+                _mm256_mul_pd(v0, _mm256_loadu_pd(x0.as_ptr().add(j))),
+                _mm256_mul_pd(v1, _mm256_loadu_pd(x1.as_ptr().add(j))),
+            );
+            let t23 = _mm256_add_pd(
+                _mm256_mul_pd(v2, _mm256_loadu_pd(x2.as_ptr().add(j))),
+                _mm256_mul_pd(v3, _mm256_loadu_pd(x3.as_ptr().add(j))),
+            );
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_add_pd(t01, t23)));
+        }
+        for j in groups * 4..n {
+            acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let ri = r[i];
+        let vri = _mm256_set1_pd(ri);
+        let row = &rows[i * n..(i + 1) * n];
+        for g in 0..groups {
+            let j = g * 4;
+            let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+            let x = _mm256_loadu_pd(row.as_ptr().add(j));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_mul_pd(vri, x)));
+        }
+        for j in groups * 4..n {
+            acc[j] += ri * row[j];
+        }
+    }
+}
+
+/// AVX2 [`super::scalar::col_sq_norms_panel`]; element-wise over `j`,
+/// bit-identical.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn col_sq_norms_panel(rows: &[f64], n: usize, acc: &mut [f64]) {
+    debug_assert_eq!(acc.len(), n);
+    if n == 0 {
+        return;
+    }
+    let m = rows.len() / n;
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for g in 0..groups {
+            let j = g * 4;
+            let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+            let w0 = _mm256_loadu_pd(x0.as_ptr().add(j));
+            let w1 = _mm256_loadu_pd(x1.as_ptr().add(j));
+            let w2 = _mm256_loadu_pd(x2.as_ptr().add(j));
+            let w3 = _mm256_loadu_pd(x3.as_ptr().add(j));
+            let t01 = _mm256_add_pd(_mm256_mul_pd(w0, w0), _mm256_mul_pd(w1, w1));
+            let t23 = _mm256_add_pd(_mm256_mul_pd(w2, w2), _mm256_mul_pd(w3, w3));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_add_pd(t01, t23)));
+        }
+        for j in groups * 4..n {
+            acc[j] += (x0[j] * x0[j] + x1[j] * x1[j]) + (x2[j] * x2[j] + x3[j] * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for g in 0..groups {
+            let j = g * 4;
+            let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+            let x = _mm256_loadu_pd(row.as_ptr().add(j));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_mul_pd(x, x)));
+        }
+        for j in groups * 4..n {
+            acc[j] += row[j] * row[j];
+        }
+    }
+}
+
+/// AVX2 [`super::scalar::gram_panel`]: same row packing, the 4-wide
+/// `b` dimension of each 4×4 tile done in one register; per output
+/// cell the add tree matches the scalar micro-GEMM, so bit-identical.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn gram_panel(
+    rows: &[f64],
+    n: usize,
+    ii: &[usize],
+    jj: &[usize],
+    pi: &mut [f64],
+    pj: &mut [f64],
+    acc: &mut [f64],
+) {
+    let na = ii.len();
+    let nb = jj.len();
+    debug_assert!(pi.len() >= 4 * na && pj.len() >= 4 * nb);
+    debug_assert_eq!(acc.len(), na * nb);
+    if n == 0 || na == 0 || nb == 0 {
+        return;
+    }
+    let m = rows.len() / n;
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        for k in 0..4 {
+            let row = &rows[(i + k) * n..(i + k + 1) * n];
+            for (a, &col) in ii.iter().enumerate() {
+                pi[k * na + a] = row[col];
+            }
+            for (b, &col) in jj.iter().enumerate() {
+                pj[k * nb + b] = row[col];
+            }
+        }
+        for a0 in (0..na).step_by(4) {
+            for b0 in (0..nb).step_by(4) {
+                let bw = nb.min(b0 + 4) - b0;
+                for a in a0..na.min(a0 + 4) {
+                    let v0 = pi[a];
+                    let v1 = pi[na + a];
+                    let v2 = pi[2 * na + a];
+                    let v3 = pi[3 * na + a];
+                    if bw == 4 {
+                        let p0 = _mm256_loadu_pd(pj.as_ptr().add(b0));
+                        let p1 = _mm256_loadu_pd(pj.as_ptr().add(nb + b0));
+                        let p2 = _mm256_loadu_pd(pj.as_ptr().add(2 * nb + b0));
+                        let p3 = _mm256_loadu_pd(pj.as_ptr().add(3 * nb + b0));
+                        let t01 = _mm256_add_pd(
+                            _mm256_mul_pd(_mm256_set1_pd(v0), p0),
+                            _mm256_mul_pd(_mm256_set1_pd(v1), p1),
+                        );
+                        let t23 = _mm256_add_pd(
+                            _mm256_mul_pd(_mm256_set1_pd(v2), p2),
+                            _mm256_mul_pd(_mm256_set1_pd(v3), p3),
+                        );
+                        let o = acc.as_mut_ptr().add(a * nb + b0);
+                        _mm256_storeu_pd(
+                            o,
+                            _mm256_add_pd(_mm256_loadu_pd(o), _mm256_add_pd(t01, t23)),
+                        );
+                    } else {
+                        for b in b0..b0 + bw {
+                            acc[a * nb + b] += (v0 * pj[b] + v1 * pj[nb + b])
+                                + (v2 * pj[2 * nb + b] + v3 * pj[3 * nb + b]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for (b, &col) in jj.iter().enumerate() {
+            pj[b] = row[col];
+        }
+        for (a, &col) in ii.iter().enumerate() {
+            let v = row[col];
+            let orow = &mut acc[a * nb..(a + 1) * nb];
+            for (o, &x) in orow.iter_mut().zip(&pj[..nb]) {
+                *o += v * x;
+            }
+        }
+    }
+}
+
+/// AVX2 [`super::scalar::cols_dot_panel`]: scalar gather body (the
+/// active-set gather dominates) under the AVX2 feature set;
+/// bit-identical.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn cols_dot_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    r: &[f64],
+    acc: &mut [f64],
+) {
+    debug_assert_eq!(rows.len(), r.len() * n);
+    debug_assert_eq!(acc.len(), cols.len());
+    let m = r.len();
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for (o, &j) in acc.iter_mut().zip(cols) {
+            *o += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let ri = r[i];
+        let row = &rows[i * n..(i + 1) * n];
+        for (o, &j) in acc.iter_mut().zip(cols) {
+            *o += ri * row[j];
+        }
+    }
+}
+
+/// AVX2 [`super::scalar::fused_step_panel`]: `u` comes from the AVX2
+/// [`dot_idx`] (itself bit-identical), the `av` update is the 4-wide
+/// element-wise tree of [`at_r_panel`]; bit-identical.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn fused_step_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    w: &[f64],
+    u: &mut [f64],
+    av: &mut [f64],
+) {
+    debug_assert_eq!(cols.len(), w.len());
+    debug_assert_eq!(av.len(), n);
+    debug_assert_eq!(rows.len(), u.len() * n);
+    let m = u.len();
+    let packs = m / 4;
+    let groups = n / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        let u0 = dot_idx(x0, cols, w);
+        let u1 = dot_idx(x1, cols, w);
+        let u2 = dot_idx(x2, cols, w);
+        let u3 = dot_idx(x3, cols, w);
+        u[i] = u0;
+        u[i + 1] = u1;
+        u[i + 2] = u2;
+        u[i + 3] = u3;
+        let (v0, v1, v2, v3) =
+            (_mm256_set1_pd(u0), _mm256_set1_pd(u1), _mm256_set1_pd(u2), _mm256_set1_pd(u3));
+        for g in 0..groups {
+            let j = g * 4;
+            let a = _mm256_loadu_pd(av.as_ptr().add(j));
+            let t01 = _mm256_add_pd(
+                _mm256_mul_pd(v0, _mm256_loadu_pd(x0.as_ptr().add(j))),
+                _mm256_mul_pd(v1, _mm256_loadu_pd(x1.as_ptr().add(j))),
+            );
+            let t23 = _mm256_add_pd(
+                _mm256_mul_pd(v2, _mm256_loadu_pd(x2.as_ptr().add(j))),
+                _mm256_mul_pd(v3, _mm256_loadu_pd(x3.as_ptr().add(j))),
+            );
+            _mm256_storeu_pd(av.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_add_pd(t01, t23)));
+        }
+        for j in groups * 4..n {
+            av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        let ui = dot_idx(row, cols, w);
+        u[i] = ui;
+        let vui = _mm256_set1_pd(ui);
+        for g in 0..groups {
+            let j = g * 4;
+            let a = _mm256_loadu_pd(av.as_ptr().add(j));
+            let x = _mm256_loadu_pd(row.as_ptr().add(j));
+            _mm256_storeu_pd(av.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_mul_pd(vui, x)));
+        }
+        for j in groups * 4..n {
+            av[j] += ui * row[j];
+        }
+    }
+}
+
+/// AVX2 [`super::scalar::at_r_multi_panel`]: models inner over shared
+/// 4-row packs, `j` vectorized 4-wide; per model bit-identical to
+/// [`at_r_panel`].
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn at_r_multi_panel(
+    rows: &[f64],
+    n: usize,
+    rs: &[&[f64]],
+    accs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(rs.len(), accs.len());
+    let Some(first) = rs.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            debug_assert_eq!(r.len(), m);
+            debug_assert_eq!(acc.len(), n);
+            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+            let (v0, v1, v2, v3) =
+                (_mm256_set1_pd(r0), _mm256_set1_pd(r1), _mm256_set1_pd(r2), _mm256_set1_pd(r3));
+            for g in 0..groups {
+                let j = g * 4;
+                let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+                let t01 = _mm256_add_pd(
+                    _mm256_mul_pd(v0, _mm256_loadu_pd(x0.as_ptr().add(j))),
+                    _mm256_mul_pd(v1, _mm256_loadu_pd(x1.as_ptr().add(j))),
+                );
+                let t23 = _mm256_add_pd(
+                    _mm256_mul_pd(v2, _mm256_loadu_pd(x2.as_ptr().add(j))),
+                    _mm256_mul_pd(v3, _mm256_loadu_pd(x3.as_ptr().add(j))),
+                );
+                _mm256_storeu_pd(
+                    acc.as_mut_ptr().add(j),
+                    _mm256_add_pd(a, _mm256_add_pd(t01, t23)),
+                );
+            }
+            for j in groups * 4..n {
+                acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            let ri = r[i];
+            let vri = _mm256_set1_pd(ri);
+            for g in 0..groups {
+                let j = g * 4;
+                let a = _mm256_loadu_pd(acc.as_ptr().add(j));
+                let x = _mm256_loadu_pd(row.as_ptr().add(j));
+                _mm256_storeu_pd(acc.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_mul_pd(vri, x)));
+            }
+            for j in groups * 4..n {
+                acc[j] += ri * row[j];
+            }
+        }
+    }
+}
+
+/// AVX2 [`super::scalar::fused_step_multi_panel`]: per model
+/// bit-identical to [`fused_step_panel`] over the shared row packs.
+///
+/// SAFETY: caller must ensure AVX2 support (dispatcher-guaranteed).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn fused_step_multi_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[&[usize]],
+    ws: &[&[f64]],
+    us: &mut [&mut [f64]],
+    avs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(cols.len(), ws.len());
+    debug_assert_eq!(cols.len(), us.len());
+    debug_assert_eq!(cols.len(), avs.len());
+    let Some(first) = us.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for k in 0..cols.len() {
+            let (ck, wk) = (cols[k], ws[k]);
+            debug_assert_eq!(ck.len(), wk.len());
+            let u0 = dot_idx(x0, ck, wk);
+            let u1 = dot_idx(x1, ck, wk);
+            let u2 = dot_idx(x2, ck, wk);
+            let u3 = dot_idx(x3, ck, wk);
+            let u = &mut us[k];
+            u[i] = u0;
+            u[i + 1] = u1;
+            u[i + 2] = u2;
+            u[i + 3] = u3;
+            let av = &mut avs[k];
+            let (v0, v1, v2, v3) =
+                (_mm256_set1_pd(u0), _mm256_set1_pd(u1), _mm256_set1_pd(u2), _mm256_set1_pd(u3));
+            for g in 0..groups {
+                let j = g * 4;
+                let a = _mm256_loadu_pd(av.as_ptr().add(j));
+                let t01 = _mm256_add_pd(
+                    _mm256_mul_pd(v0, _mm256_loadu_pd(x0.as_ptr().add(j))),
+                    _mm256_mul_pd(v1, _mm256_loadu_pd(x1.as_ptr().add(j))),
+                );
+                let t23 = _mm256_add_pd(
+                    _mm256_mul_pd(v2, _mm256_loadu_pd(x2.as_ptr().add(j))),
+                    _mm256_mul_pd(v3, _mm256_loadu_pd(x3.as_ptr().add(j))),
+                );
+                _mm256_storeu_pd(av.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_add_pd(t01, t23)));
+            }
+            for j in groups * 4..n {
+                av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for k in 0..cols.len() {
+            let ui = dot_idx(row, cols[k], ws[k]);
+            us[k][i] = ui;
+            let av = &mut avs[k];
+            let vui = _mm256_set1_pd(ui);
+            for g in 0..groups {
+                let j = g * 4;
+                let a = _mm256_loadu_pd(av.as_ptr().add(j));
+                let x = _mm256_loadu_pd(row.as_ptr().add(j));
+                _mm256_storeu_pd(av.as_mut_ptr().add(j), _mm256_add_pd(a, _mm256_mul_pd(vui, x)));
+            }
+            for j in groups * 4..n {
+                av[j] += ui * row[j];
+            }
+        }
+    }
+}

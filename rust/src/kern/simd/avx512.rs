@@ -1,0 +1,479 @@
+//! AVX-512F backend: 8 × f64 per register.
+//!
+//! Divergence classes (see DESIGN.md §"Kernel engine · SIMD"):
+//!
+//! - [`dot`] / [`sq_norm`] use one 8-lane accumulator whose reduce tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` and 8-element tail differ
+//!   from the canonical 4-accumulator order — these two kernels are the
+//!   **only** 1e-9-gated divergences in the whole engine.
+//! - The streaming panels vectorize the *output* index 8-wide; each
+//!   output element sees exactly the scalar add tree, so they stay
+//!   **bit-identical** at any lane width.
+//! - Gather/scatter kernels and the gram micro-GEMM delegate to the
+//!   [`super::avx2`] implementations (bit-identical by construction);
+//!   an avx512f host always has avx2.
+//!
+//! No FMA anywhere: one rounding per multiply, one per add, exactly
+//! like the scalar code.
+
+use core::arch::x86_64::*;
+
+/// Store the 8 lanes and combine `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+///
+/// SAFETY: caller must ensure AVX-512F support (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f")]
+unsafe fn hsum8(acc: __m512d) -> f64 {
+    let mut lanes = [0.0f64; 8];
+    _mm512_storeu_pd(lanes.as_mut_ptr(), acc);
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+}
+
+/// AVX-512 dot: one 8-lane accumulator, 8-element tail. **Divergent**
+/// from the canonical order (different reduction tree) — gated at 1e-9
+/// against `kern::reference` instead of bit-identity.
+///
+/// SAFETY: caller must ensure AVX-512F support (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let groups = n / 8;
+    let mut acc = _mm512_setzero_pd();
+    for g in 0..groups {
+        let j = g * 8;
+        let va = _mm512_loadu_pd(a.as_ptr().add(j));
+        let vb = _mm512_loadu_pd(b.as_ptr().add(j));
+        acc = _mm512_add_pd(acc, _mm512_mul_pd(va, vb));
+    }
+    let mut s = hsum8(acc);
+    for j in groups * 8..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// AVX-512 sum of squares; **divergent** like [`dot`] (1e-9-gated).
+///
+/// SAFETY: caller must ensure AVX-512F support (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn sq_norm(x: &[f64]) -> f64 {
+    let n = x.len();
+    let groups = n / 8;
+    let mut acc = _mm512_setzero_pd();
+    for g in 0..groups {
+        let j = g * 8;
+        let v = _mm512_loadu_pd(x.as_ptr().add(j));
+        acc = _mm512_add_pd(acc, _mm512_mul_pd(v, v));
+    }
+    let mut s = hsum8(acc);
+    for j in groups * 8..n {
+        s += x[j] * x[j];
+    }
+    s
+}
+
+/// AVX-512 axpy, 8-wide; element-wise so bit-identical.
+///
+/// SAFETY: caller must ensure AVX-512F support (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let groups = n / 8;
+    let va = _mm512_set1_pd(alpha);
+    for g in 0..groups {
+        let j = g * 8;
+        let vx = _mm512_loadu_pd(x.as_ptr().add(j));
+        let vy = _mm512_loadu_pd(y.as_ptr().add(j));
+        let vy = _mm512_add_pd(vy, _mm512_mul_pd(va, vx));
+        _mm512_storeu_pd(y.as_mut_ptr().add(j), vy);
+    }
+    for j in groups * 8..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// Delegates to the AVX2 gather kernel (canonical 4-accumulator order,
+/// bit-identical) — the gather dominates, wider registers don't help.
+///
+/// SAFETY: caller must ensure AVX-512F+AVX2 support
+/// (dispatcher-guaranteed; avx512f hosts have avx2).
+#[target_feature(enable = "avx512f,avx2")]
+pub(super) unsafe fn dot_idx(row: &[f64], cols: &[usize], w: &[f64]) -> f64 {
+    super::avx2::dot_idx(row, cols, w)
+}
+
+/// Delegates to the AVX2 sparse gather kernel (bit-identical).
+///
+/// SAFETY: caller must ensure AVX-512F+AVX2 support
+/// (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f,avx2")]
+pub(super) unsafe fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    super::avx2::sparse_dot(rows, vals, r)
+}
+
+/// Delegates to the AVX2 scatter kernel (bit-identical).
+///
+/// SAFETY: caller must ensure AVX-512F+AVX2 support
+/// (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f,avx2")]
+pub(super) unsafe fn scatter_axpy(wk: f64, rows: &[u32], vals: &[f64], out: &mut [f64]) {
+    super::avx2::scatter_axpy(wk, rows, vals, out)
+}
+
+/// AVX-512 `Aᵀr` panel: four broadcast row weights, output index `j`
+/// vectorized 8-wide; per element the scalar add tree, bit-identical.
+///
+/// SAFETY: caller must ensure AVX-512F support (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn at_r_panel(rows: &[f64], n: usize, r: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(rows.len(), r.len() * n);
+    debug_assert_eq!(acc.len(), n);
+    let m = r.len();
+    let packs = m / 4;
+    let groups = n / 8;
+    for p in 0..packs {
+        let i = p * 4;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        let (v0, v1, v2, v3) =
+            (_mm512_set1_pd(r0), _mm512_set1_pd(r1), _mm512_set1_pd(r2), _mm512_set1_pd(r3));
+        for g in 0..groups {
+            let j = g * 8;
+            let a = _mm512_loadu_pd(acc.as_ptr().add(j));
+            let t01 = _mm512_add_pd(
+                _mm512_mul_pd(v0, _mm512_loadu_pd(x0.as_ptr().add(j))),
+                _mm512_mul_pd(v1, _mm512_loadu_pd(x1.as_ptr().add(j))),
+            );
+            let t23 = _mm512_add_pd(
+                _mm512_mul_pd(v2, _mm512_loadu_pd(x2.as_ptr().add(j))),
+                _mm512_mul_pd(v3, _mm512_loadu_pd(x3.as_ptr().add(j))),
+            );
+            _mm512_storeu_pd(acc.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_add_pd(t01, t23)));
+        }
+        for j in groups * 8..n {
+            acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let ri = r[i];
+        let vri = _mm512_set1_pd(ri);
+        let row = &rows[i * n..(i + 1) * n];
+        for g in 0..groups {
+            let j = g * 8;
+            let a = _mm512_loadu_pd(acc.as_ptr().add(j));
+            let x = _mm512_loadu_pd(row.as_ptr().add(j));
+            _mm512_storeu_pd(acc.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_mul_pd(vri, x)));
+        }
+        for j in groups * 8..n {
+            acc[j] += ri * row[j];
+        }
+    }
+}
+
+/// AVX-512 column square norms, 8-wide over `j`; bit-identical.
+///
+/// SAFETY: caller must ensure AVX-512F support (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn col_sq_norms_panel(rows: &[f64], n: usize, acc: &mut [f64]) {
+    debug_assert_eq!(acc.len(), n);
+    if n == 0 {
+        return;
+    }
+    let m = rows.len() / n;
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 8;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for g in 0..groups {
+            let j = g * 8;
+            let a = _mm512_loadu_pd(acc.as_ptr().add(j));
+            let w0 = _mm512_loadu_pd(x0.as_ptr().add(j));
+            let w1 = _mm512_loadu_pd(x1.as_ptr().add(j));
+            let w2 = _mm512_loadu_pd(x2.as_ptr().add(j));
+            let w3 = _mm512_loadu_pd(x3.as_ptr().add(j));
+            let t01 = _mm512_add_pd(_mm512_mul_pd(w0, w0), _mm512_mul_pd(w1, w1));
+            let t23 = _mm512_add_pd(_mm512_mul_pd(w2, w2), _mm512_mul_pd(w3, w3));
+            _mm512_storeu_pd(acc.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_add_pd(t01, t23)));
+        }
+        for j in groups * 8..n {
+            acc[j] += (x0[j] * x0[j] + x1[j] * x1[j]) + (x2[j] * x2[j] + x3[j] * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for g in 0..groups {
+            let j = g * 8;
+            let a = _mm512_loadu_pd(acc.as_ptr().add(j));
+            let x = _mm512_loadu_pd(row.as_ptr().add(j));
+            _mm512_storeu_pd(acc.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_mul_pd(x, x)));
+        }
+        for j in groups * 8..n {
+            acc[j] += row[j] * row[j];
+        }
+    }
+}
+
+/// Delegates to the AVX2 4×4 micro-GEMM (bit-identical): the tile's
+/// `b` dimension is 4 wide by construction, so 256-bit registers are
+/// the natural width.
+///
+/// SAFETY: caller must ensure AVX-512F+AVX2 support
+/// (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f,avx2")]
+pub(super) unsafe fn gram_panel(
+    rows: &[f64],
+    n: usize,
+    ii: &[usize],
+    jj: &[usize],
+    pi: &mut [f64],
+    pj: &mut [f64],
+    acc: &mut [f64],
+) {
+    super::avx2::gram_panel(rows, n, ii, jj, pi, pj, acc)
+}
+
+/// Delegates to the AVX2 active-set gather kernel (bit-identical).
+///
+/// SAFETY: caller must ensure AVX-512F+AVX2 support
+/// (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f,avx2")]
+pub(super) unsafe fn cols_dot_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    r: &[f64],
+    acc: &mut [f64],
+) {
+    super::avx2::cols_dot_panel(rows, n, cols, r, acc)
+}
+
+/// AVX-512 fused equiangular step: `u` from the AVX2 [`dot_idx`]
+/// (canonical 4-accumulator order), the `av` update 8-wide
+/// element-wise; bit-identical — the 8-lane divergence is confined to
+/// [`dot`]/[`sq_norm`].
+///
+/// SAFETY: caller must ensure AVX-512F+AVX2 support
+/// (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f,avx2")]
+pub(super) unsafe fn fused_step_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    w: &[f64],
+    u: &mut [f64],
+    av: &mut [f64],
+) {
+    debug_assert_eq!(cols.len(), w.len());
+    debug_assert_eq!(av.len(), n);
+    debug_assert_eq!(rows.len(), u.len() * n);
+    let m = u.len();
+    let packs = m / 4;
+    let groups = n / 8;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        let u0 = super::avx2::dot_idx(x0, cols, w);
+        let u1 = super::avx2::dot_idx(x1, cols, w);
+        let u2 = super::avx2::dot_idx(x2, cols, w);
+        let u3 = super::avx2::dot_idx(x3, cols, w);
+        u[i] = u0;
+        u[i + 1] = u1;
+        u[i + 2] = u2;
+        u[i + 3] = u3;
+        let (v0, v1, v2, v3) =
+            (_mm512_set1_pd(u0), _mm512_set1_pd(u1), _mm512_set1_pd(u2), _mm512_set1_pd(u3));
+        for g in 0..groups {
+            let j = g * 8;
+            let a = _mm512_loadu_pd(av.as_ptr().add(j));
+            let t01 = _mm512_add_pd(
+                _mm512_mul_pd(v0, _mm512_loadu_pd(x0.as_ptr().add(j))),
+                _mm512_mul_pd(v1, _mm512_loadu_pd(x1.as_ptr().add(j))),
+            );
+            let t23 = _mm512_add_pd(
+                _mm512_mul_pd(v2, _mm512_loadu_pd(x2.as_ptr().add(j))),
+                _mm512_mul_pd(v3, _mm512_loadu_pd(x3.as_ptr().add(j))),
+            );
+            _mm512_storeu_pd(av.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_add_pd(t01, t23)));
+        }
+        for j in groups * 8..n {
+            av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        let ui = super::avx2::dot_idx(row, cols, w);
+        u[i] = ui;
+        let vui = _mm512_set1_pd(ui);
+        for g in 0..groups {
+            let j = g * 8;
+            let a = _mm512_loadu_pd(av.as_ptr().add(j));
+            let x = _mm512_loadu_pd(row.as_ptr().add(j));
+            _mm512_storeu_pd(av.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_mul_pd(vui, x)));
+        }
+        for j in groups * 8..n {
+            av[j] += ui * row[j];
+        }
+    }
+}
+
+/// AVX-512 multi-response `Aᵀ R`, 8-wide over `j`; per model
+/// bit-identical to [`at_r_panel`].
+///
+/// SAFETY: caller must ensure AVX-512F support (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn at_r_multi_panel(
+    rows: &[f64],
+    n: usize,
+    rs: &[&[f64]],
+    accs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(rs.len(), accs.len());
+    let Some(first) = rs.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 8;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            debug_assert_eq!(r.len(), m);
+            debug_assert_eq!(acc.len(), n);
+            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+            let (v0, v1, v2, v3) =
+                (_mm512_set1_pd(r0), _mm512_set1_pd(r1), _mm512_set1_pd(r2), _mm512_set1_pd(r3));
+            for g in 0..groups {
+                let j = g * 8;
+                let a = _mm512_loadu_pd(acc.as_ptr().add(j));
+                let t01 = _mm512_add_pd(
+                    _mm512_mul_pd(v0, _mm512_loadu_pd(x0.as_ptr().add(j))),
+                    _mm512_mul_pd(v1, _mm512_loadu_pd(x1.as_ptr().add(j))),
+                );
+                let t23 = _mm512_add_pd(
+                    _mm512_mul_pd(v2, _mm512_loadu_pd(x2.as_ptr().add(j))),
+                    _mm512_mul_pd(v3, _mm512_loadu_pd(x3.as_ptr().add(j))),
+                );
+                _mm512_storeu_pd(
+                    acc.as_mut_ptr().add(j),
+                    _mm512_add_pd(a, _mm512_add_pd(t01, t23)),
+                );
+            }
+            for j in groups * 8..n {
+                acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            let ri = r[i];
+            let vri = _mm512_set1_pd(ri);
+            for g in 0..groups {
+                let j = g * 8;
+                let a = _mm512_loadu_pd(acc.as_ptr().add(j));
+                let x = _mm512_loadu_pd(row.as_ptr().add(j));
+                _mm512_storeu_pd(acc.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_mul_pd(vri, x)));
+            }
+            for j in groups * 8..n {
+                acc[j] += ri * row[j];
+            }
+        }
+    }
+}
+
+/// AVX-512 multi-response fused step: per model bit-identical to
+/// [`fused_step_panel`].
+///
+/// SAFETY: caller must ensure AVX-512F+AVX2 support
+/// (dispatcher-guaranteed).
+#[target_feature(enable = "avx512f,avx2")]
+pub(super) unsafe fn fused_step_multi_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[&[usize]],
+    ws: &[&[f64]],
+    us: &mut [&mut [f64]],
+    avs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(cols.len(), ws.len());
+    debug_assert_eq!(cols.len(), us.len());
+    debug_assert_eq!(cols.len(), avs.len());
+    let Some(first) = us.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 8;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for k in 0..cols.len() {
+            let (ck, wk) = (cols[k], ws[k]);
+            debug_assert_eq!(ck.len(), wk.len());
+            let u0 = super::avx2::dot_idx(x0, ck, wk);
+            let u1 = super::avx2::dot_idx(x1, ck, wk);
+            let u2 = super::avx2::dot_idx(x2, ck, wk);
+            let u3 = super::avx2::dot_idx(x3, ck, wk);
+            let u = &mut us[k];
+            u[i] = u0;
+            u[i + 1] = u1;
+            u[i + 2] = u2;
+            u[i + 3] = u3;
+            let av = &mut avs[k];
+            let (v0, v1, v2, v3) =
+                (_mm512_set1_pd(u0), _mm512_set1_pd(u1), _mm512_set1_pd(u2), _mm512_set1_pd(u3));
+            for g in 0..groups {
+                let j = g * 8;
+                let a = _mm512_loadu_pd(av.as_ptr().add(j));
+                let t01 = _mm512_add_pd(
+                    _mm512_mul_pd(v0, _mm512_loadu_pd(x0.as_ptr().add(j))),
+                    _mm512_mul_pd(v1, _mm512_loadu_pd(x1.as_ptr().add(j))),
+                );
+                let t23 = _mm512_add_pd(
+                    _mm512_mul_pd(v2, _mm512_loadu_pd(x2.as_ptr().add(j))),
+                    _mm512_mul_pd(v3, _mm512_loadu_pd(x3.as_ptr().add(j))),
+                );
+                _mm512_storeu_pd(av.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_add_pd(t01, t23)));
+            }
+            for j in groups * 8..n {
+                av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for k in 0..cols.len() {
+            let ui = super::avx2::dot_idx(row, cols[k], ws[k]);
+            us[k][i] = ui;
+            let av = &mut avs[k];
+            let vui = _mm512_set1_pd(ui);
+            for g in 0..groups {
+                let j = g * 8;
+                let a = _mm512_loadu_pd(av.as_ptr().add(j));
+                let x = _mm512_loadu_pd(row.as_ptr().add(j));
+                _mm512_storeu_pd(av.as_mut_ptr().add(j), _mm512_add_pd(a, _mm512_mul_pd(vui, x)));
+            }
+            for j in groups * 8..n {
+                av[j] += ui * row[j];
+            }
+        }
+    }
+}

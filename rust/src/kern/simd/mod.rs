@@ -1,0 +1,415 @@
+//! Runtime-dispatched SIMD backends for the kernel engine.
+//!
+//! The scalar kernels in [`scalar`] were deliberately shaped with
+//! 4-accumulator lanes and 4-row packs so they would map onto vector
+//! registers without changing the summation order. This module cashes
+//! that in: explicit AVX2 / AVX-512F / NEON paths via `core::arch`,
+//! selected **once** per process by runtime feature detection and
+//! overridable with `CALARS_ISA=scalar|avx2|avx512|neon` (or `--isa`
+//! on the CLI).
+//!
+//! # Determinism contract
+//!
+//! - Resolution order for [`current`]: a [`with_backend`] thread-local
+//!   override, then the backend captured by the owning
+//!   [`crate::par::ThreadPool`] (workers always agree with the thread
+//!   that built their pool), then the process-global choice.
+//! - AVX2 (4 × f64) and NEON (2 × f64 register pairs) reproduce the
+//!   canonical order exactly: every kernel is bit-identical to
+//!   [`scalar`].
+//! - AVX-512F reduces `dot`/`sq_norm` with one 8-lane accumulator — a
+//!   genuinely different reduction tree — so those two kernels are
+//!   gated at 1e-9 against `kern::reference`; every other AVX-512
+//!   kernel vectorizes the *output* index and stays bit-identical.
+//! - No backend uses FMA: one rounding per multiply and one per add,
+//!   exactly like the scalar code, on every ISA.
+//!
+//! The per-kernel dispatch table and divergence classes are documented
+//! in DESIGN.md §"Kernel engine · SIMD backends".
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use crate::error::{bail, Result};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod scalar;
+
+/// A kernel ISA backend. All variants exist on every architecture so
+/// parsing, reporting and the cross-backend test matrix are uniform;
+/// [`KernBackend::supported`] says whether the *host* can run one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernBackend {
+    /// Portable blocked-scalar kernels — the canonical-order reference.
+    Scalar,
+    /// AVX2: 4 × f64 registers, bit-identical to scalar everywhere.
+    Avx2,
+    /// AVX-512F: 8 × f64; `dot`/`sq_norm` are 1e-9-gated, the rest
+    /// bit-identical.
+    Avx512,
+    /// NEON (aarch64): 2 × f64 register pairs, bit-identical to scalar
+    /// everywhere.
+    Neon,
+}
+
+impl KernBackend {
+    /// Every backend, in preference order (widest first).
+    pub const ALL: [KernBackend; 4] =
+        [KernBackend::Avx512, KernBackend::Avx2, KernBackend::Neon, KernBackend::Scalar];
+
+    /// The lowercase name used by `CALARS_ISA`, `--isa`, `info --json`,
+    /// `/stats` and `/metrics`.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernBackend::Scalar => "scalar",
+            KernBackend::Avx2 => "avx2",
+            KernBackend::Avx512 => "avx512",
+            KernBackend::Neon => "neon",
+        }
+    }
+
+    /// Parse a `CALARS_ISA` / `--isa` value (exact lowercase names).
+    pub fn parse(s: &str) -> Option<KernBackend> {
+        match s {
+            "scalar" => Some(KernBackend::Scalar),
+            "avx2" => Some(KernBackend::Avx2),
+            "avx512" => Some(KernBackend::Avx512),
+            "neon" => Some(KernBackend::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this host can execute the backend, via runtime feature
+    /// detection (`is_x86_feature_detected!` / aarch64 equivalent).
+    pub fn supported(self) -> bool {
+        match self {
+            KernBackend::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernBackend::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            KernBackend::Avx512 => {
+                is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx2")
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernBackend::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            _ => false,
+        }
+    }
+
+    /// The widest backend this host supports.
+    pub fn detect() -> KernBackend {
+        for b in KernBackend::ALL {
+            if b.supported() {
+                return b;
+            }
+        }
+        KernBackend::Scalar
+    }
+
+    /// Every backend the host supports, widest first
+    /// ([`KernBackend::Scalar`] is always last).
+    pub fn available() -> Vec<KernBackend> {
+        KernBackend::ALL.into_iter().filter(|b| b.supported()).collect()
+    }
+
+    /// Whether every kernel under this backend is bit-identical to the
+    /// scalar canonical order. Only AVX-512 diverges (its 8-lane
+    /// `dot`/`sq_norm` reduction tree), and only within the 1e-9 gate.
+    pub fn bit_identical_to_scalar(self) -> bool {
+        !matches!(self, KernBackend::Avx512)
+    }
+}
+
+static GLOBAL: OnceLock<KernBackend> = OnceLock::new();
+
+thread_local! {
+    /// Scoped override installed by [`with_backend`].
+    static OVERRIDE: Cell<Option<KernBackend>> = const { Cell::new(None) };
+}
+
+/// The library default: `CALARS_ISA` when set, valid and supported
+/// (warning on stderr otherwise, like `CALARS_THREADS`), else the
+/// widest detected backend. The `calars` binary resolves the knob
+/// loudly up front via [`init_from_cli`] instead.
+fn default_backend() -> KernBackend {
+    match std::env::var("CALARS_ISA") {
+        Err(_) => KernBackend::detect(),
+        Ok(v) => match KernBackend::parse(v.trim()) {
+            Some(b) if b.supported() => b,
+            Some(b) => {
+                eprintln!(
+                    "warning: CALARS_ISA={} is not supported on this host; using {}",
+                    b.name(),
+                    KernBackend::detect().name()
+                );
+                KernBackend::detect()
+            }
+            None => {
+                eprintln!(
+                    "warning: ignoring unrecognized CALARS_ISA={v:?} \
+                     (expected scalar|avx2|avx512|neon); using {}",
+                    KernBackend::detect().name()
+                );
+                KernBackend::detect()
+            }
+        },
+    }
+}
+
+/// Install `b` as the process-global backend (first caller wins, like
+/// `par::configure`). Returns `false` if the host cannot run `b` or a
+/// *different* backend was already installed.
+pub fn configure(b: KernBackend) -> bool {
+    if !b.supported() {
+        return false;
+    }
+    GLOBAL.set(b).is_ok() || GLOBAL.get() == Some(&b)
+}
+
+/// Resolve the ISA knob for the `calars` binary: `--isa` beats
+/// `CALARS_ISA` beats detection, and — unlike the lazy library default
+/// — an unknown or unsupported name is a hard error so a stale env var
+/// cannot silently change which kernels run.
+pub fn init_from_cli(cli: Option<&str>) -> Result<KernBackend> {
+    let (src, raw) = match cli {
+        Some(v) => ("--isa", v.to_string()),
+        None => match std::env::var("CALARS_ISA") {
+            Ok(v) => ("CALARS_ISA", v),
+            Err(_) => {
+                let b = KernBackend::detect();
+                configure(b);
+                return Ok(b);
+            }
+        },
+    };
+    let Some(b) = KernBackend::parse(raw.trim()) else {
+        bail!("{src}: unknown kernel backend {raw:?} (expected scalar|avx2|avx512|neon)");
+    };
+    if !b.supported() {
+        let avail: Vec<&str> = KernBackend::available().iter().map(|b| b.name()).collect();
+        bail!(
+            "{src}: backend '{}' is not supported on this host (available: {})",
+            b.name(),
+            avail.join(", ")
+        );
+    }
+    if !configure(b) {
+        bail!("{src}: kernel backend already configured as '{}'", current().name());
+    }
+    Ok(b)
+}
+
+/// The backend kernels dispatch to on this thread right now:
+/// a [`with_backend`] override, else the backend captured by the pool
+/// that owns this worker thread, else the process-global choice
+/// (initialized lazily from `CALARS_ISA` / detection).
+pub fn current() -> KernBackend {
+    if let Some(b) = OVERRIDE.with(|o| o.get()) {
+        return b;
+    }
+    if let Some(b) = crate::par::pool::worker_backend() {
+        return b;
+    }
+    *GLOBAL.get_or_init(default_backend)
+}
+
+/// Run `f` with `b` as this thread's backend (panics if the host does
+/// not support `b`). Restores the previous override on exit, including
+/// on unwind. Pool workers do **not** see the override — construct the
+/// pool *inside* the closure so it captures `b` for its workers.
+pub fn with_backend<R>(b: KernBackend, f: impl FnOnce() -> R) -> R {
+    assert!(b.supported(), "kernel backend {} is not supported on this host", b.name());
+    struct Reset(Option<KernBackend>);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|o| o.replace(Some(b)));
+    let _reset = Reset(prev);
+    f()
+}
+
+/// Route one kernel call to the active backend.
+///
+/// Each vector arm is compiled for its ISA via `#[target_feature]` and
+/// is only reachable when [`current`] returned that backend, which
+/// [`KernBackend::supported`] gates on runtime feature detection — so
+/// the required CPU features are guaranteed present at every call.
+macro_rules! dispatch {
+    ($name:ident ( $($arg:expr),* $(,)? )) => {
+        match current() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2 is only current() after is_x86_feature_detected!("avx2").
+            KernBackend::Avx2 => unsafe { avx2::$name($($arg),*) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx512 is only current() after is_x86_feature_detected!
+            // verified both avx512f and avx2.
+            KernBackend::Avx512 => unsafe { avx512::$name($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: Neon is only current() after is_aarch64_feature_detected!("neon").
+            KernBackend::Neon => unsafe { neon::$name($($arg),*) },
+            _ => scalar::$name($($arg),*),
+        }
+    };
+}
+
+/// Dispatched dot product (canonical order; AVX-512 is 1e-9-gated).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dispatch!(dot(a, b))
+}
+
+/// Dispatched sum of squares (canonical order; AVX-512 is 1e-9-gated).
+#[inline]
+pub fn sq_norm(x: &[f64]) -> f64 {
+    dispatch!(sq_norm(x))
+}
+
+/// Dispatched `y += alpha·x` (element-wise: bit-identical everywhere).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    dispatch!(axpy(alpha, x, y))
+}
+
+/// Dispatched gather dot (4-accumulator order on every backend:
+/// bit-identical everywhere).
+#[inline]
+pub fn dot_idx(row: &[f64], cols: &[usize], w: &[f64]) -> f64 {
+    dispatch!(dot_idx(row, cols, w))
+}
+
+/// Dispatched sparse gather dot (bit-identical everywhere).
+#[inline]
+pub fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    dispatch!(sparse_dot(rows, vals, r))
+}
+
+/// Dispatched sparse scatter (bit-identical everywhere).
+#[inline]
+pub fn scatter_axpy(wk: f64, rows: &[u32], vals: &[f64], out: &mut [f64]) {
+    dispatch!(scatter_axpy(wk, rows, vals, out))
+}
+
+/// Dispatched `Aᵀr` streaming panel (element-wise over the output:
+/// bit-identical everywhere).
+#[inline]
+pub fn at_r_panel(rows: &[f64], n: usize, r: &[f64], acc: &mut [f64]) {
+    dispatch!(at_r_panel(rows, n, r, acc))
+}
+
+/// Dispatched column square-norm panel (bit-identical everywhere).
+#[inline]
+pub fn col_sq_norms_panel(rows: &[f64], n: usize, acc: &mut [f64]) {
+    dispatch!(col_sq_norms_panel(rows, n, acc))
+}
+
+/// Dispatched packed 4×4 gram micro-GEMM (bit-identical everywhere).
+#[inline]
+pub fn gram_panel(
+    rows: &[f64],
+    n: usize,
+    ii: &[usize],
+    jj: &[usize],
+    pi: &mut [f64],
+    pj: &mut [f64],
+    acc: &mut [f64],
+) {
+    dispatch!(gram_panel(rows, n, ii, jj, pi, pj, acc))
+}
+
+/// Dispatched active-set gather panel (bit-identical everywhere).
+#[inline]
+pub fn cols_dot_panel(rows: &[f64], n: usize, cols: &[usize], r: &[f64], acc: &mut [f64]) {
+    dispatch!(cols_dot_panel(rows, n, cols, r, acc))
+}
+
+/// Dispatched fused equiangular step (bit-identical everywhere — the
+/// internal gather dot keeps the 4-accumulator order on every ISA).
+#[inline]
+pub fn fused_step_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    w: &[f64],
+    u: &mut [f64],
+    av: &mut [f64],
+) {
+    dispatch!(fused_step_panel(rows, n, cols, w, u, av))
+}
+
+/// Dispatched multi-response `Aᵀ R` panel (bit-identical everywhere).
+#[inline]
+pub fn at_r_multi_panel(rows: &[f64], n: usize, rs: &[&[f64]], accs: &mut [&mut [f64]]) {
+    dispatch!(at_r_multi_panel(rows, n, rs, accs))
+}
+
+/// Dispatched multi-response fused step (bit-identical everywhere).
+#[inline]
+pub fn fused_step_multi_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[&[usize]],
+    ws: &[&[f64]],
+    us: &mut [&mut [f64]],
+    avs: &mut [&mut [f64]],
+) {
+    dispatch!(fused_step_multi_panel(rows, n, cols, ws, us, avs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_parse_round_trip() {
+        for b in KernBackend::ALL {
+            assert_eq!(KernBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(KernBackend::parse("sse2"), None);
+        assert_eq!(KernBackend::parse("AVX2"), None, "names are exact lowercase");
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        let detected = KernBackend::detect();
+        assert!(detected.supported());
+        let avail = KernBackend::available();
+        assert_eq!(avail.first().copied(), Some(detected), "detect() is the widest available");
+        assert_eq!(avail.last().copied(), Some(KernBackend::Scalar), "scalar is always available");
+        assert!(KernBackend::Scalar.bit_identical_to_scalar());
+        assert!(!KernBackend::Avx512.bit_identical_to_scalar());
+    }
+
+    #[test]
+    fn with_backend_overrides_and_restores() {
+        let ambient = current();
+        let inside = with_backend(KernBackend::Scalar, || {
+            let inner = current();
+            with_backend(KernBackend::Scalar, || assert_eq!(current(), KernBackend::Scalar));
+            inner
+        });
+        assert_eq!(inside, KernBackend::Scalar);
+        assert_eq!(current(), ambient, "override must be scoped");
+    }
+
+    #[test]
+    fn every_available_backend_runs_a_kernel() {
+        let a: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64 * 0.7).cos()).collect();
+        let want = crate::kern::reference::dot(&a, &b);
+        for backend in KernBackend::available() {
+            let got = with_backend(backend, || dot(&a, &b));
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "{}: {got} vs {want}",
+                backend.name()
+            );
+        }
+    }
+}

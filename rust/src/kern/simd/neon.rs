@@ -1,0 +1,460 @@
+//! NEON backend (aarch64): 2 × f64 per register, so a *pair* of
+//! registers emulates the four scalar accumulators — `acc01` holds
+//! (s0, s1) and `acc23` holds (s2, s3), and the reduce recombines the
+//! lanes in the canonical `(s0+s1) + (s2+s3)` order. Every kernel in
+//! this file is **bit-identical** to [`super::scalar`]; there is no
+//! gated divergence on NEON.
+//!
+//! The gather/scatter kernels and the gram micro-GEMM reuse the scalar
+//! bodies inside `#[target_feature]` fns — they are index-chasing
+//! bound, and on aarch64 NEON is baseline so the compiler already
+//! vectorizes what it can. No FMA anywhere: one rounding per multiply,
+//! one per add.
+
+use core::arch::aarch64::*;
+
+/// NEON dot: register pair (s0,s1)/(s2,s3), canonical merge
+/// `(s0+s1) + (s2+s3)`; bit-identical.
+///
+/// SAFETY: the caller must ensure the CPU supports NEON — the
+/// dispatcher guarantees this via runtime feature detection.
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let groups = n / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for g in 0..groups {
+        let j = g * 4;
+        let a01 = vld1q_f64(a.as_ptr().add(j));
+        let b01 = vld1q_f64(b.as_ptr().add(j));
+        acc01 = vaddq_f64(acc01, vmulq_f64(a01, b01));
+        let a23 = vld1q_f64(a.as_ptr().add(j + 2));
+        let b23 = vld1q_f64(b.as_ptr().add(j + 2));
+        acc23 = vaddq_f64(acc23, vmulq_f64(a23, b23));
+    }
+    let mut s = (vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01))
+        + (vgetq_lane_f64::<0>(acc23) + vgetq_lane_f64::<1>(acc23));
+    for j in groups * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// NEON sum of squares, same register-pair scheme; bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn sq_norm(x: &[f64]) -> f64 {
+    let n = x.len();
+    let groups = n / 4;
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for g in 0..groups {
+        let j = g * 4;
+        let v01 = vld1q_f64(x.as_ptr().add(j));
+        acc01 = vaddq_f64(acc01, vmulq_f64(v01, v01));
+        let v23 = vld1q_f64(x.as_ptr().add(j + 2));
+        acc23 = vaddq_f64(acc23, vmulq_f64(v23, v23));
+    }
+    let mut s = (vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01))
+        + (vgetq_lane_f64::<0>(acc23) + vgetq_lane_f64::<1>(acc23));
+    for j in groups * 4..n {
+        s += x[j] * x[j];
+    }
+    s
+}
+
+/// NEON axpy, 2-wide; element-wise so bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let groups = n / 2;
+    let va = vdupq_n_f64(alpha);
+    for g in 0..groups {
+        let j = g * 2;
+        let vx = vld1q_f64(x.as_ptr().add(j));
+        let vy = vld1q_f64(y.as_ptr().add(j));
+        vst1q_f64(y.as_mut_ptr().add(j), vaddq_f64(vy, vmulq_f64(va, vx)));
+    }
+    for j in groups * 2..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// Scalar gather body (canonical 4-accumulator order) under the NEON
+/// feature set; bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn dot_idx(row: &[f64], cols: &[usize], w: &[f64]) -> f64 {
+    super::scalar::dot_idx(row, cols, w)
+}
+
+/// Scalar sparse gather body under the NEON feature set; bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    super::scalar::sparse_dot(rows, vals, r)
+}
+
+/// Scalar scatter body under the NEON feature set; bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn scatter_axpy(wk: f64, rows: &[u32], vals: &[f64], out: &mut [f64]) {
+    super::scalar::scatter_axpy(wk, rows, vals, out)
+}
+
+/// NEON `Aᵀr` panel: four broadcast row weights, output index `j`
+/// vectorized 2-wide; per element the scalar add tree, bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn at_r_panel(rows: &[f64], n: usize, r: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(rows.len(), r.len() * n);
+    debug_assert_eq!(acc.len(), n);
+    let m = r.len();
+    let packs = m / 4;
+    let groups = n / 2;
+    for p in 0..packs {
+        let i = p * 4;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        let (v0, v1, v2, v3) =
+            (vdupq_n_f64(r0), vdupq_n_f64(r1), vdupq_n_f64(r2), vdupq_n_f64(r3));
+        for g in 0..groups {
+            let j = g * 2;
+            let a = vld1q_f64(acc.as_ptr().add(j));
+            let t01 = vaddq_f64(
+                vmulq_f64(v0, vld1q_f64(x0.as_ptr().add(j))),
+                vmulq_f64(v1, vld1q_f64(x1.as_ptr().add(j))),
+            );
+            let t23 = vaddq_f64(
+                vmulq_f64(v2, vld1q_f64(x2.as_ptr().add(j))),
+                vmulq_f64(v3, vld1q_f64(x3.as_ptr().add(j))),
+            );
+            vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a, vaddq_f64(t01, t23)));
+        }
+        for j in groups * 2..n {
+            acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let ri = r[i];
+        let vri = vdupq_n_f64(ri);
+        let row = &rows[i * n..(i + 1) * n];
+        for g in 0..groups {
+            let j = g * 2;
+            let a = vld1q_f64(acc.as_ptr().add(j));
+            let x = vld1q_f64(row.as_ptr().add(j));
+            vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a, vmulq_f64(vri, x)));
+        }
+        for j in groups * 2..n {
+            acc[j] += ri * row[j];
+        }
+    }
+}
+
+/// NEON column square norms, 2-wide over `j`; bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn col_sq_norms_panel(rows: &[f64], n: usize, acc: &mut [f64]) {
+    debug_assert_eq!(acc.len(), n);
+    if n == 0 {
+        return;
+    }
+    let m = rows.len() / n;
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 2;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for g in 0..groups {
+            let j = g * 2;
+            let a = vld1q_f64(acc.as_ptr().add(j));
+            let w0 = vld1q_f64(x0.as_ptr().add(j));
+            let w1 = vld1q_f64(x1.as_ptr().add(j));
+            let w2 = vld1q_f64(x2.as_ptr().add(j));
+            let w3 = vld1q_f64(x3.as_ptr().add(j));
+            let t01 = vaddq_f64(vmulq_f64(w0, w0), vmulq_f64(w1, w1));
+            let t23 = vaddq_f64(vmulq_f64(w2, w2), vmulq_f64(w3, w3));
+            vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a, vaddq_f64(t01, t23)));
+        }
+        for j in groups * 2..n {
+            acc[j] += (x0[j] * x0[j] + x1[j] * x1[j]) + (x2[j] * x2[j] + x3[j] * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for g in 0..groups {
+            let j = g * 2;
+            let a = vld1q_f64(acc.as_ptr().add(j));
+            let x = vld1q_f64(row.as_ptr().add(j));
+            vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a, vmulq_f64(x, x)));
+        }
+        for j in groups * 2..n {
+            acc[j] += row[j] * row[j];
+        }
+    }
+}
+
+/// Scalar packed micro-GEMM body under the NEON feature set;
+/// bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn gram_panel(
+    rows: &[f64],
+    n: usize,
+    ii: &[usize],
+    jj: &[usize],
+    pi: &mut [f64],
+    pj: &mut [f64],
+    acc: &mut [f64],
+) {
+    super::scalar::gram_panel(rows, n, ii, jj, pi, pj, acc)
+}
+
+/// Scalar active-set gather body under the NEON feature set;
+/// bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn cols_dot_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    r: &[f64],
+    acc: &mut [f64],
+) {
+    super::scalar::cols_dot_panel(rows, n, cols, r, acc)
+}
+
+/// NEON fused equiangular step: `u` from the canonical scalar
+/// [`super::scalar::dot_idx`], the `av` update 2-wide element-wise;
+/// bit-identical.
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn fused_step_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    w: &[f64],
+    u: &mut [f64],
+    av: &mut [f64],
+) {
+    debug_assert_eq!(cols.len(), w.len());
+    debug_assert_eq!(av.len(), n);
+    debug_assert_eq!(rows.len(), u.len() * n);
+    let m = u.len();
+    let packs = m / 4;
+    let groups = n / 2;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        let u0 = super::scalar::dot_idx(x0, cols, w);
+        let u1 = super::scalar::dot_idx(x1, cols, w);
+        let u2 = super::scalar::dot_idx(x2, cols, w);
+        let u3 = super::scalar::dot_idx(x3, cols, w);
+        u[i] = u0;
+        u[i + 1] = u1;
+        u[i + 2] = u2;
+        u[i + 3] = u3;
+        let (v0, v1, v2, v3) =
+            (vdupq_n_f64(u0), vdupq_n_f64(u1), vdupq_n_f64(u2), vdupq_n_f64(u3));
+        for g in 0..groups {
+            let j = g * 2;
+            let a = vld1q_f64(av.as_ptr().add(j));
+            let t01 = vaddq_f64(
+                vmulq_f64(v0, vld1q_f64(x0.as_ptr().add(j))),
+                vmulq_f64(v1, vld1q_f64(x1.as_ptr().add(j))),
+            );
+            let t23 = vaddq_f64(
+                vmulq_f64(v2, vld1q_f64(x2.as_ptr().add(j))),
+                vmulq_f64(v3, vld1q_f64(x3.as_ptr().add(j))),
+            );
+            vst1q_f64(av.as_mut_ptr().add(j), vaddq_f64(a, vaddq_f64(t01, t23)));
+        }
+        for j in groups * 2..n {
+            av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        let ui = super::scalar::dot_idx(row, cols, w);
+        u[i] = ui;
+        let vui = vdupq_n_f64(ui);
+        for g in 0..groups {
+            let j = g * 2;
+            let a = vld1q_f64(av.as_ptr().add(j));
+            let x = vld1q_f64(row.as_ptr().add(j));
+            vst1q_f64(av.as_mut_ptr().add(j), vaddq_f64(a, vmulq_f64(vui, x)));
+        }
+        for j in groups * 2..n {
+            av[j] += ui * row[j];
+        }
+    }
+}
+
+/// NEON multi-response `Aᵀ R`, 2-wide over `j`; per model
+/// bit-identical to [`at_r_panel`].
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn at_r_multi_panel(
+    rows: &[f64],
+    n: usize,
+    rs: &[&[f64]],
+    accs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(rs.len(), accs.len());
+    let Some(first) = rs.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 2;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            debug_assert_eq!(r.len(), m);
+            debug_assert_eq!(acc.len(), n);
+            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+            let (v0, v1, v2, v3) =
+                (vdupq_n_f64(r0), vdupq_n_f64(r1), vdupq_n_f64(r2), vdupq_n_f64(r3));
+            for g in 0..groups {
+                let j = g * 2;
+                let a = vld1q_f64(acc.as_ptr().add(j));
+                let t01 = vaddq_f64(
+                    vmulq_f64(v0, vld1q_f64(x0.as_ptr().add(j))),
+                    vmulq_f64(v1, vld1q_f64(x1.as_ptr().add(j))),
+                );
+                let t23 = vaddq_f64(
+                    vmulq_f64(v2, vld1q_f64(x2.as_ptr().add(j))),
+                    vmulq_f64(v3, vld1q_f64(x3.as_ptr().add(j))),
+                );
+                vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a, vaddq_f64(t01, t23)));
+            }
+            for j in groups * 2..n {
+                acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            let ri = r[i];
+            let vri = vdupq_n_f64(ri);
+            for g in 0..groups {
+                let j = g * 2;
+                let a = vld1q_f64(acc.as_ptr().add(j));
+                let x = vld1q_f64(row.as_ptr().add(j));
+                vst1q_f64(acc.as_mut_ptr().add(j), vaddq_f64(a, vmulq_f64(vri, x)));
+            }
+            for j in groups * 2..n {
+                acc[j] += ri * row[j];
+            }
+        }
+    }
+}
+
+/// NEON multi-response fused step: per model bit-identical to
+/// [`fused_step_panel`].
+///
+/// SAFETY: caller must ensure NEON support (dispatcher-guaranteed).
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn fused_step_multi_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[&[usize]],
+    ws: &[&[f64]],
+    us: &mut [&mut [f64]],
+    avs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(cols.len(), ws.len());
+    debug_assert_eq!(cols.len(), us.len());
+    debug_assert_eq!(cols.len(), avs.len());
+    let Some(first) = us.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    let groups = n / 2;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for k in 0..cols.len() {
+            let (ck, wk) = (cols[k], ws[k]);
+            debug_assert_eq!(ck.len(), wk.len());
+            let u0 = super::scalar::dot_idx(x0, ck, wk);
+            let u1 = super::scalar::dot_idx(x1, ck, wk);
+            let u2 = super::scalar::dot_idx(x2, ck, wk);
+            let u3 = super::scalar::dot_idx(x3, ck, wk);
+            let u = &mut us[k];
+            u[i] = u0;
+            u[i + 1] = u1;
+            u[i + 2] = u2;
+            u[i + 3] = u3;
+            let av = &mut avs[k];
+            let (v0, v1, v2, v3) =
+                (vdupq_n_f64(u0), vdupq_n_f64(u1), vdupq_n_f64(u2), vdupq_n_f64(u3));
+            for g in 0..groups {
+                let j = g * 2;
+                let a = vld1q_f64(av.as_ptr().add(j));
+                let t01 = vaddq_f64(
+                    vmulq_f64(v0, vld1q_f64(x0.as_ptr().add(j))),
+                    vmulq_f64(v1, vld1q_f64(x1.as_ptr().add(j))),
+                );
+                let t23 = vaddq_f64(
+                    vmulq_f64(v2, vld1q_f64(x2.as_ptr().add(j))),
+                    vmulq_f64(v3, vld1q_f64(x3.as_ptr().add(j))),
+                );
+                vst1q_f64(av.as_mut_ptr().add(j), vaddq_f64(a, vaddq_f64(t01, t23)));
+            }
+            for j in groups * 2..n {
+                av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for k in 0..cols.len() {
+            let ui = super::scalar::dot_idx(row, cols[k], ws[k]);
+            us[k][i] = ui;
+            let av = &mut avs[k];
+            let vui = vdupq_n_f64(ui);
+            for g in 0..groups {
+                let j = g * 2;
+                let a = vld1q_f64(av.as_ptr().add(j));
+                let x = vld1q_f64(row.as_ptr().add(j));
+                vst1q_f64(av.as_mut_ptr().add(j), vaddq_f64(a, vmulq_f64(vui, x)));
+            }
+            for j in groups * 2..n {
+                av[j] += ui * row[j];
+            }
+        }
+    }
+}

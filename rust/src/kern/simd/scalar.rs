@@ -1,0 +1,407 @@
+//! The portable scalar backend: the register-blocked, 4-accumulator
+//! kernel bodies that define the crate's **canonical summation order**
+//! (see `kern` module docs). Every vector backend in this directory is
+//! specified *against this file*: a vector path is correct iff it
+//! performs the same IEEE-754 operations in the same order (bit
+//! identity), or is explicitly gated at 1e-9 with its divergence class
+//! documented in DESIGN.md §"Kernel engine".
+//!
+//! These are the exact loop bodies `calars::kern` shipped before the
+//! backend split — moving them here changed no instruction.
+
+/// Dot product with four independent accumulators: lane `i` of group
+/// `g` feeds accumulator `i`; combine `(s0+s1) + (s2+s3)`; sequential
+/// tail.
+#[inline]
+pub(super) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let groups = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for g in 0..groups {
+        let j = g * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in groups * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Sum of squares, same canonical order as [`dot`].
+#[inline]
+pub(super) fn sq_norm(x: &[f64]) -> f64 {
+    let n = x.len();
+    let groups = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for g in 0..groups {
+        let j = g * 4;
+        s0 += x[j] * x[j];
+        s1 += x[j + 1] * x[j + 1];
+        s2 += x[j + 2] * x[j + 2];
+        s3 += x[j + 3] * x[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in groups * 4..n {
+        s += x[j] * x[j];
+    }
+    s
+}
+
+/// `y += alpha·x`, unrolled by four (element-wise: identical to the
+/// naive loop at any unroll width).
+#[inline]
+pub(super) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let groups = n / 4;
+    for g in 0..groups {
+        let j = g * 4;
+        y[j] += alpha * x[j];
+        y[j + 1] += alpha * x[j + 1];
+        y[j + 2] += alpha * x[j + 2];
+        y[j + 3] += alpha * x[j + 3];
+    }
+    for j in groups * 4..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// Gather dot `Σ_k row[cols[k]] · w[k]` with four accumulators.
+#[inline]
+pub(super) fn dot_idx(row: &[f64], cols: &[usize], w: &[f64]) -> f64 {
+    debug_assert_eq!(cols.len(), w.len());
+    let n = cols.len();
+    let groups = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for g in 0..groups {
+        let k = g * 4;
+        s0 += row[cols[k]] * w[k];
+        s1 += row[cols[k + 1]] * w[k + 1];
+        s2 += row[cols[k + 2]] * w[k + 2];
+        s3 += row[cols[k + 3]] * w[k + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in groups * 4..n {
+        s += row[cols[k]] * w[k];
+    }
+    s
+}
+
+/// Sparse gather dot `Σ_k vals[k] · r[rows[k]]` with four accumulators.
+#[inline]
+pub(super) fn sparse_dot(rows: &[u32], vals: &[f64], r: &[f64]) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let groups = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for g in 0..groups {
+        let k = g * 4;
+        s0 += vals[k] * r[rows[k] as usize];
+        s1 += vals[k + 1] * r[rows[k + 1] as usize];
+        s2 += vals[k + 2] * r[rows[k + 2] as usize];
+        s3 += vals[k + 3] * r[rows[k + 3] as usize];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in groups * 4..n {
+        s += vals[k] * r[rows[k] as usize];
+    }
+    s
+}
+
+/// Sparse scatter `out[rows[k]] += wk · vals[k]`, unrolled by four
+/// (distinct row indices per CSC column ⇒ equals the naive loop).
+#[inline]
+pub(super) fn scatter_axpy(wk: f64, rows: &[u32], vals: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(rows.len(), vals.len());
+    let n = rows.len();
+    let groups = n / 4;
+    for g in 0..groups {
+        let k = g * 4;
+        out[rows[k] as usize] += wk * vals[k];
+        out[rows[k + 1] as usize] += wk * vals[k + 1];
+        out[rows[k + 2] as usize] += wk * vals[k + 2];
+        out[rows[k + 3] as usize] += wk * vals[k + 3];
+    }
+    for k in groups * 4..n {
+        out[rows[k] as usize] += wk * vals[k];
+    }
+}
+
+/// `acc[j] += Σ_i r[i]·rows_i[j]` over a row-major panel: four rows per
+/// pack, pairwise pre-reduction per output element, one-row tail.
+pub(super) fn at_r_panel(rows: &[f64], n: usize, r: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(rows.len(), r.len() * n);
+    debug_assert_eq!(acc.len(), n);
+    let m = r.len();
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for j in 0..n {
+            acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let ri = r[i];
+        let row = &rows[i * n..(i + 1) * n];
+        for j in 0..n {
+            acc[j] += ri * row[j];
+        }
+    }
+}
+
+/// `acc[j] += Σ_i rows_i[j]²`, four rows fused per pass.
+pub(super) fn col_sq_norms_panel(rows: &[f64], n: usize, acc: &mut [f64]) {
+    debug_assert_eq!(acc.len(), n);
+    if n == 0 {
+        return;
+    }
+    let m = rows.len() / n;
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for j in 0..n {
+            acc[j] += (x0[j] * x0[j] + x1[j] * x1[j]) + (x2[j] * x2[j] + x3[j] * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for j in 0..n {
+            acc[j] += row[j] * row[j];
+        }
+    }
+}
+
+/// Gram panel `acc[a·nb + b] += Σ_i rows_i[ii[a]] · rows_i[jj[b]]` as a
+/// packed 4×4 micro-GEMM (`pi`/`pj` caller scratch, ≥ 4·|ii| / 4·|jj|).
+pub(super) fn gram_panel(
+    rows: &[f64],
+    n: usize,
+    ii: &[usize],
+    jj: &[usize],
+    pi: &mut [f64],
+    pj: &mut [f64],
+    acc: &mut [f64],
+) {
+    let na = ii.len();
+    let nb = jj.len();
+    debug_assert!(pi.len() >= 4 * na && pj.len() >= 4 * nb);
+    debug_assert_eq!(acc.len(), na * nb);
+    if n == 0 || na == 0 || nb == 0 {
+        return;
+    }
+    let m = rows.len() / n;
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        for k in 0..4 {
+            let row = &rows[(i + k) * n..(i + k + 1) * n];
+            for (a, &col) in ii.iter().enumerate() {
+                pi[k * na + a] = row[col];
+            }
+            for (b, &col) in jj.iter().enumerate() {
+                pj[k * nb + b] = row[col];
+            }
+        }
+        for a0 in (0..na).step_by(4) {
+            for b0 in (0..nb).step_by(4) {
+                for a in a0..na.min(a0 + 4) {
+                    let v0 = pi[a];
+                    let v1 = pi[na + a];
+                    let v2 = pi[2 * na + a];
+                    let v3 = pi[3 * na + a];
+                    for b in b0..nb.min(b0 + 4) {
+                        acc[a * nb + b] += (v0 * pj[b] + v1 * pj[nb + b])
+                            + (v2 * pj[2 * nb + b] + v3 * pj[3 * nb + b]);
+                    }
+                }
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for (b, &col) in jj.iter().enumerate() {
+            pj[b] = row[col];
+        }
+        for (a, &col) in ii.iter().enumerate() {
+            let v = row[col];
+            let orow = &mut acc[a * nb..(a + 1) * nb];
+            for (o, &x) in orow.iter_mut().zip(&pj[..nb]) {
+                *o += v * x;
+            }
+        }
+    }
+}
+
+/// `acc[k] += Σ_i r[i]·rows_i[cols[k]]`, four rows fused per pass.
+pub(super) fn cols_dot_panel(rows: &[f64], n: usize, cols: &[usize], r: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(rows.len(), r.len() * n);
+    debug_assert_eq!(acc.len(), cols.len());
+    let m = r.len();
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for (o, &j) in acc.iter_mut().zip(cols) {
+            *o += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let ri = r[i];
+        let row = &rows[i * n..(i + 1) * n];
+        for (o, &j) in acc.iter_mut().zip(cols) {
+            *o += ri * row[j];
+        }
+    }
+}
+
+/// Fused equiangular step: `u = A[:, cols]·w` ([`dot_idx`] per row) and
+/// `av += Aᵀu`, one pass, four rows per pack.
+pub(super) fn fused_step_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[usize],
+    w: &[f64],
+    u: &mut [f64],
+    av: &mut [f64],
+) {
+    debug_assert_eq!(cols.len(), w.len());
+    debug_assert_eq!(av.len(), n);
+    debug_assert_eq!(rows.len(), u.len() * n);
+    let m = u.len();
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        let u0 = dot_idx(x0, cols, w);
+        let u1 = dot_idx(x1, cols, w);
+        let u2 = dot_idx(x2, cols, w);
+        let u3 = dot_idx(x3, cols, w);
+        u[i] = u0;
+        u[i + 1] = u1;
+        u[i + 2] = u2;
+        u[i + 3] = u3;
+        for j in 0..n {
+            av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        let ui = dot_idx(row, cols, w);
+        u[i] = ui;
+        for j in 0..n {
+            av[j] += ui * row[j];
+        }
+    }
+}
+
+/// Multi-response `Aᵀ R`: models are the inner loop over the same
+/// four-row packs, so per-model results are bit-identical to `k`
+/// separate [`at_r_panel`] calls.
+pub(super) fn at_r_multi_panel(rows: &[f64], n: usize, rs: &[&[f64]], accs: &mut [&mut [f64]]) {
+    debug_assert_eq!(rs.len(), accs.len());
+    let Some(first) = rs.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            debug_assert_eq!(r.len(), m);
+            debug_assert_eq!(acc.len(), n);
+            let (r0, r1, r2, r3) = (r[i], r[i + 1], r[i + 2], r[i + 3]);
+            for j in 0..n {
+                acc[j] += (r0 * x0[j] + r1 * x1[j]) + (r2 * x2[j] + r3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for (r, acc) in rs.iter().zip(accs.iter_mut()) {
+            let ri = r[i];
+            for j in 0..n {
+                acc[j] += ri * row[j];
+            }
+        }
+    }
+}
+
+/// Multi-response fused equiangular step: per-model bit-identical to
+/// `k` separate [`fused_step_panel`] calls.
+pub(super) fn fused_step_multi_panel(
+    rows: &[f64],
+    n: usize,
+    cols: &[&[usize]],
+    ws: &[&[f64]],
+    us: &mut [&mut [f64]],
+    avs: &mut [&mut [f64]],
+) {
+    debug_assert_eq!(cols.len(), ws.len());
+    debug_assert_eq!(cols.len(), us.len());
+    debug_assert_eq!(cols.len(), avs.len());
+    let Some(first) = us.first() else { return };
+    let m = first.len();
+    debug_assert_eq!(rows.len(), m * n);
+    let packs = m / 4;
+    for p in 0..packs {
+        let i = p * 4;
+        let x0 = &rows[i * n..(i + 1) * n];
+        let x1 = &rows[(i + 1) * n..(i + 2) * n];
+        let x2 = &rows[(i + 2) * n..(i + 3) * n];
+        let x3 = &rows[(i + 3) * n..(i + 4) * n];
+        for k in 0..cols.len() {
+            let (ck, wk) = (cols[k], ws[k]);
+            debug_assert_eq!(ck.len(), wk.len());
+            let u0 = dot_idx(x0, ck, wk);
+            let u1 = dot_idx(x1, ck, wk);
+            let u2 = dot_idx(x2, ck, wk);
+            let u3 = dot_idx(x3, ck, wk);
+            let u = &mut us[k];
+            u[i] = u0;
+            u[i + 1] = u1;
+            u[i + 2] = u2;
+            u[i + 3] = u3;
+            let av = &mut avs[k];
+            for j in 0..n {
+                av[j] += (u0 * x0[j] + u1 * x1[j]) + (u2 * x2[j] + u3 * x3[j]);
+            }
+        }
+    }
+    for i in packs * 4..m {
+        let row = &rows[i * n..(i + 1) * n];
+        for k in 0..cols.len() {
+            let ui = dot_idx(row, cols[k], ws[k]);
+            us[k][i] = ui;
+            let av = &mut avs[k];
+            for j in 0..n {
+                av[j] += ui * row[j];
+            }
+        }
+    }
+}

@@ -148,9 +148,11 @@ impl DenseMatrix {
 
     /// `out = Aᵀ r` — the correlation kernel. Each fixed-grain row
     /// chunk runs [`kern::at_r_panel`] (4-row fused accumulation — ¼
-    /// the accumulator traffic of an axpy-per-row sweep); partials
+    /// the accumulator traffic of an axpy-per-row sweep; dispatched to
+    /// the active SIMD backend, see [`crate::kern::simd`]); partials
     /// combine in chunk order, so results are bit-identical across
-    /// thread counts.
+    /// thread counts — and across backends, since the panel kernel's
+    /// per-element reduction order is lane-width independent.
     pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.m);
         assert_eq!(out.len(), self.n);
@@ -349,9 +351,11 @@ impl DenseMatrix {
     ///
     /// Streams A exactly once through [`kern::gram_panel`]: four rows'
     /// `ii`/`jj` values are packed into contiguous panels and the block
-    /// accumulates in 4×4 register tiles. Row chunks run on the pool
-    /// with private blocks + scratch, combined in chunk order (fixed
-    /// grain ⇒ thread-count independent bits).
+    /// accumulates in 4×4 register tiles (vectorized per backend, see
+    /// [`crate::kern::simd`] — every backend keeps the tile's scalar
+    /// reduction tree, so the block is backend-independent). Row chunks
+    /// run on the pool with private blocks + scratch, combined in chunk
+    /// order (fixed grain ⇒ thread-count independent bits).
     pub fn gram_block(&self, ii: &[usize], jj: &[usize]) -> DenseMatrix {
         let nb = jj.len();
         let na = ii.len();

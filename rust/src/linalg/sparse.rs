@@ -109,9 +109,10 @@ impl CscMatrix {
     }
 
     /// `out = Aᵀ r`: per-column [`kern::sparse_dot`] gather (four
-    /// accumulators). Each `out[j]` is independent, so the
-    /// column-chunked parallel form is bit-identical to the serial
-    /// loop.
+    /// accumulators — the SIMD backends keep that exact reduction
+    /// order, see [`crate::kern::simd`]). Each `out[j]` is independent,
+    /// so the column-chunked parallel form is bit-identical to the
+    /// serial loop.
     pub fn at_r(&self, r: &[f64], out: &mut [f64]) {
         assert_eq!(r.len(), self.m);
         assert_eq!(out.len(), self.n);

@@ -33,10 +33,12 @@ fn main() {
     }
 }
 
-/// Size the global [`calars::par`] pool before any kernel runs:
-/// `CALARS_THREADS` / `CALARS_MIN_CHUNK` from the environment,
-/// overridden by `--par-threads` / `--par-min-chunk`.
+/// Size the global [`calars::par`] pool and pin the kernel ISA backend
+/// before any kernel runs: `CALARS_THREADS` / `CALARS_MIN_CHUNK` /
+/// `CALARS_ISA` from the environment, overridden by `--par-threads` /
+/// `--par-min-chunk` / `--isa`.
 fn init_par(args: &Args) -> Result<()> {
+    calars::config::init_isa_from_args(args)?;
     let cfg = calars::config::par_config_from_args(args)?;
     calars::par::configure(cfg);
     Ok(())
@@ -119,7 +121,10 @@ serving layer exposes the same machinery as POST /select and the
 Every command honors --par-threads N / --par-min-chunk N (or the
 CALARS_THREADS / CALARS_MIN_CHUNK environment variables) to size the
 shared-memory kernel pool; threads=1 runs fully inline and results are
-bit-identical at any thread count (see DESIGN.md).
+bit-identical at any thread count (see DESIGN.md). Every command also
+honors --isa <scalar|avx2|avx512|neon> (or CALARS_ISA) to pin the SIMD
+kernel backend; by default the fastest ISA the CPU supports is
+auto-detected at startup. info reports the active backend.
 
 serve runs the L4 model-serving subsystem: POST /fit, POST /predict,
 GET /models, GET /stats, GET /metrics (Prometheus text), GET
@@ -555,6 +560,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     let cores = calars::par::detected_cores();
     let threads = calars::par::threads();
     let min_chunk = calars::par::min_chunk();
+    let isa = calars::kern::simd::current().name();
     let features: Vec<&str> = if cfg!(feature = "pjrt") { vec!["pjrt"] } else { Vec::new() };
     if args.flag("json") {
         // Machine-readable shape report: the CI perf stage uses this to
@@ -563,7 +569,7 @@ fn cmd_info(args: &Args) -> Result<()> {
             features.iter().map(|f| format!("\"{f}\"")).collect::<Vec<_>>().join(",");
         println!(
             "{{\"version\":\"{}\",\"cores\":{cores},\"threads\":{threads},\
-             \"min_chunk\":{min_chunk},\"features\":[{feats}]}}",
+             \"min_chunk\":{min_chunk},\"isa\":\"{isa}\",\"features\":[{feats}]}}",
             calars::VERSION
         );
         return Ok(());
@@ -583,6 +589,14 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!(
         "parallel execution: {cores} cores detected, {threads} pool threads, \
          min_chunk {min_chunk} (CALARS_THREADS / --par-threads to change)"
+    );
+    println!(
+        "kernel backend: {isa} (available: {}; CALARS_ISA / --isa to change)",
+        calars::kern::simd::KernBackend::available()
+            .iter()
+            .map(|b| b.name())
+            .collect::<Vec<_>>()
+            .join(", ")
     );
     println!(
         "features: {}",

@@ -46,6 +46,13 @@ thread_local! {
     /// nested kernels would silently pick up the global pool's grain
     /// and could break bit-identity across thread counts.
     static WORKER_MIN_CHUNK: Cell<usize> = const { Cell::new(0) };
+    /// The owning pool's kernel ISA backend, mirrored per worker for
+    /// the same reason as the grain: a kernel running inside a task
+    /// must dispatch to the very backend the submitting thread resolved
+    /// when it built the pool, or a `with_backend` scope on the caller
+    /// could silently diverge from its own workers.
+    static WORKER_BACKEND: Cell<Option<crate::kern::simd::KernBackend>> =
+        const { Cell::new(None) };
 }
 
 /// Fork-join task counter in the global metrics registry, registered
@@ -70,6 +77,12 @@ pub(crate) fn worker_min_chunk() -> Option<usize> {
     } else {
         None
     }
+}
+
+/// The kernel backend of the pool owning the current worker thread, if
+/// this is one (used by [`crate::kern::simd::current`]).
+pub(crate) fn worker_backend() -> Option<crate::kern::simd::KernBackend> {
+    WORKER_BACKEND.with(|b| b.get())
 }
 
 /// Countdown latch: `run` waits here until its last task completes.
@@ -112,6 +125,7 @@ impl Latch {
 pub struct ThreadPool {
     threads: usize,
     min_chunk: usize,
+    backend: crate::kern::simd::KernBackend,
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -119,9 +133,13 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// Build a pool with `threads` workers (clamped to ≥ 1) and the
     /// given determinism grain (work units per task, see
-    /// [`crate::par::chunk_ranges`]).
+    /// [`crate::par::chunk_ranges`]). The constructing thread's kernel
+    /// backend ([`crate::kern::simd::current`]) is captured here and
+    /// installed on every worker, so a pool built inside
+    /// `simd::with_backend` runs its tasks under that backend too.
     pub fn new(threads: usize, min_chunk: usize) -> Self {
         let threads = threads.max(1);
+        let backend = crate::kern::simd::current();
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             work_cv: Condvar::new(),
@@ -133,12 +151,12 @@ impl ThreadPool {
                 let sh = Arc::clone(&shared);
                 let handle = std::thread::Builder::new()
                     .name(format!("calars-par-{i}"))
-                    .spawn(move || worker_loop(sh, min_chunk))
+                    .spawn(move || worker_loop(sh, min_chunk, backend))
                     .expect("spawn pool worker");
                 workers.push(handle);
             }
         }
-        ThreadPool { threads, min_chunk, shared, workers }
+        ThreadPool { threads, min_chunk, backend, shared, workers }
     }
 
     /// Configured parallelism (1 ⇒ pure inline execution).
@@ -149,6 +167,13 @@ impl ThreadPool {
     /// Work units per task — the chunk grain shared by every kernel.
     pub fn min_chunk(&self) -> usize {
         self.min_chunk
+    }
+
+    /// The kernel ISA backend captured at construction — what every
+    /// worker (and the inline path, barring a nested override)
+    /// dispatches to.
+    pub fn backend(&self) -> crate::kern::simd::KernBackend {
+        self.backend
     }
 
     /// True when `run` would execute on the calling thread: a
@@ -222,9 +247,10 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, min_chunk: usize) {
+fn worker_loop(shared: Arc<Shared>, min_chunk: usize, backend: crate::kern::simd::KernBackend) {
     IS_WORKER.with(|w| w.set(true));
     WORKER_MIN_CHUNK.with(|c| c.set(min_chunk));
+    WORKER_BACKEND.with(|b| b.set(Some(backend)));
     loop {
         let job = {
             let mut st =
@@ -282,6 +308,18 @@ mod tests {
                 .collect::<Vec<_>>(),
         );
         assert_eq!(sums[0] + sums[1], data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn workers_inherit_the_constructing_threads_backend() {
+        use crate::kern::simd::{self, KernBackend};
+        // Built inside a forced-scalar scope, the pool must run its
+        // tasks under scalar even though the workers themselves never
+        // entered `with_backend`.
+        let pool = simd::with_backend(KernBackend::Scalar, || ThreadPool::new(2, 1));
+        assert_eq!(pool.backend(), KernBackend::Scalar);
+        let seen = pool.run((0..4).map(|_| || simd::current()).collect::<Vec<_>>());
+        assert!(seen.iter().all(|&b| b == KernBackend::Scalar));
     }
 
     #[test]

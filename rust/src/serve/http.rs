@@ -755,6 +755,9 @@ fn gram_stats_json(g: &super::GramCacheStats) -> String {
 struct StatsSnapshot {
     uptime_secs: f64,
     http_requests: u64,
+    /// Kernel ISA backend the server process dispatches to (pinned at
+    /// startup; see `crate::kern::simd`).
+    isa: &'static str,
     engine: super::EngineStats,
     batcher: BatcherStats,
     queue: super::QueueStats,
@@ -769,6 +772,7 @@ impl StatsSnapshot {
         StatsSnapshot {
             uptime_secs: state.started.elapsed().as_secs_f64(),
             http_requests: state.requests.load(Ordering::Relaxed),
+            isa: crate::kern::simd::current().name(),
             engine: state.engine.stats(),
             batcher: state.batcher.stats(),
             queue: state.queue.stats(),
@@ -784,7 +788,7 @@ fn stats_json(state: &Arc<ServerState>) -> String {
     let s = StatsSnapshot::collect(state);
     let (e, b, q, r) = (&s.engine, &s.batcher, &s.queue, &s.registry);
     format!(
-        "{{\"uptime_secs\":{},\"http_requests\":{},\
+        "{{\"uptime_secs\":{},\"http_requests\":{},\"isa\":\"{}\",\
           \"engine\":{{\"queries\":{},\"batches\":{},\"batched_rows\":{},\"max_batch_rows\":{},\"cache_hits\":{},\"cache_misses\":{},\"errors\":{}}},\
           \"batcher\":{{\"lock_recoveries\":{},\"engine_panics\":{}}},\
           \"queue\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\"in_flight\":{},\"lock_recoveries\":{}}},\
@@ -794,6 +798,7 @@ fn stats_json(state: &Arc<ServerState>) -> String {
           \"trace\":{{\"traces\":{},\"spans\":{},\"recorded\":{},\"evicted\":{},\"slow_entries\":{}}}}}",
         json_f64(s.uptime_secs),
         s.http_requests,
+        s.isa,
         e.queries,
         e.batches,
         e.batched_rows,
@@ -850,6 +855,13 @@ fn metrics_text(state: &Arc<ServerState>) -> String {
         }
     };
     fam("calars_http_requests_total", "counter", "HTTP requests accepted.", &[("", s.http_requests)]);
+    let isa_label = format!("isa=\"{}\"", s.isa);
+    fam(
+        "calars_isa_info",
+        "gauge",
+        "Kernel ISA backend the server dispatches to (constant 1).",
+        &[(isa_label.as_str(), 1)],
+    );
     fam(
         "calars_engine_queries_total",
         "counter",

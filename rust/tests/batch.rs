@@ -5,13 +5,15 @@
 //!   algorithm (lockstep lars/lasso and the fallback family), across
 //!   `CALARS_THREADS ∈ {1,2,4}` — property-tested over random
 //!   dense/sparse problems;
-//! * **thread-count invariance** of whole batches;
+//! * **thread-count invariance** of whole batches, under both the
+//!   forced-scalar and the detected SIMD kernel backend;
 //! * fallback algorithms match their sequential fits;
 //! * typed errors for degenerate panels.
 
 use calars::data::synthetic::{generate, SyntheticSpec};
 use calars::data::{datasets, Dataset};
 use calars::fit::{Algorithm, FitResult, FitSpec, Fitter, NoopObserver};
+use calars::kern::simd::{self, KernBackend};
 use calars::par::{self, ThreadPool};
 use calars::proptest_lite::{check, Config};
 use calars::rng::Pcg64;
@@ -107,19 +109,36 @@ fn prop_k1_batch_is_bit_identical_to_single_fit_at_any_thread_count() {
 
 #[test]
 fn whole_batches_are_thread_count_invariant() {
+    // Runs once under the forced-scalar kernel backend and once under
+    // the widest detected vector backend: the thread-invariance
+    // contract must hold under every ISA (pools constructed *inside*
+    // with_backend so their workers capture the forced backend).
     let ds = datasets::tiny(21);
     let panel = responses(&ds, 6, 77);
-    for (label, spec) in batch_specs(5) {
-        let mut base: Option<Vec<Vec<u64>>> = None;
-        for threads in [1usize, 2, 4] {
-            let pool = ThreadPool::new(threads, 256);
-            let sigs = par::with_pool(&pool, || {
-                let batch = spec.fit_batch(&ds.a, &panel).expect(label);
-                batch.fits.iter().map(signature).collect::<Vec<_>>()
-            });
-            match &base {
-                None => base = Some(sigs),
-                Some(b) => assert_eq!(&sigs, b, "{label}: diverged at threads={threads}"),
+    let mut backends = vec![KernBackend::Scalar];
+    if KernBackend::detect() != KernBackend::Scalar {
+        backends.push(KernBackend::detect());
+    }
+    for backend in backends {
+        for (label, spec) in batch_specs(5) {
+            let mut base: Option<Vec<Vec<u64>>> = None;
+            for threads in [1usize, 2, 4] {
+                let sigs = simd::with_backend(backend, || {
+                    let pool = ThreadPool::new(threads, 256);
+                    par::with_pool(&pool, || {
+                        let batch = spec.fit_batch(&ds.a, &panel).expect(label);
+                        batch.fits.iter().map(signature).collect::<Vec<_>>()
+                    })
+                });
+                match &base {
+                    None => base = Some(sigs),
+                    Some(b) => assert_eq!(
+                        &sigs,
+                        b,
+                        "{label}: diverged at threads={threads} under {}",
+                        backend.name()
+                    ),
+                }
             }
         }
     }

@@ -177,7 +177,9 @@ fn info_json_reports_machine_shape() {
     let out = calars(&["info", "--json"]);
     assert!(out.status.success());
     let s = String::from_utf8_lossy(&out.stdout);
-    for key in ["\"version\"", "\"cores\"", "\"threads\"", "\"min_chunk\"", "\"features\""] {
+    for key in
+        ["\"version\"", "\"cores\"", "\"threads\"", "\"min_chunk\"", "\"isa\"", "\"features\""]
+    {
         assert!(s.contains(key), "missing {key} in {s}");
     }
 }

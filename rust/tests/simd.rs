@@ -1,0 +1,386 @@
+//! Integration contract for `calars::kern::simd` — runtime-dispatched
+//! ISA backends under the determinism contract:
+//!
+//! * every available backend matches the blocked-scalar canonical
+//!   order on awkward shapes (empty, single-element, lengths that are
+//!   not multiples of any lane width) — bit-identical except the
+//!   documented AVX-512 `dot`/`sq_norm` pair, which is 1e-9-gated
+//!   against `kern::reference`;
+//! * the cross-backend matrix: for any two available backends, all
+//!   kernels agree bitwise except `dot`/`sq_norm` when one side is a
+//!   divergent backend, where agreement is ≤ 1e-9 relative;
+//! * thread-count invariance holds under every backend;
+//! * pools capture the constructing thread's backend;
+//! * the `CALARS_ISA` / `--isa` knob on the binary: forced scalar
+//!   fallback is honored and reported, unknown or unsupported names
+//!   are hard errors.
+
+use calars::kern::reference;
+use calars::kern::simd::{self, KernBackend};
+use calars::linalg::DenseMatrix;
+use calars::par::{self, ThreadPool};
+use calars::rng::Pcg64;
+use std::process::Command;
+
+fn randvec(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed);
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+/// Relative agreement at the kernel divergence gate.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * b.abs().max(1.0)
+}
+
+/// Every dispatched kernel's output for one `(m, n)` panel shape,
+/// computed under one forced backend.
+struct KernelRun {
+    dot: f64,
+    sq_norm: f64,
+    axpy: Vec<f64>,
+    dot_idx: f64,
+    sparse_dot: f64,
+    scatter: Vec<f64>,
+    at_r: Vec<f64>,
+    col_norms: Vec<f64>,
+    gram: Vec<f64>,
+    cols_dot: Vec<f64>,
+    fused_u: Vec<f64>,
+    fused_av: Vec<f64>,
+    multi_at_r: Vec<Vec<f64>>,
+    multi_us: Vec<Vec<f64>>,
+    multi_avs: Vec<Vec<f64>>,
+}
+
+fn run_kernels(backend: KernBackend, m: usize, n: usize, seed: u64) -> KernelRun {
+    simd::with_backend(backend, || {
+        let data = randvec(m * n, seed);
+        let r = randvec(m, seed + 1);
+        let x = randvec(m * n + 3, seed + 2);
+        let y0 = randvec(m * n + 3, seed + 3);
+        // Column subset with a deliberately ragged size.
+        let cols: Vec<usize> = (0..n).step_by(3).collect();
+        let w = randvec(cols.len(), seed + 4);
+        // Sparse column: strided row indices (empty when m == 0).
+        let srows: Vec<u32> = (0..m as u32).step_by(2).collect();
+        let svals = randvec(srows.len(), seed + 5);
+
+        let dot = simd::dot(&x, &y0);
+        let sq_norm = simd::sq_norm(&x);
+        let mut axpy = y0.clone();
+        simd::axpy(0.37, &x, &mut axpy);
+        let dot_idx = if m > 0 { simd::dot_idx(&data[..n], &cols, &w) } else { 0.0 };
+        let sparse_dot = simd::sparse_dot(&srows, &svals, &r);
+        let mut scatter = vec![0.0; m];
+        simd::scatter_axpy(1.5, &srows, &svals, &mut scatter);
+        let mut at_r = vec![0.0; n];
+        simd::at_r_panel(&data, n, &r, &mut at_r);
+        let mut col_norms = vec![0.0; n];
+        simd::col_sq_norms_panel(&data, n, &mut col_norms);
+        let ii: Vec<usize> = (0..n).step_by(2).collect();
+        let jj: Vec<usize> = (0..n).collect();
+        let mut gram = vec![0.0; ii.len() * jj.len()];
+        let mut pi = vec![0.0; 4 * ii.len()];
+        let mut pj = vec![0.0; 4 * jj.len()];
+        simd::gram_panel(&data, n, &ii, &jj, &mut pi, &mut pj, &mut gram);
+        let mut cols_dot = vec![0.0; cols.len()];
+        simd::cols_dot_panel(&data, n, &cols, &r, &mut cols_dot);
+        let mut fused_u = vec![0.0; m];
+        let mut fused_av = vec![0.0; n];
+        simd::fused_step_panel(&data, n, &cols, &w, &mut fused_u, &mut fused_av);
+
+        let k = 3;
+        let rs_own: Vec<Vec<f64>> = (0..k).map(|i| randvec(m, seed + 10 + i as u64)).collect();
+        let rs: Vec<&[f64]> = rs_own.iter().map(|v| v.as_slice()).collect();
+        let mut multi_at_r = vec![vec![0.0; n]; k];
+        {
+            let mut accs: Vec<&mut [f64]> =
+                multi_at_r.iter_mut().map(|v| v.as_mut_slice()).collect();
+            simd::at_r_multi_panel(&data, n, &rs, &mut accs);
+        }
+        let cols_own: Vec<Vec<usize>> =
+            (0..k).map(|i| ((i % n.max(1)).min(n)..n).step_by(2).collect()).collect();
+        let ws_own: Vec<Vec<f64>> = cols_own
+            .iter()
+            .enumerate()
+            .map(|(i, c)| randvec(c.len(), seed + 20 + i as u64))
+            .collect();
+        let mcols: Vec<&[usize]> = cols_own.iter().map(|v| v.as_slice()).collect();
+        let ws: Vec<&[f64]> = ws_own.iter().map(|v| v.as_slice()).collect();
+        let mut multi_us = vec![vec![0.0; m]; k];
+        let mut multi_avs = vec![vec![0.0; n]; k];
+        {
+            let mut u_sl: Vec<&mut [f64]> =
+                multi_us.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let mut av_sl: Vec<&mut [f64]> =
+                multi_avs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            simd::fused_step_multi_panel(&data, n, &mcols, &ws, &mut u_sl, &mut av_sl);
+        }
+
+        KernelRun {
+            dot,
+            sq_norm,
+            axpy,
+            dot_idx,
+            sparse_dot,
+            scatter,
+            at_r,
+            col_norms,
+            gram,
+            cols_dot,
+            fused_u,
+            fused_av,
+            multi_at_r,
+            multi_us,
+            multi_avs,
+        }
+    })
+}
+
+fn assert_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+const SHAPES: &[(usize, usize)] =
+    &[(0, 5), (1, 5), (2, 3), (3, 7), (4, 4), (5, 0), (5, 1), (7, 8), (13, 9), (16, 16), (23, 11)];
+
+#[test]
+fn every_available_backend_matches_the_scalar_canonical_order() {
+    for backend in KernBackend::available() {
+        for (si, &(m, n)) in SHAPES.iter().enumerate() {
+            let seed = 1 + si as u64 * 100;
+            let got = run_kernels(backend, m, n, seed);
+            let want = run_kernels(KernBackend::Scalar, m, n, seed);
+            let ctx = format!("{} ({m},{n})", backend.name());
+            if backend.bit_identical_to_scalar() {
+                assert_eq!(got.dot.to_bits(), want.dot.to_bits(), "{ctx}: dot");
+                assert_eq!(got.sq_norm.to_bits(), want.sq_norm.to_bits(), "{ctx}: sq_norm");
+            } else {
+                assert!(close(got.dot, want.dot), "{ctx}: dot {} vs {}", got.dot, want.dot);
+                assert!(
+                    close(got.sq_norm, want.sq_norm),
+                    "{ctx}: sq_norm {} vs {}",
+                    got.sq_norm,
+                    want.sq_norm
+                );
+            }
+            // Every other kernel is bit-identical on every backend.
+            assert_bits(&got.axpy, &want.axpy, &format!("{ctx}: axpy"));
+            assert_eq!(got.dot_idx.to_bits(), want.dot_idx.to_bits(), "{ctx}: dot_idx");
+            assert_eq!(got.sparse_dot.to_bits(), want.sparse_dot.to_bits(), "{ctx}: sparse_dot");
+            assert_bits(&got.scatter, &want.scatter, &format!("{ctx}: scatter_axpy"));
+            assert_bits(&got.at_r, &want.at_r, &format!("{ctx}: at_r_panel"));
+            assert_bits(&got.col_norms, &want.col_norms, &format!("{ctx}: col_sq_norms_panel"));
+            assert_bits(&got.gram, &want.gram, &format!("{ctx}: gram_panel"));
+            assert_bits(&got.cols_dot, &want.cols_dot, &format!("{ctx}: cols_dot_panel"));
+            assert_bits(&got.fused_u, &want.fused_u, &format!("{ctx}: fused_step u"));
+            assert_bits(&got.fused_av, &want.fused_av, &format!("{ctx}: fused_step av"));
+            for k in 0..got.multi_at_r.len() {
+                assert_bits(
+                    &got.multi_at_r[k],
+                    &want.multi_at_r[k],
+                    &format!("{ctx}: at_r_multi[{k}]"),
+                );
+                assert_bits(&got.multi_us[k], &want.multi_us[k], &format!("{ctx}: multi u[{k}]"));
+                assert_bits(
+                    &got.multi_avs[k],
+                    &want.multi_avs[k],
+                    &format!("{ctx}: multi av[{k}]"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_available_backend_stays_within_the_reference_gate() {
+    // Against the naive one-accumulator mathematical definition the
+    // blocked order legitimately differs in rounding — the contract is
+    // the 1e-9 relative gate, for every backend.
+    for backend in KernBackend::available() {
+        for (si, &(m, n)) in SHAPES.iter().enumerate() {
+            let seed = 1 + si as u64 * 100;
+            let got = run_kernels(backend, m, n, seed);
+            let data = randvec(m * n, seed);
+            let r = randvec(m, seed + 1);
+            let ctx = format!("{} ({m},{n})", backend.name());
+            let mut want = vec![0.0; n];
+            reference::at_r(&data, m, n, &r, &mut want);
+            for (j, (a, b)) in got.at_r.iter().zip(&want).enumerate() {
+                assert!(close(*a, *b), "{ctx}: at_r col {j}: {a} vs {b}");
+            }
+            let norms = reference::col_sq_norms(&data, m, n);
+            for (a, b) in got.col_norms.iter().zip(&norms) {
+                assert!(close(*a, *b), "{ctx}: col_sq_norms {a} vs {b}");
+            }
+            let ii: Vec<usize> = (0..n).step_by(2).collect();
+            let jj: Vec<usize> = (0..n).collect();
+            let gram = reference::gram_block(&data, m, n, &ii, &jj);
+            for (a, b) in got.gram.iter().zip(&gram) {
+                assert!(close(*a, *b), "{ctx}: gram {a} vs {b}");
+            }
+            let x = randvec(m * n + 3, seed + 2);
+            let y = randvec(m * n + 3, seed + 3);
+            assert!(close(got.dot, reference::dot(&x, &y)), "{ctx}: dot");
+            assert!(close(got.sq_norm, reference::sq_norm(&x)), "{ctx}: sq_norm");
+        }
+    }
+}
+
+#[test]
+fn cross_backend_matrix_has_the_documented_divergence_classes() {
+    let avail = KernBackend::available();
+    let x = randvec(1001, 42);
+    let y = randvec(1001, 43);
+    let runs: Vec<(KernBackend, f64, f64)> = avail
+        .iter()
+        .map(|&b| simd::with_backend(b, || (b, simd::dot(&x, &y), simd::sq_norm(&x))))
+        .collect();
+    for (i, &(ba, dot_a, sq_a)) in runs.iter().enumerate() {
+        for &(bb, dot_b, sq_b) in runs.iter().skip(i + 1) {
+            let pair = format!("{} vs {}", ba.name(), bb.name());
+            if ba.bit_identical_to_scalar() && bb.bit_identical_to_scalar() {
+                assert_eq!(dot_a.to_bits(), dot_b.to_bits(), "{pair}: dot");
+                assert_eq!(sq_a.to_bits(), sq_b.to_bits(), "{pair}: sq_norm");
+            } else {
+                assert!(close(dot_a, dot_b), "{pair}: dot {dot_a} vs {dot_b}");
+                assert!(close(sq_a, sq_b), "{pair}: sq_norm {sq_a} vs {sq_b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_invariance_holds_under_every_backend() {
+    let (m, n) = (97, 61);
+    let mut rng = Pcg64::new(9);
+    let a = DenseMatrix::from_fn(m, n, |_, _| rng.normal());
+    let r = randvec(m, 10);
+    let ii: Vec<usize> = (0..n).step_by(2).collect();
+    let jj: Vec<usize> = (1..n).step_by(3).collect();
+    for backend in KernBackend::available() {
+        let mut base: Option<(Vec<u64>, Vec<u64>)> = None;
+        for threads in [1usize, 2, 4] {
+            let sig = simd::with_backend(backend, || {
+                // Small grain so every thread count actually chunks.
+                let pool = ThreadPool::new(threads, 64);
+                par::with_pool(&pool, || {
+                    let mut out = vec![0.0; n];
+                    a.at_r(&r, &mut out);
+                    let g = a.gram_block(&ii, &jj);
+                    (
+                        out.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+                        g.data().iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+                    )
+                })
+            });
+            match &base {
+                None => base = Some(sig),
+                Some(b) => assert_eq!(
+                    &sig,
+                    b,
+                    "{}: diverged at threads={threads}",
+                    backend.name()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn pools_capture_the_backend_at_construction() {
+    // The pool is built inside a forced-scalar scope but *used* after
+    // the scope exits: workers must still dispatch to scalar, because
+    // the backend was captured when the pool was constructed.
+    let pool = simd::with_backend(KernBackend::Scalar, || ThreadPool::new(2, 1));
+    assert_eq!(pool.backend(), KernBackend::Scalar);
+    let seen = pool.run((0..8).map(|_| || simd::current()).collect::<Vec<_>>());
+    assert!(
+        seen.iter().all(|&b| b == KernBackend::Scalar),
+        "workers saw {seen:?}, expected the captured scalar backend"
+    );
+}
+
+fn calars() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_calars"));
+    c.env_remove("CALARS_ISA");
+    c
+}
+
+#[test]
+fn calars_isa_scalar_forces_the_fallback_backend() {
+    let out = calars()
+        .args(["info", "--json"])
+        .env("CALARS_ISA", "scalar")
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("\"isa\":\"scalar\""), "{s}");
+}
+
+#[test]
+fn isa_flag_beats_detection_and_is_reported() {
+    let out = calars().args(["info", "--json", "--isa", "scalar"]).output().expect("binary runs");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("\"isa\":\"scalar\""), "{s}");
+
+    // Without any knob, the reported backend is the detected one.
+    let out = calars().args(["info", "--json"]).output().expect("binary runs");
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    let want = format!("\"isa\":\"{}\"", KernBackend::detect().name());
+    assert!(s.contains(&want), "expected {want} in {s}");
+}
+
+#[test]
+fn forced_scalar_fit_matches_the_detected_backend_fit() {
+    // End to end through the binary: a fit must succeed under every
+    // backend, and when the detected backend is in the bit-identical
+    // class (everything but AVX-512, whose divergent `dot` feeds the
+    // Cholesky recurrences) the selections must match forced-scalar
+    // exactly.
+    let run = |isa: Option<&str>| {
+        let mut cmd = calars();
+        cmd.args(["run", "--algo", "lars", "--dataset", "tiny", "--t", "8"]);
+        if let Some(v) = isa {
+            cmd.args(["--isa", v]);
+        }
+        let out = cmd.output().expect("binary runs");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .find(|l| l.starts_with("first 10 selections"))
+            .expect("selection line")
+            .to_string()
+    };
+    let detected = run(None);
+    let scalar = run(Some("scalar"));
+    if KernBackend::detect().bit_identical_to_scalar() {
+        assert_eq!(scalar, detected, "bit-identical backend changed the selection");
+    }
+}
+
+#[test]
+fn invalid_or_unsupported_isa_is_a_hard_error() {
+    let out = calars().args(["info", "--isa", "sse9"]).output().expect("binary runs");
+    assert!(!out.status.success(), "unknown --isa must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown kernel backend"));
+
+    let out =
+        calars().args(["info"]).env("CALARS_ISA", "bogus").output().expect("binary runs");
+    assert!(!out.status.success(), "unknown CALARS_ISA must fail on the binary");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("CALARS_ISA"));
+
+    // Some backend is always unsupported on any one host (NEON on
+    // x86_64, the AVX family on aarch64).
+    if let Some(b) = KernBackend::ALL.into_iter().find(|b| !b.supported()) {
+        let out = calars().args(["info", "--isa", b.name()]).output().expect("binary runs");
+        assert!(!out.status.success(), "unsupported --isa {} must fail", b.name());
+        assert!(String::from_utf8_lossy(&out.stderr).contains("not supported on this host"));
+    }
+}

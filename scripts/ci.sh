@@ -43,9 +43,14 @@ done
 
 BIN=target/release/calars
 
-# Require the perf-schema keys in a bench JSON file.
+# Require the perf-schema keys in a bench JSON file. An empty file is
+# its own loud failure: a bench stage that silently produced no records
+# must never read as "gate passed".
 check_bench_json() {
     local file=$1
+    if [ ! -s "$file" ]; then
+        echo "$file is empty — the bench stage produced no JSON records"; exit 1
+    fi
     for key in '"bench"' '"threads"' '"wall_ms"' '"speedup"'; do
         grep -q "$key" "$file" || { echo "$file missing $key:"; cat "$file"; exit 1; }
     done
@@ -55,16 +60,18 @@ check_bench_json() {
 echo "== perf: machine shape =="
 "$BIN" info --json
 
-echo "== perf: kernel engine (kern vs scalar reference) =="
+echo "== perf: kernel engine (kern vs scalar reference, SIMD vs scalar backend) =="
 # The bench compares every blocked kern kernel against kern::reference
 # and exits nonzero if max |Δ| exceeds 1e-9 — the numerics gate — while
-# the JSON records the old-scalar → kern speedup trajectory.
+# the JSON records the old-scalar → kern speedup trajectory plus the
+# per-ISA backend records (`…_scalar` / `…_<isa>`).
 cargo bench --bench kernels -- --json > BENCH_kernels.json
 check_bench_json BENCH_kernels.json
-# Perf gate: the hot kernels must beat the scalar reference by ≥ 1.5×
-# on the 2000×4000 problems.
+# Perf gate 1: the hot kernels must beat the scalar reference by ≥ 1.5×
+# on the 2000×4000 problems. Exact record names (closing quote included)
+# so the per-ISA `…_scalar` / `…_avx2` records don't dilute this gate.
 awk '
-/"bench":"(at_r|gram_block)_2000x4000/ {
+/"bench":"at_r_2000x4000"/ || /"bench":"gram_block_2000x4000_64x64"/ {
     if (match($0, /"speedup":[0-9.]+/)) {
         s = substr($0, RSTART + 10, RLENGTH - 10) + 0
         if (s < 1.5) { printf "kernel speedup gate: %s < 1.5x\n", s; bad = 1 }
@@ -73,6 +80,24 @@ awk '
 }
 END {
     if (found < 2) { print "kernel speedup gate: records missing"; exit 1 }
+    exit bad
+}' BENCH_kernels.json
+# Perf gate 2: on a host with a vector ISA, the SIMD backend must beat
+# the forced-scalar backend by ≥ 2× on at_r and gram_block. Zero
+# matching records means the host detected no vector ISA (scalar-only):
+# the gate passes vacuously — the bench itself still recorded the
+# `…_scalar` rows, so the stage cannot go dark.
+awk '
+/"bench":"(at_r_2000x4000|gram_block_2000x4000_64x64)_(avx2|avx512|neon)"/ {
+    if (match($0, /"speedup":[0-9.]+/)) {
+        s = substr($0, RSTART + 10, RLENGTH - 10) + 0
+        if (s < 2.0) { printf "simd backend speedup gate: %s < 2.0x\n", s; bad = 1 }
+        found += 1
+    }
+}
+END {
+    if (found > 0) { printf "simd backend gate: %d vector record(s) checked\n", found }
+    else { print "simd backend gate: no vector ISA detected — scalar-only host, gate passes" }
     exit bad
 }' BENCH_kernels.json
 

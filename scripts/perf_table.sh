@@ -1,7 +1,12 @@
 #!/usr/bin/env bash
 # Render bench JSON records (scripts/ci.sh perf stages, or any
 # `cargo bench --bench <kernels|selection|parallel_scaling> -- --json`
-# output) as the README's markdown perf table.
+# output) as the README's markdown perf table — one pass over every
+# file, so the README table regenerates from all BENCH_*.json at once.
+#
+# Records carrying an "isa" field (the per-backend kernel records) get
+# a populated backend column; `…_<isa>` rows read as kernel × ISA with
+# speedup-vs-forced-scalar. Records without the field render "-".
 #
 # Usage: scripts/perf_table.sh [BENCH_*.json ...]
 #        (no args: every BENCH_*.json in the working directory)
@@ -15,8 +20,8 @@ if [ ${#FILES[@]} -eq 0 ]; then
 fi
 [ ${#FILES[@]} -gt 0 ] || { echo "usage: $0 [BENCH_*.json ...]" >&2; exit 1; }
 
-echo "| source | bench | threads | wall (ms) | speedup |"
-echo "|---|---|---:|---:|---:|"
+echo "| source | bench | isa | threads | wall (ms) | speedup |"
+echo "|---|---|---|---:|---:|---:|"
 for FILE in "${FILES[@]}"; do
     [ -f "$FILE" ] || { echo "missing $FILE" >&2; exit 1; }
     awk -v src="$(basename "$FILE" .json | sed 's/^BENCH_//')" '
@@ -24,18 +29,20 @@ for FILE in "${FILES[@]}"; do
     n = split($0, parts, /\},[ \t]*/)
     for (i = 1; i <= n; i++) {
         rec = parts[i]
-        name = ""; thr = ""; wall = ""; sp = ""
+        name = ""; thr = ""; wall = ""; sp = ""; isa = ""
         if (match(rec, /"bench":"[^"]+"/))   name = substr(rec, RSTART + 9, RLENGTH - 10)
         if (match(rec, /"threads":[0-9]+/))  thr  = substr(rec, RSTART + 10, RLENGTH - 10)
         if (match(rec, /"wall_ms":[0-9.]+/)) wall = substr(rec, RSTART + 10, RLENGTH - 10)
         if (match(rec, /"speedup":[0-9.]+/)) sp   = substr(rec, RSTART + 10, RLENGTH - 10)
+        if (match(rec, /"isa":"[^"]+"/))     isa  = substr(rec, RSTART + 7, RLENGTH - 8)
         if (thr == "") thr = "-"
+        if (isa == "") isa = "-"
         # json_f64 emits null for NaN/inf (e.g. a fully-errored bench
         # run): surface it as n/a, never as a plausible-looking 0.000.
         wallout = (wall == "") ? "n/a" : sprintf("%.3f", wall)
         spout   = (sp == "")   ? "n/a" : sprintf("%.2fx", sp)
         if (name != "")
-            printf "| %s | `%s` | %s | %s | %s |\n", src, name, thr, wallout, spout
+            printf "| %s | `%s` | %s | %s | %s | %s |\n", src, name, isa, thr, wallout, spout
     }
 }' "$FILE"
 done

@@ -135,23 +135,43 @@ pub const RULES: &[RuleDoc] = &[
     },
     RuleDoc {
         id: "UNSAFE-SCOPE",
-        summary: "unsafe code is permitted only in rust/src/par",
-        explain: "Unsafe budget.  The crate's entire unsafe surface is the two\n\
-                  lifetime-erasure sites in the thread pool (rust/src/par), where\n\
-                  the fork-join structure makes borrowed closures sound (see\n\
-                  DESIGN.md §Static analysis — the aliasing/lifetime argument).\n\
-                  `unsafe` anywhere else is a finding: new unsafe code needs a new\n\
-                  documented budget, not a quiet block.  Scope: every audited file,\n\
-                  tests and benches included.",
+        summary: "unsafe code is permitted only in rust/src/par and rust/src/kern/simd",
+        explain: "Unsafe budget.  The crate's entire unsafe surface is two audited\n\
+                  regions: the lifetime-erasure sites in the thread pool\n\
+                  (rust/src/par), where the fork-join structure makes borrowed\n\
+                  closures sound, and the SIMD kernel backends\n\
+                  (rust/src/kern/simd), where `#[target_feature]` functions are\n\
+                  unsafe-to-call by construction and every call site is guarded by\n\
+                  the runtime ISA detection in KernBackend::supported() (see\n\
+                  DESIGN.md §Static analysis — the aliasing/lifetime and\n\
+                  feature-detection arguments).  `unsafe` anywhere else is a\n\
+                  finding: new unsafe code needs a new documented budget, not a\n\
+                  quiet block.  Scope: every audited file, tests and benches\n\
+                  included.",
     },
     RuleDoc {
         id: "UNSAFE-DOC",
         summary: "every unsafe block needs a // SAFETY: comment",
-        explain: "Unsafe budget / documentation.  Each `unsafe` block inside the\n\
-                  permitted scope must be immediately preceded by (or share a line\n\
-                  with) a `// SAFETY:` comment stating the invariant that makes it\n\
-                  sound — the reviewer-facing half of the unsafe budget.  Scope:\n\
-                  rust/src/par.",
+        explain: "Unsafe budget / documentation.  Each `unsafe` block or function\n\
+                  inside the permitted scope must be immediately preceded by (or\n\
+                  share a line with) a `SAFETY:` comment — doc comment for unsafe\n\
+                  fns, line comment for blocks; intervening attribute lines like\n\
+                  `#[target_feature(...)]` are looked through — stating the\n\
+                  invariant that makes it sound: the reviewer-facing half of the\n\
+                  unsafe budget.  Scope: rust/src/par and rust/src/kern/simd.",
+    },
+    RuleDoc {
+        id: "SIMD-TARGET",
+        summary: "every unsafe fn in kern/simd needs #[target_feature(…)]",
+        explain: "SIMD backend discipline.  Inside rust/src/kern/simd the only\n\
+                  reason a function is `unsafe` is that it is compiled for an ISA\n\
+                  the host may lack, so every `unsafe fn` there must carry a\n\
+                  `#[target_feature(enable = …)]` attribute — that is what makes\n\
+                  the intrinsics compile to the intended vector instructions AND\n\
+                  what the runtime dispatch layer's KernBackend::supported() guard\n\
+                  is promising about.  An unsafe fn without the attribute is\n\
+                  either needlessly unsafe or silently compiled for the baseline\n\
+                  target, defeating the backend.  Scope: rust/src/kern/simd.",
     },
     RuleDoc {
         id: "DEP-EXT",
@@ -240,6 +260,12 @@ impl FileCtx<'_> {
 
     fn is_par(&self) -> bool {
         self.under("rust/src/par/")
+    }
+
+    /// The SIMD kernel backends — the second region of the unsafe
+    /// budget (UNSAFE-SCOPE) and the scope of SIMD-TARGET.
+    fn is_simd(&self) -> bool {
+        self.under("rust/src/kern/simd/")
     }
 
     fn is_src(&self) -> bool {
@@ -674,19 +700,39 @@ fn panic_lock(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
 fn unsafe_rules(ctx: &FileCtx<'_>, text: &str, out: &mut Vec<Finding>) {
     for i in word_occurrences(text, "unsafe") {
         let line = ctx.scan.line_of_offset(text, i);
-        if !ctx.is_par() {
+        if !ctx.is_par() && !ctx.is_simd() {
             out.push(finding(
                 ctx,
                 line,
                 "UNSAFE-SCOPE",
-                "`unsafe` outside rust/src/par: the crate's unsafe budget is the \
-                 thread pool's two documented lifetime-erasure sites only"
+                "`unsafe` outside rust/src/par and rust/src/kern/simd: the crate's \
+                 unsafe budget is the thread pool's documented lifetime-erasure \
+                 sites and the SIMD kernel backends only"
                     .to_string(),
             ));
             continue;
         }
-        // Inside par: demand a SAFETY: comment on this line or in the
-        // contiguous comment block above.
+        // In the SIMD backends, an `unsafe fn` must be unsafe *because*
+        // it is compiled for a specific ISA — demand #[target_feature].
+        if ctx.is_simd() {
+            let after = skip_ws(text, i + "unsafe".len());
+            if text[after..].starts_with("fn")
+                && !ident_after(text, after + 2)
+                && !has_target_feature(ctx.scan, line)
+            {
+                out.push(finding(
+                    ctx,
+                    line,
+                    "SIMD-TARGET",
+                    "`unsafe fn` in a SIMD backend without #[target_feature(…)]: \
+                     every vector function must be compiled for the ISA that makes \
+                     it unsafe to call"
+                        .to_string(),
+                ));
+            }
+        }
+        // Inside the permitted scope: demand a SAFETY: comment on this
+        // line or in the contiguous comment/attribute block above.
         if !has_safety_comment(ctx.scan, line) {
             out.push(finding(
                 ctx,
@@ -705,7 +751,9 @@ fn has_safety_comment(scan: &FileScan, line: usize) -> bool {
     if scan.lines[idx].comment.contains("SAFETY") {
         return true;
     }
-    // Walk up through comment-only (or blank) lines, bounded.
+    // Walk up through comment-only, blank, or attribute lines, bounded
+    // (a SAFETY doc comment legitimately sits above `#[target_feature]`
+    // / `#[cfg]` attributes).
     let mut k = idx;
     for _ in 0..20 {
         if k == 0 {
@@ -713,15 +761,42 @@ fn has_safety_comment(scan: &FileScan, line: usize) -> bool {
         }
         k -= 1;
         let l = &scan.lines[k];
-        if !l.code.trim().is_empty() {
+        let code = l.code.trim();
+        if !code.is_empty() && !code.starts_with("#[") {
             break;
         }
         if l.comment.contains("SAFETY") {
             return true;
         }
-        if l.comment.trim().is_empty() && l.code.trim().is_empty() {
-            continue; // blank line inside the comment block
+    }
+    false
+}
+
+/// Does a `#[target_feature(…)]` attribute cover the fn on `line` — on
+/// the line itself or among the contiguous attribute / comment / blank
+/// lines directly above it?
+fn has_target_feature(scan: &FileScan, line: usize) -> bool {
+    let idx = line - 1;
+    if scan.lines[idx].code.contains("#[target_feature(") {
+        return true;
+    }
+    let mut k = idx;
+    for _ in 0..20 {
+        if k == 0 {
+            break;
         }
+        k -= 1;
+        let code = scan.lines[k].code.trim();
+        if code.is_empty() {
+            continue;
+        }
+        if code.starts_with("#[") {
+            if code.contains("#[target_feature(") {
+                return true;
+            }
+            continue;
+        }
+        break;
     }
     false
 }
@@ -975,6 +1050,44 @@ mod tests {
         let ok = run_on(
             "rust/src/par/pool.rs",
             "fn f(p: *const u32) -> u32 {\n    // SAFETY: caller guarantees p is live.\n    unsafe { *p }\n}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn simd_unsafe_fn_needs_target_feature_and_safety() {
+        // Bare unsafe fn in a backend: wrong on both counts.
+        let f = run_on(
+            "rust/src/kern/simd/avx2.rs",
+            "pub unsafe fn load(p: *const f64) -> f64 {\n    *p\n}\n",
+        );
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "SIMD-TARGET"), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "UNSAFE-DOC"), "{f:?}");
+        assert!(f.iter().all(|x| x.rule != "UNSAFE-SCOPE"), "simd is in scope: {f:?}");
+        // SAFETY doc above the attribute is looked through; the
+        // attribute satisfies SIMD-TARGET.
+        let ok = run_on(
+            "rust/src/kern/simd/avx2.rs",
+            "/// Lane-wise dot.\n///\n/// SAFETY: caller checked avx2 support.\n\
+             #[target_feature(enable = \"avx2\")]\npub(super) unsafe fn dot() {}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+        // An unsafe *block* in a simd file needs SAFETY but never
+        // SIMD-TARGET.
+        let b = run_on(
+            "rust/src/kern/simd/mod.rs",
+            "fn f() { unsafe { g() } }\nunsafe fn g() {}\n",
+        );
+        assert!(b.iter().any(|x| x.rule == "UNSAFE-DOC" && x.line == 1), "{b:?}");
+        assert!(b.iter().all(|x| x.rule != "SIMD-TARGET" || x.line == 2), "{b:?}");
+    }
+
+    #[test]
+    fn safety_comment_skips_attribute_lines_in_par_too() {
+        let ok = run_on(
+            "rust/src/par/pool.rs",
+            "// SAFETY: caller guarantees p is live.\n#[inline]\nunsafe fn f(p: *const u32) -> u32 { *p }\n",
         );
         assert!(ok.is_empty(), "{ok:?}");
     }

@@ -25,6 +25,8 @@ fn bad_tree_fires_every_rule_at_the_expected_lines() {
         ("rust/Cargo.toml", 5, "DEP-EXT"),
         ("rust/Cargo.toml", 6, "DEP-EXT"),
         ("rust/src/kern/evil.rs", 2, "UNSAFE-SCOPE"),
+        ("rust/src/kern/simd/bad.rs", 1, "SIMD-TARGET"),
+        ("rust/src/kern/simd/bad.rs", 1, "UNSAFE-DOC"),
         ("rust/src/lars/core.rs", 6, "DET-TIME"),
         ("rust/src/lars/core.rs", 9, "DET-MAP"),
         ("rust/src/lars/core.rs", 12, "DET-SUM"),
@@ -40,7 +42,7 @@ fn bad_tree_fires_every_rule_at_the_expected_lines() {
         ("rust/src/serve/handlers.rs", 9, "PANIC-UNWRAP"),
     ];
     assert_eq!(got, want, "full findings: {:#?}", report.findings);
-    assert_eq!(report.errors(), 15);
+    assert_eq!(report.errors(), 17);
     assert_eq!(report.warnings(), 1);
     assert_eq!(report.suppressed, 0, "a reasonless marker must not suppress");
     assert!(!report.is_clean(false));
@@ -60,7 +62,7 @@ fn bad_tree_diagnostics_render_as_file_line() {
         "{rendered}"
     );
     assert!(rendered.contains("rust/Cargo.toml:5: error[DEP-EXT]"), "{rendered}");
-    assert!(rendered.contains("15 error(s), 1 warning(s)"), "{rendered}");
+    assert!(rendered.contains("17 error(s), 1 warning(s)"), "{rendered}");
 }
 
 #[test]
@@ -68,7 +70,7 @@ fn good_tree_is_clean_with_one_reasoned_suppression() {
     let report = run_audit(&fixture("tree_good"), &Config::default()).expect("walk");
     assert!(report.findings.is_empty(), "{:#?}", report.findings);
     assert_eq!(report.suppressed, 1, "the reasoned DET-SUM allow must count");
-    assert_eq!(report.files_scanned, 3);
+    assert_eq!(report.files_scanned, 4);
     assert_eq!(report.manifests_checked, 2);
     assert!(report.is_clean(true), "clean even under --deny-warnings");
 }
@@ -94,7 +96,7 @@ fn warnings_gate_only_under_deny_warnings() {
 
 #[test]
 fn every_rule_is_documented_for_explain_and_list() {
-    assert_eq!(RULES.len(), 11);
+    assert_eq!(RULES.len(), 12);
     for r in RULES {
         assert!(!r.summary.is_empty(), "{} needs a summary", r.id);
         assert!(r.explain.len() > 80, "{} needs a real explanation", r.id);
@@ -104,6 +106,8 @@ fn every_rule_is_documented_for_explain_and_list() {
     assert!(rule_doc("DET-CMP").unwrap().explain.contains("total_cmp"));
     assert!(rule_doc("DET-SUM").unwrap().explain.contains("canonical"));
     assert!(rule_doc("PANIC-LOCK").unwrap().explain.contains("into_inner"));
+    assert!(rule_doc("SIMD-TARGET").unwrap().explain.contains("target_feature"));
+    assert!(rule_doc("UNSAFE-SCOPE").unwrap().explain.contains("kern/simd"));
     assert!(rule_doc("NOPE").is_none());
 }
 

@@ -1,0 +1,3 @@
+pub unsafe fn load(p: *const f64) -> f64 {
+    *p
+}
