@@ -97,13 +97,14 @@ pub fn fit_observed(
                 break;
             }
         }
-        residual_norms.push(norm2(&r));
+        let rnorm = norm2(&r);
+        residual_norms.push(rnorm);
 
         let observer_stop = obs.on_iteration(&FitEvent {
             iter,
             selected: &selected,
             gamma: f64::NAN,
-            residual_norm: *residual_norms.last().unwrap(),
+            residual_norm: rnorm,
             lambda: pick_corr,
         }) == ObserverControl::Stop;
         iter += 1;

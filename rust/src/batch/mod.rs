@@ -638,7 +638,7 @@ fn lars_lockstep(
 
     sts.into_iter()
         .map(|mut st| {
-            if *st.cols_at_iter.last().unwrap() != st.selected.len() {
+            if st.cols_at_iter.last().copied() != Some(st.selected.len()) {
                 st.cols_at_iter.push(st.selected.len());
             }
             LarsOutput {
@@ -885,6 +885,7 @@ fn lasso_lockstep(
                 }
             }
             if gamma_drop < gamma_add {
+                // audit: allow(PANIC-REACH) -- gamma_drop < gamma_add implies drop_pos was set: gamma_drop starts at +inf and is only lowered together with drop_pos
                 let kpos = drop_pos.unwrap();
                 let LassoSt { active, x, order, drops, .. } = &mut *st;
                 let j = active.remove(kpos);

@@ -127,6 +127,7 @@ impl Tracer {
 
     #[inline]
     fn idx(phase: Phase) -> usize {
+        // audit: allow(PANIC-REACH) -- Phase::ALL enumerates every variant (pinned by the phase-coverage test), so position() is always Some
         Phase::ALL.iter().position(|&p| p == phase).unwrap()
     }
 

@@ -64,6 +64,7 @@ pub fn balanced_col_partition(a: &Matrix, p: usize) -> Vec<Vec<usize>> {
     let mut loads = vec![0usize; p];
     for j in order {
         // Lightest bin (ties → lowest rank).
+        // audit: allow(PANIC-REACH) -- p >= 1 is asserted at entry, so the bin range is never empty
         let r = (0..p).min_by_key(|&r| (loads[r], r)).unwrap();
         bins[r].push(j);
         loads[r] += counts[j].max(1);

@@ -296,7 +296,8 @@ pub fn fit_observed(
         });
         // Quality instrumentation (not part of the algorithm's comm):
         // audit: allow(DET-SUM) -- serial combine of per-rank partials in ascending rank order: fixed order regardless of CALARS_THREADS
-        residual_norms.push(local_sq.iter().sum::<f64>().sqrt());
+        let rnorm = local_sq.iter().sum::<f64>().sqrt();
+        residual_norms.push(rnorm);
 
         // Steps 18-19 (master): in-place correlation updates.
         cluster.charge_flops(Phase::Update, n as u64);
@@ -369,7 +370,7 @@ pub fn fit_observed(
             iter,
             selected: &selected,
             gamma,
-            residual_norm: *residual_norms.last().unwrap(),
+            residual_norm: rnorm,
             lambda: ck,
         }) == ObserverControl::Stop;
 
@@ -393,7 +394,7 @@ pub fn fit_observed(
             break StopReason::EarlyStopped;
         }
     };
-    if *cols_at_iter.last().unwrap() != selected.len() {
+    if cols_at_iter.last().copied() != Some(selected.len()) {
         cols_at_iter.push(selected.len());
     }
 

@@ -248,6 +248,7 @@ pub fn fit_observed(
 
         if gamma_drop < gamma_add {
             // Drop event: zero the crossing coefficient exactly.
+            // audit: allow(PANIC-REACH) -- gamma_drop < gamma_add implies drop_pos was set: gamma_drop starts at +inf and is only lowered together with drop_pos
             let k = drop_pos.unwrap();
             let j = active.remove(k);
             x[j] = 0.0;
@@ -257,12 +258,13 @@ pub fn fit_observed(
             drops += 1;
         }
 
-        let lambda = ck * (1.0 - gamma * h);
+        let bp_lambda = (ck * (1.0 - gamma * h)).max(0.0);
+        let bp_rnorm = norm2(&r);
         breakpoints.push(Breakpoint {
-            lambda: lambda.max(0.0),
+            lambda: bp_lambda,
             support: active.clone(),
             x: x.clone(),
-            residual_norm: norm2(&r),
+            residual_norm: bp_rnorm,
         });
         order_at_last_bp.clone_from(&order);
         drop(update_span);
@@ -271,8 +273,8 @@ pub fn fit_observed(
             iter,
             selected: &order,
             gamma,
-            residual_norm: breakpoints.last().unwrap().residual_norm,
-            lambda: breakpoints.last().unwrap().lambda,
+            residual_norm: bp_rnorm,
+            lambda: bp_lambda,
         }) == ObserverControl::Stop;
         iter += 1;
 

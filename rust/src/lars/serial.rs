@@ -281,7 +281,8 @@ pub fn fit_observed(
         }
         ck *= shrink;
 
-        residual_norms.push(norm2(&r));
+        let rnorm = norm2(&r);
+        residual_norms.push(rnorm);
         drop(update_span);
 
         let hit_full_step = new_block.is_empty() || gamma >= gamma_full * (1.0 - 1e-12);
@@ -322,7 +323,7 @@ pub fn fit_observed(
             iter,
             selected: &selected,
             gamma,
-            residual_norm: *residual_norms.last().unwrap(),
+            residual_norm: rnorm,
             lambda: ck,
         }) == ObserverControl::Stop;
 
@@ -346,7 +347,7 @@ pub fn fit_observed(
             break StopReason::EarlyStopped;
         }
     };
-    if *cols_at_iter.last().unwrap() != selected.len() {
+    if cols_at_iter.last().copied() != Some(selected.len()) {
         cols_at_iter.push(selected.len());
     }
 

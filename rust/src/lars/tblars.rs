@@ -153,7 +153,7 @@ pub fn fit_observed(
         let mut root_out: Option<MlarsOutput> = None;
         if p == 1 {
             // Single rank: the leaf IS the root.
-            root_out = Some(leaf_outs.into_iter().next().unwrap());
+            root_out = leaf_outs.into_iter().next();
         } else {
             for level in 1..=tree.levels() {
                 let nodes = tree.nodes_at(level);
@@ -187,7 +187,8 @@ pub fn fit_observed(
         }
 
         // ── Root update + broadcast (steps 10-12). ──
-        let root = root_out.expect("tournament produced no root output");
+        let root =
+            root_out.ok_or_else(|| Error::internal("tournament produced no root output"))?;
         let new_count = root.new_cols.len();
         y = root.y;
         let k_prev = selected.len();
@@ -202,14 +203,15 @@ pub fn fit_observed(
         for ((ri, bi), yi) in r_buf.iter_mut().zip(b_vec).zip(&y) {
             *ri = bi - yi;
         }
-        residual_norms.push(norm2(&r_buf));
+        let rnorm = norm2(&r_buf);
+        residual_norms.push(rnorm);
         cols_at_iter.push(selected.len());
 
         let observer_stop = obs.on_iteration(&FitEvent {
             iter,
             selected: &selected,
             gamma: f64::NAN,
-            residual_norm: *residual_norms.last().unwrap(),
+            residual_norm: rnorm,
             lambda: f64::NAN,
         }) == ObserverControl::Stop;
         iter += 1;

@@ -168,6 +168,7 @@ impl DenseMatrix {
             kern::at_r_panel(&self.data[lo * n..hi * n], n, &r[lo..hi], &mut acc);
             acc
         });
+        // audit: allow(PANIC-REACH) -- map_chunks yields at least one partial for the m >= 1 rows any constructed matrix has
         let (first, rest) = partials.split_first().expect("m > grain implies chunks");
         out.copy_from_slice(first);
         for p in rest {
@@ -223,6 +224,7 @@ impl DenseMatrix {
             });
         }
         let partials = par::run_tasks(tasks);
+        // audit: allow(PANIC-REACH) -- one task per chunk was queued above, so run_tasks returns at least one partial
         let (first, sum_rest) = partials.split_first().expect("m > grain implies chunks");
         av.copy_from_slice(first);
         for p in sum_rest {
@@ -412,6 +414,7 @@ impl DenseMatrix {
             kern::col_sq_norms_panel(&self.data[lo * n..hi * n], n, &mut acc);
             acc
         });
+        // audit: allow(PANIC-REACH) -- map_chunks yields at least one partial for the m >= 1 rows any constructed matrix has
         let (first, rest) = partials.split_first().expect("m > 0 implies chunks");
         norms.copy_from_slice(first);
         for p in rest {

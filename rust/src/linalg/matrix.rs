@@ -190,6 +190,7 @@ impl Matrix {
                     acc
                 });
                 let (first, rest) =
+                    // audit: allow(PANIC-REACH) -- map_chunks yields at least one partial for a matrix with nrows >= 1
                     partials.split_first().expect("nrows > grain implies chunks");
                 out.copy_from_slice(first);
                 for p in rest {

@@ -160,6 +160,7 @@ impl CscMatrix {
             }
             acc
         });
+        // audit: allow(PANIC-REACH) -- map_chunks yields at least one partial for the non-empty column set this path passes in
         let (first, rest) = partials.split_first().expect("cols > grain implies chunks");
         out.copy_from_slice(first);
         for p in rest {

@@ -110,7 +110,7 @@ impl Latch {
         }
     }
 
-    fn wait(&self) {
+    fn wait_zero(&self) {
         let mut g =
             self.remaining.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         while *g > 0 {
@@ -152,6 +152,7 @@ impl ThreadPool {
                 let handle = std::thread::Builder::new()
                     .name(format!("calars-par-{i}"))
                     .spawn(move || worker_loop(sh, min_chunk, backend))
+                    // audit: allow(PANIC-REACH) -- pool threads spawn once at first use, before any fit runs; a host that cannot spawn threads cannot serve
                     .expect("spawn pool worker");
                 workers.push(handle);
             }
@@ -219,11 +220,12 @@ impl ThreadPool {
             }
             self.shared.work_cv.notify_all();
         }
-        latch.wait();
+        latch.wait_zero();
         slots
             .into_iter()
             .map(|slot| {
                 let cell = slot.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+                // audit: allow(PANIC-REACH) -- wait_zero() returns only after every queued job stored its result, so the slot is always Some
                 match cell.expect("pool job completed without a result") {
                     Ok(v) => v,
                     Err(payload) => std::panic::resume_unwind(payload),

@@ -216,7 +216,9 @@ pub fn rank_steps(snap: &PathSnapshot, m: usize, criterion: Criterion) -> Result
         ));
     }
     let mf = m as f64;
-    let last = snap.steps.last().expect("non-empty");
+    let Some(last) = snap.steps.last() else {
+        return Err(Error::internal("path snapshot has no steps; refit to record a path"));
+    };
     let df_last = last.support.len();
     // Cp's plug-in noise estimate from the fullest stored model.
     let sigma2 = (last.residual_norm * last.residual_norm)
@@ -237,6 +239,7 @@ pub fn rank_steps(snap: &PathSnapshot, m: usize, criterion: Criterion) -> Result
                 Criterion::Cp => rss / sigma2 - mf + 2.0 * df as f64,
                 Criterion::Aic => mf * (rss / mf).ln() + 2.0 * df as f64,
                 Criterion::Bic => mf * (rss / mf).ln() + mf.ln() * df as f64,
+                // audit: allow(PANIC-REACH) -- Cv is rejected at rank_steps entry, so this arm is genuinely unreachable
                 Criterion::Cv => unreachable!("rejected above"),
             };
             StepScore { step: s, df, score }
@@ -272,7 +275,8 @@ pub struct FoldFit<'a> {
 pub fn fit_fold_snapshot(ctx: &FoldFit<'_>, fit: &FitSpec) -> Result<PathSnapshot> {
     let mut obs = SnapshotObserver::new();
     fit.fit(ctx.a, ctx.b, &mut obs)?;
-    Ok(obs.into_snapshot().expect("on_complete fires when fit returns Ok"))
+    obs.into_snapshot()
+        .ok_or_else(|| Error::internal("fit returned Ok without completing a snapshot"))
 }
 
 /// k-fold cross-validation of a fit spec on `(a, b)` with the default

@@ -159,9 +159,13 @@ impl PredictionEngine {
     /// through the LRU snapshot cache.
     pub fn coefs_for(&self, rec: &ModelRecord, selector: Selector) -> Result<Arc<Vec<f64>>> {
         let key = (rec.id, rec.version, selector.cache_key());
-        if let Some(v) = self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner).get(&key) {
-            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(v);
+        {
+            let mut cache =
+                self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if let Some(v) = cache.get(&key) {
+                self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(v);
+            }
         }
         self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
         let dense = Arc::new(resolve_coefs(rec, selector)?);

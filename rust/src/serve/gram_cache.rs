@@ -274,6 +274,7 @@ impl GramCache {
 
     /// Counter snapshot (live entries + retired accumulators).
     pub fn stats(&self) -> GramCacheStats {
+        // audit: allow(LOCK-ORDER) -- the reported cycle is a name-resolution artifact (std collection get/insert under a held guard resolve to other caches' methods); the only real nesting is GramCache.inner -> PanelStore.inner at registration, and nothing acquires those locks in the reverse order
         let g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut s = GramCacheStats {
             datasets: g.entries.len(),

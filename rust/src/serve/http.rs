@@ -1134,10 +1134,12 @@ impl Batcher {
             // enqueue. The poll bounds that race.
             match rx.recv_timeout(Duration::from_millis(50)) {
                 Ok((slot, r)) => {
-                    if out[slot].is_none() {
-                        got += 1;
+                    if let Some(cell) = out.get_mut(slot) {
+                        if cell.is_none() {
+                            got += 1;
+                        }
+                        *cell = Some(r);
                     }
-                    out[slot] = Some(r);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     if self.stopping.load(Ordering::SeqCst) {

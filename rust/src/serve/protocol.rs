@@ -424,6 +424,7 @@ fn read_line_capped(r: &mut impl BufRead) -> Result<Option<String>> {
             if available.is_empty() {
                 (0, true) // EOF; whatever is buffered is the final line
             } else if let Some(i) = available.iter().position(|&b| b == b'\n') {
+                // audit: allow(PANIC-REACH) -- i is a position() hit on this very slice, so ..=i is in bounds
                 buf.extend_from_slice(&available[..=i]);
                 (i + 1, true)
             } else {
@@ -621,9 +622,9 @@ pub fn json_f64(v: f64) -> String {
 pub fn json_find_u64(body: &str, key: &str) -> Option<u64> {
     let needle = format!("\"{key}\":");
     let at = body.find(&needle)? + needle.len();
-    let rest = body[at..].trim_start();
+    let rest = body.get(at..)?.trim_start();
     let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
-    rest[..end].parse().ok()
+    rest.get(..end)?.parse().ok()
 }
 
 /// Scan for `"key": "<string>"` (no unescaping — our emitted values
@@ -631,9 +632,9 @@ pub fn json_find_u64(body: &str, key: &str) -> Option<u64> {
 pub fn json_find_str<'a>(body: &'a str, key: &str) -> Option<&'a str> {
     let needle = format!("\"{key}\":");
     let at = body.find(&needle)? + needle.len();
-    let rest = body[at..].trim_start().strip_prefix('"')?;
+    let rest = body.get(at..)?.trim_start().strip_prefix('"')?;
     let end = rest.find('"')?;
-    Some(&rest[..end])
+    rest.get(..end)
 }
 
 #[cfg(test)]

@@ -1,0 +1,1851 @@
+#!/usr/bin/env python3
+"""Faithful Python mirror of the calars-audit v2 interprocedural rules.
+
+Dev-only verification harness: replicates lexer.rs + parse.rs +
+callgraph.rs + locks.rs + contract.rs byte-for-byte in behavior so the
+four new rule families (PANIC-REACH, LOCK-ORDER, ERR-MAP,
+UNSAFE-BUDGET) can be exercised against the fixture trees and the real
+tree without a Rust toolchain in the container.  Not shipped into any
+build; tracked so the next session can replay the prediction.
+
+Usage: python3 mirror.py <root> [--update-ledger]
+"""
+
+import os
+import sys
+
+sys.setrecursionlimit(100000)
+
+
+def is_id(c):
+    return ("a" <= c <= "z") or ("A" <= c <= "Z") or ("0" <= c <= "9") or c == "_"
+
+
+def is_id_b(b):
+    c = chr(b) if b < 128 else " "
+    return is_id(c)
+
+
+# ── lexer.rs ─────────────────────────────────────────────────────────
+
+
+def raw_str_at(bs, i):
+    j = i
+    if j < len(bs) and bs[j] == ord("b"):
+        j += 1
+    if j >= len(bs) or bs[j] != ord("r"):
+        return None
+    j += 1
+    hashes = 0
+    while j < len(bs) and bs[j] == ord("#"):
+        hashes += 1
+        j += 1
+    if j < len(bs) and bs[j] == ord('"'):
+        return (hashes, j + 1 - i)
+    return None
+
+
+def scan_quote(bs, i, code):
+    n = len(bs)
+    if i + 1 < n and bs[i + 1] == ord("\\"):
+        code.append("'")
+        code.append(" ")
+        j = i + 2
+        if j < n and bs[j] != ord("\n"):
+            code.append(" ")
+            j += 1
+        while j < n and bs[j] != ord("'") and bs[j] != ord("\n"):
+            code.append(" ")
+            j += 1
+        if j < n and bs[j] == ord("'"):
+            code.append("'")
+            return j + 1
+        return j
+    if i + 1 < n and bs[i + 1] != ord("'"):
+        for j in range(i + 2, min(i + 6, n)):
+            if bs[j] == ord("'"):
+                if (
+                    j == i + 2
+                    and is_id_b(bs[i + 1])
+                    and j + 1 < n
+                    and is_id_b(bs[j + 1])
+                ):
+                    break
+                code.append("'")
+                for _ in range(i + 1, j):
+                    code.append(" ")
+                code.append("'")
+                return j + 1
+            if bs[j] >= 128:
+                continue
+            if j == i + 2 and not is_id_b(bs[j]):
+                break
+    code.append("'")
+    return i + 1
+
+
+def mark_test_regions(lines):
+    in_test = [False] * len(lines)
+    i = 0
+    while i < len(lines):
+        squashed = "".join(c for c in lines[i][0] if not c.isspace())
+        if "#[cfg(test)]" not in squashed:
+            i += 1
+            continue
+        start = i
+        depth = 0
+        opened = False
+        j = i
+        while j < len(lines):
+            for c in lines[j][0]:
+                if c == "{":
+                    depth += 1
+                    opened = True
+                elif c == "}":
+                    depth -= 1
+            if opened and depth <= 0:
+                break
+            j += 1
+        end = min(j, len(lines) - 1)
+        for t in range(start, end + 1):
+            in_test[t] = True
+        i = end + 1
+    return in_test
+
+
+def scan(src_bytes):
+    bs = src_bytes
+    n = len(bs)
+    lines = []
+    cur_code = []
+    cur_comment = []
+    strs = []
+    lit_line = 0
+    lit_text = []
+    mode = ("normal",)
+    i = 0
+    prev_code = 0
+    while i < n:
+        b = bs[i]
+        if b == ord("\n"):
+            lines.append(("".join(cur_code), "".join(cur_comment)))
+            cur_code = []
+            cur_comment = []
+            if mode[0] == "line":
+                mode = ("normal",)
+            if mode[0] in ("str", "rawstr"):
+                lit_text.append("\n")
+            i += 1
+            continue
+        m = mode[0]
+        if m == "line":
+            cur_comment.append(chr(b) if b < 128 else " ")
+            i += 1
+        elif m == "block":
+            depth = mode[1]
+            if b == ord("/") and i + 1 < n and bs[i + 1] == ord("*"):
+                mode = ("block", depth + 1)
+                i += 2
+            elif b == ord("*") and i + 1 < n and bs[i + 1] == ord("/"):
+                mode = ("normal",) if depth == 1 else ("block", depth - 1)
+                i += 2
+            else:
+                cur_comment.append(chr(b) if b < 128 else " ")
+                i += 1
+        elif m == "str":
+            if b == ord("\\"):
+                cur_code.append(" ")
+                lit_text.append("\\")
+                if i + 1 < n and bs[i + 1] != ord("\n"):
+                    cur_code.append(" ")
+                    lit_text.append(chr(bs[i + 1]) if bs[i + 1] < 128 else " ")
+                    i += 2
+                else:
+                    i += 1
+            elif b == ord('"'):
+                cur_code.append('"')
+                prev_code = ord('"')
+                mode = ("normal",)
+                strs.append((lit_line, "".join(lit_text)))
+                lit_text = []
+                i += 1
+            else:
+                cur_code.append(" ")
+                lit_text.append(chr(b) if b < 128 else " ")
+                i += 1
+        elif m == "rawstr":
+            hashes = mode[1]
+            if (
+                b == ord('"')
+                and n - (i + 1) >= hashes
+                and all(bs[i + 1 + k] == ord("#") for k in range(hashes))
+            ):
+                for _ in range(hashes + 1):
+                    cur_code.append(" ")
+                prev_code = ord('"')
+                mode = ("normal",)
+                strs.append((lit_line, "".join(lit_text)))
+                lit_text = []
+                i += 1 + hashes
+            else:
+                cur_code.append(" ")
+                lit_text.append(chr(b) if b < 128 else " ")
+                i += 1
+        else:
+            if b == ord("/") and i + 1 < n and bs[i + 1] == ord("/"):
+                mode = ("line",)
+                i += 2
+                if i < n and bs[i] in (ord("/"), ord("!")):
+                    i += 1
+            elif b == ord("/") and i + 1 < n and bs[i + 1] == ord("*"):
+                mode = ("block", 1)
+                i += 2
+            elif b == ord('"'):
+                cur_code.append('"')
+                mode = ("str",)
+                lit_line = len(lines) + 1
+                lit_text = []
+                i += 1
+            elif (
+                b in (ord("r"), ord("b"))
+                and not is_id_b(prev_code)
+                and raw_str_at(bs, i) is not None
+            ):
+                hashes, consumed = raw_str_at(bs, i)
+                for _ in range(consumed):
+                    cur_code.append(" ")
+                mode = ("rawstr", hashes)
+                lit_line = len(lines) + 1
+                lit_text = []
+                i += consumed
+            elif (
+                b == ord("b")
+                and i + 1 < n
+                and bs[i + 1] == ord('"')
+                and not is_id_b(prev_code)
+            ):
+                cur_code.append("b")
+                prev_code = ord("b")
+                i += 1
+            elif b == ord("'"):
+                i = scan_quote(bs, i, cur_code)
+                prev_code = ord("'")
+            else:
+                cur_code.append(chr(b) if b < 128 else " ")
+                prev_code = b if b < 128 else ord(" ")
+                i += 1
+    lines.append(("".join(cur_code), "".join(cur_comment)))
+    in_test = mark_test_regions(lines)
+    return lines, in_test, strs
+
+
+# ── rules.rs helpers ─────────────────────────────────────────────────
+
+
+def word_occurrences(text, needle):
+    out = []
+    start = 0
+    while True:
+        i = text.find(needle, start)
+        if i < 0:
+            return out
+        before_ok = i == 0 or not is_id(text[i - 1])
+        after = i + len(needle)
+        after_ok = after >= len(text) or not is_id(text[after])
+        if before_ok and after_ok:
+            out.append(i)
+        start = i + len(needle)
+
+
+def match_paren(text, open_i):
+    depth = 0
+    for k in range(open_i, len(text)):
+        c = text[k]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return k + 1
+    return None
+
+
+def skip_ws(text, i):
+    while i < len(text) and text[i] in " \t\n\r\x0b\x0c":
+        i += 1
+    return i
+
+
+def line_at(code, off):
+    return code.count("\n", 0, min(off, len(code))) + 1
+
+
+# ── parse.rs ─────────────────────────────────────────────────────────
+
+
+def match_delim(text, open_i, ob, cb):
+    depth = 0
+    i = open_i
+    while i < len(text):
+        c = text[i]
+        if c == ob:
+            depth += 1
+        elif c == cb:
+            depth -= 1
+            if depth < 0:
+                return None
+            if depth == 0:
+                return i
+        i += 1
+    return None
+
+
+def skip_angles(text, i):
+    depth = 0
+    while i < len(text):
+        c = text[i]
+        if c == "<":
+            depth += 1
+        elif c == ">" and i > 0 and text[i - 1] == "-":
+            pass
+        elif c == ">":
+            depth -= 1
+            if depth <= 0:
+                return i + 1
+        i += 1
+    return i
+
+
+def split_top_level(s, sep):
+    out = []
+    depth = 0
+    start = 0
+    for i, c in enumerate(s):
+        if c in "([{<":
+            depth += 1
+        elif c == ">" and i > 0 and s[i - 1] == "-":
+            pass
+        elif c in ")]}>":
+            depth -= 1
+        elif c == sep and depth == 0:
+            out.append((start, s[start:i]))
+            start = i + 1
+    out.append((start, s[start:]))
+    return out
+
+
+def find_type_colon(s):
+    depth = 0
+    i = 0
+    while i < len(s):
+        c = s[i]
+        if c in "([<":
+            depth += 1
+        elif c == ">" and i > 0 and s[i - 1] == "-":
+            pass
+        elif c in ")]>":
+            depth -= 1
+        elif c == ":":
+            if i + 1 < len(s) and s[i + 1] == ":":
+                i += 2
+                continue
+            if depth == 0:
+                return i
+        i += 1
+    return None
+
+
+def trailing_ident(s):
+    start = len(s)
+    while start > 0 and is_id(s[start - 1]):
+        start -= 1
+    return s[start:] if start < len(s) else None
+
+
+def find_kw(s, kw):
+    frm = 0
+    while True:
+        rel = s.find(kw, frm)
+        if rel < 0:
+            return None
+        i = rel
+        before_ok = i == 0 or not is_id(s[i - 1])
+        after = i + len(kw)
+        after_ok = after >= len(s) or (not is_id(s[after]) and s[after] != "<")
+        if before_ok and after_ok:
+            return i
+        frm = i + len(kw)
+
+
+def impl_type_name(header):
+    s = header.strip()
+    if s.startswith("<"):
+        end = skip_angles(s, 0)
+        s = s[min(end, len(s)):].lstrip()
+    i = find_kw(s, "for")
+    if i is not None:
+        s = s[i + 3:].lstrip()
+    w = s.find(" where")
+    if w >= 0:
+        s = s[:w]
+    s = s.lstrip("&*").lstrip()
+    if s.startswith("mut "):
+        s = s[4:].lstrip()
+    if s.startswith("dyn "):
+        s = s[4:].lstrip()
+    lt = s.find("<")
+    base = s[:lt] if lt >= 0 else s
+    base = base.rstrip()
+    seg = base.rsplit("::", 1)[-1]
+    return "".join(c for c in seg if c.isalnum() or c == "_")
+
+
+def module_of(path):
+    p = path
+    if p.startswith("rust/src/"):
+        p = p[len("rust/src/"):]
+    if p.endswith(".rs"):
+        p = p[:-3]
+    if p.endswith("/mod"):
+        p = p[:-4]
+    return p.replace("/", "::")
+
+
+def parse_fields(body):
+    out = []
+    for _, part in split_top_level(body, ","):
+        p = part.strip()
+        while p.startswith("#["):
+            e = p[2:].find("]")
+            if e < 0:
+                break
+            p = p[2 + e + 1:].lstrip()
+        ci = find_type_colon(p)
+        if ci is None:
+            continue
+        name = trailing_ident(p[:ci].rstrip())
+        if name is None:
+            continue
+        ty = p[ci + 1:].strip()
+        if ty:
+            out.append((name, ty))
+    return out
+
+
+class Fn:
+    __slots__ = ("name", "qual", "file", "line", "sig", "body", "is_test")
+
+    def __init__(self, **kw):
+        for k, v in kw.items():
+            setattr(self, k, v)
+
+    def params(self):
+        sig = self.sig
+        k = skip_ws(sig, 2)
+        while k < len(sig) and is_id(sig[k]):
+            k += 1
+        k = skip_ws(sig, k)
+        if k < len(sig) and sig[k] == "<":
+            k = skip_angles(sig, k)
+        k = skip_ws(sig, k)
+        if k >= len(sig) or sig[k] != "(":
+            return []
+        close = match_delim(sig, k, "(", ")")
+        if close is None:
+            return []
+        inner = sig[k + 1:close]
+        out = []
+        for _, part in split_top_level(inner, ","):
+            p = part.strip()
+            if not p:
+                continue
+            ci = find_type_colon(p)
+            if ci is None:
+                continue
+            name = trailing_ident(p[:ci].rstrip())
+            if name is None:
+                continue
+            out.append((name, p[ci + 1:].strip()))
+        return out
+
+    def returns_guard(self):
+        return any(
+            g in self.sig
+            for g in ("MutexGuard", "RwLockReadGuard", "RwLockWriteGuard")
+        )
+
+
+class FileRec:
+    __slots__ = ("path", "code", "lines", "in_test", "strs", "fns")
+
+    def __init__(self, path, code, lines, in_test, strs):
+        self.path = path
+        self.code = code
+        self.lines = lines
+        self.in_test = in_test
+        self.strs = strs
+        self.fns = []
+
+    def is_test_line(self, line):
+        idx = line - 1
+        return self.in_test[idx] if 0 <= idx < len(self.in_test) else False
+
+
+class Model:
+    def __init__(self):
+        self.files = []
+        self.fns = []
+        self.structs = []  # (name, module, file, line, fields)
+        self.statics = []  # (name, ty, file, line)
+        self.enums = []  # (name, file, variants[(name,line)])
+
+    def add_file(self, path, scanned):
+        lines, in_test, strs = scanned
+        code = "\n".join(l[0] for l in lines)
+        self.files.append(FileRec(path, code, lines, in_test, strs))
+        parse_file_items(self, len(self.files) - 1)
+
+    @staticmethod
+    def is_lock_type(ty):
+        return "Mutex<" in ty or "RwLock<" in ty
+
+
+def parse_file_items(model, file):
+    f = model.files[file]
+    code = f.code
+    in_test = f.in_test
+    module = module_of(f.path)
+    n = len(code)
+    stack = []  # ('fn', idx) | ('qual', name) | ('other',)
+    pending = None  # (off, scope)
+    line = 1
+    i = 0
+    while i < n:
+        b = code[i]
+        if b == "\n":
+            line += 1
+            i += 1
+            continue
+        if b == "{":
+            if pending is not None and pending[0] == i:
+                sc = pending[1]
+                pending = None
+            else:
+                sc = ("other",)
+            if sc[0] == "fn":
+                model.fns[sc[1]].body = (i + 1, i + 1)
+            stack.append(sc)
+            i += 1
+            continue
+        if b == "}":
+            if stack:
+                sc = stack.pop()
+                if sc[0] == "fn" and model.fns[sc[1]].body is not None:
+                    model.fns[sc[1]].body = (model.fns[sc[1]].body[0], i)
+            i += 1
+            continue
+        if not is_id(b) or (i > 0 and is_id(code[i - 1])):
+            i += 1
+            continue
+        ws = i
+        we = i
+        while we < n and is_id(code[we]):
+            we += 1
+        if pending is not None:
+            i = we
+            continue
+        word = code[ws:we]
+        if word == "fn":
+            j = skip_ws(code, we)
+            if j < n and code[j] == "(":
+                i = we
+                continue
+            ns = j
+            while j < n and is_id(code[j]):
+                j += 1
+            if j == ns:
+                i = we
+                continue
+            name = code[ns:j]
+            k = j
+            paren = 0
+            bracket = 0
+            opn = None
+            semi = None
+            while k < n:
+                c = code[k]
+                if c == "(":
+                    paren += 1
+                elif c == ")":
+                    paren -= 1
+                elif c == "[":
+                    bracket += 1
+                elif c == "]":
+                    bracket -= 1
+                elif c == "{" and paren == 0 and bracket == 0:
+                    opn = k
+                    break
+                elif c == ";" and paren == 0 and bracket == 0:
+                    semi = k
+                    break
+                k += 1
+            sig_end = opn if opn is not None else (semi if semi is not None else n)
+            qual = None
+            for s in reversed(stack):
+                if s[0] == "qual":
+                    qual = s[1]
+                    break
+                if s[0] == "fn":
+                    break
+            idx = len(model.fns)
+            model.fns.append(
+                Fn(
+                    name=name,
+                    qual=qual,
+                    file=file,
+                    line=line,
+                    sig=code[ws:sig_end].strip(),
+                    body=None,
+                    is_test=(in_test[line - 1] if line - 1 < len(in_test) else False),
+                )
+            )
+            model.files[file].fns.append(idx)
+            if opn is not None:
+                pending = (opn, ("fn", idx))
+                line += code.count("\n", ws, opn)
+                i = opn
+            else:
+                end = semi + 1 if semi is not None else n
+                line += code.count("\n", ws, end)
+                i = end
+        elif word in ("impl", "trait"):
+            is_trait = word == "trait"
+            k = we
+            paren = 0
+            bracket = 0
+            opn = None
+            while k < n:
+                c = code[k]
+                if c == "(":
+                    paren += 1
+                elif c == ")":
+                    paren -= 1
+                elif c == "[":
+                    bracket += 1
+                elif c == "]":
+                    bracket -= 1
+                elif c == "{" and paren == 0 and bracket == 0:
+                    opn = k
+                    break
+                elif c == ";" and paren == 0 and bracket == 0:
+                    break
+                k += 1
+            if opn is None:
+                i = we
+                continue
+            header = code[we:opn]
+            if is_trait:
+                s = skip_ws(header, 0)
+                e = s
+                while e < len(header) and is_id(header[e]):
+                    e += 1
+                ty = header[s:e]
+            else:
+                ty = impl_type_name(header)
+            pending = (opn, ("qual", ty))
+            line += code.count("\n", ws, opn)
+            i = opn
+        elif word in ("struct", "enum"):
+            is_enum = word == "enum"
+            j = skip_ws(code, we)
+            ns = j
+            while j < n and is_id(code[j]):
+                j += 1
+            if j == ns:
+                i = we
+                continue
+            name = code[ns:j]
+            item_line = line
+            k = skip_ws(code, j)
+            if k < n and code[k] == "<":
+                k = skip_angles(code, k)
+                k = skip_ws(code, k)
+            paren = 0
+            bracket = 0
+            body_open = None
+            while k < n:
+                c = code[k]
+                if (
+                    c == "("
+                    and body_open is None
+                    and paren == 0
+                    and bracket == 0
+                    and not is_enum
+                ):
+                    break
+                if c == "(":
+                    paren += 1
+                elif c == ")":
+                    paren -= 1
+                elif c == "[":
+                    bracket += 1
+                elif c == "]":
+                    bracket -= 1
+                elif c == "{" and paren == 0 and bracket == 0:
+                    body_open = k
+                    break
+                elif c == ";" and paren == 0 and bracket == 0:
+                    break
+                k += 1
+            handled = False
+            if body_open is not None:
+                close = match_delim(code, body_open, "{", "}")
+                if close is not None:
+                    body = code[body_open + 1:close]
+                    if is_enum:
+                        variants = []
+                        for off, part in split_top_level(body, ","):
+                            x = skip_ws(part, 0)
+                            while part[x:x + 2] == "#[":
+                                e = part.find("]", x)
+                                if e < 0:
+                                    break
+                                x = skip_ws(part, e + 1)
+                            vs = x
+                            while x < len(part) and is_id(part[x]):
+                                x += 1
+                            if x > vs:
+                                voff = body_open + 1 + off + vs
+                                variants.append((part[vs:x], line_at(code, voff)))
+                        model.enums.append((name, file, variants))
+                    else:
+                        model.structs.append(
+                            (name, module, file, item_line, parse_fields(body))
+                        )
+                    line += code.count("\n", ws, close + 1)
+                    i = close + 1
+                    handled = True
+            if not handled:
+                if not is_enum:
+                    model.structs.append((name, module, file, item_line, []))
+                i = j
+        elif word == "static":
+            j = skip_ws(code, we)
+            if code[j:j + 3] == "mut" and not is_id(
+                code[j + 3] if j + 3 < n else "x"
+            ):
+                j = skip_ws(code, j + 3)
+            ns = j
+            while j < n and is_id(code[j]):
+                j += 1
+            if j == ns:
+                i = we
+                continue
+            name = code[ns:j]
+            k = skip_ws(code, j)
+            if k >= n or code[k] != ":":
+                i = we
+                continue
+            ty_start = k + 1
+            t = ty_start
+            depth = 0
+            while t < n:
+                c = code[t]
+                if c in "([<":
+                    depth += 1
+                elif c == ">" and code[t - 1] == "-":
+                    pass
+                elif c in ")]>":
+                    depth -= 1
+                elif c in "=;" and depth == 0:
+                    break
+                t += 1
+            model.statics.append((name, code[ty_start:min(t, n)].strip(), file, line))
+            line += code.count("\n", ws, min(t, n))
+            i = min(t, n)
+        else:
+            i = we
+    return
+
+
+# ── callgraph.rs ─────────────────────────────────────────────────────
+
+KEYWORDS = {
+    "if", "while", "for", "match", "return", "loop", "in", "as", "let", "mut",
+    "ref", "move", "fn", "else", "break", "continue", "unsafe", "impl", "dyn",
+    "where", "use", "pub", "crate", "super", "self", "await", "async",
+    "static", "const", "type", "struct", "enum", "trait", "mod",
+}
+
+ENTRY_NAMES = {"route", "handle_connection", "accept_loop", "worker_loop"}
+
+
+def is_serve_request_path(path):
+    return path.startswith("rust/src/serve/") and not path.endswith("loadgen.rs")
+
+
+def is_index_surface(path):
+    return is_serve_request_path(path) and (
+        path.endswith("/http.rs") or path.endswith("/protocol.rs")
+    )
+
+
+def extract(model, idx):
+    f = model.fns[idx]
+    fr = model.files[f.file]
+    code = fr.code
+    n = len(code)
+    rng = f.body if f.body is not None else (0, 0)
+    inner = [
+        model.fns[j].body
+        for j in fr.fns
+        if j != idx
+        and model.fns[j].body is not None
+        and model.fns[j].body[0] >= rng[0]
+        and model.fns[j].body[1] <= rng[1]
+    ]
+    shields = []
+    for off in word_occurrences(code, "catch_unwind"):
+        if off < rng[0] or off >= rng[1]:
+            continue
+        j = skip_ws(code, off + len("catch_unwind"))
+        if j < n and code[j] == "(":
+            close = match_paren(code, j)
+            shields.append((j, close if close is not None else rng[1]))
+
+    def shielded(o):
+        return any(s <= o < e for s, e in shields)
+
+    calls = []
+    sites = []
+    i = rng[0]
+    while i < rng[1]:
+        hit = next((r for r in inner if r[0] <= i < r[1]), None)
+        if hit is not None:
+            i = hit[1]
+            continue
+        c = code[i]
+        if c == "[":
+            p = code[i - 1] if i > 0 else " "
+            if (is_id(p) or p == ")" or p == "]") and not shielded(i):
+                sites.append((i, "index"))
+            i += 1
+            continue
+        if (not (c.isalpha() and c.isascii()) and c != "_") or (
+            i > 0 and is_id(code[i - 1])
+        ):
+            i += 1
+            continue
+        s = i
+        e = i
+        while e < rng[1] and is_id(code[e]):
+            e += 1
+        i = e
+        word = code[s:e]
+        j0 = skip_ws(code, e)
+        if word in ("panic", "unreachable", "todo", "unimplemented") and (
+            j0 < n and code[j0] == "!"
+        ):
+            if not shielded(s):
+                sites.append((s, "macro"))
+            continue
+        if j0 < n and code[j0] == "!":
+            continue
+        prev_dot = s > 0 and code[s - 1] == "."
+        if prev_dot and word in ("unwrap", "expect") and j0 < n and code[j0] == "(":
+            on_lock = code[:s - 1].rstrip().endswith("lock()")
+            if not on_lock and not shielded(s):
+                sites.append((s, word))
+            continue
+        if word in KEYWORDS:
+            continue
+        j = j0
+        if code[j:j + 3] == "::<":
+            j = skip_ws(code, skip_angles(code, j + 2))
+        if j >= n or code[j] != "(" or shielded(s):
+            continue
+        if prev_dot:
+            rs = s - 1
+            while rs > 0 and is_id(code[rs - 1]):
+                rs -= 1
+            pure_self = code[rs:s - 1] == "self" and (rs == 0 or code[rs - 1] != ".")
+            kind = ("selfmethod",) if pure_self else ("method",)
+        elif s >= 2 and code[s - 1] == ":" and code[s - 2] == ":":
+            qe = s - 2
+            qs = qe
+            while qs > 0 and is_id(code[qs - 1]):
+                qs -= 1
+            q = code[qs:qe]
+            if not q:
+                continue
+            if q[0].isupper() or q == "Self":
+                kind = ("qualified", q)
+            else:
+                kind = ("free",)
+        else:
+            k = s
+            while k > rng[0] and code[k - 1].isspace():
+                k -= 1
+            is_def = (
+                k >= 2
+                and code[k - 2:k] == "fn"
+                and (k < 3 or not is_id(code[k - 3]))
+            )
+            if is_def or word[0].isupper():
+                continue
+            kind = ("free",)
+        calls.append((s, word, kind))
+    return calls, sites
+
+
+class Resolver:
+    def __init__(self, model, in_scope):
+        self.model = model
+        self.free = {}
+        self.exact = {}
+        self.by_name = {}
+        for i, f in enumerate(model.fns):
+            if not in_scope[i]:
+                continue
+            if f.qual is None:
+                self.free.setdefault(f.name, []).append(i)
+            else:
+                self.exact.setdefault((f.qual, f.name), []).append(i)
+                self.by_name.setdefault(f.name, []).append(i)
+
+    def resolve(self, call, caller):
+        _, name, kind = call
+        if kind[0] == "free":
+            allc = list(self.free.get(name, []))
+            same = [
+                t
+                for t in allc
+                if self.model.fns[t].file == self.model.fns[caller].file
+            ]
+            return same if same else allc
+        if kind[0] == "selfmethod":
+            q = self.model.fns[caller].qual
+            if q is not None and (q, name) in self.exact:
+                return list(self.exact[(q, name)])
+            return list(self.by_name.get(name, []))
+        if kind[0] == "method":
+            return list(self.by_name.get(name, []))
+        t = kind[1]
+        if t == "Self":
+            q = self.model.fns[caller].qual
+            if q is None:
+                return []
+            t = q
+        return list(self.exact.get((t, name), []))
+
+
+def scope_mask(model):
+    return [
+        (not f.is_test)
+        and f.body is not None
+        and model.files[f.file].path.startswith("rust/src/")
+        for f in model.fns
+    ]
+
+
+def display_name(model, i):
+    f = model.fns[i]
+    return f"{f.qual}::{f.name}" if f.qual is not None else f.name
+
+
+def chain_of(model, parent, i):
+    idxs = [i]
+    cur = i
+    while parent[cur] is not None:
+        idxs.append(parent[cur])
+        cur = parent[cur]
+        if len(idxs) > 32:
+            break
+    idxs.reverse()
+    return " -> ".join(display_name(model, k) for k in idxs)
+
+
+def panic_reach(model, out):
+    n = len(model.fns)
+    in_scope = scope_mask(model)
+    infos = [extract(model, i) if in_scope[i] else None for i in range(n)]
+    resolver = Resolver(model, in_scope)
+    visited = [False] * n
+    parent = [None] * n
+    queue = []
+    for i in range(n):
+        if not in_scope[i]:
+            continue
+        f = model.fns[i]
+        if is_serve_request_path(model.files[f.file].path) and (
+            f.name in ENTRY_NAMES or f.name.startswith("handle_")
+        ):
+            visited[i] = True
+            queue.append(i)
+    qi = 0
+    while qi < len(queue):
+        i = queue[qi]
+        qi += 1
+        if infos[i] is None:
+            continue
+        for c in infos[i][0]:
+            for t in resolver.resolve(c, i):
+                if not visited[t]:
+                    visited[t] = True
+                    parent[t] = i
+                    queue.append(t)
+    seen = set()
+    for i in range(n):
+        if not visited[i] or infos[i] is None:
+            continue
+        f = model.fns[i]
+        fr = model.files[f.file]
+        serve = is_serve_request_path(fr.path)
+        index_surface = is_index_surface(fr.path)
+        for off, kind in infos[i][1]:
+            keep = index_surface if kind == "index" else (not serve)
+            if not keep:
+                continue
+            ln = line_at(fr.code, off)
+            if (f.file, ln) in seen:
+                continue
+            seen.add((f.file, ln))
+            what = {
+                "macro": "panic!-family macro",
+                "unwrap": "`.unwrap()`",
+                "expect": "`.expect()`",
+                "index": "unchecked index/slice expression",
+            }[kind]
+            chain = chain_of(model, parent, i)
+            out.append(
+                (
+                    fr.path,
+                    ln,
+                    "PANIC-REACH",
+                    "error",
+                    f"{what} reachable from serve entry via {chain} — return a "
+                    "typed error, shield with catch_unwind, or allow-mark the "
+                    "line with the invariant that rules the panic out",
+                )
+            )
+
+
+# ── locks.rs ─────────────────────────────────────────────────────────
+
+LOCK_METHODS = ("lock", "read", "write")
+
+
+def base_type(ty):
+    s = ty.strip()
+    while True:
+        s = s.lstrip("&").lstrip()
+        if s.startswith("'"):
+            w = next((k for k, c in enumerate(s) if c.isspace()), None)
+            if w is None:
+                return ""
+            s = s[w:].lstrip()
+            continue
+        if s.startswith("mut "):
+            s = s[4:].lstrip()
+        if s.startswith("dyn "):
+            s = s[4:].lstrip()
+        head_end = s.find("<")
+        head_end = head_end if head_end >= 0 else len(s)
+        last = s[:head_end].rsplit("::", 1)[-1].strip()
+        if last in ("Arc", "Rc", "Box") and head_end < len(s):
+            close = s.rfind(">")
+            if close >= 0:
+                s = s[head_end + 1:close].strip()
+                continue
+        return last
+
+
+def chain_back(code, dot):
+    parts = []
+    while True:
+        s = dot
+        while s > 0 and is_id(code[s - 1]):
+            s -= 1
+        if s == dot:
+            return None
+        parts.append(code[s:dot])
+        if s >= 1 and code[s - 1] == ".":
+            dot = s - 1
+            continue
+        if s >= 2 and code[s - 1] == ":" and code[s - 2] == ":":
+            return None
+        parts.reverse()
+        return (parts, s)
+
+
+def is_all_caps(s):
+    return (
+        bool(s)
+        and all(c.isupper() or c.isdigit() or c == "_" for c in s)
+        and any(c.isupper() for c in s)
+    )
+
+
+def find_struct(model, fn_idx, name):
+    file = model.fns[fn_idx].file
+    for st in model.structs:
+        if st[0] == name and st[2] == file:
+            return st
+    for st in model.structs:
+        if st[0] == name:
+            return st
+    return None
+
+
+def resolve_chain(model, fn_idx, chain, method, memo, visiting):
+    f = model.fns[fn_idx]
+    root = chain[0]
+    if root == "self":
+        if f.qual is None:
+            return None
+        cur = f.qual
+    else:
+        param = next(((nm, ty) for nm, ty in f.params() if nm == root), None)
+        if param is not None:
+            if Model.is_lock_type(param[1]):
+                return None
+            cur = base_type(param[1])
+        elif is_all_caps(root):
+            file = f.file
+            st = next(
+                (s for s in model.statics if s[0] == root and s[2] == file), None
+            ) or next((s for s in model.statics if s[0] == root), None)
+            if st is None:
+                return None
+            if Model.is_lock_type(st[1]):
+                return f"static {st[0]}" if len(chain) == 1 else None
+            cur = base_type(st[1])
+        else:
+            return None
+    if len(chain) == 1:
+        if method is None:
+            return None
+        return wrapper_internal(model, cur, method, memo, visiting)
+    for k in range(1, len(chain)):
+        seg = chain[k]
+        sd = find_struct(model, fn_idx, cur)
+        if sd is None:
+            return None
+        fd = next((fd for fd in sd[4] if fd[0] == seg), None)
+        if fd is None:
+            return None
+        if k == len(chain) - 1:
+            if Model.is_lock_type(fd[1]):
+                return f"{sd[0]}.{fd[0]}"
+            if method is None:
+                return None
+            return wrapper_internal(model, base_type(fd[1]), method, memo, visiting)
+        cur = base_type(fd[1])
+    return None
+
+
+def wrapper_internal(model, tname, method, memo, visiting):
+    key = (tname, method)
+    if key in memo:
+        return memo[key]
+    if key in visiting:
+        return None
+    visiting.add(key)
+    result = None
+    idx = next(
+        (
+            i
+            for i, g in enumerate(model.fns)
+            if g.qual == tname
+            and g.name == method
+            and g.returns_guard()
+            and not g.is_test
+            and g.body is not None
+        ),
+        None,
+    )
+    if idx is not None:
+        for _, chain, word in scan_method_sites(model, idx):
+            if chain[0] == "self":
+                rid = resolve_chain(model, idx, chain, word, memo, visiting)
+                if rid is not None:
+                    result = rid
+                    break
+    visiting.discard(key)
+    memo[key] = result
+    return result
+
+
+def scan_method_sites(model, idx):
+    f = model.fns[idx]
+    fr = model.files[f.file]
+    code = fr.code
+    n = len(code)
+    rng = f.body if f.body is not None else (0, 0)
+    inner = [
+        model.fns[j].body
+        for j in fr.fns
+        if j != idx
+        and model.fns[j].body is not None
+        and model.fns[j].body[0] >= rng[0]
+        and model.fns[j].body[1] <= rng[1]
+    ]
+    out = []
+    i = rng[0]
+    while i < rng[1]:
+        hit = next((r for r in inner if r[0] <= i < r[1]), None)
+        if hit is not None:
+            i = hit[1]
+            continue
+        c = code[i]
+        if (not (c.isalpha() and c.isascii()) and c != "_") or (
+            i > 0 and is_id(code[i - 1])
+        ):
+            i += 1
+            continue
+        s = i
+        e = i
+        while e < rng[1] and is_id(code[e]):
+            e += 1
+        i = e
+        word = code[s:e]
+        if word not in LOCK_METHODS:
+            continue
+        if s == 0 or code[s - 1] != ".":
+            continue
+        j = skip_ws(code, e)
+        if j >= n or code[j] != "(":
+            continue
+        j2 = skip_ws(code, j + 1)
+        if j2 >= n or code[j2] != ")":
+            continue
+        cb = chain_back(code, s - 1)
+        if cb is not None:
+            out.append((cb[1], cb[0], word))
+    return out
+
+
+def scan_guard_calls(model, idx, guard_free):
+    f = model.fns[idx]
+    fr = model.files[f.file]
+    code = fr.code
+    n = len(code)
+    rng = f.body if f.body is not None else (0, 0)
+    inner = [
+        model.fns[j].body
+        for j in fr.fns
+        if j != idx
+        and model.fns[j].body is not None
+        and model.fns[j].body[0] >= rng[0]
+        and model.fns[j].body[1] <= rng[1]
+    ]
+    out = []
+    i = rng[0]
+    while i < rng[1]:
+        hit = next((r for r in inner if r[0] <= i < r[1]), None)
+        if hit is not None:
+            i = hit[1]
+            continue
+        c = code[i]
+        if (not (c.isalpha() and c.isascii()) and c != "_") or (
+            i > 0 and is_id(code[i - 1])
+        ):
+            i += 1
+            continue
+        s = i
+        e = i
+        while e < rng[1] and is_id(code[e]):
+            e += 1
+        i = e
+        word = code[s:e]
+        if word not in guard_free or (s > 0 and code[s - 1] == "."):
+            continue
+        j = skip_ws(code, e)
+        if j >= n or code[j] != "(":
+            continue
+        close = match_paren(code, j)
+        if close is None:
+            continue
+        args = code[j + 1:close - 1]
+        parts = split_top_level(args, ",")
+        first = parts[0][1].strip() if parts else ""
+        expr = first.lstrip("&").lstrip()
+        if expr.startswith("mut "):
+            expr = expr[4:]
+        if expr and all(is_id(ch) or ch == "." for ch in expr):
+            chain = expr.split(".")
+            if all(p for p in chain):
+                out.append((s, chain))
+    return out
+
+
+def enclosing_block_end(code, off, body):
+    stack = []
+    for i in range(body[0], body[1]):
+        c = code[i]
+        if c == "{":
+            stack.append(i)
+        elif c == "}":
+            if stack:
+                o = stack.pop()
+                if o < off < i:
+                    return i
+    return body[1]
+
+
+def hold_range(code, expr_start, body):
+    k = expr_start
+    while k > body[0] and code[k - 1] not in ";{}":
+        k -= 1
+    bound = bool(word_occurrences(code[k:expr_start], "let"))
+    if bound:
+        return (expr_start, enclosing_block_end(code, expr_start, body))
+    depth = 0
+    i = expr_start
+    while i < body[1]:
+        c = code[i]
+        if c in "([":
+            depth += 1
+        elif c in ")]":
+            if depth == 0:
+                return (expr_start, i)
+            depth -= 1
+        elif c == "{" and depth == 0:
+            end = match_delim(code, i, "{", "}")
+            return (expr_start, end if end is not None else body[1])
+        elif c == "}" and depth == 0:
+            return (expr_start, i)
+        elif c == ";" and depth == 0:
+            return (expr_start, i)
+        i += 1
+    return (expr_start, body[1])
+
+
+def extract_acqs(model, idx, guard_free, memo):
+    f = model.fns[idx]
+    fr = model.files[f.file]
+    body = f.body if f.body is not None else (0, 0)
+    visiting = set()
+    out = []
+    for root, chain, word in scan_method_sites(model, idx):
+        rid = resolve_chain(model, idx, chain, word, memo, visiting)
+        if rid is not None:
+            out.append(
+                (root, rid, hold_range(fr.code, root, body), line_at(fr.code, root))
+            )
+    for off, chain in scan_guard_calls(model, idx, guard_free):
+        rid = resolve_chain(model, idx, chain, None, memo, visiting)
+        if rid is not None:
+            out.append(
+                (off, rid, hold_range(fr.code, off, body), line_at(fr.code, off))
+            )
+    out.sort(key=lambda a: a[0])
+    return out
+
+
+def eventual(i, model, acqs, calls, resolver, memo, visiting):
+    if memo[i] is not None:
+        return dict(memo[i])
+    if visiting[i]:
+        return {}
+    visiting[i] = True
+    mp = {}
+    path = model.files[model.fns[i].file].path
+    for a in acqs[i]:
+        if a[1] not in mp:
+            mp[a[1]] = (path, a[3])
+    for c in calls[i]:
+        if c[1] in LOCK_METHODS:
+            continue
+        for t in resolver.resolve(c, i):
+            for rid, site in eventual(
+                t, model, acqs, calls, resolver, memo, visiting
+            ).items():
+                if rid not in mp:
+                    mp[rid] = site
+    visiting[i] = False
+    memo[i] = dict(mp)
+    return mp
+
+
+def lock_order(model, out):
+    n = len(model.fns)
+    in_scope = scope_mask(model)
+    resolver = Resolver(model, in_scope)
+    guard_free = {
+        f.name
+        for i, f in enumerate(model.fns)
+        if in_scope[i] and f.qual is None and f.returns_guard()
+    }
+    wrap_memo = {}
+    acqs = [
+        extract_acqs(model, i, guard_free, wrap_memo) if in_scope[i] else []
+        for i in range(n)
+    ]
+    calls = [extract(model, i)[0] if in_scope[i] else [] for i in range(n)]
+    ev_memo = [None] * n
+    visiting = [False] * n
+    edges = {}
+    for i in range(n):
+        if not acqs[i]:
+            continue
+        path = model.files[model.fns[i].file].path
+        for a in acqs[i]:
+            for b2 in acqs[i]:
+                if b2[0] > a[0] and b2[0] < a[2][1]:
+                    edges.setdefault((a[1], b2[1]), (path, a[3], path, b2[3]))
+            for c in calls[i]:
+                if c[0] <= a[0] or c[0] >= a[2][1] or c[1] in LOCK_METHODS:
+                    continue
+                for t in resolver.resolve(c, i):
+                    ev = eventual(
+                        t, model, acqs, calls, resolver, ev_memo, visiting
+                    )
+                    for id2, (p2, l2) in sorted(ev.items()):
+                        edges.setdefault((a[1], id2), (path, a[3], p2, l2))
+    nodes = sorted({x for k in edges for x in k})
+    node_ix = {s: i for i, s in enumerate(nodes)}
+    adj = {}
+    for a, b in edges:
+        adj.setdefault(node_ix[a], set()).add(node_ix[b])
+
+    index = [None] * len(nodes)
+    low = [0] * len(nodes)
+    on_stack = [False] * len(nodes)
+    stack = []
+    sccs = []
+    counter = [0]
+
+    def strongconnect(v):
+        index[v] = counter[0]
+        low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack[v] = True
+        for w in sorted(adj.get(v, ())):
+            if index[w] is None:
+                strongconnect(w)
+                low[v] = min(low[v], low[w])
+            elif on_stack[w]:
+                low[v] = min(low[v], index[w])
+        if low[v] == index[v]:
+            scc = []
+            while stack:
+                w = stack.pop()
+                on_stack[w] = False
+                scc.append(w)
+                if w == v:
+                    break
+            scc.sort()
+            sccs.append(scc)
+
+    for v in range(len(nodes)):
+        if index[v] is None:
+            strongconnect(v)
+    sccs.sort()
+    for scc in sccs:
+        cyclic = len(scc) > 1 or (nodes[scc[0]], nodes[scc[0]]) in edges
+        if not cyclic:
+            continue
+        member = {nodes[v] for v in scc}
+        intra = [
+            (k, v)
+            for k, v in sorted(edges.items())
+            if k[0] in member and k[1] in member
+        ]
+        if not intra:
+            continue
+        _, (_, _, ap, al) = intra[0]
+        parts = [
+            f"{a} ({p1}:{l1}) then {b} ({p2}:{l2})"
+            for (a, b), (p1, l1, p2, l2) in intra
+        ]
+        out.append(
+            (
+                ap,
+                al,
+                "LOCK-ORDER",
+                "error",
+                "lock-order cycle: "
+                + "; ".join(parts)
+                + " — acquire these locks in one global order (or collapse "
+                "them into one) so no interleaving can deadlock",
+            )
+        )
+
+
+# ── contract.rs ──────────────────────────────────────────────────────
+
+LEDGER_PATH = "tools/audit/unsafe.ledger"
+
+
+def looks_like_route(text):
+    t = text.rstrip("/")
+    return (
+        len(t) >= 2
+        and t[0] == "/"
+        and "a" <= t[1] <= "z"
+        and all(("a" <= c <= "z") or c.isdigit() or c in "_/" for c in t[1:])
+    )
+
+
+def metric_name(text):
+    end = next(
+        (
+            k
+            for k, c in enumerate(text)
+            if not (("a" <= c <= "z") or c.isdigit() or c == "_")
+        ),
+        len(text),
+    )
+    return text[:end]
+
+
+def err_map(model, api_md, out):
+    kinds = next(
+        (
+            e
+            for e in model.enums
+            if e[0] == "ErrorKind" and model.files[e[1]].path == "rust/src/error.rs"
+        ),
+        None,
+    )
+    http = next((f for f in model.files if f.path == "rust/src/serve/http.rs"), None)
+    if kinds is not None and http is not None:
+        epath = model.files[kinds[1]].path
+        for variant, ln in kinds[2]:
+            needle = f"ErrorKind::{variant}"
+            mapped = any(
+                not http.is_test_line(line_at(http.code, off))
+                for off in word_occurrences(http.code, needle)
+            )
+            if not mapped:
+                out.append(
+                    (
+                        epath,
+                        ln,
+                        "ERR-MAP",
+                        "error",
+                        f"ErrorKind::{variant} has no HTTP status mapping in "
+                        "rust/src/serve/http.rs — every error kind a fit can "
+                        "return must map to a status (see error_status)",
+                    )
+                )
+    if api_md is None:
+        return
+    seen_routes = set()
+    for f in model.files:
+        if f.path not in ("rust/src/serve/http.rs", "rust/src/serve/protocol.rs"):
+            continue
+        for ln, text in f.strs:
+            if f.is_test_line(ln) or not looks_like_route(text):
+                continue
+            route = text.rstrip("/")
+            if route in seen_routes:
+                continue
+            seen_routes.add(route)
+            if route not in api_md:
+                out.append(
+                    (
+                        f.path,
+                        ln,
+                        "ERR-MAP",
+                        "error",
+                        f'route "{route}" is served but not documented in '
+                        "docs/API.md — document it (or rename the literal if "
+                        "it is not a route)",
+                    )
+                )
+    seen_metrics = set()
+    for f in model.files:
+        if not f.path.startswith("rust/src/"):
+            continue
+        for ln, text in f.strs:
+            if f.is_test_line(ln) or not text.startswith("calars_"):
+                continue
+            name = metric_name(text)
+            if len(name) <= len("calars_") or name in seen_metrics:
+                continue
+            seen_metrics.add(name)
+            if name not in api_md:
+                out.append(
+                    (
+                        f.path,
+                        ln,
+                        "ERR-MAP",
+                        "error",
+                        f'metric "{name}" is registered but not documented in '
+                        "docs/API.md — the /metrics surface is part of the API "
+                        "contract",
+                    )
+                )
+
+
+def in_unsafe_scope(path):
+    return path.startswith("rust/src/par/") or path.startswith("rust/src/kern/simd/")
+
+
+def unsafe_sites(model):
+    out = {}
+    for f in model.files:
+        if not in_unsafe_scope(f.path):
+            continue
+        lines = [
+            line_at(f.code, off)
+            for off in word_occurrences(f.code, "unsafe")
+            if not f.is_test_line(line_at(f.code, off))
+        ]
+        if lines:
+            out[f.path] = lines
+    return dict(sorted(out.items()))
+
+
+def ledger_text(model):
+    out = (
+        "# unsafe budget — one `path count` per file in the sanctioned unsafe\n"
+        "# regions (rust/src/par/, rust/src/kern/simd/).  Regenerate with\n"
+        "# `calars audit --update-unsafe-ledger` after reviewing every new "
+        "block.\n"
+    )
+    for path, sites in sorted(unsafe_sites(model).items()):
+        out += f"{path} {len(sites)}\n"
+    return out
+
+
+def unsafe_budget(model, ledger, out):
+    sites = unsafe_sites(model)
+    if ledger is None:
+        for path, lines in sorted(sites.items()):
+            out.append(
+                (
+                    path,
+                    lines[0],
+                    "UNSAFE-BUDGET",
+                    "error",
+                    f"{len(lines)} unsafe block(s) but no ledger at "
+                    f"{LEDGER_PATH} — review them and check the ledger in "
+                    "with --update-unsafe-ledger",
+                )
+            )
+        return
+    entries = {}
+    for idx, raw in enumerate(ledger.splitlines()):
+        line = idx + 1
+        l = raw.strip()
+        if not l or l.startswith("#"):
+            continue
+        parts = l.split()
+        if len(parts) != 2:
+            out.append(
+                (
+                    LEDGER_PATH,
+                    line,
+                    "UNSAFE-BUDGET",
+                    "error",
+                    f"malformed ledger line `{l}` — expected `path count`",
+                )
+            )
+            continue
+        path, count = parts
+        if not count.isdigit():
+            out.append(
+                (
+                    LEDGER_PATH,
+                    line,
+                    "UNSAFE-BUDGET",
+                    "error",
+                    f"malformed ledger count in `{l}` — expected `path count`",
+                )
+            )
+            continue
+        entries[path] = (int(count), line)
+    for path, lines in sorted(sites.items()):
+        if path not in entries:
+            out.append(
+                (
+                    path,
+                    lines[0],
+                    "UNSAFE-BUDGET",
+                    "error",
+                    f"{len(lines)} unsafe block(s) but no entry in "
+                    f"{LEDGER_PATH} — review them and regenerate with "
+                    "--update-unsafe-ledger",
+                )
+            )
+        else:
+            count, lline = entries[path]
+            if len(lines) > count:
+                out.append(
+                    (
+                        path,
+                        lines[count],
+                        "UNSAFE-BUDGET",
+                        "error",
+                        f"unsafe count grew from {count} (ledgered) to "
+                        f"{len(lines)} — justify the new block(s) and "
+                        "regenerate with --update-unsafe-ledger",
+                    )
+                )
+            elif len(lines) < count:
+                out.append(
+                    (
+                        LEDGER_PATH,
+                        lline,
+                        "UNSAFE-BUDGET",
+                        "warning",
+                        f"{path} ledgered at {count} but now has "
+                        f"{len(lines)} unsafe block(s) — regenerate to "
+                        "tighten the budget",
+                    )
+                )
+    for path in sorted(entries):
+        count, lline = entries[path]
+        if path not in sites:
+            out.append(
+                (
+                    LEDGER_PATH,
+                    lline,
+                    "UNSAFE-BUDGET",
+                    "warning",
+                    f"stale ledger entry for {path} — the file has no unsafe "
+                    "blocks (or no longer exists); regenerate to drop it",
+                )
+            )
+
+
+# ── markers (rules.rs) ───────────────────────────────────────────────
+
+NEW_RULES = {"PANIC-REACH", "LOCK-ORDER", "ERR-MAP", "UNSAFE-BUDGET"}
+
+
+def collect_markers(path, lines):
+    out = []
+    for idx, (_, comment) in enumerate(lines):
+        frm = 0
+        while True:
+            rel = comment.find("audit: allow(", frm)
+            if rel < 0:
+                break
+            i = rel + len("audit: allow(")
+            rest = comment[i:]
+            close = rest.find(")")
+            if close < 0:
+                break
+            inner = rest[:close]
+            if "," in inner:
+                r, scope = inner.split(",", 1)
+                rule, file_scope = r.strip(), scope.strip() == "file"
+            else:
+                rule, file_scope = inner.strip(), False
+            after = rest[close + 1:].lstrip()
+            has_reason = after.startswith("--") and bool(after[2:].strip())
+            out.append(
+                {
+                    "path": path,
+                    "line": idx + 1,
+                    "rule": rule,
+                    "file_scope": file_scope,
+                    "has_reason": has_reason,
+                    "used": False,
+                }
+            )
+            frm = i + close
+    return out
+
+
+def apply_markers(findings, markers):
+    kept = []
+    suppressed = 0
+    for f in findings:
+        hit = False
+        for m in markers:
+            if m["path"] != f[0] or m["rule"] != f[2] or not m["has_reason"]:
+                continue
+            if m["file_scope"] or m["line"] == f[1] or m["line"] + 1 == f[1]:
+                m["used"] = True
+                hit = True
+        if hit:
+            suppressed += 1
+        else:
+            kept.append(f)
+    return kept, suppressed
+
+
+# ── run_audit mirror (new rules only) ────────────────────────────────
+
+
+def collect_rs(d):
+    out = []
+    try:
+        entries = sorted(os.listdir(d))
+    except OSError:
+        return out
+    for name in entries:
+        p = os.path.join(d, name)
+        if os.path.isdir(p):
+            out.extend(collect_rs(p))
+        elif name.endswith(".rs"):
+            out.append(p)
+    return out
+
+
+def run(root, update_ledger=False):
+    model = Model()
+    markers = []
+    for wd in ("rust/src", "rust/tests", "benches"):
+        absd = os.path.join(root, wd)
+        if not os.path.isdir(absd):
+            continue
+        for fp in collect_rs(absd):
+            with open(fp, "rb") as fh:
+                src = fh.read()
+            rel = os.path.relpath(fp, root).replace(os.sep, "/")
+            scanned = scan(src)
+            markers.extend(collect_markers(rel, scanned[0]))
+            model.add_file(rel, scanned)
+    findings = []
+    panic_reach(model, findings)
+    lock_order(model, findings)
+    api_path = os.path.join(root, "docs/API.md")
+    api_md = None
+    if os.path.isfile(api_path):
+        with open(api_path, encoding="utf-8", errors="replace") as fh:
+            api_md = fh.read()
+    err_map(model, api_md, findings)
+    if update_ledger:
+        ledger = ledger_text(model)
+        with open(os.path.join(root, LEDGER_PATH), "w", encoding="utf-8") as fh:
+            fh.write(ledger)
+    else:
+        lp = os.path.join(root, LEDGER_PATH)
+        ledger = None
+        if os.path.isfile(lp):
+            with open(lp, encoding="utf-8", errors="replace") as fh:
+                ledger = fh.read()
+    unsafe_budget(model, ledger, findings)
+    new_markers = [m for m in markers if m["rule"] in NEW_RULES]
+    kept, suppressed = apply_markers(findings, new_markers)
+    kept.sort(key=lambda f: (f[0], f[1], f[2]))
+    return kept, suppressed, new_markers
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    update = "--update-ledger" in sys.argv
+    kept, suppressed, new_markers = run(root, update)
+    for path, line, rule, sev, msg in kept:
+        print(f"{path}:{line}: {sev}[{rule}]: {msg}")
+    unused = [m for m in new_markers if not m["used"]]
+    for m in unused:
+        print(
+            f"{m['path']}:{m['line']}: warning[ALLOW-UNUSED]: marker for "
+            f"{m['rule']} suppresses nothing"
+        )
+    print(
+        f"-- {len(kept)} finding(s), {suppressed} suppressed, "
+        f"{len(new_markers)} new-rule marker(s), {len(unused)} unused"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,497 @@
+//! PANIC-REACH: the interprocedural panic-reachability walk.
+//!
+//! Builds an approximate call graph over the [`CrateModel`] symbol
+//! table and BFS-walks it from every serve-layer entry point (HTTP
+//! `route`/`handle_*`/connection loops, the queue `worker_loop`).  Any
+//! function reachable from an entry that contains a panic-capable
+//! construct — `panic!`-family macro, `.unwrap()`, `.expect()`, or (on
+//! the request-parsing surface) an unchecked index/slice expression —
+//! is flagged, unless the construct sits inside a `catch_unwind(…)`
+//! argument or behind a reasoned allow marker.
+//!
+//! The resolution is deliberately an over-approximation (see DESIGN.md
+//! §"Static analysis & invariants" for the full can/cannot-see list):
+//! a method call `x.get(…)` with an untyped receiver resolves to every
+//! user-defined method named `get`; `self.m(…)` narrows to the current
+//! `impl` block's type when that type defines `m`; `Type::m(…)` and
+//! `Self::m(…)` resolve exactly; bare `helper(…)` prefers a free fn in
+//! the same file.  Unresolved names (std, closures, fn pointers) drop
+//! out of the walk rather than poisoning it.  Double-reporting against
+//! the intra-file rules is avoided by kind-scoping: inside the serve
+//! request path only Index sites fire here (PANIC-UNWRAP already owns
+//! `.unwrap()`/`panic!` there), and Index sites are only collected on
+//! the untrusted-input parsing surface (`serve/http.rs`,
+//! `serve/protocol.rs`) where a bad byte offset is a remote panic.
+
+use crate::parse::{is_ident_byte, line_at, skip_angles, skip_ws_b, CrateModel};
+use crate::rules::{match_paren, word_occurrences, Finding, Severity};
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::ops::Range;
+
+/// Keywords that look like `word (` in code but are never calls.
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "in", "as", "let", "mut",
+    "ref", "move", "fn", "else", "break", "continue", "unsafe", "impl", "dyn",
+    "where", "use", "pub", "crate", "super", "self", "await", "async",
+    "static", "const", "type", "struct", "enum", "trait", "mod",
+];
+
+/// Serve entry points the walk starts from (exact names; `handle_`
+/// prefixed fns are added on top).
+const ENTRY_NAMES: &[&str] = &["route", "handle_connection", "accept_loop", "worker_loop"];
+
+pub(crate) enum CallKind {
+    /// `self.m(…)` — narrows to the enclosing impl type when possible.
+    SelfMethod,
+    /// `expr.m(…)` with an untyped receiver.
+    Method,
+    /// `Type::m(…)` / `Self::m(…)`.
+    Qualified(String),
+    /// `helper(…)` or `module::helper(…)`.
+    Free,
+}
+
+pub(crate) struct Call {
+    /// Byte offset of the callee name in the file's code text (the
+    /// LOCK-ORDER pass tests it against guard hold ranges).
+    pub(crate) off: usize,
+    pub(crate) name: String,
+    pub(crate) kind: CallKind,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+pub(crate) enum PanicKind {
+    Macro,
+    Unwrap,
+    Expect,
+    Index,
+}
+
+pub(crate) struct Site {
+    pub(crate) off: usize,
+    pub(crate) kind: PanicKind,
+}
+
+pub(crate) struct FnInfo {
+    pub(crate) calls: Vec<Call>,
+    pub(crate) sites: Vec<Site>,
+}
+
+fn is_serve_request_path(path: &str) -> bool {
+    path.starts_with("rust/src/serve/") && !path.ends_with("loadgen.rs")
+}
+
+/// The untrusted-input parsing surface where Index sites are collected.
+fn is_index_surface(path: &str) -> bool {
+    is_serve_request_path(path)
+        && (path.ends_with("/http.rs") || path.ends_with("/protocol.rs"))
+}
+
+/// Extract call sites and panic sites from one fn body, skipping
+/// nested fn bodies (their sites belong to the nested fn) and
+/// `catch_unwind(…)` argument spans (shielded).
+pub(crate) fn extract(model: &CrateModel, idx: usize) -> FnInfo {
+    let f = &model.fns[idx];
+    let file = &model.files[f.file];
+    let code = &file.code;
+    let b = code.as_bytes();
+    let range = f.body.clone().unwrap_or(0..0);
+
+    let inner: Vec<Range<usize>> = file
+        .fns
+        .iter()
+        .filter(|&&j| j != idx)
+        .filter_map(|&j| model.fns[j].body.clone())
+        .filter(|r| r.start >= range.start && r.end <= range.end)
+        .collect();
+
+    let mut shields: Vec<Range<usize>> = Vec::new();
+    for off in word_occurrences(code, "catch_unwind") {
+        if off < range.start || off >= range.end {
+            continue;
+        }
+        let j = skip_ws_b(b, off + "catch_unwind".len());
+        if b.get(j) == Some(&b'(') {
+            shields.push(j..match_paren(code, j).unwrap_or(range.end));
+        }
+    }
+    let shielded = |o: usize| shields.iter().any(|s| s.contains(&o));
+
+    let mut calls = Vec::new();
+    let mut sites = Vec::new();
+    let mut i = range.start;
+    while i < range.end {
+        if let Some(r) = inner.iter().find(|r| r.contains(&i)) {
+            i = r.end;
+            continue;
+        }
+        let c = b[i];
+        if c == b'[' {
+            let p = if i > 0 { b[i - 1] } else { b' ' };
+            if (is_ident_byte(p) || p == b')' || p == b']') && !shielded(i) {
+                sites.push(Site { off: i, kind: PanicKind::Index });
+            }
+            i += 1;
+            continue;
+        }
+        if (!c.is_ascii_alphabetic() && c != b'_') || (i > 0 && is_ident_byte(b[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let s = i;
+        let mut e = i;
+        while e < range.end && is_ident_byte(b[e]) {
+            e += 1;
+        }
+        i = e;
+        let word = &code[s..e];
+        let j0 = skip_ws_b(b, e);
+
+        if matches!(word, "panic" | "unreachable" | "todo" | "unimplemented")
+            && b.get(j0) == Some(&b'!')
+        {
+            if !shielded(s) {
+                sites.push(Site { off: s, kind: PanicKind::Macro });
+            }
+            continue;
+        }
+        if b.get(j0) == Some(&b'!') {
+            continue; // some other macro invocation, not a call
+        }
+
+        let prev_dot = s > 0 && b[s - 1] == b'.';
+        if prev_dot && (word == "unwrap" || word == "expect") && b.get(j0) == Some(&b'(') {
+            // `.lock().unwrap()` chains are PANIC-LOCK's domain.
+            let on_lock = code[..s - 1].trim_end().ends_with("lock()");
+            if !on_lock && !shielded(s) {
+                let kind =
+                    if word == "unwrap" { PanicKind::Unwrap } else { PanicKind::Expect };
+                sites.push(Site { off: s, kind });
+            }
+            continue;
+        }
+
+        if KEYWORDS.contains(&word) {
+            continue;
+        }
+        let mut j = j0;
+        if code[j..].starts_with("::<") {
+            j = skip_ws_b(b, skip_angles(b, j + 2));
+        }
+        if b.get(j) != Some(&b'(') || shielded(s) {
+            continue;
+        }
+
+        let kind = if prev_dot {
+            let mut rs = s - 1;
+            while rs > 0 && is_ident_byte(b[rs - 1]) {
+                rs -= 1;
+            }
+            let pure_self =
+                &code[rs..s - 1] == "self" && (rs == 0 || b[rs - 1] != b'.');
+            if pure_self { CallKind::SelfMethod } else { CallKind::Method }
+        } else if s >= 2 && b[s - 1] == b':' && b[s - 2] == b':' {
+            let qe = s - 2;
+            let mut qs = qe;
+            while qs > 0 && is_ident_byte(b[qs - 1]) {
+                qs -= 1;
+            }
+            let q = &code[qs..qe];
+            if q.is_empty() {
+                continue; // `>::name(` turbofish tail or `::name(` — punt
+            }
+            if q.as_bytes()[0].is_ascii_uppercase() || q == "Self" {
+                CallKind::Qualified(q.to_string())
+            } else {
+                CallKind::Free // `module::helper(…)` — resolve by name
+            }
+        } else {
+            // Skip the name of a nested `fn name(…)` definition and
+            // uppercase constructors (`Some(…)`, `Wrapper(…)`).
+            let mut k = s;
+            while k > range.start && b[k - 1].is_ascii_whitespace() {
+                k -= 1;
+            }
+            let is_def = k >= 2
+                && &code[k - 2..k] == "fn"
+                && (k < 3 || !is_ident_byte(b[k - 3]));
+            if is_def || word.as_bytes()[0].is_ascii_uppercase() {
+                continue;
+            }
+            CallKind::Free
+        };
+        calls.push(Call { off: s, name: word.to_string(), kind });
+    }
+    FnInfo { calls, sites }
+}
+
+/// Name-resolution index over the symbol table, shared by PANIC-REACH
+/// and LOCK-ORDER.
+pub(crate) struct Resolver<'a> {
+    model: &'a CrateModel,
+    free: HashMap<&'a str, Vec<usize>>,
+    exact: HashMap<(&'a str, &'a str), Vec<usize>>,
+    by_name: HashMap<&'a str, Vec<usize>>,
+}
+
+impl<'a> Resolver<'a> {
+    /// Index every non-test fn-with-body under `rust/src/`.
+    pub(crate) fn build(model: &'a CrateModel, in_scope: &[bool]) -> Self {
+        let mut r = Resolver {
+            model,
+            free: HashMap::new(),
+            exact: HashMap::new(),
+            by_name: HashMap::new(),
+        };
+        for (i, f) in model.fns.iter().enumerate() {
+            if !in_scope[i] {
+                continue;
+            }
+            match &f.qual {
+                None => r.free.entry(f.name.as_str()).or_default().push(i),
+                Some(q) => {
+                    r.exact.entry((q.as_str(), f.name.as_str())).or_default().push(i);
+                    r.by_name.entry(f.name.as_str()).or_default().push(i);
+                }
+            }
+        }
+        r
+    }
+
+    /// Resolve one call site (in `caller`) to candidate fn indices.
+    pub(crate) fn resolve(&self, c: &Call, caller: usize) -> Vec<usize> {
+        match &c.kind {
+            CallKind::Free => {
+                let all = self.free.get(c.name.as_str()).cloned().unwrap_or_default();
+                let same_file: Vec<usize> = all
+                    .iter()
+                    .copied()
+                    .filter(|&t| self.model.fns[t].file == self.model.fns[caller].file)
+                    .collect();
+                if same_file.is_empty() { all } else { same_file }
+            }
+            CallKind::SelfMethod => {
+                if let Some(q) = &self.model.fns[caller].qual {
+                    if let Some(v) = self.exact.get(&(q.as_str(), c.name.as_str())) {
+                        return v.clone();
+                    }
+                }
+                self.by_name.get(c.name.as_str()).cloned().unwrap_or_default()
+            }
+            CallKind::Method => {
+                self.by_name.get(c.name.as_str()).cloned().unwrap_or_default()
+            }
+            CallKind::Qualified(t) => {
+                let t = if t == "Self" {
+                    match &self.model.fns[caller].qual {
+                        Some(q) => q.as_str(),
+                        None => return Vec::new(),
+                    }
+                } else {
+                    t.as_str()
+                };
+                self.exact.get(&(t, c.name.as_str())).cloned().unwrap_or_default()
+            }
+        }
+    }
+}
+
+/// Per-fn analysis scope shared by the interprocedural passes: a
+/// non-test fn with a body in a file under `rust/src/`.
+pub(crate) fn scope_mask(model: &CrateModel) -> Vec<bool> {
+    model
+        .fns
+        .iter()
+        .map(|f| {
+            !f.is_test
+                && f.body.is_some()
+                && model.files[f.file].path.starts_with("rust/src/")
+        })
+        .collect()
+}
+
+fn display_name(model: &CrateModel, i: usize) -> String {
+    let f = &model.fns[i];
+    match &f.qual {
+        Some(q) => format!("{q}::{}", f.name),
+        None => f.name.clone(),
+    }
+}
+
+/// Entry → … → `i` call chain for the diagnostic, via BFS parents.
+fn chain_of(model: &CrateModel, parent: &[Option<usize>], i: usize) -> String {
+    let mut idxs = vec![i];
+    let mut cur = i;
+    while let Some(p) = parent[cur] {
+        idxs.push(p);
+        cur = p;
+        if idxs.len() > 32 {
+            break; // BFS parents are acyclic; belt and braces
+        }
+    }
+    idxs.reverse();
+    let names: Vec<String> = idxs.iter().map(|&k| display_name(model, k)).collect();
+    names.join(" -> ")
+}
+
+/// The PANIC-REACH pass: walk the call graph from every serve entry
+/// and flag reachable panic-capable sites.
+pub fn panic_reach(model: &CrateModel, out: &mut Vec<Finding>) {
+    let n = model.fns.len();
+    let in_scope = scope_mask(model);
+    let infos: Vec<Option<FnInfo>> =
+        (0..n).map(|i| in_scope[i].then(|| extract(model, i))).collect();
+    let resolver = Resolver::build(model, &in_scope);
+
+    let mut visited = vec![false; n];
+    let mut parent: Vec<Option<usize>> = vec![None; n];
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for i in 0..n {
+        if !in_scope[i] {
+            continue;
+        }
+        let f = &model.fns[i];
+        if is_serve_request_path(&model.files[f.file].path)
+            && (ENTRY_NAMES.contains(&f.name.as_str()) || f.name.starts_with("handle_"))
+        {
+            visited[i] = true;
+            queue.push_back(i);
+        }
+    }
+
+    while let Some(i) = queue.pop_front() {
+        let Some(info) = &infos[i] else { continue };
+        for c in &info.calls {
+            for t in resolver.resolve(c, i) {
+                if !visited[t] {
+                    visited[t] = true;
+                    parent[t] = Some(i);
+                    queue.push_back(t);
+                }
+            }
+        }
+    }
+
+    // One finding per (file, line): two unwraps on a line need one fix.
+    let mut seen: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for i in 0..n {
+        if !visited[i] {
+            continue;
+        }
+        let Some(info) = &infos[i] else { continue };
+        let f = &model.fns[i];
+        let file = &model.files[f.file];
+        let serve = is_serve_request_path(&file.path);
+        let index_surface = is_index_surface(&file.path);
+        for s in &info.sites {
+            // Kind-scoping vs the intra-file rules: PANIC-UNWRAP owns
+            // unwrap/expect/panic! inside the serve request path, so
+            // only Index fires there (and only on the parsing surface);
+            // elsewhere Index stays quiet (slice math in fitter cores
+            // is bounds-reasoned per kernel) and the rest fires.
+            let keep = match s.kind {
+                PanicKind::Index => index_surface,
+                _ => !serve,
+            };
+            if !keep {
+                continue;
+            }
+            let line = line_at(&file.code, s.off);
+            if !seen.insert((f.file, line)) {
+                continue;
+            }
+            let what = match s.kind {
+                PanicKind::Macro => "panic!-family macro",
+                PanicKind::Unwrap => "`.unwrap()`",
+                PanicKind::Expect => "`.expect()`",
+                PanicKind::Index => "unchecked index/slice expression",
+            };
+            let chain = chain_of(model, &parent, i);
+            out.push(Finding {
+                path: file.path.clone(),
+                line,
+                rule: "PANIC-REACH",
+                severity: Severity::Error,
+                message: format!(
+                    "{what} reachable from serve entry via {chain} — return a typed \
+                     error, shield with catch_unwind, or allow-mark the line with the \
+                     invariant that rules the panic out"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    fn model(files: &[(&str, &str)]) -> CrateModel {
+        let mut m = CrateModel::default();
+        for (p, src) in files {
+            m.add_file(p.to_string(), scan(src));
+        }
+        m
+    }
+
+    fn run(files: &[(&str, &str)]) -> Vec<(String, usize)> {
+        let m = model(files);
+        let mut out = Vec::new();
+        panic_reach(&m, &mut out);
+        out.iter().map(|f| (f.path.clone(), f.line)).collect()
+    }
+
+    #[test]
+    fn unwrap_two_hops_from_entry_fires_and_dead_code_does_not() {
+        let serve = "pub fn route(req: &str) -> String {\n    dispatch(req)\n}\nfn dispatch(req: &str) -> String {\n    crate::fit::run_fit(req.len())\n}\n";
+        let fit = "pub fn run_fit(t: usize) -> String {\n    helper(t)\n}\nfn helper(t: usize) -> String {\n    let v: Vec<String> = Vec::new();\n    v.first().unwrap().clone()\n}\nfn orphan() {\n    let v: Vec<u32> = Vec::new();\n    v.first().unwrap();\n}\n";
+        let got = run(&[
+            ("rust/src/serve/http.rs", serve),
+            ("rust/src/fit/mod.rs", fit),
+        ]);
+        assert_eq!(got, vec![("rust/src/fit/mod.rs".to_string(), 6)], "{got:?}");
+    }
+
+    #[test]
+    fn catch_unwind_shields_both_sites_and_call_edges() {
+        let serve = "pub fn handle_fit(req: &str) -> String {\n    let r = std::panic::catch_unwind(|| crate::fit::scary(req.len()));\n    match r { Ok(s) => s, Err(_) => String::new() }\n}\n";
+        let fit = "pub fn scary(t: usize) -> String {\n    panic!(\"boom {t}\")\n}\n";
+        let got = run(&[
+            ("rust/src/serve/http.rs", serve),
+            ("rust/src/fit/mod.rs", fit),
+        ]);
+        assert!(got.is_empty(), "shielded call edge must not mark scary reachable: {got:?}");
+    }
+
+    #[test]
+    fn serve_unwrap_left_to_panic_unwrap_but_parsing_index_fires() {
+        // The unwrap on line 2 is PANIC-UNWRAP's finding, not ours; the
+        // slice on line 3 is the Index surface.
+        let http = "pub fn route(req: &str) -> String {\n    let n: usize = req.len().checked_sub(1).unwrap();\n    req[..n].to_string()\n}\n";
+        let got = run(&[("rust/src/serve/http.rs", http)]);
+        assert_eq!(got, vec![("rust/src/serve/http.rs".to_string(), 3)], "{got:?}");
+    }
+
+    #[test]
+    fn self_and_qualified_method_resolution() {
+        let http = "pub struct Engine { t: usize }\nimpl Engine {\n    pub fn handle_req(&self) -> usize {\n        self.inner_step()\n    }\n    fn inner_step(&self) -> usize {\n        crate::kern::Gram::build(self.t)\n    }\n}\n";
+        let kern = "pub struct Gram;\nimpl Gram {\n    pub fn build(t: usize) -> usize {\n        t.checked_mul(2).expect(\"overflow\")\n    }\n}\n";
+        let got = run(&[
+            ("rust/src/serve/engine.rs", http),
+            ("rust/src/kern/gram.rs", kern),
+        ]);
+        assert_eq!(got, vec![("rust/src/kern/gram.rs".to_string(), 4)], "{got:?}");
+    }
+
+    #[test]
+    fn test_fns_are_neither_entries_nor_targets() {
+        let http = "pub fn route(req: &str) -> usize {\n    req.len()\n}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        crate::fit::only_from_test();\n    }\n}\n";
+        let fit = "pub fn only_from_test() {\n    panic!(\"never in prod\");\n}\n";
+        let got = run(&[
+            ("rust/src/serve/http.rs", http),
+            ("rust/src/fit/mod.rs", fit),
+        ]);
+        assert!(got.is_empty(), "{got:?}");
+    }
+}

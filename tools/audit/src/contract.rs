@@ -1,0 +1,412 @@
+//! ERR-MAP and UNSAFE-BUDGET: the contract-drift rules.
+//!
+//! ERR-MAP pins three documented surfaces to the code that ships them:
+//! every `ErrorKind` variant must have an HTTP status mapping in
+//! `serve/http.rs` (a variant nothing maps is a 500 waiting to
+//! happen), every route string literal in the serve protocol layer
+//! must appear in `docs/API.md`, and every `calars_*` metric name
+//! registered anywhere in `rust/src` must be documented there too.
+//! The checks are anchored: a tree without `rust/src/error.rs` or
+//! without `docs/API.md` (the rule fixtures) vacuously passes the
+//! corresponding sub-check instead of drowning in noise.
+//!
+//! UNSAFE-BUDGET enforces the checked-in unsafe ledger
+//! (`tools/audit/unsafe.ledger`): one `path count` line per file in
+//! the two sanctioned unsafe regions (`rust/src/par/`,
+//! `rust/src/kern/simd/`).  Growth past the recorded count fails the
+//! audit at the first over-budget `unsafe` keyword until the ledger is
+//! deliberately regenerated with `--update-unsafe-ledger`; a count
+//! that fell (or a stale entry) is a warning prompting a regenerate to
+//! tighten the budget.
+
+use crate::parse::{line_at, CrateModel};
+use crate::rules::{word_occurrences, Finding, Severity};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Repo-relative location of the unsafe ledger.
+pub const LEDGER_PATH: &str = "tools/audit/unsafe.ledger";
+
+fn error(path: &str, line: usize, rule: &'static str, message: String) -> Finding {
+    Finding { path: path.to_string(), line, rule, severity: Severity::Error, message }
+}
+
+fn warning(path: &str, line: usize, rule: &'static str, message: String) -> Finding {
+    Finding { path: path.to_string(), line, rule, severity: Severity::Warning, message }
+}
+
+/// Is `text` shaped like a served route (`/fit`, `/fit/batch`)?
+fn looks_like_route(text: &str) -> bool {
+    let t = text.trim_end_matches('/');
+    let b = t.as_bytes();
+    t.len() >= 2
+        && b[0] == b'/'
+        && b[1].is_ascii_lowercase()
+        && b[1..]
+            .iter()
+            .all(|&c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_' || c == b'/')
+}
+
+/// Leading `[a-z0-9_]+` run of a metric-name literal.
+fn metric_name(text: &str) -> &str {
+    let end = text
+        .bytes()
+        .position(|c| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_'))
+        .unwrap_or(text.len());
+    &text[..end]
+}
+
+/// The ERR-MAP pass.  `api_md` is the contents of `docs/API.md` when
+/// it exists; without it the route/metric sub-checks are vacuous.
+pub fn err_map(model: &CrateModel, api_md: Option<&str>, out: &mut Vec<Finding>) {
+    // (a) ErrorKind variants ↔ HTTP status mapping in serve/http.rs.
+    let kinds = model.enums.iter().find(|e| {
+        e.name == "ErrorKind" && model.files[e.file].path == "rust/src/error.rs"
+    });
+    let http = model.files.iter().find(|f| f.path == "rust/src/serve/http.rs");
+    if let (Some(kinds), Some(http)) = (kinds, http) {
+        let epath = model.files[kinds.file].path.clone();
+        for (variant, line) in &kinds.variants {
+            let needle = format!("ErrorKind::{variant}");
+            let mapped = word_occurrences(&http.code, &needle).iter().any(|&off| {
+                !http.scan.is_test_line(line_at(&http.code, off))
+            });
+            if !mapped {
+                out.push(error(
+                    &epath,
+                    *line,
+                    "ERR-MAP",
+                    format!(
+                        "ErrorKind::{variant} has no HTTP status mapping in \
+                         rust/src/serve/http.rs — every error kind a fit can return \
+                         must map to a status (see error_status)"
+                    ),
+                ));
+            }
+        }
+    }
+
+    let Some(api) = api_md else { return };
+
+    // (b) Route literals on the serve protocol surface ↔ docs/API.md.
+    let mut seen_routes: BTreeSet<String> = BTreeSet::new();
+    for file in &model.files {
+        if file.path != "rust/src/serve/http.rs"
+            && file.path != "rust/src/serve/protocol.rs"
+        {
+            continue;
+        }
+        for lit in &file.scan.strs {
+            if file.scan.is_test_line(lit.line) || !looks_like_route(&lit.text) {
+                continue;
+            }
+            let route = lit.text.trim_end_matches('/').to_string();
+            if !seen_routes.insert(route.clone()) {
+                continue;
+            }
+            if !api.contains(&route) {
+                out.push(error(
+                    &file.path,
+                    lit.line,
+                    "ERR-MAP",
+                    format!(
+                        "route \"{route}\" is served but not documented in \
+                         docs/API.md — document it (or rename the literal if it is \
+                         not a route)"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // (c) Registered metric names ↔ docs/API.md.
+    let mut seen_metrics: BTreeSet<String> = BTreeSet::new();
+    for file in &model.files {
+        if !file.path.starts_with("rust/src/") {
+            continue;
+        }
+        for lit in &file.scan.strs {
+            if file.scan.is_test_line(lit.line) || !lit.text.starts_with("calars_") {
+                continue;
+            }
+            let name = metric_name(&lit.text).to_string();
+            if name.len() <= "calars_".len() || !seen_metrics.insert(name.clone()) {
+                continue;
+            }
+            if !api.contains(&name) {
+                out.push(error(
+                    &file.path,
+                    lit.line,
+                    "ERR-MAP",
+                    format!(
+                        "metric \"{name}\" is registered but not documented in \
+                         docs/API.md — the /metrics surface is part of the API \
+                         contract"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Is this file inside a sanctioned unsafe region?
+fn in_unsafe_scope(path: &str) -> bool {
+    path.starts_with("rust/src/par/") || path.starts_with("rust/src/kern/simd/")
+}
+
+/// 1-based lines of every non-test `unsafe` keyword per in-scope file.
+fn unsafe_sites(model: &CrateModel) -> BTreeMap<String, Vec<usize>> {
+    let mut out: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for file in &model.files {
+        if !in_unsafe_scope(&file.path) {
+            continue;
+        }
+        let lines: Vec<usize> = word_occurrences(&file.code, "unsafe")
+            .into_iter()
+            .map(|off| line_at(&file.code, off))
+            .filter(|&l| !file.scan.is_test_line(l))
+            .collect();
+        if !lines.is_empty() {
+            out.insert(file.path.clone(), lines);
+        }
+    }
+    out
+}
+
+/// Regenerate the ledger contents (deterministic, sorted by path).
+pub fn ledger_text(model: &CrateModel) -> String {
+    let mut out = String::from(
+        "# unsafe budget — one `path count` per file in the sanctioned unsafe\n\
+         # regions (rust/src/par/, rust/src/kern/simd/).  Regenerate with\n\
+         # `calars audit --update-unsafe-ledger` after reviewing every new block.\n",
+    );
+    for (path, sites) in unsafe_sites(model) {
+        out.push_str(&format!("{} {}\n", path, sites.len()));
+    }
+    out
+}
+
+/// The UNSAFE-BUDGET pass.  `ledger` is the contents of
+/// [`LEDGER_PATH`] when the file exists.
+pub fn unsafe_budget(model: &CrateModel, ledger: Option<&str>, out: &mut Vec<Finding>) {
+    let sites = unsafe_sites(model);
+    let Some(ledger) = ledger else {
+        for (path, lines) in &sites {
+            out.push(error(
+                path,
+                lines[0],
+                "UNSAFE-BUDGET",
+                format!(
+                    "{} unsafe block(s) but no ledger at {LEDGER_PATH} — review them \
+                     and check the ledger in with --update-unsafe-ledger",
+                    lines.len()
+                ),
+            ));
+        }
+        return;
+    };
+
+    let mut entries: BTreeMap<&str, (usize, usize)> = BTreeMap::new(); // path → (count, ledger line)
+    for (idx, raw) in ledger.lines().enumerate() {
+        let line = idx + 1;
+        let l = raw.trim();
+        if l.is_empty() || l.starts_with('#') {
+            continue;
+        }
+        let mut it = l.split_whitespace();
+        let (Some(path), Some(count), None) = (it.next(), it.next(), it.next()) else {
+            out.push(error(
+                LEDGER_PATH,
+                line,
+                "UNSAFE-BUDGET",
+                format!("malformed ledger line `{l}` — expected `path count`"),
+            ));
+            continue;
+        };
+        let Ok(count) = count.parse::<usize>() else {
+            out.push(error(
+                LEDGER_PATH,
+                line,
+                "UNSAFE-BUDGET",
+                format!("malformed ledger count in `{l}` — expected `path count`"),
+            ));
+            continue;
+        };
+        entries.insert(path, (count, line));
+    }
+
+    for (path, lines) in &sites {
+        match entries.get(path.as_str()) {
+            None => out.push(error(
+                path,
+                lines[0],
+                "UNSAFE-BUDGET",
+                format!(
+                    "{} unsafe block(s) but no entry in {LEDGER_PATH} — review them \
+                     and regenerate with --update-unsafe-ledger",
+                    lines.len()
+                ),
+            )),
+            Some(&(count, lline)) => {
+                if lines.len() > count {
+                    out.push(error(
+                        path,
+                        lines[count],
+                        "UNSAFE-BUDGET",
+                        format!(
+                            "unsafe count grew from {count} (ledgered) to {} — \
+                             justify the new block(s) and regenerate with \
+                             --update-unsafe-ledger",
+                            lines.len()
+                        ),
+                    ));
+                } else if lines.len() < count {
+                    out.push(warning(
+                        LEDGER_PATH,
+                        lline,
+                        "UNSAFE-BUDGET",
+                        format!(
+                            "{path} ledgered at {count} but now has {} unsafe \
+                             block(s) — regenerate to tighten the budget",
+                            lines.len()
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    for (path, &(_, lline)) in &entries {
+        if !sites.contains_key(*path) {
+            out.push(warning(
+                LEDGER_PATH,
+                lline,
+                "UNSAFE-BUDGET",
+                format!(
+                    "stale ledger entry for {path} — the file has no unsafe blocks \
+                     (or no longer exists); regenerate to drop it"
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    fn model(files: &[(&str, &str)]) -> CrateModel {
+        let mut m = CrateModel::default();
+        for (p, src) in files {
+            m.add_file(p.to_string(), scan(src));
+        }
+        m
+    }
+
+    #[test]
+    fn unmapped_error_kind_variant_fires_at_the_variant_line() {
+        let m = model(&[
+            (
+                "rust/src/error.rs",
+                "pub enum ErrorKind {\n    Other,\n    Orphaned,\n}\n",
+            ),
+            (
+                "rust/src/serve/http.rs",
+                "pub fn error_status(k: &crate::error::ErrorKind) -> u16 {\n    match k {\n        crate::error::ErrorKind::Other => 500,\n        _ => 500,\n    }\n}\n",
+            ),
+        ]);
+        let mut out = Vec::new();
+        err_map(&m, None, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!((out[0].path.as_str(), out[0].line), ("rust/src/error.rs", 3));
+        assert!(out[0].message.contains("Orphaned"), "{}", out[0].message);
+    }
+
+    #[test]
+    fn undocumented_route_and_metric_fire_only_with_api_docs_present() {
+        let files = [
+            (
+                "rust/src/serve/protocol.rs",
+                "pub fn routes() -> [&'static str; 2] {\n    [\"/fit\", \"/undocumented\"]\n}\n",
+            ),
+            (
+                "rust/src/obs/metrics.rs",
+                "pub fn names() -> [&'static str; 2] {\n    [\"calars_fit_total\", \"calars_ghost_total\"]\n}\n",
+            ),
+        ];
+        let m = model(&files);
+        let mut out = Vec::new();
+        err_map(&m, None, &mut out);
+        assert!(out.is_empty(), "no docs/API.md → vacuous: {out:?}");
+        let api = "## Routes\n`/fit` …\n## Metrics\n`calars_fit_total` …\n";
+        err_map(&m, Some(api), &mut out);
+        let got: Vec<(&str, usize)> =
+            out.iter().map(|f| (f.path.as_str(), f.line)).collect();
+        assert_eq!(
+            got,
+            vec![("rust/src/serve/protocol.rs", 2), ("rust/src/obs/metrics.rs", 2)],
+            "{out:?}"
+        );
+        assert!(out[0].message.contains("/undocumented"));
+        assert!(out[1].message.contains("calars_ghost_total"));
+    }
+
+    #[test]
+    fn unsafe_budget_over_under_and_stale() {
+        let m = model(&[
+            (
+                "rust/src/par/raw.rs",
+                "pub fn f() {\n    unsafe { a() }\n    unsafe { b() }\n}\n",
+            ),
+            ("rust/src/kern/simd/ok.rs", "pub fn g() {\n    unsafe { c() }\n}\n"),
+        ]);
+        // Over budget: raw.rs ledgered at 1, has 2 → error at 2nd site.
+        let ledger = "# comment\nrust/src/par/raw.rs 1\nrust/src/kern/simd/ok.rs 1\nrust/src/par/gone.rs 3\n";
+        let mut out = Vec::new();
+        unsafe_budget(&m, Some(ledger), &mut out);
+        let got: Vec<(&str, usize, bool)> = out
+            .iter()
+            .map(|f| (f.path.as_str(), f.line, f.severity == Severity::Error))
+            .collect();
+        assert_eq!(
+            got,
+            vec![
+                ("rust/src/par/raw.rs", 3, true),
+                ("tools/audit/unsafe.ledger", 4, false),
+            ],
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn missing_ledger_with_unsafe_is_an_error_and_matching_ledger_is_clean() {
+        let m = model(&[(
+            "rust/src/kern/simd/ok.rs",
+            "pub fn g() {\n    unsafe { c() }\n}\n",
+        )]);
+        let mut out = Vec::new();
+        unsafe_budget(&m, None, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 2);
+        out.clear();
+        unsafe_budget(&m, Some(&ledger_text(&m)), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+        assert!(ledger_text(&m).contains("rust/src/kern/simd/ok.rs 1"));
+    }
+
+    #[test]
+    fn test_only_unsafe_and_out_of_scope_files_do_not_count() {
+        let m = model(&[
+            (
+                "rust/src/kern/evil.rs",
+                "pub fn h() {\n    unsafe { d() }\n}\n",
+            ),
+            (
+                "rust/src/par/t.rs",
+                "#[cfg(test)]\nmod tests {\n    fn t() {\n        unsafe { e() }\n    }\n}\n",
+            ),
+        ]);
+        let mut out = Vec::new();
+        unsafe_budget(&m, None, &mut out);
+        assert!(out.is_empty(), "kern (non-simd) and cfg(test) are out of scope: {out:?}");
+    }
+}

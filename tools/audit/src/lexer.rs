@@ -29,6 +29,18 @@ pub struct LineScan {
     pub comment: String,
 }
 
+/// One string literal's *contents*, captured out-of-band while the
+/// code stream gets blanked. The contract rules (ERR-MAP) need the
+/// actual route and metric-name strings the code ships, which the
+/// blanking deliberately erases from [`LineScan::code`].
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    /// 1-based line the literal *opens* on.
+    pub line: usize,
+    /// Raw contents between the delimiters (escapes unprocessed).
+    pub text: String,
+}
+
 /// A fully scanned file.
 #[derive(Debug, Default)]
 pub struct FileScan {
@@ -36,6 +48,8 @@ pub struct FileScan {
     /// `in_test[i]` — line `i` (0-based) sits inside a `#[cfg(test)]`
     /// item (attribute line through closing brace, inclusive).
     pub in_test: Vec<bool>,
+    /// Every string literal in source order (see [`StrLit`]).
+    pub strs: Vec<StrLit>,
 }
 
 impl FileScan {
@@ -96,6 +110,8 @@ pub fn scan(src: &str) -> FileScan {
     let n = bytes.len();
     let mut lines: Vec<LineScan> = Vec::new();
     let mut cur = LineScan::default();
+    let mut strs: Vec<StrLit> = Vec::new();
+    let mut lit = StrLit { line: 0, text: String::new() }; // in-flight literal
     let mut mode = Mode::Normal;
     let mut i = 0;
     let mut prev_code: u8 = 0; // last byte pushed to code (ident check)
@@ -106,6 +122,9 @@ pub fn scan(src: &str) -> FileScan {
             lines.push(std::mem::take(&mut cur));
             if mode == Mode::Line {
                 mode = Mode::Normal;
+            }
+            if matches!(mode, Mode::Str | Mode::RawStr(_)) {
+                lit.text.push('\n');
             }
             i += 1;
             continue;
@@ -130,8 +149,10 @@ pub fn scan(src: &str) -> FileScan {
             Mode::Str => {
                 if b == b'\\' {
                     cur.code.push(' ');
+                    lit.text.push('\\');
                     if i + 1 < n && bytes[i + 1] != b'\n' {
                         cur.code.push(' ');
+                        lit.text.push(if bytes[i + 1].is_ascii() { bytes[i + 1] as char } else { ' ' });
                         i += 2;
                     } else {
                         i += 1;
@@ -140,9 +161,11 @@ pub fn scan(src: &str) -> FileScan {
                     cur.code.push('"');
                     prev_code = b'"';
                     mode = Mode::Normal;
+                    strs.push(std::mem::replace(&mut lit, StrLit { line: 0, text: String::new() }));
                     i += 1;
                 } else {
                     cur.code.push(' ');
+                    lit.text.push(if b.is_ascii() { b as char } else { ' ' });
                     i += 1;
                 }
             }
@@ -155,9 +178,11 @@ pub fn scan(src: &str) -> FileScan {
                     }
                     prev_code = b'"';
                     mode = Mode::Normal;
+                    strs.push(std::mem::replace(&mut lit, StrLit { line: 0, text: String::new() }));
                     i += 1 + hashes;
                 } else {
                     cur.code.push(' ');
+                    lit.text.push(if b.is_ascii() { b as char } else { ' ' });
                     i += 1;
                 }
             }
@@ -176,6 +201,7 @@ pub fn scan(src: &str) -> FileScan {
                 } else if b == b'"' {
                     cur.code.push('"');
                     mode = Mode::Str;
+                    lit = StrLit { line: lines.len() + 1, text: String::new() };
                     i += 1;
                 } else if (b == b'r' || b == b'b') && !is_ident(prev_code) && raw_str_at(bytes, i).is_some()
                 {
@@ -184,6 +210,7 @@ pub fn scan(src: &str) -> FileScan {
                         cur.code.push(' ');
                     }
                     mode = Mode::RawStr(hashes);
+                    lit = StrLit { line: lines.len() + 1, text: String::new() };
                     i += consumed;
                 } else if b == b'b' && bytes.get(i + 1) == Some(&b'"') && !is_ident(prev_code) {
                     cur.code.push('b');
@@ -203,7 +230,7 @@ pub fn scan(src: &str) -> FileScan {
     lines.push(cur);
 
     let in_test = mark_test_regions(&lines);
-    FileScan { lines, in_test }
+    FileScan { lines, in_test, strs }
 }
 
 /// If a raw (byte) string literal starts at `i` (`r"`, `r#"`, `br"`,
@@ -234,15 +261,25 @@ fn raw_str_at(bytes: &[u8], i: usize) -> Option<(usize, usize)> {
 /// contents) or a lifetime (pass through). Returns the next position.
 fn scan_quote(bytes: &[u8], i: usize, code: &mut String) -> usize {
     let n = bytes.len();
-    // Escaped char literal: '\n', '\'', '\u{…}' …
+    // Escaped char literal: '\n', '\'', '\\', '\u{…}' …
     if bytes.get(i + 1) == Some(&b'\\') {
-        code.push('\'');
+        code.push('\''); // opening quote
+        code.push(' '); // the backslash
         let mut j = i + 2;
+        // The escaped character itself is consumed unconditionally: it
+        // may be a quote ('\'') or a backslash ('\\'), neither of which
+        // may close the literal or re-enter escape handling — getting
+        // this wrong used to let '\\' swallow the closing quote and
+        // blank real code up to the next stray quote.
+        if j < n && bytes[j] != b'\n' {
+            code.push(' ');
+            j += 1;
+        }
+        // Remainder of multi-char escapes: '\u{1F600}', '\x7f'.
         while j < n && bytes[j] != b'\'' && bytes[j] != b'\n' {
             code.push(' ');
-            j += if bytes[j] == b'\\' { 2 } else { 1 };
+            j += 1;
         }
-        code.push(' '); // the escape lead byte
         if j < n && bytes[j] == b'\'' {
             code.push('\'');
             return j + 1;
@@ -373,6 +410,73 @@ mod tests {
         assert!(s.is_test_line(4));
         assert!(s.is_test_line(5));
         assert!(!s.is_test_line(6));
+    }
+
+    #[test]
+    fn escaped_backslash_char_literal_does_not_swallow_code() {
+        // Regression: '\\' used to step PAST its closing quote, leaving
+        // the scanner blanking real code until the next stray quote —
+        // which silently masked any rule hit on the same line.
+        let s = scan("let sep = '\\\\'; let x = v.unwrap();\n");
+        assert!(s.lines[0].code.contains(".unwrap()"), "{:?}", s.lines[0].code);
+        // Byte positions preserved: blanked line length == source length.
+        assert_eq!(s.lines[0].code.len(), "let sep = '\\\\'; let x = v.unwrap();".len());
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_closes_on_the_real_quote() {
+        // Regression: '\'' used to treat the ESCAPED quote as the
+        // closing delimiter, leaving the true closing quote in the
+        // stream to confuse the next literal on the line.
+        let s = scan("let q = '\\''; let y = w.expect(\"gone\");\n");
+        assert!(s.lines[0].code.contains(".expect("), "{:?}", s.lines[0].code);
+        assert!(!s.lines[0].code.contains("gone"), "string contents blanked: {:?}", s.lines[0].code);
+        assert_eq!(s.lines[0].code.len(), "let q = '\\''; let y = w.expect(\"gone\");".len());
+    }
+
+    #[test]
+    fn raw_string_hash_depths_preserve_positions() {
+        // The rule hit after the raw string must land on the right
+        // byte offset (same line, same column arithmetic).
+        let src = "let p = r##\"has \"# inside\"##; v.unwrap();\n";
+        let s = scan(src);
+        assert!(s.lines[0].code.contains(".unwrap()"), "{:?}", s.lines[0].code);
+        assert!(!s.lines[0].code.contains("inside"));
+        assert_eq!(s.lines[0].code.len(), src.len() - 1);
+        assert_eq!(s.strs.len(), 1);
+        assert_eq!(s.strs[0].text, "has \"# inside");
+    }
+
+    #[test]
+    fn deeply_nested_block_comments_unwind_fully() {
+        let s = scan("/* a /* b /* c */ d */ e */ f.unwrap();\n");
+        assert!(s.lines[0].code.contains("f.unwrap();"), "{:?}", s.lines[0].code);
+        assert!(s.lines[0].comment.contains('c'));
+    }
+
+    #[test]
+    fn lifetime_then_char_literal_on_one_line() {
+        // 'a> (lifetime) followed by a real char literal: the lifetime
+        // quote must not open a literal that eats the rest of the line.
+        let s = scan("fn f<'a>(x: &'a [u8]) -> bool { x[0] == b'x' && x.len() > '0' as usize }\n");
+        let t = s.code_text();
+        assert!(t.contains("<'a>"), "{t}");
+        assert!(t.contains("x.len()"), "{t}");
+        assert!(!t.contains("b'x'"), "char contents blanked: {t}");
+    }
+
+    #[test]
+    fn string_literal_contents_are_captured_with_lines() {
+        let src = "fn f() {\n    let r = \"/fit\";\n    let m = \"calars_x_total\";\n    let raw = r#\"multi\nline\"#;\n}\n";
+        let s = scan(src);
+        let got: Vec<(usize, &str)> =
+            s.strs.iter().map(|l| (l.line, l.text.as_str())).collect();
+        assert_eq!(
+            got,
+            vec![(2, "/fit"), (3, "calars_x_total"), (4, "multi\nline")],
+            "{:?}",
+            s.strs
+        );
     }
 
     #[test]

@@ -18,8 +18,12 @@
 //! which is exactly what the reasoned `// audit: allow(RULE) -- why`
 //! escape hatch is for.
 
+pub mod callgraph;
+pub mod contract;
 pub mod lexer;
+pub mod locks;
 pub mod manifest;
+pub mod parse;
 pub mod rules;
 
 use rules::{AllowMarker, FileCtx, Finding, Severity};
@@ -33,6 +37,9 @@ pub struct Config {
     pub walk_dirs: Vec<String>,
     /// Promote warnings (ALLOW-UNUSED) to failures.
     pub deny_warnings: bool,
+    /// Regenerate tools/audit/unsafe.ledger from the tree instead of
+    /// checking against it.
+    pub update_unsafe_ledger: bool,
 }
 
 impl Default for Config {
@@ -44,6 +51,7 @@ impl Default for Config {
                 "benches".to_string(),
             ],
             deny_warnings: false,
+            update_unsafe_ledger: false,
         }
     }
 }
@@ -100,6 +108,86 @@ impl Report {
         ));
         out
     }
+
+    /// Machine-readable diagnostics (`calars audit --json`): one JSON
+    /// object, hand-serialized under the zero-dep contract.
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let sev = match f.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            };
+            out.push_str(&format!(
+                "{{\"path\":\"{}\",\"line\":{},\"rule\":\"{}\",\"severity\":\"{sev}\",\
+                 \"message\":\"{}\"}}",
+                json_escape(&f.path),
+                f.line,
+                json_escape(f.rule),
+                json_escape(&f.message),
+            ));
+        }
+        out.push_str(&format!(
+            "],\"errors\":{},\"warnings\":{},\"suppressed\":{},\"files_scanned\":{},\
+             \"manifests_checked\":{}}}\n",
+            self.errors(),
+            self.warnings(),
+            self.suppressed,
+            self.files_scanned,
+            self.manifests_checked,
+        ));
+        out
+    }
+
+    /// GitHub Actions workflow-command annotations, one per finding,
+    /// so CI failures land inline on the PR diff.
+    pub fn render_github(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let cmd = match f.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            };
+            out.push_str(&format!(
+                "::{cmd} file={},line={},title={}::{}\n",
+                gh_property(&f.path),
+                f.line,
+                gh_property(f.rule),
+                gh_data(&f.message),
+            ));
+        }
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape the data part of a GitHub workflow command.
+fn gh_data(s: &str) -> String {
+    s.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A")
+}
+
+/// Escape a property value of a GitHub workflow command.
+fn gh_property(s: &str) -> String {
+    gh_data(s).replace(':', "%3A").replace(',', "%2C")
 }
 
 /// Recursively collect `.rs` files under `dir`, sorted for
@@ -128,11 +216,14 @@ fn rel_path(root: &Path, p: &Path) -> String {
         .join("/")
 }
 
-/// Run the full audit over `root` with `cfg`.
+/// Run the full audit over `root` with `cfg`: pass 1 scans each file
+/// (token rules + allow markers) and feeds it into the crate model;
+/// pass 2 runs the interprocedural rules over the completed model.
 pub fn run_audit(root: &Path, cfg: &Config) -> std::io::Result<Report> {
     let mut findings: Vec<Finding> = Vec::new();
     let mut markers: Vec<AllowMarker> = Vec::new();
     let mut report = Report::default();
+    let mut model = parse::CrateModel::default();
 
     for dir in &cfg.walk_dirs {
         let abs = root.join(dir);
@@ -149,8 +240,25 @@ pub fn run_audit(root: &Path, cfg: &Config) -> std::io::Result<Report> {
             rules::check_file(&ctx, &mut findings);
             markers.extend(rules::collect_markers(&path, &scan));
             report.files_scanned += 1;
+            model.add_file(path, scan);
         }
     }
+
+    // Pass 2: the interprocedural rule families over the whole model.
+    // Runs before apply_markers so allow markers can suppress these
+    // findings exactly like the token rules'.
+    callgraph::panic_reach(&model, &mut findings);
+    locks::lock_order(&model, &mut findings);
+    let api_md = std::fs::read_to_string(root.join("docs/API.md")).ok();
+    contract::err_map(&model, api_md.as_deref(), &mut findings);
+    let ledger = if cfg.update_unsafe_ledger {
+        let text = contract::ledger_text(&model);
+        std::fs::write(root.join(contract::LEDGER_PATH), &text)?;
+        Some(text)
+    } else {
+        std::fs::read_to_string(root.join(contract::LEDGER_PATH)).ok()
+    };
+    contract::unsafe_budget(&model, ledger.as_deref(), &mut findings);
 
     // DEP-EXT over the root manifest and every workspace member's.
     let root_toml_path = root.join("Cargo.toml");
@@ -198,13 +306,21 @@ const USAGE: &str = "\
 calars-audit — static-analysis pass for the calars contracts
 
 USAGE:
-    calars-audit [--root DIR] [--deny-warnings]
+    calars-audit [--root DIR] [--deny-warnings] [--json | --github]
+                 [--update-unsafe-ledger]
     calars-audit --explain RULE
     calars-audit --list
 
 OPTIONS:
     --root DIR        workspace root (default: discovered from the cwd)
-    --deny-warnings   treat warnings (ALLOW-UNUSED) as failures (CI mode)
+    --deny-warnings   treat warnings (ALLOW-UNUSED, budget drift) as
+                      failures (CI mode)
+    --json            machine-readable report on stdout instead of text
+    --github          text report plus GitHub Actions ::error/::warning
+                      annotations (inline PR findings in CI)
+    --update-unsafe-ledger
+                      regenerate tools/audit/unsafe.ledger from the tree
+                      (UNSAFE-BUDGET then checks against the fresh copy)
     --explain RULE    print the invariant behind a rule id and exit
     --list            list every rule id with a one-line summary
 
@@ -219,6 +335,9 @@ EXIT CODES:
 pub fn run_cli(args: &[String]) -> i32 {
     let mut root_arg: Option<String> = None;
     let mut deny_warnings = false;
+    let mut json = false;
+    let mut github = false;
+    let mut update_unsafe_ledger = false;
     let mut explain: Option<String> = None;
     let mut list = false;
     let mut i = 0;
@@ -233,6 +352,9 @@ pub fn run_cli(args: &[String]) -> i32 {
                 root_arg = Some(v.clone());
             }
             "--deny-warnings" => deny_warnings = true,
+            "--json" => json = true,
+            "--github" => github = true,
+            "--update-unsafe-ledger" => update_unsafe_ledger = true,
             "--explain" => {
                 i += 1;
                 let Some(v) = args.get(i) else {
@@ -293,10 +415,22 @@ pub fn run_cli(args: &[String]) -> i32 {
         return 2;
     }
 
-    let cfg = Config { deny_warnings, ..Config::default() };
+    if json && github {
+        eprintln!("error: --json and --github are mutually exclusive\n\n{USAGE}");
+        return 2;
+    }
+
+    let cfg = Config { deny_warnings, update_unsafe_ledger, ..Config::default() };
     match run_audit(&root, &cfg) {
         Ok(report) => {
-            print!("{}", report.render());
+            if json {
+                print!("{}", report.render_json());
+            } else {
+                print!("{}", report.render());
+                if github {
+                    print!("{}", report.render_github());
+                }
+            }
             if report.is_clean(cfg.deny_warnings) {
                 0
             } else {

@@ -1,0 +1,746 @@
+//! LOCK-ORDER: the static deadlock detector.
+//!
+//! Extracts a lock-acquisition-order graph from `Mutex`/`RwLock` guard
+//! scopes: every `recv.lock()` / `.read()` / `.write()` (empty-paren,
+//! so `io::Write::write(buf)` never matches) and every call to a
+//! guard-returning free helper (`sync::lock_recover(&self.state)`) is
+//! an acquisition.  The receiver chain is resolved against the symbol
+//! table to a stable lock *identity* — `Struct.field` for lock-typed
+//! fields reached from `self`/typed params, `static NAME` for
+//! lock-typed statics, and through guard-returning wrapper methods
+//! (`Registry::lock` → the `Mutex` field it locks internally).
+//! Receivers the resolver cannot type (locals, indexed slots, tuple
+//! fields) are dropped rather than guessed: a misattributed identity
+//! could alias two unrelated locks and fabricate a cycle.
+//!
+//! Hold ranges are syntactic: a `let`-bound guard is held to the end
+//! of its enclosing block, a temporary to the end of its statement
+//! (or the `{…}` it opens, for `match m.lock() { … }`).  A second
+//! acquisition inside a hold range adds the edge `first → second`; a
+//! *call* inside a hold range adds edges to every lock the callee may
+//! eventually take (transitively, via the PANIC-REACH resolver).  Any
+//! cycle in the resulting graph — including a self-edge, i.e. a
+//! re-entrant acquisition of a non-reentrant `std` lock — is reported
+//! with both acquisition sites of every edge in the cycle.
+
+use crate::callgraph::{extract, scope_mask, Call, Resolver};
+use crate::parse::{is_ident_byte, line_at, skip_ws_b, CrateModel};
+use crate::rules::{match_paren, Finding, Severity};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::ops::Range;
+
+const LOCK_METHODS: &[&str] = &["lock", "read", "write"];
+
+/// One resolved lock acquisition inside a fn body.
+struct Acq {
+    /// Offset of the receiver expression (hold ranges start here).
+    off: usize,
+    /// Stable lock identity (`Store.inner`, `static GATE`).
+    id: String,
+    /// Byte range over which the guard is (conservatively) held.
+    hold: Range<usize>,
+    line: usize,
+}
+
+/// Strip references, lifetimes and `Arc`/`Rc`/`Box` wrappers down to
+/// the bare type name: `&'a Arc<pool::Shared>` → `Shared`.
+fn base_type(ty: &str) -> String {
+    let mut s = ty.trim();
+    loop {
+        s = s.trim_start_matches('&').trim_start();
+        if s.starts_with('\'') {
+            match s.find(char::is_whitespace) {
+                Some(w) => s = s[w..].trim_start(),
+                None => return String::new(),
+            }
+            continue;
+        }
+        s = s.strip_prefix("mut ").unwrap_or(s).trim_start();
+        s = s.strip_prefix("dyn ").unwrap_or(s).trim_start();
+        let head_end = s.find('<').unwrap_or(s.len());
+        let last = s[..head_end].rsplit("::").next().unwrap_or("").trim();
+        if matches!(last, "Arc" | "Rc" | "Box") && head_end < s.len() {
+            if let Some(close) = s.rfind('>') {
+                s = s[head_end + 1..close].trim();
+                continue;
+            }
+        }
+        return last.to_string();
+    }
+}
+
+/// Walk a `a.b.c` receiver chain backwards from the `.` at `dot`.
+/// Returns `(chain, offset of the chain root)`; `None` for receivers
+/// that are not plain field chains (calls, indexing, paths).
+fn chain_back(code: &str, mut dot: usize) -> Option<(Vec<String>, usize)> {
+    let b = code.as_bytes();
+    let mut parts = Vec::new();
+    loop {
+        let mut s = dot;
+        while s > 0 && is_ident_byte(b[s - 1]) {
+            s -= 1;
+        }
+        if s == dot {
+            return None; // `foo()[i].lock()` and friends
+        }
+        parts.push(code[s..dot].to_string());
+        if s >= 1 && b[s - 1] == b'.' {
+            dot = s - 1;
+            continue;
+        }
+        if s >= 2 && b[s - 1] == b':' && b[s - 2] == b':' {
+            return None; // `module::ITEM.lock()` path roots — punt
+        }
+        parts.reverse();
+        return Some((parts, s));
+    }
+}
+
+fn is_all_caps(s: &str) -> bool {
+    !s.is_empty()
+        && s.bytes().all(|b| b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_')
+        && s.bytes().any(|b| b.is_ascii_uppercase())
+}
+
+/// Find the struct named `name`, preferring a definition in the same
+/// file as `fn_idx` (same-named structs across modules stay distinct).
+fn find_struct<'a>(
+    model: &'a CrateModel,
+    fn_idx: usize,
+    name: &str,
+) -> Option<&'a crate::parse::StructDef> {
+    let file = model.fns[fn_idx].file;
+    model
+        .structs
+        .iter()
+        .find(|s| s.name == name && s.file == file)
+        .or_else(|| model.structs.iter().find(|s| s.name == name))
+}
+
+/// Resolve a receiver chain (rooted at `self`, a typed param, or a
+/// static) to a lock identity.  `method` carries the acquisition
+/// method name when the site was `recv.lock()`-shaped, enabling the
+/// guard-returning-wrapper fallback; it is `None` when the chain is a
+/// lock expression passed to a guard-returning free fn.
+fn resolve_chain(
+    model: &CrateModel,
+    fn_idx: usize,
+    chain: &[String],
+    method: Option<&str>,
+    memo: &mut HashMap<(String, String), Option<String>>,
+    visiting: &mut HashSet<(String, String)>,
+) -> Option<String> {
+    let f = &model.fns[fn_idx];
+    let root = chain[0].as_str();
+    let mut cur: String;
+    if root == "self" {
+        cur = f.qual.clone()?;
+    } else if let Some((_, ty)) = f.params().into_iter().find(|(n, _)| n == root) {
+        if CrateModel::is_lock_type(&ty) {
+            // A lock-typed param: the identity belongs to the caller.
+            // Guard-returning wrappers get re-resolved at call sites;
+            // anything else stays anonymous.
+            return None;
+        }
+        cur = base_type(&ty);
+    } else if is_all_caps(root) {
+        let file = f.file;
+        let st = model
+            .statics
+            .iter()
+            .find(|s| s.name == root && s.file == file)
+            .or_else(|| model.statics.iter().find(|s| s.name == root))?;
+        if CrateModel::is_lock_type(&st.ty) {
+            return if chain.len() == 1 {
+                Some(format!("static {}", st.name))
+            } else {
+                None
+            };
+        }
+        cur = base_type(&st.ty);
+    } else {
+        return None; // untyped local — anonymous
+    }
+
+    if chain.len() == 1 {
+        // `self.lock()` / `reg.lock()` on a non-lock type: delegate to
+        // that type's guard-returning wrapper, if it has one.
+        return wrapper_internal(model, &cur, method?, memo, visiting);
+    }
+    for (k, seg) in chain.iter().enumerate().skip(1) {
+        let sd = find_struct(model, fn_idx, &cur)?;
+        let fd = sd.fields.iter().find(|fd| &fd.name == seg)?;
+        if k == chain.len() - 1 {
+            if CrateModel::is_lock_type(&fd.ty) {
+                return Some(format!("{}.{}", sd.name, fd.name));
+            }
+            return wrapper_internal(model, &base_type(&fd.ty), method?, memo, visiting);
+        }
+        cur = base_type(&fd.ty);
+    }
+    None
+}
+
+/// The lock a guard-returning wrapper method (`Registry::lock`) takes
+/// internally: the first `self`-rooted acquisition in its body.
+fn wrapper_internal(
+    model: &CrateModel,
+    tname: &str,
+    method: &str,
+    memo: &mut HashMap<(String, String), Option<String>>,
+    visiting: &mut HashSet<(String, String)>,
+) -> Option<String> {
+    let key = (tname.to_string(), method.to_string());
+    if let Some(v) = memo.get(&key) {
+        return v.clone();
+    }
+    if !visiting.insert(key.clone()) {
+        return None; // delegation cycle — give up
+    }
+    let result = (|| {
+        let idx = model.fns.iter().position(|g| {
+            g.qual.as_deref() == Some(tname)
+                && g.name == method
+                && g.returns_guard()
+                && !g.is_test
+                && g.body.is_some()
+        })?;
+        for (_, chain, word) in scan_method_sites(model, idx) {
+            if chain[0] == "self" {
+                if let Some(id) =
+                    resolve_chain(model, idx, &chain, Some(word), memo, visiting)
+                {
+                    return Some(id);
+                }
+            }
+        }
+        None
+    })();
+    visiting.remove(&key);
+    memo.insert(key, result.clone());
+    result
+}
+
+/// Raw `recv.lock()`-shaped sites in a fn body: `(root offset,
+/// receiver chain, method name)`.  Nested fn bodies are skipped.
+fn scan_method_sites(
+    model: &CrateModel,
+    idx: usize,
+) -> Vec<(usize, Vec<String>, &'static str)> {
+    let f = &model.fns[idx];
+    let file = &model.files[f.file];
+    let code = &file.code;
+    let b = code.as_bytes();
+    let range = f.body.clone().unwrap_or(0..0);
+    let inner: Vec<Range<usize>> = file
+        .fns
+        .iter()
+        .filter(|&&j| j != idx)
+        .filter_map(|&j| model.fns[j].body.clone())
+        .filter(|r| r.start >= range.start && r.end <= range.end)
+        .collect();
+
+    let mut out = Vec::new();
+    let mut i = range.start;
+    while i < range.end {
+        if let Some(r) = inner.iter().find(|r| r.contains(&i)) {
+            i = r.end;
+            continue;
+        }
+        let c = b[i];
+        if (!c.is_ascii_alphabetic() && c != b'_') || (i > 0 && is_ident_byte(b[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let s = i;
+        let mut e = i;
+        while e < range.end && is_ident_byte(b[e]) {
+            e += 1;
+        }
+        i = e;
+        let word = &code[s..e];
+        let Some(&w) = LOCK_METHODS.iter().find(|&&m| m == word) else { continue };
+        if s == 0 || b[s - 1] != b'.' {
+            continue;
+        }
+        // Empty parens only: `.read()` is RwLock, `.read(buf)` is io.
+        let j = skip_ws_b(b, e);
+        if b.get(j) != Some(&b'(') {
+            continue;
+        }
+        let j2 = skip_ws_b(b, j + 1);
+        if b.get(j2) != Some(&b')') {
+            continue;
+        }
+        if let Some((chain, root)) = chain_back(code, s - 1) {
+            out.push((root, chain, w));
+        }
+    }
+    out
+}
+
+/// Calls to guard-returning free fns (`lock_recover(&self.state, …)`):
+/// `(call offset, lock-expression chain)`.
+fn scan_guard_calls(
+    model: &CrateModel,
+    idx: usize,
+    guard_free: &HashSet<&str>,
+) -> Vec<(usize, Vec<String>)> {
+    let f = &model.fns[idx];
+    let file = &model.files[f.file];
+    let code = &file.code;
+    let b = code.as_bytes();
+    let range = f.body.clone().unwrap_or(0..0);
+    let inner: Vec<Range<usize>> = file
+        .fns
+        .iter()
+        .filter(|&&j| j != idx)
+        .filter_map(|&j| model.fns[j].body.clone())
+        .filter(|r| r.start >= range.start && r.end <= range.end)
+        .collect();
+
+    let mut out = Vec::new();
+    let mut i = range.start;
+    while i < range.end {
+        if let Some(r) = inner.iter().find(|r| r.contains(&i)) {
+            i = r.end;
+            continue;
+        }
+        let c = b[i];
+        if (!c.is_ascii_alphabetic() && c != b'_') || (i > 0 && is_ident_byte(b[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let s = i;
+        let mut e = i;
+        while e < range.end && is_ident_byte(b[e]) {
+            e += 1;
+        }
+        i = e;
+        let word = &code[s..e];
+        if !guard_free.contains(word) || (s > 0 && b[s - 1] == b'.') {
+            continue;
+        }
+        let j = skip_ws_b(b, e);
+        if b.get(j) != Some(&b'(') {
+            continue;
+        }
+        let Some(close) = match_paren(code, j) else { continue };
+        let args = &code[j + 1..close - 1];
+        let first = crate::parse::split_top_level(args, b',')
+            .first()
+            .map(|(_, p)| p.trim())
+            .unwrap_or("");
+        let expr = first.trim_start_matches('&').trim_start();
+        let expr = expr.strip_prefix("mut ").unwrap_or(expr);
+        if !expr.is_empty() && expr.bytes().all(|b| is_ident_byte(b) || b == b'.') {
+            let chain: Vec<String> = expr.split('.').map(str::to_string).collect();
+            if chain.iter().all(|p| !p.is_empty()) {
+                out.push((s, chain));
+            }
+        }
+    }
+    out
+}
+
+/// End offset of the innermost `{…}` block containing `off`.
+fn enclosing_block_end(code: &str, off: usize, body: &Range<usize>) -> usize {
+    let b = code.as_bytes();
+    let mut stack: Vec<usize> = Vec::new();
+    for i in body.start..body.end {
+        match b[i] {
+            b'{' => stack.push(i),
+            b'}' => {
+                if let Some(o) = stack.pop() {
+                    if o < off && off < i {
+                        return i;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    body.end
+}
+
+/// Conservative guard hold range for an acquisition whose receiver
+/// expression starts at `expr_start`.
+fn hold_range(code: &str, expr_start: usize, body: &Range<usize>) -> Range<usize> {
+    let b = code.as_bytes();
+    // `let`-bound (incl. `if let` / `while let`)?  Scan back to the
+    // statement boundary and look for the keyword.
+    let mut k = expr_start;
+    while k > body.start && !matches!(b[k - 1], b';' | b'{' | b'}') {
+        k -= 1;
+    }
+    let bound = !crate::rules::word_occurrences(&code[k..expr_start], "let").is_empty();
+    if bound {
+        return expr_start..enclosing_block_end(code, expr_start, body);
+    }
+    // Temporary: held to the end of the statement, or through the
+    // block it opens (`match m.lock() { … }`).
+    let mut depth = 0i64;
+    let mut i = expr_start;
+    while i < body.end {
+        match b[i] {
+            b'(' | b'[' => depth += 1,
+            b')' | b']' => {
+                if depth == 0 {
+                    return expr_start..i;
+                }
+                depth -= 1;
+            }
+            b'{' if depth == 0 => {
+                let end = crate::parse::match_delim_b(b, i, b'{', b'}')
+                    .unwrap_or(body.end);
+                return expr_start..end;
+            }
+            b'}' if depth == 0 => return expr_start..i,
+            b';' if depth == 0 => return expr_start..i,
+            _ => {}
+        }
+        i += 1;
+    }
+    expr_start..body.end
+}
+
+/// Resolved acquisitions for one fn.
+fn extract_acqs(
+    model: &CrateModel,
+    idx: usize,
+    guard_free: &HashSet<&str>,
+    memo: &mut HashMap<(String, String), Option<String>>,
+) -> Vec<Acq> {
+    let f = &model.fns[idx];
+    let file = &model.files[f.file];
+    let body = f.body.clone().unwrap_or(0..0);
+    let mut visiting = HashSet::new();
+    let mut out = Vec::new();
+    for (root, chain, word) in scan_method_sites(model, idx) {
+        if let Some(id) =
+            resolve_chain(model, idx, &chain, Some(word), memo, &mut visiting)
+        {
+            out.push(Acq {
+                off: root,
+                id,
+                hold: hold_range(&file.code, root, &body),
+                line: line_at(&file.code, root),
+            });
+        }
+    }
+    for (off, chain) in scan_guard_calls(model, idx, guard_free) {
+        if let Some(id) = resolve_chain(model, idx, &chain, None, memo, &mut visiting) {
+            out.push(Acq {
+                off,
+                id,
+                hold: hold_range(&file.code, off, &body),
+                line: line_at(&file.code, off),
+            });
+        }
+    }
+    out.sort_by_key(|a| a.off);
+    out
+}
+
+/// Locks fn `i` (or anything it transitively calls) may acquire:
+/// `id → (path, line)` of a representative site.
+#[allow(clippy::too_many_arguments)]
+fn eventual(
+    i: usize,
+    model: &CrateModel,
+    acqs: &[Vec<Acq>],
+    calls: &[Vec<Call>],
+    resolver: &Resolver<'_>,
+    memo: &mut Vec<Option<BTreeMap<String, (String, usize)>>>,
+    visiting: &mut Vec<bool>,
+) -> BTreeMap<String, (String, usize)> {
+    if let Some(m) = &memo[i] {
+        return m.clone();
+    }
+    if visiting[i] {
+        return BTreeMap::new(); // recursion: fixpoint approximation
+    }
+    visiting[i] = true;
+    let mut map: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    let path = &model.files[model.fns[i].file].path;
+    for a in &acqs[i] {
+        map.entry(a.id.clone()).or_insert_with(|| (path.clone(), a.line));
+    }
+    for c in &calls[i] {
+        if LOCK_METHODS.contains(&c.name.as_str()) {
+            continue; // acquisition scan owns these
+        }
+        for t in resolver.resolve(c, i) {
+            for (id, site) in eventual(t, model, acqs, calls, resolver, memo, visiting)
+            {
+                map.entry(id).or_insert(site);
+            }
+        }
+    }
+    visiting[i] = false;
+    memo[i] = Some(map.clone());
+    map
+}
+
+type EdgeMap = BTreeMap<(String, String), (String, usize, String, usize)>;
+
+/// Tarjan SCC over the identity graph (iterative would be overkill —
+/// the graph has a handful of nodes).
+struct Tarjan<'a> {
+    adj: &'a BTreeMap<usize, BTreeSet<usize>>,
+    index: Vec<Option<usize>>,
+    low: Vec<usize>,
+    on_stack: Vec<bool>,
+    stack: Vec<usize>,
+    next: usize,
+    sccs: Vec<Vec<usize>>,
+}
+
+impl Tarjan<'_> {
+    fn strongconnect(&mut self, v: usize) {
+        self.index[v] = Some(self.next);
+        self.low[v] = self.next;
+        self.next += 1;
+        self.stack.push(v);
+        self.on_stack[v] = true;
+        if let Some(ws) = self.adj.get(&v) {
+            for &w in ws {
+                if self.index[w].is_none() {
+                    self.strongconnect(w);
+                    self.low[v] = self.low[v].min(self.low[w]);
+                } else if self.on_stack[w] {
+                    self.low[v] = self.low[v].min(self.index[w].unwrap_or(0));
+                }
+            }
+        }
+        if Some(self.low[v]) == self.index[v] {
+            let mut scc = Vec::new();
+            while let Some(w) = self.stack.pop() {
+                self.on_stack[w] = false;
+                scc.push(w);
+                if w == v {
+                    break;
+                }
+            }
+            scc.sort_unstable();
+            self.sccs.push(scc);
+        }
+    }
+}
+
+/// The LOCK-ORDER pass.
+pub fn lock_order(model: &CrateModel, out: &mut Vec<Finding>) {
+    let n = model.fns.len();
+    let in_scope = scope_mask(model);
+    let resolver = Resolver::build(model, &in_scope);
+    let guard_free: HashSet<&str> = model
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|(i, f)| in_scope[*i] && f.qual.is_none() && f.returns_guard())
+        .map(|(_, f)| f.name.as_str())
+        .collect();
+
+    let mut wrap_memo: HashMap<(String, String), Option<String>> = HashMap::new();
+    let acqs: Vec<Vec<Acq>> = (0..n)
+        .map(|i| {
+            if in_scope[i] {
+                extract_acqs(model, i, &guard_free, &mut wrap_memo)
+            } else {
+                Vec::new()
+            }
+        })
+        .collect();
+    let calls: Vec<Vec<Call>> = (0..n)
+        .map(|i| if in_scope[i] { extract(model, i).calls } else { Vec::new() })
+        .collect();
+
+    let mut ev_memo: Vec<Option<BTreeMap<String, (String, usize)>>> = vec![None; n];
+    let mut visiting = vec![false; n];
+
+    let mut edges: EdgeMap = BTreeMap::new();
+    for i in 0..n {
+        if acqs[i].is_empty() {
+            continue;
+        }
+        let path = model.files[model.fns[i].file].path.clone();
+        for a in &acqs[i] {
+            for b2 in &acqs[i] {
+                if b2.off > a.off && b2.off < a.hold.end {
+                    edges
+                        .entry((a.id.clone(), b2.id.clone()))
+                        .or_insert((path.clone(), a.line, path.clone(), b2.line));
+                }
+            }
+            for c in &calls[i] {
+                if c.off <= a.off
+                    || c.off >= a.hold.end
+                    || LOCK_METHODS.contains(&c.name.as_str())
+                {
+                    continue;
+                }
+                for t in resolver.resolve(c, i) {
+                    let ev = eventual(
+                        t, model, &acqs, &calls, &resolver, &mut ev_memo,
+                        &mut visiting,
+                    );
+                    for (id2, (p2, l2)) in ev {
+                        edges
+                            .entry((a.id.clone(), id2))
+                            .or_insert((path.clone(), a.line, p2, l2));
+                    }
+                }
+            }
+        }
+    }
+
+    // Identity graph → SCCs.
+    let nodes: Vec<String> = edges
+        .keys()
+        .flat_map(|(a, b)| [a.clone(), b.clone()])
+        .collect::<BTreeSet<_>>()
+        .into_iter()
+        .collect();
+    let node_ix: BTreeMap<&str, usize> =
+        nodes.iter().enumerate().map(|(i, s)| (s.as_str(), i)).collect();
+    let mut adj: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(node_ix[a.as_str()])
+            .or_default()
+            .insert(node_ix[b.as_str()]);
+    }
+    let mut t = Tarjan {
+        adj: &adj,
+        index: vec![None; nodes.len()],
+        low: vec![0; nodes.len()],
+        on_stack: vec![false; nodes.len()],
+        stack: Vec::new(),
+        next: 0,
+        sccs: Vec::new(),
+    };
+    for v in 0..nodes.len() {
+        if t.index[v].is_none() {
+            t.strongconnect(v);
+        }
+    }
+    let mut sccs = t.sccs;
+    sccs.sort();
+
+    for scc in sccs {
+        let cyclic = scc.len() > 1
+            || edges.contains_key(&(nodes[scc[0]].clone(), nodes[scc[0]].clone()));
+        if !cyclic {
+            continue;
+        }
+        let member: BTreeSet<&str> = scc.iter().map(|&v| nodes[v].as_str()).collect();
+        let intra: Vec<(&(String, String), &(String, usize, String, usize))> = edges
+            .iter()
+            .filter(|((a, b), _)| {
+                member.contains(a.as_str()) && member.contains(b.as_str())
+            })
+            .collect();
+        let Some((_, (_, _, ap, al))) = intra.first() else { continue };
+        let parts: Vec<String> = intra
+            .iter()
+            .map(|((a, b), (p1, l1, p2, l2))| {
+                format!("{a} ({p1}:{l1}) then {b} ({p2}:{l2})")
+            })
+            .collect();
+        out.push(Finding {
+            path: ap.clone(),
+            line: *al,
+            rule: "LOCK-ORDER",
+            severity: Severity::Error,
+            message: format!(
+                "lock-order cycle: {} — acquire these locks in one global order (or \
+                 collapse them into one) so no interleaving can deadlock",
+                parts.join("; ")
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let mut m = CrateModel::default();
+        for (p, src) in files {
+            m.add_file(p.to_string(), scan(src));
+        }
+        let mut out = Vec::new();
+        lock_order(&m, &mut out);
+        out
+    }
+
+    const TWO_LOCK_STRUCT: &str = "use std::sync::Mutex;\npub struct S {\n    a: Mutex<u32>,\n    b: Mutex<u32>,\n}\n";
+
+    #[test]
+    fn two_mutex_cycle_is_reported_with_both_sites() {
+        let src = format!(
+            "{TWO_LOCK_STRUCT}impl S {{\n    fn ab(&self) {{\n        let ga = self.a.lock();\n        let gb = self.b.lock();\n        drop(gb);\n        drop(ga);\n    }}\n    fn ba(&self) {{\n        let gb = self.b.lock();\n        let ga = self.a.lock();\n        drop(ga);\n        drop(gb);\n    }}\n}}\n"
+        );
+        let got = run(&[("rust/src/serve/s.rs", &src)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        let f = &got[0];
+        assert_eq!(f.rule, "LOCK-ORDER");
+        // Both edges, each with both acquisition sites.
+        assert!(f.message.contains("S.a (rust/src/serve/s.rs:8) then S.b (rust/src/serve/s.rs:9)"), "{}", f.message);
+        assert!(f.message.contains("S.b (rust/src/serve/s.rs:14) then S.a (rust/src/serve/s.rs:15)"), "{}", f.message);
+    }
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let src = format!(
+            "{TWO_LOCK_STRUCT}impl S {{\n    fn ab(&self) {{\n        let ga = self.a.lock();\n        let gb = self.b.lock();\n        drop(gb);\n        drop(ga);\n    }}\n    fn ab2(&self) {{\n        let ga = self.a.lock();\n        let gb = self.b.lock();\n        drop(gb);\n        drop(ga);\n    }}\n}}\n"
+        );
+        let got = run(&[("rust/src/serve/s.rs", &src)]);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn sequential_temporaries_do_not_create_edges() {
+        let src = format!(
+            "{TWO_LOCK_STRUCT}impl S {{\n    fn seq(&self) {{\n        self.a.lock();\n        self.b.lock();\n    }}\n    fn seq2(&self) {{\n        self.b.lock();\n        self.a.lock();\n    }}\n}}\n"
+        );
+        let got = run(&[("rust/src/serve/s.rs", &src)]);
+        assert!(got.is_empty(), "temporaries drop at the `;`: {got:?}");
+    }
+
+    #[test]
+    fn cycle_through_a_callee_is_found_transitively() {
+        let a = format!(
+            "{TWO_LOCK_STRUCT}impl S {{\n    fn hold_a_then_b(&self) {{\n        let g = self.a.lock();\n        self.take_b();\n        drop(g);\n    }}\n    fn take_b(&self) {{\n        let g = self.b.lock();\n        drop(g);\n    }}\n    fn hold_b_then_a(&self) {{\n        let g = self.b.lock();\n        let h = self.a.lock();\n        drop(h);\n        drop(g);\n    }}\n}}\n"
+        );
+        let got = run(&[("rust/src/par/s.rs", &a)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("S.a"), "{}", got[0].message);
+        assert!(got[0].message.contains("S.b"), "{}", got[0].message);
+    }
+
+    #[test]
+    fn guard_returning_wrapper_and_free_helper_resolve_to_the_inner_lock() {
+        let obs = "use std::sync::{Mutex, MutexGuard};\npub struct Registry {\n    inner: Mutex<Vec<u32>>,\n}\nimpl Registry {\n    pub fn lock(&self) -> MutexGuard<'_, Vec<u32>> {\n        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)\n    }\n}\n";
+        let serve = "use std::sync::{Mutex, MutexGuard};\npub fn lock_recover<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {\n    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)\n}\npub struct Store {\n    jobs: Mutex<Vec<u32>>,\n    reg: crate::obs::Registry,\n}\nimpl Store {\n    fn jobs_then_reg(&self) {\n        let g = lock_recover(&self.jobs);\n        let r = self.reg.lock();\n        drop(r);\n        drop(g);\n    }\n    fn reg_then_jobs(&self) {\n        let r = self.reg.lock();\n        let g = lock_recover(&self.jobs);\n        drop(g);\n        drop(r);\n    }\n}\n";
+        let got = run(&[
+            ("rust/src/obs/metrics.rs", obs),
+            ("rust/src/serve/store.rs", serve),
+        ]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        let m = &got[0].message;
+        assert!(m.contains("Registry.inner"), "{m}");
+        assert!(m.contains("Store.jobs"), "{m}");
+    }
+
+    #[test]
+    fn reentrant_same_lock_is_a_self_cycle() {
+        let src = format!(
+            "{TWO_LOCK_STRUCT}impl S {{\n    fn reenter(&self) {{\n        let g = self.a.lock();\n        let h = self.a.lock();\n        drop(h);\n        drop(g);\n    }}\n}}\n"
+        );
+        let got = run(&[("rust/src/kern/cache.rs", &src)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("S.a"), "{}", got[0].message);
+    }
+}

@@ -1,0 +1,811 @@
+//! A hand-rolled Rust *item* parser over the blanked code stream:
+//! builds the per-crate symbol table the interprocedural rules walk.
+//!
+//! This is deliberately an approximation, not a compiler front-end: a
+//! scope stack driven by brace matching recognizes `fn` / `impl` /
+//! `trait` / `struct` / `enum` / `static` items, records function
+//! bodies as byte ranges into the blanked [`code
+//! text`](crate::lexer::FileScan::code_text), and captures just enough
+//! type information (lock-typed struct fields and statics, method
+//! qualifiers, parameter types) for the PANIC-REACH call-graph walk
+//! and the LOCK-ORDER acquisition-graph extraction. What the
+//! approximation can and cannot see is documented in DESIGN.md
+//! §"Static analysis & invariants".
+
+use crate::lexer::FileScan;
+use std::ops::Range;
+
+/// One function (or method) definition.
+#[derive(Debug)]
+pub struct FnDef {
+    pub name: String,
+    /// Enclosing `impl TYPE` / `trait NAME` qualifier, `None` for free
+    /// functions.
+    pub qual: Option<String>,
+    /// Index into [`CrateModel::files`].
+    pub file: usize,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Signature text from `fn` through the body brace (exclusive).
+    pub sig: String,
+    /// Byte range of the body *contents* in the file's code text
+    /// (between the braces); `None` for bodyless trait declarations.
+    pub body: Option<Range<usize>>,
+    /// Inside a `#[cfg(test)]` region.
+    pub is_test: bool,
+}
+
+impl FnDef {
+    /// `(name, type-text)` for every named, non-`self` parameter.
+    pub fn params(&self) -> Vec<(String, String)> {
+        let b = self.sig.as_bytes();
+        let mut k = 2; // sig always starts with the `fn` keyword
+        k = skip_ws_b(b, k);
+        while k < b.len() && is_ident_byte(b[k]) {
+            k += 1;
+        }
+        k = skip_ws_b(b, k);
+        if k < b.len() && b[k] == b'<' {
+            k = skip_angles(b, k);
+        }
+        k = skip_ws_b(b, k);
+        if b.get(k) != Some(&b'(') {
+            return Vec::new();
+        }
+        let Some(close) = match_delim_b(b, k, b'(', b')') else {
+            return Vec::new();
+        };
+        let inner = &self.sig[k + 1..close];
+        let mut out = Vec::new();
+        for (_, part) in split_top_level(inner, b',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            // `self` / `&self` / `&mut self` have no type colon.
+            let Some(ci) = find_type_colon(p) else { continue };
+            let Some(name) = trailing_ident(p[..ci].trim_end()) else {
+                continue;
+            };
+            out.push((name, p[ci + 1..].trim().to_string()));
+        }
+        out
+    }
+
+    /// Does this function hand back a lock guard (the wrapper-function
+    /// marker the LOCK-ORDER pass keys on)? Substring check on the
+    /// signature — guard types appear in return position only, in this
+    /// tree.
+    pub fn returns_guard(&self) -> bool {
+        ["MutexGuard", "RwLockReadGuard", "RwLockWriteGuard"]
+            .iter()
+            .any(|g| self.sig.contains(g))
+    }
+}
+
+/// One named struct field.
+#[derive(Debug)]
+pub struct FieldDef {
+    pub name: String,
+    /// Type text, verbatim (trimmed).
+    pub ty: String,
+}
+
+/// One struct with named fields (tuple/unit structs record no fields).
+#[derive(Debug)]
+pub struct StructDef {
+    pub name: String,
+    /// Module path derived from the file path (`par::pool`), used to
+    /// disambiguate same-named structs across modules.
+    pub module: String,
+    pub file: usize,
+    pub line: usize,
+    pub fields: Vec<FieldDef>,
+}
+
+/// One `static NAME: TYPE = …;` item.
+#[derive(Debug)]
+pub struct StaticDef {
+    pub name: String,
+    pub ty: String,
+    pub file: usize,
+    pub line: usize,
+}
+
+/// One enum with its variants (ERR-MAP reads `ErrorKind` from here).
+#[derive(Debug)]
+pub struct EnumDef {
+    pub name: String,
+    pub file: usize,
+    /// `(variant name, 1-based line)`.
+    pub variants: Vec<(String, usize)>,
+}
+
+/// One scanned + parsed file.
+#[derive(Debug, Default)]
+pub struct ParsedFile {
+    /// Repo-relative forward-slash path.
+    pub path: String,
+    /// Blanked code text ([`FileScan::code_text`]).
+    pub code: String,
+    pub scan: FileScan,
+    /// Indices into [`CrateModel::fns`] for fns defined here.
+    pub fns: Vec<usize>,
+}
+
+/// The whole-crate symbol table the global rules walk.
+#[derive(Debug, Default)]
+pub struct CrateModel {
+    pub files: Vec<ParsedFile>,
+    pub fns: Vec<FnDef>,
+    pub structs: Vec<StructDef>,
+    pub statics: Vec<StaticDef>,
+    pub enums: Vec<EnumDef>,
+}
+
+impl CrateModel {
+    /// Scan results move in here; parsing happens immediately so the
+    /// global passes only ever see a complete table.
+    pub fn add_file(&mut self, path: String, scan: FileScan) {
+        let code = scan.code_text();
+        self.files.push(ParsedFile { path, code, scan, fns: Vec::new() });
+        let idx = self.files.len() - 1;
+        parse_file_items(self, idx);
+    }
+
+    /// Is `ty` a lock type (the LOCK-ORDER identity test)?
+    pub fn is_lock_type(ty: &str) -> bool {
+        ty.contains("Mutex<") || ty.contains("RwLock<")
+    }
+}
+
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+pub fn skip_ws_b(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// 1-based line of byte offset `off` in `code`.
+pub fn line_at(code: &str, off: usize) -> usize {
+    let end = off.min(code.len());
+    code.as_bytes()[..end].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+fn count_nl(b: &[u8]) -> usize {
+    b.iter().filter(|&&c| c == b'\n').count()
+}
+
+/// Offset just past the matching closer for the opener at `open`
+/// (which must hold `open_b`). `None` when unbalanced.
+pub fn match_delim_b(b: &[u8], open: usize, open_b: u8, close_b: u8) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < b.len() {
+        let c = b[i];
+        if c == open_b {
+            depth += 1;
+        } else if c == close_b {
+            depth = depth.checked_sub(1)?;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Skip a balanced `<…>` group starting at `i` (which holds `<`),
+/// treating the `>` of `->` as plain text. Returns the offset just
+/// past the closing `>`.
+pub(crate) fn skip_angles(b: &[u8], mut i: usize) -> usize {
+    let mut depth = 0i64;
+    while i < b.len() {
+        match b[i] {
+            b'<' => depth += 1,
+            b'>' if i > 0 && b[i - 1] == b'-' => {}
+            b'>' => {
+                depth -= 1;
+                if depth <= 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Split `s` on `sep` at bracket depth zero (tracking `()[]{}<>`, with
+/// the `>` of `->` treated as text). Returns `(offset, piece)` pairs.
+pub fn split_top_level(s: &str, sep: u8) -> Vec<(usize, &str)> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut start = 0usize;
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'(' | b'[' | b'{' | b'<' => depth += 1,
+            b'>' if i > 0 && b[i - 1] == b'-' => {}
+            b')' | b']' | b'}' | b'>' => depth -= 1,
+            _ if c == sep && depth == 0 => {
+                out.push((start, &s[start..i]));
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push((start, &s[start..]));
+    out
+}
+
+/// Offset of the first *annotation* colon in `s` — a `:` at bracket
+/// depth zero that is not part of a `::` path separator.
+pub fn find_type_colon(s: &str) -> Option<usize> {
+    let b = s.as_bytes();
+    let mut depth = 0i64;
+    let mut i = 0usize;
+    while i < b.len() {
+        match b[i] {
+            b'(' | b'[' | b'<' => depth += 1,
+            b'>' if i > 0 && b[i - 1] == b'-' => {}
+            b')' | b']' | b'>' => depth -= 1,
+            b':' => {
+                if b.get(i + 1) == Some(&b':') {
+                    i += 2;
+                    continue;
+                }
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// The trailing identifier of `s`, if it ends in one.
+pub fn trailing_ident(s: &str) -> Option<String> {
+    let b = s.as_bytes();
+    let mut start = b.len();
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    if start < b.len() {
+        Some(s[start..].to_string())
+    } else {
+        None
+    }
+}
+
+/// Word-boundary find (rejects `kw<` so `for<'a>` is not the `for` of
+/// an `impl Trait for Type` header).
+fn find_kw(s: &str, kw: &str) -> Option<usize> {
+    let b = s.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = s[from..].find(kw) {
+        let i = from + rel;
+        let before_ok = i == 0 || !is_ident_byte(b[i - 1]);
+        let after = i + kw.len();
+        let after_ok =
+            after >= b.len() || (!is_ident_byte(b[after]) && b[after] != b'<');
+        if before_ok && after_ok {
+            return Some(i);
+        }
+        from = i + kw.len();
+    }
+    None
+}
+
+/// The method-owning type name of an `impl` header (text between
+/// `impl` and `{`): `<T: Clone> Wrapper<T>` → `Wrapper`,
+/// `Display for kern::LruQueue<K>` → `LruQueue`.
+fn impl_type_name(header: &str) -> String {
+    let mut s = header.trim();
+    if s.starts_with('<') {
+        let end = skip_angles(s.as_bytes(), 0);
+        s = s[end.min(s.len())..].trim_start();
+    }
+    if let Some(i) = find_kw(s, "for") {
+        s = s[i + 3..].trim_start();
+    }
+    if let Some(i) = s.find(" where") {
+        s = &s[..i];
+    }
+    let s = s.trim_start_matches(['&', '*']).trim_start();
+    let s = s.strip_prefix("mut ").unwrap_or(s).trim_start();
+    let s = s.strip_prefix("dyn ").unwrap_or(s).trim_start();
+    let base = match s.find('<') {
+        Some(i) => &s[..i],
+        None => s,
+    };
+    let base = base.trim_end();
+    let seg = base.rsplit("::").next().unwrap_or(base);
+    seg.chars().filter(|c| c.is_ascii_alphanumeric() || *c == '_').collect()
+}
+
+/// Module path from a repo-relative file path: `rust/src/par/pool.rs`
+/// → `par::pool`, `rust/src/kern/simd/mod.rs` → `kern::simd`.
+pub fn module_of(path: &str) -> String {
+    let p = path.strip_prefix("rust/src/").unwrap_or(path);
+    let p = p.strip_suffix(".rs").unwrap_or(p);
+    let p = p.strip_suffix("/mod").unwrap_or(p);
+    p.replace('/', "::")
+}
+
+/// Scope-stack entries, pushed at `{`.
+enum Sc {
+    /// A recognized fn body (index into `CrateModel::fns`).
+    Fn(usize),
+    /// An `impl TYPE` / `trait NAME` body.
+    Qual(String),
+    /// Any other brace (block, match, struct literal, module…).
+    Other,
+}
+
+/// Parse named struct fields from the text between the braces.
+fn parse_fields(body: &str) -> Vec<FieldDef> {
+    let mut out = Vec::new();
+    for (_, part) in split_top_level(body, b',') {
+        let mut p = part.trim();
+        // Field attributes are rare but legal; strip any `#[…]` runs.
+        while let Some(r) = p.strip_prefix("#[") {
+            match r.find(']') {
+                Some(e) => p = r[e + 1..].trim_start(),
+                None => break,
+            }
+        }
+        let Some(ci) = find_type_colon(p) else { continue };
+        let Some(name) = trailing_ident(p[..ci].trim_end()) else { continue };
+        let ty = p[ci + 1..].trim().to_string();
+        if !ty.is_empty() {
+            out.push(FieldDef { name, ty });
+        }
+    }
+    out
+}
+
+/// The item parser proper: one linear walk over `files[file].code`.
+fn parse_file_items(model: &mut CrateModel, file: usize) {
+    let code = model.files[file].code.clone();
+    let in_test: Vec<bool> = model.files[file].scan.in_test.clone();
+    let module = module_of(&model.files[file].path);
+    let bytes = code.as_bytes();
+    let n = bytes.len();
+
+    let mut stack: Vec<Sc> = Vec::new();
+    // A recognized item header whose `{` (at the recorded offset) is
+    // still ahead of the cursor.
+    let mut pending: Option<(usize, Sc)> = None;
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < n {
+        let b = bytes[i];
+        if b == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if b == b'{' {
+            let sc = match &pending {
+                Some((off, _)) if *off == i => {
+                    let (_, sc) = pending.take().unwrap_or((0, Sc::Other));
+                    sc
+                }
+                _ => Sc::Other,
+            };
+            if let Sc::Fn(idx) = sc {
+                model.fns[idx].body = Some((i + 1)..(i + 1));
+            }
+            stack.push(sc);
+            i += 1;
+            continue;
+        }
+        if b == b'}' {
+            if let Some(Sc::Fn(idx)) = stack.pop() {
+                if let Some(r) = model.fns[idx].body.as_mut() {
+                    r.end = i;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if !is_ident_byte(b) || (i > 0 && is_ident_byte(bytes[i - 1])) {
+            i += 1;
+            continue;
+        }
+        // Start of an identifier or keyword.
+        let ws = i;
+        let mut we = i;
+        while we < n && is_ident_byte(bytes[we]) {
+            we += 1;
+        }
+        if pending.is_some() {
+            // Between a recognized header and its `{`: nothing in a
+            // header starts a new item.
+            i = we;
+            continue;
+        }
+        match &code[ws..we] {
+            "fn" => {
+                let mut j = skip_ws_b(bytes, we);
+                if j < n && bytes[j] == b'(' {
+                    i = we; // `fn(…)` pointer type, not a definition
+                    continue;
+                }
+                let ns = j;
+                while j < n && is_ident_byte(bytes[j]) {
+                    j += 1;
+                }
+                if j == ns {
+                    i = we;
+                    continue;
+                }
+                let name = code[ns..j].to_string();
+                // Find the body `{` (or the `;` of a bodyless decl) at
+                // paren/bracket depth zero.
+                let mut k = j;
+                let mut paren = 0i64;
+                let mut bracket = 0i64;
+                let mut open: Option<usize> = None;
+                let mut semi: Option<usize> = None;
+                while k < n {
+                    match bytes[k] {
+                        b'(' => paren += 1,
+                        b')' => paren -= 1,
+                        b'[' => bracket += 1,
+                        b']' => bracket -= 1,
+                        b'{' if paren == 0 && bracket == 0 => {
+                            open = Some(k);
+                            break;
+                        }
+                        b';' if paren == 0 && bracket == 0 => {
+                            semi = Some(k);
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let sig_end = open.or(semi).unwrap_or(n);
+                let mut qual = None;
+                for s in stack.iter().rev() {
+                    match s {
+                        Sc::Qual(q) => {
+                            qual = Some(q.clone());
+                            break;
+                        }
+                        Sc::Fn(_) => break, // nested fn: not a method
+                        Sc::Other => {}
+                    }
+                }
+                let idx = model.fns.len();
+                model.fns.push(FnDef {
+                    name,
+                    qual,
+                    file,
+                    line,
+                    sig: code[ws..sig_end].trim().to_string(),
+                    body: None,
+                    is_test: in_test.get(line - 1).copied().unwrap_or(false),
+                });
+                model.files[file].fns.push(idx);
+                match open {
+                    Some(o) => {
+                        pending = Some((o, Sc::Fn(idx)));
+                        line += count_nl(&bytes[ws..o]);
+                        i = o;
+                    }
+                    None => {
+                        let end = semi.map(|s| s + 1).unwrap_or(n);
+                        line += count_nl(&bytes[ws..end]);
+                        i = end;
+                    }
+                }
+            }
+            "impl" | "trait" => {
+                let is_trait = &code[ws..we] == "trait";
+                let mut k = we;
+                let mut paren = 0i64;
+                let mut bracket = 0i64;
+                let mut open: Option<usize> = None;
+                while k < n {
+                    match bytes[k] {
+                        b'(' => paren += 1,
+                        b')' => paren -= 1,
+                        b'[' => bracket += 1,
+                        b']' => bracket -= 1,
+                        b'{' if paren == 0 && bracket == 0 => {
+                            open = Some(k);
+                            break;
+                        }
+                        b';' if paren == 0 && bracket == 0 => break,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let Some(o) = open else {
+                    i = we;
+                    continue;
+                };
+                let header = &code[we..o];
+                let ty = if is_trait {
+                    // First identifier after `trait`.
+                    let hb = header.as_bytes();
+                    let s = skip_ws_b(hb, 0);
+                    let mut e = s;
+                    while e < hb.len() && is_ident_byte(hb[e]) {
+                        e += 1;
+                    }
+                    header[s..e].to_string()
+                } else {
+                    impl_type_name(header)
+                };
+                pending = Some((o, Sc::Qual(ty)));
+                line += count_nl(&bytes[ws..o]);
+                i = o;
+            }
+            "struct" | "enum" => {
+                let is_enum = &code[ws..we] == "enum";
+                let mut j = skip_ws_b(bytes, we);
+                let ns = j;
+                while j < n && is_ident_byte(bytes[j]) {
+                    j += 1;
+                }
+                if j == ns {
+                    i = we;
+                    continue;
+                }
+                let name = code[ns..j].to_string();
+                let item_line = line;
+                let mut k = skip_ws_b(bytes, j);
+                if k < n && bytes[k] == b'<' {
+                    k = skip_angles(bytes, k);
+                    k = skip_ws_b(bytes, k);
+                }
+                // A `where` clause may sit before the brace; scan to
+                // the first `{`, `(`, or `;` at depth zero.
+                let mut paren = 0i64;
+                let mut bracket = 0i64;
+                let mut body_open: Option<usize> = None;
+                while k < n {
+                    match bytes[k] {
+                        b'(' if body_open.is_none() && paren == 0 && bracket == 0 && !is_enum => {
+                            break; // tuple struct: no named fields
+                        }
+                        b'(' => paren += 1,
+                        b')' => paren -= 1,
+                        b'[' => bracket += 1,
+                        b']' => bracket -= 1,
+                        b'{' if paren == 0 && bracket == 0 => {
+                            body_open = Some(k);
+                            break;
+                        }
+                        b';' if paren == 0 && bracket == 0 => break,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                if let Some(bo) = body_open {
+                    if let Some(close) = match_delim_b(bytes, bo, b'{', b'}') {
+                        let body = &code[bo + 1..close];
+                        if is_enum {
+                            let mut variants = Vec::new();
+                            for (off, part) in split_top_level(body, b',') {
+                                let pb = part.as_bytes();
+                                let mut x = skip_ws_b(pb, 0);
+                                // Strip variant attributes.
+                                while pb.get(x) == Some(&b'#')
+                                    && pb.get(x + 1) == Some(&b'[')
+                                {
+                                    match part[x..].find(']') {
+                                        Some(e) => x = skip_ws_b(pb, x + e + 1),
+                                        None => break,
+                                    }
+                                }
+                                let vs = x;
+                                while x < pb.len() && is_ident_byte(pb[x]) {
+                                    x += 1;
+                                }
+                                if x > vs {
+                                    let voff = bo + 1 + off + vs;
+                                    variants.push((
+                                        part[vs..x].to_string(),
+                                        line_at(&code, voff),
+                                    ));
+                                }
+                            }
+                            model.enums.push(EnumDef { name, file, variants });
+                        } else {
+                            model.structs.push(StructDef {
+                                name,
+                                module: module.clone(),
+                                file,
+                                line: item_line,
+                                fields: parse_fields(body),
+                            });
+                        }
+                        line += count_nl(&bytes[ws..=close]);
+                        i = close + 1;
+                        continue;
+                    }
+                }
+                if !is_enum {
+                    // Tuple or unit struct: record it fieldless.
+                    model.structs.push(StructDef {
+                        name,
+                        module: module.clone(),
+                        file,
+                        line: item_line,
+                        fields: Vec::new(),
+                    });
+                }
+                i = j;
+            }
+            "static" => {
+                let mut j = skip_ws_b(bytes, we);
+                // `static mut` (not in this tree, but cheap to accept).
+                if code[j..].starts_with("mut") && !is_ident_byte(*bytes.get(j + 3).unwrap_or(&b'x'))
+                {
+                    j = skip_ws_b(bytes, j + 3);
+                }
+                let ns = j;
+                while j < n && is_ident_byte(bytes[j]) {
+                    j += 1;
+                }
+                if j == ns {
+                    i = we;
+                    continue;
+                }
+                let name = code[ns..j].to_string();
+                let k = skip_ws_b(bytes, j);
+                if bytes.get(k) != Some(&b':') {
+                    i = we;
+                    continue;
+                }
+                // Type runs to the `=` or `;` at bracket depth zero
+                // (`=` inside generics is an associated-type binding).
+                let ty_start = k + 1;
+                let mut t = ty_start;
+                let mut depth = 0i64;
+                while t < n {
+                    match bytes[t] {
+                        b'(' | b'[' | b'<' => depth += 1,
+                        b'>' if bytes[t - 1] == b'-' => {}
+                        b')' | b']' | b'>' => depth -= 1,
+                        b'=' | b';' if depth == 0 => break,
+                        _ => {}
+                    }
+                    t += 1;
+                }
+                model.statics.push(StaticDef {
+                    name,
+                    ty: code[ty_start..t.min(n)].trim().to_string(),
+                    file,
+                    line,
+                });
+                line += count_nl(&bytes[ws..t.min(n)]);
+                i = t.min(n);
+            }
+            _ => {
+                i = we;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    fn model_of(path: &str, src: &str) -> CrateModel {
+        let mut m = CrateModel::default();
+        m.add_file(path.to_string(), scan(src));
+        m
+    }
+
+    #[test]
+    fn free_fns_methods_and_bodies() {
+        let src = "pub fn free(x: u32) -> u32 {\n    x + 1\n}\n\nstruct W { v: u32 }\n\nimpl W {\n    fn get(&self) -> u32 {\n        self.v\n    }\n}\n";
+        let m = model_of("rust/src/serve/x.rs", src);
+        assert_eq!(m.fns.len(), 2, "{:?}", m.fns);
+        let free = &m.fns[0];
+        assert_eq!(free.name, "free");
+        assert_eq!(free.qual, None);
+        assert_eq!(free.line, 1);
+        let body = free.body.clone().expect("has body");
+        assert!(m.files[0].code[body].contains("x + 1"));
+        let get = &m.fns[1];
+        assert_eq!(get.name, "get");
+        assert_eq!(get.qual.as_deref(), Some("W"));
+        assert!(m.files[0].code[get.body.clone().unwrap()].contains("self.v"));
+        assert_eq!(m.structs.len(), 1);
+        assert_eq!(m.structs[0].fields[0].name, "v");
+    }
+
+    #[test]
+    fn impl_trait_for_type_quals_and_generics() {
+        let src = "impl<T: Clone> Default for kern::Wrap<T> {\n    fn default() -> Self { Self }\n}\n";
+        let m = model_of("rust/src/kern/w.rs", src);
+        assert_eq!(m.fns[0].qual.as_deref(), Some("Wrap"));
+    }
+
+    #[test]
+    fn nested_fn_is_not_a_method_and_sites_stay_separable() {
+        let src = "impl W {\n    fn outer(&self) {\n        fn inner(y: u32) -> u32 { y }\n        let _ = inner(2);\n    }\n}\n";
+        let m = model_of("rust/src/serve/x.rs", src);
+        let outer = m.fns.iter().find(|f| f.name == "outer").unwrap();
+        let inner = m.fns.iter().find(|f| f.name == "inner").unwrap();
+        assert_eq!(outer.qual.as_deref(), Some("W"));
+        assert_eq!(inner.qual, None, "nested fn must not inherit the impl qual");
+        let ob = outer.body.clone().unwrap();
+        let ib = inner.body.clone().unwrap();
+        assert!(ob.start < ib.start && ib.end < ob.end, "nesting: {ob:?} {ib:?}");
+    }
+
+    #[test]
+    fn lock_typed_fields_statics_and_params() {
+        let src = "use std::sync::Mutex;\npub struct Shared {\n    pub state: Mutex<Vec<u32>>,\n    name: String,\n}\nstatic GATE: Mutex<()> = Mutex::new(());\nfn lock_recover<'a, T>(m: &'a Mutex<T>, n: &'a u64) -> std::sync::MutexGuard<'a, T> {\n    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)\n}\n";
+        let m = model_of("rust/src/serve/mod.rs", src);
+        let s = &m.structs[0];
+        assert_eq!(s.module, "serve");
+        assert!(CrateModel::is_lock_type(&s.fields[0].ty));
+        assert!(!CrateModel::is_lock_type(&s.fields[1].ty));
+        assert_eq!(m.statics[0].name, "GATE");
+        assert!(CrateModel::is_lock_type(&m.statics[0].ty));
+        let f = &m.fns[0];
+        let params = f.params();
+        assert_eq!(params.len(), 2, "{params:?}");
+        assert_eq!(params[0].0, "m");
+        assert!(params[0].1.contains("Mutex<T>"));
+        assert!(f.returns_guard());
+    }
+
+    #[test]
+    fn enum_variants_with_lines() {
+        let src = "/// Kinds.\npub enum ErrorKind {\n    Other,\n    InvalidSpec,\n    RankDeficient,\n    Internal,\n}\n";
+        let m = model_of("rust/src/error.rs", src);
+        let e = &m.enums[0];
+        assert_eq!(e.name, "ErrorKind");
+        let got: Vec<(&str, usize)> =
+            e.variants.iter().map(|(v, l)| (v.as_str(), *l)).collect();
+        assert_eq!(
+            got,
+            vec![("Other", 3), ("InvalidSpec", 4), ("RankDeficient", 5), ("Internal", 6)]
+        );
+    }
+
+    #[test]
+    fn cfg_test_fns_are_marked_and_fn_pointer_types_skipped() {
+        let src = "type Cb = fn(u32) -> u32;\nfn prod(cb: Cb) -> u32 { cb(1) }\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n";
+        let m = model_of("rust/src/serve/x.rs", src);
+        assert_eq!(m.fns.len(), 2, "{:?}", m.fns);
+        assert!(!m.fns[0].is_test);
+        assert_eq!(m.fns[1].name, "helper");
+        assert!(m.fns[1].is_test);
+    }
+
+    #[test]
+    fn impl_return_position_does_not_derail_scopes() {
+        let src = "trait It {\n    fn go(&self) -> u32;\n}\nfn mk() -> impl Iterator<Item = u32> {\n    (0..3).map(|x| x)\n}\nstruct After { f: u32 }\n";
+        let m = model_of("rust/src/serve/x.rs", src);
+        let go = m.fns.iter().find(|f| f.name == "go").unwrap();
+        assert_eq!(go.qual.as_deref(), Some("It"));
+        assert!(go.body.is_none(), "bodyless trait decl");
+        let mk = m.fns.iter().find(|f| f.name == "mk").unwrap();
+        assert_eq!(mk.qual, None);
+        assert!(mk.body.is_some());
+        assert_eq!(m.structs[0].name, "After");
+        assert_eq!(m.structs[0].fields[0].name, "f");
+    }
+}

@@ -202,6 +202,71 @@ pub const RULES: &[RuleDoc] = &[
                   Reported as a warning (an error under --deny-warnings, which CI\n\
                   uses) so stale exceptions get deleted instead of accumulating.",
     },
+    RuleDoc {
+        id: "PANIC-REACH",
+        summary: "no panic-capable code reachable from a serve entry point",
+        explain: "Panic safety, interprocedurally.  The engine parses every item,\n\
+                  builds an approximate call graph, and BFS-walks it from the serve\n\
+                  entry points (`route`, `handle_*`, the connection/queue worker\n\
+                  loops).  Any reachable `panic!`-family macro, `.unwrap()` or\n\
+                  `.expect()` outside the serve layer — plus any unchecked\n\
+                  index/slice expression on the request-parsing surface\n\
+                  (serve/http.rs, serve/protocol.rs), where the index comes from\n\
+                  untrusted bytes — is a finding: one poisoned fit must come back\n\
+                  as a typed error, not tear down a worker.  Shield a span with\n\
+                  `catch_unwind(…)` or allow-mark the site with the invariant that\n\
+                  rules the panic out.  The resolver over-approximates untyped\n\
+                  method receivers and cannot see trait-object or fn-pointer\n\
+                  dispatch (DESIGN.md §Static analysis lists the blind spots).\n\
+                  Scope: non-test code under rust/src reachable from\n\
+                  rust/src/serve entries.",
+    },
+    RuleDoc {
+        id: "LOCK-ORDER",
+        summary: "lock acquisition order must be cycle-free (static deadlock check)",
+        explain: "Deadlock freedom.  Every Mutex/RwLock acquisition —\n\
+                  `recv.lock()`/`.read()`/`.write()`, guard-returning wrappers\n\
+                  like Registry::lock, and guard-returning free helpers like\n\
+                  sync::lock_recover — is resolved to a stable identity\n\
+                  (`Struct.field`, `static NAME`) and a conservative hold range.\n\
+                  Acquiring B while holding A adds the edge A→B, including\n\
+                  transitively through calls made while the guard is live; any\n\
+                  cycle in the resulting order graph (A→B with B→A elsewhere, or a\n\
+                  re-entrant A→A on std's non-reentrant locks) is reported with\n\
+                  both acquisition sites of every edge.  Receivers the resolver\n\
+                  cannot type stay anonymous rather than guessed, so a reported\n\
+                  cycle is structural, not an aliasing accident.  Scope: non-test\n\
+                  code under rust/src (the lock population lives in serve, par,\n\
+                  obs and kern::cache).",
+    },
+    RuleDoc {
+        id: "ERR-MAP",
+        summary: "error kinds, routes and metrics must match their documented surface",
+        explain: "Contract drift.  Three documented surfaces are pinned to code:\n\
+                  (1) every `ErrorKind` variant in rust/src/error.rs must have an\n\
+                  HTTP status mapping in serve/http.rs — an unmapped kind is a 500\n\
+                  waiting to happen; (2) every route literal served from\n\
+                  serve/http.rs or serve/protocol.rs must appear in docs/API.md;\n\
+                  (3) every registered `calars_*` metric name must appear there\n\
+                  too, because the /metrics surface is part of the API contract.\n\
+                  The checks are anchored on rust/src/error.rs and docs/API.md, so\n\
+                  miniature fixture trees without those anchors pass vacuously.\n\
+                  Scope: rust/src non-test code plus docs/API.md.",
+    },
+    RuleDoc {
+        id: "UNSAFE-BUDGET",
+        summary: "unsafe block counts must match the checked-in ledger",
+        explain: "Unsafe budget, enforced as a ratchet.  tools/audit/unsafe.ledger\n\
+                  records `path count` for every file in the sanctioned unsafe\n\
+                  regions (rust/src/par, rust/src/kern/simd).  A count above the\n\
+                  ledger fails the audit at the first over-budget `unsafe` keyword\n\
+                  — growth is only possible by deliberately regenerating the\n\
+                  ledger with --update-unsafe-ledger in the same change, which\n\
+                  makes every new unsafe block a reviewed, diffed event.  A count\n\
+                  below the ledger (or a stale entry) is a warning prompting a\n\
+                  regenerate, so the recorded budget only ever tracks reality\n\
+                  downward automatically and upward deliberately.",
+    },
 ];
 
 /// Look up a rule id (exact match).
@@ -302,7 +367,7 @@ fn finding(ctx: &FileCtx<'_>, line: usize, rule: &'static str, message: String) 
 }
 
 /// Is `text[i..]` preceded by an identifier character?
-fn ident_before(text: &str, i: usize) -> bool {
+pub(crate) fn ident_before(text: &str, i: usize) -> bool {
     i > 0 && {
         let b = text.as_bytes()[i - 1];
         b.is_ascii_alphanumeric() || b == b'_'
@@ -310,12 +375,12 @@ fn ident_before(text: &str, i: usize) -> bool {
 }
 
 /// Is the byte right after `end` an identifier character?
-fn ident_after(text: &str, end: usize) -> bool {
+pub(crate) fn ident_after(text: &str, end: usize) -> bool {
     text.as_bytes().get(end).is_some_and(|b| b.is_ascii_alphanumeric() || *b == b'_')
 }
 
 /// Offset of every word-boundary occurrence of `needle`.
-fn word_occurrences(text: &str, needle: &str) -> Vec<usize> {
+pub(crate) fn word_occurrences(text: &str, needle: &str) -> Vec<usize> {
     let mut out = Vec::new();
     let mut from = 0;
     while let Some(rel) = text[from..].find(needle) {
@@ -330,7 +395,7 @@ fn word_occurrences(text: &str, needle: &str) -> Vec<usize> {
 
 /// Given the offset of an opening `(`, return the offset just past its
 /// matching `)` (None if unbalanced).
-fn match_paren(text: &str, open: usize) -> Option<usize> {
+pub(crate) fn match_paren(text: &str, open: usize) -> Option<usize> {
     let bytes = text.as_bytes();
     let mut depth = 0usize;
     for (k, &b) in bytes.iter().enumerate().skip(open) {
@@ -348,7 +413,7 @@ fn match_paren(text: &str, open: usize) -> Option<usize> {
     None
 }
 
-fn skip_ws(text: &str, mut i: usize) -> usize {
+pub(crate) fn skip_ws(text: &str, mut i: usize) -> usize {
     let bytes = text.as_bytes();
     while i < bytes.len() && bytes[i].is_ascii_whitespace() {
         i += 1;

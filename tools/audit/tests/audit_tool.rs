@@ -26,6 +26,7 @@ fn bad_tree_fires_every_rule_at_the_expected_lines() {
         ("rust/Cargo.toml", 6, "DEP-EXT"),
         ("rust/src/kern/evil.rs", 2, "UNSAFE-SCOPE"),
         ("rust/src/kern/simd/bad.rs", 1, "SIMD-TARGET"),
+        ("rust/src/kern/simd/bad.rs", 1, "UNSAFE-BUDGET"),
         ("rust/src/kern/simd/bad.rs", 1, "UNSAFE-DOC"),
         ("rust/src/lars/core.rs", 6, "DET-TIME"),
         ("rust/src/lars/core.rs", 9, "DET-MAP"),
@@ -35,6 +36,7 @@ fn bad_tree_fires_every_rule_at_the_expected_lines() {
         ("rust/src/lars/markers.rs", 3, "DET-SUM"),
         ("rust/src/lars/markers.rs", 5, "ALLOW-REASON"),
         ("rust/src/lars/markers.rs", 6, "ALLOW-UNUSED"),
+        ("rust/src/par/raw.rs", 2, "UNSAFE-BUDGET"),
         ("rust/src/par/raw.rs", 2, "UNSAFE-DOC"),
         ("rust/src/serve/handlers.rs", 5, "PANIC-UNWRAP"),
         ("rust/src/serve/handlers.rs", 6, "PANIC-UNWRAP"),
@@ -42,7 +44,7 @@ fn bad_tree_fires_every_rule_at_the_expected_lines() {
         ("rust/src/serve/handlers.rs", 9, "PANIC-UNWRAP"),
     ];
     assert_eq!(got, want, "full findings: {:#?}", report.findings);
-    assert_eq!(report.errors(), 17);
+    assert_eq!(report.errors(), 19);
     assert_eq!(report.warnings(), 1);
     assert_eq!(report.suppressed, 0, "a reasonless marker must not suppress");
     assert!(!report.is_clean(false));
@@ -62,7 +64,7 @@ fn bad_tree_diagnostics_render_as_file_line() {
         "{rendered}"
     );
     assert!(rendered.contains("rust/Cargo.toml:5: error[DEP-EXT]"), "{rendered}");
-    assert!(rendered.contains("17 error(s), 1 warning(s)"), "{rendered}");
+    assert!(rendered.contains("19 error(s), 1 warning(s)"), "{rendered}");
 }
 
 #[test]
@@ -96,7 +98,7 @@ fn warnings_gate_only_under_deny_warnings() {
 
 #[test]
 fn every_rule_is_documented_for_explain_and_list() {
-    assert_eq!(RULES.len(), 12);
+    assert_eq!(RULES.len(), 16);
     for r in RULES {
         assert!(!r.summary.is_empty(), "{} needs a summary", r.id);
         assert!(r.explain.len() > 80, "{} needs a real explanation", r.id);
@@ -108,7 +110,127 @@ fn every_rule_is_documented_for_explain_and_list() {
     assert!(rule_doc("PANIC-LOCK").unwrap().explain.contains("into_inner"));
     assert!(rule_doc("SIMD-TARGET").unwrap().explain.contains("target_feature"));
     assert!(rule_doc("UNSAFE-SCOPE").unwrap().explain.contains("kern/simd"));
+    // The interprocedural rules must document their escape hatches.
+    assert!(rule_doc("PANIC-REACH").unwrap().explain.contains("catch_unwind"));
+    assert!(rule_doc("LOCK-ORDER").unwrap().explain.contains("both acquisition sites"));
+    assert!(rule_doc("ERR-MAP").unwrap().explain.contains("docs/API.md"));
+    assert!(rule_doc("UNSAFE-BUDGET").unwrap().explain.contains("--update-unsafe-ledger"));
     assert!(rule_doc("NOPE").is_none());
+}
+
+#[test]
+fn panic_reach_fixture_fires_on_the_reachable_unwrap_and_index_only() {
+    // Firing: the unwrap two hops below handle_fit, and the untrusted
+    // index in handle_first.  Non-firing: orphan (unreachable) and
+    // risky (only reachable through a catch_unwind shield).
+    let report = run_audit(&fixture("tree_panic_reach"), &Config::default()).expect("walk");
+    let got: Vec<(&str, usize, &str)> =
+        report.findings.iter().map(|f| (f.path.as_str(), f.line, f.rule)).collect();
+    assert_eq!(
+        got,
+        vec![
+            ("rust/src/lars/fit.rs", 4, "PANIC-REACH"),
+            ("rust/src/serve/http.rs", 16, "PANIC-REACH"),
+        ],
+        "full findings: {:#?}",
+        report.findings
+    );
+    assert!(
+        report.findings[0].message.contains("handle_fit -> solve"),
+        "the diagnostic must carry the call chain: {}",
+        report.findings[0].message
+    );
+    assert!(report.findings[1].message.contains("unchecked index"));
+}
+
+#[test]
+fn lock_order_fixture_reports_the_cycle_with_both_sites() {
+    // Firing: State taken a→b in ab() and b→a in ba().  Non-firing:
+    // Pair, consistently x→y in both methods.
+    let report = run_audit(&fixture("tree_lock_order"), &Config::default()).expect("walk");
+    let got: Vec<(&str, usize, &str)> =
+        report.findings.iter().map(|f| (f.path.as_str(), f.line, f.rule)).collect();
+    assert_eq!(
+        got,
+        vec![("rust/src/serve/state.rs", 13, "LOCK-ORDER")],
+        "full findings: {:#?}",
+        report.findings
+    );
+    let m = &report.findings[0].message;
+    assert!(
+        m.contains("State.a (rust/src/serve/state.rs:12) then State.b (rust/src/serve/state.rs:13)"),
+        "{m}"
+    );
+    assert!(
+        m.contains("State.b (rust/src/serve/state.rs:18) then State.a (rust/src/serve/state.rs:19)"),
+        "{m}"
+    );
+    assert!(!m.contains("Pair"), "consistent order must stay out of the cycle: {m}");
+}
+
+#[test]
+fn err_map_fixture_flags_each_drift_kind_once() {
+    // Firing: the unmapped variant, the ghost metric, the ghost route.
+    // Non-firing: Mapped, /fit and calars_fit_total, all documented.
+    let report = run_audit(&fixture("tree_err_map"), &Config::default()).expect("walk");
+    let got: Vec<(&str, usize, &str)> =
+        report.findings.iter().map(|f| (f.path.as_str(), f.line, f.rule)).collect();
+    assert_eq!(
+        got,
+        vec![
+            ("rust/src/error.rs", 5, "ERR-MAP"),
+            ("rust/src/obs/metrics.rs", 4, "ERR-MAP"),
+            ("rust/src/serve/http.rs", 11, "ERR-MAP"),
+        ],
+        "full findings: {:#?}",
+        report.findings
+    );
+    assert!(report.findings[0].message.contains("Orphaned"));
+    assert!(report.findings[1].message.contains("calars_ghost_total"));
+    assert!(report.findings[2].message.contains("/undocumented"));
+}
+
+#[test]
+fn unsafe_budget_fixture_gates_growth_and_warns_on_stale_entries() {
+    // Firing: raw.rs grew past its ledgered count (error at the first
+    // over-budget site) and gone.rs is stale (warning at the ledger
+    // line).  Non-firing: w.rs, whose count matches.
+    let report = run_audit(&fixture("tree_unsafe_budget"), &Config::default()).expect("walk");
+    let got: Vec<(&str, usize, &str, Severity)> = report
+        .findings
+        .iter()
+        .map(|f| (f.path.as_str(), f.line, f.rule, f.severity))
+        .collect();
+    assert_eq!(
+        got,
+        vec![
+            ("rust/src/par/raw.rs", 10, "UNSAFE-BUDGET", Severity::Error),
+            ("tools/audit/unsafe.ledger", 4, "UNSAFE-BUDGET", Severity::Warning),
+        ],
+        "full findings: {:#?}",
+        report.findings
+    );
+    assert!(!report.is_clean(false), "budget growth must gate");
+}
+
+#[test]
+fn json_and_github_renderings_carry_every_finding() {
+    let report = run_audit(&fixture("tree_bad"), &Config::default()).expect("walk");
+    let json = report.render_json();
+    assert!(json.contains("\"rule\":\"PANIC-UNWRAP\""), "{json}");
+    assert!(json.contains("\"severity\":\"warning\""), "{json}");
+    assert!(json.contains("\"errors\":19"), "{json}");
+    assert!(json.starts_with('{') && json.trim_end().ends_with('}'), "{json}");
+    let gh = report.render_github();
+    assert!(
+        gh.contains("::error file=rust/src/serve/handlers.rs,line=5,title=PANIC-UNWRAP::"),
+        "{gh}"
+    );
+    assert!(
+        gh.contains("::warning file=rust/src/lars/markers.rs,line=6,title=ALLOW-UNUSED::"),
+        "{gh}"
+    );
+    assert_eq!(gh.lines().count(), report.findings.len());
 }
 
 #[test]
@@ -118,6 +240,18 @@ fn cli_exit_codes() {
     assert_eq!(run_cli(&["--root".to_string(), good.clone()]), 0);
     assert_eq!(run_cli(&["--root".to_string(), bad.clone()]), 1);
     assert_eq!(run_cli(&["--root".to_string(), good, "--deny-warnings".to_string()]), 0);
+    assert_eq!(run_cli(&["--root".to_string(), bad.clone(), "--json".to_string()]), 1);
+    assert_eq!(run_cli(&["--root".to_string(), bad.clone(), "--github".to_string()]), 1);
+    assert_eq!(
+        run_cli(&[
+            "--root".to_string(),
+            bad.clone(),
+            "--json".to_string(),
+            "--github".to_string()
+        ]),
+        2,
+        "--json and --github are mutually exclusive"
+    );
     assert_eq!(run_cli(&["--explain".to_string(), "DET-CMP".to_string()]), 0);
     assert_eq!(run_cli(&["--explain".to_string(), "BOGUS".to_string()]), 2);
     assert_eq!(run_cli(&["--list".to_string()]), 0);

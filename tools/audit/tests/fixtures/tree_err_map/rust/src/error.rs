@@ -1,0 +1,6 @@
+//! Error fixture: `Orphaned` has no HTTP status mapping.
+
+pub enum ErrorKind {
+    Mapped,
+    Orphaned,
+}

@@ -1,0 +1,5 @@
+//! One documented metric, one ghost.
+
+pub fn names() -> [&'static str; 2] {
+    ["calars_fit_total", "calars_ghost_total"]
+}

@@ -1,0 +1,12 @@
+//! Maps `Mapped` only; serves one documented and one ghost route.
+
+pub fn error_status(k: &crate::error::ErrorKind) -> u16 {
+    match k {
+        crate::error::ErrorKind::Mapped => 400,
+        _ => 500,
+    }
+}
+
+pub fn routes() -> [&'static str; 2] {
+    ["/fit", "/undocumented"]
+}

@@ -1,0 +1,41 @@
+//! Lock-order fixture: `State` is acquired in both orders (a genuine
+//! two-mutex deadlock), `Pair` is consistently ordered and clean.
+use std::sync::{Mutex, PoisonError};
+
+pub struct State {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl State {
+    pub fn ab(&self) -> u32 {
+        let ga = self.a.lock().unwrap_or_else(PoisonError::into_inner);
+        let gb = self.b.lock().unwrap_or_else(PoisonError::into_inner);
+        *ga + *gb
+    }
+
+    pub fn ba(&self) -> u32 {
+        let gb = self.b.lock().unwrap_or_else(PoisonError::into_inner);
+        let ga = self.a.lock().unwrap_or_else(PoisonError::into_inner);
+        *ga + *gb
+    }
+}
+
+pub struct Pair {
+    x: Mutex<u32>,
+    y: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn xy(&self) -> u32 {
+        let gx = self.x.lock().unwrap_or_else(PoisonError::into_inner);
+        let gy = self.y.lock().unwrap_or_else(PoisonError::into_inner);
+        *gx + *gy
+    }
+
+    pub fn xy_again(&self) -> u32 {
+        let gx = self.x.lock().unwrap_or_else(PoisonError::into_inner);
+        let gy = self.y.lock().unwrap_or_else(PoisonError::into_inner);
+        *gx * *gy
+    }
+}

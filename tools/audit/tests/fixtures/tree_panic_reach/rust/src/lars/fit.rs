@@ -1,0 +1,14 @@
+//! The fit layer: one reachable unwrap, one orphan, one shielded panic.
+
+pub fn solve(req: &str) -> String {
+    let k: usize = req.parse().unwrap();
+    "k".repeat(k)
+}
+
+pub fn risky(n: usize) -> String {
+    panic!("boom {n}")
+}
+
+pub fn orphan(n: usize) -> usize {
+    n.checked_add(1).unwrap()
+}

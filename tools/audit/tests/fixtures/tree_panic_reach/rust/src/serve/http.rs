@@ -1,0 +1,17 @@
+//! Panic-reach fixture: handlers reach into the fit layer.
+
+pub fn handle_fit(req: &str) -> String {
+    crate::lars::fit::solve(req)
+}
+
+pub fn handle_shielded(req: &str) -> String {
+    let r = std::panic::catch_unwind(|| crate::lars::fit::risky(req.len()));
+    match r {
+        Ok(s) => s,
+        Err(_) => String::from("recovered"),
+    }
+}
+
+pub fn handle_first(body: &str) -> u8 {
+    body.as_bytes()[0]
+}

@@ -1,0 +1,8 @@
+/// Lane-wise load.
+///
+/// SAFETY: callers hold a dispatch token only constructed after
+/// `is_x86_feature_detected!("avx2")` passed.
+#[target_feature(enable = "avx2")]
+pub unsafe fn load(p: *const f64) -> f64 {
+    *p
+}

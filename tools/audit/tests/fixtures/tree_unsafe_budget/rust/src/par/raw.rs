@@ -1,0 +1,11 @@
+//! Two unsafe blocks; the ledger grants one.
+
+pub fn read(p: *const f64) -> f64 {
+    // SAFETY: fixture — the caller guarantees p is valid and live.
+    unsafe { *p }
+}
+
+pub fn read2(p: *const f64) -> f64 {
+    // SAFETY: fixture — the caller guarantees p is valid and live.
+    unsafe { *p }
+}
